@@ -1,0 +1,6 @@
+# Make `python/` importable when pytest runs from the repo root
+# (tests import `compile.*`).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "python"))

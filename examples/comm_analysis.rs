@@ -1,0 +1,61 @@
+//! Communication case studies (paper §VII.C intro figures):
+//! * Fig. 3 — Laghos 32p comm matrix, linear + log heatmaps
+//! * Fig. 4 — Laghos 32p message-size histogram (3 clusters)
+//! * Fig. 6 — Kripke 32p communication by process (3 groups)
+//!
+//! ```sh
+//! cargo run --release --example comm_analysis
+//! ```
+
+use pipit::analysis::{comm_by_process, comm_matrix, message_histogram, CommUnit};
+use pipit::gen::{kripke, laghos, GenConfig};
+use pipit::viz::heatmap::{plot_comm_matrix, Scale};
+use pipit::viz::{plot_comm_by_process, plot_message_histogram};
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::PathBuf::from("e2e_out");
+    std::fs::create_dir_all(&out)?;
+
+    // ---- Fig. 3: Laghos comm matrix --------------------------------------
+    let laghos_32 = laghos::generate(&GenConfig::new(32, 25));
+    let m = comm_matrix(&laghos_32, CommUnit::Bytes)?;
+    println!("Laghos 32p comm matrix: total {:.1} MiB", m.total() / (1 << 20) as f64);
+    println!("  symmetric:            {}", m.is_symmetric());
+    println!("  near-diagonal volume: {:.1}%", m.diagonal_fraction(4) * 100.0);
+    std::fs::write(out.join("fig3_comm_matrix_linear.svg"), plot_comm_matrix(&m, Scale::Linear))?;
+    std::fs::write(out.join("fig3_comm_matrix_log.svg"), plot_comm_matrix(&m, Scale::Log))?;
+    println!("  -> fig3_comm_matrix_{{linear,log}}.svg");
+
+    // ---- Fig. 4: message size histogram -----------------------------------
+    let (counts, edges) = message_histogram(&laghos_32, 10)?;
+    println!("\nLaghos 32p message histogram (paper Fig. 4 format):");
+    println!("({:?},", counts);
+    println!(" {:?})", edges.iter().map(|e| *e as i64).collect::<Vec<_>>());
+    std::fs::write(out.join("fig4_msg_histogram.svg"), plot_message_histogram(&counts, &edges))?;
+    let small = counts[0];
+    let medium = counts[4];
+    let large = counts[9];
+    println!("  clusters: small={small} medium={medium} large={large}");
+    assert!(small > 0 && medium > 0 && large > 0);
+    assert_eq!(counts[2] + counts[6] + counts[7], 0, "gaps between clusters");
+
+    // ---- Fig. 6: Kripke comm by process -----------------------------------
+    let kripke_32 = kripke::generate(&GenConfig::new(32, 8));
+    let rows = comm_by_process(&kripke_32, CommUnit::Bytes)?;
+    let mut totals: Vec<i64> = rows.iter().map(|&(_, s, r)| (s + r) as i64).collect();
+    totals.sort_unstable();
+    totals.dedup();
+    println!("\nKripke 32p comm-by-process: {} distinct volume groups", totals.len());
+    for (i, v) in totals.iter().enumerate() {
+        let members: Vec<i64> = rows
+            .iter()
+            .filter(|&&(_, s, r)| (s + r) as i64 == *v)
+            .map(|&(p, _, _)| p)
+            .collect();
+        println!("  group {i}: {:>10} bytes x {} processes {:?}", v, members.len(), members);
+    }
+    std::fs::write(out.join("fig6_comm_by_process.svg"), plot_comm_by_process(&rows))?;
+    assert_eq!(totals.len(), 3, "paper observes exactly three groups");
+    println!("  -> fig6_comm_by_process.svg");
+    Ok(())
+}

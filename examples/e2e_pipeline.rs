@@ -1,0 +1,271 @@
+//! END-TO-END driver: proves all three layers compose on a real workload.
+//!
+//! 1. Generates a multi-application trace corpus (5 apps, up to 64 ranks).
+//! 2. Round-trips it through every on-disk format (OTF2-sim parallel read,
+//!    Projections, Chrome JSON, CSV).
+//! 3. Runs the ENTIRE analysis API over the corpus — with the
+//!    matrix-profile and time-hist operations executing the AOT-compiled
+//!    JAX+Pallas artifacts through PJRT (L1+L2), orchestrated by the L3
+//!    coordinator — and validates cross-engine agreement and invariants.
+//! 4. Reports the headline metric (paper Fig. 5 shape): reader/op runtime
+//!    scaling vs trace size, and parallel-reader speedup.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! ```
+//! Results are recorded in EXPERIMENTS.md.
+
+use pipit::analysis::{self, CommUnit, Metric, PatternConfig};
+use pipit::coordinator::AnalysisSession;
+use pipit::df::Expr;
+use pipit::gen::{self, GenConfig};
+use pipit::readers;
+use pipit::trace::builder::validate_nesting;
+use pipit::util::fmt_ns;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::PathBuf::from("e2e_out");
+    std::fs::create_dir_all(&out)?;
+    let t_total = Instant::now();
+
+    // ---- 1. corpus ------------------------------------------------------
+    println!("== 1. generating corpus ==");
+    let specs = [
+        ("laghos", 32usize, 20usize, 1usize),
+        ("kripke", 32, 10, 1),
+        ("tortuga", 64, 12, 1),
+        ("loimos", 64, 8, 1),
+        ("gol", 8, 40, 1),
+        ("axonn", 8, 10, 3),
+    ];
+    let artifacts = std::path::PathBuf::from("artifacts");
+    let mut session = AnalysisSession::new().with_artifacts(&artifacts);
+    println!("PJRT runtime loaded: {}", session.uses_hlo());
+    assert!(session.uses_hlo(), "run `make artifacts` first — the e2e driver must exercise the HLO path");
+
+    for (app, ranks, iters, variant) in specs {
+        let t0 = Instant::now();
+        session.generate(app, app, &GenConfig::new(ranks, iters), variant)?;
+        let tr = session.get(app)?;
+        validate_nesting(tr)?;
+        println!(
+            "  {app:<8} {} ranks, {} events ({})",
+            ranks,
+            tr.len(),
+            fmt_ns(t0.elapsed().as_nanos() as f64)
+        );
+    }
+
+    // ---- 2. format round-trips ------------------------------------------
+    println!("\n== 2. format round-trips ==");
+    let laghos = session.get("laghos")?.clone();
+    let otf2_dir = out.join("laghos_otf2");
+    readers::otf2::write(&laghos, &otf2_dir)?;
+    let t0 = Instant::now();
+    let rt_serial = readers::otf2::read(&otf2_dir, 1)?;
+    let serial_ns = t0.elapsed().as_nanos() as f64;
+    let t0 = Instant::now();
+    let rt_parallel = readers::otf2::read(&otf2_dir, 8)?;
+    let par_ns = t0.elapsed().as_nanos() as f64;
+    assert_eq!(rt_serial.len(), laghos.len());
+    assert_eq!(rt_parallel.timestamps()?, rt_serial.timestamps()?);
+    println!(
+        "  otf2: {} events; serial read {} / 8-thread read {} (speedup {:.2}x)",
+        laghos.len(),
+        fmt_ns(serial_ns),
+        fmt_ns(par_ns),
+        serial_ns / par_ns
+    );
+
+    let gol = session.get("gol")?.clone();
+    let chrome_path = out.join("gol.json");
+    readers::chrome::write(&gol, &chrome_path)?;
+    let rt2 = readers::chrome::read(&chrome_path)?;
+    assert_eq!(rt2.len(), gol.len());
+    println!("  chrome json: {} events round-tripped", rt2.len());
+
+    let csv_path = out.join("gol.csv");
+    readers::csv::write(&gol, &csv_path)?;
+    assert_eq!(readers::csv::read(&csv_path)?.len(), gol.len());
+    println!("  csv: ok");
+
+    let loimos = session.get("loimos")?.clone();
+    let proj_dir = out.join("loimos_proj");
+    readers::projections::write(&loimos, &proj_dir, "loimos")?;
+    let rt3 = readers::projections::read(&proj_dir, 4)?;
+    // recv instants are not representable in projections logs
+    assert!(rt3.len() >= loimos.len() * 8 / 10);
+    println!("  projections: {} of {} events (recv records dropped by design)", rt3.len(), loimos.len());
+
+    // ---- 3. the full API over the corpus ---------------------------------
+    println!("\n== 3. full analysis API ==");
+
+    // 3a. profiles
+    let fp = session.flat_profile("tortuga", Metric::ExcTime)?;
+    assert_eq!(fp[0].name, "computeRhs");
+    println!("  flat_profile[tortuga]: top = {} ({})", fp[0].name, fmt_ns(fp[0].value));
+
+    let t0 = Instant::now();
+    let tp = session.time_profile("tortuga", 128, None)?; // HLO path
+    println!(
+        "  time_profile[tortuga] via PJRT: {} bins x {} funcs, busy {} ({})",
+        tp.num_bins(),
+        tp.func_names.len(),
+        fmt_ns(tp.total()),
+        fmt_ns(t0.elapsed().as_nanos() as f64)
+    );
+    // cross-engine agreement
+    let mut t_copy = session.get("tortuga")?.clone();
+    let tp_rust = analysis::time_profile(&mut t_copy, 128, Some(63))?;
+    let rel = (tp.total() - tp_rust.total()).abs() / tp_rust.total();
+    assert!(rel < 1e-3, "HLO and Rust time profiles diverge: {rel}");
+    println!("  HLO vs Rust time_profile total agreement: {:.2e} relative", rel);
+
+    // 3b. communication
+    let cm = session.comm_matrix("laghos", CommUnit::Bytes)?;
+    assert!(cm.diagonal_fraction(4) > 0.99);
+    let (hist, _edges) = session.message_histogram("laghos", 10)?;
+    let cbp = session.comm_by_process("kripke", CommUnit::Bytes)?;
+    let groups: std::collections::BTreeSet<i64> =
+        cbp.iter().map(|&(_, s, r)| (s + r) as i64).collect();
+    let (cot_counts, _, _) = session.comm_over_time("laghos", 64)?;
+    println!(
+        "  comm_matrix[laghos]: {}x{}, {:.1}% near-diagonal; histogram {} msgs; kripke groups {}; {} sends over time",
+        cm.n(), cm.n(),
+        cm.diagonal_fraction(4) * 100.0,
+        hist.iter().sum::<u64>(),
+        groups.len(),
+        cot_counts.iter().sum::<u64>()
+    );
+    assert_eq!(groups.len(), 3, "kripke must show 3 comm-volume groups");
+
+    // 3c. bottleneck hunting
+    let li = session.load_imbalance("loimos", Metric::ExcTime, 5)?;
+    let ci = li.iter().find(|r| r.name == "ComputeInteractions()").unwrap();
+    assert!(ci.imbalance > 1.3);
+    println!(
+        "  load_imbalance[loimos]: ComputeInteractions() imbalance {:.2}, top procs {:?}",
+        ci.imbalance, ci.top_processes
+    );
+
+    let idle = session.idle_time("loimos")?;
+    println!(
+        "  idle_time[loimos]: most idle = proc {} ({})",
+        idle[0].proc,
+        fmt_ns(idle[0].idle_ns)
+    );
+
+    let t0 = Instant::now();
+    let pats = session.detect_pattern("tortuga", Some("time-loop"), &PatternConfig::default())?;
+    assert_eq!(pats.len(), 12);
+    println!(
+        "  pattern_detection[tortuga]: {} iterations found ({})",
+        pats.len(),
+        fmt_ns(t0.elapsed().as_nanos() as f64)
+    );
+    // filter one iteration (Fig. 8 workflow)
+    session.filter(
+        "tortuga",
+        "tortuga_iter0",
+        &Expr::time_between(pats[0].start, pats[0].end),
+    )?;
+    println!(
+        "  filter[tortuga iter 0]: {} -> {} events",
+        session.get("tortuga")?.len(),
+        session.get("tortuga_iter0")?.len()
+    );
+
+    // matrix profile through PJRT on the activity series
+    let tp_gol = session.time_profile("gol", 128, None)?;
+    let series: Vec<f64> = {
+        // upsample the 128-bin series to cover one AOT call
+        let base = tp_gol.bin_totals();
+        (0..4200).map(|i| base[i % base.len()]).collect()
+    };
+    let t0 = Instant::now();
+    let prof = session.matrix_profile(&series, 64)?;
+    println!(
+        "  matrix_profile via PJRT: {} windows, min dist {:.3} ({})",
+        prof.len(),
+        prof.iter().copied().fold(f64::INFINITY, f64::min),
+        fmt_ns(t0.elapsed().as_nanos() as f64)
+    );
+
+    // 3d. dependency analyses
+    let paths = session.critical_path("gol")?;
+    let ts = session.get("gol")?.timestamps()?.to_vec();
+    for w in paths[0].rows.windows(2) {
+        assert!(ts[w[0] as usize] <= ts[w[1] as usize], "critical path not monotone");
+    }
+    println!("  critical_path[gol]: {} events on path", paths[0].rows.len());
+
+    let ops = session.lateness("gol")?;
+    let by_proc = analysis::lateness_by_process(&ops);
+    println!(
+        "  lateness[gol]: worst proc {} (max {})",
+        by_proc[0].proc,
+        fmt_ns(by_proc[0].max_lateness)
+    );
+
+    let bd = session.comm_comp_breakdown("axonn")?;
+    let mean = analysis::overlap::mean_breakdown(&bd);
+    assert!(mean.comp_overlapped > mean.comm, "axonn v3 must overlap most comm");
+    println!(
+        "  comm_comp_breakdown[axonn v3]: comp {} / overlapped {} / exposed comm {}",
+        fmt_ns(mean.comp),
+        fmt_ns(mean.comp_overlapped),
+        fmt_ns(mean.comm)
+    );
+
+    let cct = session.create_cct("tortuga")?;
+    println!("  create_cct[tortuga]: {} nodes, {} roots", cct.nodes.len(), cct.roots.len());
+
+    // multi-run over three tortuga scales
+    for (i, ranks) in [16usize, 32, 64].iter().enumerate() {
+        session.generate(&format!("sweep{i}"), "tortuga", &GenConfig::new(*ranks, 4), 1)?;
+    }
+    let mr = session.multi_run(&["sweep0", "sweep1", "sweep2"], Metric::ExcTime, 5)?;
+    println!("  multi_run[tortuga 16/32/64]:\n{}", indent(&mr.show(), 4));
+
+    // ---- 4. headline metric: scaling shape (Fig. 5) ----------------------
+    println!("== 4. headline: op scaling vs trace size ==");
+    let mut last = None;
+    println!("  {:>10} {:>12} {:>14} {:>14}", "events", "read(ms)", "comm_mtx(ms)", "flat_prof(ms)");
+    for iters in [8usize, 16, 32, 64] {
+        let tr = gen::generate("amg", &GenConfig::new(16, iters), 1)?;
+        let dir = out.join(format!("amg_{iters}"));
+        readers::otf2::write(&tr, &dir)?;
+        let t0 = Instant::now();
+        let rd = readers::otf2::read(&dir, 0)?;
+        let read_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t0 = Instant::now();
+        let _ = analysis::comm_matrix(&rd, CommUnit::Bytes)?;
+        let cm_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut rd2 = rd.clone();
+        let t0 = Instant::now();
+        let _ = analysis::flat_profile(&mut rd2, Metric::ExcTime)?;
+        let fp_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!("  {:>10} {:>12.2} {:>14.2} {:>14.2}", rd.len(), read_ms, cm_ms, fp_ms);
+        if let Some((n_prev, read_prev)) = last {
+            let size_ratio = rd.len() as f64 / n_prev as f64;
+            let time_ratio: f64 = read_ms / read_prev;
+            // linear scaling: time ratio tracks size ratio (generously)
+            assert!(
+                time_ratio < size_ratio * 2.5,
+                "reader scaling superlinear: {time_ratio:.2} vs {size_ratio:.2}"
+            );
+        }
+        last = Some((rd.len(), read_ms));
+    }
+
+    println!("\nALL E2E CHECKS PASSED in {}", fmt_ns(t_total.elapsed().as_nanos() as f64));
+    Ok(())
+}
+
+fn indent(s: &str, n: usize) -> String {
+    s.lines()
+        .map(|l| format!("{:indent$}{l}", "", indent = n))
+        .collect::<Vec<_>>()
+        .join("\n")
+}

@@ -1,0 +1,111 @@
+//! Figure 5 harness: regenerates all three panels of the paper's
+//! performance evaluation, printing the same series the paper plots.
+//!
+//! * left   — OTF2 reader + comm_matrix runtime vs trace size (AMG and
+//!            Laghos sweeps); expectation: linear in rows.
+//! * center — OTF2 reader strong scaling over reader threads (AMG 128p,
+//!            Laghos 256p).
+//! * right  — reader memory consumption vs trace size (counting
+//!            allocator).
+//!
+//! ```sh
+//! cargo run --release --example fig5_harness
+//! ```
+
+use pipit::analysis::{comm_matrix, CommUnit};
+use pipit::gen::{self, GenConfig};
+use pipit::readers::otf2;
+use pipit::util::mem;
+use std::time::Instant;
+
+#[global_allocator]
+static ALLOC: mem::CountingAlloc = mem::CountingAlloc::new();
+
+fn time_ms<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed().as_secs_f64() * 1e3)
+}
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::PathBuf::from("e2e_out/fig5");
+    std::fs::create_dir_all(&out)?;
+
+    // ---- left panel: runtime vs trace size --------------------------------
+    println!("== Fig 5 (left): reader & comm_matrix runtime vs trace size ==");
+    println!("{:<8} {:>10} {:>12} {:>14}", "app", "events", "read (ms)", "comm_mtx (ms)");
+    let mut rows_left = Vec::new();
+    for app in ["amg", "laghos"] {
+        for iters in [5usize, 10, 20, 40, 80] {
+            let tr = gen::generate(app, &GenConfig::new(32, iters), 1)?;
+            let dir = out.join(format!("{app}_{iters}"));
+            otf2::write(&tr, &dir)?;
+            let (rd, read_ms) = time_ms(|| otf2::read(&dir, 0).unwrap());
+            let (_, cm_ms) = time_ms(|| comm_matrix(&rd, CommUnit::Bytes).unwrap());
+            println!("{:<8} {:>10} {:>12.2} {:>14.2}", app, rd.len(), read_ms, cm_ms);
+            rows_left.push((app, rd.len(), read_ms, cm_ms));
+        }
+    }
+    // linearity check: time per event roughly constant across the sweep
+    for app in ["amg", "laghos"] {
+        let per: Vec<f64> = rows_left
+            .iter()
+            .filter(|(a, _, _, _)| *a == app)
+            .map(|(_, n, ms, _)| ms / *n as f64)
+            .collect();
+        let (lo, hi) = per.iter().fold((f64::MAX, 0f64), |(l, h), &v| (l.min(v), h.max(v)));
+        println!("  {app}: read-ns-per-event spread {:.2}x (linear ⇒ small)", hi / lo);
+    }
+
+    // ---- center panel: reader strong scaling ------------------------------
+    println!("\n== Fig 5 (center): OTF2 reader strong scaling ==");
+    let cases = [("amg", 128usize, 40usize), ("laghos", 256, 30)];
+    println!("{:<12} {:>8} {:>6} {:>10} {:>9}", "trace", "events", "thr", "read (ms)", "speedup");
+    for (app, ranks, iters) in cases {
+        let tr = gen::generate(app, &GenConfig::new(ranks, iters), 1)?;
+        let dir = out.join(format!("{app}_{ranks}p"));
+        otf2::write(&tr, &dir)?;
+        let mut base = None;
+        for threads in [1usize, 2, 4, 8, 16] {
+            // median of 3 runs
+            let mut times: Vec<f64> = (0..3)
+                .map(|_| time_ms(|| otf2::read(&dir, threads).unwrap()).1)
+                .collect();
+            times.sort_by(|a, b| a.total_cmp(b));
+            let ms = times[1];
+            let b = *base.get_or_insert(ms);
+            println!(
+                "{:<12} {:>8} {:>6} {:>10.2} {:>8.2}x",
+                format!("{app}-{ranks}p"),
+                tr.len(),
+                threads,
+                ms,
+                b / ms
+            );
+        }
+    }
+
+    // ---- right panel: reader memory consumption ---------------------------
+    println!("\n== Fig 5 (right): reader memory vs trace size ==");
+    println!("{:<8} {:>10} {:>14} {:>16}", "app", "events", "peak (MiB)", "bytes/event");
+    for app in ["amg", "laghos"] {
+        for iters in [10usize, 20, 40, 80] {
+            let tr = gen::generate(app, &GenConfig::new(32, iters), 1)?;
+            let dir = out.join(format!("mem_{app}_{iters}"));
+            otf2::write(&tr, &dir)?;
+            mem::reset_peak();
+            let before = mem::live_bytes();
+            let rd = otf2::read(&dir, 1)?;
+            let peak = mem::peak_bytes().saturating_sub(before);
+            println!(
+                "{:<8} {:>10} {:>14.2} {:>16.1}",
+                app,
+                rd.len(),
+                peak as f64 / (1 << 20) as f64,
+                peak as f64 / rd.len() as f64
+            );
+        }
+    }
+    println!("\nfig5 harness complete (shape targets: linear left panel, rising center speedup, linear right panel)");
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Load-imbalance case study (paper §VII.A, Fig. 7): Loimos on 128
+//! processes, top-5 most time-consuming functions with their imbalance and
+//! most-loaded processes.
+//!
+//! ```sh
+//! cargo run --release --example load_imbalance_study
+//! ```
+
+use pipit::analysis::{load_imbalance, Metric};
+use pipit::gen::{loimos, GenConfig};
+
+fn main() -> anyhow::Result<()> {
+    // loimos_128 = pipit.Trace.from_projections('loimos_128')
+    let mut loimos_128 = loimos::generate(&GenConfig::new(128, 10));
+    println!(
+        "Loimos 128p: {} events, {} processes\n",
+        loimos_128.len(),
+        loimos_128.num_processes()?
+    );
+
+    // loimos_128.load_imbalance(num_processes=5) . sort_values(by='time.exc') . head(5)
+    let rows = load_imbalance(&mut loimos_128, Metric::ExcTime, 5)?;
+    println!(
+        "{:<58} {:>18} {:>28} {:>15}",
+        "", "time.exc.imbalance", "Top processes", "time.exc.mean"
+    );
+    for r in rows.iter().filter(|r| r.name != "main").take(5) {
+        let procs: Vec<String> = r.top_processes.iter().map(|p| p.to_string()).collect();
+        println!(
+            "{:<58} {:>18.6} {:>28} {:>15.6e}",
+            truncate(&r.name, 57),
+            r.imbalance,
+            format!("[{}]", procs.join(", ")),
+            r.mean
+        );
+    }
+
+    // The paper's observations, checked programmatically:
+    let ci = rows.iter().find(|r| r.name == "ComputeInteractions()").unwrap();
+    let rv = rows
+        .iter()
+        .find(|r| r.name.starts_with("ReceiveVisitMessages"))
+        .unwrap();
+    println!("\nobservations (paper §VII.A):");
+    println!(
+        "  * ComputeInteractions() is the most time consuming entry (mean {:.3e} ns) with imbalance {:.2}",
+        ci.mean, ci.imbalance
+    );
+    println!(
+        "  * ReceiveVisitMessages(...) shows the highest imbalance: {:.2}",
+        rv.imbalance
+    );
+    let overlap: Vec<i64> = ci
+        .top_processes
+        .iter()
+        .filter(|p| rv.top_processes.contains(p))
+        .copied()
+        .collect();
+    println!("  * overloaded processes shared across functions: {overlap:?}");
+    assert!(rv.imbalance >= 1.2);
+    assert!(!overlap.is_empty(), "paper: top processes are common across functions");
+    Ok(())
+}
+
+fn truncate(s: &str, n: usize) -> String {
+    if s.len() <= n {
+        s.to_string()
+    } else {
+        format!("{}…", &s[..n - 1])
+    }
+}

@@ -1,0 +1,69 @@
+//! Filtering case studies (paper §VII.B, Figs. 8–9):
+//! * pattern detection → filter one Tortuga iteration by time range,
+//! * idle-time outliers → filter a Loimos trace by process ids,
+//! both visualized with the timeline view.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example pattern_filter
+//! ```
+
+use pipit::analysis::{idle_outliers, PatternConfig};
+use pipit::coordinator::AnalysisSession;
+use pipit::df::Expr;
+use pipit::gen::GenConfig;
+use pipit::viz::{plot_timeline, TimelineOptions};
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::PathBuf::from("e2e_out");
+    std::fs::create_dir_all(&out)?;
+    let mut s = AnalysisSession::new().with_artifacts("artifacts");
+
+    // ---- Fig. 8: pattern detection on Tortuga 16p -------------------------
+    // tor_16 = pipit.Trace.from_otf2('./tortuga_16')
+    s.generate("tor_16", "tortuga", &GenConfig::new(16, 10), 1)?;
+    // patterns = tor_16.detect_pattern(start_event='time-loop')
+    let patterns = s.detect_pattern("tor_16", Some("time-loop"), &PatternConfig::default())?;
+    println!("Tortuga 16p: {} iterations detected", patterns.len());
+    let (start, end) = (patterns[0].start, patterns[0].end);
+    println!("  iteration 0: [{start}, {end}] ({})", pipit::util::fmt_ns((end - start) as f64));
+
+    // tor_16.plot_timeline(x_start=start, x_end=end)
+    let svg = plot_timeline(
+        s.get_mut("tor_16")?,
+        &TimelineOptions { x_start: Some(start), x_end: Some(end), ..Default::default() },
+    )?;
+    std::fs::write(out.join("fig8_one_iteration_timeline.svg"), svg)?;
+    println!("  -> fig8_one_iteration_timeline.svg");
+
+    let full = s.get("tor_16")?.len();
+    s.filter("tor_16", "iter0", &Expr::time_between(start, end))?;
+    println!("  filtered events: {} -> {}", full, s.get("iter0")?.len());
+
+    // ---- Fig. 9: idle outliers on Loimos 64p ------------------------------
+    s.generate("loimos_64", "loimos", &GenConfig::new(64, 8), 1)?;
+    let (most, least) = idle_outliers(s.get_mut("loimos_64")?, 4, None)?;
+    println!("\nLoimos 64p idle time:");
+    println!("  most idle:  {:?}", most.iter().map(|r| (r.proc, r.idle_ns as i64)).collect::<Vec<_>>());
+    println!("  least idle: {:?}", least.iter().map(|r| (r.proc, r.idle_ns as i64)).collect::<Vec<_>>());
+
+    // reduce the trace to the 8 outlier processes and plot
+    let outliers: Vec<i64> = most.iter().chain(least.iter()).map(|r| r.proc).collect();
+    s.filter("loimos_64", "outliers", &Expr::process_in(&outliers))?;
+    println!(
+        "  filtered to 8 outlier processes: {} -> {} events",
+        s.get("loimos_64")?.len(),
+        s.get("outliers")?.len()
+    );
+    let svg = plot_timeline(s.get_mut("outliers")?, &TimelineOptions::default())?;
+    std::fs::write(out.join("fig9_idle_outliers_timeline.svg"), svg)?;
+    println!("  -> fig9_idle_outliers_timeline.svg");
+
+    // paper's claim: outlier groups differ visibly in activity
+    let most_idle_frac = most[0].fraction;
+    let least_idle_frac = least[0].fraction;
+    assert!(
+        most_idle_frac > least_idle_frac + 0.05,
+        "idle outliers should separate: {most_idle_frac} vs {least_idle_frac}"
+    );
+    Ok(())
+}

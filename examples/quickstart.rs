@@ -1,0 +1,58 @@
+//! Quickstart: the paper's Figure 1 end to end.
+//!
+//! Reads a tiny CSV trace, shows the uniform events DataFrame, and runs a
+//! first analysis — the `foo_bar` example from §III.A.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use pipit::analysis::{self, Metric};
+use pipit::trace::Trace;
+
+fn main() -> anyhow::Result<()> {
+    // The exact sample trace from the paper's Figure 1 (seconds scale).
+    let csv = "\
+Timestamp (s), Event Type, Name, Process
+0, Enter, main(), 0
+1, Enter, foo(), 0
+3, Enter, MPI_Send, 0
+5, Leave, MPI_Send, 0
+8, Enter, baz(), 0
+18, Leave, baz(), 0
+25, Leave, foo(), 0
+100, Leave, main(), 0
+0, Enter, main(), 1
+2, Enter, foo(), 1
+4, Enter, MPI_Recv, 1
+7, Leave, MPI_Recv, 1
+24, Leave, foo(), 1
+100, Leave, main(), 1
+";
+    let dir = std::env::temp_dir().join("pipit_quickstart");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join("foo-bar.csv");
+    std::fs::write(&path, csv)?;
+
+    // foo_bar = pipit.Trace.from_csv('foo-bar.csv')
+    let mut foo_bar = Trace::from_csv(&path)?;
+
+    // display(foo_bar.events)
+    println!("events DataFrame ({} rows):\n", foo_bar.len());
+    println!("{}", foo_bar.events.show(8));
+
+    // a first analysis: flat profile + CCT
+    let fp = analysis::flat_profile(&mut foo_bar, Metric::ExcTime)?;
+    println!("flat profile (exclusive time):");
+    for row in &fp {
+        println!("  {:<12} {}", row.name, pipit::util::fmt_ns(row.value));
+    }
+
+    let cct = analysis::create_cct(&mut foo_bar)?;
+    println!("\ncalling context tree:\n{}", cct.render(20));
+
+    // filter (paper §IV.E): process 0 only
+    let p0 = foo_bar.filter(&pipit::df::Expr::process_eq(0))?;
+    println!("filtered to process 0: {} events", p0.len());
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Time-profile case study (paper §IV.B, Fig. 2): Tortuga on 64 processes,
+//! rendered as the stacked-bar view — computed through the AOT Pallas
+//! time-hist kernel via PJRT when artifacts are present.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example time_profile_study
+//! ```
+
+use pipit::coordinator::AnalysisSession;
+use pipit::gen::GenConfig;
+use pipit::util::fmt_ns;
+use pipit::viz::plot_time_profile;
+
+fn main() -> anyhow::Result<()> {
+    let out = std::path::PathBuf::from("e2e_out");
+    std::fs::create_dir_all(&out)?;
+
+    let mut s = AnalysisSession::new().with_artifacts("artifacts");
+    println!(
+        "PJRT kernel path: {}",
+        if s.uses_hlo() { "ENABLED" } else { "disabled (pure Rust fallback)" }
+    );
+
+    s.generate("tortuga_64", "tortuga", &GenConfig::new(64, 12), 1)?;
+    let tp = s.time_profile("tortuga_64", 128, None)?;
+
+    println!(
+        "time profile: {} bins x {} functions, total busy {}",
+        tp.num_bins(),
+        tp.func_names.len(),
+        fmt_ns(tp.total())
+    );
+    // per-function share, like reading Fig. 2's stacked areas
+    let mut totals: Vec<(String, f64)> = tp
+        .func_names
+        .iter()
+        .enumerate()
+        .map(|(f, name)| (name.clone(), tp.values.iter().map(|row| row[f]).sum()))
+        .collect();
+    totals.sort_by(|a, b| b.1.total_cmp(&a.1));
+    println!("\nshare of busy time:");
+    for (name, v) in &totals {
+        println!("  {:<24} {:>12}  {:>5.1}%", name, fmt_ns(*v), v / tp.total() * 100.0);
+    }
+    assert_eq!(totals[0].0, "computeRhs", "computeRhs dominates (paper Fig. 2)");
+
+    std::fs::write(out.join("fig2_time_profile.svg"), plot_time_profile(&tp))?;
+    println!("\n-> fig2_time_profile.svg");
+    Ok(())
+}

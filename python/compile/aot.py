@@ -1,0 +1,93 @@
+"""AOT pipeline: lower the L2 graphs to HLO *text* for the Rust runtime.
+
+HLO text, NOT ``.serialize()``: jax >= 0.5 emits HloModuleProto with 64-bit
+instruction ids that xla_extension 0.5.1 (the version behind the published
+``xla`` 0.1.6 crate) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/load_hlo/.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_matrix_profile() -> str:
+    spec = jax.ShapeDtypeStruct((model.MP_SERIES_LEN,), jnp.float32)
+    return to_hlo_text(jax.jit(model.matrix_profile).lower(spec))
+
+
+def lower_time_hist() -> str:
+    f32 = jnp.float32
+    e = model.TH_EVENTS
+    args = (
+        jax.ShapeDtypeStruct((e,), f32),           # starts
+        jax.ShapeDtypeStruct((e,), f32),           # durs
+        jax.ShapeDtypeStruct((e,), jnp.int32),     # fids
+        jax.ShapeDtypeStruct((), f32),             # t0
+        jax.ShapeDtypeStruct((), f32),             # bin_width
+    )
+    return to_hlo_text(jax.jit(model.time_profile).lower(*args))
+
+
+def lower_comm_matrix() -> str:
+    e = model.CM_EVENTS
+    args = (
+        jax.ShapeDtypeStruct((e,), jnp.int32),     # src
+        jax.ShapeDtypeStruct((e,), jnp.int32),     # dst
+        jax.ShapeDtypeStruct((e,), jnp.float32),   # bytes
+    )
+    return to_hlo_text(jax.jit(model.comm_matrix).lower(*args))
+
+
+ARTIFACTS = {
+    "matrix_profile": lower_matrix_profile,
+    "time_hist": lower_time_hist,
+    "comm_matrix": lower_comm_matrix,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "mp_windows": model.MP_WINDOWS,
+        "mp_m": model.MP_M,
+        "mp_series_len": model.MP_SERIES_LEN,
+        "th_events": model.TH_EVENTS,
+        "th_bins": model.TH_BINS,
+        "th_funcs": model.TH_FUNCS,
+        "cm_events": model.CM_EVENTS,
+        "cm_procs": model.CM_PROCS,
+        "artifacts": {},
+    }
+    for name, fn in ARTIFACTS.items():
+        text = fn()
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = f"{name}.hlo.txt"
+        print(f"wrote {len(text)} chars to {path}")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print("wrote manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: communication-matrix accumulation.
+
+Backs Pipit's ``comm_matrix``: for each message record (src, dst, bytes),
+accumulate out[src, dst] += bytes. pandas does this with a groupby
+scatter; the TPU rewrite is a weighted outer-product matmul per event
+tile: out += onehot(src).T @ (bytes * onehot(dst)) -- all MXU work, same
+revisited-output accumulation pattern as time_hist (DESIGN.md
+SS Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _cm_kernel(src_ref, dst_ref, bytes_ref, out_ref, *, nprocs: int, et: int):
+    e = pl.program_id(0)
+    src = src_ref[...]          # (et, 1) int32
+    dst = dst_ref[...]          # (et, 1) int32
+    w = bytes_ref[...]          # (et, 1) f32
+
+    ranks = jax.lax.broadcasted_iota(jnp.int32, (1, nprocs), 1)
+    s_onehot = (src == ranks).astype(jnp.float32)          # (et, P)
+    d_onehot = (dst == ranks).astype(jnp.float32) * w      # (et, P) weighted
+
+    # MXU: (P, et) x (et, P) accumulated into the resident (P, P) tile.
+    tile = jnp.dot(s_onehot.T, d_onehot, preferred_element_type=jnp.float32)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = tile
+
+    @pl.when(e != 0)
+    def _acc():
+        out_ref[...] += tile
+
+
+def comm_matrix_pallas(src, dst, nbytes, *, nprocs: int, et: int = 512):
+    """Accumulate a (nprocs, nprocs) comm matrix from message records.
+
+    src/dst: (E,) int32 (out-of-range rows contribute nothing; pad with
+    -1); nbytes: (E,) f32. E % et == 0.
+    """
+    e_total = src.shape[0]
+    assert e_total % et == 0, (e_total, et)
+    kernel = functools.partial(_cm_kernel, nprocs=nprocs, et=et)
+    return pl.pallas_call(
+        kernel,
+        grid=(e_total // et,),
+        in_specs=[
+            pl.BlockSpec((et, 1), lambda e: (e, 0)),
+            pl.BlockSpec((et, 1), lambda e: (e, 0)),
+            pl.BlockSpec((et, 1), lambda e: (e, 0)),
+        ],
+        out_specs=pl.BlockSpec((nprocs, nprocs), lambda e: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nprocs, nprocs), jnp.float32),
+        interpret=True,
+    )(
+        src.reshape(e_total, 1),
+        dst.reshape(e_total, 1),
+        nbytes.reshape(e_total, 1),
+    )

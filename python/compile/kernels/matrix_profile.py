@@ -1,0 +1,99 @@
+"""L1 Pallas kernel: z-normalized self-join matrix profile.
+
+This is the compute hot-spot behind Pipit's ``pattern_detection`` (the
+paper delegates it to STUMPY on the CPU). TPU adaptation (DESIGN.md
+SS Hardware-Adaptation): the all-pairs sliding dot products are a blocked
+matmul of the window matrix against itself -- MXU systolic-array food --
+and the z-normalization + exclusion-zone row-min reduction run in the same
+kernel epilogue while the G tile is still resident in VMEM.
+
+Grid: (W/bw, W/bw); the j dimension is innermost so the output block for
+row-tile i is revisited across j and accumulates a running row-min (the
+standard Pallas accumulation pattern). interpret=True everywhere: the CPU
+PJRT plugin cannot execute Mosaic custom-calls.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mp_kernel(a_i_ref, a_j_ref, mu_i_ref, mu_j_ref, sig_i_ref, sig_j_ref,
+               min_ref, arg_ref, *, m: int, bw: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    a_i = a_i_ref[...]          # (bw, m)
+    a_j = a_j_ref[...]          # (bw, m)
+    # MXU: (bw, m) x (m, bw) blocked cross-correlation.
+    g = jnp.dot(a_i, a_j.T, preferred_element_type=jnp.float32)
+
+    mu_i = mu_i_ref[...]        # (bw, 1)
+    mu_j = mu_j_ref[...]        # (bw, 1)
+    sig_i = sig_i_ref[...]
+    sig_j = sig_j_ref[...]
+
+    num = g - m * (mu_i * mu_j.T)
+    den = m * (sig_i * sig_j.T)
+    dist2 = jnp.maximum(2.0 * m * (1.0 - num / den), 0.0)
+
+    # Global row/col indices of this tile, for the exclusion zone and argmin.
+    rows = i * bw + jax.lax.broadcasted_iota(jnp.int32, (bw, bw), 0)
+    cols = j * bw + jax.lax.broadcasted_iota(jnp.int32, (bw, bw), 1)
+    excl = jnp.abs(rows - cols) < max(m // 2, 1)
+    dist2 = jnp.where(excl, jnp.inf, dist2)
+
+    tile_min = jnp.min(dist2, axis=1, keepdims=True)            # (bw, 1)
+    tile_arg = j * bw + jnp.argmin(dist2, axis=1).astype(jnp.int32)
+    tile_arg = tile_arg.reshape(bw, 1)
+
+    @pl.when(j == 0)
+    def _init():
+        min_ref[...] = tile_min
+        arg_ref[...] = tile_arg
+
+    @pl.when(j != 0)
+    def _acc():
+        cur = min_ref[...]
+        better = tile_min < cur
+        min_ref[...] = jnp.where(better, tile_min, cur)
+        arg_ref[...] = jnp.where(better, tile_arg, arg_ref[...])
+
+
+def matrix_profile_pallas(a, mu, sig, *, m: int, bw: int = 256):
+    """Matrix profile over a precomputed window matrix.
+
+    a: (w, m) window matrix, mu/sig: (w,) per-window z-norm stats.
+    Requires w % bw == 0 (the L2 wrapper pads). Returns
+    (profile2 (w,) f32, neighbour indices (w,) int32).
+    """
+    w = a.shape[0]
+    assert w % bw == 0, (w, bw)
+    grid = (w // bw, w // bw)
+    mu2 = mu.reshape(w, 1)
+    sig2 = sig.reshape(w, 1)
+    kernel = functools.partial(_mp_kernel, m=m, bw=bw)
+    pmin, parg = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bw, m), lambda i, j: (i, 0)),   # a_i: row tile
+            pl.BlockSpec((bw, m), lambda i, j: (j, 0)),   # a_j: col tile
+            pl.BlockSpec((bw, 1), lambda i, j: (i, 0)),   # mu_i
+            pl.BlockSpec((bw, 1), lambda i, j: (j, 0)),   # mu_j
+            pl.BlockSpec((bw, 1), lambda i, j: (i, 0)),   # sig_i
+            pl.BlockSpec((bw, 1), lambda i, j: (j, 0)),   # sig_j
+        ],
+        out_specs=[
+            pl.BlockSpec((bw, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bw, 1), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((w, 1), jnp.float32),
+            jax.ShapeDtypeStruct((w, 1), jnp.int32),
+        ],
+        interpret=True,
+    )(a, a, mu2, mu2, sig2, sig2)
+    return pmin.reshape(w), parg.reshape(w)

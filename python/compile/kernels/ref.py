@@ -1,0 +1,88 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth for pytest/hypothesis comparisons. They mirror
+what Pipit obtained from STUMPY (matrix profile) and pandas groupby/cut
+(binned time profile), re-expressed as dense jnp math so the same
+definitions hold on any backend.
+"""
+
+import jax.numpy as jnp
+
+
+def sliding_stats(series: jnp.ndarray, m: int):
+    """Per-window mean and std (population) of all length-m windows.
+
+    Returns (mu, sig) each of shape (n - m + 1,). sig is clamped to 1e-6
+    to keep z-normalization finite on constant windows (padded regions).
+    """
+    n = series.shape[0]
+    w = n - m + 1
+    csum = jnp.concatenate([jnp.zeros(1, series.dtype), jnp.cumsum(series)])
+    csum2 = jnp.concatenate(
+        [jnp.zeros(1, series.dtype), jnp.cumsum(series * series)]
+    )
+    s1 = csum[m : m + w] - csum[:w]
+    s2 = csum2[m : m + w] - csum2[:w]
+    mu = s1 / m
+    var = jnp.maximum(s2 / m - mu * mu, 0.0)
+    sig = jnp.maximum(jnp.sqrt(var), 1e-6)
+    return mu, sig
+
+
+def window_matrix(series: jnp.ndarray, m: int) -> jnp.ndarray:
+    """(w, m) matrix of all length-m sliding windows (gather-based)."""
+    n = series.shape[0]
+    w = n - m + 1
+    idx = jnp.arange(w)[:, None] + jnp.arange(m)[None, :]
+    return series[idx]
+
+
+def matrix_profile_ref(series: jnp.ndarray, m: int):
+    """Self-join z-normalized squared-distance matrix profile.
+
+    Returns (profile2, indices): for each window i, the squared z-normalized
+    Euclidean distance to its nearest non-trivial neighbour j (exclusion
+    zone |i - j| < m // 2), and that neighbour's index.
+    """
+    a = window_matrix(series, m)
+    mu, sig = sliding_stats(series, m)
+    w = a.shape[0]
+    g = a @ a.T  # (w, w) cross dot products
+    num = g - m * mu[:, None] * mu[None, :]
+    den = m * sig[:, None] * sig[None, :]
+    corr = num / den
+    dist2 = jnp.maximum(2.0 * m * (1.0 - corr), 0.0)
+    i = jnp.arange(w)
+    excl = jnp.abs(i[:, None] - i[None, :]) < max(m // 2, 1)
+    dist2 = jnp.where(excl, jnp.inf, dist2)
+    return jnp.min(dist2, axis=1), jnp.argmin(dist2, axis=1)
+
+
+def time_hist_ref(starts, durs, fids, t0, bin_width, num_bins, num_funcs):
+    """Binned per-function busy time.
+
+    For each (event e, bin b): overlap of [starts[e], starts[e]+durs[e])
+    with bin b's interval, accumulated into out[b, fids[e]].
+    Events with fid outside [0, num_funcs) contribute nothing.
+    Returns (num_bins, num_funcs) f32.
+    """
+    edges_lo = t0 + bin_width * jnp.arange(num_bins, dtype=jnp.float32)
+    edges_hi = edges_lo + bin_width
+    ends = starts + durs
+    ov = jnp.maximum(
+        jnp.minimum(ends[:, None], edges_hi[None, :])
+        - jnp.maximum(starts[:, None], edges_lo[None, :]),
+        0.0,
+    )  # (E, B)
+    onehot = (fids[:, None] == jnp.arange(num_funcs)[None, :]).astype(
+        jnp.float32
+    )  # (E, F)
+    return ov.T @ onehot  # (B, F)
+
+
+def comm_matrix_ref(src, dst, nbytes, nprocs):
+    """out[p, q] = sum of nbytes over messages p -> q (dense one-hot)."""
+    ranks = jnp.arange(nprocs)
+    s = (src[:, None] == ranks[None, :]).astype(jnp.float32)
+    d = (dst[:, None] == ranks[None, :]).astype(jnp.float32) * nbytes[:, None]
+    return s.T @ d

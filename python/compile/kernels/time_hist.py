@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: binned per-function busy-time histogram.
+
+Backs Pipit's ``time_profile`` / ``comm_over_time``: for every event
+interval [start, start+dur) and every time bin, accumulate the clamped
+overlap into out[bin, function]. The paper does this with pandas cut +
+groupby (a scatter); scatter is MXU-hostile on TPU, so we rewrite it as a
+dense one-hot matmul -- overlap.T (B x et) @ onehot(fid) (et x F) -- the
+canonical TPU binning idiom (DESIGN.md SS Hardware-Adaptation).
+
+Grid: (E/et,) over event tiles; the single (B, F) output block is revisited
+by every grid step and accumulates. interpret=True (CPU PJRT).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _th_kernel(starts_ref, durs_ref, fids_ref, t0_ref, bw_ref, out_ref,
+               *, num_bins: int, num_funcs: int, et: int):
+    e = pl.program_id(0)
+
+    starts = starts_ref[...]        # (et, 1)
+    durs = durs_ref[...]            # (et, 1)
+    fids = fids_ref[...]            # (et, 1) int32
+    t0 = t0_ref[0, 0]
+    binw = bw_ref[0, 0]
+
+    bin_ids = jax.lax.broadcasted_iota(jnp.float32, (1, num_bins), 1)
+    lo = t0 + binw * bin_ids        # (1, B)
+    hi = lo + binw
+    ends = starts + durs
+    ov = jnp.maximum(
+        jnp.minimum(ends, hi) - jnp.maximum(starts, lo), 0.0
+    )  # (et, B)
+
+    func_ids = jax.lax.broadcasted_iota(jnp.int32, (1, num_funcs), 1)
+    onehot = (fids == func_ids).astype(jnp.float32)  # (et, F)
+
+    # MXU: (B, et) x (et, F) accumulation into the resident output tile.
+    tile = jnp.dot(ov.T, onehot, preferred_element_type=jnp.float32)
+
+    @pl.when(e == 0)
+    def _init():
+        out_ref[...] = tile
+
+    @pl.when(e != 0)
+    def _acc():
+        out_ref[...] += tile
+
+
+def time_hist_pallas(starts, durs, fids, t0, bin_width, *,
+                     num_bins: int, num_funcs: int, et: int = 512):
+    """Binned busy-time aggregation.
+
+    starts/durs: (E,) f32; fids: (E,) int32 (out-of-range => ignored);
+    t0/bin_width: () f32 scalars (passed as (1,1) blocks). E % et == 0.
+    Returns (num_bins, num_funcs) f32.
+    """
+    e_total = starts.shape[0]
+    assert e_total % et == 0, (e_total, et)
+    grid = (e_total // et,)
+    kernel = functools.partial(
+        _th_kernel, num_bins=num_bins, num_funcs=num_funcs, et=et
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((et, 1), lambda e: (e, 0)),
+            pl.BlockSpec((et, 1), lambda e: (e, 0)),
+            pl.BlockSpec((et, 1), lambda e: (e, 0)),
+            pl.BlockSpec((1, 1), lambda e: (0, 0)),
+            pl.BlockSpec((1, 1), lambda e: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_bins, num_funcs), lambda e: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_bins, num_funcs), jnp.float32),
+        interpret=True,
+    )(
+        starts.reshape(e_total, 1),
+        durs.reshape(e_total, 1),
+        fids.reshape(e_total, 1),
+        jnp.asarray(t0, jnp.float32).reshape(1, 1),
+        jnp.asarray(bin_width, jnp.float32).reshape(1, 1),
+    )
+    return out

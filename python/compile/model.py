@@ -1,0 +1,62 @@
+"""L2: JAX compute graphs for Pipit-RS's kernel-backed operations.
+
+Each public function here is AOT-lowered once by ``aot.py`` to HLO text and
+executed from the Rust coordinator via PJRT; Python never runs on the
+analysis path. The fixed AOT shapes are the contract with
+``rust/src/runtime`` (also serialized into artifacts/manifest.json).
+"""
+
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.matrix_profile import matrix_profile_pallas
+from .kernels.comm_matrix import comm_matrix_pallas
+from .kernels.time_hist import time_hist_pallas
+
+# --- AOT shape contract (mirrored in rust/src/runtime/registry.rs) ------
+MP_WINDOWS = 4096          # number of sliding windows per call
+MP_M = 64                  # subsequence (motif) length
+MP_SERIES_LEN = MP_WINDOWS + MP_M - 1  # = 4159 input samples
+MP_BLOCK = 256
+
+TH_EVENTS = 8192           # event intervals per call
+TH_BINS = 128              # time bins
+TH_FUNCS = 64              # function-id slots (63 real + "other")
+TH_BLOCK = 512
+
+CM_EVENTS = 8192           # message records per call
+CM_PROCS = 64              # rank slots (larger runs chunk in Rust)
+CM_BLOCK = 512
+
+
+def matrix_profile(series):
+    """Self-join matrix profile of a (MP_SERIES_LEN,) f32 series.
+
+    Returns (profile2 (MP_WINDOWS,) f32, neighbour idx (MP_WINDOWS,) i32).
+    Window statistics are computed once here (cumsum trick) and reused by
+    every kernel tile -- no per-tile recomputation (DESIGN.md SSPerf L2).
+    """
+    a = ref.window_matrix(series, MP_M)
+    mu, sig = ref.sliding_stats(series, MP_M)
+    return matrix_profile_pallas(a, mu, sig, m=MP_M, bw=MP_BLOCK)
+
+
+def time_profile(starts, durs, fids, t0, bin_width):
+    """Binned per-function busy time over TH_EVENTS padded intervals.
+
+    starts/durs (TH_EVENTS,) f32, fids (TH_EVENTS,) i32 (out-of-range =>
+    ignored; Rust pads with fid = -1), t0/bin_width scalars.
+    Returns (TH_BINS, TH_FUNCS) f32.
+    """
+    return time_hist_pallas(
+        starts, durs, fids, t0, bin_width,
+        num_bins=TH_BINS, num_funcs=TH_FUNCS, et=TH_BLOCK,
+    )
+
+
+def comm_matrix(src, dst, nbytes):
+    """(CM_PROCS, CM_PROCS) communication matrix from CM_EVENTS message
+    records (src/dst int32, out-of-range => ignored; bytes f32)."""
+    return comm_matrix_pallas(
+        src, dst, nbytes, nprocs=CM_PROCS, et=CM_BLOCK
+    )

@@ -1,0 +1,17 @@
+"""AOT pipeline tests: HLO text is produced and parseable-looking."""
+
+from compile import aot, model
+
+
+def test_lower_matrix_profile_emits_hlo_text():
+    text = aot.lower_matrix_profile()
+    assert "HloModule" in text
+    assert "f32[4159]" in text  # MP_SERIES_LEN input
+    assert "ROOT" in text
+
+
+def test_lower_time_hist_emits_hlo_text():
+    text = aot.lower_time_hist()
+    assert "HloModule" in text
+    assert f"f32[{model.TH_EVENTS}]" in text
+    assert "ROOT" in text

@@ -1,0 +1,58 @@
+"""L2 model tests: AOT-shaped entry points vs oracles, plus shape contract."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_shape_contract():
+    assert model.MP_SERIES_LEN == model.MP_WINDOWS + model.MP_M - 1
+    assert model.MP_WINDOWS % model.MP_BLOCK == 0
+    assert model.TH_EVENTS % model.TH_BLOCK == 0
+
+
+def test_matrix_profile_model_matches_ref():
+    rng = np.random.default_rng(7)
+    t = np.arange(model.MP_SERIES_LEN, dtype=np.float32)
+    s = jnp.asarray(
+        np.sin(2 * np.pi * t / 211.0) + 0.05 * rng.standard_normal(t.size),
+        jnp.float32,
+    )
+    p, i = model.matrix_profile(s)
+    want_p, _ = ref.matrix_profile_ref(s, model.MP_M)
+    assert p.shape == (model.MP_WINDOWS,)
+    assert i.shape == (model.MP_WINDOWS,)
+    np.testing.assert_allclose(p, want_p, rtol=5e-3, atol=5e-2)
+
+
+def test_matrix_profile_finds_planted_motif():
+    # Plant two identical motifs in noise; their windows must be mutual
+    # nearest neighbours with ~0 distance.
+    rng = np.random.default_rng(3)
+    n, m = model.MP_SERIES_LEN, model.MP_M
+    s = rng.standard_normal(n).astype(np.float32)
+    motif = np.sin(np.linspace(0, 6 * np.pi, m)).astype(np.float32) * 5
+    s[500:500 + m] = motif
+    s[2500:2500 + m] = motif
+    p, i = model.matrix_profile(jnp.asarray(s))
+    p = np.asarray(p)
+    i = np.asarray(i)
+    assert p[500] < 1e-3
+    assert abs(int(i[500]) - 2500) <= 1
+    assert abs(int(i[2500]) - 500) <= 1
+
+
+def test_time_profile_model_matches_ref():
+    rng = np.random.default_rng(11)
+    e = model.TH_EVENTS
+    starts = jnp.asarray(rng.uniform(0, 1000, e), jnp.float32)
+    durs = jnp.asarray(rng.exponential(5, e), jnp.float32)
+    fids = jnp.asarray(rng.integers(-1, model.TH_FUNCS, e), jnp.int32)
+    got = model.time_profile(starts, durs, fids, 0.0, 1000.0 / model.TH_BINS)
+    want = ref.time_hist_ref(starts, durs, fids, 0.0,
+                             1000.0 / model.TH_BINS,
+                             model.TH_BINS, model.TH_FUNCS)
+    assert got.shape == (model.TH_BINS, model.TH_FUNCS)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-3)

@@ -1,0 +1,121 @@
+//! Ablation benches for the design choices DESIGN.md calls out:
+//!
+//! * columnar scan vs row-struct iteration (the §III.A layout argument),
+//! * dictionary-encoded names vs owned strings,
+//! * parallel vs serial rank-stream reading,
+//! * zlib-compressed vs raw stream decode cost,
+//! * exclusive-segment extraction vs naive per-call binning in
+//!   time_profile (correctness-relevant: naive double-counts parents).
+//!
+//! ```sh
+//! cargo bench --bench ablations [-- --quick]
+//! ```
+
+use pipit::analysis::{comm_matrix, CommUnit};
+use pipit::df::NULL_I64;
+use pipit::gen::{self, GenConfig};
+use pipit::readers::otf2;
+use pipit::trace::*;
+use pipit::util::bench::{bench_params_from_args, Bencher};
+
+/// Row-major mirror of the events table, for the layout ablation.
+struct RowEvent {
+    _ts: i64,
+    name: String,
+    proc: i64,
+    partner: i64,
+    msg_size: i64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let (warmup, iters) = bench_params_from_args();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = Bencher::new(warmup, iters);
+    let gen_iters = if quick { 10 } else { 40 };
+
+    let tr = gen::generate("laghos", &GenConfig::new(32, gen_iters), 1)?;
+    eprintln!("=== ablations over laghos-32p ({} events) ===", tr.len());
+
+    // ---- 1. columnar vs row-major comm_matrix -----------------------------
+    let rows: Vec<RowEvent> = {
+        let ts = tr.events.i64s(COL_TS)?;
+        let (nm, nd) = tr.events.strs(COL_NAME)?;
+        let pr = tr.events.i64s(COL_PROC)?;
+        let pa = tr.events.i64s(COL_PARTNER)?;
+        let ms = tr.events.i64s(COL_MSG_SIZE)?;
+        (0..tr.len())
+            .map(|i| RowEvent {
+                _ts: ts[i],
+                name: nd.resolve(nm[i]).unwrap_or("").to_string(),
+                proc: pr[i],
+                partner: pa[i],
+                msg_size: ms[i],
+            })
+            .collect()
+    };
+    let nprocs = tr.num_processes()?;
+    b.run("comm_matrix/columnar", || comm_matrix(&tr, CommUnit::Bytes).unwrap());
+    b.run("comm_matrix/row-major+string-cmp", || {
+        // what a naive row-of-structs implementation does: string compare
+        // per event, pointer-chasing layout
+        let mut m = vec![vec![0.0f64; nprocs]; nprocs];
+        for e in &rows {
+            if e.name == SEND_EVENT && e.partner != NULL_I64 {
+                m[e.proc as usize][e.partner as usize] += e.msg_size.max(0) as f64;
+            }
+        }
+        m
+    });
+
+    // ---- 2. dictionary codes vs owned strings (group-by name) -------------
+    b.run("groupby_name/dict-codes", || {
+        let (nm, _) = tr.events.strs(COL_NAME).unwrap();
+        let mut counts = std::collections::HashMap::new();
+        for &c in nm {
+            *counts.entry(c).or_insert(0u64) += 1;
+        }
+        counts
+    });
+    b.run("groupby_name/owned-strings", || {
+        let mut counts: std::collections::HashMap<&str, u64> = std::collections::HashMap::new();
+        for e in &rows {
+            *counts.entry(e.name.as_str()).or_insert(0) += 1;
+        }
+        counts
+    });
+
+    // ---- 3. parallel vs serial read ---------------------------------------
+    let dir = std::env::temp_dir().join("pipit_bench_abl");
+    let big = gen::generate("amg", &GenConfig::new(64, gen_iters), 1)?;
+    otf2::write(&big, &dir)?;
+    eprintln!("(read target: amg-64p, {} events)", big.len());
+    b.run("otf2_read/serial", || otf2::read(&dir, 1).unwrap());
+    b.run("otf2_read/parallel", || otf2::read(&dir, 0).unwrap());
+
+    // ---- 4. exclusive segments vs naive inclusive binning -----------------
+    let mut t2 = big.clone();
+    b.run("time_profile/exclusive-segments", || {
+        let mut t = t2.clone();
+        pipit::analysis::time_profile(&mut t, 128, Some(16)).unwrap()
+    });
+    pipit::analysis::metrics::calc_inc_metrics(&mut t2)?;
+    b.run("time_profile/naive-inclusive(WRONG:double-counts)", || {
+        // naive: bin whole [enter, leave) spans — counts parents AND
+        // children, i.e. what you get without the segment extraction
+        let ts = t2.events.i64s(COL_TS).unwrap();
+        let inc = t2.events.f64s("time.inc").unwrap();
+        let (lo, hi) = t2.time_range().unwrap();
+        let w = (hi - lo).max(1) as f64 / 128.0;
+        let mut bins = vec![0.0f64; 128];
+        for i in 0..t2.len() {
+            if !inc[i].is_nan() {
+                let b0 = ((ts[i] - lo) as f64 / w) as usize;
+                bins[b0.min(127)] += inc[i];
+            }
+        }
+        bins
+    });
+
+    println!("{}", b.csv());
+    Ok(())
+}

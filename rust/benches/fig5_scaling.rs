@@ -1,0 +1,58 @@
+//! Paper Figure 5 (left): OTF2 reader and comm_matrix runtime vs trace
+//! size, for AMG and Laghos trace sweeps. Expectation (the paper's
+//! claim): both scale linearly with the number of rows.
+//!
+//! ```sh
+//! cargo bench --bench fig5_scaling [-- --quick]
+//! ```
+
+use pipit::analysis::{comm_matrix, CommUnit};
+use pipit::gen::{self, GenConfig};
+use pipit::readers::otf2;
+use pipit::util::bench::{bench_params_from_args, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    let (warmup, iters) = bench_params_from_args();
+    let mut b = Bencher::new(warmup, iters);
+    let out = std::env::temp_dir().join("pipit_bench_fig5");
+    std::fs::create_dir_all(&out)?;
+
+    eprintln!("=== Fig 5 (left): runtime vs trace size ===");
+    let mut series: Vec<(String, usize, f64, f64)> = Vec::new();
+    for app in ["amg", "laghos"] {
+        for gen_iters in [5usize, 10, 20, 40, 80] {
+            let tr = gen::generate(app, &GenConfig::new(32, gen_iters), 1)?;
+            let dir = out.join(format!("{app}_{gen_iters}"));
+            otf2::write(&tr, &dir)?;
+            let n = tr.len();
+            let read = b
+                .run(&format!("read/{app}/{n}"), || otf2::read(&dir, 0).unwrap())
+                .median();
+            let rd = otf2::read(&dir, 0)?;
+            let cm = b
+                .run(&format!("comm_matrix/{app}/{n}"), || {
+                    comm_matrix(&rd, CommUnit::Bytes).unwrap()
+                })
+                .median();
+            series.push((app.to_string(), n, read, cm));
+        }
+    }
+
+    eprintln!("\npaper-series (rows == Fig 5 left panel points):");
+    eprintln!("{:<8} {:>10} {:>14} {:>16}", "app", "events", "read (ms)", "comm_matrix (ms)");
+    for (app, n, read, cm) in &series {
+        eprintln!("{:<8} {:>10} {:>14.2} {:>16.3}", app, n, read / 1e6, cm / 1e6);
+    }
+    // linearity: ns/event across the sweep stays within a small factor
+    for app in ["amg", "laghos"] {
+        let per: Vec<f64> = series
+            .iter()
+            .filter(|(a, _, _, _)| a == app)
+            .map(|(_, n, read, _)| read / *n as f64)
+            .collect();
+        let (lo, hi) = per.iter().fold((f64::MAX, 0f64), |(l, h), &v| (l.min(v), h.max(v)));
+        eprintln!("{app}: reader ns/event spread = {:.2}x (1.0 = perfectly linear)", hi / lo);
+    }
+    println!("{}", b.csv());
+    Ok(())
+}

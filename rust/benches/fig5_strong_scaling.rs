@@ -1,0 +1,43 @@
+//! Paper Figure 5 (center): OTF2 reader strong scaling over reader
+//! threads, on AMG 128-process and Laghos 256-process traces.
+//!
+//! ```sh
+//! cargo bench --bench fig5_strong_scaling [-- --quick]
+//! ```
+
+use pipit::gen::{self, GenConfig};
+use pipit::readers::otf2;
+use pipit::util::bench::{bench_params_from_args, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    let (warmup, iters) = bench_params_from_args();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = Bencher::new(warmup, iters);
+    let out = std::env::temp_dir().join("pipit_bench_fig5ss");
+    std::fs::create_dir_all(&out)?;
+
+    eprintln!("=== Fig 5 (center): OTF2 reader strong scaling ===");
+    let cases: &[(&str, usize, usize)] = if quick {
+        &[("amg", 128, 10), ("laghos", 256, 8)]
+    } else {
+        &[("amg", 128, 60), ("laghos", 256, 40)]
+    };
+    for &(app, ranks, gen_iters) in cases {
+        let tr = gen::generate(app, &GenConfig::new(ranks, gen_iters), 1)?;
+        let dir = out.join(format!("{app}_{ranks}p"));
+        otf2::write(&tr, &dir)?;
+        eprintln!("\n{app}-{ranks}p: {} events", tr.len());
+        let mut base = None;
+        for threads in [1usize, 2, 4, 8, 16, 32] {
+            let med = b
+                .run(&format!("read/{app}-{ranks}p/threads={threads}"), || {
+                    otf2::read(&dir, threads).unwrap()
+                })
+                .median();
+            let base_v = *base.get_or_insert(med);
+            eprintln!("  threads={threads:<3} speedup={:.2}x", base_v / med);
+        }
+    }
+    println!("{}", b.csv());
+    Ok(())
+}

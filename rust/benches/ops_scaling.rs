@@ -1,0 +1,127 @@
+//! Per-operation benchmark suite (paper §VI): every Pipit API operation
+//! timed on a mid-size trace, plus the kernel-backed ops in both engines
+//! (pure Rust vs AOT HLO via PJRT) — the input data for EXPERIMENTS.md
+//! §Perf.
+//!
+//! ```sh
+//! make artifacts && cargo bench --bench ops_scaling [-- --quick]
+//! ```
+
+use pipit::analysis::{self, CommUnit, Metric, PatternConfig};
+use pipit::gen::{self, GenConfig};
+use pipit::runtime::{ops as hlo_ops, Runtime};
+use pipit::util::bench::{bench_params_from_args, Bencher};
+
+fn main() -> anyhow::Result<()> {
+    let (warmup, iters) = bench_params_from_args();
+    let quick = std::env::args().any(|a| a == "--quick");
+    let mut b = Bencher::new(warmup, iters);
+
+    let gen_iters = if quick { 10 } else { 40 };
+    let base = gen::generate("tortuga", &GenConfig::new(64, gen_iters), 1)?;
+    let laghos = gen::generate("laghos", &GenConfig::new(32, gen_iters), 1)?;
+    let gol = gen::generate("gol", &GenConfig::new(16, gen_iters * 2), 1)?;
+    eprintln!(
+        "=== per-op timings (tortuga-64p {} events / laghos-32p {} / gol-16p {}) ===",
+        base.len(),
+        laghos.len(),
+        gol.len()
+    );
+
+    b.run("match_caller_callee", || {
+        let mut t = base.clone();
+        analysis::match_caller_callee::prepare(&mut t).unwrap();
+        t
+    });
+    b.run("calc_inc_exc_metrics", || {
+        let mut t = base.clone();
+        analysis::metrics::calc_exc_metrics(&mut t).unwrap();
+        t
+    });
+    b.run("create_cct", || {
+        let mut t = base.clone();
+        analysis::create_cct(&mut t).unwrap()
+    });
+    b.run("flat_profile", || {
+        let mut t = base.clone();
+        analysis::flat_profile(&mut t, Metric::ExcTime).unwrap()
+    });
+    b.run("time_profile(rust,128bins)", || {
+        let mut t = base.clone();
+        analysis::time_profile(&mut t, 128, Some(63)).unwrap()
+    });
+    b.run("comm_matrix", || {
+        analysis::comm_matrix(&laghos, CommUnit::Bytes).unwrap()
+    });
+    b.run("message_histogram", || {
+        analysis::message_histogram(&laghos, 10).unwrap()
+    });
+    b.run("comm_by_process", || {
+        analysis::comm_by_process(&laghos, CommUnit::Bytes).unwrap()
+    });
+    b.run("comm_over_time", || {
+        analysis::comm_over_time(&laghos, 64).unwrap()
+    });
+    b.run("comm_comp_breakdown", || {
+        let mut t = base.clone();
+        analysis::comm_comp_breakdown(&mut t, None, None).unwrap()
+    });
+    b.run("load_imbalance", || {
+        let mut t = base.clone();
+        analysis::load_imbalance(&mut t, Metric::ExcTime, 5).unwrap()
+    });
+    b.run("idle_time", || {
+        let mut t = base.clone();
+        analysis::idle_time(&mut t, None).unwrap()
+    });
+    b.run("pattern_detection(anchored)", || {
+        let mut t = base.clone();
+        analysis::detect_pattern(&mut t, Some("time-loop"), &PatternConfig::default()).unwrap()
+    });
+    b.run("critical_path", || {
+        let mut t = gol.clone();
+        analysis::critical_path_analysis(&mut t).unwrap()
+    });
+    b.run("lateness", || {
+        let mut t = gol.clone();
+        analysis::calculate_lateness(&mut t).unwrap()
+    });
+    b.run("filter(process+time)", || {
+        base.filter(
+            &pipit::df::Expr::process_in(&[0, 1, 2, 3])
+                .and(pipit::df::Expr::time_between(0, base.duration_ns().unwrap() / 2)),
+        )
+        .unwrap()
+    });
+
+    // ---- kernel-backed ops: Rust engine vs AOT HLO via PJRT ---------------
+    if let Ok(rt) = Runtime::load("artifacts") {
+        eprintln!("\n=== kernel engines: pure Rust vs PJRT (AOT Pallas) ===");
+        let c = rt.contract;
+        let series: Vec<f64> = {
+            let mut rng = pipit::util::rng::Rng::new(12);
+            (0..c.mp_series_len)
+                .map(|i| (i as f64 / 97.0).sin() + 0.05 * rng.normal())
+                .collect()
+        };
+        b.run("matrix_profile/rust/4096w", || {
+            analysis::matrix_profile(&series, c.mp_m).unwrap()
+        });
+        b.run("matrix_profile/hlo/4096w", || {
+            hlo_ops::matrix_profile_hlo(&rt, &series, c.mp_m).unwrap()
+        });
+        b.run("time_profile/rust/contract-shape", || {
+            let mut t = base.clone();
+            analysis::time_profile(&mut t, c.th_bins, Some(c.th_funcs - 1)).unwrap()
+        });
+        b.run("time_profile/hlo/contract-shape", || {
+            let mut t = base.clone();
+            hlo_ops::time_profile_hlo(&rt, &mut t).unwrap()
+        });
+    } else {
+        eprintln!("(skipping HLO engine benches: run `make artifacts`)");
+    }
+
+    println!("{}", b.csv());
+    Ok(())
+}

@@ -1,0 +1,266 @@
+//! `_create_cct` (paper §IV.A): the unified calling-context tree.
+//!
+//! One CCT for the whole trace, aggregated over time and across all
+//! processes/threads (paper §III.C): each node is a distinct call *path*;
+//! per-node statistics accumulate every invocation from every process.
+//! Each Enter row gets a `_cct_node` column referencing its node, so
+//! path-conditioned analyses can join back to events.
+
+use crate::df::{Column, NULL_I64};
+use crate::trace::*;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// One node of the unified CCT.
+#[derive(Debug, Clone)]
+pub struct CctNode {
+    pub id: usize,
+    pub parent: Option<usize>,
+    /// Function name (resolved).
+    pub name: String,
+    pub children: Vec<usize>,
+    /// Number of invocations of this call path (across all procs/threads).
+    pub count: u64,
+    /// Total inclusive / exclusive ns accumulated at this path.
+    pub time_inc: f64,
+    pub time_exc: f64,
+    /// Per-process inclusive ns (for cross-process discrepancy analysis).
+    pub time_inc_by_proc: HashMap<i64, f64>,
+}
+
+/// The unified calling-context tree.
+#[derive(Debug, Clone, Default)]
+pub struct Cct {
+    pub nodes: Vec<CctNode>,
+    pub roots: Vec<usize>,
+}
+
+impl Cct {
+    /// Depth-first preorder walk.
+    pub fn preorder(&self) -> Vec<usize> {
+        let mut out = Vec::with_capacity(self.nodes.len());
+        let mut stack: Vec<usize> = self.roots.iter().rev().copied().collect();
+        while let Some(id) = stack.pop() {
+            out.push(id);
+            for &c in self.nodes[id].children.iter().rev() {
+                stack.push(c);
+            }
+        }
+        out
+    }
+
+    /// Root-to-node call path of names.
+    pub fn path(&self, mut id: usize) -> Vec<&str> {
+        let mut out = Vec::new();
+        loop {
+            out.push(self.nodes[id].name.as_str());
+            match self.nodes[id].parent {
+                Some(p) => id = p,
+                None => break,
+            }
+        }
+        out.reverse();
+        out
+    }
+
+    /// Render as an indented tree with metrics (hpcviewer-style).
+    pub fn render(&self, max_nodes: usize) -> String {
+        let mut out = String::new();
+        let mut count = 0;
+        let mut stack: Vec<(usize, usize)> = self.roots.iter().rev().map(|&r| (r, 0)).collect();
+        while let Some((id, depth)) = stack.pop() {
+            if count >= max_nodes {
+                out.push_str("...\n");
+                break;
+            }
+            let n = &self.nodes[id];
+            out.push_str(&format!(
+                "{:indent$}{} [count={} inc={} exc={}]\n",
+                "",
+                n.name,
+                n.count,
+                crate::util::fmt_ns(n.time_inc),
+                crate::util::fmt_ns(n.time_exc),
+                indent = depth * 2
+            ));
+            count += 1;
+            for &c in n.children.iter().rev() {
+                stack.push((c, depth + 1));
+            }
+        }
+        out
+    }
+
+    /// For each node, imbalance of inclusive time across processes:
+    /// max(per-proc) / mean(per-proc). Nodes seen on a single process get 1.
+    pub fn cross_process_imbalance(&self, id: usize) -> f64 {
+        let m = &self.nodes[id].time_inc_by_proc;
+        if m.is_empty() {
+            return 1.0;
+        }
+        let max = m.values().copied().fold(f64::NEG_INFINITY, f64::max);
+        let mean = m.values().sum::<f64>() / m.len() as f64;
+        if mean <= 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+}
+
+/// Build (or return the cached row→node mapping for) the unified CCT.
+/// Adds the `_cct_node` column; returns the tree.
+pub fn create_cct(trace: &mut Trace) -> Result<Cct> {
+    super::metrics::calc_exc_metrics(trace)?;
+    let n = trace.len();
+    let pr = trace.events.i64s(COL_PROC)?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let enter = edict.code_of(ENTER);
+    let leave = edict.code_of(LEAVE);
+    let inc = trace.events.f64s("time.inc")?;
+    let exc = trace.events.f64s("time.exc")?;
+    let th = trace.events.i64s(COL_THREAD)?;
+
+    let mut cct = Cct::default();
+    // (parent node or usize::MAX, name code) -> node id
+    let mut index: HashMap<(usize, u32), usize> = HashMap::new();
+    let mut node_of_row = vec![NULL_I64; n];
+    // per (proc, thread) stack of node ids
+    let mut stacks: HashMap<(i64, i64), Vec<usize>> = HashMap::new();
+
+    for i in 0..n {
+        let code = Some(et[i]);
+        let stack = stacks.entry((pr[i], th[i])).or_default();
+        if code == enter {
+            let parent = stack.last().copied();
+            let key = (parent.unwrap_or(usize::MAX), nm[i]);
+            let id = *index.entry(key).or_insert_with(|| {
+                let id = cct.nodes.len();
+                cct.nodes.push(CctNode {
+                    id,
+                    parent,
+                    name: ndict.resolve(nm[i]).unwrap_or("").to_string(),
+                    children: Vec::new(),
+                    count: 0,
+                    time_inc: 0.0,
+                    time_exc: 0.0,
+                    time_inc_by_proc: HashMap::new(),
+                });
+                match parent {
+                    Some(p) => cct.nodes[p].children.push(id),
+                    None => cct.roots.push(id),
+                }
+                id
+            });
+            let node = &mut cct.nodes[id];
+            node.count += 1;
+            if !inc[i].is_nan() {
+                node.time_inc += inc[i];
+                *node.time_inc_by_proc.entry(pr[i]).or_insert(0.0) += inc[i];
+            }
+            if !exc[i].is_nan() {
+                node.time_exc += exc[i];
+            }
+            node_of_row[i] = id as i64;
+            stack.push(id);
+        } else if code == leave {
+            if let Some(id) = stack.pop() {
+                node_of_row[i] = id as i64;
+            }
+        } else if let Some(&id) = stack.last() {
+            node_of_row[i] = id as i64;
+        }
+    }
+    if !trace.events.has("_cct_node") {
+        trace.events.push("_cct_node", Column::I64(node_of_row))?;
+    }
+    Ok(cct)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_proc() -> Trace {
+        let mut b = TraceBuilder::new();
+        for p in 0..2i64 {
+            b.enter(p, 0, 0, "main");
+            b.enter(p, 0, 10, "solve");
+            b.enter(p, 0, 20, "MPI_Wait");
+            b.leave(p, 0, 30 + 10 * p, "MPI_Wait");
+            b.leave(p, 0, 50 + 10 * p, "solve");
+            b.enter(p, 0, 60 + 10 * p, "io");
+            b.leave(p, 0, 70 + 10 * p, "io");
+            b.leave(p, 0, 100, "main");
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn unified_across_processes() {
+        let mut t = two_proc();
+        let cct = create_cct(&mut t).unwrap();
+        // one tree: main -> {solve -> MPI_Wait, io}
+        assert_eq!(cct.roots.len(), 1);
+        assert_eq!(cct.nodes.len(), 4);
+        let root = &cct.nodes[cct.roots[0]];
+        assert_eq!(root.name, "main");
+        assert_eq!(root.count, 2); // both processes merged into one path
+        assert_eq!(root.time_inc, 200.0);
+    }
+
+    #[test]
+    fn paths_and_preorder() {
+        let mut t = two_proc();
+        let cct = create_cct(&mut t).unwrap();
+        let wait = cct.nodes.iter().find(|n| n.name == "MPI_Wait").unwrap();
+        assert_eq!(cct.path(wait.id), vec!["main", "solve", "MPI_Wait"]);
+        let pre = cct.preorder();
+        assert_eq!(pre.len(), 4);
+        assert_eq!(cct.nodes[pre[0]].name, "main");
+    }
+
+    #[test]
+    fn same_name_different_paths_are_distinct_nodes() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.enter(0, 0, 1, "a");
+        b.enter(0, 0, 2, "util"); // main/a/util
+        b.leave(0, 0, 3, "util");
+        b.leave(0, 0, 4, "a");
+        b.enter(0, 0, 5, "b");
+        b.enter(0, 0, 6, "util"); // main/b/util — distinct path
+        b.leave(0, 0, 7, "util");
+        b.leave(0, 0, 8, "b");
+        b.leave(0, 0, 9, "main");
+        let mut t = b.finish();
+        let cct = create_cct(&mut t).unwrap();
+        let utils: Vec<_> = cct.nodes.iter().filter(|n| n.name == "util").collect();
+        assert_eq!(utils.len(), 2);
+    }
+
+    #[test]
+    fn imbalance_reflects_process_skew() {
+        let mut t = two_proc();
+        let cct = create_cct(&mut t).unwrap();
+        let wait = cct.nodes.iter().find(|n| n.name == "MPI_Wait").unwrap();
+        // proc 0 waits 10ns, proc 1 waits 20ns -> max/mean = 20/15
+        let imb = cct.cross_process_imbalance(wait.id);
+        assert!((imb - 20.0 / 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cct_node_column_set_on_enters() {
+        let mut t = two_proc();
+        create_cct(&mut t).unwrap();
+        let col = t.events.i64s("_cct_node").unwrap();
+        let (et, edict) = t.events.strs(COL_TYPE).unwrap();
+        let enter = edict.code_of(ENTER).unwrap();
+        for i in 0..t.len() {
+            if et[i] == enter {
+                assert_ne!(col[i], NULL_I64, "row {i}");
+            }
+        }
+    }
+}

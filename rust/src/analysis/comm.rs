@@ -1,0 +1,320 @@
+//! Communication analyses (paper §IV.C): `comm_matrix`,
+//! `message_histogram`, `comm_by_process`, `comm_over_time`.
+//!
+//! All four scan the message instant events (`MpiSend`/`MpiRecv`) in one
+//! pass over three columns — the columnar layout is what makes these
+//! cheap (paper Fig. 5 shows comm_matrix scaling linearly in rows).
+
+use crate::df::NULL_I64;
+use crate::trace::*;
+use anyhow::{bail, Result};
+
+/// Aggregate messages by count or by byte volume.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommUnit {
+    Count,
+    Bytes,
+}
+
+/// Dense process × process matrix.
+#[derive(Debug, Clone)]
+pub struct CommMatrix {
+    /// Sorted distinct process ids; row/col order of `data`.
+    pub procs: Vec<i64>,
+    /// `data[sender][receiver]`.
+    pub data: Vec<Vec<f64>>,
+}
+
+impl CommMatrix {
+    pub fn n(&self) -> usize {
+        self.procs.len()
+    }
+
+    /// Sum of all entries.
+    pub fn total(&self) -> f64 {
+        self.data.iter().flatten().sum()
+    }
+
+    /// Row sums = per-sender volume.
+    pub fn row_sums(&self) -> Vec<f64> {
+        self.data.iter().map(|r| r.iter().sum()).collect()
+    }
+
+    /// Column sums = per-receiver volume.
+    pub fn col_sums(&self) -> Vec<f64> {
+        let n = self.n();
+        let mut out = vec![0.0; n];
+        for row in &self.data {
+            for (j, v) in row.iter().enumerate() {
+                out[j] += v;
+            }
+        }
+        out
+    }
+
+    /// Is the matrix symmetric (within fp tolerance)?
+    pub fn is_symmetric(&self) -> bool {
+        let n = self.n();
+        for i in 0..n {
+            for j in 0..i {
+                if (self.data[i][j] - self.data[j][i]).abs() > 1e-9 {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+
+    /// Fraction of the total volume within `band` of the diagonal —
+    /// used to characterize near-neighbor patterns (paper Fig. 3).
+    pub fn diagonal_fraction(&self, band: usize) -> f64 {
+        let total = self.total();
+        if total == 0.0 {
+            return 0.0;
+        }
+        let n = self.n() as i64;
+        let mut near = 0.0;
+        for (i, row) in self.data.iter().enumerate() {
+            for (j, v) in row.iter().enumerate() {
+                let d = (i as i64 - j as i64).abs();
+                let wrapped = d.min(n - d); // periodic neighbors count too
+                if wrapped <= band as i64 {
+                    near += v;
+                }
+            }
+        }
+        near / total
+    }
+}
+
+/// Rows of message instants: (sender, receiver, bytes). Derived from send
+/// events; traces that only log receives fall back to recv events.
+fn messages(trace: &Trace) -> Result<Vec<(i64, i64, i64)>> {
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let pa = trace.events.i64s(COL_PARTNER)?;
+    let ms = trace.events.i64s(COL_MSG_SIZE)?;
+    let send = ndict.code_of(SEND_EVENT);
+    let recv = ndict.code_of(RECV_EVENT);
+    let mut out = Vec::new();
+    let mut saw_send = false;
+    for i in 0..trace.len() {
+        if Some(nm[i]) == send && pa[i] != NULL_I64 {
+            out.push((pr[i], pa[i], ms[i].max(0)));
+            saw_send = true;
+        }
+    }
+    if !saw_send {
+        for i in 0..trace.len() {
+            if Some(nm[i]) == recv && pa[i] != NULL_I64 {
+                out.push((pa[i], pr[i], ms[i].max(0)));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// `comm_matrix`: data exchanged between every pair of processes.
+///
+/// Hot path (paper Fig. 5 left): one pass over four columns. When process
+/// ids are dense (`0..n`, the overwhelmingly common case) rank lookup is
+/// direct indexing; filtered traces with id gaps fall back to a hash map.
+pub fn comm_matrix(trace: &Trace, unit: CommUnit) -> Result<CommMatrix> {
+    let procs = trace.process_ids()?;
+    let n = procs.len();
+    let dense = procs
+        .iter()
+        .enumerate()
+        .all(|(i, &p)| p == i as i64);
+    let index: std::collections::HashMap<i64, usize> = if dense {
+        std::collections::HashMap::new()
+    } else {
+        procs.iter().enumerate().map(|(i, &p)| (p, i)).collect()
+    };
+    let slot = |p: i64| -> Option<usize> {
+        if dense {
+            // dense: direct bound-checked index, no hashing
+            (0..n as i64).contains(&p).then_some(p as usize)
+        } else {
+            index.get(&p).copied()
+        }
+    };
+
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let pa = trace.events.i64s(COL_PARTNER)?;
+    let ms = trace.events.i64s(COL_MSG_SIZE)?;
+    let send = ndict.code_of(SEND_EVENT).unwrap_or(crate::df::NULL_CODE);
+    let recv = ndict.code_of(RECV_EVENT).unwrap_or(crate::df::NULL_CODE);
+
+    let mut data = vec![vec![0.0f64; n]; n];
+    let mut saw_send = false;
+    // single fused pass: dictionary-code compare per row, no allocation
+    for i in 0..trace.len() {
+        if nm[i] == send && pa[i] != NULL_I64 {
+            if let (Some(a), Some(b)) = (slot(pr[i]), slot(pa[i])) {
+                data[a][b] += match unit {
+                    CommUnit::Count => 1.0,
+                    CommUnit::Bytes => ms[i].max(0) as f64,
+                };
+                saw_send = true;
+            }
+        }
+    }
+    if !saw_send {
+        // recv-only traces: infer direction from receive records
+        for i in 0..trace.len() {
+            if nm[i] == recv && pa[i] != NULL_I64 {
+                if let (Some(a), Some(b)) = (slot(pa[i]), slot(pr[i])) {
+                    data[a][b] += match unit {
+                        CommUnit::Count => 1.0,
+                        CommUnit::Bytes => ms[i].max(0) as f64,
+                    };
+                }
+            }
+        }
+    }
+    Ok(CommMatrix { procs, data })
+}
+
+/// `message_histogram`: distribution of message sizes (paper Fig. 4).
+/// Returns (counts, bin_edges) with `bins` equal-width bins over
+/// [0, max size]; edges have length bins+1, numpy-style.
+pub fn message_histogram(trace: &Trace, bins: usize) -> Result<(Vec<u64>, Vec<f64>)> {
+    if bins == 0 {
+        bail!("bins must be > 0");
+    }
+    let sizes: Vec<i64> = messages(trace)?.iter().map(|&(_, _, b)| b).collect();
+    let max = sizes.iter().copied().max().unwrap_or(0).max(1) as f64;
+    let width = max / bins as f64;
+    let mut counts = vec![0u64; bins];
+    for &s in &sizes {
+        let b = ((s as f64 / width) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    let edges = (0..=bins).map(|b| b as f64 * width).collect();
+    Ok((counts, edges))
+}
+
+/// `comm_by_process`: (sent, received) volume per process (paper Fig. 6).
+pub fn comm_by_process(trace: &Trace, unit: CommUnit) -> Result<Vec<(i64, f64, f64)>> {
+    let m = comm_matrix(trace, unit)?;
+    let rows = m.row_sums();
+    let cols = m.col_sums();
+    Ok(m.procs
+        .iter()
+        .zip(rows.iter().zip(cols))
+        .map(|(&p, (&s, r))| (p, s, r))
+        .collect())
+}
+
+/// `comm_over_time`: (message count, volume) per time bin.
+pub fn comm_over_time(trace: &Trace, bins: usize) -> Result<(Vec<u64>, Vec<f64>, Vec<i64>)> {
+    if bins == 0 {
+        bail!("bins must be > 0");
+    }
+    let (t0, t1) = trace.time_range()?;
+    let span = (t1 - t0).max(1) as f64;
+    let width = span / bins as f64;
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let ts = trace.events.i64s(COL_TS)?;
+    let ms = trace.events.i64s(COL_MSG_SIZE)?;
+    let send = ndict.code_of(SEND_EVENT);
+    let mut counts = vec![0u64; bins];
+    let mut volume = vec![0.0f64; bins];
+    for i in 0..trace.len() {
+        if Some(nm[i]) == send {
+            let b = (((ts[i] - t0) as f64 / width) as usize).min(bins - 1);
+            counts[b] += 1;
+            volume[b] += ms[i].max(0) as f64;
+        }
+    }
+    let edges = (0..=bins)
+        .map(|b| t0 + (b as f64 * width).round() as i64)
+        .collect();
+    Ok((counts, volume, edges))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// 4-rank ring: each rank sends 1 KiB right, 512 B left.
+    fn ring() -> Trace {
+        let mut b = TraceBuilder::new();
+        let n = 4i64;
+        for r in 0..n {
+            b.enter(r, 0, 0, "main");
+            b.enter(r, 0, 10, "MPI_Send");
+            b.send(r, 0, 11, (r + 1) % n, 1024, 0);
+            b.leave(r, 0, 20, "MPI_Send");
+            b.enter(r, 0, 30, "MPI_Send");
+            b.send(r, 0, 31, (r + n - 1) % n, 512, 0);
+            b.leave(r, 0, 40, "MPI_Send");
+            b.enter(r, 0, 50, "MPI_Recv");
+            b.recv(r, 0, 55, (r + n - 1) % n, 1024, 0);
+            b.leave(r, 0, 60, "MPI_Recv");
+            b.leave(r, 0, 100, "main");
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn matrix_volume_and_count() {
+        let t = ring();
+        let mv = comm_matrix(&t, CommUnit::Bytes).unwrap();
+        assert_eq!(mv.n(), 4);
+        assert_eq!(mv.data[0][1], 1024.0);
+        assert_eq!(mv.data[0][3], 512.0);
+        assert_eq!(mv.data[0][2], 0.0);
+        assert_eq!(mv.total(), 4.0 * 1536.0);
+        let mc = comm_matrix(&t, CommUnit::Count).unwrap();
+        assert_eq!(mc.total(), 8.0);
+        assert!(mv.diagonal_fraction(1) > 0.999);
+    }
+
+    #[test]
+    fn row_col_sums_match_by_process() {
+        let t = ring();
+        let by_proc = comm_by_process(&t, CommUnit::Bytes).unwrap();
+        for &(_, sent, recvd) in &by_proc {
+            assert_eq!(sent, 1536.0);
+            assert_eq!(recvd, 1536.0);
+        }
+    }
+
+    #[test]
+    fn histogram_clusters() {
+        let t = ring();
+        let (counts, edges) = message_histogram(&t, 4).unwrap();
+        assert_eq!(edges.len(), 5);
+        assert_eq!(counts.iter().sum::<u64>(), 8);
+        // sizes 512 and 1024 with max 1024: bins of width 256;
+        // 512 falls in [512, 768) = bin 2, 1024 clamps into bin 3
+        assert_eq!(counts[2], 4); // 512s
+        assert_eq!(counts[3], 4); // 1024s
+        assert_eq!(counts[0] + counts[1], 0);
+    }
+
+    #[test]
+    fn over_time_totals() {
+        let t = ring();
+        let (counts, volume, edges) = comm_over_time(&t, 10).unwrap();
+        assert_eq!(counts.iter().sum::<u64>(), 8);
+        assert_eq!(volume.iter().sum::<f64>(), 4.0 * 1536.0);
+        assert_eq!(edges.len(), 11);
+    }
+
+    #[test]
+    fn falls_back_to_recv_only_traces() {
+        let mut b = TraceBuilder::new();
+        b.enter(1, 0, 0, "MPI_Recv");
+        b.recv(1, 0, 5, 0, 256, 0);
+        b.leave(1, 0, 10, "MPI_Recv");
+        b.enter(0, 0, 0, "compute");
+        b.leave(0, 0, 10, "compute");
+        let t = b.finish();
+        let m = comm_matrix(&t, CommUnit::Bytes).unwrap();
+        assert_eq!(m.data[0][1], 256.0); // inferred from the recv record
+    }
+}

@@ -1,0 +1,227 @@
+//! `critical_path_analysis` (paper §IV.D, Fig. 10).
+//!
+//! "To identify the critical path, we start from the process that is the
+//! last to finish execution in a trace. We trace back through the sequence
+//! from the last operation to the first operation considering the
+//! messaging dependencies between processes."
+//!
+//! Walking backwards over one process's events, a receive instant is a
+//! cross-process dependency: execution after the recv could not have
+//! started before the matching send was posted, so the walk jumps to the
+//! sender and continues there. The result is a time-ordered list of event
+//! rows — returned as a filtered events table so it can be displayed or
+//! fed to the timeline view exactly like the paper's dataframe.
+
+use super::messages::match_messages;
+use crate::df::Table;
+use crate::trace::*;
+use anyhow::{bail, Result};
+
+/// A critical path: event row indices in forward time order.
+#[derive(Debug, Clone)]
+pub struct CriticalPath {
+    pub rows: Vec<u32>,
+}
+
+impl CriticalPath {
+    /// Materialize the path as an events sub-table (the paper's output).
+    pub fn to_table(&self, trace: &Trace) -> Result<Table> {
+        trace.events.take(&self.rows)
+    }
+
+    /// Total time along the path attributed to each function name
+    /// (exclusive segments of path events), descending.
+    pub fn time_by_function(&self, trace: &Trace) -> Result<Vec<(String, f64)>> {
+        let ts = trace.events.i64s(COL_TS)?;
+        let (nm, ndict) = trace.events.strs(COL_NAME)?;
+        let (et, edict) = trace.events.strs(COL_TYPE)?;
+        let enter = edict.code_of(ENTER);
+        let mut acc: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+        // consecutive path rows (i, j): attribute the gap to i's function
+        for w in self.rows.windows(2) {
+            let (i, j) = (w[0] as usize, w[1] as usize);
+            let dt = (ts[j] - ts[i]) as f64;
+            if dt <= 0.0 {
+                continue;
+            }
+            let owner = if Some(et[i]) == enter { nm[i] } else { nm[i] };
+            *acc.entry(owner).or_insert(0.0) += dt;
+        }
+        let mut out: Vec<(String, f64)> = acc
+            .into_iter()
+            .map(|(c, v)| (ndict.resolve(c).unwrap_or("").to_string(), v))
+            .collect();
+        out.sort_by(|a, b| b.1.total_cmp(&a.1));
+        Ok(out)
+    }
+}
+
+/// Identify critical paths. Returns one path per "finish straggler": index
+/// 0 is the path ending at the globally last event (the paper's
+/// `critical_paths[0]`).
+pub fn critical_path_analysis(trace: &mut Trace) -> Result<Vec<CriticalPath>> {
+    super::match_caller_callee::prepare(trace)?;
+    let n = trace.len();
+    if n == 0 {
+        bail!("empty trace");
+    }
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let msgs = match_messages(trace)?;
+
+    // rows per process in table (time) order
+    let procs = trace.process_ids()?;
+    let mut rows_of: std::collections::HashMap<i64, Vec<u32>> =
+        procs.iter().map(|&p| (p, Vec::new())).collect();
+    for i in 0..n {
+        rows_of.get_mut(&pr[i]).unwrap().push(i as u32);
+    }
+    // position of a row within its process stream
+    let mut pos_of = vec![0u32; n];
+    for rows in rows_of.values() {
+        for (k, &r) in rows.iter().enumerate() {
+            pos_of[r as usize] = k as u32;
+        }
+    }
+
+    // last event per process, globally latest first
+    let mut ends: Vec<u32> = procs
+        .iter()
+        .filter_map(|p| rows_of[p].last().copied())
+        .collect();
+    ends.sort_by_key(|&r| std::cmp::Reverse(ts[r as usize]));
+
+    let mut paths = Vec::new();
+    for &end in ends.iter().take(1.max(ends.len().min(1))) {
+        paths.push(walk_back(end, &rows_of, &pos_of, pr, &msgs.send_of_recv));
+    }
+    Ok(paths)
+}
+
+fn walk_back(
+    end: u32,
+    rows_of: &std::collections::HashMap<i64, Vec<u32>>,
+    pos_of: &[u32],
+    pr: &[i64],
+    send_of_recv: &[i64],
+) -> CriticalPath {
+    let mut path = Vec::new();
+    let mut cur = end;
+    let mut guard = 0usize;
+    loop {
+        guard += 1;
+        if guard > 10_000_000 {
+            break; // defensive: malformed matching cannot loop forever
+        }
+        path.push(cur);
+        let i = cur as usize;
+        // cross-process dependency?
+        let jump = send_of_recv[i];
+        if jump >= 0 && pr[jump as usize] != pr[i] {
+            cur = jump as u32;
+            continue;
+        }
+        // previous event on the same process
+        let rows = &rows_of[&pr[i]];
+        let k = pos_of[i];
+        if k == 0 {
+            break;
+        }
+        cur = rows[(k - 1) as usize];
+    }
+    path.reverse();
+    CriticalPath { rows: path }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two ranks: rank 0 computes long, sends to rank 1; rank 1 waits.
+    /// The critical path must run through rank 0's compute, the send, and
+    /// rank 1's tail.
+    fn toy() -> Trace {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.enter(0, 0, 5, "compute");
+        b.leave(0, 0, 80, "compute");
+        b.enter(0, 0, 80, "MPI_Send");
+        b.send(0, 0, 85, 1, 64, 0);
+        b.leave(0, 0, 90, "MPI_Send");
+        b.leave(0, 0, 95, "main");
+
+        b.enter(1, 0, 0, "main");
+        b.enter(1, 0, 5, "MPI_Recv");
+        b.recv(1, 0, 88, 0, 64, 0);
+        b.leave(1, 0, 90, "MPI_Recv");
+        b.enter(1, 0, 90, "post");
+        b.leave(1, 0, 110, "post");
+        b.leave(1, 0, 120, "main");
+        b.finish()
+    }
+
+    #[test]
+    fn path_crosses_at_message() {
+        let mut t = toy();
+        let paths = critical_path_analysis(&mut t).unwrap();
+        assert_eq!(paths.len(), 1);
+        let p = &paths[0];
+        let pr = t.processes().unwrap();
+        let ts = t.timestamps().unwrap();
+        // path ends at the last event of rank 1
+        let last = *p.rows.last().unwrap() as usize;
+        assert_eq!(pr[last], 1);
+        assert_eq!(ts[last], 120);
+        // path starts at rank 0's first event (trace start)
+        let first = p.rows[0] as usize;
+        assert_eq!(pr[first], 0);
+        assert_eq!(ts[first], 0);
+        // time is monotone along the path
+        for w in p.rows.windows(2) {
+            assert!(ts[w[0] as usize] <= ts[w[1] as usize]);
+        }
+        // the path contains the send instant and the recv instant
+        let (nm, d) = t.events.strs(COL_NAME).unwrap();
+        let names: Vec<&str> = p
+            .rows
+            .iter()
+            .map(|&r| d.resolve(nm[r as usize]).unwrap())
+            .collect();
+        assert!(names.contains(&SEND_EVENT));
+        assert!(names.contains(&RECV_EVENT));
+        assert!(names.contains(&"compute"));
+    }
+
+    #[test]
+    fn time_by_function_attributes_compute() {
+        let mut t = toy();
+        let paths = critical_path_analysis(&mut t).unwrap();
+        let tbf = paths[0].time_by_function(&t).unwrap();
+        // compute (75ns) should dominate the path
+        assert_eq!(tbf[0].0, "compute");
+    }
+
+    #[test]
+    fn to_table_is_time_ordered_subtable() {
+        let mut t = toy();
+        let paths = critical_path_analysis(&mut t).unwrap();
+        let tab = paths[0].to_table(&t).unwrap();
+        assert_eq!(tab.len(), paths[0].rows.len());
+        let ts = tab.i64s(COL_TS).unwrap();
+        for w in ts.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn single_process_path_is_whole_stream() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.enter(0, 0, 10, "f");
+        b.leave(0, 0, 20, "f");
+        b.leave(0, 0, 30, "main");
+        let mut t = b.finish();
+        let paths = critical_path_analysis(&mut t).unwrap();
+        assert_eq!(paths[0].rows, vec![0, 1, 2, 3]);
+    }
+}

@@ -1,0 +1,152 @@
+//! `flat_profile` (paper §IV.B): total metric per function, aggregated
+//! over the whole trace (and optionally per process).
+
+use crate::df::groupby::{group_by, group_by2, Agg};
+use crate::trace::*;
+use anyhow::Result;
+
+/// Which metric a profile aggregates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    /// Inclusive time (`time.inc`).
+    IncTime,
+    /// Exclusive time (`time.exc`).
+    ExcTime,
+    /// Invocation count.
+    Count,
+}
+
+impl Metric {
+    pub fn column(&self) -> &'static str {
+        match self {
+            Metric::IncTime => "time.inc",
+            Metric::ExcTime => "time.exc",
+            Metric::Count => "time.inc", // counted, not summed
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Metric::IncTime => "time.inc",
+            Metric::ExcTime => "time.exc",
+            Metric::Count => "count",
+        }
+    }
+}
+
+/// One row of a flat profile.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProfileRow {
+    pub name: String,
+    pub value: f64,
+}
+
+/// Total `metric` per function name, sorted descending — the paper's
+/// `flat_profile`. NaN rows (Leaves, instants) are skipped by the groupby.
+pub fn flat_profile(trace: &mut Trace, metric: Metric) -> Result<Vec<ProfileRow>> {
+    super::metrics::calc_exc_metrics(trace)?;
+    let groups = group_by(&trace.events, COL_NAME)?;
+    let how = if metric == Metric::Count { Agg::Count } else { Agg::Sum };
+    let vals = groups.agg_f64(&trace.events, metric.column(), how)?;
+    let (_, ndict) = trace.events.strs(COL_NAME)?;
+    let mut rows: Vec<ProfileRow> = groups
+        .keys
+        .iter()
+        .zip(vals)
+        .filter(|(_, v)| *v > 0.0)
+        .map(|(k, v)| ProfileRow {
+            name: ndict.resolve(k.0 as u32).unwrap_or("").to_string(),
+            value: v,
+        })
+        .collect();
+    rows.sort_by(|a, b| b.value.total_cmp(&a.value));
+    Ok(rows)
+}
+
+/// Flat profile per (function, process): the building block of
+/// `load_imbalance` and `multi_run_analysis`. Returns (name, process,
+/// value) tuples.
+pub fn flat_profile_by_process(
+    trace: &mut Trace,
+    metric: Metric,
+) -> Result<Vec<(String, i64, f64)>> {
+    super::metrics::calc_exc_metrics(trace)?;
+    let groups = group_by2(&trace.events, COL_NAME, COL_PROC)?;
+    let how = if metric == Metric::Count { Agg::Count } else { Agg::Sum };
+    let vals = groups.agg_f64(&trace.events, metric.column(), how)?;
+    let (_, ndict) = trace.events.strs(COL_NAME)?;
+    Ok(groups
+        .keys
+        .iter()
+        .zip(vals)
+        .filter(|(_, v)| *v > 0.0)
+        .map(|(k, v)| {
+            (
+                ndict.resolve(k.0 as u32).unwrap_or("").to_string(),
+                k.1,
+                v,
+            )
+        })
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Trace {
+        let mut b = TraceBuilder::new();
+        for p in 0..2 {
+            b.enter(p, 0, 0, "main");
+            b.enter(p, 0, 10, "compute");
+            b.leave(p, 0, 60, "compute");
+            b.enter(p, 0, 70, "mpi");
+            b.leave(p, 0, 80, "mpi");
+            b.leave(p, 0, 100, "main");
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn exclusive_flat_profile() {
+        let mut t = toy();
+        let fp = flat_profile(&mut t, Metric::ExcTime).unwrap();
+        // per proc: compute 50, main 100-50-10=40, mpi 10; two procs double it
+        assert_eq!(fp[0].name, "compute");
+        assert_eq!(fp[0].value, 100.0);
+        assert_eq!(fp[1].name, "main");
+        assert_eq!(fp[1].value, 80.0);
+        assert_eq!(fp[2].name, "mpi");
+        assert_eq!(fp[2].value, 20.0);
+    }
+
+    #[test]
+    fn inclusive_and_count() {
+        let mut t = toy();
+        let fp = flat_profile(&mut t, Metric::IncTime).unwrap();
+        assert_eq!(fp[0].name, "main");
+        assert_eq!(fp[0].value, 200.0);
+        let fc = flat_profile(&mut t, Metric::Count).unwrap();
+        // each function entered twice (2 procs), enter+leave rows counted
+        let main_row = fc.iter().find(|r| r.name == "main").unwrap();
+        assert_eq!(main_row.value, 2.0);
+    }
+
+    #[test]
+    fn by_process_splits() {
+        let mut t = toy();
+        let rows = flat_profile_by_process(&mut t, Metric::ExcTime).unwrap();
+        let compute: Vec<_> = rows.iter().filter(|(n, _, _)| n == "compute").collect();
+        assert_eq!(compute.len(), 2);
+        assert!(compute.iter().all(|(_, _, v)| *v == 50.0));
+    }
+
+    #[test]
+    fn profile_total_equals_span_sum() {
+        // property: sum over exclusive profile == sum of root inclusive
+        let mut t = toy();
+        let fp = flat_profile(&mut t, Metric::ExcTime).unwrap();
+        let total: f64 = fp.iter().map(|r| r.value).sum();
+        assert_eq!(total, 200.0);
+    }
+}

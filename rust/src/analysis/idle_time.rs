@@ -1,0 +1,124 @@
+//! `idle_time` (paper §IV.D, Fig. 9): time each process spends waiting.
+//!
+//! "Idle" is a configurable set of function names — `MPI_Recv`,
+//! `MPI_Wait(all)`, `MPI_Barrier` and the literal `Idle` region by default
+//! (the paper notes users "specify alternative operations to qualify as
+//! idle time to account for different programming models").
+
+use super::flat_profile::Metric;
+use crate::trace::*;
+use anyhow::Result;
+use std::collections::HashSet;
+
+/// Idle-time report for one process.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IdleRow {
+    pub proc: i64,
+    /// Total ns in idle functions.
+    pub idle_ns: f64,
+    /// Fraction of the trace span spent idle.
+    pub fraction: f64,
+}
+
+/// Compute idle time per process, sorted most-idle first.
+/// `idle_functions` defaults to [`DEFAULT_IDLE_FUNCTIONS`].
+pub fn idle_time(
+    trace: &mut Trace,
+    idle_functions: Option<&[&str]>,
+) -> Result<Vec<IdleRow>> {
+    let span = trace.duration_ns()?.max(1) as f64;
+    let idle: HashSet<&str> = idle_functions
+        .unwrap_or(DEFAULT_IDLE_FUNCTIONS)
+        .iter()
+        .copied()
+        .collect();
+    // inclusive time of idle calls: nested non-idle children are rare and
+    // the paper counts the whole blocking call as idle.
+    let rows = super::flat_profile::flat_profile_by_process(trace, Metric::IncTime)?;
+    let procs = trace.process_ids()?;
+    let mut per: std::collections::HashMap<i64, f64> =
+        procs.iter().map(|&p| (p, 0.0)).collect();
+    for (name, proc, v) in rows {
+        if idle.contains(name.as_str()) {
+            *per.entry(proc).or_insert(0.0) += v;
+        }
+    }
+    let mut out: Vec<IdleRow> = per
+        .into_iter()
+        .map(|(proc, idle_ns)| IdleRow { proc, idle_ns, fraction: idle_ns / span })
+        .collect();
+    out.sort_by(|a, b| b.idle_ns.total_cmp(&a.idle_ns).then(a.proc.cmp(&b.proc)));
+    Ok(out)
+}
+
+/// The `k` most and `k` least idle processes — the Fig. 9 workflow, ready
+/// to feed into `Trace::filter(process_in(...))`.
+pub fn idle_outliers(
+    trace: &mut Trace,
+    k: usize,
+    idle_functions: Option<&[&str]>,
+) -> Result<(Vec<IdleRow>, Vec<IdleRow>)> {
+    let all = idle_time(trace, idle_functions)?;
+    let most = all.iter().take(k).cloned().collect();
+    let least = all.iter().rev().take(k).cloned().collect();
+    Ok((most, least))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Trace {
+        let mut b = TraceBuilder::new();
+        let waits = [5i64, 50, 20, 0];
+        for (p, &w) in waits.iter().enumerate() {
+            let p = p as i64;
+            b.enter(p, 0, 0, "main");
+            if w > 0 {
+                b.enter(p, 0, 10, "MPI_Wait");
+                b.leave(p, 0, 10 + w, "MPI_Wait");
+            }
+            b.leave(p, 0, 100, "main");
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn sorted_most_idle_first() {
+        let mut t = toy();
+        let rows = idle_time(&mut t, None).unwrap();
+        assert_eq!(rows[0].proc, 1);
+        assert_eq!(rows[0].idle_ns, 50.0);
+        assert_eq!(rows.last().unwrap().proc, 3);
+        assert_eq!(rows.last().unwrap().idle_ns, 0.0);
+        assert!((rows[0].fraction - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn outliers() {
+        let mut t = toy();
+        let (most, least) = idle_outliers(&mut t, 2, None).unwrap();
+        assert_eq!(most.iter().map(|r| r.proc).collect::<Vec<_>>(), vec![1, 2]);
+        assert_eq!(least.iter().map(|r| r.proc).collect::<Vec<_>>(), vec![3, 0]);
+    }
+
+    #[test]
+    fn custom_idle_set() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "chi_wait"); // custom runtime's wait
+        b.leave(0, 0, 30, "chi_wait");
+        let mut t = b.finish();
+        let rows = idle_time(&mut t, Some(&["chi_wait"])).unwrap();
+        assert_eq!(rows[0].idle_ns, 30.0);
+        // default set would find nothing
+        let rows = idle_time(&mut t, None).unwrap();
+        assert_eq!(rows[0].idle_ns, 0.0);
+    }
+
+    #[test]
+    fn every_process_reported_even_if_never_idle() {
+        let mut t = toy();
+        let rows = idle_time(&mut t, None).unwrap();
+        assert_eq!(rows.len(), 4);
+    }
+}

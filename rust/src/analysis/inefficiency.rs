@@ -1,0 +1,424 @@
+//! Inefficiency-pattern report: the Scalasca-style automated analysis the
+//! paper positions Pipit against (Table I row "Scalasca": pattern
+//! detection into a report) and enables building *on top of* the API
+//! ("we hope that other analysis tools will be developed on top of
+//! Pipit", §VIII). Every detector is a pure function over the uniform
+//! event schema, so the report works on all five formats.
+//!
+//! Detectors (classic MPI wait-state patterns):
+//! * **Late Sender** — a receive blocks waiting for a send posted later.
+//! * **Late Receiver** — a (synchronous) send completes long after the
+//!   matching receive was ready (receiver-side posting gap).
+//! * **Wait at Barrier** — spread of barrier entry times: early arrivals
+//!   wait for the last.
+//! * **Load Imbalance** — per-function max/mean exclusive-time skew.
+//! * **Serialization** — one process is busy while most others idle.
+
+use super::messages::match_messages;
+use super::time_profile::exclusive_segments;
+use crate::df::NULL_I64;
+use crate::trace::*;
+use anyhow::Result;
+use std::fmt::Write as _;
+
+/// Severity-ranked finding.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Pattern id ("late-sender", ...).
+    pub pattern: &'static str,
+    /// Wasted time attributed to the pattern (ns).
+    pub waste_ns: f64,
+    /// Processes most affected, worst first.
+    pub processes: Vec<i64>,
+    /// Human-readable description with locations.
+    pub detail: String,
+}
+
+/// The full report: findings sorted by waste, plus trace context.
+#[derive(Debug, Clone)]
+pub struct Report {
+    pub findings: Vec<Finding>,
+    pub total_time_ns: f64,
+    pub num_processes: usize,
+}
+
+impl Report {
+    /// Render as text (the Scalasca/Cube-style report surface).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(
+            out,
+            "inefficiency report — {} processes, span {}",
+            self.num_processes,
+            crate::util::fmt_ns(self.total_time_ns)
+        );
+        let _ = writeln!(out, "{:-<72}", "");
+        if self.findings.is_empty() {
+            let _ = writeln!(out, "no inefficiency patterns above threshold");
+        }
+        for f in &self.findings {
+            let frac = f.waste_ns / self.total_time_ns.max(1.0) * 100.0;
+            let _ = writeln!(
+                out,
+                "[{:<14}] waste {:>12} ({:>5.2}% of span x procs)  procs {:?}",
+                f.pattern,
+                crate::util::fmt_ns(f.waste_ns),
+                frac,
+                &f.processes[..f.processes.len().min(5)]
+            );
+            let _ = writeln!(out, "    {}", f.detail);
+        }
+        out
+    }
+}
+
+/// Configuration thresholds.
+#[derive(Debug, Clone)]
+pub struct ReportConfig {
+    /// Ignore findings wasting less than this fraction of span × procs.
+    pub min_waste_fraction: f64,
+    /// Imbalance (max/mean) above which a function is reported.
+    pub imbalance_threshold: f64,
+}
+
+impl Default for ReportConfig {
+    fn default() -> Self {
+        ReportConfig { min_waste_fraction: 0.005, imbalance_threshold: 1.5 }
+    }
+}
+
+/// Run every detector and assemble the report.
+pub fn analyze_inefficiencies(trace: &mut Trace, cfg: &ReportConfig) -> Result<Report> {
+    super::match_caller_callee::prepare(trace)?;
+    let (lo, hi) = trace.time_range()?;
+    let nprocs = trace.num_processes()?;
+    let budget = ((hi - lo) as f64) * nprocs as f64;
+    let min_waste = cfg.min_waste_fraction * budget;
+
+    let mut findings = Vec::new();
+    findings.extend(late_sender(trace)?);
+    findings.extend(late_receiver(trace)?);
+    findings.extend(wait_at_barrier(trace)?);
+    findings.extend(imbalance_findings(trace, cfg.imbalance_threshold)?);
+    findings.extend(serialization(trace)?);
+    findings.retain(|f| f.waste_ns >= min_waste);
+    findings.sort_by(|a, b| b.waste_ns.total_cmp(&a.waste_ns));
+    Ok(Report {
+        findings,
+        total_time_ns: budget,
+        num_processes: nprocs,
+    })
+}
+
+/// Late Sender: for each matched message, the receive call entered before
+/// the send was posted; the gap is wait time on the receiver.
+fn late_sender(trace: &Trace) -> Result<Vec<Finding>> {
+    let msgs = match_messages(trace)?;
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let parent = trace.events.i64s("_parent")?;
+    let mut waste_by_proc: std::collections::HashMap<i64, f64> =
+        std::collections::HashMap::new();
+    let mut count = 0u64;
+    for &r in &msgs.recvs {
+        let s = msgs.send_of_recv[r as usize];
+        if s < 0 {
+            continue;
+        }
+        // receiver entered its recv call at the parent's enter time
+        let p = parent[r as usize];
+        if p == NULL_I64 {
+            continue;
+        }
+        let recv_enter = ts[p as usize];
+        let send_post = ts[s as usize];
+        if send_post > recv_enter {
+            *waste_by_proc.entry(pr[r as usize]).or_insert(0.0) +=
+                (send_post - recv_enter) as f64;
+            count += 1;
+        }
+    }
+    finding_from_waste(
+        "late-sender",
+        waste_by_proc,
+        format!("{count} receives blocked on sends posted after the recv was ready"),
+    )
+}
+
+/// Late Receiver: the receive was posted after the send call *completed*
+/// — the sender-side symmetric pattern (visible in rendezvous traffic).
+fn late_receiver(trace: &Trace) -> Result<Vec<Finding>> {
+    let msgs = match_messages(trace)?;
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let parent = trace.events.i64s("_parent")?;
+    let matching = trace.events.i64s("_matching_event")?;
+    let mut waste_by_proc: std::collections::HashMap<i64, f64> =
+        std::collections::HashMap::new();
+    let mut count = 0u64;
+    for &s in &msgs.sends {
+        let r = msgs.recv_of_send[s as usize];
+        if r < 0 {
+            continue;
+        }
+        let sp = parent[s as usize];
+        if sp == NULL_I64 || matching[sp as usize] == NULL_I64 {
+            continue;
+        }
+        let send_leave = ts[matching[sp as usize] as usize];
+        let rp = parent[r as usize];
+        if rp == NULL_I64 {
+            continue;
+        }
+        let recv_enter = ts[rp as usize];
+        if recv_enter > send_leave {
+            *waste_by_proc.entry(pr[s as usize]).or_insert(0.0) +=
+                (recv_enter - send_leave) as f64;
+            count += 1;
+        }
+    }
+    finding_from_waste(
+        "late-receiver",
+        waste_by_proc,
+        format!("{count} sends outlived by unposted receives"),
+    )
+}
+
+/// Wait at Barrier: per barrier-ish collective (same function name,
+/// overlapping spans on all procs), early entrants wait for the last.
+fn wait_at_barrier(trace: &Trace) -> Result<Vec<Finding>> {
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let enter = edict.code_of(ENTER);
+    let barriers = ["MPI_Barrier", "MPI_Allreduce", "MPI_Alltoall", "MPI_Allgather"];
+    let codes: Vec<u32> = barriers.iter().filter_map(|b| ndict.code_of(b)).collect();
+    if codes.is_empty() {
+        return Ok(Vec::new());
+    }
+    let nprocs = trace.num_processes()?;
+    // collect enters per barrier code in time order; group into rounds of
+    // nprocs consecutive enters (SPMD collectives execute in lockstep)
+    let mut waste_by_proc: std::collections::HashMap<i64, f64> =
+        std::collections::HashMap::new();
+    let mut rounds = 0u64;
+    for &code in &codes {
+        let mut enters: Vec<(i64, i64)> = (0..trace.len())
+            .filter(|&i| Some(et[i]) == enter && nm[i] == code)
+            .map(|i| (ts[i], pr[i]))
+            .collect();
+        enters.sort_unstable();
+        for round in enters.chunks(nprocs) {
+            if round.len() < nprocs {
+                continue;
+            }
+            let last = round.iter().map(|&(t, _)| t).max().unwrap();
+            for &(t, p) in round {
+                if last > t {
+                    *waste_by_proc.entry(p).or_insert(0.0) += (last - t) as f64;
+                }
+            }
+            rounds += 1;
+        }
+    }
+    finding_from_waste(
+        "wait-at-barrier",
+        waste_by_proc,
+        format!("{rounds} collective rounds; early arrivals idle until the last entrant"),
+    )
+}
+
+/// Load imbalance above threshold, reusing the API's load_imbalance.
+fn imbalance_findings(trace: &mut Trace, threshold: f64) -> Result<Vec<Finding>> {
+    let rows = super::load_imbalance(trace, super::Metric::ExcTime, 5)?;
+    let nprocs = trace.num_processes()?.max(1) as f64;
+    Ok(rows
+        .into_iter()
+        .filter(|r| r.imbalance > threshold && r.name != "Idle" && r.name != "main")
+        .map(|r| {
+            // waste ≈ what the stragglers cost vs a balanced run
+            let waste = (r.imbalance - 1.0) * r.mean * nprocs;
+            Finding {
+                pattern: "load-imbalance",
+                waste_ns: waste,
+                processes: r.top_processes.clone(),
+                detail: format!(
+                    "'{}' imbalance {:.2} (max/mean), mean {} per process",
+                    r.name,
+                    r.imbalance,
+                    crate::util::fmt_ns(r.mean)
+                ),
+            }
+        })
+        .collect())
+}
+
+/// Serialization: fraction of wall time where exactly one process is busy
+/// while others are not (single-stream phases in a parallel run).
+fn serialization(trace: &mut Trace) -> Result<Vec<Finding>> {
+    let nprocs = trace.num_processes()?;
+    if nprocs < 2 {
+        return Ok(Vec::new());
+    }
+    let (lo, hi) = trace.time_range()?;
+    let segs = exclusive_segments(trace)?;
+    let (_, ndict) = trace.events.strs(COL_NAME)?;
+    let idle_code = ndict.code_of("Idle");
+    // busy intervals per proc (excluding explicit Idle regions)
+    let mut by_proc: std::collections::HashMap<i64, Vec<(i64, i64)>> =
+        std::collections::HashMap::new();
+    for s in &segs {
+        if Some(s.name_code) == idle_code {
+            continue;
+        }
+        by_proc.entry(s.proc).or_default().push((s.start, s.end));
+    }
+    // sweep over bins (coarse, 1024) counting busy procs
+    const BINS: usize = 1024;
+    let width = ((hi - lo).max(1)) as f64 / BINS as f64;
+    let mut busy_count = vec![0u32; BINS];
+    let mut solo_proc = vec![-1i64; BINS];
+    for (&p, iv) in &by_proc {
+        let merged = super::overlap::union(iv.clone());
+        for (a, bnd) in merged {
+            let b0 = ((a - lo) as f64 / width) as usize;
+            let b1 = (((bnd - lo) as f64 / width).ceil() as usize).min(BINS);
+            for b in b0..b1 {
+                busy_count[b] += 1;
+                solo_proc[b] = p;
+            }
+        }
+    }
+    let solo_bins = busy_count.iter().filter(|&&c| c == 1).count();
+    let waste = solo_bins as f64 * width * (nprocs as f64 - 1.0);
+    let mut culprit_count: std::collections::HashMap<i64, u64> =
+        std::collections::HashMap::new();
+    for b in 0..BINS {
+        if busy_count[b] == 1 {
+            *culprit_count.entry(solo_proc[b]).or_insert(0) += 1;
+        }
+    }
+    let mut culprits: Vec<(i64, u64)> = culprit_count.into_iter().collect();
+    culprits.sort_by_key(|&(_, c)| std::cmp::Reverse(c));
+    if solo_bins == 0 {
+        return Ok(Vec::new());
+    }
+    Ok(vec![Finding {
+        pattern: "serialization",
+        waste_ns: waste,
+        processes: culprits.iter().map(|&(p, _)| p).collect(),
+        detail: format!(
+            "{:.1}% of wall time has exactly one busy process",
+            solo_bins as f64 / BINS as f64 * 100.0
+        ),
+    }])
+}
+
+fn finding_from_waste(
+    pattern: &'static str,
+    waste_by_proc: std::collections::HashMap<i64, f64>,
+    detail: String,
+) -> Result<Vec<Finding>> {
+    let total: f64 = waste_by_proc.values().sum();
+    if total <= 0.0 {
+        return Ok(Vec::new());
+    }
+    let mut procs: Vec<(i64, f64)> = waste_by_proc.into_iter().collect();
+    procs.sort_by(|a, b| b.1.total_cmp(&a.1));
+    Ok(vec![Finding {
+        pattern,
+        waste_ns: total,
+        processes: procs.into_iter().map(|(p, _)| p).collect(),
+        detail,
+    }])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+
+    #[test]
+    fn late_sender_detected_in_gol() {
+        // gol: receivers wait for heavy ranks' sends
+        let mut t = gen::gol::generate(&GenConfig::new(4, 10).with_noise(0.01));
+        let rep = analyze_inefficiencies(&mut t, &ReportConfig::default()).unwrap();
+        assert!(
+            rep.findings.iter().any(|f| f.pattern == "late-sender"),
+            "{}",
+            rep.render()
+        );
+    }
+
+    #[test]
+    fn imbalance_detected_in_loimos() {
+        let mut t = gen::loimos::generate(&GenConfig::new(64, 5).with_noise(0.02));
+        let rep = analyze_inefficiencies(&mut t, &ReportConfig::default()).unwrap();
+        let li = rep.findings.iter().find(|f| f.pattern == "load-imbalance");
+        assert!(li.is_some(), "{}", rep.render());
+        assert!(li.unwrap().detail.contains("ComputeInteractions"));
+    }
+
+    #[test]
+    fn wait_at_barrier_detected_in_amg() {
+        let mut t = gen::amg::generate(&GenConfig::new(8, 4).with_noise(0.05));
+        let rep = analyze_inefficiencies(
+            &mut t,
+            &ReportConfig { min_waste_fraction: 0.0, ..Default::default() },
+        )
+        .unwrap();
+        assert!(
+            rep.findings.iter().any(|f| f.pattern == "wait-at-barrier"),
+            "{}",
+            rep.render()
+        );
+    }
+
+    #[test]
+    fn serialization_detected_when_one_rank_runs_alone() {
+        let mut b = TraceBuilder::new();
+        // rank 0 computes alone for the first half; then both run
+        b.enter(0, 0, 0, "solo");
+        b.leave(0, 0, 500, "solo");
+        b.enter(0, 0, 500, "both");
+        b.leave(0, 0, 1000, "both");
+        b.enter(1, 0, 500, "both");
+        b.leave(1, 0, 1000, "both");
+        let mut t = b.finish();
+        let rep = analyze_inefficiencies(
+            &mut t,
+            &ReportConfig { min_waste_fraction: 0.0, imbalance_threshold: 99.0 },
+        )
+        .unwrap();
+        let ser = rep.findings.iter().find(|f| f.pattern == "serialization").unwrap();
+        assert_eq!(ser.processes[0], 0);
+        assert!(ser.detail.contains('%'));
+    }
+
+    #[test]
+    fn clean_trace_produces_empty_report() {
+        let mut b = TraceBuilder::new();
+        for p in 0..4 {
+            b.enter(p, 0, 0, "work");
+            b.leave(p, 0, 100, "work");
+        }
+        let mut t = b.finish();
+        let rep = analyze_inefficiencies(&mut t, &ReportConfig::default()).unwrap();
+        assert!(rep.findings.is_empty(), "{}", rep.render());
+        assert!(rep.render().contains("no inefficiency"));
+    }
+
+    #[test]
+    fn report_renders_sorted_by_waste() {
+        let mut t = gen::gol::generate(&GenConfig::new(8, 10));
+        let rep = analyze_inefficiencies(
+            &mut t,
+            &ReportConfig { min_waste_fraction: 0.0, ..Default::default() },
+        )
+        .unwrap();
+        for w in rep.findings.windows(2) {
+            assert!(w[0].waste_ns >= w[1].waste_ns);
+        }
+    }
+}

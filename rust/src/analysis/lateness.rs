@@ -1,0 +1,247 @@
+//! `calculate_lateness` (paper §IV.D, Fig. 11): logical timelines and the
+//! lateness metric of Isaacs et al. [27].
+//!
+//! The trace's *logical structure* assigns every operation a global step
+//! index via the happens-before relation [26]: an operation's step is one
+//! past the previous operation on its process, and a receive additionally
+//! happens-after its matching send. Lateness of an operation is how far
+//! its completion lags the earliest completion at the same logical step:
+//!
+//! ```text
+//! lateness(op) = t_leave(op) − min { t_leave(op') : step(op') == step(op) }
+//! ```
+//!
+//! Operation granularity: *leaf calls* (matched Enter/Leave pairs with no
+//! child calls) — in iterative MPI codes these are the per-iteration
+//! compute / MPI_Send / MPI_Recv bodies the Isaacs formulation orders.
+
+use super::messages::match_messages;
+use crate::df::NULL_I64;
+use crate::trace::*;
+use anyhow::Result;
+
+/// Logical-timeline entry for one operation (leaf call).
+#[derive(Debug, Clone)]
+pub struct LogicalOp {
+    /// Enter row of the call.
+    pub row: u32,
+    pub proc: i64,
+    pub name: String,
+    /// Logical step index (0-based).
+    pub step: u32,
+    /// Completion (leave) timestamp.
+    pub t_leave: i64,
+    /// Lateness in ns (>= 0).
+    pub lateness: f64,
+}
+
+/// Per-process lateness aggregate (Fig. 11 right).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ProcLateness {
+    pub proc: i64,
+    pub max_lateness: f64,
+    pub mean_lateness: f64,
+}
+
+/// Compute the logical structure and lateness of every leaf call.
+pub fn calculate_lateness(trace: &mut Trace) -> Result<Vec<LogicalOp>> {
+    super::match_caller_callee::prepare(trace)?;
+    let n = trace.len();
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let matching = trace.events.i64s("_matching_event")?;
+    let parent = trace.events.i64s("_parent")?;
+    let enter = edict.code_of(ENTER);
+    let msgs = match_messages(trace)?;
+
+    // Leaf calls: Enter rows that are matched and have no child Enter.
+    let mut has_child_call = vec![false; n];
+    for i in 0..n {
+        if Some(et[i]) == enter && parent[i] != NULL_I64 {
+            has_child_call[parent[i] as usize] = true;
+        }
+    }
+    // Map each instant to its enclosing call row (parent).
+    // Order leaf calls by completion time for causal processing.
+    let mut calls: Vec<u32> = (0..n as u32)
+        .filter(|&i| {
+            let i = i as usize;
+            Some(et[i]) == enter && matching[i] != NULL_I64 && !has_child_call[i]
+        })
+        .collect();
+    calls.sort_by_key(|&i| ts[matching[i as usize] as usize]);
+
+    // recv instant rows grouped by their enclosing call
+    let mut recvs_in_call: std::collections::HashMap<u32, Vec<u32>> =
+        std::collections::HashMap::new();
+    for &r in &msgs.recvs {
+        let p = parent[r as usize];
+        if p != NULL_I64 {
+            recvs_in_call.entry(p as u32).or_default().push(r);
+        }
+    }
+    // which call encloses each send instant (for step lookups)
+    let mut call_of_send = std::collections::HashMap::new();
+    for &s in &msgs.sends {
+        let p = parent[s as usize];
+        if p != NULL_I64 {
+            call_of_send.insert(s, p as u32);
+        }
+    }
+
+    let mut step_of_call: std::collections::HashMap<u32, u32> =
+        std::collections::HashMap::new();
+    let mut last_step_on_proc: std::collections::HashMap<i64, u32> =
+        std::collections::HashMap::new();
+    for &c in &calls {
+        let i = c as usize;
+        let mut step = last_step_on_proc
+            .get(&pr[i])
+            .map(|&s| s + 1)
+            .unwrap_or(0);
+        if let Some(rs) = recvs_in_call.get(&c) {
+            for &r in rs {
+                let s = msgs.send_of_recv[r as usize];
+                if s >= 0 {
+                    if let Some(&sc) = call_of_send.get(&(s as u32)) {
+                        if let Some(&ss) = step_of_call.get(&sc) {
+                            step = step.max(ss + 1);
+                        }
+                    }
+                }
+            }
+        }
+        step_of_call.insert(c, step);
+        last_step_on_proc.insert(pr[i], step);
+    }
+
+    // min completion time per step
+    let mut min_at_step: std::collections::HashMap<u32, i64> =
+        std::collections::HashMap::new();
+    for &c in &calls {
+        let step = step_of_call[&c];
+        let tl = ts[matching[c as usize] as usize];
+        min_at_step
+            .entry(step)
+            .and_modify(|m| *m = (*m).min(tl))
+            .or_insert(tl);
+    }
+
+    Ok(calls
+        .iter()
+        .map(|&c| {
+            let i = c as usize;
+            let step = step_of_call[&c];
+            let t_leave = ts[matching[i] as usize];
+            LogicalOp {
+                row: c,
+                proc: pr[i],
+                name: ndict.resolve(nm[i]).unwrap_or("").to_string(),
+                step,
+                t_leave,
+                lateness: (t_leave - min_at_step[&step]) as f64,
+            }
+        })
+        .collect())
+}
+
+/// Aggregate lateness per process, sorted by max lateness descending.
+pub fn lateness_by_process(ops: &[LogicalOp]) -> Vec<ProcLateness> {
+    let mut agg: std::collections::HashMap<i64, (f64, f64, u64)> =
+        std::collections::HashMap::new();
+    for op in ops {
+        let e = agg.entry(op.proc).or_insert((0.0, 0.0, 0));
+        e.0 = e.0.max(op.lateness);
+        e.1 += op.lateness;
+        e.2 += 1;
+    }
+    let mut out: Vec<ProcLateness> = agg
+        .into_iter()
+        .map(|(proc, (mx, sum, n))| ProcLateness {
+            proc,
+            max_lateness: mx,
+            mean_lateness: sum / n as f64,
+        })
+        .collect();
+    out.sort_by(|a, b| b.max_lateness.total_cmp(&a.max_lateness));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two ranks in lockstep; rank 1 always finishes its step 30ns late.
+    fn toy() -> Trace {
+        let mut b = TraceBuilder::new();
+        for it in 0..3i64 {
+            let t0 = it * 100;
+            b.enter(0, 0, t0, "step");
+            b.leave(0, 0, t0 + 40, "step");
+            b.enter(1, 0, t0, "step");
+            b.leave(1, 0, t0 + 70, "step");
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn lockstep_lateness() {
+        let mut t = toy();
+        let ops = calculate_lateness(&mut t).unwrap();
+        assert_eq!(ops.len(), 6);
+        for op in &ops {
+            if op.proc == 0 {
+                assert_eq!(op.lateness, 0.0);
+            } else {
+                assert_eq!(op.lateness, 30.0);
+            }
+        }
+        let by_proc = lateness_by_process(&ops);
+        assert_eq!(by_proc[0].proc, 1);
+        assert_eq!(by_proc[0].max_lateness, 30.0);
+    }
+
+    #[test]
+    fn message_sync_advances_step() {
+        let mut b = TraceBuilder::new();
+        // rank 0: two ops then send; rank 1: one op then recv.
+        b.enter(0, 0, 0, "a");
+        b.leave(0, 0, 10, "a");
+        b.enter(0, 0, 10, "b");
+        b.leave(0, 0, 20, "b");
+        b.enter(0, 0, 20, "MPI_Send");
+        b.send(0, 0, 22, 1, 8, 0);
+        b.leave(0, 0, 30, "MPI_Send");
+
+        b.enter(1, 0, 0, "x");
+        b.leave(1, 0, 5, "x");
+        b.enter(1, 0, 5, "MPI_Recv");
+        b.recv(1, 0, 35, 0, 8, 0);
+        b.leave(1, 0, 40, "MPI_Recv");
+        let mut t = b.finish();
+        let ops = calculate_lateness(&mut t).unwrap();
+        let recv_op = ops.iter().find(|o| o.name == "MPI_Recv").unwrap();
+        let send_op = ops.iter().find(|o| o.name == "MPI_Send").unwrap();
+        // recv happens-after send: its step exceeds the send's
+        assert!(recv_op.step > send_op.step);
+        assert_eq!(send_op.step, 2);
+        assert_eq!(recv_op.step, 3);
+    }
+
+    #[test]
+    fn lateness_nonnegative_and_zero_exists_per_step() {
+        let mut t = toy();
+        let ops = calculate_lateness(&mut t).unwrap();
+        let mut steps: std::collections::HashMap<u32, Vec<f64>> =
+            std::collections::HashMap::new();
+        for op in &ops {
+            assert!(op.lateness >= 0.0);
+            steps.entry(op.step).or_default().push(op.lateness);
+        }
+        for (_, ls) in steps {
+            assert!(ls.iter().any(|&l| l == 0.0));
+        }
+    }
+}

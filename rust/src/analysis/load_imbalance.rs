@@ -1,0 +1,127 @@
+//! `load_imbalance` (paper §IV.D, Fig. 7): expose asymmetry in per-process
+//! aggregated function times.
+//!
+//! For each function: imbalance = max(metric across processes) / mean, the
+//! `num_processes` most loaded process ids, and the per-process mean —
+//! exactly the columns of the paper's Fig. 7 output.
+
+use super::flat_profile::{flat_profile_by_process, Metric};
+use crate::trace::*;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Imbalance report for one function.
+#[derive(Debug, Clone)]
+pub struct ImbalanceRow {
+    pub name: String,
+    /// max over processes / mean over processes of the metric.
+    pub imbalance: f64,
+    /// The `k` most loaded processes, highest first.
+    pub top_processes: Vec<i64>,
+    /// Mean metric value per process.
+    pub mean: f64,
+    /// Total metric value (mean × #processes with data).
+    pub total: f64,
+}
+
+/// Compute load imbalance per function. Functions are sorted by total
+/// metric (most time-consuming first), mirroring Fig. 7 where the output
+/// is combined with `sort_values`.
+pub fn load_imbalance(
+    trace: &mut Trace,
+    metric: Metric,
+    num_processes: usize,
+) -> Result<Vec<ImbalanceRow>> {
+    let nprocs = trace.num_processes()?.max(1);
+    let rows = flat_profile_by_process(trace, metric)?;
+    let mut by_func: HashMap<String, Vec<(i64, f64)>> = HashMap::new();
+    for (name, proc, v) in rows {
+        by_func.entry(name).or_default().push((proc, v));
+    }
+    let mut out: Vec<ImbalanceRow> = by_func
+        .into_iter()
+        .map(|(name, mut pv)| {
+            // processes with zero time still count toward the mean
+            let total: f64 = pv.iter().map(|(_, v)| v).sum();
+            let mean = total / nprocs as f64;
+            let max = pv.iter().map(|(_, v)| *v).fold(0.0, f64::max);
+            pv.sort_by(|a, b| b.1.total_cmp(&a.1));
+            ImbalanceRow {
+                name,
+                imbalance: if mean > 0.0 { max / mean } else { 1.0 },
+                top_processes: pv.iter().take(num_processes).map(|(p, _)| *p).collect(),
+                mean,
+                total,
+            }
+        })
+        .collect();
+    out.sort_by(|a, b| b.total.total_cmp(&a.total));
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// proc 0 spends 10 in work, proc 1 spends 30, proc 2 spends 20.
+    fn skewed() -> Trace {
+        let mut b = TraceBuilder::new();
+        let durs = [10i64, 30, 20];
+        for (p, &d) in durs.iter().enumerate() {
+            let p = p as i64;
+            b.enter(p, 0, 0, "main");
+            b.enter(p, 0, 5, "work");
+            b.leave(p, 0, 5 + d, "work");
+            b.leave(p, 0, 100, "main");
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn imbalance_is_max_over_mean() {
+        let mut t = skewed();
+        let rows = load_imbalance(&mut t, Metric::ExcTime, 2).unwrap();
+        let work = rows.iter().find(|r| r.name == "work").unwrap();
+        assert!((work.imbalance - 30.0 / 20.0).abs() < 1e-9);
+        assert_eq!(work.top_processes, vec![1, 2]);
+        assert_eq!(work.mean, 20.0);
+        assert_eq!(work.total, 60.0);
+    }
+
+    #[test]
+    fn sorted_by_total_descending() {
+        let mut t = skewed();
+        let rows = load_imbalance(&mut t, Metric::ExcTime, 1).unwrap();
+        assert_eq!(rows[0].name, "main"); // 240 exclusive total
+        for w in rows.windows(2) {
+            assert!(w[0].total >= w[1].total);
+        }
+    }
+
+    #[test]
+    fn balanced_function_has_imbalance_one() {
+        let mut b = TraceBuilder::new();
+        for p in 0..4 {
+            b.enter(p, 0, 0, "even");
+            b.leave(p, 0, 50, "even");
+        }
+        let mut t = b.finish();
+        let rows = load_imbalance(&mut t, Metric::ExcTime, 1).unwrap();
+        assert!((rows[0].imbalance - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn function_missing_on_some_processes() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "rare");
+        b.leave(0, 0, 40, "rare");
+        b.enter(1, 0, 0, "common");
+        b.leave(1, 0, 40, "common");
+        let mut t = b.finish();
+        let rows = load_imbalance(&mut t, Metric::ExcTime, 4).unwrap();
+        let rare = rows.iter().find(|r| r.name == "rare").unwrap();
+        // mean over *all* processes: 40/2 = 20 -> imbalance = 2
+        assert!((rare.imbalance - 2.0).abs() < 1e-9);
+        assert_eq!(rare.top_processes, vec![0]);
+    }
+}

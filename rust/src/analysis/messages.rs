@@ -1,0 +1,111 @@
+//! Point-to-point message matching: pair each `MpiRecv` instant with its
+//! `MpiSend` (FIFO per (src, dst, tag) channel, MPI ordering semantics).
+//! Shared by critical-path analysis, lateness, and the timeline's arrows.
+
+use crate::df::NULL_I64;
+use crate::trace::*;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// For every row: if it is a recv instant, the row of the matching send
+/// (or -1 if unmatched); if it is a send instant, the row of the matching
+/// recv (or -1). All other rows -1.
+#[derive(Debug, Clone)]
+pub struct MessageMatch {
+    pub send_of_recv: Vec<i64>,
+    pub recv_of_send: Vec<i64>,
+    /// Row indices of all send instants, in time order.
+    pub sends: Vec<u32>,
+    /// Row indices of all recv instants, in time order.
+    pub recvs: Vec<u32>,
+}
+
+/// Match sends to recvs. Sends and recvs are consumed in timestamp order
+/// per (src, dst, tag) channel, which is MPI's non-overtaking guarantee.
+pub fn match_messages(trace: &Trace) -> Result<MessageMatch> {
+    let n = trace.len();
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let pa = trace.events.i64s(COL_PARTNER)?;
+    let tg = trace.events.i64s(COL_TAG)?;
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let send = ndict.code_of(SEND_EVENT);
+    let recv = ndict.code_of(RECV_EVENT);
+
+    let mut sends: Vec<u32> = (0..n as u32)
+        .filter(|&i| Some(nm[i as usize]) == send && pa[i as usize] != NULL_I64)
+        .collect();
+    let mut recvs: Vec<u32> = (0..n as u32)
+        .filter(|&i| Some(nm[i as usize]) == recv && pa[i as usize] != NULL_I64)
+        .collect();
+    sends.sort_by_key(|&i| ts[i as usize]);
+    recvs.sort_by_key(|&i| ts[i as usize]);
+
+    // FIFO queues per channel (src, dst, tag)
+    let mut queues: HashMap<(i64, i64, i64), std::collections::VecDeque<u32>> =
+        HashMap::new();
+    for &s in &sends {
+        let i = s as usize;
+        queues
+            .entry((pr[i], pa[i], tg[i]))
+            .or_default()
+            .push_back(s);
+    }
+    let mut send_of_recv = vec![-1i64; n];
+    let mut recv_of_send = vec![-1i64; n];
+    for &r in &recvs {
+        let i = r as usize;
+        // recv's Partner = source rank
+        if let Some(q) = queues.get_mut(&(pa[i], pr[i], tg[i])) {
+            if let Some(s) = q.pop_front() {
+                send_of_recv[i] = s as i64;
+                recv_of_send[s as usize] = r as i64;
+            }
+        }
+    }
+    Ok(MessageMatch { send_of_recv, recv_of_send, sends, recvs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fifo_matching_per_channel() {
+        let mut b = TraceBuilder::new();
+        // two sends 0->1 tag 0, in order; one send 0->1 tag 7
+        b.send(0, 0, 10, 1, 100, 0);
+        b.send(0, 0, 20, 1, 200, 0);
+        b.send(0, 0, 30, 1, 300, 7);
+        b.recv(1, 0, 40, 0, 100, 0);
+        b.recv(1, 0, 50, 0, 200, 0);
+        b.recv(1, 0, 60, 0, 300, 7);
+        let t = b.finish();
+        let m = match_messages(&t).unwrap();
+        let ts = t.timestamps().unwrap();
+        // recv at 40 matches send at 10, recv at 50 matches send at 20
+        for (&r, want_send_ts) in m.recvs.iter().zip([10i64, 20, 60].iter()) {
+            let s = m.send_of_recv[r as usize];
+            if ts[r as usize] == 60 {
+                assert_eq!(ts[s as usize], 30); // tag 7 channel
+            } else {
+                assert!(*want_send_ts == ts[s as usize] || ts[s as usize] == 20);
+            }
+        }
+        // bijectivity
+        for &s in &m.sends {
+            let r = m.recv_of_send[s as usize];
+            assert!(r >= 0);
+            assert_eq!(m.send_of_recv[r as usize], s as i64);
+        }
+    }
+
+    #[test]
+    fn unmatched_recv_stays_negative() {
+        let mut b = TraceBuilder::new();
+        b.recv(1, 0, 40, 0, 100, 0); // no send anywhere
+        let t = b.finish();
+        let m = match_messages(&t).unwrap();
+        assert_eq!(m.send_of_recv[0], -1);
+    }
+}

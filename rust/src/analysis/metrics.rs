@@ -1,0 +1,108 @@
+//! `calc_inc_metrics` / `calc_exc_metrics` (paper §IV.B).
+//!
+//! Inclusive time of a call = leave.ts − enter.ts; exclusive time =
+//! inclusive − Σ inclusive(children). Both are stored on Enter rows as
+//! `time.inc` / `time.exc` (f64 ns, NaN elsewhere), matching the paper's
+//! metric naming (`time.exc` appears in Fig. 7's output).
+
+use crate::df::{Column, NULL_I64};
+use crate::trace::*;
+use anyhow::Result;
+
+/// Ensure `time.inc` exists. Requires/causes caller-callee matching.
+pub fn calc_inc_metrics(trace: &mut Trace) -> Result<()> {
+    if trace.events.has("time.inc") {
+        return Ok(());
+    }
+    super::match_caller_callee::prepare(trace)?;
+    let n = trace.len();
+    let ts = trace.events.i64s(COL_TS)?;
+    let matching = trace.events.i64s("_matching_event")?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let enter = edict.code_of(ENTER);
+
+    let mut inc = vec![f64::NAN; n];
+    for i in 0..n {
+        if Some(et[i]) == enter && matching[i] != NULL_I64 {
+            inc[i] = (ts[matching[i] as usize] - ts[i]) as f64;
+        }
+    }
+    trace.events.push("time.inc", Column::F64(inc))?;
+    Ok(())
+}
+
+/// Ensure `time.exc` exists (computes `time.inc` first if needed).
+pub fn calc_exc_metrics(trace: &mut Trace) -> Result<()> {
+    if trace.events.has("time.exc") {
+        return Ok(());
+    }
+    calc_inc_metrics(trace)?;
+    let n = trace.len();
+    let parent = trace.events.i64s("_parent")?.to_vec();
+    let matching = trace.events.i64s("_matching_event")?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let enter = edict.code_of(ENTER);
+    let inc = trace.events.f64s("time.inc")?;
+
+    // exc[parent] = inc[parent] - sum(inc[children])
+    let mut exc: Vec<f64> = inc.to_vec();
+    for i in 0..n {
+        if Some(et[i]) == enter && matching[i] != NULL_I64 && parent[i] != NULL_I64 {
+            let p = parent[i] as usize;
+            if !inc[i].is_nan() && !exc[p].is_nan() {
+                exc[p] -= inc[i];
+            }
+        }
+    }
+    trace.events.push("time.exc", Column::F64(exc))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inc_and_exc() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main"); // inc 100
+        b.enter(0, 0, 10, "foo"); // inc 30
+        b.enter(0, 0, 15, "bar"); // inc 10
+        b.leave(0, 0, 25, "bar");
+        b.leave(0, 0, 40, "foo");
+        b.leave(0, 0, 100, "main");
+        let mut t = b.finish();
+        calc_exc_metrics(&mut t).unwrap();
+        let inc = t.events.f64s("time.inc").unwrap();
+        let exc = t.events.f64s("time.exc").unwrap();
+        assert_eq!(inc[0], 100.0);
+        assert_eq!(inc[1], 30.0);
+        assert_eq!(inc[2], 10.0);
+        assert_eq!(exc[0], 70.0); // 100 - 30
+        assert_eq!(exc[1], 20.0); // 30 - 10
+        assert_eq!(exc[2], 10.0); // leaf
+        // leave rows carry NaN
+        assert!(inc[3].is_nan() && exc[5].is_nan());
+    }
+
+    #[test]
+    fn exc_sums_to_inc_at_root() {
+        // property: sum of exclusive over all calls == inclusive of root
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        let mut t0 = 5;
+        for _ in 0..10 {
+            b.enter(0, 0, t0, "work");
+            b.enter(0, 0, t0 + 2, "inner");
+            b.leave(0, 0, t0 + 7, "inner");
+            b.leave(0, 0, t0 + 9, "work");
+            t0 += 10;
+        }
+        b.leave(0, 0, 200, "main");
+        let mut t = b.finish();
+        calc_exc_metrics(&mut t).unwrap();
+        let exc = t.events.f64s("time.exc").unwrap();
+        let total: f64 = exc.iter().filter(|v| !v.is_nan()).sum();
+        assert_eq!(total, 200.0);
+    }
+}

@@ -1,0 +1,52 @@
+//! The Pipit analysis API (paper §IV) — every operation, single-source
+//! across all trace formats.
+//!
+//! | paper operation          | here                                              |
+//! |--------------------------|---------------------------------------------------|
+//! | `_match_caller_callee`   | [`match_caller_callee::prepare`]                  |
+//! | `_create_cct`            | [`cct::create_cct`]                               |
+//! | `calc_inc_metrics`       | [`metrics::calc_inc_metrics`]                     |
+//! | `calc_exc_metrics`       | [`metrics::calc_exc_metrics`]                     |
+//! | `flat_profile`           | [`flat_profile::flat_profile`]                    |
+//! | `time_profile`           | [`time_profile::time_profile`]                    |
+//! | `comm_matrix`            | [`comm::comm_matrix`]                             |
+//! | `message_histogram`      | [`comm::message_histogram`]                       |
+//! | `comm_by_process`        | [`comm::comm_by_process`]                         |
+//! | `comm_over_time`         | [`comm::comm_over_time`]                          |
+//! | `comm_comp_breakdown`    | [`overlap::comm_comp_breakdown`]                  |
+//! | `load_imbalance`         | [`load_imbalance::load_imbalance`]                |
+//! | `idle_time`              | [`idle_time::idle_time`]                          |
+//! | `pattern_detection`      | [`pattern::detect_pattern`]                       |
+//! | `calculate_lateness`     | [`lateness::calculate_lateness`]                  |
+//! | `critical_path_analysis` | [`critical_path::critical_path_analysis`]         |
+//! | `multi_run_analysis`     | [`multirun::multi_run_analysis`]                  |
+//! | `filter`                 | [`crate::trace::Trace::filter`] + [`crate::df::Expr`] |
+
+pub mod cct;
+pub mod comm;
+pub mod critical_path;
+pub mod flat_profile;
+pub mod idle_time;
+pub mod inefficiency;
+pub mod lateness;
+pub mod load_imbalance;
+pub mod match_caller_callee;
+pub mod messages;
+pub mod metrics;
+pub mod multirun;
+pub mod overlap;
+pub mod pattern;
+pub mod time_profile;
+
+pub use cct::{create_cct, Cct};
+pub use comm::{comm_by_process, comm_matrix, comm_over_time, message_histogram, CommMatrix, CommUnit};
+pub use critical_path::{critical_path_analysis, CriticalPath};
+pub use flat_profile::{flat_profile, flat_profile_by_process, Metric, ProfileRow};
+pub use idle_time::{idle_outliers, idle_time, IdleRow};
+pub use inefficiency::{analyze_inefficiencies, Finding, Report, ReportConfig};
+pub use lateness::{calculate_lateness, lateness_by_process, LogicalOp};
+pub use load_imbalance::{load_imbalance, ImbalanceRow};
+pub use multirun::{multi_run_analysis, MultiRun};
+pub use overlap::{comm_comp_breakdown, Breakdown};
+pub use pattern::{detect_pattern, matrix_profile, PatternConfig, PatternRange};
+pub use time_profile::{time_profile, TimeProfile};

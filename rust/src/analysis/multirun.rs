@@ -1,0 +1,140 @@
+//! `multi_run_analysis` (paper §IV.D, Fig. 12): compare flat profiles
+//! across traces from multiple executions (scaling studies, variants).
+
+use super::flat_profile::{flat_profile, Metric};
+use crate::trace::*;
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Cross-run comparison table: `values[run][func]`.
+#[derive(Debug, Clone)]
+pub struct MultiRun {
+    /// One label per run (process count, or the trace's app/source name).
+    pub run_labels: Vec<String>,
+    pub func_names: Vec<String>,
+    pub values: Vec<Vec<f64>>,
+    pub metric: Metric,
+}
+
+impl MultiRun {
+    /// Render as an aligned text table (the Fig. 12 dataframe).
+    pub fn show(&self) -> String {
+        let mut out = String::new();
+        let w = 16usize;
+        out.push_str(&format!("{:>12}  ", "run"));
+        for f in &self.func_names {
+            let name = if f.len() > w { &f[..w] } else { f };
+            out.push_str(&format!("{name:>w$}  "));
+        }
+        out.push('\n');
+        for (l, row) in self.run_labels.iter().zip(&self.values) {
+            out.push_str(&format!("{l:>12}  "));
+            for v in row {
+                out.push_str(&format!("{v:>w$.3e}  "));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    /// values[run][func] / #processes of that run — per-process view.
+    pub fn per_process(&self, procs: &[usize]) -> Vec<Vec<f64>> {
+        self.values
+            .iter()
+            .zip(procs)
+            .map(|(row, &p)| row.iter().map(|v| v / p.max(1) as f64).collect())
+            .collect()
+    }
+}
+
+/// Compute flat profiles for every trace and align them on the union of
+/// the `top_k` functions of each run (ranked by the chosen metric).
+/// Run labels default to the process count (the Fig. 12 x-axis).
+pub fn multi_run_analysis(
+    traces: &mut [Trace],
+    metric: Metric,
+    top_k: usize,
+) -> Result<MultiRun> {
+    let mut profiles = Vec::with_capacity(traces.len());
+    let mut labels = Vec::with_capacity(traces.len());
+    for t in traces.iter_mut() {
+        profiles.push(flat_profile(t, metric)?);
+        labels.push(t.num_processes()?.to_string());
+    }
+    // union of each run's top-k functions, ranked by total across runs
+    let mut totals: HashMap<&str, f64> = HashMap::new();
+    for p in &profiles {
+        for row in p.iter().take(top_k) {
+            *totals.entry(row.name.as_str()).or_insert(0.0) += row.value;
+        }
+    }
+    let mut funcs: Vec<(String, f64)> =
+        totals.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
+    funcs.sort_by(|a, b| b.1.total_cmp(&a.1));
+    let func_names: Vec<String> = funcs.into_iter().map(|(n, _)| n).collect();
+
+    let values = profiles
+        .iter()
+        .map(|p| {
+            let by_name: HashMap<&str, f64> =
+                p.iter().map(|r| (r.name.as_str(), r.value)).collect();
+            func_names
+                .iter()
+                .map(|f| by_name.get(f.as_str()).copied().unwrap_or(0.0))
+                .collect()
+        })
+        .collect();
+    Ok(MultiRun { run_labels: labels, func_names, values, metric })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run(nprocs: i64, work_ns: i64) -> Trace {
+        let mut b = TraceBuilder::new();
+        for p in 0..nprocs {
+            b.enter(p, 0, 0, "main");
+            b.enter(p, 0, 10, "computeRhs");
+            b.leave(p, 0, 10 + work_ns, "computeRhs");
+            b.enter(p, 0, 20 + work_ns, "gradC2C");
+            b.leave(p, 0, 20 + work_ns * 2, "gradC2C");
+            b.leave(p, 0, 40 + work_ns * 2, "main");
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn aligns_runs_on_common_functions() {
+        let mut traces = vec![run(2, 100), run(4, 120), run(8, 150)];
+        let mr = multi_run_analysis(&mut traces, Metric::ExcTime, 5).unwrap();
+        assert_eq!(mr.run_labels, vec!["2", "4", "8"]);
+        assert!(mr.func_names.contains(&"computeRhs".to_string()));
+        let idx = mr.func_names.iter().position(|f| f == "computeRhs").unwrap();
+        assert_eq!(mr.values[0][idx], 200.0); // 2 procs x 100
+        assert_eq!(mr.values[2][idx], 1200.0); // 8 procs x 150
+    }
+
+    #[test]
+    fn missing_function_reports_zero() {
+        let mut a = run(2, 100);
+        let mut bldr = TraceBuilder::new();
+        bldr.enter(0, 0, 0, "onlyhere");
+        bldr.leave(0, 0, 50, "onlyhere");
+        let mut b = bldr.finish();
+        let mut traces = vec![std::mem::take(&mut a), std::mem::take(&mut b)];
+        let mr = multi_run_analysis(&mut traces, Metric::ExcTime, 5).unwrap();
+        let idx = mr.func_names.iter().position(|f| f == "onlyhere").unwrap();
+        assert_eq!(mr.values[0][idx], 0.0);
+        assert_eq!(mr.values[1][idx], 50.0);
+    }
+
+    #[test]
+    fn show_renders_table() {
+        let mut traces = vec![run(2, 100), run(4, 100)];
+        let mr = multi_run_analysis(&mut traces, Metric::ExcTime, 3).unwrap();
+        let s = mr.show();
+        assert!(s.contains("computeRhs"));
+        assert!(s.contains('2') && s.contains('4'));
+    }
+}

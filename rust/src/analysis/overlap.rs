@@ -1,0 +1,206 @@
+//! `comm_comp_breakdown` (paper §IV.C, Fig. 13): how much communication
+//! overlaps with useful computation.
+//!
+//! Per process, exclusive-time segments are split into *communication*
+//! (names in the comm set — MPI/NCCL by default) and *computation*
+//! (everything else, minus an optional "other" set such as `Idle`). The
+//! two interval sets may overlap across threads/streams (async comm,
+//! GPU comm kernels on a separate stream), so the breakdown is computed
+//! by interval intersection:
+//!
+//! * overlapped computation  = |comp ∩ comm|
+//! * non-overlapped comp     = |comp| − |comp ∩ comm|
+//! * non-overlapped comm     = |comm| − |comp ∩ comm|
+//! * other                   = wall span − |comp ∪ comm|
+
+use super::time_profile::exclusive_segments;
+use crate::trace::*;
+use anyhow::Result;
+use std::collections::HashSet;
+
+/// Breakdown for one process (all values in ns).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Breakdown {
+    pub proc: i64,
+    pub comp: f64,
+    pub comp_overlapped: f64,
+    pub comm: f64,
+    pub other: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.comp + self.comp_overlapped + self.comm + self.other
+    }
+}
+
+/// Merge intervals in place; input need not be sorted. Returns merged,
+/// sorted, disjoint intervals.
+pub fn union(mut iv: Vec<(i64, i64)>) -> Vec<(i64, i64)> {
+    iv.retain(|&(a, b)| b > a);
+    iv.sort_unstable();
+    let mut out: Vec<(i64, i64)> = Vec::with_capacity(iv.len());
+    for (a, b) in iv {
+        match out.last_mut() {
+            Some((_, e)) if a <= *e => *e = (*e).max(b),
+            _ => out.push((a, b)),
+        }
+    }
+    out
+}
+
+/// Total length of the intersection of two disjoint sorted interval sets.
+pub fn intersection_len(a: &[(i64, i64)], b: &[(i64, i64)]) -> i64 {
+    let (mut i, mut j, mut total) = (0usize, 0usize, 0i64);
+    while i < a.len() && j < b.len() {
+        let lo = a[i].0.max(b[j].0);
+        let hi = a[i].1.min(b[j].1);
+        if hi > lo {
+            total += hi - lo;
+        }
+        if a[i].1 < b[j].1 {
+            i += 1;
+        } else {
+            j += 1;
+        }
+    }
+    total
+}
+
+fn interval_total(iv: &[(i64, i64)]) -> i64 {
+    iv.iter().map(|&(a, b)| b - a).sum()
+}
+
+/// Compute the per-process communication/computation breakdown.
+/// `comm_functions` defaults to [`DEFAULT_COMM_FUNCTIONS`];
+/// `other_functions` (counted in neither class) defaults to `["Idle"]`.
+pub fn comm_comp_breakdown(
+    trace: &mut Trace,
+    comm_functions: Option<&[&str]>,
+    other_functions: Option<&[&str]>,
+) -> Result<Vec<Breakdown>> {
+    let segs = exclusive_segments(trace)?;
+    let (_, ndict) = trace.events.strs(COL_NAME)?;
+    let comm_names: HashSet<&str> = comm_functions
+        .unwrap_or(DEFAULT_COMM_FUNCTIONS)
+        .iter()
+        .copied()
+        .collect();
+    let other_names: HashSet<&str> =
+        other_functions.unwrap_or(&["Idle"]).iter().copied().collect();
+
+    let procs = trace.process_ids()?;
+    let (t0, t1) = trace.time_range()?;
+    let mut out = Vec::with_capacity(procs.len());
+    for &p in &procs {
+        let mut comm_iv = Vec::new();
+        let mut comp_iv = Vec::new();
+        for s in segs.iter().filter(|s| s.proc == p) {
+            let name = ndict.resolve(s.name_code).unwrap_or("");
+            if comm_names.contains(name)
+                || name == SEND_EVENT
+                || name == RECV_EVENT
+            {
+                comm_iv.push((s.start, s.end));
+            } else if !other_names.contains(name) {
+                comp_iv.push((s.start, s.end));
+            }
+        }
+        let comm_iv = union(comm_iv);
+        let comp_iv = union(comp_iv);
+        let comm_len = interval_total(&comm_iv) as f64;
+        let comp_len = interval_total(&comp_iv) as f64;
+        let inter = intersection_len(&comm_iv, &comp_iv) as f64;
+        let both = union(comm_iv.into_iter().chain(comp_iv).collect());
+        let covered = interval_total(&both) as f64;
+        out.push(Breakdown {
+            proc: p,
+            comp: comp_len - inter,
+            comp_overlapped: inter,
+            comm: comm_len - inter,
+            other: ((t1 - t0) as f64 - covered).max(0.0),
+        });
+    }
+    Ok(out)
+}
+
+/// Aggregate breakdowns over processes (mean per process) — the
+/// per-iteration bars of Fig. 13.
+pub fn mean_breakdown(per_proc: &[Breakdown]) -> Breakdown {
+    let n = per_proc.len().max(1) as f64;
+    Breakdown {
+        proc: -1,
+        comp: per_proc.iter().map(|b| b.comp).sum::<f64>() / n,
+        comp_overlapped: per_proc.iter().map(|b| b.comp_overlapped).sum::<f64>() / n,
+        comm: per_proc.iter().map(|b| b.comm).sum::<f64>() / n,
+        other: per_proc.iter().map(|b| b.other).sum::<f64>() / n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn interval_helpers() {
+        let u = union(vec![(5, 10), (0, 3), (2, 6), (20, 25)]);
+        assert_eq!(u, vec![(0, 10), (20, 25)]);
+        assert_eq!(intersection_len(&[(0, 10)], &[(5, 15)]), 5);
+        assert_eq!(intersection_len(&[(0, 2), (8, 12)], &[(1, 9)]), 2);
+        assert_eq!(intersection_len(&[(0, 5)], &[(5, 9)]), 0);
+    }
+
+    /// Thread 0 computes [0,100); thread 1 runs comm [40,70).
+    /// comp=70 non-overlapped + 30 overlapped, comm fully overlapped.
+    #[test]
+    fn overlap_across_threads() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "gemm");
+        b.leave(0, 0, 100, "gemm");
+        b.enter(0, 1, 40, "ncclAllReduce");
+        b.leave(0, 1, 70, "ncclAllReduce");
+        let mut t = b.finish();
+        let bd = comm_comp_breakdown(&mut t, None, None).unwrap();
+        assert_eq!(bd.len(), 1);
+        let b0 = bd[0];
+        assert_eq!(b0.comp_overlapped, 30.0);
+        assert_eq!(b0.comp, 70.0);
+        assert_eq!(b0.comm, 0.0);
+    }
+
+    /// Blocking MPI: comm never overlaps computation on a single thread.
+    #[test]
+    fn blocking_comm_no_overlap() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.enter(0, 0, 10, "compute");
+        b.leave(0, 0, 60, "compute");
+        b.enter(0, 0, 60, "MPI_Allreduce");
+        b.leave(0, 0, 90, "MPI_Allreduce");
+        b.leave(0, 0, 100, "main");
+        let mut t = b.finish();
+        let bd = comm_comp_breakdown(&mut t, None, None).unwrap();
+        let b0 = bd[0];
+        assert_eq!(b0.comp_overlapped, 0.0);
+        assert_eq!(b0.comm, 30.0);
+        // main's exclusive remnants count as computation
+        assert_eq!(b0.comp, 70.0);
+        assert_eq!(b0.other, 0.0);
+        assert_eq!(b0.total(), 100.0);
+    }
+
+    #[test]
+    fn custom_comm_set_and_idle_other() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "Idle");
+        b.leave(0, 0, 40, "Idle");
+        b.enter(0, 0, 40, "exchange");
+        b.leave(0, 0, 100, "exchange");
+        let mut t = b.finish();
+        let bd = comm_comp_breakdown(&mut t, Some(&["exchange"]), None).unwrap();
+        let b0 = bd[0];
+        assert_eq!(b0.comm, 60.0);
+        assert_eq!(b0.comp, 0.0);
+        assert_eq!(b0.other, 40.0); // Idle
+    }
+}

@@ -1,0 +1,266 @@
+//! `time_profile` (paper §IV.B, Fig. 2): exclusive time per function per
+//! time bin, summed across all processes/threads — "a flat profile over
+//! time".
+//!
+//! Two execution paths produce identical results:
+//! * [`time_profile`] — pure-Rust interval clipping (always available);
+//! * the PJRT path in [`crate::runtime::ops`] — the AOT Pallas kernel
+//!   (`time_hist.hlo.txt`), used by the coordinator when artifacts are
+//!   loaded; the kernel's one-hot-matmul formulation is validated against
+//!   this implementation in integration tests.
+//!
+//! Both consume the same [`exclusive_segments`] extraction, which converts
+//! matched Enter/Leave pairs into *exclusive* intervals (the gaps where a
+//! call is on top of the stack), so a function's own time never
+//! double-counts its children's.
+
+
+use crate::trace::*;
+use anyhow::{bail, Result};
+
+/// Result of a time profile: `values[bin][func]` = ns of exclusive time.
+#[derive(Debug, Clone)]
+pub struct TimeProfile {
+    pub bin_edges: Vec<i64>,
+    pub func_names: Vec<String>,
+    pub values: Vec<Vec<f64>>,
+}
+
+impl TimeProfile {
+    pub fn num_bins(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Total busy time accumulated over all bins and functions.
+    pub fn total(&self) -> f64 {
+        self.values.iter().flatten().sum()
+    }
+
+    /// Index of `name` in `func_names`.
+    pub fn func_index(&self, name: &str) -> Option<usize> {
+        self.func_names.iter().position(|n| n == name)
+    }
+
+    /// Per-bin total across functions (the "utilization" series used by
+    /// pattern detection).
+    pub fn bin_totals(&self) -> Vec<f64> {
+        self.values.iter().map(|row| row.iter().sum()).collect()
+    }
+}
+
+/// An exclusive-time segment of one function invocation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Segment {
+    pub start: i64,
+    pub end: i64,
+    /// Index into the name dictionary of the events table.
+    pub name_code: u32,
+    pub proc: i64,
+}
+
+/// Extract exclusive segments: for each matched call, the sub-intervals of
+/// [enter, leave) during which no child is executing.
+pub fn exclusive_segments(trace: &mut Trace) -> Result<Vec<Segment>> {
+    super::match_caller_callee::prepare(trace)?;
+    let n = trace.len();
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let th = trace.events.i64s(COL_THREAD)?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let (nm, _) = trace.events.strs(COL_NAME)?;
+    let enter = edict.code_of(ENTER);
+    let leave = edict.code_of(LEAVE);
+
+    // Walk each (proc, thread) stream: on Enter push; the segment of the
+    // parent that was running is cut at this point. On Leave, the finished
+    // call contributes its tail segment and the parent resumes.
+    let mut segs = Vec::with_capacity(n / 2);
+    // contiguous (proc, thread) runs: cache the current stream's stack
+    let mut stacks: Vec<Vec<(u32, i64)>> = Vec::new();
+    let mut stream_of: std::collections::HashMap<(i64, i64), usize> =
+        std::collections::HashMap::new();
+    let mut cur_key = (i64::MIN, i64::MIN);
+    let mut cur = usize::MAX;
+    for i in 0..n {
+        let code = Some(et[i]);
+        if (pr[i], th[i]) != cur_key {
+            cur_key = (pr[i], th[i]);
+            cur = *stream_of.entry(cur_key).or_insert_with(|| {
+                stacks.push(Vec::new());
+                stacks.len() - 1
+            });
+        }
+        let stack = &mut stacks[cur];
+        if code == enter {
+            // Unmatched enters (truncated/filtered traces) still push: their
+            // children pair up normally; only the unmatched call's own tail
+            // segment is lost, which is exactly the data the filter cut.
+            if let Some(&mut (pname, ref mut pstart)) = stack.last_mut() {
+                if ts[i] > *pstart {
+                    segs.push(Segment {
+                        start: *pstart,
+                        end: ts[i],
+                        name_code: pname,
+                        proc: pr[i],
+                    });
+                }
+                *pstart = ts[i]; // will be re-cut when child leaves
+            }
+            stack.push((nm[i], ts[i]));
+        } else if code == leave {
+            if let Some((cname, cstart)) = stack.pop() {
+                if ts[i] > cstart {
+                    segs.push(Segment {
+                        start: cstart,
+                        end: ts[i],
+                        name_code: cname,
+                        proc: pr[i],
+                    });
+                }
+                if let Some(&mut (_, ref mut pstart)) = stack.last_mut() {
+                    *pstart = ts[i]; // parent resumes here
+                }
+            }
+        }
+    }
+    Ok(segs)
+}
+
+/// Compute a time profile with `num_bins` equal bins over the trace span.
+/// If `top_funcs` is Some(k), only the k functions with the largest total
+/// exclusive time get their own series; the rest fold into `"other"`.
+pub fn time_profile(
+    trace: &mut Trace,
+    num_bins: usize,
+    top_funcs: Option<usize>,
+) -> Result<TimeProfile> {
+    if num_bins == 0 {
+        bail!("num_bins must be > 0");
+    }
+    let (t0, t1) = trace.time_range()?;
+    let segs = exclusive_segments(trace)?;
+    let (_, ndict) = trace.events.strs(COL_NAME)?;
+
+    // total exc per name code
+    let mut totals: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+    for s in &segs {
+        *totals.entry(s.name_code).or_insert(0.0) += (s.end - s.start) as f64;
+    }
+    let mut by_total: Vec<(u32, f64)> = totals.into_iter().collect();
+    by_total.sort_by(|a, b| b.1.total_cmp(&a.1));
+    let keep = top_funcs.unwrap_or(by_total.len()).min(by_total.len());
+    let mut func_of_code: std::collections::HashMap<u32, usize> =
+        std::collections::HashMap::new();
+    let mut func_names: Vec<String> = Vec::new();
+    for (code, _) in by_total.iter().take(keep) {
+        func_of_code.insert(*code, func_names.len());
+        func_names.push(ndict.resolve(*code).unwrap_or("").to_string());
+    }
+    let other_slot = if keep < by_total.len() {
+        func_names.push("other".to_string());
+        Some(func_names.len() - 1)
+    } else {
+        None
+    };
+
+    let span = (t1 - t0).max(1) as f64;
+    let width = span / num_bins as f64;
+    let mut values = vec![vec![0.0f64; func_names.len()]; num_bins];
+    for s in &segs {
+        let f = match func_of_code.get(&s.name_code) {
+            Some(&f) => f,
+            None => match other_slot {
+                Some(o) => o,
+                None => continue,
+            },
+        };
+        // clip the segment into every bin it overlaps
+        let lo_bin = (((s.start - t0) as f64) / width).floor() as usize;
+        let hi_bin = ((((s.end - t0) as f64) / width).ceil() as usize).min(num_bins);
+        for b in lo_bin..hi_bin {
+            let bin_lo = t0 as f64 + b as f64 * width;
+            let bin_hi = bin_lo + width;
+            let ov = (s.end as f64).min(bin_hi) - (s.start as f64).max(bin_lo);
+            if ov > 0.0 {
+                values[b][f] += ov;
+            }
+        }
+    }
+    let bin_edges = (0..=num_bins)
+        .map(|b| t0 + (b as f64 * width).round() as i64)
+        .collect();
+    Ok(TimeProfile { bin_edges, func_names, values })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Trace {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.enter(0, 0, 20, "work");
+        b.leave(0, 0, 80, "work");
+        b.leave(0, 0, 100, "main");
+        b.finish()
+    }
+
+    #[test]
+    fn segments_are_exclusive() {
+        let mut t = toy();
+        let segs = exclusive_segments(&mut t).unwrap();
+        let (_, d) = t.events.strs(COL_NAME).unwrap();
+        let total: i64 = segs.iter().map(|s| s.end - s.start).sum();
+        assert_eq!(total, 100); // no double counting
+        let main_time: i64 = segs
+            .iter()
+            .filter(|s| d.resolve(s.name_code) == Some("main"))
+            .map(|s| s.end - s.start)
+            .sum();
+        assert_eq!(main_time, 40); // 0-20 and 80-100
+    }
+
+    #[test]
+    fn bins_sum_to_busy_time() {
+        let mut t = toy();
+        let tp = time_profile(&mut t, 10, None).unwrap();
+        assert!((tp.total() - 100.0).abs() < 1e-9);
+        assert_eq!(tp.num_bins(), 10);
+        // bin 0 covers [0,10): all "main"
+        let main_idx = tp.func_index("main").unwrap();
+        assert_eq!(tp.values[0][main_idx], 10.0);
+        let work_idx = tp.func_index("work").unwrap();
+        // bin 2 covers [20,30): all "work"
+        assert_eq!(tp.values[2][work_idx], 10.0);
+    }
+
+    #[test]
+    fn top_funcs_folds_other() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.enter(0, 0, 10, "big");
+        b.leave(0, 0, 90, "big");
+        b.enter(0, 0, 92, "small");
+        b.leave(0, 0, 94, "small");
+        b.leave(0, 0, 100, "main");
+        let mut t = b.finish();
+        let tp = time_profile(&mut t, 4, Some(1)).unwrap();
+        assert_eq!(tp.func_names[0], "big");
+        assert!(tp.func_names.contains(&"other".to_string()));
+        assert!((tp.total() - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn multiprocess_sums_across_processes() {
+        let mut b = TraceBuilder::new();
+        for p in 0..4 {
+            b.enter(p, 0, 0, "main");
+            b.leave(p, 0, 100, "main");
+        }
+        let mut t = b.finish();
+        let tp = time_profile(&mut t, 5, None).unwrap();
+        // 4 processes x 100ns = 400ns busy, 80 per bin
+        assert!((tp.total() - 400.0).abs() < 1e-9);
+        assert!((tp.values[0][0] - 80.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,306 @@
+//! The `pipit` command-line interface.
+//!
+//! ```text
+//! pipit generate --app laghos --ranks 32 --iterations 10 --format otf2 --out trace_dir
+//! pipit analyze <op> --trace <path> [--metric exc] [--bins 128] [--out f.csv]
+//! pipit pipeline <spec.json> [--out-dir out]
+//! pipit info --trace <path>
+//! ```
+
+use super::pipeline::Pipeline;
+use super::session::AnalysisSession;
+use crate::analysis::Metric;
+use crate::gen::GenConfig;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Minimal flag parser: positional args + `--key value` pairs.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                let val = argv
+                    .get(i + 1)
+                    .filter(|v| !v.starts_with("--"))
+                    .cloned()
+                    .unwrap_or_else(|| "true".to_string());
+                let consumed = if argv.get(i + 1).map_or(false, |v| !v.starts_with("--")) {
+                    2
+                } else {
+                    1
+                };
+                out.flags.insert(key.to_string(), val);
+                i += consumed;
+            } else {
+                out.positional.push(a.clone());
+                i += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+
+    pub fn u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be an integer")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} must be a number")),
+        }
+    }
+
+    pub fn metric(&self) -> Result<Metric> {
+        match self.str("metric").unwrap_or("exc") {
+            "exc" => Ok(Metric::ExcTime),
+            "inc" => Ok(Metric::IncTime),
+            "count" => Ok(Metric::Count),
+            other => bail!("unknown metric '{other}' (exc|inc|count)"),
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+pipit — scripting the analysis of parallel execution traces
+
+USAGE:
+  pipit generate --app <model> [--ranks N] [--iterations N] [--seed S]
+                 [--variant V] [--format otf2|csv|chrome|projections] --out <path>
+  pipit analyze <op> --trace <path> [--metric exc|inc|count] [--bins N]
+                 [--top N] [--start-event NAME] [--out <file>]
+  pipit pipeline <spec.json> [--out-dir <dir>] [--artifacts <dir>]
+  pipit report --trace <path> [--min-waste F] [--imbalance-threshold F]
+  pipit info --trace <path>
+
+MODELS:  gol tortuga laghos kripke amg loimos axonn
+OPS:     flat_profile time_profile comm_matrix message_histogram
+         comm_by_process comm_over_time comm_comp_breakdown load_imbalance
+         idle_time pattern_detection critical_path lateness cct
+";
+
+/// Entry point used by `main.rs`. Returns the process exit code.
+pub fn run(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        println!("{USAGE}");
+        return Ok(());
+    };
+    let args = Args::parse(&argv[1..])?;
+    match cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "analyze" => cmd_analyze(&args),
+        "pipeline" => cmd_pipeline(&args),
+        "report" => cmd_report(&args),
+        "info" => cmd_info(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'\n{USAGE}"),
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let app = args.str("app").context("--app is required")?;
+    let cfg = GenConfig {
+        ranks: args.usize("ranks", 8)?,
+        iterations: args.usize("iterations", 10)?,
+        seed: args.u64("seed", 42)?,
+        noise: args.f64("noise", 0.05)?,
+    };
+    let variant = args.usize("variant", 1)?;
+    let out = args.str("out").context("--out is required")?;
+    let format = args.str("format").unwrap_or("otf2");
+    let t = crate::gen::generate(app, &cfg, variant)?;
+    let path = std::path::Path::new(out);
+    match format {
+        "otf2" => crate::readers::otf2::write(&t, path)?,
+        "csv" => crate::readers::csv::write(&t, path)?,
+        "chrome" => crate::readers::chrome::write(&t, path)?,
+        "projections" => crate::readers::projections::write(&t, path, app)?,
+        other => bail!("unknown format '{other}'"),
+    }
+    println!(
+        "generated {app}: {} events, {} processes -> {out} ({format})",
+        t.len(),
+        t.num_processes()?
+    );
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    let op = args
+        .positional
+        .first()
+        .context("analyze requires an operation name")?
+        .clone();
+    let path = args.str("trace").context("--trace is required")?;
+    let mut s = AnalysisSession::new();
+    if let Some(dir) = args.str("artifacts") {
+        s = s.with_artifacts(dir);
+    }
+    s.load("t", path)?;
+    // Reuse the pipeline executor: build a one-step spec.
+    let mut fields = vec![
+        format!("\"op\": \"{op}\""),
+        "\"trace\": \"t\"".to_string(),
+    ];
+    if let Some(m) = args.str("metric") {
+        fields.push(format!("\"metric\": \"{m}\""));
+    }
+    if let Some(b) = args.str("bins") {
+        fields.push(format!("\"bins\": {b}"));
+    }
+    if let Some(t) = args.str("top") {
+        fields.push(format!("\"top\": {t}"));
+    }
+    if let Some(e) = args.str("start-event") {
+        fields.push(format!("\"start_event\": \"{e}\""));
+    }
+    if let Some(o) = args.str("out") {
+        fields.push(format!("\"out\": \"{o}\""));
+    }
+    let spec = format!("{{\"steps\": [{{{}}}]}}", fields.join(", "));
+    let out_dir = args.str("out-dir").unwrap_or(".");
+    let pipe = Pipeline::parse(&spec, out_dir)?;
+    let results = pipe.run(&mut s)?;
+    for r in &results {
+        println!("{}: {}", r.op, r.summary);
+        if let Some(p) = &r.out {
+            println!("  -> {}", p.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let spec = args
+        .positional
+        .first()
+        .context("pipeline requires a spec file")?;
+    let out_dir = args.str("out-dir").unwrap_or("pipit_out");
+    let mut s = AnalysisSession::new();
+    if let Some(dir) = args.str("artifacts") {
+        s = s.with_artifacts(dir);
+        if s.uses_hlo() {
+            eprintln!("[pipit] PJRT runtime loaded from {dir}");
+        }
+    }
+    let pipe = Pipeline::from_file(spec, out_dir)?;
+    let results = pipe.run(&mut s)?;
+    for (i, r) in results.iter().enumerate() {
+        println!("[{i}] {}: {}", r.op, r.summary);
+        if let Some(p) = &r.out {
+            println!("      -> {}", p.display());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let path = args.str("trace").context("--trace is required")?;
+    let mut t = crate::readers::read_auto(std::path::Path::new(path))?;
+    let cfg = crate::analysis::ReportConfig {
+        min_waste_fraction: args.f64("min-waste", 0.005)?,
+        imbalance_threshold: args.f64("imbalance-threshold", 1.5)?,
+    };
+    let rep = crate::analysis::analyze_inefficiencies(&mut t, &cfg)?;
+    println!("{}", rep.render());
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let path = args.str("trace").context("--trace is required")?;
+    let t = crate::readers::read_auto(std::path::Path::new(path))?;
+    let (lo, hi) = t.time_range()?;
+    println!("trace:     {path}");
+    println!("format:    {}", t.meta.format);
+    println!("app:       {}", t.meta.app);
+    println!("events:    {}", t.len());
+    println!("processes: {}", t.num_processes()?);
+    println!("span:      {} .. {} ({})", lo, hi, crate::util::fmt_ns((hi - lo) as f64));
+    println!("columns:   {}", t.events.names().join(", "));
+    println!("memory:    {}", crate::util::fmt_bytes(t.events.heap_bytes() as u64));
+    println!("\nfirst events:\n{}", t.events.show(10));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn args_parse_flags_and_positionals() {
+        let a = Args::parse(&argv("flat_profile --trace /tmp/x --bins 64 --flag")).unwrap();
+        assert_eq!(a.positional, vec!["flat_profile"]);
+        assert_eq!(a.str("trace"), Some("/tmp/x"));
+        assert_eq!(a.usize("bins", 0).unwrap(), 64);
+        assert_eq!(a.str("flag"), Some("true"));
+        assert_eq!(a.usize("missing", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn generate_and_info_roundtrip() {
+        let dir = std::env::temp_dir().join("pipit_cli_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("g_otf2");
+        run(&argv(&format!(
+            "generate --app gol --ranks 4 --iterations 3 --out {}",
+            out.display()
+        )))
+        .unwrap();
+        run(&argv(&format!("info --trace {}", out.display()))).unwrap();
+    }
+
+    #[test]
+    fn analyze_command() {
+        let dir = std::env::temp_dir().join("pipit_cli_test2");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("l_otf2");
+        run(&argv(&format!(
+            "generate --app laghos --ranks 16 --iterations 4 --out {}",
+            out.display()
+        )))
+        .unwrap();
+        run(&argv(&format!(
+            "analyze comm_matrix --trace {} --out-dir {} --out cm.csv",
+            out.display(),
+            dir.display()
+        )))
+        .unwrap();
+        assert!(dir.join("cm.csv").exists());
+    }
+
+    #[test]
+    fn unknown_command_fails() {
+        assert!(run(&argv("frobnicate")).is_err());
+    }
+}

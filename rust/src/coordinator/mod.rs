@@ -1,0 +1,21 @@
+//! The coordinator: the scripting surface of Pipit-RS.
+//!
+//! The paper's thesis is that trace analysis should be *scriptable*:
+//! repeatable, automatable, and composable across traces. In the
+//! three-layer architecture this is the L3 contribution:
+//!
+//! * [`session::AnalysisSession`] — holds loaded traces + the PJRT
+//!   [`crate::runtime::Runtime`], dispatches every analysis operation, and
+//!   transparently prefers the AOT kernel path when artifacts are loaded.
+//! * [`pipeline`] — JSON pipeline specs: a saved analysis workflow that
+//!   can be re-run on any trace ("repeating the same analysis twice on the
+//!   same or different datasets is a manual process" in GUI tools — here
+//!   it is one file).
+//! * [`cli`] — the `pipit` binary: generate / analyze / pipeline / info.
+
+pub mod cli;
+pub mod pipeline;
+pub mod session;
+
+pub use pipeline::{Pipeline, StepResult};
+pub use session::AnalysisSession;

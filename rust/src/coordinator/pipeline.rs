@@ -1,0 +1,424 @@
+//! JSON pipeline specs: saved, replayable analysis workflows.
+//!
+//! A pipeline is a JSON array of steps executed against one
+//! [`AnalysisSession`]. This is the paper's automation story made
+//! concrete: the exact analysis run for a figure lives in a spec file and
+//! reruns identically on any trace.
+//!
+//! ```json
+//! { "steps": [
+//!   {"op": "generate", "trace": "t", "app": "laghos", "ranks": 32, "iterations": 10},
+//!   {"op": "comm_matrix", "trace": "t", "unit": "bytes", "out": "matrix.csv"},
+//!   {"op": "filter", "trace": "t", "into": "t0", "process": 0},
+//!   {"op": "flat_profile", "trace": "t0", "metric": "exc", "out": "profile.csv"}
+//! ]}
+//! ```
+
+use super::session::AnalysisSession;
+use crate::analysis::{CommUnit, Metric, PatternConfig};
+use crate::df::Expr;
+use crate::gen::GenConfig;
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// One executed step's textual result.
+#[derive(Debug, Clone)]
+pub struct StepResult {
+    pub op: String,
+    pub summary: String,
+    /// Path written, if the step had an `out`.
+    pub out: Option<PathBuf>,
+}
+
+/// A parsed pipeline.
+pub struct Pipeline {
+    steps: Vec<Json>,
+    /// Output directory for `out` files.
+    pub out_dir: PathBuf,
+}
+
+impl Pipeline {
+    pub fn parse(src: &str, out_dir: impl AsRef<Path>) -> Result<Pipeline> {
+        let root = Json::parse(src).context("parsing pipeline json")?;
+        let steps = root
+            .get("steps")
+            .and_then(|s| s.as_arr())
+            .context("pipeline requires a 'steps' array")?
+            .to_vec();
+        Ok(Pipeline { steps, out_dir: out_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn from_file(path: impl AsRef<Path>, out_dir: impl AsRef<Path>) -> Result<Pipeline> {
+        let src = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&src, out_dir)
+    }
+
+    /// Execute every step in order. Fails fast on the first error.
+    pub fn run(&self, session: &mut AnalysisSession) -> Result<Vec<StepResult>> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let mut results = Vec::with_capacity(self.steps.len());
+        for (i, step) in self.steps.iter().enumerate() {
+            let r = self
+                .run_step(session, step)
+                .with_context(|| format!("pipeline step {i}: {}", step.dumps()))?;
+            results.push(r);
+        }
+        Ok(results)
+    }
+
+    fn run_step(&self, s: &mut AnalysisSession, step: &Json) -> Result<StepResult> {
+        let op = step.get_str("op").context("step missing 'op'")?;
+        let trace = || -> Result<&str> { step.get_str("trace").context("step missing 'trace'") };
+        let out_path = step.get_str("out").map(|o| self.out_dir.join(o));
+        let emit = |summary: String, body: Option<String>| -> Result<StepResult> {
+            if let (Some(p), Some(b)) = (&out_path, &body) {
+                std::fs::write(p, b).with_context(|| format!("writing {}", p.display()))?;
+            }
+            Ok(StepResult { op: op.to_string(), summary, out: out_path.clone() })
+        };
+
+        match op {
+            "load" => {
+                let path = step.get_str("path").context("'load' needs 'path'")?;
+                s.load(trace()?, path)?;
+                emit(format!("loaded {} <- {path}", trace()?), None)
+            }
+            "generate" => {
+                let app = step.get_str("app").context("'generate' needs 'app'")?;
+                let cfg = GenConfig {
+                    ranks: step.get_f64("ranks").unwrap_or(8.0) as usize,
+                    iterations: step.get_f64("iterations").unwrap_or(10.0) as usize,
+                    seed: step.get_f64("seed").unwrap_or(42.0) as u64,
+                    noise: step.get_f64("noise").unwrap_or(0.05),
+                };
+                let variant = step.get_f64("variant").unwrap_or(1.0) as usize;
+                s.generate(trace()?, app, &cfg, variant)?;
+                let n = s.get(trace()?)?.len();
+                emit(format!("generated {app} ({n} events)"), None)
+            }
+            "write" => {
+                let path = step.get_str("path").context("'write' needs 'path'")?;
+                let format = step.get_str("format").unwrap_or("otf2");
+                let t = s.get(trace()?)?;
+                let p = self.out_dir.join(path);
+                match format {
+                    "otf2" => crate::readers::otf2::write(t, &p)?,
+                    "csv" => crate::readers::csv::write(t, &p)?,
+                    "chrome" => crate::readers::chrome::write(t, &p)?,
+                    "projections" => {
+                        let app = if t.meta.app.is_empty() { "app" } else { &t.meta.app };
+                        crate::readers::projections::write(t, &p, app)?
+                    }
+                    other => bail!("unknown write format '{other}'"),
+                }
+                emit(format!("wrote {} as {format}", p.display()), None)
+            }
+            "filter" => {
+                let into = step.get_str("into").context("'filter' needs 'into'")?;
+                let expr = parse_filter(step)?;
+                s.filter(trace()?, into, &expr)?;
+                emit(
+                    format!("{} -> {} ({} events)", trace()?, into, s.get(into)?.len()),
+                    None,
+                )
+            }
+            "flat_profile" => {
+                let metric = parse_metric(step)?;
+                let rows = s.flat_profile(trace()?, metric)?;
+                let mut body = String::from("name,value_ns\n");
+                for r in &rows {
+                    let _ = writeln!(body, "{},{}", r.name, r.value);
+                }
+                emit(format!("{} functions", rows.len()), Some(body))
+            }
+            "time_profile" => {
+                let bins = step.get_f64("bins").unwrap_or(128.0) as usize;
+                let top = step.get_f64("top").map(|t| t as usize);
+                let tp = s.time_profile(trace()?, bins, top)?;
+                let mut body = String::from("bin_start_ns");
+                for f in &tp.func_names {
+                    let _ = write!(body, ",{f}");
+                }
+                body.push('\n');
+                for (b, row) in tp.values.iter().enumerate() {
+                    let _ = write!(body, "{}", tp.bin_edges[b]);
+                    for v in row {
+                        let _ = write!(body, ",{v}");
+                    }
+                    body.push('\n');
+                }
+                emit(
+                    format!("{} bins x {} funcs, total {}", tp.num_bins(), tp.func_names.len(),
+                        crate::util::fmt_ns(tp.total())),
+                    Some(body),
+                )
+            }
+            "comm_matrix" => {
+                let unit = parse_unit(step);
+                let m = s.comm_matrix(trace()?, unit)?;
+                let mut body = String::new();
+                for row in &m.data {
+                    let cells: Vec<String> = row.iter().map(|v| v.to_string()).collect();
+                    let _ = writeln!(body, "{}", cells.join(","));
+                }
+                emit(format!("{0}x{0} matrix, total {1}", m.n(), m.total()), Some(body))
+            }
+            "message_histogram" => {
+                let bins = step.get_f64("bins").unwrap_or(10.0) as usize;
+                let (counts, edges) = s.message_histogram(trace()?, bins)?;
+                let mut body = String::from("bin_lo,bin_hi,count\n");
+                for (i, c) in counts.iter().enumerate() {
+                    let _ = writeln!(body, "{},{},{c}", edges[i], edges[i + 1]);
+                }
+                emit(format!("{} messages", counts.iter().sum::<u64>()), Some(body))
+            }
+            "comm_by_process" => {
+                let unit = parse_unit(step);
+                let rows = s.comm_by_process(trace()?, unit)?;
+                let mut body = String::from("process,sent,received\n");
+                for (p, snd, rcv) in &rows {
+                    let _ = writeln!(body, "{p},{snd},{rcv}");
+                }
+                emit(format!("{} processes", rows.len()), Some(body))
+            }
+            "comm_over_time" => {
+                let bins = step.get_f64("bins").unwrap_or(64.0) as usize;
+                let (counts, volume, edges) = s.comm_over_time(trace()?, bins)?;
+                let mut body = String::from("bin_start_ns,count,bytes\n");
+                for i in 0..counts.len() {
+                    let _ = writeln!(body, "{},{},{}", edges[i], counts[i], volume[i]);
+                }
+                emit(format!("{} sends", counts.iter().sum::<u64>()), Some(body))
+            }
+            "comm_comp_breakdown" => {
+                let rows = s.comm_comp_breakdown(trace()?)?;
+                let mut body =
+                    String::from("process,comp_ns,comp_overlapped_ns,comm_ns,other_ns\n");
+                for b in &rows {
+                    let _ = writeln!(
+                        body,
+                        "{},{},{},{},{}",
+                        b.proc, b.comp, b.comp_overlapped, b.comm, b.other
+                    );
+                }
+                emit(format!("{} processes", rows.len()), Some(body))
+            }
+            "load_imbalance" => {
+                let metric = parse_metric(step)?;
+                let k = step.get_f64("num_processes").unwrap_or(5.0) as usize;
+                let rows = s.load_imbalance(trace()?, metric, k)?;
+                let mut body = String::from("name,imbalance,top_processes,mean\n");
+                for r in rows.iter() {
+                    let procs: Vec<String> =
+                        r.top_processes.iter().map(|p| p.to_string()).collect();
+                    let _ = writeln!(
+                        body,
+                        "\"{}\",{},\"[{}]\",{}",
+                        r.name,
+                        r.imbalance,
+                        procs.join(" "),
+                        r.mean
+                    );
+                }
+                emit(format!("{} functions", rows.len()), Some(body))
+            }
+            "idle_time" => {
+                let rows = s.idle_time(trace()?)?;
+                let mut body = String::from("process,idle_ns,fraction\n");
+                for r in &rows {
+                    let _ = writeln!(body, "{},{},{}", r.proc, r.idle_ns, r.fraction);
+                }
+                emit(format!("{} processes", rows.len()), Some(body))
+            }
+            "pattern_detection" => {
+                let start = step.get_str("start_event");
+                let cfg = PatternConfig {
+                    bins: step.get_f64("bins").unwrap_or(512.0) as usize,
+                    window: step.get_f64("window").map(|w| w as usize),
+                };
+                let pats = s.detect_pattern(trace()?, start, &cfg)?;
+                let mut body = String::from("start_ns,end_ns\n");
+                for p in &pats {
+                    let _ = writeln!(body, "{},{}", p.start, p.end);
+                }
+                emit(format!("{} occurrences", pats.len()), Some(body))
+            }
+            "critical_path" => {
+                let paths = s.critical_path(trace()?)?;
+                let table = paths[0].to_table(s.get(trace()?)?)?;
+                emit(
+                    format!("{} events on path", paths[0].rows.len()),
+                    Some(table.show(usize::MAX)),
+                )
+            }
+            "lateness" => {
+                let ops = s.lateness(trace()?)?;
+                let by_proc = crate::analysis::lateness_by_process(&ops);
+                let mut body = String::from("process,max_lateness_ns,mean_lateness_ns\n");
+                for p in &by_proc {
+                    let _ = writeln!(body, "{},{},{}", p.proc, p.max_lateness, p.mean_lateness);
+                }
+                emit(format!("{} ops", ops.len()), Some(body))
+            }
+            "multi_run" => {
+                let names: Vec<&str> = step
+                    .get("traces")
+                    .and_then(|t| t.as_arr())
+                    .context("'multi_run' needs 'traces' array")?
+                    .iter()
+                    .filter_map(|j| j.as_str())
+                    .collect();
+                let metric = parse_metric(step)?;
+                let top = step.get_f64("top").unwrap_or(8.0) as usize;
+                let mr = s.multi_run(&names, metric, top)?;
+                emit(format!("{} runs x {} funcs", mr.run_labels.len(), mr.func_names.len()),
+                    Some(mr.show()))
+            }
+            "report" => {
+                let cfg = crate::analysis::ReportConfig {
+                    min_waste_fraction: step.get_f64("min_waste").unwrap_or(0.005),
+                    imbalance_threshold: step.get_f64("imbalance_threshold").unwrap_or(1.5),
+                };
+                let tname = trace()?;
+                let rep = {
+                    let t = s.get_mut(tname)?;
+                    crate::analysis::analyze_inefficiencies(t, &cfg)?
+                };
+                emit(format!("{} findings", rep.findings.len()), Some(rep.render()))
+            }
+            "cct" => {
+                let cct = s.create_cct(trace()?)?;
+                emit(
+                    format!("{} nodes, {} roots", cct.nodes.len(), cct.roots.len()),
+                    Some(cct.render(200)),
+                )
+            }
+            other => bail!("unknown pipeline op '{other}'"),
+        }
+    }
+}
+
+fn parse_metric(step: &Json) -> Result<Metric> {
+    match step.get_str("metric").unwrap_or("exc") {
+        "exc" | "time.exc" => Ok(Metric::ExcTime),
+        "inc" | "time.inc" => Ok(Metric::IncTime),
+        "count" => Ok(Metric::Count),
+        other => Err(anyhow!("unknown metric '{other}'")),
+    }
+}
+
+fn parse_unit(step: &Json) -> CommUnit {
+    match step.get_str("unit").unwrap_or("bytes") {
+        "count" => CommUnit::Count,
+        _ => CommUnit::Bytes,
+    }
+}
+
+/// Filter sub-spec: any of `process`, `processes`, `name`, `names`,
+/// `t_start`/`t_end` — combined with AND.
+fn parse_filter(step: &Json) -> Result<Expr> {
+    let mut expr = Expr::All;
+    let mut any = false;
+    if let Some(p) = step.get_f64("process") {
+        expr = expr.and(Expr::process_eq(p as i64));
+        any = true;
+    }
+    if let Some(ps) = step.get("processes").and_then(|v| v.as_arr()) {
+        let ids: Vec<i64> = ps.iter().filter_map(|j| j.as_i64()).collect();
+        expr = expr.and(Expr::process_in(&ids));
+        any = true;
+    }
+    if let Some(n) = step.get_str("name") {
+        expr = expr.and(Expr::name_eq(n));
+        any = true;
+    }
+    if let Some(ns) = step.get("names").and_then(|v| v.as_arr()) {
+        let names: Vec<&str> = ns.iter().filter_map(|j| j.as_str()).collect();
+        expr = expr.and(Expr::name_in(&names));
+        any = true;
+    }
+    if let (Some(a), Some(b)) = (step.get_f64("t_start"), step.get_f64("t_end")) {
+        expr = expr.and(Expr::time_between(a as i64, b as i64));
+        any = true;
+    }
+    if !any {
+        bail!("'filter' step needs at least one predicate");
+    }
+    Ok(expr)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pipit_pipeline_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn end_to_end_pipeline() {
+        let spec = r#"{ "steps": [
+            {"op": "generate", "trace": "t", "app": "laghos", "ranks": 16, "iterations": 5},
+            {"op": "comm_matrix", "trace": "t", "unit": "bytes", "out": "matrix.csv"},
+            {"op": "message_histogram", "trace": "t", "bins": 10, "out": "hist.csv"},
+            {"op": "filter", "trace": "t", "into": "t0", "process": 0},
+            {"op": "flat_profile", "trace": "t0", "metric": "exc", "out": "fp.csv"}
+        ]}"#;
+        let dir = tmp("e2e");
+        let p = Pipeline::parse(spec, &dir).unwrap();
+        let mut s = AnalysisSession::new();
+        let results = p.run(&mut s).unwrap();
+        assert_eq!(results.len(), 5);
+        assert!(dir.join("matrix.csv").exists());
+        assert!(dir.join("hist.csv").exists());
+        let fp = std::fs::read_to_string(dir.join("fp.csv")).unwrap();
+        assert!(fp.contains("ForceMult"), "{fp}");
+    }
+
+    #[test]
+    fn rejects_unknown_op() {
+        let spec = r#"{"steps": [{"op": "explode"}]}"#;
+        let p = Pipeline::parse(spec, tmp("bad")).unwrap();
+        let mut s = AnalysisSession::new();
+        assert!(p.run(&mut s).is_err());
+    }
+
+    #[test]
+    fn rejects_missing_steps() {
+        assert!(Pipeline::parse(r#"{"nope": 1}"#, tmp("ms")).is_err());
+    }
+
+    #[test]
+    fn write_and_reload_roundtrip() {
+        let spec = r#"{ "steps": [
+            {"op": "generate", "trace": "t", "app": "amg", "ranks": 4, "iterations": 2},
+            {"op": "write", "trace": "t", "path": "amg_otf2", "format": "otf2"}
+        ]}"#;
+        let dir = tmp("wr");
+        let p = Pipeline::parse(spec, &dir).unwrap();
+        let mut s = AnalysisSession::new();
+        p.run(&mut s).unwrap();
+        let reloaded = crate::trace::Trace::from_otf2(dir.join("amg_otf2")).unwrap();
+        assert_eq!(reloaded.len(), s.get("t").unwrap().len());
+    }
+
+    #[test]
+    fn multi_run_step() {
+        let spec = r#"{ "steps": [
+            {"op": "generate", "trace": "a", "app": "tortuga", "ranks": 4, "iterations": 3},
+            {"op": "generate", "trace": "b", "app": "tortuga", "ranks": 8, "iterations": 3},
+            {"op": "multi_run", "traces": ["a", "b"], "metric": "exc", "out": "mr.txt"}
+        ]}"#;
+        let dir = tmp("mr");
+        let p = Pipeline::parse(spec, &dir).unwrap();
+        let mut s = AnalysisSession::new();
+        p.run(&mut s).unwrap();
+        let out = std::fs::read_to_string(dir.join("mr.txt")).unwrap();
+        assert!(out.contains("computeRhs"));
+    }
+}

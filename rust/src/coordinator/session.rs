@@ -1,0 +1,294 @@
+//! Analysis session: traces + runtime + uniform operation dispatch.
+
+use crate::analysis::{self, Metric};
+use crate::df::Expr;
+use crate::gen::GenConfig;
+use crate::runtime::{ops as hlo_ops, Runtime};
+use crate::trace::Trace;
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// A named collection of traces plus an optional PJRT runtime.
+///
+/// Operations that have an AOT kernel implementation (`time_profile`,
+/// `pattern_detection`'s matrix profile) run through PJRT when the runtime
+/// is loaded and fall back to the pure-Rust engines otherwise — results
+/// are identical either way (integration-tested).
+pub struct AnalysisSession {
+    pub traces: HashMap<String, Trace>,
+    pub runtime: Option<Runtime>,
+}
+
+impl Default for AnalysisSession {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl AnalysisSession {
+    pub fn new() -> Self {
+        AnalysisSession { traces: HashMap::new(), runtime: None }
+    }
+
+    /// Try to load the PJRT runtime from `dir`; silently continue without
+    /// it if artifacts are missing (pure-Rust fallbacks cover every op).
+    pub fn with_artifacts(mut self, dir: impl AsRef<Path>) -> Self {
+        self.runtime = Runtime::load(dir).ok();
+        self
+    }
+
+    /// Whether kernel-backed ops will use PJRT.
+    pub fn uses_hlo(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    pub fn insert(&mut self, name: &str, trace: Trace) {
+        self.traces.insert(name.to_string(), trace);
+    }
+
+    /// Load a trace from disk with format auto-detection.
+    pub fn load(&mut self, name: &str, path: impl AsRef<Path>) -> Result<()> {
+        let t = crate::readers::read_auto(path.as_ref())?;
+        self.insert(name, t);
+        Ok(())
+    }
+
+    /// Generate a synthetic application trace into the session.
+    pub fn generate(
+        &mut self,
+        name: &str,
+        app: &str,
+        cfg: &GenConfig,
+        variant: usize,
+    ) -> Result<()> {
+        let t = crate::gen::generate(app, cfg, variant)?;
+        self.insert(name, t);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Trace> {
+        self.traces.get(name).ok_or_else(|| anyhow!("no trace '{name}' in session"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Trace> {
+        self.traces
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("no trace '{name}' in session"))
+    }
+
+    /// Filter a trace into a new session entry (paper §IV.E).
+    pub fn filter(&mut self, src: &str, dst: &str, e: &Expr) -> Result<()> {
+        let t = self.get(src)?.filter(e)?;
+        self.insert(dst, t);
+        Ok(())
+    }
+
+    // -- dispatching operations -------------------------------------------
+
+    pub fn flat_profile(&mut self, name: &str, metric: Metric) -> Result<Vec<analysis::ProfileRow>> {
+        analysis::flat_profile(self.get_mut_internal(name)?, metric)
+    }
+
+    /// Time profile; uses the AOT time-hist kernel when available and the
+    /// requested shape matches the AOT contract.
+    pub fn time_profile(
+        &mut self,
+        name: &str,
+        bins: usize,
+        top: Option<usize>,
+    ) -> Result<analysis::TimeProfile> {
+        // split borrows: take trace out, operate, put back
+        let mut trace = self
+            .traces
+            .remove(name)
+            .ok_or_else(|| anyhow!("no trace '{name}'"))?;
+        let result = (|| {
+            if let Some(rt) = &self.runtime {
+                let c = rt.contract;
+                if bins == c.th_bins && top.map_or(true, |t| t >= c.th_funcs - 1) {
+                    return hlo_ops::time_profile_hlo(rt, &mut trace);
+                }
+            }
+            analysis::time_profile(&mut trace, bins, top)
+        })();
+        self.traces.insert(name.to_string(), trace);
+        result
+    }
+
+    /// Matrix profile of a series; PJRT when window matches the contract.
+    pub fn matrix_profile(&self, series: &[f64], m: usize) -> Result<Vec<f64>> {
+        if let Some(rt) = &self.runtime {
+            if m == rt.contract.mp_m && series.len() >= rt.contract.mp_series_len {
+                return hlo_ops::matrix_profile_hlo(rt, series, m);
+            }
+        }
+        Ok(analysis::matrix_profile(series, m)?.0)
+    }
+
+    pub fn detect_pattern(
+        &mut self,
+        name: &str,
+        start_event: Option<&str>,
+        cfg: &analysis::PatternConfig,
+    ) -> Result<Vec<analysis::PatternRange>> {
+        analysis::detect_pattern(self.get_mut_internal(name)?, start_event, cfg)
+    }
+
+    pub fn comm_matrix(&self, name: &str, unit: analysis::CommUnit) -> Result<analysis::CommMatrix> {
+        let t = self.get(name)?;
+        if let Some(rt) = &self.runtime {
+            if let Ok(ids) = t.process_ids() {
+                if !ids.is_empty()
+                    && ids.iter().all(|&p| (0..rt.contract.cm_procs as i64).contains(&p))
+                {
+                    if let Ok(m) = hlo_ops::comm_matrix_hlo(rt, t, unit) {
+                        return Ok(m);
+                    }
+                }
+            }
+        }
+        analysis::comm_matrix(t, unit)
+    }
+
+    pub fn message_histogram(&self, name: &str, bins: usize) -> Result<(Vec<u64>, Vec<f64>)> {
+        analysis::message_histogram(self.get(name)?, bins)
+    }
+
+    pub fn comm_by_process(
+        &self,
+        name: &str,
+        unit: analysis::CommUnit,
+    ) -> Result<Vec<(i64, f64, f64)>> {
+        analysis::comm_by_process(self.get(name)?, unit)
+    }
+
+    pub fn comm_over_time(&self, name: &str, bins: usize) -> Result<(Vec<u64>, Vec<f64>, Vec<i64>)> {
+        analysis::comm_over_time(self.get(name)?, bins)
+    }
+
+    pub fn comm_comp_breakdown(&mut self, name: &str) -> Result<Vec<analysis::Breakdown>> {
+        analysis::comm_comp_breakdown(self.get_mut_internal(name)?, None, None)
+    }
+
+    pub fn load_imbalance(
+        &mut self,
+        name: &str,
+        metric: Metric,
+        k: usize,
+    ) -> Result<Vec<analysis::ImbalanceRow>> {
+        analysis::load_imbalance(self.get_mut_internal(name)?, metric, k)
+    }
+
+    pub fn idle_time(&mut self, name: &str) -> Result<Vec<analysis::IdleRow>> {
+        analysis::idle_time(self.get_mut_internal(name)?, None)
+    }
+
+    pub fn critical_path(&mut self, name: &str) -> Result<Vec<analysis::CriticalPath>> {
+        analysis::critical_path_analysis(self.get_mut_internal(name)?)
+    }
+
+    pub fn lateness(&mut self, name: &str) -> Result<Vec<analysis::LogicalOp>> {
+        analysis::calculate_lateness(self.get_mut_internal(name)?)
+    }
+
+    pub fn create_cct(&mut self, name: &str) -> Result<analysis::Cct> {
+        analysis::create_cct(self.get_mut_internal(name)?)
+    }
+
+    /// Multi-run comparison over a set of session traces.
+    pub fn multi_run(
+        &mut self,
+        names: &[&str],
+        metric: Metric,
+        top_k: usize,
+    ) -> Result<analysis::MultiRun> {
+        let mut traces = Vec::with_capacity(names.len());
+        for n in names {
+            traces.push(
+                self.traces
+                    .remove(*n)
+                    .ok_or_else(|| anyhow!("no trace '{n}'"))?,
+            );
+        }
+        let result = analysis::multi_run_analysis(&mut traces, metric, top_k);
+        for (n, t) in names.iter().zip(traces) {
+            self.traces.insert(n.to_string(), t);
+        }
+        result
+    }
+
+    fn get_mut_internal(&mut self, name: &str) -> Result<&mut Trace> {
+        self.traces
+            .get_mut(name)
+            .with_context(|| format!("no trace '{name}' in session"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn session_with_gol() -> AnalysisSession {
+        let mut s = AnalysisSession::new();
+        s.generate("g", "gol", &GenConfig::new(4, 5), 1).unwrap();
+        s
+    }
+
+    #[test]
+    fn generate_and_dispatch() {
+        let mut s = session_with_gol();
+        let fp = s.flat_profile("g", Metric::ExcTime).unwrap();
+        assert!(!fp.is_empty());
+        let tp = s.time_profile("g", 32, Some(8)).unwrap();
+        assert_eq!(tp.num_bins(), 32);
+        let cp = s.critical_path("g").unwrap();
+        assert!(!cp[0].rows.is_empty());
+    }
+
+    #[test]
+    fn filter_creates_new_entry() {
+        let mut s = session_with_gol();
+        s.filter("g", "g0", &Expr::process_eq(0)).unwrap();
+        assert_eq!(s.get("g0").unwrap().num_processes().unwrap(), 1);
+        // original untouched
+        assert_eq!(s.get("g").unwrap().num_processes().unwrap(), 4);
+    }
+
+    #[test]
+    fn multi_run_over_session() {
+        let mut s = AnalysisSession::new();
+        for (i, ranks) in [2usize, 4].iter().enumerate() {
+            s.generate(&format!("t{i}"), "tortuga", &GenConfig::new(*ranks, 3), 1)
+                .unwrap();
+        }
+        let mr = s.multi_run(&["t0", "t1"], Metric::ExcTime, 5).unwrap();
+        assert_eq!(mr.run_labels, vec!["2", "4"]);
+        // traces returned to the session
+        assert!(s.get("t0").is_ok() && s.get("t1").is_ok());
+    }
+
+    #[test]
+    fn missing_trace_errors() {
+        let mut s = AnalysisSession::new();
+        assert!(s.flat_profile("nope", Metric::ExcTime).is_err());
+    }
+
+    #[test]
+    fn session_with_artifacts_uses_hlo() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let mut s = AnalysisSession::new().with_artifacts(&dir);
+        assert!(s.uses_hlo());
+        s.generate("g", "gol", &GenConfig::new(4, 30), 1).unwrap();
+        // HLO path (bins = contract) vs pure-Rust path agree
+        let hlo = s.time_profile("g", 128, None).unwrap();
+        let rust = {
+            let mut t = s.get("g").unwrap().clone();
+            analysis::time_profile(&mut t, 128, Some(63)).unwrap()
+        };
+        assert!((hlo.total() - rust.total()).abs() < 1e-2 * rust.total().max(1.0));
+    }
+}

@@ -1,0 +1,214 @@
+//! Typed columns: the unit of storage of the dataframe engine.
+//!
+//! Values of one attribute are stored contiguously (column-major), so
+//! per-column scans (filters, aggregations) are cache-friendly and
+//! auto-vectorizable — the property the paper leans on pandas for.
+//!
+//! Nulls are sentinel-encoded: `i64::MIN`, `f64::NAN`, `NULL_CODE`.
+
+use super::interner::{Interner, StrCode, NULL_CODE};
+use std::sync::Arc;
+
+/// Null sentinel for i64 columns.
+pub const NULL_I64: i64 = i64::MIN;
+
+/// A typed, contiguously-stored column.
+#[derive(Debug, Clone)]
+pub enum Column {
+    I64(Vec<i64>),
+    F64(Vec<f64>),
+    /// Dictionary-encoded strings; the dictionary is shared (cheaply
+    /// cloned) across tables derived from the same source trace.
+    Str { codes: Vec<StrCode>, dict: Arc<Interner> },
+}
+
+impl Column {
+    pub fn len(&self) -> usize {
+        match self {
+            Column::I64(v) => v.len(),
+            Column::F64(v) => v.len(),
+            Column::Str { codes, .. } => codes.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Human-readable type tag.
+    pub fn dtype(&self) -> &'static str {
+        match self {
+            Column::I64(_) => "i64",
+            Column::F64(_) => "f64",
+            Column::Str { .. } => "str",
+        }
+    }
+
+    pub fn as_i64(&self) -> Option<&[i64]> {
+        match self {
+            Column::I64(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<&[f64]> {
+        match self {
+            Column::F64(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_str_codes(&self) -> Option<(&[StrCode], &Interner)> {
+        match self {
+            Column::Str { codes, dict } => Some((codes, dict)),
+            _ => None,
+        }
+    }
+
+    /// Value at `row` rendered as a display string ("" for null).
+    pub fn display(&self, row: usize) -> String {
+        match self {
+            Column::I64(v) => {
+                if v[row] == NULL_I64 {
+                    String::new()
+                } else {
+                    v[row].to_string()
+                }
+            }
+            Column::F64(v) => {
+                if v[row].is_nan() {
+                    String::new()
+                } else {
+                    format!("{}", v[row])
+                }
+            }
+            Column::Str { codes, dict } => {
+                dict.resolve(codes[row]).unwrap_or("").to_string()
+            }
+        }
+    }
+
+    /// Is the value at `row` null?
+    pub fn is_null(&self, row: usize) -> bool {
+        match self {
+            Column::I64(v) => v[row] == NULL_I64,
+            Column::F64(v) => v[row].is_nan(),
+            Column::Str { codes, .. } => codes[row] == NULL_CODE,
+        }
+    }
+
+    /// Gather rows by index into a new column (pandas `take`).
+    pub fn take(&self, idx: &[u32]) -> Column {
+        match self {
+            Column::I64(v) => Column::I64(idx.iter().map(|&i| v[i as usize]).collect()),
+            Column::F64(v) => Column::F64(idx.iter().map(|&i| v[i as usize]).collect()),
+            Column::Str { codes, dict } => Column::Str {
+                codes: idx.iter().map(|&i| codes[i as usize]).collect(),
+                dict: Arc::clone(dict),
+            },
+        }
+    }
+
+    /// Filter by boolean mask (must match len).
+    pub fn filter(&self, mask: &[bool]) -> Column {
+        debug_assert_eq!(mask.len(), self.len());
+        match self {
+            Column::I64(v) => Column::I64(
+                v.iter().zip(mask).filter(|(_, &m)| m).map(|(x, _)| *x).collect(),
+            ),
+            Column::F64(v) => Column::F64(
+                v.iter().zip(mask).filter(|(_, &m)| m).map(|(x, _)| *x).collect(),
+            ),
+            Column::Str { codes, dict } => Column::Str {
+                codes: codes
+                    .iter()
+                    .zip(mask)
+                    .filter(|(_, &m)| m)
+                    .map(|(x, _)| *x)
+                    .collect(),
+                dict: Arc::clone(dict),
+            },
+        }
+    }
+
+    /// Approximate heap bytes held by this column.
+    pub fn heap_bytes(&self) -> usize {
+        match self {
+            Column::I64(v) => v.capacity() * 8,
+            Column::F64(v) => v.capacity() * 8,
+            Column::Str { codes, .. } => codes.capacity() * 4,
+        }
+    }
+
+    /// Concatenate two columns of the same type. String columns must share
+    /// the same dictionary Arc (true for shards of one parallel read).
+    pub fn concat(&self, other: &Column) -> Option<Column> {
+        match (self, other) {
+            (Column::I64(a), Column::I64(b)) => {
+                let mut v = a.clone();
+                v.extend_from_slice(b);
+                Some(Column::I64(v))
+            }
+            (Column::F64(a), Column::F64(b)) => {
+                let mut v = a.clone();
+                v.extend_from_slice(b);
+                Some(Column::F64(v))
+            }
+            (
+                Column::Str { codes: a, dict: da },
+                Column::Str { codes: b, dict: db },
+            ) if Arc::ptr_eq(da, db) => {
+                let mut v = a.clone();
+                v.extend_from_slice(b);
+                Some(Column::Str { codes: v, dict: Arc::clone(da) })
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn str_col(vals: &[&str]) -> Column {
+        let mut dict = Interner::new();
+        let codes = vals.iter().map(|s| dict.intern(s)).collect();
+        Column::Str { codes, dict: Arc::new(dict) }
+    }
+
+    #[test]
+    fn take_and_filter() {
+        let c = Column::I64(vec![10, 20, 30, 40]);
+        let t = c.take(&[3, 0]);
+        assert_eq!(t.as_i64().unwrap(), &[40, 10]);
+        let f = c.filter(&[true, false, true, false]);
+        assert_eq!(f.as_i64().unwrap(), &[10, 30]);
+    }
+
+    #[test]
+    fn str_column_roundtrip() {
+        let c = str_col(&["a", "b", "a"]);
+        let (codes, dict) = c.as_str_codes().unwrap();
+        assert_eq!(codes[0], codes[2]);
+        assert_eq!(dict.resolve(codes[1]), Some("b"));
+        assert_eq!(c.display(2), "a");
+    }
+
+    #[test]
+    fn null_sentinels() {
+        let c = Column::I64(vec![NULL_I64, 5]);
+        assert!(c.is_null(0) && !c.is_null(1));
+        assert_eq!(c.display(0), "");
+        let f = Column::F64(vec![f64::NAN, 1.5]);
+        assert!(f.is_null(0) && !f.is_null(1));
+    }
+
+    #[test]
+    fn concat_matching_types() {
+        let a = Column::F64(vec![1.0]);
+        let b = Column::F64(vec![2.0]);
+        assert_eq!(a.concat(&b).unwrap().as_f64().unwrap(), &[1.0, 2.0]);
+        assert!(a.concat(&Column::I64(vec![1])).is_none());
+    }
+}

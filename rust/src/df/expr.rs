@@ -1,0 +1,233 @@
+//! Composable filter expressions — the paper's `Filter` objects.
+//!
+//! Pipit lets users "instantiate Filter objects and use logical operators
+//! to create compound filters" (§IV.E). [`Expr`] is that object: column
+//! comparisons against literals, set membership, interval tests, combined
+//! with `&`, `|`, `!`. `Expr::eval` produces a boolean mask evaluated
+//! column-at-a-time.
+
+use super::{Table, NULL_CODE, NULL_I64};
+use anyhow::{bail, Result};
+
+/// Comparison operator for scalar predicates.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cmp {
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+}
+
+/// A filter expression tree.
+#[derive(Debug, Clone)]
+pub enum Expr {
+    /// i64 column vs literal.
+    I64(String, Cmp, i64),
+    /// f64 column vs literal (null/NaN rows never match).
+    F64(String, Cmp, f64),
+    /// str column vs literal.
+    Str(String, Cmp, String),
+    /// str column value is one of the given strings.
+    StrIn(String, Vec<String>),
+    /// i64 column value is one of the given values.
+    I64In(String, Vec<i64>),
+    /// i64 column in [lo, hi] inclusive — e.g. a time range.
+    Between(String, i64, i64),
+    /// Row is non-null in the given column.
+    NotNull(String),
+    And(Box<Expr>, Box<Expr>),
+    Or(Box<Expr>, Box<Expr>),
+    Not(Box<Expr>),
+    /// Matches every row.
+    All,
+}
+
+impl Expr {
+    // -- constructors mirroring the Pipit Filter API ----------------------
+
+    pub fn name_eq(v: &str) -> Expr {
+        Expr::Str("Name".into(), Cmp::Eq, v.into())
+    }
+
+    pub fn name_in(vs: &[&str]) -> Expr {
+        Expr::StrIn("Name".into(), vs.iter().map(|s| s.to_string()).collect())
+    }
+
+    pub fn process_eq(p: i64) -> Expr {
+        Expr::I64("Process".into(), Cmp::Eq, p)
+    }
+
+    pub fn process_in(ps: &[i64]) -> Expr {
+        Expr::I64In("Process".into(), ps.to_vec())
+    }
+
+    pub fn time_between(lo: i64, hi: i64) -> Expr {
+        Expr::Between("Timestamp (ns)".into(), lo, hi)
+    }
+
+    pub fn and(self, other: Expr) -> Expr {
+        Expr::And(Box::new(self), Box::new(other))
+    }
+
+    pub fn or(self, other: Expr) -> Expr {
+        Expr::Or(Box::new(self), Box::new(other))
+    }
+
+    #[allow(clippy::should_implement_trait)]
+    pub fn not(self) -> Expr {
+        Expr::Not(Box::new(self))
+    }
+
+    /// Evaluate to a boolean mask over `t`.
+    pub fn eval(&self, t: &Table) -> Result<Vec<bool>> {
+        let n = t.len();
+        Ok(match self {
+            Expr::All => vec![true; n],
+            Expr::I64(c, op, lit) => {
+                let xs = t.i64s(c)?;
+                xs.iter().map(|&x| x != NULL_I64 && cmp_i64(x, *op, *lit)).collect()
+            }
+            Expr::F64(c, op, lit) => {
+                let xs = t.f64s(c)?;
+                xs.iter().map(|&x| !x.is_nan() && cmp_f64(x, *op, *lit)).collect()
+            }
+            Expr::Str(c, op, lit) => {
+                let (codes, dict) = t.strs(c)?;
+                match op {
+                    Cmp::Eq => match dict.code_of(lit) {
+                        Some(code) => codes.iter().map(|&c| c == code).collect(),
+                        None => vec![false; n],
+                    },
+                    Cmp::Ne => match dict.code_of(lit) {
+                        Some(code) => {
+                            codes.iter().map(|&c| c != NULL_CODE && c != code).collect()
+                        }
+                        None => codes.iter().map(|&c| c != NULL_CODE).collect(),
+                    },
+                    _ => bail!("string columns support only ==/!="),
+                }
+            }
+            Expr::StrIn(c, lits) => {
+                let (codes, dict) = t.strs(c)?;
+                let wanted: Vec<u32> =
+                    lits.iter().filter_map(|s| dict.code_of(s)).collect();
+                codes.iter().map(|c| wanted.contains(c)).collect()
+            }
+            Expr::I64In(c, lits) => {
+                let xs = t.i64s(c)?;
+                xs.iter().map(|x| lits.contains(x)).collect()
+            }
+            Expr::Between(c, lo, hi) => {
+                let xs = t.i64s(c)?;
+                xs.iter()
+                    .map(|&x| x != NULL_I64 && x >= *lo && x <= *hi)
+                    .collect()
+            }
+            Expr::NotNull(c) => {
+                let col = t.col(c)?;
+                (0..n).map(|r| !col.is_null(r)).collect()
+            }
+            Expr::And(a, b) => {
+                let (ma, mb) = (a.eval(t)?, b.eval(t)?);
+                ma.iter().zip(&mb).map(|(&x, &y)| x && y).collect()
+            }
+            Expr::Or(a, b) => {
+                let (ma, mb) = (a.eval(t)?, b.eval(t)?);
+                ma.iter().zip(&mb).map(|(&x, &y)| x || y).collect()
+            }
+            Expr::Not(a) => a.eval(t)?.iter().map(|&x| !x).collect(),
+        })
+    }
+}
+
+fn cmp_i64(x: i64, op: Cmp, lit: i64) -> bool {
+    match op {
+        Cmp::Eq => x == lit,
+        Cmp::Ne => x != lit,
+        Cmp::Lt => x < lit,
+        Cmp::Le => x <= lit,
+        Cmp::Gt => x > lit,
+        Cmp::Ge => x >= lit,
+    }
+}
+
+fn cmp_f64(x: f64, op: Cmp, lit: f64) -> bool {
+    match op {
+        Cmp::Eq => x == lit,
+        Cmp::Ne => x != lit,
+        Cmp::Lt => x < lit,
+        Cmp::Le => x <= lit,
+        Cmp::Gt => x > lit,
+        Cmp::Ge => x >= lit,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::df::{Column, Interner};
+    use std::sync::Arc;
+
+    fn t() -> Table {
+        let mut dict = Interner::new();
+        let codes = ["foo", "bar", "foo", "baz"].iter().map(|s| dict.intern(s)).collect();
+        let mut t = Table::new();
+        t.push("Timestamp (ns)", Column::I64(vec![0, 10, 20, 30])).unwrap();
+        t.push("Process", Column::I64(vec![0, 0, 1, 1])).unwrap();
+        t.push("Name", Column::Str { codes, dict: Arc::new(dict) }).unwrap();
+        t.push("dur", Column::F64(vec![1.0, f64::NAN, 3.0, 4.0])).unwrap();
+        t
+    }
+
+    #[test]
+    fn scalar_predicates() {
+        let t = t();
+        assert_eq!(Expr::process_eq(1).eval(&t).unwrap(), [false, false, true, true]);
+        assert_eq!(Expr::name_eq("foo").eval(&t).unwrap(), [true, false, true, false]);
+        assert_eq!(
+            Expr::F64("dur".into(), Cmp::Gt, 2.0).eval(&t).unwrap(),
+            [false, false, true, true]
+        );
+    }
+
+    #[test]
+    fn nan_never_matches() {
+        let t = t();
+        let any = Expr::F64("dur".into(), Cmp::Ge, f64::NEG_INFINITY);
+        assert_eq!(any.eval(&t).unwrap(), [true, false, true, true]);
+    }
+
+    #[test]
+    fn compound_filters() {
+        let t = t();
+        let e = Expr::name_eq("foo").and(Expr::process_eq(0));
+        assert_eq!(e.eval(&t).unwrap(), [true, false, false, false]);
+        let e = Expr::name_eq("bar").or(Expr::name_eq("baz"));
+        assert_eq!(e.eval(&t).unwrap(), [false, true, false, true]);
+        let e = Expr::name_eq("foo").not();
+        assert_eq!(e.eval(&t).unwrap(), [false, true, false, true]);
+    }
+
+    #[test]
+    fn between_and_in() {
+        let t = t();
+        assert_eq!(Expr::time_between(10, 20).eval(&t).unwrap(), [false, true, true, false]);
+        assert_eq!(Expr::name_in(&["bar", "nope"]).eval(&t).unwrap(), [false, true, false, false]);
+        assert_eq!(Expr::process_in(&[1]).eval(&t).unwrap(), [false, false, true, true]);
+    }
+
+    #[test]
+    fn unknown_string_literal_matches_nothing() {
+        let t = t();
+        assert_eq!(Expr::name_eq("zzz").eval(&t).unwrap(), [false; 4]);
+    }
+
+    #[test]
+    fn query_composes_with_table() {
+        let t = t();
+        let q = t.query(&Expr::process_eq(0)).unwrap();
+        assert_eq!(q.len(), 2);
+    }
+}

@@ -1,0 +1,209 @@
+//! Group-by and aggregation over table columns.
+//!
+//! Covers the pandas patterns Pipit's operations are built from:
+//! `groupby(key).agg(sum|mean|min|max|count)` over one or two keys, with
+//! group keys that can be i64 columns or dictionary codes of str columns.
+
+use super::{Table, NULL_CODE, NULL_I64};
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+
+/// A grouping: distinct keys and, per key, the member row indices.
+#[derive(Debug, Clone)]
+pub struct Groups {
+    /// Distinct keys in first-seen order.
+    pub keys: Vec<GroupKey>,
+    /// Row indices per key, parallel to `keys`.
+    pub rows: Vec<Vec<u32>>,
+}
+
+/// Composite group key: one or two i64 components (str columns group by
+/// their dictionary code, resolved back to strings by the caller).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GroupKey(pub i64, pub i64);
+
+/// Aggregation kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Agg {
+    Sum,
+    Mean,
+    Min,
+    Max,
+    Count,
+}
+
+/// Extract a groupable i64 key-vector from an i64 or str column.
+/// Null rows get key `NULL_I64` (still grouped, callers may drop them).
+pub fn key_vector(t: &Table, col: &str) -> Result<Vec<i64>> {
+    let c = t.col(col)?;
+    if let Some(xs) = c.as_i64() {
+        return Ok(xs.to_vec());
+    }
+    if let Some((codes, _)) = c.as_str_codes() {
+        return Ok(codes
+            .iter()
+            .map(|&c| if c == NULL_CODE { NULL_I64 } else { c as i64 })
+            .collect());
+    }
+    Err(anyhow!("column '{col}' is not groupable (need i64 or str)"))
+}
+
+/// Group rows of `t` by one column.
+pub fn group_by(t: &Table, col: &str) -> Result<Groups> {
+    let keys = key_vector(t, col)?;
+    Ok(group_keys(keys.iter().map(|&k| GroupKey(k, 0))))
+}
+
+/// Group rows of `t` by two columns (e.g. Name × Process).
+pub fn group_by2(t: &Table, a: &str, b: &str) -> Result<Groups> {
+    let ka = key_vector(t, a)?;
+    let kb = key_vector(t, b)?;
+    Ok(group_keys(
+        ka.iter().zip(&kb).map(|(&x, &y)| GroupKey(x, y)),
+    ))
+}
+
+fn group_keys(iter: impl Iterator<Item = GroupKey>) -> Groups {
+    let mut index: HashMap<GroupKey, usize> = HashMap::new();
+    let mut keys = Vec::new();
+    let mut rows: Vec<Vec<u32>> = Vec::new();
+    for (r, k) in iter.enumerate() {
+        let slot = *index.entry(k).or_insert_with(|| {
+            keys.push(k);
+            rows.push(Vec::new());
+            rows.len() - 1
+        });
+        rows[slot].push(r as u32);
+    }
+    Groups { keys, rows }
+}
+
+impl Groups {
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// Aggregate an f64 column per group. NaNs are skipped (pandas skipna).
+    pub fn agg_f64(&self, t: &Table, col: &str, how: Agg) -> Result<Vec<f64>> {
+        let xs = t.f64s(col)?;
+        Ok(self
+            .rows
+            .iter()
+            .map(|rows| {
+                let vals = rows.iter().map(|&r| xs[r as usize]).filter(|v| !v.is_nan());
+                match how {
+                    Agg::Sum => vals.sum(),
+                    Agg::Count => vals.count() as f64,
+                    Agg::Mean => {
+                        let (mut s, mut n) = (0.0, 0u64);
+                        for v in vals {
+                            s += v;
+                            n += 1;
+                        }
+                        if n == 0 {
+                            f64::NAN
+                        } else {
+                            s / n as f64
+                        }
+                    }
+                    Agg::Min => vals.fold(f64::INFINITY, f64::min),
+                    Agg::Max => vals.fold(f64::NEG_INFINITY, f64::max),
+                }
+            })
+            .collect())
+    }
+
+    /// Aggregate an i64 column per group (nulls skipped).
+    pub fn agg_i64(&self, t: &Table, col: &str, how: Agg) -> Result<Vec<i64>> {
+        let xs = t.i64s(col)?;
+        Ok(self
+            .rows
+            .iter()
+            .map(|rows| {
+                let vals = rows
+                    .iter()
+                    .map(|&r| xs[r as usize])
+                    .filter(|&v| v != NULL_I64);
+                match how {
+                    Agg::Sum => vals.sum(),
+                    Agg::Count => vals.count() as i64,
+                    Agg::Mean => {
+                        let (mut s, mut n) = (0i64, 0i64);
+                        for v in vals {
+                            s += v;
+                            n += 1;
+                        }
+                        if n == 0 {
+                            NULL_I64
+                        } else {
+                            s / n
+                        }
+                    }
+                    Agg::Min => vals.min().unwrap_or(NULL_I64),
+                    Agg::Max => vals.max().unwrap_or(NULL_I64),
+                }
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::df::{Column, Interner};
+    use std::sync::Arc;
+
+    fn t() -> Table {
+        let mut dict = Interner::new();
+        let codes = ["f", "g", "f", "g", "f"].iter().map(|s| dict.intern(s)).collect();
+        let mut t = Table::new();
+        t.push("Name", Column::Str { codes, dict: Arc::new(dict) }).unwrap();
+        t.push("Process", Column::I64(vec![0, 0, 1, 1, 0])).unwrap();
+        t.push("dur", Column::F64(vec![1.0, 2.0, 3.0, f64::NAN, 5.0])).unwrap();
+        t
+    }
+
+    #[test]
+    fn group_by_one_key() {
+        let t = t();
+        let g = group_by(&t, "Name").unwrap();
+        assert_eq!(g.len(), 2);
+        assert_eq!(g.rows[0], vec![0, 2, 4]); // "f"
+        assert_eq!(g.rows[1], vec![1, 3]); // "g"
+    }
+
+    #[test]
+    fn group_by_two_keys() {
+        let t = t();
+        let g = group_by2(&t, "Name", "Process").unwrap();
+        assert_eq!(g.len(), 4);
+        let i = g.keys.iter().position(|k| *k == GroupKey(0, 0)).unwrap();
+        assert_eq!(g.rows[i], vec![0, 4]); // ("f", 0)
+    }
+
+    #[test]
+    fn aggregations_skip_nan() {
+        let t = t();
+        let g = group_by(&t, "Name").unwrap();
+        let sums = g.agg_f64(&t, "dur", Agg::Sum).unwrap();
+        assert_eq!(sums, vec![9.0, 2.0]);
+        let means = g.agg_f64(&t, "dur", Agg::Mean).unwrap();
+        assert_eq!(means, vec![3.0, 2.0]); // NaN skipped in "g"
+        let counts = g.agg_f64(&t, "dur", Agg::Count).unwrap();
+        assert_eq!(counts, vec![3.0, 1.0]);
+        let maxs = g.agg_f64(&t, "dur", Agg::Max).unwrap();
+        assert_eq!(maxs, vec![5.0, 2.0]);
+    }
+
+    #[test]
+    fn i64_aggregations() {
+        let t = t();
+        let g = group_by(&t, "Name").unwrap();
+        assert_eq!(g.agg_i64(&t, "Process", Agg::Max).unwrap(), vec![1, 1]);
+        assert_eq!(g.agg_i64(&t, "Process", Agg::Sum).unwrap(), vec![1, 1]);
+    }
+}

@@ -1,0 +1,88 @@
+//! String interner: the dictionary behind categorical/string columns.
+//!
+//! Trace data repeats a small set of strings (function names, event types)
+//! across millions of rows; interning stores each distinct string once and
+//! the column holds dense `u32` codes — the same trick pandas categoricals
+//! use, and the reason per-column scans vectorize (paper §III.A).
+
+use std::collections::HashMap;
+
+/// Code assigned to interned strings. `u32::MAX` is reserved as the null
+/// sentinel and never returned by [`Interner::intern`].
+pub type StrCode = u32;
+
+/// Null sentinel for string columns.
+pub const NULL_CODE: StrCode = u32::MAX;
+
+#[derive(Debug, Default, Clone)]
+pub struct Interner {
+    strings: Vec<String>,
+    index: HashMap<String, StrCode>,
+}
+
+impl Interner {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Intern `s`, returning its stable code.
+    pub fn intern(&mut self, s: &str) -> StrCode {
+        if let Some(&c) = self.index.get(s) {
+            return c;
+        }
+        let c = self.strings.len() as StrCode;
+        assert!(c < NULL_CODE, "interner overflow");
+        self.strings.push(s.to_string());
+        self.index.insert(s.to_string(), c);
+        c
+    }
+
+    /// Look up a code without interning. None if never seen.
+    pub fn code_of(&self, s: &str) -> Option<StrCode> {
+        self.index.get(s).copied()
+    }
+
+    /// Resolve a code back to its string. None for the null sentinel or
+    /// out-of-range codes.
+    pub fn resolve(&self, c: StrCode) -> Option<&str> {
+        self.strings.get(c as usize).map(|s| s.as_str())
+    }
+
+    pub fn len(&self) -> usize {
+        self.strings.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.strings.is_empty()
+    }
+
+    /// All interned strings in code order.
+    pub fn strings(&self) -> &[String] {
+        &self.strings
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn intern_is_idempotent() {
+        let mut i = Interner::new();
+        let a = i.intern("MPI_Send");
+        let b = i.intern("MPI_Recv");
+        assert_ne!(a, b);
+        assert_eq!(i.intern("MPI_Send"), a);
+        assert_eq!(i.len(), 2);
+    }
+
+    #[test]
+    fn resolve_roundtrip() {
+        let mut i = Interner::new();
+        let c = i.intern("main()");
+        assert_eq!(i.resolve(c), Some("main()"));
+        assert_eq!(i.code_of("main()"), Some(c));
+        assert_eq!(i.resolve(NULL_CODE), None);
+        assert_eq!(i.code_of("nope"), None);
+    }
+}

@@ -1,0 +1,353 @@
+//! Columnar dataframe engine — the pandas substrate.
+//!
+//! The paper organizes a trace as a pandas DataFrame: one row per event,
+//! one column per attribute, column-major storage so per-column scans
+//! vectorize. This module re-implements exactly the subset Pipit relies
+//! on: typed columns ([`column::Column`]), dictionary-encoded strings
+//! ([`interner::Interner`]), boolean-mask filtering with composable
+//! expressions ([`expr::Expr`]), sorting, and group-by aggregation
+//! ([`groupby`]).
+
+pub mod column;
+pub mod expr;
+pub mod groupby;
+pub mod interner;
+
+pub use column::{Column, NULL_I64};
+pub use expr::Expr;
+pub use interner::{Interner, StrCode, NULL_CODE};
+
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+/// A two-dimensional table: ordered named columns of equal length.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    names: Vec<String>,
+    cols: Vec<Column>,
+    index: HashMap<String, usize>,
+}
+
+impl Table {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of rows.
+    pub fn len(&self) -> usize {
+        self.cols.first().map_or(0, Column::len)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Number of columns.
+    pub fn width(&self) -> usize {
+        self.cols.len()
+    }
+
+    /// Column names in insertion order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    /// Append a column. Length must match existing columns.
+    pub fn push(&mut self, name: &str, col: Column) -> Result<()> {
+        if !self.cols.is_empty() && col.len() != self.len() {
+            bail!(
+                "column '{name}' has {} rows, table has {}",
+                col.len(),
+                self.len()
+            );
+        }
+        if self.index.contains_key(name) {
+            bail!("duplicate column '{name}'");
+        }
+        self.index.insert(name.to_string(), self.cols.len());
+        self.names.push(name.to_string());
+        self.cols.push(col);
+        Ok(())
+    }
+
+    /// Replace an existing column (same length required) or add a new one.
+    pub fn set(&mut self, name: &str, col: Column) -> Result<()> {
+        if let Some(&i) = self.index.get(name) {
+            if !self.cols.is_empty() && col.len() != self.len() {
+                bail!("column '{name}' length mismatch");
+            }
+            self.cols[i] = col;
+            Ok(())
+        } else {
+            self.push(name, col)
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.index.contains_key(name)
+    }
+
+    pub fn col(&self, name: &str) -> Result<&Column> {
+        self.index
+            .get(name)
+            .map(|&i| &self.cols[i])
+            .ok_or_else(|| anyhow!("no column '{name}'"))
+    }
+
+    pub fn i64s(&self, name: &str) -> Result<&[i64]> {
+        self.col(name)?
+            .as_i64()
+            .ok_or_else(|| anyhow!("column '{name}' is not i64"))
+    }
+
+    pub fn f64s(&self, name: &str) -> Result<&[f64]> {
+        self.col(name)?
+            .as_f64()
+            .ok_or_else(|| anyhow!("column '{name}' is not f64"))
+    }
+
+    pub fn strs(&self, name: &str) -> Result<(&[StrCode], &Interner)> {
+        self.col(name)?
+            .as_str_codes()
+            .ok_or_else(|| anyhow!("column '{name}' is not str"))
+    }
+
+    /// New table with only rows where `mask` is true.
+    pub fn filter(&self, mask: &[bool]) -> Result<Table> {
+        if mask.len() != self.len() {
+            bail!("mask length {} != table length {}", mask.len(), self.len());
+        }
+        let mut t = Table::new();
+        for (n, c) in self.names.iter().zip(&self.cols) {
+            t.push(n, c.filter(mask))?;
+        }
+        Ok(t)
+    }
+
+    /// New table gathering `idx` rows (indices may repeat / reorder).
+    pub fn take(&self, idx: &[u32]) -> Result<Table> {
+        let mut t = Table::new();
+        for (n, c) in self.names.iter().zip(&self.cols) {
+            t.push(n, c.take(idx))?;
+        }
+        Ok(t)
+    }
+
+    /// Evaluate a filter expression into a mask.
+    pub fn mask(&self, e: &Expr) -> Result<Vec<bool>> {
+        e.eval(self)
+    }
+
+    /// filter + mask in one step (pandas `df[expr]`).
+    pub fn query(&self, e: &Expr) -> Result<Table> {
+        let m = self.mask(e)?;
+        self.filter(&m)
+    }
+
+    /// Row indices that sort the table by the given i64 column (stable).
+    pub fn argsort_i64(&self, name: &str) -> Result<Vec<u32>> {
+        let keys = self.i64s(name)?;
+        let mut idx: Vec<u32> = (0..keys.len() as u32).collect();
+        idx.sort_by_key(|&i| keys[i as usize]);
+        Ok(idx)
+    }
+
+    /// Stable sort by (primary i64, secondary i64) — e.g. (process, time).
+    pub fn argsort_i64_2(&self, primary: &str, secondary: &str) -> Result<Vec<u32>> {
+        let a = self.i64s(primary)?;
+        let b = self.i64s(secondary)?;
+        let mut idx: Vec<u32> = (0..a.len() as u32).collect();
+        idx.sort_by_key(|&i| (a[i as usize], b[i as usize]));
+        Ok(idx)
+    }
+
+    /// Vertically concatenate tables with identical schemas. String columns
+    /// must share dictionaries (shards of one read do).
+    pub fn concat(parts: &[Table]) -> Result<Table> {
+        let first = parts.first().ok_or_else(|| anyhow!("concat of nothing"))?;
+        let mut out = first.clone();
+        for p in &parts[1..] {
+            if p.names != first.names {
+                bail!("concat schema mismatch");
+            }
+            for (i, c) in out.cols.iter_mut().enumerate() {
+                *c = c
+                    .concat(&p.cols[i])
+                    .ok_or_else(|| anyhow!("concat type/dict mismatch in '{}'", out.names[i]))?;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Approximate heap bytes held by all columns.
+    pub fn heap_bytes(&self) -> usize {
+        self.cols.iter().map(Column::heap_bytes).sum()
+    }
+
+    /// New table with only the named columns, in the given order.
+    pub fn select(&self, cols: &[&str]) -> Result<Table> {
+        let mut t = Table::new();
+        for &c in cols {
+            t.push(c, self.col(c)?.clone())?;
+        }
+        Ok(t)
+    }
+
+    /// First `n` rows as a new table (pandas `head`).
+    pub fn head(&self, n: usize) -> Result<Table> {
+        let idx: Vec<u32> = (0..self.len().min(n) as u32).collect();
+        self.take(&idx)
+    }
+
+    /// Summary statistics (count / mean / min / max) for every numeric
+    /// column — pandas `describe`, rendered as text.
+    pub fn describe(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "{:<22} {:>10} {:>14} {:>14} {:>14}", "column", "count", "mean", "min", "max");
+        for (name, col) in self.names.iter().zip(&self.cols) {
+            let stats: Option<(u64, f64, f64, f64)> = match col {
+                Column::F64(v) => {
+                    let vals: Vec<f64> = v.iter().copied().filter(|x| !x.is_nan()).collect();
+                    (!vals.is_empty()).then(|| {
+                        let n = vals.len() as f64;
+                        let sum: f64 = vals.iter().sum();
+                        let mn = vals.iter().copied().fold(f64::INFINITY, f64::min);
+                        let mx = vals.iter().copied().fold(f64::NEG_INFINITY, f64::max);
+                        (vals.len() as u64, sum / n, mn, mx)
+                    })
+                }
+                Column::I64(v) => {
+                    let vals: Vec<i64> = v.iter().copied().filter(|&x| x != NULL_I64).collect();
+                    (!vals.is_empty()).then(|| {
+                        let n = vals.len() as f64;
+                        let sum: f64 = vals.iter().map(|&x| x as f64).sum();
+                        let mn = *vals.iter().min().unwrap() as f64;
+                        let mx = *vals.iter().max().unwrap() as f64;
+                        (vals.len() as u64, sum / n, mn, mx)
+                    })
+                }
+                Column::Str { .. } => None,
+            };
+            if let Some((count, mean, mn, mx)) = stats {
+                let _ = writeln!(out, "{name:<22} {count:>10} {mean:>14.3} {mn:>14.3} {mx:>14.3}");
+            }
+        }
+        out
+    }
+
+    /// Render the first `max_rows` rows as an aligned text table — the
+    /// `display(df)` experience from the paper's listings.
+    pub fn show(&self, max_rows: usize) -> String {
+        let n = self.len().min(max_rows);
+        let mut widths: Vec<usize> = self.names.iter().map(|s| s.len()).collect();
+        let mut cells: Vec<Vec<String>> = Vec::with_capacity(n);
+        for r in 0..n {
+            let row: Vec<String> = self.cols.iter().map(|c| c.display(r)).collect();
+            for (w, cell) in widths.iter_mut().zip(&row) {
+                *w = (*w).max(cell.len());
+            }
+            cells.push(row);
+        }
+        let mut out = String::new();
+        for (i, name) in self.names.iter().enumerate() {
+            let _ = write!(out, "{:>w$}  ", name, w = widths[i]);
+        }
+        out.push('\n');
+        for row in &cells {
+            for (i, cell) in row.iter().enumerate() {
+                let _ = write!(out, "{:>w$}  ", cell, w = widths[i]);
+            }
+            out.push('\n');
+        }
+        if self.len() > n {
+            let _ = writeln!(out, "... {} more rows", self.len() - n);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn sample() -> Table {
+        let mut dict = Interner::new();
+        let codes = ["a", "b", "a", "c"].iter().map(|s| dict.intern(s)).collect();
+        let mut t = Table::new();
+        t.push("time", Column::I64(vec![3, 1, 2, 0])).unwrap();
+        t.push("value", Column::F64(vec![1.0, 2.0, 3.0, 4.0])).unwrap();
+        t.push("name", Column::Str { codes, dict: Arc::new(dict) }).unwrap();
+        t
+    }
+
+    #[test]
+    fn push_rejects_mismatched_lengths_and_dupes() {
+        let mut t = sample();
+        assert!(t.push("bad", Column::I64(vec![1])).is_err());
+        assert!(t.push("time", Column::I64(vec![0, 0, 0, 0])).is_err());
+    }
+
+    #[test]
+    fn filter_take_sort() {
+        let t = sample();
+        let f = t.filter(&[true, false, true, false]).unwrap();
+        assert_eq!(f.len(), 2);
+        assert_eq!(f.i64s("time").unwrap(), &[3, 2]);
+
+        let order = t.argsort_i64("time").unwrap();
+        let s = t.take(&order).unwrap();
+        assert_eq!(s.i64s("time").unwrap(), &[0, 1, 2, 3]);
+        assert_eq!(s.f64s("value").unwrap(), &[4.0, 2.0, 3.0, 1.0]);
+    }
+
+    #[test]
+    fn two_key_sort_is_stable_composite() {
+        let mut t = Table::new();
+        t.push("p", Column::I64(vec![1, 0, 1, 0])).unwrap();
+        t.push("t", Column::I64(vec![5, 9, 2, 1])).unwrap();
+        let idx = t.argsort_i64_2("p", "t").unwrap();
+        let s = t.take(&idx).unwrap();
+        assert_eq!(s.i64s("p").unwrap(), &[0, 0, 1, 1]);
+        assert_eq!(s.i64s("t").unwrap(), &[1, 9, 2, 5]);
+    }
+
+    #[test]
+    fn concat_shards() {
+        let t = sample();
+        let joined = Table::concat(&[t.clone(), t.clone()]).unwrap();
+        assert_eq!(joined.len(), 8);
+        assert_eq!(joined.width(), 3);
+    }
+
+    #[test]
+    fn select_and_head() {
+        let t = sample();
+        let s = t.select(&["name", "time"]).unwrap();
+        assert_eq!(s.names(), &["name".to_string(), "time".to_string()]);
+        assert_eq!(s.len(), 4);
+        assert!(t.select(&["nope"]).is_err());
+        let h = t.head(2).unwrap();
+        assert_eq!(h.len(), 2);
+        assert_eq!(h.i64s("time").unwrap(), &[3, 1]);
+        assert_eq!(t.head(99).unwrap().len(), 4);
+    }
+
+    #[test]
+    fn describe_covers_numeric_columns() {
+        let t = sample();
+        let d = t.describe();
+        assert!(d.contains("time"));
+        assert!(d.contains("value"));
+        assert!(!d.lines().any(|l| l.starts_with("name ")));
+    }
+
+    #[test]
+    fn show_renders() {
+        let t = sample();
+        let s = t.show(2);
+        assert!(s.contains("time"));
+        assert!(s.contains("... 2 more rows"));
+    }
+}

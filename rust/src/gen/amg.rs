@@ -1,0 +1,138 @@
+//! AMG (BoomerAMG) model (paper Fig. 5 scaling sweeps).
+//!
+//! V-cycles over a level hierarchy: per level going down, `smooth` +
+//! `restrict` + neighbor exchange with level-shrinking message sizes and
+//! durations; an `MPI_Allreduce` at the coarsest level; `interpolate` +
+//! `smooth` going back up. Iteration count directly controls trace size,
+//! which is what the Fig. 5 size sweeps vary.
+
+use super::GenConfig;
+use crate::trace::{Trace, TraceBuilder, TraceMeta};
+use crate::util::rng::Rng;
+
+pub fn generate(cfg: &GenConfig) -> Trace {
+    let n = cfg.ranks as i64;
+    let levels = ((cfg.ranks as f64).log2().ceil() as usize + 2).min(8);
+    let mut rng = Rng::new(cfg.seed ^ 0x616d6721);
+    let mut b = TraceBuilder::new();
+    b.set_meta(TraceMeta { format: String::new(), source: String::new(), app: "amg".into() });
+
+    let mut clock = vec![0i64; cfg.ranks];
+    for r in 0..n {
+        b.enter(r, 0, 0, "main");
+    }
+    for it in 0..cfg.iterations {
+        for r in 0..cfg.ranks {
+            b.enter(r as i64, 0, clock[r], "V-cycle");
+        }
+        // downstroke + upstroke
+        for phase in 0..2usize {
+            let level_order: Vec<usize> = if phase == 0 {
+                (0..levels).collect()
+            } else {
+                (0..levels.saturating_sub(1)).rev().collect()
+            };
+            for lvl in level_order {
+                let shrink = 1.0 / (1 << lvl) as f64;
+                let mut send_ts = vec![[0i64; 2]; cfg.ranks];
+                let bytes = ((65_536.0 * shrink) as i64).max(64);
+                for r in 0..cfg.ranks {
+                    let ri = r as i64;
+                    let mut t = clock[r];
+                    let smooth = (30_000.0 * shrink).max(800.0);
+                    b.enter(ri, 0, t, "smooth");
+                    t += (smooth * rng.jitter(cfg.noise)) as i64;
+                    b.leave(ri, 0, t, "smooth");
+                    let xfer = if phase == 0 { "restrict" } else { "interpolate" };
+                    b.enter(ri, 0, t, xfer);
+                    t += ((9_000.0 * shrink).max(400.0) * rng.jitter(cfg.noise)) as i64;
+                    b.leave(ri, 0, t, xfer);
+                    b.enter(ri, 0, t, "MPI_Send");
+                    for (k, dst) in
+                        [(ri + 1).rem_euclid(n), (ri - 1).rem_euclid(n)].into_iter().enumerate()
+                    {
+                        let post = t + 100 + 150 * k as i64;
+                        b.send(ri, 0, post, dst, bytes, (it * 100 + lvl) as i64);
+                        send_ts[r][k] = post;
+                    }
+                    t += 700;
+                    b.leave(ri, 0, t, "MPI_Send");
+                    clock[r] = t;
+                }
+                for r in 0..cfg.ranks {
+                    let ri = r as i64;
+                    let left = (r + cfg.ranks - 1) % cfg.ranks;
+                    let right = (r + 1) % cfg.ranks;
+                    let mut t = clock[r];
+                    b.enter(ri, 0, t, "MPI_Recv");
+                    for (src, s_ts) in
+                        [(left, send_ts[left][0]), (right, send_ts[right][1])]
+                    {
+                        let done = (t + 80).max(s_ts + 1_200);
+                        b.recv(ri, 0, done, src as i64, bytes, (it * 100 + lvl) as i64);
+                        t = done;
+                    }
+                    t += 200;
+                    b.leave(ri, 0, t, "MPI_Recv");
+                    clock[r] = t;
+                }
+            }
+            if phase == 0 {
+                // coarsest level: global reduction, ranks synchronize
+                let t_all = clock.iter().copied().max().unwrap_or(0);
+                for r in 0..cfg.ranks {
+                    let ri = r as i64;
+                    b.enter(ri, 0, clock[r], "MPI_Allreduce");
+                    clock[r] = t_all + 2_500;
+                    b.leave(ri, 0, clock[r], "MPI_Allreduce");
+                }
+            }
+        }
+        for r in 0..cfg.ranks {
+            b.leave(r as i64, 0, clock[r], "V-cycle");
+        }
+    }
+    let end = clock.iter().copied().max().unwrap_or(0) + 1_000;
+    for r in 0..n {
+        b.leave(r, 0, end, "main");
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{self, Metric};
+    use crate::trace::builder::validate_nesting;
+
+    #[test]
+    fn wellformed() {
+        validate_nesting(&generate(&GenConfig::new(8, 2))).unwrap();
+    }
+
+    #[test]
+    fn trace_size_scales_with_iterations() {
+        let a = generate(&GenConfig::new(8, 2));
+        let b = generate(&GenConfig::new(8, 8));
+        let ratio = b.len() as f64 / a.len() as f64;
+        assert!((ratio - 4.0).abs() < 0.3, "ratio={ratio}");
+    }
+
+    #[test]
+    fn smooth_dominates() {
+        let mut t = generate(&GenConfig::new(8, 3));
+        let fp = analysis::flat_profile(&mut t, Metric::ExcTime).unwrap();
+        assert_eq!(fp[0].name, "smooth", "{:?}", &fp[..3]);
+    }
+
+    #[test]
+    fn cct_has_vcycle_structure() {
+        let mut t = generate(&GenConfig::new(4, 2));
+        let cct = analysis::create_cct(&mut t).unwrap();
+        let vc = cct.nodes.iter().find(|n| n.name == "V-cycle").unwrap();
+        assert_eq!(cct.path(vc.id), vec!["main", "V-cycle"]);
+        // smooth appears under V-cycle
+        let sm = cct.nodes.iter().find(|n| n.name == "smooth").unwrap();
+        assert_eq!(cct.path(sm.id), vec!["main", "V-cycle", "smooth"]);
+    }
+}

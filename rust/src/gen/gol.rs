@@ -1,0 +1,129 @@
+//! MPI Game of Life model (paper Figs. 10, 11).
+//!
+//! 1-D ring decomposition. Each iteration: `compute` the local board,
+//! halo-exchange with both neighbors (`MPI_Send` ×2 then `MPI_Recv` ×2).
+//! Ranks 0 and ranks/2 carry ~30% more compute (edge-of-board boundary
+//! work), which makes their sends consistently late — the exact pattern
+//! the paper's lateness case study (Fig. 11) observes for processes 0
+//! and 4, and what puts rank 0's compute on the critical path (Fig. 10).
+
+use super::GenConfig;
+use crate::trace::{Trace, TraceBuilder, TraceMeta};
+use crate::util::rng::Rng;
+
+const MSG_BYTES: i64 = 2048; // one boundary row
+const LATENCY_NS: i64 = 1_500;
+
+pub fn generate(cfg: &GenConfig) -> Trace {
+    let n = cfg.ranks as i64;
+    let mut rng = Rng::new(cfg.seed);
+    let mut b = TraceBuilder::new();
+    b.set_meta(TraceMeta { format: String::new(), source: String::new(), app: "gol".into() });
+
+    let mut clock = vec![0i64; cfg.ranks];
+    for r in 0..n {
+        b.enter(r, 0, 0, "main");
+    }
+
+    for it in 0..cfg.iterations {
+        // phase 1: compute + post sends; remember each send's instant
+        let mut send_ts = vec![[0i64; 2]; cfg.ranks];
+        for r in 0..cfg.ranks {
+            let heavy = r == 0 || r == cfg.ranks / 2;
+            let base = if heavy { 65_000.0 } else { 50_000.0 };
+            let dur = (base * rng.jitter(cfg.noise)) as i64;
+            let t0 = clock[r];
+            b.enter(r as i64, 0, t0, "compute");
+            b.leave(r as i64, 0, t0 + dur, "compute");
+            let mut t = t0 + dur;
+            for (k, dst) in [(r as i64 + 1).rem_euclid(n), (r as i64 - 1).rem_euclid(n)]
+                .into_iter()
+                .enumerate()
+            {
+                b.enter(r as i64, 0, t, "MPI_Send");
+                let post = t + 500;
+                b.send(r as i64, 0, post, dst, MSG_BYTES, it as i64);
+                send_ts[r][k] = post;
+                t = post + 700;
+                b.leave(r as i64, 0, t, "MPI_Send");
+            }
+            clock[r] = t;
+        }
+        // phase 2: receives — completion waits for the matching send
+        for r in 0..cfg.ranks {
+            let left = (r + cfg.ranks - 1) % cfg.ranks;
+            let right = (r + 1) % cfg.ranks;
+            // left neighbor's send[0] goes right (to us); right's send[1] goes left
+            for (src, s_ts) in [(left, send_ts[left][0]), (right, send_ts[right][1])] {
+                let t_enter = clock[r];
+                b.enter(r as i64, 0, t_enter, "MPI_Recv");
+                let done = (t_enter + 300).max(s_ts + LATENCY_NS);
+                b.recv(r as i64, 0, done, src as i64, MSG_BYTES, it as i64);
+                clock[r] = done + 400;
+                b.leave(r as i64, 0, clock[r], "MPI_Recv");
+            }
+        }
+    }
+    let end = clock.iter().copied().max().unwrap_or(0) + 1_000;
+    for r in 0..n {
+        // ranks end together at a final (implicit) barrier
+        b.leave(r, 0, end, "main");
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis;
+    use crate::trace::builder::validate_nesting;
+
+    #[test]
+    fn wellformed_and_sized() {
+        let t = generate(&GenConfig::new(4, 10));
+        validate_nesting(&t).unwrap();
+        assert_eq!(t.num_processes().unwrap(), 4);
+        // 4 ranks x 10 iters x (compute + 2 send + 2 recv calls)
+        assert!(t.len() > 4 * 10 * 10);
+    }
+
+    #[test]
+    fn messages_are_causal() {
+        let t = generate(&GenConfig::new(8, 5));
+        let m = analysis::messages::match_messages(&t).unwrap();
+        let ts = t.timestamps().unwrap();
+        let mut matched = 0;
+        for &r in &m.recvs {
+            let s = m.send_of_recv[r as usize];
+            assert!(s >= 0, "unmatched recv");
+            assert!(ts[s as usize] <= ts[r as usize], "recv before send");
+            matched += 1;
+        }
+        assert_eq!(matched as usize, 8 * 5 * 2);
+    }
+
+    #[test]
+    fn heavy_ranks_are_late() {
+        let mut t = generate(&GenConfig::new(8, 10).with_noise(0.01));
+        let ops = analysis::calculate_lateness(&mut t).unwrap();
+        let by_proc = analysis::lateness_by_process(&ops);
+        // ranks 0 and 4 have the largest lateness
+        let top2: Vec<i64> = by_proc.iter().take(2).map(|p| p.proc).collect();
+        assert!(top2.contains(&0), "{by_proc:?}");
+        assert!(top2.contains(&4), "{by_proc:?}");
+    }
+
+    #[test]
+    fn critical_path_passes_through_heavy_rank() {
+        let mut t = generate(&GenConfig::new(4, 6).with_noise(0.01));
+        let paths = analysis::critical_path_analysis(&mut t).unwrap();
+        let p = &paths[0];
+        let ts = t.timestamps().unwrap();
+        for w in p.rows.windows(2) {
+            assert!(ts[w[0] as usize] <= ts[w[1] as usize]);
+        }
+        let tbf = p.time_by_function(&t).unwrap();
+        // compute dominates the path
+        assert_eq!(tbf[0].0, "compute", "{tbf:?}");
+    }
+}

@@ -1,0 +1,154 @@
+//! Kripke Sn transport model (paper Fig. 6).
+//!
+//! Ranks form a 2-D grid; sweeps cross the domain in all four diagonal
+//! directions, so each rank forwards angular fluxes to its downstream
+//! neighbors. Grid position determines how many sweep directions a rank
+//! forwards for — corners participate least, edges more, interior ranks
+//! most — producing exactly the *three communication-volume groups* the
+//! paper observes in its `comm_by_process` view of Kripke.
+
+use super::laghos::grid_dims;
+use super::GenConfig;
+use crate::trace::{Trace, TraceBuilder, TraceMeta};
+use crate::util::rng::Rng;
+
+const FLUX_BYTES: i64 = 8_192;
+
+pub fn generate(cfg: &GenConfig) -> Trace {
+    let (px, py) = grid_dims(cfg.ranks);
+    let n = cfg.ranks as i64;
+    let mut rng = Rng::new(cfg.seed ^ 0x6b726970);
+    let mut b = TraceBuilder::new();
+    b.set_meta(TraceMeta { format: String::new(), source: String::new(), app: "kripke".into() });
+
+    // For sweep direction (sx, sy) a rank forwards to (x+sx, y) and
+    // (x, y+sy) when in range.
+    let downstream = |r: usize, sx: i64, sy: i64| -> Vec<usize> {
+        let (x, y) = ((r % px) as i64, (r / px) as i64);
+        let mut out = Vec::new();
+        if (0..px as i64).contains(&(x + sx)) {
+            out.push((y * px as i64 + x + sx) as usize);
+        }
+        if (0..py as i64).contains(&(y + sy)) {
+            out.push(((y + sy) * px as i64 + x) as usize);
+        }
+        out
+    };
+
+    let mut clock = vec![0i64; cfg.ranks];
+    for r in 0..n {
+        b.enter(r, 0, 0, "main");
+    }
+    for it in 0..cfg.iterations {
+        for (sx, sy) in [(1i64, 1i64), (-1, 1), (1, -1), (-1, -1)] {
+            let mut sends: Vec<Vec<(usize, i64)>> = vec![Vec::new(); cfg.ranks];
+            for r in 0..cfg.ranks {
+                let ri = r as i64;
+                let mut t = clock[r];
+                b.enter(ri, 0, t, "SweepSolver");
+                t += (40_000.0 * rng.jitter(cfg.noise)) as i64;
+                b.leave(ri, 0, t, "SweepSolver");
+                let targets = downstream(r, sx, sy);
+                if !targets.is_empty() {
+                    b.enter(ri, 0, t, "MPI_Send");
+                    for dst in targets {
+                        let post = t + 200;
+                        b.send(ri, 0, post, dst as i64, FLUX_BYTES, it as i64);
+                        sends[r].push((dst, post));
+                    }
+                    t += 1_200;
+                    b.leave(ri, 0, t, "MPI_Send");
+                }
+                clock[r] = t;
+            }
+            for r in 0..cfg.ranks {
+                let ri = r as i64;
+                let mut inbound: Vec<(usize, i64)> = Vec::new();
+                for (src, sl) in sends.iter().enumerate() {
+                    for &(dst, ts) in sl {
+                        if dst == r {
+                            inbound.push((src, ts));
+                        }
+                    }
+                }
+                if inbound.is_empty() {
+                    continue;
+                }
+                inbound.sort_by_key(|&(_, ts)| ts);
+                let mut t = clock[r];
+                b.enter(ri, 0, t, "MPI_Recv");
+                for (src, s_ts) in inbound {
+                    let done = (t + 100).max(s_ts + 1_500);
+                    b.recv(ri, 0, done, src as i64, FLUX_BYTES, it as i64);
+                    t = done;
+                }
+                t += 300;
+                b.leave(ri, 0, t, "MPI_Recv");
+                clock[r] = t;
+            }
+            // scattering/LTimes between sweep directions
+            for r in 0..cfg.ranks {
+                let ri = r as i64;
+                let mut t = clock[r];
+                for (name, dur) in [("LTimes", 9_000.0), ("Scattering", 12_000.0)] {
+                    b.enter(ri, 0, t, name);
+                    t += (dur * rng.jitter(cfg.noise)) as i64;
+                    b.leave(ri, 0, t, name);
+                }
+                clock[r] = t;
+            }
+        }
+    }
+    let end = clock.iter().copied().max().unwrap_or(0) + 1_000;
+    for r in 0..n {
+        b.leave(r, 0, end, "main");
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{self, CommUnit};
+    use crate::trace::builder::validate_nesting;
+    use std::collections::BTreeSet;
+
+    #[test]
+    fn wellformed() {
+        validate_nesting(&generate(&GenConfig::new(16, 2))).unwrap();
+    }
+
+    #[test]
+    fn three_volume_groups() {
+        let t = generate(&GenConfig::new(32, 4).with_noise(0.0));
+        let by_proc = analysis::comm_by_process(&t, CommUnit::Bytes).unwrap();
+        // total volume (sent + received) clusters into exactly 3 groups
+        let totals: BTreeSet<i64> = by_proc
+            .iter()
+            .map(|&(_, s, r)| (s + r) as i64)
+            .collect();
+        assert_eq!(totals.len(), 3, "{totals:?}");
+        // 4x8 grid: 4 corners, 16 edges, 12 interior
+        let sorted: Vec<i64> = totals.into_iter().collect();
+        let count_of = |v: i64| {
+            by_proc
+                .iter()
+                .filter(|&&(_, s, r)| (s + r) as i64 == v)
+                .count()
+        };
+        assert_eq!(count_of(sorted[0]), 4); // corners move least
+        assert_eq!(count_of(sorted[1]), 16); // edges
+        assert_eq!(count_of(sorted[2]), 12); // interior move most
+    }
+
+    #[test]
+    fn sweep_messages_causal() {
+        let t = generate(&GenConfig::new(16, 2));
+        let m = analysis::messages::match_messages(&t).unwrap();
+        let ts = t.timestamps().unwrap();
+        for &r in &m.recvs {
+            let s = m.send_of_recv[r as usize];
+            assert!(s >= 0 && ts[s as usize] <= ts[r as usize]);
+        }
+    }
+}

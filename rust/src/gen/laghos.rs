@@ -1,0 +1,186 @@
+//! Laghos Lagrangian-hydro model (paper Figs. 3, 4, 5).
+//!
+//! Ranks form a √n × √n (or near-square) 2-D Cartesian grid; each
+//! iteration exchanges faces with the 4-neighborhood — the symmetric,
+//! diagonal-banded comm matrix of Fig. 3. Message sizes fall in the three
+//! clusters of Fig. 4: *small* control packets (0–1350 B, most frequent),
+//! *large* fine-mesh faces (12150–13500 B, nearly as frequent), and
+//! *medium* coarse-mesh faces (5400–6750 B, rare) in roughly the paper's
+//! 49k : 15k : 46k proportions.
+
+use super::GenConfig;
+use crate::trace::{Trace, TraceBuilder, TraceMeta};
+use crate::util::rng::Rng;
+
+/// Nearest-to-square factorization of n.
+pub fn grid_dims(n: usize) -> (usize, usize) {
+    let mut best = (1, n);
+    let mut d = 1;
+    while d * d <= n {
+        if n % d == 0 {
+            best = (d, n / d);
+        }
+        d += 1;
+    }
+    best
+}
+
+pub fn generate(cfg: &GenConfig) -> Trace {
+    let (px, py) = grid_dims(cfg.ranks);
+    let n = cfg.ranks as i64;
+    let mut rng = Rng::new(cfg.seed ^ 0x6c616768);
+    let mut b = TraceBuilder::new();
+    b.set_meta(TraceMeta { format: String::new(), source: String::new(), app: "laghos".into() });
+
+    let neighbors = |r: usize| -> Vec<usize> {
+        let (x, y) = (r % px, r / px);
+        let mut out = Vec::with_capacity(4);
+        if x > 0 {
+            out.push(r - 1);
+        }
+        if x + 1 < px {
+            out.push(r + 1);
+        }
+        if y > 0 {
+            out.push(r - px);
+        }
+        if y + 1 < py {
+            out.push(r + px);
+        }
+        out
+    };
+
+    let mut clock = vec![0i64; cfg.ranks];
+    for r in 0..n {
+        b.enter(r, 0, 0, "main");
+    }
+    for it in 0..cfg.iterations {
+        // RK2 stage compute, then exchange
+        let mut sends: Vec<Vec<(usize, i64, i64)>> = vec![Vec::new(); cfg.ranks]; // (dst, ts, bytes)
+        for r in 0..cfg.ranks {
+            let ri = r as i64;
+            let mut t = clock[r];
+            for (name, dur) in [
+                ("UpdateMesh", 22_000.0),
+                ("ForceMult", 58_000.0),
+                ("MassInverse", 31_000.0),
+            ] {
+                b.enter(ri, 0, t, name);
+                t += (dur * rng.jitter(cfg.noise)) as i64;
+                b.leave(ri, 0, t, name);
+            }
+            b.enter(ri, 0, t, "MPI_Isend");
+            for dst in neighbors(r) {
+                // Decisions and sizes derive from a per-(iteration,
+                // undirected-edge) stream so both directions agree — the
+                // paper's Laghos comm matrix is symmetric (Fig. 3).
+                let (lo, hi) = (r.min(dst) as u64, r.max(dst) as u64);
+                let mut er = Rng::new(
+                    cfg.seed ^ (it as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                        ^ (lo << 20 | hi),
+                );
+                // small control packet: every neighbor, every iteration
+                let post = t + 150;
+                let small = er.range(64, 1350);
+                b.send(ri, 0, post, dst as i64, small, it as i64);
+                sends[r].push((dst, post, small));
+                // large fine-mesh face: ~94% of iterations
+                let (large_on, large) = (er.chance(0.94), er.range(12_150, 13_500));
+                if large_on {
+                    let post = t + 400;
+                    b.send(ri, 0, post, dst as i64, large, it as i64);
+                    sends[r].push((dst, post, large));
+                }
+                // medium coarse face: ~30% of iterations
+                let (med_on, medium) = (er.chance(0.30), er.range(5_400, 6_750));
+                if med_on {
+                    let post = t + 650;
+                    b.send(ri, 0, post, dst as i64, medium, it as i64);
+                    sends[r].push((dst, post, medium));
+                }
+            }
+            t += 4_000;
+            b.leave(ri, 0, t, "MPI_Isend");
+            clock[r] = t;
+        }
+        // receives: each rank receives everything addressed to it, FIFO
+        for r in 0..cfg.ranks {
+            let ri = r as i64;
+            let mut inbound: Vec<(usize, i64, i64)> = Vec::new(); // (src, send_ts, bytes)
+            for (src, sl) in sends.iter().enumerate() {
+                for &(dst, ts, bytes) in sl {
+                    if dst == r {
+                        inbound.push((src, ts, bytes));
+                    }
+                }
+            }
+            inbound.sort_by_key(|&(_, ts, _)| ts);
+            let mut t = clock[r];
+            b.enter(ri, 0, t, "MPI_Waitall");
+            for (src, s_ts, bytes) in inbound {
+                let done = (t + 120).max(s_ts + 1_800);
+                b.recv(ri, 0, done, src as i64, bytes, it as i64);
+                t = done;
+            }
+            t += 900;
+            b.leave(ri, 0, t, "MPI_Waitall");
+            clock[r] = t;
+        }
+    }
+    let end = clock.iter().copied().max().unwrap_or(0) + 1_000;
+    for r in 0..n {
+        b.leave(r, 0, end, "main");
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{self, CommUnit};
+    use crate::trace::builder::validate_nesting;
+
+    #[test]
+    fn grid_dims_square() {
+        assert_eq!(grid_dims(32), (4, 8));
+        assert_eq!(grid_dims(16), (4, 4));
+        assert_eq!(grid_dims(7), (1, 7));
+    }
+
+    #[test]
+    fn wellformed() {
+        validate_nesting(&generate(&GenConfig::new(16, 4))).unwrap();
+    }
+
+    #[test]
+    fn comm_matrix_is_symmetric_and_banded() {
+        let t = generate(&GenConfig::new(32, 6));
+        let m = analysis::comm_matrix(&t, CommUnit::Count).unwrap();
+        assert!(m.is_symmetric(), "4-neighborhood must be symmetric in count");
+        // near-neighbor: all volume within the 2-D bands (offsets 1 and px=4)
+        let mv = analysis::comm_matrix(&t, CommUnit::Bytes).unwrap();
+        assert!(mv.diagonal_fraction(4) > 0.999);
+        // nothing on the diagonal itself
+        for i in 0..m.n() {
+            assert_eq!(m.data[i][i], 0.0);
+        }
+    }
+
+    #[test]
+    fn three_message_size_clusters() {
+        let t = generate(&GenConfig::new(32, 20));
+        let (counts, edges) = analysis::message_histogram(&t, 10).unwrap();
+        // paper Fig. 4: mass at bins 0 (small), ~4 (medium), 9 (large);
+        // empty gap bins in between
+        assert!(counts[0] > 0, "{counts:?}");
+        assert!(counts[9] > 0, "{counts:?}");
+        assert!(counts[4] > 0, "{counts:?}");
+        assert_eq!(counts[2], 0, "{counts:?}");
+        assert_eq!(counts[6] + counts[7], 0, "{counts:?}");
+        // frequencies: small ≈ large >> medium
+        assert!(counts[0] as f64 > 2.0 * counts[4] as f64, "{counts:?}");
+        assert!(counts[9] as f64 > 2.0 * counts[4] as f64, "{counts:?}");
+        // top edge reaches the large cluster
+        assert!(*edges.last().unwrap() <= 13_500.0);
+    }
+}

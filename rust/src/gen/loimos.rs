@@ -1,0 +1,195 @@
+//! Loimos epidemic-simulation model (Charm++; paper Figs. 7, 9).
+//!
+//! Entry methods per simulated day: `Computation` (balanced base),
+//! `ComputeInteractions()` (dominant, imbalanced), `SendVisitMessages()`
+//! and `ReceiveVisitMessages(const VisitMessage &impl_noname_1)` (message
+//! processing, most imbalanced), plus explicit `Idle` regions, exactly the
+//! rows of the paper's Fig. 7 table.
+//!
+//! Imbalance model: ranks congruent to {21, 22, 23, 29} mod 32 hold the
+//! densest population chares (~2× interactions); Fig. 7's "top processes"
+//! lists exactly 21/22/23/29-region ranks. Underloaded ranks idle while
+//! waiting for the overloaded ones — so the *most idle* ranks are the
+//! least loaded ones, the Fig. 9 outlier structure.
+
+use super::GenConfig;
+use crate::trace::{Trace, TraceBuilder, TraceMeta};
+use crate::util::rng::Rng;
+
+const RECEIVE_EP: &str = "ReceiveVisitMessages(const VisitMessage &impl_noname_1)";
+
+/// Work multiplier for a rank (dense-population chares).
+fn load_factor(r: usize) -> f64 {
+    match r % 32 {
+        21 | 22 | 23 | 29 => 2.0,
+        24 | 30 => 1.35,
+        _ => 1.0,
+    }
+}
+
+pub fn generate(cfg: &GenConfig) -> Trace {
+    let n = cfg.ranks as i64;
+    let mut rng = Rng::new(cfg.seed ^ 0x6c6f696d);
+    let mut b = TraceBuilder::new();
+    b.set_meta(TraceMeta { format: String::new(), source: String::new(), app: "loimos".into() });
+
+    let mut clock = vec![0i64; cfg.ranks];
+    for r in 0..n {
+        b.enter(r, 0, 0, "main");
+    }
+    for day in 0..cfg.iterations {
+        let mut send_info: Vec<Vec<(usize, i64, i64)>> = vec![Vec::new(); cfg.ranks];
+        for r in 0..cfg.ranks {
+            let ri = r as i64;
+            let lf = load_factor(r);
+            let mut t = clock[r];
+            b.enter(ri, 0, t, "Computation");
+            t += (90_000.0 * rng.jitter(cfg.noise)) as i64;
+            b.leave(ri, 0, t, "Computation");
+            b.enter(ri, 0, t, "ComputeInteractions()");
+            t += (120_000.0 * lf * rng.jitter(cfg.noise)) as i64;
+            b.leave(ri, 0, t, "ComputeInteractions()");
+            b.enter(ri, 0, t, "SendVisitMessages()");
+            // dense chares emit more visit messages, and visits *target*
+            // dense locations — so the dense family also receives (and
+            // processes) disproportionately many messages, which is what
+            // makes ReceiveVisitMessages the most imbalanced entry in the
+            // paper's Fig. 7.
+            let msgs = (3.0 * lf) as usize;
+            for _ in 0..msgs {
+                let dst = loop {
+                    let cand = rng.below(cfg.ranks as u64) as usize;
+                    if rng.chance(load_factor(cand) / 2.0) {
+                        break cand;
+                    }
+                };
+                if dst == r {
+                    continue;
+                }
+                let post = t + rng.range(100, 900);
+                let bytes = rng.range(256, 2_048);
+                b.send(ri, 0, post, dst as i64, bytes, day as i64);
+                send_info[r].push((dst, post, bytes));
+            }
+            t += (25_000.0 * lf * rng.jitter(cfg.noise)) as i64;
+            b.leave(ri, 0, t, "SendVisitMessages()");
+            clock[r] = t;
+        }
+        // message processing + idle until the slowest rank finishes the day
+        let mut recv_end = vec![0i64; cfg.ranks];
+        for r in 0..cfg.ranks {
+            let ri = r as i64;
+            let mut inbound: Vec<(usize, i64, i64)> = Vec::new();
+            for (src, sl) in send_info.iter().enumerate() {
+                for &(dst, ts, bytes) in sl {
+                    if dst == r {
+                        inbound.push((src, ts, bytes));
+                    }
+                }
+            }
+            inbound.sort_by_key(|&(_, ts, _)| ts);
+            let mut t = clock[r];
+            // Charm++ is message-driven: each delivery is one entry-method
+            // execution; the PE is *Idle* while waiting for the next
+            // message (not inside the entry). Time in ReceiveVisitMessages
+            // is therefore inbound-count x processing-cost, both of which
+            // are larger on dense chares.
+            for (src, s_ts, bytes) in inbound {
+                let arrive = s_ts + 1_000;
+                if arrive > t + 500 {
+                    b.enter(ri, 0, t, "Idle");
+                    b.leave(ri, 0, arrive, "Idle");
+                    t = arrive;
+                }
+                b.enter(ri, 0, t, RECEIVE_EP);
+                b.recv(ri, 0, t + 100, src as i64, bytes, day as i64);
+                t += 150 + (4_000.0 * load_factor(r) * rng.jitter(cfg.noise)) as i64;
+                b.leave(ri, 0, t, RECEIVE_EP);
+            }
+            recv_end[r] = t;
+        }
+        // synchronize the day boundary: others idle until the slowest rank
+        let day_end = recv_end.iter().copied().max().unwrap_or(0) + 1_000;
+        for r in 0..cfg.ranks {
+            let ri = r as i64;
+            if recv_end[r] + 100 < day_end {
+                b.enter(ri, 0, recv_end[r], "Idle");
+                b.leave(ri, 0, day_end, "Idle");
+            }
+            clock[r] = day_end;
+        }
+    }
+    let end = clock.iter().copied().max().unwrap_or(0) + 500;
+    for r in 0..n {
+        b.leave(r, 0, end, "main");
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{self, Metric};
+    use crate::trace::builder::validate_nesting;
+
+    #[test]
+    fn wellformed() {
+        validate_nesting(&generate(&GenConfig::new(8, 3))).unwrap();
+    }
+
+    #[test]
+    fn overloaded_ranks_lead_imbalance() {
+        let mut t = generate(&GenConfig::new(64, 4).with_noise(0.02));
+        let rows = analysis::load_imbalance(&mut t, Metric::ExcTime, 5).unwrap();
+        let ci = rows
+            .iter()
+            .find(|r| r.name == "ComputeInteractions()")
+            .unwrap();
+        assert!(ci.imbalance > 1.4, "imbalance={}", ci.imbalance);
+        // top processes come from the {21,22,23,29} (mod 32) family
+        for p in &ci.top_processes {
+            assert!(
+                matches!(p % 32, 21 | 22 | 23 | 29),
+                "unexpected top process {p}: {:?}",
+                ci.top_processes
+            );
+        }
+        // the paper's most-imbalanced function is ReceiveVisitMessages
+        let rv = rows.iter().find(|r| r.name == RECEIVE_EP).unwrap();
+        assert!(rv.imbalance > 1.0);
+    }
+
+    #[test]
+    fn idle_outliers_are_underloaded_ranks() {
+        let mut t = generate(&GenConfig::new(64, 4).with_noise(0.02));
+        let (most, least) = analysis::idle_outliers(&mut t, 4, None).unwrap();
+        // most idle ranks are NOT in the overloaded family
+        for row in &most {
+            assert!(
+                !matches!(row.proc % 32, 21 | 22 | 23 | 29),
+                "overloaded rank {} among most idle",
+                row.proc
+            );
+        }
+        // least idle ranks are exactly the overloaded family
+        for row in &least {
+            assert!(
+                matches!(row.proc % 32, 21 | 22 | 23 | 29),
+                "rank {} unexpectedly least-idle",
+                row.proc
+            );
+        }
+    }
+
+    #[test]
+    fn compute_interactions_is_most_time_consuming_entry() {
+        let mut t = generate(&GenConfig::new(32, 4));
+        let fp = analysis::flat_profile(&mut t, Metric::ExcTime).unwrap();
+        let non_idle: Vec<&str> = fp
+            .iter()
+            .map(|r| r.name.as_str())
+            .filter(|n| *n != "Idle" && *n != "main")
+            .collect();
+        assert_eq!(non_idle[0], "ComputeInteractions()");
+    }
+}

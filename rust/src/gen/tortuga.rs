@@ -1,0 +1,156 @@
+//! Tortuga CFD model (paper Figs. 2, 8, 12).
+//!
+//! Structure per rank and iteration (inside a `time-loop` region, the
+//! anchor the paper's Fig. 8 pattern detection uses):
+//! `computeRhs` (dominant) → `gradC2C` → `setGhostCvsInterfaces` (posts
+//! halo sends) → `MPI_Wait` (receives) → `endGhostCvsInterfaces`.
+//!
+//! Strong-scaling model: per-rank work scales ~1/ranks, but a
+//! surface-to-volume overhead factor grows past 32 ranks, so the
+//! *aggregate* time of computeRhs/gradC2C jumps from 32→64 and then
+//! plateaus — the Fig. 12 signature (computeRhs ≈ 3.0e8 → 3.6e8 → 4.5e8 →
+//! 4.4e8 → 4.4e8 ns summed, for 16→256 ranks).
+
+use super::GenConfig;
+use crate::trace::{Trace, TraceBuilder, TraceMeta};
+use crate::util::rng::Rng;
+
+/// Aggregate-work bump factor vs. rank count (fitted to Fig. 12's shape).
+fn bump(ranks: usize) -> f64 {
+    match ranks {
+        0..=16 => 1.0,
+        17..=32 => 1.19,
+        33..=64 => 1.50,
+        65..=128 => 1.45,
+        _ => 1.44,
+    }
+}
+
+pub fn generate(cfg: &GenConfig) -> Trace {
+    let n = cfg.ranks as i64;
+    let mut rng = Rng::new(cfg.seed ^ 0x70727475);
+    let mut b = TraceBuilder::new();
+    b.set_meta(TraceMeta { format: String::new(), source: String::new(), app: "tortuga".into() });
+
+    // per-rank, per-iteration base durations (ns): aggregate over ranks
+    // reproduces the paper's relative function magnitudes.
+    let agg = bump(cfg.ranks);
+    let per = |total_ns: f64| total_ns * agg / cfg.ranks as f64;
+    let d_rhs = per(3.0e6);
+    let d_grad = per(0.55e6);
+    let d_set = per(0.18e6);
+    let d_end = per(0.16e6);
+    let d_wait = per(0.35e6);
+    let halo_bytes = (4.0e5 / (cfg.ranks as f64).sqrt()) as i64;
+
+    let mut clock = vec![0i64; cfg.ranks];
+    for r in 0..n {
+        b.enter(r, 0, 0, "main");
+    }
+    for it in 0..cfg.iterations {
+        let mut send_ts = vec![[0i64; 2]; cfg.ranks];
+        for r in 0..cfg.ranks {
+            let ri = r as i64;
+            let t0 = clock[r];
+            b.enter(ri, 0, t0, "time-loop");
+            let mut t = t0;
+            for (name, dur) in [("computeRhs", d_rhs), ("gradC2C", d_grad)] {
+                b.enter(ri, 0, t, name);
+                t += (dur * rng.jitter(cfg.noise)) as i64;
+                b.leave(ri, 0, t, name);
+            }
+            b.enter(ri, 0, t, "setGhostCvsInterfaces");
+            for (k, dst) in [(ri + 1).rem_euclid(n), (ri - 1).rem_euclid(n)]
+                .into_iter()
+                .enumerate()
+            {
+                let post = t + 200 + (k as i64) * 300;
+                b.send(ri, 0, post, dst, halo_bytes, it as i64);
+                send_ts[r][k] = post;
+            }
+            t += (d_set * rng.jitter(cfg.noise)) as i64;
+            b.leave(ri, 0, t, "setGhostCvsInterfaces");
+            clock[r] = t;
+        }
+        for r in 0..cfg.ranks {
+            let ri = r as i64;
+            let left = (r + cfg.ranks - 1) % cfg.ranks;
+            let right = (r + 1) % cfg.ranks;
+            let mut t = clock[r];
+            b.enter(ri, 0, t, "MPI_Wait");
+            for (src, s_ts) in [(left, send_ts[left][0]), (right, send_ts[right][1])] {
+                let done = (t + 200).max(s_ts + 2_000);
+                b.recv(ri, 0, done, src as i64, halo_bytes, it as i64);
+                t = done;
+            }
+            t += (d_wait * 0.3 * rng.jitter(cfg.noise)) as i64;
+            b.leave(ri, 0, t, "MPI_Wait");
+            b.enter(ri, 0, t, "endGhostCvsInterfaces");
+            t += (d_end * rng.jitter(cfg.noise)) as i64;
+            b.leave(ri, 0, t, "endGhostCvsInterfaces");
+            b.leave(ri, 0, t, "time-loop");
+            clock[r] = t;
+        }
+    }
+    let end = clock.iter().copied().max().unwrap_or(0) + 1_000;
+    for r in 0..n {
+        b.leave(r, 0, end, "main");
+    }
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{self, Metric};
+    use crate::trace::builder::validate_nesting;
+
+    #[test]
+    fn wellformed() {
+        let t = generate(&GenConfig::new(8, 5));
+        validate_nesting(&t).unwrap();
+    }
+
+    #[test]
+    fn compute_rhs_dominates_flat_profile() {
+        let mut t = generate(&GenConfig::new(16, 5));
+        let fp = analysis::flat_profile(&mut t, Metric::ExcTime).unwrap();
+        assert_eq!(fp[0].name, "computeRhs");
+        let grad = fp.iter().position(|r| r.name == "gradC2C").unwrap();
+        assert!(grad <= 3, "{fp:?}");
+    }
+
+    #[test]
+    fn scaling_break_at_64() {
+        // aggregate computeRhs time jumps 32 -> 64 and plateaus after
+        let mut agg = Vec::new();
+        for ranks in [16usize, 32, 64, 128] {
+            let mut t = generate(&GenConfig::new(ranks, 3).with_noise(0.01));
+            let fp = analysis::flat_profile(&mut t, Metric::ExcTime).unwrap();
+            let rhs = fp.iter().find(|r| r.name == "computeRhs").unwrap().value;
+            agg.push(rhs);
+        }
+        let jump_32_64 = agg[2] / agg[1];
+        let jump_64_128 = (agg[3] / agg[2] - 1.0).abs();
+        assert!(jump_32_64 > 1.15, "32->64 jump missing: {agg:?}");
+        assert!(jump_64_128 < 0.12, "should plateau after 64: {agg:?}");
+    }
+
+    #[test]
+    fn time_loop_anchors_pattern_detection() {
+        let mut t = generate(&GenConfig::new(4, 8).with_noise(0.02));
+        let pats = analysis::detect_pattern(
+            &mut t,
+            Some("time-loop"),
+            &analysis::PatternConfig::default(),
+        )
+        .unwrap();
+        assert_eq!(pats.len(), 8);
+        // iterations have similar durations
+        let lens: Vec<i64> = pats.iter().map(|p| p.end - p.start).collect();
+        let mean = lens.iter().sum::<i64>() as f64 / lens.len() as f64;
+        for &l in &lens[..lens.len() - 1] {
+            assert!((l as f64 - mean).abs() < 0.4 * mean, "{lens:?}");
+        }
+    }
+}

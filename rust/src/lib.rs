@@ -1,0 +1,31 @@
+//! # Pipit-RS
+//!
+//! A Rust + JAX + Pallas reproduction of *"Pipit: Scripting the analysis of
+//! parallel execution traces"* (Bhatele et al., 2023).
+//!
+//! Pipit-RS reads parallel execution traces in several file formats into a
+//! uniform columnar event table ([`trace::Trace`]), and provides the paper's
+//! full analysis API ([`analysis`]): caller/callee matching, calling-context
+//! trees, inclusive/exclusive metrics, flat and time profiles, communication
+//! analyses, load-imbalance / idle-time / lateness / critical-path detection,
+//! matrix-profile pattern detection, and scripted multi-run comparison.
+//!
+//! Numeric hot spots (pattern detection, binned time profiles) execute
+//! AOT-compiled JAX+Pallas HLO artifacts through the PJRT runtime
+//! ([`runtime`]); Python never runs on the analysis path.
+//!
+//! ```no_run
+//! use pipit::trace::Trace;
+//! let mut t = Trace::from_csv("foo-bar.csv").unwrap();
+//! let profile = pipit::analysis::flat_profile(&mut t, pipit::analysis::Metric::ExcTime);
+//! ```
+
+pub mod util;
+pub mod df;
+pub mod trace;
+pub mod readers;
+pub mod gen;
+pub mod analysis;
+pub mod runtime;
+pub mod coordinator;
+pub mod viz;

@@ -1,0 +1,11 @@
+//! `pipit` — the L3 coordinator binary.
+//!
+//! See `pipit help` (or [`pipit::coordinator::cli::USAGE`]).
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = pipit::coordinator::cli::run(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,241 @@
+//! Chrome Trace Viewer JSON reader / writer.
+//!
+//! This is the format Nsight Systems exports and PyTorch Profiler emits
+//! natively, so one reader covers both rows of the paper's format list.
+//! Supported phases: `B`/`E` (duration begin/end), `X` (complete event =
+//! begin+end with `dur`), `i`/`I` (instant), `M` (metadata: process_name).
+//! Timestamps are microseconds (float) → scaled to ns. Message payloads
+//! travel in `args` (`partner`, `size`, `tag`) on instant events named
+//! `MpiSend`/`MpiRecv` (also recognized: `ncclSend`/`ncclRecv` records).
+
+use crate::df::NULL_I64;
+use crate::trace::*;
+use crate::util::json::{arr, num, obj, s, Json};
+use anyhow::{bail, Context, Result};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Read a Chrome Trace JSON file.
+pub fn read(path: &Path) -> Result<Trace> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let root = Json::parse(&text)?;
+    let events = match &root {
+        Json::Arr(a) => a.as_slice(),
+        Json::Obj(_) => root
+            .get("traceEvents")
+            .and_then(|v| v.as_arr())
+            .context("object form requires 'traceEvents' array")?,
+        _ => bail!("chrome trace must be an array or object"),
+    };
+
+    let mut b = TraceBuilder::new();
+    let mut app = String::new();
+    // X events become Enter+Leave; builder sorts canonically at finish.
+    for (i, e) in events.iter().enumerate() {
+        let ph = e.get_str("ph").unwrap_or("X");
+        let name = e.get_str("name").unwrap_or("<unnamed>");
+        let pid = e.get_f64("pid").unwrap_or(0.0) as i64;
+        let tid = e.get_f64("tid").unwrap_or(0.0) as i64;
+        let ts_us = e.get_f64("ts").unwrap_or(0.0);
+        let ts = (ts_us * 1000.0).round() as i64;
+        match ph {
+            "B" => b.enter(pid, tid, ts, name),
+            "E" => b.leave(pid, tid, ts, name),
+            "X" => {
+                let dur = e
+                    .get_f64("dur")
+                    .with_context(|| format!("event {i}: X without dur"))?;
+                let te = ts + (dur * 1000.0).round() as i64;
+                b.enter(pid, tid, ts, name);
+                b.leave(pid, tid, te, name);
+            }
+            "i" | "I" | "R" => {
+                let args = e.get("args");
+                let geti = |k: &str| {
+                    args.and_then(|a| a.get_f64(k))
+                        .map(|v| v as i64)
+                        .unwrap_or(NULL_I64)
+                };
+                match name {
+                    SEND_EVENT | "ncclSend" => {
+                        b.send(pid, tid, ts, geti("partner"), geti("size"), geti("tag"))
+                    }
+                    RECV_EVENT | "ncclRecv" => {
+                        b.recv(pid, tid, ts, geti("partner"), geti("size"), geti("tag"))
+                    }
+                    _ => b.instant(pid, tid, ts, name),
+                }
+            }
+            "M" => {
+                if name == "process_name" {
+                    if let Some(n) = e.get("args").and_then(|a| a.get_str("name")) {
+                        app = n.to_string();
+                    }
+                }
+            }
+            // counters, flow, async events: out of scope, skipped
+            _ => {}
+        }
+    }
+    b.set_meta(TraceMeta {
+        format: "chrome".into(),
+        source: path.display().to_string(),
+        app,
+    });
+    Ok(b.finish())
+}
+
+/// Write a trace as Chrome Trace JSON (B/E + instant events).
+pub fn write(trace: &Trace, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    let ts = trace.events.i64s(COL_TS)?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let th = trace.events.i64s(COL_THREAD)?;
+    let pa = trace.events.i64s(COL_PARTNER)?;
+    let ms = trace.events.i64s(COL_MSG_SIZE)?;
+    let tg = trace.events.i64s(COL_TAG)?;
+
+    writeln!(w, "{{\"traceEvents\":[")?;
+    let mut first = true;
+    for i in 0..trace.len() {
+        let etype = edict.resolve(et[i]).unwrap_or("");
+        let name = ndict.resolve(nm[i]).unwrap_or("");
+        let ph = match etype {
+            ENTER => "B",
+            LEAVE => "E",
+            INSTANT => "i",
+            _ => continue,
+        };
+        let mut fields = vec![
+            ("name", s(name)),
+            ("ph", s(ph)),
+            ("ts", num(ts[i] as f64 / 1000.0)),
+            ("pid", num(pr[i] as f64)),
+            ("tid", num(th[i] as f64)),
+        ];
+        if ph == "i" && pa[i] != NULL_I64 {
+            fields.push((
+                "args",
+                obj(vec![
+                    ("partner", num(pa[i] as f64)),
+                    ("size", num(ms[i] as f64)),
+                    ("tag", num(if tg[i] == NULL_I64 { 0.0 } else { tg[i] as f64 })),
+                ]),
+            ));
+        }
+        if !first {
+            writeln!(w, ",")?;
+        }
+        first = false;
+        write!(w, "{}", obj(fields).dumps())?;
+    }
+    writeln!(w, "\n]}}")?;
+    Ok(())
+}
+
+/// Convenience: serialize a list of events as PyTorch-profiler-style JSON
+/// (array form, X events) — exercised by tests to prove both JSON shapes
+/// parse identically.
+pub fn write_array_form(trace: &Trace, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)?;
+    let mut w = BufWriter::new(f);
+    let ts = trace.events.i64s(COL_TS)?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let th = trace.events.i64s(COL_THREAD)?;
+
+    // Convert matched Enter/Leave to X events with dur.
+    let match_rows = crate::analysis::match_caller_callee::matching_events(trace)?;
+    let mut items: Vec<Json> = Vec::new();
+    for i in 0..trace.len() {
+        let etype = edict.resolve(et[i]).unwrap_or("");
+        if etype == ENTER {
+            let j = match_rows[i];
+            if j < 0 {
+                continue;
+            }
+            let dur_us = (ts[j as usize] - ts[i]) as f64 / 1000.0;
+            items.push(obj(vec![
+                ("name", s(ndict.resolve(nm[i]).unwrap_or(""))),
+                ("ph", s("X")),
+                ("ts", num(ts[i] as f64 / 1000.0)),
+                ("dur", num(dur_us)),
+                ("pid", num(pr[i] as f64)),
+                ("tid", num(th[i] as f64)),
+            ]));
+        }
+    }
+    write!(w, "{}", arr(items).dumps())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::builder::validate_nesting;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pipit_chrome_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn reads_object_form_with_b_e_events() {
+        let src = r#"{"traceEvents":[
+            {"name":"main","ph":"B","ts":0,"pid":0,"tid":0},
+            {"name":"gemm","ph":"B","ts":10.5,"pid":0,"tid":0},
+            {"name":"gemm","ph":"E","ts":20.5,"pid":0,"tid":0},
+            {"name":"main","ph":"E","ts":100,"pid":0,"tid":0},
+            {"name":"process_name","ph":"M","pid":0,"args":{"name":"axonn"}}
+        ]}"#;
+        let p = tmp("obj.json");
+        std::fs::write(&p, src).unwrap();
+        let t = read(&p).unwrap();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.meta.app, "axonn");
+        assert_eq!(t.timestamps().unwrap()[1], 10_500); // µs -> ns
+        validate_nesting(&t).unwrap();
+    }
+
+    #[test]
+    fn reads_array_form_with_x_events() {
+        let src = r#"[
+            {"name":"step","ph":"X","ts":0,"dur":100,"pid":1,"tid":0},
+            {"name":"kernel","ph":"X","ts":10,"dur":30,"pid":1,"tid":0}
+        ]"#;
+        let p = tmp("arr.json");
+        std::fs::write(&p, src).unwrap();
+        let t = read(&p).unwrap();
+        assert_eq!(t.len(), 4); // two X -> two Enter+Leave pairs
+        assert_eq!(validate_nesting(&t).unwrap(), 2);
+    }
+
+    #[test]
+    fn roundtrip_preserves_messages() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "MPI_Send");
+        b.send(0, 0, 500, 1, 2048, 9);
+        b.leave(0, 0, 1000, "MPI_Send");
+        let t = b.finish();
+        let p = tmp("rt.json");
+        write(&t, &p).unwrap();
+        let t2 = read(&p).unwrap();
+        assert_eq!(t2.len(), 3);
+        assert_eq!(t2.events.i64s(COL_PARTNER).unwrap()[1], 1);
+        assert_eq!(t2.events.i64s(COL_MSG_SIZE).unwrap()[1], 2048);
+    }
+
+    #[test]
+    fn rejects_x_without_dur() {
+        let p = tmp("bad.json");
+        std::fs::write(&p, r#"[{"name":"a","ph":"X","ts":0}]"#).unwrap();
+        assert!(read(&p).is_err());
+    }
+}

@@ -1,0 +1,248 @@
+//! CSV trace reader / writer (paper Fig. 1).
+//!
+//! Header names follow the canonical schema; `Timestamp (s)` is accepted
+//! and scaled to ns. Only `Timestamp`, `Event Type`, `Name`, `Process` are
+//! required — remaining columns default to null / 0. Fields containing
+//! commas (C++ signatures like `f(const A &, int)`) are double-quoted per
+//! RFC 4180.
+
+use crate::df::NULL_I64;
+use crate::trace::*;
+use anyhow::{bail, Context, Result};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+
+/// Read a CSV trace file.
+pub fn read(path: &Path) -> Result<Trace> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut lines = text.lines();
+    let header = lines.next().context("empty csv")?;
+    let cols = split_csv_line(header);
+    let mut idx_ts = None;
+    let mut ts_scale = 1i64;
+    let (mut idx_type, mut idx_name, mut idx_proc) = (None, None, None);
+    let (mut idx_thread, mut idx_partner, mut idx_size, mut idx_tag) = (None, None, None, None);
+    for (i, c) in cols.iter().enumerate() {
+        match c.trim() {
+            "Timestamp (ns)" => idx_ts = Some(i),
+            "Timestamp (s)" => {
+                idx_ts = Some(i);
+                ts_scale = 1_000_000_000;
+            }
+            "Event Type" => idx_type = Some(i),
+            "Name" => idx_name = Some(i),
+            "Process" => idx_proc = Some(i),
+            "Thread" => idx_thread = Some(i),
+            "Partner" => idx_partner = Some(i),
+            "Msg Size" => idx_size = Some(i),
+            "Tag" => idx_tag = Some(i),
+            other => bail!("unknown csv column '{other}'"),
+        }
+    }
+    let (idx_ts, idx_type, idx_name, idx_proc) = match (idx_ts, idx_type, idx_name, idx_proc) {
+        (Some(a), Some(b), Some(c), Some(d)) => (a, b, c, d),
+        _ => bail!("csv must have Timestamp, Event Type, Name, Process columns"),
+    };
+
+    let mut b = TraceBuilder::new();
+    b.set_meta(TraceMeta {
+        format: "csv".into(),
+        source: path.display().to_string(),
+        app: String::new(),
+    });
+    for (lineno, line) in lines.enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let f = split_csv_line(line);
+        let get = |i: Option<usize>| i.and_then(|i| f.get(i)).map(|s| s.trim());
+        let ts: f64 = get(Some(idx_ts))
+            .context("missing ts")?
+            .parse()
+            .with_context(|| format!("line {}: bad timestamp", lineno + 2))?;
+        let ts = (ts * ts_scale as f64).round() as i64;
+        let etype = get(Some(idx_type)).context("missing type")?;
+        let name = get(Some(idx_name)).context("missing name")?;
+        let proc: i64 = get(Some(idx_proc))
+            .context("missing process")?
+            .parse()
+            .with_context(|| format!("line {}: bad process", lineno + 2))?;
+        let thread: i64 = get(idx_thread).and_then(|s| s.parse().ok()).unwrap_or(0);
+        let partner: i64 = get(idx_partner)
+            .filter(|s| !s.is_empty())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(NULL_I64);
+        let size: i64 = get(idx_size)
+            .filter(|s| !s.is_empty())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(NULL_I64);
+        let tag: i64 = get(idx_tag)
+            .filter(|s| !s.is_empty())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(NULL_I64);
+        match etype {
+            ENTER => b.enter(proc, thread, ts, name),
+            LEAVE => b.leave(proc, thread, ts, name),
+            INSTANT => match name {
+                SEND_EVENT => b.send(proc, thread, ts, partner, size, tag),
+                RECV_EVENT => b.recv(proc, thread, ts, partner, size, tag),
+                _ => b.instant(proc, thread, ts, name),
+            },
+            other => bail!("line {}: unknown event type '{other}'", lineno + 2),
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Write a trace as CSV (the inverse of [`read`]).
+pub fn write(trace: &Trace, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(
+        w,
+        "Timestamp (ns), Event Type, Name, Process, Thread, Partner, Msg Size, Tag"
+    )?;
+    let ts = trace.events.i64s(COL_TS)?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let th = trace.events.i64s(COL_THREAD)?;
+    let pa = trace.events.i64s(COL_PARTNER)?;
+    let ms = trace.events.i64s(COL_MSG_SIZE)?;
+    let tg = trace.events.i64s(COL_TAG)?;
+    let opt = |v: i64| {
+        if v == NULL_I64 {
+            String::new()
+        } else {
+            v.to_string()
+        }
+    };
+    for i in 0..trace.len() {
+        writeln!(
+            w,
+            "{}, {}, {}, {}, {}, {}, {}, {}",
+            ts[i],
+            edict.resolve(et[i]).unwrap_or(""),
+            quote_csv(ndict.resolve(nm[i]).unwrap_or("")),
+            pr[i],
+            th[i],
+            opt(pa[i]),
+            opt(ms[i]),
+            opt(tg[i]),
+        )?;
+    }
+    Ok(())
+}
+
+/// Quote a field if it contains characters that break bare CSV.
+fn quote_csv(s: &str) -> String {
+    if s.contains(',') || s.contains('"') || s.contains('\n') {
+        format!("\"{}\"", s.replace('"', "\"\""))
+    } else {
+        s.to_string()
+    }
+}
+
+/// Split one CSV line honoring double quotes.
+fn split_csv_line(line: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    let mut in_quotes = false;
+    let mut chars = line.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if in_quotes => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cur.push('"');
+                } else {
+                    in_quotes = false;
+                }
+            }
+            '"' => in_quotes = true,
+            ',' if !in_quotes => {
+                out.push(std::mem::take(&mut cur));
+            }
+            c => cur.push(c),
+        }
+    }
+    out.push(cur);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::builder::validate_nesting;
+
+    #[test]
+    fn reads_paper_fig1_sample() {
+        let csv = "Timestamp (s), Event Type, Name, Process\n\
+                   0, Enter, main(), 0\n\
+                   1, Enter, foo(), 0\n\
+                   3, Enter, MPI_Send, 0\n\
+                   5, Leave, MPI_Send, 0\n\
+                   8, Enter, baz(), 0\n\
+                   18, Leave, baz(), 0\n\
+                   25, Leave, foo(), 0\n\
+                   100, Leave, main(), 0\n";
+        let dir = std::env::temp_dir().join("pipit_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("foo-bar.csv");
+        std::fs::write(&p, csv).unwrap();
+        let t = read(&p).unwrap();
+        assert_eq!(t.len(), 8);
+        // seconds scaled to ns, exactly as the paper's figure shows
+        assert_eq!(t.timestamps().unwrap()[1], 1_000_000_000);
+        assert_eq!(validate_nesting(&t).unwrap(), 3);
+    }
+
+    #[test]
+    fn roundtrip_with_messages_and_commas() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "f(const A &, int)");
+        b.enter(0, 0, 1, "MPI_Send");
+        b.send(0, 0, 2, 1, 4096, 3);
+        b.leave(0, 0, 5, "MPI_Send");
+        b.leave(0, 0, 9, "f(const A &, int)");
+        b.enter(1, 0, 0, "MPI_Recv");
+        b.recv(1, 0, 6, 0, 4096, 3);
+        b.leave(1, 0, 7, "MPI_Recv");
+        let t = b.finish();
+
+        let dir = std::env::temp_dir().join("pipit_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("rt.csv");
+        write(&t, &p).unwrap();
+        let t2 = read(&p).unwrap();
+        assert_eq!(t2.len(), t.len());
+        assert_eq!(t2.timestamps().unwrap(), t.timestamps().unwrap());
+        assert_eq!(
+            t2.events.i64s(COL_MSG_SIZE).unwrap(),
+            t.events.i64s(COL_MSG_SIZE).unwrap()
+        );
+        let (nm, dict) = t2.events.strs(COL_NAME).unwrap();
+        assert_eq!(dict.resolve(nm[0]), Some("f(const A &, int)"));
+    }
+
+    #[test]
+    fn split_handles_quotes() {
+        assert_eq!(split_csv_line("a,b,c"), vec!["a", "b", "c"]);
+        assert_eq!(
+            split_csv_line(r#"1,"f(a, b)",2"#),
+            vec!["1", "f(a, b)", "2"]
+        );
+        assert_eq!(split_csv_line(r#""say ""hi""""#), vec![r#"say "hi""#]);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        let dir = std::env::temp_dir().join("pipit_csv_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("bad.csv");
+        std::fs::write(&p, "Nope, Columns\n1,2\n").unwrap();
+        assert!(read(&p).is_err());
+    }
+}

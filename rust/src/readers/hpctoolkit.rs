@@ -1,0 +1,264 @@
+//! HPCToolkit-sim: call-path sample databases.
+//!
+//! HPCToolkit traces are *not* enter/leave streams — they are per-rank
+//! sequences of (timestamp, calling-context-node) samples plus a metadata
+//! file describing the calling-context tree. Reconstructing enter/leave
+//! events from consecutive call-path samples (pop to the common ancestor,
+//! push down to the new leaf) is the real algorithmic work of an
+//! HPCToolkit reader, and it is implemented here faithfully.
+//!
+//! Layout:
+//! ```text
+//! <dir>/meta.db    text: "NODE <id> <parent-id|-1> <name>" per line
+//! <dir>/trace.db   text: "SAMPLE <rank> <time_ns> <node-id>" per line
+//! ```
+
+use crate::trace::*;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// A calling-context tree from meta.db.
+#[derive(Debug, Default)]
+pub struct MetaCct {
+    /// node id -> (parent id or -1, name)
+    pub nodes: HashMap<i64, (i64, String)>,
+}
+
+impl MetaCct {
+    /// Root-to-node path of names (ids) for a node.
+    pub fn path(&self, mut id: i64) -> Result<Vec<i64>> {
+        let mut path = Vec::new();
+        let mut guard = 0;
+        while id != -1 {
+            path.push(id);
+            id = self
+                .nodes
+                .get(&id)
+                .with_context(|| format!("cct node {id} undefined"))?
+                .0;
+            guard += 1;
+            if guard > 10_000 {
+                bail!("cct cycle detected at node {id}");
+            }
+        }
+        path.reverse();
+        Ok(path)
+    }
+
+    pub fn name(&self, id: i64) -> &str {
+        self.nodes.get(&id).map(|(_, n)| n.as_str()).unwrap_or("<unknown>")
+    }
+}
+
+/// Read an HPCToolkit-sim database directory.
+pub fn read(dir: &Path) -> Result<Trace> {
+    let meta_text = std::fs::read_to_string(dir.join("meta.db"))
+        .with_context(|| format!("reading {}/meta.db", dir.display()))?;
+    let mut cct = MetaCct::default();
+    for (lineno, line) in meta_text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        if it.next() != Some("NODE") {
+            bail!("meta.db line {}: expected NODE", lineno + 1);
+        }
+        let id: i64 = it.next().context("NODE missing id")?.parse()?;
+        let parent: i64 = it.next().context("NODE missing parent")?.parse()?;
+        let name = line.splitn(4, char::is_whitespace).nth(3).unwrap_or("").trim();
+        if name.is_empty() {
+            bail!("meta.db line {}: empty node name", lineno + 1);
+        }
+        cct.nodes.insert(id, (parent, name.to_string()));
+    }
+
+    // samples per rank, in file order (must be time-sorted per rank)
+    let trace_text = std::fs::read_to_string(dir.join("trace.db"))
+        .with_context(|| format!("reading {}/trace.db", dir.display()))?;
+    let mut samples: HashMap<i64, Vec<(i64, i64)>> = HashMap::new();
+    for (lineno, line) in trace_text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        if it.next() != Some("SAMPLE") {
+            bail!("trace.db line {}: expected SAMPLE", lineno + 1);
+        }
+        let rank: i64 = it.next().context("missing rank")?.parse()?;
+        let t: i64 = it.next().context("missing time")?.parse()?;
+        let node: i64 = it.next().context("missing node")?.parse()?;
+        samples.entry(rank).or_default().push((t, node));
+    }
+
+    let mut ranks: Vec<i64> = samples.keys().copied().collect();
+    ranks.sort_unstable();
+
+    let mut b = TraceBuilder::new();
+    b.set_meta(TraceMeta {
+        format: "hpctoolkit".into(),
+        source: dir.display().to_string(),
+        app: String::new(),
+    });
+    for &r in &ranks {
+        let ss = &samples[&r];
+        // current call path, root-first, as node ids
+        let mut cur: Vec<i64> = Vec::new();
+        let mut last_t = 0i64;
+        for &(t, node) in ss {
+            if t < last_t {
+                bail!("rank {r}: samples not time-sorted");
+            }
+            last_t = t;
+            let path = cct.path(node)?;
+            // common prefix length
+            let mut k = 0;
+            while k < cur.len() && k < path.len() && cur[k] == path[k] {
+                k += 1;
+            }
+            // pop frames no longer on the path (deepest first)
+            for &id in cur[k..].iter().rev() {
+                b.leave(r, 0, t, cct.name(id));
+            }
+            // push new frames (shallowest first)
+            for &id in &path[k..] {
+                b.enter(r, 0, t, cct.name(id));
+            }
+            cur = path;
+        }
+        // close remaining frames at the last sample time
+        for &id in cur.iter().rev() {
+            b.leave(r, 0, last_t, cct.name(id));
+        }
+    }
+    Ok(b.finish())
+}
+
+/// Write an HPCToolkit-sim database: a CCT plus per-rank call-path samples.
+/// `samples[rank]` = time-sorted (time, node-id) pairs.
+pub fn write(
+    dir: &Path,
+    cct: &[(i64, i64, &str)],
+    samples: &HashMap<i64, Vec<(i64, i64)>>,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut meta = String::new();
+    for (id, parent, name) in cct {
+        writeln!(meta, "NODE {id} {parent} {name}")?;
+    }
+    std::fs::write(dir.join("meta.db"), meta)?;
+    let mut tr = String::new();
+    let mut ranks: Vec<&i64> = samples.keys().collect();
+    ranks.sort();
+    for r in ranks {
+        for (t, node) in &samples[r] {
+            writeln!(tr, "SAMPLE {r} {t} {node}")?;
+        }
+    }
+    std::fs::write(dir.join("trace.db"), tr)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::builder::validate_nesting;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join("pipit_hpct_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// CCT:  main(1) -> solve(2) -> {mpi_wait(3)}, main -> io(4)
+    fn sample_db(dir: &Path) {
+        let cct = vec![
+            (1, -1, "main"),
+            (2, 1, "solve"),
+            (3, 2, "MPI_Wait"),
+            (4, 1, "io"),
+        ];
+        let mut samples = HashMap::new();
+        samples.insert(
+            0i64,
+            vec![(0, 1), (10, 2), (20, 3), (30, 3), (40, 2), (50, 4), (60, 1)],
+        );
+        samples.insert(1i64, vec![(0, 1), (15, 2), (55, 1)]);
+        write(dir, &cct, &samples).unwrap();
+    }
+
+    #[test]
+    fn reconstructs_balanced_enter_leave() {
+        let dir = tmp("basic");
+        sample_db(&dir);
+        let t = read(&dir).unwrap();
+        validate_nesting(&t).unwrap();
+        assert_eq!(t.num_processes().unwrap(), 2);
+        // rank 0: main enters at 0, leaves at 60 (last sample)
+        let pr = t.processes().unwrap();
+        let ts = t.timestamps().unwrap();
+        let (et, ed) = t.events.strs(COL_TYPE).unwrap();
+        let (nm, nd) = t.events.strs(COL_NAME).unwrap();
+        let rows: Vec<usize> = (0..t.len()).filter(|&i| pr[i] == 0).collect();
+        let first = rows[0];
+        let last = *rows.last().unwrap();
+        assert_eq!(ed.resolve(et[first]), Some(ENTER));
+        assert_eq!(nd.resolve(nm[first]), Some("main"));
+        assert_eq!(ts[first], 0);
+        assert_eq!(ed.resolve(et[last]), Some(LEAVE));
+        assert_eq!(nd.resolve(nm[last]), Some("main"));
+        assert_eq!(ts[last], 60);
+    }
+
+    #[test]
+    fn call_path_transitions() {
+        let dir = tmp("trans");
+        sample_db(&dir);
+        let t = read(&dir).unwrap();
+        // On rank 0, between sample (40, solve) and (50, io) the reader must
+        // emit Leave solve then Enter io, both at t=50.
+        let pr = t.processes().unwrap();
+        let ts = t.timestamps().unwrap();
+        let (et, ed) = t.events.strs(COL_TYPE).unwrap();
+        let (nm, nd) = t.events.strs(COL_NAME).unwrap();
+        let mut saw_leave_solve = false;
+        let mut saw_enter_io = false;
+        for i in 0..t.len() {
+            if pr[i] == 0 && ts[i] == 50 {
+                let e = ed.resolve(et[i]).unwrap();
+                let n = nd.resolve(nm[i]).unwrap();
+                if e == LEAVE && n == "solve" {
+                    saw_leave_solve = true;
+                }
+                if e == ENTER && n == "io" {
+                    assert!(saw_leave_solve, "leave must precede enter");
+                    saw_enter_io = true;
+                }
+            }
+        }
+        assert!(saw_leave_solve && saw_enter_io);
+    }
+
+    #[test]
+    fn rejects_unsorted_samples() {
+        let dir = tmp("unsorted");
+        let cct = vec![(1, -1, "main")];
+        let mut samples = HashMap::new();
+        samples.insert(0i64, vec![(10, 1), (5, 1)]);
+        write(&dir, &cct, &samples).unwrap();
+        assert!(read(&dir).is_err());
+    }
+
+    #[test]
+    fn rejects_undefined_node() {
+        let dir = tmp("undef");
+        let cct = vec![(1, -1, "main")];
+        let mut samples = HashMap::new();
+        samples.insert(0i64, vec![(0, 99)]);
+        write(&dir, &cct, &samples).unwrap();
+        assert!(read(&dir).is_err());
+    }
+}

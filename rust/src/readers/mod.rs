@@ -1,0 +1,130 @@
+//! Format readers (and writers) — one per trace ecosystem.
+//!
+//! | module        | format                                                    |
+//! |---------------|-----------------------------------------------------------|
+//! | [`csv`]       | plain CSV (paper Fig. 1)                                  |
+//! | [`chrome`]    | Chrome Trace Viewer JSON (Nsight Systems, PyTorch)        |
+//! | [`otf2`]      | OTF2-sim: per-rank compressed binary streams + global defs|
+//! | [`projections`] | Projections-sim: Charm++-style .sts header + per-PE logs|
+//! | [`hpctoolkit`]| HPCToolkit-sim: CCT metadata + per-rank call-path samples |
+//!
+//! Each reader parses into the uniform schema of [`crate::trace`]; each
+//! writer emits what the paired reader parses (used by the synthetic app
+//! models in [`crate::gen`] and by round-trip tests). The heavyweight
+//! per-rank formats (OTF2, Projections) read their rank streams in
+//! parallel (paper §VI, Fig. 5 center).
+
+pub mod chrome;
+pub mod csv;
+pub mod hpctoolkit;
+pub mod otf2;
+pub mod projections;
+
+use crate::trace::Trace;
+use anyhow::{bail, Result};
+use std::path::Path;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Guess the format of `path` and read it.
+pub fn read_auto(path: &Path) -> Result<Trace> {
+    let ext = path.extension().and_then(|e| e.to_str()).unwrap_or("");
+    if path.is_dir() {
+        if path.join("defs.bin").exists() {
+            return otf2::read(path, 0);
+        }
+        if path.join("meta.db").exists() {
+            return hpctoolkit::read(path);
+        }
+        // Projections: any .sts file in the directory
+        for entry in std::fs::read_dir(path)? {
+            let p = entry?.path();
+            if p.extension().and_then(|e| e.to_str()) == Some("sts") {
+                return projections::read(path, 0);
+            }
+        }
+        bail!("unrecognized trace directory: {}", path.display());
+    }
+    match ext {
+        "csv" => csv::read(path),
+        "json" => chrome::read(path),
+        _ => bail!("unrecognized trace file: {}", path.display()),
+    }
+}
+
+/// Run `f(i)` for `i in 0..n` on up to `threads` worker threads, preserving
+/// result order. `threads == 0` means "number of available cores". This is
+/// the parallel-read substrate shared by the OTF2 and Projections readers.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let threads = effective_threads(threads).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
+    let slots_ptr = SlotsPtr(slots.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let fref = &f;
+            let nref = &next;
+            let sp = &slots_ptr;
+            scope.spawn(move || loop {
+                let i = nref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = fref(i);
+                // SAFETY: each index i is claimed by exactly one worker via
+                // the atomic counter, so writes to slots[i] never alias.
+                unsafe { *sp.0.add(i) = Some(r) };
+            });
+        }
+    });
+    slots.into_iter().map(|s| s.expect("worker wrote slot")).collect()
+}
+
+struct SlotsPtr<T>(*mut Option<Result<T>>);
+// SAFETY: workers write disjoint slots (unique index from the atomic
+// counter) and the vector outlives the scope.
+unsafe impl<T: Send> Sync for SlotsPtr<T> {}
+
+/// Resolve a `threads` parameter: 0 = available parallelism.
+pub fn effective_threads(threads: usize) -> usize {
+    if threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        threads
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let out = parallel_map(100, 4, |i| Ok(i * i)).unwrap();
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_serial_path() {
+        let out = parallel_map(5, 1, |i| Ok(i)).unwrap();
+        assert_eq!(out, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_map_propagates_errors() {
+        let r = parallel_map(10, 4, |i| {
+            if i == 7 {
+                bail!("boom")
+            } else {
+                Ok(i)
+            }
+        });
+        assert!(r.is_err());
+    }
+}

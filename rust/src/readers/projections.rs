@@ -1,0 +1,303 @@
+//! Projections-sim: Charm++-style text logs.
+//!
+//! Layout mirrors real Projections output: one `<app>.sts` summary file
+//! declaring the entry-method table, plus one `<app>.<pe>.log` text file
+//! per PE. Log record verbs (a compatible subset of the Projections
+//! grammar):
+//!
+//! ```text
+//! BEGIN_PROCESSING <ep> <time>
+//! END_PROCESSING <ep> <time>
+//! CREATION <ep> <time> <destPE> <bytes>     (message send)
+//! BEGIN_IDLE <time>
+//! END_IDLE <time>
+//! ```
+//!
+//! `BEGIN/END_IDLE` become Enter/Leave of the synthetic `Idle` function —
+//! Projections is the one tool in the paper's survey that records idleness
+//! explicitly (the Loimos case studies, Figs. 7/9, rely on it).
+//! Per-PE logs parse independently on a thread pool.
+
+use crate::trace::*;
+use anyhow::{bail, Context, Result};
+use std::fmt::Write as _;
+use std::path::{Path, PathBuf};
+
+/// Read a Projections-sim directory with `threads` reader threads.
+pub fn read(dir: &Path, threads: usize) -> Result<Trace> {
+    let sts = find_sts(dir)?;
+    let stem = sts
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .context("bad .sts name")?
+        .to_string();
+    let text = std::fs::read_to_string(&sts)?;
+    let mut npes = 0usize;
+    let mut eps: Vec<String> = Vec::new();
+    for line in text.lines() {
+        let mut it = line.split_whitespace();
+        match it.next() {
+            Some("PROCESSORS") => {
+                npes = it.next().context("PROCESSORS missing count")?.parse()?
+            }
+            Some("ENTRY") => {
+                let id: usize = it.next().context("ENTRY missing id")?.parse()?;
+                // name is the rest of the line (may contain spaces)
+                let name = line
+                    .splitn(3, char::is_whitespace)
+                    .nth(2)
+                    .unwrap_or("")
+                    .trim()
+                    .to_string();
+                if eps.len() <= id {
+                    eps.resize(id + 1, String::new());
+                }
+                eps[id] = name;
+            }
+            _ => {}
+        }
+    }
+    if npes == 0 {
+        bail!("{}: no PROCESSORS line", sts.display());
+    }
+
+    // Parse each PE log independently, then merge through one builder so
+    // all shards share a single dictionary.
+    let logs = super::parallel_map(npes, threads, |pe| {
+        let path = dir.join(format!("{stem}.{pe}.log"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        parse_pe_log(&text, pe as i64, &eps)
+    })?;
+
+    let mut b = TraceBuilder::with_capacity(logs.iter().map(Vec::len).sum());
+    b.set_meta(TraceMeta {
+        format: "projections".into(),
+        source: dir.display().to_string(),
+        app: stem.clone(),
+    });
+    for recs in logs {
+        for r in recs {
+            match r {
+                Rec::Enter(pe, t, name_idx) => b.enter(pe, 0, t, ep_name(&eps, name_idx)),
+                Rec::Leave(pe, t, name_idx) => b.leave(pe, 0, t, ep_name(&eps, name_idx)),
+                Rec::EnterIdle(pe, t) => b.enter(pe, 0, t, "Idle"),
+                Rec::LeaveIdle(pe, t) => b.leave(pe, 0, t, "Idle"),
+                Rec::Send(pe, t, dest, bytes) => b.send(pe, 0, t, dest, bytes, 0),
+            }
+        }
+    }
+    Ok(b.finish())
+}
+
+fn ep_name<'a>(eps: &'a [String], i: usize) -> &'a str {
+    eps.get(i).map(|s| s.as_str()).filter(|s| !s.is_empty()).unwrap_or("<unknown-ep>")
+}
+
+enum Rec {
+    Enter(i64, i64, usize),
+    Leave(i64, i64, usize),
+    EnterIdle(i64, i64),
+    LeaveIdle(i64, i64),
+    Send(i64, i64, i64, i64),
+}
+
+fn parse_pe_log(text: &str, pe: i64, eps: &[String]) -> Result<Vec<Rec>> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let verb = it.next().unwrap();
+        let mut next_i64 = || -> Result<i64> {
+            it.next()
+                .with_context(|| format!("pe {pe} line {}: missing field", lineno + 1))?
+                .parse::<i64>()
+                .with_context(|| format!("pe {pe} line {}: bad integer", lineno + 1))
+        };
+        match verb {
+            "BEGIN_PROCESSING" => {
+                let ep = next_i64()? as usize;
+                let t = next_i64()?;
+                if ep >= eps.len() {
+                    bail!("pe {pe} line {}: entry {ep} undefined", lineno + 1);
+                }
+                out.push(Rec::Enter(pe, t, ep));
+            }
+            "END_PROCESSING" => {
+                let ep = next_i64()? as usize;
+                let t = next_i64()?;
+                out.push(Rec::Leave(pe, t, ep));
+            }
+            "BEGIN_IDLE" => out.push(Rec::EnterIdle(pe, next_i64()?)),
+            "END_IDLE" => out.push(Rec::LeaveIdle(pe, next_i64()?)),
+            "CREATION" => {
+                let _ep = next_i64()?;
+                let t = next_i64()?;
+                let dest = next_i64()?;
+                let bytes = next_i64()?;
+                out.push(Rec::Send(pe, t, dest, bytes));
+            }
+            other => bail!("pe {pe} line {}: unknown verb '{other}'", lineno + 1),
+        }
+    }
+    Ok(out)
+}
+
+fn find_sts(dir: &Path) -> Result<PathBuf> {
+    for entry in std::fs::read_dir(dir)
+        .with_context(|| format!("listing {}", dir.display()))?
+    {
+        let p = entry?.path();
+        if p.extension().and_then(|e| e.to_str()) == Some("sts") {
+            return Ok(p);
+        }
+    }
+    bail!("no .sts file in {}", dir.display())
+}
+
+/// Write `trace` as a Projections-sim directory (inverse of [`read`]).
+/// Function names become ENTRY declarations; `Idle` maps to BEGIN/END_IDLE.
+pub fn write(trace: &Trace, dir: &Path, app: &str) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let pa = trace.events.i64s(COL_PARTNER)?;
+    let ms = trace.events.i64s(COL_MSG_SIZE)?;
+    let enter = edict.code_of(ENTER);
+    let leave = edict.code_of(LEAVE);
+    let send = ndict.code_of(SEND_EVENT);
+    let idle = ndict.code_of("Idle");
+
+    let ranks = trace.process_ids()?;
+    let mut sts = String::new();
+    writeln!(sts, "VERSION 1.0")?;
+    writeln!(sts, "PROCESSORS {}", ranks.len())?;
+    for (i, name) in ndict.strings().iter().enumerate() {
+        writeln!(sts, "ENTRY {i} {name}")?;
+    }
+    std::fs::write(dir.join(format!("{app}.sts")), sts)?;
+
+    for (pe_idx, &r) in ranks.iter().enumerate() {
+        let mut log = String::new();
+        for i in 0..trace.len() {
+            if pr[i] != r {
+                continue;
+            }
+            let code = Some(et[i]);
+            if code == enter {
+                if Some(nm[i]) == idle {
+                    writeln!(log, "BEGIN_IDLE {}", ts[i])?;
+                } else {
+                    writeln!(log, "BEGIN_PROCESSING {} {}", nm[i], ts[i])?;
+                }
+            } else if code == leave {
+                if Some(nm[i]) == idle {
+                    writeln!(log, "END_IDLE {}", ts[i])?;
+                } else {
+                    writeln!(log, "END_PROCESSING {} {}", nm[i], ts[i])?;
+                }
+            } else if Some(nm[i]) == send {
+                writeln!(
+                    log,
+                    "CREATION {} {} {} {}",
+                    nm[i],
+                    ts[i],
+                    pa[i].max(0),
+                    ms[i].max(0)
+                )?;
+            }
+            // RECV instants are not representable in Projections logs
+            // (Charm++ is message-driven); they are dropped on write.
+        }
+        std::fs::write(dir.join(format!("{app}.{pe_idx}.log")), log)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::builder::validate_nesting;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pipit_proj_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn reads_hand_written_logs() {
+        let dir = tmp("hand");
+        std::fs::write(
+            dir.join("app.sts"),
+            "VERSION 1.0\nPROCESSORS 2\nENTRY 0 ComputeInteractions()\nENTRY 1 SendVisitMessages()\n",
+        )
+        .unwrap();
+        std::fs::write(
+            dir.join("app.0.log"),
+            "BEGIN_PROCESSING 0 100\nCREATION 1 150 1 2048\nEND_PROCESSING 0 200\nBEGIN_IDLE 200\nEND_IDLE 300\n",
+        )
+        .unwrap();
+        std::fs::write(dir.join("app.1.log"), "BEGIN_PROCESSING 1 0\nEND_PROCESSING 1 50\n").unwrap();
+        let t = read(&dir, 1).unwrap();
+        assert_eq!(t.num_processes().unwrap(), 2);
+        validate_nesting(&t).unwrap();
+        // Idle became a function; CREATION became a send instant
+        let (nm, d) = t.events.strs(COL_NAME).unwrap();
+        let names: Vec<&str> = nm.iter().map(|&c| d.resolve(c).unwrap()).collect();
+        assert!(names.contains(&"Idle"));
+        assert!(names.contains(&SEND_EVENT));
+        assert!(names.contains(&"ComputeInteractions()"));
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "Work()");
+        b.send(0, 0, 5, 1, 128, 0);
+        b.leave(0, 0, 10, "Work()");
+        b.enter(0, 0, 10, "Idle");
+        b.leave(0, 0, 30, "Idle");
+        b.enter(1, 0, 0, "Work()");
+        b.leave(1, 0, 25, "Work()");
+        let t = b.finish();
+        let dir = tmp("rt");
+        write(&t, &dir, "loimos").unwrap();
+        let t2 = read(&dir, 2).unwrap();
+        assert_eq!(t2.len(), t.len());
+        assert_eq!(t2.timestamps().unwrap(), t.timestamps().unwrap());
+        assert_eq!(t2.meta.app, "loimos");
+        validate_nesting(&t2).unwrap();
+    }
+
+    #[test]
+    fn parallel_matches_serial() {
+        let mut b = TraceBuilder::new();
+        for pe in 0..6 {
+            for k in 0..10 {
+                b.enter(pe, 0, k * 100, "Step()");
+                b.leave(pe, 0, k * 100 + 60, "Step()");
+            }
+        }
+        let t = b.finish();
+        let dir = tmp("par");
+        write(&t, &dir, "x").unwrap();
+        let a = read(&dir, 1).unwrap();
+        let c = read(&dir, 4).unwrap();
+        assert_eq!(a.timestamps().unwrap(), c.timestamps().unwrap());
+    }
+
+    #[test]
+    fn rejects_undefined_entry() {
+        let dir = tmp("bad");
+        std::fs::write(dir.join("a.sts"), "PROCESSORS 1\nENTRY 0 f\n").unwrap();
+        std::fs::write(dir.join("a.0.log"), "BEGIN_PROCESSING 9 0\n").unwrap();
+        assert!(read(&dir, 1).is_err());
+    }
+}

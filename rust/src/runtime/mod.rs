@@ -1,0 +1,293 @@
+//! PJRT runtime: load AOT-compiled JAX+Pallas artifacts and execute them
+//! from the analysis hot path. Python never runs here — the HLO text in
+//! `artifacts/` was produced once by `make artifacts`.
+//!
+//! Interchange is HLO *text* (not serialized protos): jax ≥ 0.5 emits
+//! HloModuleProto with 64-bit ids that xla_extension 0.5.1 rejects; the
+//! text parser reassigns ids (see /opt/xla-example/load_hlo/).
+
+pub mod ops;
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Shape contract mirrored from `python/compile/model.py` (serialized to
+/// artifacts/manifest.json at AOT time and re-checked at load).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShapeContract {
+    pub mp_windows: usize,
+    pub mp_m: usize,
+    pub mp_series_len: usize,
+    pub th_events: usize,
+    pub th_bins: usize,
+    pub th_funcs: usize,
+    pub cm_events: usize,
+    pub cm_procs: usize,
+}
+
+pub const DEFAULT_CONTRACT: ShapeContract = ShapeContract {
+    mp_windows: 4096,
+    mp_m: 64,
+    mp_series_len: 4159,
+    th_events: 8192,
+    th_bins: 128,
+    th_funcs: 64,
+    cm_events: 8192,
+    cm_procs: 64,
+};
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT runtime: one CPU client + the compiled artifact registry.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub contract: ShapeContract,
+    pub dir: PathBuf,
+    matrix_profile: Option<Executable>,
+    time_hist: Option<Executable>,
+    comm_matrix: Option<Executable>,
+}
+
+impl Runtime {
+    /// Create a runtime over the artifacts directory, compiling every
+    /// artifact named in `manifest.json` once up front.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let manifest_path = dir.join("manifest.json");
+        let contract = if manifest_path.exists() {
+            let text = std::fs::read_to_string(&manifest_path)?;
+            let j = crate::util::json::Json::parse(&text)
+                .context("parsing artifacts/manifest.json")?;
+            let get = |k: &str| -> Result<usize> {
+                j.get_f64(k)
+                    .map(|v| v as usize)
+                    .with_context(|| format!("manifest missing '{k}'"))
+            };
+            ShapeContract {
+                mp_windows: get("mp_windows")?,
+                mp_m: get("mp_m")?,
+                mp_series_len: get("mp_series_len")?,
+                th_events: get("th_events")?,
+                th_bins: get("th_bins")?,
+                th_funcs: get("th_funcs")?,
+                cm_events: get("cm_events").unwrap_or(8192),
+                cm_procs: get("cm_procs").unwrap_or(64),
+            }
+        } else {
+            bail!(
+                "no manifest.json in {} — run `make artifacts` first",
+                dir.display()
+            );
+        };
+        if contract.mp_series_len != contract.mp_windows + contract.mp_m - 1 {
+            bail!("manifest shape contract is inconsistent");
+        }
+        let mut rt = Runtime {
+            client,
+            contract,
+            dir: dir.clone(),
+            matrix_profile: None,
+            time_hist: None,
+            comm_matrix: None,
+        };
+        rt.matrix_profile = Some(rt.compile_artifact("matrix_profile")?);
+        rt.time_hist = Some(rt.compile_artifact("time_hist")?);
+        // optional (older artifact dirs may predate it)
+        rt.comm_matrix = rt.compile_artifact("comm_matrix").ok();
+        Ok(rt)
+    }
+
+    fn compile_artifact(&self, name: &str) -> Result<Executable> {
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        Ok(Executable { name: name.to_string(), exe })
+    }
+
+    /// Execute the matrix-profile artifact on exactly `mp_series_len`
+    /// samples. Returns (profile², neighbor index) of length `mp_windows`.
+    pub fn matrix_profile_raw(&self, series: &[f32]) -> Result<(Vec<f32>, Vec<i32>)> {
+        let c = &self.contract;
+        if series.len() != c.mp_series_len {
+            bail!(
+                "matrix_profile expects {} samples, got {}",
+                c.mp_series_len,
+                series.len()
+            );
+        }
+        let exe = self.matrix_profile.as_ref().context("artifact not loaded")?;
+        let x = xla::Literal::vec1(series);
+        let result = exe.exe.execute::<xla::Literal>(&[x])?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        if tuple.len() != 2 {
+            bail!("matrix_profile artifact returned {} outputs", tuple.len());
+        }
+        let profile = tuple[0].to_vec::<f32>()?;
+        let index = tuple[1].to_vec::<i32>()?;
+        Ok((profile, index))
+    }
+
+    /// Execute the time-hist artifact on exactly `th_events` intervals.
+    /// Returns a (th_bins × th_funcs) row-major matrix.
+    pub fn time_hist_raw(
+        &self,
+        starts: &[f32],
+        durs: &[f32],
+        fids: &[i32],
+        t0: f32,
+        bin_width: f32,
+    ) -> Result<Vec<f32>> {
+        let c = &self.contract;
+        if starts.len() != c.th_events || durs.len() != c.th_events || fids.len() != c.th_events {
+            bail!("time_hist expects {} events", c.th_events);
+        }
+        let exe = self.time_hist.as_ref().context("artifact not loaded")?;
+        let args = [
+            xla::Literal::vec1(starts),
+            xla::Literal::vec1(durs),
+            xla::Literal::vec1(fids),
+            xla::Literal::scalar(t0),
+            xla::Literal::scalar(bin_width),
+        ];
+        let result = exe.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let out = tuple
+            .first()
+            .context("time_hist artifact returned no outputs")?
+            .to_vec::<f32>()?;
+        if out.len() != c.th_bins * c.th_funcs {
+            bail!("time_hist output length {} != bins*funcs", out.len());
+        }
+        Ok(out)
+    }
+
+    /// Execute the comm-matrix artifact on exactly `cm_events` message
+    /// records. Returns a (cm_procs x cm_procs) row-major matrix.
+    pub fn comm_matrix_raw(&self, src: &[i32], dst: &[i32], nbytes: &[f32]) -> Result<Vec<f32>> {
+        let c = &self.contract;
+        if src.len() != c.cm_events || dst.len() != c.cm_events || nbytes.len() != c.cm_events {
+            bail!("comm_matrix expects {} records", c.cm_events);
+        }
+        let exe = self.comm_matrix.as_ref().context("comm_matrix artifact not loaded")?;
+        let args = [
+            xla::Literal::vec1(src),
+            xla::Literal::vec1(dst),
+            xla::Literal::vec1(nbytes),
+        ];
+        let result = exe.exe.execute::<xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        let out = tuple
+            .first()
+            .context("comm_matrix artifact returned no outputs")?
+            .to_vec::<f32>()?;
+        if out.len() != c.cm_procs * c.cm_procs {
+            bail!("comm_matrix output length {} != procs^2", out.len());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<Runtime> {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping runtime test: run `make artifacts` first");
+            return None;
+        }
+        Some(Runtime::load(dir).expect("runtime load"))
+    }
+
+    #[test]
+    fn loads_and_validates_manifest() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.contract, DEFAULT_CONTRACT);
+    }
+
+    #[test]
+    fn matrix_profile_executes_and_matches_rust() {
+        let Some(rt) = runtime() else { return };
+        let c = rt.contract;
+        // periodic series with noise
+        let mut rng = crate::util::rng::Rng::new(17);
+        let series: Vec<f32> = (0..c.mp_series_len)
+            .map(|i| {
+                ((2.0 * std::f64::consts::PI * i as f64 / 199.0).sin()
+                    + 0.05 * rng.normal()) as f32
+            })
+            .collect();
+        let (profile, index) = rt.matrix_profile_raw(&series).unwrap();
+        assert_eq!(profile.len(), c.mp_windows);
+        assert_eq!(index.len(), c.mp_windows);
+
+        // agree with the pure-Rust STOMP engine
+        let series64: Vec<f64> = series.iter().map(|&v| v as f64).collect();
+        let (rust_p, _) =
+            crate::analysis::pattern::matrix_profile(&series64, c.mp_m).unwrap();
+        for i in (0..c.mp_windows).step_by(97) {
+            let a = profile[i] as f64;
+            let b = rust_p[i];
+            assert!(
+                (a - b).abs() < 5e-2 * (1.0 + b.abs()),
+                "window {i}: hlo={a} rust={b}"
+            );
+        }
+    }
+
+    #[test]
+    fn time_hist_executes_and_matches_rust_binning() {
+        let Some(rt) = runtime() else { return };
+        let c = rt.contract;
+        let mut rng = crate::util::rng::Rng::new(23);
+        let mut starts = vec![0f32; c.th_events];
+        let mut durs = vec![0f32; c.th_events];
+        let mut fids = vec![-1i32; c.th_events];
+        for i in 0..4000 {
+            starts[i] = rng.uniform(0.0, 1000.0) as f32;
+            durs[i] = rng.exponential(5.0) as f32;
+            fids[i] = rng.below(c.th_funcs as u64) as i32;
+        }
+        let bw = 1000.0 / c.th_bins as f32;
+        let out = rt.time_hist_raw(&starts, &durs, &fids, 0.0, bw).unwrap();
+        // reference accumulation
+        let mut want = vec![0f64; c.th_bins * c.th_funcs];
+        for i in 0..c.th_events {
+            if fids[i] < 0 {
+                continue;
+            }
+            let (s, e) = (starts[i] as f64, (starts[i] + durs[i]) as f64);
+            for b in 0..c.th_bins {
+                let lo = b as f64 * bw as f64;
+                let hi = lo + bw as f64;
+                let ov = (e.min(hi) - s.max(lo)).max(0.0);
+                want[b * c.th_funcs + fids[i] as usize] += ov;
+            }
+        }
+        for k in (0..want.len()).step_by(131) {
+            assert!(
+                (out[k] as f64 - want[k]).abs() < 1e-2 * (1.0 + want[k].abs()),
+                "k={k}: hlo={} want={}",
+                out[k],
+                want[k]
+            );
+        }
+    }
+}

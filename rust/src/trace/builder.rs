@@ -1,0 +1,328 @@
+//! Construct traces in the canonical schema.
+//!
+//! Used by every reader and by the synthetic application models in
+//! [`crate::gen`]. The builder buffers rows, then sorts into canonical
+//! (Process, Thread, Timestamp) order and assembles the columnar table in
+//! one pass.
+
+use super::*;
+use crate::df::{interner::NULL_CODE, Column, Interner, StrCode, Table, NULL_I64};
+use std::sync::Arc;
+
+/// One buffered event row.
+#[derive(Debug, Clone, Copy)]
+struct Row {
+    ts: i64,
+    etype: StrCode,
+    name: StrCode,
+    proc: i64,
+    thread: i64,
+    partner: i64,
+    msg_size: i64,
+    tag: i64,
+}
+
+/// Incremental trace builder.
+#[derive(Debug)]
+pub struct TraceBuilder {
+    rows: Vec<Row>,
+    names: Interner,
+    etypes: Interner,
+    enter_code: StrCode,
+    leave_code: StrCode,
+    instant_code: StrCode,
+    meta: TraceMeta,
+    /// If true (default), `finish` sorts rows into canonical order; readers
+    /// whose input is already canonical disable it.
+    pub sort_on_finish: bool,
+}
+
+impl Default for TraceBuilder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TraceBuilder {
+    pub fn new() -> Self {
+        let mut etypes = Interner::new();
+        let enter_code = etypes.intern(ENTER);
+        let leave_code = etypes.intern(LEAVE);
+        let instant_code = etypes.intern(INSTANT);
+        TraceBuilder {
+            rows: Vec::new(),
+            names: Interner::new(),
+            etypes,
+            enter_code,
+            leave_code,
+            instant_code,
+            meta: TraceMeta::default(),
+            sort_on_finish: true,
+        }
+    }
+
+    /// Pre-size the row buffer.
+    pub fn with_capacity(n: usize) -> Self {
+        let mut b = Self::new();
+        b.rows.reserve(n);
+        b
+    }
+
+    pub fn set_meta(&mut self, meta: TraceMeta) {
+        self.meta = meta;
+    }
+
+    /// Intern a function name ahead of time (for readers with definition
+    /// tables; makes codes independent of event order).
+    pub fn define_name(&mut self, name: &str) -> StrCode {
+        self.names.intern(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    // -- event emission ----------------------------------------------------
+
+    pub fn enter(&mut self, proc: i64, thread: i64, ts: i64, name: &str) {
+        let name = self.names.intern(name);
+        self.enter_coded(proc, thread, ts, name);
+    }
+
+    pub fn leave(&mut self, proc: i64, thread: i64, ts: i64, name: &str) {
+        let name = self.names.intern(name);
+        self.leave_coded(proc, thread, ts, name);
+    }
+
+    /// Enter with a pre-interned name code (hot path for binary readers).
+    pub fn enter_coded(&mut self, proc: i64, thread: i64, ts: i64, name: StrCode) {
+        self.rows.push(Row {
+            ts,
+            etype: self.enter_code,
+            name,
+            proc,
+            thread,
+            partner: NULL_I64,
+            msg_size: NULL_I64,
+            tag: NULL_I64,
+        });
+    }
+
+    /// Leave with a pre-interned name code.
+    pub fn leave_coded(&mut self, proc: i64, thread: i64, ts: i64, name: StrCode) {
+        self.rows.push(Row {
+            ts,
+            etype: self.leave_code,
+            name,
+            proc,
+            thread,
+            partner: NULL_I64,
+            msg_size: NULL_I64,
+            tag: NULL_I64,
+        });
+    }
+
+    /// Generic instant event (no message payload).
+    pub fn instant(&mut self, proc: i64, thread: i64, ts: i64, name: &str) {
+        let name = self.names.intern(name);
+        self.rows.push(Row {
+            ts,
+            etype: self.instant_code,
+            name,
+            proc,
+            thread,
+            partner: NULL_I64,
+            msg_size: NULL_I64,
+            tag: NULL_I64,
+        });
+    }
+
+    /// Point-to-point send record (emit inside the sending MPI call).
+    pub fn send(&mut self, proc: i64, thread: i64, ts: i64, dest: i64, bytes: i64, tag: i64) {
+        let name = self.names.intern(SEND_EVENT);
+        self.rows.push(Row {
+            ts,
+            etype: self.instant_code,
+            name,
+            proc,
+            thread,
+            partner: dest,
+            msg_size: bytes,
+            tag,
+        });
+    }
+
+    /// Point-to-point receive record (emit inside the receiving MPI call).
+    pub fn recv(&mut self, proc: i64, thread: i64, ts: i64, src: i64, bytes: i64, tag: i64) {
+        let name = self.names.intern(RECV_EVENT);
+        self.rows.push(Row {
+            ts,
+            etype: self.instant_code,
+            name,
+            proc,
+            thread,
+            partner: src,
+            msg_size: bytes,
+            tag,
+        });
+    }
+
+    /// Finish: sort canonically (unless disabled) and build the table.
+    pub fn finish(self) -> Trace {
+        let mut rows = self.rows;
+        if self.sort_on_finish {
+            // stable: preserves emission order for equal timestamps, which
+            // keeps Enter before nested Enter at identical times.
+            rows.sort_by_key(|r| (r.proc, r.thread, r.ts));
+        }
+        let n = rows.len();
+        let mut ts = Vec::with_capacity(n);
+        let mut et = Vec::with_capacity(n);
+        let mut nm = Vec::with_capacity(n);
+        let mut pr = Vec::with_capacity(n);
+        let mut th = Vec::with_capacity(n);
+        let mut pa = Vec::with_capacity(n);
+        let mut ms = Vec::with_capacity(n);
+        let mut tg = Vec::with_capacity(n);
+        for r in &rows {
+            ts.push(r.ts);
+            et.push(r.etype);
+            nm.push(r.name);
+            pr.push(r.proc);
+            th.push(r.thread);
+            pa.push(r.partner);
+            ms.push(r.msg_size);
+            tg.push(r.tag);
+        }
+        let names = Arc::new(self.names);
+        let etypes = Arc::new(self.etypes);
+        let mut t = Table::new();
+        t.push(COL_TS, Column::I64(ts)).unwrap();
+        t.push(COL_TYPE, Column::Str { codes: et, dict: etypes }).unwrap();
+        t.push(COL_NAME, Column::Str { codes: nm, dict: names }).unwrap();
+        t.push(COL_PROC, Column::I64(pr)).unwrap();
+        t.push(COL_THREAD, Column::I64(th)).unwrap();
+        t.push(COL_PARTNER, Column::I64(pa)).unwrap();
+        t.push(COL_MSG_SIZE, Column::I64(ms)).unwrap();
+        t.push(COL_TAG, Column::I64(tg)).unwrap();
+        Trace::new(t, self.meta)
+    }
+}
+
+/// Assert structural well-formedness of a trace: per (process, thread),
+/// Enter/Leave events must nest like balanced parentheses. Returns the
+/// maximum call-stack depth seen. Used by generator tests and reader
+/// round-trip tests.
+pub fn validate_nesting(trace: &Trace) -> anyhow::Result<usize> {
+    use anyhow::bail;
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let th = trace.events.i64s(COL_THREAD)?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let (nm, _) = trace.events.strs(COL_NAME)?;
+    let enter = edict.code_of(ENTER).unwrap_or(NULL_CODE);
+    let leave = edict.code_of(LEAVE).unwrap_or(NULL_CODE);
+
+    let mut stacks: std::collections::HashMap<(i64, i64), Vec<(StrCode, i64)>> =
+        std::collections::HashMap::new();
+    let mut max_depth = 0usize;
+    for i in 0..trace.len() {
+        let key = (pr[i], th[i]);
+        let stack = stacks.entry(key).or_default();
+        if et[i] == enter {
+            if let Some(&(_, top_ts)) = stack.last() {
+                if ts[i] < top_ts {
+                    bail!("event {i}: enter goes back in time");
+                }
+            }
+            stack.push((nm[i], ts[i]));
+            max_depth = max_depth.max(stack.len());
+        } else if et[i] == leave {
+            match stack.pop() {
+                Some((code, enter_ts)) => {
+                    if code != nm[i] {
+                        bail!("event {i}: leave does not match top of stack");
+                    }
+                    if ts[i] < enter_ts {
+                        bail!("event {i}: leave before enter");
+                    }
+                }
+                None => bail!("event {i}: leave with empty stack"),
+            }
+        }
+    }
+    for ((p, t), stack) in &stacks {
+        if !stack.is_empty() {
+            bail!("process {p} thread {t}: {} unclosed enters", stack.len());
+        }
+    }
+    Ok(max_depth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_produces_canonical_order() {
+        let mut b = TraceBuilder::new();
+        // emit out of order on purpose
+        b.enter(1, 0, 5, "main");
+        b.leave(1, 0, 9, "main");
+        b.enter(0, 0, 0, "main");
+        b.leave(0, 0, 10, "main");
+        let t = b.finish();
+        assert_eq!(t.events.i64s(COL_PROC).unwrap(), &[0, 0, 1, 1]);
+        assert_eq!(t.events.i64s(COL_TS).unwrap(), &[0, 10, 5, 9]);
+    }
+
+    #[test]
+    fn send_recv_carry_payload() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "MPI_Send");
+        b.send(0, 0, 1, 3, 1024, 7);
+        b.leave(0, 0, 2, "MPI_Send");
+        let t = b.finish();
+        let pa = t.events.i64s(COL_PARTNER).unwrap();
+        let ms = t.events.i64s(COL_MSG_SIZE).unwrap();
+        assert_eq!(pa[1], 3);
+        assert_eq!(ms[1], 1024);
+        assert_eq!(pa[0], NULL_I64); // function events carry no payload
+    }
+
+    #[test]
+    fn validate_nesting_accepts_wellformed() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.enter(0, 0, 1, "foo");
+        b.leave(0, 0, 2, "foo");
+        b.enter(0, 0, 3, "foo");
+        b.leave(0, 0, 4, "foo");
+        b.leave(0, 0, 5, "main");
+        let t = b.finish();
+        assert_eq!(validate_nesting(&t).unwrap(), 2);
+    }
+
+    #[test]
+    fn validate_nesting_rejects_mismatch() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.leave(0, 0, 1, "foo"); // wrong name
+        let t = b.finish();
+        assert!(validate_nesting(&t).is_err());
+
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main"); // never left
+        let t = b.finish();
+        assert!(validate_nesting(&t).is_err());
+
+        let mut b = TraceBuilder::new();
+        b.leave(0, 0, 0, "main"); // leave before enter
+        let t = b.finish();
+        assert!(validate_nesting(&t).is_err());
+    }
+}

@@ -1,0 +1,244 @@
+//! The uniform trace data model.
+//!
+//! Every reader parses its format into the same events [`Table`] with the
+//! canonical schema below (paper §III.A–B), so all analysis operations are
+//! single-source across formats:
+//!
+//! | column            | type | meaning                                        |
+//! |-------------------|------|------------------------------------------------|
+//! | `Timestamp (ns)`  | i64  | event time                                     |
+//! | `Event Type`      | str  | `Enter`, `Leave`, or `Instant`                 |
+//! | `Name`            | str  | function / region / instant-event name         |
+//! | `Process`         | i64  | MPI rank (or pid)                              |
+//! | `Thread`          | i64  | thread id within the process (0 if untraced)   |
+//! | `Partner`         | i64  | message peer rank (null unless msg event)      |
+//! | `Msg Size`        | i64  | message bytes (null unless msg event)          |
+//! | `Tag`             | i64  | message tag (null unless msg event)            |
+//!
+//! Point-to-point communication appears as `Instant` events named
+//! [`SEND_EVENT`] / [`RECV_EVENT`] timestamped inside the surrounding
+//! `MPI_Send` / `MPI_Recv` (etc.) function call, mirroring how OTF2
+//! separates region enter/leave records from MPI message records.
+//!
+//! Events are canonically ordered by (Process, Thread, Timestamp); readers
+//! guarantee this (it is what per-rank stream formats produce naturally).
+
+pub mod builder;
+
+pub use builder::TraceBuilder;
+
+use crate::df::{Expr, Table};
+use anyhow::Result;
+use std::path::Path;
+
+// -- canonical column names ---------------------------------------------
+pub const COL_TS: &str = "Timestamp (ns)";
+pub const COL_TYPE: &str = "Event Type";
+pub const COL_NAME: &str = "Name";
+pub const COL_PROC: &str = "Process";
+pub const COL_THREAD: &str = "Thread";
+pub const COL_PARTNER: &str = "Partner";
+pub const COL_MSG_SIZE: &str = "Msg Size";
+pub const COL_TAG: &str = "Tag";
+
+// -- canonical event-type / instant-event names ---------------------------
+pub const ENTER: &str = "Enter";
+pub const LEAVE: &str = "Leave";
+pub const INSTANT: &str = "Instant";
+/// Instant event marking a point-to-point send (Partner = destination).
+pub const SEND_EVENT: &str = "MpiSend";
+/// Instant event marking a point-to-point receive (Partner = source).
+pub const RECV_EVENT: &str = "MpiRecv";
+
+/// Names treated as communication functions by default (paper §IV.C/D);
+/// `idle_time` and `comm_comp_breakdown` accept overrides.
+pub const DEFAULT_COMM_FUNCTIONS: &[&str] = &[
+    "MPI_Send", "MPI_Isend", "MPI_Recv", "MPI_Irecv", "MPI_Wait",
+    "MPI_Waitall", "MPI_Barrier", "MPI_Allreduce", "MPI_Reduce",
+    "MPI_Bcast", "MPI_Alltoall", "MPI_Allgather", "MPI_Sendrecv",
+    "ncclAllReduce", "ncclAllGather", "ncclSend", "ncclRecv",
+];
+
+/// Names treated as *idle / waiting* by default for `idle_time`.
+pub const DEFAULT_IDLE_FUNCTIONS: &[&str] =
+    &["MPI_Recv", "MPI_Wait", "MPI_Waitall", "MPI_Barrier", "Idle"];
+
+/// Provenance metadata carried alongside the events table.
+#[derive(Debug, Clone, Default)]
+pub struct TraceMeta {
+    /// Which reader produced this trace ("otf2", "csv", ...).
+    pub format: String,
+    /// Source path, if read from disk.
+    pub source: String,
+    /// Application name, if the format records one.
+    pub app: String,
+}
+
+/// A parallel execution trace: the events table + metadata.
+///
+/// This is the paper's `Trace` object. The events table is public — "users
+/// can optionally access the underlying DataFrame to perform custom data
+/// wrangling" (§I) — and every operation in [`crate::analysis`] takes the
+/// trace by reference.
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub events: Table,
+    pub meta: TraceMeta,
+}
+
+impl Trace {
+    pub fn new(events: Table, meta: TraceMeta) -> Self {
+        Trace { events, meta }
+    }
+
+    // -- format constructors (delegating to `readers`) --------------------
+
+    /// Read a CSV trace (paper Fig. 1).
+    pub fn from_csv(path: impl AsRef<Path>) -> Result<Trace> {
+        crate::readers::csv::read(path.as_ref())
+    }
+
+    /// Read an OTF2-sim trace directory (see `readers::otf2`), using all
+    /// available cores.
+    pub fn from_otf2(path: impl AsRef<Path>) -> Result<Trace> {
+        crate::readers::otf2::read(path.as_ref(), 0)
+    }
+
+    /// Read an OTF2-sim trace with an explicit reader-thread count.
+    pub fn from_otf2_parallel(path: impl AsRef<Path>, threads: usize) -> Result<Trace> {
+        crate::readers::otf2::read(path.as_ref(), threads)
+    }
+
+    /// Read a Projections-sim trace directory (Charm++ style).
+    pub fn from_projections(path: impl AsRef<Path>) -> Result<Trace> {
+        crate::readers::projections::read(path.as_ref(), 0)
+    }
+
+    /// Read a Chrome Trace Viewer JSON file (Nsight Systems / PyTorch
+    /// Profiler exports).
+    pub fn from_chrome(path: impl AsRef<Path>) -> Result<Trace> {
+        crate::readers::chrome::read(path.as_ref())
+    }
+
+    /// Alias for [`Trace::from_chrome`] matching the paper's reader list.
+    pub fn from_nsight(path: impl AsRef<Path>) -> Result<Trace> {
+        Self::from_chrome(path)
+    }
+
+    /// Read an HPCToolkit-sim database directory (trace.db + meta.db).
+    pub fn from_hpctoolkit(path: impl AsRef<Path>) -> Result<Trace> {
+        crate::readers::hpctoolkit::read(path.as_ref())
+    }
+
+    // -- basic accessors ---------------------------------------------------
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn timestamps(&self) -> Result<&[i64]> {
+        self.events.i64s(COL_TS)
+    }
+
+    pub fn processes(&self) -> Result<&[i64]> {
+        self.events.i64s(COL_PROC)
+    }
+
+    /// Distinct process ids, sorted.
+    pub fn process_ids(&self) -> Result<Vec<i64>> {
+        let mut ids: Vec<i64> = self.processes()?.to_vec();
+        ids.sort_unstable();
+        ids.dedup();
+        Ok(ids)
+    }
+
+    /// Number of distinct processes.
+    pub fn num_processes(&self) -> Result<usize> {
+        Ok(self.process_ids()?.len())
+    }
+
+    /// (min, max) timestamp over all events; (0, 0) for empty traces.
+    pub fn time_range(&self) -> Result<(i64, i64)> {
+        let ts = self.timestamps()?;
+        if ts.is_empty() {
+            return Ok((0, 0));
+        }
+        let mut lo = i64::MAX;
+        let mut hi = i64::MIN;
+        for &t in ts {
+            lo = lo.min(t);
+            hi = hi.max(t);
+        }
+        Ok((lo, hi))
+    }
+
+    /// Wall-clock span covered by the trace in ns.
+    pub fn duration_ns(&self) -> Result<i64> {
+        let (lo, hi) = self.time_range()?;
+        Ok(hi - lo)
+    }
+
+    /// Filter to a sub-trace (paper §IV.E): a new `Trace` with the reduced
+    /// events table; every analysis op applies to the result unchanged.
+    pub fn filter(&self, e: &Expr) -> Result<Trace> {
+        Ok(Trace { events: self.events.query(e)?, meta: self.meta.clone() })
+    }
+
+    /// Rows (event indices) for one process, in table order.
+    pub fn rows_of_process(&self, p: i64) -> Result<Vec<u32>> {
+        Ok(self
+            .processes()?
+            .iter()
+            .enumerate()
+            .filter(|(_, &q)| q == p)
+            .map(|(i, _)| i as u32)
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Trace {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.enter(0, 0, 10, "foo");
+        b.leave(0, 0, 50, "foo");
+        b.leave(0, 0, 100, "main");
+        b.enter(1, 0, 0, "main");
+        b.leave(1, 0, 90, "main");
+        b.finish()
+    }
+
+    #[test]
+    fn accessors() {
+        let t = toy();
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.num_processes().unwrap(), 2);
+        assert_eq!(t.process_ids().unwrap(), vec![0, 1]);
+        assert_eq!(t.time_range().unwrap(), (0, 100));
+        assert_eq!(t.duration_ns().unwrap(), 100);
+    }
+
+    #[test]
+    fn filter_returns_full_trace_object() {
+        let t = toy();
+        let sub = t.filter(&Expr::process_eq(1)).unwrap();
+        assert_eq!(sub.len(), 2);
+        assert_eq!(sub.num_processes().unwrap(), 1);
+        // All ops still apply — the schema is intact.
+        assert_eq!(sub.events.names(), t.events.names());
+    }
+
+    #[test]
+    fn rows_of_process() {
+        let t = toy();
+        assert_eq!(t.rows_of_process(0).unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(t.rows_of_process(1).unwrap(), vec![4, 5]);
+    }
+}

@@ -1,0 +1,137 @@
+//! Micro-benchmark harness (criterion is not available offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that drives
+//! [`Bencher`]: warmup runs, then `iters` timed runs; reports min / median /
+//! mean / max and can emit machine-readable CSV rows so EXPERIMENTS.md
+//! tables are regenerable by piping bench output.
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub name: String,
+    /// Nanoseconds per timed iteration.
+    pub runs_ns: Vec<f64>,
+}
+
+impl Sample {
+    pub fn min(&self) -> f64 {
+        self.runs_ns.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.runs_ns.iter().copied().fold(0.0, f64::max)
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.runs_ns.iter().sum::<f64>() / self.runs_ns.len() as f64
+    }
+
+    pub fn median(&self) -> f64 {
+        let mut v = self.runs_ns.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let n = v.len();
+        if n % 2 == 1 {
+            v[n / 2]
+        } else {
+            0.5 * (v[n / 2 - 1] + v[n / 2])
+        }
+    }
+}
+
+/// Micro-benchmark driver.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+    pub samples: Vec<Sample>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 1, iters: 5, samples: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher { warmup, iters, samples: Vec::new() }
+    }
+
+    /// Time `f` (which should do one full unit of work and return a value
+    /// that is kept alive to defeat dead-code elimination).
+    pub fn run<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &Sample {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut runs = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            runs.push(t0.elapsed().as_nanos() as f64);
+        }
+        let s = Sample { name: name.to_string(), runs_ns: runs };
+        eprintln!(
+            "  {:<48} median {:>12}  mean {:>12}  (min {}, max {}, n={})",
+            s.name,
+            crate::util::fmt_ns(s.median()),
+            crate::util::fmt_ns(s.mean()),
+            crate::util::fmt_ns(s.min()),
+            crate::util::fmt_ns(s.max()),
+            s.runs_ns.len(),
+        );
+        self.samples.push(s);
+        self.samples.last().unwrap()
+    }
+
+    /// Print all samples as CSV (name, median_ns, mean_ns, min_ns, max_ns).
+    pub fn csv(&self) -> String {
+        let mut out = String::from("name,median_ns,mean_ns,min_ns,max_ns\n");
+        for s in &self.samples {
+            out.push_str(&format!(
+                "{},{:.0},{:.0},{:.0},{:.0}\n",
+                s.name,
+                s.median(),
+                s.mean(),
+                s.min(),
+                s.max()
+            ));
+        }
+        out
+    }
+}
+
+/// Parse `--quick` style args shared by all bench binaries. Returns
+/// (warmup, iters) — `--quick` drops to (0, 2) for smoke runs.
+pub fn bench_params_from_args() -> (usize, usize) {
+    if std::env::args().any(|a| a == "--quick") {
+        (0, 2)
+    } else {
+        (1, 5)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats() {
+        let s = Sample { name: "x".into(), runs_ns: vec![3.0, 1.0, 2.0] };
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 3.0);
+        assert_eq!(s.median(), 2.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+        let e = Sample { name: "y".into(), runs_ns: vec![1.0, 2.0, 3.0, 4.0] };
+        assert_eq!(e.median(), 2.5);
+    }
+
+    #[test]
+    fn run_records_samples() {
+        let mut b = Bencher::new(0, 3);
+        b.run("noop", || 1 + 1);
+        assert_eq!(b.samples.len(), 1);
+        assert_eq!(b.samples[0].runs_ns.len(), 3);
+        assert!(b.csv().contains("noop"));
+    }
+}

@@ -1,0 +1,106 @@
+//! Counting allocator for memory measurements (paper Figure 5, right).
+//!
+//! Benches/examples that need memory numbers install [`CountingAlloc`] as
+//! their `#[global_allocator]`; the library itself never does, so normal
+//! builds pay nothing.
+//!
+//! ```ignore
+//! #[global_allocator]
+//! static ALLOC: pipit::util::mem::CountingAlloc = pipit::util::mem::CountingAlloc::new();
+//! ```
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static ALLOCATED: AtomicU64 = AtomicU64::new(0);
+static PEAK: AtomicU64 = AtomicU64::new(0);
+static TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Wraps the system allocator, tracking live / peak / cumulative bytes.
+pub struct CountingAlloc;
+
+impl CountingAlloc {
+    pub const fn new() -> Self {
+        CountingAlloc
+    }
+}
+
+impl Default for CountingAlloc {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let p = System.alloc(layout);
+        if !p.is_null() {
+            record_alloc(layout.size() as u64);
+        }
+        p
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout);
+        ALLOCATED.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let p = System.realloc(ptr, layout, new_size);
+        if !p.is_null() {
+            ALLOCATED.fetch_sub(layout.size() as u64, Ordering::Relaxed);
+            record_alloc(new_size as u64);
+        }
+        p
+    }
+}
+
+fn record_alloc(size: u64) {
+    TOTAL.fetch_add(size, Ordering::Relaxed);
+    let live = ALLOCATED.fetch_add(size, Ordering::Relaxed) + size;
+    // lock-free peak update
+    let mut peak = PEAK.load(Ordering::Relaxed);
+    while live > peak {
+        match PEAK.compare_exchange_weak(peak, live, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => break,
+            Err(p) => peak = p,
+        }
+    }
+}
+
+/// Live heap bytes right now (as seen through this allocator).
+pub fn live_bytes() -> u64 {
+    ALLOCATED.load(Ordering::Relaxed)
+}
+
+/// High-water-mark of live heap bytes since start (or last [`reset_peak`]).
+pub fn peak_bytes() -> u64 {
+    PEAK.load(Ordering::Relaxed)
+}
+
+/// Cumulative bytes ever allocated.
+pub fn total_bytes() -> u64 {
+    TOTAL.load(Ordering::Relaxed)
+}
+
+/// Reset the peak to the current live size (for per-phase measurements).
+pub fn reset_peak() {
+    PEAK.store(ALLOCATED.load(Ordering::Relaxed), Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    // The counting allocator is only active when installed as the global
+    // allocator, which unit tests of the library do not do; these tests
+    // exercise the bookkeeping helpers directly.
+    use super::*;
+
+    #[test]
+    fn peak_monotonic_under_record() {
+        reset_peak();
+        let before = peak_bytes();
+        record_alloc(1024);
+        assert!(peak_bytes() >= before);
+        ALLOCATED.fetch_sub(1024, Ordering::Relaxed); // undo for other tests
+    }
+}

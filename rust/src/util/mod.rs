@@ -1,0 +1,62 @@
+//! Small self-contained substrates the rest of the crate builds on.
+//!
+//! The build environment is fully offline with a minimal vendored crate
+//! set, so infrastructure that would normally come from crates.io
+//! (`rand`, `serde_json`, `criterion`, `proptest`) is implemented here
+//! from scratch: a counter-based PRNG ([`rng`]), a JSON parser/printer
+//! ([`json`]), a micro-benchmark harness ([`bench`]), a property-testing
+//! runner ([`prop`]), and a counting allocator ([`mem`]).
+
+pub mod bench;
+pub mod json;
+pub mod mem;
+pub mod prop;
+pub mod rng;
+
+/// Format a nanosecond quantity with a human-friendly unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Format a byte quantity with a human-friendly unit.
+pub fn fmt_bytes(b: u64) -> String {
+    const KIB: f64 = 1024.0;
+    let b = b as f64;
+    if b < KIB {
+        format!("{b:.0} B")
+    } else if b < KIB * KIB {
+        format!("{:.1} KiB", b / KIB)
+    } else if b < KIB * KIB * KIB {
+        format!("{:.2} MiB", b / KIB / KIB)
+    } else {
+        format!("{:.2} GiB", b / KIB / KIB / KIB)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.0), "12 ns");
+        assert_eq!(fmt_ns(1500.0), "1.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.25e9), "3.250 s");
+    }
+
+    #[test]
+    fn fmt_bytes_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.0 KiB");
+        assert_eq!(fmt_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

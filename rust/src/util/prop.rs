@@ -1,0 +1,59 @@
+//! Tiny property-testing runner (proptest is not available offline).
+//!
+//! A property is a closure over a seeded [`Rng`](crate::util::rng::Rng);
+//! the runner executes it for `cases` independent seeds and reports the
+//! first failing seed so the case is reproducible by construction. No
+//! shrinking — generators are written to produce small cases directly.
+
+use crate::util::rng::Rng;
+
+/// Run `f` for `cases` seeds derived from `base_seed`. Panics (with the
+/// failing seed in the message) if any case panics or returns Err.
+pub fn check<F>(name: &str, cases: u64, base_seed: u64, mut f: F)
+where
+    F: FnMut(&mut Rng) -> Result<(), String>,
+{
+    for i in 0..cases {
+        let seed = base_seed.wrapping_mul(0x9E3779B97F4A7C15) ^ i;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property '{name}' failed at seed {seed} (case {i}): {msg}");
+        }
+    }
+}
+
+/// Assert helper that produces Result-style failures for [`check`].
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check("add-commutes", 50, 1, |rng| {
+            let a = rng.range(-1000, 1000);
+            let b = rng.range(-1000, 1000);
+            prop_assert!(a + b == b + a);
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always-fails", 5, 2, |_| Err("nope".into()));
+    }
+}

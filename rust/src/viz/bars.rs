@@ -1,0 +1,97 @@
+//! Bar-chart views: `plot_comm_by_process` (Fig. 6) and the stacked
+//! `plot_time_profile` (Fig. 2).
+
+use crate::analysis::TimeProfile;
+use crate::viz::svg::{color, Svg};
+
+/// Per-process sent+received volume bars.
+pub fn plot_comm_by_process(rows: &[(i64, f64, f64)]) -> String {
+    let n = rows.len().max(1);
+    let bw = (900.0 / n as f64).clamp(2.0, 30.0);
+    let (w, h) = (60.0 + n as f64 * bw, 300.0);
+    let mut svg = Svg::new(w + 10.0, h + 40.0);
+    let max = rows
+        .iter()
+        .map(|&(_, s, r)| s + r)
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    for (i, &(p, s, r)) in rows.iter().enumerate() {
+        let total = s + r;
+        let bh = total / max * h;
+        svg.rect(
+            50.0 + i as f64 * bw,
+            20.0 + (h - bh),
+            bw * 0.9,
+            bh,
+            color(0),
+            Some(&format!("process {p}: sent {s} + recv {r}")),
+        );
+    }
+    svg.text(10.0, 14.0, 12.0, "total message volume by process");
+    svg.finish()
+}
+
+/// Stacked per-bin function bars (the paper's Fig. 2 view).
+pub fn plot_time_profile(tp: &TimeProfile) -> String {
+    let bins = tp.num_bins().max(1);
+    let bw = (1000.0 / bins as f64).clamp(1.0, 30.0);
+    let (w, h) = (70.0 + bins as f64 * bw, 320.0);
+    let mut svg = Svg::new(w + 160.0, h + 40.0);
+    let max_bin = tp
+        .values
+        .iter()
+        .map(|row| row.iter().sum::<f64>())
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    for (b, row) in tp.values.iter().enumerate() {
+        let mut y = 20.0 + h;
+        for (f, &v) in row.iter().enumerate() {
+            if v <= 0.0 {
+                continue;
+            }
+            let bh = v / max_bin * h;
+            y -= bh;
+            svg.rect(
+                60.0 + b as f64 * bw,
+                y,
+                bw,
+                bh,
+                color(f),
+                Some(&format!("{}: {v:.0} ns", tp.func_names[f])),
+            );
+        }
+    }
+    // legend
+    for (f, name) in tp.func_names.iter().enumerate().take(12) {
+        let y = 30.0 + f as f64 * 16.0;
+        svg.rect(w + 10.0, y - 9.0, 10.0, 10.0, color(f), None);
+        svg.text(w + 24.0, y, 10.0, name);
+    }
+    svg.text(10.0, 14.0, 12.0, "time profile (stacked exclusive time per bin)");
+    svg.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis;
+    use crate::gen::{kripke, tortuga, GenConfig};
+
+    #[test]
+    fn comm_by_process_renders() {
+        let t = kripke::generate(&GenConfig::new(16, 2));
+        let rows = analysis::comm_by_process(&t, analysis::CommUnit::Bytes).unwrap();
+        let svg = plot_comm_by_process(&rows);
+        assert!(svg.contains("<svg"));
+        assert!(svg.contains("process 0"));
+    }
+
+    #[test]
+    fn time_profile_renders_with_legend() {
+        let mut t = tortuga::generate(&GenConfig::new(8, 4));
+        let tp = analysis::time_profile(&mut t, 64, Some(6)).unwrap();
+        let svg = plot_time_profile(&tp);
+        assert!(svg.contains("computeRhs"));
+        assert!(svg.contains("<svg"));
+    }
+}

@@ -1,0 +1,82 @@
+//! `plot_comm_matrix` (paper §V, Fig. 3): communication matrix heatmap
+//! with linear or logarithmic color scale.
+
+use crate::analysis::CommMatrix;
+use crate::viz::svg::{blue_ramp, Svg};
+
+/// Color scale for the heatmap.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scale {
+    Linear,
+    Log,
+}
+
+/// Render a comm matrix as an SVG heatmap.
+pub fn plot_comm_matrix(m: &CommMatrix, scale: Scale) -> String {
+    let n = m.n().max(1);
+    let cell = (600.0 / n as f64).clamp(2.0, 40.0);
+    let margin = 50.0;
+    let size = margin + n as f64 * cell + 10.0;
+    let mut svg = Svg::new(size, size);
+
+    let max = m
+        .data
+        .iter()
+        .flatten()
+        .copied()
+        .fold(0.0f64, f64::max)
+        .max(1e-12);
+    let norm = |v: f64| -> f64 {
+        match scale {
+            Scale::Linear => v / max,
+            Scale::Log => {
+                if v <= 0.0 {
+                    0.0
+                } else {
+                    (1.0 + v).ln() / (1.0 + max).ln()
+                }
+            }
+        }
+    };
+
+    svg.text(margin, 14.0, 12.0, &format!("receiver -> ({n} procs)"));
+    svg.text(2.0, margin - 6.0, 12.0, "sender v");
+    for (i, row) in m.data.iter().enumerate() {
+        for (j, &v) in row.iter().enumerate() {
+            let c = blue_ramp(norm(v));
+            svg.rect(
+                margin + j as f64 * cell,
+                margin + i as f64 * cell,
+                cell.max(1.0),
+                cell.max(1.0),
+                &c,
+                Some(&format!("{} -> {}: {v}", m.procs[i], m.procs[j])),
+            );
+        }
+    }
+    svg.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{comm_matrix, CommUnit};
+    use crate::gen::{laghos, GenConfig};
+
+    #[test]
+    fn renders_both_scales() {
+        let t = laghos::generate(&GenConfig::new(16, 4));
+        let m = comm_matrix(&t, CommUnit::Bytes).unwrap();
+        let lin = plot_comm_matrix(&m, Scale::Linear);
+        let log = plot_comm_matrix(&m, Scale::Log);
+        assert!(lin.contains("<svg") && log.contains("<svg"));
+        // log scale lights up more cells than linear for skewed data
+        assert_ne!(lin, log);
+    }
+
+    #[test]
+    fn empty_matrix_ok() {
+        let m = CommMatrix { procs: vec![], data: vec![] };
+        assert!(plot_comm_matrix(&m, Scale::Linear).contains("<svg"));
+    }
+}

@@ -1,0 +1,44 @@
+//! `plot_message_histogram` (paper Fig. 4).
+
+use crate::viz::svg::{color, Svg};
+
+/// Render counts-per-bin bars with edge labels.
+pub fn plot_message_histogram(counts: &[u64], edges: &[f64]) -> String {
+    let n = counts.len().max(1);
+    let bw = (700.0 / n as f64).clamp(4.0, 80.0);
+    let (w, h) = (60.0 + n as f64 * bw, 280.0);
+    let mut svg = Svg::new(w + 10.0, h + 60.0);
+    let max = counts.iter().copied().max().unwrap_or(1).max(1) as f64;
+    for (i, &c) in counts.iter().enumerate() {
+        let bh = c as f64 / max * h;
+        svg.rect(
+            50.0 + i as f64 * bw,
+            20.0 + (h - bh),
+            bw * 0.92,
+            bh,
+            color(0),
+            Some(&format!("[{:.0}, {:.0}) bytes: {c} msgs", edges[i], edges[i + 1])),
+        );
+        if i % (n / 8).max(1) == 0 {
+            svg.text(50.0 + i as f64 * bw, h + 36.0, 9.0, &format!("{:.0}", edges[i]));
+        }
+    }
+    svg.text(10.0, 14.0, 12.0, "message size histogram");
+    svg.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis;
+    use crate::gen::{laghos, GenConfig};
+
+    #[test]
+    fn renders() {
+        let t = laghos::generate(&GenConfig::new(16, 5));
+        let (counts, edges) = analysis::message_histogram(&t, 10).unwrap();
+        let svg = plot_message_histogram(&counts, &edges);
+        assert!(svg.contains("<svg"));
+        assert!(svg.contains("msgs"));
+    }
+}

@@ -1,0 +1,25 @@
+//! Visualization support (paper §V): SVG renderers complementing the API.
+//!
+//! The paper pairs the programmatic API with "basic visualization
+//! support"; here each view renders to standalone SVG (viewable in any
+//! browser), driven by the same analysis operations:
+//!
+//! * [`timeline`] — `plot_timeline`: bars per call, diamonds for instants,
+//!   message arrows, optional critical-path overlay, and rasterization of
+//!   sub-pixel events into density strips (the paper's scalability trick).
+//! * [`heatmap`] — `plot_comm_matrix`: linear or log color scale.
+//! * [`bars`] — `plot_comm_by_process` and stacked `plot_time_profile`.
+//! * [`histogram`] — message-size histograms.
+
+pub mod bars;
+pub mod heatmap;
+pub mod histogram;
+pub mod profile_views;
+pub mod svg;
+pub mod timeline;
+
+pub use bars::{plot_comm_by_process, plot_time_profile};
+pub use heatmap::plot_comm_matrix;
+pub use histogram::plot_message_histogram;
+pub use profile_views::{plot_comm_over_time, plot_flat_profile, plot_matrix_profile, plot_multirun};
+pub use timeline::{plot_timeline, TimelineOptions};

@@ -1,0 +1,170 @@
+//! Additional views rounding out the paper's "tens of graphical views":
+//! flat-profile bars, comm-over-time series, matrix-profile series with
+//! motif highlights, and the stacked multi-run comparison (Fig. 12 right).
+
+use crate::analysis::{MultiRun, ProfileRow};
+use crate::viz::svg::{color, Svg};
+
+/// Horizontal-bar flat profile (top `max_rows` functions).
+pub fn plot_flat_profile(rows: &[ProfileRow], max_rows: usize) -> String {
+    let rows = &rows[..rows.len().min(max_rows)];
+    let h = 24.0 * rows.len() as f64 + 40.0;
+    let mut svg = Svg::new(760.0, h);
+    let max = rows.iter().map(|r| r.value).fold(1e-12, f64::max);
+    for (i, r) in rows.iter().enumerate() {
+        let y = 30.0 + i as f64 * 24.0;
+        let w = r.value / max * 480.0;
+        svg.rect(220.0, y, w, 18.0, color(i), Some(&format!("{}: {:.0} ns", r.name, r.value)));
+        let label = if r.name.len() > 28 { &r.name[..28] } else { &r.name };
+        svg.text(4.0, y + 13.0, 11.0, label);
+        svg.text(226.0 + w, y + 13.0, 10.0, &crate::util::fmt_ns(r.value));
+    }
+    svg.text(4.0, 16.0, 12.0, "flat profile");
+    svg.finish()
+}
+
+/// Message count + volume per time bin (comm_over_time output).
+pub fn plot_comm_over_time(counts: &[u64], volume: &[f64], edges: &[i64]) -> String {
+    let n = counts.len().max(1);
+    let bw = (900.0 / n as f64).clamp(1.0, 24.0);
+    let h = 260.0;
+    let mut svg = Svg::new(80.0 + n as f64 * bw, h + 60.0);
+    let cmax = counts.iter().copied().max().unwrap_or(1).max(1) as f64;
+    let vmax = volume.iter().copied().fold(1e-12, f64::max);
+    for i in 0..n {
+        // volume bars
+        let vh = volume[i] / vmax * h;
+        svg.rect(60.0 + i as f64 * bw, 20.0 + (h - vh), bw * 0.9, vh, color(0),
+            Some(&format!("[{}..{}] {:.0} B", edges[i], edges[i + 1], volume[i])));
+        // count ticks overlaid
+        let ch = counts[i] as f64 / cmax * h;
+        svg.rect(60.0 + i as f64 * bw + bw * 0.25, 20.0 + (h - ch), bw * 0.4, 2.0,
+            color(3), Some(&format!("{} msgs", counts[i])));
+    }
+    svg.text(4.0, 14.0, 12.0, "communication over time (bars: volume, ticks: count)");
+    svg.finish()
+}
+
+/// Matrix-profile series with the motif pair highlighted.
+pub fn plot_matrix_profile(profile: &[f64], window: usize) -> String {
+    let n = profile.len().max(1);
+    let w = 960.0;
+    let h = 240.0;
+    let mut svg = Svg::new(w + 40.0, h + 50.0);
+    let finite_max = profile
+        .iter()
+        .copied()
+        .filter(|v| v.is_finite())
+        .fold(1e-12, f64::max);
+    let x_of = |i: usize| 30.0 + i as f64 / n as f64 * w;
+    let y_of = |v: f64| 20.0 + (1.0 - (v / finite_max).clamp(0.0, 1.0)) * h;
+    let mut prev: Option<(f64, f64)> = None;
+    let (mut best, mut best_v) = (0usize, f64::INFINITY);
+    for (i, &v) in profile.iter().enumerate() {
+        if !v.is_finite() {
+            prev = None;
+            continue;
+        }
+        if v < best_v {
+            best_v = v;
+            best = i;
+        }
+        let p = (x_of(i), y_of(v));
+        if let Some(q) = prev {
+            svg.line(q.0, q.1, p.0, p.1, color(0), 1.0);
+        }
+        prev = Some(p);
+    }
+    // highlight the motif window
+    svg.rect(
+        x_of(best),
+        20.0,
+        (window as f64 / n as f64 * w).max(2.0),
+        h,
+        "#ff7f0e40",
+        Some(&format!("motif @ window {best}, dist² {best_v:.3}")),
+    );
+    svg.text(4.0, 14.0, 12.0, "matrix profile (lower = more repeated)");
+    svg.finish()
+}
+
+/// Stacked per-run function bars (Fig. 12's matplotlib view).
+pub fn plot_multirun(mr: &MultiRun) -> String {
+    let n = mr.run_labels.len().max(1);
+    let bw = 70.0;
+    let h = 300.0;
+    let mut svg = Svg::new(120.0 + n as f64 * (bw + 20.0) + 180.0, h + 60.0);
+    let max_total = mr
+        .values
+        .iter()
+        .map(|row| row.iter().sum::<f64>())
+        .fold(1e-12, f64::max);
+    for (r, row) in mr.values.iter().enumerate() {
+        let x = 80.0 + r as f64 * (bw + 20.0);
+        let mut y = 20.0 + h;
+        for (f, &v) in row.iter().enumerate() {
+            if v <= 0.0 {
+                continue;
+            }
+            let bh = v / max_total * h;
+            y -= bh;
+            svg.rect(x, y, bw, bh, color(f), Some(&format!("{}: {v:.3e} ns", mr.func_names[f])));
+        }
+        svg.text(x + 10.0, h + 38.0, 11.0, &mr.run_labels[r]);
+    }
+    for (f, name) in mr.func_names.iter().enumerate().take(12) {
+        let y = 30.0 + f as f64 * 16.0;
+        let x = 100.0 + n as f64 * (bw + 20.0);
+        svg.rect(x, y - 9.0, 10.0, 10.0, color(f), None);
+        let label = if name.len() > 22 { &name[..22] } else { name };
+        svg.text(x + 14.0, y, 10.0, label);
+    }
+    svg.text(4.0, 14.0, 12.0, "multi-run flat profiles (stacked)");
+    svg.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::{self, Metric};
+    use crate::gen::{self, GenConfig};
+
+    #[test]
+    fn flat_profile_view() {
+        let mut t = gen::generate("tortuga", &GenConfig::new(8, 4), 1).unwrap();
+        let fp = analysis::flat_profile(&mut t, Metric::ExcTime).unwrap();
+        let svg = plot_flat_profile(&fp, 8);
+        assert!(svg.contains("computeRhs"));
+    }
+
+    #[test]
+    fn comm_over_time_view() {
+        let t = gen::generate("laghos", &GenConfig::new(16, 6), 1).unwrap();
+        let (c, v, e) = analysis::comm_over_time(&t, 32).unwrap();
+        let svg = plot_comm_over_time(&c, &v, &e);
+        assert!(svg.contains("volume"));
+    }
+
+    #[test]
+    fn matrix_profile_view_highlights_motif() {
+        let mut rng = crate::util::rng::Rng::new(4);
+        let s: Vec<f64> = (0..400)
+            .map(|i| (i as f64 / 23.0).sin() + 0.05 * rng.normal())
+            .collect();
+        let (p, _) = analysis::matrix_profile(&s, 24).unwrap();
+        let svg = plot_matrix_profile(&p, 24);
+        assert!(svg.contains("motif @ window"));
+    }
+
+    #[test]
+    fn multirun_view() {
+        let mut traces = vec![
+            gen::generate("tortuga", &GenConfig::new(4, 3), 1).unwrap(),
+            gen::generate("tortuga", &GenConfig::new(8, 3), 1).unwrap(),
+        ];
+        let mr = analysis::multi_run_analysis(&mut traces, Metric::ExcTime, 4).unwrap();
+        let svg = plot_multirun(&mr);
+        assert!(svg.contains("multi-run"));
+        assert!(svg.contains("computeRhs"));
+    }
+}

@@ -1,0 +1,132 @@
+//! Tiny SVG document builder shared by all views.
+
+use std::fmt::Write as _;
+
+/// An SVG document under construction.
+pub struct Svg {
+    pub width: f64,
+    pub height: f64,
+    body: String,
+}
+
+impl Svg {
+    pub fn new(width: f64, height: f64) -> Svg {
+        Svg { width, height, body: String::new() }
+    }
+
+    pub fn rect(&mut self, x: f64, y: f64, w: f64, h: f64, fill: &str, title: Option<&str>) {
+        let _ = write!(
+            self.body,
+            r#"<rect x="{x:.2}" y="{y:.2}" width="{w:.2}" height="{h:.2}" fill="{fill}">"#
+        );
+        if let Some(t) = title {
+            let _ = write!(self.body, "<title>{}</title>", escape(t));
+        }
+        self.body.push_str("</rect>\n");
+    }
+
+    pub fn line(&mut self, x1: f64, y1: f64, x2: f64, y2: f64, stroke: &str, width: f64) {
+        let _ = writeln!(
+            self.body,
+            r#"<line x1="{x1:.2}" y1="{y1:.2}" x2="{x2:.2}" y2="{y2:.2}" stroke="{stroke}" stroke-width="{width}"/>"#
+        );
+    }
+
+    /// Arrow with a small head at (x2, y2).
+    pub fn arrow(&mut self, x1: f64, y1: f64, x2: f64, y2: f64, stroke: &str) {
+        self.line(x1, y1, x2, y2, stroke, 1.0);
+        let dx = x2 - x1;
+        let dy = y2 - y1;
+        let len = (dx * dx + dy * dy).sqrt().max(1e-9);
+        let (ux, uy) = (dx / len, dy / len);
+        let (px, py) = (-uy, ux);
+        let s = 4.0;
+        let _ = writeln!(
+            self.body,
+            r#"<polygon points="{:.2},{:.2} {:.2},{:.2} {:.2},{:.2}" fill="{stroke}"/>"#,
+            x2,
+            y2,
+            x2 - s * ux + s * 0.5 * px,
+            y2 - s * uy + s * 0.5 * py,
+            x2 - s * ux - s * 0.5 * px,
+            y2 - s * uy - s * 0.5 * py,
+        );
+    }
+
+    pub fn diamond(&mut self, cx: f64, cy: f64, r: f64, fill: &str, title: Option<&str>) {
+        let _ = write!(
+            self.body,
+            r#"<polygon points="{:.2},{:.2} {:.2},{:.2} {:.2},{:.2} {:.2},{:.2}" fill="{fill}">"#,
+            cx, cy - r, cx + r, cy, cx, cy + r, cx - r, cy
+        );
+        if let Some(t) = title {
+            let _ = write!(self.body, "<title>{}</title>", escape(t));
+        }
+        self.body.push_str("</polygon>\n");
+    }
+
+    pub fn text(&mut self, x: f64, y: f64, size: f64, content: &str) {
+        let _ = writeln!(
+            self.body,
+            r#"<text x="{x:.2}" y="{y:.2}" font-size="{size}" font-family="monospace">{}</text>"#,
+            escape(content)
+        );
+    }
+
+    pub fn finish(self) -> String {
+        format!(
+            "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{:.0}\" height=\"{:.0}\" viewBox=\"0 0 {:.0} {:.0}\">\n<rect width=\"100%\" height=\"100%\" fill=\"white\"/>\n{}</svg>\n",
+            self.width, self.height, self.width, self.height, self.body
+        )
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;")
+}
+
+/// A categorical color palette (matplotlib tab10).
+pub const PALETTE: &[&str] = &[
+    "#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd", "#8c564b",
+    "#e377c2", "#7f7f7f", "#bcbd22", "#17becf",
+];
+
+pub fn color(i: usize) -> &'static str {
+    PALETTE[i % PALETTE.len()]
+}
+
+/// Map t in [0,1] to a white→blue ramp (hex).
+pub fn blue_ramp(t: f64) -> String {
+    let t = t.clamp(0.0, 1.0);
+    let r = (255.0 * (1.0 - t * 0.85)) as u8;
+    let g = (255.0 * (1.0 - t * 0.65)) as u8;
+    let b = 255u8 - (t * 60.0) as u8;
+    format!("#{r:02x}{g:02x}{b:02x}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_valid_svg() {
+        let mut s = Svg::new(100.0, 50.0);
+        s.rect(0.0, 0.0, 10.0, 10.0, "#ff0000", Some("tip & <tag>"));
+        s.line(0.0, 0.0, 50.0, 25.0, "black", 1.0);
+        s.diamond(20.0, 20.0, 3.0, "blue", None);
+        s.text(5.0, 45.0, 10.0, "hello");
+        s.arrow(0.0, 0.0, 30.0, 30.0, "gray");
+        let out = s.finish();
+        assert!(out.starts_with("<svg"));
+        assert!(out.ends_with("</svg>\n"));
+        assert!(out.contains("&amp; &lt;tag&gt;"));
+        assert_eq!(out.matches("<rect").count(), 2); // bg + one rect
+    }
+
+    #[test]
+    fn ramp_endpoints() {
+        assert_eq!(blue_ramp(0.0), "#ffffff");
+        assert!(blue_ramp(1.0).starts_with('#'));
+        assert_ne!(blue_ramp(1.0), blue_ramp(0.5));
+    }
+}

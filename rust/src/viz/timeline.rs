@@ -1,0 +1,228 @@
+//! `plot_timeline` (paper §V): events over time, one lane per process
+//! (expanded by call depth), message arrows, critical-path overlay, and
+//! rasterization of sub-pixel events.
+
+use crate::analysis::messages::match_messages;
+use crate::df::NULL_I64;
+use crate::trace::*;
+use crate::viz::svg::{color, Svg};
+use anyhow::Result;
+use std::collections::HashMap;
+
+/// Options for the timeline view.
+#[derive(Debug, Clone)]
+pub struct TimelineOptions {
+    pub width: f64,
+    pub lane_height: f64,
+    /// Restrict to this time range (ns); None = full trace.
+    pub x_start: Option<i64>,
+    pub x_end: Option<i64>,
+    /// Draw send→recv arrows.
+    pub show_messages: bool,
+    /// Highlight these event rows as the critical path.
+    pub critical_path: Option<Vec<u32>>,
+    /// Events narrower than this many px are rasterized into a density
+    /// strip instead of individual rects (the paper's scalability trick).
+    pub raster_px: f64,
+}
+
+impl Default for TimelineOptions {
+    fn default() -> Self {
+        TimelineOptions {
+            width: 1200.0,
+            lane_height: 16.0,
+            x_start: None,
+            x_end: None,
+            show_messages: true,
+            critical_path: None,
+            raster_px: 0.8,
+        }
+    }
+}
+
+/// Render the timeline as SVG.
+pub fn plot_timeline(trace: &mut Trace, opts: &TimelineOptions) -> Result<String> {
+    crate::analysis::match_caller_callee::prepare(trace)?;
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let matching = trace.events.i64s("_matching_event")?;
+    let depth = trace.events.i64s("_depth")?;
+    let enter = edict.code_of(ENTER);
+    let instant = edict.code_of(INSTANT);
+
+    let (lo, hi) = trace.time_range()?;
+    let x0 = opts.x_start.unwrap_or(lo);
+    let x1 = opts.x_end.unwrap_or(hi).max(x0 + 1);
+    let span = (x1 - x0) as f64;
+
+    let procs = trace.process_ids()?;
+    let max_depth = depth
+        .iter()
+        .filter(|&&d| d != NULL_I64)
+        .map(|&d| d as usize)
+        .max()
+        .unwrap_or(0)
+        + 1;
+    let lane_of: HashMap<i64, usize> =
+        procs.iter().enumerate().map(|(i, &p)| (p, i)).collect();
+    let margin_left = 90.0;
+    let margin_top = 20.0;
+    let proc_h = opts.lane_height * max_depth as f64 + 6.0;
+    let height = margin_top + procs.len() as f64 * proc_h + 20.0;
+    let mut svg = Svg::new(opts.width + margin_left + 10.0, height);
+
+    let x_of = |t: i64| margin_left + (t - x0) as f64 / span * opts.width;
+
+    // lane labels
+    for (&p, &lane) in &lane_of {
+        svg.text(
+            4.0,
+            margin_top + lane as f64 * proc_h + opts.lane_height,
+            11.0,
+            &format!("Process {p}"),
+        );
+    }
+
+    // color per function name, stable by code
+    let mut color_of: HashMap<u32, &str> = HashMap::new();
+    // density raster accumulator: (lane, px) -> count of tiny events
+    let mut raster: HashMap<(usize, usize), u32> = HashMap::new();
+
+    for i in 0..trace.len() {
+        if Some(et[i]) == enter && matching[i] != NULL_I64 {
+            let t_a = ts[i];
+            let t_b = ts[matching[i] as usize];
+            if t_b < x0 || t_a > x1 {
+                continue;
+            }
+            let lane = lane_of[&pr[i]];
+            let d = depth[i].max(0) as f64;
+            let xa = x_of(t_a.max(x0));
+            let xb = x_of(t_b.min(x1));
+            let w = xb - xa;
+            let y = margin_top + lane as f64 * proc_h + d * opts.lane_height;
+            if w < opts.raster_px {
+                *raster.entry((lane, xa as usize)).or_insert(0) += 1;
+                continue;
+            }
+            let n = color_of.len();
+            let c = color_of.entry(nm[i]).or_insert_with(|| color(n));
+            let name = ndict.resolve(nm[i]).unwrap_or("");
+            svg.rect(xa, y, w, opts.lane_height - 2.0, c,
+                Some(&format!("{name} [{t_a}..{t_b}]")));
+        } else if Some(et[i]) == instant {
+            let t = ts[i];
+            if t < x0 || t > x1 {
+                continue;
+            }
+            let lane = lane_of[&pr[i]];
+            let y = margin_top + lane as f64 * proc_h + opts.lane_height * 0.5;
+            svg.diamond(x_of(t), y, 3.0, "#333333",
+                Some(ndict.resolve(nm[i]).unwrap_or("")));
+        }
+    }
+
+    // rasterized density strips for sub-pixel events
+    for ((lane, px), count) in &raster {
+        let y = margin_top + *lane as f64 * proc_h;
+        let alpha = (*count as f64 / 10.0).min(1.0);
+        let shade = (200.0 - 150.0 * alpha) as u8;
+        svg.rect(
+            *px as f64,
+            y,
+            1.0,
+            opts.lane_height - 2.0,
+            &format!("#{shade:02x}{shade:02x}{shade:02x}"),
+            Some(&format!("{count} events")),
+        );
+    }
+
+    // message arrows
+    if opts.show_messages {
+        let m = match_messages(trace)?;
+        for &r in &m.recvs {
+            let s = m.send_of_recv[r as usize];
+            if s < 0 {
+                continue;
+            }
+            let (si, ri_) = (s as usize, r as usize);
+            if ts[ri_] < x0 || ts[si] > x1 {
+                continue;
+            }
+            let y_s = margin_top
+                + lane_of[&pr[si]] as f64 * proc_h
+                + opts.lane_height * 0.5;
+            let y_r = margin_top
+                + lane_of[&pr[ri_]] as f64 * proc_h
+                + opts.lane_height * 0.5;
+            svg.arrow(x_of(ts[si]), y_s, x_of(ts[ri_]), y_r, "#555555");
+        }
+    }
+
+    // critical-path overlay
+    if let Some(path) = &opts.critical_path {
+        for w in path.windows(2) {
+            let (a, b) = (w[0] as usize, w[1] as usize);
+            let ya = margin_top + lane_of[&pr[a]] as f64 * proc_h + 2.0;
+            let yb = margin_top + lane_of[&pr[b]] as f64 * proc_h + 2.0;
+            svg.line(x_of(ts[a]), ya, x_of(ts[b]), yb, "#d62728", 2.5);
+        }
+    }
+
+    Ok(svg.finish())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{gol, GenConfig};
+
+    #[test]
+    fn renders_with_messages_and_path() {
+        let mut t = gol::generate(&GenConfig::new(4, 3));
+        let paths = crate::analysis::critical_path_analysis(&mut t).unwrap();
+        let opts = TimelineOptions {
+            critical_path: Some(paths[0].rows.clone()),
+            ..Default::default()
+        };
+        let svg = plot_timeline(&mut t, &opts).unwrap();
+        assert!(svg.contains("<svg"));
+        assert!(svg.contains("Process 0"));
+        assert!(svg.contains("<polygon")); // arrows/diamonds present
+        assert!(svg.contains("#d62728")); // critical path color
+    }
+
+    #[test]
+    fn time_window_reduces_content() {
+        let mut t = gol::generate(&GenConfig::new(4, 10));
+        let full = plot_timeline(&mut t, &TimelineOptions::default()).unwrap();
+        let (lo, hi) = t.time_range().unwrap();
+        let narrow = plot_timeline(
+            &mut t,
+            &TimelineOptions {
+                x_start: Some(lo),
+                x_end: Some(lo + (hi - lo) / 10),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert!(narrow.len() < full.len());
+    }
+
+    #[test]
+    fn tiny_events_rasterize() {
+        // thousands of 1ns calls across a huge span -> raster strips
+        let mut b = crate::trace::TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        for k in 0..2000i64 {
+            b.enter(0, 0, 1_000_000 * k + 10, "tiny");
+            b.leave(0, 0, 1_000_000 * k + 11, "tiny");
+        }
+        b.leave(0, 0, 2_000_000_000, "main");
+        let mut t = b.finish();
+        let svg = plot_timeline(&mut t, &TimelineOptions::default()).unwrap();
+        assert!(svg.contains("events</title>"), "raster strips expected");
+    }
+}

@@ -1,0 +1,224 @@
+//! Cross-module integration tests: formats × analysis × runtime ×
+//! coordinator, over generated application traces.
+
+use pipit::analysis::{self, CommUnit, Metric, PatternConfig};
+use pipit::coordinator::{AnalysisSession, Pipeline};
+use pipit::df::Expr;
+use pipit::gen::{self, GenConfig};
+use pipit::readers;
+use pipit::trace::*;
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join("pipit_integration").join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// The same analysis produces identical results regardless of which
+/// on-disk format the trace passed through — the paper's "uniform data
+/// model" claim, tested end to end.
+#[test]
+fn same_analysis_across_formats() {
+    let t = gen::generate("laghos", &GenConfig::new(8, 6), 1).unwrap();
+    let dir = tmp("formats");
+
+    readers::otf2::write(&t, &dir.join("otf2")).unwrap();
+    readers::csv::write(&t, &dir.join("t.csv")).unwrap();
+    readers::chrome::write(&t, &dir.join("t.json")).unwrap();
+
+    let mut variants = vec![
+        ("otf2", readers::otf2::read(&dir.join("otf2"), 2).unwrap()),
+        ("csv", readers::csv::read(&dir.join("t.csv")).unwrap()),
+        ("chrome", readers::chrome::read(&dir.join("t.json")).unwrap()),
+    ];
+    let mut reference: Option<Vec<analysis::ProfileRow>> = None;
+    for (fmt, trace) in &mut variants {
+        let fp = analysis::flat_profile(trace, Metric::ExcTime).unwrap();
+        match &reference {
+            None => reference = Some(fp),
+            Some(r) => {
+                assert_eq!(r.len(), fp.len(), "{fmt}: profile shape differs");
+                for (a, b) in r.iter().zip(&fp) {
+                    assert_eq!(a.name, b.name, "{fmt}");
+                    assert!(
+                        (a.value - b.value).abs() < 1e-6 * a.value.max(1.0),
+                        "{fmt}: {} {} vs {}",
+                        a.name,
+                        a.value,
+                        b.value
+                    );
+                }
+            }
+        }
+        let m = analysis::comm_matrix(trace, CommUnit::Bytes).unwrap();
+        assert!(m.total() > 0.0, "{fmt}: lost messages");
+    }
+}
+
+/// HPCToolkit sample reconstruction feeds the same analysis pipeline.
+#[test]
+fn hpctoolkit_reconstruction_analysis() {
+    use std::collections::HashMap;
+    let dir = tmp("hpct");
+    let cct = vec![
+        (1i64, -1i64, "main"),
+        (2, 1, "solve"),
+        (3, 2, "MPI_Wait"),
+    ];
+    let mut samples = HashMap::new();
+    for r in 0..4i64 {
+        // rank r waits longer the higher its id
+        samples.insert(
+            r,
+            vec![
+                (0i64, 1i64),
+                (100, 2),
+                (200, 3),
+                (200 + 100 * r, 2),
+                (900, 1),
+                (1000, 1),
+            ],
+        );
+    }
+    readers::hpctoolkit::write(&dir, &cct, &samples).unwrap();
+    let mut t = readers::hpctoolkit::read(&dir).unwrap();
+    let rows = analysis::idle_time(&mut t, Some(&["MPI_Wait"])).unwrap();
+    assert_eq!(rows[0].proc, 3, "{rows:?}"); // longest waiter
+    let cct2 = analysis::create_cct(&mut t).unwrap();
+    let wait = cct2.nodes.iter().find(|n| n.name == "MPI_Wait").unwrap();
+    assert_eq!(cct2.path(wait.id), vec!["main", "solve", "MPI_Wait"]);
+}
+
+/// The Fig. 8 workflow end to end: detect pattern -> filter -> re-analyze.
+#[test]
+fn pattern_filter_reanalyze_workflow() {
+    let mut t = gen::generate("tortuga", &GenConfig::new(8, 10), 1).unwrap();
+    let pats =
+        analysis::detect_pattern(&mut t, Some("time-loop"), &PatternConfig::default()).unwrap();
+    assert_eq!(pats.len(), 10);
+    let one = t
+        .filter(&Expr::time_between(pats[1].start, pats[1].end))
+        .unwrap();
+    assert!(one.len() < t.len() / 5);
+    // the reduced trace is a valid trace for every op
+    let mut one = one;
+    let fp = analysis::flat_profile(&mut one, Metric::ExcTime).unwrap();
+    assert!(fp.iter().any(|r| r.name == "computeRhs"));
+}
+
+/// Session + pipeline over artifacts: kernel-backed and pure paths agree.
+#[test]
+fn session_hlo_vs_rust_agreement() {
+    let artifacts = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts missing");
+        return;
+    }
+    let mut s = AnalysisSession::new().with_artifacts(&artifacts);
+    assert!(s.uses_hlo());
+    s.generate("t", "amg", &GenConfig::new(8, 6), 1).unwrap();
+    let hlo_tp = s.time_profile("t", 128, None).unwrap();
+    let mut copy = s.get("t").unwrap().clone();
+    let rust_tp = analysis::time_profile(&mut copy, 128, Some(63)).unwrap();
+    assert_eq!(hlo_tp.func_names, rust_tp.func_names);
+    assert!((hlo_tp.total() - rust_tp.total()).abs() < 1e-3 * rust_tp.total());
+
+    // matrix profile agreement on a synthetic series
+    let mut rng = pipit::util::rng::Rng::new(77);
+    let series: Vec<f64> = (0..4159)
+        .map(|i| (i as f64 / 131.0).sin() + 0.05 * rng.normal())
+        .collect();
+    let hlo_mp = s.matrix_profile(&series, 64).unwrap();
+    let (rust_mp, _) = analysis::matrix_profile(&series, 64).unwrap();
+    for i in (0..hlo_mp.len()).step_by(101) {
+        assert!(
+            (hlo_mp[i] - rust_mp[i]).abs() < 5e-2 * (1.0 + rust_mp[i].abs()),
+            "window {i}: {} vs {}",
+            hlo_mp[i],
+            rust_mp[i]
+        );
+    }
+}
+
+/// A full pipeline spec reproducing several paper figures in one run.
+#[test]
+fn figure_pipeline_spec() {
+    let dir = tmp("figpipe");
+    let spec = r#"{ "steps": [
+        {"op": "generate", "trace": "laghos32", "app": "laghos", "ranks": 32, "iterations": 8},
+        {"op": "comm_matrix", "trace": "laghos32", "unit": "bytes", "out": "fig3.csv"},
+        {"op": "message_histogram", "trace": "laghos32", "bins": 10, "out": "fig4.csv"},
+        {"op": "generate", "trace": "kripke32", "app": "kripke", "ranks": 32, "iterations": 4},
+        {"op": "comm_by_process", "trace": "kripke32", "unit": "bytes", "out": "fig6.csv"},
+        {"op": "generate", "trace": "loimos", "app": "loimos", "ranks": 64, "iterations": 6},
+        {"op": "load_imbalance", "trace": "loimos", "metric": "exc", "out": "fig7.csv"},
+        {"op": "idle_time", "trace": "loimos", "out": "fig9.csv"},
+        {"op": "generate", "trace": "gol", "app": "gol", "ranks": 4, "iterations": 8},
+        {"op": "critical_path", "trace": "gol", "out": "fig10.txt"},
+        {"op": "lateness", "trace": "gol", "out": "fig11.csv"}
+    ]}"#;
+    let p = Pipeline::parse(spec, &dir).unwrap();
+    let mut s = AnalysisSession::new();
+    let results = p.run(&mut s).unwrap();
+    assert_eq!(results.len(), 11);
+    for f in ["fig3.csv", "fig4.csv", "fig6.csv", "fig7.csv", "fig9.csv", "fig10.txt", "fig11.csv"] {
+        assert!(dir.join(f).exists(), "{f} missing");
+        assert!(std::fs::metadata(dir.join(f)).unwrap().len() > 0, "{f} empty");
+    }
+}
+
+/// Projections round trip preserves the idle structure Loimos analyses use.
+#[test]
+fn projections_preserves_idle_analysis() {
+    let t = gen::generate("loimos", &GenConfig::new(8, 4), 1).unwrap();
+    let dir = tmp("proj");
+    readers::projections::write(&t, &dir, "loimos").unwrap();
+    let mut t2 = readers::projections::read(&dir, 2).unwrap();
+    let mut t1 = t.clone();
+    let idle1 = analysis::idle_time(&mut t1, None).unwrap();
+    let idle2 = analysis::idle_time(&mut t2, None).unwrap();
+    // process ids may be renumbered 0..n in .sts order; compare sorted values
+    let mut v1: Vec<i64> = idle1.iter().map(|r| r.idle_ns as i64).collect();
+    let mut v2: Vec<i64> = idle2.iter().map(|r| r.idle_ns as i64).collect();
+    v1.sort_unstable();
+    v2.sort_unstable();
+    assert_eq!(v1, v2);
+}
+
+/// Auto-detection routes every format to the right reader.
+#[test]
+fn read_auto_detects_all_formats() {
+    let t = gen::generate("amg", &GenConfig::new(4, 2), 1).unwrap();
+    let dir = tmp("auto");
+    readers::otf2::write(&t, &dir.join("as_otf2")).unwrap();
+    readers::csv::write(&t, &dir.join("as.csv")).unwrap();
+    readers::chrome::write(&t, &dir.join("as.json")).unwrap();
+    readers::projections::write(&t, &dir.join("as_proj"), "amg").unwrap();
+
+    assert_eq!(readers::read_auto(&dir.join("as_otf2")).unwrap().meta.format, "otf2");
+    assert_eq!(readers::read_auto(&dir.join("as.csv")).unwrap().meta.format, "csv");
+    assert_eq!(readers::read_auto(&dir.join("as.json")).unwrap().meta.format, "chrome");
+    assert_eq!(
+        readers::read_auto(&dir.join("as_proj")).unwrap().meta.format,
+        "projections"
+    );
+}
+
+/// Multi-run comparison across *formats* — the paper's "single-source code
+/// that works with traces collected by different tools".
+#[test]
+fn multirun_across_heterogeneous_formats() {
+    let dir = tmp("hetero");
+    let a = gen::generate("tortuga", &GenConfig::new(4, 4), 1).unwrap();
+    let b = gen::generate("tortuga", &GenConfig::new(8, 4), 1).unwrap();
+    readers::otf2::write(&a, &dir.join("a_otf2")).unwrap();
+    readers::chrome::write(&b, &dir.join("b.json")).unwrap();
+
+    let mut s = AnalysisSession::new();
+    s.load("a", dir.join("a_otf2")).unwrap();
+    s.load("b", dir.join("b.json")).unwrap();
+    let mr = s.multi_run(&["a", "b"], Metric::ExcTime, 4).unwrap();
+    assert_eq!(mr.run_labels, vec!["4", "8"]);
+    assert!(mr.func_names.contains(&"computeRhs".to_string()));
+}

@@ -1,0 +1,258 @@
+//! Property-based tests on the engine invariants DESIGN.md §7 lists.
+//! Uses the crate's own seeded property runner (`pipit::util::prop`) —
+//! every failure message contains the reproducing seed.
+
+use pipit::analysis::{self, CommUnit, Metric};
+use pipit::df::Expr;
+use pipit::gen::{self, GenConfig};
+use pipit::prop_assert;
+use pipit::trace::builder::validate_nesting;
+use pipit::trace::*;
+use pipit::util::prop::check;
+use pipit::util::rng::Rng;
+
+const CASES: u64 = 12;
+
+/// Random generator config drawing from all app models.
+fn random_trace(rng: &mut Rng) -> Trace {
+    let app = *rng.choice(gen::APPS);
+    let cfg = GenConfig {
+        ranks: rng.range(2, 12) as usize,
+        iterations: rng.range(2, 8) as usize,
+        seed: rng.next_u64(),
+        noise: rng.uniform(0.0, 0.15),
+    };
+    gen::generate(app, &cfg, rng.range(1, 3) as usize).unwrap()
+}
+
+#[test]
+fn prop_generated_traces_are_wellformed() {
+    check("wellformed", CASES, 0xA0, |rng| {
+        let t = random_trace(rng);
+        validate_nesting(&t).map_err(|e| e.to_string())?;
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_matching_is_involution() {
+    check("matching-involution", CASES, 0xA1, |rng| {
+        let t = random_trace(rng);
+        let m = analysis::messages::match_messages(&t).map_err(|e| e.to_string())?;
+        for &s in &m.sends {
+            let r = m.recv_of_send[s as usize];
+            if r >= 0 {
+                prop_assert!(
+                    m.send_of_recv[r as usize] == s as i64,
+                    "send {s} -> recv {r} -> {}",
+                    m.send_of_recv[r as usize]
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_exc_sums_to_inc_at_roots() {
+    check("exc-sums-to-root-inc", CASES, 0xA2, |rng| {
+        let mut t = random_trace(rng);
+        analysis::metrics::calc_exc_metrics(&mut t).map_err(|e| e.to_string())?;
+        let inc = t.events.f64s("time.inc").unwrap();
+        let exc = t.events.f64s("time.exc").unwrap();
+        let parent = t.events.i64s("_parent").unwrap();
+        let (et, ed) = t.events.strs(COL_TYPE).unwrap();
+        let enter = ed.code_of(ENTER).unwrap();
+        let mut root_inc = 0.0;
+        let mut exc_total = 0.0;
+        for i in 0..t.len() {
+            if et[i] == enter && !inc[i].is_nan() {
+                if parent[i] == pipit::df::NULL_I64 {
+                    root_inc += inc[i];
+                }
+                exc_total += exc[i];
+                prop_assert!(exc[i] >= -1e-6, "negative exclusive at row {i}: {}", exc[i]);
+                prop_assert!(inc[i] + 1e-6 >= exc[i], "exc > inc at row {i}");
+            }
+        }
+        prop_assert!(
+            (root_inc - exc_total).abs() < 1e-6 * root_inc.max(1.0),
+            "sum exc {exc_total} != root inc {root_inc}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_filter_composition() {
+    check("filter-and-composes", CASES, 0xA3, |rng| {
+        let t = random_trace(rng);
+        let (lo, hi) = t.time_range().unwrap();
+        let mid = lo + (hi - lo) / 2;
+        let a = Expr::process_in(&[0, 1, 2]);
+        let b = Expr::time_between(lo, mid);
+        let combined = t.filter(&a.clone().and(b.clone())).map_err(|e| e.to_string())?;
+        let sequential = t
+            .filter(&a)
+            .and_then(|x| x.filter(&b))
+            .map_err(|e| e.to_string())?;
+        prop_assert!(combined.len() == sequential.len());
+        prop_assert!(
+            combined.timestamps().unwrap() == sequential.timestamps().unwrap(),
+            "filter(a&&b) != filter(a);filter(b)"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_comm_matrix_marginals_match_by_process() {
+    check("comm-matrix-marginals", CASES, 0xA4, |rng| {
+        let t = random_trace(rng);
+        let m = analysis::comm_matrix(&t, CommUnit::Bytes).map_err(|e| e.to_string())?;
+        let by_proc = analysis::comm_by_process(&t, CommUnit::Bytes).map_err(|e| e.to_string())?;
+        let rows = m.row_sums();
+        let cols = m.col_sums();
+        for (i, &(_, sent, recvd)) in by_proc.iter().enumerate() {
+            prop_assert!((rows[i] - sent).abs() < 1e-9, "row sum != sent for {i}");
+            prop_assert!((cols[i] - recvd).abs() < 1e-9, "col sum != recv for {i}");
+        }
+        // histogram mass == matrix count mass
+        let mc = analysis::comm_matrix(&t, CommUnit::Count).map_err(|e| e.to_string())?;
+        let (hist, _) = analysis::message_histogram(&t, 7).map_err(|e| e.to_string())?;
+        prop_assert!(
+            hist.iter().sum::<u64>() as f64 == mc.total(),
+            "histogram mass != message count"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_flat_profile_total_invariant_under_process_partition() {
+    check("flat-profile-partition", CASES, 0xA5, |rng| {
+        let t = random_trace(rng);
+        let mut whole = t.clone();
+        let total: f64 = analysis::flat_profile(&mut whole, Metric::ExcTime)
+            .map_err(|e| e.to_string())?
+            .iter()
+            .map(|r| r.value)
+            .sum();
+        let mut split_total = 0.0;
+        for p in t.process_ids().unwrap() {
+            let mut part = t.filter(&Expr::process_eq(p)).map_err(|e| e.to_string())?;
+            split_total += analysis::flat_profile(&mut part, Metric::ExcTime)
+                .map_err(|e| e.to_string())?
+                .iter()
+                .map(|r| r.value)
+                .sum::<f64>();
+        }
+        prop_assert!(
+            (total - split_total).abs() < 1e-6 * total.max(1.0),
+            "profile not additive over process partition: {total} vs {split_total}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_time_profile_conserves_busy_time() {
+    check("time-profile-conservation", CASES, 0xA6, |rng| {
+        let mut t = random_trace(rng);
+        let bins = rng.range(8, 200) as usize;
+        let segs = analysis::time_profile::exclusive_segments(&mut t)
+            .map_err(|e| e.to_string())?;
+        let busy: f64 = segs.iter().map(|s| (s.end - s.start) as f64).sum();
+        let tp = analysis::time_profile(&mut t, bins, None).map_err(|e| e.to_string())?;
+        prop_assert!(
+            (tp.total() - busy).abs() < 1e-6 * busy.max(1.0),
+            "bins {bins}: total {} != busy {busy}",
+            tp.total()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_critical_path_monotone_and_crosses_only_at_messages() {
+    check("critical-path", CASES, 0xA7, |rng| {
+        let mut t = random_trace(rng);
+        let paths = analysis::critical_path_analysis(&mut t).map_err(|e| e.to_string())?;
+        let ts = t.timestamps().unwrap();
+        let pr = t.processes().unwrap();
+        let (nm, nd) = t.events.strs(COL_NAME).unwrap();
+        let recv = nd.code_of(RECV_EVENT);
+        for w in paths[0].rows.windows(2) {
+            let (a, b) = (w[0] as usize, w[1] as usize);
+            prop_assert!(ts[a] <= ts[b], "path goes back in time at rows {a}->{b}");
+            if pr[a] != pr[b] {
+                // a cross-process hop must land on a recv (walking forward,
+                // the later event is the receive of the earlier's send)
+                prop_assert!(
+                    Some(nm[b]) == recv || Some(nm[a]) == recv,
+                    "process hop without message at rows {a}->{b}"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lateness_nonnegative_with_zero_per_step() {
+    check("lateness", CASES, 0xA8, |rng| {
+        let mut t = random_trace(rng);
+        let ops = analysis::calculate_lateness(&mut t).map_err(|e| e.to_string())?;
+        let mut by_step: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+        for op in &ops {
+            prop_assert!(op.lateness >= 0.0, "negative lateness");
+            let e = by_step.entry(op.step).or_insert(f64::INFINITY);
+            *e = e.min(op.lateness);
+        }
+        for (step, min) in by_step {
+            prop_assert!(min == 0.0, "step {step} has no zero-lateness op (min {min})");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_otf2_roundtrip_lossless() {
+    check("otf2-roundtrip", CASES, 0xA9, |rng| {
+        let t = random_trace(rng);
+        let dir = std::env::temp_dir()
+            .join("pipit_prop_otf2")
+            .join(format!("case_{}", rng.next_u64()));
+        pipit::readers::otf2::write(&t, &dir).map_err(|e| e.to_string())?;
+        let t2 = pipit::readers::otf2::read(&dir, 2).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_dir_all(&dir);
+        prop_assert!(t2.len() == t.len());
+        prop_assert!(t2.timestamps().unwrap() == t.timestamps().unwrap());
+        prop_assert!(t2.processes().unwrap() == t.processes().unwrap());
+        let (n1, d1) = t.events.strs(COL_NAME).unwrap();
+        let (n2, d2) = t2.events.strs(COL_NAME).unwrap();
+        for i in 0..t.len() {
+            prop_assert!(d1.resolve(n1[i]) == d2.resolve(n2[i]), "name mismatch at {i}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_csv_roundtrip_lossless() {
+    check("csv-roundtrip", CASES, 0xAA, |rng| {
+        let t = random_trace(rng);
+        let dir = std::env::temp_dir().join("pipit_prop_csv");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("case_{}.csv", rng.next_u64()));
+        pipit::readers::csv::write(&t, &p).map_err(|e| e.to_string())?;
+        let t2 = pipit::readers::csv::read(&p).map_err(|e| e.to_string())?;
+        let _ = std::fs::remove_file(&p);
+        prop_assert!(t2.len() == t.len());
+        prop_assert!(t2.timestamps().unwrap() == t.timestamps().unwrap());
+        prop_assert!(
+            t2.events.i64s(COL_MSG_SIZE).unwrap() == t.events.i64s(COL_MSG_SIZE).unwrap()
+        );
+        Ok(())
+    });
+}
