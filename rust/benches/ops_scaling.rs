@@ -8,6 +8,7 @@
 //! ```
 
 use pipit::analysis::{self, CommUnit, Metric, PatternConfig};
+use pipit::exec;
 use pipit::gen::{self, GenConfig};
 use pipit::runtime::{ops as hlo_ops, Runtime};
 use pipit::util::bench::{bench_params_from_args, Bencher};
@@ -93,6 +94,56 @@ fn main() -> anyhow::Result<()> {
         )
         .unwrap()
     });
+
+    // ---- sharded execution layer: sequential vs worker pool ---------------
+    // Acceptance target: >= 1.5x at 4 threads on an 8-process laghos trace
+    // for at least flat_profile and comm_matrix. Both sides run through
+    // exec::ops so copy/recompute overheads are symmetric: at 1 thread it
+    // clones once and runs the sequential engine; at 4 it copies the same
+    // rows as shards and merges.
+    let laghos8 = gen::generate("laghos", &GenConfig::new(8, gen_iters * 3), 1)?;
+    eprintln!(
+        "\n=== sharded execution: 1 vs 4 worker threads (laghos-8p, {} events) ===",
+        laghos8.len()
+    );
+    b.run("flat_profile/seq1/laghos8", || {
+        exec::ops::flat_profile(&laghos8, Metric::ExcTime, 1).unwrap()
+    });
+    b.run("flat_profile/sharded4/laghos8", || {
+        exec::ops::flat_profile(&laghos8, Metric::ExcTime, 4).unwrap()
+    });
+    b.run("comm_matrix/seq1/laghos8", || {
+        exec::ops::comm_matrix(&laghos8, CommUnit::Bytes, 1).unwrap()
+    });
+    b.run("comm_matrix/sharded4/laghos8", || {
+        exec::ops::comm_matrix(&laghos8, CommUnit::Bytes, 4).unwrap()
+    });
+    b.run("time_profile/seq1/laghos8", || {
+        exec::ops::time_profile(&laghos8, 128, Some(15), 1).unwrap()
+    });
+    b.run("time_profile/sharded4/laghos8", || {
+        exec::ops::time_profile(&laghos8, 128, Some(15), 4).unwrap()
+    });
+    b.run("load_imbalance/seq1/laghos8", || {
+        exec::ops::load_imbalance(&laghos8, Metric::ExcTime, 5, 1).unwrap()
+    });
+    b.run("load_imbalance/sharded4/laghos8", || {
+        exec::ops::load_imbalance(&laghos8, Metric::ExcTime, 5, 4).unwrap()
+    });
+    b.run("idle_time/seq1/laghos8", || {
+        exec::ops::idle_time(&laghos8, None, 1).unwrap()
+    });
+    b.run("idle_time/sharded4/laghos8", || {
+        exec::ops::idle_time(&laghos8, None, 4).unwrap()
+    });
+    for op in ["flat_profile", "comm_matrix", "time_profile", "load_imbalance", "idle_time"] {
+        if let Some(s) = b.speedup(
+            &format!("{op}/seq1/laghos8"),
+            &format!("{op}/sharded4/laghos8"),
+        ) {
+            eprintln!("  speedup {op:<16} {s:>6.2}x at 4 threads");
+        }
+    }
 
     // ---- kernel-backed ops: Rust engine vs AOT HLO via PJRT ---------------
     if let Ok(rt) = Runtime::load("artifacts") {

@@ -177,6 +177,76 @@ pub fn comm_matrix(trace: &Trace, unit: CommUnit) -> Result<CommMatrix> {
     Ok(CommMatrix { procs, data })
 }
 
+/// Which message records a [`accumulate_range`] pass reads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum MsgDir {
+    /// `MpiSend` records: sender = Process, receiver = Partner.
+    Send,
+    /// `MpiRecv` records: sender = Partner, receiver = Process.
+    Recv,
+}
+
+/// Accumulate one direction's message volume over the row range
+/// `[range.0, range.1)` into a dense flat `n × n` matrix — the per-shard
+/// unit of work for [`crate::exec::ops::comm_matrix`]. The returned flag
+/// mirrors the sequential fallback rule: true only when a send record
+/// actually landed in a matrix cell (always false for `Recv` passes).
+/// Cell values are integer counts / byte totals, so summing shard
+/// matrices in any order is exact.
+pub(crate) fn accumulate_range(
+    trace: &Trace,
+    unit: CommUnit,
+    procs: &[i64],
+    range: (usize, usize),
+    dir: MsgDir,
+) -> Result<(Vec<f64>, bool)> {
+    let n = procs.len();
+    let dense = procs.iter().enumerate().all(|(i, &p)| p == i as i64);
+    let index: std::collections::HashMap<i64, usize> = if dense {
+        std::collections::HashMap::new()
+    } else {
+        procs.iter().enumerate().map(|(i, &p)| (p, i)).collect()
+    };
+    let slot = |p: i64| -> Option<usize> {
+        if dense {
+            (0..n as i64).contains(&p).then_some(p as usize)
+        } else {
+            index.get(&p).copied()
+        }
+    };
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let pa = trace.events.i64s(COL_PARTNER)?;
+    let ms = trace.events.i64s(COL_MSG_SIZE)?;
+    let wanted = match dir {
+        MsgDir::Send => ndict.code_of(SEND_EVENT),
+        MsgDir::Recv => ndict.code_of(RECV_EVENT),
+    }
+    .unwrap_or(crate::df::NULL_CODE);
+    let weight = |i: usize| match unit {
+        CommUnit::Count => 1.0,
+        CommUnit::Bytes => ms[i].max(0) as f64,
+    };
+    let mut data = vec![0.0f64; n * n];
+    let mut saw_send = false;
+    for i in range.0..range.1 {
+        if nm[i] != wanted || pa[i] == NULL_I64 {
+            continue;
+        }
+        let (from, to) = match dir {
+            MsgDir::Send => (pr[i], pa[i]),
+            MsgDir::Recv => (pa[i], pr[i]),
+        };
+        if let (Some(a), Some(b)) = (slot(from), slot(to)) {
+            data[a * n + b] += weight(i);
+            if dir == MsgDir::Send {
+                saw_send = true;
+            }
+        }
+    }
+    Ok((data, saw_send))
+}
+
 /// `message_histogram`: distribution of message sizes (paper Fig. 4).
 /// Returns (counts, bin_edges) with `bins` equal-width bins over
 /// [0, max size]; edges have length bins+1, numpy-style.

@@ -44,23 +44,40 @@ pub struct ProfileRow {
 /// Total `metric` per function name, sorted descending — the paper's
 /// `flat_profile`. NaN rows (Leaves, instants) are skipped by the groupby.
 pub fn flat_profile(trace: &mut Trace, metric: Metric) -> Result<Vec<ProfileRow>> {
+    let rows = partial_profile(trace, metric)?;
+    Ok(finish_profile(rows))
+}
+
+/// Per-name totals in first-seen (row) order, *unfiltered and unsorted* —
+/// the per-shard unit of work for [`crate::exec::ops::flat_profile`].
+/// The sequential path is `partial_profile` + [`finish_profile`]; the
+/// sharded path merges shard partials in shard order (preserving global
+/// first-seen order) before the same finish, so both produce identical
+/// output.
+pub(crate) fn partial_profile(trace: &mut Trace, metric: Metric) -> Result<Vec<ProfileRow>> {
     super::metrics::calc_exc_metrics(trace)?;
     let groups = group_by(&trace.events, COL_NAME)?;
     let how = if metric == Metric::Count { Agg::Count } else { Agg::Sum };
     let vals = groups.agg_f64(&trace.events, metric.column(), how)?;
     let (_, ndict) = trace.events.strs(COL_NAME)?;
-    let mut rows: Vec<ProfileRow> = groups
+    Ok(groups
         .keys
         .iter()
         .zip(vals)
-        .filter(|(_, v)| *v > 0.0)
         .map(|(k, v)| ProfileRow {
             name: ndict.resolve(k.0 as u32).unwrap_or("").to_string(),
             value: v,
         })
-        .collect();
+        .collect())
+}
+
+/// Deterministic finishing shared by the sequential and sharded paths:
+/// drop non-positive rows, then stable-sort by value descending (ties
+/// keep first-seen order).
+pub(crate) fn finish_profile(rows: Vec<ProfileRow>) -> Vec<ProfileRow> {
+    let mut rows: Vec<ProfileRow> = rows.into_iter().filter(|r| r.value > 0.0).collect();
     rows.sort_by(|a, b| b.value.total_cmp(&a.value));
-    Ok(rows)
+    rows
 }
 
 /// Flat profile per (function, process): the building block of

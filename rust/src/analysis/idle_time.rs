@@ -27,15 +27,28 @@ pub fn idle_time(
     idle_functions: Option<&[&str]>,
 ) -> Result<Vec<IdleRow>> {
     let span = trace.duration_ns()?.max(1) as f64;
+    // inclusive time of idle calls: nested non-idle children are rare and
+    // the paper counts the whole blocking call as idle.
+    let rows = super::flat_profile::flat_profile_by_process(trace, Metric::IncTime)?;
+    let procs = trace.process_ids()?;
+    Ok(idle_from_rows(rows, &procs, span, idle_functions))
+}
+
+/// Deterministic reduction from per-(function, process) inclusive-time
+/// rows to the idle report — shared verbatim by the sequential path and
+/// [`crate::exec::ops::idle_time`]. The sort key (idle time desc, then
+/// process id) is a total order, so output is identical on both paths.
+pub(crate) fn idle_from_rows(
+    rows: Vec<(String, i64, f64)>,
+    procs: &[i64],
+    span: f64,
+    idle_functions: Option<&[&str]>,
+) -> Vec<IdleRow> {
     let idle: HashSet<&str> = idle_functions
         .unwrap_or(DEFAULT_IDLE_FUNCTIONS)
         .iter()
         .copied()
         .collect();
-    // inclusive time of idle calls: nested non-idle children are rare and
-    // the paper counts the whole blocking call as idle.
-    let rows = super::flat_profile::flat_profile_by_process(trace, Metric::IncTime)?;
-    let procs = trace.process_ids()?;
     let mut per: std::collections::HashMap<i64, f64> =
         procs.iter().map(|&p| (p, 0.0)).collect();
     for (name, proc, v) in rows {
@@ -48,7 +61,7 @@ pub fn idle_time(
         .map(|(proc, idle_ns)| IdleRow { proc, idle_ns, fraction: idle_ns / span })
         .collect();
     out.sort_by(|a, b| b.idle_ns.total_cmp(&a.idle_ns).then(a.proc.cmp(&b.proc)));
-    Ok(out)
+    out
 }
 
 /// The `k` most and `k` least idle processes — the Fig. 9 workflow, ready

@@ -11,7 +11,7 @@ use anyhow::Result;
 use std::collections::HashMap;
 
 /// Imbalance report for one function.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ImbalanceRow {
     pub name: String,
     /// max over processes / mean over processes of the metric.
@@ -34,12 +34,35 @@ pub fn load_imbalance(
 ) -> Result<Vec<ImbalanceRow>> {
     let nprocs = trace.num_processes()?.max(1);
     let rows = flat_profile_by_process(trace, metric)?;
-    let mut by_func: HashMap<String, Vec<(i64, f64)>> = HashMap::new();
+    Ok(imbalance_from_rows(rows, nprocs, num_processes))
+}
+
+/// Deterministic reduction from per-(function, process) rows to the
+/// imbalance report — shared verbatim by the sequential path above and
+/// [`crate::exec::ops::load_imbalance`]. Functions are grouped in
+/// first-seen row order (not hash-map iteration order), so ties in the
+/// final stable sort resolve identically on every run and both paths.
+pub(crate) fn imbalance_from_rows(
+    rows: Vec<(String, i64, f64)>,
+    nprocs: usize,
+    num_processes: usize,
+) -> Vec<ImbalanceRow> {
+    let mut index: HashMap<String, usize> = HashMap::new();
+    let mut names: Vec<String> = Vec::new();
+    let mut per_func: Vec<Vec<(i64, f64)>> = Vec::new();
     for (name, proc, v) in rows {
-        by_func.entry(name).or_default().push((proc, v));
+        match index.get(&name) {
+            Some(&slot) => per_func[slot].push((proc, v)),
+            None => {
+                index.insert(name.clone(), names.len());
+                names.push(name);
+                per_func.push(vec![(proc, v)]);
+            }
+        }
     }
-    let mut out: Vec<ImbalanceRow> = by_func
+    let mut out: Vec<ImbalanceRow> = names
         .into_iter()
+        .zip(per_func)
         .map(|(name, mut pv)| {
             // processes with zero time still count toward the mean
             let total: f64 = pv.iter().map(|(_, v)| v).sum();
@@ -56,7 +79,7 @@ pub fn load_imbalance(
         })
         .collect();
     out.sort_by(|a, b| b.total.total_cmp(&a.total));
-    Ok(out)
+    out
 }
 
 #[cfg(test)]

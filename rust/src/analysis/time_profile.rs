@@ -126,6 +126,94 @@ pub fn exclusive_segments(trace: &mut Trace) -> Result<Vec<Segment>> {
     Ok(segs)
 }
 
+/// Which name-dictionary code maps to which output series, plus the
+/// ordered series names — stage 2 of the profile, shared verbatim by the
+/// sequential path and [`crate::exec::ops::time_profile`] so both rank
+/// functions identically (ties resolve by first-seen segment order, not
+/// hash-map iteration order).
+pub(crate) struct SeriesSpec {
+    pub(crate) func_of_code: std::collections::HashMap<u32, usize>,
+    pub(crate) func_names: Vec<String>,
+    pub(crate) other_slot: Option<usize>,
+}
+
+/// Rank functions by total exclusive time over `segs` and keep the top
+/// `top_funcs` as their own series (the rest fold into `"other"`).
+pub(crate) fn rank_functions(
+    segs: &[Segment],
+    ndict: &crate::df::Interner,
+    top_funcs: Option<usize>,
+) -> SeriesSpec {
+    // per-code totals accumulated in first-seen segment order, so equal
+    // totals sort deterministically below (stable sort)
+    let mut idx: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
+    let mut by_total: Vec<(u32, f64)> = Vec::new();
+    for s in segs {
+        let dur = (s.end - s.start) as f64;
+        match idx.get(&s.name_code) {
+            Some(&k) => by_total[k].1 += dur,
+            None => {
+                idx.insert(s.name_code, by_total.len());
+                by_total.push((s.name_code, dur));
+            }
+        }
+    }
+    let total_funcs = by_total.len();
+    by_total.sort_by(|a, b| b.1.total_cmp(&a.1));
+    let keep = top_funcs.unwrap_or(total_funcs).min(total_funcs);
+    let mut func_of_code: std::collections::HashMap<u32, usize> =
+        std::collections::HashMap::new();
+    let mut func_names: Vec<String> = Vec::new();
+    for (code, _) in by_total.iter().take(keep) {
+        func_of_code.insert(*code, func_names.len());
+        func_names.push(ndict.resolve(*code).unwrap_or("").to_string());
+    }
+    let other_slot = if keep < total_funcs {
+        func_names.push("other".to_string());
+        Some(func_names.len() - 1)
+    } else {
+        None
+    };
+    SeriesSpec { func_of_code, func_names, other_slot }
+}
+
+/// Accumulate segment overlap into the bins `[bins.0, bins.1)` — stage 3.
+/// Every (bin, func) cell folds its contributions in global segment
+/// order, so splitting the bin axis across workers and stitching the
+/// ranges back together is bit-identical to one sequential pass.
+pub(crate) fn bin_segments_range(
+    segs: &[Segment],
+    spec: &SeriesSpec,
+    t0: i64,
+    width: f64,
+    num_bins: usize,
+    bins: (usize, usize),
+) -> Vec<Vec<f64>> {
+    let nf = spec.func_names.len();
+    let mut values = vec![vec![0.0f64; nf]; bins.1 - bins.0];
+    for s in segs {
+        let f = match spec.func_of_code.get(&s.name_code) {
+            Some(&f) => f,
+            None => match spec.other_slot {
+                Some(o) => o,
+                None => continue,
+            },
+        };
+        // clip the segment into every bin it overlaps within the range
+        let lo_bin = ((((s.start - t0) as f64) / width).floor() as usize).max(bins.0);
+        let hi_bin = (((((s.end - t0) as f64) / width).ceil() as usize).min(num_bins)).min(bins.1);
+        for b in lo_bin..hi_bin {
+            let bin_lo = t0 as f64 + b as f64 * width;
+            let bin_hi = bin_lo + width;
+            let ov = (s.end as f64).min(bin_hi) - (s.start as f64).max(bin_lo);
+            if ov > 0.0 {
+                values[b - bins.0][f] += ov;
+            }
+        }
+    }
+    values
+}
+
 /// Compute a time profile with `num_bins` equal bins over the trace span.
 /// If `top_funcs` is Some(k), only the k functions with the largest total
 /// exclusive time get their own series; the rest fold into `"other"`.
@@ -140,56 +228,15 @@ pub fn time_profile(
     let (t0, t1) = trace.time_range()?;
     let segs = exclusive_segments(trace)?;
     let (_, ndict) = trace.events.strs(COL_NAME)?;
-
-    // total exc per name code
-    let mut totals: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
-    for s in &segs {
-        *totals.entry(s.name_code).or_insert(0.0) += (s.end - s.start) as f64;
-    }
-    let mut by_total: Vec<(u32, f64)> = totals.into_iter().collect();
-    by_total.sort_by(|a, b| b.1.total_cmp(&a.1));
-    let keep = top_funcs.unwrap_or(by_total.len()).min(by_total.len());
-    let mut func_of_code: std::collections::HashMap<u32, usize> =
-        std::collections::HashMap::new();
-    let mut func_names: Vec<String> = Vec::new();
-    for (code, _) in by_total.iter().take(keep) {
-        func_of_code.insert(*code, func_names.len());
-        func_names.push(ndict.resolve(*code).unwrap_or("").to_string());
-    }
-    let other_slot = if keep < by_total.len() {
-        func_names.push("other".to_string());
-        Some(func_names.len() - 1)
-    } else {
-        None
-    };
+    let spec = rank_functions(&segs, ndict, top_funcs);
 
     let span = (t1 - t0).max(1) as f64;
     let width = span / num_bins as f64;
-    let mut values = vec![vec![0.0f64; func_names.len()]; num_bins];
-    for s in &segs {
-        let f = match func_of_code.get(&s.name_code) {
-            Some(&f) => f,
-            None => match other_slot {
-                Some(o) => o,
-                None => continue,
-            },
-        };
-        // clip the segment into every bin it overlaps
-        let lo_bin = (((s.start - t0) as f64) / width).floor() as usize;
-        let hi_bin = ((((s.end - t0) as f64) / width).ceil() as usize).min(num_bins);
-        for b in lo_bin..hi_bin {
-            let bin_lo = t0 as f64 + b as f64 * width;
-            let bin_hi = bin_lo + width;
-            let ov = (s.end as f64).min(bin_hi) - (s.start as f64).max(bin_lo);
-            if ov > 0.0 {
-                values[b][f] += ov;
-            }
-        }
-    }
+    let values = bin_segments_range(&segs, &spec, t0, width, num_bins, (0, num_bins));
     let bin_edges = (0..=num_bins)
         .map(|b| t0 + (b as f64 * width).round() as i64)
         .collect();
-    Ok(TimeProfile { bin_edges, func_names, values })
+    Ok(TimeProfile { bin_edges, func_names: spec.func_names, values })
 }
 
 #[cfg(test)]

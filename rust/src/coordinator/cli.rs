@@ -90,8 +90,8 @@ USAGE:
   pipit generate --app <model> [--ranks N] [--iterations N] [--seed S]
                  [--variant V] [--format otf2|csv|chrome|projections] --out <path>
   pipit analyze <op> --trace <path> [--metric exc|inc|count] [--bins N]
-                 [--top N] [--start-event NAME] [--out <file>]
-  pipit pipeline <spec.json> [--out-dir <dir>] [--artifacts <dir>]
+                 [--top N] [--start-event NAME] [--threads N] [--out <file>]
+  pipit pipeline <spec.json> [--out-dir <dir>] [--artifacts <dir>] [--threads N]
   pipit report --trace <path> [--min-waste F] [--imbalance-threshold F]
   pipit info --trace <path>
 
@@ -99,6 +99,18 @@ MODELS:  gol tortuga laghos kripke amg loimos axonn
 OPS:     flat_profile time_profile comm_matrix message_histogram
          comm_by_process comm_over_time comm_comp_breakdown load_imbalance
          idle_time pattern_detection critical_path lateness cct
+
+SCALING:
+  Hot analyses (flat_profile, time_profile, comm_matrix, load_imbalance,
+  idle_time, filter) run sharded across a worker pool: the trace splits
+  into contiguous process-aligned shards and per-shard results merge
+  order-stably, so output is bit-identical to the sequential engines at
+  any thread count.
+    --threads 0   use all available cores (default)
+    --threads 1   force the sequential engines
+    --threads N   use N worker threads
+  The default can also be set with the NUM_THREADS environment variable.
+  A pipeline spec may carry a top-level \"threads\" key instead.
 ";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
@@ -158,6 +170,8 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         .clone();
     let path = args.str("trace").context("--trace is required")?;
     let mut s = AnalysisSession::new();
+    let threads = args.usize("threads", s.num_threads)?;
+    s = s.with_threads(threads);
     if let Some(dir) = args.str("artifacts") {
         s = s.with_artifacts(dir);
     }
@@ -202,13 +216,19 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         .context("pipeline requires a spec file")?;
     let out_dir = args.str("out-dir").unwrap_or("pipit_out");
     let mut s = AnalysisSession::new();
+    let threads = args.usize("threads", s.num_threads)?;
+    s = s.with_threads(threads);
     if let Some(dir) = args.str("artifacts") {
         s = s.with_artifacts(dir);
         if s.uses_hlo() {
             eprintln!("[pipit] PJRT runtime loaded from {dir}");
         }
     }
-    let pipe = Pipeline::from_file(spec, out_dir)?;
+    let mut pipe = Pipeline::from_file(spec, out_dir)?;
+    if args.str("threads").is_some() {
+        // an explicit CLI flag wins over the spec's "threads" key
+        pipe.threads = Some(threads);
+    }
     let results = pipe.run(&mut s)?;
     for (i, r) in results.iter().enumerate() {
         println!("[{i}] {}: {}", r.op, r.summary);

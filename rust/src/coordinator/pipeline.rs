@@ -37,6 +37,9 @@ pub struct Pipeline {
     steps: Vec<Json>,
     /// Output directory for `out` files.
     pub out_dir: PathBuf,
+    /// Optional top-level `"threads"` knob applied to the session before
+    /// running (0 = available parallelism, 1 = sequential engines).
+    pub threads: Option<usize>,
 }
 
 impl Pipeline {
@@ -47,7 +50,16 @@ impl Pipeline {
             .and_then(|s| s.as_arr())
             .context("pipeline requires a 'steps' array")?
             .to_vec();
-        Ok(Pipeline { steps, out_dir: out_dir.as_ref().to_path_buf() })
+        let threads = match root.get_f64("threads") {
+            None => None,
+            Some(v) => {
+                if v < 0.0 || v.fract() != 0.0 {
+                    bail!("pipeline \"threads\" must be a non-negative integer (got {v})");
+                }
+                Some(v as usize)
+            }
+        };
+        Ok(Pipeline { steps, out_dir: out_dir.as_ref().to_path_buf(), threads })
     }
 
     pub fn from_file(path: impl AsRef<Path>, out_dir: impl AsRef<Path>) -> Result<Pipeline> {
@@ -58,6 +70,9 @@ impl Pipeline {
 
     /// Execute every step in order. Fails fast on the first error.
     pub fn run(&self, session: &mut AnalysisSession) -> Result<Vec<StepResult>> {
+        if let Some(t) = self.threads {
+            session.num_threads = t;
+        }
         std::fs::create_dir_all(&self.out_dir)?;
         let mut results = Vec::with_capacity(self.steps.len());
         for (i, step) in self.steps.iter().enumerate() {
@@ -381,6 +396,21 @@ mod tests {
     }
 
     #[test]
+    fn threads_key_sets_session_knob() {
+        let spec = r#"{ "threads": 2, "steps": [
+            {"op": "generate", "trace": "t", "app": "gol", "ranks": 4, "iterations": 2},
+            {"op": "flat_profile", "trace": "t", "metric": "exc", "out": "fp.csv"}
+        ]}"#;
+        let dir = tmp("threads");
+        let p = Pipeline::parse(spec, &dir).unwrap();
+        assert_eq!(p.threads, Some(2));
+        let mut s = AnalysisSession::new().with_threads(1);
+        p.run(&mut s).unwrap();
+        assert_eq!(s.num_threads, 2);
+        assert!(dir.join("fp.csv").exists());
+    }
+
+    #[test]
     fn rejects_unknown_op() {
         let spec = r#"{"steps": [{"op": "explode"}]}"#;
         let p = Pipeline::parse(spec, tmp("bad")).unwrap();
@@ -391,6 +421,14 @@ mod tests {
     #[test]
     fn rejects_missing_steps() {
         assert!(Pipeline::parse(r#"{"nope": 1}"#, tmp("ms")).is_err());
+    }
+
+    #[test]
+    fn rejects_invalid_threads_values() {
+        assert!(Pipeline::parse(r#"{"threads": -1, "steps": []}"#, tmp("t1")).is_err());
+        assert!(Pipeline::parse(r#"{"threads": 2.5, "steps": []}"#, tmp("t2")).is_err());
+        let p = Pipeline::parse(r#"{"threads": 0, "steps": []}"#, tmp("t3")).unwrap();
+        assert_eq!(p.threads, Some(0));
     }
 
     #[test]

@@ -15,9 +15,18 @@ use std::path::Path;
 /// `pattern_detection`'s matrix profile) run through PJRT when the runtime
 /// is loaded and fall back to the pure-Rust engines otherwise — results
 /// are identical either way (integration-tested).
+///
+/// The hot analyses additionally run **sharded** across the worker pool
+/// in [`crate::exec`] when `num_threads != 1`; sharded and sequential
+/// results are bit-identical (see `tests/parity.rs`), so the parallel
+/// path is preferred by default.
 pub struct AnalysisSession {
     pub traces: HashMap<String, Trace>,
     pub runtime: Option<Runtime>,
+    /// Worker threads for sharded analyses: 0 = available parallelism,
+    /// 1 = the sequential engines. Defaults to the `NUM_THREADS`
+    /// environment variable, else 0.
+    pub num_threads: usize,
 }
 
 impl Default for AnalysisSession {
@@ -28,7 +37,36 @@ impl Default for AnalysisSession {
 
 impl AnalysisSession {
     pub fn new() -> Self {
-        AnalysisSession { traces: HashMap::new(), runtime: None }
+        AnalysisSession {
+            traces: HashMap::new(),
+            runtime: None,
+            num_threads: crate::exec::default_threads(),
+        }
+    }
+
+    /// Set the worker-thread knob (0 = available parallelism, 1 =
+    /// sequential).
+    pub fn with_threads(mut self, num_threads: usize) -> Self {
+        self.num_threads = num_threads;
+        self
+    }
+
+    /// Resolved thread count for sharded execution.
+    fn threads(&self) -> usize {
+        crate::exec::effective_threads(self.num_threads)
+    }
+
+    /// Route `name` through the sharded engine? Only when there is real
+    /// parallelism to exploit — single-process traces stay on the
+    /// in-place sequential path, which caches derived metrics on the
+    /// session trace instead of copying it.
+    fn sharded(&self, name: &str, threads: usize) -> bool {
+        threads > 1
+            && self
+                .traces
+                .get(name)
+                .and_then(|t| t.num_processes().ok())
+                .map_or(false, |n| n > 1)
     }
 
     /// Try to load the PJRT runtime from `dir`; silently continue without
@@ -77,9 +115,15 @@ impl AnalysisSession {
             .ok_or_else(|| anyhow!("no trace '{name}' in session"))
     }
 
-    /// Filter a trace into a new session entry (paper §IV.E).
+    /// Filter a trace into a new session entry (paper §IV.E). Columns
+    /// materialize on the worker pool when `num_threads != 1`.
     pub fn filter(&mut self, src: &str, dst: &str, e: &Expr) -> Result<()> {
-        let t = self.get(src)?.filter(e)?;
+        let threads = self.threads();
+        let t = if threads > 1 {
+            self.get(src)?.par_filter(e, threads)?
+        } else {
+            self.get(src)?.filter(e)?
+        };
         self.insert(dst, t);
         Ok(())
     }
@@ -87,17 +131,24 @@ impl AnalysisSession {
     // -- dispatching operations -------------------------------------------
 
     pub fn flat_profile(&mut self, name: &str, metric: Metric) -> Result<Vec<analysis::ProfileRow>> {
+        let threads = self.threads();
+        if self.sharded(name, threads) {
+            return crate::exec::ops::flat_profile(self.get(name)?, metric, threads);
+        }
         analysis::flat_profile(self.get_mut_internal(name)?, metric)
     }
 
     /// Time profile; uses the AOT time-hist kernel when available and the
-    /// requested shape matches the AOT contract.
+    /// requested shape matches the AOT contract, else the sharded engine
+    /// when `num_threads != 1`, else the sequential engine.
     pub fn time_profile(
         &mut self,
         name: &str,
         bins: usize,
         top: Option<usize>,
     ) -> Result<analysis::TimeProfile> {
+        let threads = self.threads();
+        let sharded = self.sharded(name, threads);
         // split borrows: take trace out, operate, put back
         let mut trace = self
             .traces
@@ -109,6 +160,9 @@ impl AnalysisSession {
                 if bins == c.th_bins && top.map_or(true, |t| t >= c.th_funcs - 1) {
                     return hlo_ops::time_profile_hlo(rt, &mut trace);
                 }
+            }
+            if sharded {
+                return crate::exec::ops::time_profile(&trace, bins, top, threads);
             }
             analysis::time_profile(&mut trace, bins, top)
         })();
@@ -148,6 +202,10 @@ impl AnalysisSession {
                 }
             }
         }
+        let threads = self.threads();
+        if threads > 1 {
+            return crate::exec::ops::comm_matrix(t, unit, threads);
+        }
         analysis::comm_matrix(t, unit)
     }
 
@@ -177,10 +235,18 @@ impl AnalysisSession {
         metric: Metric,
         k: usize,
     ) -> Result<Vec<analysis::ImbalanceRow>> {
+        let threads = self.threads();
+        if self.sharded(name, threads) {
+            return crate::exec::ops::load_imbalance(self.get(name)?, metric, k, threads);
+        }
         analysis::load_imbalance(self.get_mut_internal(name)?, metric, k)
     }
 
     pub fn idle_time(&mut self, name: &str) -> Result<Vec<analysis::IdleRow>> {
+        let threads = self.threads();
+        if self.sharded(name, threads) {
+            return crate::exec::ops::idle_time(self.get(name)?, None, threads);
+        }
         analysis::idle_time(self.get_mut_internal(name)?, None)
     }
 
@@ -272,6 +338,30 @@ mod tests {
     fn missing_trace_errors() {
         let mut s = AnalysisSession::new();
         assert!(s.flat_profile("nope", Metric::ExcTime).is_err());
+    }
+
+    #[test]
+    fn threads_knob_is_transparent() {
+        let mut seq = AnalysisSession::new().with_threads(1);
+        let mut par = AnalysisSession::new().with_threads(4);
+        for s in [&mut seq, &mut par] {
+            s.generate("g", "laghos", &GenConfig::new(6, 4), 1).unwrap();
+        }
+        assert_eq!(
+            seq.flat_profile("g", Metric::ExcTime).unwrap(),
+            par.flat_profile("g", Metric::ExcTime).unwrap()
+        );
+        let a = seq.time_profile("g", 64, Some(6)).unwrap();
+        let b = par.time_profile("g", 64, Some(6)).unwrap();
+        assert_eq!(a.func_names, b.func_names);
+        assert_eq!(a.values, b.values);
+        let ca = seq.comm_matrix("g", analysis::CommUnit::Bytes).unwrap();
+        let cb = par.comm_matrix("g", analysis::CommUnit::Bytes).unwrap();
+        assert_eq!(ca.data, cb.data);
+        assert_eq!(
+            seq.idle_time("g").unwrap(),
+            par.idle_time("g").unwrap()
+        );
     }
 
     #[test]

@@ -78,6 +78,89 @@ fn group_keys(iter: impl Iterator<Item = GroupKey>) -> Groups {
     Groups { keys, rows }
 }
 
+/// [`group_by`] with the key scan chunked across the worker pool.
+/// Chunk-local groupings merge in chunk order, so keys appear in global
+/// first-seen order and row lists stay ascending — identical to the
+/// sequential grouping at any thread count.
+pub fn group_by_parallel(t: &Table, col: &str, threads: usize) -> Result<Groups> {
+    let keys = key_vector(t, col)?;
+    group_keys_parallel(keys.into_iter().map(|k| GroupKey(k, 0)).collect(), threads)
+}
+
+/// Two-key variant of [`group_by_parallel`].
+pub fn group_by2_parallel(t: &Table, a: &str, b: &str, threads: usize) -> Result<Groups> {
+    let ka = key_vector(t, a)?;
+    let kb = key_vector(t, b)?;
+    group_keys_parallel(
+        ka.iter().zip(&kb).map(|(&x, &y)| GroupKey(x, y)).collect(),
+        threads,
+    )
+}
+
+fn group_keys_parallel(keys: Vec<GroupKey>, threads: usize) -> Result<Groups> {
+    let n = keys.len();
+    if crate::exec::effective_threads(threads) <= 1 || n < 2 {
+        return Ok(group_keys(keys.into_iter()));
+    }
+    let ranges = crate::exec::pool::split_ranges(n, crate::exec::effective_threads(threads));
+    let parts = crate::exec::pool::run_indexed(ranges.len(), threads, |c| {
+        let (lo, hi) = ranges[c];
+        let mut index: HashMap<GroupKey, usize> = HashMap::new();
+        let mut local_keys: Vec<GroupKey> = Vec::new();
+        let mut local_rows: Vec<Vec<u32>> = Vec::new();
+        for r in lo..hi {
+            let k = keys[r];
+            let slot = *index.entry(k).or_insert_with(|| {
+                local_keys.push(k);
+                local_rows.push(Vec::new());
+                local_rows.len() - 1
+            });
+            local_rows[slot].push(r as u32);
+        }
+        Ok((local_keys, local_rows))
+    })?;
+    let mut index: HashMap<GroupKey, usize> = HashMap::new();
+    let mut gkeys: Vec<GroupKey> = Vec::new();
+    let mut grows: Vec<Vec<u32>> = Vec::new();
+    for (local_keys, local_rows) in parts {
+        for (k, mut r) in local_keys.into_iter().zip(local_rows) {
+            match index.get(&k) {
+                Some(&slot) => grows[slot].append(&mut r),
+                None => {
+                    index.insert(k, gkeys.len());
+                    gkeys.push(k);
+                    grows.push(r);
+                }
+            }
+        }
+    }
+    Ok(Groups { keys: gkeys, rows: grows })
+}
+
+/// One group's f64 aggregation — the shared kernel of [`Groups::agg_f64`]
+/// and [`Groups::agg_f64_parallel`] (same code ⇒ same result, bitwise).
+fn agg_f64_one(xs: &[f64], rows: &[u32], how: Agg) -> f64 {
+    let vals = rows.iter().map(|&r| xs[r as usize]).filter(|v| !v.is_nan());
+    match how {
+        Agg::Sum => vals.sum(),
+        Agg::Count => vals.count() as f64,
+        Agg::Mean => {
+            let (mut s, mut n) = (0.0, 0u64);
+            for v in vals {
+                s += v;
+                n += 1;
+            }
+            if n == 0 {
+                f64::NAN
+            } else {
+                s / n as f64
+            }
+        }
+        Agg::Min => vals.fold(f64::INFINITY, f64::min),
+        Agg::Max => vals.fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
 impl Groups {
     pub fn len(&self) -> usize {
         self.keys.len()
@@ -90,31 +173,24 @@ impl Groups {
     /// Aggregate an f64 column per group. NaNs are skipped (pandas skipna).
     pub fn agg_f64(&self, t: &Table, col: &str, how: Agg) -> Result<Vec<f64>> {
         let xs = t.f64s(col)?;
-        Ok(self
-            .rows
-            .iter()
-            .map(|rows| {
-                let vals = rows.iter().map(|&r| xs[r as usize]).filter(|v| !v.is_nan());
-                match how {
-                    Agg::Sum => vals.sum(),
-                    Agg::Count => vals.count() as f64,
-                    Agg::Mean => {
-                        let (mut s, mut n) = (0.0, 0u64);
-                        for v in vals {
-                            s += v;
-                            n += 1;
-                        }
-                        if n == 0 {
-                            f64::NAN
-                        } else {
-                            s / n as f64
-                        }
-                    }
-                    Agg::Min => vals.fold(f64::INFINITY, f64::min),
-                    Agg::Max => vals.fold(f64::NEG_INFINITY, f64::max),
-                }
-            })
-            .collect())
+        Ok(self.rows.iter().map(|rows| agg_f64_one(xs, rows, how)).collect())
+    }
+
+    /// [`Groups::agg_f64`] with groups chunked across the worker pool.
+    /// Each group's fold runs completely inside one worker in row order,
+    /// so results are identical to the sequential aggregation.
+    pub fn agg_f64_parallel(&self, t: &Table, col: &str, how: Agg, threads: usize) -> Result<Vec<f64>> {
+        if crate::exec::effective_threads(threads) <= 1 || self.rows.len() < 2 {
+            return self.agg_f64(t, col, how);
+        }
+        let xs = t.f64s(col)?;
+        let ranges =
+            crate::exec::pool::split_ranges(self.rows.len(), crate::exec::effective_threads(threads));
+        let parts = crate::exec::pool::run_indexed(ranges.len(), threads, |c| {
+            let (lo, hi) = ranges[c];
+            Ok(self.rows[lo..hi].iter().map(|rows| agg_f64_one(xs, rows, how)).collect::<Vec<f64>>())
+        })?;
+        Ok(parts.into_iter().flatten().collect())
     }
 
     /// Aggregate an i64 column per group (nulls skipped).
@@ -205,5 +281,54 @@ mod tests {
         let g = group_by(&t, "Name").unwrap();
         assert_eq!(g.agg_i64(&t, "Process", Agg::Max).unwrap(), vec![1, 1]);
         assert_eq!(g.agg_i64(&t, "Process", Agg::Sum).unwrap(), vec![1, 1]);
+    }
+
+    /// Larger synthetic table for parallel-vs-sequential comparisons.
+    fn big() -> Table {
+        let mut rng = crate::util::rng::Rng::new(99);
+        let n = 10_000;
+        let mut t = Table::new();
+        t.push("k", Column::I64((0..n).map(|_| rng.range(0, 40)).collect())).unwrap();
+        t.push(
+            "v",
+            Column::F64(
+                (0..n)
+                    .map(|i| if i % 17 == 0 { f64::NAN } else { rng.uniform(0.0, 10.0) })
+                    .collect(),
+            ),
+        )
+        .unwrap();
+        t
+    }
+
+    #[test]
+    fn parallel_group_by_matches_sequential() {
+        let t = big();
+        let seq = group_by(&t, "k").unwrap();
+        for threads in [2usize, 4, 8] {
+            let par = group_by_parallel(&t, "k", threads).unwrap();
+            assert_eq!(par.keys, seq.keys, "{threads} threads");
+            assert_eq!(par.rows, seq.rows, "{threads} threads");
+        }
+        let seq2 = group_by2(&t, "k", "k").unwrap();
+        let par2 = group_by2_parallel(&t, "k", "k", 4).unwrap();
+        assert_eq!(par2.keys, seq2.keys);
+    }
+
+    #[test]
+    fn parallel_agg_matches_sequential_bitwise() {
+        let t = big();
+        let g = group_by(&t, "k").unwrap();
+        for how in [Agg::Sum, Agg::Mean, Agg::Min, Agg::Max, Agg::Count] {
+            let seq = g.agg_f64(&t, "v", how).unwrap();
+            for threads in [2usize, 4, 8] {
+                let par = g.agg_f64_parallel(&t, "v", how, threads).unwrap();
+                assert_eq!(seq.len(), par.len());
+                for (a, b) in seq.iter().zip(&par) {
+                    // bitwise: NaN == NaN under to_bits
+                    assert_eq!(a.to_bits(), b.to_bits(), "{how:?} {threads}");
+                }
+            }
+        }
     }
 }

@@ -125,6 +125,25 @@ impl Table {
         Ok(t)
     }
 
+    /// [`Table::filter`] with columns filtered concurrently on the worker
+    /// pool. Each column is an independent scan, so the result is
+    /// identical to the sequential filter at any thread count.
+    pub fn par_filter(&self, mask: &[bool], threads: usize) -> Result<Table> {
+        if mask.len() != self.len() {
+            bail!("mask length {} != table length {}", mask.len(), self.len());
+        }
+        if crate::exec::effective_threads(threads) <= 1 || self.width() <= 1 {
+            return self.filter(mask);
+        }
+        let cols =
+            crate::exec::pool::run_indexed(self.cols.len(), threads, |i| Ok(self.cols[i].filter(mask)))?;
+        let mut t = Table::new();
+        for (n, c) in self.names.iter().zip(cols) {
+            t.push(n, c)?;
+        }
+        Ok(t)
+    }
+
     /// New table gathering `idx` rows (indices may repeat / reorder).
     pub fn take(&self, idx: &[u32]) -> Result<Table> {
         let mut t = Table::new();
@@ -287,6 +306,21 @@ mod tests {
         let mut t = sample();
         assert!(t.push("bad", Column::I64(vec![1])).is_err());
         assert!(t.push("time", Column::I64(vec![0, 0, 0, 0])).is_err());
+    }
+
+    #[test]
+    fn par_filter_matches_filter() {
+        let t = sample();
+        let mask = [true, false, true, false];
+        let seq = t.filter(&mask).unwrap();
+        for threads in [1usize, 2, 8] {
+            let par = t.par_filter(&mask, threads).unwrap();
+            assert_eq!(par.len(), seq.len());
+            assert_eq!(par.names(), seq.names());
+            assert_eq!(par.i64s("time").unwrap(), seq.i64s("time").unwrap());
+            assert_eq!(par.f64s("value").unwrap(), seq.f64s("value").unwrap());
+        }
+        assert!(t.par_filter(&[true], 2).is_err());
     }
 
     #[test]

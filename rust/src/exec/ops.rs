@@ -1,0 +1,179 @@
+//! Sharded analysis operations: map per shard on the worker pool, merge
+//! order-stably. Every function here is **bit-identical** to its
+//! sequential counterpart in [`crate::analysis`] at any thread count —
+//! see the module docs in [`crate::exec`] for why each merge is exact.
+//!
+//! All functions take `&Trace` (shards are copied out; the original is
+//! never mutated) and a `threads` knob where `0` means available
+//! parallelism and `1` falls back to the sequential engine.
+
+use super::{pool, shard};
+use crate::analysis::comm::{self, CommMatrix, CommUnit};
+use crate::analysis::flat_profile::{self, Metric, ProfileRow};
+use crate::analysis::idle_time::IdleRow;
+use crate::analysis::load_imbalance::ImbalanceRow;
+use crate::analysis::time_profile::{self, Segment, TimeProfile};
+use crate::analysis;
+use crate::trace::{Trace, COL_NAME};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// Decide whether to run sharded; returns the shards when it is worth it.
+fn plan(trace: &Trace, threads: usize) -> Result<Option<shard::Shards>> {
+    let threads = super::effective_threads(threads);
+    if threads <= 1 {
+        return Ok(None);
+    }
+    let shards = shard::process_shards(trace, threads)?;
+    if shards.len() <= 1 {
+        return Ok(None);
+    }
+    Ok(Some(shards))
+}
+
+/// Sharded `flat_profile`. Per-shard totals merge by name in shard order
+/// (= global first-seen order); metric values are integer-valued
+/// nanosecond sums / counts, so merged sums are exact.
+pub fn flat_profile(trace: &Trace, metric: Metric, threads: usize) -> Result<Vec<ProfileRow>> {
+    let Some(shards) = plan(trace, threads)? else {
+        let mut t = trace.clone();
+        return analysis::flat_profile(&mut t, metric);
+    };
+    let parts = pool::run_indexed(shards.len(), threads, |i| {
+        let mut sub = shard::subtrace(trace, shards.ranges[i])?;
+        flat_profile::partial_profile(&mut sub, metric)
+    })?;
+    let mut index: HashMap<String, usize> = HashMap::new();
+    let mut rows: Vec<ProfileRow> = Vec::new();
+    for part in parts {
+        for row in part {
+            match index.get(&row.name) {
+                Some(&slot) => rows[slot].value += row.value,
+                None => {
+                    index.insert(row.name.clone(), rows.len());
+                    rows.push(row);
+                }
+            }
+        }
+    }
+    Ok(flat_profile::finish_profile(rows))
+}
+
+/// Sharded `flat_profile_by_process`. Each (function, process) group
+/// lives entirely in one shard (shards are process-aligned), so the
+/// shard-order concatenation *is* the sequential output, bitwise.
+pub fn flat_profile_by_process(
+    trace: &Trace,
+    metric: Metric,
+    threads: usize,
+) -> Result<Vec<(String, i64, f64)>> {
+    let Some(shards) = plan(trace, threads)? else {
+        let mut t = trace.clone();
+        return analysis::flat_profile_by_process(&mut t, metric);
+    };
+    let parts = pool::run_indexed(shards.len(), threads, |i| {
+        let mut sub = shard::subtrace(trace, shards.ranges[i])?;
+        analysis::flat_profile_by_process(&mut sub, metric)
+    })?;
+    Ok(parts.into_iter().flatten().collect())
+}
+
+/// Sharded `load_imbalance`: sharded by-process rows + the shared
+/// deterministic reduction.
+pub fn load_imbalance(
+    trace: &Trace,
+    metric: Metric,
+    num_processes: usize,
+    threads: usize,
+) -> Result<Vec<ImbalanceRow>> {
+    let nprocs = trace.num_processes()?.max(1);
+    let rows = flat_profile_by_process(trace, metric, threads)?;
+    Ok(crate::analysis::load_imbalance::imbalance_from_rows(rows, nprocs, num_processes))
+}
+
+/// Sharded `idle_time`: sharded by-process rows + the shared
+/// deterministic reduction.
+pub fn idle_time(
+    trace: &Trace,
+    idle_functions: Option<&[&str]>,
+    threads: usize,
+) -> Result<Vec<IdleRow>> {
+    let span = trace.duration_ns()?.max(1) as f64;
+    let rows = flat_profile_by_process(trace, Metric::IncTime, threads)?;
+    let procs = trace.process_ids()?;
+    Ok(crate::analysis::idle_time::idle_from_rows(rows, &procs, span, idle_functions))
+}
+
+/// Sharded `comm_matrix`: row-range chunks accumulate into full-size
+/// matrices which sum cell-wise (integer counts/bytes ⇒ exact). Mirrors
+/// the sequential two-pass structure: a send pass first, and a recv-only
+/// second pass only when no shard landed a send record.
+pub fn comm_matrix(trace: &Trace, unit: CommUnit, threads: usize) -> Result<CommMatrix> {
+    let threads_eff = super::effective_threads(threads);
+    let procs = trace.process_ids()?;
+    let n = procs.len();
+    if threads_eff <= 1 || n == 0 || trace.len() < 2 {
+        return analysis::comm_matrix(trace, unit);
+    }
+    let ranges = pool::split_ranges(trace.len(), threads_eff);
+    let mut parts = pool::run_indexed(ranges.len(), threads_eff, |i| {
+        comm::accumulate_range(trace, unit, &procs, ranges[i], comm::MsgDir::Send)
+    })?;
+    if !parts.iter().any(|p| p.1) {
+        // recv-only trace: infer direction from receive records
+        parts = pool::run_indexed(ranges.len(), threads_eff, |i| {
+            comm::accumulate_range(trace, unit, &procs, ranges[i], comm::MsgDir::Recv)
+        })?;
+    }
+    let mut data = vec![vec![0.0f64; n]; n];
+    for (m, _) in &parts {
+        for (r, row) in data.iter_mut().enumerate() {
+            for (c, cell) in row.iter_mut().enumerate() {
+                *cell += m[r * n + c];
+            }
+        }
+    }
+    Ok(CommMatrix { procs, data })
+}
+
+/// Sharded `time_profile`, in three stages:
+/// 1. exclusive segments per process shard (streams are independent, so
+///    shard-order concatenation equals the sequential segment list);
+/// 2. the shared [`rank_functions`](time_profile::rank_functions);
+/// 3. binning parallelized over the *bin axis* — each (bin, func) cell
+///    folds contributions in global segment order, so stitching the bin
+///    ranges is bit-identical to the sequential pass.
+pub fn time_profile(
+    trace: &Trace,
+    num_bins: usize,
+    top_funcs: Option<usize>,
+    threads: usize,
+) -> Result<TimeProfile> {
+    if num_bins == 0 {
+        bail!("num_bins must be > 0");
+    }
+    let Some(shards) = plan(trace, threads)? else {
+        let mut t = trace.clone();
+        return analysis::time_profile(&mut t, num_bins, top_funcs);
+    };
+    let (t0, t1) = trace.time_range()?;
+    let seg_parts = pool::run_indexed(shards.len(), threads, |i| {
+        let mut sub = shard::subtrace(trace, shards.ranges[i])?;
+        time_profile::exclusive_segments(&mut sub)
+    })?;
+    let segs: Vec<Segment> = seg_parts.into_iter().flatten().collect();
+    let (_, ndict) = trace.events.strs(COL_NAME)?;
+    let spec = time_profile::rank_functions(&segs, ndict, top_funcs);
+
+    let span = (t1 - t0).max(1) as f64;
+    let width = span / num_bins as f64;
+    let bin_ranges = pool::split_ranges(num_bins, super::effective_threads(threads));
+    let value_parts = pool::run_indexed(bin_ranges.len(), threads, |i| {
+        Ok(time_profile::bin_segments_range(&segs, &spec, t0, width, num_bins, bin_ranges[i]))
+    })?;
+    let values: Vec<Vec<f64>> = value_parts.into_iter().flatten().collect();
+    let bin_edges = (0..=num_bins)
+        .map(|b| t0 + (b as f64 * width).round() as i64)
+        .collect();
+    Ok(TimeProfile { bin_edges, func_names: spec.func_names, values })
+}

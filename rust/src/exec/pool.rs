@@ -1,0 +1,190 @@
+//! The worker pool: scoped `std::thread` workers pulling task indices
+//! from an atomic counter (work stealing degenerates to this for
+//! uniform-cost tasks, with no queue allocation at all).
+//!
+//! Error semantics: the first failing task poisons the pool — workers
+//! stop claiming new indices — and the error with the *lowest task
+//! index* among those that ran is returned, so error reporting is
+//! deterministic regardless of scheduling. The pool never hangs on
+//! failure: scoped threads always join.
+
+use anyhow::{anyhow, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Raw pointer wrapper letting workers write disjoint result slots.
+struct SlotsPtr<T>(*mut Option<Result<T>>);
+
+// SAFETY: each index is claimed by exactly one worker via the atomic
+// counter, so writes to slots[i] never alias, and the slot vector
+// outlives the thread scope.
+unsafe impl<T: Send> Sync for SlotsPtr<T> {}
+
+/// Run `f(i)` for `i in 0..n` on up to `threads` workers, preserving
+/// result order. `threads == 0` means "available parallelism". On error,
+/// remaining tasks are cancelled and the lowest-index error is returned.
+pub fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let threads = super::effective_threads(threads).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        // Serial path: stops at the first error, same observable
+        // semantics as the poisoned pool.
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let poisoned = AtomicBool::new(false);
+    let mut slots: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
+    let slots_ptr = SlotsPtr(slots.as_mut_ptr());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            let fref = &f;
+            let nref = &next;
+            let poison = &poisoned;
+            let sp = &slots_ptr;
+            scope.spawn(move || loop {
+                if poison.load(Ordering::Relaxed) {
+                    break;
+                }
+                let i = nref.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let r = fref(i);
+                if r.is_err() {
+                    poison.store(true, Ordering::Relaxed);
+                }
+                // SAFETY: index i is uniquely claimed (see SlotsPtr).
+                unsafe { *sp.0.add(i) = Some(r) };
+            });
+        }
+    });
+    let mut out = Vec::with_capacity(n);
+    let mut first_err: Option<anyhow::Error> = None;
+    for slot in slots {
+        match slot {
+            Some(Ok(v)) => {
+                if first_err.is_none() {
+                    out.push(v);
+                }
+            }
+            Some(Err(e)) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            // Task cancelled after a lower- or higher-index failure.
+            None => {}
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    if out.len() != n {
+        // Unreachable in practice: no error implies no poisoning, and
+        // the scope joins only after every index was claimed.
+        return Err(anyhow!("worker pool lost {} of {n} results", n - out.len()));
+    }
+    Ok(out)
+}
+
+/// Split `0..n` into at most `parts` contiguous, near-equal ranges
+/// (never empty; fewer ranges when `n < parts`).
+pub fn split_ranges(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let parts = parts.max(1).min(n);
+    let chunk = n.div_ceil(parts);
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    while start < n {
+        let end = (start + chunk).min(n);
+        out.push((start, end));
+        start = end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use anyhow::bail;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn preserves_order() {
+        let out = run_indexed(100, 4, |i| Ok(i * 3)).unwrap();
+        assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_degenerate_paths() {
+        assert_eq!(run_indexed(5, 1, Ok).unwrap(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(run_indexed(0, 8, Ok).unwrap(), Vec::<usize>::new());
+        assert_eq!(run_indexed(1, 8, Ok).unwrap(), vec![0]);
+    }
+
+    #[test]
+    fn propagates_error_without_hanging() {
+        let r = run_indexed(64, 8, |i| {
+            if i % 9 == 4 {
+                bail!("task {i} failed")
+            }
+            Ok(i)
+        });
+        let msg = r.unwrap_err().to_string();
+        assert!(msg.contains("failed"), "{msg}");
+    }
+
+    #[test]
+    fn serial_error_is_first_by_index() {
+        let r = run_indexed(10, 1, |i| {
+            if i >= 3 {
+                bail!("boom at {i}")
+            }
+            Ok(i)
+        });
+        assert_eq!(r.unwrap_err().to_string(), "boom at 3");
+    }
+
+    #[test]
+    fn error_cancels_remaining_tasks() {
+        // After the failure at index 0 is observed, most of the 10_000
+        // tasks should never run.
+        let ran = AtomicU64::new(0);
+        let r = run_indexed(10_000, 4, |i| {
+            ran.fetch_add(1, Ordering::Relaxed);
+            if i == 0 {
+                bail!("early failure")
+            }
+            // Slow tasks so the poison flag is visible before the
+            // counter drains.
+            std::thread::sleep(std::time::Duration::from_micros(50));
+            Ok(i)
+        });
+        assert!(r.is_err());
+        assert!(
+            ran.load(Ordering::Relaxed) < 10_000,
+            "cancellation did not stop the pool"
+        );
+    }
+
+    #[test]
+    fn split_ranges_cover_exactly() {
+        for (n, parts) in [(10, 3), (1, 8), (0, 4), (100, 7), (7, 7), (5, 100)] {
+            let ranges = split_ranges(n, parts);
+            let mut covered = 0;
+            let mut prev_end = 0;
+            for &(a, b) in &ranges {
+                assert_eq!(a, prev_end);
+                assert!(b > a);
+                covered += b - a;
+                prev_end = b;
+            }
+            assert_eq!(covered, n);
+            assert!(ranges.len() <= parts.max(1));
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! Trace sharding: split a canonically-ordered trace into contiguous,
+//! process-aligned row ranges.
+//!
+//! Events are sorted by (Process, Thread, Timestamp), so every process
+//! occupies one contiguous run of rows. A shard is a contiguous group of
+//! whole runs; concatenating per-shard results in shard order therefore
+//! reproduces the sequential row order exactly — the property every
+//! order-stable merge in [`super::ops`] relies on. Processes are never
+//! split across shards, so per-stream computations (caller/callee
+//! matching, exclusive segments, per-process aggregates) are complete
+//! within their shard.
+
+use crate::trace::Trace;
+use anyhow::Result;
+
+/// Contiguous `[start, end)` row ranges covering the trace in order.
+#[derive(Debug, Clone, Default)]
+pub struct Shards {
+    pub ranges: Vec<(usize, usize)>,
+}
+
+impl Shards {
+    pub fn len(&self) -> usize {
+        self.ranges.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+}
+
+/// Partition `trace` into at most `max_shards` process-aligned shards,
+/// balancing row counts greedily. Returns fewer shards when the trace
+/// has fewer processes (one process can never be split).
+pub fn process_shards(trace: &Trace, max_shards: usize) -> Result<Shards> {
+    let pr = trace.processes()?;
+    let n = pr.len();
+    if n == 0 {
+        return Ok(Shards::default());
+    }
+    // per-process contiguous runs (canonical order ⇒ one run per process)
+    let mut runs: Vec<(usize, usize)> = Vec::new();
+    let mut start = 0usize;
+    for i in 1..=n {
+        if i == n || pr[i] != pr[start] {
+            runs.push((start, i));
+            start = i;
+        }
+    }
+    let k = max_shards.max(1).min(runs.len());
+    // Greedy fill: each shard takes whole runs until it reaches its fair
+    // share of the remaining rows, always leaving at least one run per
+    // remaining shard.
+    let mut ranges = Vec::with_capacity(k);
+    let mut run_idx = 0usize;
+    let mut rows_left = n;
+    for g in 0..k {
+        let shards_left = k - g;
+        let target = rows_left.div_ceil(shards_left);
+        let first = run_idx;
+        let mut took = 0usize;
+        while run_idx < runs.len() {
+            let must_leave = shards_left - 1; // runs needed by later shards
+            let runs_left = runs.len() - run_idx;
+            if runs_left <= must_leave {
+                break;
+            }
+            let run_rows = runs[run_idx].1 - runs[run_idx].0;
+            if took > 0 && took + run_rows > target {
+                break;
+            }
+            took += run_rows;
+            run_idx += 1;
+        }
+        debug_assert!(run_idx > first, "every shard takes at least one run");
+        ranges.push((runs[first].0, runs[run_idx - 1].1));
+        rows_left -= took;
+    }
+    debug_assert_eq!(run_idx, runs.len(), "all runs assigned");
+    Ok(Shards { ranges })
+}
+
+/// Copy one shard's rows into an owned sub-trace. Base columns only:
+/// derived columns cached by earlier analyses (`_matching_event`,
+/// `_parent`, `_depth`, `time.*`) hold absolute row indices / whole-trace
+/// values, so shards drop them and recompute their own (see
+/// [`crate::trace::is_derived_column`]). String dictionaries are shared
+/// (`Arc`), so name codes stay identical across shards.
+pub fn subtrace(trace: &Trace, range: (usize, usize)) -> Result<Trace> {
+    let idx: Vec<u32> = (range.0 as u32..range.1 as u32).collect();
+    let mut events = crate::df::Table::new();
+    for name in trace.events.names() {
+        if crate::trace::is_derived_column(name) {
+            continue;
+        }
+        events.push(name, trace.events.col(name)?.take(&idx))?;
+    }
+    Ok(Trace { events, meta: trace.meta.clone() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::TraceBuilder;
+
+    fn trace_with(proc_rows: &[usize]) -> Trace {
+        let mut b = TraceBuilder::new();
+        for (p, &rows) in proc_rows.iter().enumerate() {
+            // rows must be even: enter/leave pairs
+            let mut t = 0;
+            for _ in 0..rows / 2 {
+                b.enter(p as i64, 0, t, "f");
+                b.leave(p as i64, 0, t + 1, "f");
+                t += 2;
+            }
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn shards_align_to_processes_and_cover() {
+        let t = trace_with(&[10, 2, 6, 8, 4]);
+        for max in [1usize, 2, 3, 5, 16] {
+            let s = process_shards(&t, max).unwrap();
+            assert!(s.len() <= max.min(5));
+            assert!(!s.is_empty());
+            // ranges are contiguous and cover all rows
+            assert_eq!(s.ranges.first().unwrap().0, 0);
+            assert_eq!(s.ranges.last().unwrap().1, t.len());
+            for w in s.ranges.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            // boundaries land on process changes
+            let pr = t.processes().unwrap();
+            for &(a, _) in &s.ranges[1..] {
+                assert_ne!(pr[a - 1], pr[a], "shard splits a process");
+            }
+        }
+    }
+
+    #[test]
+    fn more_shards_than_processes() {
+        let t = trace_with(&[4, 4]);
+        let s = process_shards(&t, 8).unwrap();
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn empty_trace_has_no_shards() {
+        let t = TraceBuilder::new().finish();
+        assert!(process_shards(&t, 4).unwrap().is_empty());
+    }
+
+    #[test]
+    fn subtrace_preserves_rows_and_dicts() {
+        let t = trace_with(&[6, 4]);
+        let s = process_shards(&t, 2).unwrap();
+        let sub = subtrace(&t, s.ranges[1]).unwrap();
+        assert_eq!(sub.len(), 4);
+        assert_eq!(sub.processes().unwrap(), &[1, 1, 1, 1]);
+        // shared dictionary: same codes resolve to same strings
+        let (codes, dict) = sub.events.strs(crate::trace::COL_NAME).unwrap();
+        assert_eq!(dict.resolve(codes[0]), Some("f"));
+    }
+}

@@ -19,9 +19,33 @@
 //! let mut t = Trace::from_csv("foo-bar.csv").unwrap();
 //! let profile = pipit::analysis::flat_profile(&mut t, pipit::analysis::Metric::ExcTime);
 //! ```
+//!
+//! # Scaling
+//!
+//! The hot analyses — `flat_profile`, `time_profile`, `load_imbalance`,
+//! `idle_time`, `comm_matrix`, plus dataframe `filter`/`groupby` — also
+//! run **sharded** across a worker pool ([`exec`]): the trace is split
+//! into contiguous, process-aligned shards, each worker analyzes its
+//! shards, and results merge order-stably.
+//!
+//! Two properties make the parallel path safe to prefer by default:
+//!
+//! * **Determinism.** Sharded output is *bit-identical* to the
+//!   sequential output at every thread count. Merges preserve row order,
+//!   per-process folds complete inside one worker, cross-shard sums add
+//!   integer-valued f64s (exact), and fractional time-profile bins are
+//!   parallelized over the bin axis so each cell folds in sequential
+//!   order. `tests/parity.rs` asserts this for every generator at 2, 4,
+//!   and 8 threads.
+//! * **One knob.** Every entry point (CLI `--threads`, pipeline spec
+//!   `"threads"`, [`coordinator::AnalysisSession::with_threads`]) takes
+//!   `num_threads`: `0` = available parallelism (the default, also
+//!   overridable via the `NUM_THREADS` environment variable), `1` = the
+//!   legacy sequential path, kept intact.
 
 pub mod util;
 pub mod df;
+pub mod exec;
 pub mod trace;
 pub mod readers;
 pub mod gen;

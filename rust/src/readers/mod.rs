@@ -23,7 +23,6 @@ pub mod projections;
 use crate::trace::Trace;
 use anyhow::{bail, Result};
 use std::path::Path;
-use std::sync::atomic::{AtomicUsize, Ordering};
 
 /// Guess the format of `path` and read it.
 pub fn read_auto(path: &Path) -> Result<Trace> {
@@ -53,51 +52,21 @@ pub fn read_auto(path: &Path) -> Result<Trace> {
 
 /// Run `f(i)` for `i in 0..n` on up to `threads` worker threads, preserving
 /// result order. `threads == 0` means "number of available cores". This is
-/// the parallel-read substrate shared by the OTF2 and Projections readers.
+/// the parallel-read substrate shared by the OTF2 and Projections readers —
+/// now backed by the shared worker pool in [`crate::exec::pool`], which
+/// also cancels remaining tasks after the first error.
 pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Result<Vec<T>>
 where
     T: Send,
     F: Fn(usize) -> Result<T> + Sync,
 {
-    let threads = effective_threads(threads).min(n.max(1));
-    if threads <= 1 || n <= 1 {
-        return (0..n).map(&f).collect();
-    }
-    let next = AtomicUsize::new(0);
-    let mut slots: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
-    let slots_ptr = SlotsPtr(slots.as_mut_ptr());
-    std::thread::scope(|scope| {
-        for _ in 0..threads {
-            let fref = &f;
-            let nref = &next;
-            let sp = &slots_ptr;
-            scope.spawn(move || loop {
-                let i = nref.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = fref(i);
-                // SAFETY: each index i is claimed by exactly one worker via
-                // the atomic counter, so writes to slots[i] never alias.
-                unsafe { *sp.0.add(i) = Some(r) };
-            });
-        }
-    });
-    slots.into_iter().map(|s| s.expect("worker wrote slot")).collect()
+    crate::exec::pool::run_indexed(n, threads, f)
 }
 
-struct SlotsPtr<T>(*mut Option<Result<T>>);
-// SAFETY: workers write disjoint slots (unique index from the atomic
-// counter) and the vector outlives the scope.
-unsafe impl<T: Send> Sync for SlotsPtr<T> {}
-
 /// Resolve a `threads` parameter: 0 = available parallelism.
+/// (Alias of [`crate::exec::effective_threads`], kept for callers.)
 pub fn effective_threads(threads: usize) -> usize {
-    if threads == 0 {
-        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
-    } else {
-        threads
-    }
+    crate::exec::effective_threads(threads)
 }
 
 #[cfg(test)]

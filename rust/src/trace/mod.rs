@@ -63,6 +63,15 @@ pub const DEFAULT_COMM_FUNCTIONS: &[&str] = &[
 pub const DEFAULT_IDLE_FUNCTIONS: &[&str] =
     &["MPI_Recv", "MPI_Wait", "MPI_Waitall", "MPI_Barrier", "Idle"];
 
+/// Is `name` a derived (analysis-cached) column rather than base trace
+/// data? `_matching_event` / `_parent` / `_depth` hold absolute row
+/// indices and become stale whenever rows are subset; `time.inc` /
+/// `time.exc` change when a call's children are filtered away. Row
+/// subsetting (filters, shards) drops these so they recompute.
+pub(crate) fn is_derived_column(name: &str) -> bool {
+    name.starts_with('_') || name == "time.inc" || name == "time.exc"
+}
+
 /// Provenance metadata carried alongside the events table.
 #[derive(Debug, Clone, Default)]
 pub struct TraceMeta {
@@ -184,8 +193,46 @@ impl Trace {
 
     /// Filter to a sub-trace (paper §IV.E): a new `Trace` with the reduced
     /// events table; every analysis op applies to the result unchanged.
+    ///
+    /// Cached derived columns (`_matching_event`, `_parent`, `_depth`,
+    /// `time.inc`, `time.exc`) are dropped: the index-valued ones point
+    /// at rows of *this* trace and would be stale in the sub-trace, and
+    /// exclusive times change when calls lose children to the filter.
+    /// Analyses on the sub-trace recompute them from scratch.
     pub fn filter(&self, e: &Expr) -> Result<Trace> {
-        Ok(Trace { events: self.events.query(e)?, meta: self.meta.clone() })
+        let mask = self.events.mask(e)?;
+        let mut events = crate::df::Table::new();
+        for name in self.events.names() {
+            if is_derived_column(name) {
+                continue;
+            }
+            events.push(name, self.events.col(name)?.filter(&mask))?;
+        }
+        Ok(Trace { events, meta: self.meta.clone() })
+    }
+
+    /// [`Trace::filter`] with columns materialized concurrently on the
+    /// worker pool (`threads`: 0 = available parallelism). Identical
+    /// output to the sequential filter. (Deliberately does not reuse
+    /// [`crate::df::Table::par_filter`]: going through `select` first
+    /// would clone every kept column at full length just to drop the
+    /// derived ones.)
+    pub fn par_filter(&self, e: &Expr, threads: usize) -> Result<Trace> {
+        let mask = self.events.mask(e)?;
+        let keep: Vec<&String> = self
+            .events
+            .names()
+            .iter()
+            .filter(|n| !is_derived_column(n))
+            .collect();
+        let cols = crate::exec::pool::run_indexed(keep.len(), threads, |i| {
+            Ok(self.events.col(keep[i])?.filter(&mask))
+        })?;
+        let mut events = crate::df::Table::new();
+        for (n, c) in keep.into_iter().zip(cols) {
+            events.push(n, c)?;
+        }
+        Ok(Trace { events, meta: self.meta.clone() })
     }
 
     /// Rows (event indices) for one process, in table order.
@@ -240,5 +287,25 @@ mod tests {
         let t = toy();
         assert_eq!(t.rows_of_process(0).unwrap(), vec![0, 1, 2, 3]);
         assert_eq!(t.rows_of_process(1).unwrap(), vec![4, 5]);
+    }
+
+    #[test]
+    fn filter_drops_cached_derived_columns() {
+        // Derived columns hold absolute row indices / whole-trace values;
+        // carrying them into a row subset would poison later analyses.
+        let mut t = toy();
+        crate::analysis::metrics::calc_exc_metrics(&mut t).unwrap();
+        assert!(t.events.has("_matching_event") && t.events.has("time.exc"));
+        for sub in [
+            t.filter(&Expr::process_eq(0)).unwrap(),
+            t.par_filter(&Expr::process_eq(0), 4).unwrap(),
+        ] {
+            assert!(!sub.events.has("_matching_event"));
+            assert!(!sub.events.has("time.exc"));
+            let mut sub = sub;
+            let fp =
+                crate::analysis::flat_profile(&mut sub, crate::analysis::Metric::ExcTime).unwrap();
+            assert!(!fp.is_empty());
+        }
     }
 }

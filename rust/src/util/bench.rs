@@ -84,6 +84,20 @@ impl Bencher {
         self.samples.last().unwrap()
     }
 
+    /// Median-over-median speedup of `base` relative to `faster` —
+    /// > 1.0 means `faster` won. None if either sample is missing or
+    /// degenerate. Used by the scaling benches to report
+    /// sequential-vs-sharded ratios.
+    pub fn speedup(&self, base: &str, faster: &str) -> Option<f64> {
+        let b = self.samples.iter().find(|s| s.name == base)?.median();
+        let f = self.samples.iter().find(|s| s.name == faster)?.median();
+        if f > 0.0 {
+            Some(b / f)
+        } else {
+            None
+        }
+    }
+
     /// Print all samples as CSV (name, median_ns, mean_ns, min_ns, max_ns).
     pub fn csv(&self) -> String {
         let mut out = String::from("name,median_ns,mean_ns,min_ns,max_ns\n");
@@ -133,5 +147,14 @@ mod tests {
         assert_eq!(b.samples.len(), 1);
         assert_eq!(b.samples[0].runs_ns.len(), 3);
         assert!(b.csv().contains("noop"));
+    }
+
+    #[test]
+    fn speedup_compares_medians() {
+        let mut b = Bencher { warmup: 0, iters: 0, samples: Vec::new() };
+        b.samples.push(Sample { name: "slow".into(), runs_ns: vec![100.0, 100.0] });
+        b.samples.push(Sample { name: "fast".into(), runs_ns: vec![25.0, 25.0] });
+        assert_eq!(b.speedup("slow", "fast"), Some(4.0));
+        assert_eq!(b.speedup("slow", "missing"), None);
     }
 }

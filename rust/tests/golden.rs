@@ -1,0 +1,87 @@
+//! Golden-file regression tests for the readers: one tiny checked-in
+//! fixture per format (csv, chrome JSON, otf2-sim directory) parsed and
+//! serialized to a canonical row dump that must match the checked-in
+//! expected output byte for byte. Reader refactors can't silently
+//! reorder, drop, or re-type events without tripping these.
+
+use pipit::analysis::{self, CommUnit};
+use pipit::df::NULL_I64;
+use pipit::readers;
+use pipit::trace::{Trace, COL_MSG_SIZE, COL_NAME, COL_PARTNER, COL_PROC, COL_TAG, COL_THREAD, COL_TS, COL_TYPE};
+use std::path::PathBuf;
+
+fn fixture(name: &str) -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name)
+}
+
+/// Canonical dump: one `ts|type|name|proc|thread|partner|size|tag` line
+/// per event, nulls rendered as `-`. Deliberately independent of
+/// `Table::show` so display changes don't invalidate the goldens.
+fn dump(t: &Trace) -> String {
+    let ts = t.events.i64s(COL_TS).unwrap();
+    let (et, edict) = t.events.strs(COL_TYPE).unwrap();
+    let (nm, ndict) = t.events.strs(COL_NAME).unwrap();
+    let pr = t.events.i64s(COL_PROC).unwrap();
+    let th = t.events.i64s(COL_THREAD).unwrap();
+    let pa = t.events.i64s(COL_PARTNER).unwrap();
+    let ms = t.events.i64s(COL_MSG_SIZE).unwrap();
+    let tg = t.events.i64s(COL_TAG).unwrap();
+    let opt = |v: i64| if v == NULL_I64 { "-".to_string() } else { v.to_string() };
+    let mut out = String::new();
+    for i in 0..t.len() {
+        out.push_str(&format!(
+            "{}|{}|{}|{}|{}|{}|{}|{}\n",
+            ts[i],
+            edict.resolve(et[i]).unwrap_or("?"),
+            ndict.resolve(nm[i]).unwrap_or("?"),
+            pr[i],
+            th[i],
+            opt(pa[i]),
+            opt(ms[i]),
+            opt(tg[i]),
+        ));
+    }
+    out
+}
+
+fn expected(name: &str) -> String {
+    std::fs::read_to_string(fixture(name)).unwrap()
+}
+
+#[test]
+fn csv_reader_matches_golden() {
+    let t = readers::csv::read(&fixture("tiny.csv")).unwrap();
+    assert_eq!(t.meta.format, "csv");
+    assert_eq!(dump(&t), expected("expected_csv.txt"));
+}
+
+#[test]
+fn chrome_reader_matches_golden() {
+    let t = readers::chrome::read(&fixture("tiny_chrome.json")).unwrap();
+    assert_eq!(t.meta.format, "chrome");
+    assert_eq!(t.meta.app, "golden");
+    assert_eq!(dump(&t), expected("expected_chrome.txt"));
+}
+
+#[test]
+fn otf2_reader_matches_golden() {
+    let t = readers::otf2::read(&fixture("tiny_otf2"), 1).unwrap();
+    assert_eq!(t.meta.format, "otf2");
+    assert_eq!(t.meta.app, "golden");
+    assert_eq!(dump(&t), expected("expected_otf2.txt"));
+    // parallel read of the same fixture is identical
+    let t2 = readers::otf2::read(&fixture("tiny_otf2"), 4).unwrap();
+    assert_eq!(dump(&t2), expected("expected_otf2.txt"));
+}
+
+#[test]
+fn golden_traces_analyze_identically_across_formats() {
+    // The csv and otf2 fixtures encode the same logical trace; the
+    // analysis layer must agree on them.
+    let t_csv = readers::csv::read(&fixture("tiny.csv")).unwrap();
+    let t_otf = readers::otf2::read(&fixture("tiny_otf2"), 1).unwrap();
+    let m_csv = analysis::comm_matrix(&t_csv, CommUnit::Bytes).unwrap();
+    let m_otf = analysis::comm_matrix(&t_otf, CommUnit::Bytes).unwrap();
+    assert_eq!(m_csv.data, m_otf.data);
+    assert_eq!(m_csv.total(), 256.0);
+}

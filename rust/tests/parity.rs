@@ -1,0 +1,260 @@
+//! Sequential-parity property suite for the sharded execution layer
+//! (`pipit::exec`): for every generator and every routed analysis,
+//! sharded output at 2 / 4 / 8 threads must be **identical** to the
+//! single-threaded result — same ordering, same f64 bits. Configs are
+//! drawn from the crate's seeded RNG so failures reproduce exactly.
+
+use pipit::analysis::{self, CommUnit, Metric};
+use pipit::df::Expr;
+use pipit::exec;
+use pipit::gen::{self, GenConfig};
+use pipit::trace::{Trace, TraceBuilder};
+use pipit::util::rng::Rng;
+
+const THREADS: &[usize] = &[2, 4, 8];
+const METRICS: &[Metric] = &[Metric::ExcTime, Metric::IncTime, Metric::Count];
+
+/// One deterministic trace per application model.
+fn traces() -> Vec<(&'static str, Trace)> {
+    let mut rng = Rng::new(0xF00D_5EED);
+    gen::APPS
+        .iter()
+        .map(|&app| {
+            let cfg = GenConfig {
+                ranks: 8,
+                iterations: 4,
+                seed: rng.next_u64(),
+                noise: rng.uniform(0.0, 0.12),
+            };
+            (app, gen::generate(app, &cfg, 1).unwrap())
+        })
+        .collect()
+}
+
+fn assert_time_profiles_equal(
+    a: &analysis::TimeProfile,
+    b: &analysis::TimeProfile,
+    ctx: &str,
+) {
+    assert_eq!(a.func_names, b.func_names, "{ctx}: func order differs");
+    assert_eq!(a.bin_edges, b.bin_edges, "{ctx}: bin edges differ");
+    assert_eq!(a.values.len(), b.values.len(), "{ctx}");
+    for (bin, (ra, rb)) in a.values.iter().zip(&b.values).enumerate() {
+        for (f, (va, vb)) in ra.iter().zip(rb).enumerate() {
+            assert_eq!(
+                va.to_bits(),
+                vb.to_bits(),
+                "{ctx}: bin {bin} func {f}: {va} vs {vb}"
+            );
+        }
+    }
+}
+
+#[test]
+fn flat_profile_parity() {
+    for (app, t) in traces() {
+        for &m in METRICS {
+            let seq = analysis::flat_profile(&mut t.clone(), m).unwrap();
+            for &th in THREADS {
+                let sh = exec::ops::flat_profile(&t, m, th).unwrap();
+                assert_eq!(seq, sh, "{app} {m:?} at {th} threads");
+            }
+        }
+    }
+}
+
+#[test]
+fn flat_profile_by_process_parity() {
+    for (app, t) in traces() {
+        for &m in METRICS {
+            let seq = analysis::flat_profile_by_process(&mut t.clone(), m).unwrap();
+            for &th in THREADS {
+                let sh = exec::ops::flat_profile_by_process(&t, m, th).unwrap();
+                assert_eq!(seq, sh, "{app} {m:?} at {th} threads");
+            }
+        }
+    }
+}
+
+#[test]
+fn time_profile_parity() {
+    for (app, t) in traces() {
+        for (bins, top) in [(32usize, None), (97, Some(5)), (128, Some(63))] {
+            let seq = analysis::time_profile(&mut t.clone(), bins, top).unwrap();
+            for &th in THREADS {
+                let sh = exec::ops::time_profile(&t, bins, top, th).unwrap();
+                assert_time_profiles_equal(
+                    &seq,
+                    &sh,
+                    &format!("{app} bins={bins} top={top:?} threads={th}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn comm_matrix_parity() {
+    for (app, t) in traces() {
+        for unit in [CommUnit::Bytes, CommUnit::Count] {
+            let seq = analysis::comm_matrix(&t, unit).unwrap();
+            for &th in THREADS {
+                let sh = exec::ops::comm_matrix(&t, unit, th).unwrap();
+                assert_eq!(seq.procs, sh.procs, "{app} {unit:?} at {th}");
+                assert_eq!(seq.data, sh.data, "{app} {unit:?} at {th} threads");
+            }
+        }
+    }
+}
+
+#[test]
+fn load_imbalance_parity() {
+    for (app, t) in traces() {
+        for &m in METRICS {
+            let seq = analysis::load_imbalance(&mut t.clone(), m, 3).unwrap();
+            for &th in THREADS {
+                let sh = exec::ops::load_imbalance(&t, m, 3, th).unwrap();
+                assert_eq!(seq, sh, "{app} {m:?} at {th} threads");
+            }
+        }
+    }
+}
+
+#[test]
+fn idle_time_parity() {
+    for (app, t) in traces() {
+        let seq = analysis::idle_time(&mut t.clone(), None).unwrap();
+        for &th in THREADS {
+            let sh = exec::ops::idle_time(&t, None, th).unwrap();
+            assert_eq!(seq, sh, "{app} at {th} threads");
+        }
+        // custom idle set follows the same path
+        let custom = Some(["computeRhs", "MPI_Waitall"].as_slice());
+        let seq = analysis::idle_time(&mut t.clone(), custom).unwrap();
+        let sh = exec::ops::idle_time(&t, custom, 4).unwrap();
+        assert_eq!(seq, sh, "{app} custom idle set");
+    }
+}
+
+#[test]
+fn filter_parity() {
+    for (app, t) in traces() {
+        let (lo, hi) = t.time_range().unwrap();
+        let e = Expr::process_in(&[0, 2, 5]).and(Expr::time_between(lo, lo + (hi - lo) / 2));
+        let seq = t.filter(&e).unwrap();
+        for &th in THREADS {
+            let sh = t.par_filter(&e, th).unwrap();
+            assert_eq!(seq.len(), sh.len(), "{app} at {th} threads");
+            assert_eq!(
+                seq.timestamps().unwrap(),
+                sh.timestamps().unwrap(),
+                "{app} at {th} threads"
+            );
+            assert_eq!(seq.events.names(), sh.events.names());
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// concurrency edge cases
+// ---------------------------------------------------------------------------
+
+fn assert_all_ops_match(t: &Trace, threads: usize, ctx: &str) {
+    let seq_fp = analysis::flat_profile(&mut t.clone(), Metric::ExcTime).unwrap();
+    assert_eq!(seq_fp, exec::ops::flat_profile(t, Metric::ExcTime, threads).unwrap(), "{ctx}");
+    let seq_tp = analysis::time_profile(&mut t.clone(), 16, None).unwrap();
+    let sh_tp = exec::ops::time_profile(t, 16, None, threads).unwrap();
+    assert_time_profiles_equal(&seq_tp, &sh_tp, ctx);
+    let seq_cm = analysis::comm_matrix(t, CommUnit::Bytes).unwrap();
+    let sh_cm = exec::ops::comm_matrix(t, CommUnit::Bytes, threads).unwrap();
+    assert_eq!(seq_cm.data, sh_cm.data, "{ctx}");
+    let seq_it = analysis::idle_time(&mut t.clone(), None).unwrap();
+    assert_eq!(seq_it, exec::ops::idle_time(t, None, threads).unwrap(), "{ctx}");
+    let seq_li = analysis::load_imbalance(&mut t.clone(), Metric::ExcTime, 2).unwrap();
+    assert_eq!(seq_li, exec::ops::load_imbalance(t, Metric::ExcTime, 2, threads).unwrap(), "{ctx}");
+}
+
+#[test]
+fn empty_trace_at_any_thread_count() {
+    let t = TraceBuilder::new().finish();
+    for &th in &[2usize, 8] {
+        assert_all_ops_match(&t, th, "empty trace");
+    }
+    assert!(exec::ops::flat_profile(&t, Metric::ExcTime, 8).unwrap().is_empty());
+}
+
+#[test]
+fn single_process_holds_all_events() {
+    // one shard gets everything, others get nothing to do
+    let mut b = TraceBuilder::new();
+    b.enter(0, 0, 0, "main");
+    for i in 0..200 {
+        b.enter(0, 0, 10 * i + 1, "work");
+        b.leave(0, 0, 10 * i + 6, "work");
+    }
+    b.leave(0, 0, 10_000, "main");
+    let t = b.finish();
+    assert_all_ops_match(&t, 8, "single process, 8 threads");
+}
+
+#[test]
+fn more_threads_than_processes() {
+    let t = gen::generate("gol", &GenConfig::new(3, 3), 1).unwrap();
+    assert_all_ops_match(&t, 16, "3 processes, 16 threads");
+}
+
+#[test]
+fn pool_propagates_shard_errors_without_hanging() {
+    // A shard task that fails must surface its error; the pool must not
+    // deadlock or swallow it.
+    let err = exec::run_indexed(32, 8, |i| -> anyhow::Result<usize> {
+        if i == 13 {
+            anyhow::bail!("injected failure in shard {i}");
+        }
+        Ok(i)
+    })
+    .unwrap_err();
+    assert!(err.to_string().contains("injected failure"), "{err}");
+
+    // An analysis over a malformed (non-canonical) trace errors on both
+    // paths rather than hanging or succeeding on one of them.
+    let mut b = TraceBuilder::new();
+    b.sort_on_finish = false;
+    b.enter(0, 0, 100, "a");
+    b.leave(0, 0, 50, "a"); // time goes backwards
+    b.enter(1, 0, 0, "b");
+    b.leave(1, 0, 10, "b");
+    let t = b.finish();
+    assert!(analysis::flat_profile(&mut t.clone(), Metric::ExcTime).is_err());
+    assert!(exec::ops::flat_profile(&t, Metric::ExcTime, 4).is_err());
+}
+
+#[test]
+fn cached_derived_columns_do_not_poison_shards() {
+    // A sequential run caches `_matching_event` / `_parent` / `time.*`
+    // on the trace; those hold absolute row indices, so shards must not
+    // inherit them. The sharded run over the "warm" trace must still
+    // match the sequential results exactly.
+    let mut t = gen::generate("amg", &GenConfig::new(8, 4), 1).unwrap();
+    let seq = analysis::flat_profile(&mut t, Metric::ExcTime).unwrap();
+    let seq_tp = analysis::time_profile(&mut t, 32, None).unwrap();
+    assert!(t.events.has("_matching_event"), "test premise: columns cached");
+    let sh = exec::ops::flat_profile(&t, Metric::ExcTime, 4).unwrap();
+    assert_eq!(seq, sh);
+    let sh_tp = exec::ops::time_profile(&t, 32, None, 4).unwrap();
+    assert_time_profiles_equal(&seq_tp, &sh_tp, "warm trace");
+    let seq_li = analysis::load_imbalance(&mut t, Metric::ExcTime, 3).unwrap();
+    let sh_li = exec::ops::load_imbalance(&t, Metric::ExcTime, 3, 4).unwrap();
+    assert_eq!(seq_li, sh_li);
+}
+
+#[test]
+fn shard_plan_covers_every_generator() {
+    for (app, t) in traces() {
+        for &th in THREADS {
+            let shards = exec::process_shards(&t, th).unwrap();
+            let total: usize = shards.ranges.iter().map(|(a, b)| b - a).sum();
+            assert_eq!(total, t.len(), "{app} at {th} threads");
+        }
+    }
+}

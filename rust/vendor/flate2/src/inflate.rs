@@ -1,0 +1,337 @@
+//! DEFLATE (RFC 1951) decoder + zlib (RFC 1950) framing with adler32
+//! verification. Handles stored, fixed-Huffman, and dynamic-Huffman
+//! blocks, so it reads streams produced by any standard zlib compressor,
+//! not only this crate's stored-block writer.
+
+/// Checksum over `data` (RFC 1950 §8.2). Deferred modulo: 5552 is the
+/// largest n with 255*n*(n+1)/2 + (n+1)*(65521-1) < 2^32.
+pub fn adler32(data: &[u8]) -> u32 {
+    const MOD: u32 = 65_521;
+    let mut a: u32 = 1;
+    let mut b: u32 = 0;
+    for chunk in data.chunks(5552) {
+        for &x in chunk {
+            a += x as u32;
+            b += a;
+        }
+        a %= MOD;
+        b %= MOD;
+    }
+    (b << 16) | a
+}
+
+struct BitReader<'a> {
+    data: &'a [u8],
+    /// Next byte index.
+    pos: usize,
+    /// Bits already consumed from `data[pos]`.
+    bit: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(data: &'a [u8], pos: usize) -> Self {
+        BitReader { data, pos, bit: 0 }
+    }
+
+    /// Read `n` bits, LSB-first (n <= 16).
+    fn bits(&mut self, n: u32) -> Result<u32, String> {
+        let mut out = 0u32;
+        for i in 0..n {
+            let byte = *self
+                .data
+                .get(self.pos)
+                .ok_or_else(|| "unexpected end of deflate stream".to_string())?;
+            out |= (((byte >> self.bit) & 1) as u32) << i;
+            self.bit += 1;
+            if self.bit == 8 {
+                self.bit = 0;
+                self.pos += 1;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Discard bits up to the next byte boundary.
+    fn align(&mut self) {
+        if self.bit != 0 {
+            self.bit = 0;
+            self.pos += 1;
+        }
+    }
+
+    /// Read `n` whole bytes (must be byte-aligned).
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+        debug_assert_eq!(self.bit, 0);
+        let end = self
+            .pos
+            .checked_add(n)
+            .filter(|&e| e <= self.data.len())
+            .ok_or_else(|| "unexpected end of deflate stream".to_string())?;
+        let out = &self.data[self.pos..end];
+        self.pos = end;
+        Ok(out)
+    }
+}
+
+/// Canonical Huffman decoding table: symbol counts per code length and
+/// symbols sorted by (length, symbol) — the RFC 1951 §3.2.2 construction.
+struct Huffman {
+    counts: [u16; 16],
+    symbols: Vec<u16>,
+}
+
+impl Huffman {
+    fn build(lengths: &[u8]) -> Result<Huffman, String> {
+        let mut counts = [0u16; 16];
+        for &l in lengths {
+            if l > 15 {
+                return Err("code length > 15".into());
+            }
+            counts[l as usize] += 1;
+        }
+        // over-subscription check (incomplete codes are permitted)
+        let mut left: i32 = 1;
+        for len in 1..16 {
+            left <<= 1;
+            left -= counts[len] as i32;
+            if left < 0 {
+                return Err("over-subscribed huffman code".into());
+            }
+        }
+        // offsets of each length's first symbol in the sorted table
+        let mut offs = [0usize; 16];
+        for len in 1..15 {
+            offs[len + 1] = offs[len] + counts[len] as usize;
+        }
+        let mut symbols = vec![0u16; lengths.iter().filter(|&&l| l != 0).count()];
+        for (sym, &l) in lengths.iter().enumerate() {
+            if l != 0 {
+                symbols[offs[l as usize]] = sym as u16;
+                offs[l as usize] += 1;
+            }
+        }
+        Ok(Huffman { counts, symbols })
+    }
+
+    fn decode(&self, br: &mut BitReader) -> Result<u16, String> {
+        let mut code = 0i32;
+        let mut first = 0i32;
+        let mut index = 0i32;
+        for len in 1..16 {
+            code |= br.bits(1)? as i32;
+            let count = self.counts[len] as i32;
+            if code - first < count {
+                return Ok(self.symbols[(index + (code - first)) as usize]);
+            }
+            index += count;
+            first = (first + count) << 1;
+            code <<= 1;
+        }
+        Err("invalid huffman code".into())
+    }
+}
+
+const LEN_BASE: [u16; 29] = [
+    3, 4, 5, 6, 7, 8, 9, 10, 11, 13, 15, 17, 19, 23, 27, 31, 35, 43, 51, 59, 67, 83, 99, 115,
+    131, 163, 195, 227, 258,
+];
+const LEN_EXTRA: [u32; 29] = [
+    0, 0, 0, 0, 0, 0, 0, 0, 1, 1, 1, 1, 2, 2, 2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 5, 5, 5, 5, 0,
+];
+const DIST_BASE: [u16; 30] = [
+    1, 2, 3, 4, 5, 7, 9, 13, 17, 25, 33, 49, 65, 97, 129, 193, 257, 385, 513, 769, 1025, 1537,
+    2049, 3073, 4097, 6145, 8193, 12289, 16385, 24577,
+];
+const DIST_EXTRA: [u32; 30] = [
+    0, 0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6, 7, 7, 8, 8, 9, 9, 10, 10, 11, 11, 12, 12,
+    13, 13,
+];
+
+fn inflate_block(
+    lit: &Huffman,
+    dist: &Huffman,
+    br: &mut BitReader,
+    out: &mut Vec<u8>,
+) -> Result<(), String> {
+    loop {
+        let sym = lit.decode(br)?;
+        if sym < 256 {
+            out.push(sym as u8);
+        } else if sym == 256 {
+            return Ok(());
+        } else {
+            let s = (sym - 257) as usize;
+            if s >= 29 {
+                return Err("invalid length code".into());
+            }
+            let len = LEN_BASE[s] as usize + br.bits(LEN_EXTRA[s])? as usize;
+            let d = dist.decode(br)? as usize;
+            if d >= 30 {
+                return Err("invalid distance code".into());
+            }
+            let back = DIST_BASE[d] as usize + br.bits(DIST_EXTRA[d])? as usize;
+            if back > out.len() {
+                return Err("distance beyond output start".into());
+            }
+            let start = out.len() - back;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+    }
+}
+
+fn fixed_tables() -> (Huffman, Huffman) {
+    let mut lit_lengths = [0u8; 288];
+    for (i, l) in lit_lengths.iter_mut().enumerate() {
+        *l = match i {
+            0..=143 => 8,
+            144..=255 => 9,
+            256..=279 => 7,
+            _ => 8,
+        };
+    }
+    let dist_lengths = [5u8; 30];
+    (
+        Huffman::build(&lit_lengths).expect("fixed literal table"),
+        Huffman::build(&dist_lengths).expect("fixed distance table"),
+    )
+}
+
+fn dynamic_tables(br: &mut BitReader) -> Result<(Huffman, Huffman), String> {
+    let hlit = br.bits(5)? as usize + 257;
+    let hdist = br.bits(5)? as usize + 1;
+    let hclen = br.bits(4)? as usize + 4;
+    if hlit > 286 || hdist > 30 {
+        return Err("too many huffman codes".into());
+    }
+    const ORDER: [usize; 19] = [16, 17, 18, 0, 8, 7, 9, 6, 10, 5, 11, 4, 12, 3, 13, 2, 14, 1, 15];
+    let mut cl = [0u8; 19];
+    for &slot in ORDER.iter().take(hclen) {
+        cl[slot] = br.bits(3)? as u8;
+    }
+    let clh = Huffman::build(&cl)?;
+    let mut lengths = vec![0u8; hlit + hdist];
+    let mut i = 0usize;
+    while i < lengths.len() {
+        let sym = clh.decode(br)?;
+        match sym {
+            0..=15 => {
+                lengths[i] = sym as u8;
+                i += 1;
+            }
+            16 => {
+                if i == 0 {
+                    return Err("repeat with no previous length".into());
+                }
+                let prev = lengths[i - 1];
+                let rep = 3 + br.bits(2)? as usize;
+                if i + rep > lengths.len() {
+                    return Err("length repeat overflows".into());
+                }
+                for _ in 0..rep {
+                    lengths[i] = prev;
+                    i += 1;
+                }
+            }
+            17 | 18 => {
+                let rep = if sym == 17 {
+                    3 + br.bits(3)? as usize
+                } else {
+                    11 + br.bits(7)? as usize
+                };
+                if i + rep > lengths.len() {
+                    return Err("length repeat overflows".into());
+                }
+                i += rep; // already zero
+            }
+            _ => return Err("invalid code-length symbol".into()),
+        }
+    }
+    if lengths[256] == 0 {
+        return Err("no end-of-block code".into());
+    }
+    Ok((Huffman::build(&lengths[..hlit])?, Huffman::build(&lengths[hlit..])?))
+}
+
+/// Decompress a full zlib stream (header + deflate + adler32), verifying
+/// the checksum. Errors on truncation, corruption, preset dictionaries,
+/// and checksum mismatches.
+pub fn zlib_decompress(input: &[u8]) -> Result<Vec<u8>, String> {
+    if input.len() < 2 {
+        return Err("zlib stream shorter than its header".into());
+    }
+    let cmf = input[0];
+    let flg = input[1];
+    if cmf & 0x0f != 8 {
+        return Err(format!("unsupported compression method {}", cmf & 0x0f));
+    }
+    if ((cmf as u32) * 256 + flg as u32) % 31 != 0 {
+        return Err("zlib header check failed".into());
+    }
+    if flg & 0x20 != 0 {
+        return Err("preset dictionaries are not supported".into());
+    }
+    let mut br = BitReader::new(input, 2);
+    let mut out = Vec::with_capacity(input.len().saturating_mul(3));
+    loop {
+        let bfinal = br.bits(1)?;
+        let btype = br.bits(2)?;
+        match btype {
+            0 => {
+                br.align();
+                let hdr = br.bytes(4)?;
+                let len = u16::from_le_bytes([hdr[0], hdr[1]]);
+                let nlen = u16::from_le_bytes([hdr[2], hdr[3]]);
+                if len != !nlen {
+                    return Err("stored block length check failed".into());
+                }
+                let body = br.bytes(len as usize)?;
+                out.extend_from_slice(body);
+            }
+            1 => {
+                let (lit, dist) = fixed_tables();
+                inflate_block(&lit, &dist, &mut br, &mut out)?;
+            }
+            2 => {
+                let (lit, dist) = dynamic_tables(&mut br)?;
+                inflate_block(&lit, &dist, &mut br, &mut out)?;
+            }
+            _ => return Err("reserved block type".into()),
+        }
+        if bfinal == 1 {
+            break;
+        }
+    }
+    br.align();
+    let tail = br.bytes(4).map_err(|_| "truncated adler32 checksum".to_string())?;
+    let want = u32::from_be_bytes([tail[0], tail[1], tail[2], tail[3]]);
+    let got = adler32(&out);
+    if want != got {
+        return Err(format!("adler32 mismatch: stream says {want:#010x}, data is {got:#010x}"));
+    }
+    Ok(out)
+}
+
+/// Compress `data` as a zlib stream of stored (uncompressed) deflate
+/// blocks — valid zlib that any inflater reads; no entropy coding.
+pub fn zlib_compress_stored(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() + data.len() / 65_535 * 5 + 16);
+    out.push(0x78);
+    out.push(0x01); // (0x7801 % 31) == 0
+    if data.is_empty() {
+        out.extend_from_slice(&[0x01, 0x00, 0x00, 0xff, 0xff]);
+    } else {
+        let mut chunks = data.chunks(65_535).peekable();
+        while let Some(c) = chunks.next() {
+            out.push(if chunks.peek().is_none() { 0x01 } else { 0x00 });
+            let len = c.len() as u16;
+            out.extend_from_slice(&len.to_le_bytes());
+            out.extend_from_slice(&(!len).to_le_bytes());
+            out.extend_from_slice(c);
+        }
+    }
+    out.extend_from_slice(&adler32(data).to_be_bytes());
+    out
+}

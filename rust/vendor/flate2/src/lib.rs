@@ -1,0 +1,245 @@
+//! Offline reimplementation of the `flate2` API subset Pipit-RS uses:
+//! [`Compression`], [`write::ZlibEncoder`], [`read::ZlibDecoder`].
+//!
+//! The encoder emits valid zlib framing around *stored* deflate blocks
+//! (no entropy coding — compression level is accepted but ignored), so
+//! any standard inflater reads its output. The decoder implements full
+//! inflate (stored + fixed + dynamic Huffman, [`inflate`]) with adler32
+//! verification, so it reads streams from any standard compressor too.
+//! Corruption — truncation, header damage, checksum mismatch — is
+//! reported as `io::ErrorKind::InvalidData`, which is the contract the
+//! failure-injection tests rely on.
+
+pub mod inflate;
+
+/// Compression level. Accepted for API compatibility; the stored-block
+/// encoder ignores it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Compression(u32);
+
+impl Compression {
+    pub fn new(level: u32) -> Compression {
+        Compression(level)
+    }
+
+    pub fn none() -> Compression {
+        Compression(0)
+    }
+
+    pub fn fast() -> Compression {
+        Compression(1)
+    }
+
+    pub fn best() -> Compression {
+        Compression(9)
+    }
+
+    pub fn level(&self) -> u32 {
+        self.0
+    }
+}
+
+impl Default for Compression {
+    fn default() -> Compression {
+        Compression(6)
+    }
+}
+
+pub mod write {
+    use std::io::{self, Write};
+
+    /// Zlib encoder wrapping a writer. Data is buffered and the zlib
+    /// stream is emitted by [`ZlibEncoder::finish`] (all call sites in
+    /// this workspace call `finish`; nothing is written on drop).
+    pub struct ZlibEncoder<W: Write> {
+        inner: W,
+        buf: Vec<u8>,
+    }
+
+    impl<W: Write> ZlibEncoder<W> {
+        pub fn new(inner: W, _level: crate::Compression) -> ZlibEncoder<W> {
+            ZlibEncoder { inner, buf: Vec::new() }
+        }
+
+        /// Emit the complete zlib stream and return the inner writer.
+        pub fn finish(mut self) -> io::Result<W> {
+            let payload = crate::inflate::zlib_compress_stored(&self.buf);
+            self.inner.write_all(&payload)?;
+            self.inner.flush()?;
+            Ok(self.inner)
+        }
+    }
+
+    impl<W: Write> Write for ZlibEncoder<W> {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            self.buf.extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+}
+
+pub mod read {
+    use std::io::{self, Read};
+
+    /// Zlib decoder wrapping a reader. The whole inner stream is read
+    /// and inflated on first use; corruption anywhere (including an
+    /// adler32 mismatch) surfaces as `InvalidData`.
+    pub struct ZlibDecoder<R: Read> {
+        inner: R,
+        out: Option<Vec<u8>>,
+        pos: usize,
+    }
+
+    impl<R: Read> ZlibDecoder<R> {
+        pub fn new(inner: R) -> ZlibDecoder<R> {
+            ZlibDecoder { inner, out: None, pos: 0 }
+        }
+
+        fn fill(&mut self) -> io::Result<()> {
+            if self.out.is_none() {
+                let mut raw = Vec::new();
+                self.inner.read_to_end(&mut raw)?;
+                let data = crate::inflate::zlib_decompress(&raw)
+                    .map_err(|m| io::Error::new(io::ErrorKind::InvalidData, m))?;
+                self.out = Some(data);
+            }
+            Ok(())
+        }
+    }
+
+    impl<R: Read> Read for ZlibDecoder<R> {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            self.fill()?;
+            let data = self.out.as_ref().expect("filled above");
+            let n = (data.len() - self.pos).min(buf.len());
+            buf[..n].copy_from_slice(&data[self.pos..self.pos + n]);
+            self.pos += n;
+            Ok(n)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    fn roundtrip(data: &[u8]) -> Vec<u8> {
+        let mut enc = write::ZlibEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(data).unwrap();
+        let compressed = enc.finish().unwrap();
+        let mut out = Vec::new();
+        read::ZlibDecoder::new(&compressed[..]).read_to_end(&mut out).unwrap();
+        out
+    }
+
+    /// Tiny deterministic byte generator for incompressible-ish data.
+    fn lcg_bytes(n: usize) -> Vec<u8> {
+        let mut x = 0x2545F4914F6CDD1Du64;
+        (0..n)
+            .map(|_| {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                (x >> 56) as u8
+            })
+            .collect()
+    }
+
+    #[test]
+    fn roundtrip_small_and_empty() {
+        assert_eq!(roundtrip(b""), b"");
+        assert_eq!(roundtrip(b"hello zlib"), b"hello zlib");
+    }
+
+    #[test]
+    fn roundtrip_multi_block() {
+        // > 65535 bytes forces several stored blocks
+        let data = lcg_bytes(200_000);
+        assert_eq!(roundtrip(&data), data);
+    }
+
+    #[test]
+    fn decodes_real_zlib_fixed_huffman_stream() {
+        // zlib.compress(bytes(range(256)) * 4, 1) — fixed-Huffman blocks
+        let compressed: &[u8] = &[
+            120, 1, 99, 96, 100, 98, 102, 97, 101, 99, 231, 224, 228, 226, 230, 225, 229, 227,
+            23, 16, 20, 18, 22, 17, 21, 19, 151, 144, 148, 146, 150, 145, 149, 147, 87, 80, 84,
+            82, 86, 81, 85, 83, 215, 208, 212, 210, 214, 209, 213, 211, 55, 48, 52, 50, 54, 49,
+            53, 51, 183, 176, 180, 178, 182, 177, 181, 179, 119, 112, 116, 114, 118, 113, 117,
+            115, 247, 240, 244, 242, 246, 241, 245, 243, 15, 8, 12, 10, 14, 9, 13, 11, 143, 136,
+            140, 138, 142, 137, 141, 139, 79, 72, 76, 74, 78, 73, 77, 75, 207, 200, 204, 202,
+            206, 201, 205, 203, 47, 40, 44, 42, 46, 41, 45, 43, 175, 168, 172, 170, 174, 169,
+            173, 171, 111, 104, 108, 106, 110, 105, 109, 107, 239, 232, 236, 234, 238, 233, 237,
+            235, 159, 48, 113, 210, 228, 41, 83, 167, 77, 159, 49, 115, 214, 236, 57, 115, 231,
+            205, 95, 176, 112, 209, 226, 37, 75, 151, 45, 95, 177, 114, 213, 234, 53, 107, 215,
+            173, 223, 176, 113, 211, 230, 45, 91, 183, 109, 223, 177, 115, 215, 238, 61, 123,
+            247, 237, 63, 112, 240, 208, 225, 35, 71, 143, 29, 63, 113, 242, 212, 233, 51, 103,
+            207, 157, 191, 112, 241, 210, 229, 43, 87, 175, 93, 191, 113, 243, 214, 237, 59,
+            119, 239, 221, 127, 240, 240, 209, 227, 39, 79, 159, 61, 127, 241, 242, 213, 235,
+            55, 111, 223, 189, 255, 240, 241, 211, 231, 47, 95, 191, 125, 255, 241, 243, 215,
+            239, 63, 127, 255, 253, 103, 24, 245, 255, 104, 252, 143, 224, 244, 15, 0, 228, 201,
+            254, 16,
+        ];
+        let mut want = Vec::new();
+        for _ in 0..4 {
+            want.extend(0u8..=255);
+        }
+        let mut out = Vec::new();
+        read::ZlibDecoder::new(compressed).read_to_end(&mut out).unwrap();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn decodes_real_zlib_dynamic_huffman_stream() {
+        // zlib.compress(b"the quick brown fox jumps over the lazy dog " * 8, 6)
+        let compressed: &[u8] = &[
+            120, 156, 43, 201, 72, 85, 40, 44, 205, 76, 206, 86, 72, 42, 202, 47, 207, 83, 72,
+            203, 175, 80, 200, 42, 205, 45, 40, 86, 200, 47, 75, 45, 82, 40, 1, 74, 231, 36, 86,
+            85, 42, 164, 228, 167, 131, 57, 163, 106, 73, 83, 11, 0, 7, 191, 128, 201,
+        ];
+        let want: Vec<u8> = b"the quick brown fox jumps over the lazy dog "
+            .iter()
+            .copied()
+            .collect::<Vec<u8>>()
+            .repeat(8);
+        let mut out = Vec::new();
+        read::ZlibDecoder::new(compressed).read_to_end(&mut out).unwrap();
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn truncation_is_an_error() {
+        let mut enc = write::ZlibEncoder::new(Vec::new(), Compression::default());
+        enc.write_all(&lcg_bytes(4096)).unwrap();
+        let compressed = enc.finish().unwrap();
+        for cut in [1usize, 2, 6, compressed.len() / 2, compressed.len() - 1] {
+            let mut out = Vec::new();
+            let err = read::ZlibDecoder::new(&compressed[..cut]).read_to_end(&mut out);
+            assert!(err.is_err(), "cut at {cut} must fail");
+        }
+    }
+
+    #[test]
+    fn bitflip_is_an_error() {
+        let mut enc = write::ZlibEncoder::new(Vec::new(), Compression::default());
+        enc.write_all(&lcg_bytes(4096)).unwrap();
+        let mut compressed = enc.finish().unwrap();
+        let mid = compressed.len() / 2;
+        compressed[mid] ^= 0xFF;
+        let mut out = Vec::new();
+        assert!(read::ZlibDecoder::new(&compressed[..]).read_to_end(&mut out).is_err());
+    }
+
+    #[test]
+    fn adler32_reference_value() {
+        let data: Vec<u8> = b"the quick brown fox jumps over the lazy dog "
+            .iter()
+            .copied()
+            .collect::<Vec<u8>>()
+            .repeat(8);
+        assert_eq!(inflate::adler32(&data), 0x07bf_80c9);
+    }
+}

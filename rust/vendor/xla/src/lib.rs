@@ -1,0 +1,108 @@
+//! Stub of the `xla` PJRT bindings.
+//!
+//! The offline build environment has no XLA/PJRT shared library, so this
+//! crate provides just enough of the API surface for
+//! `pipit::runtime` to compile. [`PjRtClient::cpu`] always fails, which
+//! makes `Runtime::load` return an error and every coordinator operation
+//! take its pure-Rust engine — the behavior the analysis paths are
+//! integration-tested to be equivalent to. Replace this path dependency
+//! with the real bindings to enable the AOT HLO engines; no pipit code
+//! changes are needed.
+
+use std::fmt;
+
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+fn unavailable<T>() -> Result<T> {
+    Err(Error(
+        "PJRT runtime unavailable: built against the stub xla crate (vendor/xla); \
+         analysis falls back to the pure-Rust engines"
+            .to_string(),
+    ))
+}
+
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        unavailable()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        unavailable()
+    }
+}
+
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        unavailable()
+    }
+}
+
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        unavailable()
+    }
+}
+
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        unavailable()
+    }
+}
+
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T: Copy>(_values: &[T]) -> Literal {
+        Literal
+    }
+
+    pub fn scalar<T: Copy>(_value: T) -> Literal {
+        Literal
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        unavailable()
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_cleanly() {
+        let e = PjRtClient::cpu().err().expect("stub must fail");
+        assert!(e.to_string().contains("stub"));
+    }
+}
