@@ -12,10 +12,32 @@ use pipit::exec;
 use pipit::gen::{self, GenConfig};
 use pipit::runtime::{ops as hlo_ops, Runtime};
 use pipit::util::bench::{bench_params_from_args, Bencher};
+use pipit::util::json::{arr, num, obj, s as jstr, Json};
+
+/// Ops routed through the sharded engine, each benched as a
+/// seq1-vs-sharded4 pair below. The CI bench gate (`--gate`) fails when
+/// any pair regresses below 1.0x.
+const ROUTED: &[&str] = &[
+    "flat_profile",
+    "comm_matrix",
+    "time_profile",
+    "load_imbalance",
+    "idle_time",
+    "comm_over_time",
+    "message_histogram",
+    "create_cct",
+];
 
 fn main() -> anyhow::Result<()> {
     let (warmup, iters) = bench_params_from_args();
-    let quick = std::env::args().any(|a| a == "--quick");
+    let argv: Vec<String> = std::env::args().collect();
+    let quick = argv.iter().any(|a| a == "--quick");
+    let gate = argv.iter().any(|a| a == "--gate");
+    let json_path = argv
+        .iter()
+        .position(|a| a == "--json")
+        .and_then(|i| argv.get(i + 1))
+        .cloned();
     let mut b = Bencher::new(warmup, iters);
 
     let gen_iters = if quick { 10 } else { 40 };
@@ -100,8 +122,10 @@ fn main() -> anyhow::Result<()> {
     // for at least flat_profile and comm_matrix. Both sides run through
     // exec::ops so copy/recompute overheads are symmetric: at 1 thread it
     // clones once and runs the sequential engine; at 4 it copies the same
-    // rows as shards and merges.
-    let laghos8 = gen::generate("laghos", &GenConfig::new(8, gen_iters * 3), 1)?;
+    // rows as shards and merges. The trace is sized so every routed op's
+    // scan dwarfs pool-spawn overhead — the gate below must not flake on
+    // the cheap single-pass ops (message_histogram, comm_over_time).
+    let laghos8 = gen::generate("laghos", &GenConfig::new(8, gen_iters * 8), 1)?;
     eprintln!(
         "\n=== sharded execution: 1 vs 4 worker threads (laghos-8p, {} events) ===",
         laghos8.len()
@@ -136,13 +160,62 @@ fn main() -> anyhow::Result<()> {
     b.run("idle_time/sharded4/laghos8", || {
         exec::ops::idle_time(&laghos8, None, 4).unwrap()
     });
-    for op in ["flat_profile", "comm_matrix", "time_profile", "load_imbalance", "idle_time"] {
-        if let Some(s) = b.speedup(
-            &format!("{op}/seq1/laghos8"),
-            &format!("{op}/sharded4/laghos8"),
-        ) {
-            eprintln!("  speedup {op:<16} {s:>6.2}x at 4 threads");
+    b.run("comm_over_time/seq1/laghos8", || {
+        exec::ops::comm_over_time(&laghos8, 64, 1).unwrap()
+    });
+    b.run("comm_over_time/sharded4/laghos8", || {
+        exec::ops::comm_over_time(&laghos8, 64, 4).unwrap()
+    });
+    b.run("message_histogram/seq1/laghos8", || {
+        exec::ops::message_histogram(&laghos8, 10, 1).unwrap()
+    });
+    b.run("message_histogram/sharded4/laghos8", || {
+        exec::ops::message_histogram(&laghos8, 10, 4).unwrap()
+    });
+    b.run("create_cct/seq1/laghos8", || {
+        exec::ops::create_cct(&laghos8, 1).unwrap()
+    });
+    b.run("create_cct/sharded4/laghos8", || {
+        exec::ops::create_cct(&laghos8, 4).unwrap()
+    });
+
+    // Per-op speedups, the BENCH_PR.json rows, and the perf-trajectory
+    // gate: sharded@4 must never lose to sequential on a routed op. A
+    // small noise margin keeps median-of-5 on shared CI runners from
+    // flaking the gate; genuine regressions land far below it. An op
+    // with missing/degenerate samples is itself a gate failure — the
+    // gate must not silently narrow its coverage.
+    const GATE_MIN_SPEEDUP: f64 = 0.95;
+    let mut rows: Vec<Json> = Vec::new();
+    let mut regressions: Vec<String> = Vec::new();
+    for &op in ROUTED {
+        let seq_name = format!("{op}/seq1/laghos8");
+        let sh_name = format!("{op}/sharded4/laghos8");
+        let Some(s) = b.speedup(&seq_name, &sh_name) else {
+            regressions.push(format!("{op} (no sample)"));
+            continue;
+        };
+        eprintln!("  speedup {op:<20} {s:>6.2}x at 4 threads");
+        let median = |name: &str| {
+            b.samples
+                .iter()
+                .find(|x| x.name == name)
+                .map(|x| x.median())
+                .unwrap_or(f64::NAN)
+        };
+        rows.push(obj(vec![
+            ("op", jstr(op)),
+            ("seq_median_ns", num(median(&seq_name))),
+            ("sharded4_median_ns", num(median(&sh_name))),
+            ("speedup", num(s)),
+        ]));
+        if s < GATE_MIN_SPEEDUP {
+            regressions.push(format!("{op} ({s:.2}x)"));
         }
+    }
+    if let Some(p) = &json_path {
+        std::fs::write(p, arr(rows).dumps())?;
+        eprintln!("wrote {p}");
     }
 
     // ---- kernel-backed ops: Rust engine vs AOT HLO via PJRT ---------------
@@ -174,5 +247,13 @@ fn main() -> anyhow::Result<()> {
     }
 
     println!("{}", b.csv());
+    if gate && !regressions.is_empty() {
+        eprintln!(
+            "BENCH GATE FAILED: sharded@4 below {GATE_MIN_SPEEDUP}x of sequential \
+             (or unsampled) for: {}",
+            regressions.join(", ")
+        );
+        std::process::exit(1);
+    }
     Ok(())
 }

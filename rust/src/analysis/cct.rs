@@ -12,7 +12,7 @@ use anyhow::Result;
 use std::collections::HashMap;
 
 /// One node of the unified CCT.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CctNode {
     pub id: usize,
     pub parent: Option<usize>,
@@ -29,7 +29,7 @@ pub struct CctNode {
 }
 
 /// The unified calling-context tree.
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct Cct {
     pub nodes: Vec<CctNode>,
     pub roots: Vec<usize>,
@@ -178,6 +178,79 @@ pub fn create_cct(trace: &mut Trace) -> Result<Cct> {
     Ok(cct)
 }
 
+/// Merge partial CCTs built over process-aligned shards into the unified
+/// tree, preserving the sequential first-seen node-id order.
+///
+/// Why this is bit-identical to [`create_cct`] over the whole trace:
+/// within a shard, node ids are assigned in first-seen row order and a
+/// node's parent is always created before it (`parent id < node id`), so
+/// walking a partial's nodes in id order replays its key discoveries in
+/// row order. Merging partials in shard order (= global row order)
+/// therefore discovers every (parent-path, name) key in exactly the
+/// order the sequential pass does — same ids, same children order, same
+/// root order. Accumulated times are integer-valued nanosecond f64 sums
+/// (exact, associative below 2^53) and per-process entries never
+/// straddle shards (shards are process-aligned).
+#[derive(Default)]
+pub(crate) struct CctMerger {
+    cct: Cct,
+    /// (global parent id or usize::MAX for roots, name) -> global id.
+    index: HashMap<(usize, String), usize>,
+}
+
+impl CctMerger {
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    /// Fold one shard's partial tree in; returns the shard-local → global
+    /// node-id mapping (used to remap `_cct_node` columns).
+    pub(crate) fn merge(&mut self, part: &Cct) -> Vec<usize> {
+        let mut map = Vec::with_capacity(part.nodes.len());
+        for node in &part.nodes {
+            let gparent = node.parent.map(|p| map[p]);
+            let key = (gparent.unwrap_or(usize::MAX), node.name.clone());
+            let gid = match self.index.get(&key) {
+                Some(&g) => {
+                    let gn = &mut self.cct.nodes[g];
+                    gn.count += node.count;
+                    gn.time_inc += node.time_inc;
+                    gn.time_exc += node.time_exc;
+                    for (&p, &v) in &node.time_inc_by_proc {
+                        *gn.time_inc_by_proc.entry(p).or_insert(0.0) += v;
+                    }
+                    g
+                }
+                None => {
+                    let g = self.cct.nodes.len();
+                    self.index.insert(key, g);
+                    self.cct.nodes.push(CctNode {
+                        id: g,
+                        parent: gparent,
+                        name: node.name.clone(),
+                        children: Vec::new(),
+                        count: node.count,
+                        time_inc: node.time_inc,
+                        time_exc: node.time_exc,
+                        time_inc_by_proc: node.time_inc_by_proc.clone(),
+                    });
+                    match gparent {
+                        Some(p) => self.cct.nodes[p].children.push(g),
+                        None => self.cct.roots.push(g),
+                    }
+                    g
+                }
+            };
+            map.push(gid);
+        }
+        map
+    }
+
+    pub(crate) fn finish(self) -> Cct {
+        self.cct
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -248,6 +321,22 @@ mod tests {
         // proc 0 waits 10ns, proc 1 waits 20ns -> max/mean = 20/15
         let imb = cct.cross_process_imbalance(wait.id);
         assert!((imb - 20.0 / 15.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merging_per_process_partials_equals_whole_trace_cct() {
+        let mut whole = two_proc();
+        let want = create_cct(&mut whole).unwrap();
+        let mut merger = CctMerger::new();
+        for p in 0..2 {
+            let mut sub = whole
+                .filter(&crate::df::Expr::process_eq(p))
+                .unwrap();
+            let part = create_cct(&mut sub).unwrap();
+            let map = merger.merge(&part);
+            assert_eq!(map.len(), part.nodes.len());
+        }
+        assert_eq!(merger.finish(), want);
     }
 
     #[test]

@@ -266,6 +266,119 @@ pub fn message_histogram(trace: &Trace, bins: usize) -> Result<(Vec<u64>, Vec<f6
     Ok((counts, edges))
 }
 
+/// Per-range message-size extrema — pass 1 of the sharded
+/// [`crate::exec::ops::message_histogram`]. Tracks the max clamped size
+/// of send and recv records separately (-1 when none seen) plus the
+/// send-record flag driving the recv-only fallback, exactly mirroring
+/// `messages`.
+pub(crate) struct SizeScan {
+    pub(crate) max_send: i64,
+    pub(crate) max_recv: i64,
+    pub(crate) saw_send: bool,
+}
+
+pub(crate) fn size_extrema_range(trace: &Trace, range: (usize, usize)) -> Result<SizeScan> {
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let pa = trace.events.i64s(COL_PARTNER)?;
+    let ms = trace.events.i64s(COL_MSG_SIZE)?;
+    let send = ndict.code_of(SEND_EVENT).unwrap_or(crate::df::NULL_CODE);
+    let recv = ndict.code_of(RECV_EVENT).unwrap_or(crate::df::NULL_CODE);
+    let mut scan = SizeScan { max_send: -1, max_recv: -1, saw_send: false };
+    for i in range.0..range.1 {
+        if pa[i] == NULL_I64 {
+            continue;
+        }
+        if nm[i] == send {
+            scan.max_send = scan.max_send.max(ms[i].max(0));
+            scan.saw_send = true;
+        } else if nm[i] == recv {
+            scan.max_recv = scan.max_recv.max(ms[i].max(0));
+        }
+    }
+    Ok(scan)
+}
+
+/// Per-range histogram counts — pass 2 of the sharded
+/// `message_histogram`. `width` comes from the merged pass-1 max, so
+/// every range bins with the sequential formula; u64 counts merge
+/// exactly in any order.
+pub(crate) fn histogram_counts_range(
+    trace: &Trace,
+    range: (usize, usize),
+    dir: MsgDir,
+    width: f64,
+    bins: usize,
+) -> Result<Vec<u64>> {
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let pa = trace.events.i64s(COL_PARTNER)?;
+    let ms = trace.events.i64s(COL_MSG_SIZE)?;
+    let wanted = match dir {
+        MsgDir::Send => ndict.code_of(SEND_EVENT),
+        MsgDir::Recv => ndict.code_of(RECV_EVENT),
+    }
+    .unwrap_or(crate::df::NULL_CODE);
+    let mut counts = vec![0u64; bins];
+    for i in range.0..range.1 {
+        if nm[i] != wanted || pa[i] == NULL_I64 {
+            continue;
+        }
+        let s = ms[i].max(0);
+        let b = ((s as f64 / width) as usize).min(bins - 1);
+        counts[b] += 1;
+    }
+    Ok(counts)
+}
+
+/// Distinct message size → occurrence count.
+pub(crate) type SizeCounts = std::collections::HashMap<i64, u64>;
+
+/// Per-shard message-size counts for the streaming path: distinct size →
+/// occurrence count, for send and recv records separately, plus the
+/// send-record flag. Single pass, O(distinct sizes) memory — the
+/// compact partial that lets a consumed shard still contribute to a
+/// histogram whose bin width is only known at end of stream.
+pub(crate) fn shard_size_counts(trace: &Trace) -> Result<(SizeCounts, SizeCounts, bool)> {
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let pa = trace.events.i64s(COL_PARTNER)?;
+    let ms = trace.events.i64s(COL_MSG_SIZE)?;
+    let send = ndict.code_of(SEND_EVENT).unwrap_or(crate::df::NULL_CODE);
+    let recv = ndict.code_of(RECV_EVENT).unwrap_or(crate::df::NULL_CODE);
+    let mut sends = std::collections::HashMap::new();
+    let mut recvs = std::collections::HashMap::new();
+    let mut saw_send = false;
+    for i in 0..trace.len() {
+        if pa[i] == NULL_I64 {
+            continue;
+        }
+        if nm[i] == send {
+            *sends.entry(ms[i].max(0)).or_insert(0u64) += 1;
+            saw_send = true;
+        } else if nm[i] == recv {
+            *recvs.entry(ms[i].max(0)).or_insert(0u64) += 1;
+        }
+    }
+    Ok((sends, recvs, saw_send))
+}
+
+/// Histogram a size→count map with the sequential binning formula.
+/// Identical output to [`message_histogram`] on the same message set:
+/// the max, width, per-size bin index, and edge values are computed with
+/// the same expressions, and u64 count addition is order-free.
+pub(crate) fn histogram_from_counts(
+    counts_by_size: &SizeCounts,
+    bins: usize,
+) -> (Vec<u64>, Vec<f64>) {
+    let max = counts_by_size.keys().copied().max().unwrap_or(0).max(1) as f64;
+    let width = max / bins as f64;
+    let mut counts = vec![0u64; bins];
+    for (&s, &c) in counts_by_size {
+        let b = ((s as f64 / width) as usize).min(bins - 1);
+        counts[b] += c;
+    }
+    let edges = (0..=bins).map(|b| b as f64 * width).collect();
+    (counts, edges)
+}
+
 /// `comm_by_process`: (sent, received) volume per process (paper Fig. 6).
 pub fn comm_by_process(trace: &Trace, unit: CommUnit) -> Result<Vec<(i64, f64, f64)>> {
     let m = comm_matrix(trace, unit)?;
@@ -286,23 +399,98 @@ pub fn comm_over_time(trace: &Trace, bins: usize) -> Result<(Vec<u64>, Vec<f64>,
     let (t0, t1) = trace.time_range()?;
     let span = (t1 - t0).max(1) as f64;
     let width = span / bins as f64;
+    let (counts, volume) = comm_over_time_range(trace, bins, t0, width, (0, trace.len()))?;
+    let edges = (0..=bins)
+        .map(|b| t0 + (b as f64 * width).round() as i64)
+        .collect();
+    Ok((counts, volume, edges))
+}
+
+/// Bin the send events of rows `[range.0, range.1)` into the full bin
+/// axis — the per-chunk unit of work shared by the sequential path above
+/// and [`crate::exec::ops::comm_over_time`]. Counts are u64 and volumes
+/// integer-valued byte sums, so merging chunk results cell-wise in chunk
+/// order is exact.
+pub(crate) fn comm_over_time_range(
+    trace: &Trace,
+    bins: usize,
+    t0: i64,
+    width: f64,
+    range: (usize, usize),
+) -> Result<(Vec<u64>, Vec<f64>)> {
     let (nm, ndict) = trace.events.strs(COL_NAME)?;
     let ts = trace.events.i64s(COL_TS)?;
     let ms = trace.events.i64s(COL_MSG_SIZE)?;
     let send = ndict.code_of(SEND_EVENT);
     let mut counts = vec![0u64; bins];
     let mut volume = vec![0.0f64; bins];
-    for i in 0..trace.len() {
+    for i in range.0..range.1 {
         if Some(nm[i]) == send {
             let b = (((ts[i] - t0) as f64 / width) as usize).min(bins - 1);
             counts[b] += 1;
             volume[b] += ms[i].max(0) as f64;
         }
     }
-    let edges = (0..=bins)
-        .map(|b| t0 + (b as f64 * width).round() as i64)
-        .collect();
-    Ok((counts, volume, edges))
+    Ok((counts, volume))
+}
+
+/// Per-shard send timestamps and sizes for the streaming
+/// `comm_over_time`: the compact partial retained after a shard is
+/// dropped (the global time span — and so the bin width — is only known
+/// at end of stream). Entries are appended in row order, so the final
+/// binning folds contributions in the sequential order.
+pub(crate) fn shard_send_events(trace: &Trace) -> Result<Vec<(i64, i64)>> {
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let ts = trace.events.i64s(COL_TS)?;
+    let ms = trace.events.i64s(COL_MSG_SIZE)?;
+    let send = ndict.code_of(SEND_EVENT);
+    let mut out = Vec::new();
+    for i in 0..trace.len() {
+        if Some(nm[i]) == send {
+            out.push((ts[i], ms[i]));
+        }
+    }
+    Ok(out)
+}
+
+/// Per-shard comm-matrix cells for the streaming path: (sender,
+/// receiver) → accumulated weight for one direction's records. The dense
+/// matrix is only assembled at end of stream, once the global process
+/// set is known — cells with an endpoint outside it drop there, exactly
+/// as the sequential `slot()` lookup drops them per row (a cell exists
+/// iff at least one record would have landed, which also decides the
+/// recv-only fallback). Integer-valued cell sums merge exactly in any
+/// order.
+pub(crate) fn shard_comm_cells(
+    trace: &Trace,
+    unit: CommUnit,
+    dir: MsgDir,
+) -> Result<std::collections::HashMap<(i64, i64), f64>> {
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let pa = trace.events.i64s(COL_PARTNER)?;
+    let ms = trace.events.i64s(COL_MSG_SIZE)?;
+    let wanted = match dir {
+        MsgDir::Send => ndict.code_of(SEND_EVENT),
+        MsgDir::Recv => ndict.code_of(RECV_EVENT),
+    }
+    .unwrap_or(crate::df::NULL_CODE);
+    let mut cells: std::collections::HashMap<(i64, i64), f64> = std::collections::HashMap::new();
+    for i in 0..trace.len() {
+        if nm[i] != wanted || pa[i] == NULL_I64 {
+            continue;
+        }
+        let (from, to) = match dir {
+            MsgDir::Send => (pr[i], pa[i]),
+            MsgDir::Recv => (pa[i], pr[i]),
+        };
+        let w = match unit {
+            CommUnit::Count => 1.0,
+            CommUnit::Bytes => ms[i].max(0) as f64,
+        };
+        *cells.entry((from, to)).or_insert(0.0) += w;
+    }
+    Ok(cells)
 }
 
 #[cfg(test)]

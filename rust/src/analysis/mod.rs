@@ -39,7 +39,9 @@ pub mod pattern;
 pub mod time_profile;
 
 pub use cct::{create_cct, Cct};
-pub use comm::{comm_by_process, comm_matrix, comm_over_time, message_histogram, CommMatrix, CommUnit};
+pub use comm::{
+    comm_by_process, comm_matrix, comm_over_time, message_histogram, CommMatrix, CommUnit,
+};
 pub use critical_path::{critical_path_analysis, CriticalPath};
 pub use flat_profile::{flat_profile, flat_profile_by_process, Metric, ProfileRow};
 pub use idle_time::{idle_outliers, idle_time, IdleRow};

@@ -61,15 +61,37 @@ pub fn multi_run_analysis(
         profiles.push(flat_profile(t, metric)?);
         labels.push(t.num_processes()?.to_string());
     }
-    // union of each run's top-k functions, ranked by total across runs
-    let mut totals: HashMap<&str, f64> = HashMap::new();
+    Ok(align_profiles(profiles, labels, metric, top_k))
+}
+
+/// Align per-run flat profiles on the union of each run's `top_k`
+/// functions — the deterministic reduction shared by
+/// [`multi_run_analysis`] and the batch entry point
+/// (`AnalysisSession::run_batch`), so batch results are identical to
+/// per-trace sequential runs. Functions enter the union in (run order,
+/// rank order) and the final sort is stable, so ties resolve the same
+/// way every time.
+pub(crate) fn align_profiles(
+    profiles: Vec<Vec<super::flat_profile::ProfileRow>>,
+    labels: Vec<String>,
+    metric: Metric,
+    top_k: usize,
+) -> MultiRun {
+    // union of each run's top-k functions in first-seen order, ranked by
+    // total across runs
+    let mut index: HashMap<String, usize> = HashMap::new();
+    let mut funcs: Vec<(String, f64)> = Vec::new();
     for p in &profiles {
         for row in p.iter().take(top_k) {
-            *totals.entry(row.name.as_str()).or_insert(0.0) += row.value;
+            match index.get(row.name.as_str()) {
+                Some(&slot) => funcs[slot].1 += row.value,
+                None => {
+                    index.insert(row.name.clone(), funcs.len());
+                    funcs.push((row.name.clone(), row.value));
+                }
+            }
         }
     }
-    let mut funcs: Vec<(String, f64)> =
-        totals.into_iter().map(|(k, v)| (k.to_string(), v)).collect();
     funcs.sort_by(|a, b| b.1.total_cmp(&a.1));
     let func_names: Vec<String> = funcs.into_iter().map(|(n, _)| n).collect();
 
@@ -84,7 +106,7 @@ pub fn multi_run_analysis(
                 .collect()
         })
         .collect();
-    Ok(MultiRun { run_labels: labels, func_names, values, metric })
+    MultiRun { run_labels: labels, func_names, values, metric }
 }
 
 #[cfg(test)]

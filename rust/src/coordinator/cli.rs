@@ -90,7 +90,10 @@ USAGE:
   pipit generate --app <model> [--ranks N] [--iterations N] [--seed S]
                  [--variant V] [--format otf2|csv|chrome|projections] --out <path>
   pipit analyze <op> --trace <path> [--metric exc|inc|count] [--bins N]
-                 [--top N] [--start-event NAME] [--threads N] [--out <file>]
+                 [--top N] [--start-event NAME] [--threads N] [--stream]
+                 [--out <file>]
+  pipit analyze multi_run --batch <p1,p2,...> [--metric exc|inc|count]
+                 [--top N] [--threads N] [--out <file>]
   pipit pipeline <spec.json> [--out-dir <dir>] [--artifacts <dir>] [--threads N]
   pipit report --trace <path> [--min-waste F] [--imbalance-threshold F]
   pipit info --trace <path>
@@ -101,16 +104,33 @@ OPS:     flat_profile time_profile comm_matrix message_histogram
          idle_time pattern_detection critical_path lateness cct
 
 SCALING:
-  Hot analyses (flat_profile, time_profile, comm_matrix, load_imbalance,
-  idle_time, filter) run sharded across a worker pool: the trace splits
-  into contiguous process-aligned shards and per-shard results merge
-  order-stably, so output is bit-identical to the sequential engines at
-  any thread count.
+  Hot analyses (flat_profile, time_profile, comm_matrix, message_histogram,
+  comm_over_time, load_imbalance, idle_time, cct, filter) run sharded
+  across a worker pool: the trace splits into contiguous process-aligned
+  shards and per-shard results merge order-stably, so output is
+  bit-identical to the sequential engines at any thread count.
     --threads 0   use all available cores (default)
     --threads 1   force the sequential engines
     --threads N   use N worker threads
   The default can also be set with the NUM_THREADS environment variable.
   A pipeline spec may carry a top-level \"threads\" key instead.
+
+  --stream ingests the trace shard-at-a-time through the ShardedReader
+  layer instead of materializing it: process-aligned shards decode
+  incrementally and feed the same pool, bounding peak memory by
+  O(workers x shard + results). otf2 and csv stream from disk (one rank
+  file / one process block at a time); chrome scans its raw text one
+  event object at a time (the file bytes stay resident, the JSON tree
+  and row set never exist); non-streamable sources (hpctoolkit,
+  projections, interleaved files) fall back to an eager load kept
+  in-memory. Results stay bit-identical to eager loading. In a pipeline
+  spec, put \"stream\": true on a \"load\" step.
+
+  --batch runs the paper's multirun scaling comparison as one job:
+  every trace streams through a flat-profile ingest scheduled over the
+  shared pool (traces are the unit of parallelism), and the aligned
+  comparison table is identical to per-trace sequential runs. In a
+  pipeline spec, use {\"op\": \"batch\", \"paths\": [...]}.
 ";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
@@ -168,14 +188,44 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         .first()
         .context("analyze requires an operation name")?
         .clone();
-    let path = args.str("trace").context("--trace is required")?;
     let mut s = AnalysisSession::new();
     let threads = args.usize("threads", s.num_threads)?;
     s = s.with_threads(threads);
     if let Some(dir) = args.str("artifacts") {
         s = s.with_artifacts(dir);
     }
-    s.load("t", path)?;
+    if let Some(batch) = args.str("batch") {
+        if op != "multi_run" {
+            bail!("--batch drives the multi_run op (got '{op}')");
+        }
+        let paths: Vec<std::path::PathBuf> = batch
+            .split(',')
+            .filter(|p| !p.is_empty())
+            .map(std::path::PathBuf::from)
+            .collect();
+        if paths.is_empty() {
+            bail!("--batch needs a comma-separated list of trace paths");
+        }
+        let mr = s.run_batch(&paths, args.metric()?, args.usize("top", 8)?)?;
+        let table = mr.show();
+        println!(
+            "multi_run: {} runs x {} funcs (streamed over the pool)",
+            mr.run_labels.len(),
+            mr.func_names.len()
+        );
+        print!("{table}");
+        if let Some(o) = args.str("out") {
+            std::fs::write(o, &table).with_context(|| format!("writing {o}"))?;
+            println!("  -> {o}");
+        }
+        return Ok(());
+    }
+    let path = args.str("trace").context("--trace is required")?;
+    if args.str("stream").is_some() {
+        s.load_streamed("t", path)?;
+    } else {
+        s.load("t", path)?;
+    }
     // Reuse the pipeline executor: build a one-step spec.
     let mut fields = vec![
         format!("\"op\": \"{op}\""),
@@ -317,6 +367,41 @@ mod tests {
         )))
         .unwrap();
         assert!(dir.join("cm.csv").exists());
+    }
+
+    #[test]
+    fn analyze_streamed_and_batch() {
+        let dir = std::env::temp_dir().join("pipit_cli_test3");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let a = dir.join("a_otf2");
+        let b = dir.join("b_otf2");
+        for (ranks, out) in [(4usize, &a), (8, &b)] {
+            run(&argv(&format!(
+                "generate --app laghos --ranks {ranks} --iterations 3 --out {}",
+                out.display()
+            )))
+            .unwrap();
+        }
+        run(&argv(&format!(
+            "analyze flat_profile --trace {} --stream --out-dir {} --out fp.csv",
+            a.display(),
+            dir.display()
+        )))
+        .unwrap();
+        assert!(dir.join("fp.csv").exists());
+        let mr = dir.join("mr.txt");
+        run(&argv(&format!(
+            "analyze multi_run --batch {},{} --metric exc --top 5 --out {}",
+            a.display(),
+            b.display(),
+            mr.display()
+        )))
+        .unwrap();
+        let out = std::fs::read_to_string(&mr).unwrap();
+        assert!(out.contains('4') && out.contains('8'), "{out}");
+        // --batch only drives multi_run
+        assert!(run(&argv(&format!("analyze flat_profile --batch {}", a.display()))).is_err());
     }
 
     #[test]

@@ -98,8 +98,37 @@ impl Pipeline {
         match op {
             "load" => {
                 let path = step.get_str("path").context("'load' needs 'path'")?;
-                s.load(trace()?, path)?;
-                emit(format!("loaded {} <- {path}", trace()?), None)
+                if step.get("stream").and_then(|v| v.as_bool()).unwrap_or(false) {
+                    s.load_streamed(trace()?, path)?;
+                    emit(format!("streaming {} <- {path}", trace()?), None)
+                } else {
+                    s.load(trace()?, path)?;
+                    emit(format!("loaded {} <- {path}", trace()?), None)
+                }
+            }
+            "batch" => {
+                let paths: Vec<PathBuf> = step
+                    .get("paths")
+                    .and_then(|v| v.as_arr())
+                    .context("'batch' needs 'paths' array")?
+                    .iter()
+                    .filter_map(|j| j.as_str())
+                    .map(PathBuf::from)
+                    .collect();
+                if paths.is_empty() {
+                    bail!("'batch' needs at least one path");
+                }
+                let metric = parse_metric(step)?;
+                let top = step.get_f64("top").unwrap_or(8.0) as usize;
+                let mr = s.run_batch(&paths, metric, top)?;
+                emit(
+                    format!(
+                        "{} runs x {} funcs (streamed over the pool)",
+                        mr.run_labels.len(),
+                        mr.func_names.len()
+                    ),
+                    Some(mr.show()),
+                )
             }
             "generate" => {
                 let app = step.get_str("app").context("'generate' needs 'app'")?;
@@ -117,7 +146,8 @@ impl Pipeline {
             "write" => {
                 let path = step.get_str("path").context("'write' needs 'path'")?;
                 let format = step.get_str("format").unwrap_or("otf2");
-                let t = s.get(trace()?)?;
+                // get_mut so stream-backed sources materialize for the writer
+                let t = &*s.get_mut(trace()?)?;
                 let p = self.out_dir.join(path);
                 match format {
                     "otf2" => crate::readers::otf2::write(t, &p)?,
@@ -443,6 +473,43 @@ mod tests {
         p.run(&mut s).unwrap();
         let reloaded = crate::trace::Trace::from_otf2(dir.join("amg_otf2")).unwrap();
         assert_eq!(reloaded.len(), s.get("t").unwrap().len());
+    }
+
+    #[test]
+    fn streamed_load_and_batch_steps() {
+        let dir = tmp("stream_batch");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut gen_s = AnalysisSession::new();
+        gen_s
+            .generate("a", "laghos", &crate::gen::GenConfig::new(4, 3), 1)
+            .unwrap();
+        crate::readers::otf2::write(gen_s.get("a").unwrap(), &dir.join("a_otf2")).unwrap();
+        gen_s
+            .generate("b", "laghos", &crate::gen::GenConfig::new(8, 3), 1)
+            .unwrap();
+        crate::readers::otf2::write(gen_s.get("b").unwrap(), &dir.join("b_otf2")).unwrap();
+
+        let spec = format!(
+            r#"{{ "steps": [
+                {{"op": "load", "trace": "t", "path": "{a}", "stream": true}},
+                {{"op": "flat_profile", "trace": "t", "metric": "exc", "out": "fp.csv"}},
+                {{"op": "batch", "paths": ["{a}", "{b}"], "metric": "exc", "top": 5, "out": "mr.txt"}}
+            ]}}"#,
+            a = dir.join("a_otf2").display(),
+            b = dir.join("b_otf2").display(),
+        );
+        let p = Pipeline::parse(&spec, &dir).unwrap();
+        let mut s = AnalysisSession::new();
+        let results = p.run(&mut s).unwrap();
+        assert_eq!(results.len(), 3);
+        assert!(results[0].summary.starts_with("streaming"));
+        assert!(dir.join("fp.csv").exists());
+        // the streamed flat_profile must have gone shard-at-a-time
+        let stats = s.last_stream_stats.unwrap();
+        assert_eq!(stats.shards, 4);
+        assert!(stats.max_shard_rows < stats.total_rows);
+        let mr = std::fs::read_to_string(dir.join("mr.txt")).unwrap();
+        assert!(mr.contains("ForceMult"), "{mr}");
     }
 
     #[test]

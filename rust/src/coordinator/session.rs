@@ -2,12 +2,23 @@
 
 use crate::analysis::{self, Metric};
 use crate::df::Expr;
+use crate::exec::stream::StreamStats;
 use crate::gen::GenConfig;
 use crate::runtime::{ops as hlo_ops, Runtime};
 use crate::trace::Trace;
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
-use std::path::Path;
+use std::path::{Path, PathBuf};
+
+/// How a session entry is backed.
+enum TraceSource {
+    /// Fully materialized events table.
+    Memory(Trace),
+    /// Stream-backed: routed analyses re-open the source and ingest it
+    /// shard-at-a-time ([`crate::exec::stream`]), so the whole trace is
+    /// never resident; non-routed operations materialize on demand.
+    Streamed(PathBuf),
+}
 
 /// A named collection of traces plus an optional PJRT runtime.
 ///
@@ -20,13 +31,23 @@ use std::path::Path;
 /// in [`crate::exec`] when `num_threads != 1`; sharded and sequential
 /// results are bit-identical (see `tests/parity.rs`), so the parallel
 /// path is preferred by default.
+///
+/// Entries added with [`AnalysisSession::load_streamed`] never
+/// materialize for the routed analyses: each call re-opens the source
+/// and feeds the worker pool shard-at-a-time with peak memory bounded
+/// per shard, with results bit-identical to the eager path
+/// (`tests/parity.rs` again). [`AnalysisSession::run_batch`] schedules
+/// many such ingests over the same pool for multi-trace comparisons.
 pub struct AnalysisSession {
-    pub traces: HashMap<String, Trace>,
+    sources: HashMap<String, TraceSource>,
     pub runtime: Option<Runtime>,
     /// Worker threads for sharded analyses: 0 = available parallelism,
     /// 1 = the sequential engines. Defaults to the `NUM_THREADS`
     /// environment variable, else 0.
     pub num_threads: usize,
+    /// Ingest instrumentation from the most recent streamed analysis
+    /// (shard count vs rows — the memory-bound hook tests assert on).
+    pub last_stream_stats: Option<StreamStats>,
 }
 
 impl Default for AnalysisSession {
@@ -38,9 +59,10 @@ impl Default for AnalysisSession {
 impl AnalysisSession {
     pub fn new() -> Self {
         AnalysisSession {
-            traces: HashMap::new(),
+            sources: HashMap::new(),
             runtime: None,
             num_threads: crate::exec::default_threads(),
+            last_stream_stats: None,
         }
     }
 
@@ -56,6 +78,22 @@ impl AnalysisSession {
         crate::exec::effective_threads(self.num_threads)
     }
 
+    /// The in-memory trace behind `name`, if it is memory-backed.
+    fn memory(&self, name: &str) -> Option<&Trace> {
+        match self.sources.get(name) {
+            Some(TraceSource::Memory(t)) => Some(t),
+            _ => None,
+        }
+    }
+
+    /// The source path behind `name`, if it is stream-backed.
+    fn stream_path(&self, name: &str) -> Option<PathBuf> {
+        match self.sources.get(name) {
+            Some(TraceSource::Streamed(p)) => Some(p.clone()),
+            _ => None,
+        }
+    }
+
     /// Route `name` through the sharded engine? Only when there is real
     /// parallelism to exploit — single-process traces stay on the
     /// in-place sequential path, which caches derived metrics on the
@@ -63,8 +101,7 @@ impl AnalysisSession {
     fn sharded(&self, name: &str, threads: usize) -> bool {
         threads > 1
             && self
-                .traces
-                .get(name)
+                .memory(name)
                 .and_then(|t| t.num_processes().ok())
                 .map_or(false, |n| n > 1)
     }
@@ -82,13 +119,35 @@ impl AnalysisSession {
     }
 
     pub fn insert(&mut self, name: &str, trace: Trace) {
-        self.traces.insert(name.to_string(), trace);
+        self.sources.insert(name.to_string(), TraceSource::Memory(trace));
     }
 
-    /// Load a trace from disk with format auto-detection.
+    /// Load a trace from disk with format auto-detection, fully
+    /// materialized.
     pub fn load(&mut self, name: &str, path: impl AsRef<Path>) -> Result<()> {
         let t = crate::readers::read_auto(path.as_ref())?;
         self.insert(name, t);
+        Ok(())
+    }
+
+    /// Register `path` as a stream-backed trace: routed analyses ingest
+    /// it shard-at-a-time instead of materializing it. The source is
+    /// opened once up front so format errors surface here. Sources that
+    /// cannot stream (hpctoolkit / projections / interleaved csv or
+    /// chrome) were necessarily loaded eagerly by that probe, so their
+    /// trace is kept memory-backed instead of being re-read on every
+    /// analysis.
+    pub fn load_streamed(&mut self, name: &str, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        let reader = crate::readers::streaming::open_sharded(path)?;
+        if reader.is_streaming() {
+            self.sources
+                .insert(name.to_string(), TraceSource::Streamed(path.to_path_buf()));
+        } else if let Some(t) = reader.into_eager_trace() {
+            self.insert(name, t);
+        } else {
+            self.load(name, path)?;
+        }
         Ok(())
     }
 
@@ -106,18 +165,48 @@ impl AnalysisSession {
     }
 
     pub fn get(&self, name: &str) -> Result<&Trace> {
-        self.traces.get(name).ok_or_else(|| anyhow!("no trace '{name}' in session"))
+        match self.sources.get(name) {
+            Some(TraceSource::Memory(t)) => Ok(t),
+            Some(TraceSource::Streamed(p)) => Err(anyhow!(
+                "trace '{name}' is stream-backed ({}); routed analyses read it \
+                 shard-at-a-time — use get_mut to materialize it",
+                p.display()
+            )),
+            None => Err(anyhow!("no trace '{name}' in session")),
+        }
     }
 
     pub fn get_mut(&mut self, name: &str) -> Result<&mut Trace> {
-        self.traces
-            .get_mut(name)
-            .ok_or_else(|| anyhow!("no trace '{name}' in session"))
+        self.materialize(name)?;
+        match self.sources.get_mut(name) {
+            Some(TraceSource::Memory(t)) => Ok(t),
+            _ => Err(anyhow!("no trace '{name}' in session")),
+        }
+    }
+
+    /// Convert a stream-backed entry into a memory-backed one (no-op for
+    /// memory-backed entries). Used transparently by operations without a
+    /// streaming implementation.
+    fn materialize(&mut self, name: &str) -> Result<()> {
+        let path = self.stream_path(name);
+        if let Some(p) = path {
+            let t = crate::readers::read_auto(&p)?;
+            self.sources.insert(name.to_string(), TraceSource::Memory(t));
+        }
+        Ok(())
+    }
+
+    /// Open the sharded reader behind a stream-backed entry.
+    fn open_stream(&self, path: &Path) -> Result<Box<dyn crate::readers::ShardedReader>> {
+        crate::readers::streaming::open_sharded(path)
     }
 
     /// Filter a trace into a new session entry (paper §IV.E). Columns
     /// materialize on the worker pool when `num_threads != 1`.
+    /// Stream-backed sources materialize first (the result is a new
+    /// in-memory trace either way).
     pub fn filter(&mut self, src: &str, dst: &str, e: &Expr) -> Result<()> {
+        self.materialize(src)?;
         let threads = self.threads();
         let t = if threads > 1 {
             self.get(src)?.par_filter(e, threads)?
@@ -130,12 +219,23 @@ impl AnalysisSession {
 
     // -- dispatching operations -------------------------------------------
 
-    pub fn flat_profile(&mut self, name: &str, metric: Metric) -> Result<Vec<analysis::ProfileRow>> {
+    pub fn flat_profile(
+        &mut self,
+        name: &str,
+        metric: Metric,
+    ) -> Result<Vec<analysis::ProfileRow>> {
+        if let Some(path) = self.stream_path(name) {
+            let mut r = self.open_stream(&path)?;
+            let (rows, stats) =
+                crate::exec::stream::flat_profile(r.as_mut(), metric, self.num_threads)?;
+            self.last_stream_stats = Some(stats);
+            return Ok(rows);
+        }
         let threads = self.threads();
         if self.sharded(name, threads) {
             return crate::exec::ops::flat_profile(self.get(name)?, metric, threads);
         }
-        analysis::flat_profile(self.get_mut_internal(name)?, metric)
+        analysis::flat_profile(self.get_mut(name)?, metric)
     }
 
     /// Time profile; uses the AOT time-hist kernel when available and the
@@ -147,13 +247,19 @@ impl AnalysisSession {
         bins: usize,
         top: Option<usize>,
     ) -> Result<analysis::TimeProfile> {
+        if let Some(path) = self.stream_path(name) {
+            let mut r = self.open_stream(&path)?;
+            let (tp, stats) =
+                crate::exec::stream::time_profile(r.as_mut(), bins, top, self.num_threads)?;
+            self.last_stream_stats = Some(stats);
+            return Ok(tp);
+        }
         let threads = self.threads();
         let sharded = self.sharded(name, threads);
         // split borrows: take trace out, operate, put back
-        let mut trace = self
-            .traces
-            .remove(name)
-            .ok_or_else(|| anyhow!("no trace '{name}'"))?;
+        let Some(TraceSource::Memory(mut trace)) = self.sources.remove(name) else {
+            bail!("no trace '{name}' in session")
+        };
         let result = (|| {
             if let Some(rt) = &self.runtime {
                 let c = rt.contract;
@@ -166,7 +272,7 @@ impl AnalysisSession {
             }
             analysis::time_profile(&mut trace, bins, top)
         })();
-        self.traces.insert(name.to_string(), trace);
+        self.sources.insert(name.to_string(), TraceSource::Memory(trace));
         result
     }
 
@@ -186,10 +292,21 @@ impl AnalysisSession {
         start_event: Option<&str>,
         cfg: &analysis::PatternConfig,
     ) -> Result<Vec<analysis::PatternRange>> {
-        analysis::detect_pattern(self.get_mut_internal(name)?, start_event, cfg)
+        analysis::detect_pattern(self.get_mut(name)?, start_event, cfg)
     }
 
-    pub fn comm_matrix(&self, name: &str, unit: analysis::CommUnit) -> Result<analysis::CommMatrix> {
+    pub fn comm_matrix(
+        &mut self,
+        name: &str,
+        unit: analysis::CommUnit,
+    ) -> Result<analysis::CommMatrix> {
+        if let Some(path) = self.stream_path(name) {
+            let mut r = self.open_stream(&path)?;
+            let (m, stats) =
+                crate::exec::stream::comm_matrix(r.as_mut(), unit, self.num_threads)?;
+            self.last_stream_stats = Some(stats);
+            return Ok(m);
+        }
         let t = self.get(name)?;
         if let Some(rt) = &self.runtime {
             if let Ok(ids) = t.process_ids() {
@@ -209,24 +326,59 @@ impl AnalysisSession {
         analysis::comm_matrix(t, unit)
     }
 
-    pub fn message_histogram(&self, name: &str, bins: usize) -> Result<(Vec<u64>, Vec<f64>)> {
-        analysis::message_histogram(self.get(name)?, bins)
+    pub fn message_histogram(&mut self, name: &str, bins: usize) -> Result<(Vec<u64>, Vec<f64>)> {
+        if let Some(path) = self.stream_path(name) {
+            let mut r = self.open_stream(&path)?;
+            let (hist, stats) =
+                crate::exec::stream::message_histogram(r.as_mut(), bins, self.num_threads)?;
+            self.last_stream_stats = Some(stats);
+            return Ok(hist);
+        }
+        let threads = self.threads();
+        let t = self.get(name)?;
+        if threads > 1 {
+            return crate::exec::ops::message_histogram(t, bins, threads);
+        }
+        analysis::message_histogram(t, bins)
     }
 
     pub fn comm_by_process(
-        &self,
+        &mut self,
         name: &str,
         unit: analysis::CommUnit,
     ) -> Result<Vec<(i64, f64, f64)>> {
+        if let Some(path) = self.stream_path(name) {
+            let mut r = self.open_stream(&path)?;
+            let (rows, stats) =
+                crate::exec::stream::comm_by_process(r.as_mut(), unit, self.num_threads)?;
+            self.last_stream_stats = Some(stats);
+            return Ok(rows);
+        }
         analysis::comm_by_process(self.get(name)?, unit)
     }
 
-    pub fn comm_over_time(&self, name: &str, bins: usize) -> Result<(Vec<u64>, Vec<f64>, Vec<i64>)> {
-        analysis::comm_over_time(self.get(name)?, bins)
+    pub fn comm_over_time(
+        &mut self,
+        name: &str,
+        bins: usize,
+    ) -> Result<(Vec<u64>, Vec<f64>, Vec<i64>)> {
+        if let Some(path) = self.stream_path(name) {
+            let mut r = self.open_stream(&path)?;
+            let (out, stats) =
+                crate::exec::stream::comm_over_time(r.as_mut(), bins, self.num_threads)?;
+            self.last_stream_stats = Some(stats);
+            return Ok(out);
+        }
+        let threads = self.threads();
+        let t = self.get(name)?;
+        if threads > 1 {
+            return crate::exec::ops::comm_over_time(t, bins, threads);
+        }
+        analysis::comm_over_time(t, bins)
     }
 
     pub fn comm_comp_breakdown(&mut self, name: &str) -> Result<Vec<analysis::Breakdown>> {
-        analysis::comm_comp_breakdown(self.get_mut_internal(name)?, None, None)
+        analysis::comm_comp_breakdown(self.get_mut(name)?, None, None)
     }
 
     pub fn load_imbalance(
@@ -235,34 +387,65 @@ impl AnalysisSession {
         metric: Metric,
         k: usize,
     ) -> Result<Vec<analysis::ImbalanceRow>> {
+        if let Some(path) = self.stream_path(name) {
+            let mut r = self.open_stream(&path)?;
+            let (rows, stats) =
+                crate::exec::stream::load_imbalance(r.as_mut(), metric, k, self.num_threads)?;
+            self.last_stream_stats = Some(stats);
+            return Ok(rows);
+        }
         let threads = self.threads();
         if self.sharded(name, threads) {
             return crate::exec::ops::load_imbalance(self.get(name)?, metric, k, threads);
         }
-        analysis::load_imbalance(self.get_mut_internal(name)?, metric, k)
+        analysis::load_imbalance(self.get_mut(name)?, metric, k)
     }
 
     pub fn idle_time(&mut self, name: &str) -> Result<Vec<analysis::IdleRow>> {
+        if let Some(path) = self.stream_path(name) {
+            let mut r = self.open_stream(&path)?;
+            let (rows, stats) =
+                crate::exec::stream::idle_time(r.as_mut(), None, self.num_threads)?;
+            self.last_stream_stats = Some(stats);
+            return Ok(rows);
+        }
         let threads = self.threads();
         if self.sharded(name, threads) {
             return crate::exec::ops::idle_time(self.get(name)?, None, threads);
         }
-        analysis::idle_time(self.get_mut_internal(name)?, None)
+        analysis::idle_time(self.get_mut(name)?, None)
     }
 
     pub fn critical_path(&mut self, name: &str) -> Result<Vec<analysis::CriticalPath>> {
-        analysis::critical_path_analysis(self.get_mut_internal(name)?)
+        analysis::critical_path_analysis(self.get_mut(name)?)
     }
 
     pub fn lateness(&mut self, name: &str) -> Result<Vec<analysis::LogicalOp>> {
-        analysis::calculate_lateness(self.get_mut_internal(name)?)
+        analysis::calculate_lateness(self.get_mut(name)?)
     }
 
     pub fn create_cct(&mut self, name: &str) -> Result<analysis::Cct> {
-        analysis::create_cct(self.get_mut_internal(name)?)
+        if let Some(path) = self.stream_path(name) {
+            let mut r = self.open_stream(&path)?;
+            let (tree, stats) =
+                crate::exec::stream::create_cct(r.as_mut(), self.num_threads)?;
+            self.last_stream_stats = Some(stats);
+            return Ok(tree);
+        }
+        let threads = self.threads();
+        if self.sharded(name, threads) {
+            let (tree, col) = crate::exec::ops::create_cct(self.get(name)?, threads)?;
+            let t = self.get_mut(name)?;
+            if !t.events.has("_cct_node") {
+                t.events.push("_cct_node", crate::df::Column::I64(col))?;
+            }
+            return Ok(tree);
+        }
+        analysis::create_cct(self.get_mut(name)?)
     }
 
-    /// Multi-run comparison over a set of session traces.
+    /// Multi-run comparison over a set of session traces (stream-backed
+    /// entries materialize first).
     pub fn multi_run(
         &mut self,
         names: &[&str],
@@ -271,23 +454,45 @@ impl AnalysisSession {
     ) -> Result<analysis::MultiRun> {
         let mut traces = Vec::with_capacity(names.len());
         for n in names {
-            traces.push(
-                self.traces
-                    .remove(*n)
-                    .ok_or_else(|| anyhow!("no trace '{n}'"))?,
-            );
+            self.materialize(n)?;
+            match self.sources.remove(*n) {
+                Some(TraceSource::Memory(t)) => traces.push(t),
+                _ => bail!("no trace '{n}' in session"),
+            }
         }
         let result = analysis::multi_run_analysis(&mut traces, metric, top_k);
         for (n, t) in names.iter().zip(traces) {
-            self.traces.insert(n.to_string(), t);
+            self.sources.insert(n.to_string(), TraceSource::Memory(t));
         }
         result
     }
 
-    fn get_mut_internal(&mut self, name: &str) -> Result<&mut Trace> {
-        self.traces
-            .get_mut(name)
-            .with_context(|| format!("no trace '{name}' in session"))
+    /// Batch entry point: schedule one flat-profile ingest per trace over
+    /// the shared worker pool — the paper's multirun / scaling-comparison
+    /// workload (§V) as a single job. Each trace streams shard-at-a-time
+    /// (sequentially within its pool slot, so traces — not shards — are
+    /// the unit of parallelism), and the per-run profiles align with the
+    /// same deterministic reduction as [`AnalysisSession::multi_run`];
+    /// batch output is therefore identical to looping the traces through
+    /// sequential runs. Peak memory is O(pool × largest shard + results)
+    /// — no trace is ever fully resident.
+    pub fn run_batch(
+        &self,
+        paths: &[PathBuf],
+        metric: Metric,
+        top_k: usize,
+    ) -> Result<analysis::MultiRun> {
+        let runs = crate::exec::pool::run_indexed(paths.len(), self.num_threads, |i| {
+            let mut reader = crate::readers::streaming::open_sharded(&paths[i])?;
+            crate::exec::stream::flat_profile(reader.as_mut(), metric, 1)
+        })?;
+        let mut profiles = Vec::with_capacity(runs.len());
+        let mut labels = Vec::with_capacity(runs.len());
+        for (rows, stats) in runs {
+            profiles.push(rows);
+            labels.push(stats.num_processes.to_string());
+        }
+        Ok(analysis::multirun::align_profiles(profiles, labels, metric, top_k))
     }
 }
 
@@ -362,6 +567,113 @@ mod tests {
             seq.idle_time("g").unwrap(),
             par.idle_time("g").unwrap()
         );
+        assert_eq!(
+            seq.message_histogram("g", 12).unwrap(),
+            par.message_histogram("g", 12).unwrap()
+        );
+        assert_eq!(
+            seq.comm_over_time("g", 24).unwrap(),
+            par.comm_over_time("g", 24).unwrap()
+        );
+        assert_eq!(seq.create_cct("g").unwrap(), par.create_cct("g").unwrap());
+    }
+
+    #[test]
+    fn sharded_cct_sets_node_column() {
+        let mut s = AnalysisSession::new().with_threads(4);
+        s.generate("g", "amg", &GenConfig::new(6, 3), 1).unwrap();
+        let tree = s.create_cct("g").unwrap();
+        assert!(!tree.nodes.is_empty());
+        let t = s.get("g").unwrap();
+        assert!(t.events.has("_cct_node"));
+        // column must agree with the sequential construction
+        let mut seq = AnalysisSession::new().with_threads(1);
+        seq.generate("g", "amg", &GenConfig::new(6, 3), 1).unwrap();
+        let seq_tree = seq.create_cct("g").unwrap();
+        assert_eq!(tree, seq_tree);
+        assert_eq!(
+            t.events.i64s("_cct_node").unwrap(),
+            seq.get("g").unwrap().events.i64s("_cct_node").unwrap()
+        );
+    }
+
+    #[test]
+    fn streamed_entry_routes_and_instruments() {
+        let dir = std::env::temp_dir().join("pipit_session_stream");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("g_otf2");
+        let t = crate::gen::generate("laghos", &GenConfig::new(6, 3), 1).unwrap();
+        crate::readers::otf2::write(&t, &out).unwrap();
+
+        let mut eager = AnalysisSession::new().with_threads(2);
+        eager.load("g", &out).unwrap();
+        let mut streamed = AnalysisSession::new().with_threads(2);
+        streamed.load_streamed("g", &out).unwrap();
+
+        assert_eq!(
+            eager.flat_profile("g", Metric::ExcTime).unwrap(),
+            streamed.flat_profile("g", Metric::ExcTime).unwrap()
+        );
+        let stats = streamed.last_stream_stats.unwrap();
+        assert_eq!(stats.shards, 6);
+        assert_eq!(stats.total_rows, eager.get("g").unwrap().len());
+        assert!(stats.max_shard_rows < stats.total_rows);
+
+        // non-routed ops materialize transparently
+        let cp = streamed.critical_path("g").unwrap();
+        assert!(!cp[0].rows.is_empty());
+        assert!(streamed.get("g").is_ok(), "materialized after critical_path");
+    }
+
+    #[test]
+    fn load_streamed_keeps_non_streamable_sources_in_memory() {
+        // An interleaved csv cannot stream; the probe already loaded it
+        // eagerly, so the entry must be memory-backed (not re-read per
+        // analysis).
+        let dir = std::env::temp_dir().join("pipit_session_fallback");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("interleaved.csv");
+        std::fs::write(
+            &p,
+            "Timestamp (ns), Event Type, Name, Process\n\
+             0, Enter, main, 1\n\
+             0, Enter, main, 0\n\
+             9, Leave, main, 1\n\
+             9, Leave, main, 0\n",
+        )
+        .unwrap();
+        let mut s = AnalysisSession::new();
+        s.load_streamed("t", &p).unwrap();
+        assert!(s.get("t").is_ok(), "fallback entry should be memory-backed");
+        assert_eq!(s.get("t").unwrap().num_processes().unwrap(), 2);
+        let fp = s.flat_profile("t", Metric::IncTime).unwrap();
+        assert!(!fp.is_empty());
+        assert!(s.last_stream_stats.is_none(), "no streamed analysis ran");
+    }
+
+    #[test]
+    fn run_batch_matches_multi_run() {
+        let dir = std::env::temp_dir().join("pipit_session_batch");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut paths = Vec::new();
+        for ranks in [2usize, 4, 8] {
+            let t = crate::gen::generate("tortuga", &GenConfig::new(ranks, 3), 1).unwrap();
+            let p = dir.join(format!("t{ranks}_otf2"));
+            crate::readers::otf2::write(&t, &p).unwrap();
+            paths.push(p);
+        }
+        let mut s = AnalysisSession::new().with_threads(2);
+        let batch = s.run_batch(&paths, Metric::ExcTime, 5).unwrap();
+
+        for (i, p) in paths.iter().enumerate() {
+            s.load(&format!("r{i}"), p).unwrap();
+        }
+        let seq = s.multi_run(&["r0", "r1", "r2"], Metric::ExcTime, 5).unwrap();
+        assert_eq!(batch.run_labels, seq.run_labels);
+        assert_eq!(batch.func_names, seq.func_names);
+        assert_eq!(batch.values, seq.values);
     }
 
     #[test]

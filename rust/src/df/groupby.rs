@@ -179,16 +179,25 @@ impl Groups {
     /// [`Groups::agg_f64`] with groups chunked across the worker pool.
     /// Each group's fold runs completely inside one worker in row order,
     /// so results are identical to the sequential aggregation.
-    pub fn agg_f64_parallel(&self, t: &Table, col: &str, how: Agg, threads: usize) -> Result<Vec<f64>> {
+    pub fn agg_f64_parallel(
+        &self,
+        t: &Table,
+        col: &str,
+        how: Agg,
+        threads: usize,
+    ) -> Result<Vec<f64>> {
         if crate::exec::effective_threads(threads) <= 1 || self.rows.len() < 2 {
             return self.agg_f64(t, col, how);
         }
         let xs = t.f64s(col)?;
-        let ranges =
-            crate::exec::pool::split_ranges(self.rows.len(), crate::exec::effective_threads(threads));
+        let workers = crate::exec::effective_threads(threads);
+        let ranges = crate::exec::pool::split_ranges(self.rows.len(), workers);
         let parts = crate::exec::pool::run_indexed(ranges.len(), threads, |c| {
             let (lo, hi) = ranges[c];
-            Ok(self.rows[lo..hi].iter().map(|rows| agg_f64_one(xs, rows, how)).collect::<Vec<f64>>())
+            Ok(self.rows[lo..hi]
+                .iter()
+                .map(|rows| agg_f64_one(xs, rows, how))
+                .collect::<Vec<f64>>())
         })?;
         Ok(parts.into_iter().flatten().collect())
     }

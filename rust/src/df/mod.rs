@@ -135,8 +135,9 @@ impl Table {
         if crate::exec::effective_threads(threads) <= 1 || self.width() <= 1 {
             return self.filter(mask);
         }
-        let cols =
-            crate::exec::pool::run_indexed(self.cols.len(), threads, |i| Ok(self.cols[i].filter(mask)))?;
+        let cols = crate::exec::pool::run_indexed(self.cols.len(), threads, |i| {
+            Ok(self.cols[i].filter(mask))
+        })?;
         let mut t = Table::new();
         for (n, c) in self.names.iter().zip(cols) {
             t.push(n, c)?;
@@ -223,7 +224,11 @@ impl Table {
     /// column — pandas `describe`, rendered as text.
     pub fn describe(&self) -> String {
         let mut out = String::new();
-        let _ = writeln!(out, "{:<22} {:>10} {:>14} {:>14} {:>14}", "column", "count", "mean", "min", "max");
+        let _ = writeln!(
+            out,
+            "{:<22} {:>10} {:>14} {:>14} {:>14}",
+            "column", "count", "mean", "min", "max"
+        );
         for (name, col) in self.names.iter().zip(&self.cols) {
             let stats: Option<(u64, f64, f64, f64)> = match col {
                 Column::F64(v) => {

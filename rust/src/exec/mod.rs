@@ -38,13 +38,25 @@
 //! parallelism" and `1` forces the legacy sequential path (kept intact).
 //! The default honors the `NUM_THREADS` environment variable, which CI
 //! uses to exercise both paths.
+//!
+//! # Streaming ingest
+//!
+//! [`stream`] runs the routed analyses over a
+//! [`ShardedReader`](crate::readers::streaming::ShardedReader) instead
+//! of a materialized trace: shards feed the same worker pool one batch
+//! at a time and fold into compact partials, bounding peak memory by
+//! O(workers × shard + results). Results stay bit-identical to eager
+//! load + sequential analysis; [`StreamStats`] instruments how the
+//! stream was consumed.
 
 pub mod ops;
 pub mod pool;
 pub mod shard;
+pub mod stream;
 
 pub use pool::{run_indexed, split_ranges};
 pub use shard::{process_shards, subtrace, Shards};
+pub use stream::StreamStats;
 
 /// Execution configuration carried by the coordinator.
 #[derive(Debug, Clone, Copy)]

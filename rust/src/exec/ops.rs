@@ -8,12 +8,14 @@
 //! parallelism and `1` falls back to the sequential engine.
 
 use super::{pool, shard};
+use crate::analysis::cct;
 use crate::analysis::comm::{self, CommMatrix, CommUnit};
 use crate::analysis::flat_profile::{self, Metric, ProfileRow};
 use crate::analysis::idle_time::IdleRow;
 use crate::analysis::load_imbalance::ImbalanceRow;
 use crate::analysis::time_profile::{self, Segment, TimeProfile};
 use crate::analysis;
+use crate::df::NULL_I64;
 use crate::trace::{Trace, COL_NAME};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
@@ -31,6 +33,39 @@ fn plan(trace: &Trace, threads: usize) -> Result<Option<shard::Shards>> {
     Ok(Some(shards))
 }
 
+/// Order-stable first-seen merge of per-shard flat-profile partials —
+/// shared by the in-memory sharded path below and the streaming driver
+/// in [`crate::exec::stream`]. Partials must arrive in shard (= row)
+/// order; metric values are integer-valued nanosecond sums / counts, so
+/// merged sums are exact.
+#[derive(Default)]
+pub(crate) struct ProfileMerger {
+    index: HashMap<String, usize>,
+    rows: Vec<ProfileRow>,
+}
+
+impl ProfileMerger {
+    pub(crate) fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn add(&mut self, part: Vec<ProfileRow>) {
+        for row in part {
+            match self.index.get(&row.name) {
+                Some(&slot) => self.rows[slot].value += row.value,
+                None => {
+                    self.index.insert(row.name.clone(), self.rows.len());
+                    self.rows.push(row);
+                }
+            }
+        }
+    }
+
+    pub(crate) fn finish(self) -> Vec<ProfileRow> {
+        flat_profile::finish_profile(self.rows)
+    }
+}
+
 /// Sharded `flat_profile`. Per-shard totals merge by name in shard order
 /// (= global first-seen order); metric values are integer-valued
 /// nanosecond sums / counts, so merged sums are exact.
@@ -43,20 +78,11 @@ pub fn flat_profile(trace: &Trace, metric: Metric, threads: usize) -> Result<Vec
         let mut sub = shard::subtrace(trace, shards.ranges[i])?;
         flat_profile::partial_profile(&mut sub, metric)
     })?;
-    let mut index: HashMap<String, usize> = HashMap::new();
-    let mut rows: Vec<ProfileRow> = Vec::new();
+    let mut merger = ProfileMerger::new();
     for part in parts {
-        for row in part {
-            match index.get(&row.name) {
-                Some(&slot) => rows[slot].value += row.value,
-                None => {
-                    index.insert(row.name.clone(), rows.len());
-                    rows.push(row);
-                }
-            }
-        }
+        merger.add(part);
     }
-    Ok(flat_profile::finish_profile(rows))
+    Ok(merger.finish())
 }
 
 /// Sharded `flat_profile_by_process`. Each (function, process) group
@@ -139,7 +165,7 @@ pub fn comm_matrix(trace: &Trace, unit: CommUnit, threads: usize) -> Result<Comm
 /// Sharded `time_profile`, in three stages:
 /// 1. exclusive segments per process shard (streams are independent, so
 ///    shard-order concatenation equals the sequential segment list);
-/// 2. the shared [`rank_functions`](time_profile::rank_functions);
+/// 2. the shared `time_profile::rank_functions`;
 /// 3. binning parallelized over the *bin axis* — each (bin, func) cell
 ///    folds contributions in global segment order, so stitching the bin
 ///    ranges is bit-identical to the sequential pass.
@@ -176,4 +202,116 @@ pub fn time_profile(
         .map(|b| t0 + (b as f64 * width).round() as i64)
         .collect();
     Ok(TimeProfile { bin_edges, func_names: spec.func_names, values })
+}
+
+/// Sharded `comm_over_time`: row-range chunks bin their send events over
+/// the full bin axis (global time range, so every chunk uses the same
+/// width) and merge cell-wise. u64 counts and integer-valued byte sums
+/// make the merge exact at any chunk count.
+pub fn comm_over_time(
+    trace: &Trace,
+    bins: usize,
+    threads: usize,
+) -> Result<(Vec<u64>, Vec<f64>, Vec<i64>)> {
+    if bins == 0 {
+        bail!("bins must be > 0");
+    }
+    let threads_eff = super::effective_threads(threads);
+    if threads_eff <= 1 || trace.len() < 2 {
+        return analysis::comm_over_time(trace, bins);
+    }
+    let (t0, t1) = trace.time_range()?;
+    let span = (t1 - t0).max(1) as f64;
+    let width = span / bins as f64;
+    let ranges = pool::split_ranges(trace.len(), threads_eff);
+    let parts = pool::run_indexed(ranges.len(), threads_eff, |i| {
+        comm::comm_over_time_range(trace, bins, t0, width, ranges[i])
+    })?;
+    let mut counts = vec![0u64; bins];
+    let mut volume = vec![0.0f64; bins];
+    for (c, v) in parts {
+        for (dst, src) in counts.iter_mut().zip(&c) {
+            *dst += *src;
+        }
+        for (dst, src) in volume.iter_mut().zip(&v) {
+            *dst += *src;
+        }
+    }
+    let edges = (0..=bins)
+        .map(|b| t0 + (b as f64 * width).round() as i64)
+        .collect();
+    Ok((counts, volume, edges))
+}
+
+/// Sharded `message_histogram`, two parallel passes: (1) per-chunk size
+/// extrema decide the global bin width and the recv-only fallback;
+/// (2) per-chunk u64 bin counts merge exactly. Both passes use the
+/// sequential per-row formulas, so output is bit-identical.
+pub fn message_histogram(
+    trace: &Trace,
+    bins: usize,
+    threads: usize,
+) -> Result<(Vec<u64>, Vec<f64>)> {
+    if bins == 0 {
+        bail!("bins must be > 0");
+    }
+    let threads_eff = super::effective_threads(threads);
+    if threads_eff <= 1 || trace.len() < 2 {
+        return analysis::message_histogram(trace, bins);
+    }
+    let ranges = pool::split_ranges(trace.len(), threads_eff);
+    let scans = pool::run_indexed(ranges.len(), threads_eff, |i| {
+        comm::size_extrema_range(trace, ranges[i])
+    })?;
+    let saw_send = scans.iter().any(|s| s.saw_send);
+    let dir = if saw_send { comm::MsgDir::Send } else { comm::MsgDir::Recv };
+    let max = scans
+        .iter()
+        .map(|s| if saw_send { s.max_send } else { s.max_recv })
+        .max()
+        .unwrap_or(-1)
+        .max(0)
+        .max(1) as f64;
+    let width = max / bins as f64;
+    let parts = pool::run_indexed(ranges.len(), threads_eff, |i| {
+        comm::histogram_counts_range(trace, ranges[i], dir, width, bins)
+    })?;
+    let mut counts = vec![0u64; bins];
+    for part in parts {
+        for (dst, src) in counts.iter_mut().zip(&part) {
+            *dst += *src;
+        }
+    }
+    let edges = (0..=bins).map(|b| b as f64 * width).collect();
+    Ok((counts, edges))
+}
+
+/// Sharded CCT construction: each process-aligned shard builds its
+/// partial tree (complete — call stacks never cross processes), and
+/// partials merge in shard order with first-seen node ids
+/// (`cct::CctMerger`), reproducing the sequential id assignment
+/// exactly. Returns the unified tree plus the per-row `_cct_node`
+/// mapping (global ids, `NULL_I64` for rows outside any call).
+pub fn create_cct(trace: &Trace, threads: usize) -> Result<(cct::Cct, Vec<i64>)> {
+    let Some(shards) = plan(trace, threads)? else {
+        let mut t = trace.clone();
+        let tree = analysis::create_cct(&mut t)?;
+        let col = t.events.i64s("_cct_node")?.to_vec();
+        return Ok((tree, col));
+    };
+    let parts = pool::run_indexed(shards.len(), threads, |i| {
+        let mut sub = shard::subtrace(trace, shards.ranges[i])?;
+        let tree = analysis::create_cct(&mut sub)?;
+        let col = sub.events.i64s("_cct_node")?.to_vec();
+        Ok((tree, col))
+    })?;
+    let mut merger = cct::CctMerger::new();
+    let mut node_col = Vec::with_capacity(trace.len());
+    for (part, col) in parts {
+        let map = merger.merge(&part);
+        for v in col {
+            node_col.push(if v == NULL_I64 { NULL_I64 } else { map[v as usize] as i64 });
+        }
+    }
+    Ok((merger.finish(), node_col))
 }

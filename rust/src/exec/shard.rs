@@ -84,7 +84,7 @@ pub fn process_shards(trace: &Trace, max_shards: usize) -> Result<Shards> {
 /// derived columns cached by earlier analyses (`_matching_event`,
 /// `_parent`, `_depth`, `time.*`) hold absolute row indices / whole-trace
 /// values, so shards drop them and recompute their own (see
-/// [`crate::trace::is_derived_column`]). String dictionaries are shared
+/// `crate::trace::is_derived_column`). String dictionaries are shared
 /// (`Arc`), so name codes stay identical across shards.
 pub fn subtrace(trace: &Trace, range: (usize, usize)) -> Result<Trace> {
     let idx: Vec<u32> = (range.0 as u32..range.1 as u32).collect();

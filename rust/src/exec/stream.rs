@@ -1,0 +1,514 @@
+//! Streaming analysis driver: feed [`ShardedReader`] shards through the
+//! worker pool one batch at a time, folding compact partials so peak
+//! memory is O(workers × shard + results) instead of O(trace).
+//!
+//! Every function here is **bit-identical** to eager `read_auto` + the
+//! sequential engine on the same source, at any thread count:
+//!
+//! * Shards arrive in canonical row order and partials fold in shard
+//!   order, so every first-seen merge (profile rows, CCT node ids,
+//!   function ranking) replays the sequential discovery order exactly.
+//! * Cross-shard sums add integer-valued f64 nanoseconds / counts /
+//!   bytes — exact and associative well below 2^53 — and u64 counts are
+//!   exact by construction.
+//! * Quantities only known at end of stream (global time span, message
+//!   size maximum, process set) are folded from per-shard partials and
+//!   applied with the sequential formulas afterwards.
+//!
+//! Per-op partial memory: O(functions) for profiles, O(tree) for the
+//! CCT, O(distinct sizes) for the histogram, O(process²) for the comm
+//! matrix, O(sends) for `comm_over_time`, and O(call segments) for
+//! `time_profile` — all far below the 8-column event table, though the
+//! last two still grow with the trace (documented trade-off: binning
+//! needs the global span before any segment can be placed).
+//!
+//! [`StreamStats`] is the ingest instrumentation hook: shard count,
+//! total rows, and the largest shard ever resident — what the parity
+//! suite asserts to prove memory stays shard-bounded.
+
+use super::pool;
+use crate::analysis;
+use crate::analysis::cct::{self, Cct};
+use crate::analysis::comm::{self, CommMatrix, CommUnit, MsgDir};
+use crate::analysis::flat_profile::{self, Metric, ProfileRow};
+use crate::analysis::idle_time::IdleRow;
+use crate::analysis::load_imbalance::ImbalanceRow;
+use crate::analysis::time_profile::{self, Segment, TimeProfile};
+use crate::df::Interner;
+use crate::readers::streaming::ShardedReader;
+use crate::trace::{Trace, COL_NAME};
+use anyhow::{anyhow, bail, Result};
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::Mutex;
+
+/// (counts, bin edges) — the `message_histogram` result shape.
+pub type Histogram = (Vec<u64>, Vec<f64>);
+
+/// (counts, byte volumes, bin edges) — the `comm_over_time` result shape.
+pub type CommTimeline = (Vec<u64>, Vec<f64>, Vec<i64>);
+
+/// Ingest instrumentation: how the stream was consumed. `max_shard_rows`
+/// is the largest number of rows ever materialized for one shard — with
+/// `shards > 1` and `max_shard_rows < total_rows` it proves the whole
+/// trace was never resident at once.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct StreamStats {
+    /// Shards yielded by the reader.
+    pub shards: usize,
+    /// Total rows across all shards (= the eager trace's row count).
+    pub total_rows: usize,
+    /// Rows of the largest single shard.
+    pub max_shard_rows: usize,
+    /// Distinct processes observed across the stream.
+    pub num_processes: usize,
+}
+
+/// Stream-wide facts the driver folds for free while shards pass by.
+struct Ingest {
+    stats: StreamStats,
+    procs: BTreeSet<i64>,
+    t_lo: i64,
+    t_hi: i64,
+    seen_rows: bool,
+}
+
+impl Ingest {
+    fn new() -> Self {
+        Ingest {
+            stats: StreamStats::default(),
+            procs: BTreeSet::new(),
+            t_lo: 0,
+            t_hi: 0,
+            seen_rows: false,
+        }
+    }
+
+    /// (min, max) timestamp over the whole stream; (0, 0) when empty —
+    /// matching [`Trace::time_range`] on an empty trace.
+    fn time_range(&self) -> (i64, i64) {
+        if self.seen_rows {
+            (self.t_lo, self.t_hi)
+        } else {
+            (0, 0)
+        }
+    }
+
+    fn sorted_procs(&self) -> Vec<i64> {
+        self.procs.iter().copied().collect()
+    }
+}
+
+/// Pull shards in batches of up to `threads`, run `map` on each batch
+/// concurrently (the PR-1 worker pool), and fold results *in shard
+/// order* on the calling thread. Shard traces are dropped as soon as
+/// their partial exists, bounding resident rows to one batch.
+///
+/// Note the throughput trade-off: shard *decoding* happens serially on
+/// the driver thread (the reader trait is sequential); only the
+/// analysis map parallelizes. Decode-bound sources (zlib rank files)
+/// therefore ingest slower than the eager parallel readers — streaming
+/// optimizes memory, eager load + the sharded engine optimizes
+/// wall-clock. Pipelining decode into the pool is a ROADMAP follow-up.
+fn drive<P, F, G>(
+    reader: &mut dyn ShardedReader,
+    threads: usize,
+    map: F,
+    mut fold: G,
+) -> Result<Ingest>
+where
+    P: Send,
+    F: Fn(&mut Trace) -> Result<P> + Sync,
+    G: FnMut(P) -> Result<()>,
+{
+    let batch_size = super::effective_threads(threads).max(1);
+    let mut ing = Ingest::new();
+    loop {
+        let mut batch: Vec<Mutex<Trace>> = Vec::with_capacity(batch_size);
+        while batch.len() < batch_size {
+            let Some(sh) = reader.next_shard()? else { break };
+            let n = sh.trace.len();
+            ing.stats.shards += 1;
+            ing.stats.total_rows += n;
+            ing.stats.max_shard_rows = ing.stats.max_shard_rows.max(n);
+            // distinct processes via run-dedup: shard rows are in
+            // canonical order (process runs contiguous), so one linear
+            // pass suffices — no per-shard sort like process_ids()
+            let mut prev: Option<i64> = None;
+            for &p in sh.trace.processes()? {
+                if prev != Some(p) {
+                    ing.procs.insert(p);
+                    prev = Some(p);
+                }
+            }
+            if n > 0 {
+                let (lo, hi) = sh.trace.time_range()?;
+                if ing.seen_rows {
+                    ing.t_lo = ing.t_lo.min(lo);
+                    ing.t_hi = ing.t_hi.max(hi);
+                } else {
+                    ing.t_lo = lo;
+                    ing.t_hi = hi;
+                    ing.seen_rows = true;
+                }
+            }
+            batch.push(Mutex::new(sh.trace));
+        }
+        if batch.is_empty() {
+            ing.stats.num_processes = ing.procs.len();
+            return Ok(ing);
+        }
+        // Each slot is locked by exactly one pool task; the Mutex is only
+        // there to hand out `&mut Trace` safely.
+        let parts = pool::run_indexed(batch.len(), threads, |i| {
+            let mut t = batch[i].lock().map_err(|_| anyhow!("shard lock poisoned"))?;
+            map(&mut t)
+        })?;
+        drop(batch);
+        for p in parts {
+            fold(p)?;
+        }
+    }
+}
+
+/// Streamed `flat_profile`: per-shard partial profiles merge first-seen
+/// in shard order, then the shared deterministic finish.
+pub fn flat_profile(
+    reader: &mut dyn ShardedReader,
+    metric: Metric,
+    threads: usize,
+) -> Result<(Vec<ProfileRow>, StreamStats)> {
+    let mut merger = super::ops::ProfileMerger::new();
+    let ing = drive(
+        reader,
+        threads,
+        |t| flat_profile::partial_profile(t, metric),
+        |p| {
+            merger.add(p);
+            Ok(())
+        },
+    )?;
+    Ok((merger.finish(), ing.stats))
+}
+
+/// Streamed `flat_profile_by_process`: every (function, process) group
+/// is complete within its shard, so shard-order concatenation *is* the
+/// sequential output.
+pub fn flat_profile_by_process(
+    reader: &mut dyn ShardedReader,
+    metric: Metric,
+    threads: usize,
+) -> Result<(Vec<(String, i64, f64)>, StreamStats)> {
+    let mut rows = Vec::new();
+    let ing = drive(
+        reader,
+        threads,
+        |t| analysis::flat_profile_by_process(t, metric),
+        |p| {
+            rows.extend(p);
+            Ok(())
+        },
+    )?;
+    Ok((rows, ing.stats))
+}
+
+/// Streamed `load_imbalance`: streamed by-process rows + the shared
+/// deterministic reduction over the stream-wide process count.
+pub fn load_imbalance(
+    reader: &mut dyn ShardedReader,
+    metric: Metric,
+    num_processes: usize,
+    threads: usize,
+) -> Result<(Vec<ImbalanceRow>, StreamStats)> {
+    let (rows, stats) = flat_profile_by_process(reader, metric, threads)?;
+    let nprocs = stats.num_processes.max(1);
+    Ok((
+        analysis::load_imbalance::imbalance_from_rows(rows, nprocs, num_processes),
+        stats,
+    ))
+}
+
+/// Streamed `idle_time`: streamed by-process inclusive rows + the shared
+/// reduction over the stream-wide span and process set.
+pub fn idle_time(
+    reader: &mut dyn ShardedReader,
+    idle_functions: Option<&[&str]>,
+    threads: usize,
+) -> Result<(Vec<IdleRow>, StreamStats)> {
+    let mut rows = Vec::new();
+    let ing = drive(
+        reader,
+        threads,
+        |t| analysis::flat_profile_by_process(t, Metric::IncTime),
+        |p| {
+            rows.extend(p);
+            Ok(())
+        },
+    )?;
+    let (lo, hi) = ing.time_range();
+    let span = (hi - lo).max(1) as f64;
+    let procs = ing.sorted_procs();
+    Ok((
+        analysis::idle_time::idle_from_rows(rows, &procs, span, idle_functions),
+        ing.stats,
+    ))
+}
+
+/// Streamed `comm_matrix`: per-shard sparse (sender, receiver) cells for
+/// both directions fold into maps; the dense matrix assembles once the
+/// global process set is known, with the sequential recv-only fallback
+/// decided by whether any send cell lands inside it.
+pub fn comm_matrix(
+    reader: &mut dyn ShardedReader,
+    unit: CommUnit,
+    threads: usize,
+) -> Result<(CommMatrix, StreamStats)> {
+    let mut sends: BTreeMap<(i64, i64), f64> = BTreeMap::new();
+    let mut recvs: BTreeMap<(i64, i64), f64> = BTreeMap::new();
+    let ing = drive(
+        reader,
+        threads,
+        |t| {
+            let s = comm::shard_comm_cells(t, unit, MsgDir::Send)?;
+            let r = comm::shard_comm_cells(t, unit, MsgDir::Recv)?;
+            Ok((s, r))
+        },
+        |(s, r)| {
+            for (k, v) in s {
+                *sends.entry(k).or_insert(0.0) += v;
+            }
+            for (k, v) in r {
+                *recvs.entry(k).or_insert(0.0) += v;
+            }
+            Ok(())
+        },
+    )?;
+    let procs = ing.sorted_procs();
+    let n = procs.len();
+    let index: HashMap<i64, usize> = procs.iter().enumerate().map(|(i, &p)| (p, i)).collect();
+    let saw_send = sends
+        .keys()
+        .any(|(a, b)| index.contains_key(a) && index.contains_key(b));
+    let chosen = if saw_send { &sends } else { &recvs };
+    let mut data = vec![vec![0.0f64; n]; n];
+    for (&(a, b), &v) in chosen {
+        if let (Some(&i), Some(&j)) = (index.get(&a), index.get(&b)) {
+            data[i][j] += v;
+        }
+    }
+    Ok((CommMatrix { procs, data }, ing.stats))
+}
+
+/// Streamed `comm_by_process`: row / column sums of the streamed matrix,
+/// exactly as the sequential op derives them.
+pub fn comm_by_process(
+    reader: &mut dyn ShardedReader,
+    unit: CommUnit,
+    threads: usize,
+) -> Result<(Vec<(i64, f64, f64)>, StreamStats)> {
+    let (m, stats) = comm_matrix(reader, unit, threads)?;
+    let rows = m.row_sums();
+    let cols = m.col_sums();
+    let out = m
+        .procs
+        .iter()
+        .zip(rows.iter().zip(cols))
+        .map(|(&p, (&s, r))| (p, s, r))
+        .collect();
+    Ok((out, stats))
+}
+
+/// Streamed `message_histogram`: per-shard size→count maps (compact —
+/// message sizes cluster) fold exactly; the bin width comes from the
+/// merged maximum and the counts re-bin with the sequential formula.
+pub fn message_histogram(
+    reader: &mut dyn ShardedReader,
+    bins: usize,
+    threads: usize,
+) -> Result<(Histogram, StreamStats)> {
+    if bins == 0 {
+        bail!("bins must be > 0");
+    }
+    let mut sends: HashMap<i64, u64> = HashMap::new();
+    let mut recvs: HashMap<i64, u64> = HashMap::new();
+    let mut saw_send = false;
+    let ing = drive(
+        reader,
+        threads,
+        |t| comm::shard_size_counts(&*t),
+        |(s, r, f)| {
+            for (k, v) in s {
+                *sends.entry(k).or_insert(0) += v;
+            }
+            for (k, v) in r {
+                *recvs.entry(k).or_insert(0) += v;
+            }
+            saw_send |= f;
+            Ok(())
+        },
+    )?;
+    let chosen = if saw_send { &sends } else { &recvs };
+    Ok((comm::histogram_from_counts(chosen, bins), ing.stats))
+}
+
+/// Streamed `comm_over_time`: per-shard (timestamp, size) send events
+/// accumulate in row order; binning runs once the stream-wide span (and
+/// so the bin width) is known, folding in the sequential order.
+pub fn comm_over_time(
+    reader: &mut dyn ShardedReader,
+    bins: usize,
+    threads: usize,
+) -> Result<(CommTimeline, StreamStats)> {
+    if bins == 0 {
+        bail!("bins must be > 0");
+    }
+    let mut sends: Vec<(i64, i64)> = Vec::new();
+    let ing = drive(reader, threads, |t| comm::shard_send_events(&*t), |p| {
+        sends.extend(p);
+        Ok(())
+    })?;
+    let (t0, t1) = ing.time_range();
+    let span = (t1 - t0).max(1) as f64;
+    let width = span / bins as f64;
+    let mut counts = vec![0u64; bins];
+    let mut volume = vec![0.0f64; bins];
+    for &(ts, ms) in &sends {
+        let b = (((ts - t0) as f64 / width) as usize).min(bins - 1);
+        counts[b] += 1;
+        volume[b] += ms.max(0) as f64;
+    }
+    let edges = (0..=bins)
+        .map(|b| t0 + (b as f64 * width).round() as i64)
+        .collect();
+    Ok(((counts, volume, edges), ing.stats))
+}
+
+/// Streamed `time_profile`: per-shard exclusive segments remap into one
+/// stream-wide name interner (fold order = row order, so ranking ties
+/// resolve sequentially), then the shared rank + bin stages run over the
+/// merged segment list with the stream-wide span.
+pub fn time_profile(
+    reader: &mut dyn ShardedReader,
+    num_bins: usize,
+    top_funcs: Option<usize>,
+    threads: usize,
+) -> Result<(TimeProfile, StreamStats)> {
+    if num_bins == 0 {
+        bail!("num_bins must be > 0");
+    }
+    let mut names = Interner::new();
+    let mut segs: Vec<Segment> = Vec::new();
+    let ing = drive(
+        reader,
+        threads,
+        |t| {
+            let s = time_profile::exclusive_segments(t)?;
+            let (_, dict) = t.events.strs(COL_NAME)?;
+            // own the shard-local code -> name memo so the fold can
+            // remap after the shard is dropped
+            let mut memo: HashMap<u32, String> = HashMap::new();
+            for seg in &s {
+                memo.entry(seg.name_code)
+                    .or_insert_with(|| dict.resolve(seg.name_code).unwrap_or("").to_string());
+            }
+            Ok((s, memo))
+        },
+        |(s, memo)| {
+            let mut remap: HashMap<u32, u32> = HashMap::new();
+            for (code, name) in &memo {
+                remap.insert(*code, names.intern(name));
+            }
+            for seg in s {
+                segs.push(Segment { name_code: remap[&seg.name_code], ..seg });
+            }
+            Ok(())
+        },
+    )?;
+    let spec = time_profile::rank_functions(&segs, &names, top_funcs);
+    let (t0, t1) = ing.time_range();
+    let span = (t1 - t0).max(1) as f64;
+    let width = span / num_bins as f64;
+    let bin_ranges = pool::split_ranges(num_bins, super::effective_threads(threads));
+    let value_parts = pool::run_indexed(bin_ranges.len(), threads, |i| {
+        Ok(time_profile::bin_segments_range(&segs, &spec, t0, width, num_bins, bin_ranges[i]))
+    })?;
+    let values: Vec<Vec<f64>> = value_parts.into_iter().flatten().collect();
+    let bin_edges = (0..=num_bins)
+        .map(|b| t0 + (b as f64 * width).round() as i64)
+        .collect();
+    Ok((TimeProfile { bin_edges, func_names: spec.func_names, values }, ing.stats))
+}
+
+/// Streamed CCT construction: per-shard partial trees merge in shard
+/// order with first-seen node ids (`cct::CctMerger`) — O(tree) state,
+/// the ideal streaming analysis.
+pub fn create_cct(
+    reader: &mut dyn ShardedReader,
+    threads: usize,
+) -> Result<(Cct, StreamStats)> {
+    let mut merger = cct::CctMerger::new();
+    let ing = drive(reader, threads, analysis::create_cct, |p| {
+        merger.merge(&p);
+        Ok(())
+    })?;
+    Ok((merger.finish(), ing.stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::readers::streaming::SplitReader;
+    use crate::trace::TraceBuilder;
+
+    fn split(app: &str, ranks: usize) -> (Trace, SplitReader) {
+        let t = gen::generate(app, &GenConfig::new(ranks, 3), 1).unwrap();
+        (t.clone(), SplitReader::new(t).unwrap())
+    }
+
+    #[test]
+    fn streamed_flat_profile_matches_sequential_and_counts_shards() {
+        let (t, mut r) = split("laghos", 6);
+        let seq = analysis::flat_profile(&mut t.clone(), Metric::ExcTime).unwrap();
+        let (rows, stats) = flat_profile(&mut r, Metric::ExcTime, 4).unwrap();
+        assert_eq!(rows, seq);
+        assert_eq!(stats.shards, 6);
+        assert_eq!(stats.total_rows, t.len());
+        assert!(stats.max_shard_rows < t.len(), "one shard held everything");
+        assert_eq!(stats.num_processes, 6);
+    }
+
+    #[test]
+    fn streamed_cct_matches_sequential() {
+        let (t, mut r) = split("amg", 4);
+        let seq = analysis::create_cct(&mut t.clone()).unwrap();
+        let (tree, stats) = create_cct(&mut r, 2).unwrap();
+        assert_eq!(tree, seq);
+        assert_eq!(stats.shards, 4);
+    }
+
+    #[test]
+    fn streamed_comm_matrix_matches_sequential() {
+        let (t, mut r) = split("laghos", 4);
+        let seq = analysis::comm_matrix(&t, CommUnit::Bytes).unwrap();
+        let (m, _) = comm_matrix(&mut r, CommUnit::Bytes, 3).unwrap();
+        assert_eq!(m.procs, seq.procs);
+        assert_eq!(m.data, seq.data);
+    }
+
+    #[test]
+    fn empty_stream_yields_empty_results() {
+        let t = TraceBuilder::new().finish();
+        let mut r = SplitReader::new(t).unwrap();
+        let (rows, stats) = flat_profile(&mut r, Metric::ExcTime, 4).unwrap();
+        assert!(rows.is_empty());
+        assert_eq!(stats, StreamStats::default());
+    }
+
+    #[test]
+    fn driver_propagates_shard_errors() {
+        let (_, mut r) = split("gol", 3);
+        let err = drive(&mut r, 2, |_| -> Result<()> { bail!("injected") }, |_| Ok(()))
+            .unwrap_err();
+        assert!(err.to_string().contains("injected"), "{err}");
+    }
+}

@@ -42,6 +42,18 @@
 //!   `num_threads`: `0` = available parallelism (the default, also
 //!   overridable via the `NUM_THREADS` environment variable), `1` = the
 //!   legacy sequential path, kept intact.
+//!
+//! # Streaming ingest & batch jobs
+//!
+//! Traces larger than memory stream through the [`readers::streaming`]
+//! layer: [`readers::open_sharded`] yields process-aligned shards
+//! incrementally (one OTF2 rank file at a time; csv / chrome at process
+//! boundaries) and [`exec::stream`] folds them through the same worker
+//! pool, bounding peak memory by O(workers × shard + results) while
+//! staying bit-identical to eager loading. Sessions opt in with
+//! [`coordinator::AnalysisSession::load_streamed`] (CLI `--stream`), and
+//! [`coordinator::AnalysisSession::run_batch`] (CLI `--batch`) schedules
+//! many streamed traces over one pool for multirun comparisons.
 
 pub mod util;
 pub mod df;

@@ -33,49 +33,8 @@ pub fn read(path: &Path) -> Result<Trace> {
     let mut app = String::new();
     // X events become Enter+Leave; builder sorts canonically at finish.
     for (i, e) in events.iter().enumerate() {
-        let ph = e.get_str("ph").unwrap_or("X");
-        let name = e.get_str("name").unwrap_or("<unnamed>");
-        let pid = e.get_f64("pid").unwrap_or(0.0) as i64;
-        let tid = e.get_f64("tid").unwrap_or(0.0) as i64;
-        let ts_us = e.get_f64("ts").unwrap_or(0.0);
-        let ts = (ts_us * 1000.0).round() as i64;
-        match ph {
-            "B" => b.enter(pid, tid, ts, name),
-            "E" => b.leave(pid, tid, ts, name),
-            "X" => {
-                let dur = e
-                    .get_f64("dur")
-                    .with_context(|| format!("event {i}: X without dur"))?;
-                let te = ts + (dur * 1000.0).round() as i64;
-                b.enter(pid, tid, ts, name);
-                b.leave(pid, tid, te, name);
-            }
-            "i" | "I" | "R" => {
-                let args = e.get("args");
-                let geti = |k: &str| {
-                    args.and_then(|a| a.get_f64(k))
-                        .map(|v| v as i64)
-                        .unwrap_or(NULL_I64)
-                };
-                match name {
-                    SEND_EVENT | "ncclSend" => {
-                        b.send(pid, tid, ts, geti("partner"), geti("size"), geti("tag"))
-                    }
-                    RECV_EVENT | "ncclRecv" => {
-                        b.recv(pid, tid, ts, geti("partner"), geti("size"), geti("tag"))
-                    }
-                    _ => b.instant(pid, tid, ts, name),
-                }
-            }
-            "M" => {
-                if name == "process_name" {
-                    if let Some(n) = e.get("args").and_then(|a| a.get_str("name")) {
-                        app = n.to_string();
-                    }
-                }
-            }
-            // counters, flow, async events: out of scope, skipped
-            _ => {}
+        if let Some(name) = apply_event(&mut b, e, i)? {
+            app = name;
         }
     }
     b.set_meta(TraceMeta {
@@ -84,6 +43,74 @@ pub fn read(path: &Path) -> Result<Trace> {
         app,
     });
     Ok(b.finish())
+}
+
+/// Feed one Chrome trace event into a builder. `i` is the event index
+/// (error messages only). Returns the application name when the event is
+/// a `process_name` metadata record. Shared by the eager reader above and
+/// the streaming reader in [`super::streaming`], so both interpret every
+/// phase identically.
+pub(crate) fn apply_event(b: &mut TraceBuilder, e: &Json, i: usize) -> Result<Option<String>> {
+    let ph = e.get_str("ph").unwrap_or("X");
+    let name = e.get_str("name").unwrap_or("<unnamed>");
+    let pid = e.get_f64("pid").unwrap_or(0.0) as i64;
+    let tid = e.get_f64("tid").unwrap_or(0.0) as i64;
+    let ts_us = e.get_f64("ts").unwrap_or(0.0);
+    let ts = (ts_us * 1000.0).round() as i64;
+    match ph {
+        "B" => b.enter(pid, tid, ts, name),
+        "E" => b.leave(pid, tid, ts, name),
+        "X" => {
+            let dur = e
+                .get_f64("dur")
+                .with_context(|| format!("event {i}: X without dur"))?;
+            let te = ts + (dur * 1000.0).round() as i64;
+            b.enter(pid, tid, ts, name);
+            b.leave(pid, tid, te, name);
+        }
+        "i" | "I" | "R" => {
+            let args = e.get("args");
+            let geti = |k: &str| {
+                args.and_then(|a| a.get_f64(k))
+                    .map(|v| v as i64)
+                    .unwrap_or(NULL_I64)
+            };
+            match name {
+                SEND_EVENT | "ncclSend" => {
+                    b.send(pid, tid, ts, geti("partner"), geti("size"), geti("tag"))
+                }
+                RECV_EVENT | "ncclRecv" => {
+                    b.recv(pid, tid, ts, geti("partner"), geti("size"), geti("tag"))
+                }
+                _ => b.instant(pid, tid, ts, name),
+            }
+        }
+        "M" => {
+            if name == "process_name" {
+                if let Some(n) = e.get("args").and_then(|a| a.get_str("name")) {
+                    return Ok(Some(n.to_string()));
+                }
+            }
+        }
+        // counters, flow, async events: out of scope, skipped
+        _ => {}
+    }
+    Ok(None)
+}
+
+/// Does this event produce trace rows (as opposed to metadata / skipped
+/// phases)? The streaming reader uses this to decide which events count
+/// toward process-grouping and shard boundaries.
+pub(crate) fn is_row_event(e: &Json) -> bool {
+    matches!(
+        e.get_str("ph").unwrap_or("X"),
+        "B" | "E" | "X" | "i" | "I" | "R"
+    )
+}
+
+/// The pid a row event belongs to (0 when absent, matching the reader).
+pub(crate) fn event_pid(e: &Json) -> i64 {
+    e.get_f64("pid").unwrap_or(0.0) as i64
 }
 
 /// Write a trace as Chrome Trace JSON (B/E + instant events).

@@ -12,12 +12,21 @@ use anyhow::{bail, Context, Result};
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
-/// Read a CSV trace file.
-pub fn read(path: &Path) -> Result<Trace> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    let mut lines = text.lines();
-    let header = lines.next().context("empty csv")?;
+/// Parsed CSV header: column positions plus the timestamp scale.
+pub(crate) struct CsvHeader {
+    idx_ts: usize,
+    ts_scale: i64,
+    idx_type: usize,
+    idx_name: usize,
+    pub(crate) idx_proc: usize,
+    idx_thread: Option<usize>,
+    idx_partner: Option<usize>,
+    idx_size: Option<usize>,
+    idx_tag: Option<usize>,
+}
+
+/// Parse the header line into column positions.
+pub(crate) fn parse_header(header: &str) -> Result<CsvHeader> {
     let cols = split_csv_line(header);
     let mut idx_ts = None;
     let mut ts_scale = 1i64;
@@ -44,53 +53,122 @@ pub fn read(path: &Path) -> Result<Trace> {
         (Some(a), Some(b), Some(c), Some(d)) => (a, b, c, d),
         _ => bail!("csv must have Timestamp, Event Type, Name, Process columns"),
     };
+    Ok(CsvHeader {
+        idx_ts,
+        ts_scale,
+        idx_type,
+        idx_name,
+        idx_proc,
+        idx_thread,
+        idx_partner,
+        idx_size,
+        idx_tag,
+    })
+}
 
-    let mut b = TraceBuilder::new();
-    b.set_meta(TraceMeta {
+/// One parsed data row, ready to feed a [`TraceBuilder`].
+pub(crate) struct CsvRow {
+    pub(crate) ts: i64,
+    pub(crate) proc: i64,
+    thread: i64,
+    partner: i64,
+    size: i64,
+    tag: i64,
+    event: CsvEvent,
+}
+
+enum CsvEvent {
+    Enter(String),
+    Leave(String),
+    Send,
+    Recv,
+    Instant(String),
+}
+
+/// Parse one data line. `display_line` is the 1-based file line number
+/// used in error messages.
+pub(crate) fn parse_row(h: &CsvHeader, line: &str, display_line: usize) -> Result<CsvRow> {
+    let f = split_csv_line(line);
+    let get = |i: Option<usize>| i.and_then(|i| f.get(i)).map(|s| s.trim());
+    let ts: f64 = get(Some(h.idx_ts))
+        .context("missing ts")?
+        .parse()
+        .with_context(|| format!("line {display_line}: bad timestamp"))?;
+    let ts = (ts * h.ts_scale as f64).round() as i64;
+    let etype = get(Some(h.idx_type)).context("missing type")?;
+    let name = get(Some(h.idx_name)).context("missing name")?;
+    let proc: i64 = get(Some(h.idx_proc))
+        .context("missing process")?
+        .parse()
+        .with_context(|| format!("line {display_line}: bad process"))?;
+    let thread: i64 = get(h.idx_thread).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let partner: i64 = get(h.idx_partner)
+        .filter(|s| !s.is_empty())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(NULL_I64);
+    let size: i64 = get(h.idx_size)
+        .filter(|s| !s.is_empty())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(NULL_I64);
+    let tag: i64 = get(h.idx_tag)
+        .filter(|s| !s.is_empty())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(NULL_I64);
+    let event = match etype {
+        ENTER => CsvEvent::Enter(name.to_string()),
+        LEAVE => CsvEvent::Leave(name.to_string()),
+        INSTANT => match name {
+            SEND_EVENT => CsvEvent::Send,
+            RECV_EVENT => CsvEvent::Recv,
+            _ => CsvEvent::Instant(name.to_string()),
+        },
+        other => bail!("line {display_line}: unknown event type '{other}'"),
+    };
+    Ok(CsvRow { ts, proc, thread, partner, size, tag, event })
+}
+
+/// Feed one parsed row into a builder.
+pub(crate) fn apply_row(b: &mut TraceBuilder, r: &CsvRow) {
+    match &r.event {
+        CsvEvent::Enter(n) => b.enter(r.proc, r.thread, r.ts, n),
+        CsvEvent::Leave(n) => b.leave(r.proc, r.thread, r.ts, n),
+        CsvEvent::Send => b.send(r.proc, r.thread, r.ts, r.partner, r.size, r.tag),
+        CsvEvent::Recv => b.recv(r.proc, r.thread, r.ts, r.partner, r.size, r.tag),
+        CsvEvent::Instant(n) => b.instant(r.proc, r.thread, r.ts, n),
+    }
+}
+
+/// Extract just the Process field of a data line (pre-scan fast path for
+/// the streaming reader). None when the field is missing or unparsable.
+pub(crate) fn parse_proc(h: &CsvHeader, line: &str) -> Option<i64> {
+    let f = split_csv_line(line);
+    f.get(h.idx_proc).and_then(|s| s.trim().parse().ok())
+}
+
+/// The provenance metadata every CSV read (eager or streamed) attaches.
+pub(crate) fn csv_meta(path: &Path) -> TraceMeta {
+    TraceMeta {
         format: "csv".into(),
         source: path.display().to_string(),
         app: String::new(),
-    });
+    }
+}
+
+/// Read a CSV trace file.
+pub fn read(path: &Path) -> Result<Trace> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut lines = text.lines();
+    let header = lines.next().context("empty csv")?;
+    let h = parse_header(header)?;
+    let mut b = TraceBuilder::new();
+    b.set_meta(csv_meta(path));
     for (lineno, line) in lines.enumerate() {
         if line.trim().is_empty() {
             continue;
         }
-        let f = split_csv_line(line);
-        let get = |i: Option<usize>| i.and_then(|i| f.get(i)).map(|s| s.trim());
-        let ts: f64 = get(Some(idx_ts))
-            .context("missing ts")?
-            .parse()
-            .with_context(|| format!("line {}: bad timestamp", lineno + 2))?;
-        let ts = (ts * ts_scale as f64).round() as i64;
-        let etype = get(Some(idx_type)).context("missing type")?;
-        let name = get(Some(idx_name)).context("missing name")?;
-        let proc: i64 = get(Some(idx_proc))
-            .context("missing process")?
-            .parse()
-            .with_context(|| format!("line {}: bad process", lineno + 2))?;
-        let thread: i64 = get(idx_thread).and_then(|s| s.parse().ok()).unwrap_or(0);
-        let partner: i64 = get(idx_partner)
-            .filter(|s| !s.is_empty())
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(NULL_I64);
-        let size: i64 = get(idx_size)
-            .filter(|s| !s.is_empty())
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(NULL_I64);
-        let tag: i64 = get(idx_tag)
-            .filter(|s| !s.is_empty())
-            .and_then(|s| s.parse().ok())
-            .unwrap_or(NULL_I64);
-        match etype {
-            ENTER => b.enter(proc, thread, ts, name),
-            LEAVE => b.leave(proc, thread, ts, name),
-            INSTANT => match name {
-                SEND_EVENT => b.send(proc, thread, ts, partner, size, tag),
-                RECV_EVENT => b.recv(proc, thread, ts, partner, size, tag),
-                _ => b.instant(proc, thread, ts, name),
-            },
-            other => bail!("line {}: unknown event type '{other}'", lineno + 2),
-        }
+        let row = parse_row(&h, line, lineno + 2)?;
+        apply_row(&mut b, &row);
     }
     Ok(b.finish())
 }

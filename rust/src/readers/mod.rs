@@ -13,12 +13,21 @@
 //! models in [`crate::gen`] and by round-trip tests). The heavyweight
 //! per-rank formats (OTF2, Projections) read their rank streams in
 //! parallel (paper §VI, Fig. 5 center).
+//!
+//! On top of the eager readers, [`streaming`] provides shard-at-a-time
+//! ingest: [`open_sharded`] yields process-aligned [`TraceShard`]s
+//! incrementally so the streaming analysis driver
+//! ([`crate::exec::stream`]) runs in memory bounded per shard instead of
+//! per trace.
 
 pub mod chrome;
 pub mod csv;
 pub mod hpctoolkit;
 pub mod otf2;
 pub mod projections;
+pub mod streaming;
+
+pub use streaming::{open_sharded, ShardedReader, TraceShard};
 
 use crate::trace::Trace;
 use anyhow::{bail, Result};

@@ -160,15 +160,15 @@ pub fn write(trace: &Trace, dir: &Path) -> Result<()> {
 
 // -- reader -----------------------------------------------------------------
 
-struct Defs {
-    app: String,
-    ranks: Vec<i64>,
-    names: Arc<Interner>,
+pub(crate) struct Defs {
+    pub(crate) app: String,
+    pub(crate) ranks: Vec<i64>,
+    pub(crate) names: Arc<Interner>,
     send_code: u32,
     recv_code: u32,
 }
 
-fn read_defs(dir: &Path) -> Result<Defs> {
+pub(crate) fn read_defs(dir: &Path) -> Result<Defs> {
     let buf = std::fs::read(dir.join("defs.bin"))
         .with_context(|| format!("reading {}/defs.bin", dir.display()))?;
     if buf.len() < 8 || &buf[..8] != MAGIC {
@@ -212,7 +212,7 @@ fn read_defs(dir: &Path) -> Result<Defs> {
 }
 
 /// Columnar shard for one rank (already in canonical order).
-struct Shard {
+pub(crate) struct Shard {
     ts: Vec<i64>,
     et: Vec<u32>,
     nm: Vec<u32>,
@@ -222,7 +222,7 @@ struct Shard {
     tg: Vec<i64>,
 }
 
-fn read_rank(dir: &Path, rank: i64, defs: &Defs, etypes: &EtypeCodes) -> Result<Shard> {
+pub(crate) fn read_rank(dir: &Path, rank: i64, defs: &Defs, etypes: &EtypeCodes) -> Result<Shard> {
     let f = std::fs::File::open(dir.join(format!("rank_{rank}.bin")))?;
     let mut raw = Vec::new();
     ZlibDecoder::new(f).read_to_end(&mut raw)?;
@@ -281,10 +281,44 @@ fn read_rank(dir: &Path, rank: i64, defs: &Defs, etypes: &EtypeCodes) -> Result<
     Ok(sh)
 }
 
-struct EtypeCodes {
+pub(crate) struct EtypeCodes {
     enter: u32,
     leave: u32,
     instant: u32,
+}
+
+/// The `Event Type` dictionary (Enter/Leave/Instant) plus its codes —
+/// shared by the eager reader and the streaming reader so shards carry
+/// identical event-type encodings.
+pub(crate) fn etype_codes() -> (Arc<Interner>, EtypeCodes) {
+    let mut etype_dict = Interner::new();
+    let etypes = EtypeCodes {
+        enter: etype_dict.intern(ENTER),
+        leave: etype_dict.intern(LEAVE),
+        instant: etype_dict.intern(INSTANT),
+    };
+    (Arc::new(etype_dict), etypes)
+}
+
+/// Assemble one decoded rank shard into a canonical events table. The
+/// name / event-type dictionaries are shared (`Arc`), so codes resolve
+/// identically across every shard of the same archive.
+pub(crate) fn shard_table(
+    sh: Shard,
+    names: &Arc<Interner>,
+    etype_dict: &Arc<Interner>,
+) -> Result<Table> {
+    let n = sh.ts.len();
+    let mut table = Table::new();
+    table.push(COL_TS, Column::I64(sh.ts))?;
+    table.push(COL_TYPE, Column::Str { codes: sh.et, dict: Arc::clone(etype_dict) })?;
+    table.push(COL_NAME, Column::Str { codes: sh.nm, dict: Arc::clone(names) })?;
+    table.push(COL_PROC, Column::I64(sh.pr))?;
+    table.push(COL_THREAD, Column::I64(vec![0; n]))?;
+    table.push(COL_PARTNER, Column::I64(sh.pa))?;
+    table.push(COL_MSG_SIZE, Column::I64(sh.ms))?;
+    table.push(COL_TAG, Column::I64(sh.tg))?;
+    Ok(table)
 }
 
 /// Read an OTF2-sim directory with `threads` reader threads (0 = all
@@ -292,13 +326,7 @@ struct EtypeCodes {
 /// so the result is canonically sorted without a global sort.
 pub fn read(dir: &Path, threads: usize) -> Result<Trace> {
     let defs = read_defs(dir)?;
-    let mut etype_dict = Interner::new();
-    let etypes = EtypeCodes {
-        enter: etype_dict.intern(ENTER),
-        leave: etype_dict.intern(LEAVE),
-        instant: etype_dict.intern(INSTANT),
-    };
-    let etype_dict = Arc::new(etype_dict);
+    let (etype_dict, etypes) = etype_codes();
 
     let shards = super::parallel_map(defs.ranks.len(), threads, |i| {
         read_rank(dir, defs.ranks[i], &defs, &etypes)

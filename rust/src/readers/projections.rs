@@ -244,7 +244,8 @@ mod tests {
             "BEGIN_PROCESSING 0 100\nCREATION 1 150 1 2048\nEND_PROCESSING 0 200\nBEGIN_IDLE 200\nEND_IDLE 300\n",
         )
         .unwrap();
-        std::fs::write(dir.join("app.1.log"), "BEGIN_PROCESSING 1 0\nEND_PROCESSING 1 50\n").unwrap();
+        std::fs::write(dir.join("app.1.log"), "BEGIN_PROCESSING 1 0\nEND_PROCESSING 1 50\n")
+            .unwrap();
         let t = read(&dir, 1).unwrap();
         assert_eq!(t.num_processes().unwrap(), 2);
         validate_nesting(&t).unwrap();

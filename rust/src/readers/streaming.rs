@@ -1,0 +1,745 @@
+//! Streaming shard-at-a-time ingest: [`ShardedReader`] yields
+//! process-aligned [`TraceShard`]s incrementally, so the analysis driver
+//! in [`crate::exec::stream`] never materializes the whole trace — peak
+//! memory is bounded by O(workers × shard + results) instead of O(trace).
+//!
+//! | format      | strategy                                               |
+//! |-------------|--------------------------------------------------------|
+//! | otf2-dir    | one rank file decoded per shard (the flagship path)    |
+//! | csv         | line stream from disk; shard per process boundary      |
+//! | chrome json | incremental object scanner over the raw text (the file |
+//! |             | bytes stay resident, but never the parsed JSON tree or |
+//! |             | row set — the dominant costs of the eager reader)      |
+//! | hpctoolkit  | split-after-load fallback ([`SplitReader`])            |
+//! | projections | split-after-load fallback ([`SplitReader`])            |
+//!
+//! The csv / chrome readers require process blocks to appear contiguous
+//! and ascending (what every writer in this crate emits, and what
+//! per-rank trace formats produce naturally); a cheap pre-scan verifies
+//! this and falls back to eager-load + [`SplitReader`] otherwise, so
+//! `open_sharded` accepts everything `read_auto` accepts.
+//!
+//! Determinism: concatenating shard rows in yield order reproduces the
+//! canonical (Process, Thread, Timestamp) row order of the eager reader
+//! exactly — the property every order-stable merge in
+//! [`crate::exec::stream`] relies on to stay bit-identical with eager
+//! `read_auto` + sequential analysis.
+
+use super::{chrome, csv, hpctoolkit, otf2, projections};
+use crate::df::Interner;
+use crate::trace::{Trace, TraceBuilder, TraceMeta};
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// One process-aligned slice of a trace, in canonical row order.
+pub struct TraceShard {
+    /// Position in the stream (0-based); shard order is row order.
+    pub index: usize,
+    pub trace: Trace,
+}
+
+/// Incremental, process-aligned trace reader.
+pub trait ShardedReader {
+    /// Yield the next shard in canonical row order, or None at end.
+    fn next_shard(&mut self) -> Result<Option<TraceShard>>;
+
+    /// Number of shards this reader will yield, when known up front.
+    fn shard_count_hint(&self) -> Option<usize>;
+
+    /// True when shards decode incrementally from the source (bounded
+    /// memory); false for split-after-load fallbacks, which hold the
+    /// whole trace while yielding.
+    fn is_streaming(&self) -> bool;
+
+    /// For split-after-load fallbacks: recover the already-loaded trace
+    /// instead of throwing the parse away (consumes the reader).
+    /// Streaming readers return None. Callers that would otherwise
+    /// re-open the source repeatedly (e.g. a session keeping a
+    /// non-streamable entry) use this to avoid paying a full re-read per
+    /// analysis.
+    fn into_eager_trace(self: Box<Self>) -> Option<Trace> {
+        None
+    }
+}
+
+/// Open `path` as a sharded reader with format auto-detection, mirroring
+/// [`super::read_auto`].
+pub fn open_sharded(path: &Path) -> Result<Box<dyn ShardedReader>> {
+    if path.is_dir() {
+        if path.join("defs.bin").exists() {
+            return Ok(Box::new(Otf2ShardedReader::open(path)?));
+        }
+        if path.join("meta.db").exists() {
+            return Ok(Box::new(SplitReader::new(hpctoolkit::read(path)?)?));
+        }
+        for entry in std::fs::read_dir(path)? {
+            let p = entry?.path();
+            if p.extension().and_then(|e| e.to_str()) == Some("sts") {
+                return Ok(Box::new(SplitReader::new(projections::read(path, 0)?)?));
+            }
+        }
+        bail!("unrecognized trace directory: {}", path.display());
+    }
+    match path.extension().and_then(|e| e.to_str()).unwrap_or("") {
+        "csv" => csv_sharded(path),
+        "json" => chrome_sharded(path),
+        _ => bail!("unrecognized trace file: {}", path.display()),
+    }
+}
+
+// -- split-after-load fallback ---------------------------------------------
+
+/// Fallback reader: an eagerly-loaded trace yielded one process at a
+/// time. Memory is O(trace) during iteration; row order and per-shard
+/// alignment are identical to the truly-streaming readers, so every
+/// downstream merge behaves the same.
+pub struct SplitReader {
+    trace: Trace,
+    ranges: Vec<(usize, usize)>,
+    next: usize,
+}
+
+impl SplitReader {
+    pub fn new(trace: Trace) -> Result<Self> {
+        let shards = crate::exec::process_shards(&trace, usize::MAX)?;
+        Ok(SplitReader { trace, ranges: shards.ranges, next: 0 })
+    }
+}
+
+impl ShardedReader for SplitReader {
+    fn next_shard(&mut self) -> Result<Option<TraceShard>> {
+        if self.next >= self.ranges.len() {
+            return Ok(None);
+        }
+        let index = self.next;
+        self.next += 1;
+        let trace = crate::exec::subtrace(&self.trace, self.ranges[index])?;
+        Ok(Some(TraceShard { index, trace }))
+    }
+
+    fn shard_count_hint(&self) -> Option<usize> {
+        Some(self.ranges.len())
+    }
+
+    fn is_streaming(&self) -> bool {
+        false
+    }
+
+    fn into_eager_trace(self: Box<Self>) -> Option<Trace> {
+        Some(self.trace)
+    }
+}
+
+// -- otf2: one rank file per shard -----------------------------------------
+
+/// OTF2-sim streaming reader: global defs are read once; each
+/// `rank_<r>.bin` stream decodes on demand into one shard. This is true
+/// bounded-memory ingest — only one rank's events exist at a time, and
+/// the shared `Arc` dictionaries keep name codes identical across shards.
+pub struct Otf2ShardedReader {
+    dir: PathBuf,
+    defs: otf2::Defs,
+    etype_dict: Arc<Interner>,
+    etypes: otf2::EtypeCodes,
+    next: usize,
+}
+
+impl Otf2ShardedReader {
+    pub fn open(dir: &Path) -> Result<Self> {
+        let defs = otf2::read_defs(dir)?;
+        let (etype_dict, etypes) = otf2::etype_codes();
+        Ok(Otf2ShardedReader { dir: dir.to_path_buf(), defs, etype_dict, etypes, next: 0 })
+    }
+}
+
+impl ShardedReader for Otf2ShardedReader {
+    fn next_shard(&mut self) -> Result<Option<TraceShard>> {
+        if self.next >= self.defs.ranks.len() {
+            return Ok(None);
+        }
+        let index = self.next;
+        self.next += 1;
+        let rank = self.defs.ranks[index];
+        let sh = otf2::read_rank(&self.dir, rank, &self.defs, &self.etypes)?;
+        let table = otf2::shard_table(sh, &self.defs.names, &self.etype_dict)?;
+        let meta = TraceMeta {
+            format: "otf2".into(),
+            source: self.dir.display().to_string(),
+            app: self.defs.app.clone(),
+        };
+        Ok(Some(TraceShard { index, trace: Trace::new(table, meta) }))
+    }
+
+    fn shard_count_hint(&self) -> Option<usize> {
+        Some(self.defs.ranks.len())
+    }
+
+    fn is_streaming(&self) -> bool {
+        true
+    }
+}
+
+// -- csv: line stream with process-boundary shard emission ------------------
+
+/// Open a CSV trace for streaming. A pre-scan (O(1) memory) verifies the
+/// file's process blocks are contiguous and ascending — the canonical
+/// order this crate's writer emits. Files that interleave processes fall
+/// back to eager load + [`SplitReader`].
+pub fn csv_sharded(path: &Path) -> Result<Box<dyn ShardedReader>> {
+    match csv_prescan(path)? {
+        Some(runs) => {
+            let f = std::fs::File::open(path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            let mut lines = std::io::BufReader::new(f).lines();
+            let header = lines.next().context("empty csv")??;
+            let h = csv::parse_header(&header)?;
+            Ok(Box::new(CsvStream {
+                lines,
+                header: h,
+                meta: csv::csv_meta(path),
+                pending: None,
+                line_no: 1,
+                index: 0,
+                shards_total: runs,
+            }))
+        }
+        None => Ok(Box::new(SplitReader::new(csv::read(path)?)?)),
+    }
+}
+
+/// Streamability pre-scan: parse only the Process field of every line and
+/// check blocks are contiguous + ascending. `Ok(Some(runs))` when
+/// streamable; `Ok(None)` requests the eager fallback (which also owns
+/// producing proper errors for malformed files).
+fn csv_prescan(path: &Path) -> Result<Option<usize>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header = match lines.next() {
+        Some(l) => l?,
+        None => return Ok(None),
+    };
+    let Ok(h) = csv::parse_header(&header) else {
+        return Ok(None);
+    };
+    let mut runs = 0usize;
+    let mut last: Option<i64> = None;
+    for line in lines {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let Some(p) = csv::parse_proc(&h, &line) else {
+            return Ok(None);
+        };
+        match last {
+            Some(q) if p == q => {}
+            Some(q) if p > q => {
+                runs += 1;
+                last = Some(p);
+            }
+            Some(_) => return Ok(None), // process reappeared: not grouped
+            None => {
+                runs = 1;
+                last = Some(p);
+            }
+        }
+    }
+    Ok(Some(runs))
+}
+
+struct CsvStream {
+    lines: std::io::Lines<std::io::BufReader<std::fs::File>>,
+    header: csv::CsvHeader,
+    meta: TraceMeta,
+    pending: Option<csv::CsvRow>,
+    /// 1-based file line number of the last line read (header = 1).
+    line_no: usize,
+    index: usize,
+    shards_total: usize,
+}
+
+impl ShardedReader for CsvStream {
+    fn next_shard(&mut self) -> Result<Option<TraceShard>> {
+        let mut b = TraceBuilder::new();
+        b.set_meta(self.meta.clone());
+        let mut cur: Option<i64> = None;
+        if let Some(row) = self.pending.take() {
+            cur = Some(row.proc);
+            csv::apply_row(&mut b, &row);
+        }
+        for line in self.lines.by_ref() {
+            let line = line?;
+            self.line_no += 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let row = csv::parse_row(&self.header, &line, self.line_no)?;
+            match cur {
+                Some(p) if row.proc != p => {
+                    self.pending = Some(row);
+                    let index = self.index;
+                    self.index += 1;
+                    return Ok(Some(TraceShard { index, trace: b.finish() }));
+                }
+                _ => {
+                    cur = Some(row.proc);
+                    csv::apply_row(&mut b, &row);
+                }
+            }
+        }
+        if cur.is_none() {
+            return Ok(None);
+        }
+        let index = self.index;
+        self.index += 1;
+        Ok(Some(TraceShard { index, trace: b.finish() }))
+    }
+
+    fn shard_count_hint(&self) -> Option<usize> {
+        Some(self.shards_total)
+    }
+
+    fn is_streaming(&self) -> bool {
+        true
+    }
+}
+
+// -- chrome: incremental object scanner -------------------------------------
+
+/// Open a Chrome Trace JSON file for streaming. Events are scanned one
+/// object at a time — the whole-document JSON tree and full row set
+/// (typically the dominant memory costs of the eager reader, several
+/// times the file size) never exist. The raw file text does stay
+/// resident for the stream's lifetime, so peak memory here is
+/// O(file bytes + workers × shard + results); a disk-cursor scanner is
+/// the ROADMAP follow-up. A pre-scan verifies pid blocks are contiguous
+/// + ascending, else falls back to eager load.
+pub fn chrome_sharded(path: &Path) -> Result<Box<dyn ShardedReader>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    match chrome_prescan(&text) {
+        Some((runs, app)) => {
+            let pos = find_events_array(text.as_bytes())?;
+            Ok(Box::new(ChromeStream {
+                text,
+                pos,
+                meta: TraceMeta {
+                    format: "chrome".into(),
+                    source: path.display().to_string(),
+                    app,
+                },
+                pending: None,
+                event_idx: 0,
+                index: 0,
+                shards_total: runs,
+                done: false,
+            }))
+        }
+        None => Ok(Box::new(SplitReader::new(chrome::read(path)?)?)),
+    }
+}
+
+/// Pre-scan: walk every event object, collect the application name from
+/// metadata records, and check that row-producing events keep pids
+/// contiguous + ascending. None requests the eager fallback (including
+/// for malformed files, whose errors the eager reader reports properly).
+fn chrome_prescan(text: &str) -> Option<(usize, String)> {
+    let b = text.as_bytes();
+    let mut pos = find_events_array(b).ok()?;
+    let mut runs = 0usize;
+    let mut last: Option<i64> = None;
+    let mut app = String::new();
+    loop {
+        let slice = match next_event(b, &mut pos) {
+            Ok(Some(s)) => s,
+            Ok(None) => break,
+            Err(_) => return None,
+        };
+        let e = Json::parse(slice).ok()?;
+        if !chrome::is_row_event(&e) {
+            if e.get_str("ph") == Some("M") && e.get_str("name") == Some("process_name") {
+                if let Some(n) = e.get("args").and_then(|a| a.get_str("name")) {
+                    app = n.to_string();
+                }
+            }
+            continue;
+        }
+        let pid = chrome::event_pid(&e);
+        match last {
+            Some(q) if pid == q => {}
+            Some(q) if pid > q => {
+                runs += 1;
+                last = Some(pid);
+            }
+            Some(_) => return None,
+            None => {
+                runs = 1;
+                last = Some(pid);
+            }
+        }
+    }
+    Some((runs, app))
+}
+
+struct ChromeStream {
+    text: String,
+    pos: usize,
+    meta: TraceMeta,
+    pending: Option<(usize, Json)>,
+    event_idx: usize,
+    index: usize,
+    shards_total: usize,
+    /// Set once the events array closes — the scanner must not run past
+    /// it into trailing document keys (object-form files).
+    done: bool,
+}
+
+impl ShardedReader for ChromeStream {
+    fn next_shard(&mut self) -> Result<Option<TraceShard>> {
+        if self.done && self.pending.is_none() {
+            return Ok(None);
+        }
+        let mut b = TraceBuilder::new();
+        b.set_meta(self.meta.clone());
+        let mut cur: Option<i64> = None;
+        if let Some((i, e)) = self.pending.take() {
+            cur = Some(chrome::event_pid(&e));
+            chrome::apply_event(&mut b, &e, i)?;
+        }
+        while !self.done {
+            let parsed = match next_event(self.text.as_bytes(), &mut self.pos)? {
+                None => None,
+                Some(slice) => Some(Json::parse(slice)?),
+            };
+            let Some(e) = parsed else {
+                self.done = true;
+                break;
+            };
+            let i = self.event_idx;
+            self.event_idx += 1;
+            if !chrome::is_row_event(&e) {
+                continue; // metadata: already folded into meta by the pre-scan
+            }
+            let pid = chrome::event_pid(&e);
+            match cur {
+                Some(p) if pid != p => {
+                    self.pending = Some((i, e));
+                    let index = self.index;
+                    self.index += 1;
+                    return Ok(Some(TraceShard { index, trace: b.finish() }));
+                }
+                _ => {
+                    cur = Some(pid);
+                    chrome::apply_event(&mut b, &e, i)?;
+                }
+            }
+        }
+        if cur.is_none() {
+            return Ok(None);
+        }
+        let index = self.index;
+        self.index += 1;
+        Ok(Some(TraceShard { index, trace: b.finish() }))
+    }
+
+    fn shard_count_hint(&self) -> Option<usize> {
+        Some(self.shards_total)
+    }
+
+    fn is_streaming(&self) -> bool {
+        true
+    }
+}
+
+// -- minimal incremental JSON scanning --------------------------------------
+//
+// Just enough lexing to slice one `{...}` event out of the (possibly
+// huge) events array; each slice then goes through the full
+// `Json::parse`, so event *interpretation* is byte-for-byte the eager
+// reader's.
+
+fn skip_ws(b: &[u8], pos: &mut usize) {
+    while let Some(c) = b.get(*pos) {
+        if c.is_ascii_whitespace() {
+            *pos += 1;
+        } else {
+            break;
+        }
+    }
+}
+
+fn scan_string(b: &[u8], pos: &mut usize) -> Result<()> {
+    *pos += 1; // opening quote
+    while let Some(&c) = b.get(*pos) {
+        match c {
+            b'\\' => *pos += 2,
+            b'"' => {
+                *pos += 1;
+                return Ok(());
+            }
+            _ => *pos += 1,
+        }
+    }
+    bail!("chrome trace: unterminated string")
+}
+
+/// Advance past one JSON value of any kind (balanced braces / brackets,
+/// string-aware).
+fn scan_value(b: &[u8], pos: &mut usize) -> Result<()> {
+    match b.get(*pos) {
+        Some(b'"') => scan_string(b, pos),
+        Some(b'{') | Some(b'[') => {
+            let mut depth = 0usize;
+            loop {
+                match b.get(*pos) {
+                    None => bail!("chrome trace: unbalanced brackets"),
+                    Some(b'"') => {
+                        scan_string(b, pos)?;
+                        continue;
+                    }
+                    Some(b'{') | Some(b'[') => depth += 1,
+                    Some(b'}') | Some(b']') => {
+                        depth -= 1;
+                        if depth == 0 {
+                            *pos += 1;
+                            return Ok(());
+                        }
+                    }
+                    Some(_) => {}
+                }
+                *pos += 1;
+            }
+        }
+        Some(_) => {
+            while let Some(&c) = b.get(*pos) {
+                if c == b',' || c == b']' || c == b'}' || c.is_ascii_whitespace() {
+                    break;
+                }
+                *pos += 1;
+            }
+            Ok(())
+        }
+        None => bail!("chrome trace: unexpected end of input"),
+    }
+}
+
+/// Position just past the `[` of the events array: the document root for
+/// array-form files, the `traceEvents` value for object-form files.
+fn find_events_array(b: &[u8]) -> Result<usize> {
+    let mut pos = 0usize;
+    skip_ws(b, &mut pos);
+    match b.get(pos) {
+        Some(b'[') => Ok(pos + 1),
+        Some(b'{') => {
+            pos += 1;
+            loop {
+                skip_ws(b, &mut pos);
+                match b.get(pos) {
+                    Some(b'"') => {}
+                    Some(b'}') | None => bail!("object form requires 'traceEvents' array"),
+                    Some(b',') => {
+                        pos += 1;
+                        continue;
+                    }
+                    Some(_) => bail!("chrome trace: expected object key"),
+                }
+                let kstart = pos;
+                scan_string(b, &mut pos)?;
+                let key = &b[kstart + 1..pos - 1];
+                skip_ws(b, &mut pos);
+                if b.get(pos) != Some(&b':') {
+                    bail!("chrome trace: expected ':' after key");
+                }
+                pos += 1;
+                skip_ws(b, &mut pos);
+                if key == b"traceEvents" {
+                    if b.get(pos) != Some(&b'[') {
+                        bail!("object form requires 'traceEvents' array");
+                    }
+                    return Ok(pos + 1);
+                }
+                scan_value(b, &mut pos)?;
+            }
+        }
+        _ => bail!("chrome trace must be an array or object"),
+    }
+}
+
+/// The next object slice in the events array, or None at `]`.
+fn next_event<'a>(b: &'a [u8], pos: &mut usize) -> Result<Option<&'a str>> {
+    skip_ws(b, pos);
+    if b.get(*pos) == Some(&b',') {
+        *pos += 1;
+        skip_ws(b, pos);
+    }
+    match b.get(*pos) {
+        Some(b']') => {
+            *pos += 1;
+            Ok(None)
+        }
+        Some(_) => {
+            let start = *pos;
+            scan_value(b, pos)?;
+            Ok(Some(std::str::from_utf8(&b[start..*pos])?))
+        }
+        None => bail!("chrome trace: unterminated events array"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen::{self, GenConfig};
+    use crate::readers::read_auto;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pipit_streaming_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    /// Drain a reader and concatenate shard rows back into column vectors
+    /// for comparison against the eager read.
+    fn drain(r: &mut dyn ShardedReader) -> (Vec<i64>, Vec<i64>, Vec<String>, usize) {
+        let mut ts = Vec::new();
+        let mut pr = Vec::new();
+        let mut names = Vec::new();
+        let mut shards = 0;
+        while let Some(sh) = r.next_shard().unwrap() {
+            assert_eq!(sh.index, shards);
+            shards += 1;
+            ts.extend_from_slice(sh.trace.timestamps().unwrap());
+            pr.extend_from_slice(sh.trace.processes().unwrap());
+            let (nm, dict) = sh.trace.events.strs(crate::trace::COL_NAME).unwrap();
+            for &c in nm {
+                names.push(dict.resolve(c).unwrap_or("").to_string());
+            }
+        }
+        (ts, pr, names, shards)
+    }
+
+    fn assert_rows_match(path: &Path) {
+        let eager = read_auto(path).unwrap();
+        let mut r = open_sharded(path).unwrap();
+        if let Some(hint) = r.shard_count_hint() {
+            assert!(hint >= 1);
+        }
+        let (ts, pr, names, shards) = drain(r.as_mut());
+        assert_eq!(ts, eager.timestamps().unwrap(), "{}", path.display());
+        assert_eq!(pr, eager.processes().unwrap(), "{}", path.display());
+        let (nm, dict) = eager.events.strs(crate::trace::COL_NAME).unwrap();
+        for (i, &c) in nm.iter().enumerate() {
+            assert_eq!(names[i], dict.resolve(c).unwrap_or(""), "row {i}");
+        }
+        assert_eq!(shards, eager.num_processes().unwrap());
+    }
+
+    #[test]
+    fn otf2_streams_one_rank_per_shard() {
+        let t = gen::generate("laghos", &GenConfig::new(6, 3), 1).unwrap();
+        let dir = tmp("otf2_rows");
+        let _ = std::fs::remove_dir_all(&dir);
+        otf2::write(&t, &dir).unwrap();
+        let r = open_sharded(&dir).unwrap();
+        assert!(r.is_streaming());
+        assert_eq!(r.shard_count_hint(), Some(6));
+        assert_rows_match(&dir);
+    }
+
+    #[test]
+    fn csv_streams_canonical_files() {
+        let t = gen::generate("gol", &GenConfig::new(4, 3), 1).unwrap();
+        let p = tmp("rows.csv");
+        csv::write(&t, &p).unwrap();
+        let r = open_sharded(&p).unwrap();
+        assert!(r.is_streaming());
+        assert_rows_match(&p);
+    }
+
+    #[test]
+    fn chrome_streams_canonical_files() {
+        let t = gen::generate("tortuga", &GenConfig::new(4, 3), 1).unwrap();
+        let p = tmp("rows.json");
+        chrome::write(&t, &p).unwrap();
+        let r = open_sharded(&p).unwrap();
+        assert!(r.is_streaming());
+        assert_rows_match(&p);
+    }
+
+    #[test]
+    fn interleaved_csv_falls_back_to_split_after_load() {
+        // processes alternate line-to-line: not streamable, but the
+        // fallback must still yield process-aligned shards whose
+        // concatenation equals the eager (canonically sorted) read.
+        let src = "Timestamp (ns), Event Type, Name, Process\n\
+                   0, Enter, main, 1\n\
+                   0, Enter, main, 0\n\
+                   9, Leave, main, 1\n\
+                   9, Leave, main, 0\n";
+        let p = tmp("interleaved.csv");
+        std::fs::write(&p, src).unwrap();
+        let r = open_sharded(&p).unwrap();
+        assert!(!r.is_streaming());
+        assert_rows_match(&p);
+    }
+
+    #[test]
+    fn descending_process_blocks_fall_back() {
+        let src = "Timestamp (ns), Event Type, Name, Process\n\
+                   0, Enter, main, 1\n\
+                   9, Leave, main, 1\n\
+                   0, Enter, main, 0\n\
+                   9, Leave, main, 0\n";
+        let p = tmp("descending.csv");
+        std::fs::write(&p, src).unwrap();
+        let r = open_sharded(&p).unwrap();
+        assert!(!r.is_streaming());
+        assert_rows_match(&p);
+    }
+
+    #[test]
+    fn chrome_object_form_and_metadata_keys() {
+        let src = r#"{"displayTimeUnit": "ms", "traceEvents":[
+            {"name":"main","ph":"B","ts":0,"pid":0,"tid":0},
+            {"name":"main","ph":"E","ts":50,"pid":0,"tid":0},
+            {"name":"step","ph":"X","ts":0,"dur":10,"pid":1,"tid":0},
+            {"name":"process_name","ph":"M","pid":0,"args":{"name":"axonn"}}
+        ], "otherData": {"nested": [1, "a]b", {"x": "}"}]}}"#;
+        let p = tmp("objform.json");
+        std::fs::write(&p, src).unwrap();
+        let mut r = open_sharded(&p).unwrap();
+        assert!(r.is_streaming());
+        let first = r.next_shard().unwrap().unwrap();
+        assert_eq!(first.trace.meta.app, "axonn");
+        assert_eq!(first.trace.processes().unwrap(), &[0, 0]);
+        let second = r.next_shard().unwrap().unwrap();
+        assert_eq!(second.trace.len(), 2); // X -> Enter + Leave
+        assert!(r.next_shard().unwrap().is_none());
+    }
+
+    #[test]
+    fn empty_sources_yield_no_shards() {
+        let p = tmp("empty.csv");
+        std::fs::write(&p, "Timestamp (ns), Event Type, Name, Process\n").unwrap();
+        let mut r = open_sharded(&p).unwrap();
+        assert!(r.next_shard().unwrap().is_none());
+
+        let p = tmp("empty.json");
+        std::fs::write(&p, "[]").unwrap();
+        let mut r = open_sharded(&p).unwrap();
+        assert!(r.next_shard().unwrap().is_none());
+    }
+
+    #[test]
+    fn scanner_handles_strings_with_brackets() {
+        let b = br#"[{"name":"f(a, b]","ph":"B","ts":0,"pid":0}]"#;
+        let mut pos = find_events_array(b).unwrap();
+        let first = next_event(b, &mut pos).unwrap().unwrap();
+        assert!(first.contains("f(a, b]"));
+        assert!(next_event(b, &mut pos).unwrap().is_none());
+    }
+}

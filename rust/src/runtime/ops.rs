@@ -227,9 +227,8 @@ mod tests {
         }
         let mut tr = b.finish();
         let hlo = time_profile_hlo(&rt, &mut tr).unwrap();
-        let rust =
-            crate::analysis::time_profile(&mut tr, rt.contract.th_bins, Some(rt.contract.th_funcs - 1))
-                .unwrap();
+        let (bins, funcs) = (rt.contract.th_bins, rt.contract.th_funcs);
+        let rust = crate::analysis::time_profile(&mut tr, bins, Some(funcs - 1)).unwrap();
         assert_eq!(hlo.func_names, rust.func_names);
         assert!((hlo.total() - rust.total()).abs() < 1e-2 * rust.total().max(1.0));
         for b in (0..hlo.num_bins()).step_by(13) {

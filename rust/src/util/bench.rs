@@ -30,6 +30,9 @@ impl Sample {
 
     pub fn median(&self) -> f64 {
         let mut v = self.runs_ns.clone();
+        if v.is_empty() {
+            return f64::NAN;
+        }
         v.sort_by(|a, b| a.total_cmp(b));
         let n = v.len();
         if n % 2 == 1 {
@@ -86,12 +89,14 @@ impl Bencher {
 
     /// Median-over-median speedup of `base` relative to `faster` —
     /// > 1.0 means `faster` won. None if either sample is missing or
-    /// degenerate. Used by the scaling benches to report
-    /// sequential-vs-sharded ratios.
+    /// degenerate: empty run lists, non-finite medians, or a zero
+    /// denominator (sub-nanosecond ops can clock a 0 ns median, and
+    /// 0/0 must not surface as a ratio). Used by the scaling benches to
+    /// report sequential-vs-sharded ratios and by the CI bench gate.
     pub fn speedup(&self, base: &str, faster: &str) -> Option<f64> {
         let b = self.samples.iter().find(|s| s.name == base)?.median();
         let f = self.samples.iter().find(|s| s.name == faster)?.median();
-        if f > 0.0 {
+        if b.is_finite() && f.is_finite() && f > 0.0 {
             Some(b / f)
         } else {
             None
@@ -156,5 +161,20 @@ mod tests {
         b.samples.push(Sample { name: "fast".into(), runs_ns: vec![25.0, 25.0] });
         assert_eq!(b.speedup("slow", "fast"), Some(4.0));
         assert_eq!(b.speedup("slow", "missing"), None);
+    }
+
+    #[test]
+    fn speedup_guards_degenerate_samples() {
+        let mut b = Bencher { warmup: 0, iters: 0, samples: Vec::new() };
+        b.samples.push(Sample { name: "slow".into(), runs_ns: vec![100.0] });
+        // sub-nanosecond op: every timed run rounds to 0 ns
+        b.samples.push(Sample { name: "zero".into(), runs_ns: vec![0.0, 0.0, 0.0] });
+        // pathological: sample recorded with no runs at all
+        b.samples.push(Sample { name: "empty".into(), runs_ns: vec![] });
+        assert_eq!(b.speedup("slow", "zero"), None, "zero denominator");
+        assert_eq!(b.speedup("zero", "slow"), Some(0.0));
+        assert_eq!(b.speedup("slow", "empty"), None, "NaN median");
+        assert_eq!(b.speedup("empty", "slow"), None);
+        assert!(b.samples[2].median().is_nan());
     }
 }

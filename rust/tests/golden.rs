@@ -7,7 +7,9 @@
 use pipit::analysis::{self, CommUnit};
 use pipit::df::NULL_I64;
 use pipit::readers;
-use pipit::trace::{Trace, COL_MSG_SIZE, COL_NAME, COL_PARTNER, COL_PROC, COL_TAG, COL_THREAD, COL_TS, COL_TYPE};
+use pipit::trace::{
+    Trace, COL_MSG_SIZE, COL_NAME, COL_PARTNER, COL_PROC, COL_TAG, COL_THREAD, COL_TS, COL_TYPE,
+};
 use std::path::PathBuf;
 
 fn fixture(name: &str) -> PathBuf {
@@ -72,6 +74,29 @@ fn otf2_reader_matches_golden() {
     // parallel read of the same fixture is identical
     let t2 = readers::otf2::read(&fixture("tiny_otf2"), 4).unwrap();
     assert_eq!(dump(&t2), expected("expected_otf2.txt"));
+}
+
+#[test]
+fn streaming_ingest_matches_goldens_for_every_format() {
+    // Shard-at-a-time ingest of each fixture must reproduce the exact
+    // canonical row dump of the eager readers, shard rows concatenated
+    // in yield order.
+    for (fix, golden, want_shards) in [
+        ("tiny.csv", "expected_csv.txt", 2usize),
+        ("tiny_chrome.json", "expected_chrome.txt", 2),
+        ("tiny_otf2", "expected_otf2.txt", 2),
+    ] {
+        let mut r = readers::open_sharded(&fixture(fix)).unwrap();
+        assert!(r.is_streaming(), "{fix} should stream");
+        let mut out = String::new();
+        let mut shards = 0;
+        while let Some(sh) = r.next_shard().unwrap() {
+            shards += 1;
+            out.push_str(&dump(&sh.trace));
+        }
+        assert_eq!(out, expected(golden), "{fix}");
+        assert_eq!(shards, want_shards, "{fix}");
+    }
 }
 
 #[test]

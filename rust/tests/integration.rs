@@ -162,7 +162,9 @@ fn figure_pipeline_spec() {
     let mut s = AnalysisSession::new();
     let results = p.run(&mut s).unwrap();
     assert_eq!(results.len(), 11);
-    for f in ["fig3.csv", "fig4.csv", "fig6.csv", "fig7.csv", "fig9.csv", "fig10.txt", "fig11.csv"] {
+    let outputs =
+        ["fig3.csv", "fig4.csv", "fig6.csv", "fig7.csv", "fig9.csv", "fig10.txt", "fig11.csv"];
+    for f in outputs {
         assert!(dir.join(f).exists(), "{f} missing");
         assert!(std::fs::metadata(dir.join(f)).unwrap().len() > 0, "{f} empty");
     }

@@ -3,13 +3,21 @@
 //! sharded output at 2 / 4 / 8 threads must be **identical** to the
 //! single-threaded result — same ordering, same f64 bits. Configs are
 //! drawn from the crate's seeded RNG so failures reproduce exactly.
+//!
+//! The second half covers the streaming ingest layer: for csv / chrome /
+//! otf2 sources, every routed analysis over `open_sharded` must be
+//! bit-identical to eager `read_auto` + the sequential engine at 1 / 2 /
+//! 4 / 8 threads, with peak resident rows provably shard-bounded
+//! (`StreamStats`), and batch mode must equal per-trace sequential runs.
 
 use pipit::analysis::{self, CommUnit, Metric};
 use pipit::df::Expr;
 use pipit::exec;
 use pipit::gen::{self, GenConfig};
+use pipit::readers::streaming::open_sharded;
 use pipit::trace::{Trace, TraceBuilder};
 use pipit::util::rng::Rng;
+use std::path::{Path, PathBuf};
 
 const THREADS: &[usize] = &[2, 4, 8];
 const METRICS: &[Metric] = &[Metric::ExcTime, Metric::IncTime, Metric::Count];
@@ -137,6 +145,46 @@ fn idle_time_parity() {
 }
 
 #[test]
+fn comm_over_time_parity() {
+    for (app, t) in traces() {
+        for bins in [24usize, 64] {
+            let seq = analysis::comm_over_time(&t, bins).unwrap();
+            for &th in THREADS {
+                let sh = exec::ops::comm_over_time(&t, bins, th).unwrap();
+                assert_eq!(seq, sh, "{app} bins={bins} at {th} threads");
+            }
+        }
+    }
+}
+
+#[test]
+fn message_histogram_parity() {
+    for (app, t) in traces() {
+        for bins in [7usize, 10] {
+            let seq = analysis::message_histogram(&t, bins).unwrap();
+            for &th in THREADS {
+                let sh = exec::ops::message_histogram(&t, bins, th).unwrap();
+                assert_eq!(seq, sh, "{app} bins={bins} at {th} threads");
+            }
+        }
+    }
+}
+
+#[test]
+fn create_cct_parity() {
+    for (app, t) in traces() {
+        let mut tc = t.clone();
+        let seq = analysis::create_cct(&mut tc).unwrap();
+        let seq_col = tc.events.i64s("_cct_node").unwrap().to_vec();
+        for &th in THREADS {
+            let (sh, col) = exec::ops::create_cct(&t, th).unwrap();
+            assert_eq!(seq, sh, "{app} at {th} threads");
+            assert_eq!(seq_col, col, "{app} _cct_node at {th} threads");
+        }
+    }
+}
+
+#[test]
 fn filter_parity() {
     for (app, t) in traces() {
         let (lo, hi) = t.time_range().unwrap();
@@ -172,6 +220,12 @@ fn assert_all_ops_match(t: &Trace, threads: usize, ctx: &str) {
     assert_eq!(seq_it, exec::ops::idle_time(t, None, threads).unwrap(), "{ctx}");
     let seq_li = analysis::load_imbalance(&mut t.clone(), Metric::ExcTime, 2).unwrap();
     assert_eq!(seq_li, exec::ops::load_imbalance(t, Metric::ExcTime, 2, threads).unwrap(), "{ctx}");
+    let seq_ct = analysis::comm_over_time(t, 8).unwrap();
+    assert_eq!(seq_ct, exec::ops::comm_over_time(t, 8, threads).unwrap(), "{ctx}");
+    let seq_mh = analysis::message_histogram(t, 5).unwrap();
+    assert_eq!(seq_mh, exec::ops::message_histogram(t, 5, threads).unwrap(), "{ctx}");
+    let seq_cct = analysis::create_cct(&mut t.clone()).unwrap();
+    assert_eq!(seq_cct, exec::ops::create_cct(t, threads).unwrap().0, "{ctx}");
 }
 
 #[test]
@@ -257,4 +311,182 @@ fn shard_plan_covers_every_generator() {
             assert_eq!(total, t.len(), "{app} at {th} threads");
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// streaming ingest: bit-identical to eager read_auto + sequential engines
+// ---------------------------------------------------------------------------
+
+fn stream_dir() -> PathBuf {
+    let dir = std::env::temp_dir().join("pipit_parity_streaming");
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// Every routed analysis over `open_sharded(path)` must equal the eager
+/// sequential result bitwise, at 1 / 2 / 4 / 8 threads.
+fn assert_streaming_matches_eager(path: &Path, ctx: &str) {
+    let eager = pipit::readers::read_auto(path).unwrap();
+    let seq_fp = analysis::flat_profile(&mut eager.clone(), Metric::ExcTime).unwrap();
+    let seq_fpc = analysis::flat_profile(&mut eager.clone(), Metric::Count).unwrap();
+    let seq_fbp =
+        analysis::flat_profile_by_process(&mut eager.clone(), Metric::IncTime).unwrap();
+    let seq_tp = analysis::time_profile(&mut eager.clone(), 32, Some(5)).unwrap();
+    let seq_cmb = analysis::comm_matrix(&eager, CommUnit::Bytes).unwrap();
+    let seq_cmc = analysis::comm_matrix(&eager, CommUnit::Count).unwrap();
+    let seq_cbp = analysis::comm_by_process(&eager, CommUnit::Bytes).unwrap();
+    let seq_mh = analysis::message_histogram(&eager, 10).unwrap();
+    let seq_cot = analysis::comm_over_time(&eager, 24).unwrap();
+    let seq_li = analysis::load_imbalance(&mut eager.clone(), Metric::ExcTime, 3).unwrap();
+    let seq_it = analysis::idle_time(&mut eager.clone(), None).unwrap();
+    let seq_cct = analysis::create_cct(&mut eager.clone()).unwrap();
+
+    for &th in &[1usize, 2, 4, 8] {
+        let open = || open_sharded(path).unwrap();
+
+        let (fp, stats) =
+            exec::stream::flat_profile(open().as_mut(), Metric::ExcTime, th).unwrap();
+        assert_eq!(fp, seq_fp, "{ctx} flat_profile exc @{th}");
+        assert_eq!(stats.total_rows, eager.len(), "{ctx} rows @{th}");
+        assert_eq!(
+            stats.num_processes,
+            eager.num_processes().unwrap(),
+            "{ctx} procs @{th}"
+        );
+
+        let (fpc, _) =
+            exec::stream::flat_profile(open().as_mut(), Metric::Count, th).unwrap();
+        assert_eq!(fpc, seq_fpc, "{ctx} flat_profile count @{th}");
+
+        let (fbp, _) =
+            exec::stream::flat_profile_by_process(open().as_mut(), Metric::IncTime, th).unwrap();
+        assert_eq!(fbp, seq_fbp, "{ctx} flat_profile_by_process @{th}");
+
+        let (tp, _) = exec::stream::time_profile(open().as_mut(), 32, Some(5), th).unwrap();
+        assert_time_profiles_equal(&seq_tp, &tp, &format!("{ctx} time_profile @{th}"));
+
+        let (cmb, _) = exec::stream::comm_matrix(open().as_mut(), CommUnit::Bytes, th).unwrap();
+        assert_eq!(cmb.procs, seq_cmb.procs, "{ctx} comm_matrix procs @{th}");
+        assert_eq!(cmb.data, seq_cmb.data, "{ctx} comm_matrix bytes @{th}");
+        let (cmc, _) = exec::stream::comm_matrix(open().as_mut(), CommUnit::Count, th).unwrap();
+        assert_eq!(cmc.data, seq_cmc.data, "{ctx} comm_matrix count @{th}");
+
+        let (cbp, _) =
+            exec::stream::comm_by_process(open().as_mut(), CommUnit::Bytes, th).unwrap();
+        assert_eq!(cbp, seq_cbp, "{ctx} comm_by_process @{th}");
+
+        let (mh, _) = exec::stream::message_histogram(open().as_mut(), 10, th).unwrap();
+        assert_eq!(mh, seq_mh, "{ctx} message_histogram @{th}");
+
+        let (cot, _) = exec::stream::comm_over_time(open().as_mut(), 24, th).unwrap();
+        assert_eq!(cot, seq_cot, "{ctx} comm_over_time @{th}");
+
+        let (li, _) =
+            exec::stream::load_imbalance(open().as_mut(), Metric::ExcTime, 3, th).unwrap();
+        assert_eq!(li, seq_li, "{ctx} load_imbalance @{th}");
+
+        let (it, _) = exec::stream::idle_time(open().as_mut(), None, th).unwrap();
+        assert_eq!(it, seq_it, "{ctx} idle_time @{th}");
+
+        let (cct, _) = exec::stream::create_cct(open().as_mut(), th).unwrap();
+        assert_eq!(cct, seq_cct, "{ctx} cct @{th}");
+    }
+}
+
+#[test]
+fn streaming_csv_matches_eager_for_all_routed_analyses() {
+    let t = gen::generate("laghos", &GenConfig::new(8, 4), 1).unwrap();
+    let p = stream_dir().join("laghos8.csv");
+    pipit::readers::csv::write(&t, &p).unwrap();
+    assert_streaming_matches_eager(&p, "csv");
+}
+
+#[test]
+fn streaming_chrome_matches_eager_for_all_routed_analyses() {
+    let t = gen::generate("tortuga", &GenConfig::new(8, 4), 1).unwrap();
+    let p = stream_dir().join("tortuga8.json");
+    pipit::readers::chrome::write(&t, &p).unwrap();
+    assert_streaming_matches_eager(&p, "chrome");
+}
+
+#[test]
+fn streaming_otf2_matches_eager_for_all_routed_analyses() {
+    let t = gen::generate("amg", &GenConfig::new(8, 4), 1).unwrap();
+    let dir = stream_dir().join("amg8_otf2");
+    let _ = std::fs::remove_dir_all(&dir);
+    pipit::readers::otf2::write(&t, &dir).unwrap();
+    assert_streaming_matches_eager(&dir, "otf2");
+}
+
+#[test]
+fn streaming_fallback_split_after_load_matches_eager() {
+    // A process-interleaved csv is not streamable: the writer dumps rows
+    // in stored order, and disabling the canonical sort keeps them
+    // interleaved on disk. open_sharded must fall back to
+    // split-after-load and stay bit-identical to the eager path.
+    let mut b = TraceBuilder::new();
+    b.sort_on_finish = false;
+    for i in 0..40i64 {
+        for p in 0..4i64 {
+            b.enter(p, 0, 10 * i, "work");
+            b.leave(p, 0, 10 * i + 7, "work");
+        }
+        b.send(i % 4, 0, 10 * i + 8, (i + 1) % 4, 256 * (i + 1), 0);
+    }
+    let t = b.finish();
+    let p = stream_dir().join("interleaved.csv");
+    pipit::readers::csv::write(&t, &p).unwrap();
+    let r = open_sharded(&p).unwrap();
+    assert!(!r.is_streaming(), "interleaved csv must use the fallback");
+    assert_streaming_matches_eager(&p, "fallback");
+}
+
+/// The memory-bound instrumentation hook: shard count vs rows proves the
+/// stream was consumed shard-at-a-time, never whole.
+#[test]
+fn streaming_ingest_is_shard_bounded() {
+    let t = gen::generate("laghos", &GenConfig::new(8, 4), 1).unwrap();
+    let dir = stream_dir().join("bounded_otf2");
+    let _ = std::fs::remove_dir_all(&dir);
+    pipit::readers::otf2::write(&t, &dir).unwrap();
+
+    let mut r = open_sharded(&dir).unwrap();
+    assert!(r.is_streaming(), "otf2 must stream, not split-after-load");
+    assert_eq!(r.shard_count_hint(), Some(8));
+    let (_, stats) = exec::stream::flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap();
+    assert_eq!(stats.shards, 8, "one shard per rank");
+    assert_eq!(stats.total_rows, t.len());
+    assert!(
+        stats.max_shard_rows * 2 <= stats.total_rows,
+        "peak resident rows not shard-bounded: {stats:?}"
+    );
+    assert_eq!(stats.num_processes, 8);
+}
+
+/// Batch mode must be identical to looping the traces through per-trace
+/// sequential runs.
+#[test]
+fn batch_mode_matches_per_trace_sequential_runs() {
+    let dir = stream_dir();
+    let mut paths = Vec::new();
+    for ranks in [2usize, 4, 8] {
+        let t = gen::generate("laghos", &GenConfig::new(ranks, 3), 1).unwrap();
+        let p = dir.join(format!("batch{ranks}_otf2"));
+        let _ = std::fs::remove_dir_all(&p);
+        pipit::readers::otf2::write(&t, &p).unwrap();
+        paths.push(p);
+    }
+    let batch = pipit::coordinator::AnalysisSession::new()
+        .with_threads(4)
+        .run_batch(&paths, Metric::ExcTime, 6)
+        .unwrap();
+
+    let mut traces: Vec<Trace> = paths
+        .iter()
+        .map(|p| pipit::readers::read_auto(p).unwrap())
+        .collect();
+    let seq = analysis::multi_run_analysis(&mut traces, Metric::ExcTime, 6).unwrap();
+    assert_eq!(batch.run_labels, seq.run_labels);
+    assert_eq!(batch.func_names, seq.func_names);
+    assert_eq!(batch.values, seq.values);
 }
