@@ -11,6 +11,14 @@
 //! sender and continues there. The result is a time-ordered list of event
 //! rows — returned as a filtered events table so it can be displayed or
 //! fed to the timeline view exactly like the paper's dataframe.
+//!
+//! The walk itself is a dependency chase and inherently sequential, but
+//! everything feeding it parallelizes: canonical order makes every
+//! process one contiguous row run ([`ProcRuns`]), and message matching
+//! shards by channel. The sequential, sharded
+//! ([`crate::exec::ops::critical_path`]) and streamed
+//! ([`crate::exec::stream::critical_path`]) drivers all funnel into
+//! [`paths_from_runs`], so their outputs are identical by construction.
 
 use super::messages::match_messages;
 use crate::df::Table;
@@ -56,81 +64,113 @@ impl CriticalPath {
     }
 }
 
-/// Identify critical paths. Returns one path per "finish straggler": index
-/// 0 is the path ending at the globally last event (the paper's
-/// `critical_paths[0]`).
-pub fn critical_path_analysis(trace: &mut Trace) -> Result<Vec<CriticalPath>> {
-    super::match_caller_callee::prepare(trace)?;
-    let n = trace.len();
-    if n == 0 {
-        bail!("empty trace");
-    }
-    let ts = trace.events.i64s(COL_TS)?;
-    let pr = trace.events.i64s(COL_PROC)?;
-    let msgs = match_messages(trace)?;
-
-    // rows per process in table (time) order
-    let procs = trace.process_ids()?;
-    let mut rows_of: std::collections::HashMap<i64, Vec<u32>> =
-        procs.iter().map(|&p| (p, Vec::new())).collect();
-    for i in 0..n {
-        rows_of.get_mut(&pr[i]).unwrap().push(i as u32);
-    }
-    // position of a row within its process stream
-    let mut pos_of = vec![0u32; n];
-    for rows in rows_of.values() {
-        for (k, &r) in rows.iter().enumerate() {
-            pos_of[r as usize] = k as u32;
-        }
-    }
-
-    // last event per process, globally latest first
-    let mut ends: Vec<u32> = procs
-        .iter()
-        .filter_map(|p| rows_of[p].last().copied())
-        .collect();
-    ends.sort_by_key(|&r| std::cmp::Reverse(ts[r as usize]));
-
-    let mut paths = Vec::new();
-    for &end in ends.iter().take(1.max(ends.len().min(1))) {
-        paths.push(walk_back(end, &rows_of, &pos_of, pr, &msgs.send_of_recv));
-    }
-    Ok(paths)
+/// The per-process structure of a canonically-ordered trace: one
+/// contiguous row run per process, ascending by process id, plus the
+/// timestamp of each run's last event. This is all the backward walk
+/// needs — the full event table never enters the core, which is what
+/// lets the streamed driver run it with O(processes + messages) state.
+#[derive(Debug, Clone, Default)]
+pub struct ProcRuns {
+    pub procs: Vec<i64>,
+    /// `[start, end)` global row range of each process, same order.
+    pub ranges: Vec<(usize, usize)>,
+    /// Timestamp of each process's last event, same order.
+    pub last_ts: Vec<i64>,
 }
 
-fn walk_back(
-    end: u32,
-    rows_of: &std::collections::HashMap<i64, Vec<u32>>,
-    pos_of: &[u32],
-    pr: &[i64],
-    send_of_recv: &[i64],
-) -> CriticalPath {
+impl ProcRuns {
+    /// Index of the run containing global row `row`.
+    fn run_of(&self, row: usize) -> usize {
+        // ranges are sorted and disjoint: first range ending past `row`
+        self.ranges.partition_point(|&(_, end)| end <= row)
+    }
+
+    /// Append a run; panics are avoided — callers guarantee ascending,
+    /// contiguous input (canonical order, validated upstream).
+    pub fn push(&mut self, proc: i64, range: (usize, usize), last_ts: i64) {
+        self.procs.push(proc);
+        self.ranges.push(range);
+        self.last_ts.push(last_ts);
+    }
+}
+
+/// Scan per-row process ids / timestamps into [`ProcRuns`]. Requires
+/// canonical order (validated by the callers via caller/callee matching).
+pub fn proc_runs(pr: &[i64], ts: &[i64]) -> ProcRuns {
+    let mut runs = ProcRuns::default();
+    let n = pr.len();
+    let mut start = 0usize;
+    for i in 1..=n {
+        if i == n || pr[i] != pr[start] {
+            runs.push(pr[start], (start, i), ts[i - 1]);
+            start = i;
+        }
+    }
+    runs
+}
+
+/// Identify the critical path(s) from the per-process structure and the
+/// message matching. Index 0 is the path ending at the globally last
+/// event (the paper's `critical_paths[0]`).
+pub fn paths_from_runs(runs: &ProcRuns, send_of_recv: &[i64]) -> Vec<CriticalPath> {
+    // last event per process, globally latest first (stable: ties keep
+    // ascending-process order, as the sequential HashMap-free walk did)
+    let mut ends: Vec<(u32, i64)> = runs
+        .ranges
+        .iter()
+        .zip(&runs.last_ts)
+        .map(|(&(_, end), &t)| ((end - 1) as u32, t))
+        .collect();
+    ends.sort_by_key(|&(_, t)| std::cmp::Reverse(t));
+
+    let mut paths = Vec::new();
+    for &(end, _) in ends.iter().take(1) {
+        paths.push(walk_back(end, runs, send_of_recv));
+    }
+    paths
+}
+
+fn walk_back(end: u32, runs: &ProcRuns, send_of_recv: &[i64]) -> CriticalPath {
     let mut path = Vec::new();
-    let mut cur = end;
+    let mut cur = end as usize;
+    let mut run = runs.run_of(cur);
     let mut guard = 0usize;
     loop {
         guard += 1;
         if guard > 10_000_000 {
             break; // defensive: malformed matching cannot loop forever
         }
-        path.push(cur);
-        let i = cur as usize;
+        path.push(cur as u32);
         // cross-process dependency?
-        let jump = send_of_recv[i];
-        if jump >= 0 && pr[jump as usize] != pr[i] {
-            cur = jump as u32;
-            continue;
+        let jump = send_of_recv[cur];
+        if jump >= 0 {
+            let jrun = runs.run_of(jump as usize);
+            if runs.procs[jrun] != runs.procs[run] {
+                cur = jump as usize;
+                run = jrun;
+                continue;
+            }
         }
         // previous event on the same process
-        let rows = &rows_of[&pr[i]];
-        let k = pos_of[i];
-        if k == 0 {
+        if cur == runs.ranges[run].0 {
             break;
         }
-        cur = rows[(k - 1) as usize];
+        cur -= 1;
     }
     path.reverse();
     CriticalPath { rows: path }
+}
+
+/// Identify critical paths sequentially. Returns one path per "finish
+/// straggler": index 0 is the path ending at the globally last event.
+pub fn critical_path_analysis(trace: &mut Trace) -> Result<Vec<CriticalPath>> {
+    super::match_caller_callee::prepare(trace)?;
+    if trace.len() == 0 {
+        bail!("empty trace");
+    }
+    let msgs = match_messages(trace)?;
+    let runs = proc_runs(trace.processes()?, trace.timestamps()?);
+    Ok(paths_from_runs(&runs, &msgs.send_of_recv))
 }
 
 #[cfg(test)]
@@ -223,5 +263,18 @@ mod tests {
         let mut t = b.finish();
         let paths = critical_path_analysis(&mut t).unwrap();
         assert_eq!(paths[0].rows, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn proc_runs_are_contiguous_and_ascending() {
+        let t = toy();
+        let runs = proc_runs(t.processes().unwrap(), t.timestamps().unwrap());
+        assert_eq!(runs.procs, vec![0, 1]);
+        assert_eq!(runs.ranges, vec![(0, 7), (7, 14)]);
+        assert_eq!(runs.last_ts, vec![95, 120]);
+        assert_eq!(runs.run_of(0), 0);
+        assert_eq!(runs.run_of(6), 0);
+        assert_eq!(runs.run_of(7), 1);
+        assert_eq!(runs.run_of(13), 1);
     }
 }

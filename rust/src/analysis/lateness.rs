@@ -14,14 +14,23 @@
 //! Operation granularity: *leaf calls* (matched Enter/Leave pairs with no
 //! child calls) — in iterative MPI codes these are the per-iteration
 //! compute / MPI_Send / MPI_Recv bodies the Isaacs formulation orders.
+//!
+//! The computation splits into a per-process extraction
+//! ([`leaf_structure`] — call stacks never cross processes, so shards
+//! and stream shards extract their own) and a causal core
+//! ([`lateness_from_structure`]) that chases the happens-before chain.
+//! Sequential, sharded ([`crate::exec::ops::lateness`]) and streamed
+//! ([`crate::exec::stream::lateness`]) drivers share both, so results
+//! are identical by construction.
 
-use super::messages::match_messages;
+use super::messages::{match_messages, MessageMatch};
 use crate::df::NULL_I64;
 use crate::trace::*;
 use anyhow::Result;
+use std::collections::HashMap;
 
 /// Logical-timeline entry for one operation (leaf call).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct LogicalOp {
     /// Enter row of the call.
     pub row: u32,
@@ -43,18 +52,80 @@ pub struct ProcLateness {
     pub mean_lateness: f64,
 }
 
-/// Compute the logical structure and lateness of every leaf call.
-pub fn calculate_lateness(trace: &mut Trace) -> Result<Vec<LogicalOp>> {
-    super::match_caller_callee::prepare(trace)?;
+/// One leaf call (matched Enter with no child calls).
+#[derive(Debug, Clone)]
+pub struct LeafCall {
+    /// Global row of the Enter event.
+    pub row: u32,
+    pub proc: i64,
+    /// Name code in the dictionary the resolver passed to
+    /// [`lateness_from_structure`] understands.
+    pub name_code: u32,
+    /// Completion (leave) timestamp.
+    pub t_leave: i64,
+}
+
+/// The call/message structure the lateness core consumes — extractable
+/// per process shard (stacks and instant enclosures never cross
+/// processes) and mergeable by concatenation in row order.
+#[derive(Debug, Default)]
+pub struct LeafStructure {
+    /// Leaf calls in global row order.
+    pub calls: Vec<LeafCall>,
+    /// Recv instant rows grouped by their enclosing call's Enter row.
+    pub recvs_in_call: HashMap<u32, Vec<u32>>,
+    /// Enclosing call's Enter row per send instant row.
+    pub call_of_send: HashMap<u32, u32>,
+}
+
+impl LeafStructure {
+    /// Append another shard's structure; call in row (shard) order.
+    pub fn merge(&mut self, other: LeafStructure) {
+        self.calls.extend(other.calls);
+        for (k, v) in other.recvs_in_call {
+            self.recvs_in_call.entry(k).or_default().extend(v);
+        }
+        self.call_of_send.extend(other.call_of_send);
+    }
+
+    /// Shift every recorded row by `offset` (stream shards extract with
+    /// local rows, then shift to their global base on fold).
+    pub fn shift_rows(&mut self, offset: u32) {
+        if offset == 0 {
+            return;
+        }
+        for c in &mut self.calls {
+            c.row += offset;
+        }
+        self.recvs_in_call = std::mem::take(&mut self.recvs_in_call)
+            .into_iter()
+            .map(|(k, v)| {
+                (k + offset, v.into_iter().map(|r| r + offset).collect::<Vec<u32>>())
+            })
+            .collect();
+        self.call_of_send = std::mem::take(&mut self.call_of_send)
+            .into_iter()
+            .map(|(k, v)| (k + offset, v + offset))
+            .collect();
+    }
+}
+
+/// Extract the leaf-call structure from a prepared trace (requires the
+/// `_matching_event` / `_parent` columns of
+/// [`super::match_caller_callee::prepare`]). Message instants are
+/// identified exactly as the matcher does (name + non-null partner).
+pub fn leaf_structure(trace: &Trace) -> Result<LeafStructure> {
     let n = trace.len();
     let ts = trace.events.i64s(COL_TS)?;
     let pr = trace.events.i64s(COL_PROC)?;
+    let pa = trace.events.i64s(COL_PARTNER)?;
     let (et, edict) = trace.events.strs(COL_TYPE)?;
     let (nm, ndict) = trace.events.strs(COL_NAME)?;
     let matching = trace.events.i64s("_matching_event")?;
     let parent = trace.events.i64s("_parent")?;
     let enter = edict.code_of(ENTER);
-    let msgs = match_messages(trace)?;
+    let send = ndict.code_of(SEND_EVENT);
+    let recv = ndict.code_of(RECV_EVENT);
 
     // Leaf calls: Enter rows that are matched and have no child Enter.
     let mut has_child_call = vec![false; n];
@@ -63,49 +134,59 @@ pub fn calculate_lateness(trace: &mut Trace) -> Result<Vec<LogicalOp>> {
             has_child_call[parent[i] as usize] = true;
         }
     }
-    // Map each instant to its enclosing call row (parent).
-    // Order leaf calls by completion time for causal processing.
-    let mut calls: Vec<u32> = (0..n as u32)
-        .filter(|&i| {
-            let i = i as usize;
-            Some(et[i]) == enter && matching[i] != NULL_I64 && !has_child_call[i]
-        })
-        .collect();
-    calls.sort_by_key(|&i| ts[matching[i as usize] as usize]);
-
-    // recv instant rows grouped by their enclosing call
-    let mut recvs_in_call: std::collections::HashMap<u32, Vec<u32>> =
-        std::collections::HashMap::new();
-    for &r in &msgs.recvs {
-        let p = parent[r as usize];
-        if p != NULL_I64 {
-            recvs_in_call.entry(p as u32).or_default().push(r);
+    let mut out = LeafStructure::default();
+    for i in 0..n {
+        // leaf-call and message-instant classification are independent,
+        // mirroring the matcher's name + non-null-partner filter exactly
+        if Some(et[i]) == enter && matching[i] != NULL_I64 && !has_child_call[i] {
+            out.calls.push(LeafCall {
+                row: i as u32,
+                proc: pr[i],
+                name_code: nm[i],
+                t_leave: ts[matching[i] as usize],
+            });
+        }
+        if pa[i] == NULL_I64 || parent[i] == NULL_I64 {
+            continue;
+        }
+        if Some(nm[i]) == recv {
+            out.recvs_in_call
+                .entry(parent[i] as u32)
+                .or_default()
+                .push(i as u32);
+        } else if Some(nm[i]) == send {
+            out.call_of_send.insert(i as u32, parent[i] as u32);
         }
     }
-    // which call encloses each send instant (for step lookups)
-    let mut call_of_send = std::collections::HashMap::new();
-    for &s in &msgs.sends {
-        let p = parent[s as usize];
-        if p != NULL_I64 {
-            call_of_send.insert(s, p as u32);
-        }
-    }
+    Ok(out)
+}
 
-    let mut step_of_call: std::collections::HashMap<u32, u32> =
-        std::collections::HashMap::new();
-    let mut last_step_on_proc: std::collections::HashMap<i64, u32> =
-        std::collections::HashMap::new();
-    for &c in &calls {
-        let i = c as usize;
+/// The causal core: assign logical steps by chasing the happens-before
+/// chain over calls ordered by completion time, then compute lateness
+/// against the per-step minimum. `resolve` maps a [`LeafCall::name_code`]
+/// to its function name (shard-local dictionaries remap through it).
+pub fn lateness_from_structure(
+    s: LeafStructure,
+    send_of_recv: &[i64],
+    resolve: impl Fn(u32) -> String,
+) -> Vec<LogicalOp> {
+    let LeafStructure { mut calls, recvs_in_call, call_of_send } = s;
+    // stable by completion time: ties keep global row order, exactly as
+    // the row-ordered collection + stable sort of the sequential engine
+    calls.sort_by_key(|c| c.t_leave);
+
+    let mut step_of_call: HashMap<u32, u32> = HashMap::new();
+    let mut last_step_on_proc: HashMap<i64, u32> = HashMap::new();
+    for c in &calls {
         let mut step = last_step_on_proc
-            .get(&pr[i])
+            .get(&c.proc)
             .map(|&s| s + 1)
             .unwrap_or(0);
-        if let Some(rs) = recvs_in_call.get(&c) {
+        if let Some(rs) = recvs_in_call.get(&c.row) {
             for &r in rs {
-                let s = msgs.send_of_recv[r as usize];
-                if s >= 0 {
-                    if let Some(&sc) = call_of_send.get(&(s as u32)) {
+                let snd = send_of_recv[r as usize];
+                if snd >= 0 {
+                    if let Some(&sc) = call_of_send.get(&(snd as u32)) {
                         if let Some(&ss) = step_of_call.get(&sc) {
                             step = step.max(ss + 1);
                         }
@@ -113,44 +194,50 @@ pub fn calculate_lateness(trace: &mut Trace) -> Result<Vec<LogicalOp>> {
                 }
             }
         }
-        step_of_call.insert(c, step);
-        last_step_on_proc.insert(pr[i], step);
+        step_of_call.insert(c.row, step);
+        last_step_on_proc.insert(c.proc, step);
     }
 
     // min completion time per step
-    let mut min_at_step: std::collections::HashMap<u32, i64> =
-        std::collections::HashMap::new();
-    for &c in &calls {
-        let step = step_of_call[&c];
-        let tl = ts[matching[c as usize] as usize];
+    let mut min_at_step: HashMap<u32, i64> = HashMap::new();
+    for c in &calls {
+        let step = step_of_call[&c.row];
         min_at_step
             .entry(step)
-            .and_modify(|m| *m = (*m).min(tl))
-            .or_insert(tl);
+            .and_modify(|m| *m = (*m).min(c.t_leave))
+            .or_insert(c.t_leave);
     }
 
-    Ok(calls
+    calls
         .iter()
-        .map(|&c| {
-            let i = c as usize;
-            let step = step_of_call[&c];
-            let t_leave = ts[matching[i] as usize];
+        .map(|c| {
+            let step = step_of_call[&c.row];
             LogicalOp {
-                row: c,
-                proc: pr[i],
-                name: ndict.resolve(nm[i]).unwrap_or("").to_string(),
+                row: c.row,
+                proc: c.proc,
+                name: resolve(c.name_code),
                 step,
-                t_leave,
-                lateness: (t_leave - min_at_step[&step]) as f64,
+                t_leave: c.t_leave,
+                lateness: (c.t_leave - min_at_step[&step]) as f64,
             }
         })
-        .collect())
+        .collect()
+}
+
+/// Compute the logical structure and lateness of every leaf call.
+pub fn calculate_lateness(trace: &mut Trace) -> Result<Vec<LogicalOp>> {
+    super::match_caller_callee::prepare(trace)?;
+    let msgs: MessageMatch = match_messages(trace)?;
+    let s = leaf_structure(trace)?;
+    let (_, ndict) = trace.events.strs(COL_NAME)?;
+    Ok(lateness_from_structure(s, &msgs.send_of_recv, |c| {
+        ndict.resolve(c).unwrap_or("").to_string()
+    }))
 }
 
 /// Aggregate lateness per process, sorted by max lateness descending.
 pub fn lateness_by_process(ops: &[LogicalOp]) -> Vec<ProcLateness> {
-    let mut agg: std::collections::HashMap<i64, (f64, f64, u64)> =
-        std::collections::HashMap::new();
+    let mut agg: HashMap<i64, (f64, f64, u64)> = HashMap::new();
     for op in ops {
         let e = agg.entry(op.proc).or_insert((0.0, 0.0, 0));
         e.0 = e.0.max(op.lateness);
@@ -234,8 +321,7 @@ mod tests {
     fn lateness_nonnegative_and_zero_exists_per_step() {
         let mut t = toy();
         let ops = calculate_lateness(&mut t).unwrap();
-        let mut steps: std::collections::HashMap<u32, Vec<f64>> =
-            std::collections::HashMap::new();
+        let mut steps: HashMap<u32, Vec<f64>> = HashMap::new();
         for op in &ops {
             assert!(op.lateness >= 0.0);
             steps.entry(op.step).or_default().push(op.lateness);
@@ -243,5 +329,17 @@ mod tests {
         for (_, ls) in steps {
             assert!(ls.iter().any(|&l| l == 0.0));
         }
+    }
+
+    #[test]
+    fn shift_rows_moves_every_index() {
+        let mut s = LeafStructure::default();
+        s.calls.push(LeafCall { row: 1, proc: 0, name_code: 0, t_leave: 5 });
+        s.recvs_in_call.insert(1, vec![2]);
+        s.call_of_send.insert(3, 1);
+        s.shift_rows(10);
+        assert_eq!(s.calls[0].row, 11);
+        assert_eq!(s.recvs_in_call[&11], vec![12]);
+        assert_eq!(s.call_of_send[&13], 11);
     }
 }

@@ -16,14 +16,33 @@ use crate::df::{Column, NULL_I64};
 use crate::trace::*;
 use anyhow::{bail, Result};
 
+/// The canonical-order violation error — the single source of truth for
+/// the sequential, sharded and streamed validators (the parity suite
+/// asserts error-string equality across all three paths).
+pub(crate) fn canonical_order_error(row: usize) -> anyhow::Error {
+    anyhow::anyhow!("events not in canonical (Process, Thread, Timestamp) order at row {row}")
+}
+
 /// Row index of each event's partner (leave for enters, enter for leaves);
 /// -1 for instants and unmatched events. Pure function — no caching.
 pub fn matching_events(trace: &Trace) -> Result<Vec<i64>> {
     Ok(compute(trace)?.0)
 }
 
-fn compute(trace: &Trace) -> Result<(Vec<i64>, Vec<i64>, Vec<i64>)> {
-    let n = trace.len();
+/// The derived columns [`compute`] materializes.
+struct Derived {
+    matching: Vec<i64>,
+    parent: Vec<i64>,
+    depth: Vec<i64>,
+}
+
+/// The single traversal behind both [`compute`] and [`validate_range`]:
+/// canonical-order + Enter/Leave-nesting validation over rows
+/// `[range.0, range.1)`, materializing the derived columns only when
+/// `out` is given. One implementation means the sequential, sharded and
+/// streamed paths cannot drift in what they accept or in the error
+/// messages the parity suite compares.
+fn walk(trace: &Trace, range: (usize, usize), mut out: Option<&mut Derived>) -> Result<()> {
     let ts = trace.events.i64s(COL_TS)?;
     let pr = trace.events.i64s(COL_PROC)?;
     let th = trace.events.i64s(COL_THREAD)?;
@@ -32,9 +51,6 @@ fn compute(trace: &Trace) -> Result<(Vec<i64>, Vec<i64>, Vec<i64>)> {
     let enter = edict.code_of(ENTER);
     let leave = edict.code_of(LEAVE);
 
-    let mut matching = vec![NULL_I64; n];
-    let mut parent = vec![NULL_I64; n];
-    let mut depth = vec![NULL_I64; n];
     // Canonical order makes (proc, thread) runs contiguous: cache the
     // current stream's stack and only touch the map on stream changes
     // (perf: drops a hash lookup per event; see EXPERIMENTS.md §Perf).
@@ -45,10 +61,10 @@ fn compute(trace: &Trace) -> Result<(Vec<i64>, Vec<i64>, Vec<i64>)> {
     let mut cur = usize::MAX;
     let mut last = (i64::MIN, i64::MIN, i64::MIN); // (proc, thread, ts) order check
 
-    for i in 0..n {
+    for i in range.0..range.1 {
         let key = (pr[i], th[i], ts[i]);
         if key < last {
-            bail!("events not in canonical (Process, Thread, Timestamp) order at row {i}");
+            return Err(canonical_order_error(i));
         }
         last = key;
         if (pr[i], th[i]) != cur_key {
@@ -61,18 +77,22 @@ fn compute(trace: &Trace) -> Result<(Vec<i64>, Vec<i64>, Vec<i64>)> {
         let stack = &mut stacks[cur];
         let code = Some(et[i]);
         if code == enter {
-            if let Some(&(_, top)) = stack.last() {
-                parent[i] = top as i64;
+            if let Some(d) = out.as_mut() {
+                if let Some(&(_, top)) = stack.last() {
+                    d.parent[i] = top as i64;
+                }
+                d.depth[i] = stack.len() as i64;
             }
-            depth[i] = stack.len() as i64;
             stack.push((nm[i], i as u32));
         } else if code == leave {
             match stack.pop() {
                 Some((name, row)) if name == nm[i] => {
-                    matching[i] = row as i64;
-                    matching[row as usize] = i as i64;
-                    depth[i] = stack.len() as i64;
-                    parent[i] = parent[row as usize];
+                    if let Some(d) = out.as_mut() {
+                        d.matching[i] = row as i64;
+                        d.matching[row as usize] = i as i64;
+                        d.depth[i] = stack.len() as i64;
+                        d.parent[i] = d.parent[row as usize];
+                    }
                 }
                 Some(_) => bail!("row {i}: Leave does not match innermost Enter"),
                 // Truncated trace (e.g. a time-window filter cut the Enter
@@ -82,18 +102,40 @@ fn compute(trace: &Trace) -> Result<(Vec<i64>, Vec<i64>, Vec<i64>)> {
                 // partial traces being analyzable).
                 None => {}
             }
-        } else {
+        } else if let Some(d) = out.as_mut() {
             // instants inherit the depth/parent of the enclosing call
             if let Some(&(_, top)) = stack.last() {
-                parent[i] = top as i64;
-                depth[i] = stack.len() as i64;
+                d.parent[i] = top as i64;
+                d.depth[i] = stack.len() as i64;
             } else {
-                depth[i] = 0;
+                d.depth[i] = 0;
             }
         }
     }
     // Unmatched enters (truncated traces) keep NULL matching; callers skip.
-    Ok((matching, parent, depth))
+    Ok(())
+}
+
+fn compute(trace: &Trace) -> Result<(Vec<i64>, Vec<i64>, Vec<i64>)> {
+    let n = trace.len();
+    let mut d = Derived {
+        matching: vec![NULL_I64; n],
+        parent: vec![NULL_I64; n],
+        depth: vec![NULL_I64; n],
+    };
+    walk(trace, (0, n), Some(&mut d))?;
+    Ok((d.matching, d.parent, d.depth))
+}
+
+/// Validate canonical (Process, Thread, Timestamp) order and Enter/Leave
+/// nesting over rows `[range.0, range.1)` without materializing the
+/// derived columns — the same traversal as [`compute`], minus the
+/// output. The sharded engines run this per process-aligned shard
+/// (stacks are complete within a shard) so malformed traces error
+/// exactly like the sequential engines, whose [`prepare`] would bail.
+/// Errors carry the same messages with global row indices.
+pub(crate) fn validate_range(trace: &Trace, range: (usize, usize)) -> Result<()> {
+    walk(trace, range, None)
 }
 
 /// Ensure `_matching_event`, `_parent`, `_depth` columns exist on `trace`.

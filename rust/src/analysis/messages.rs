@@ -1,6 +1,28 @@
 //! Point-to-point message matching: pair each `MpiRecv` instant with its
 //! `MpiSend` (FIFO per (src, dst, tag) channel, MPI ordering semantics).
-//! Shared by critical-path analysis, lateness, and the timeline's arrows.
+//! Shared by critical-path analysis, lateness, the inefficiency report,
+//! and the timeline's arrows.
+//!
+//! # The channel-sharded subsystem
+//!
+//! MPI's non-overtaking guarantee makes every (src, dst, tag) channel
+//! independently matchable: the k-th receive on a channel always pairs
+//! with the k-th send on that channel, regardless of what any other
+//! channel does. [`ChannelQueues`] exploits this — endpoints accumulate
+//! per channel (from whole traces, row ranges, or stream shards via a
+//! row offset), and pairing runs channel-by-channel. The sharded driver
+//! ([`crate::exec::ops::match_messages_sharded`]) collects ranges and
+//! pairs channel groups on the worker pool; the streaming driver
+//! ([`crate::exec::stream`]) folds shard-local queues so stream-backed
+//! sources never materialize just to match.
+//!
+//! Determinism: the sequential matcher consumes sends and receives in
+//! global (timestamp, row) order, so each channel's queue order is the
+//! (timestamp, row) order restricted to that channel. Per-channel
+//! sorting by (timestamp, row) therefore reproduces the sequential
+//! pairing exactly — bit-identical `send_of_recv` / `recv_of_send` —
+//! and the global `sends` / `recvs` lists re-sort on the same unique
+//! key. `tests/parity.rs` asserts this for every generator.
 
 use crate::df::NULL_I64;
 use crate::trace::*;
@@ -10,7 +32,7 @@ use std::collections::HashMap;
 /// For every row: if it is a recv instant, the row of the matching send
 /// (or -1 if unmatched); if it is a send instant, the row of the matching
 /// recv (or -1). All other rows -1.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct MessageMatch {
     pub send_of_recv: Vec<i64>,
     pub recv_of_send: Vec<i64>,
@@ -20,50 +42,195 @@ pub struct MessageMatch {
     pub recvs: Vec<u32>,
 }
 
-/// Match sends to recvs. Sends and recvs are consumed in timestamp order
-/// per (src, dst, tag) channel, which is MPI's non-overtaking guarantee.
-pub fn match_messages(trace: &Trace) -> Result<MessageMatch> {
-    let n = trace.len();
-    let ts = trace.events.i64s(COL_TS)?;
-    let pr = trace.events.i64s(COL_PROC)?;
-    let pa = trace.events.i64s(COL_PARTNER)?;
-    let tg = trace.events.i64s(COL_TAG)?;
-    let (nm, ndict) = trace.events.strs(COL_NAME)?;
-    let send = ndict.code_of(SEND_EVENT);
-    let recv = ndict.code_of(RECV_EVENT);
+/// One channel's endpoints: (timestamp, row) pairs in insertion order.
+/// Insertion happens in global row order (ranges / shards merge in row
+/// order), so a stable-equivalent sort on the unique (timestamp, row)
+/// key recovers MPI consumption order.
+#[derive(Debug, Clone, Default)]
+pub struct ChannelQueue {
+    pub sends: Vec<(i64, u32)>,
+    pub recvs: Vec<(i64, u32)>,
+}
 
-    let mut sends: Vec<u32> = (0..n as u32)
-        .filter(|&i| Some(nm[i as usize]) == send && pa[i as usize] != NULL_I64)
-        .collect();
-    let mut recvs: Vec<u32> = (0..n as u32)
-        .filter(|&i| Some(nm[i as usize]) == recv && pa[i as usize] != NULL_I64)
-        .collect();
-    sends.sort_by_key(|&i| ts[i as usize]);
-    recvs.sort_by_key(|&i| ts[i as usize]);
+/// Per-(src, dst, tag) endpoint accumulator — the unit of work for
+/// channel-sharded matching.
+#[derive(Debug, Default)]
+pub struct ChannelQueues {
+    index: HashMap<(i64, i64, i64), usize>,
+    queues: Vec<ChannelQueue>,
+}
 
-    // FIFO queues per channel (src, dst, tag)
-    let mut queues: HashMap<(i64, i64, i64), std::collections::VecDeque<u32>> =
-        HashMap::new();
-    for &s in &sends {
-        let i = s as usize;
-        queues
-            .entry((pr[i], pa[i], tg[i]))
-            .or_default()
-            .push_back(s);
+impl ChannelQueues {
+    pub fn new() -> Self {
+        Self::default()
     }
-    let mut send_of_recv = vec![-1i64; n];
-    let mut recv_of_send = vec![-1i64; n];
-    for &r in &recvs {
-        let i = r as usize;
-        // recv's Partner = source rank
-        if let Some(q) = queues.get_mut(&(pa[i], pr[i], tg[i])) {
-            if let Some(s) = q.pop_front() {
-                send_of_recv[i] = s as i64;
-                recv_of_send[s as usize] = r as i64;
+
+    fn queue(&mut self, key: (i64, i64, i64)) -> &mut ChannelQueue {
+        let n = self.queues.len();
+        let slot = *self.index.entry(key).or_insert(n);
+        if slot == n {
+            self.queues.push(ChannelQueue::default());
+        }
+        &mut self.queues[slot]
+    }
+
+    /// Scan rows `[range.0, range.1)` of `trace` for message instants and
+    /// append them to the channel queues. Rows are recorded shifted by
+    /// `row_offset` (stream shards pass their global base; in-memory
+    /// ranges pass 0 because their indices are already global).
+    pub fn collect(
+        &mut self,
+        trace: &Trace,
+        range: (usize, usize),
+        row_offset: usize,
+    ) -> Result<()> {
+        let ts = trace.events.i64s(COL_TS)?;
+        let pr = trace.events.i64s(COL_PROC)?;
+        let pa = trace.events.i64s(COL_PARTNER)?;
+        let tg = trace.events.i64s(COL_TAG)?;
+        let (nm, ndict) = trace.events.strs(COL_NAME)?;
+        let send = ndict.code_of(SEND_EVENT);
+        let recv = ndict.code_of(RECV_EVENT);
+        if send.is_none() && recv.is_none() {
+            return Ok(());
+        }
+        for i in range.0..range.1 {
+            if pa[i] == NULL_I64 {
+                continue;
+            }
+            let row = (i + row_offset) as u32;
+            if Some(nm[i]) == send {
+                // send's Partner = destination rank
+                self.queue((pr[i], pa[i], tg[i])).sends.push((ts[i], row));
+            } else if Some(nm[i]) == recv {
+                // recv's Partner = source rank
+                self.queue((pa[i], pr[i], tg[i])).recvs.push((ts[i], row));
+            }
+        }
+        Ok(())
+    }
+
+    /// Append another accumulator's endpoints. Call in row order (shard
+    /// order) so each channel's insertion order stays global row order.
+    pub fn merge(&mut self, other: ChannelQueues) {
+        let ChannelQueues { index, queues } = other;
+        // index maps keys to slots; visit in slot order for determinism
+        let mut keys: Vec<((i64, i64, i64), usize)> = index.into_iter().collect();
+        keys.sort_unstable_by_key(|&(_, slot)| slot);
+        for (key, slot) in keys {
+            let src = &queues[slot];
+            let dst = self.queue(key);
+            dst.sends.extend_from_slice(&src.sends);
+            dst.recvs.extend_from_slice(&src.recvs);
+        }
+    }
+
+    /// Shift every recorded row by `offset` (stream shards collect with
+    /// local rows, then shift to their global base on fold).
+    pub fn shift_rows(&mut self, offset: u32) {
+        if offset == 0 {
+            return;
+        }
+        for q in &mut self.queues {
+            for e in &mut q.sends {
+                e.1 += offset;
+            }
+            for e in &mut q.recvs {
+                e.1 += offset;
             }
         }
     }
-    Ok(MessageMatch { send_of_recv, recv_of_send, sends, recvs })
+
+    pub fn num_channels(&self) -> usize {
+        self.queues.len()
+    }
+
+    /// The accumulated channels (keys no longer needed — pairing is
+    /// per-channel and output is row-indexed).
+    pub fn into_queues(self) -> Vec<ChannelQueue> {
+        self.queues
+    }
+
+    /// FIFO-pair every channel sequentially and assemble the
+    /// [`MessageMatch`] for a trace of `total_rows` rows. The sharded
+    /// driver uses [`pair_channel`] + [`assemble_match`] directly to run
+    /// the pairing on the worker pool.
+    pub fn finish(self, total_rows: usize) -> MessageMatch {
+        let mut paired = PairedChannels::default();
+        for mut q in self.queues {
+            let pairs = pair_channel(&mut q);
+            paired.absorb(pairs, q);
+        }
+        assemble_match(paired, total_rows)
+    }
+}
+
+/// Matched pairs plus every endpoint of a group of channels — what one
+/// pairing task returns.
+#[derive(Debug, Default)]
+pub struct PairedChannels {
+    /// (send row, recv row) matched pairs.
+    pub pairs: Vec<(u32, u32)>,
+    /// All send endpoints (ts, row), matched or not.
+    pub sends: Vec<(i64, u32)>,
+    /// All recv endpoints (ts, row), matched or not.
+    pub recvs: Vec<(i64, u32)>,
+}
+
+impl PairedChannels {
+    /// Fold one paired channel into the group result.
+    pub fn absorb(&mut self, pairs: Vec<(u32, u32)>, q: ChannelQueue) {
+        self.pairs.extend(pairs);
+        self.sends.extend(q.sends);
+        self.recvs.extend(q.recvs);
+    }
+}
+
+/// Sort one channel's endpoints into MPI consumption order — the unique
+/// (timestamp, row) key, equal to the sequential matcher's stable
+/// timestamp sort over row-ordered input — and FIFO-pair the k-th send
+/// with the k-th recv. Trailing unmatched endpoints stay unpaired.
+pub fn pair_channel(q: &mut ChannelQueue) -> Vec<(u32, u32)> {
+    q.sends.sort_unstable();
+    q.recvs.sort_unstable();
+    q.sends
+        .iter()
+        .zip(q.recvs.iter())
+        .map(|(&(_, s), &(_, r))| (s, r))
+        .collect()
+}
+
+/// Assemble the row-indexed match arrays and the global time-ordered
+/// endpoint lists from paired channel groups.
+pub fn assemble_match(paired: PairedChannels, total_rows: usize) -> MessageMatch {
+    let PairedChannels { pairs, mut sends, mut recvs } = paired;
+    let mut send_of_recv = vec![-1i64; total_rows];
+    let mut recv_of_send = vec![-1i64; total_rows];
+    for (s, r) in pairs {
+        send_of_recv[r as usize] = s as i64;
+        recv_of_send[s as usize] = r as i64;
+    }
+    // (ts, row) keys are unique, so the unstable sort is deterministic
+    // and equals the sequential stable-by-ts order over row-ordered input.
+    sends.sort_unstable();
+    recvs.sort_unstable();
+    MessageMatch {
+        send_of_recv,
+        recv_of_send,
+        sends: sends.into_iter().map(|(_, r)| r).collect(),
+        recvs: recvs.into_iter().map(|(_, r)| r).collect(),
+    }
+}
+
+/// Match sends to recvs. Sends and recvs are consumed in timestamp order
+/// per (src, dst, tag) channel, which is MPI's non-overtaking guarantee.
+/// This is the sequential reference; the channel-sharded equivalent is
+/// [`crate::exec::ops::match_messages_sharded`] (bit-identical, see
+/// `tests/parity.rs`).
+pub fn match_messages(trace: &Trace) -> Result<MessageMatch> {
+    let mut acc = ChannelQueues::new();
+    acc.collect(trace, (0, trace.len()), 0)?;
+    Ok(acc.finish(trace.len()))
 }
 
 #[cfg(test)]
@@ -107,5 +274,81 @@ mod tests {
         let t = b.finish();
         let m = match_messages(&t).unwrap();
         assert_eq!(m.send_of_recv[0], -1);
+    }
+
+    #[test]
+    fn unmatched_sends_stay_negative_and_listed() {
+        let mut b = TraceBuilder::new();
+        b.send(0, 0, 10, 1, 100, 0);
+        b.send(0, 0, 20, 1, 200, 0);
+        b.recv(1, 0, 40, 0, 100, 0); // only the first send is consumed
+        let t = b.finish();
+        let m = match_messages(&t).unwrap();
+        assert_eq!(m.sends.len(), 2);
+        assert_eq!(m.recvs.len(), 1);
+        let matched = m.recv_of_send.iter().filter(|&&r| r >= 0).count();
+        assert_eq!(matched, 1);
+        // the FIFO head (ts 10) is the one that matched
+        let r = m.recvs[0] as usize;
+        let s = m.send_of_recv[r] as usize;
+        assert_eq!(t.timestamps().unwrap()[s], 10);
+    }
+
+    #[test]
+    fn zero_message_trace_matches_nothing() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.leave(0, 0, 10, "main");
+        let t = b.finish();
+        let m = match_messages(&t).unwrap();
+        assert!(m.sends.is_empty() && m.recvs.is_empty());
+        assert!(m.send_of_recv.iter().all(|&v| v == -1));
+    }
+
+    #[test]
+    fn duplicate_timestamp_sends_pair_in_row_order() {
+        // Two sends on one channel with the same timestamp: the earlier
+        // row is the FIFO head (the (ts, row) key is unique).
+        let mut b = TraceBuilder::new();
+        b.send(0, 0, 10, 1, 111, 0); // row order decides
+        b.send(0, 0, 10, 1, 222, 0);
+        b.recv(1, 0, 40, 0, 111, 0);
+        b.recv(1, 0, 50, 0, 222, 0);
+        let t = b.finish();
+        let m = match_messages(&t).unwrap();
+        let first_recv = m.recvs[0] as usize;
+        let s = m.send_of_recv[first_recv] as usize;
+        assert_eq!(s as u32, m.sends[0], "first recv pairs with first-row send");
+        // and the pairing is a bijection over both sends
+        assert!(m.recv_of_send.iter().filter(|&&r| r >= 0).count() == 2);
+    }
+
+    #[test]
+    fn collect_with_offset_shifts_rows() {
+        let mut b = TraceBuilder::new();
+        b.send(0, 0, 10, 1, 100, 0);
+        let t = b.finish();
+        let mut acc = ChannelQueues::new();
+        acc.collect(&t, (0, t.len()), 5).unwrap();
+        let qs = acc.into_queues();
+        assert_eq!(qs.len(), 1);
+        assert_eq!(qs[0].sends, vec![(10, 5)]);
+    }
+
+    #[test]
+    fn merge_preserves_row_order_per_channel() {
+        let mut b = TraceBuilder::new();
+        b.send(0, 0, 10, 1, 100, 0);
+        let t0 = b.finish();
+        let mut b = TraceBuilder::new();
+        b.send(0, 0, 20, 1, 100, 0);
+        let t1 = b.finish();
+        let mut a = ChannelQueues::new();
+        a.collect(&t0, (0, 1), 0).unwrap();
+        let mut p = ChannelQueues::new();
+        p.collect(&t1, (0, 1), 1).unwrap();
+        a.merge(p);
+        let qs = a.into_queues();
+        assert_eq!(qs[0].sends, vec![(10, 0), (20, 1)]);
     }
 }

@@ -48,6 +48,7 @@ pub use idle_time::{idle_outliers, idle_time, IdleRow};
 pub use inefficiency::{analyze_inefficiencies, Finding, Report, ReportConfig};
 pub use lateness::{calculate_lateness, lateness_by_process, LogicalOp};
 pub use load_imbalance::{load_imbalance, ImbalanceRow};
+pub use messages::{match_messages, MessageMatch};
 pub use multirun::{multi_run_analysis, MultiRun};
 pub use overlap::{comm_comp_breakdown, Breakdown};
 pub use pattern::{detect_pattern, matrix_profile, PatternConfig, PatternRange};

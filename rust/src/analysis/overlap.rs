@@ -71,14 +71,28 @@ fn interval_total(iv: &[(i64, i64)]) -> i64 {
     iv.iter().map(|&(a, b)| b - a).sum()
 }
 
-/// Compute the per-process communication/computation breakdown.
-/// `comm_functions` defaults to [`DEFAULT_COMM_FUNCTIONS`];
-/// `other_functions` (counted in neither class) defaults to `["Idle"]`.
-pub fn comm_comp_breakdown(
+/// Everything of one process's breakdown except `other`, which needs the
+/// *global* time span. Shards compute parts for their own processes
+/// (exclusive segments never cross processes) and the driver applies the
+/// span once the whole trace — or stream — has been seen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BreakdownPart {
+    pub proc: i64,
+    pub comp: f64,
+    pub comp_overlapped: f64,
+    pub comm: f64,
+    /// |comp ∪ comm| — what `other` subtracts from the span.
+    pub covered: f64,
+}
+
+/// Compute per-process breakdown parts for every process in `trace`
+/// (ascending process order — canonical row order guarantees it equals
+/// the whole-trace `process_ids` order when shards concatenate).
+pub fn breakdown_parts(
     trace: &mut Trace,
     comm_functions: Option<&[&str]>,
     other_functions: Option<&[&str]>,
-) -> Result<Vec<Breakdown>> {
+) -> Result<Vec<BreakdownPart>> {
     let segs = exclusive_segments(trace)?;
     let (_, ndict) = trace.events.strs(COL_NAME)?;
     let comm_names: HashSet<&str> = comm_functions
@@ -90,7 +104,6 @@ pub fn comm_comp_breakdown(
         other_functions.unwrap_or(&["Idle"]).iter().copied().collect();
 
     let procs = trace.process_ids()?;
-    let (t0, t1) = trace.time_range()?;
     let mut out = Vec::with_capacity(procs.len());
     for &p in &procs {
         let mut comm_iv = Vec::new();
@@ -113,15 +126,46 @@ pub fn comm_comp_breakdown(
         let inter = intersection_len(&comm_iv, &comp_iv) as f64;
         let both = union(comm_iv.into_iter().chain(comp_iv).collect());
         let covered = interval_total(&both) as f64;
-        out.push(Breakdown {
+        out.push(BreakdownPart {
             proc: p,
             comp: comp_len - inter,
             comp_overlapped: inter,
             comm: comm_len - inter,
-            other: ((t1 - t0) as f64 - covered).max(0.0),
+            covered,
         });
     }
     Ok(out)
+}
+
+/// Apply the global span to per-process parts: `other` is the span not
+/// covered by either interval class.
+pub fn finish_breakdown(parts: Vec<BreakdownPart>, t0: i64, t1: i64) -> Vec<Breakdown> {
+    parts
+        .into_iter()
+        .map(|p| Breakdown {
+            proc: p.proc,
+            comp: p.comp,
+            comp_overlapped: p.comp_overlapped,
+            comm: p.comm,
+            other: ((t1 - t0) as f64 - p.covered).max(0.0),
+        })
+        .collect()
+}
+
+/// Compute the per-process communication/computation breakdown.
+/// `comm_functions` defaults to [`DEFAULT_COMM_FUNCTIONS`];
+/// `other_functions` (counted in neither class) defaults to `["Idle"]`.
+/// The sharded / streamed equivalents live in [`crate::exec::ops`] and
+/// [`crate::exec::stream`] and share [`breakdown_parts`] +
+/// [`finish_breakdown`], so all three paths agree bitwise.
+pub fn comm_comp_breakdown(
+    trace: &mut Trace,
+    comm_functions: Option<&[&str]>,
+    other_functions: Option<&[&str]>,
+) -> Result<Vec<Breakdown>> {
+    let (t0, t1) = trace.time_range()?;
+    let parts = breakdown_parts(trace, comm_functions, other_functions)?;
+    Ok(finish_breakdown(parts, t0, t1))
 }
 
 /// Aggregate breakdowns over processes (mean per process) — the

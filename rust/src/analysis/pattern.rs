@@ -109,50 +109,72 @@ impl Default for PatternConfig {
     }
 }
 
-/// Detect repeating patterns. With `start_event`, occurrences are anchored
-/// at that function's Enter timestamps (the paper's
-/// `detect_pattern(start_event='time-loop')`) and validated/refined with
-/// the matrix profile of the activity series; without it, motif discovery
-/// runs on the activity series alone.
-pub fn detect_pattern(
-    trace: &mut Trace,
-    start_event: Option<&str>,
-    cfg: &PatternConfig,
-) -> Result<Vec<PatternRange>> {
-    let (t0, t1) = trace.time_range()?;
-    if let Some(name) = start_event {
-        // anchor at Enter events of `name` on the lowest-id process
-        let (et, edict) = trace.events.strs(COL_TYPE)?;
-        let (nm, ndict) = trace.events.strs(COL_NAME)?;
-        let ts = trace.events.i64s(COL_TS)?;
-        let pr = trace.events.i64s(COL_PROC)?;
-        let enter = edict.code_of(ENTER);
-        let Some(code) = ndict.code_of(name) else {
-            bail!("start_event '{name}' not present in trace");
-        };
-        let p0 = trace.process_ids()?.first().copied().unwrap_or(0);
-        let mut anchors: Vec<i64> = (0..trace.len())
-            .filter(|&i| Some(et[i]) == enter && nm[i] == code && pr[i] == p0)
-            .map(|i| ts[i])
-            .collect();
-        anchors.sort_unstable();
-        if anchors.len() < 2 {
-            bail!("start_event '{name}' occurs {} time(s); need >= 2", anchors.len());
+/// Collect anchored-detection inputs from rows `[range.0, range.1)`:
+/// Enter timestamps of `name` on process `p0`, plus whether `name` is
+/// known to this trace's name dictionary (the "not present" error tests
+/// dictionary membership, matching the sequential engine — stream shards
+/// OR their per-shard verdicts). Shards call this for their own ranges;
+/// anchor lists concatenate.
+pub fn collect_anchors(
+    trace: &Trace,
+    name: &str,
+    p0: i64,
+    range: (usize, usize),
+) -> Result<(Vec<i64>, bool)> {
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let (nm, ndict) = trace.events.strs(COL_NAME)?;
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let enter = edict.code_of(ENTER);
+    let Some(code) = ndict.code_of(name) else {
+        return Ok((Vec::new(), false));
+    };
+    let mut anchors = Vec::new();
+    for i in range.0..range.1 {
+        if Some(et[i]) == enter && nm[i] == code && pr[i] == p0 {
+            anchors.push(ts[i]);
         }
-        let mut out: Vec<PatternRange> = anchors
-            .windows(2)
-            .map(|w| PatternRange { start: w[0], end: w[1] })
-            .collect();
-        // close the final iteration at trace end
-        out.push(PatternRange { start: *anchors.last().unwrap(), end: t1 });
-        return Ok(out);
     }
+    Ok((anchors, true))
+}
 
-    // unanchored: motif discovery on the binned activity series
-    let tp = time_profile(trace, cfg.bins, Some(16))?;
-    let series = tp.bin_totals();
+/// Turn anchor timestamps into iteration ranges — the anchored core
+/// shared by the sequential, sharded and streamed drivers. Errors match
+/// the sequential engine exactly.
+pub fn ranges_from_anchors(
+    mut anchors: Vec<i64>,
+    name_seen: bool,
+    name: &str,
+    t1: i64,
+) -> Result<Vec<PatternRange>> {
+    if !name_seen {
+        bail!("start_event '{name}' not present in trace");
+    }
+    anchors.sort_unstable();
+    if anchors.len() < 2 {
+        bail!("start_event '{name}' occurs {} time(s); need >= 2", anchors.len());
+    }
+    let mut out: Vec<PatternRange> = anchors
+        .windows(2)
+        .map(|w| PatternRange { start: w[0], end: w[1] })
+        .collect();
+    // close the final iteration at trace end
+    out.push(PatternRange { start: *anchors.last().unwrap(), end: t1 });
+    Ok(out)
+}
+
+/// The unanchored core: motif discovery over an already-computed binned
+/// activity series (from any time-profile engine — sequential, sharded
+/// or streamed all produce bit-identical series). `t0`/`t1` are the
+/// global time range the series was binned over.
+pub fn ranges_from_series(
+    series: &[f64],
+    cfg: &PatternConfig,
+    t0: i64,
+    t1: i64,
+) -> Result<Vec<PatternRange>> {
     let m = cfg.window.unwrap_or((cfg.bins / 16).max(4));
-    let (profile, index) = matrix_profile(&series, m)?;
+    let (profile, index) = matrix_profile(series, m)?;
     let w = profile.len();
     // Near-constant windows (quiet regions, trace tails) z-normalize to
     // garbage — exclude them from motif selection.
@@ -206,6 +228,32 @@ pub fn detect_pattern(
         b += period;
     }
     Ok(out)
+}
+
+/// Detect repeating patterns. With `start_event`, occurrences are anchored
+/// at that function's Enter timestamps (the paper's
+/// `detect_pattern(start_event='time-loop')`) and validated/refined with
+/// the matrix profile of the activity series; without it, motif discovery
+/// runs on the activity series alone. The sharded / streamed drivers
+/// ([`crate::exec::ops::detect_pattern`],
+/// [`crate::exec::stream::detect_pattern`]) share [`collect_anchors`],
+/// [`ranges_from_anchors`] and [`ranges_from_series`], differing only in
+/// how the anchors / activity series are gathered.
+pub fn detect_pattern(
+    trace: &mut Trace,
+    start_event: Option<&str>,
+    cfg: &PatternConfig,
+) -> Result<Vec<PatternRange>> {
+    let (t0, t1) = trace.time_range()?;
+    if let Some(name) = start_event {
+        // anchor at Enter events of `name` on the lowest-id process
+        let p0 = trace.process_ids()?.first().copied().unwrap_or(0);
+        let (anchors, seen) = collect_anchors(trace, name, p0, (0, trace.len()))?;
+        return ranges_from_anchors(anchors, seen, name, t1);
+    }
+    // unanchored: motif discovery on the binned activity series
+    let tp = time_profile(trace, cfg.bins, Some(16))?;
+    ranges_from_series(&tp.bin_totals(), cfg, t0, t1)
 }
 
 #[cfg(test)]

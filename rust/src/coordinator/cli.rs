@@ -109,6 +109,13 @@ SCALING:
   across a worker pool: the trace splits into contiguous process-aligned
   shards and per-shard results merge order-stably, so output is
   bit-identical to the sequential engines at any thread count.
+
+  The message-matching analyses (critical_path, lateness,
+  pattern_detection, comm_comp_breakdown) are routed too: point-to-point
+  matching shards by (src, dst, tag) channel — MPI's non-overtaking
+  guarantee makes each channel independently matchable — so endpoint
+  collection and FIFO pairing run on the pool while the dependency walk
+  stays sequential. Results are bit-identical to the sequential engines.
     --threads 0   use all available cores (default)
     --threads 1   force the sequential engines
     --threads N   use N worker threads
@@ -123,8 +130,13 @@ SCALING:
   event object at a time (the file bytes stay resident, the JSON tree
   and row set never exist); non-streamable sources (hpctoolkit,
   projections, interleaved files) fall back to an eager load kept
-  in-memory. Results stay bit-identical to eager loading. In a pipeline
-  spec, put \"stream\": true on a \"load\" step.
+  in-memory and flagged via StreamStats.fallback. All routed analyses —
+  including critical_path, lateness, pattern_detection and
+  comm_comp_breakdown, which fold per-shard channel queues and match at
+  end of stream — stay bit-identical to eager loading, and the
+  streamability pre-scan verdict is cached per session entry so repeated
+  analyses skip the re-verification. In a pipeline spec, put
+  \"stream\": true on a \"load\" step.
 
   --batch runs the paper's multirun scaling comparison as one job:
   every trace streams through a flat-profile ingest scheduled over the

@@ -293,11 +293,19 @@ impl Pipeline {
             }
             "critical_path" => {
                 let paths = s.critical_path(trace()?)?;
-                let table = paths[0].to_table(s.get(trace()?)?)?;
-                emit(
-                    format!("{} events on path", paths[0].rows.len()),
-                    Some(table.show(usize::MAX)),
-                )
+                // Stream-backed entries stay unmaterialized: there is no
+                // events table to render, so emit the path rows instead.
+                let body = match s.get(trace()?) {
+                    Ok(t) => paths[0].to_table(t)?.show(usize::MAX),
+                    Err(_) => {
+                        let mut b = String::from("row\n");
+                        for r in &paths[0].rows {
+                            let _ = writeln!(b, "{r}");
+                        }
+                        b
+                    }
+                };
+                emit(format!("{} events on path", paths[0].rows.len()), Some(body))
             }
             "lateness" => {
                 let ops = s.lateness(trace()?)?;

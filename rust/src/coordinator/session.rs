@@ -17,7 +17,10 @@ enum TraceSource {
     /// Stream-backed: routed analyses re-open the source and ingest it
     /// shard-at-a-time ([`crate::exec::stream`]), so the whole trace is
     /// never resident; non-routed operations materialize on demand.
-    Streamed(PathBuf),
+    /// The streamability pre-scan verdict (csv/chrome run counts, chrome
+    /// app name) is cached here so repeated routed analyses skip the
+    /// re-verification parse.
+    Streamed { path: PathBuf, plan: crate::readers::StreamPlan },
 }
 
 /// A named collection of traces plus an optional PJRT runtime.
@@ -33,11 +36,15 @@ enum TraceSource {
 /// path is preferred by default.
 ///
 /// Entries added with [`AnalysisSession::load_streamed`] never
-/// materialize for the routed analyses: each call re-opens the source
-/// and feeds the worker pool shard-at-a-time with peak memory bounded
-/// per shard, with results bit-identical to the eager path
-/// (`tests/parity.rs` again). [`AnalysisSession::run_batch`] schedules
-/// many such ingests over the same pool for multi-trace comparisons.
+/// materialize for the routed analyses — including the
+/// message-matching ones (`critical_path`, `lateness`,
+/// `detect_pattern`, `comm_comp_breakdown`), which fold per-shard
+/// channel queues and match at end of stream: each call re-opens the
+/// source (reusing the entry's cached streamability verdict) and feeds
+/// the worker pool shard-at-a-time with peak memory bounded per shard,
+/// with results bit-identical to the eager path (`tests/parity.rs`
+/// again). [`AnalysisSession::run_batch`] schedules many such ingests
+/// over the same pool for multi-trace comparisons.
 pub struct AnalysisSession {
     sources: HashMap<String, TraceSource>,
     pub runtime: Option<Runtime>,
@@ -86,10 +93,13 @@ impl AnalysisSession {
         }
     }
 
-    /// The source path behind `name`, if it is stream-backed.
-    fn stream_path(&self, name: &str) -> Option<PathBuf> {
+    /// The source path and cached stream plan behind `name`, if it is
+    /// stream-backed.
+    fn stream_path(&self, name: &str) -> Option<(PathBuf, crate::readers::StreamPlan)> {
         match self.sources.get(name) {
-            Some(TraceSource::Streamed(p)) => Some(p.clone()),
+            Some(TraceSource::Streamed { path, plan }) => {
+                Some((path.clone(), plan.clone()))
+            }
             _ => None,
         }
     }
@@ -131,20 +141,21 @@ impl AnalysisSession {
     }
 
     /// Register `path` as a stream-backed trace: routed analyses ingest
-    /// it shard-at-a-time instead of materializing it. The source is
-    /// opened once up front so format errors surface here. Sources that
-    /// cannot stream (hpctoolkit / projections / interleaved csv or
-    /// chrome) were necessarily loaded eagerly by that probe, so their
-    /// trace is kept memory-backed instead of being re-read on every
-    /// analysis.
+    /// it shard-at-a-time instead of materializing it. The streamability
+    /// pre-scan runs once here and its verdict is cached on the entry
+    /// (format errors also surface here), so each routed analysis
+    /// re-opens the source without re-verifying it. Sources that cannot
+    /// stream (hpctoolkit / projections / interleaved csv or chrome)
+    /// load eagerly once and stay memory-backed instead of being re-read
+    /// on every analysis.
     pub fn load_streamed(&mut self, name: &str, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
-        let reader = crate::readers::streaming::open_sharded(path)?;
-        if reader.is_streaming() {
-            self.sources
-                .insert(name.to_string(), TraceSource::Streamed(path.to_path_buf()));
-        } else if let Some(t) = reader.into_eager_trace() {
-            self.insert(name, t);
+        let plan = crate::readers::plan_sharded(path)?;
+        if plan.is_streaming() {
+            self.sources.insert(
+                name.to_string(),
+                TraceSource::Streamed { path: path.to_path_buf(), plan },
+            );
         } else {
             self.load(name, path)?;
         }
@@ -167,10 +178,10 @@ impl AnalysisSession {
     pub fn get(&self, name: &str) -> Result<&Trace> {
         match self.sources.get(name) {
             Some(TraceSource::Memory(t)) => Ok(t),
-            Some(TraceSource::Streamed(p)) => Err(anyhow!(
+            Some(TraceSource::Streamed { path, .. }) => Err(anyhow!(
                 "trace '{name}' is stream-backed ({}); routed analyses read it \
                  shard-at-a-time — use get_mut to materialize it",
-                p.display()
+                path.display()
             )),
             None => Err(anyhow!("no trace '{name}' in session")),
         }
@@ -188,17 +199,21 @@ impl AnalysisSession {
     /// memory-backed entries). Used transparently by operations without a
     /// streaming implementation.
     fn materialize(&mut self, name: &str) -> Result<()> {
-        let path = self.stream_path(name);
-        if let Some(p) = path {
+        if let Some((p, _)) = self.stream_path(name) {
             let t = crate::readers::read_auto(&p)?;
             self.sources.insert(name.to_string(), TraceSource::Memory(t));
         }
         Ok(())
     }
 
-    /// Open the sharded reader behind a stream-backed entry.
-    fn open_stream(&self, path: &Path) -> Result<Box<dyn crate::readers::ShardedReader>> {
-        crate::readers::streaming::open_sharded(path)
+    /// Open the sharded reader behind a stream-backed entry using its
+    /// cached pre-scan verdict (no re-verification).
+    fn open_stream(
+        &self,
+        path: &Path,
+        plan: &crate::readers::StreamPlan,
+    ) -> Result<Box<dyn crate::readers::ShardedReader>> {
+        crate::readers::open_planned(path, plan)
     }
 
     /// Filter a trace into a new session entry (paper §IV.E). Columns
@@ -224,8 +239,8 @@ impl AnalysisSession {
         name: &str,
         metric: Metric,
     ) -> Result<Vec<analysis::ProfileRow>> {
-        if let Some(path) = self.stream_path(name) {
-            let mut r = self.open_stream(&path)?;
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
             let (rows, stats) =
                 crate::exec::stream::flat_profile(r.as_mut(), metric, self.num_threads)?;
             self.last_stream_stats = Some(stats);
@@ -247,8 +262,8 @@ impl AnalysisSession {
         bins: usize,
         top: Option<usize>,
     ) -> Result<analysis::TimeProfile> {
-        if let Some(path) = self.stream_path(name) {
-            let mut r = self.open_stream(&path)?;
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
             let (tp, stats) =
                 crate::exec::stream::time_profile(r.as_mut(), bins, top, self.num_threads)?;
             self.last_stream_stats = Some(stats);
@@ -292,6 +307,21 @@ impl AnalysisSession {
         start_event: Option<&str>,
         cfg: &analysis::PatternConfig,
     ) -> Result<Vec<analysis::PatternRange>> {
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
+            let (pats, stats) = crate::exec::stream::detect_pattern(
+                r.as_mut(),
+                start_event,
+                cfg,
+                self.num_threads,
+            )?;
+            self.last_stream_stats = Some(stats);
+            return Ok(pats);
+        }
+        let threads = self.threads();
+        if self.sharded(name, threads) {
+            return crate::exec::ops::detect_pattern(self.get(name)?, start_event, cfg, threads);
+        }
         analysis::detect_pattern(self.get_mut(name)?, start_event, cfg)
     }
 
@@ -300,8 +330,8 @@ impl AnalysisSession {
         name: &str,
         unit: analysis::CommUnit,
     ) -> Result<analysis::CommMatrix> {
-        if let Some(path) = self.stream_path(name) {
-            let mut r = self.open_stream(&path)?;
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
             let (m, stats) =
                 crate::exec::stream::comm_matrix(r.as_mut(), unit, self.num_threads)?;
             self.last_stream_stats = Some(stats);
@@ -327,8 +357,8 @@ impl AnalysisSession {
     }
 
     pub fn message_histogram(&mut self, name: &str, bins: usize) -> Result<(Vec<u64>, Vec<f64>)> {
-        if let Some(path) = self.stream_path(name) {
-            let mut r = self.open_stream(&path)?;
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
             let (hist, stats) =
                 crate::exec::stream::message_histogram(r.as_mut(), bins, self.num_threads)?;
             self.last_stream_stats = Some(stats);
@@ -347,8 +377,8 @@ impl AnalysisSession {
         name: &str,
         unit: analysis::CommUnit,
     ) -> Result<Vec<(i64, f64, f64)>> {
-        if let Some(path) = self.stream_path(name) {
-            let mut r = self.open_stream(&path)?;
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
             let (rows, stats) =
                 crate::exec::stream::comm_by_process(r.as_mut(), unit, self.num_threads)?;
             self.last_stream_stats = Some(stats);
@@ -362,8 +392,8 @@ impl AnalysisSession {
         name: &str,
         bins: usize,
     ) -> Result<(Vec<u64>, Vec<f64>, Vec<i64>)> {
-        if let Some(path) = self.stream_path(name) {
-            let mut r = self.open_stream(&path)?;
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
             let (out, stats) =
                 crate::exec::stream::comm_over_time(r.as_mut(), bins, self.num_threads)?;
             self.last_stream_stats = Some(stats);
@@ -378,6 +408,21 @@ impl AnalysisSession {
     }
 
     pub fn comm_comp_breakdown(&mut self, name: &str) -> Result<Vec<analysis::Breakdown>> {
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
+            let (rows, stats) = crate::exec::stream::comm_comp_breakdown(
+                r.as_mut(),
+                None,
+                None,
+                self.num_threads,
+            )?;
+            self.last_stream_stats = Some(stats);
+            return Ok(rows);
+        }
+        let threads = self.threads();
+        if self.sharded(name, threads) {
+            return crate::exec::ops::comm_comp_breakdown(self.get(name)?, None, None, threads);
+        }
         analysis::comm_comp_breakdown(self.get_mut(name)?, None, None)
     }
 
@@ -387,8 +432,8 @@ impl AnalysisSession {
         metric: Metric,
         k: usize,
     ) -> Result<Vec<analysis::ImbalanceRow>> {
-        if let Some(path) = self.stream_path(name) {
-            let mut r = self.open_stream(&path)?;
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
             let (rows, stats) =
                 crate::exec::stream::load_imbalance(r.as_mut(), metric, k, self.num_threads)?;
             self.last_stream_stats = Some(stats);
@@ -402,8 +447,8 @@ impl AnalysisSession {
     }
 
     pub fn idle_time(&mut self, name: &str) -> Result<Vec<analysis::IdleRow>> {
-        if let Some(path) = self.stream_path(name) {
-            let mut r = self.open_stream(&path)?;
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
             let (rows, stats) =
                 crate::exec::stream::idle_time(r.as_mut(), None, self.num_threads)?;
             self.last_stream_stats = Some(stats);
@@ -417,16 +462,37 @@ impl AnalysisSession {
     }
 
     pub fn critical_path(&mut self, name: &str) -> Result<Vec<analysis::CriticalPath>> {
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
+            let (paths, stats) =
+                crate::exec::stream::critical_path(r.as_mut(), self.num_threads)?;
+            self.last_stream_stats = Some(stats);
+            return Ok(paths);
+        }
+        let threads = self.threads();
+        if self.sharded(name, threads) {
+            return crate::exec::ops::critical_path(self.get(name)?, threads);
+        }
         analysis::critical_path_analysis(self.get_mut(name)?)
     }
 
     pub fn lateness(&mut self, name: &str) -> Result<Vec<analysis::LogicalOp>> {
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
+            let (ops, stats) = crate::exec::stream::lateness(r.as_mut(), self.num_threads)?;
+            self.last_stream_stats = Some(stats);
+            return Ok(ops);
+        }
+        let threads = self.threads();
+        if self.sharded(name, threads) {
+            return crate::exec::ops::lateness(self.get(name)?, threads);
+        }
         analysis::calculate_lateness(self.get_mut(name)?)
     }
 
     pub fn create_cct(&mut self, name: &str) -> Result<analysis::Cct> {
-        if let Some(path) = self.stream_path(name) {
-            let mut r = self.open_stream(&path)?;
+        if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
             let (tree, stats) =
                 crate::exec::stream::create_cct(r.as_mut(), self.num_threads)?;
             self.last_stream_stats = Some(stats);
@@ -576,6 +642,17 @@ mod tests {
             par.comm_over_time("g", 24).unwrap()
         );
         assert_eq!(seq.create_cct("g").unwrap(), par.create_cct("g").unwrap());
+        // the message-matching analyses route through the channel-sharded
+        // matcher at threads > 1 and must stay bit-identical
+        assert_eq!(
+            seq.critical_path("g").unwrap()[0].rows,
+            par.critical_path("g").unwrap()[0].rows
+        );
+        assert_eq!(seq.lateness("g").unwrap(), par.lateness("g").unwrap());
+        assert_eq!(
+            seq.comm_comp_breakdown("g").unwrap(),
+            par.comm_comp_breakdown("g").unwrap()
+        );
     }
 
     #[test]
@@ -619,11 +696,26 @@ mod tests {
         assert_eq!(stats.shards, 6);
         assert_eq!(stats.total_rows, eager.get("g").unwrap().len());
         assert!(stats.max_shard_rows < stats.total_rows);
+        assert!(!stats.fallback, "otf2 must stream, not fall back");
 
-        // non-routed ops materialize transparently
+        // message-matching analyses are routed too: the entry must stay
+        // stream-backed (never materialized), with identical results
         let cp = streamed.critical_path("g").unwrap();
-        assert!(!cp[0].rows.is_empty());
-        assert!(streamed.get("g").is_ok(), "materialized after critical_path");
+        assert_eq!(cp[0].rows, eager.critical_path("g").unwrap()[0].rows);
+        assert!(
+            streamed.get("g").is_err(),
+            "critical_path must not materialize a streamed entry"
+        );
+        assert_eq!(streamed.last_stream_stats.unwrap().shards, 6);
+        assert_eq!(
+            streamed.lateness("g").unwrap(),
+            eager.lateness("g").unwrap()
+        );
+        assert_eq!(
+            streamed.comm_comp_breakdown("g").unwrap(),
+            eager.comm_comp_breakdown("g").unwrap()
+        );
+        assert!(streamed.get("g").is_err(), "entry still stream-backed");
     }
 
     #[test]

@@ -28,6 +28,13 @@
 //!   instead of splitting segments across workers, the *bin axis* is
 //!   split: every (bin, function) cell folds its contributions in global
 //!   segment order regardless of worker count.
+//! * **Channel-sharded matching.** Point-to-point message matching
+//!   (feeding `critical_path`, `lateness`, `pattern_detection`,
+//!   `comm_comp_breakdown`) partitions by (src, dst, tag) channel —
+//!   MPI's non-overtaking guarantee makes each channel independently
+//!   matchable — and every channel pairs on the unique (timestamp, row)
+//!   key, reproducing the sequential FIFO consumption exactly
+//!   ([`ops::match_messages_sharded`]).
 //!
 //! The parity suite (`rust/tests/parity.rs`) asserts bitwise equality at
 //! 2/4/8 threads for every generator and every routed analysis.

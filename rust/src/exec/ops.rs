@@ -10,15 +10,22 @@
 use super::{pool, shard};
 use crate::analysis::cct;
 use crate::analysis::comm::{self, CommMatrix, CommUnit};
+use crate::analysis::critical_path::{self, CriticalPath};
 use crate::analysis::flat_profile::{self, Metric, ProfileRow};
 use crate::analysis::idle_time::IdleRow;
+use crate::analysis::lateness::{self, LogicalOp};
 use crate::analysis::load_imbalance::ImbalanceRow;
+use crate::analysis::match_caller_callee;
+use crate::analysis::messages::{self, ChannelQueues, MessageMatch, PairedChannels};
+use crate::analysis::overlap::{self, Breakdown};
+use crate::analysis::pattern::{self, PatternConfig, PatternRange};
 use crate::analysis::time_profile::{self, Segment, TimeProfile};
 use crate::analysis;
 use crate::df::NULL_I64;
-use crate::trace::{Trace, COL_NAME};
-use anyhow::{bail, Result};
+use crate::trace::{Trace, COL_NAME, COL_PROC, COL_THREAD, COL_TS};
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 /// Decide whether to run sharded; returns the shards when it is worth it.
 fn plan(trace: &Trace, threads: usize) -> Result<Option<shard::Shards>> {
@@ -284,6 +291,188 @@ pub fn message_histogram(
     }
     let edges = (0..=bins).map(|b| b as f64 * width).collect();
     Ok((counts, edges))
+}
+
+/// Cross-shard canonical-order check. Shard interiors are validated per
+/// shard (in parallel), so only the boundary rows need the (Process,
+/// Thread, Timestamp) comparison — a non-canonical trace whose disorder
+/// sits exactly on a shard cut (a process reappearing) would otherwise
+/// slip through. The error message mirrors the sequential engines'.
+fn check_boundaries(trace: &Trace, shards: &shard::Shards) -> Result<()> {
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let th = trace.events.i64s(COL_THREAD)?;
+    for &(start, _) in shards.ranges.iter().skip(1) {
+        let (i, j) = (start - 1, start);
+        if (pr[j], th[j], ts[j]) < (pr[i], th[i], ts[i]) {
+            return Err(match_caller_callee::canonical_order_error(j));
+        }
+    }
+    Ok(())
+}
+
+/// Channel-sharded message matching (paper §IV.D's enabling primitive).
+/// MPI's non-overtaking guarantee makes every (src, dst, tag) channel
+/// independently matchable, so endpoint collection runs over row-range
+/// chunks and FIFO pairing runs over channel groups — both on the worker
+/// pool — with results bit-identical to
+/// [`crate::analysis::match_messages`] (see `tests/parity.rs`).
+pub fn match_messages_sharded(trace: &Trace, threads: usize) -> Result<MessageMatch> {
+    let threads_eff = super::effective_threads(threads);
+    if threads_eff <= 1 || trace.len() < 2 {
+        return analysis::match_messages(trace);
+    }
+    let n = trace.len();
+    let ranges = pool::split_ranges(n, threads_eff);
+    let parts = pool::run_indexed(ranges.len(), threads_eff, |i| {
+        let mut acc = ChannelQueues::new();
+        acc.collect(trace, ranges[i], 0)?;
+        Ok(acc)
+    })?;
+    let mut acc = ChannelQueues::new();
+    for p in parts {
+        acc.merge(p);
+    }
+    finish_channel_queues(acc, n, threads_eff)
+}
+
+/// FIFO-pair accumulated channel queues on the worker pool and assemble
+/// the row-indexed match. Shared by the in-memory sharded matcher above
+/// and the streaming driver (which folds shard-local queues first).
+pub(crate) fn finish_channel_queues(
+    acc: ChannelQueues,
+    total_rows: usize,
+    threads: usize,
+) -> Result<MessageMatch> {
+    let chans = acc.into_queues();
+    if chans.is_empty() {
+        return Ok(messages::assemble_match(PairedChannels::default(), total_rows));
+    }
+    // Each slot is locked by exactly one pool task (groups are disjoint);
+    // the Mutex just hands out `&mut ChannelQueue` so tasks sort and take
+    // their queues in place — no endpoint set is ever cloned.
+    let chans: Vec<Mutex<messages::ChannelQueue>> =
+        chans.into_iter().map(Mutex::new).collect();
+    let groups = pool::split_ranges(chans.len(), super::effective_threads(threads));
+    let parts = pool::run_indexed(groups.len(), threads, |g| {
+        let mut out = PairedChannels::default();
+        for slot in &chans[groups[g].0..groups[g].1] {
+            let mut q = std::mem::take(
+                &mut *slot.lock().map_err(|_| anyhow!("channel lock poisoned"))?,
+            );
+            let pairs = messages::pair_channel(&mut q);
+            out.absorb(pairs, q);
+        }
+        Ok(out)
+    })?;
+    let mut all = PairedChannels::default();
+    for p in parts {
+        all.pairs.extend(p.pairs);
+        all.sends.extend(p.sends);
+        all.recvs.extend(p.recvs);
+    }
+    Ok(messages::assemble_match(all, total_rows))
+}
+
+/// Sharded critical-path analysis: per-shard canonical/nesting
+/// validation and channel-sharded matching feed the shared backward-walk
+/// core ([`critical_path::paths_from_runs`]); the walk itself is a
+/// dependency chase and stays sequential.
+pub fn critical_path(trace: &Trace, threads: usize) -> Result<Vec<CriticalPath>> {
+    let Some(shards) = plan(trace, threads)? else {
+        let mut t = trace.clone();
+        return analysis::critical_path_analysis(&mut t);
+    };
+    check_boundaries(trace, &shards)?;
+    pool::run_indexed(shards.len(), threads, |i| {
+        match_caller_callee::validate_range(trace, shards.ranges[i])
+    })?;
+    let msgs = match_messages_sharded(trace, threads)?;
+    let runs = critical_path::proc_runs(trace.processes()?, trace.timestamps()?);
+    Ok(critical_path::paths_from_runs(&runs, &msgs.send_of_recv))
+}
+
+/// Sharded lateness: per-shard leaf-call extraction (stacks never cross
+/// processes) + channel-sharded matching feed the shared causal core
+/// ([`lateness::lateness_from_structure`]).
+pub fn lateness(trace: &Trace, threads: usize) -> Result<Vec<LogicalOp>> {
+    let Some(shards) = plan(trace, threads)? else {
+        let mut t = trace.clone();
+        return analysis::calculate_lateness(&mut t);
+    };
+    check_boundaries(trace, &shards)?;
+    let msgs = match_messages_sharded(trace, threads)?;
+    let parts = pool::run_indexed(shards.len(), threads, |i| {
+        let mut sub = shard::subtrace(trace, shards.ranges[i])?;
+        match_caller_callee::prepare(&mut sub)?;
+        let mut s = lateness::leaf_structure(&sub)?;
+        s.shift_rows(shards.ranges[i].0 as u32);
+        Ok(s)
+    })?;
+    let mut s = lateness::LeafStructure::default();
+    for p in parts {
+        s.merge(p);
+    }
+    let (_, ndict) = trace.events.strs(COL_NAME)?;
+    Ok(lateness::lateness_from_structure(s, &msgs.send_of_recv, |c| {
+        ndict.resolve(c).unwrap_or("").to_string()
+    }))
+}
+
+/// Sharded pattern detection: anchored mode scans row-range chunks for
+/// the anchor enters; unanchored mode reuses the sharded `time_profile`
+/// for the activity series. Both feed the shared cores in
+/// [`crate::analysis::pattern`].
+pub fn detect_pattern(
+    trace: &Trace,
+    start_event: Option<&str>,
+    cfg: &PatternConfig,
+    threads: usize,
+) -> Result<Vec<PatternRange>> {
+    let threads_eff = super::effective_threads(threads);
+    if threads_eff <= 1 || trace.len() < 2 {
+        let mut t = trace.clone();
+        return analysis::detect_pattern(&mut t, start_event, cfg);
+    }
+    let (t0, t1) = trace.time_range()?;
+    if let Some(name) = start_event {
+        let p0 = trace.process_ids()?.first().copied().unwrap_or(0);
+        let ranges = pool::split_ranges(trace.len(), threads_eff);
+        let parts = pool::run_indexed(ranges.len(), threads_eff, |i| {
+            pattern::collect_anchors(trace, name, p0, ranges[i])
+        })?;
+        let mut anchors = Vec::new();
+        let mut seen = false;
+        for (a, s) in parts {
+            anchors.extend(a);
+            seen |= s;
+        }
+        return pattern::ranges_from_anchors(anchors, seen, name, t1);
+    }
+    let tp = time_profile(trace, cfg.bins, Some(16), threads)?;
+    pattern::ranges_from_series(&tp.bin_totals(), cfg, t0, t1)
+}
+
+/// Sharded `comm_comp_breakdown`: per-process interval arithmetic is
+/// complete within a process-aligned shard; only `other` needs the
+/// global span, applied by the shared [`overlap::finish_breakdown`].
+pub fn comm_comp_breakdown(
+    trace: &Trace,
+    comm_functions: Option<&[&str]>,
+    other_functions: Option<&[&str]>,
+    threads: usize,
+) -> Result<Vec<Breakdown>> {
+    let Some(shards) = plan(trace, threads)? else {
+        let mut t = trace.clone();
+        return analysis::comm_comp_breakdown(&mut t, comm_functions, other_functions);
+    };
+    check_boundaries(trace, &shards)?;
+    let (t0, t1) = trace.time_range()?;
+    let parts = pool::run_indexed(shards.len(), threads, |i| {
+        let mut sub = shard::subtrace(trace, shards.ranges[i])?;
+        overlap::breakdown_parts(&mut sub, comm_functions, other_functions)
+    })?;
+    Ok(overlap::finish_breakdown(parts.into_iter().flatten().collect(), t0, t1))
 }
 
 /// Sharded CCT construction: each process-aligned shard builds its

@@ -17,10 +17,14 @@
 //!
 //! Per-op partial memory: O(functions) for profiles, O(tree) for the
 //! CCT, O(distinct sizes) for the histogram, O(process²) for the comm
-//! matrix, O(sends) for `comm_over_time`, and O(call segments) for
-//! `time_profile` — all far below the 8-column event table, though the
-//! last two still grow with the trace (documented trade-off: binning
-//! needs the global span before any segment can be placed).
+//! matrix, O(sends) for `comm_over_time`, O(call segments) for
+//! `time_profile`, O(processes + message instants) for `critical_path`,
+//! O(leaf calls + message instants) for `lateness` (the output itself is
+//! O(leaf calls)), O(processes) for `comm_comp_breakdown`, and
+//! O(anchors) for anchored `detect_pattern` — all far below the
+//! 8-column event table, though several still grow with the trace
+//! (documented trade-off: binning needs the global span before any
+//! segment can be placed, and message matching needs every endpoint).
 //!
 //! [`StreamStats`] is the ingest instrumentation hook: shard count,
 //! total rows, and the largest shard ever resident — what the parity
@@ -30,13 +34,19 @@ use super::pool;
 use crate::analysis;
 use crate::analysis::cct::{self, Cct};
 use crate::analysis::comm::{self, CommMatrix, CommUnit, MsgDir};
+use crate::analysis::critical_path::{self, CriticalPath};
 use crate::analysis::flat_profile::{self, Metric, ProfileRow};
 use crate::analysis::idle_time::IdleRow;
+use crate::analysis::lateness::{self, LogicalOp};
 use crate::analysis::load_imbalance::ImbalanceRow;
+use crate::analysis::match_caller_callee;
+use crate::analysis::messages::ChannelQueues;
+use crate::analysis::overlap::{self, Breakdown};
+use crate::analysis::pattern::{self, PatternConfig, PatternRange};
 use crate::analysis::time_profile::{self, Segment, TimeProfile};
 use crate::df::Interner;
 use crate::readers::streaming::ShardedReader;
-use crate::trace::{Trace, COL_NAME};
+use crate::trace::{Trace, COL_NAME, COL_PROC, COL_THREAD, COL_TS};
 use anyhow::{anyhow, bail, Result};
 use std::collections::{BTreeMap, BTreeSet, HashMap};
 use std::sync::Mutex;
@@ -61,6 +71,12 @@ pub struct StreamStats {
     pub max_shard_rows: usize,
     /// Distinct processes observed across the stream.
     pub num_processes: usize,
+    /// True when the reader was a split-after-load fallback (hpctoolkit,
+    /// projections, interleaved csv/chrome): the whole trace was resident
+    /// while shards were yielded, so the O(workers × shard) memory bound
+    /// did NOT hold. Previously this degradation was silent; callers that
+    /// rely on bounded ingest should assert `!fallback`.
+    pub fallback: bool,
 }
 
 /// Stream-wide facts the driver folds for free while shards pass by.
@@ -122,6 +138,7 @@ where
 {
     let batch_size = super::effective_threads(threads).max(1);
     let mut ing = Ingest::new();
+    ing.stats.fallback = !reader.is_streaming();
     loop {
         let mut batch: Vec<Mutex<Trace>> = Vec::with_capacity(batch_size);
         while batch.len() < batch_size {
@@ -392,6 +409,19 @@ pub fn time_profile(
     top_funcs: Option<usize>,
     threads: usize,
 ) -> Result<(TimeProfile, StreamStats)> {
+    let (tp, ing) = time_profile_ingest(reader, num_bins, top_funcs, threads)?;
+    Ok((tp, ing.stats))
+}
+
+/// [`time_profile`] exposing the full ingest facts — `detect_pattern`
+/// needs the exact stream-wide time range alongside the profile (bin
+/// edges round, the range must not).
+fn time_profile_ingest(
+    reader: &mut dyn ShardedReader,
+    num_bins: usize,
+    top_funcs: Option<usize>,
+    threads: usize,
+) -> Result<(TimeProfile, Ingest)> {
     if num_bins == 0 {
         bail!("num_bins must be > 0");
     }
@@ -435,7 +465,7 @@ pub fn time_profile(
     let bin_edges = (0..=num_bins)
         .map(|b| t0 + (b as f64 * width).round() as i64)
         .collect();
-    Ok((TimeProfile { bin_edges, func_names: spec.func_names, values }, ing.stats))
+    Ok((TimeProfile { bin_edges, func_names: spec.func_names, values }, ing))
 }
 
 /// Streamed CCT construction: per-shard partial trees merge in shard
@@ -451,6 +481,241 @@ pub fn create_cct(
         Ok(())
     })?;
     Ok((merger.finish(), ing.stats))
+}
+
+/// Streamed `comm_comp_breakdown`: per-process interval arithmetic is
+/// complete within a shard (O(processes) partials); `other` applies the
+/// stream-wide span at the end — the ideal streaming analysis.
+pub fn comm_comp_breakdown(
+    reader: &mut dyn ShardedReader,
+    comm_functions: Option<&[&str]>,
+    other_functions: Option<&[&str]>,
+    threads: usize,
+) -> Result<(Vec<Breakdown>, StreamStats)> {
+    let mut parts: Vec<overlap::BreakdownPart> = Vec::new();
+    let ing = drive(
+        reader,
+        threads,
+        |t| overlap::breakdown_parts(t, comm_functions, other_functions),
+        |p| {
+            parts.extend(p);
+            Ok(())
+        },
+    )?;
+    let (t0, t1) = ing.time_range();
+    Ok((overlap::finish_breakdown(parts, t0, t1), ing.stats))
+}
+
+/// A shard's first and last (Process, Thread, Timestamp) row keys —
+/// what the cross-shard canonical-order check compares, exactly like
+/// the sequential walk comparing adjacent rows.
+type ShardBounds = Option<((i64, i64, i64), (i64, i64, i64))>;
+
+/// The (first, last) row keys of a shard; None when it has no rows.
+fn shard_bounds(t: &Trace) -> Result<ShardBounds> {
+    let n = t.len();
+    if n == 0 {
+        return Ok(None);
+    }
+    let ts = t.events.i64s(COL_TS)?;
+    let pr = t.events.i64s(COL_PROC)?;
+    let th = t.events.i64s(COL_THREAD)?;
+    Ok(Some(((pr[0], th[0], ts[0]), (pr[n - 1], th[n - 1], ts[n - 1]))))
+}
+
+/// Per-shard fold state shared by the streamed `critical_path` and
+/// `lateness`: the global row offset, the per-process run structure, and
+/// the channel queues for end-of-stream matching. Partial memory is
+/// O(processes + message instants) — the row set itself never folds.
+#[derive(Default)]
+struct MsgIngest {
+    offset: usize,
+    runs: critical_path::ProcRuns,
+    queues: ChannelQueues,
+    /// (Process, Thread, Timestamp) key of the previous shard's last
+    /// row, for the cross-boundary canonical-order check.
+    prev_last: Option<(i64, i64, i64)>,
+}
+
+impl MsgIngest {
+    /// Fold one shard's local run structure and channel queues, shifting
+    /// local rows to their global base. Bails on any shard-boundary
+    /// (Process, Thread, Timestamp) regression the eager engines would
+    /// reject as non-canonical — including a same-process timestamp
+    /// regression exactly at the cut, which the per-shard validation
+    /// (which resets at each shard start) cannot see.
+    fn fold(
+        &mut self,
+        local: critical_path::ProcRuns,
+        mut q: ChannelQueues,
+        rows: usize,
+        bounds: ShardBounds,
+    ) -> Result<()> {
+        let base = self.offset;
+        if let (Some(prev), Some((first, _))) = (self.prev_last, bounds) {
+            if first < prev {
+                return Err(match_caller_callee::canonical_order_error(base));
+            }
+        }
+        if let Some((_, last)) = bounds {
+            self.prev_last = Some(last);
+        }
+        for i in 0..local.procs.len() {
+            let (a, b) = local.ranges[i];
+            let range = (a + base, b + base);
+            match self.runs.procs.last().copied() {
+                Some(last) if local.procs[i] == last => {
+                    // a process continuing across a shard boundary: extend
+                    // its run (eager loading would see one contiguous run)
+                    let k = self.runs.ranges.len() - 1;
+                    self.runs.ranges[k].1 = range.1;
+                    self.runs.last_ts[k] = local.last_ts[i];
+                }
+                Some(last) if local.procs[i] < last => {
+                    return Err(match_caller_callee::canonical_order_error(range.0));
+                }
+                _ => self.runs.push(local.procs[i], range, local.last_ts[i]),
+            }
+        }
+        q.shift_rows(base as u32);
+        self.queues.merge(q);
+        self.offset += rows;
+        Ok(())
+    }
+}
+
+/// Streamed critical-path analysis: shards contribute their process runs
+/// and channel queues (validated by per-shard caller/callee matching);
+/// matching pairs on the pool at end of stream and the shared backward
+/// walk runs over O(processes + messages) state — the trace itself is
+/// never resident.
+pub fn critical_path(
+    reader: &mut dyn ShardedReader,
+    threads: usize,
+) -> Result<(Vec<CriticalPath>, StreamStats)> {
+    let mut acc = MsgIngest::default();
+    let ing = drive(
+        reader,
+        threads,
+        |t| {
+            // validation only — the walk needs no derived columns, so
+            // the O(rows) matching/parent/depth vectors never exist
+            match_caller_callee::validate_range(t, (0, t.len()))?;
+            let local = critical_path::proc_runs(t.processes()?, t.timestamps()?);
+            let mut q = ChannelQueues::new();
+            q.collect(t, (0, t.len()), 0)?;
+            Ok((local, q, t.len(), shard_bounds(t)?))
+        },
+        |(local, q, rows, bounds)| acc.fold(local, q, rows, bounds),
+    )?;
+    if acc.offset == 0 {
+        bail!("empty trace");
+    }
+    let msgs = super::ops::finish_channel_queues(acc.queues, acc.offset, threads)?;
+    Ok((critical_path::paths_from_runs(&acc.runs, &msgs.send_of_recv), ing.stats))
+}
+
+/// Streamed lateness: shards extract their leaf-call structure and
+/// channel queues; names remap into one stream-wide interner (shard
+/// dictionaries differ per format); the causal core runs at end of
+/// stream over the matched messages. Partial memory is O(leaf calls +
+/// messages) — the inherent size of the output — never the event table.
+pub fn lateness(
+    reader: &mut dyn ShardedReader,
+    threads: usize,
+) -> Result<(Vec<LogicalOp>, StreamStats)> {
+    let mut names = Interner::new();
+    let mut s = lateness::LeafStructure::default();
+    let mut acc = MsgIngest::default();
+    let ing = drive(
+        reader,
+        threads,
+        |t| {
+            match_caller_callee::prepare(t)?;
+            let part = lateness::leaf_structure(t)?;
+            let (_, dict) = t.events.strs(COL_NAME)?;
+            // own the shard-local code -> name memo so the fold can
+            // remap after the shard is dropped
+            let mut memo: HashMap<u32, String> = HashMap::new();
+            for c in &part.calls {
+                memo.entry(c.name_code)
+                    .or_insert_with(|| dict.resolve(c.name_code).unwrap_or("").to_string());
+            }
+            let local = critical_path::proc_runs(t.processes()?, t.timestamps()?);
+            let mut q = ChannelQueues::new();
+            q.collect(t, (0, t.len()), 0)?;
+            Ok((part, memo, local, q, t.len(), shard_bounds(t)?))
+        },
+        |(mut part, memo, local, q, rows, bounds)| {
+            let mut remap: HashMap<u32, u32> = HashMap::new();
+            for (code, name) in &memo {
+                remap.insert(*code, names.intern(name));
+            }
+            for c in &mut part.calls {
+                c.name_code = remap[&c.name_code];
+            }
+            part.shift_rows(acc.offset as u32);
+            s.merge(part);
+            acc.fold(local, q, rows, bounds)
+        },
+    )?;
+    let msgs = super::ops::finish_channel_queues(acc.queues, acc.offset, threads)?;
+    let ops = lateness::lateness_from_structure(s, &msgs.send_of_recv, |c| {
+        names.resolve(c).unwrap_or("").to_string()
+    });
+    Ok((ops, ing.stats))
+}
+
+/// Streamed pattern detection. Anchored mode folds the anchor enters of
+/// the stream's lowest process (O(anchors) state); unanchored mode runs
+/// the streamed `time_profile` and the shared motif core over its
+/// activity series.
+pub fn detect_pattern(
+    reader: &mut dyn ShardedReader,
+    start_event: Option<&str>,
+    cfg: &PatternConfig,
+    threads: usize,
+) -> Result<(Vec<PatternRange>, StreamStats)> {
+    let Some(name) = start_event else {
+        let (tp, ing) = time_profile_ingest(reader, cfg.bins, Some(16), threads)?;
+        let (t0, t1) = ing.time_range();
+        return Ok((pattern::ranges_from_series(&tp.bin_totals(), cfg, t0, t1)?, ing.stats));
+    };
+    let mut anchors: Vec<i64> = Vec::new();
+    let mut seen = false;
+    let mut best_proc: Option<i64> = None;
+    let ing = drive(
+        reader,
+        threads,
+        |t| {
+            let p0 = t.process_ids()?.first().copied().unwrap_or(0);
+            let (a, s) = pattern::collect_anchors(t, name, p0, (0, t.len()))?;
+            Ok((a, s, p0, t.len()))
+        },
+        |(a, s, p0, rows)| {
+            seen |= s;
+            if rows == 0 {
+                return Ok(());
+            }
+            match best_proc {
+                // ascending streams put the global minimum process in
+                // the first non-empty shard; later shards only extend it
+                None => {
+                    best_proc = Some(p0);
+                    anchors = a;
+                }
+                Some(b) if p0 < b => {
+                    best_proc = Some(p0);
+                    anchors = a;
+                }
+                Some(b) if p0 == b => anchors.extend(a),
+                _ => {}
+            }
+            Ok(())
+        },
+    )?;
+    let (_, t1) = ing.time_range();
+    Ok((pattern::ranges_from_anchors(anchors, seen, name, t1)?, ing.stats))
 }
 
 #[cfg(test)]
@@ -501,7 +766,53 @@ mod tests {
         let mut r = SplitReader::new(t).unwrap();
         let (rows, stats) = flat_profile(&mut r, Metric::ExcTime, 4).unwrap();
         assert!(rows.is_empty());
-        assert_eq!(stats, StreamStats::default());
+        // a SplitReader is a fallback, and the flag must say so even on
+        // an empty stream
+        assert_eq!(stats, StreamStats { fallback: true, ..StreamStats::default() });
+    }
+
+    #[test]
+    fn fallback_flag_distinguishes_split_readers_from_streaming() {
+        let (_, mut r) = split("gol", 4);
+        let (_, stats) = flat_profile(&mut r, Metric::ExcTime, 2).unwrap();
+        assert!(stats.fallback, "SplitReader must report the fallback");
+    }
+
+    #[test]
+    fn streamed_critical_path_and_lateness_match_sequential() {
+        let (t, mut r) = split("gol", 4);
+        let seq_cp = analysis::critical_path_analysis(&mut t.clone()).unwrap();
+        let (cp, stats) = critical_path(&mut r, 2).unwrap();
+        assert_eq!(cp.len(), seq_cp.len());
+        assert_eq!(cp[0].rows, seq_cp[0].rows);
+        assert_eq!(stats.total_rows, t.len());
+
+        let (_, mut r) = split("gol", 4);
+        let seq_ops = analysis::calculate_lateness(&mut t.clone()).unwrap();
+        let (ops, _) = lateness(&mut r, 2).unwrap();
+        assert_eq!(ops, seq_ops);
+    }
+
+    #[test]
+    fn streamed_breakdown_and_pattern_match_sequential() {
+        let (t, mut r) = split("laghos", 4);
+        let seq_bd = analysis::comm_comp_breakdown(&mut t.clone(), None, None).unwrap();
+        let (bd, _) = comm_comp_breakdown(&mut r, None, None, 2).unwrap();
+        assert_eq!(bd, seq_bd);
+
+        let (t, mut r) = split("tortuga", 4);
+        let cfg = PatternConfig::default();
+        let seq_p = analysis::detect_pattern(&mut t.clone(), Some("time-loop"), &cfg).unwrap();
+        let (p, _) = detect_pattern(&mut r, Some("time-loop"), &cfg, 2).unwrap();
+        assert_eq!(p, seq_p);
+    }
+
+    #[test]
+    fn streamed_critical_path_rejects_empty_stream() {
+        let t = TraceBuilder::new().finish();
+        let mut r = SplitReader::new(t).unwrap();
+        let err = critical_path(&mut r, 2).unwrap_err();
+        assert!(err.to_string().contains("empty trace"), "{err}");
     }
 
     #[test]

@@ -26,7 +26,13 @@
 //! `idle_time`, `comm_matrix`, plus dataframe `filter`/`groupby` — also
 //! run **sharded** across a worker pool ([`exec`]): the trace is split
 //! into contiguous, process-aligned shards, each worker analyzes its
-//! shards, and results merge order-stably.
+//! shards, and results merge order-stably. The message-matching
+//! analyses (`critical_path`, `lateness`, `pattern_detection`,
+//! `comm_comp_breakdown`) shard differently: point-to-point matching
+//! partitions by (src, dst, tag) *channel* — MPI's non-overtaking
+//! guarantee makes each channel independently matchable — so endpoint
+//! collection and FIFO pairing parallelize while the dependency walks
+//! stay sequential ([`exec::ops::match_messages_sharded`]).
 //!
 //! Two properties make the parallel path safe to prefer by default:
 //!

@@ -27,7 +27,7 @@ pub mod otf2;
 pub mod projections;
 pub mod streaming;
 
-pub use streaming::{open_sharded, ShardedReader, TraceShard};
+pub use streaming::{open_planned, open_sharded, plan_sharded, ShardedReader, StreamPlan, TraceShard};
 
 use crate::trace::Trace;
 use anyhow::{bail, Result};

@@ -17,7 +17,12 @@
 //! and ascending (what every writer in this crate emits, and what
 //! per-rank trace formats produce naturally); a cheap pre-scan verifies
 //! this and falls back to eager-load + [`SplitReader`] otherwise, so
-//! `open_sharded` accepts everything `read_auto` accepts.
+//! `open_sharded` accepts everything `read_auto` accepts. The pre-scan
+//! is split from reader construction ([`plan_sharded`] →
+//! [`StreamPlan`] → [`open_planned`]) so sessions re-opening the same
+//! source per analysis verify it once; fallbacks are surfaced to
+//! callers via `StreamStats::fallback` rather than silently holding the
+//! whole trace.
 //!
 //! Determinism: concatenating shard rows in yield order reproduces the
 //! canonical (Process, Thread, Timestamp) row order of the eager reader
@@ -25,7 +30,7 @@
 //! [`crate::exec::stream`] relies on to stay bit-identical with eager
 //! `read_auto` + sequential analysis.
 
-use super::{chrome, csv, hpctoolkit, otf2, projections};
+use super::{chrome, csv, otf2};
 use crate::df::Interner;
 use crate::trace::{Trace, TraceBuilder, TraceMeta};
 use crate::util::json::Json;
@@ -65,29 +70,100 @@ pub trait ShardedReader {
     }
 }
 
-/// Open `path` as a sharded reader with format auto-detection, mirroring
-/// [`super::read_auto`].
-pub fn open_sharded(path: &Path) -> Result<Box<dyn ShardedReader>> {
+/// The cached result of the streamability pre-scan. Sessions keep one
+/// per stream-backed entry so repeated routed analyses skip the
+/// re-verification — the csv pre-scan parses every line's Process field
+/// and the chrome pre-scan walks every event object, roughly half the
+/// per-analysis parse work for those formats.
+#[derive(Debug, Clone, PartialEq)]
+pub enum StreamPlan {
+    /// OTF2-sim directory: one rank file per shard, no pre-scan needed.
+    Otf2,
+    /// Canonically-ordered csv: `runs` process blocks stream from disk.
+    Csv { runs: usize },
+    /// Canonically-ordered chrome json: `runs` pid blocks, plus the
+    /// application name the pre-scan lifted from metadata records.
+    Chrome { runs: usize, app: String },
+    /// Not streamable (hpctoolkit / projections / interleaved files):
+    /// eager load + [`SplitReader`].
+    Fallback,
+}
+
+impl StreamPlan {
+    /// Will [`open_planned`] yield a truly streaming reader?
+    pub fn is_streaming(&self) -> bool {
+        !matches!(self, StreamPlan::Fallback)
+    }
+}
+
+/// Run only the streamability pre-scan, without opening a reader —
+/// mirrors [`super::read_auto`]'s format detection.
+pub fn plan_sharded(path: &Path) -> Result<StreamPlan> {
     if path.is_dir() {
         if path.join("defs.bin").exists() {
-            return Ok(Box::new(Otf2ShardedReader::open(path)?));
+            return Ok(StreamPlan::Otf2);
         }
         if path.join("meta.db").exists() {
-            return Ok(Box::new(SplitReader::new(hpctoolkit::read(path)?)?));
+            return Ok(StreamPlan::Fallback);
         }
         for entry in std::fs::read_dir(path)? {
             let p = entry?.path();
             if p.extension().and_then(|e| e.to_str()) == Some("sts") {
-                return Ok(Box::new(SplitReader::new(projections::read(path, 0)?)?));
+                return Ok(StreamPlan::Fallback);
             }
         }
         bail!("unrecognized trace directory: {}", path.display());
     }
     match path.extension().and_then(|e| e.to_str()).unwrap_or("") {
-        "csv" => csv_sharded(path),
-        "json" => chrome_sharded(path),
+        "csv" => Ok(match csv_prescan(path)? {
+            Some(runs) => StreamPlan::Csv { runs },
+            None => StreamPlan::Fallback,
+        }),
+        "json" => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            Ok(match chrome_prescan(&text) {
+                Some((runs, app)) => StreamPlan::Chrome { runs, app },
+                None => StreamPlan::Fallback,
+            })
+        }
         _ => bail!("unrecognized trace file: {}", path.display()),
     }
+}
+
+/// Open a reader for a previously computed [`StreamPlan`], skipping the
+/// pre-scan (sessions cache the plan per entry and re-open cheaply per
+/// analysis).
+pub fn open_planned(path: &Path, plan: &StreamPlan) -> Result<Box<dyn ShardedReader>> {
+    match plan {
+        StreamPlan::Otf2 => Ok(Box::new(Otf2ShardedReader::open(path)?)),
+        StreamPlan::Csv { runs } => csv_stream(path, *runs),
+        StreamPlan::Chrome { runs, app } => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {}", path.display()))?;
+            chrome_stream(path, text, *runs, app.clone())
+        }
+        StreamPlan::Fallback => {
+            Ok(Box::new(SplitReader::new(super::read_auto(path)?)?))
+        }
+    }
+}
+
+/// Open `path` as a sharded reader with format auto-detection, mirroring
+/// [`super::read_auto`]: plan + open in one call. Chrome files read
+/// their text once and hand it straight to the stream (sessions going
+/// through [`plan_sharded`] + [`open_planned`] instead pay one read per
+/// open but skip the pre-scan walk).
+pub fn open_sharded(path: &Path) -> Result<Box<dyn ShardedReader>> {
+    if !path.is_dir() && path.extension().and_then(|e| e.to_str()) == Some("json") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        return match chrome_prescan(&text) {
+            Some((runs, app)) => chrome_stream(path, text, runs, app),
+            None => Ok(Box::new(SplitReader::new(super::read_auto(path)?)?)),
+        };
+    }
+    open_planned(path, &plan_sharded(path)?)
 }
 
 // -- split-after-load fallback ---------------------------------------------
@@ -184,30 +260,25 @@ impl ShardedReader for Otf2ShardedReader {
 
 // -- csv: line stream with process-boundary shard emission ------------------
 
-/// Open a CSV trace for streaming. A pre-scan (O(1) memory) verifies the
-/// file's process blocks are contiguous and ascending — the canonical
-/// order this crate's writer emits. Files that interleave processes fall
-/// back to eager load + [`SplitReader`].
-pub fn csv_sharded(path: &Path) -> Result<Box<dyn ShardedReader>> {
-    match csv_prescan(path)? {
-        Some(runs) => {
-            let f = std::fs::File::open(path)
-                .with_context(|| format!("reading {}", path.display()))?;
-            let mut lines = std::io::BufReader::new(f).lines();
-            let header = lines.next().context("empty csv")??;
-            let h = csv::parse_header(&header)?;
-            Ok(Box::new(CsvStream {
-                lines,
-                header: h,
-                meta: csv::csv_meta(path),
-                pending: None,
-                line_no: 1,
-                index: 0,
-                shards_total: runs,
-            }))
-        }
-        None => Ok(Box::new(SplitReader::new(csv::read(path)?)?)),
-    }
+/// Open a CSV trace whose pre-scan verified `runs` contiguous, ascending
+/// process blocks — the canonical order this crate's writer emits.
+/// (The pre-scan itself lives in [`plan_sharded`]; interleaved files get
+/// a [`StreamPlan::Fallback`] instead.)
+fn csv_stream(path: &Path, runs: usize) -> Result<Box<dyn ShardedReader>> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header = lines.next().context("empty csv")??;
+    let h = csv::parse_header(&header)?;
+    Ok(Box::new(CsvStream {
+        lines,
+        header: h,
+        meta: csv::csv_meta(path),
+        pending: None,
+        line_no: 1,
+        index: 0,
+        shards_total: runs,
+    }))
 }
 
 /// Streamability pre-scan: parse only the Process field of every line and
@@ -310,37 +381,37 @@ impl ShardedReader for CsvStream {
 
 // -- chrome: incremental object scanner -------------------------------------
 
-/// Open a Chrome Trace JSON file for streaming. Events are scanned one
-/// object at a time — the whole-document JSON tree and full row set
-/// (typically the dominant memory costs of the eager reader, several
-/// times the file size) never exist. The raw file text does stay
-/// resident for the stream's lifetime, so peak memory here is
-/// O(file bytes + workers × shard + results); a disk-cursor scanner is
-/// the ROADMAP follow-up. A pre-scan verifies pid blocks are contiguous
-/// + ascending, else falls back to eager load.
-pub fn chrome_sharded(path: &Path) -> Result<Box<dyn ShardedReader>> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    match chrome_prescan(&text) {
-        Some((runs, app)) => {
-            let pos = find_events_array(text.as_bytes())?;
-            Ok(Box::new(ChromeStream {
-                text,
-                pos,
-                meta: TraceMeta {
-                    format: "chrome".into(),
-                    source: path.display().to_string(),
-                    app,
-                },
-                pending: None,
-                event_idx: 0,
-                index: 0,
-                shards_total: runs,
-                done: false,
-            }))
-        }
-        None => Ok(Box::new(SplitReader::new(chrome::read(path)?)?)),
-    }
+/// Open a Chrome Trace JSON file whose pre-scan verified `runs`
+/// contiguous, ascending pid blocks. Events are scanned one object at a
+/// time — the whole-document JSON tree and full row set (typically the
+/// dominant memory costs of the eager reader, several times the file
+/// size) never exist. The raw file text does stay resident for the
+/// stream's lifetime, so peak memory here is O(file bytes + workers ×
+/// shard + results); a disk-cursor scanner is the ROADMAP follow-up.
+/// (The pre-scan itself lives in [`plan_sharded`], which also lifts
+/// `app` from metadata records; interleaved files get a
+/// [`StreamPlan::Fallback`] instead.)
+fn chrome_stream(
+    path: &Path,
+    text: String,
+    runs: usize,
+    app: String,
+) -> Result<Box<dyn ShardedReader>> {
+    let pos = find_events_array(text.as_bytes())?;
+    Ok(Box::new(ChromeStream {
+        text,
+        pos,
+        meta: TraceMeta {
+            format: "chrome".into(),
+            source: path.display().to_string(),
+            app,
+        },
+        pending: None,
+        event_idx: 0,
+        index: 0,
+        shards_total: runs,
+        done: false,
+    }))
 }
 
 /// Pre-scan: walk every event object, collect the application name from
@@ -732,6 +803,60 @@ mod tests {
         std::fs::write(&p, "[]").unwrap();
         let mut r = open_sharded(&p).unwrap();
         assert!(r.next_shard().unwrap().is_none());
+    }
+
+    #[test]
+    fn plan_matches_open_and_is_reusable() {
+        // csv: the plan carries the run count; re-opening from the cached
+        // plan yields the same shards as the pre-scanning open
+        let t = gen::generate("gol", &GenConfig::new(3, 2), 1).unwrap();
+        let p = tmp("plan.csv");
+        csv::write(&t, &p).unwrap();
+        let plan = plan_sharded(&p).unwrap();
+        assert_eq!(plan, StreamPlan::Csv { runs: 3 });
+        assert!(plan.is_streaming());
+        for _ in 0..2 {
+            let mut r = open_planned(&p, &plan).unwrap();
+            let mut shards = 0;
+            while r.next_shard().unwrap().is_some() {
+                shards += 1;
+            }
+            assert_eq!(shards, 3);
+        }
+
+        // chrome: the plan also carries the metadata app name
+        let p = tmp("plan.json");
+        chrome::write(&t, &p).unwrap();
+        match plan_sharded(&p).unwrap() {
+            StreamPlan::Chrome { runs, .. } => assert_eq!(runs, 3),
+            other => panic!("expected chrome plan, got {other:?}"),
+        }
+
+        // interleaved csv: Fallback, and open_planned still works
+        let p = tmp("plan_interleaved.csv");
+        std::fs::write(
+            &p,
+            "Timestamp (ns), Event Type, Name, Process\n\
+             0, Enter, main, 1\n\
+             0, Enter, main, 0\n\
+             9, Leave, main, 1\n\
+             9, Leave, main, 0\n",
+        )
+        .unwrap();
+        let plan = plan_sharded(&p).unwrap();
+        assert_eq!(plan, StreamPlan::Fallback);
+        assert!(!plan.is_streaming());
+        let r = open_planned(&p, &plan).unwrap();
+        assert!(!r.is_streaming());
+    }
+
+    #[test]
+    fn otf2_plan_needs_no_prescan() {
+        let t = gen::generate("amg", &GenConfig::new(2, 2), 1).unwrap();
+        let dir = tmp("plan_otf2");
+        let _ = std::fs::remove_dir_all(&dir);
+        otf2::write(&t, &dir).unwrap();
+        assert_eq!(plan_sharded(&dir).unwrap(), StreamPlan::Otf2);
     }
 
     #[test]

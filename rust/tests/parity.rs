@@ -10,7 +10,7 @@
 //! 4 / 8 threads, with peak resident rows provably shard-bounded
 //! (`StreamStats`), and batch mode must equal per-trace sequential runs.
 
-use pipit::analysis::{self, CommUnit, Metric};
+use pipit::analysis::{self, CommUnit, Metric, PatternConfig};
 use pipit::df::Expr;
 use pipit::exec;
 use pipit::gen::{self, GenConfig};
@@ -201,6 +201,219 @@ fn filter_parity() {
             assert_eq!(seq.events.names(), sh.events.names());
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// channel-sharded message matching and the analyses built on it
+// ---------------------------------------------------------------------------
+
+const MSG_THREADS: &[usize] = &[1, 2, 4, 8];
+
+/// Sequential vs channel-sharded parity for message matching and every
+/// analysis routed through it, comparing full `Result`s so error paths
+/// (missing anchors, degenerate motifs, empty traces) must agree too.
+fn assert_msg_ops_match(t: &Trace, threads: usize, ctx: &str) {
+    let seq_mm = analysis::match_messages(t).unwrap();
+    let sh_mm = exec::ops::match_messages_sharded(t, threads).unwrap();
+    assert_eq!(seq_mm, sh_mm, "{ctx}: match_messages @{threads}");
+
+    let rows = |p: Vec<analysis::CriticalPath>| -> Vec<Vec<u32>> {
+        p.into_iter().map(|x| x.rows).collect()
+    };
+    let seq_cp = analysis::critical_path_analysis(&mut t.clone())
+        .map(&rows)
+        .map_err(|e| e.to_string());
+    let sh_cp = exec::ops::critical_path(t, threads)
+        .map(&rows)
+        .map_err(|e| e.to_string());
+    assert_eq!(seq_cp, sh_cp, "{ctx}: critical_path @{threads}");
+
+    let seq_lat = analysis::calculate_lateness(&mut t.clone()).map_err(|e| e.to_string());
+    let sh_lat = exec::ops::lateness(t, threads).map_err(|e| e.to_string());
+    assert_eq!(seq_lat, sh_lat, "{ctx}: lateness @{threads}");
+
+    let seq_bd =
+        analysis::comm_comp_breakdown(&mut t.clone(), None, None).map_err(|e| e.to_string());
+    let sh_bd =
+        exec::ops::comm_comp_breakdown(t, None, None, threads).map_err(|e| e.to_string());
+    assert_eq!(seq_bd, sh_bd, "{ctx}: comm_comp_breakdown @{threads}");
+
+    for ev in [Some("time-loop"), None] {
+        let cfg = PatternConfig::default();
+        let seq_pat =
+            analysis::detect_pattern(&mut t.clone(), ev, &cfg).map_err(|e| e.to_string());
+        let sh_pat =
+            exec::ops::detect_pattern(t, ev, &cfg, threads).map_err(|e| e.to_string());
+        assert_eq!(seq_pat, sh_pat, "{ctx}: pattern {ev:?} @{threads}");
+    }
+}
+
+#[test]
+fn message_matching_analyses_parity() {
+    for (app, t) in traces() {
+        for &th in MSG_THREADS {
+            assert_msg_ops_match(&t, th, app);
+        }
+    }
+}
+
+#[test]
+fn comm_comp_breakdown_custom_sets_parity() {
+    for (app, t) in traces() {
+        let comm = Some(["computeRhs", "MPI_Send"].as_slice());
+        let other = Some(["Idle", "main"].as_slice());
+        let seq = analysis::comm_comp_breakdown(&mut t.clone(), comm, other).unwrap();
+        for &th in THREADS {
+            let sh = exec::ops::comm_comp_breakdown(&t, comm, other, th).unwrap();
+            assert_eq!(seq, sh, "{app} custom sets at {th} threads");
+        }
+    }
+}
+
+#[test]
+fn message_matching_edge_cases() {
+    // unmatched sends and recvs: surplus endpoints on both directions
+    let mut b = TraceBuilder::new();
+    b.enter(0, 0, 0, "main");
+    b.send(0, 0, 10, 1, 64, 0);
+    b.send(0, 0, 20, 1, 64, 0); // never received
+    b.leave(0, 0, 30, "main");
+    b.enter(1, 0, 0, "main");
+    b.recv(1, 0, 15, 0, 64, 0);
+    b.recv(1, 0, 25, 2, 64, 0); // sender never sent
+    b.leave(1, 0, 30, "main");
+    let t = b.finish();
+    for &th in MSG_THREADS {
+        assert_msg_ops_match(&t, th, "unmatched endpoints");
+    }
+
+    // duplicate-timestamp sends on one channel: merge order must stay
+    // stable (row order breaks the tie identically on every path)
+    let mut b = TraceBuilder::new();
+    b.enter(0, 0, 0, "main");
+    for _ in 0..4 {
+        b.send(0, 0, 10, 1, 8, 0);
+    }
+    b.leave(0, 0, 30, "main");
+    b.enter(1, 0, 0, "main");
+    for k in 0..4i64 {
+        b.recv(1, 0, 12 + k, 0, 8, 0);
+    }
+    b.leave(1, 0, 30, "main");
+    let t = b.finish();
+    for &th in MSG_THREADS {
+        assert_msg_ops_match(&t, th, "duplicate timestamps");
+    }
+
+    // zero-message trace: matching finds nothing, critical_path and
+    // lateness degrade gracefully instead of panicking
+    let mut b = TraceBuilder::new();
+    for p in 0..3 {
+        b.enter(p, 0, 0, "work");
+        b.leave(p, 0, 100 + p, "work");
+    }
+    let t = b.finish();
+    assert!(analysis::match_messages(&t).unwrap().sends.is_empty());
+    for &th in MSG_THREADS {
+        assert_msg_ops_match(&t, th, "zero messages");
+    }
+
+    // single-process trace at many threads
+    let mut b = TraceBuilder::new();
+    b.enter(0, 0, 0, "main");
+    b.enter(0, 0, 10, "f");
+    b.leave(0, 0, 20, "f");
+    b.leave(0, 0, 30, "main");
+    let t = b.finish();
+    for &th in MSG_THREADS {
+        assert_msg_ops_match(&t, th, "single process");
+    }
+
+    // empty trace: both paths must error identically on critical_path
+    let t = TraceBuilder::new().finish();
+    assert_msg_ops_match(&t, 8, "empty trace");
+}
+
+#[test]
+fn golden_fixtures_message_analyses_parity() {
+    // the checked-in reader fixtures exercise real format decoding on
+    // both the sharded and the streamed message-matching paths
+    let base = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    for fix in ["tiny.csv", "tiny_chrome.json", "tiny_otf2"] {
+        let p = base.join(fix);
+        let t = pipit::readers::read_auto(&p).unwrap();
+        for &th in MSG_THREADS {
+            assert_msg_ops_match(&t, th, fix);
+        }
+        assert_streamed_msg_ops_match(&p, fix);
+    }
+}
+
+/// Streamed vs eager-sequential parity for the message-matching
+/// analyses, at 1/2/4/8 threads, comparing full `Result`s.
+fn assert_streamed_msg_ops_match(path: &Path, ctx: &str) {
+    let eager = pipit::readers::read_auto(path).unwrap();
+    let rows = |p: Vec<analysis::CriticalPath>| -> Vec<Vec<u32>> {
+        p.into_iter().map(|x| x.rows).collect()
+    };
+    let seq_cp = analysis::critical_path_analysis(&mut eager.clone())
+        .map(&rows)
+        .map_err(|e| e.to_string());
+    let seq_lat = analysis::calculate_lateness(&mut eager.clone()).map_err(|e| e.to_string());
+    let seq_bd =
+        analysis::comm_comp_breakdown(&mut eager.clone(), None, None).map_err(|e| e.to_string());
+    let cfg = PatternConfig::default();
+    let seq_pat_a = analysis::detect_pattern(&mut eager.clone(), Some("time-loop"), &cfg)
+        .map_err(|e| e.to_string());
+    let seq_pat_u =
+        analysis::detect_pattern(&mut eager.clone(), None, &cfg).map_err(|e| e.to_string());
+
+    for &th in MSG_THREADS {
+        let open = || open_sharded(path).unwrap();
+
+        let cp = exec::stream::critical_path(open().as_mut(), th)
+            .map(|(p, _)| rows(p))
+            .map_err(|e| e.to_string());
+        assert_eq!(cp, seq_cp, "{ctx} streamed critical_path @{th}");
+
+        let lat = exec::stream::lateness(open().as_mut(), th)
+            .map(|(o, _)| o)
+            .map_err(|e| e.to_string());
+        assert_eq!(lat, seq_lat, "{ctx} streamed lateness @{th}");
+
+        let bd = exec::stream::comm_comp_breakdown(open().as_mut(), None, None, th)
+            .map(|(b, _)| b)
+            .map_err(|e| e.to_string());
+        assert_eq!(bd, seq_bd, "{ctx} streamed comm_comp_breakdown @{th}");
+
+        let pat_a = exec::stream::detect_pattern(open().as_mut(), Some("time-loop"), &cfg, th)
+            .map(|(p, _)| p)
+            .map_err(|e| e.to_string());
+        assert_eq!(pat_a, seq_pat_a, "{ctx} streamed pattern anchored @{th}");
+
+        let pat_u = exec::stream::detect_pattern(open().as_mut(), None, &cfg, th)
+            .map(|(p, _)| p)
+            .map_err(|e| e.to_string());
+        assert_eq!(pat_u, seq_pat_u, "{ctx} streamed pattern unanchored @{th}");
+    }
+}
+
+#[test]
+fn streaming_message_analyses_match_eager_for_all_formats() {
+    let dir = stream_dir();
+    let t = gen::generate("tortuga", &GenConfig::new(6, 4), 1).unwrap();
+    let p = dir.join("msg_tortuga.csv");
+    pipit::readers::csv::write(&t, &p).unwrap();
+    assert_streamed_msg_ops_match(&p, "csv");
+
+    let p = dir.join("msg_tortuga.json");
+    pipit::readers::chrome::write(&t, &p).unwrap();
+    assert_streamed_msg_ops_match(&p, "chrome");
+
+    let p = dir.join("msg_tortuga_otf2");
+    let _ = std::fs::remove_dir_all(&p);
+    pipit::readers::otf2::write(&t, &p).unwrap();
+    assert_streamed_msg_ops_match(&p, "otf2");
 }
 
 // ---------------------------------------------------------------------------
@@ -461,6 +674,32 @@ fn streaming_ingest_is_shard_bounded() {
         "peak resident rows not shard-bounded: {stats:?}"
     );
     assert_eq!(stats.num_processes, 8);
+}
+
+/// The hpctoolkit/projections readers cannot stream: `open_sharded`
+/// falls back to eager load + split-after-load. That degradation used to
+/// be silent — `StreamStats::fallback` now surfaces it, while streaming
+/// readers report `fallback == false`.
+#[test]
+fn split_after_load_fallback_is_surfaced_in_stream_stats() {
+    let dir = stream_dir();
+    let t = gen::generate("gol", &GenConfig::new(4, 3), 1).unwrap();
+
+    let proj = dir.join("fallback_proj");
+    let _ = std::fs::remove_dir_all(&proj);
+    pipit::readers::projections::write(&t, &proj, "gol").unwrap();
+    let mut r = open_sharded(&proj).unwrap();
+    assert!(!r.is_streaming(), "projections must use the fallback");
+    let (rows, stats) = exec::stream::flat_profile(r.as_mut(), Metric::ExcTime, 2).unwrap();
+    assert!(stats.fallback, "fallback must be surfaced, not silent");
+    assert!(stats.shards >= 1 && !rows.is_empty());
+
+    let otf = dir.join("fallback_otf2");
+    let _ = std::fs::remove_dir_all(&otf);
+    pipit::readers::otf2::write(&t, &otf).unwrap();
+    let mut r = open_sharded(&otf).unwrap();
+    let (_, stats) = exec::stream::flat_profile(r.as_mut(), Metric::ExcTime, 2).unwrap();
+    assert!(!stats.fallback, "true streaming must not be flagged");
 }
 
 /// Batch mode must be identical to looping the traces through per-trace
