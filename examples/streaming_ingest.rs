@@ -27,9 +27,11 @@ fn main() -> anyhow::Result<()> {
     let archive = dir.join("laghos64_otf2");
     otf2::write(&gen::generate("laghos", &GenConfig::new(64, 10), 1)?, &archive)?;
 
-    // ---- streaming ingest: shard-at-a-time, pool-parallel ----------------
-    // Each rank file decodes on demand; the flat-profile partials merge
-    // order-stably, so this equals read_auto + flat_profile bitwise.
+    // ---- streaming ingest: pipelined decode→fold over the pool -----------
+    // The driver thread only reads raw rank bytes; zlib + varint decode
+    // runs as pool tasks overlapping the folds. The flat-profile partials
+    // merge in shard-sequence order, so this equals read_auto +
+    // flat_profile bitwise no matter how decodes complete.
     let mut reader = open_sharded(&archive)?;
     let (profile, stats) = stream::flat_profile(reader.as_mut(), Metric::ExcTime, 0)?;
     println!("flat profile over a streamed archive (top 5):");
@@ -44,6 +46,26 @@ fn main() -> anyhow::Result<()> {
         "  -> peak resident rows were {:.1}% of the trace",
         100.0 * stats.max_shard_rows as f64 / stats.total_rows as f64
     );
+    println!(
+        "  -> decode pipeline: {:.2} ms decoding on workers / {:.2} ms folding on the driver,\n\
+         \x20    peak {} shard(s) in flight (bounded by the worker count)",
+        stats.decode_ms, stats.fold_ms, stats.peak_in_flight_shards
+    );
+
+    // Two-pass span protocol: the otf2 defs carry per-rank timestamp
+    // extrema, so time_profile knows its bins before any shard decodes
+    // and folds into O(functions x bins) state — never O(segments).
+    let mut reader = open_sharded(&archive)?;
+    let (tp, stats) = stream::time_profile(reader.as_mut(), 64, Some(8), 0)?;
+    println!(
+        "\ntwo-pass time_profile: {} bins x {} series, peak partial state {} B \
+         (vs {} rows streamed)",
+        tp.num_bins(),
+        tp.func_names.len(),
+        stats.peak_partial_bytes,
+        stats.total_rows
+    );
+    println!("  full summary: {}", stats.summary());
 
     // The same works through a session: routed analyses on a
     // `load_streamed` entry never materialize the trace.

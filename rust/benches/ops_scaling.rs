@@ -43,6 +43,18 @@ const ROUTED_UNGATED: &[(&str, &str)] = &[
     ("pattern_detection", "tortuga64"),
 ];
 
+/// Streamed-ingest throughput rows: for each format, `seq1` is the
+/// serial-decode stream (the pre-pipeline driver: decode on the driver
+/// thread, analysis on the pool) and `sharded4` is the pipelined
+/// decode→fold driver. The gate requires pipelined ≥ 0.95× serial — the
+/// pipeline must never lose to its own baseline (on the zlib-heavy otf2
+/// path it should sit well above 1×). An eager `read_auto` row is
+/// reported alongside for reference (`eager_median_ns`), ungated.
+const STREAM_INGEST: &[(&str, &str)] = &[
+    ("stream_ingest_otf2", "laghos8"),
+    ("stream_ingest_chrome", "laghos8"),
+];
+
 fn main() -> anyhow::Result<()> {
     let (warmup, iters) = bench_params_from_args();
     let argv: Vec<String> = std::env::args().collect();
@@ -233,6 +245,42 @@ fn main() -> anyhow::Result<()> {
             .unwrap()
     });
 
+    // ---- streamed ingest throughput: eager vs serial-decode vs pipelined ---
+    // Decode-bound archives used to ingest slower streamed than eager
+    // because shard decode ran serially on the driver thread; the
+    // pipelined driver schedules decode as pool tasks overlapping the
+    // folds. flat_profile is the cheapest routed analysis, so these rows
+    // are ingest-bound by construction.
+    use pipit::exec::stream;
+    use pipit::readers::streaming::{open_sharded, SerialDecode};
+    let ingest_dir = std::env::temp_dir().join("pipit_bench_ingest");
+    std::fs::create_dir_all(&ingest_dir)?;
+    let otf2_path = ingest_dir.join("laghos8_otf2");
+    let _ = std::fs::remove_dir_all(&otf2_path);
+    pipit::readers::otf2::write(&laghos8, &otf2_path)?;
+    let chrome_path = ingest_dir.join("laghos8.json");
+    pipit::readers::chrome::write(&laghos8, &chrome_path)?;
+    eprintln!(
+        "\n=== streamed ingest: eager read vs serial-decode stream vs pipelined stream ==="
+    );
+    for (op, path) in [
+        ("stream_ingest_otf2", &otf2_path),
+        ("stream_ingest_chrome", &chrome_path),
+    ] {
+        b.run(&format!("{op}/eager/laghos8"), || {
+            pipit::readers::read_auto(path).unwrap()
+        });
+        b.run(&format!("{op}/seq1/laghos8"), || {
+            let mut r = open_sharded(path).unwrap();
+            let mut r = SerialDecode::new(r.as_mut());
+            stream::flat_profile(&mut r, Metric::ExcTime, 4).unwrap()
+        });
+        b.run(&format!("{op}/sharded4/laghos8"), || {
+            let mut r = open_sharded(path).unwrap();
+            stream::flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap()
+        });
+    }
+
     // Per-op speedups, the BENCH_PR.json rows, and the perf-trajectory
     // gate: sharded@4 must never lose to sequential on a routed op. A
     // small noise margin keeps median-of-5 on shared CI runners from
@@ -246,6 +294,8 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .map(|&op| (op, "laghos8", true))
         .chain(ROUTED_UNGATED.iter().map(|&(op, ds)| (op, ds, false)))
+        // pipelined decode is gated against its serial-decode baseline
+        .chain(STREAM_INGEST.iter().map(|&(op, ds)| (op, ds, true)))
         .collect();
     for (op, ds, gate_speedup) in pairs {
         let seq_name = format!("{op}/seq1/{ds}");
@@ -262,14 +312,20 @@ fn main() -> anyhow::Result<()> {
                 .map(|x| x.median())
                 .unwrap_or(f64::NAN)
         };
-        rows.push(obj(vec![
+        let mut fields = vec![
             ("op", jstr(op)),
             ("dataset", jstr(ds)),
             ("seq_median_ns", num(median(&seq_name))),
             ("sharded4_median_ns", num(median(&sh_name))),
             ("speedup", num(s)),
             ("gated", num(if gate_speedup { 1.0 } else { 0.0 })),
-        ]));
+        ];
+        // the stream-ingest rows also report the eager read for reference
+        let eager = median(&format!("{op}/eager/{ds}"));
+        if eager.is_finite() {
+            fields.push(("eager_median_ns", num(eager)));
+        }
+        rows.push(obj(fields));
         if gate_speedup && s < GATE_MIN_SPEEDUP {
             regressions.push(format!("{op} ({s:.2}x)"));
         }
@@ -311,7 +367,8 @@ fn main() -> anyhow::Result<()> {
     if gate && !regressions.is_empty() {
         eprintln!(
             "BENCH GATE FAILED: sharded@4 below {GATE_MIN_SPEEDUP}x of sequential \
-             (or unsampled) for: {}",
+             (pipelined stream below {GATE_MIN_SPEEDUP}x of serial-decode stream \
+             for the stream_ingest rows), or unsampled, for: {}",
             regressions.join(", ")
         );
         std::process::exit(1);

@@ -203,6 +203,12 @@ impl CctMerger {
         Self::default()
     }
 
+    /// Approximate heap bytes of the merged tree — the streamed driver's
+    /// `peak_partial_bytes` estimate (O(tree), independent of rows).
+    pub(crate) fn approx_bytes(&self) -> usize {
+        self.cct.nodes.len() * (std::mem::size_of::<CctNode>() + 64)
+    }
+
     /// Fold one shard's partial tree in; returns the shard-local → global
     /// node-id mapping (used to remap `_cct_node` columns).
     pub(crate) fn merge(&mut self, part: &Cct) -> Vec<usize> {

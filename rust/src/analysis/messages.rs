@@ -141,6 +141,19 @@ impl ChannelQueues {
         }
     }
 
+    /// Approximate heap bytes of the accumulated endpoints — the
+    /// streamed driver's `peak_partial_bytes` estimate (O(message
+    /// endpoints), the inherent cost of end-of-stream matching).
+    pub fn approx_bytes(&self) -> usize {
+        let endpoints: usize = self
+            .queues
+            .iter()
+            .map(|q| q.sends.len() + q.recvs.len())
+            .sum();
+        endpoints * std::mem::size_of::<(i64, u32)>()
+            + self.queues.len() * std::mem::size_of::<ChannelQueue>()
+    }
+
     pub fn num_channels(&self) -> usize {
         self.queues.len()
     }

@@ -2,12 +2,17 @@
 //! time bin, summed across all processes/threads — "a flat profile over
 //! time".
 //!
-//! Two execution paths produce identical results:
-//! * [`time_profile`] — pure-Rust interval clipping (always available);
-//! * the PJRT path in [`crate::runtime::ops`] — the AOT Pallas kernel
-//!   (`time_hist.hlo.txt`), used by the coordinator when artifacts are
-//!   loaded; the kernel's one-hot-matmul formulation is validated against
-//!   this implementation in integration tests.
+//! The pure-Rust engines all share one four-stage core — segment
+//! extraction ([`exclusive_segments`]), function census + ranking,
+//! per-function-slot binning, and a collapse of non-top slots into
+//! `"other"` (summed per cell in first-seen function order) — so the
+//! sequential path, the bin-axis-sharded path
+//! (`crate::exec::ops::time_profile`), and the streamed two-pass fold
+//! (`crate::exec::stream`) are **bit-identical** by construction: every
+//! (slot, bin) cell accumulates its fractional overlaps in global
+//! segment order on all three. The PJRT path in [`crate::runtime::ops`]
+//! (the AOT Pallas `time_hist` kernel) is validated against this
+//! implementation within numeric tolerance in integration tests.
 //!
 //! Both consume the same [`exclusive_segments`] extraction, which converts
 //! matched Enter/Leave pairs into *exclusive* intervals (the gaps where a
@@ -126,47 +131,91 @@ pub fn exclusive_segments(trace: &mut Trace) -> Result<Vec<Segment>> {
     Ok(segs)
 }
 
+/// First-seen function census over segments — stage 2a, shared by every
+/// engine. Slots are assigned in order of first segment occurrence;
+/// totals are exclusive-ns sums (integer-valued f64, so cross-shard
+/// folds are exact in any grouping, and the streamed driver can grow one
+/// census incrementally per shard while reproducing the same slot
+/// order).
+#[derive(Default)]
+pub(crate) struct FuncCensus {
+    pub(crate) slot_of_code: std::collections::HashMap<u32, usize>,
+    /// slot → name code, in first-seen order.
+    pub(crate) codes: Vec<u32>,
+    /// slot → total exclusive ns.
+    pub(crate) totals: Vec<f64>,
+}
+
+impl FuncCensus {
+    /// Slot of `code`, assigning the next slot on first sight.
+    pub(crate) fn slot(&mut self, code: u32) -> usize {
+        match self.slot_of_code.get(&code) {
+            Some(&s) => s,
+            None => {
+                let s = self.codes.len();
+                self.slot_of_code.insert(code, s);
+                self.codes.push(code);
+                self.totals.push(0.0);
+                s
+            }
+        }
+    }
+
+    /// Account one segment's duration to its function.
+    pub(crate) fn add(&mut self, code: u32, dur: f64) -> usize {
+        let s = self.slot(code);
+        self.totals[s] += dur;
+        s
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        self.codes.len()
+    }
+}
+
+/// Census over a complete segment list (the eager engines' stage 2a).
+pub(crate) fn census(segs: &[Segment]) -> FuncCensus {
+    let mut c = FuncCensus::default();
+    for s in segs {
+        c.add(s.name_code, (s.end - s.start) as f64);
+    }
+    c
+}
+
 /// Which name-dictionary code maps to which output series, plus the
-/// ordered series names — stage 2 of the profile, shared verbatim by the
-/// sequential path and [`crate::exec::ops::time_profile`] so both rank
-/// functions identically (ties resolve by first-seen segment order, not
-/// hash-map iteration order).
+/// ordered series names — stage 2b of the profile, shared verbatim by
+/// the sequential path, [`crate::exec::ops::time_profile`], and the
+/// streamed driver so all rank functions identically (ties resolve by
+/// first-seen segment order via the stable sort, not hash-map iteration
+/// order).
 pub(crate) struct SeriesSpec {
     pub(crate) func_of_code: std::collections::HashMap<u32, usize>,
     pub(crate) func_names: Vec<String>,
     pub(crate) other_slot: Option<usize>,
 }
 
-/// Rank functions by total exclusive time over `segs` and keep the top
+/// Rank the censused functions by total exclusive time and keep the top
 /// `top_funcs` as their own series (the rest fold into `"other"`).
-pub(crate) fn rank_functions(
-    segs: &[Segment],
-    ndict: &crate::df::Interner,
+pub(crate) fn rank_census(
+    c: &FuncCensus,
+    mut name_of: impl FnMut(u32) -> String,
     top_funcs: Option<usize>,
 ) -> SeriesSpec {
-    // per-code totals accumulated in first-seen segment order, so equal
-    // totals sort deterministically below (stable sort)
-    let mut idx: std::collections::HashMap<u32, usize> = std::collections::HashMap::new();
-    let mut by_total: Vec<(u32, f64)> = Vec::new();
-    for s in segs {
-        let dur = (s.end - s.start) as f64;
-        match idx.get(&s.name_code) {
-            Some(&k) => by_total[k].1 += dur,
-            None => {
-                idx.insert(s.name_code, by_total.len());
-                by_total.push((s.name_code, dur));
-            }
-        }
-    }
+    let mut by_total: Vec<(u32, f64)> = c
+        .codes
+        .iter()
+        .copied()
+        .zip(c.totals.iter().copied())
+        .collect();
     let total_funcs = by_total.len();
-    by_total.sort_by(|a, b| b.1.total_cmp(&a.1));
+    by_total.sort_by(|a, b| b.1.total_cmp(&a.1)); // stable: ties stay first-seen
     let keep = top_funcs.unwrap_or(total_funcs).min(total_funcs);
     let mut func_of_code: std::collections::HashMap<u32, usize> =
         std::collections::HashMap::new();
     let mut func_names: Vec<String> = Vec::new();
     for (code, _) in by_total.iter().take(keep) {
         func_of_code.insert(*code, func_names.len());
-        func_names.push(ndict.resolve(*code).unwrap_or("").to_string());
+        func_names.push(name_of(*code));
     }
     let other_slot = if keep < total_funcs {
         func_names.push("other".to_string());
@@ -177,38 +226,89 @@ pub(crate) fn rank_functions(
     SeriesSpec { func_of_code, func_names, other_slot }
 }
 
-/// Accumulate segment overlap into the bins `[bins.0, bins.1)` — stage 3.
-/// Every (bin, func) cell folds its contributions in global segment
-/// order, so splitting the bin axis across workers and stitching the
-/// ranges back together is bit-identical to one sequential pass.
-pub(crate) fn bin_segments_range(
+/// The clipped overlap of one segment with every bin it touches inside
+/// `[bins.0, bins.1)`, in ascending bin order — **the** binning
+/// arithmetic, shared by every engine so per-cell f64 adds replay in the
+/// same order with the same values everywhere.
+#[inline]
+pub(crate) fn seg_bin_overlaps(
+    s: &Segment,
+    t0: i64,
+    width: f64,
+    num_bins: usize,
+    bins: (usize, usize),
+    mut f: impl FnMut(usize, f64),
+) {
+    let lo_bin = ((((s.start - t0) as f64) / width).floor() as usize).max(bins.0);
+    let hi_bin = (((((s.end - t0) as f64) / width).ceil() as usize).min(num_bins)).min(bins.1);
+    for b in lo_bin..hi_bin {
+        let bin_lo = t0 as f64 + b as f64 * width;
+        let bin_hi = bin_lo + width;
+        let ov = (s.end as f64).min(bin_hi) - (s.start as f64).max(bin_lo);
+        if ov > 0.0 {
+            f(b, ov);
+        }
+    }
+}
+
+/// Accumulate segment overlap into per-function-slot rows over the bins
+/// `[bins.0, bins.1)` — stage 3a. Every (slot, bin) cell folds its
+/// contributions in segment order, so splitting the bin axis across
+/// workers and stitching ranges back together is bit-identical to one
+/// pass — and so is replaying per-shard contribution lists in shard
+/// order (the streamed driver), because shard order *is* segment order.
+///
+/// Memory trade-off: rows span *all* censused functions, not just the
+/// ranked top-k, because the streamed fold cannot know the ranking (it
+/// needs end-of-stream totals) yet must accumulate every function's
+/// cells in segment order to keep the `"other"` collapse deterministic
+/// across engines. O(functions × bins) is the price of a bounded,
+/// bit-identical streamed fold; for typical traces (tens to hundreds of
+/// functions) it is far below the O(segments) buffer it replaced, but
+/// extremely name-rich traces pay functions × bins × 8 bytes here.
+pub(crate) fn bin_segments_slots(
     segs: &[Segment],
-    spec: &SeriesSpec,
+    slot_of_code: &std::collections::HashMap<u32, usize>,
+    nslots: usize,
     t0: i64,
     width: f64,
     num_bins: usize,
     bins: (usize, usize),
 ) -> Vec<Vec<f64>> {
-    let nf = spec.func_names.len();
-    let mut values = vec![vec![0.0f64; nf]; bins.1 - bins.0];
+    let mut rows = vec![vec![0.0f64; bins.1 - bins.0]; nslots];
     for s in segs {
-        let f = match spec.func_of_code.get(&s.name_code) {
+        let Some(&slot) = slot_of_code.get(&s.name_code) else { continue };
+        seg_bin_overlaps(s, t0, width, num_bins, bins, |b, ov| {
+            rows[slot][b - bins.0] += ov;
+        });
+    }
+    rows
+}
+
+/// Fold per-slot rows into the ranked output series — stage 3b. Top
+/// functions copy their slot row verbatim; the remaining slots sum into
+/// `"other"` per cell **in first-seen slot order**, the one deterministic
+/// order every engine can reproduce (the eager pass, the bin-axis
+/// sharded pass, and the streamed fold all hold per-slot rows by this
+/// point, so the collapse is the single place "other" is summed).
+pub(crate) fn collapse_slots(
+    c: &FuncCensus,
+    spec: &SeriesSpec,
+    slot_rows: &[Vec<f64>],
+    num_bins: usize,
+) -> Vec<Vec<f64>> {
+    let nf = spec.func_names.len();
+    let mut values = vec![vec![0.0f64; nf]; num_bins];
+    for (slot, code) in c.codes.iter().enumerate() {
+        let series = match spec.func_of_code.get(code) {
             Some(&f) => f,
             None => match spec.other_slot {
                 Some(o) => o,
                 None => continue,
             },
         };
-        // clip the segment into every bin it overlaps within the range
-        let lo_bin = ((((s.start - t0) as f64) / width).floor() as usize).max(bins.0);
-        let hi_bin = (((((s.end - t0) as f64) / width).ceil() as usize).min(num_bins)).min(bins.1);
-        for b in lo_bin..hi_bin {
-            let bin_lo = t0 as f64 + b as f64 * width;
-            let bin_hi = bin_lo + width;
-            let ov = (s.end as f64).min(bin_hi) - (s.start as f64).max(bin_lo);
-            if ov > 0.0 {
-                values[b - bins.0][f] += ov;
-            }
+        for (b, row) in values.iter_mut().enumerate() {
+            row[series] += slot_rows[slot][b];
         }
     }
     values
@@ -216,7 +316,9 @@ pub(crate) fn bin_segments_range(
 
 /// Compute a time profile with `num_bins` equal bins over the trace span.
 /// If `top_funcs` is Some(k), only the k functions with the largest total
-/// exclusive time get their own series; the rest fold into `"other"`.
+/// exclusive time get their own series; the rest fold into `"other"`
+/// (summed per cell in first-seen function order, the one deterministic
+/// order every engine — eager, bin-axis sharded, streamed — reproduces).
 pub fn time_profile(
     trace: &mut Trace,
     num_bins: usize,
@@ -227,12 +329,14 @@ pub fn time_profile(
     }
     let (t0, t1) = trace.time_range()?;
     let segs = exclusive_segments(trace)?;
+    let c = census(&segs);
     let (_, ndict) = trace.events.strs(COL_NAME)?;
-    let spec = rank_functions(&segs, ndict, top_funcs);
+    let spec = rank_census(&c, |code| ndict.resolve(code).unwrap_or("").to_string(), top_funcs);
 
     let span = (t1 - t0).max(1) as f64;
     let width = span / num_bins as f64;
-    let values = bin_segments_range(&segs, &spec, t0, width, num_bins, (0, num_bins));
+    let rows = bin_segments_slots(&segs, &c.slot_of_code, c.len(), t0, width, num_bins, (0, num_bins));
+    let values = collapse_slots(&c, &spec, &rows, num_bins);
     let bin_edges = (0..=num_bins)
         .map(|b| t0 + (b as f64 * width).round() as i64)
         .collect();

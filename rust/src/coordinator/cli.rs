@@ -123,19 +123,28 @@ SCALING:
   A pipeline spec may carry a top-level \"threads\" key instead.
 
   --stream ingests the trace shard-at-a-time through the ShardedReader
-  layer instead of materializing it: process-aligned shards decode
-  incrementally and feed the same pool, bounding peak memory by
-  O(workers x shard + results). otf2 and csv stream from disk (one rank
-  file / one process block at a time); chrome scans its raw text one
-  event object at a time (the file bytes stay resident, the JSON tree
-  and row set never exist); non-streamable sources (hpctoolkit,
-  projections, interleaved files) fall back to an eager load kept
-  in-memory and flagged via StreamStats.fallback. All routed analyses —
-  including critical_path, lateness, pattern_detection and
+  layer instead of materializing it: the driver thread only advances the
+  I/O cursor (one rank file's compressed bytes, one pre-scanned block's
+  byte range) while shard *decode* runs as worker-pool tasks that
+  overlap the analysis folds — a decode->fold pipeline whose in-flight
+  shard count is capped at the worker count, so peak memory stays
+  O(workers x shard + results) and decode-bound archives ingest at pool
+  speed. otf2, csv and chrome all stream from disk (chrome's raw text is
+  never resident whole: the pre-scan runs over a sliding window);
+  non-streamable sources (hpctoolkit, projections, interleaved files)
+  fall back to an eager load kept in-memory and flagged via
+  StreamStats.fallback. A cheap span pre-pass (otf2 defs extrema; the
+  csv/chrome byte-cursor pre-scan) tells time_profile / comm_over_time
+  the global span before ingest, so they fold straight into final bins —
+  O(bins) partial state instead of O(segments)/O(sends). All routed
+  analyses — including critical_path, lateness, pattern_detection and
   comm_comp_breakdown, which fold per-shard channel queues and match at
-  end of stream — stay bit-identical to eager loading, and the
-  streamability pre-scan verdict is cached per session entry so repeated
-  analyses skip the re-verification. In a pipeline spec, put
+  end of stream — stay bit-identical to eager loading at any thread
+  count (decode order never changes fold order: shards fold by sequence
+  number), and the streamability pre-scan verdict is cached per session
+  entry so repeated analyses skip the re-verification. Streamed runs
+  print their ingest instrumentation (shards, decode/fold ms split, peak
+  in-flight shards, peak partial bytes). In a pipeline spec, put
   \"stream\": true on a \"load\" step.
 
   --batch runs the paper's multirun scaling comparison as one job:
@@ -264,6 +273,9 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     let results = pipe.run(&mut s)?;
     for r in &results {
         println!("{}: {}", r.op, r.summary);
+        if let Some(st) = &r.stream {
+            println!("  [stream] {}", st.summary());
+        }
         if let Some(p) = &r.out {
             println!("  -> {}", p.display());
         }
@@ -294,6 +306,9 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     let results = pipe.run(&mut s)?;
     for (i, r) in results.iter().enumerate() {
         println!("[{i}] {}: {}", r.op, r.summary);
+        if let Some(st) = &r.stream {
+            println!("      [stream] {}", st.summary());
+        }
         if let Some(p) = &r.out {
             println!("      -> {}", p.display());
         }

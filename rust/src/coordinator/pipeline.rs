@@ -30,6 +30,9 @@ pub struct StepResult {
     pub summary: String,
     /// Path written, if the step had an `out`.
     pub out: Option<PathBuf>,
+    /// Ingest instrumentation when this step ran a streamed analysis
+    /// (shards, decode/fold pipeline split, peak residency).
+    pub stream: Option<crate::exec::StreamStats>,
 }
 
 /// A parsed pipeline.
@@ -76,9 +79,17 @@ impl Pipeline {
         std::fs::create_dir_all(&self.out_dir)?;
         let mut results = Vec::with_capacity(self.steps.len());
         for (i, step) in self.steps.iter().enumerate() {
-            let r = self
+            // Take the previous stats so a fresh Some() unambiguously
+            // means *this* step streamed (restored below otherwise, so
+            // the session still exposes the last streamed analysis).
+            let before = session.last_stream_stats.take();
+            let mut r = self
                 .run_step(session, step)
                 .with_context(|| format!("pipeline step {i}: {}", step.dumps()))?;
+            r.stream = session.last_stream_stats;
+            if session.last_stream_stats.is_none() {
+                session.last_stream_stats = before;
+            }
             results.push(r);
         }
         Ok(results)
@@ -92,7 +103,7 @@ impl Pipeline {
             if let (Some(p), Some(b)) = (&out_path, &body) {
                 std::fs::write(p, b).with_context(|| format!("writing {}", p.display()))?;
             }
-            Ok(StepResult { op: op.to_string(), summary, out: out_path.clone() })
+            Ok(StepResult { op: op.to_string(), summary, out: out_path.clone(), stream: None })
         };
 
         match op {
@@ -512,7 +523,11 @@ mod tests {
         assert_eq!(results.len(), 3);
         assert!(results[0].summary.starts_with("streaming"));
         assert!(dir.join("fp.csv").exists());
-        // the streamed flat_profile must have gone shard-at-a-time
+        // the streamed flat_profile must have gone shard-at-a-time, and
+        // its step result must carry the ingest instrumentation
+        assert!(results[0].stream.is_none(), "load step streams nothing itself");
+        let step_stats = results[1].stream.expect("streamed analysis step carries stats");
+        assert_eq!(step_stats.shards, 4);
         let stats = s.last_stream_stats.unwrap();
         assert_eq!(stats.shards, 4);
         assert!(stats.max_shard_rows < stats.total_rows);

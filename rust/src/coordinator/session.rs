@@ -15,11 +15,15 @@ enum TraceSource {
     /// Fully materialized events table.
     Memory(Trace),
     /// Stream-backed: routed analyses re-open the source and ingest it
-    /// shard-at-a-time ([`crate::exec::stream`]), so the whole trace is
-    /// never resident; non-routed operations materialize on demand.
-    /// The streamability pre-scan verdict (csv/chrome run counts, chrome
-    /// app name) is cached here so repeated routed analyses skip the
-    /// re-verification parse.
+    /// shard-at-a-time through the pipelined decode→fold driver
+    /// ([`crate::exec::stream`]) — shard decode runs as pool tasks
+    /// overlapping the folds — so the whole trace is never resident;
+    /// non-routed operations materialize on demand. The streamability
+    /// pre-scan verdict (csv/chrome block byte offsets + stream span,
+    /// chrome app name) is cached here so repeated routed analyses skip
+    /// the re-verification parse and re-open with pure seeks, and
+    /// `time_profile` / `comm_over_time` bin two-pass with no
+    /// O(segments)/O(sends) buffering.
     Streamed { path: PathBuf, plan: crate::readers::StreamPlan },
 }
 
@@ -40,11 +44,12 @@ enum TraceSource {
 /// message-matching ones (`critical_path`, `lateness`,
 /// `detect_pattern`, `comm_comp_breakdown`), which fold per-shard
 /// channel queues and match at end of stream: each call re-opens the
-/// source (reusing the entry's cached streamability verdict) and feeds
-/// the worker pool shard-at-a-time with peak memory bounded per shard,
-/// with results bit-identical to the eager path (`tests/parity.rs`
-/// again). [`AnalysisSession::run_batch`] schedules many such ingests
-/// over the same pool for multi-trace comparisons.
+/// source (reusing the entry's cached streamability verdict) and runs
+/// the pipelined decode→fold driver — shard decode overlaps the
+/// analysis folds on the worker pool, peak memory stays bounded at
+/// O(workers × shard), and results are bit-identical to the eager path
+/// (`tests/parity.rs` again). [`AnalysisSession::run_batch`] schedules
+/// many such ingests over the same pool for multi-trace comparisons.
 pub struct AnalysisSession {
     sources: HashMap<String, TraceSource>,
     pub runtime: Option<Runtime>,

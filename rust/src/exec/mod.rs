@@ -50,18 +50,24 @@
 //!
 //! [`stream`] runs the routed analyses over a
 //! [`ShardedReader`](crate::readers::streaming::ShardedReader) instead
-//! of a materialized trace: shards feed the same worker pool one batch
-//! at a time and fold into compact partials, bounding peak memory by
-//! O(workers × shard + results). Results stay bit-identical to eager
-//! load + sequential analysis; [`StreamStats`] instruments how the
-//! stream was consumed.
+//! of a materialized trace, as a decode→fold **pipeline**
+//! ([`pool::pipeline`]): the driver thread only advances the reader's
+//! I/O cursor and folds partials in shard-sequence order, while shard
+//! *decode* tasks run on the workers, overlapping both — so streaming
+//! ingests at pool speed, not driver speed, with peak memory still
+//! bounded by O(workers × shard + results). A span pre-pass
+//! ([`ShardedReader::scan_span`](crate::readers::streaming::ShardedReader::scan_span))
+//! lets `time_profile` / `comm_over_time` fold straight into final bins.
+//! Results stay bit-identical to eager load + sequential analysis;
+//! [`StreamStats`] instruments how the stream was consumed (shard
+//! residency, decode/fold time split, peak partial state).
 
 pub mod ops;
 pub mod pool;
 pub mod shard;
 pub mod stream;
 
-pub use pool::{run_indexed, split_ranges};
+pub use pool::{pipeline, run_indexed, split_ranges, PipelineStats};
 pub use shard::{process_shards, subtrace, Shards};
 pub use stream::StreamStats;
 

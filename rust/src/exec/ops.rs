@@ -71,6 +71,13 @@ impl ProfileMerger {
     pub(crate) fn finish(self) -> Vec<ProfileRow> {
         flat_profile::finish_profile(self.rows)
     }
+
+    /// Approximate heap bytes of the accumulated state — the streamed
+    /// driver's `peak_partial_bytes` estimate (O(functions)).
+    pub(crate) fn approx_bytes(&self) -> usize {
+        self.rows.len() * (std::mem::size_of::<ProfileRow>() + 24)
+            + self.index.len() * (std::mem::size_of::<usize>() + 24)
+    }
 }
 
 /// Sharded `flat_profile`. Per-shard totals merge by name in shard order
@@ -169,13 +176,16 @@ pub fn comm_matrix(trace: &Trace, unit: CommUnit, threads: usize) -> Result<Comm
     Ok(CommMatrix { procs, data })
 }
 
-/// Sharded `time_profile`, in three stages:
+/// Sharded `time_profile`, in four stages:
 /// 1. exclusive segments per process shard (streams are independent, so
 ///    shard-order concatenation equals the sequential segment list);
-/// 2. the shared `time_profile::rank_functions`;
-/// 3. binning parallelized over the *bin axis* — each (bin, func) cell
-///    folds contributions in global segment order, so stitching the bin
-///    ranges is bit-identical to the sequential pass.
+/// 2. the shared function census + ranking
+///    (`time_profile::census` / `rank_census`);
+/// 3. per-slot binning parallelized over the *bin axis* — each
+///    (slot, bin) cell folds contributions in global segment order, so
+///    stitching the bin ranges is bit-identical to the sequential pass;
+/// 4. the shared collapse into ranked series
+///    (`time_profile::collapse_slots`).
 pub fn time_profile(
     trace: &Trace,
     num_bins: usize,
@@ -195,16 +205,36 @@ pub fn time_profile(
         time_profile::exclusive_segments(&mut sub)
     })?;
     let segs: Vec<Segment> = seg_parts.into_iter().flatten().collect();
+    let c = time_profile::census(&segs);
     let (_, ndict) = trace.events.strs(COL_NAME)?;
-    let spec = time_profile::rank_functions(&segs, ndict, top_funcs);
+    let spec = time_profile::rank_census(
+        &c,
+        |code| ndict.resolve(code).unwrap_or("").to_string(),
+        top_funcs,
+    );
 
     let span = (t1 - t0).max(1) as f64;
     let width = span / num_bins as f64;
     let bin_ranges = pool::split_ranges(num_bins, super::effective_threads(threads));
-    let value_parts = pool::run_indexed(bin_ranges.len(), threads, |i| {
-        Ok(time_profile::bin_segments_range(&segs, &spec, t0, width, num_bins, bin_ranges[i]))
+    let row_parts = pool::run_indexed(bin_ranges.len(), threads, |i| {
+        Ok(time_profile::bin_segments_slots(
+            &segs,
+            &c.slot_of_code,
+            c.len(),
+            t0,
+            width,
+            num_bins,
+            bin_ranges[i],
+        ))
     })?;
-    let values: Vec<Vec<f64>> = value_parts.into_iter().flatten().collect();
+    // stitch each slot's bin ranges back together, then collapse
+    let mut rows: Vec<Vec<f64>> = vec![Vec::with_capacity(num_bins); c.len()];
+    for part in row_parts {
+        for (slot, r) in part.into_iter().enumerate() {
+            rows[slot].extend(r);
+        }
+    }
+    let values = time_profile::collapse_slots(&c, &spec, &rows, num_bins);
     let bin_edges = (0..=num_bins)
         .map(|b| t0 + (b as f64 * width).round() as i64)
         .collect();

@@ -9,7 +9,9 @@
 //! failure: scoped threads always join.
 
 use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
 
 /// Raw pointer wrapper letting workers write disjoint result slots.
 struct SlotsPtr<T>(*mut Option<Result<T>>);
@@ -87,6 +89,175 @@ where
         return Err(anyhow!("worker pool lost {} of {n} results", n - out.len()));
     }
     Ok(out)
+}
+
+/// How a [`pipeline`] run went: `peak_in_flight` is the largest number
+/// of tasks that were simultaneously produced-but-not-yet-received-back
+/// — the residency bound the driver enforces (≤ worker count).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PipelineStats {
+    pub peak_in_flight: usize,
+}
+
+/// Producer → workers → in-order folder pipeline.
+///
+/// The calling thread alternates between `produce` (sequential, typically
+/// an I/O cursor) and `fold` (sequential, typically an order-sensitive
+/// merge); up to `threads` workers run `work` on produced tasks
+/// concurrently. Results fold **strictly in production order** regardless
+/// of completion order (a reorder buffer holds early finishers), so
+/// order-sensitive folds behave exactly as if the whole run were serial.
+///
+/// Residency: at most `threads` tasks are in flight (produced but not
+/// received back) at any moment — the driver stops producing at the cap,
+/// which is what bounds memory when tasks carry shard payloads.
+///
+/// Error semantics: the failure with the lowest production sequence wins
+/// deterministically — a failing `work` poisons the pipeline so queued
+/// tasks are cancelled cheaply, in-flight tasks drain, and their
+/// (later-sequence) outcomes are discarded; `produce` and `fold` errors
+/// stop the run the same way. The pipeline never deadlocks on failure:
+/// workers block only on the task channel, which closes when the driver
+/// returns, and the driver never blocks on a full channel (capacity =
+/// the in-flight cap).
+///
+/// `threads <= 1` runs everything on the calling thread with identical
+/// observable semantics.
+pub fn pipeline<T, R, P, W, G>(
+    mut produce: P,
+    threads: usize,
+    work: W,
+    mut fold: G,
+) -> Result<PipelineStats>
+where
+    T: Send,
+    R: Send,
+    P: FnMut() -> Result<Option<T>>,
+    W: Fn(T) -> Result<R> + Sync,
+    G: FnMut(R) -> Result<()>,
+{
+    let workers = super::effective_threads(threads).max(1);
+    let mut stats = PipelineStats::default();
+    if workers <= 1 {
+        while let Some(t) = produce()? {
+            stats.peak_in_flight = 1;
+            fold(work(t)?)?;
+        }
+        return Ok(stats);
+    }
+
+    let (task_tx, task_rx) = mpsc::sync_channel::<(usize, T)>(workers);
+    // A `None` outcome marks a task cancelled after poisoning — a
+    // dedicated variant (not a sentinel error), so no genuine task error
+    // can ever be mistaken for a cancellation.
+    let (done_tx, done_rx) = mpsc::channel::<(usize, Option<Result<R>>)>();
+    let task_rx = Mutex::new(task_rx);
+    let poisoned = AtomicBool::new(false);
+
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            let task_rx = &task_rx;
+            let done_tx = done_tx.clone();
+            let work = &work;
+            let poisoned = &poisoned;
+            scope.spawn(move || loop {
+                // Hold the lock only for the recv: FIFO channel + one
+                // claimant at a time means tasks are claimed in
+                // production order, so every cancelled task has a higher
+                // sequence than the poisoning failure.
+                let msg = match task_rx.lock() {
+                    Ok(rx) => rx.recv(),
+                    Err(_) => break,
+                };
+                let Ok((i, t)) = msg else { break };
+                let r = if poisoned.load(Ordering::Relaxed) {
+                    drop(t);
+                    None
+                } else {
+                    let r = work(t);
+                    if r.is_err() {
+                        poisoned.store(true, Ordering::Relaxed);
+                    }
+                    Some(r)
+                };
+                if done_tx.send((i, r)).is_err() {
+                    break;
+                }
+            });
+        }
+        drop(done_tx); // workers hold the only remaining senders
+
+        let mut next_seq = 0usize; // next sequence to produce
+        let mut next_fold = 0usize; // next sequence to fold
+        let mut pending: BTreeMap<usize, R> = BTreeMap::new();
+        let mut in_flight = 0usize;
+        let mut exhausted = false;
+        // (sequence, error) of the earliest failure seen so far
+        let mut first_err: Option<(usize, anyhow::Error)> = None;
+
+        loop {
+            while !exhausted && first_err.is_none() && in_flight < workers {
+                match produce() {
+                    Ok(Some(t)) => {
+                        if task_tx.send((next_seq, t)).is_err() {
+                            // only possible if every worker panicked;
+                            // the scope will resume the panic on join
+                            exhausted = true;
+                            break;
+                        }
+                        next_seq += 1;
+                        in_flight += 1;
+                        stats.peak_in_flight = stats.peak_in_flight.max(in_flight);
+                    }
+                    Ok(None) => exhausted = true,
+                    Err(e) => {
+                        poisoned.store(true, Ordering::Relaxed);
+                        first_err = Some((next_seq, e));
+                        exhausted = true;
+                    }
+                }
+            }
+            if in_flight == 0 && (exhausted || first_err.is_some()) {
+                break;
+            }
+            let Ok((i, r)) = done_rx.recv() else { break };
+            in_flight -= 1;
+            match r {
+                Some(Ok(p)) => {
+                    pending.insert(i, p);
+                }
+                Some(Err(e)) => {
+                    poisoned.store(true, Ordering::Relaxed);
+                    let earlier = match &first_err {
+                        Some((s, _)) => i < *s,
+                        None => true,
+                    };
+                    if earlier {
+                        first_err = Some((i, e));
+                    }
+                }
+                // cancelled after an earlier failure: nothing to record
+                None => {}
+            }
+            if first_err.is_none() {
+                while let Some(p) = pending.remove(&next_fold) {
+                    if let Err(e) = fold(p) {
+                        poisoned.store(true, Ordering::Relaxed);
+                        first_err = Some((next_fold, e));
+                        break;
+                    }
+                    next_fold += 1;
+                }
+            }
+        }
+        drop(task_tx); // closes the channel; workers exit and the scope joins
+
+        match first_err {
+            Some((_, e)) => Err(e),
+            None => Ok(()),
+        }
+    })?;
+    Ok(stats)
 }
 
 /// Split `0..n` into at most `parts` contiguous, near-equal ranges
@@ -169,6 +340,138 @@ mod tests {
             ran.load(Ordering::Relaxed) < 10_000,
             "cancellation did not stop the pool"
         );
+    }
+
+    /// Drive `pipeline` over 0..n with a `produce` counter.
+    fn counting_produce(n: usize) -> impl FnMut() -> Result<Option<usize>> {
+        let mut next = 0usize;
+        move || {
+            if next < n {
+                next += 1;
+                Ok(Some(next - 1))
+            } else {
+                Ok(None)
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_folds_in_production_order() {
+        for &threads in &[1usize, 2, 4, 8] {
+            let mut out = Vec::new();
+            let stats = pipeline(
+                counting_produce(100),
+                threads,
+                |i| {
+                    // jitter completion order; folds must still be ordered
+                    std::thread::sleep(std::time::Duration::from_micros(((i * 7) % 5) as u64));
+                    Ok(i * 3)
+                },
+                |v| {
+                    out.push(v);
+                    Ok(())
+                },
+            )
+            .unwrap();
+            assert_eq!(out, (0..100).map(|i| i * 3).collect::<Vec<_>>(), "@{threads}");
+            assert!(stats.peak_in_flight <= threads.max(1), "@{threads}: {stats:?}");
+            assert!(stats.peak_in_flight >= 1, "@{threads}");
+        }
+    }
+
+    #[test]
+    fn pipeline_bounds_in_flight_tasks() {
+        // Slow workers + instant producer: the driver must stop producing
+        // at the worker count, not read ahead unboundedly.
+        let stats = pipeline(
+            counting_produce(64),
+            4,
+            |i| {
+                std::thread::sleep(std::time::Duration::from_micros(100));
+                Ok(i)
+            },
+            |_| Ok(()),
+        )
+        .unwrap();
+        assert!(stats.peak_in_flight <= 4, "{stats:?}");
+    }
+
+    #[test]
+    fn pipeline_worker_error_cancels_and_wins_by_sequence() {
+        let ran = AtomicU64::new(0);
+        let err = pipeline(
+            counting_produce(10_000),
+            4,
+            |i| {
+                ran.fetch_add(1, Ordering::Relaxed);
+                if i == 3 || i == 7 {
+                    bail!("task {i} failed")
+                }
+                std::thread::sleep(std::time::Duration::from_micros(50));
+                Ok(i)
+            },
+            |_| Ok(()),
+        )
+        .unwrap_err();
+        // lowest-sequence failure wins deterministically
+        assert_eq!(err.to_string(), "task 3 failed");
+        assert!(
+            ran.load(Ordering::Relaxed) < 10_000,
+            "cancellation did not stop the pipeline"
+        );
+    }
+
+    #[test]
+    fn pipeline_fold_and_produce_errors_propagate() {
+        let err = pipeline(
+            counting_produce(50),
+            4,
+            |i| Ok(i),
+            |v| {
+                if v == 5 {
+                    bail!("fold failed at {v}")
+                }
+                Ok(())
+            },
+        )
+        .unwrap_err();
+        assert_eq!(err.to_string(), "fold failed at 5");
+
+        let mut next = 0usize;
+        let err = pipeline(
+            move || {
+                next += 1;
+                if next > 3 {
+                    bail!("producer failed")
+                }
+                Ok(Some(next))
+            },
+            4,
+            |i: usize| Ok(i),
+            |_| Ok(()),
+        )
+        .unwrap_err();
+        assert_eq!(err.to_string(), "producer failed");
+    }
+
+    #[test]
+    fn pipeline_empty_and_serial_paths() {
+        let mut out = Vec::new();
+        let stats = pipeline(counting_produce(0), 8, Ok, |v: usize| {
+            out.push(v);
+            Ok(())
+        })
+        .unwrap();
+        assert!(out.is_empty());
+        assert_eq!(stats.peak_in_flight, 0);
+
+        let mut out = Vec::new();
+        pipeline(counting_produce(5), 1, |i| Ok(i + 1), |v| {
+            out.push(v);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(out, vec![1, 2, 3, 4, 5]);
     }
 
     #[test]

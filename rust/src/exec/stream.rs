@@ -1,34 +1,51 @@
-//! Streaming analysis driver: feed [`ShardedReader`] shards through the
-//! worker pool one batch at a time, folding compact partials so peak
-//! memory is O(workers × shard + results) instead of O(trace).
+//! Streaming analysis driver: a decode→fold **pipeline** over
+//! [`ShardedReader`] shard tasks. The driver thread only advances the
+//! reader's I/O cursor ([`ShardedReader::next_task`]) and folds partials;
+//! shard *decoding* runs as worker-pool tasks that overlap both the I/O
+//! and the folds, so decode-bound archives (zlib rank files) ingest at
+//! pool speed instead of driver speed. Peak memory stays
+//! O(workers × shard + results): the driver stops producing tasks at the
+//! worker count ([`crate::exec::pool::pipeline`]'s in-flight cap, reported
+//! as [`StreamStats::peak_in_flight_shards`]).
 //!
 //! Every function here is **bit-identical** to eager `read_auto` + the
 //! sequential engine on the same source, at any thread count:
 //!
-//! * Shards arrive in canonical row order and partials fold in shard
-//!   order, so every first-seen merge (profile rows, CCT node ids,
-//!   function ranking) replays the sequential discovery order exactly.
+//! * Decode tasks carry shard sequence numbers and partials fold
+//!   *strictly in shard order* (completion order is irrelevant), so every
+//!   first-seen merge (profile rows, CCT node ids, function ranking)
+//!   replays the sequential discovery order exactly.
 //! * Cross-shard sums add integer-valued f64 nanoseconds / counts /
 //!   bytes — exact and associative well below 2^53 — and u64 counts are
 //!   exact by construction.
-//! * Quantities only known at end of stream (global time span, message
-//!   size maximum, process set) are folded from per-shard partials and
-//!   applied with the sequential formulas afterwards.
+//! * Quantities only known at end of stream (message size maximum,
+//!   process set) are folded from per-shard partials and applied with the
+//!   sequential formulas afterwards. The global **time span** is no
+//!   longer one of them: [`ShardedReader::scan_span`] reports it before
+//!   ingest (two-pass protocol), so `time_profile` / `comm_over_time`
+//!   fold shards straight into final bins. For `time_profile` the fold
+//!   replays each shard's individual (slot, bin, overlap) contributions
+//!   in segment order — per-cell f64 adds happen in exactly the
+//!   sequential order, so fractional binning stays bit-identical while
+//!   the accumulated state is O(functions × bins), not O(segments).
 //!
 //! Per-op partial memory: O(functions) for profiles, O(tree) for the
 //! CCT, O(distinct sizes) for the histogram, O(process²) for the comm
-//! matrix, O(sends) for `comm_over_time`, O(call segments) for
-//! `time_profile`, O(processes + message instants) for `critical_path`,
-//! O(leaf calls + message instants) for `lateness` (the output itself is
-//! O(leaf calls)), O(processes) for `comm_comp_breakdown`, and
-//! O(anchors) for anchored `detect_pattern` — all far below the
-//! 8-column event table, though several still grow with the trace
-//! (documented trade-off: binning needs the global span before any
-//! segment can be placed, and message matching needs every endpoint).
+//! matrix, O(functions × bins) for `time_profile` and O(bins) for
+//! `comm_over_time` (two-pass; the rare span-less sources — archives
+//! predating the otf2 extrema section, rows with unparsable timestamps —
+//! fall back to the old O(segments)/O(sends) buffering), O(processes +
+//! message instants) for `critical_path`, O(leaf calls + message
+//! instants) for `lateness`, O(processes) for `comm_comp_breakdown`, and
+//! O(anchors) for anchored `detect_pattern`.
 //!
-//! [`StreamStats`] is the ingest instrumentation hook: shard count,
-//! total rows, and the largest shard ever resident — what the parity
-//! suite asserts to prove memory stays shard-bounded.
+//! [`StreamStats`] is the ingest instrumentation hook: shard counts and
+//! the largest shard prove memory stays shard-bounded;
+//! `decode_ms`/`fold_ms` show the pipeline overlap (worker decode time
+//! can exceed wall-clock driver time only if decoding overlapped);
+//! `peak_in_flight_shards` proves residency ≤ workers;
+//! `peak_partial_bytes` proves the accumulated partial state stays at
+//! the op's documented asymptotic size.
 
 use super::pool;
 use crate::analysis;
@@ -45,11 +62,12 @@ use crate::analysis::overlap::{self, Breakdown};
 use crate::analysis::pattern::{self, PatternConfig, PatternRange};
 use crate::analysis::time_profile::{self, Segment, TimeProfile};
 use crate::df::Interner;
-use crate::readers::streaming::ShardedReader;
+use crate::readers::streaming::{ShardTask, ShardedReader};
 use crate::trace::{Trace, COL_NAME, COL_PROC, COL_THREAD, COL_TS};
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
 use std::collections::{BTreeMap, BTreeSet, HashMap};
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
 
 /// (counts, bin edges) — the `message_histogram` result shape.
 pub type Histogram = (Vec<u64>, Vec<f64>);
@@ -77,6 +95,40 @@ pub struct StreamStats {
     /// did NOT hold. Previously this degradation was silent; callers that
     /// rely on bounded ingest should assert `!fallback`.
     pub fallback: bool,
+    /// Total worker time spent decoding shard payloads, in ms (summed
+    /// across workers — may exceed wall-clock when decode overlapped).
+    pub decode_ms: f64,
+    /// Total driver time spent folding partials, in ms.
+    pub fold_ms: f64,
+    /// Peak number of shards simultaneously in flight (task produced but
+    /// partial not yet received back). The pipelined driver bounds this
+    /// by the worker count — the O(workers × shard) residency guarantee,
+    /// asserted in tests.
+    pub peak_in_flight_shards: usize,
+    /// Largest accumulated partial state observed after any fold
+    /// (approximate heap bytes, as reported by the op's fold). For the
+    /// two-pass ops this stays O(bins) / O(functions × bins) no matter
+    /// how many rows stream past.
+    pub peak_partial_bytes: usize,
+}
+
+impl StreamStats {
+    /// One-line human summary — what `pipit analyze --stream` prints.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} shards, {} rows (largest {}), {} procs; decode {:.2} ms / fold {:.2} ms, \
+             peak in-flight {} shard(s), peak partial state {} B{}",
+            self.shards,
+            self.total_rows,
+            self.max_shard_rows,
+            self.num_processes,
+            self.decode_ms,
+            self.fold_ms,
+            self.peak_in_flight_shards,
+            self.peak_partial_bytes,
+            if self.fallback { " [fallback: eager split-after-load]" } else { "" },
+        )
+    }
 }
 
 /// Stream-wide facts the driver folds for free while shards pass by.
@@ -114,17 +166,48 @@ impl Ingest {
     }
 }
 
-/// Pull shards in batches of up to `threads`, run `map` on each batch
-/// concurrently (the PR-1 worker pool), and fold results *in shard
-/// order* on the calling thread. Shard traces are dropped as soon as
-/// their partial exists, bounding resident rows to one batch.
+/// Facts the driver folds for free, computed worker-side right after a
+/// shard decodes (the driver thread never sees the rows).
+struct ShardFacts {
+    rows: usize,
+    /// Run-deduped process ids, in row order (shards are canonical, so
+    /// one linear pass suffices — no per-shard sort).
+    procs: Vec<i64>,
+    /// (min, max) timestamp; None when the shard has no rows.
+    range: Option<(i64, i64)>,
+}
+
+fn shard_facts(t: &Trace) -> Result<ShardFacts> {
+    let n = t.len();
+    let mut procs = Vec::new();
+    let mut prev: Option<i64> = None;
+    for &p in t.processes()? {
+        if prev != Some(p) {
+            procs.push(p);
+            prev = Some(p);
+        }
+    }
+    let range = if n > 0 { Some(t.time_range()?) } else { None };
+    Ok(ShardFacts { rows: n, procs, range })
+}
+
+/// Rough heap estimate of a slice of sized items (+ `extra` bytes per
+/// element for owned strings and the like) — `peak_partial_bytes` input.
+fn vec_bytes<T>(v: &[T], extra: usize) -> usize {
+    v.len() * (std::mem::size_of::<T>() + extra)
+}
+
+/// The decode→fold pipeline. The driver thread alternates between
+/// advancing the reader's I/O cursor and folding partials **in shard
+/// order**; `map` runs on up to `threads` workers right after its
+/// shard's decode task, on the same worker (the shard's rows are dropped
+/// before the partial travels back). The fold returns the approximate
+/// byte size of the accumulated partial state, recorded as
+/// `peak_partial_bytes`.
 ///
-/// Note the throughput trade-off: shard *decoding* happens serially on
-/// the driver thread (the reader trait is sequential); only the
-/// analysis map parallelizes. Decode-bound sources (zlib rank files)
-/// therefore ingest slower than the eager parallel readers — streaming
-/// optimizes memory, eager load + the sharded engine optimizes
-/// wall-clock. Pipelining decode into the pool is a ROADMAP follow-up.
+/// Errors anywhere — I/O, decode, `map`, `fold` — cancel the in-flight
+/// work and propagate the failure with the lowest shard index, exactly
+/// like the serial driver would.
 fn drive<P, F, G>(
     reader: &mut dyn ShardedReader,
     threads: usize,
@@ -134,31 +217,46 @@ fn drive<P, F, G>(
 where
     P: Send,
     F: Fn(&mut Trace) -> Result<P> + Sync,
-    G: FnMut(P) -> Result<()>,
+    G: FnMut(P) -> Result<usize>,
 {
-    let batch_size = super::effective_threads(threads).max(1);
     let mut ing = Ingest::new();
     ing.stats.fallback = !reader.is_streaming();
-    loop {
-        let mut batch: Vec<Mutex<Trace>> = Vec::with_capacity(batch_size);
-        while batch.len() < batch_size {
-            let Some(sh) = reader.next_shard()? else { break };
-            let n = sh.trace.len();
-            ing.stats.shards += 1;
-            ing.stats.total_rows += n;
-            ing.stats.max_shard_rows = ing.stats.max_shard_rows.max(n);
-            // distinct processes via run-dedup: shard rows are in
-            // canonical order (process runs contiguous), so one linear
-            // pass suffices — no per-shard sort like process_ids()
-            let mut prev: Option<i64> = None;
-            for &p in sh.trace.processes()? {
-                if prev != Some(p) {
-                    ing.procs.insert(p);
-                    prev = Some(p);
+    let decode_ns = AtomicU64::new(0);
+    let mut fold_ns = 0u64;
+    let mut produced = 0usize;
+    let pstats = pool::pipeline(
+        || {
+            // I/O cursor advancement only — decoding happens in the task
+            let task = reader.next_task()?;
+            if let Some(t) = &task {
+                if t.index != produced {
+                    bail!(
+                        "reader yielded shard {} out of order (expected {})",
+                        t.index,
+                        produced
+                    );
                 }
+                produced += 1;
             }
-            if n > 0 {
-                let (lo, hi) = sh.trace.time_range()?;
+            Ok(task)
+        },
+        threads,
+        |task: ShardTask| {
+            let start = Instant::now();
+            let mut trace = task.decode()?;
+            decode_ns.fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let facts = shard_facts(&trace)?;
+            let partial = map(&mut trace)?;
+            Ok((partial, facts)) // `trace` drops here, on the worker
+        },
+        |(partial, facts): (P, ShardFacts)| {
+            ing.stats.shards += 1;
+            ing.stats.total_rows += facts.rows;
+            ing.stats.max_shard_rows = ing.stats.max_shard_rows.max(facts.rows);
+            for p in facts.procs {
+                ing.procs.insert(p);
+            }
+            if let Some((lo, hi)) = facts.range {
                 if ing.seen_rows {
                     ing.t_lo = ing.t_lo.min(lo);
                     ing.t_hi = ing.t_hi.max(hi);
@@ -168,23 +266,18 @@ where
                     ing.seen_rows = true;
                 }
             }
-            batch.push(Mutex::new(sh.trace));
-        }
-        if batch.is_empty() {
-            ing.stats.num_processes = ing.procs.len();
-            return Ok(ing);
-        }
-        // Each slot is locked by exactly one pool task; the Mutex is only
-        // there to hand out `&mut Trace` safely.
-        let parts = pool::run_indexed(batch.len(), threads, |i| {
-            let mut t = batch[i].lock().map_err(|_| anyhow!("shard lock poisoned"))?;
-            map(&mut t)
-        })?;
-        drop(batch);
-        for p in parts {
-            fold(p)?;
-        }
-    }
+            let start = Instant::now();
+            let bytes = fold(partial)?;
+            fold_ns += start.elapsed().as_nanos() as u64;
+            ing.stats.peak_partial_bytes = ing.stats.peak_partial_bytes.max(bytes);
+            Ok(())
+        },
+    )?;
+    ing.stats.num_processes = ing.procs.len();
+    ing.stats.peak_in_flight_shards = pstats.peak_in_flight;
+    ing.stats.decode_ms = decode_ns.load(Ordering::Relaxed) as f64 / 1e6;
+    ing.stats.fold_ms = fold_ns as f64 / 1e6;
+    Ok(ing)
 }
 
 /// Streamed `flat_profile`: per-shard partial profiles merge first-seen
@@ -201,7 +294,7 @@ pub fn flat_profile(
         |t| flat_profile::partial_profile(t, metric),
         |p| {
             merger.add(p);
-            Ok(())
+            Ok(merger.approx_bytes())
         },
     )?;
     Ok((merger.finish(), ing.stats))
@@ -222,7 +315,7 @@ pub fn flat_profile_by_process(
         |t| analysis::flat_profile_by_process(t, metric),
         |p| {
             rows.extend(p);
-            Ok(())
+            Ok(vec_bytes(&rows, 24))
         },
     )?;
     Ok((rows, ing.stats))
@@ -258,7 +351,7 @@ pub fn idle_time(
         |t| analysis::flat_profile_by_process(t, Metric::IncTime),
         |p| {
             rows.extend(p);
-            Ok(())
+            Ok(vec_bytes(&rows, 24))
         },
     )?;
     let (lo, hi) = ing.time_range();
@@ -296,7 +389,8 @@ pub fn comm_matrix(
             for (k, v) in r {
                 *recvs.entry(k).or_insert(0.0) += v;
             }
-            Ok(())
+            Ok((sends.len() + recvs.len())
+                * (std::mem::size_of::<((i64, i64), f64)>() + 16))
         },
     )?;
     let procs = ing.sorted_procs();
@@ -360,16 +454,19 @@ pub fn message_histogram(
                 *recvs.entry(k).or_insert(0) += v;
             }
             saw_send |= f;
-            Ok(())
+            Ok((sends.len() + recvs.len()) * (std::mem::size_of::<(i64, u64)>() + 16))
         },
     )?;
     let chosen = if saw_send { &sends } else { &recvs };
     Ok((comm::histogram_from_counts(chosen, bins), ing.stats))
 }
 
-/// Streamed `comm_over_time`: per-shard (timestamp, size) send events
-/// accumulate in row order; binning runs once the stream-wide span (and
-/// so the bin width) is known, folding in the sequential order.
+/// Streamed `comm_over_time`. With the span pre-pass available
+/// (two-pass protocol) the bins are known before ingest: each shard bins
+/// its own send events (u64 counts + integer-valued byte sums ⇒ exact in
+/// any grouping) and the fold is a cell-wise add into O(bins) state.
+/// Span-less sources fall back to buffering (timestamp, size) pairs
+/// until end of stream, as before.
 pub fn comm_over_time(
     reader: &mut dyn ShardedReader,
     bins: usize,
@@ -378,10 +475,35 @@ pub fn comm_over_time(
     if bins == 0 {
         bail!("bins must be > 0");
     }
+    if let Some((t0, t1)) = reader.scan_span()? {
+        let span = (t1 - t0).max(1) as f64;
+        let width = span / bins as f64;
+        let mut counts = vec![0u64; bins];
+        let mut volume = vec![0.0f64; bins];
+        let ing = drive(
+            reader,
+            threads,
+            |t| comm::comm_over_time_range(t, bins, t0, width, (0, t.len())),
+            |(c, v)| {
+                for (dst, src) in counts.iter_mut().zip(&c) {
+                    *dst += *src;
+                }
+                for (dst, src) in volume.iter_mut().zip(&v) {
+                    *dst += *src;
+                }
+                Ok(bins * (std::mem::size_of::<u64>() + std::mem::size_of::<f64>()))
+            },
+        )?;
+        let edges = (0..=bins)
+            .map(|b| t0 + (b as f64 * width).round() as i64)
+            .collect();
+        return Ok(((counts, volume, edges), ing.stats));
+    }
+    // span unknown: buffer send events, bin at end of stream
     let mut sends: Vec<(i64, i64)> = Vec::new();
     let ing = drive(reader, threads, |t| comm::shard_send_events(&*t), |p| {
         sends.extend(p);
-        Ok(())
+        Ok(vec_bytes(&sends, 0))
     })?;
     let (t0, t1) = ing.time_range();
     let span = (t1 - t0).max(1) as f64;
@@ -399,10 +521,9 @@ pub fn comm_over_time(
     Ok(((counts, volume, edges), ing.stats))
 }
 
-/// Streamed `time_profile`: per-shard exclusive segments remap into one
-/// stream-wide name interner (fold order = row order, so ranking ties
-/// resolve sequentially), then the shared rank + bin stages run over the
-/// merged segment list with the stream-wide span.
+/// Streamed `time_profile`: two-pass when the span pre-pass is
+/// available, buffered otherwise — both bit-identical to the sequential
+/// engine.
 pub fn time_profile(
     reader: &mut dyn ShardedReader,
     num_bins: usize,
@@ -425,6 +546,110 @@ fn time_profile_ingest(
     if num_bins == 0 {
         bail!("num_bins must be > 0");
     }
+    match reader.scan_span()? {
+        Some((t0, t1)) => time_profile_two_pass(reader, num_bins, top_funcs, threads, t0, t1),
+        None => time_profile_buffered(reader, num_bins, top_funcs, threads),
+    }
+}
+
+/// Per-shard partial of the two-pass streamed time profile: the shard's
+/// individual (local slot, bin, overlap) contributions in segment order
+/// — O(shard) transient data, dropped right after its fold — plus the
+/// local census for remapping into the stream-wide one.
+struct TpShard {
+    /// local slot → function name (shard dictionaries differ per format)
+    names: Vec<String>,
+    /// local slot → total exclusive ns (exact integer-valued sums)
+    totals: Vec<f64>,
+    /// (local slot, bin, overlap) in (segment, bin) order
+    contribs: Vec<(u32, u32, f64)>,
+}
+
+/// Two-pass streamed `time_profile`: the span (and so every bin edge) is
+/// known before ingest, so workers pre-compute their shard's bin
+/// contributions and the fold replays them one by one into
+/// O(functions × bins) accumulated rows. Replaying individual
+/// contributions in shard order = the sequential per-cell f64 add order,
+/// so fractional binning stays bit-identical; ranking totals are exact
+/// integer-valued sums, so the end-of-stream ranking matches too.
+fn time_profile_two_pass(
+    reader: &mut dyn ShardedReader,
+    num_bins: usize,
+    top_funcs: Option<usize>,
+    threads: usize,
+    t0: i64,
+    t1: i64,
+) -> Result<(TimeProfile, Ingest)> {
+    let span = (t1 - t0).max(1) as f64;
+    let width = span / num_bins as f64;
+    let mut names = Interner::new();
+    let mut acc = time_profile::FuncCensus::default();
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let ing = drive(
+        reader,
+        threads,
+        |t| {
+            let segs = time_profile::exclusive_segments(t)?;
+            let (_, dict) = t.events.strs(COL_NAME)?;
+            let mut local = time_profile::FuncCensus::default();
+            let mut contribs: Vec<(u32, u32, f64)> = Vec::new();
+            for s in &segs {
+                let slot = local.add(s.name_code, (s.end - s.start) as f64);
+                time_profile::seg_bin_overlaps(s, t0, width, num_bins, (0, num_bins), |b, ov| {
+                    contribs.push((slot as u32, b as u32, ov));
+                });
+            }
+            let names = local
+                .codes
+                .iter()
+                .map(|&c| dict.resolve(c).unwrap_or("").to_string())
+                .collect();
+            Ok(TpShard { names, totals: local.totals, contribs })
+        },
+        |sh| {
+            // local slots → stream-wide slots, in first-seen order
+            // across shards (= global first-seen segment order)
+            let mut global = Vec::with_capacity(sh.names.len());
+            for (k, name) in sh.names.iter().enumerate() {
+                let code = names.intern(name);
+                let g = acc.slot(code);
+                acc.totals[g] += sh.totals[k];
+                if g == rows.len() {
+                    rows.push(vec![0.0f64; num_bins]);
+                }
+                global.push(g);
+            }
+            for (slot, b, ov) in sh.contribs {
+                rows[global[slot as usize]][b as usize] += ov;
+            }
+            Ok(rows.len() * num_bins * std::mem::size_of::<f64>()
+                + vec_bytes(&acc.codes, 32))
+        },
+    )?;
+    let spec = time_profile::rank_census(
+        &acc,
+        |code| names.resolve(code).unwrap_or("").to_string(),
+        top_funcs,
+    );
+    let values = time_profile::collapse_slots(&acc, &spec, &rows, num_bins);
+    let bin_edges = (0..=num_bins)
+        .map(|b| t0 + (b as f64 * width).round() as i64)
+        .collect();
+    Ok((TimeProfile { bin_edges, func_names: spec.func_names, values }, ing))
+}
+
+/// Buffered streamed `time_profile` for span-less sources: per-shard
+/// exclusive segments remap into one stream-wide name interner (fold
+/// order = row order), then the shared census → rank → bin → collapse
+/// stages run over the merged segment list with the stream-wide span.
+/// Partial state is O(segments) — the documented cost of not knowing the
+/// span up front.
+fn time_profile_buffered(
+    reader: &mut dyn ShardedReader,
+    num_bins: usize,
+    top_funcs: Option<usize>,
+    threads: usize,
+) -> Result<(TimeProfile, Ingest)> {
     let mut names = Interner::new();
     let mut segs: Vec<Segment> = Vec::new();
     let ing = drive(
@@ -450,18 +675,39 @@ fn time_profile_ingest(
             for seg in s {
                 segs.push(Segment { name_code: remap[&seg.name_code], ..seg });
             }
-            Ok(())
+            Ok(vec_bytes(&segs, 0))
         },
     )?;
-    let spec = time_profile::rank_functions(&segs, &names, top_funcs);
+    let c = time_profile::census(&segs);
+    let spec = time_profile::rank_census(
+        &c,
+        |code| names.resolve(code).unwrap_or("").to_string(),
+        top_funcs,
+    );
     let (t0, t1) = ing.time_range();
     let span = (t1 - t0).max(1) as f64;
     let width = span / num_bins as f64;
+    // bin-axis parallel binning over the buffered segments, exactly like
+    // the eager sharded path (per-cell adds stay in segment order)
     let bin_ranges = pool::split_ranges(num_bins, super::effective_threads(threads));
-    let value_parts = pool::run_indexed(bin_ranges.len(), threads, |i| {
-        Ok(time_profile::bin_segments_range(&segs, &spec, t0, width, num_bins, bin_ranges[i]))
+    let row_parts = pool::run_indexed(bin_ranges.len(), threads, |i| {
+        Ok(time_profile::bin_segments_slots(
+            &segs,
+            &c.slot_of_code,
+            c.len(),
+            t0,
+            width,
+            num_bins,
+            bin_ranges[i],
+        ))
     })?;
-    let values: Vec<Vec<f64>> = value_parts.into_iter().flatten().collect();
+    let mut rows: Vec<Vec<f64>> = vec![Vec::with_capacity(num_bins); c.len()];
+    for part in row_parts {
+        for (slot, r) in part.into_iter().enumerate() {
+            rows[slot].extend(r);
+        }
+    }
+    let values = time_profile::collapse_slots(&c, &spec, &rows, num_bins);
     let bin_edges = (0..=num_bins)
         .map(|b| t0 + (b as f64 * width).round() as i64)
         .collect();
@@ -478,7 +724,7 @@ pub fn create_cct(
     let mut merger = cct::CctMerger::new();
     let ing = drive(reader, threads, analysis::create_cct, |p| {
         merger.merge(&p);
-        Ok(())
+        Ok(merger.approx_bytes())
     })?;
     Ok((merger.finish(), ing.stats))
 }
@@ -499,7 +745,7 @@ pub fn comm_comp_breakdown(
         |t| overlap::breakdown_parts(t, comm_functions, other_functions),
         |p| {
             parts.extend(p);
-            Ok(())
+            Ok(vec_bytes(&parts, 0))
         },
     )?;
     let (t0, t1) = ing.time_range();
@@ -582,6 +828,11 @@ impl MsgIngest {
         self.offset += rows;
         Ok(())
     }
+
+    /// Approximate accumulated bytes (queues dominate).
+    fn approx_bytes(&self) -> usize {
+        self.queues.approx_bytes() + self.runs.procs.len() * 40
+    }
 }
 
 /// Streamed critical-path analysis: shards contribute their process runs
@@ -606,7 +857,10 @@ pub fn critical_path(
             q.collect(t, (0, t.len()), 0)?;
             Ok((local, q, t.len(), shard_bounds(t)?))
         },
-        |(local, q, rows, bounds)| acc.fold(local, q, rows, bounds),
+        |(local, q, rows, bounds)| {
+            acc.fold(local, q, rows, bounds)?;
+            Ok(acc.approx_bytes())
+        },
     )?;
     if acc.offset == 0 {
         bail!("empty trace");
@@ -656,7 +910,8 @@ pub fn lateness(
             }
             part.shift_rows(acc.offset as u32);
             s.merge(part);
-            acc.fold(local, q, rows, bounds)
+            acc.fold(local, q, rows, bounds)?;
+            Ok(acc.approx_bytes() + vec_bytes(&s.calls, 0))
         },
     )?;
     let msgs = super::ops::finish_channel_queues(acc.queues, acc.offset, threads)?;
@@ -695,7 +950,7 @@ pub fn detect_pattern(
         |(a, s, p0, rows)| {
             seen |= s;
             if rows == 0 {
-                return Ok(());
+                return Ok(0);
             }
             match best_proc {
                 // ascending streams put the global minimum process in
@@ -711,7 +966,7 @@ pub fn detect_pattern(
                 Some(b) if p0 == b => anchors.extend(a),
                 _ => {}
             }
-            Ok(())
+            Ok(vec_bytes(&anchors, 0))
         },
     )?;
     let (_, t1) = ing.time_range();
@@ -722,12 +977,20 @@ pub fn detect_pattern(
 mod tests {
     use super::*;
     use crate::gen::{self, GenConfig};
-    use crate::readers::streaming::SplitReader;
+    use crate::readers::streaming::{open_sharded, SerialDecode, SplitReader};
     use crate::trace::TraceBuilder;
+    use std::path::PathBuf;
 
     fn split(app: &str, ranks: usize) -> (Trace, SplitReader) {
         let t = gen::generate(app, &GenConfig::new(ranks, 3), 1).unwrap();
         (t.clone(), SplitReader::new(t).unwrap())
+    }
+
+    fn tmp_dir(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pipit_stream_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
     }
 
     #[test]
@@ -818,8 +1081,150 @@ mod tests {
     #[test]
     fn driver_propagates_shard_errors() {
         let (_, mut r) = split("gol", 3);
-        let err = drive(&mut r, 2, |_| -> Result<()> { bail!("injected") }, |_| Ok(()))
+        let err = drive(&mut r, 2, |_| -> Result<()> { bail!("injected") }, |_| Ok(0))
             .unwrap_err();
         assert!(err.to_string().contains("injected"), "{err}");
+    }
+
+    #[test]
+    fn pipelined_ingest_bounds_in_flight_shards() {
+        let dir = tmp_dir("inflight");
+        let t = gen::generate("laghos", &GenConfig::new(8, 4), 1).unwrap();
+        let out = dir.join("otf2");
+        crate::readers::otf2::write(&t, &out).unwrap();
+        let mut r = open_sharded(&out).unwrap();
+        let (_, stats) = flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap();
+        assert_eq!(stats.shards, 8);
+        assert!(
+            stats.peak_in_flight_shards >= 1 && stats.peak_in_flight_shards <= 4,
+            "in-flight shards must be bounded by the worker count: {stats:?}"
+        );
+        assert!(stats.decode_ms > 0.0, "decode time must be attributed: {stats:?}");
+    }
+
+    #[test]
+    fn two_pass_time_profile_partial_state_is_bins_not_segments() {
+        let dir = tmp_dir("twopass");
+        let t = gen::generate("laghos", &GenConfig::new(8, 6), 1).unwrap();
+        let out = dir.join("otf2");
+        crate::readers::otf2::write(&t, &out).unwrap();
+
+        let mut r = open_sharded(&out).unwrap();
+        assert!(r.scan_span().unwrap().is_some(), "otf2 extrema must give the span");
+        let (tp, stats) = time_profile(r.as_mut(), 16, Some(5), 4).unwrap();
+        let seq = analysis::time_profile(&mut t.clone(), 16, Some(5)).unwrap();
+        assert_eq!(tp.func_names, seq.func_names);
+        assert_eq!(tp.bin_edges, seq.bin_edges);
+        for (a, b) in tp.values.iter().flatten().zip(seq.values.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "two-pass binning must be bit-identical");
+        }
+        // the O(bins) guarantee: accumulated state must be far below the
+        // O(segments) buffer the old driver kept (~rows × 16 bytes)
+        assert!(
+            stats.peak_partial_bytes < stats.total_rows * 8,
+            "partial state not shard-bounded: {stats:?}"
+        );
+
+        // comm_over_time rides the same two-pass protocol
+        let mut r = open_sharded(&out).unwrap();
+        let (cot, stats) = comm_over_time(r.as_mut(), 24, 4).unwrap();
+        assert_eq!(cot, analysis::comm_over_time(&t, 24).unwrap());
+        assert!(
+            stats.peak_partial_bytes <= 24 * 16,
+            "comm_over_time partial must be O(bins): {stats:?}"
+        );
+    }
+
+    #[test]
+    fn poisoned_csv_shard_cancels_pipeline_and_propagates_error() {
+        // block 3 (process 2) has an unparsable timestamp: its decode
+        // task fails on a worker mid-stream. The driver must cancel the
+        // remaining in-flight decodes and report the original error —
+        // not deadlock the bounded task channel.
+        let dir = tmp_dir("poison");
+        let mut src = String::from("Timestamp (ns), Event Type, Name, Process\n");
+        for p in 0..6 {
+            if p == 2 {
+                src.push_str(&format!("0, Enter, main, {p}\noops, Leave, main, {p}\n"));
+            } else {
+                src.push_str(&format!("0, Enter, main, {p}\n9, Leave, main, {p}\n"));
+            }
+        }
+        let p = dir.join("poison.csv");
+        std::fs::write(&p, &src).unwrap();
+        let mut r = open_sharded(&p).unwrap();
+        assert!(r.is_streaming(), "proc fields parse, so the plan streams");
+        let err = flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap_err();
+        assert!(err.to_string().contains("bad timestamp"), "{err}");
+
+        // two poisoned shards: the lower-indexed failure wins
+        // deterministically, regardless of worker scheduling
+        let mut src = String::from("Timestamp (ns), Event Type, Name, Process\n");
+        for p in 0..6 {
+            if p == 2 || p == 4 {
+                src.push_str(&format!("0, Enter, main, {p}\nbad{p}, Leave, main, {p}\n"));
+            } else {
+                src.push_str(&format!("0, Enter, main, {p}\n9, Leave, main, {p}\n"));
+            }
+        }
+        let p = dir.join("poison2.csv");
+        std::fs::write(&p, &src).unwrap();
+        for _ in 0..8 {
+            let mut r = open_sharded(&p).unwrap();
+            let err = flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap_err();
+            // line 7 = process 2's Leave, the first bad shard
+            assert!(err.to_string().contains("line 7"), "{err}");
+        }
+    }
+
+    #[test]
+    fn corrupt_otf2_shard_propagates_decode_error() {
+        let dir = tmp_dir("corrupt");
+        let t = gen::generate("gol", &GenConfig::new(6, 3), 1).unwrap();
+        let out = dir.join("otf2");
+        crate::readers::otf2::write(&t, &out).unwrap();
+        std::fs::write(out.join("rank_3.bin"), b"not a zlib stream").unwrap();
+        let mut r = open_sharded(&out).unwrap();
+        let err = flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap_err();
+        // the decode failure must surface (zlib / record error), with
+        // shards 0-2 already folded and 4-5 cancelled — no deadlock
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn serial_decode_wrapper_is_bit_identical_to_pipelined() {
+        let dir = tmp_dir("serialwrap");
+        let t = gen::generate("tortuga", &GenConfig::new(6, 4), 1).unwrap();
+        let out = dir.join("otf2");
+        crate::readers::otf2::write(&t, &out).unwrap();
+        for th in [1usize, 2, 4] {
+            let mut rp = open_sharded(&out).unwrap();
+            let (pipelined, _) = flat_profile(rp.as_mut(), Metric::ExcTime, th).unwrap();
+            let mut rs = open_sharded(&out).unwrap();
+            let mut rs = SerialDecode::new(rs.as_mut());
+            let (serial, _) = flat_profile(&mut rs, Metric::ExcTime, th).unwrap();
+            assert_eq!(pipelined, serial, "@{th}");
+
+            let mut rp = open_sharded(&out).unwrap();
+            let (tp_p, _) = time_profile(rp.as_mut(), 32, Some(6), th).unwrap();
+            let mut rs = open_sharded(&out).unwrap();
+            let mut rs = SerialDecode::new(rs.as_mut());
+            let (tp_s, _) = time_profile(&mut rs, 32, Some(6), th).unwrap();
+            assert_eq!(tp_p.func_names, tp_s.func_names, "@{th}");
+            for (a, b) in tp_p.values.iter().flatten().zip(tp_s.values.iter().flatten()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "@{th}");
+            }
+        }
+    }
+
+    #[test]
+    fn stream_stats_summary_mentions_pipeline_fields() {
+        let (_, mut r) = split("gol", 4);
+        let (_, stats) = flat_profile(&mut r, Metric::ExcTime, 2).unwrap();
+        let s = stats.summary();
+        assert!(s.contains("decode"), "{s}");
+        assert!(s.contains("fold"), "{s}");
+        assert!(s.contains("in-flight"), "{s}");
+        assert!(s.contains("fallback"), "SplitReader summary must flag the fallback: {s}");
     }
 }

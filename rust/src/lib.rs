@@ -53,10 +53,15 @@
 //!
 //! Traces larger than memory stream through the [`readers::streaming`]
 //! layer: [`readers::open_sharded`] yields process-aligned shards
-//! incrementally (one OTF2 rank file at a time; csv / chrome at process
-//! boundaries) and [`exec::stream`] folds them through the same worker
-//! pool, bounding peak memory by O(workers × shard + results) while
-//! staying bit-identical to eager loading. Sessions opt in with
+//! incrementally (one OTF2 rank file at a time; csv / chrome as
+//! pre-scanned block byte ranges) and [`exec::stream`] runs a
+//! decode→fold pipeline over the worker pool — the driver thread only
+//! advances the I/O cursor while shard decode tasks overlap the
+//! analysis folds — bounding peak memory by O(workers × shard +
+//! results) while staying bit-identical to eager loading (folds happen
+//! in shard-sequence order no matter when decodes finish). A span
+//! pre-pass lets `time_profile` / `comm_over_time` bin without
+//! buffering. Sessions opt in with
 //! [`coordinator::AnalysisSession::load_streamed`] (CLI `--stream`), and
 //! [`coordinator::AnalysisSession::run_batch`] (CLI `--batch`) schedules
 //! many streamed traces over one pool for multirun comparisons.

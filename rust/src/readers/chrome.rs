@@ -113,6 +113,20 @@ pub(crate) fn event_pid(e: &Json) -> i64 {
     e.get_f64("pid").unwrap_or(0.0) as i64
 }
 
+/// The ns timestamps a row event contributes to the trace: its `ts`,
+/// plus the end timestamp for `X` events — the exact arithmetic of
+/// [`apply_event`], used by the streaming span pre-pass. The end is None
+/// when `dur` is missing (the full decode owns that error).
+pub(crate) fn row_event_times(e: &Json) -> (i64, Option<i64>) {
+    let ts = (e.get_f64("ts").unwrap_or(0.0) * 1000.0).round() as i64;
+    let te = if e.get_str("ph").unwrap_or("X") == "X" {
+        e.get_f64("dur").map(|d| ts + (d * 1000.0).round() as i64)
+    } else {
+        None
+    };
+    (ts, te)
+}
+
 /// Write a trace as Chrome Trace JSON (B/E + instant events).
 pub fn write(trace: &Trace, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path)

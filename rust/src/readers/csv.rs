@@ -145,6 +145,15 @@ pub(crate) fn parse_proc(h: &CsvHeader, line: &str) -> Option<i64> {
     f.get(h.idx_proc).and_then(|s| s.trim().parse().ok())
 }
 
+/// Extract just the Timestamp field of a data line, scaled to ns exactly
+/// like [`parse_row`] — the streaming span pre-pass. None when missing
+/// or unparsable (the full parse owns producing the error message).
+pub(crate) fn parse_ts(h: &CsvHeader, line: &str) -> Option<i64> {
+    let f = split_csv_line(line);
+    let ts: f64 = f.get(h.idx_ts)?.trim().parse().ok()?;
+    Some((ts * h.ts_scale as f64).round() as i64)
+}
+
 /// The provenance metadata every CSV read (eager or streamed) attaches.
 pub(crate) fn csv_meta(path: &Path) -> TraceMeta {
     TraceMeta {

@@ -27,7 +27,10 @@ pub mod otf2;
 pub mod projections;
 pub mod streaming;
 
-pub use streaming::{open_planned, open_sharded, plan_sharded, ShardedReader, StreamPlan, TraceShard};
+pub use streaming::{
+    open_planned, open_sharded, plan_sharded, SerialDecode, ShardTask, ShardedReader,
+    StreamPlan, TraceShard,
+};
 
 use crate::trace::Trace;
 use anyhow::{bail, Result};

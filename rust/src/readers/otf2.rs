@@ -28,6 +28,13 @@ use std::sync::Arc;
 
 const MAGIC: &[u8; 8] = b"OTF2SIM1";
 
+/// Marker byte introducing the optional per-rank timestamp-extrema
+/// section appended after the string table. Archives written before the
+/// section exist too (the checked-in fixtures): readers treat a missing
+/// section as "extrema unknown", which disables the cheap span pre-scan
+/// but nothing else.
+const EXTREMA_MARKER: u8 = 0xE5;
+
 // record tags
 const T_ENTER: u8 = 0;
 const T_LEAVE: u8 = 1;
@@ -97,6 +104,25 @@ pub fn write(trace: &Trace, dir: &Path) -> Result<()> {
 
     let ranks = trace.process_ids()?;
 
+    // Per-rank timestamp extrema in one linear pass — the cheap-span
+    // section the streaming two-pass pre-scan reads so `time_profile` /
+    // `comm_over_time` know the global span before decoding any shard.
+    let mut rank_slot = std::collections::HashMap::with_capacity(ranks.len());
+    for (k, &r) in ranks.iter().enumerate() {
+        rank_slot.insert(r, k);
+    }
+    let mut extrema: Vec<Option<(i64, i64)>> = vec![None; ranks.len()];
+    for i in 0..trace.len() {
+        let slot = rank_slot[&pr[i]];
+        match &mut extrema[slot] {
+            Some((lo, hi)) => {
+                *lo = (*lo).min(ts[i]);
+                *hi = (*hi).max(ts[i]);
+            }
+            e => *e = Some((ts[i], ts[i])),
+        }
+    }
+
     // defs.bin
     let mut defs = Vec::new();
     defs.extend_from_slice(MAGIC);
@@ -111,6 +137,19 @@ pub fn write(trace: &Trace, dir: &Path) -> Result<()> {
     for s in ndict.strings() {
         put_uvarint(&mut defs, s.len() as u64);
         defs.extend_from_slice(s.as_bytes());
+    }
+    defs.push(EXTREMA_MARKER);
+    for e in &extrema {
+        match e {
+            Some((lo, hi)) => {
+                defs.push(1);
+                // write bails below on any ts < 0 (delta encoding), so
+                // lo >= 0 and the uvarints are well-formed
+                put_uvarint(&mut defs, (*lo).max(0) as u64);
+                put_uvarint(&mut defs, (*hi - *lo).max(0) as u64);
+            }
+            None => defs.push(0),
+        }
     }
     std::fs::write(dir.join("defs.bin"), defs)?;
 
@@ -164,8 +203,29 @@ pub(crate) struct Defs {
     pub(crate) app: String,
     pub(crate) ranks: Vec<i64>,
     pub(crate) names: Arc<Interner>,
+    /// Per-rank (min, max) timestamps from the extrema section; None for
+    /// archives written before the section existed (span pre-scan
+    /// unavailable) or for ranks with no events.
+    pub(crate) extrema: Option<Vec<Option<(i64, i64)>>>,
     send_code: u32,
     recv_code: u32,
+}
+
+impl Defs {
+    /// Global (min, max) timestamp over every rank, from the extrema
+    /// section alone — the streaming span pre-scan. None when the
+    /// archive predates the section or holds no events.
+    pub(crate) fn span(&self) -> Option<(i64, i64)> {
+        let ex = self.extrema.as_ref()?;
+        let mut out: Option<(i64, i64)> = None;
+        for &(lo, hi) in ex.iter().flatten() {
+            out = Some(match out {
+                Some((a, b)) => (a.min(lo), b.max(hi)),
+                None => (lo, hi),
+            });
+        }
+        out
+    }
 }
 
 pub(crate) fn read_defs(dir: &Path) -> Result<Defs> {
@@ -205,10 +265,34 @@ pub(crate) fn read_defs(dir: &Path) -> Result<Defs> {
         let s = std::str::from_utf8(take(&mut pos, len)?)?;
         names.intern(s);
     }
+    // optional trailing extrema section (absent in older archives)
+    let extrema = if pos < buf.len() {
+        if buf[pos] != EXTREMA_MARKER {
+            bail!("defs.bin: unknown trailing section byte {:#x}", buf[pos]);
+        }
+        pos += 1;
+        let mut ex = Vec::with_capacity(nranks);
+        for _ in 0..nranks {
+            let flag = *buf.get(pos).context("defs.bin truncated in extrema section")?;
+            pos += 1;
+            ex.push(match flag {
+                0 => None,
+                1 => {
+                    let lo = get_uvarint(&buf, &mut pos)? as i64;
+                    let width = get_uvarint(&buf, &mut pos)? as i64;
+                    Some((lo, lo + width))
+                }
+                other => bail!("defs.bin: bad extrema flag {other}"),
+            });
+        }
+        Some(ex)
+    } else {
+        None
+    };
     // ensure message event names exist even in traces without messages
     let send_code = names.intern(SEND_EVENT);
     let recv_code = names.intern(RECV_EVENT);
-    Ok(Defs { app, ranks, names: Arc::new(names), send_code, recv_code })
+    Ok(Defs { app, ranks, names: Arc::new(names), extrema, send_code, recv_code })
 }
 
 /// Columnar shard for one rank (already in canonical order).
@@ -223,9 +307,28 @@ pub(crate) struct Shard {
 }
 
 pub(crate) fn read_rank(dir: &Path, rank: i64, defs: &Defs, etypes: &EtypeCodes) -> Result<Shard> {
-    let f = std::fs::File::open(dir.join(format!("rank_{rank}.bin")))?;
+    decode_rank(&rank_bytes(dir, rank)?, rank, defs, etypes)
+}
+
+/// The raw (still-compressed) bytes of one rank stream — the pure-I/O
+/// half of a shard read, which the pipelined streaming driver runs on
+/// its own thread before handing [`decode_rank`] to a worker.
+pub(crate) fn rank_bytes(dir: &Path, rank: i64) -> Result<Vec<u8>> {
+    let p = dir.join(format!("rank_{rank}.bin"));
+    std::fs::read(&p).with_context(|| format!("reading {}", p.display()))
+}
+
+/// Decompress + parse one rank stream from its raw file bytes — the
+/// CPU half of a shard read, safe to run on any thread (all shared
+/// state is behind `Arc`s in `defs`).
+pub(crate) fn decode_rank(
+    data: &[u8],
+    rank: i64,
+    defs: &Defs,
+    etypes: &EtypeCodes,
+) -> Result<Shard> {
     let mut raw = Vec::new();
-    ZlibDecoder::new(f).read_to_end(&mut raw)?;
+    ZlibDecoder::new(data).read_to_end(&mut raw)?;
     let mut pos = 0usize;
     // enter/leave records are >= 3 bytes, so raw.len() / 3 upper-bounds
     // the event count — pre-reserving avoids growth reallocations.
@@ -281,6 +384,7 @@ pub(crate) fn read_rank(dir: &Path, rank: i64, defs: &Defs, etypes: &EtypeCodes)
     Ok(sh)
 }
 
+#[derive(Clone, Copy)]
 pub(crate) struct EtypeCodes {
     enter: u32,
     leave: u32,
@@ -435,6 +539,16 @@ mod tests {
         assert_eq!(serial.len(), parallel.len());
         assert_eq!(serial.timestamps().unwrap(), parallel.timestamps().unwrap());
         assert_eq!(serial.processes().unwrap(), parallel.processes().unwrap());
+    }
+
+    #[test]
+    fn defs_extrema_give_the_global_span() {
+        let t = sample(4, 5);
+        let dir = tmp("span");
+        write(&t, &dir).unwrap();
+        let defs = read_defs(&dir).unwrap();
+        assert!(defs.extrema.is_some());
+        assert_eq!(defs.span(), Some(t.time_range().unwrap()));
     }
 
     #[test]

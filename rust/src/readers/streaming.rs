@@ -6,23 +6,48 @@
 //! | format      | strategy                                               |
 //! |-------------|--------------------------------------------------------|
 //! | otf2-dir    | one rank file decoded per shard (the flagship path)    |
-//! | csv         | line stream from disk; shard per process boundary      |
-//! | chrome json | incremental object scanner over the raw text (the file |
-//! |             | bytes stay resident, but never the parsed JSON tree or |
-//! |             | row set — the dominant costs of the eager reader)      |
+//! | csv         | pre-scanned block byte ranges read from disk           |
+//! | chrome json | pre-scanned block byte ranges read from disk (the raw  |
+//! |             | text is never resident whole: the pre-scan itself runs |
+//! |             | over a sliding `DiskCursor` window)                    |
 //! | hpctoolkit  | split-after-load fallback ([`SplitReader`])            |
 //! | projections | split-after-load fallback ([`SplitReader`])            |
 //!
+//! # The shard-task protocol (pipelined decode)
+//!
+//! Every reader splits a shard read into two halves:
+//!
+//! * [`ShardedReader::next_task`] — **I/O cursor advancement only** on
+//!   the driver thread (read one rank file's compressed bytes, read one
+//!   pre-scanned block's byte range), returning a [`ShardTask`];
+//! * [`ShardTask::decode`] — the CPU half (zlib + varint parse, line /
+//!   JSON parse), safe to run on **any** worker thread.
+//!
+//! The pipelined driver in [`crate::exec::stream`] maps decode tasks
+//! over the worker pool so decoding overlaps analysis folds; shard
+//! sequence numbers keep every fold in row order, so results stay
+//! bit-identical to serial decode ([`SerialDecode`] pins the old
+//! behavior for benchmarks and parity tests).
+//!
+//! # The span pre-pass (two-pass ingest)
+//!
+//! [`ShardedReader::scan_span`] reports the stream-wide (min, max)
+//! timestamp **before any shard decodes**: otf2 reads the per-rank
+//! extrema section of `defs.bin`, csv/chrome lift it from the same
+//! byte-cursor pre-scan that finds block boundaries, and the fallbacks
+//! read it off the already-loaded trace. Knowing the span up front lets
+//! `time_profile` / `comm_over_time` fold shards directly into final
+//! bins — O(bins) partial state instead of O(segments) / O(sends).
+//!
 //! The csv / chrome readers require process blocks to appear contiguous
 //! and ascending (what every writer in this crate emits, and what
-//! per-rank trace formats produce naturally); a cheap pre-scan verifies
-//! this and falls back to eager-load + [`SplitReader`] otherwise, so
+//! per-rank trace formats produce naturally); the pre-scan verifies this
+//! and falls back to eager-load + [`SplitReader`] otherwise, so
 //! `open_sharded` accepts everything `read_auto` accepts. The pre-scan
-//! is split from reader construction ([`plan_sharded`] →
-//! [`StreamPlan`] → [`open_planned`]) so sessions re-opening the same
-//! source per analysis verify it once; fallbacks are surfaced to
-//! callers via `StreamStats::fallback` rather than silently holding the
-//! whole trace.
+//! is split from reader construction ([`plan_sharded`] → [`StreamPlan`]
+//! → [`open_planned`]) so sessions re-opening the same source per
+//! analysis verify it once; fallbacks are surfaced to callers via
+//! `StreamStats::fallback` rather than silently holding the whole trace.
 //!
 //! Determinism: concatenating shard rows in yield order reproduces the
 //! canonical (Process, Thread, Timestamp) row order of the eager reader
@@ -35,7 +60,7 @@ use crate::df::Interner;
 use crate::trace::{Trace, TraceBuilder, TraceMeta};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
-use std::io::BufRead;
+use std::io::{BufRead, Read, Seek, SeekFrom};
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
@@ -46,10 +71,54 @@ pub struct TraceShard {
     pub trace: Trace,
 }
 
+/// The raw payload of one shard plus the closure that decodes it — the
+/// unit of pipelined ingest. Produced by pure I/O on the driver thread;
+/// decoded on any worker (all shared reader state travels behind `Arc`s).
+pub struct ShardTask {
+    /// Position in the stream (0-based); task order is row order.
+    pub index: usize,
+    decode: Box<dyn FnOnce() -> Result<Trace> + Send>,
+}
+
+impl ShardTask {
+    /// Run the CPU half of the shard read (consumes the payload).
+    pub fn decode(self) -> Result<Trace> {
+        (self.decode)()
+    }
+
+    /// Decode in place into a [`TraceShard`] (the serial-decode path).
+    pub fn into_shard(self) -> Result<TraceShard> {
+        let index = self.index;
+        Ok(TraceShard { index, trace: self.decode()? })
+    }
+}
+
 /// Incremental, process-aligned trace reader.
 pub trait ShardedReader {
     /// Yield the next shard in canonical row order, or None at end.
     fn next_shard(&mut self) -> Result<Option<TraceShard>>;
+
+    /// Advance only the I/O cursor and return the next shard as a raw
+    /// decode task, or None at end. The default decodes inline via
+    /// [`ShardedReader::next_shard`] — correct for readers without a
+    /// cheap raw payload (split-after-load fallbacks), and the behavior
+    /// [`SerialDecode`] pins deliberately.
+    fn next_task(&mut self) -> Result<Option<ShardTask>> {
+        Ok(self.next_shard()?.map(|sh| {
+            let trace = sh.trace;
+            ShardTask { index: sh.index, decode: Box::new(move || Ok(trace)) }
+        }))
+    }
+
+    /// Cheap span pre-pass: the stream-wide (min, max) timestamp of every
+    /// row the reader will yield, known **before** any shard decodes
+    /// (otf2 defs extrema, csv/chrome pre-scan, fallback's loaded
+    /// trace). None when the source cannot provide it cheaply — drivers
+    /// then buffer span-dependent partials until end of stream, exactly
+    /// as before the two-pass protocol.
+    fn scan_span(&mut self) -> Result<Option<(i64, i64)>> {
+        Ok(None)
+    }
 
     /// Number of shards this reader will yield, when known up front.
     fn shard_count_hint(&self) -> Option<usize>;
@@ -70,23 +139,103 @@ pub trait ShardedReader {
     }
 }
 
+/// Adapter pinning shard decode to the driver thread: `next_task`
+/// decodes inline (the trait default), so the pipelined driver degrades
+/// to the pre-pipeline serial-decode behavior with everything else
+/// unchanged. Benchmarks use it as the baseline the decode pipeline is
+/// gated against; parity tests use it to prove pipelining changes no
+/// bits.
+pub struct SerialDecode<'a>(&'a mut dyn ShardedReader);
+
+impl<'a> SerialDecode<'a> {
+    pub fn new(inner: &'a mut dyn ShardedReader) -> Self {
+        SerialDecode(inner)
+    }
+}
+
+impl ShardedReader for SerialDecode<'_> {
+    fn next_shard(&mut self) -> Result<Option<TraceShard>> {
+        self.0.next_shard()
+    }
+
+    // next_task: trait default — decode inline on the calling thread.
+
+    fn scan_span(&mut self) -> Result<Option<(i64, i64)>> {
+        self.0.scan_span()
+    }
+
+    fn shard_count_hint(&self) -> Option<usize> {
+        self.0.shard_count_hint()
+    }
+
+    fn is_streaming(&self) -> bool {
+        self.0.is_streaming()
+    }
+}
+
 /// The cached result of the streamability pre-scan. Sessions keep one
 /// per stream-backed entry so repeated routed analyses skip the
-/// re-verification — the csv pre-scan parses every line's Process field
-/// and the chrome pre-scan walks every event object, roughly half the
-/// per-analysis parse work for those formats.
+/// re-verification — for csv/chrome the pre-scan walks every line /
+/// event object once, recording block byte offsets (so re-opens are
+/// pure seeks) and the stream-wide time span (so two-pass analyses bin
+/// without buffering).
 #[derive(Debug, Clone, PartialEq)]
 pub enum StreamPlan {
-    /// OTF2-sim directory: one rank file per shard, no pre-scan needed.
+    /// OTF2-sim directory: one rank file per shard, no pre-scan needed
+    /// (defs.bin carries the rank list and span extrema).
     Otf2,
-    /// Canonically-ordered csv: `runs` process blocks stream from disk.
-    Csv { runs: usize },
-    /// Canonically-ordered chrome json: `runs` pid blocks, plus the
-    /// application name the pre-scan lifted from metadata records.
-    Chrome { runs: usize, app: String },
+    /// Canonically-ordered csv: block byte ranges stream from disk.
+    Csv(CsvPlan),
+    /// Canonically-ordered chrome json: block byte ranges stream from
+    /// disk, plus the application name lifted from metadata records.
+    Chrome(ChromePlan),
     /// Not streamable (hpctoolkit / projections / interleaved files):
     /// eager load + [`SplitReader`].
     Fallback,
+}
+
+/// Pre-scan verdict for a streamable csv file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsvPlan {
+    /// (byte offset, 1-based file line number) of each process block's
+    /// first line; a block runs to the next block's offset (or EOF).
+    blocks: Vec<(u64, usize)>,
+    /// Stream-wide (min, max) ns timestamp; None when some row's
+    /// timestamp did not parse (the full decode owns that error).
+    span: Option<(i64, i64)>,
+}
+
+impl CsvPlan {
+    /// Number of process blocks (= shards).
+    pub fn runs(&self) -> usize {
+        self.blocks.len()
+    }
+}
+
+/// Pre-scan verdict for a streamable chrome trace file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChromePlan {
+    /// Application name lifted from `process_name` metadata records.
+    app: String,
+    /// (byte offset, event index) of each pid block's first row event;
+    /// a block runs to the next block's offset (or `end`).
+    blocks: Vec<(u64, usize)>,
+    /// Byte offset just past the last event in the events array.
+    end: u64,
+    /// Stream-wide (min, max) ns timestamp over every row the events
+    /// produce (X events contribute `ts` and `ts + dur`).
+    span: Option<(i64, i64)>,
+}
+
+impl ChromePlan {
+    /// Number of pid blocks (= shards).
+    pub fn runs(&self) -> usize {
+        self.blocks.len()
+    }
+
+    pub fn app(&self) -> &str {
+        &self.app
+    }
 }
 
 impl StreamPlan {
@@ -116,33 +265,25 @@ pub fn plan_sharded(path: &Path) -> Result<StreamPlan> {
     }
     match path.extension().and_then(|e| e.to_str()).unwrap_or("") {
         "csv" => Ok(match csv_prescan(path)? {
-            Some(runs) => StreamPlan::Csv { runs },
+            Some(plan) => StreamPlan::Csv(plan),
             None => StreamPlan::Fallback,
         }),
-        "json" => {
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading {}", path.display()))?;
-            Ok(match chrome_prescan(&text) {
-                Some((runs, app)) => StreamPlan::Chrome { runs, app },
-                None => StreamPlan::Fallback,
-            })
-        }
+        "json" => Ok(match chrome_prescan(path)? {
+            Some(plan) => StreamPlan::Chrome(plan),
+            None => StreamPlan::Fallback,
+        }),
         _ => bail!("unrecognized trace file: {}", path.display()),
     }
 }
 
 /// Open a reader for a previously computed [`StreamPlan`], skipping the
 /// pre-scan (sessions cache the plan per entry and re-open cheaply per
-/// analysis).
+/// analysis — block offsets make csv/chrome re-opens pure seeks).
 pub fn open_planned(path: &Path, plan: &StreamPlan) -> Result<Box<dyn ShardedReader>> {
     match plan {
         StreamPlan::Otf2 => Ok(Box::new(Otf2ShardedReader::open(path)?)),
-        StreamPlan::Csv { runs } => csv_stream(path, *runs),
-        StreamPlan::Chrome { runs, app } => {
-            let text = std::fs::read_to_string(path)
-                .with_context(|| format!("reading {}", path.display()))?;
-            chrome_stream(path, text, *runs, app.clone())
-        }
+        StreamPlan::Csv(p) => Ok(Box::new(CsvBlocks::open(path, p.clone())?)),
+        StreamPlan::Chrome(p) => Ok(Box::new(ChromeBlocks::open(path, p.clone())?)),
         StreamPlan::Fallback => {
             Ok(Box::new(SplitReader::new(super::read_auto(path)?)?))
         }
@@ -150,19 +291,8 @@ pub fn open_planned(path: &Path, plan: &StreamPlan) -> Result<Box<dyn ShardedRea
 }
 
 /// Open `path` as a sharded reader with format auto-detection, mirroring
-/// [`super::read_auto`]: plan + open in one call. Chrome files read
-/// their text once and hand it straight to the stream (sessions going
-/// through [`plan_sharded`] + [`open_planned`] instead pay one read per
-/// open but skip the pre-scan walk).
+/// [`super::read_auto`]: plan + open in one call.
 pub fn open_sharded(path: &Path) -> Result<Box<dyn ShardedReader>> {
-    if !path.is_dir() && path.extension().and_then(|e| e.to_str()) == Some("json") {
-        let text = std::fs::read_to_string(path)
-            .with_context(|| format!("reading {}", path.display()))?;
-        return match chrome_prescan(&text) {
-            Some((runs, app)) => chrome_stream(path, text, runs, app),
-            None => Ok(Box::new(SplitReader::new(super::read_auto(path)?)?)),
-        };
-    }
     open_planned(path, &plan_sharded(path)?)
 }
 
@@ -196,6 +326,11 @@ impl ShardedReader for SplitReader {
         Ok(Some(TraceShard { index, trace }))
     }
 
+    fn scan_span(&mut self) -> Result<Option<(i64, i64)>> {
+        // the trace is resident anyway; its range is free
+        Ok(Some(self.trace.time_range()?))
+    }
+
     fn shard_count_hint(&self) -> Option<usize> {
         Some(self.ranges.len())
     }
@@ -215,9 +350,11 @@ impl ShardedReader for SplitReader {
 /// `rank_<r>.bin` stream decodes on demand into one shard. This is true
 /// bounded-memory ingest — only one rank's events exist at a time, and
 /// the shared `Arc` dictionaries keep name codes identical across shards.
+/// `next_task` reads only the compressed rank bytes (pure I/O); the zlib
+/// + varint decode runs wherever the task is executed.
 pub struct Otf2ShardedReader {
     dir: PathBuf,
-    defs: otf2::Defs,
+    defs: Arc<otf2::Defs>,
     etype_dict: Arc<Interner>,
     etypes: otf2::EtypeCodes,
     next: usize,
@@ -225,7 +362,7 @@ pub struct Otf2ShardedReader {
 
 impl Otf2ShardedReader {
     pub fn open(dir: &Path) -> Result<Self> {
-        let defs = otf2::read_defs(dir)?;
+        let defs = Arc::new(otf2::read_defs(dir)?);
         let (etype_dict, etypes) = otf2::etype_codes();
         Ok(Otf2ShardedReader { dir: dir.to_path_buf(), defs, etype_dict, etypes, next: 0 })
     }
@@ -233,20 +370,41 @@ impl Otf2ShardedReader {
 
 impl ShardedReader for Otf2ShardedReader {
     fn next_shard(&mut self) -> Result<Option<TraceShard>> {
+        match self.next_task()? {
+            Some(task) => Ok(Some(task.into_shard()?)),
+            None => Ok(None),
+        }
+    }
+
+    fn next_task(&mut self) -> Result<Option<ShardTask>> {
         if self.next >= self.defs.ranks.len() {
             return Ok(None);
         }
         let index = self.next;
         self.next += 1;
         let rank = self.defs.ranks[index];
-        let sh = otf2::read_rank(&self.dir, rank, &self.defs, &self.etypes)?;
-        let table = otf2::shard_table(sh, &self.defs.names, &self.etype_dict)?;
+        let raw = otf2::rank_bytes(&self.dir, rank)?;
+        let defs = Arc::clone(&self.defs);
+        let etype_dict = Arc::clone(&self.etype_dict);
+        let etypes = self.etypes;
         let meta = TraceMeta {
             format: "otf2".into(),
             source: self.dir.display().to_string(),
             app: self.defs.app.clone(),
         };
-        Ok(Some(TraceShard { index, trace: Trace::new(table, meta) }))
+        Ok(Some(ShardTask {
+            index,
+            decode: Box::new(move || {
+                let sh = otf2::decode_rank(&raw, rank, &defs, &etypes)?;
+                let table = otf2::shard_table(sh, &defs.names, &etype_dict)?;
+                Ok(Trace::new(table, meta))
+            }),
+        }))
+    }
+
+    fn scan_span(&mut self) -> Result<Option<(i64, i64)>> {
+        // None for archives written before the extrema section existed
+        Ok(self.defs.span())
     }
 
     fn shard_count_hint(&self) -> Option<usize> {
@@ -258,120 +416,157 @@ impl ShardedReader for Otf2ShardedReader {
     }
 }
 
-// -- csv: line stream with process-boundary shard emission ------------------
+// -- csv: pre-scanned block byte ranges -------------------------------------
 
-/// Open a CSV trace whose pre-scan verified `runs` contiguous, ascending
-/// process blocks — the canonical order this crate's writer emits.
-/// (The pre-scan itself lives in [`plan_sharded`]; interleaved files get
-/// a [`StreamPlan::Fallback`] instead.)
-fn csv_stream(path: &Path, runs: usize) -> Result<Box<dyn ShardedReader>> {
+/// Streamability pre-scan: one pass over the file parsing only the
+/// Process field (grouping) and Timestamp field (span, best-effort) of
+/// every line, recording each block's byte offset. `Ok(None)` requests
+/// the eager fallback (which also owns producing proper errors for
+/// malformed files).
+fn csv_prescan(path: &Path) -> Result<Option<CsvPlan>> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("reading {}", path.display()))?;
-    let mut lines = std::io::BufReader::new(f).lines();
-    let header = lines.next().context("empty csv")??;
-    let h = csv::parse_header(&header)?;
-    Ok(Box::new(CsvStream {
-        lines,
-        header: h,
-        meta: csv::csv_meta(path),
-        pending: None,
-        line_no: 1,
-        index: 0,
-        shards_total: runs,
-    }))
-}
-
-/// Streamability pre-scan: parse only the Process field of every line and
-/// check blocks are contiguous + ascending. `Ok(Some(runs))` when
-/// streamable; `Ok(None)` requests the eager fallback (which also owns
-/// producing proper errors for malformed files).
-fn csv_prescan(path: &Path) -> Result<Option<usize>> {
-    let f = std::fs::File::open(path)
-        .with_context(|| format!("reading {}", path.display()))?;
-    let mut lines = std::io::BufReader::new(f).lines();
-    let header = match lines.next() {
-        Some(l) => l?,
-        None => return Ok(None),
-    };
-    let Ok(h) = csv::parse_header(&header) else {
+    let mut r = std::io::BufReader::new(f);
+    let mut line = String::new();
+    let n = r.read_line(&mut line)?;
+    if n == 0 {
+        return Ok(None);
+    }
+    let Ok(h) = csv::parse_header(&line) else {
         return Ok(None);
     };
-    let mut runs = 0usize;
+    let mut offset = n as u64;
+    let mut line_no = 1usize;
+    let mut blocks: Vec<(u64, usize)> = Vec::new();
     let mut last: Option<i64> = None;
-    for line in lines {
-        let line = line?;
+    let mut span: Option<(i64, i64)> = None;
+    let mut span_ok = true;
+    loop {
+        line.clear();
+        let start = offset;
+        let n = r.read_line(&mut line)?;
+        if n == 0 {
+            break;
+        }
+        offset += n as u64;
+        line_no += 1;
         if line.trim().is_empty() {
             continue;
         }
         let Some(p) = csv::parse_proc(&h, &line) else {
             return Ok(None);
         };
+        if span_ok {
+            match csv::parse_ts(&h, &line) {
+                Some(ts) => {
+                    span = Some(match span {
+                        Some((lo, hi)) => (lo.min(ts), hi.max(ts)),
+                        None => (ts, ts),
+                    })
+                }
+                // unparsable timestamp: the decode will error with the
+                // proper message; only the span pre-pass is forfeited
+                None => span_ok = false,
+            }
+        }
         match last {
             Some(q) if p == q => {}
             Some(q) if p > q => {
-                runs += 1;
+                blocks.push((start, line_no));
                 last = Some(p);
             }
             Some(_) => return Ok(None), // process reappeared: not grouped
             None => {
-                runs = 1;
+                blocks.push((start, line_no));
                 last = Some(p);
             }
         }
     }
-    Ok(Some(runs))
+    Ok(Some(CsvPlan { blocks, span: if span_ok { span } else { None } }))
 }
 
-struct CsvStream {
-    lines: std::io::Lines<std::io::BufReader<std::fs::File>>,
-    header: csv::CsvHeader,
+/// Parse one pre-scanned csv block (complete lines) into a shard trace.
+/// `first_line` is the 1-based file line number of the block's first
+/// line, so error messages match the eager reader's exactly.
+fn decode_csv_block(
+    bytes: &[u8],
+    h: &csv::CsvHeader,
     meta: TraceMeta,
-    pending: Option<csv::CsvRow>,
-    /// 1-based file line number of the last line read (header = 1).
-    line_no: usize,
-    index: usize,
-    shards_total: usize,
+    first_line: usize,
+) -> Result<Trace> {
+    let text = std::str::from_utf8(bytes).context("csv block is not valid utf-8")?;
+    let mut b = TraceBuilder::new();
+    b.set_meta(meta);
+    for (k, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row = csv::parse_row(h, line, first_line + k)?;
+        csv::apply_row(&mut b, &row);
+    }
+    Ok(b.finish())
 }
 
-impl ShardedReader for CsvStream {
+/// Streaming csv reader over pre-scanned block byte ranges: the driver
+/// side is a seek + read per shard; line parsing happens in the decode
+/// task.
+struct CsvBlocks {
+    file: std::fs::File,
+    len: u64,
+    header: Arc<csv::CsvHeader>,
+    meta: TraceMeta,
+    plan: CsvPlan,
+    next: usize,
+}
+
+impl CsvBlocks {
+    fn open(path: &Path, plan: CsvPlan) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let len = file.metadata()?.len();
+        let mut header_line = String::new();
+        std::io::BufReader::new(&file).read_line(&mut header_line)?;
+        if header_line.is_empty() {
+            bail!("empty csv");
+        }
+        let header = Arc::new(csv::parse_header(&header_line)?);
+        Ok(CsvBlocks { file, len, header, meta: csv::csv_meta(path), plan, next: 0 })
+    }
+}
+
+impl ShardedReader for CsvBlocks {
     fn next_shard(&mut self) -> Result<Option<TraceShard>> {
-        let mut b = TraceBuilder::new();
-        b.set_meta(self.meta.clone());
-        let mut cur: Option<i64> = None;
-        if let Some(row) = self.pending.take() {
-            cur = Some(row.proc);
-            csv::apply_row(&mut b, &row);
+        match self.next_task()? {
+            Some(task) => Ok(Some(task.into_shard()?)),
+            None => Ok(None),
         }
-        for line in self.lines.by_ref() {
-            let line = line?;
-            self.line_no += 1;
-            if line.trim().is_empty() {
-                continue;
-            }
-            let row = csv::parse_row(&self.header, &line, self.line_no)?;
-            match cur {
-                Some(p) if row.proc != p => {
-                    self.pending = Some(row);
-                    let index = self.index;
-                    self.index += 1;
-                    return Ok(Some(TraceShard { index, trace: b.finish() }));
-                }
-                _ => {
-                    cur = Some(row.proc);
-                    csv::apply_row(&mut b, &row);
-                }
-            }
-        }
-        if cur.is_none() {
+    }
+
+    fn next_task(&mut self) -> Result<Option<ShardTask>> {
+        if self.next >= self.plan.blocks.len() {
             return Ok(None);
         }
-        let index = self.index;
-        self.index += 1;
-        Ok(Some(TraceShard { index, trace: b.finish() }))
+        let index = self.next;
+        self.next += 1;
+        let (start, first_line) = self.plan.blocks[index];
+        let end = self.plan.blocks.get(index + 1).map(|b| b.0).unwrap_or(self.len);
+        self.file.seek(SeekFrom::Start(start))?;
+        let mut bytes = vec![0u8; (end - start) as usize];
+        self.file.read_exact(&mut bytes)?;
+        let header = Arc::clone(&self.header);
+        let meta = self.meta.clone();
+        Ok(Some(ShardTask {
+            index,
+            decode: Box::new(move || decode_csv_block(&bytes, &header, meta, first_line)),
+        }))
+    }
+
+    fn scan_span(&mut self) -> Result<Option<(i64, i64)>> {
+        Ok(self.plan.span)
     }
 
     fn shard_count_hint(&self) -> Option<usize> {
-        Some(self.shards_total)
+        Some(self.plan.blocks.len())
     }
 
     fn is_streaming(&self) -> bool {
@@ -379,146 +574,171 @@ impl ShardedReader for CsvStream {
     }
 }
 
-// -- chrome: incremental object scanner -------------------------------------
+// -- chrome: disk-cursor pre-scan + block byte ranges ------------------------
 
-/// Open a Chrome Trace JSON file whose pre-scan verified `runs`
-/// contiguous, ascending pid blocks. Events are scanned one object at a
-/// time — the whole-document JSON tree and full row set (typically the
-/// dominant memory costs of the eager reader, several times the file
-/// size) never exist. The raw file text does stay resident for the
-/// stream's lifetime, so peak memory here is O(file bytes + workers ×
-/// shard + results); a disk-cursor scanner is the ROADMAP follow-up.
-/// (The pre-scan itself lives in [`plan_sharded`], which also lifts
-/// `app` from metadata records; interleaved files get a
-/// [`StreamPlan::Fallback`] instead.)
-fn chrome_stream(
-    path: &Path,
-    text: String,
-    runs: usize,
-    app: String,
-) -> Result<Box<dyn ShardedReader>> {
-    let pos = find_events_array(text.as_bytes())?;
-    Ok(Box::new(ChromeStream {
-        text,
-        pos,
-        meta: TraceMeta {
-            format: "chrome".into(),
-            source: path.display().to_string(),
-            app,
-        },
-        pending: None,
-        event_idx: 0,
-        index: 0,
-        shards_total: runs,
-        done: false,
-    }))
-}
-
-/// Pre-scan: walk every event object, collect the application name from
-/// metadata records, and check that row-producing events keep pids
-/// contiguous + ascending. None requests the eager fallback (including
-/// for malformed files, whose errors the eager reader reports properly).
-fn chrome_prescan(text: &str) -> Option<(usize, String)> {
-    let b = text.as_bytes();
-    let mut pos = find_events_array(b).ok()?;
-    let mut runs = 0usize;
+/// Streamability pre-scan over a sliding disk window: walk every event
+/// object (never holding the whole file), collect the application name
+/// from metadata records, the stream-wide span, and the byte offset +
+/// event index of each pid block's first row event. None requests the
+/// eager fallback (including for malformed files, whose errors the eager
+/// reader reports properly).
+fn chrome_prescan(path: &Path) -> Result<Option<ChromePlan>> {
+    let mut cur = DiskCursor::open(path)?;
+    let Ok(start) = find_events_array_cursor(&mut cur) else {
+        return Ok(None);
+    };
+    let mut pos = start;
+    let mut blocks: Vec<(u64, usize)> = Vec::new();
+    let mut end = start;
     let mut last: Option<i64> = None;
     let mut app = String::new();
+    let mut event_idx = 0usize;
+    let mut span: Option<(i64, i64)> = None;
+    let mut span_ok = true;
     loop {
-        let slice = match next_event(b, &mut pos) {
-            Ok(Some(s)) => s,
-            Ok(None) => break,
-            Err(_) => return None,
+        // everything before the next event is consumed: slide the window
+        cur.compact(pos);
+        let bounds = match cur.next_event_bounds(&mut pos) {
+            Ok(b) => b,
+            Err(_) => return Ok(None),
         };
-        let e = Json::parse(slice).ok()?;
-        if !chrome::is_row_event(&e) {
-            if e.get_str("ph") == Some("M") && e.get_str("name") == Some("process_name") {
-                if let Some(n) = e.get("args").and_then(|a| a.get_str("name")) {
+        let Some((s, e)) = bounds else { break };
+        let idx = event_idx;
+        event_idx += 1;
+        end = e;
+        let Ok(text) = std::str::from_utf8(cur.slice(s, e)) else {
+            return Ok(None);
+        };
+        let Ok(ev) = Json::parse(text) else {
+            return Ok(None);
+        };
+        if !chrome::is_row_event(&ev) {
+            if ev.get_str("ph") == Some("M") && ev.get_str("name") == Some("process_name") {
+                if let Some(n) = ev.get("args").and_then(|a| a.get_str("name")) {
                     app = n.to_string();
                 }
             }
             continue;
         }
-        let pid = chrome::event_pid(&e);
+        if span_ok {
+            let (ts, te) = chrome::row_event_times(&ev);
+            let is_x = ev.get_str("ph").unwrap_or("X") == "X";
+            match (te, is_x) {
+                // X without dur: the decode will error; span forfeited
+                (None, true) => span_ok = false,
+                (te, _) => {
+                    let hi = te.unwrap_or(ts).max(ts);
+                    let lo = te.unwrap_or(ts).min(ts);
+                    span = Some(match span {
+                        Some((a, b)) => (a.min(lo), b.max(hi)),
+                        None => (lo, hi),
+                    });
+                }
+            }
+        }
+        let pid = chrome::event_pid(&ev);
         match last {
             Some(q) if pid == q => {}
             Some(q) if pid > q => {
-                runs += 1;
+                blocks.push((s, idx));
                 last = Some(pid);
             }
-            Some(_) => return None,
+            Some(_) => return Ok(None),
             None => {
-                runs = 1;
+                blocks.push((s, idx));
                 last = Some(pid);
             }
         }
     }
-    Some((runs, app))
+    Ok(Some(ChromePlan { app, blocks, end, span: if span_ok { span } else { None } }))
 }
 
-struct ChromeStream {
-    text: String,
-    pos: usize,
+/// Parse one pre-scanned chrome block (complete `{...}` events separated
+/// by commas/whitespace) into a shard trace. `first_idx` is the index of
+/// the block's first event within the whole events array, so error
+/// messages match the eager reader's exactly. Metadata events inside the
+/// range parse and contribute no rows (their app name was already lifted
+/// by the pre-scan).
+fn decode_chrome_block(bytes: &[u8], meta: TraceMeta, first_idx: usize) -> Result<Trace> {
+    let mut b = TraceBuilder::new();
+    b.set_meta(meta);
+    let mut pos = 0usize;
+    let mut idx = first_idx;
+    loop {
+        skip_ws(bytes, &mut pos);
+        match bytes.get(pos) {
+            None => break,
+            Some(b',') => {
+                pos += 1;
+                continue;
+            }
+            Some(_) => {}
+        }
+        let start = pos;
+        scan_value(bytes, &mut pos)?;
+        let ev = Json::parse(std::str::from_utf8(&bytes[start..pos])?)?;
+        chrome::apply_event(&mut b, &ev, idx)?;
+        idx += 1;
+    }
+    Ok(b.finish())
+}
+
+/// Streaming chrome reader over pre-scanned block byte ranges: the
+/// driver side is a seek + read per shard; JSON parsing happens in the
+/// decode task. Unlike the first-generation scanner, the raw file text
+/// is never resident whole — neither here nor in the pre-scan.
+struct ChromeBlocks {
+    file: std::fs::File,
     meta: TraceMeta,
-    pending: Option<(usize, Json)>,
-    event_idx: usize,
-    index: usize,
-    shards_total: usize,
-    /// Set once the events array closes — the scanner must not run past
-    /// it into trailing document keys (object-form files).
-    done: bool,
+    plan: ChromePlan,
+    next: usize,
 }
 
-impl ShardedReader for ChromeStream {
+impl ChromeBlocks {
+    fn open(path: &Path, plan: ChromePlan) -> Result<Self> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let meta = TraceMeta {
+            format: "chrome".into(),
+            source: path.display().to_string(),
+            app: plan.app.clone(),
+        };
+        Ok(ChromeBlocks { file, meta, plan, next: 0 })
+    }
+}
+
+impl ShardedReader for ChromeBlocks {
     fn next_shard(&mut self) -> Result<Option<TraceShard>> {
-        if self.done && self.pending.is_none() {
+        match self.next_task()? {
+            Some(task) => Ok(Some(task.into_shard()?)),
+            None => Ok(None),
+        }
+    }
+
+    fn next_task(&mut self) -> Result<Option<ShardTask>> {
+        if self.next >= self.plan.blocks.len() {
             return Ok(None);
         }
-        let mut b = TraceBuilder::new();
-        b.set_meta(self.meta.clone());
-        let mut cur: Option<i64> = None;
-        if let Some((i, e)) = self.pending.take() {
-            cur = Some(chrome::event_pid(&e));
-            chrome::apply_event(&mut b, &e, i)?;
-        }
-        while !self.done {
-            let parsed = match next_event(self.text.as_bytes(), &mut self.pos)? {
-                None => None,
-                Some(slice) => Some(Json::parse(slice)?),
-            };
-            let Some(e) = parsed else {
-                self.done = true;
-                break;
-            };
-            let i = self.event_idx;
-            self.event_idx += 1;
-            if !chrome::is_row_event(&e) {
-                continue; // metadata: already folded into meta by the pre-scan
-            }
-            let pid = chrome::event_pid(&e);
-            match cur {
-                Some(p) if pid != p => {
-                    self.pending = Some((i, e));
-                    let index = self.index;
-                    self.index += 1;
-                    return Ok(Some(TraceShard { index, trace: b.finish() }));
-                }
-                _ => {
-                    cur = Some(pid);
-                    chrome::apply_event(&mut b, &e, i)?;
-                }
-            }
-        }
-        if cur.is_none() {
-            return Ok(None);
-        }
-        let index = self.index;
-        self.index += 1;
-        Ok(Some(TraceShard { index, trace: b.finish() }))
+        let index = self.next;
+        self.next += 1;
+        let (start, first_idx) = self.plan.blocks[index];
+        let end = self.plan.blocks.get(index + 1).map(|b| b.0).unwrap_or(self.plan.end);
+        self.file.seek(SeekFrom::Start(start))?;
+        let mut bytes = vec![0u8; (end - start) as usize];
+        self.file.read_exact(&mut bytes)?;
+        let meta = self.meta.clone();
+        Ok(Some(ShardTask {
+            index,
+            decode: Box::new(move || decode_chrome_block(&bytes, meta, first_idx)),
+        }))
+    }
+
+    fn scan_span(&mut self) -> Result<Option<(i64, i64)>> {
+        Ok(self.plan.span)
     }
 
     fn shard_count_hint(&self) -> Option<usize> {
-        Some(self.shards_total)
+        Some(self.plan.blocks.len())
     }
 
     fn is_streaming(&self) -> bool {
@@ -526,12 +746,21 @@ impl ShardedReader for ChromeStream {
     }
 }
 
-// -- minimal incremental JSON scanning --------------------------------------
+// -- incremental JSON scanning ----------------------------------------------
 //
 // Just enough lexing to slice one `{...}` event out of the (possibly
 // huge) events array; each slice then goes through the full
 // `Json::parse`, so event *interpretation* is byte-for-byte the eager
-// reader's.
+// reader's. Every scanner is written against a possibly-incomplete
+// buffer: `Scan::NeedMore` means the buffer ended before the item did
+// and more file bytes must be read (only reported while the cursor has
+// not reached EOF — at EOF the same condition is a hard error, matching
+// the whole-buffer scanners of the first generation).
+
+enum Scan<T> {
+    Done(T),
+    NeedMore,
+}
 
 fn skip_ws(b: &[u8], pos: &mut usize) {
     while let Some(c) = b.get(*pos) {
@@ -543,41 +772,51 @@ fn skip_ws(b: &[u8], pos: &mut usize) {
     }
 }
 
-fn scan_string(b: &[u8], pos: &mut usize) -> Result<()> {
+fn scan_string2(b: &[u8], pos: &mut usize, eof: bool) -> Result<Scan<()>> {
     *pos += 1; // opening quote
     while let Some(&c) = b.get(*pos) {
         match c {
             b'\\' => *pos += 2,
             b'"' => {
                 *pos += 1;
-                return Ok(());
+                return Ok(Scan::Done(()));
             }
             _ => *pos += 1,
         }
     }
-    bail!("chrome trace: unterminated string")
+    if eof {
+        bail!("chrome trace: unterminated string")
+    }
+    Ok(Scan::NeedMore)
 }
 
 /// Advance past one JSON value of any kind (balanced braces / brackets,
 /// string-aware).
-fn scan_value(b: &[u8], pos: &mut usize) -> Result<()> {
+fn scan_value2(b: &[u8], pos: &mut usize, eof: bool) -> Result<Scan<()>> {
     match b.get(*pos) {
-        Some(b'"') => scan_string(b, pos),
+        Some(b'"') => scan_string2(b, pos, eof),
         Some(b'{') | Some(b'[') => {
             let mut depth = 0usize;
             loop {
                 match b.get(*pos) {
-                    None => bail!("chrome trace: unbalanced brackets"),
+                    None => {
+                        if eof {
+                            bail!("chrome trace: unbalanced brackets")
+                        }
+                        return Ok(Scan::NeedMore);
+                    }
                     Some(b'"') => {
-                        scan_string(b, pos)?;
-                        continue;
+                        match scan_string2(b, pos, eof)? {
+                            Scan::Done(()) => continue,
+                            Scan::NeedMore => return Ok(Scan::NeedMore),
+                        }
                     }
                     Some(b'{') | Some(b'[') => depth += 1,
                     Some(b'}') | Some(b']') => {
                         depth -= 1;
                         if depth == 0 {
                             *pos += 1;
-                            return Ok(());
+                            return Ok(Scan::Done(()));
                         }
                     }
                     Some(_) => {}
@@ -586,62 +825,112 @@ fn scan_value(b: &[u8], pos: &mut usize) -> Result<()> {
             }
         }
         Some(_) => {
+            // bare literal: ends at a delimiter; at a buffer boundary we
+            // cannot know whether it continues, so wait for more bytes
             while let Some(&c) = b.get(*pos) {
                 if c == b',' || c == b']' || c == b'}' || c.is_ascii_whitespace() {
-                    break;
+                    return Ok(Scan::Done(()));
                 }
                 *pos += 1;
             }
-            Ok(())
+            if eof {
+                Ok(Scan::Done(()))
+            } else {
+                Ok(Scan::NeedMore)
+            }
         }
-        None => bail!("chrome trace: unexpected end of input"),
+        None => {
+            if eof {
+                bail!("chrome trace: unexpected end of input")
+            }
+            Ok(Scan::NeedMore)
+        }
+    }
+}
+
+/// Whole-buffer wrapper (buffer known complete).
+fn scan_value(b: &[u8], pos: &mut usize) -> Result<()> {
+    match scan_value2(b, pos, true)? {
+        Scan::Done(()) => Ok(()),
+        Scan::NeedMore => bail!("chrome trace: unexpected end of input"),
     }
 }
 
 /// Position just past the `[` of the events array: the document root for
 /// array-form files, the `traceEvents` value for object-form files.
-fn find_events_array(b: &[u8]) -> Result<usize> {
-    let mut pos = 0usize;
-    skip_ws(b, &mut pos);
-    match b.get(pos) {
-        Some(b'[') => Ok(pos + 1),
+/// (The pre-scan itself uses the cursor-native
+/// [`find_events_array_cursor`], which skips huge pre-`traceEvents`
+/// values in O(chunk) memory; this whole-buffer variant remains the
+/// reference the scanner unit tests exercise.)
+#[cfg(test)]
+fn find_events_array2(b: &[u8], pos: &mut usize, eof: bool) -> Result<Scan<()>> {
+    skip_ws(b, pos);
+    match b.get(*pos) {
+        Some(b'[') => {
+            *pos += 1;
+            Ok(Scan::Done(()))
+        }
         Some(b'{') => {
-            pos += 1;
+            *pos += 1;
             loop {
-                skip_ws(b, &mut pos);
-                match b.get(pos) {
+                skip_ws(b, pos);
+                match b.get(*pos) {
                     Some(b'"') => {}
+                    None if !eof => return Ok(Scan::NeedMore),
                     Some(b'}') | None => bail!("object form requires 'traceEvents' array"),
                     Some(b',') => {
-                        pos += 1;
+                        *pos += 1;
                         continue;
                     }
                     Some(_) => bail!("chrome trace: expected object key"),
                 }
-                let kstart = pos;
-                scan_string(b, &mut pos)?;
-                let key = &b[kstart + 1..pos - 1];
-                skip_ws(b, &mut pos);
-                if b.get(pos) != Some(&b':') {
-                    bail!("chrome trace: expected ':' after key");
+                let kstart = *pos;
+                match scan_string2(b, pos, eof)? {
+                    Scan::Done(()) => {}
+                    Scan::NeedMore => return Ok(Scan::NeedMore),
                 }
-                pos += 1;
-                skip_ws(b, &mut pos);
-                if key == b"traceEvents" {
-                    if b.get(pos) != Some(&b'[') {
-                        bail!("object form requires 'traceEvents' array");
-                    }
-                    return Ok(pos + 1);
+                let is_events = &b[kstart + 1..*pos - 1] == b"traceEvents";
+                skip_ws(b, pos);
+                match b.get(*pos) {
+                    Some(b':') => *pos += 1,
+                    None if !eof => return Ok(Scan::NeedMore),
+                    _ => bail!("chrome trace: expected ':' after key"),
                 }
-                scan_value(b, &mut pos)?;
+                skip_ws(b, pos);
+                if is_events {
+                    return match b.get(*pos) {
+                        Some(b'[') => {
+                            *pos += 1;
+                            Ok(Scan::Done(()))
+                        }
+                        None if !eof => Ok(Scan::NeedMore),
+                        _ => bail!("object form requires 'traceEvents' array"),
+                    };
+                }
+                match scan_value2(b, pos, eof)? {
+                    Scan::Done(()) => {}
+                    Scan::NeedMore => return Ok(Scan::NeedMore),
+                }
             }
         }
+        None if !eof => Ok(Scan::NeedMore),
         _ => bail!("chrome trace must be an array or object"),
     }
 }
 
-/// The next object slice in the events array, or None at `]`.
-fn next_event<'a>(b: &'a [u8], pos: &mut usize) -> Result<Option<&'a str>> {
+/// Whole-buffer wrapper (kept for the scanner unit tests).
+#[cfg(test)]
+fn find_events_array(b: &[u8]) -> Result<usize> {
+    let mut pos = 0usize;
+    match find_events_array2(b, &mut pos, true)? {
+        Scan::Done(()) => Ok(pos),
+        Scan::NeedMore => bail!("chrome trace: truncated document"),
+    }
+}
+
+/// The next object's (start, end) slice bounds in the events array, or
+/// None at `]`.
+fn next_event3(b: &[u8], pos: &mut usize, eof: bool) -> Result<Scan<Option<(usize, usize)>>> {
     skip_ws(b, pos);
     if b.get(*pos) == Some(&b',') {
         *pos += 1;
@@ -650,14 +939,248 @@ fn next_event<'a>(b: &'a [u8], pos: &mut usize) -> Result<Option<&'a str>> {
     match b.get(*pos) {
         Some(b']') => {
             *pos += 1;
-            Ok(None)
+            Ok(Scan::Done(None))
         }
         Some(_) => {
             let start = *pos;
-            scan_value(b, pos)?;
-            Ok(Some(std::str::from_utf8(&b[start..*pos])?))
+            match scan_value2(b, pos, eof)? {
+                Scan::Done(()) => Ok(Scan::Done(Some((start, *pos)))),
+                Scan::NeedMore => Ok(Scan::NeedMore),
+            }
         }
-        None => bail!("chrome trace: unterminated events array"),
+        None => {
+            if eof {
+                bail!("chrome trace: unterminated events array")
+            }
+            Ok(Scan::NeedMore)
+        }
+    }
+}
+
+/// Whole-buffer wrapper (kept for the scanner unit tests).
+#[cfg(test)]
+fn next_event<'a>(b: &'a [u8], pos: &mut usize) -> Result<Option<&'a str>> {
+    match next_event3(b, pos, true)? {
+        Scan::Done(None) => Ok(None),
+        Scan::Done(Some((s, e))) => Ok(Some(std::str::from_utf8(&b[s..e])?)),
+        Scan::NeedMore => bail!("chrome trace: unterminated events array"),
+    }
+}
+
+// -- the sliding disk window the chrome pre-scan runs over -------------------
+
+const CURSOR_CHUNK: usize = 64 * 1024;
+
+/// A sliding window of file bytes: the pre-scan reads forward chunk by
+/// chunk and compacts consumed prefixes away, so peak memory is one
+/// window (≥ the largest single event) instead of the whole file.
+struct DiskCursor {
+    file: std::fs::File,
+    buf: Vec<u8>,
+    /// Absolute file offset of `buf[0]`.
+    base: u64,
+    eof: bool,
+}
+
+impl DiskCursor {
+    fn open(path: &Path) -> Result<DiskCursor> {
+        let file = std::fs::File::open(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Ok(DiskCursor { file, buf: Vec::new(), base: 0, eof: false })
+    }
+
+    /// Append one more chunk; sets `eof` when the file is exhausted.
+    fn fill(&mut self) -> Result<()> {
+        let old = self.buf.len();
+        self.buf.resize(old + CURSOR_CHUNK, 0);
+        let n = self.file.read(&mut self.buf[old..])?;
+        self.buf.truncate(old + n);
+        if n == 0 {
+            self.eof = true;
+        }
+        Ok(())
+    }
+
+    fn rel(&self, abs: u64) -> usize {
+        (abs - self.base) as usize
+    }
+
+    fn slice(&self, a: u64, b: u64) -> &[u8] {
+        &self.buf[self.rel(a)..self.rel(b)]
+    }
+
+    /// Drop consumed bytes before `abs`, keeping the window bounded.
+    fn compact(&mut self, abs: u64) {
+        let cut = self.rel(abs);
+        if cut > 0 {
+            self.buf.drain(..cut);
+            self.base = abs;
+        }
+    }
+
+    /// Run an incremental scanner from absolute offset `start`, reading
+    /// more bytes whenever it reports `NeedMore` (retrying from `start`
+    /// — items are small, so the rescan is cheap). Returns the absolute
+    /// end position and the scanner's output.
+    fn scan<T>(
+        &mut self,
+        start: u64,
+        f: impl Fn(&[u8], &mut usize, bool) -> Result<Scan<T>>,
+    ) -> Result<(u64, T)> {
+        loop {
+            let mut pos = self.rel(start);
+            match f(&self.buf, &mut pos, self.eof)? {
+                Scan::Done(v) => return Ok((self.base + pos as u64, v)),
+                Scan::NeedMore => self.fill()?,
+            }
+        }
+    }
+
+    /// The next event's absolute byte bounds, or None at the array's `]`.
+    /// `pos` advances past the event (and any separator).
+    fn next_event_bounds(&mut self, pos: &mut u64) -> Result<Option<(u64, u64)>> {
+        let (end, bounds) = self.scan(*pos, next_event3)?;
+        *pos = end;
+        Ok(bounds.map(|(s, e)| (self.base + s as u64, self.base + e as u64)))
+    }
+
+    /// The byte at absolute offset `abs`, filling as needed; None at EOF.
+    fn byte_at(&mut self, abs: u64) -> Result<Option<u8>> {
+        while !self.eof && self.rel(abs) >= self.buf.len() {
+            self.fill()?;
+        }
+        Ok(self.buf.get(self.rel(abs)).copied())
+    }
+
+    /// Advance `pos` past any whitespace.
+    fn skip_ws_at(&mut self, pos: &mut u64) -> Result<()> {
+        while let Some(c) = self.byte_at(*pos)? {
+            if c.is_ascii_whitespace() {
+                *pos += 1;
+            } else {
+                break;
+            }
+        }
+        Ok(())
+    }
+
+    /// Skip one JSON value byte-by-byte with persistent state across
+    /// refills, compacting consumed bytes as it goes — so arbitrarily
+    /// large values (a 500 MB `stackFrames` before `traceEvents`) are
+    /// skipped in O(chunk) memory with no rescans.
+    fn skip_value_streaming(&mut self, pos: &mut u64) -> Result<()> {
+        let compact_check = |cur: &mut DiskCursor, p: u64| {
+            if cur.rel(p) >= 2 * CURSOR_CHUNK {
+                cur.compact(p);
+            }
+        };
+        match self.byte_at(*pos)? {
+            None => bail!("chrome trace: unexpected end of input"),
+            Some(b'"') => {
+                *pos += 1;
+                loop {
+                    compact_check(self, *pos);
+                    match self.byte_at(*pos)? {
+                        None => bail!("chrome trace: unterminated string"),
+                        Some(b'\\') => *pos += 2,
+                        Some(b'"') => {
+                            *pos += 1;
+                            return Ok(());
+                        }
+                        Some(_) => *pos += 1,
+                    }
+                }
+            }
+            Some(b'{') | Some(b'[') => {
+                let mut depth = 0usize;
+                let mut in_string = false;
+                let mut escaped = false;
+                loop {
+                    compact_check(self, *pos);
+                    let Some(c) = self.byte_at(*pos)? else {
+                        bail!("chrome trace: unbalanced brackets");
+                    };
+                    *pos += 1;
+                    if in_string {
+                        if escaped {
+                            escaped = false;
+                        } else if c == b'\\' {
+                            escaped = true;
+                        } else if c == b'"' {
+                            in_string = false;
+                        }
+                        continue;
+                    }
+                    match c {
+                        b'"' => in_string = true,
+                        b'{' | b'[' => depth += 1,
+                        b'}' | b']' => {
+                            depth -= 1;
+                            if depth == 0 {
+                                return Ok(());
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            Some(_) => {
+                while let Some(c) = self.byte_at(*pos)? {
+                    if c == b',' || c == b']' || c == b'}' || c.is_ascii_whitespace() {
+                        break;
+                    }
+                    *pos += 1;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+/// Cursor-native events-array locator: like `find_events_array2` but
+/// values before the `traceEvents` key are skipped with
+/// [`DiskCursor::skip_value_streaming`], so huge prefixes (metadata
+/// blobs, stack-frame tables) never sit in the window whole and are
+/// never rescanned. Returns the absolute offset just past the `[`.
+fn find_events_array_cursor(cur: &mut DiskCursor) -> Result<u64> {
+    let mut pos = 0u64;
+    cur.skip_ws_at(&mut pos)?;
+    match cur.byte_at(pos)? {
+        Some(b'[') => Ok(pos + 1),
+        Some(b'{') => {
+            pos += 1;
+            loop {
+                cur.compact(pos);
+                cur.skip_ws_at(&mut pos)?;
+                match cur.byte_at(pos)? {
+                    Some(b'"') => {}
+                    Some(b'}') | None => bail!("object form requires 'traceEvents' array"),
+                    Some(b',') => {
+                        pos += 1;
+                        continue;
+                    }
+                    Some(_) => bail!("chrome trace: expected object key"),
+                }
+                // keys are small: scan them with the windowed scanner
+                let (end, ()) = cur.scan(pos, scan_string2)?;
+                let is_events = cur.slice(pos + 1, end - 1) == b"traceEvents";
+                pos = end;
+                cur.skip_ws_at(&mut pos)?;
+                if cur.byte_at(pos)? != Some(b':') {
+                    bail!("chrome trace: expected ':' after key");
+                }
+                pos += 1;
+                cur.skip_ws_at(&mut pos)?;
+                if is_events {
+                    if cur.byte_at(pos)? != Some(b'[') {
+                        bail!("object form requires 'traceEvents' array");
+                    }
+                    return Ok(pos + 1);
+                }
+                cur.skip_value_streaming(&mut pos)?;
+            }
+        }
+        _ => bail!("chrome trace must be an array or object"),
     }
 }
 
@@ -699,6 +1222,11 @@ mod tests {
         if let Some(hint) = r.shard_count_hint() {
             assert!(hint >= 1);
         }
+        // the span pre-pass, when available, must agree with the eager
+        // trace's range exactly
+        if let Some(span) = r.scan_span().unwrap() {
+            assert_eq!(span, eager.time_range().unwrap(), "{}", path.display());
+        }
         let (ts, pr, names, shards) = drain(r.as_mut());
         assert_eq!(ts, eager.timestamps().unwrap(), "{}", path.display());
         assert_eq!(pr, eager.processes().unwrap(), "{}", path.display());
@@ -707,6 +1235,20 @@ mod tests {
             assert_eq!(names[i], dict.resolve(c).unwrap_or(""), "row {i}");
         }
         assert_eq!(shards, eager.num_processes().unwrap());
+
+        // the task protocol must reproduce the same shards when decoded
+        // away from the reader (what the pipelined driver does)
+        let mut r = open_sharded(path).unwrap();
+        let mut tasks = Vec::new();
+        while let Some(t) = r.next_task().unwrap() {
+            tasks.push(t);
+        }
+        let mut ts2 = Vec::new();
+        for (k, t) in tasks.into_iter().enumerate() {
+            assert_eq!(t.index, k);
+            ts2.extend_from_slice(t.decode().unwrap().timestamps().unwrap());
+        }
+        assert_eq!(ts2, ts, "{}: task decode differs", path.display());
     }
 
     #[test]
@@ -715,9 +1257,10 @@ mod tests {
         let dir = tmp("otf2_rows");
         let _ = std::fs::remove_dir_all(&dir);
         otf2::write(&t, &dir).unwrap();
-        let r = open_sharded(&dir).unwrap();
+        let mut r = open_sharded(&dir).unwrap();
         assert!(r.is_streaming());
         assert_eq!(r.shard_count_hint(), Some(6));
+        assert_eq!(r.scan_span().unwrap(), Some(t.time_range().unwrap()));
         assert_rows_match(&dir);
     }
 
@@ -726,8 +1269,9 @@ mod tests {
         let t = gen::generate("gol", &GenConfig::new(4, 3), 1).unwrap();
         let p = tmp("rows.csv");
         csv::write(&t, &p).unwrap();
-        let r = open_sharded(&p).unwrap();
+        let mut r = open_sharded(&p).unwrap();
         assert!(r.is_streaming());
+        assert_eq!(r.scan_span().unwrap(), Some(t.time_range().unwrap()));
         assert_rows_match(&p);
     }
 
@@ -736,8 +1280,9 @@ mod tests {
         let t = gen::generate("tortuga", &GenConfig::new(4, 3), 1).unwrap();
         let p = tmp("rows.json");
         chrome::write(&t, &p).unwrap();
-        let r = open_sharded(&p).unwrap();
+        let mut r = open_sharded(&p).unwrap();
         assert!(r.is_streaming());
+        assert_eq!(r.scan_span().unwrap(), Some(t.time_range().unwrap()));
         assert_rows_match(&p);
     }
 
@@ -753,8 +1298,10 @@ mod tests {
                    9, Leave, main, 0\n";
         let p = tmp("interleaved.csv");
         std::fs::write(&p, src).unwrap();
-        let r = open_sharded(&p).unwrap();
+        let mut r = open_sharded(&p).unwrap();
         assert!(!r.is_streaming());
+        // split-after-load still knows the span (trace is resident)
+        assert_eq!(r.scan_span().unwrap(), Some((0, 9)));
         assert_rows_match(&p);
     }
 
@@ -784,6 +1331,8 @@ mod tests {
         std::fs::write(&p, src).unwrap();
         let mut r = open_sharded(&p).unwrap();
         assert!(r.is_streaming());
+        // span covers the X event's end (ts 0 + dur 10µs = 10_000 ns)
+        assert_eq!(r.scan_span().unwrap(), Some((0, 50_000)));
         let first = r.next_shard().unwrap().unwrap();
         assert_eq!(first.trace.meta.app, "axonn");
         assert_eq!(first.trace.processes().unwrap(), &[0, 0]);
@@ -797,23 +1346,31 @@ mod tests {
         let p = tmp("empty.csv");
         std::fs::write(&p, "Timestamp (ns), Event Type, Name, Process\n").unwrap();
         let mut r = open_sharded(&p).unwrap();
+        assert!(r.scan_span().unwrap().is_none());
         assert!(r.next_shard().unwrap().is_none());
 
         let p = tmp("empty.json");
         std::fs::write(&p, "[]").unwrap();
         let mut r = open_sharded(&p).unwrap();
+        assert!(r.scan_span().unwrap().is_none());
         assert!(r.next_shard().unwrap().is_none());
     }
 
     #[test]
     fn plan_matches_open_and_is_reusable() {
-        // csv: the plan carries the run count; re-opening from the cached
+        // csv: the plan carries block offsets; re-opening from the cached
         // plan yields the same shards as the pre-scanning open
         let t = gen::generate("gol", &GenConfig::new(3, 2), 1).unwrap();
         let p = tmp("plan.csv");
         csv::write(&t, &p).unwrap();
         let plan = plan_sharded(&p).unwrap();
-        assert_eq!(plan, StreamPlan::Csv { runs: 3 });
+        match &plan {
+            StreamPlan::Csv(cp) => {
+                assert_eq!(cp.runs(), 3);
+                assert_eq!(cp.span, Some(t.time_range().unwrap()));
+            }
+            other => panic!("expected csv plan, got {other:?}"),
+        }
         assert!(plan.is_streaming());
         for _ in 0..2 {
             let mut r = open_planned(&p, &plan).unwrap();
@@ -828,7 +1385,7 @@ mod tests {
         let p = tmp("plan.json");
         chrome::write(&t, &p).unwrap();
         match plan_sharded(&p).unwrap() {
-            StreamPlan::Chrome { runs, .. } => assert_eq!(runs, 3),
+            StreamPlan::Chrome(cp) => assert_eq!(cp.runs(), 3),
             other => panic!("expected chrome plan, got {other:?}"),
         }
 
@@ -860,11 +1417,87 @@ mod tests {
     }
 
     #[test]
+    fn pre_extrema_otf2_archives_have_no_span_but_still_stream() {
+        // the checked-in fixture predates the defs.bin extrema section:
+        // scan_span must degrade to None (legacy buffered binning), not
+        // error, and shards must still decode
+        let fix = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/tiny_otf2");
+        let mut r = open_sharded(&fix).unwrap();
+        assert!(r.is_streaming());
+        assert_eq!(r.scan_span().unwrap(), None);
+        assert_rows_match(&fix);
+    }
+
+    #[test]
+    fn serial_decode_adapter_delegates_and_decodes_inline() {
+        let t = gen::generate("gol", &GenConfig::new(3, 2), 1).unwrap();
+        let p = tmp("serial.csv");
+        csv::write(&t, &p).unwrap();
+        let mut inner = open_sharded(&p).unwrap();
+        let mut r = SerialDecode::new(inner.as_mut());
+        assert!(r.is_streaming());
+        assert_eq!(r.shard_count_hint(), Some(3));
+        assert_eq!(r.scan_span().unwrap(), Some(t.time_range().unwrap()));
+        let (ts, _, _, shards) = drain(&mut r);
+        assert_eq!(shards, 3);
+        assert_eq!(ts, t.timestamps().unwrap());
+    }
+
+    #[test]
+    fn span_prescan_survives_bad_timestamps_as_none() {
+        // an unparsable timestamp forfeits only the span pre-pass; the
+        // plan still streams and the decode reports the real error
+        let src = "Timestamp (ns), Event Type, Name, Process\n\
+                   0, Enter, main, 0\n\
+                   oops, Leave, main, 0\n";
+        let p = tmp("badts.csv");
+        std::fs::write(&p, src).unwrap();
+        let plan = plan_sharded(&p).unwrap();
+        match &plan {
+            StreamPlan::Csv(cp) => {
+                assert_eq!(cp.runs(), 1);
+                assert_eq!(cp.span, None);
+            }
+            other => panic!("expected csv plan, got {other:?}"),
+        }
+        let mut r = open_planned(&p, &plan).unwrap();
+        let err = r.next_shard().unwrap_err();
+        assert!(err.to_string().contains("bad timestamp"), "{err}");
+    }
+
+    #[test]
     fn scanner_handles_strings_with_brackets() {
         let b = br#"[{"name":"f(a, b]","ph":"B","ts":0,"pid":0}]"#;
         let mut pos = find_events_array(b).unwrap();
         let first = next_event(b, &mut pos).unwrap().unwrap();
         assert!(first.contains("f(a, b]"));
         assert!(next_event(b, &mut pos).unwrap().is_none());
+    }
+
+    #[test]
+    fn disk_cursor_scans_across_chunk_boundaries() {
+        // force events to straddle fill boundaries by padding with
+        // whitespace; the cursor pre-scan must slice them identically
+        let mut src = String::from("[");
+        for i in 0..40 {
+            if i > 0 {
+                src.push(',');
+            }
+            src.push_str(&" ".repeat(4000));
+            src.push_str(&format!(
+                r#"{{"name":"f{i}","ph":"X","ts":{},"dur":5,"pid":{}}}"#,
+                i * 10,
+                i / 10
+            ));
+        }
+        src.push(']');
+        let p = tmp("chunked.json");
+        std::fs::write(&p, &src).unwrap();
+        let plan = chrome_prescan(&p).unwrap().expect("streamable");
+        assert_eq!(plan.runs(), 4);
+        assert_eq!(plan.span, Some((0, 390_000 + 5_000)));
+        let eager = read_auto(&p).unwrap();
+        assert_rows_match(&p);
+        assert_eq!(eager.num_processes().unwrap(), 4);
     }
 }

@@ -14,7 +14,7 @@ use pipit::analysis::{self, CommUnit, Metric, PatternConfig};
 use pipit::df::Expr;
 use pipit::exec;
 use pipit::gen::{self, GenConfig};
-use pipit::readers::streaming::open_sharded;
+use pipit::readers::streaming::{open_sharded, SerialDecode};
 use pipit::trace::{Trace, TraceBuilder};
 use pipit::util::rng::Rng;
 use std::path::{Path, PathBuf};
@@ -603,6 +603,29 @@ fn assert_streaming_matches_eager(path: &Path, ctx: &str) {
 
         let (cct, _) = exec::stream::create_cct(open().as_mut(), th).unwrap();
         assert_eq!(cct, seq_cct, "{ctx} cct @{th}");
+
+        // the decode pipeline must not change a single bit: the
+        // serial-decode wrapper (decode on the driver thread, the
+        // pre-pipeline behavior) must agree with both the pipelined
+        // stream above and the eager sequential results
+        let mut inner = open();
+        let mut sr = SerialDecode::new(inner.as_mut());
+        let (fp_s, _) = exec::stream::flat_profile(&mut sr, Metric::ExcTime, th).unwrap();
+        assert_eq!(fp_s, seq_fp, "{ctx} serial-decode flat_profile @{th}");
+
+        let mut inner = open();
+        let mut sr = SerialDecode::new(inner.as_mut());
+        let (tp_s, _) = exec::stream::time_profile(&mut sr, 32, Some(5), th).unwrap();
+        assert_time_profiles_equal(
+            &seq_tp,
+            &tp_s,
+            &format!("{ctx} serial-decode time_profile @{th}"),
+        );
+
+        let mut inner = open();
+        let mut sr = SerialDecode::new(inner.as_mut());
+        let (cot_s, _) = exec::stream::comm_over_time(&mut sr, 24, th).unwrap();
+        assert_eq!(cot_s, seq_cot, "{ctx} serial-decode comm_over_time @{th}");
     }
 }
 
@@ -652,6 +675,125 @@ fn streaming_fallback_split_after_load_matches_eager() {
     let r = open_sharded(&p).unwrap();
     assert!(!r.is_streaming(), "interleaved csv must use the fallback");
     assert_streaming_matches_eager(&p, "fallback");
+}
+
+/// Pipelined decode vs serial decode vs eager, on every generator at
+/// 1/2/4/8 threads: moving shard decode onto the worker pool must not
+/// change a single bit of any result, regardless of completion order.
+#[test]
+fn pipelined_decode_matches_serial_and_eager_on_all_generators() {
+    let dir = stream_dir();
+    for (app, t) in traces() {
+        let p = dir.join(format!("pd_{app}.csv"));
+        pipit::readers::csv::write(&t, &p).unwrap();
+        let eager = pipit::readers::read_auto(&p).unwrap();
+        let seq_fp = analysis::flat_profile(&mut eager.clone(), Metric::ExcTime).unwrap();
+        let seq_tp = analysis::time_profile(&mut eager.clone(), 32, Some(6)).unwrap();
+        let seq_cot = analysis::comm_over_time(&eager, 16).unwrap();
+        for &th in MSG_THREADS {
+            let mut rp = open_sharded(&p).unwrap();
+            let (fp, _) = exec::stream::flat_profile(rp.as_mut(), Metric::ExcTime, th).unwrap();
+            assert_eq!(fp, seq_fp, "{app} pipelined flat_profile @{th}");
+            let mut rs = open_sharded(&p).unwrap();
+            let mut rs = SerialDecode::new(rs.as_mut());
+            let (fp, _) = exec::stream::flat_profile(&mut rs, Metric::ExcTime, th).unwrap();
+            assert_eq!(fp, seq_fp, "{app} serial-decode flat_profile @{th}");
+
+            let mut rp = open_sharded(&p).unwrap();
+            let (tp, _) = exec::stream::time_profile(rp.as_mut(), 32, Some(6), th).unwrap();
+            assert_time_profiles_equal(&seq_tp, &tp, &format!("{app} pipelined tp @{th}"));
+
+            let mut rp = open_sharded(&p).unwrap();
+            let (cot, _) = exec::stream::comm_over_time(rp.as_mut(), 16, th).unwrap();
+            assert_eq!(cot, seq_cot, "{app} pipelined comm_over_time @{th}");
+        }
+    }
+}
+
+/// Golden fixtures through the pipelined and serial-decode drivers: real
+/// format decoding must produce identical profiles on both.
+#[test]
+fn golden_fixtures_pipelined_decode_parity() {
+    let base = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    for fix in ["tiny.csv", "tiny_chrome.json", "tiny_otf2"] {
+        let p = base.join(fix);
+        let eager = pipit::readers::read_auto(&p).unwrap();
+        let seq_fp = analysis::flat_profile(&mut eager.clone(), Metric::ExcTime).unwrap();
+        let seq_tp = analysis::time_profile(&mut eager.clone(), 16, Some(4)).unwrap();
+        for &th in MSG_THREADS {
+            let mut rp = open_sharded(&p).unwrap();
+            let (fp, _) = exec::stream::flat_profile(rp.as_mut(), Metric::ExcTime, th).unwrap();
+            assert_eq!(fp, seq_fp, "{fix} pipelined @{th}");
+            let mut rs = open_sharded(&p).unwrap();
+            let mut rs = SerialDecode::new(rs.as_mut());
+            let (fp, _) = exec::stream::flat_profile(&mut rs, Metric::ExcTime, th).unwrap();
+            assert_eq!(fp, seq_fp, "{fix} serial-decode @{th}");
+
+            let mut rp = open_sharded(&p).unwrap();
+            let (tp, _) = exec::stream::time_profile(rp.as_mut(), 16, Some(4), th).unwrap();
+            assert_time_profiles_equal(&seq_tp, &tp, &format!("{fix} tp @{th}"));
+        }
+    }
+}
+
+/// Two-pass span protocol: the span-determining events live in the LAST
+/// shard (the highest process holds both the global minimum and maximum
+/// timestamp), so any driver that derived bins before the final shard
+/// would use the wrong span. The span pre-pass must agree with the eager
+/// trace's range on every format, and the binned results must stay
+/// bit-identical.
+#[test]
+fn two_pass_span_event_in_last_shard() {
+    let mut b = TraceBuilder::new();
+    for p in 0..4i64 {
+        // middle processes live inside [100, 900]
+        b.enter(p, 0, 100 + p, "main");
+        b.enter(p, 0, 200, "work");
+        b.leave(p, 0, 700, "work");
+        b.send(p, 0, 750, (p + 1) % 5, 128 * (p + 1), 0);
+        b.leave(p, 0, 900 - p, "main");
+    }
+    // the last process block stretches the global span on both ends
+    b.enter(4, 0, 5, "main");
+    b.send(4, 0, 10, 0, 4096, 0);
+    b.enter(4, 0, 300, "work");
+    b.leave(4, 0, 12_000, "work");
+    b.leave(4, 0, 50_000, "main");
+    let t = b.finish();
+
+    let dir = stream_dir();
+    let csv_p = dir.join("lastspan.csv");
+    pipit::readers::csv::write(&t, &csv_p).unwrap();
+    let json_p = dir.join("lastspan.json");
+    pipit::readers::chrome::write(&t, &json_p).unwrap();
+    let otf2_p = dir.join("lastspan_otf2");
+    let _ = std::fs::remove_dir_all(&otf2_p);
+    pipit::readers::otf2::write(&t, &otf2_p).unwrap();
+
+    for p in [&csv_p, &json_p, &otf2_p] {
+        let eager = pipit::readers::read_auto(p).unwrap();
+        let mut r = open_sharded(p).unwrap();
+        assert_eq!(
+            r.scan_span().unwrap(),
+            Some(eager.time_range().unwrap()),
+            "{}: span pre-pass must see the last shard's extrema",
+            p.display()
+        );
+        let seq_tp = analysis::time_profile(&mut eager.clone(), 24, Some(1)).unwrap();
+        let seq_cot = analysis::comm_over_time(&eager, 12).unwrap();
+        for &th in MSG_THREADS {
+            let mut r = open_sharded(p).unwrap();
+            let (tp, _) = exec::stream::time_profile(r.as_mut(), 24, Some(1), th).unwrap();
+            assert_time_profiles_equal(
+                &seq_tp,
+                &tp,
+                &format!("{} two-pass tp @{th}", p.display()),
+            );
+            let mut r = open_sharded(p).unwrap();
+            let (cot, _) = exec::stream::comm_over_time(r.as_mut(), 12, th).unwrap();
+            assert_eq!(cot, seq_cot, "{} two-pass cot @{th}", p.display());
+        }
+    }
 }
 
 /// The memory-bound instrumentation hook: shard count vs rows proves the
