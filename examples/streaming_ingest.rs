@@ -52,20 +52,46 @@ fn main() -> anyhow::Result<()> {
         stats.decode_ms, stats.fold_ms, stats.peak_in_flight_shards
     );
 
-    // Two-pass span protocol: the otf2 defs carry per-rank timestamp
-    // extrema, so time_profile knows its bins before any shard decodes
-    // and folds into O(functions x bins) state — never O(segments).
+    // The census pre-scan: otf2 defs carry per-rank extrema AND a
+    // TraceCensus (function ranking, channel endpoint counts, message
+    // extrema), so time_profile knows its bins AND its top-k series
+    // before any shard decodes — it folds into O(top-k x bins) state,
+    // never O(all-functions x bins), never O(segments).
     let mut reader = open_sharded(&archive)?;
+    if let Some(census) = reader.census() {
+        println!(
+            "\npre-scan census: {} blocks, {} functions, {} channels",
+            census.blocks.len(),
+            census.funcs.as_ref().map_or(0, |f| f.names.len()),
+            census.channels.as_ref().map_or(0, |c| c.len()),
+        );
+    }
     let (tp, stats) = stream::time_profile(reader.as_mut(), 64, Some(8), 0)?;
     println!(
-        "\ntwo-pass time_profile: {} bins x {} series, peak partial state {} B \
-         (vs {} rows streamed)",
+        "census-backed time_profile: {} bins x {} series, peak partial state {} B \
+         (vs {} rows streamed), census {}",
         tp.num_bins(),
         tp.func_names.len(),
         stats.peak_partial_bytes,
-        stats.total_rows
+        stats.total_rows,
+        if stats.census { "hit" } else { "miss" },
     );
     println!("  full summary: {}", stats.summary());
+
+    // Windowed pair-and-drain matching: the channel census tells the
+    // matcher when a (src, dst, tag) channel has no endpoints left
+    // downstream, so completed channels pair and retire during ingest —
+    // matcher residency is the open-channel window, not O(endpoints).
+    let mut reader = open_sharded(&archive)?;
+    let (mm, stats) = stream::match_messages(reader.as_mut(), 0)?;
+    println!(
+        "\nwindowed match_messages: {} sends / {} recvs matched, \
+         peak channel queues {} B (census {})",
+        mm.sends.len(),
+        mm.recvs.len(),
+        stats.peak_channel_queue_bytes,
+        if stats.census { "hit" } else { "miss" },
+    );
 
     // The same works through a session: routed analyses on a
     // `load_streamed` entry never materialize the trace.

@@ -55,6 +55,17 @@ const STREAM_INGEST: &[(&str, &str)] = &[
     ("stream_ingest_chrome", "laghos8"),
 ];
 
+/// Census-path rows: for each op, `seq1` is the census-less stream (the
+/// legacy buffering path, forced via the `NoCensus` adapter) and
+/// `sharded4` is the census-backed stream (top-k direct binning /
+/// windowed channel drain), both on the pipelined driver at 4 threads.
+/// The gate requires census ≥ 0.95× census-less — exploiting the
+/// pre-scan census must never lose to ignoring it.
+const STREAM_CENSUS: &[(&str, &str)] = &[
+    ("stream_time_profile", "laghos8"),
+    ("stream_match_messages", "laghos8"),
+];
+
 fn main() -> anyhow::Result<()> {
     let (warmup, iters) = bench_params_from_args();
     let argv: Vec<String> = std::env::args().collect();
@@ -252,7 +263,7 @@ fn main() -> anyhow::Result<()> {
     // folds. flat_profile is the cheapest routed analysis, so these rows
     // are ingest-bound by construction.
     use pipit::exec::stream;
-    use pipit::readers::streaming::{open_sharded, SerialDecode};
+    use pipit::readers::streaming::{open_sharded, NoCensus, SerialDecode};
     let ingest_dir = std::env::temp_dir().join("pipit_bench_ingest");
     std::fs::create_dir_all(&ingest_dir)?;
     let otf2_path = ingest_dir.join("laghos8_otf2");
@@ -281,6 +292,30 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    // ---- census-backed streaming: census-less vs census paths --------------
+    // The pre-scan census lets time_profile bin only the top-k + "other"
+    // series and lets the matcher pair-and-drain channels during ingest;
+    // the NoCensus adapter pins the legacy buffering paths as baseline.
+    eprintln!("\n=== census-backed streaming: census-less vs census (laghos-8p otf2) ===");
+    b.run("stream_time_profile/seq1/laghos8", || {
+        let mut r = open_sharded(&otf2_path).unwrap();
+        let mut r = NoCensus::new(r.as_mut());
+        stream::time_profile(&mut r, 128, Some(15), 4).unwrap()
+    });
+    b.run("stream_time_profile/sharded4/laghos8", || {
+        let mut r = open_sharded(&otf2_path).unwrap();
+        stream::time_profile(r.as_mut(), 128, Some(15), 4).unwrap()
+    });
+    b.run("stream_match_messages/seq1/laghos8", || {
+        let mut r = open_sharded(&otf2_path).unwrap();
+        let mut r = NoCensus::new(r.as_mut());
+        stream::match_messages(&mut r, 4).unwrap()
+    });
+    b.run("stream_match_messages/sharded4/laghos8", || {
+        let mut r = open_sharded(&otf2_path).unwrap();
+        stream::match_messages(r.as_mut(), 4).unwrap()
+    });
+
     // Per-op speedups, the BENCH_PR.json rows, and the perf-trajectory
     // gate: sharded@4 must never lose to sequential on a routed op. A
     // small noise margin keeps median-of-5 on shared CI runners from
@@ -296,6 +331,8 @@ fn main() -> anyhow::Result<()> {
         .chain(ROUTED_UNGATED.iter().map(|&(op, ds)| (op, ds, false)))
         // pipelined decode is gated against its serial-decode baseline
         .chain(STREAM_INGEST.iter().map(|&(op, ds)| (op, ds, true)))
+        // census paths are gated against their census-less baseline
+        .chain(STREAM_CENSUS.iter().map(|&(op, ds)| (op, ds, true)))
         .collect();
     for (op, ds, gate_speedup) in pairs {
         let seq_name = format!("{op}/seq1/{ds}");
@@ -368,7 +405,9 @@ fn main() -> anyhow::Result<()> {
         eprintln!(
             "BENCH GATE FAILED: sharded@4 below {GATE_MIN_SPEEDUP}x of sequential \
              (pipelined stream below {GATE_MIN_SPEEDUP}x of serial-decode stream \
-             for the stream_ingest rows), or unsampled, for: {}",
+             for the stream_ingest rows; census path below {GATE_MIN_SPEEDUP}x of \
+             the census-less stream for the stream_* census rows), or unsampled, \
+             for: {}",
             regressions.join(", ")
         );
         std::process::exit(1);

@@ -26,7 +26,7 @@
 
 use crate::df::NULL_I64;
 use crate::trace::*;
-use anyhow::Result;
+use anyhow::{bail, Result};
 use std::collections::HashMap;
 
 /// For every row: if it is a recv instant, the row of the matching send
@@ -164,6 +164,18 @@ impl ChannelQueues {
         self.queues
     }
 
+    /// The accumulated channels with their (src, dst, tag) keys, in slot
+    /// (= first-seen) order — what the windowed matcher folds.
+    pub fn into_keyed_queues(self) -> Vec<((i64, i64, i64), ChannelQueue)> {
+        let ChannelQueues { index, queues } = self;
+        let mut keys: Vec<((i64, i64, i64), usize)> = index.into_iter().collect();
+        keys.sort_unstable_by_key(|&(_, slot)| slot);
+        keys.into_iter()
+            .zip(queues)
+            .map(|((key, _), q)| (key, q))
+            .collect()
+    }
+
     /// FIFO-pair every channel sequentially and assemble the
     /// [`MessageMatch`] for a trace of `total_rows` rows. The sharded
     /// driver uses [`pair_channel`] + [`assemble_match`] directly to run
@@ -244,6 +256,146 @@ pub fn match_messages(trace: &Trace) -> Result<MessageMatch> {
     let mut acc = ChannelQueues::new();
     acc.collect(trace, (0, trace.len()), 0)?;
     Ok(acc.finish(trace.len()))
+}
+
+// -- windowed pair-and-drain matching ---------------------------------------
+
+/// Streaming matcher driven by the pre-scan channel census: per-channel
+/// queues accumulate endpoints as shards fold, and a channel is paired
+/// and **drained the moment the census says it has no endpoints left
+/// downstream** (its accumulated counts equal the census totals).
+/// Matcher residency is therefore bounded by the open-channel window —
+/// the channels whose src or dst block has not finished streaming —
+/// instead of O(all message endpoints), while the pairing per channel is
+/// the same unique-(timestamp, row) sort + FIFO zip as [`pair_channel`],
+/// so the row-indexed output is bit-identical to the sequential matcher.
+///
+/// A census that disagrees with the stream cannot make this silently
+/// wrong: channels the census never mentions, or whose counts are never
+/// reached, simply stay open until [`WindowedMatcher::finish`] (the
+/// result degrades to end-of-stream pairing for those channels), and a
+/// census that provably lied — endpoints arriving for a channel it said
+/// was complete, the one shape that could mis-pair — is a deterministic
+/// [`WindowedMatcher::fold`] error, exactly like any other corrupt-data
+/// read. (For the archive formats the census travels with, a checksum
+/// already rejects damaged censuses before they get here.)
+#[derive(Debug, Default)]
+pub struct WindowedMatcher {
+    /// channel → census (send, recv) totals.
+    expected: std::collections::HashMap<(i64, i64, i64), (u64, u64)>,
+    /// open channels, insertion-ordered (slot order) for a deterministic
+    /// final drain; a drained channel keeps its slot as `None`.
+    index: std::collections::HashMap<(i64, i64, i64), usize>,
+    open: Vec<Option<ChannelQueue>>,
+    /// row-indexed match arrays, grown as the stream advances.
+    send_of_recv: Vec<i64>,
+    recv_of_send: Vec<i64>,
+    /// drained endpoints, kept only when the caller needs the global
+    /// time-ordered lists (full [`MessageMatch`] output).
+    keep_endpoints: bool,
+    sends: Vec<(i64, u32)>,
+    recvs: Vec<(i64, u32)>,
+}
+
+impl WindowedMatcher {
+    /// `expected` is the census channel map ((src, dst, tag) → endpoint
+    /// totals); `keep_endpoints` retains drained endpoints for the full
+    /// [`MessageMatch`] (the row arrays alone need no endpoint storage).
+    pub fn new(
+        expected: std::collections::HashMap<(i64, i64, i64), (u64, u64)>,
+        keep_endpoints: bool,
+    ) -> Self {
+        WindowedMatcher { expected, keep_endpoints, ..Default::default() }
+    }
+
+    /// Fold one shard's channel queues (rows already shifted to their
+    /// global base). `total_rows` is the stream's row count so far —
+    /// every endpoint recorded up to now lies below it. Errors when an
+    /// endpoint arrives for a channel the census declared complete (a
+    /// census that disagrees with the stream could otherwise mis-pair).
+    pub fn fold(&mut self, q: ChannelQueues, total_rows: usize) -> Result<()> {
+        self.send_of_recv.resize(total_rows, -1);
+        self.recv_of_send.resize(total_rows, -1);
+        for (key, part) in q.into_keyed_queues() {
+            let n = self.open.len();
+            let slot = *self.index.entry(key).or_insert(n);
+            if slot == n {
+                self.open.push(Some(ChannelQueue::default()));
+            }
+            let Some(dst) = self.open[slot].as_mut() else {
+                // the channel already drained at its census totals, yet
+                // more endpoints exist: the census lied in the one way
+                // that could silently mis-pair, so refuse the stream
+                bail!(
+                    "channel census disagrees with the stream: endpoints for \
+                     channel ({}, {}, {}) arrived after its census said it \
+                     was complete",
+                    key.0,
+                    key.1,
+                    key.2
+                );
+            };
+            dst.sends.extend_from_slice(&part.sends);
+            dst.recvs.extend_from_slice(&part.recvs);
+            if let Some(&(es, er)) = self.expected.get(&key) {
+                let complete =
+                    dst.sends.len() as u64 == es && dst.recvs.len() as u64 == er;
+                if complete {
+                    let q = self.open[slot].take().unwrap_or_default();
+                    self.drain(q);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Pair one complete channel and retire its queue into the outputs.
+    fn drain(&mut self, mut q: ChannelQueue) {
+        let pairs = pair_channel(&mut q);
+        for (s, r) in pairs {
+            self.send_of_recv[r as usize] = s as i64;
+            self.recv_of_send[s as usize] = r as i64;
+        }
+        if self.keep_endpoints {
+            self.sends.extend(q.sends);
+            self.recvs.extend(q.recvs);
+        }
+    }
+
+    /// Bytes currently held in open channel queues — the matcher's
+    /// actual partial state (the row arrays are output-sized).
+    pub fn queue_bytes(&self) -> usize {
+        let endpoints: usize = self
+            .open
+            .iter()
+            .flatten()
+            .map(|q| q.sends.len() + q.recvs.len())
+            .sum();
+        endpoints * std::mem::size_of::<(i64, u32)>()
+            + self.open.len() * std::mem::size_of::<Option<ChannelQueue>>()
+    }
+
+    /// End of stream: drain every still-open channel (in first-seen
+    /// order) and assemble the match for `total_rows` rows.
+    pub fn finish(mut self, total_rows: usize) -> MessageMatch {
+        self.send_of_recv.resize(total_rows, -1);
+        self.recv_of_send.resize(total_rows, -1);
+        let open = std::mem::take(&mut self.open);
+        for q in open.into_iter().flatten() {
+            self.drain(q);
+        }
+        let WindowedMatcher { send_of_recv, recv_of_send, mut sends, mut recvs, .. } = self;
+        // (ts, row) keys are unique: the unstable sort reproduces the
+        // sequential global time order exactly (see `assemble_match`)
+        sends.sort_unstable();
+        recvs.sort_unstable();
+        MessageMatch {
+            send_of_recv,
+            recv_of_send,
+            sends: sends.into_iter().map(|(_, r)| r).collect(),
+            recvs: recvs.into_iter().map(|(_, r)| r).collect(),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -346,6 +498,121 @@ mod tests {
         let qs = acc.into_queues();
         assert_eq!(qs.len(), 1);
         assert_eq!(qs[0].sends, vec![(10, 5)]);
+    }
+
+    /// Shard-by-shard windowed matching with a census must equal the
+    /// sequential matcher bit-for-bit while draining complete channels
+    /// before end of stream.
+    #[test]
+    fn windowed_matcher_matches_sequential_and_drains_early() {
+        let mut b = TraceBuilder::new();
+        // proc 0: sends to 1 (two messages, one channel)
+        b.enter(0, 0, 0, "main");
+        b.send(0, 0, 10, 1, 100, 0);
+        b.send(0, 0, 20, 1, 200, 0);
+        b.leave(0, 0, 90, "main");
+        // proc 1: receives both, sends one to 2
+        b.enter(1, 0, 0, "main");
+        b.recv(1, 0, 30, 0, 100, 0);
+        b.recv(1, 0, 40, 0, 200, 0);
+        b.send(1, 0, 50, 2, 300, 7);
+        b.leave(1, 0, 90, "main");
+        // proc 2: receives from 1, plus an unmatched recv from 3
+        b.enter(2, 0, 0, "main");
+        b.recv(2, 0, 60, 1, 300, 7);
+        b.recv(2, 0, 70, 3, 1, 0);
+        b.leave(2, 0, 90, "main");
+        let t = b.finish();
+        let seq = match_messages(&t).unwrap();
+
+        // the census the pre-scan would produce
+        let mut expected = std::collections::HashMap::new();
+        expected.insert((0i64, 1i64, 0i64), (2u64, 2u64));
+        expected.insert((1, 2, 7), (1, 1));
+        expected.insert((3, 2, 0), (0, 1));
+
+        // stream one process block at a time
+        let pr = t.processes().unwrap().to_vec();
+        let mut m = WindowedMatcher::new(expected, true);
+        let mut start = 0usize;
+        for p in 0..3i64 {
+            let end = start + pr.iter().filter(|&&x| x == p).count();
+            let mut q = ChannelQueues::new();
+            q.collect(&t, (start, end), 0).unwrap();
+            m.fold(q, end).unwrap();
+            if p == 0 {
+                // channel (0,1,0) is still waiting for its receives
+                assert!(m.queue_bytes() > 0, "open channel must be resident");
+            }
+            if p == 1 {
+                // channel (0,1,0) reached its census totals at block 1:
+                // it must be paired and drained before the stream ends
+                let slot = m.index[&(0i64, 1i64, 0i64)];
+                assert!(m.open[slot].is_none(), "complete channel not drained");
+            }
+            start = end;
+        }
+        let win = m.finish(t.len());
+        assert_eq!(win, seq, "windowed pairing must equal sequential");
+    }
+
+    /// A census that undercounts a channel must degrade to end-of-stream
+    /// pairing for the stragglers — never panic or mis-pair rows.
+    #[test]
+    fn windowed_matcher_survives_lying_census() {
+        let mut b = TraceBuilder::new();
+        b.send(0, 0, 10, 1, 100, 0);
+        b.send(0, 0, 20, 1, 200, 0);
+        b.recv(1, 0, 30, 0, 100, 0);
+        b.recv(1, 0, 40, 0, 200, 0);
+        let t = b.finish();
+        // census claims one send/one recv: the counts blow straight past
+        // the claimed totals without ever equaling them, so the channel
+        // stays open and pairs at finish — full, correct pairing
+        let mut expected = std::collections::HashMap::new();
+        expected.insert((0i64, 1i64, 0i64), (1u64, 1u64));
+        let mut m = WindowedMatcher::new(expected, true);
+        for row in 0..t.len() {
+            let mut q = ChannelQueues::new();
+            q.collect(&t, (row, row + 1), 0).unwrap();
+            m.fold(q, row + 1).unwrap();
+        }
+        let win = m.finish(t.len());
+        // every endpoint is still listed and the pairing is a bijection
+        assert_eq!(win.sends.len(), 2);
+        assert_eq!(win.recvs.len(), 2);
+        let matched = win.recv_of_send.iter().filter(|&&r| r >= 0).count();
+        assert_eq!(matched, 2);
+    }
+
+    /// A census whose counts are transiently *equal* to the accumulated
+    /// endpoints triggers a drain; if more endpoints then arrive, the
+    /// matcher must error deterministically — the one lying-census shape
+    /// that could silently mis-pair is refused instead.
+    #[test]
+    fn windowed_matcher_rejects_census_contradicted_by_the_stream() {
+        let mut b = TraceBuilder::new();
+        b.send(0, 0, 10, 1, 100, 0);
+        b.send(0, 0, 20, 1, 200, 0);
+        b.recv(1, 0, 30, 0, 100, 0);
+        b.recv(1, 0, 40, 0, 200, 0);
+        let t = b.finish();
+        // census claims (2, 1): equality holds after the first recv, the
+        // channel drains, and the second recv then contradicts it
+        let mut expected = std::collections::HashMap::new();
+        expected.insert((0i64, 1i64, 0i64), (2u64, 1u64));
+        let mut m = WindowedMatcher::new(expected, true);
+        let mut err = None;
+        for row in 0..t.len() {
+            let mut q = ChannelQueues::new();
+            q.collect(&t, (row, row + 1), 0).unwrap();
+            if let Err(e) = m.fold(q, row + 1) {
+                err = Some(e);
+                break;
+            }
+        }
+        let err = err.expect("the contradicted census must be refused");
+        assert!(err.to_string().contains("census disagrees"), "{err}");
     }
 
     #[test]

@@ -2,17 +2,25 @@
 //! time bin, summed across all processes/threads — "a flat profile over
 //! time".
 //!
-//! The pure-Rust engines all share one four-stage core — segment
-//! extraction ([`exclusive_segments`]), function census + ranking,
-//! per-function-slot binning, and a collapse of non-top slots into
-//! `"other"` (summed per cell in first-seen function order) — so the
+//! The pure-Rust engines all share one three-stage core — segment
+//! extraction ([`exclusive_segments`]), function census + ranking, and
+//! direct per-*series* binning (`bin_segments_series`): every segment
+//! adds its fractional bin overlaps straight into its ranked output
+//! series, with non-top functions adding into `"other"` — so the
 //! sequential path, the bin-axis-sharded path
-//! (`crate::exec::ops::time_profile`), and the streamed two-pass fold
-//! (`crate::exec::stream`) are **bit-identical** by construction: every
-//! (slot, bin) cell accumulates its fractional overlaps in global
-//! segment order on all three. The PJRT path in [`crate::runtime::ops`]
-//! (the AOT Pallas `time_hist` kernel) is validated against this
-//! implementation within numeric tolerance in integration tests.
+//! (`crate::exec::ops::time_profile`), the streamed two-pass fold and
+//! the census-backed streamed fold (`crate::exec::stream`) are
+//! **bit-identical** by construction: every (series, bin) cell —
+//! including `"other"`, which interleaves its member functions'
+//! contributions — accumulates in global segment order on all of them.
+//! Binning directly into series keeps partial state O(series × bins)
+//! everywhere: with a top-k ranking the memory no longer scales with
+//! the number of distinct function names (the earlier design kept
+//! O(all-functions × bins) slot rows and collapsed at the end, which
+//! was pathological for name-rich traces). The PJRT path in
+//! [`crate::runtime::ops`] (the AOT Pallas `time_hist` kernel) is
+//! validated against this implementation within numeric tolerance in
+//! integration tests.
 //!
 //! Both consume the same [`exclusive_segments`] extraction, which converts
 //! matched Enter/Leave pairs into *exclusive* intervals (the gaps where a
@@ -162,14 +170,9 @@ impl FuncCensus {
     }
 
     /// Account one segment's duration to its function.
-    pub(crate) fn add(&mut self, code: u32, dur: f64) -> usize {
+    pub(crate) fn add(&mut self, code: u32, dur: f64) {
         let s = self.slot(code);
         self.totals[s] += dur;
-        s
-    }
-
-    pub(crate) fn len(&self) -> usize {
-        self.codes.len()
     }
 }
 
@@ -251,64 +254,54 @@ pub(crate) fn seg_bin_overlaps(
     }
 }
 
-/// Accumulate segment overlap into per-function-slot rows over the bins
-/// `[bins.0, bins.1)` — stage 3a. Every (slot, bin) cell folds its
-/// contributions in segment order, so splitting the bin axis across
-/// workers and stitching ranges back together is bit-identical to one
-/// pass — and so is replaying per-shard contribution lists in shard
-/// order (the streamed driver), because shard order *is* segment order.
+/// The output series a censused name code feeds: its own ranked series
+/// for top-k functions, `"other"` for the rest. None only for codes the
+/// census never saw (impossible for segments the census was built from).
+#[inline]
+pub(crate) fn series_of_code(spec: &SeriesSpec, code: u32) -> Option<usize> {
+    match spec.func_of_code.get(&code) {
+        Some(&f) => Some(f),
+        None => spec.other_slot,
+    }
+}
+
+/// Accumulate segment overlap directly into the ranked output series
+/// over the bins `[bins.0, bins.1)` — stage 3. Every (series, bin) cell
+/// folds its contributions in segment order — including `"other"`, which
+/// interleaves its member functions' contributions in that same global
+/// order — so splitting the bin axis across workers and stitching ranges
+/// back together is bit-identical to one pass, and so is replaying
+/// per-shard (series, bin, overlap) lists in shard order (the streamed
+/// drivers), because shard order *is* segment order.
 ///
-/// Memory trade-off: rows span *all* censused functions, not just the
-/// ranked top-k, because the streamed fold cannot know the ranking (it
-/// needs end-of-stream totals) yet must accumulate every function's
-/// cells in segment order to keep the `"other"` collapse deterministic
-/// across engines. O(functions × bins) is the price of a bounded,
-/// bit-identical streamed fold; for typical traces (tens to hundreds of
-/// functions) it is far below the O(segments) buffer it replaced, but
-/// extremely name-rich traces pay functions × bins × 8 bytes here.
-pub(crate) fn bin_segments_slots(
+/// Rows are O(series × bins): with a top-k ranking, partial state never
+/// scales with the number of distinct function names.
+pub(crate) fn bin_segments_series(
     segs: &[Segment],
-    slot_of_code: &std::collections::HashMap<u32, usize>,
-    nslots: usize,
+    spec: &SeriesSpec,
     t0: i64,
     width: f64,
     num_bins: usize,
     bins: (usize, usize),
 ) -> Vec<Vec<f64>> {
-    let mut rows = vec![vec![0.0f64; bins.1 - bins.0]; nslots];
+    let mut rows = vec![vec![0.0f64; bins.1 - bins.0]; spec.func_names.len()];
     for s in segs {
-        let Some(&slot) = slot_of_code.get(&s.name_code) else { continue };
+        let Some(series) = series_of_code(spec, s.name_code) else { continue };
         seg_bin_overlaps(s, t0, width, num_bins, bins, |b, ov| {
-            rows[slot][b - bins.0] += ov;
+            rows[series][b - bins.0] += ov;
         });
     }
     rows
 }
 
-/// Fold per-slot rows into the ranked output series — stage 3b. Top
-/// functions copy their slot row verbatim; the remaining slots sum into
-/// `"other"` per cell **in first-seen slot order**, the one deterministic
-/// order every engine can reproduce (the eager pass, the bin-axis
-/// sharded pass, and the streamed fold all hold per-slot rows by this
-/// point, so the collapse is the single place "other" is summed).
-pub(crate) fn collapse_slots(
-    c: &FuncCensus,
-    spec: &SeriesSpec,
-    slot_rows: &[Vec<f64>],
-    num_bins: usize,
-) -> Vec<Vec<f64>> {
-    let nf = spec.func_names.len();
+/// Transpose series-major accumulation rows into the `values[bin][func]`
+/// output layout (a pure copy — no arithmetic, so no ordering concerns).
+pub(crate) fn values_from_series_rows(rows: &[Vec<f64>], num_bins: usize) -> Vec<Vec<f64>> {
+    let nf = rows.len();
     let mut values = vec![vec![0.0f64; nf]; num_bins];
-    for (slot, code) in c.codes.iter().enumerate() {
-        let series = match spec.func_of_code.get(code) {
-            Some(&f) => f,
-            None => match spec.other_slot {
-                Some(o) => o,
-                None => continue,
-            },
-        };
-        for (b, row) in values.iter_mut().enumerate() {
-            row[series] += slot_rows[slot][b];
+    for (series, row) in rows.iter().enumerate() {
+        for (b, v) in row.iter().enumerate() {
+            values[b][series] = *v;
         }
     }
     values
@@ -316,9 +309,9 @@ pub(crate) fn collapse_slots(
 
 /// Compute a time profile with `num_bins` equal bins over the trace span.
 /// If `top_funcs` is Some(k), only the k functions with the largest total
-/// exclusive time get their own series; the rest fold into `"other"`
-/// (summed per cell in first-seen function order, the one deterministic
-/// order every engine — eager, bin-axis sharded, streamed — reproduces).
+/// exclusive time get their own series; the rest add into `"other"` (per
+/// cell in global segment order — the one canonical order every engine,
+/// eager, bin-axis sharded, streamed and census-backed, reproduces).
 pub fn time_profile(
     trace: &mut Trace,
     num_bins: usize,
@@ -335,8 +328,8 @@ pub fn time_profile(
 
     let span = (t1 - t0).max(1) as f64;
     let width = span / num_bins as f64;
-    let rows = bin_segments_slots(&segs, &c.slot_of_code, c.len(), t0, width, num_bins, (0, num_bins));
-    let values = collapse_slots(&c, &spec, &rows, num_bins);
+    let rows = bin_segments_series(&segs, &spec, t0, width, num_bins, (0, num_bins));
+    let values = values_from_series_rows(&rows, num_bins);
     let bin_edges = (0..=num_bins)
         .map(|b| t0 + (b as f64 * width).round() as i64)
         .collect();

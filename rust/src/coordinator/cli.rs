@@ -127,25 +127,38 @@ SCALING:
   I/O cursor (one rank file's compressed bytes, one pre-scanned block's
   byte range) while shard *decode* runs as worker-pool tasks that
   overlap the analysis folds — a decode->fold pipeline whose in-flight
-  shard count is capped at the worker count, so peak memory stays
-  O(workers x shard + results) and decode-bound archives ingest at pool
-  speed. otf2, csv and chrome all stream from disk (chrome's raw text is
-  never resident whole: the pre-scan runs over a sliding window);
-  non-streamable sources (hpctoolkit, projections, interleaved files)
-  fall back to an eager load kept in-memory and flagged via
-  StreamStats.fallback. A cheap span pre-pass (otf2 defs extrema; the
-  csv/chrome byte-cursor pre-scan) tells time_profile / comm_over_time
-  the global span before ingest, so they fold straight into final bins —
-  O(bins) partial state instead of O(segments)/O(sends). All routed
-  analyses — including critical_path, lateness, pattern_detection and
-  comm_comp_breakdown, which fold per-shard channel queues and match at
-  end of stream — stay bit-identical to eager loading at any thread
+  shard count adapts between the worker count and 4x it under the
+  STREAM_INFLIGHT_BYTES budget (default 64 MiB), which bounds both the
+  accumulated partial state and the raw shard payload bytes read ahead
+  of the workers — peak memory stays O(workers x shard + budget +
+  results) and decode-bound archives ingest at pool speed. otf2, csv and chrome all stream from
+  disk (chrome's raw text is never resident whole: the pre-scan runs
+  over a sliding window); non-streamable sources (hpctoolkit,
+  projections, interleaved files) fall back to an eager load kept
+  in-memory, flagged via StreamStats.fallback and printed at load time.
+
+  The pre-scan also carries a TraceCensus — per-block row counts and
+  timestamp extrema, a function census with exclusive-time rank hints,
+  a per-(src, dst, tag) channel endpoint census, and message-size
+  extrema — produced by the csv/chrome byte-cursor scanners and by the
+  otf2 defs.bin census trailing section (versioned + checksummed; old
+  archives and corrupt sections degrade to the census-less legacy paths
+  with StreamStats.fallback set, never to an error). Census-backed
+  streams fold time_profile into only the ranked top-k + \"other\"
+  series (O(top-k x bins) partial state, retiring the old
+  O(all-functions x bins) rows), derive message_histogram's bin width
+  up front (O(bins), no end-of-stream re-bin), and pair-and-drain each
+  message channel the moment the census says its endpoints are complete
+  — so match_messages / critical_path / lateness hold only the open
+  channel window (peak_channel_queue_bytes) instead of O(endpoints).
+  All routed analyses stay bit-identical to eager loading at any thread
   count (decode order never changes fold order: shards fold by sequence
-  number), and the streamability pre-scan verdict is cached per session
+  number), and the pre-scan verdict + census are cached per session
   entry so repeated analyses skip the re-verification. Streamed runs
-  print their ingest instrumentation (shards, decode/fold ms split, peak
-  in-flight shards, peak partial bytes). In a pipeline spec, put
-  \"stream\": true on a \"load\" step.
+  print their ingest instrumentation (shards, decode/fold ms split,
+  peak in-flight shards, peak partial bytes, peak channel-queue bytes,
+  census hit/miss). In a pipeline spec, put \"stream\": true on a
+  \"load\" step.
 
   --batch runs the paper's multirun scaling comparison as one job:
   every trace streams through a flat-profile ingest scheduled over the
@@ -244,6 +257,15 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     let path = args.str("trace").context("--trace is required")?;
     if args.str("stream").is_some() {
         s.load_streamed("t", path)?;
+        if !s.is_streamed("t") {
+            // previously this degradation was silent: the trace loaded
+            // eagerly and no streamed analysis ever ran to print a
+            // fallback-flagged StreamStats line
+            println!(
+                "  [stream] fallback: {path} is not streamable \
+                 (split-after-load); loaded eagerly instead"
+            );
+        }
     } else {
         s.load("t", path)?;
     }

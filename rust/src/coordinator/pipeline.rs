@@ -111,7 +111,20 @@ impl Pipeline {
                 let path = step.get_str("path").context("'load' needs 'path'")?;
                 if step.get("stream").and_then(|v| v.as_bool()).unwrap_or(false) {
                     s.load_streamed(trace()?, path)?;
-                    emit(format!("streaming {} <- {path}", trace()?), None)
+                    if s.is_streamed(trace()?) {
+                        emit(format!("streaming {} <- {path}", trace()?), None)
+                    } else {
+                        // surface the split-after-load fallback instead of
+                        // claiming the entry streams
+                        emit(
+                            format!(
+                                "loaded {} <- {path} (stream fallback: source \
+                                 not streamable, split-after-load)",
+                                trace()?
+                            ),
+                            None,
+                        )
+                    }
                 } else {
                     s.load(trace()?, path)?;
                     emit(format!("loaded {} <- {path}", trace()?), None)

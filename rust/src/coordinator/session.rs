@@ -167,6 +167,14 @@ impl AnalysisSession {
         Ok(())
     }
 
+    /// Is `name` a stream-backed entry? False for memory-backed entries
+    /// — including sources [`AnalysisSession::load_streamed`] had to
+    /// load eagerly because they cannot stream (the split-after-load
+    /// fallback callers should surface rather than silently accept).
+    pub fn is_streamed(&self, name: &str) -> bool {
+        matches!(self.sources.get(name), Some(TraceSource::Streamed { .. }))
+    }
+
     /// Generate a synthetic application trace into the session.
     pub fn generate(
         &mut self,

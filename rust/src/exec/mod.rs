@@ -51,23 +51,28 @@
 //! [`stream`] runs the routed analyses over a
 //! [`ShardedReader`](crate::readers::streaming::ShardedReader) instead
 //! of a materialized trace, as a decode→fold **pipeline**
-//! ([`pool::pipeline`]): the driver thread only advances the reader's
-//! I/O cursor and folds partials in shard-sequence order, while shard
-//! *decode* tasks run on the workers, overlapping both — so streaming
-//! ingests at pool speed, not driver speed, with peak memory still
-//! bounded by O(workers × shard + results). A span pre-pass
-//! ([`ShardedReader::scan_span`](crate::readers::streaming::ShardedReader::scan_span))
-//! lets `time_profile` / `comm_over_time` fold straight into final bins.
+//! ([`pool::pipeline_adaptive`]): the driver thread only advances the
+//! reader's I/O cursor and folds partials in shard-sequence order, while
+//! shard *decode* tasks run on the workers, overlapping both — so
+//! streaming ingests at pool speed, not driver speed, with peak memory
+//! bounded by O(in-flight cap × shard + results); the cap adapts between
+//! the worker count and 4× it under a `STREAM_INFLIGHT_BYTES` budget.
+//! The pre-scan [`TraceCensus`](crate::readers::TraceCensus) (span,
+//! function ranking, channel endpoint counts, message extrema) lets
+//! `time_profile` bin only the ranked top-k + "other" series,
+//! `message_histogram` / `comm_over_time` fold straight into final
+//! bins, and the message matcher pair-and-drain channels during ingest.
 //! Results stay bit-identical to eager load + sequential analysis;
 //! [`StreamStats`] instruments how the stream was consumed (shard
-//! residency, decode/fold time split, peak partial state).
+//! residency, decode/fold time split, peak partial state, census
+//! hit/miss, peak channel-queue bytes).
 
 pub mod ops;
 pub mod pool;
 pub mod shard;
 pub mod stream;
 
-pub use pool::{pipeline, run_indexed, split_ranges, PipelineStats};
+pub use pool::{pipeline, pipeline_adaptive, run_indexed, split_ranges, CapCfg, PipelineStats};
 pub use shard::{process_shards, subtrace, Shards};
 pub use stream::StreamStats;
 

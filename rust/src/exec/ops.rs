@@ -176,16 +176,15 @@ pub fn comm_matrix(trace: &Trace, unit: CommUnit, threads: usize) -> Result<Comm
     Ok(CommMatrix { procs, data })
 }
 
-/// Sharded `time_profile`, in four stages:
+/// Sharded `time_profile`, in three stages:
 /// 1. exclusive segments per process shard (streams are independent, so
 ///    shard-order concatenation equals the sequential segment list);
 /// 2. the shared function census + ranking
 ///    (`time_profile::census` / `rank_census`);
-/// 3. per-slot binning parallelized over the *bin axis* — each
-///    (slot, bin) cell folds contributions in global segment order, so
-///    stitching the bin ranges is bit-identical to the sequential pass;
-/// 4. the shared collapse into ranked series
-///    (`time_profile::collapse_slots`).
+/// 3. direct per-series binning parallelized over the *bin axis* — each
+///    (series, bin) cell (including `"other"` cells) folds contributions
+///    in global segment order, so stitching the bin ranges is
+///    bit-identical to the sequential pass, with O(series × bins) rows.
 pub fn time_profile(
     trace: &Trace,
     num_bins: usize,
@@ -217,24 +216,16 @@ pub fn time_profile(
     let width = span / num_bins as f64;
     let bin_ranges = pool::split_ranges(num_bins, super::effective_threads(threads));
     let row_parts = pool::run_indexed(bin_ranges.len(), threads, |i| {
-        Ok(time_profile::bin_segments_slots(
-            &segs,
-            &c.slot_of_code,
-            c.len(),
-            t0,
-            width,
-            num_bins,
-            bin_ranges[i],
-        ))
+        Ok(time_profile::bin_segments_series(&segs, &spec, t0, width, num_bins, bin_ranges[i]))
     })?;
-    // stitch each slot's bin ranges back together, then collapse
-    let mut rows: Vec<Vec<f64>> = vec![Vec::with_capacity(num_bins); c.len()];
+    // stitch each series' bin ranges back together
+    let mut rows: Vec<Vec<f64>> = vec![Vec::with_capacity(num_bins); spec.func_names.len()];
     for part in row_parts {
-        for (slot, r) in part.into_iter().enumerate() {
-            rows[slot].extend(r);
+        for (series, r) in part.into_iter().enumerate() {
+            rows[series].extend(r);
         }
     }
-    let values = time_profile::collapse_slots(&c, &spec, &rows, num_bins);
+    let values = time_profile::values_from_series_rows(&rows, num_bins);
     let bin_edges = (0..=num_bins)
         .map(|b| t0 + (b as f64 * width).round() as i64)
         .collect();

@@ -93,10 +93,53 @@ where
 
 /// How a [`pipeline`] run went: `peak_in_flight` is the largest number
 /// of tasks that were simultaneously produced-but-not-yet-received-back
-/// — the residency bound the driver enforces (≤ worker count).
+/// — the residency bound the driver enforces (≤ the in-flight cap, which
+/// is the worker count for [`pipeline`] and adaptive for
+/// [`pipeline_adaptive`]); `peak_cap` is the largest cap value the
+/// adaptive controller reached (== the fixed cap for [`pipeline`]).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PipelineStats {
     pub peak_in_flight: usize,
+    pub peak_cap: usize,
+}
+
+/// Adaptive in-flight cap configuration for [`pipeline_adaptive`]: the
+/// cap starts at the worker count (the floor), grows by one per fold
+/// while the fold-reported accumulated partial bytes stay under
+/// `budget_bytes` (read-ahead for producers faster than workers — spinny
+/// disks feeding slow decodes), and shrinks back toward the floor the
+/// moment the budget is exceeded. The same budget also bounds the
+/// **in-flight payload bytes** directly: beyond the worker-count floor,
+/// the driver never reads ahead while the payloads already in flight
+/// exceed it — so ops whose partials are constant-small (exactly the
+/// census-backed ones) cannot quadruple raw-shard residency just because
+/// their fold bytes never approach the budget.
+#[derive(Debug, Clone, Copy)]
+pub struct CapCfg {
+    /// Ceiling on in-flight tasks (the task channel's capacity).
+    pub max_in_flight: usize,
+    /// Byte budget gating read-ahead beyond the worker count: both the
+    /// fold-reported partial state and the summed in-flight payload
+    /// sizes must stay under it.
+    pub budget_bytes: usize,
+}
+
+impl CapCfg {
+    /// Default policy for `workers` worker threads: ceiling at 4× the
+    /// worker count, budget from the `STREAM_INFLIGHT_BYTES` environment
+    /// variable (default 64 MiB).
+    pub fn from_env(workers: usize) -> CapCfg {
+        let budget = std::env::var("STREAM_INFLIGHT_BYTES")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(64 << 20);
+        CapCfg { max_in_flight: workers.max(1) * 4, budget_bytes: budget }
+    }
+
+    /// A fixed cap of exactly `workers` tasks ([`pipeline`]'s policy).
+    pub fn fixed(workers: usize) -> CapCfg {
+        CapCfg { max_in_flight: workers.max(1), budget_bytes: usize::MAX }
+    }
 }
 
 /// Producer → workers → in-order folder pipeline.
@@ -124,7 +167,7 @@ pub struct PipelineStats {
 /// `threads <= 1` runs everything on the calling thread with identical
 /// observable semantics.
 pub fn pipeline<T, R, P, W, G>(
-    mut produce: P,
+    produce: P,
     threads: usize,
     work: W,
     mut fold: G,
@@ -137,8 +180,45 @@ where
     G: FnMut(R) -> Result<()>,
 {
     let workers = super::effective_threads(threads).max(1);
+    pipeline_adaptive(produce, threads, CapCfg::fixed(workers), |_| 0, work, |r| {
+        fold(r)?;
+        Ok(0)
+    })
+}
+
+/// [`pipeline`] with an **adaptive in-flight cap**: the fold reports the
+/// approximate bytes of its accumulated partial state, and the driver
+/// grows read-ahead beyond the worker count while that stays under
+/// `cfg.budget_bytes` (shrinking back when exceeded) — so fast producers
+/// keep I/O moving ahead of slow workers without unbounded residency.
+/// `size` reports a produced task's payload bytes; beyond the
+/// worker-count floor (always allowed — the baseline parallelism bound),
+/// the driver stops producing while the summed in-flight payloads exceed
+/// the budget, so peak payload residency is O(workers × task + budget)
+/// no matter how the cap grows. Everything else — in-order folds,
+/// lowest-sequence error wins, cancellation, no deadlocks — is identical
+/// to [`pipeline`].
+pub fn pipeline_adaptive<T, R, P, S, W, G>(
+    mut produce: P,
+    threads: usize,
+    cfg: CapCfg,
+    size: S,
+    work: W,
+    mut fold: G,
+) -> Result<PipelineStats>
+where
+    T: Send,
+    R: Send,
+    P: FnMut() -> Result<Option<T>>,
+    S: Fn(&T) -> usize,
+    W: Fn(T) -> Result<R> + Sync,
+    G: FnMut(R) -> Result<usize>,
+{
+    let workers = super::effective_threads(threads).max(1);
+    let cap_max = cfg.max_in_flight.max(workers);
     let mut stats = PipelineStats::default();
     if workers <= 1 {
+        stats.peak_cap = 1;
         while let Some(t) = produce()? {
             stats.peak_in_flight = 1;
             fold(work(t)?)?;
@@ -146,7 +226,7 @@ where
         return Ok(stats);
     }
 
-    let (task_tx, task_rx) = mpsc::sync_channel::<(usize, T)>(workers);
+    let (task_tx, task_rx) = mpsc::sync_channel::<(usize, T)>(cap_max);
     // A `None` outcome marks a task cancelled after poisoning — a
     // dedicated variant (not a sentinel error), so no genuine task error
     // can ever be mistaken for a cancellation.
@@ -192,19 +272,36 @@ where
         let mut pending: BTreeMap<usize, R> = BTreeMap::new();
         let mut in_flight = 0usize;
         let mut exhausted = false;
+        // the adaptive in-flight cap: floor = workers, ceiling = cap_max
+        let mut cap = workers;
+        stats.peak_cap = cap;
+        // payload bytes of tasks currently in flight, by sequence: the
+        // byte-budget side of the read-ahead gate
+        let mut task_bytes: BTreeMap<usize, usize> = BTreeMap::new();
+        let mut in_flight_bytes = 0usize;
         // (sequence, error) of the earliest failure seen so far
         let mut first_err: Option<(usize, anyhow::Error)> = None;
 
         loop {
-            while !exhausted && first_err.is_none() && in_flight < workers {
+            // produce while under the cap — read-ahead past the worker
+            // floor additionally requires the in-flight payload bytes to
+            // stay under the budget
+            while !exhausted
+                && first_err.is_none()
+                && (in_flight < workers
+                    || (in_flight < cap && in_flight_bytes <= cfg.budget_bytes))
+            {
                 match produce() {
                     Ok(Some(t)) => {
+                        let bytes = size(&t);
                         if task_tx.send((next_seq, t)).is_err() {
                             // only possible if every worker panicked;
                             // the scope will resume the panic on join
                             exhausted = true;
                             break;
                         }
+                        task_bytes.insert(next_seq, bytes);
+                        in_flight_bytes += bytes;
                         next_seq += 1;
                         in_flight += 1;
                         stats.peak_in_flight = stats.peak_in_flight.max(in_flight);
@@ -222,6 +319,7 @@ where
             }
             let Ok((i, r)) = done_rx.recv() else { break };
             in_flight -= 1;
+            in_flight_bytes -= task_bytes.remove(&i).unwrap_or(0);
             match r {
                 Some(Ok(p)) => {
                     pending.insert(i, p);
@@ -241,10 +339,21 @@ where
             }
             if first_err.is_none() {
                 while let Some(p) = pending.remove(&next_fold) {
-                    if let Err(e) = fold(p) {
-                        poisoned.store(true, Ordering::Relaxed);
-                        first_err = Some((next_fold, e));
-                        break;
+                    match fold(p) {
+                        Ok(bytes) => {
+                            // adapt the cap to the observed partial state
+                            cap = if bytes <= cfg.budget_bytes {
+                                (cap + 1).min(cap_max)
+                            } else {
+                                cap.saturating_sub(1).max(workers)
+                            };
+                            stats.peak_cap = stats.peak_cap.max(cap);
+                        }
+                        Err(e) => {
+                            poisoned.store(true, Ordering::Relaxed);
+                            first_err = Some((next_fold, e));
+                            break;
+                        }
                     }
                     next_fold += 1;
                 }
@@ -452,6 +561,95 @@ mod tests {
         )
         .unwrap_err();
         assert_eq!(err.to_string(), "producer failed");
+    }
+
+    #[test]
+    fn adaptive_cap_grows_under_budget() {
+        // instant producer, tiny partials: the cap must climb from the
+        // worker floor (2) to the ceiling (8), and the producer must
+        // actually read ahead to it.
+        let stats = pipeline_adaptive(
+            counting_produce(100),
+            2,
+            CapCfg { max_in_flight: 8, budget_bytes: usize::MAX },
+            |_| 0,
+            Ok,
+            |_| Ok(0),
+        )
+        .unwrap();
+        assert_eq!(stats.peak_cap, 8, "{stats:?}");
+        assert!(stats.peak_in_flight > 2, "no read-ahead beyond workers: {stats:?}");
+        assert!(stats.peak_in_flight <= 8, "{stats:?}");
+    }
+
+    #[test]
+    fn adaptive_cap_stays_at_floor_over_budget() {
+        // every fold reports partials over budget: the cap must never
+        // leave the worker floor.
+        let stats = pipeline_adaptive(
+            counting_produce(50),
+            4,
+            CapCfg { max_in_flight: 16, budget_bytes: 10 },
+            |_| 0,
+            Ok,
+            |_| Ok(1_000_000),
+        )
+        .unwrap();
+        assert_eq!(stats.peak_cap, 4, "{stats:?}");
+        assert!(stats.peak_in_flight <= 4, "{stats:?}");
+    }
+
+    #[test]
+    fn adaptive_cap_shrinks_back_under_pressure_and_keeps_order() {
+        // partials grow past the budget mid-run: the cap climbs, then
+        // falls back toward the floor — and fold order never changes.
+        let mut out = Vec::new();
+        let mut folds = 0usize;
+        let stats = pipeline_adaptive(
+            counting_produce(60),
+            2,
+            CapCfg { max_in_flight: 6, budget_bytes: 100 },
+            |_| 0,
+            Ok,
+            |v| {
+                out.push(v);
+                folds += 1;
+                Ok(if folds <= 10 { 0 } else { 1_000 })
+            },
+        )
+        .unwrap();
+        assert_eq!(out, (0..60).collect::<Vec<_>>());
+        assert_eq!(stats.peak_cap, 6, "{stats:?}");
+    }
+
+    #[test]
+    fn adaptive_read_ahead_is_payload_byte_bounded() {
+        // huge task payloads: the cap itself may grow (partials are
+        // tiny), but read-ahead beyond the worker floor must stop while
+        // the in-flight payload bytes exceed the budget — so residency
+        // stays at the worker count, never 4x it.
+        let stats = pipeline_adaptive(
+            counting_produce(50),
+            2,
+            CapCfg { max_in_flight: 8, budget_bytes: 100 },
+            |_| 60,
+            Ok,
+            |_| Ok(0),
+        )
+        .unwrap();
+        assert_eq!(stats.peak_cap, 8, "{stats:?}");
+        assert_eq!(
+            stats.peak_in_flight, 2,
+            "payload budget must gate read-ahead: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn cap_cfg_fixed_pins_the_worker_count() {
+        let c = CapCfg::fixed(4);
+        assert_eq!(c.max_in_flight, 4);
+        let c = CapCfg::fixed(0);
+        assert_eq!(c.max_in_flight, 1);
     }
 
     #[test]

@@ -18,34 +18,40 @@
 //! * Cross-shard sums add integer-valued f64 nanoseconds / counts /
 //!   bytes — exact and associative well below 2^53 — and u64 counts are
 //!   exact by construction.
-//! * Quantities only known at end of stream (message size maximum,
-//!   process set) are folded from per-shard partials and applied with the
-//!   sequential formulas afterwards. The global **time span** is no
-//!   longer one of them: [`ShardedReader::scan_span`] reports it before
-//!   ingest (two-pass protocol), so `time_profile` / `comm_over_time`
-//!   fold shards straight into final bins. For `time_profile` the fold
-//!   replays each shard's individual (slot, bin, overlap) contributions
-//!   in segment order — per-cell f64 adds happen in exactly the
-//!   sequential order, so fractional binning stays bit-identical while
-//!   the accumulated state is O(functions × bins), not O(segments).
+//! * Quantities only known at end of stream are folded from per-shard
+//!   partials and applied with the sequential formulas afterwards — and
+//!   the pre-scan **[`TraceCensus`](crate::readers::TraceCensus)**
+//!   removes most of them from that list: [`ShardedReader::scan_span`]
+//!   reports the global time span before ingest (two-pass protocol); the
+//!   function census carries the complete `time_profile` ranking input,
+//!   so shards translate segments straight into ranked top-k + "other"
+//!   series contributions (replayed per cell in segment order —
+//!   bit-identical fractional binning with O(top-k × bins) state); the
+//!   message-size extrema fix `message_histogram`'s bin width up front;
+//!   and the channel census lets the matcher **pair-and-drain** each
+//!   (src, dst, tag) channel the moment its endpoint counts complete.
 //!
 //! Per-op partial memory: O(functions) for profiles, O(tree) for the
-//! CCT, O(distinct sizes) for the histogram, O(process²) for the comm
-//! matrix, O(functions × bins) for `time_profile` and O(bins) for
-//! `comm_over_time` (two-pass; the rare span-less sources — archives
-//! predating the otf2 extrema section, rows with unparsable timestamps —
-//! fall back to the old O(segments)/O(sends) buffering), O(processes +
-//! message instants) for `critical_path`, O(leaf calls + message
-//! instants) for `lateness`, O(processes) for `comm_comp_breakdown`, and
-//! O(anchors) for anchored `detect_pattern`.
+//! CCT, O(bins) for the histogram and `comm_over_time`, O(process²) for
+//! the comm matrix, O(top-k × bins) for `time_profile` (census-backed;
+//! census-less sources — archives predating the census section,
+//! forfeited pre-scans, fallbacks — buffer O(segments) on the legacy
+//! path), O(processes + open channel windows) for `critical_path` /
+//! `lateness` / `match_messages` under a channel census (census-less:
+//! O(message endpoints)), O(leaf calls) extra for `lateness`,
+//! O(processes) for `comm_comp_breakdown`, and O(anchors) for anchored
+//! `detect_pattern`.
 //!
 //! [`StreamStats`] is the ingest instrumentation hook: shard counts and
 //! the largest shard prove memory stays shard-bounded;
 //! `decode_ms`/`fold_ms` show the pipeline overlap (worker decode time
 //! can exceed wall-clock driver time only if decoding overlapped);
-//! `peak_in_flight_shards` proves residency ≤ workers;
+//! `peak_in_flight_shards` proves residency ≤ the adaptive in-flight cap
+//! ([`pool::pipeline_adaptive`], `STREAM_INFLIGHT_BYTES`-budgeted);
 //! `peak_partial_bytes` proves the accumulated partial state stays at
-//! the op's documented asymptotic size.
+//! the op's documented asymptotic size; `census` says whether the
+//! census-backed or the legacy path ran; `peak_channel_queue_bytes`
+//! proves the windowed matcher's open-channel residency bound.
 
 use super::pool;
 use crate::analysis;
@@ -57,7 +63,7 @@ use crate::analysis::idle_time::IdleRow;
 use crate::analysis::lateness::{self, LogicalOp};
 use crate::analysis::load_imbalance::ImbalanceRow;
 use crate::analysis::match_caller_callee;
-use crate::analysis::messages::ChannelQueues;
+use crate::analysis::messages::{self, ChannelQueues, MessageMatch};
 use crate::analysis::overlap::{self, Breakdown};
 use crate::analysis::pattern::{self, PatternConfig, PatternRange};
 use crate::analysis::time_profile::{self, Segment, TimeProfile};
@@ -89,11 +95,14 @@ pub struct StreamStats {
     pub max_shard_rows: usize,
     /// Distinct processes observed across the stream.
     pub num_processes: usize,
-    /// True when the reader was a split-after-load fallback (hpctoolkit,
-    /// projections, interleaved csv/chrome): the whole trace was resident
-    /// while shards were yielded, so the O(workers × shard) memory bound
-    /// did NOT hold. Previously this degradation was silent; callers that
-    /// rely on bounded ingest should assert `!fallback`.
+    /// True when ingest degraded below its documented guarantees: the
+    /// reader was a split-after-load fallback (hpctoolkit, projections,
+    /// interleaved csv/chrome — the whole trace was resident while
+    /// shards were yielded, so the O(workers × shard) memory bound did
+    /// NOT hold), or the source carried a **corrupt / truncated census**
+    /// section (the census-less legacy buffering paths ran). Previously
+    /// these degradations were silent; callers that rely on bounded
+    /// ingest should assert `!fallback`.
     pub fallback: bool,
     /// Total worker time spent decoding shard payloads, in ms (summed
     /// across workers — may exceed wall-clock when decode overlapped).
@@ -107,17 +116,34 @@ pub struct StreamStats {
     pub peak_in_flight_shards: usize,
     /// Largest accumulated partial state observed after any fold
     /// (approximate heap bytes, as reported by the op's fold). For the
-    /// two-pass ops this stays O(bins) / O(functions × bins) no matter
+    /// census-backed ops this stays O(series × bins) / O(bins) no matter
     /// how many rows stream past.
     pub peak_partial_bytes: usize,
+    /// True when the analysis exploited the pre-scan census (top-k
+    /// direct binning, windowed channel drain, pre-sized histogram);
+    /// false when the census-less legacy path ran (old archives,
+    /// forfeited pre-scans, fallback readers) — the "census hit/miss"
+    /// visibility hook tests assert on.
+    pub census: bool,
+    /// Largest number of bytes held in open channel queues by the
+    /// message matcher after any fold. Census-backed streams pair and
+    /// drain completed channels during ingest, so this stays bounded by
+    /// the open-channel window (≪ O(endpoints)); census-less streams
+    /// report the full end-of-stream buffer here.
+    pub peak_channel_queue_bytes: usize,
 }
 
 impl StreamStats {
     /// One-line human summary — what `pipit analyze --stream` prints.
     pub fn summary(&self) -> String {
+        let queues = if self.peak_channel_queue_bytes > 0 {
+            format!(", peak channel queues {} B", self.peak_channel_queue_bytes)
+        } else {
+            String::new()
+        };
         format!(
             "{} shards, {} rows (largest {}), {} procs; decode {:.2} ms / fold {:.2} ms, \
-             peak in-flight {} shard(s), peak partial state {} B{}",
+             peak in-flight {} shard(s), peak partial state {} B{}, census {}{}",
             self.shards,
             self.total_rows,
             self.max_shard_rows,
@@ -126,7 +152,9 @@ impl StreamStats {
             self.fold_ms,
             self.peak_in_flight_shards,
             self.peak_partial_bytes,
-            if self.fallback { " [fallback: eager split-after-load]" } else { "" },
+            queues,
+            if self.census { "hit" } else { "miss" },
+            if self.fallback { " [fallback: split-after-load or corrupt census]" } else { "" },
         )
     }
 }
@@ -203,7 +231,14 @@ fn vec_bytes<T>(v: &[T], extra: usize) -> usize {
 /// shard's decode task, on the same worker (the shard's rows are dropped
 /// before the partial travels back). The fold returns the approximate
 /// byte size of the accumulated partial state, recorded as
-/// `peak_partial_bytes`.
+/// `peak_partial_bytes` — and fed to the pipeline's **adaptive in-flight
+/// cap** ([`pool::pipeline_adaptive`]): read-ahead grows beyond the
+/// worker count while partials stay under the `STREAM_INFLIGHT_BYTES`
+/// budget and shrinks back under pressure, and the same budget directly
+/// bounds the raw shard payload bytes in flight (the worker-count floor
+/// is always allowed), so `peak_in_flight_shards` can exceed the worker
+/// count only while actual residency stays within the budget —
+/// O(workers × shard + budget), never 4 × the PR-4 bound.
 ///
 /// Errors anywhere — I/O, decode, `map`, `fold` — cancel the in-flight
 /// work and propagate the failure with the lowest shard index, exactly
@@ -220,11 +255,12 @@ where
     G: FnMut(P) -> Result<usize>,
 {
     let mut ing = Ingest::new();
-    ing.stats.fallback = !reader.is_streaming();
+    ing.stats.fallback = !reader.is_streaming() || reader.census_corrupt();
     let decode_ns = AtomicU64::new(0);
     let mut fold_ns = 0u64;
     let mut produced = 0usize;
-    let pstats = pool::pipeline(
+    let cap = pool::CapCfg::from_env(super::effective_threads(threads));
+    let pstats = pool::pipeline_adaptive(
         || {
             // I/O cursor advancement only — decoding happens in the task
             let task = reader.next_task()?;
@@ -241,6 +277,8 @@ where
             Ok(task)
         },
         threads,
+        cap,
+        |task: &ShardTask| task.payload_bytes(),
         |task: ShardTask| {
             let start = Instant::now();
             let mut trace = task.decode()?;
@@ -270,7 +308,7 @@ where
             let bytes = fold(partial)?;
             fold_ns += start.elapsed().as_nanos() as u64;
             ing.stats.peak_partial_bytes = ing.stats.peak_partial_bytes.max(bytes);
-            Ok(())
+            Ok(bytes)
         },
     )?;
     ing.stats.num_processes = ing.procs.len();
@@ -428,9 +466,12 @@ pub fn comm_by_process(
     Ok((out, stats))
 }
 
-/// Streamed `message_histogram`: per-shard size→count maps (compact —
-/// message sizes cluster) fold exactly; the bin width comes from the
-/// merged maximum and the counts re-bin with the sequential formula.
+/// Streamed `message_histogram`. With the pre-scan census available the
+/// size extrema — and so the bin width and the recv-only fallback — are
+/// known before ingest: each shard bins its own records (u64 counts ⇒
+/// exact in any grouping) and the fold is a cell-wise add into O(bins)
+/// state, no end-of-stream re-bin. Census-less sources fold per-shard
+/// size→count maps and re-bin at end of stream, as before.
 pub fn message_histogram(
     reader: &mut dyn ShardedReader,
     bins: usize,
@@ -438,6 +479,30 @@ pub fn message_histogram(
 ) -> Result<(Histogram, StreamStats)> {
     if bins == 0 {
         bail!("bins must be > 0");
+    }
+    if let Some(m) = reader.census().and_then(|c| c.msgs) {
+        // the sequential formula over the census extrema: clamped max,
+        // floored at 1, recv-only when no send record exists
+        let dir = if m.saw_send { MsgDir::Send } else { MsgDir::Recv };
+        let max = (if m.saw_send { m.max_send } else { m.max_recv })
+            .max(0)
+            .max(1) as f64;
+        let width = max / bins as f64;
+        let mut counts = vec![0u64; bins];
+        let mut ing = drive(
+            reader,
+            threads,
+            |t| comm::histogram_counts_range(t, (0, t.len()), dir, width, bins),
+            |part| {
+                for (dst, src) in counts.iter_mut().zip(&part) {
+                    *dst += *src;
+                }
+                Ok(bins * std::mem::size_of::<u64>())
+            },
+        )?;
+        ing.stats.census = true;
+        let edges = (0..=bins).map(|b| b as f64 * width).collect();
+        return Ok(((counts, edges), ing.stats));
     }
     let mut sends: HashMap<i64, u64> = HashMap::new();
     let mut recvs: HashMap<i64, u64> = HashMap::new();
@@ -521,9 +586,10 @@ pub fn comm_over_time(
     Ok(((counts, volume, edges), ing.stats))
 }
 
-/// Streamed `time_profile`: two-pass when the span pre-pass is
-/// available, buffered otherwise — both bit-identical to the sequential
-/// engine.
+/// Streamed `time_profile`: census-backed top-k direct binning when the
+/// pre-scan census and span are available, buffered otherwise — both
+/// bit-identical to the sequential engine. `StreamStats::census` records
+/// which path ran.
 pub fn time_profile(
     reader: &mut dyn ShardedReader,
     num_bins: usize,
@@ -546,104 +612,110 @@ fn time_profile_ingest(
     if num_bins == 0 {
         bail!("num_bins must be > 0");
     }
-    match reader.scan_span()? {
-        Some((t0, t1)) => time_profile_two_pass(reader, num_bins, top_funcs, threads, t0, t1),
-        None => time_profile_buffered(reader, num_bins, top_funcs, threads),
+    let span = reader.scan_span()?;
+    let funcs = reader.census().and_then(|c| c.funcs.clone());
+    match (span, funcs) {
+        (Some((t0, t1)), Some(f)) => {
+            time_profile_census(reader, num_bins, top_funcs, threads, t0, t1, f)
+        }
+        // census-less legacy path (old archives, forfeited pre-scans,
+        // fallback readers): buffer segments, census at end of stream
+        _ => time_profile_buffered(reader, num_bins, top_funcs, threads),
     }
 }
 
-/// Per-shard partial of the two-pass streamed time profile: the shard's
-/// individual (local slot, bin, overlap) contributions in segment order
-/// — O(shard) transient data, dropped right after its fold — plus the
-/// local census for remapping into the stream-wide one.
-struct TpShard {
-    /// local slot → function name (shard dictionaries differ per format)
-    names: Vec<String>,
-    /// local slot → total exclusive ns (exact integer-valued sums)
-    totals: Vec<f64>,
-    /// (local slot, bin, overlap) in (segment, bin) order
-    contribs: Vec<(u32, u32, f64)>,
-}
-
-/// Two-pass streamed `time_profile`: the span (and so every bin edge) is
-/// known before ingest, so workers pre-compute their shard's bin
-/// contributions and the fold replays them one by one into
-/// O(functions × bins) accumulated rows. Replaying individual
-/// contributions in shard order = the sequential per-cell f64 add order,
-/// so fractional binning stays bit-identical; ranking totals are exact
-/// integer-valued sums, so the end-of-stream ranking matches too.
-fn time_profile_two_pass(
+/// Census-backed streamed `time_profile`: the pre-scan census carries
+/// the complete function ranking input (first-seen order + exact
+/// integer-ns exclusive totals), so the top-k series — and the `"other"`
+/// series — are known **before ingest**. Workers translate their
+/// shard's segments straight into (series, bin, overlap) contributions
+/// in segment order; the fold replays them into O(series × bins)
+/// accumulated rows. Replaying in shard order = the sequential per-cell
+/// f64 add order of `bin_segments_series`, so fractional binning stays
+/// bit-identical while partial state is O(top-k × bins) no matter how
+/// many distinct function names stream past.
+fn time_profile_census(
     reader: &mut dyn ShardedReader,
     num_bins: usize,
     top_funcs: Option<usize>,
     threads: usize,
     t0: i64,
     t1: i64,
+    funcs: crate::readers::census::FuncTotals,
 ) -> Result<(TimeProfile, Ingest)> {
     let span = (t1 - t0).max(1) as f64;
     let width = span / num_bins as f64;
+    // rebuild the engine census from the pre-scan record: same names in
+    // the same first-seen order with the same integer-valued totals
     let mut names = Interner::new();
-    let mut acc = time_profile::FuncCensus::default();
-    let mut rows: Vec<Vec<f64>> = Vec::new();
-    let ing = drive(
+    let mut c = time_profile::FuncCensus::default();
+    for (name, ns) in funcs.names.iter().zip(&funcs.exc_ns) {
+        let code = names.intern(name);
+        let slot = c.slot(code);
+        c.totals[slot] += *ns as f64;
+    }
+    let spec = time_profile::rank_census(
+        &c,
+        |code| names.resolve(code).unwrap_or("").to_string(),
+        top_funcs,
+    );
+    // name → output series for the workers (shard dictionaries differ
+    // per format, so names are the cross-shard key); names outside the
+    // top-k resolve to the "other" slot via the None branch
+    let mut series_of_name: HashMap<String, usize> = HashMap::new();
+    for (code, &series) in &spec.func_of_code {
+        if let Some(n) = names.resolve(*code) {
+            series_of_name.insert(n.to_string(), series);
+        }
+    }
+    let other = spec.other_slot;
+    let nseries = spec.func_names.len();
+    let mut rows: Vec<Vec<f64>> = vec![vec![0.0f64; num_bins]; nseries];
+    let mut ing = drive(
         reader,
         threads,
         |t| {
             let segs = time_profile::exclusive_segments(t)?;
             let (_, dict) = t.events.strs(COL_NAME)?;
-            let mut local = time_profile::FuncCensus::default();
+            // memoize shard code → series once per distinct name
+            let mut memo: HashMap<u32, Option<usize>> = HashMap::new();
             let mut contribs: Vec<(u32, u32, f64)> = Vec::new();
             for s in &segs {
-                let slot = local.add(s.name_code, (s.end - s.start) as f64);
+                let series = *memo.entry(s.name_code).or_insert_with(|| {
+                    let n = dict.resolve(s.name_code).unwrap_or("");
+                    series_of_name.get(n).copied().or(other)
+                });
+                // None only under a lying census (checksummed away):
+                // top_funcs >= censused functions leaves no other slot,
+                // and the census saw every segment-producing function
+                let Some(series) = series else { continue };
                 time_profile::seg_bin_overlaps(s, t0, width, num_bins, (0, num_bins), |b, ov| {
-                    contribs.push((slot as u32, b as u32, ov));
+                    contribs.push((series as u32, b as u32, ov));
                 });
             }
-            let names = local
-                .codes
-                .iter()
-                .map(|&c| dict.resolve(c).unwrap_or("").to_string())
-                .collect();
-            Ok(TpShard { names, totals: local.totals, contribs })
+            Ok(contribs)
         },
-        |sh| {
-            // local slots → stream-wide slots, in first-seen order
-            // across shards (= global first-seen segment order)
-            let mut global = Vec::with_capacity(sh.names.len());
-            for (k, name) in sh.names.iter().enumerate() {
-                let code = names.intern(name);
-                let g = acc.slot(code);
-                acc.totals[g] += sh.totals[k];
-                if g == rows.len() {
-                    rows.push(vec![0.0f64; num_bins]);
-                }
-                global.push(g);
+        |contribs| {
+            for (series, b, ov) in contribs {
+                rows[series as usize][b as usize] += ov;
             }
-            for (slot, b, ov) in sh.contribs {
-                rows[global[slot as usize]][b as usize] += ov;
-            }
-            Ok(rows.len() * num_bins * std::mem::size_of::<f64>()
-                + vec_bytes(&acc.codes, 32))
+            Ok(nseries * num_bins * std::mem::size_of::<f64>())
         },
     )?;
-    let spec = time_profile::rank_census(
-        &acc,
-        |code| names.resolve(code).unwrap_or("").to_string(),
-        top_funcs,
-    );
-    let values = time_profile::collapse_slots(&acc, &spec, &rows, num_bins);
+    ing.stats.census = true;
+    let values = time_profile::values_from_series_rows(&rows, num_bins);
     let bin_edges = (0..=num_bins)
         .map(|b| t0 + (b as f64 * width).round() as i64)
         .collect();
     Ok((TimeProfile { bin_edges, func_names: spec.func_names, values }, ing))
 }
 
-/// Buffered streamed `time_profile` for span-less sources: per-shard
+/// Buffered streamed `time_profile` for census-less sources: per-shard
 /// exclusive segments remap into one stream-wide name interner (fold
-/// order = row order), then the shared census → rank → bin → collapse
-/// stages run over the merged segment list with the stream-wide span.
-/// Partial state is O(segments) — the documented cost of not knowing the
-/// span up front.
+/// order = row order), then the shared census → rank → bin stages run
+/// over the merged segment list with the stream-wide span. Partial
+/// state is O(segments) — the documented cost of knowing neither the
+/// ranking nor the span up front.
 fn time_profile_buffered(
     reader: &mut dyn ShardedReader,
     num_bins: usize,
@@ -687,27 +759,20 @@ fn time_profile_buffered(
     let (t0, t1) = ing.time_range();
     let span = (t1 - t0).max(1) as f64;
     let width = span / num_bins as f64;
-    // bin-axis parallel binning over the buffered segments, exactly like
-    // the eager sharded path (per-cell adds stay in segment order)
+    // bin-axis parallel series binning over the buffered segments,
+    // exactly like the eager sharded path (per-cell adds — including
+    // "other" cells — stay in segment order)
     let bin_ranges = pool::split_ranges(num_bins, super::effective_threads(threads));
     let row_parts = pool::run_indexed(bin_ranges.len(), threads, |i| {
-        Ok(time_profile::bin_segments_slots(
-            &segs,
-            &c.slot_of_code,
-            c.len(),
-            t0,
-            width,
-            num_bins,
-            bin_ranges[i],
-        ))
+        Ok(time_profile::bin_segments_series(&segs, &spec, t0, width, num_bins, bin_ranges[i]))
     })?;
-    let mut rows: Vec<Vec<f64>> = vec![Vec::with_capacity(num_bins); c.len()];
+    let mut rows: Vec<Vec<f64>> = vec![Vec::with_capacity(num_bins); spec.func_names.len()];
     for part in row_parts {
-        for (slot, r) in part.into_iter().enumerate() {
-            rows[slot].extend(r);
+        for (series, r) in part.into_iter().enumerate() {
+            rows[series].extend(r);
         }
     }
-    let values = time_profile::collapse_slots(&c, &spec, &rows, num_bins);
+    let values = time_profile::values_from_series_rows(&rows, num_bins);
     let bin_edges = (0..=num_bins)
         .map(|b| t0 + (b as f64 * width).round() as i64)
         .collect();
@@ -769,21 +834,93 @@ fn shard_bounds(t: &Trace) -> Result<ShardBounds> {
     Ok(Some(((pr[0], th[0], ts[0]), (pr[n - 1], th[n - 1], ts[n - 1]))))
 }
 
-/// Per-shard fold state shared by the streamed `critical_path` and
-/// `lateness`: the global row offset, the per-process run structure, and
-/// the channel queues for end-of-stream matching. Partial memory is
-/// O(processes + message instants) — the row set itself never folds.
-#[derive(Default)]
+/// The streamed message matcher: **windowed pair-and-drain** when the
+/// pre-scan channel census is available (matcher residency bounded by
+/// the open-channel window), end-of-stream buffering otherwise (the
+/// census-less legacy path, O(endpoints)).
+enum StreamMatcher {
+    Windowed(messages::WindowedMatcher),
+    Buffered(ChannelQueues),
+}
+
+impl StreamMatcher {
+    /// Pick the matcher for `reader`'s census. `keep_endpoints` retains
+    /// drained endpoints for the full [`MessageMatch`] output (the
+    /// analyses that only walk `send_of_recv` pass false).
+    fn for_reader(reader: &dyn ShardedReader, keep_endpoints: bool) -> StreamMatcher {
+        match reader.census().and_then(|c| c.channel_map()) {
+            Some(map) => {
+                StreamMatcher::Windowed(messages::WindowedMatcher::new(map, keep_endpoints))
+            }
+            None => StreamMatcher::Buffered(ChannelQueues::new()),
+        }
+    }
+
+    fn is_windowed(&self) -> bool {
+        matches!(self, StreamMatcher::Windowed(_))
+    }
+
+    /// Fold one shard's queues (rows already shifted to their global
+    /// base); `total_rows` is the stream's row count including this
+    /// shard. Errors when the stream contradicts the channel census.
+    fn fold(&mut self, q: ChannelQueues, total_rows: usize) -> Result<()> {
+        match self {
+            StreamMatcher::Windowed(m) => m.fold(q, total_rows),
+            StreamMatcher::Buffered(acc) => {
+                acc.merge(q);
+                Ok(())
+            }
+        }
+    }
+
+    /// Bytes currently held in channel queues — the matcher's partial
+    /// state (windowed: open channels only; buffered: everything).
+    fn queue_bytes(&self) -> usize {
+        match self {
+            StreamMatcher::Windowed(m) => m.queue_bytes(),
+            StreamMatcher::Buffered(acc) => acc.approx_bytes(),
+        }
+    }
+
+    /// End of stream: the assembled match. The windowed matcher drains
+    /// its remaining open channels; the buffered one pairs everything on
+    /// the worker pool.
+    fn finish(self, total_rows: usize, threads: usize) -> Result<MessageMatch> {
+        match self {
+            StreamMatcher::Windowed(m) => Ok(m.finish(total_rows)),
+            StreamMatcher::Buffered(acc) => {
+                super::ops::finish_channel_queues(acc, total_rows, threads)
+            }
+        }
+    }
+}
+
+/// Per-shard fold state shared by the streamed `critical_path`,
+/// `lateness` and `match_messages`: the global row offset, the
+/// per-process run structure, and the stream matcher. With a channel
+/// census the matcher partial memory is O(open channels × window);
+/// census-less streams keep the legacy O(message endpoints).
 struct MsgIngest {
     offset: usize,
     runs: critical_path::ProcRuns,
-    queues: ChannelQueues,
+    matcher: StreamMatcher,
+    peak_queue_bytes: usize,
     /// (Process, Thread, Timestamp) key of the previous shard's last
     /// row, for the cross-boundary canonical-order check.
     prev_last: Option<(i64, i64, i64)>,
 }
 
 impl MsgIngest {
+    fn new(matcher: StreamMatcher) -> Self {
+        MsgIngest {
+            offset: 0,
+            runs: critical_path::ProcRuns::default(),
+            matcher,
+            peak_queue_bytes: 0,
+            prev_last: None,
+        }
+    }
+
     /// Fold one shard's local run structure and channel queues, shifting
     /// local rows to their global base. Bails on any shard-boundary
     /// (Process, Thread, Timestamp) regression the eager engines would
@@ -824,28 +961,66 @@ impl MsgIngest {
             }
         }
         q.shift_rows(base as u32);
-        self.queues.merge(q);
         self.offset += rows;
+        self.matcher.fold(q, self.offset)?;
+        self.peak_queue_bytes = self.peak_queue_bytes.max(self.matcher.queue_bytes());
         Ok(())
     }
 
     /// Approximate accumulated bytes (queues dominate).
     fn approx_bytes(&self) -> usize {
-        self.queues.approx_bytes() + self.runs.procs.len() * 40
+        self.matcher.queue_bytes() + self.runs.procs.len() * 40
     }
+
+    /// Stamp the matcher's census / residency facts onto `stats`.
+    fn stamp(&self, stats: &mut StreamStats) {
+        stats.census = self.matcher.is_windowed();
+        stats.peak_channel_queue_bytes = self.peak_queue_bytes;
+    }
+}
+
+/// Streamed message matching: per-shard channel queues fold into the
+/// stream matcher — windowed pair-and-drain under a channel census,
+/// end-of-stream buffering otherwise — and the full row-indexed
+/// [`MessageMatch`] assembles at end of stream, bit-identical to the
+/// sequential matcher. `StreamStats::census` records which matcher ran;
+/// `peak_channel_queue_bytes` proves the windowed residency bound.
+pub fn match_messages(
+    reader: &mut dyn ShardedReader,
+    threads: usize,
+) -> Result<(MessageMatch, StreamStats)> {
+    let mut acc = MsgIngest::new(StreamMatcher::for_reader(reader, true));
+    let mut ing = drive(
+        reader,
+        threads,
+        |t| {
+            let local = critical_path::proc_runs(t.processes()?, t.timestamps()?);
+            let mut q = ChannelQueues::new();
+            q.collect(t, (0, t.len()), 0)?;
+            Ok((local, q, t.len(), shard_bounds(t)?))
+        },
+        |(local, q, rows, bounds)| {
+            acc.fold(local, q, rows, bounds)?;
+            Ok(acc.approx_bytes())
+        },
+    )?;
+    acc.stamp(&mut ing.stats);
+    let msgs = acc.matcher.finish(acc.offset, threads)?;
+    Ok((msgs, ing.stats))
 }
 
 /// Streamed critical-path analysis: shards contribute their process runs
 /// and channel queues (validated by per-shard caller/callee matching);
-/// matching pairs on the pool at end of stream and the shared backward
-/// walk runs over O(processes + messages) state — the trace itself is
-/// never resident.
+/// the stream matcher pairs channels — draining complete ones during
+/// ingest when the census is available — and the shared backward walk
+/// runs over O(processes + messages) state; the trace itself is never
+/// resident.
 pub fn critical_path(
     reader: &mut dyn ShardedReader,
     threads: usize,
 ) -> Result<(Vec<CriticalPath>, StreamStats)> {
-    let mut acc = MsgIngest::default();
-    let ing = drive(
+    let mut acc = MsgIngest::new(StreamMatcher::for_reader(reader, false));
+    let mut ing = drive(
         reader,
         threads,
         |t| {
@@ -865,7 +1040,8 @@ pub fn critical_path(
     if acc.offset == 0 {
         bail!("empty trace");
     }
-    let msgs = super::ops::finish_channel_queues(acc.queues, acc.offset, threads)?;
+    acc.stamp(&mut ing.stats);
+    let msgs = acc.matcher.finish(acc.offset, threads)?;
     Ok((critical_path::paths_from_runs(&acc.runs, &msgs.send_of_recv), ing.stats))
 }
 
@@ -880,8 +1056,8 @@ pub fn lateness(
 ) -> Result<(Vec<LogicalOp>, StreamStats)> {
     let mut names = Interner::new();
     let mut s = lateness::LeafStructure::default();
-    let mut acc = MsgIngest::default();
-    let ing = drive(
+    let mut acc = MsgIngest::new(StreamMatcher::for_reader(reader, false));
+    let mut ing = drive(
         reader,
         threads,
         |t| {
@@ -914,7 +1090,8 @@ pub fn lateness(
             Ok(acc.approx_bytes() + vec_bytes(&s.calls, 0))
         },
     )?;
-    let msgs = super::ops::finish_channel_queues(acc.queues, acc.offset, threads)?;
+    acc.stamp(&mut ing.stats);
+    let msgs = acc.matcher.finish(acc.offset, threads)?;
     let ops = lateness::lateness_from_structure(s, &msgs.send_of_recv, |c| {
         names.resolve(c).unwrap_or("").to_string()
     });
@@ -1095,15 +1272,17 @@ mod tests {
         let mut r = open_sharded(&out).unwrap();
         let (_, stats) = flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap();
         assert_eq!(stats.shards, 8);
+        // the adaptive cap may read ahead beyond the worker count (up to
+        // 4x it) while partials stay under the byte budget
         assert!(
-            stats.peak_in_flight_shards >= 1 && stats.peak_in_flight_shards <= 4,
-            "in-flight shards must be bounded by the worker count: {stats:?}"
+            stats.peak_in_flight_shards >= 1 && stats.peak_in_flight_shards <= 16,
+            "in-flight shards must be bounded by the adaptive cap: {stats:?}"
         );
         assert!(stats.decode_ms > 0.0, "decode time must be attributed: {stats:?}");
     }
 
     #[test]
-    fn two_pass_time_profile_partial_state_is_bins_not_segments() {
+    fn census_time_profile_partial_state_is_topk_bins_not_segments() {
         let dir = tmp_dir("twopass");
         let t = gen::generate("laghos", &GenConfig::new(8, 6), 1).unwrap();
         let out = dir.join("otf2");
@@ -1111,21 +1290,34 @@ mod tests {
 
         let mut r = open_sharded(&out).unwrap();
         assert!(r.scan_span().unwrap().is_some(), "otf2 extrema must give the span");
+        assert!(r.census().is_some(), "otf2 defs must carry the census");
         let (tp, stats) = time_profile(r.as_mut(), 16, Some(5), 4).unwrap();
         let seq = analysis::time_profile(&mut t.clone(), 16, Some(5)).unwrap();
         assert_eq!(tp.func_names, seq.func_names);
         assert_eq!(tp.bin_edges, seq.bin_edges);
         for (a, b) in tp.values.iter().flatten().zip(seq.values.iter().flatten()) {
-            assert_eq!(a.to_bits(), b.to_bits(), "two-pass binning must be bit-identical");
+            assert_eq!(a.to_bits(), b.to_bits(), "census binning must be bit-identical");
         }
-        // the O(bins) guarantee: accumulated state must be far below the
-        // O(segments) buffer the old driver kept (~rows × 16 bytes)
-        assert!(
-            stats.peak_partial_bytes < stats.total_rows * 8,
-            "partial state not shard-bounded: {stats:?}"
+        assert!(stats.census, "the census path must have run: {stats:?}");
+        // the O(top-k × bins) guarantee: series × 16 bins × 8 bytes
+        assert_eq!(
+            stats.peak_partial_bytes,
+            tp.func_names.len() * 16 * std::mem::size_of::<f64>(),
+            "partial state must be exactly the ranked series rows: {stats:?}"
         );
 
-        // comm_over_time rides the same two-pass protocol
+        // the census-less legacy path (NoCensus) must agree bit-for-bit
+        // and report the miss
+        let mut inner = open_sharded(&out).unwrap();
+        let mut r = crate::readers::streaming::NoCensus::new(inner.as_mut());
+        let (tp_l, stats_l) = time_profile(&mut r, 16, Some(5), 4).unwrap();
+        assert!(!stats_l.census, "NoCensus must force the legacy path");
+        assert_eq!(tp_l.func_names, tp.func_names);
+        for (a, b) in tp_l.values.iter().flatten().zip(tp.values.iter().flatten()) {
+            assert_eq!(a.to_bits(), b.to_bits(), "legacy path must agree bitwise");
+        }
+
+        // comm_over_time rides the span two-pass protocol
         let mut r = open_sharded(&out).unwrap();
         let (cot, stats) = comm_over_time(r.as_mut(), 24, 4).unwrap();
         assert_eq!(cot, analysis::comm_over_time(&t, 24).unwrap());
@@ -1133,6 +1325,52 @@ mod tests {
             stats.peak_partial_bytes <= 24 * 16,
             "comm_over_time partial must be O(bins): {stats:?}"
         );
+
+        // message_histogram derives its width from the census extrema
+        let mut r = open_sharded(&out).unwrap();
+        let (mh, stats) = message_histogram(r.as_mut(), 10, 4).unwrap();
+        assert_eq!(mh, analysis::message_histogram(&t, 10).unwrap());
+        assert!(stats.census, "histogram census path must have run: {stats:?}");
+        assert_eq!(stats.peak_partial_bytes, 10 * std::mem::size_of::<u64>());
+    }
+
+    #[test]
+    fn windowed_matcher_drains_channels_and_matches_buffered() {
+        let dir = tmp_dir("windowed");
+        let t = gen::generate("laghos", &GenConfig::new(8, 12), 1).unwrap();
+        let out = dir.join("otf2");
+        crate::readers::otf2::write(&t, &out).unwrap();
+
+        let mut r = open_sharded(&out).unwrap();
+        let (mm, stats) = match_messages(r.as_mut(), 4).unwrap();
+        assert_eq!(mm, analysis::match_messages(&t).unwrap());
+        assert!(stats.census, "channel census must drive the matcher: {stats:?}");
+        assert!(stats.peak_channel_queue_bytes > 0);
+
+        // the census-less stream holds every endpoint at once; the
+        // windowed matcher must stay well below that
+        let mut inner = open_sharded(&out).unwrap();
+        let mut nc = crate::readers::streaming::NoCensus::new(inner.as_mut());
+        let (mm_l, stats_l) = match_messages(&mut nc, 4).unwrap();
+        assert_eq!(mm_l, mm, "census-less matching must agree");
+        assert!(!stats_l.census);
+        assert!(
+            stats.peak_channel_queue_bytes * 2 < stats_l.peak_channel_queue_bytes,
+            "windowed drain must beat end-of-stream buffering: \
+             windowed {} B vs buffered {} B",
+            stats.peak_channel_queue_bytes,
+            stats_l.peak_channel_queue_bytes
+        );
+
+        // critical_path and lateness ride the same matcher
+        let mut r = open_sharded(&out).unwrap();
+        let (cp, stats) = critical_path(r.as_mut(), 4).unwrap();
+        assert_eq!(cp[0].rows, analysis::critical_path_analysis(&mut t.clone()).unwrap()[0].rows);
+        assert!(stats.census);
+        let mut r = open_sharded(&out).unwrap();
+        let (ops, stats) = lateness(r.as_mut(), 4).unwrap();
+        assert_eq!(ops, analysis::calculate_lateness(&mut t.clone()).unwrap());
+        assert!(stats.census);
     }
 
     #[test]
@@ -1225,6 +1463,7 @@ mod tests {
         assert!(s.contains("decode"), "{s}");
         assert!(s.contains("fold"), "{s}");
         assert!(s.contains("in-flight"), "{s}");
+        assert!(s.contains("census miss"), "fallbacks are census-less: {s}");
         assert!(s.contains("fallback"), "SplitReader summary must flag the fallback: {s}");
     }
 }

@@ -1,0 +1,465 @@
+//! `TraceCensus`: the versioned, reader-agnostic pre-scan metadata record.
+//!
+//! The streamability pre-scans (csv/chrome byte-cursor walks, the otf2
+//! `defs.bin` trailing section written at archive creation) already touch
+//! every record of a trace before any shard decodes. This module gives
+//! that walk a payload worth carrying — the per-interval index idea from
+//! Traveler applied to streamed ingest:
+//!
+//! * **per-block metadata** ([`BlockCensus`]): row count and timestamp
+//!   extrema of every process block / rank shard — the global span folds
+//!   from these, and per-shard facts can be validated against them;
+//! * **function census** ([`FuncTotals`]): every function that produces
+//!   at least one exclusive segment, in *first-seen segment order*, with
+//!   its total exclusive nanoseconds. This is exactly the census + rank
+//!   input of [`crate::analysis::time_profile`], known before ingest —
+//!   so the streamed `time_profile` bins only the top-k + `"other"`
+//!   series directly, retiring its O(all-functions × bins) slot rows;
+//! * **channel census** ([`ChannelCensus`]): per-(src, dst, tag) send /
+//!   recv endpoint counts. The streamed message matcher pairs and drains
+//!   a channel the moment its counts are complete, bounding matcher
+//!   residency to the open-channel window instead of O(endpoints);
+//! * **message-size extrema** ([`MsgCensus`]): the streamed
+//!   `message_histogram` derives its bin width up front and folds
+//!   straight into O(bins) counts, dropping the end-of-stream re-bin.
+//!
+//! The record is versioned ([`CENSUS_VERSION`]) and checksummed where it
+//! is serialized (the otf2 trailing section): a corrupt or truncated
+//! section degrades to "census absent" — the census-less fallback paths
+//! — never to an error or a silently wrong census.
+//!
+//! # Determinism contract
+//!
+//! [`CensusAccum`] reproduces the engines' function census *exactly*: it
+//! buffers each block's Enter/Leave events, stable-sorts them by
+//! (thread, timestamp) — the same canonical sort
+//! [`crate::trace::TraceBuilder::finish`] applies to decoded rows — and
+//! runs the same stack walk as
+//! [`crate::analysis::time_profile::exclusive_segments`]. First-seen
+//! order and integer-ns totals therefore match the decoded trace's
+//! census bit-for-bit, which is what keeps the census-backed streamed
+//! `time_profile` identical to the sequential engine.
+
+use crate::df::Interner;
+use std::collections::HashMap;
+
+/// Current census record version. Serialized censuses with a different
+/// version are ignored (treated as absent), never misparsed.
+pub const CENSUS_VERSION: u64 = 1;
+
+/// Per-block (process block / rank shard) metadata, in shard order.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct BlockCensus {
+    /// Trace rows the block decodes into.
+    pub rows: u64,
+    /// (min, max) timestamp over the block's rows; None for empty blocks.
+    pub span: Option<(i64, i64)>,
+}
+
+/// Stream-wide function census: names in first-seen exclusive-segment
+/// order with total exclusive time — the rank hints for top-k binning.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FuncTotals {
+    /// Function names in first-seen segment order.
+    pub names: Vec<String>,
+    /// Total exclusive nanoseconds per name, same order (integer-valued,
+    /// so folding them as f64 is exact).
+    pub exc_ns: Vec<i64>,
+}
+
+/// One (src, dst, tag) channel's endpoint totals over the whole stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChannelCensus {
+    pub src: i64,
+    pub dst: i64,
+    pub tag: i64,
+    /// Send records the stream will yield on this channel.
+    pub sends: u64,
+    /// Recv records the stream will yield on this channel.
+    pub recvs: u64,
+}
+
+/// Stream-wide message-size extrema (clamped sizes, mirroring the comm
+/// analyses): enough to derive `message_histogram`'s bin width up front.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct MsgCensus {
+    /// Max clamped send size; -1 when no send record exists.
+    pub max_send: i64,
+    /// Max clamped recv size; -1 when no recv record exists.
+    pub max_recv: i64,
+    /// True when any send record with a non-null partner exists — the
+    /// recv-only fallback decision, known before ingest.
+    pub saw_send: bool,
+}
+
+/// The full pre-scan census. Every section is optional: a source can
+/// carry per-block metadata but forfeit the function census (e.g. a row
+/// the decode will reject), and consumers fall back per section.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TraceCensus {
+    pub version: u64,
+    pub blocks: Vec<BlockCensus>,
+    pub funcs: Option<FuncTotals>,
+    pub channels: Option<Vec<ChannelCensus>>,
+    pub msgs: Option<MsgCensus>,
+}
+
+impl TraceCensus {
+    /// Global (min, max) timestamp folded from the per-block extrema;
+    /// None when every block is empty.
+    pub fn span(&self) -> Option<(i64, i64)> {
+        let mut out: Option<(i64, i64)> = None;
+        for b in &self.blocks {
+            if let Some((lo, hi)) = b.span {
+                out = Some(match out {
+                    Some((a, z)) => (a.min(lo), z.max(hi)),
+                    None => (lo, hi),
+                });
+            }
+        }
+        out
+    }
+
+    /// Total rows across all blocks.
+    pub fn total_rows(&self) -> u64 {
+        self.blocks.iter().map(|b| b.rows).sum()
+    }
+
+    /// Channel key → (send count, recv count), for the windowed matcher.
+    pub fn channel_map(&self) -> Option<HashMap<(i64, i64, i64), (u64, u64)>> {
+        self.channels.as_ref().map(|cs| {
+            cs.iter()
+                .map(|c| ((c.src, c.dst, c.tag), (c.sends, c.recvs)))
+                .collect()
+        })
+    }
+}
+
+/// FNV-1a 32-bit checksum — guards the serialized census section against
+/// bit flips (a lying census would silently corrupt the windowed-drain
+/// pairing; a detected one just disables it).
+pub(crate) fn fnv32(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for &b in bytes {
+        h ^= b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// One buffered Enter/Leave event awaiting the block's canonical sort.
+#[derive(Debug, Clone, Copy)]
+struct StackEvent {
+    thread: i64,
+    ts: i64,
+    /// true = Enter, false = Leave.
+    enter: bool,
+    name: u32,
+}
+
+/// Incremental census builder fed by the pre-scans (and the otf2 writer)
+/// one block at a time, in stream order. See the module docs for the
+/// determinism contract.
+#[derive(Debug, Default)]
+pub(crate) struct CensusAccum {
+    names: Interner,
+    /// name code → total exclusive ns, slots in first-seen segment order.
+    slot_of_code: HashMap<u32, usize>,
+    codes: Vec<u32>,
+    totals: Vec<i64>,
+    /// funcs forfeited (a row the decode will reject was seen).
+    forfeited: bool,
+    /// per-(proc, thread) call stacks, exactly as `exclusive_segments`
+    /// keeps them (persist across blocks).
+    stacks: Vec<Vec<(u32, i64)>>,
+    stream_of: HashMap<(i64, i64), usize>,
+    cur_key: Option<(i64, i64)>,
+    cur: usize,
+    /// the block in progress.
+    block_rows: u64,
+    block_span: Option<(i64, i64)>,
+    block_events: Vec<StackEvent>,
+    blocks: Vec<BlockCensus>,
+    /// channel key → (sends, recvs), insertion-ordered for determinism.
+    chan_index: HashMap<(i64, i64, i64), usize>,
+    chan_keys: Vec<(i64, i64, i64)>,
+    chan_counts: Vec<(u64, u64)>,
+    msgs: MsgCensus,
+}
+
+impl CensusAccum {
+    pub(crate) fn new() -> Self {
+        CensusAccum {
+            msgs: MsgCensus { max_send: -1, max_recv: -1, saw_send: false },
+            ..Default::default()
+        }
+    }
+
+    /// Forfeit the census (the decode will reject a row, or an event
+    /// could not be interpreted); block/channel/msg sections are
+    /// forfeited too — a census that might disagree with the decoded
+    /// rows must not exist at all. Everything accumulated so far is
+    /// dropped and every later call becomes a no-op, so a forfeited
+    /// pre-scan costs no more than the plain streamability scan.
+    pub(crate) fn forfeit(&mut self) {
+        *self = CensusAccum { forfeited: true, ..CensusAccum::new() };
+    }
+
+    /// Record one decoded-row contribution to the current block's count
+    /// and extrema. Call once per row the block will decode into.
+    pub(crate) fn row(&mut self, ts: i64) {
+        if self.forfeited {
+            return;
+        }
+        self.block_rows += 1;
+        self.block_span = Some(match self.block_span {
+            Some((lo, hi)) => (lo.min(ts), hi.max(ts)),
+            None => (ts, ts),
+        });
+    }
+
+    /// Buffer an Enter event of the current block.
+    pub(crate) fn enter(&mut self, thread: i64, ts: i64, name: &str) {
+        if self.forfeited {
+            return;
+        }
+        let name = self.names.intern(name);
+        self.block_events.push(StackEvent { thread, ts, enter: true, name });
+    }
+
+    /// Buffer a Leave event of the current block.
+    pub(crate) fn leave(&mut self, thread: i64, ts: i64, name: &str) {
+        if self.forfeited {
+            return;
+        }
+        let name = self.names.intern(name);
+        self.block_events.push(StackEvent { thread, ts, enter: false, name });
+    }
+
+    /// Record a send endpoint (`partner` already in decoded form — pass
+    /// `NULL_I64` only when the decoded row will carry it, in which case
+    /// the matcher skips the row and so does the census).
+    pub(crate) fn send(&mut self, proc: i64, partner: i64, tag: i64, size: i64) {
+        if self.forfeited || partner == crate::df::NULL_I64 {
+            return;
+        }
+        self.msgs.max_send = self.msgs.max_send.max(size.max(0));
+        self.msgs.saw_send = true;
+        let slot = self.chan_slot((proc, partner, tag));
+        self.chan_counts[slot].0 += 1;
+    }
+
+    /// Record a recv endpoint (recv's partner = source rank).
+    pub(crate) fn recv(&mut self, proc: i64, partner: i64, tag: i64, size: i64) {
+        if self.forfeited || partner == crate::df::NULL_I64 {
+            return;
+        }
+        self.msgs.max_recv = self.msgs.max_recv.max(size.max(0));
+        let slot = self.chan_slot((partner, proc, tag));
+        self.chan_counts[slot].1 += 1;
+    }
+
+    fn chan_slot(&mut self, key: (i64, i64, i64)) -> usize {
+        let n = self.chan_keys.len();
+        let slot = *self.chan_index.entry(key).or_insert(n);
+        if slot == n {
+            self.chan_keys.push(key);
+            self.chan_counts.push((0, 0));
+        }
+        slot
+    }
+
+    /// Close the current block (its process id is `proc`): canonically
+    /// sort the buffered Enter/Leave events and run the exclusive-time
+    /// stack walk over them.
+    pub(crate) fn end_block(&mut self, proc: i64) {
+        if self.forfeited {
+            return;
+        }
+        // the same stable (thread, ts) sort TraceBuilder::finish applies
+        // (proc is constant within a block)
+        let mut events = std::mem::take(&mut self.block_events);
+        events.sort_by_key(|e| (e.thread, e.ts));
+        for e in &events {
+            self.walk(proc, e.thread, e.ts, e.enter, e.name);
+        }
+        self.blocks.push(BlockCensus { rows: self.block_rows, span: self.block_span });
+        self.block_rows = 0;
+        self.block_span = None;
+    }
+
+    /// One step of the `exclusive_segments` stack walk.
+    fn walk(&mut self, proc: i64, thread: i64, ts: i64, enter: bool, name: u32) {
+        let key = (proc, thread);
+        if self.cur_key != Some(key) {
+            self.cur_key = Some(key);
+            let stacks = &mut self.stacks;
+            self.cur = *self.stream_of.entry(key).or_insert_with(|| {
+                stacks.push(Vec::new());
+                stacks.len() - 1
+            });
+        }
+        let stack = &mut self.stacks[self.cur];
+        if enter {
+            let emit = match stack.last_mut() {
+                Some((pname, pstart)) => {
+                    let out = if ts > *pstart { Some((*pname, ts - *pstart)) } else { None };
+                    *pstart = ts;
+                    out
+                }
+                None => None,
+            };
+            if let Some((code, dur)) = emit {
+                self.account(code, dur);
+            }
+            self.stacks[self.cur].push((name, ts));
+        } else {
+            let popped = stack.pop();
+            if let Some((cname, cstart)) = popped {
+                if ts > cstart {
+                    self.account(cname, ts - cstart);
+                }
+                if let Some((_, pstart)) = self.stacks[self.cur].last_mut() {
+                    *pstart = ts;
+                }
+            }
+        }
+    }
+
+    /// Account one exclusive segment, assigning the next slot on first
+    /// sight — the engines' first-seen census order.
+    fn account(&mut self, code: u32, dur: i64) {
+        let n = self.codes.len();
+        let slot = *self.slot_of_code.entry(code).or_insert(n);
+        if slot == n {
+            self.codes.push(code);
+            self.totals.push(0);
+        }
+        self.totals[slot] += dur;
+    }
+
+    /// Finish: the assembled census, or None when forfeited. A trailing
+    /// unclosed block also forfeits: its process id is unknown here, and
+    /// guessing one would mis-key the stack walk — callers close every
+    /// block, so this only guards against misuse.
+    pub(crate) fn finish(self) -> Option<TraceCensus> {
+        if self.forfeited || self.block_rows > 0 || !self.block_events.is_empty() {
+            return None;
+        }
+        let funcs = FuncTotals {
+            names: self
+                .codes
+                .iter()
+                .map(|&c| self.names.resolve(c).unwrap_or("").to_string())
+                .collect(),
+            exc_ns: self.totals,
+        };
+        let channels = self
+            .chan_keys
+            .iter()
+            .zip(&self.chan_counts)
+            .map(|(&(src, dst, tag), &(sends, recvs))| ChannelCensus {
+                src,
+                dst,
+                tag,
+                sends,
+                recvs,
+            })
+            .collect();
+        Some(TraceCensus {
+            version: CENSUS_VERSION,
+            blocks: self.blocks,
+            funcs: Some(funcs),
+            channels: Some(channels),
+            msgs: Some(self.msgs),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accum_matches_engine_census_on_a_toy_block() {
+        // main [0,100] with work [20,80] nested: exclusive main = 40,
+        // work = 60 — and main is first-seen (its head segment is cut
+        // when work enters).
+        let mut a = CensusAccum::new();
+        for ts in [0i64, 20, 80, 100] {
+            a.row(ts);
+        }
+        a.enter(0, 0, "main");
+        a.enter(0, 20, "work");
+        a.leave(0, 80, "work");
+        a.leave(0, 100, "main");
+        a.end_block(0);
+        let c = a.finish().unwrap();
+        let f = c.funcs.unwrap();
+        assert_eq!(f.names, vec!["main".to_string(), "work".to_string()]);
+        assert_eq!(f.exc_ns, vec![40, 60]);
+        assert_eq!(c.blocks.len(), 1);
+        assert_eq!(c.blocks[0].rows, 4);
+        assert_eq!(c.blocks[0].span, Some((0, 100)));
+        assert_eq!(c.span(), Some((0, 100)));
+    }
+
+    #[test]
+    fn accum_sorts_blocks_canonically_before_the_walk() {
+        // events arrive in file order (thread 1 first) but the walk must
+        // see the canonical (thread, ts) order
+        let mut a = CensusAccum::new();
+        a.enter(1, 0, "b");
+        a.leave(1, 10, "b");
+        a.enter(0, 0, "a");
+        a.leave(0, 10, "a");
+        a.row(0);
+        a.end_block(7);
+        let f = a.finish().unwrap().funcs.unwrap();
+        // thread 0's "a" sorts first, so it is first-seen
+        assert_eq!(f.names, vec!["a".to_string(), "b".to_string()]);
+    }
+
+    #[test]
+    fn channels_and_msgs_accumulate() {
+        let mut a = CensusAccum::new();
+        a.send(0, 1, 0, 100);
+        a.send(0, 1, 0, 300);
+        a.send(0, 2, 5, -7); // clamped to 0
+        a.recv(1, 0, 0, 300);
+        a.recv(3, crate::df::NULL_I64, 0, 999); // null partner: skipped
+        a.end_block(0);
+        let c = a.finish().unwrap();
+        let chans = c.channels.unwrap();
+        assert_eq!(chans.len(), 2);
+        assert_eq!(
+            chans[0],
+            ChannelCensus { src: 0, dst: 1, tag: 0, sends: 2, recvs: 1 }
+        );
+        assert_eq!(
+            chans[1],
+            ChannelCensus { src: 0, dst: 2, tag: 5, sends: 1, recvs: 0 }
+        );
+        let m = c.msgs.unwrap();
+        assert_eq!(m.max_send, 300);
+        assert_eq!(m.max_recv, 300);
+        assert!(m.saw_send);
+    }
+
+    #[test]
+    fn forfeit_discards_everything() {
+        let mut a = CensusAccum::new();
+        a.enter(0, 0, "main");
+        a.forfeit();
+        a.end_block(0);
+        assert_eq!(a.finish(), None);
+    }
+
+    #[test]
+    fn fnv32_is_stable_and_sensitive() {
+        let h = fnv32(b"census");
+        assert_eq!(h, fnv32(b"census"));
+        assert_ne!(h, fnv32(b"censuX"));
+        assert_ne!(fnv32(b""), fnv32(b"\0"));
+    }
+}

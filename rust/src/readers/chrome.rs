@@ -113,6 +113,24 @@ pub(crate) fn event_pid(e: &Json) -> i64 {
     e.get_f64("pid").unwrap_or(0.0) as i64
 }
 
+/// The tid a row event belongs to (0 when absent, matching the reader).
+pub(crate) fn event_tid(e: &Json) -> i64 {
+    e.get_f64("tid").unwrap_or(0.0) as i64
+}
+
+/// The (partner, size, tag) payload of an instant message event, with
+/// [`apply_event`]'s exact null fallbacks — used by the streaming
+/// pre-scan's channel / message census.
+pub(crate) fn event_msg_args(e: &Json) -> (i64, i64, i64) {
+    let args = e.get("args");
+    let geti = |k: &str| {
+        args.and_then(|a| a.get_f64(k))
+            .map(|v| v as i64)
+            .unwrap_or(NULL_I64)
+    };
+    (geti("partner"), geti("size"), geti("tag"))
+}
+
 /// The ns timestamps a row event contributes to the trace: its `ts`,
 /// plus the end timestamp for `X` events — the exact arithmetic of
 /// [`apply_event`], used by the streaming span pre-pass. The end is None

@@ -138,20 +138,75 @@ pub(crate) fn apply_row(b: &mut TraceBuilder, r: &CsvRow) {
     }
 }
 
-/// Extract just the Process field of a data line (pre-scan fast path for
-/// the streaming reader). None when the field is missing or unparsable.
-pub(crate) fn parse_proc(h: &CsvHeader, line: &str) -> Option<i64> {
-    let f = split_csv_line(line);
-    f.get(h.idx_proc).and_then(|s| s.trim().parse().ok())
+/// Split one data line into fields for [`prescan_row`] — the caller
+/// keeps the buffer so the parsed row can borrow names out of it
+/// (the per-line pre-scan allocates nothing beyond the split itself).
+pub(crate) fn split_fields(line: &str) -> Vec<String> {
+    split_csv_line(line)
 }
 
-/// Extract just the Timestamp field of a data line, scaled to ns exactly
-/// like [`parse_row`] — the streaming span pre-pass. None when missing
-/// or unparsable (the full parse owns producing the error message).
-pub(crate) fn parse_ts(h: &CsvHeader, line: &str) -> Option<i64> {
-    let f = split_csv_line(line);
-    let ts: f64 = f.get(h.idx_ts)?.trim().parse().ok()?;
-    Some((ts * h.ts_scale as f64).round() as i64)
+/// What the streaming pre-scan extracts from one data line — everything
+/// the census needs, parsed with [`parse_row`]'s exact semantics but
+/// leniently: fields whose failure would make the *decode* error are
+/// reported as `None` (the decode owns producing the error message; the
+/// pre-scan merely forfeits the sections that depended on them).
+pub(crate) struct PrescanRow<'a> {
+    pub(crate) proc: i64,
+    pub(crate) thread: i64,
+    /// ns timestamp; None when unparsable (span + census forfeited).
+    pub(crate) ts: Option<i64>,
+    /// Interpreted event; None when the event type is unknown (census
+    /// forfeited — the decode will reject this line).
+    pub(crate) event: Option<PrescanEvent<'a>>,
+}
+
+/// The census-relevant interpretation of one line, mirroring
+/// [`CsvEvent`]: message payload fields fall back to null exactly like
+/// [`parse_row`] does. Names borrow from the caller's field buffer.
+pub(crate) enum PrescanEvent<'a> {
+    Enter(&'a str),
+    Leave(&'a str),
+    Send { partner: i64, size: i64, tag: i64 },
+    Recv { partner: i64, size: i64, tag: i64 },
+    Instant,
+}
+
+/// Parse one pre-split data line ([`split_fields`]) for the pre-scan.
+/// None when the Process field is missing or unparsable (the line is
+/// not groupable — the pre-scan falls back to the eager reader, which
+/// owns the error).
+pub(crate) fn prescan_row<'a>(h: &CsvHeader, f: &'a [String]) -> Option<PrescanRow<'a>> {
+    let get = |i: Option<usize>| i.and_then(|i| f.get(i)).map(|s| s.trim());
+    let proc: i64 = get(Some(h.idx_proc))?.parse().ok()?;
+    let thread: i64 = get(h.idx_thread).and_then(|s| s.parse().ok()).unwrap_or(0);
+    let ts = get(Some(h.idx_ts))
+        .and_then(|s| s.parse::<f64>().ok())
+        .map(|ts| (ts * h.ts_scale as f64).round() as i64);
+    let opt = |i: Option<usize>| {
+        get(i)
+            .filter(|s| !s.is_empty())
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(NULL_I64)
+    };
+    let event = match (get(Some(h.idx_type)), get(Some(h.idx_name))) {
+        (Some(ENTER), Some(name)) => Some(PrescanEvent::Enter(name)),
+        (Some(LEAVE), Some(name)) => Some(PrescanEvent::Leave(name)),
+        (Some(INSTANT), Some(name)) => Some(match name {
+            SEND_EVENT => PrescanEvent::Send {
+                partner: opt(h.idx_partner),
+                size: opt(h.idx_size),
+                tag: opt(h.idx_tag),
+            },
+            RECV_EVENT => PrescanEvent::Recv {
+                partner: opt(h.idx_partner),
+                size: opt(h.idx_size),
+                tag: opt(h.idx_tag),
+            },
+            _ => PrescanEvent::Instant,
+        }),
+        _ => None,
+    };
+    Some(PrescanRow { proc, thread, ts, event })
 }
 
 /// The provenance metadata every CSV read (eager or streamed) attaches.

@@ -18,8 +18,13 @@
 //! ingest: [`open_sharded`] yields process-aligned [`TraceShard`]s
 //! incrementally so the streaming analysis driver
 //! ([`crate::exec::stream`]) runs in memory bounded per shard instead of
-//! per trace.
+//! per trace. The streamability pre-scans also produce a [`TraceCensus`]
+//! ([`census`]): per-block metadata, a function exclusive-time census,
+//! a channel endpoint census and message extrema, known before any
+//! shard decodes — what lets the streamed analyses bin top-k directly
+//! and pair-and-drain message channels during ingest.
 
+pub mod census;
 pub mod chrome;
 pub mod csv;
 pub mod hpctoolkit;
@@ -27,9 +32,10 @@ pub mod otf2;
 pub mod projections;
 pub mod streaming;
 
+pub use census::{BlockCensus, ChannelCensus, FuncTotals, MsgCensus, TraceCensus};
 pub use streaming::{
-    open_planned, open_sharded, plan_sharded, SerialDecode, ShardTask, ShardedReader,
-    StreamPlan, TraceShard,
+    open_planned, open_sharded, plan_sharded, NoCensus, SerialDecode, ShardTask,
+    ShardedReader, StreamPlan, TraceShard,
 };
 
 use crate::trace::Trace;

@@ -16,6 +16,7 @@
 //! decodes rank files on a thread pool ([`super::parallel_map`]) and
 //! concatenates shards in rank order (paper §VI / Fig. 5 center).
 
+use super::census::{fnv32, CensusAccum, TraceCensus, CENSUS_VERSION};
 use crate::df::{Column, Interner, Table, NULL_I64};
 use crate::trace::*;
 use anyhow::{bail, Context, Result};
@@ -34,6 +35,15 @@ const MAGIC: &[u8; 8] = b"OTF2SIM1";
 /// section as "extrema unknown", which disables the cheap span pre-scan
 /// but nothing else.
 const EXTREMA_MARKER: u8 = 0xE5;
+
+/// Marker byte introducing the optional census trailing section (per-rank
+/// row counts, function exclusive-time census, channel endpoint census,
+/// message-size extrema), appended after the extrema section. The section
+/// is length-prefixed, versioned and FNV-checksummed: a corrupt or
+/// truncated section degrades to "census absent" (legacy buffering paths,
+/// surfaced via `StreamStats::fallback`), never to a read error or a
+/// silently wrong census.
+const CENSUS_MARKER: u8 = 0xC6;
 
 // record tags
 const T_ENTER: u8 = 0;
@@ -151,11 +161,15 @@ pub fn write(trace: &Trace, dir: &Path) -> Result<()> {
             None => defs.push(0),
         }
     }
-    std::fs::write(dir.join("defs.bin"), defs)?;
 
     // rank_<r>.bin — events are canonically ordered so one linear pass
-    // suffices; rows of rank r are contiguous per (proc, thread) but we
-    // simply collect per rank.
+    // per rank suffices; the same pass feeds the census accumulator with
+    // the rows exactly as the decoder will reproduce them — thread
+    // flattened to 0 (rank files carry no thread ids), partner / size
+    // clamped, null tags written as 0 — so the census agrees bit-for-bit
+    // with the census an engine would take over the decoded trace. Rank
+    // blocks feed in rank order = shard order.
+    let mut accum = CensusAccum::new();
     for &r in &ranks {
         let mut raw = Vec::new();
         let mut last_ts = 0i64;
@@ -168,32 +182,79 @@ pub fn write(trace: &Trace, dir: &Path) -> Result<()> {
             }
             let dt = (ts[i] - last_ts) as u64;
             last_ts = ts[i];
+            accum.row(ts[i]);
             let code = Some(et[i]);
             if code == enter {
                 raw.push(T_ENTER);
                 put_uvarint(&mut raw, dt);
                 put_uvarint(&mut raw, nm[i] as u64);
+                accum.enter(0, ts[i], ndict.resolve(nm[i]).unwrap_or(""));
             } else if code == leave {
                 raw.push(T_LEAVE);
                 put_uvarint(&mut raw, dt);
                 put_uvarint(&mut raw, nm[i] as u64);
+                accum.leave(0, ts[i], ndict.resolve(nm[i]).unwrap_or(""));
             } else if Some(nm[i]) == send_name || Some(nm[i]) == recv_name {
                 raw.push(if Some(nm[i]) == send_name { T_SEND } else { T_RECV });
                 put_uvarint(&mut raw, dt);
                 put_uvarint(&mut raw, pa[i].max(0) as u64);
                 put_uvarint(&mut raw, ms[i].max(0) as u64);
-                put_uvarint(&mut raw, if tg[i] == NULL_I64 { 0 } else { tg[i] as u64 });
+                let tag = if tg[i] == NULL_I64 { 0 } else { tg[i] };
+                put_uvarint(&mut raw, tag as u64);
+                if Some(nm[i]) == send_name {
+                    accum.send(r, pa[i].max(0), tag, ms[i].max(0));
+                } else {
+                    accum.recv(r, pa[i].max(0), tag, ms[i].max(0));
+                }
             } else {
                 raw.push(T_INSTANT);
                 put_uvarint(&mut raw, dt);
                 put_uvarint(&mut raw, nm[i] as u64);
             }
         }
+        accum.end_block(r);
         let f = std::fs::File::create(dir.join(format!("rank_{r}.bin")))?;
         let mut enc = ZlibEncoder::new(f, Compression::fast());
         enc.write_all(&raw)?;
         enc.finish()?;
     }
+    if let Some(census) = accum.finish() {
+        let mut payload = Vec::new();
+        put_uvarint(&mut payload, CENSUS_VERSION);
+        put_uvarint(&mut payload, census.blocks.len() as u64);
+        for b in &census.blocks {
+            put_uvarint(&mut payload, b.rows);
+        }
+        // function names reference the string table just written above
+        let funcs = census.funcs.as_ref().expect("writer census never forfeits");
+        put_uvarint(&mut payload, funcs.names.len() as u64);
+        for (name, ns) in funcs.names.iter().zip(&funcs.exc_ns) {
+            let code = ndict
+                .code_of(name)
+                .context("census function missing from the string table")?;
+            put_uvarint(&mut payload, code as u64);
+            put_uvarint(&mut payload, (*ns).max(0) as u64);
+        }
+        let chans = census.channels.as_ref().expect("writer census never forfeits");
+        put_uvarint(&mut payload, chans.len() as u64);
+        for c in chans {
+            // all ids are clamped non-negative above, tags null-mapped to 0
+            put_uvarint(&mut payload, c.src.max(0) as u64);
+            put_uvarint(&mut payload, c.dst.max(0) as u64);
+            put_uvarint(&mut payload, c.tag.max(0) as u64);
+            put_uvarint(&mut payload, c.sends);
+            put_uvarint(&mut payload, c.recvs);
+        }
+        let m = census.msgs.expect("writer census never forfeits");
+        payload.push(m.saw_send as u8);
+        put_uvarint(&mut payload, (m.max_send + 1) as u64); // -1 (none) -> 0
+        put_uvarint(&mut payload, (m.max_recv + 1) as u64);
+        defs.push(CENSUS_MARKER);
+        put_uvarint(&mut defs, (payload.len() + 4) as u64);
+        defs.extend_from_slice(&payload);
+        defs.extend_from_slice(&fnv32(&payload).to_le_bytes());
+    }
+    std::fs::write(dir.join("defs.bin"), defs)?;
     Ok(())
 }
 
@@ -207,6 +268,14 @@ pub(crate) struct Defs {
     /// archives written before the section existed (span pre-scan
     /// unavailable) or for ranks with no events.
     pub(crate) extrema: Option<Vec<Option<(i64, i64)>>>,
+    /// The pre-scan census from the trailing section; None for archives
+    /// written before the section existed, for unknown future versions,
+    /// and for corrupt sections (see `census_corrupt`).
+    pub(crate) census: Option<TraceCensus>,
+    /// True when a census section was present but failed its length /
+    /// checksum / payload validation: consumers run their census-less
+    /// legacy paths and surface the degradation instead of erroring.
+    pub(crate) census_corrupt: bool,
     send_code: u32,
     recv_code: u32,
 }
@@ -289,10 +358,130 @@ pub(crate) fn read_defs(dir: &Path) -> Result<Defs> {
     } else {
         None
     };
+    // optional census trailing section: strictly lenient — whatever goes
+    // wrong past this point degrades to census-absent (flagged), never to
+    // a read error, so a damaged trailer can't take the archive down
+    let (census, census_corrupt) = if pos < buf.len() {
+        parse_census_section(&buf, pos, nranks, &names, &extrema)
+    } else {
+        (None, false)
+    };
     // ensure message event names exist even in traces without messages
     let send_code = names.intern(SEND_EVENT);
     let recv_code = names.intern(RECV_EVENT);
-    Ok(Defs { app, ranks, names: Arc::new(names), extrema, send_code, recv_code })
+    Ok(Defs {
+        app,
+        ranks,
+        names: Arc::new(names),
+        extrema,
+        census,
+        census_corrupt,
+        send_code,
+        recv_code,
+    })
+}
+
+/// Parse the census trailing section starting at `pos` (at its marker
+/// byte). Returns `(census, corrupt)`: `(None, true)` for any anomaly —
+/// wrong marker, truncated length, checksum mismatch, malformed payload —
+/// and `(None, false)` only for an intact section of an unknown future
+/// version (forward compatibility, not damage).
+fn parse_census_section(
+    buf: &[u8],
+    mut pos: usize,
+    nranks: usize,
+    names: &Interner,
+    extrema: &Option<Vec<Option<(i64, i64)>>>,
+) -> (Option<TraceCensus>, bool) {
+    let corrupt = (None, true);
+    if buf[pos] != CENSUS_MARKER {
+        return corrupt;
+    }
+    pos += 1;
+    let Ok(len) = get_uvarint(buf, &mut pos) else { return corrupt };
+    let Some(end) = pos.checked_add(len as usize) else { return corrupt };
+    if end > buf.len() || len < 4 {
+        return corrupt;
+    }
+    let body_end = end - 4;
+    let want = u32::from_le_bytes([
+        buf[body_end],
+        buf[body_end + 1],
+        buf[body_end + 2],
+        buf[body_end + 3],
+    ]);
+    if fnv32(&buf[pos..body_end]) != want {
+        return corrupt;
+    }
+    // checksum holds: parse the payload strictly within [pos, body_end)
+    let body = &buf[..body_end];
+    let mut p = pos;
+    let parsed = (|| -> Result<Option<TraceCensus>> {
+        let version = get_uvarint(body, &mut p)?;
+        if version != CENSUS_VERSION {
+            return Ok(None); // future version: intact but unknown
+        }
+        let nblocks = get_uvarint(body, &mut p)? as usize;
+        if nblocks != nranks {
+            bail!("census block count disagrees with rank count");
+        }
+        let mut blocks = Vec::with_capacity(nblocks);
+        for i in 0..nblocks {
+            let rows = get_uvarint(body, &mut p)?;
+            let span = extrema.as_ref().and_then(|ex| ex.get(i).copied().flatten());
+            blocks.push(super::census::BlockCensus { rows, span });
+        }
+        let nfuncs = get_uvarint(body, &mut p)? as usize;
+        if nfuncs > names.len() {
+            bail!("census function count exceeds the string table");
+        }
+        let mut fnames = Vec::with_capacity(nfuncs);
+        let mut exc_ns = Vec::with_capacity(nfuncs);
+        for _ in 0..nfuncs {
+            let code = get_uvarint(body, &mut p)? as u32;
+            let name = names
+                .resolve(code)
+                .context("census function ref out of range")?;
+            fnames.push(name.to_string());
+            exc_ns.push(get_uvarint(body, &mut p)? as i64);
+        }
+        let nchans = get_uvarint(body, &mut p)? as usize;
+        if nchans > 100_000_000 {
+            bail!("implausible census channel count");
+        }
+        let mut channels = Vec::with_capacity(nchans);
+        for _ in 0..nchans {
+            let src = get_uvarint(body, &mut p)? as i64;
+            let dst = get_uvarint(body, &mut p)? as i64;
+            let tag = get_uvarint(body, &mut p)? as i64;
+            let sends = get_uvarint(body, &mut p)?;
+            let recvs = get_uvarint(body, &mut p)?;
+            channels.push(super::census::ChannelCensus { src, dst, tag, sends, recvs });
+        }
+        let saw_send = match body.get(p) {
+            Some(0) => false,
+            Some(1) => true,
+            _ => bail!("bad census saw_send flag"),
+        };
+        p += 1;
+        let max_send = get_uvarint(body, &mut p)? as i64 - 1;
+        let max_recv = get_uvarint(body, &mut p)? as i64 - 1;
+        if p != body_end {
+            bail!("census payload has trailing bytes");
+        }
+        Ok(Some(TraceCensus {
+            version,
+            blocks,
+            funcs: Some(super::census::FuncTotals { names: fnames, exc_ns }),
+            channels: Some(channels),
+            msgs: Some(super::census::MsgCensus { max_send, max_recv, saw_send }),
+        }))
+    })();
+    match parsed {
+        Ok(Some(c)) => (Some(c), false),
+        Ok(None) => (None, false),
+        Err(_) => corrupt,
+    }
 }
 
 /// Columnar shard for one rank (already in canonical order).

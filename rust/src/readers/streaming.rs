@@ -55,9 +55,10 @@
 //! [`crate::exec::stream`] relies on to stay bit-identical with eager
 //! `read_auto` + sequential analysis.
 
+use super::census::{CensusAccum, TraceCensus};
 use super::{chrome, csv, otf2};
 use crate::df::Interner;
-use crate::trace::{Trace, TraceBuilder, TraceMeta};
+use crate::trace::{Trace, TraceBuilder, TraceMeta, RECV_EVENT, SEND_EVENT};
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::io::{BufRead, Read, Seek, SeekFrom};
@@ -77,6 +78,11 @@ pub struct TraceShard {
 pub struct ShardTask {
     /// Position in the stream (0-based); task order is row order.
     pub index: usize,
+    /// Payload bytes carried by the task until decoded (compressed rank
+    /// bytes, block byte ranges — or the decoded trace's heap size for
+    /// inline-decoded fallbacks) — what the adaptive read-ahead gate
+    /// budgets.
+    bytes: usize,
     decode: Box<dyn FnOnce() -> Result<Trace> + Send>,
 }
 
@@ -90,6 +96,11 @@ impl ShardTask {
     pub fn into_shard(self) -> Result<TraceShard> {
         let index = self.index;
         Ok(TraceShard { index, trace: self.decode()? })
+    }
+
+    /// Raw payload bytes this task holds until decoded.
+    pub fn payload_bytes(&self) -> usize {
+        self.bytes
     }
 }
 
@@ -106,7 +117,11 @@ pub trait ShardedReader {
     fn next_task(&mut self) -> Result<Option<ShardTask>> {
         Ok(self.next_shard()?.map(|sh| {
             let trace = sh.trace;
-            ShardTask { index: sh.index, decode: Box::new(move || Ok(trace)) }
+            // the payload here is the already-decoded trace: report its
+            // heap size so the adaptive read-ahead gate sees it (a 0
+            // would let 4× workers of decoded shards queue unbudgeted)
+            let bytes = trace.events.heap_bytes();
+            ShardTask { index: sh.index, bytes, decode: Box::new(move || Ok(trace)) }
         }))
     }
 
@@ -118,6 +133,26 @@ pub trait ShardedReader {
     /// as before the two-pass protocol.
     fn scan_span(&mut self) -> Result<Option<(i64, i64)>> {
         Ok(None)
+    }
+
+    /// The pre-scan [`TraceCensus`] (per-block metadata, function census
+    /// with exclusive-time rank hints, channel endpoint census, message
+    /// extrema), known **before** any shard decodes: csv/chrome lift it
+    /// from the same byte-cursor pre-scan that finds block boundaries;
+    /// otf2 reads the `defs.bin` census trailing section. None when the
+    /// source cannot provide it (old archives, forfeited pre-scans,
+    /// split-after-load fallbacks) — consumers then run their census-less
+    /// legacy paths, exactly as before the census existed.
+    fn census(&self) -> Option<&TraceCensus> {
+        None
+    }
+
+    /// True when the source carried a census that failed validation
+    /// (corrupt / truncated otf2 trailing section): the census-less
+    /// legacy paths run, and drivers surface the degradation via
+    /// `StreamStats::fallback` instead of erroring.
+    fn census_corrupt(&self) -> bool {
+        false
     }
 
     /// Number of shards this reader will yield, when known up front.
@@ -164,6 +199,52 @@ impl ShardedReader for SerialDecode<'_> {
         self.0.scan_span()
     }
 
+    fn census(&self) -> Option<&TraceCensus> {
+        self.0.census()
+    }
+
+    fn census_corrupt(&self) -> bool {
+        self.0.census_corrupt()
+    }
+
+    fn shard_count_hint(&self) -> Option<usize> {
+        self.0.shard_count_hint()
+    }
+
+    fn is_streaming(&self) -> bool {
+        self.0.is_streaming()
+    }
+}
+
+/// Adapter hiding the pre-scan census: analyses run their census-less
+/// legacy paths (end-of-stream channel buffering, all-slot time-profile
+/// rows, histogram re-bin) with everything else — span pre-pass, shard
+/// tasks — unchanged. Benchmarks use it as the baseline the census paths
+/// are gated against; parity tests use it to prove the census changes no
+/// bits.
+pub struct NoCensus<'a>(&'a mut dyn ShardedReader);
+
+impl<'a> NoCensus<'a> {
+    pub fn new(inner: &'a mut dyn ShardedReader) -> Self {
+        NoCensus(inner)
+    }
+}
+
+impl ShardedReader for NoCensus<'_> {
+    fn next_shard(&mut self) -> Result<Option<TraceShard>> {
+        self.0.next_shard()
+    }
+
+    fn next_task(&mut self) -> Result<Option<ShardTask>> {
+        self.0.next_task()
+    }
+
+    fn scan_span(&mut self) -> Result<Option<(i64, i64)>> {
+        self.0.scan_span()
+    }
+
+    // census / census_corrupt: trait defaults — the census stays hidden.
+
     fn shard_count_hint(&self) -> Option<usize> {
         self.0.shard_count_hint()
     }
@@ -203,6 +284,9 @@ pub struct CsvPlan {
     /// Stream-wide (min, max) ns timestamp; None when some row's
     /// timestamp did not parse (the full decode owns that error).
     span: Option<(i64, i64)>,
+    /// The pre-scan census; None when a row the decode will reject was
+    /// seen (census-less fallbacks run, the decode owns the error).
+    census: Option<TraceCensus>,
 }
 
 impl CsvPlan {
@@ -225,6 +309,9 @@ pub struct ChromePlan {
     /// Stream-wide (min, max) ns timestamp over every row the events
     /// produce (X events contribute `ts` and `ts + dur`).
     span: Option<(i64, i64)>,
+    /// The pre-scan census; None when an event the decode will reject
+    /// was seen (census-less fallbacks run, the decode owns the error).
+    census: Option<TraceCensus>,
 }
 
 impl ChromePlan {
@@ -392,8 +479,10 @@ impl ShardedReader for Otf2ShardedReader {
             source: self.dir.display().to_string(),
             app: self.defs.app.clone(),
         };
+        let bytes = raw.len();
         Ok(Some(ShardTask {
             index,
+            bytes,
             decode: Box::new(move || {
                 let sh = otf2::decode_rank(&raw, rank, &defs, &etypes)?;
                 let table = otf2::shard_table(sh, &defs.names, &etype_dict)?;
@@ -407,6 +496,14 @@ impl ShardedReader for Otf2ShardedReader {
         Ok(self.defs.span())
     }
 
+    fn census(&self) -> Option<&TraceCensus> {
+        self.defs.census.as_ref()
+    }
+
+    fn census_corrupt(&self) -> bool {
+        self.defs.census_corrupt
+    }
+
     fn shard_count_hint(&self) -> Option<usize> {
         Some(self.defs.ranks.len())
     }
@@ -418,11 +515,12 @@ impl ShardedReader for Otf2ShardedReader {
 
 // -- csv: pre-scanned block byte ranges -------------------------------------
 
-/// Streamability pre-scan: one pass over the file parsing only the
-/// Process field (grouping) and Timestamp field (span, best-effort) of
-/// every line, recording each block's byte offset. `Ok(None)` requests
-/// the eager fallback (which also owns producing proper errors for
-/// malformed files).
+/// Streamability pre-scan: one pass over the file parsing every line's
+/// fields leniently — the Process field (grouping), the Timestamp field
+/// (span + per-block extrema), and the event interpretation (function /
+/// channel / message census). `Ok(None)` requests the eager fallback
+/// (which also owns producing proper errors for malformed files); a line
+/// the decode will reject forfeits only the census, not streamability.
 fn csv_prescan(path: &Path) -> Result<Option<CsvPlan>> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("reading {}", path.display()))?;
@@ -441,6 +539,7 @@ fn csv_prescan(path: &Path) -> Result<Option<CsvPlan>> {
     let mut last: Option<i64> = None;
     let mut span: Option<(i64, i64)> = None;
     let mut span_ok = true;
+    let mut accum = CensusAccum::new();
     loop {
         line.clear();
         let start = offset;
@@ -453,25 +552,15 @@ fn csv_prescan(path: &Path) -> Result<Option<CsvPlan>> {
         if line.trim().is_empty() {
             continue;
         }
-        let Some(p) = csv::parse_proc(&h, &line) else {
+        let fields = csv::split_fields(&line);
+        let Some(row) = csv::prescan_row(&h, &fields) else {
             return Ok(None);
         };
-        if span_ok {
-            match csv::parse_ts(&h, &line) {
-                Some(ts) => {
-                    span = Some(match span {
-                        Some((lo, hi)) => (lo.min(ts), hi.max(ts)),
-                        None => (ts, ts),
-                    })
-                }
-                // unparsable timestamp: the decode will error with the
-                // proper message; only the span pre-pass is forfeited
-                None => span_ok = false,
-            }
-        }
+        let p = row.proc;
         match last {
             Some(q) if p == q => {}
             Some(q) if p > q => {
+                accum.end_block(q);
                 blocks.push((start, line_no));
                 last = Some(p);
             }
@@ -481,8 +570,48 @@ fn csv_prescan(path: &Path) -> Result<Option<CsvPlan>> {
                 last = Some(p);
             }
         }
+        match row.ts {
+            Some(ts) => {
+                if span_ok {
+                    span = Some(match span {
+                        Some((lo, hi)) => (lo.min(ts), hi.max(ts)),
+                        None => (ts, ts),
+                    });
+                }
+                accum.row(ts);
+            }
+            // unparsable timestamp: the decode will error with the
+            // proper message; span and census are forfeited
+            None => {
+                span_ok = false;
+                accum.forfeit();
+            }
+        }
+        match (row.ts, row.event) {
+            (Some(ts), Some(ev)) => match ev {
+                csv::PrescanEvent::Enter(name) => accum.enter(row.thread, ts, name),
+                csv::PrescanEvent::Leave(name) => accum.leave(row.thread, ts, name),
+                csv::PrescanEvent::Send { partner, size, tag } => {
+                    accum.send(p, partner, tag, size)
+                }
+                csv::PrescanEvent::Recv { partner, size, tag } => {
+                    accum.recv(p, partner, tag, size)
+                }
+                csv::PrescanEvent::Instant => {}
+            },
+            // uninterpretable event: the decode will reject this line
+            (_, None) => accum.forfeit(),
+            (None, _) => {}
+        }
     }
-    Ok(Some(CsvPlan { blocks, span: if span_ok { span } else { None } }))
+    if let Some(q) = last {
+        accum.end_block(q);
+    }
+    Ok(Some(CsvPlan {
+        blocks,
+        span: if span_ok { span } else { None },
+        census: accum.finish(),
+    }))
 }
 
 /// Parse one pre-scanned csv block (complete lines) into a shard trace.
@@ -555,14 +684,20 @@ impl ShardedReader for CsvBlocks {
         self.file.read_exact(&mut bytes)?;
         let header = Arc::clone(&self.header);
         let meta = self.meta.clone();
+        let len = bytes.len();
         Ok(Some(ShardTask {
             index,
+            bytes: len,
             decode: Box::new(move || decode_csv_block(&bytes, &header, meta, first_line)),
         }))
     }
 
     fn scan_span(&mut self) -> Result<Option<(i64, i64)>> {
         Ok(self.plan.span)
+    }
+
+    fn census(&self) -> Option<&TraceCensus> {
+        self.plan.census.as_ref()
     }
 
     fn shard_count_hint(&self) -> Option<usize> {
@@ -578,10 +713,15 @@ impl ShardedReader for CsvBlocks {
 
 /// Streamability pre-scan over a sliding disk window: walk every event
 /// object (never holding the whole file), collect the application name
-/// from metadata records, the stream-wide span, and the byte offset +
-/// event index of each pid block's first row event. None requests the
-/// eager fallback (including for malformed files, whose errors the eager
-/// reader reports properly).
+/// from metadata records, the stream-wide span, the byte offset + event
+/// index of each pid block's first row event, and the census. None
+/// requests the eager fallback (including for malformed files, whose
+/// errors the eager reader reports properly).
+///
+/// Census memory note: the function census buffers each pid block's
+/// Enter/Leave tuples (16 B each) so they can be canonically re-sorted —
+/// O(largest block) compact tuples, far below the decoded shard the
+/// ingest holds anyway; the sliding window itself stays O(chunk).
 fn chrome_prescan(path: &Path) -> Result<Option<ChromePlan>> {
     let mut cur = DiskCursor::open(path)?;
     let Ok(start) = find_events_array_cursor(&mut cur) else {
@@ -595,6 +735,7 @@ fn chrome_prescan(path: &Path) -> Result<Option<ChromePlan>> {
     let mut event_idx = 0usize;
     let mut span: Option<(i64, i64)> = None;
     let mut span_ok = true;
+    let mut accum = CensusAccum::new();
     loop {
         // everything before the next event is consumed: slide the window
         cur.compact(pos);
@@ -620,10 +761,24 @@ fn chrome_prescan(path: &Path) -> Result<Option<ChromePlan>> {
             }
             continue;
         }
+        let pid = chrome::event_pid(&ev);
+        match last {
+            Some(q) if pid == q => {}
+            Some(q) if pid > q => {
+                accum.end_block(q);
+                blocks.push((s, idx));
+                last = Some(pid);
+            }
+            Some(_) => return Ok(None),
+            None => {
+                blocks.push((s, idx));
+                last = Some(pid);
+            }
+        }
+        let (ts, te) = chrome::row_event_times(&ev);
+        let ph = ev.get_str("ph").unwrap_or("X");
         if span_ok {
-            let (ts, te) = chrome::row_event_times(&ev);
-            let is_x = ev.get_str("ph").unwrap_or("X") == "X";
-            match (te, is_x) {
+            match (te, ph == "X") {
                 // X without dur: the decode will error; span forfeited
                 (None, true) => span_ok = false,
                 (te, _) => {
@@ -636,21 +791,50 @@ fn chrome_prescan(path: &Path) -> Result<Option<ChromePlan>> {
                 }
             }
         }
-        let pid = chrome::event_pid(&ev);
-        match last {
-            Some(q) if pid == q => {}
-            Some(q) if pid > q => {
-                blocks.push((s, idx));
-                last = Some(pid);
+        // census: mirror `chrome::apply_event`'s row production exactly
+        let name = ev.get_str("name").unwrap_or("<unnamed>");
+        let tid = chrome::event_tid(&ev);
+        match ph {
+            "B" => {
+                accum.row(ts);
+                accum.enter(tid, ts, name);
             }
-            Some(_) => return Ok(None),
-            None => {
-                blocks.push((s, idx));
-                last = Some(pid);
+            "E" => {
+                accum.row(ts);
+                accum.leave(tid, ts, name);
+            }
+            "X" => match te {
+                Some(te) => {
+                    accum.row(ts);
+                    accum.row(te);
+                    accum.enter(tid, ts, name);
+                    accum.leave(tid, te, name);
+                }
+                // the decode will reject this event
+                None => accum.forfeit(),
+            },
+            _ => {
+                // instant phases (i / I / R)
+                accum.row(ts);
+                let (partner, size, tag) = chrome::event_msg_args(&ev);
+                match name {
+                    SEND_EVENT | "ncclSend" => accum.send(pid, partner, tag, size),
+                    RECV_EVENT | "ncclRecv" => accum.recv(pid, partner, tag, size),
+                    _ => {}
+                }
             }
         }
     }
-    Ok(Some(ChromePlan { app, blocks, end, span: if span_ok { span } else { None } }))
+    if let Some(q) = last {
+        accum.end_block(q);
+    }
+    Ok(Some(ChromePlan {
+        app,
+        blocks,
+        end,
+        span: if span_ok { span } else { None },
+        census: accum.finish(),
+    }))
 }
 
 /// Parse one pre-scanned chrome block (complete `{...}` events separated
@@ -727,14 +911,20 @@ impl ShardedReader for ChromeBlocks {
         let mut bytes = vec![0u8; (end - start) as usize];
         self.file.read_exact(&mut bytes)?;
         let meta = self.meta.clone();
+        let len = bytes.len();
         Ok(Some(ShardTask {
             index,
+            bytes: len,
             decode: Box::new(move || decode_chrome_block(&bytes, meta, first_idx)),
         }))
     }
 
     fn scan_span(&mut self) -> Result<Option<(i64, i64)>> {
         Ok(self.plan.span)
+    }
+
+    fn census(&self) -> Option<&TraceCensus> {
+        self.plan.census.as_ref()
     }
 
     fn shard_count_hint(&self) -> Option<usize> {
@@ -1463,6 +1653,99 @@ mod tests {
         let mut r = open_planned(&p, &plan).unwrap();
         let err = r.next_shard().unwrap_err();
         assert!(err.to_string().contains("bad timestamp"), "{err}");
+    }
+
+    /// The pre-scan census must reproduce the engine census exactly —
+    /// same function names in the same first-seen segment order, same
+    /// integer-ns exclusive totals — and its block / channel / message
+    /// sections must agree with the decoded rows, on every census-
+    /// carrying format.
+    #[test]
+    fn prescan_census_matches_engine_census() {
+        let t = gen::generate("laghos", &GenConfig::new(5, 4), 1).unwrap();
+        let dir = tmp("census_dir");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let csv_p = dir.join("c.csv");
+        csv::write(&t, &csv_p).unwrap();
+        let json_p = dir.join("c.json");
+        chrome::write(&t, &json_p).unwrap();
+        let otf2_p = dir.join("c_otf2");
+        otf2::write(&t, &otf2_p).unwrap();
+
+        for p in [&csv_p, &json_p, &otf2_p] {
+            let eager = read_auto(p).unwrap();
+            let segs =
+                crate::analysis::time_profile::exclusive_segments(&mut eager.clone()).unwrap();
+            let engine = crate::analysis::time_profile::census(&segs);
+            let (_, dict) = eager.events.strs(crate::trace::COL_NAME).unwrap();
+            let want_names: Vec<String> = engine
+                .codes
+                .iter()
+                .map(|&c| dict.resolve(c).unwrap_or("").to_string())
+                .collect();
+            let want_totals: Vec<i64> =
+                engine.totals.iter().map(|&v| v as i64).collect();
+
+            let r = open_sharded(p).unwrap();
+            let census = r.census().unwrap_or_else(|| {
+                panic!("{}: census must be available", p.display())
+            });
+            let funcs = census.funcs.as_ref().unwrap();
+            assert_eq!(funcs.names, want_names, "{}", p.display());
+            assert_eq!(funcs.exc_ns, want_totals, "{}", p.display());
+
+            // block metadata agrees with the decoded rows
+            assert_eq!(census.total_rows() as usize, eager.len(), "{}", p.display());
+            assert_eq!(census.span(), Some(eager.time_range().unwrap()), "{}", p.display());
+
+            // channel census totals equal the matcher's endpoint counts
+            let mm = crate::analysis::match_messages(&eager).unwrap();
+            let chans = census.channels.as_ref().unwrap();
+            let sends: u64 = chans.iter().map(|c| c.sends).sum();
+            let recvs: u64 = chans.iter().map(|c| c.recvs).sum();
+            assert_eq!(sends as usize, mm.sends.len(), "{}", p.display());
+            assert_eq!(recvs as usize, mm.recvs.len(), "{}", p.display());
+        }
+    }
+
+    #[test]
+    fn prescan_census_forfeits_on_undecodable_rows_but_still_streams() {
+        // an unknown event type makes the decode error; the census must
+        // be forfeited while the plan still streams (the decode owns the
+        // error message)
+        let src = "Timestamp (ns), Event Type, Name, Process\n\
+                   0, Enter, main, 0\n\
+                   5, Explode, main, 0\n\
+                   9, Leave, main, 0\n";
+        let p = tmp("census_forfeit.csv");
+        std::fs::write(&p, src).unwrap();
+        match plan_sharded(&p).unwrap() {
+            StreamPlan::Csv(cp) => {
+                assert_eq!(cp.runs(), 1);
+                assert!(cp.census.is_none(), "undecodable row must forfeit the census");
+                // the timestamps all parsed, so the span survives
+                assert_eq!(cp.span, Some((0, 9)));
+            }
+            other => panic!("expected csv plan, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn no_census_adapter_hides_the_census_only() {
+        let t = gen::generate("gol", &GenConfig::new(3, 2), 1).unwrap();
+        let p = tmp("nocensus.csv");
+        csv::write(&t, &p).unwrap();
+        let mut inner = open_sharded(&p).unwrap();
+        assert!(inner.census().is_some());
+        let mut r = NoCensus::new(inner.as_mut());
+        assert!(r.census().is_none());
+        assert!(!r.census_corrupt());
+        assert!(r.is_streaming());
+        assert_eq!(r.scan_span().unwrap(), Some(t.time_range().unwrap()));
+        let (ts, _, _, shards) = drain(&mut r);
+        assert_eq!(shards, 3);
+        assert_eq!(ts, t.timestamps().unwrap());
     }
 
     #[test]

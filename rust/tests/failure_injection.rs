@@ -21,9 +21,94 @@ fn otf2_truncated_defs() {
     let dir = tmp("trunc_defs");
     write_sample_otf2(&dir);
     let full = std::fs::read(dir.join("defs.bin")).unwrap();
-    for cut in [0usize, 4, 8, 9, full.len() / 2] {
+    // cuts land in the header / rank list / string table — all required
+    // sections whose truncation must error (the optional census trailer
+    // at the END is the one section that degrades instead; see
+    // otf2_corrupt_census_falls_back_to_legacy_paths)
+    for cut in [0usize, 4, 8, 9, 16, 20] {
         std::fs::write(dir.join("defs.bin"), &full[..cut]).unwrap();
         assert!(otf2::read(&dir, 1).is_err(), "cut at {cut} must fail");
+    }
+}
+
+/// A corrupt or truncated census trailing section must degrade to the
+/// census-less legacy buffering paths with `StreamStats::fallback` set —
+/// never error, never use a damaged census. Looped like the
+/// poisoned-shard tests to prove the degradation is deterministic.
+#[test]
+fn otf2_corrupt_census_falls_back_to_legacy_paths() {
+    use pipit::analysis::{self, Metric};
+    use pipit::exec::stream;
+    use pipit::readers::streaming::open_sharded;
+
+    let dir = tmp("corrupt_census");
+    let t = gen::generate("laghos", &GenConfig::new(4, 3), 1).unwrap();
+    otf2::write(&t, &dir).unwrap();
+    let full = std::fs::read(dir.join("defs.bin")).unwrap();
+
+    // the intact archive carries a census
+    {
+        let r = open_sharded(&dir).unwrap();
+        assert!(r.census().is_some(), "premise: fresh archive has a census");
+        assert!(!r.census_corrupt());
+    }
+
+    let seq_tp = analysis::time_profile(&mut t.clone(), 16, Some(3)).unwrap();
+    let seq_cp = analysis::critical_path_analysis(&mut t.clone()).unwrap();
+    let seq_fp = analysis::flat_profile(&mut t.clone(), Metric::ExcTime).unwrap();
+
+    // truncations inside the census trailer + bit flips near the end
+    // (payload and checksum bytes)
+    let mut variants: Vec<Vec<u8>> = vec![
+        full[..full.len() - 1].to_vec(),
+        full[..full.len() - 7].to_vec(),
+        full[..full.len() - 19].to_vec(),
+    ];
+    for k in [2usize, 11, 23] {
+        let mut v = full.clone();
+        let i = v.len() - k;
+        v[i] ^= 0x5A;
+        variants.push(v);
+    }
+    for (vi, bytes) in variants.iter().enumerate() {
+        std::fs::write(dir.join("defs.bin"), bytes).unwrap();
+        // the eager reader must still accept the archive
+        let eager = otf2::read(&dir, 1).unwrap();
+        assert_eq!(eager.len(), t.len(), "variant {vi}");
+        // looped determinism: every open degrades identically
+        for round in 0..8 {
+            let mut r = open_sharded(&dir).unwrap();
+            assert!(r.is_streaming(), "variant {vi} round {round}");
+            assert!(
+                r.census().is_none(),
+                "variant {vi} round {round}: damaged census must not be used"
+            );
+            assert!(
+                r.census_corrupt(),
+                "variant {vi} round {round}: the damage must be detected"
+            );
+            let (tp, stats) = stream::time_profile(r.as_mut(), 16, Some(3), 4).unwrap();
+            assert_eq!(tp.func_names, seq_tp.func_names, "variant {vi} round {round}");
+            for (a, b) in tp.values.iter().flatten().zip(seq_tp.values.iter().flatten()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "variant {vi} round {round}");
+            }
+            assert!(!stats.census, "variant {vi} round {round}: census-less path");
+            assert!(
+                stats.fallback,
+                "variant {vi} round {round}: the degradation must be surfaced"
+            );
+
+            let mut r = open_sharded(&dir).unwrap();
+            let (cp, stats) = stream::critical_path(r.as_mut(), 2).unwrap();
+            assert_eq!(cp[0].rows, seq_cp[0].rows, "variant {vi} round {round}");
+            assert!(stats.fallback && !stats.census, "variant {vi} round {round}");
+
+            // analyses that never consult the census still flag it
+            let mut r = open_sharded(&dir).unwrap();
+            let (fp, stats) = stream::flat_profile(r.as_mut(), Metric::ExcTime, 2).unwrap();
+            assert_eq!(fp, seq_fp, "variant {vi} round {round}");
+            assert!(stats.fallback, "variant {vi} round {round}");
+        }
     }
 }
 

@@ -796,6 +796,161 @@ fn two_pass_span_event_in_last_shard() {
     }
 }
 
+/// Pathological generator: ~10k distinct function names across 4
+/// processes — the name-rich shape that made O(all-functions × bins)
+/// time-profile partials blow up. The census-backed streamed path must
+/// stay bit-identical to the sequential engine while holding only the
+/// ranked top-k + "other" rows.
+fn many_function_names(procs: i64, names_per_proc: usize) -> Trace {
+    let mut b = TraceBuilder::new();
+    for p in 0..procs {
+        let mut t = 0i64;
+        b.enter(p, 0, t, "main");
+        for k in 0..names_per_proc {
+            t += 3;
+            let name = format!("f_{p}_{k:05}");
+            b.enter(p, 0, t, &name);
+            t += 1 + (k as i64 % 7);
+            b.leave(p, 0, t, &name);
+        }
+        b.leave(p, 0, t + 5, "main");
+    }
+    b.finish()
+}
+
+#[test]
+fn many_function_names_census_topk_parity() {
+    let t = many_function_names(4, 2500);
+    let dir = stream_dir();
+    let csv_p = dir.join("manyfuncs.csv");
+    pipit::readers::csv::write(&t, &csv_p).unwrap();
+    let otf2_p = dir.join("manyfuncs_otf2");
+    let _ = std::fs::remove_dir_all(&otf2_p);
+    pipit::readers::otf2::write(&t, &otf2_p).unwrap();
+    let json_p = dir.join("manyfuncs.json");
+    pipit::readers::chrome::write(&t, &json_p).unwrap();
+
+    let bins = 32usize;
+    let seq = analysis::time_profile(&mut t.clone(), bins, Some(10)).unwrap();
+    let seq_all = analysis::time_profile(&mut t.clone(), bins, None).unwrap();
+    for p in [&csv_p, &otf2_p, &json_p] {
+        // eager sharded engine parity on the name-rich shape
+        let eager = pipit::readers::read_auto(p).unwrap();
+        for &th in THREADS {
+            let sh = exec::ops::time_profile(&eager, bins, Some(10), th).unwrap();
+            assert_time_profiles_equal(&seq, &sh, &format!("{} eager @{th}", p.display()));
+        }
+        // streamed census path, full thread matrix
+        for &th in MSG_THREADS {
+            let mut r = open_sharded(p).unwrap();
+            let (tp, stats) = exec::stream::time_profile(r.as_mut(), bins, Some(10), th).unwrap();
+            assert_time_profiles_equal(&seq, &tp, &format!("{} census @{th}", p.display()));
+            assert!(stats.census, "{}: census path must run: {stats:?}", p.display());
+            // 11 series (top-10 + other) × bins × 8 bytes — four orders
+            // of magnitude below the ~10k-function slot rows
+            assert_eq!(stats.peak_partial_bytes, 11 * bins * 8, "{}", p.display());
+            assert!(
+                stats.peak_partial_bytes < 10_000 * bins * 8 / 100,
+                "{}: partial state must not scale with distinct names: {stats:?}",
+                p.display()
+            );
+
+            // census-less legacy path agrees bitwise too
+            let mut inner = open_sharded(p).unwrap();
+            let mut nc = pipit::readers::streaming::NoCensus::new(inner.as_mut());
+            let (tp, stats) = exec::stream::time_profile(&mut nc, bins, Some(10), th).unwrap();
+            assert_time_profiles_equal(&seq, &tp, &format!("{} legacy @{th}", p.display()));
+            assert!(!stats.census, "{}", p.display());
+        }
+        // top_funcs = None keeps every series on both paths
+        let mut r = open_sharded(p).unwrap();
+        let (tp, _) = exec::stream::time_profile(r.as_mut(), bins, None, 4).unwrap();
+        assert_time_profiles_equal(&seq_all, &tp, &format!("{} all-series", p.display()));
+    }
+}
+
+/// Pathological generator: an unmatched-send flood — thousands of sends
+/// across many channels that never see a receive. The census knows those
+/// channels expect zero receives, so the windowed matcher retires them
+/// the moment their sends complete (they'd sit in memory to end of
+/// stream on the census-less path); results must stay bit-identical —
+/// every flood send listed, none matched — and nothing may panic.
+fn unmatched_send_flood(sends: usize, tags: i64) -> Trace {
+    let mut b = TraceBuilder::new();
+    let mut t = 0i64;
+    b.enter(0, 0, 0, "main");
+    for k in 0..sends {
+        t += 2;
+        b.send(0, 0, t, 1, 64 * (1 + k as i64 % 9), k as i64 % tags);
+    }
+    b.leave(0, 0, t + 10, "main");
+    // proc 1 receives nothing but exists; procs 2/3 exchange matched
+    // traffic so the drain path runs alongside the flood
+    b.enter(1, 0, 0, "main");
+    b.leave(1, 0, t + 10, "main");
+    b.enter(2, 0, 0, "main");
+    for k in 0..20i64 {
+        b.send(2, 0, 5 + 3 * k, 3, 128, 0);
+    }
+    b.leave(2, 0, t + 10, "main");
+    b.enter(3, 0, 0, "main");
+    for k in 0..20i64 {
+        b.recv(3, 0, 6 + 3 * k, 2, 128, 0);
+    }
+    b.leave(3, 0, t + 10, "main");
+    b.finish()
+}
+
+#[test]
+fn unmatched_send_flood_parity() {
+    let t = unmatched_send_flood(3000, 50);
+    let dir = stream_dir();
+    let csv_p = dir.join("flood.csv");
+    pipit::readers::csv::write(&t, &csv_p).unwrap();
+    let otf2_p = dir.join("flood_otf2");
+    let _ = std::fs::remove_dir_all(&otf2_p);
+    pipit::readers::otf2::write(&t, &otf2_p).unwrap();
+
+    let seq_mm = analysis::match_messages(&t).unwrap();
+    for p in [&csv_p, &otf2_p] {
+        // eager channel-sharded matching on the flood shape
+        for &th in MSG_THREADS {
+            let sh = exec::ops::match_messages_sharded(&t, th).unwrap();
+            assert_eq!(sh, seq_mm, "{} eager @{th}", p.display());
+        }
+        // streamed: windowed (census) and buffered (NoCensus) matchers
+        for &th in MSG_THREADS {
+            let mut r = open_sharded(p).unwrap();
+            let (mm, stats) = exec::stream::match_messages(r.as_mut(), th).unwrap();
+            assert_eq!(mm, seq_mm, "{} windowed @{th}", p.display());
+            assert!(stats.census, "{} @{th}: {stats:?}", p.display());
+            assert!(stats.peak_channel_queue_bytes > 0, "{}", p.display());
+            let windowed_peak = stats.peak_channel_queue_bytes;
+
+            let mut inner = open_sharded(p).unwrap();
+            let mut nc = pipit::readers::streaming::NoCensus::new(inner.as_mut());
+            let (mm, stats) = exec::stream::match_messages(&mut nc, th).unwrap();
+            assert_eq!(mm, seq_mm, "{} buffered @{th}", p.display());
+            assert!(!stats.census, "{}", p.display());
+            // the census drains the zero-recv flood channels as soon as
+            // their sends complete; the census-less matcher buffers all
+            // 3000 endpoints to end of stream
+            assert!(
+                windowed_peak * 4 < stats.peak_channel_queue_bytes,
+                "{} @{th}: windowed {} B vs buffered {} B",
+                p.display(),
+                windowed_peak,
+                stats.peak_channel_queue_bytes
+            );
+        }
+        // the full matching-analysis suite over the flood
+        assert_streamed_msg_ops_match(p, "flood");
+    }
+    for &th in MSG_THREADS {
+        assert_msg_ops_match(&t, th, "flood");
+    }
+}
+
 /// The memory-bound instrumentation hook: shard count vs rows proves the
 /// stream was consumed shard-at-a-time, never whole.
 #[test]
