@@ -66,6 +66,16 @@ const STREAM_CENSUS: &[(&str, &str)] = &[
     ("stream_match_messages", "laghos8"),
 ];
 
+/// Archive-reopen row: `seq1` streams the original otf2 source (census
+/// from the defs.bin pre-scan) and `sharded4` streams the converted
+/// archive (census and block offsets served from the index, zero
+/// pre-scan), both on the pipelined driver at 4 threads. The gate
+/// requires archive reopen ≥ 0.95× the census-backed source stream —
+/// "convert once, query forever" must never lose to re-reading the
+/// original. The one-time conversion cost is reported alongside,
+/// ungated (`archive_convert/laghos8`).
+const STREAM_ARCHIVE: &[(&str, &str)] = &[("stream_archive_reopen", "laghos8")];
+
 fn main() -> anyhow::Result<()> {
     let (warmup, iters) = bench_params_from_args();
     let argv: Vec<String> = std::env::args().collect();
@@ -316,6 +326,32 @@ fn main() -> anyhow::Result<()> {
         stream::match_messages(r.as_mut(), 4).unwrap()
     });
 
+    // ---- archive reopen: census-backed source stream vs converted archive --
+    // Conversion is a one-time cost; reopening replaces the pre-scan
+    // with pure index seeks and must at least match streaming the
+    // original source.
+    let archive_path = ingest_dir.join("laghos8_archive");
+    let _ = std::fs::remove_dir_all(&archive_path);
+    {
+        let mut r = open_sharded(&otf2_path)?;
+        stream::write_archive(r.as_mut(), &archive_path, 4)?;
+    }
+    eprintln!("\n=== archive reopen: otf2 census stream vs converted archive (laghos-8p) ===");
+    b.run("archive_convert/laghos8", || {
+        let dir = ingest_dir.join("laghos8_archive_tmp");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut r = open_sharded(&otf2_path).unwrap();
+        stream::write_archive(r.as_mut(), &dir, 4).unwrap()
+    });
+    b.run("stream_archive_reopen/seq1/laghos8", || {
+        let mut r = open_sharded(&otf2_path).unwrap();
+        stream::flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap()
+    });
+    b.run("stream_archive_reopen/sharded4/laghos8", || {
+        let mut r = open_sharded(&archive_path).unwrap();
+        stream::flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap()
+    });
+
     // Per-op speedups, the BENCH_PR.json rows, and the perf-trajectory
     // gate: sharded@4 must never lose to sequential on a routed op. A
     // small noise margin keeps median-of-5 on shared CI runners from
@@ -333,6 +369,8 @@ fn main() -> anyhow::Result<()> {
         .chain(STREAM_INGEST.iter().map(|&(op, ds)| (op, ds, true)))
         // census paths are gated against their census-less baseline
         .chain(STREAM_CENSUS.iter().map(|&(op, ds)| (op, ds, true)))
+        // archive reopen is gated against the census-backed source stream
+        .chain(STREAM_ARCHIVE.iter().map(|&(op, ds)| (op, ds, true)))
         .collect();
     for (op, ds, gate_speedup) in pairs {
         let seq_name = format!("{op}/seq1/{ds}");
@@ -406,8 +444,9 @@ fn main() -> anyhow::Result<()> {
             "BENCH GATE FAILED: sharded@4 below {GATE_MIN_SPEEDUP}x of sequential \
              (pipelined stream below {GATE_MIN_SPEEDUP}x of serial-decode stream \
              for the stream_ingest rows; census path below {GATE_MIN_SPEEDUP}x of \
-             the census-less stream for the stream_* census rows), or unsampled, \
-             for: {}",
+             the census-less stream for the stream_* census rows; archive reopen \
+             below {GATE_MIN_SPEEDUP}x of the census-backed source stream), or \
+             unsampled, for: {}",
             regressions.join(", ")
         );
         std::process::exit(1);

@@ -111,7 +111,7 @@ impl Pipeline {
                 let path = step.get_str("path").context("'load' needs 'path'")?;
                 if step.get("stream").and_then(|v| v.as_bool()).unwrap_or(false) {
                     s.load_streamed(trace()?, path)?;
-                    if s.is_streamed(trace()?) {
+                    if s.is_streamed(trace()?) == Some(true) {
                         emit(format!("streaming {} <- {path}", trace()?), None)
                     } else {
                         // surface the split-after-load fallback instead of
@@ -170,9 +170,25 @@ impl Pipeline {
             "write" => {
                 let path = step.get_str("path").context("'write' needs 'path'")?;
                 let format = step.get_str("format").unwrap_or("otf2");
+                let p = self.out_dir.join(path);
+                if format == "archive" {
+                    // conversion rides the decode→fold pipeline (stream-
+                    // backed entries never materialize) and re-points the
+                    // entry at the archive: later steps reopen it with
+                    // pure seeks and zero pre-scan
+                    let stats = s.convert(trace()?, &p)?;
+                    return emit(
+                        format!(
+                            "archived {} -> {} ({} block(s))",
+                            trace()?,
+                            p.display(),
+                            stats.shards
+                        ),
+                        None,
+                    );
+                }
                 // get_mut so stream-backed sources materialize for the writer
                 let t = &*s.get_mut(trace()?)?;
-                let p = self.out_dir.join(path);
                 match format {
                     "otf2" => crate::readers::otf2::write(t, &p)?,
                     "csv" => crate::readers::csv::write(t, &p)?,
@@ -546,6 +562,27 @@ mod tests {
         assert!(stats.max_shard_rows < stats.total_rows);
         let mr = std::fs::read_to_string(dir.join("mr.txt")).unwrap();
         assert!(mr.contains("ForceMult"), "{mr}");
+    }
+
+    #[test]
+    fn archive_write_step_converts_and_streams() {
+        let spec = r#"{ "steps": [
+            {"op": "generate", "trace": "t", "app": "laghos", "ranks": 4, "iterations": 3},
+            {"op": "write", "trace": "t", "path": "t_arch", "format": "archive"},
+            {"op": "flat_profile", "trace": "t", "metric": "exc", "out": "fp.csv"}
+        ]}"#;
+        let dir = tmp("arch");
+        let p = Pipeline::parse(spec, &dir).unwrap();
+        let mut s = AnalysisSession::new().with_threads(2);
+        let results = p.run(&mut s).unwrap();
+        assert!(results[1].summary.starts_with("archived"), "{}", results[1].summary);
+        assert!(dir.join("t_arch").join("index.bin").exists());
+        assert_eq!(s.is_streamed("t"), Some(true), "entry re-points at the archive");
+        // the post-conversion analysis streams the archive: zero
+        // pre-scan, no fallback
+        let stats = results[2].stream.expect("post-conversion analysis must stream");
+        assert!(!stats.fallback, "{stats:?}");
+        assert_eq!(stats.shards, 4);
     }
 
     #[test]

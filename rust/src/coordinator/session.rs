@@ -167,12 +167,42 @@ impl AnalysisSession {
         Ok(())
     }
 
-    /// Is `name` a stream-backed entry? False for memory-backed entries
-    /// — including sources [`AnalysisSession::load_streamed`] had to
-    /// load eagerly because they cannot stream (the split-after-load
-    /// fallback callers should surface rather than silently accept).
-    pub fn is_streamed(&self, name: &str) -> bool {
-        matches!(self.sources.get(name), Some(TraceSource::Streamed { .. }))
+    /// Is `name` a stream-backed entry? `Some(false)` for memory-backed
+    /// entries — including sources [`AnalysisSession::load_streamed`]
+    /// had to load eagerly because they cannot stream (the
+    /// split-after-load fallback callers should surface rather than
+    /// silently accept) — and `None` when no entry of that name exists
+    /// at all. The old `bool` return conflated "loaded eagerly" with
+    /// "never loaded", which let CLI summaries report a nonexistent
+    /// entry as a successful eager load.
+    pub fn is_streamed(&self, name: &str) -> Option<bool> {
+        self.sources
+            .get(name)
+            .map(|s| matches!(s, TraceSource::Streamed { .. }))
+    }
+
+    /// Convert the entry `name` into a Pipit archive at `dir` — the
+    /// "convert once, query forever" path. Stream-backed entries convert
+    /// through the pipelined decode→fold driver (O(workers × shard)
+    /// memory, like any routed analysis); memory-backed entries —
+    /// including sources that can only split after an eager load
+    /// (hpctoolkit, projections, interleaved csv/chrome) — split into
+    /// process shards and pay their eager residency one final time. The
+    /// entry is then re-pointed at the archive, so every subsequent
+    /// routed analysis reopens it with pure seeks and **zero pre-scan**.
+    pub fn convert(&mut self, name: &str, dir: impl AsRef<Path>) -> Result<StreamStats> {
+        let dir = dir.as_ref();
+        let stats = if let Some((path, plan)) = self.stream_path(name) {
+            let mut r = self.open_stream(&path, &plan)?;
+            crate::exec::stream::write_archive(r.as_mut(), dir, self.num_threads)?
+        } else {
+            let t = self.get(name)?.clone();
+            let mut r = crate::readers::streaming::SplitReader::new(t)?;
+            crate::exec::stream::write_archive(&mut r, dir, self.num_threads)?
+        };
+        self.last_stream_stats = Some(stats);
+        self.load_streamed(name, dir)?;
+        Ok(stats)
     }
 
     /// Generate a synthetic application trace into the session.
@@ -755,6 +785,42 @@ mod tests {
         let fp = s.flat_profile("t", Metric::IncTime).unwrap();
         assert!(!fp.is_empty());
         assert!(s.last_stream_stats.is_none(), "no streamed analysis ran");
+    }
+
+    #[test]
+    fn is_streamed_distinguishes_missing_entries() {
+        let mut s = AnalysisSession::new();
+        assert_eq!(s.is_streamed("nope"), None, "unknown names must not read as eager");
+        s.generate("g", "gol", &GenConfig::new(2, 2), 1).unwrap();
+        assert_eq!(s.is_streamed("g"), Some(false));
+    }
+
+    #[test]
+    fn convert_repoints_entry_at_the_archive() {
+        let dir = std::env::temp_dir().join("pipit_session_convert");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = AnalysisSession::new().with_threads(2);
+        s.generate("g", "laghos", &GenConfig::new(4, 3), 1).unwrap();
+        let eager_fp = s.flat_profile("g", Metric::ExcTime).unwrap();
+        let eager_li = s.load_imbalance("g", Metric::ExcTime, 4).unwrap();
+        assert_eq!(s.is_streamed("g"), Some(false));
+
+        let arch = dir.join("arch");
+        let cstats = s.convert("g", &arch).unwrap();
+        assert_eq!(cstats.shards, 4);
+        assert_eq!(s.is_streamed("g"), Some(true), "entry must re-point at the archive");
+
+        assert_eq!(s.flat_profile("g", Metric::ExcTime).unwrap(), eager_fp);
+        let stats = s.last_stream_stats.unwrap();
+        assert!(!stats.fallback, "archive reopen must be a true stream");
+        assert_eq!(stats.shards, 4);
+
+        // per-block sub-censuses pre-size the by-process path: census hit
+        assert_eq!(s.load_imbalance("g", Metric::ExcTime, 4).unwrap(), eager_li);
+        let stats = s.last_stream_stats.unwrap();
+        assert!(stats.census, "block-detail pre-sizing must report a census hit: {stats:?}");
+        assert_eq!(stats.census_block_mismatches, 0);
     }
 
     #[test]

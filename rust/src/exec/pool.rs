@@ -124,15 +124,64 @@ pub struct CapCfg {
     pub budget_bytes: usize,
 }
 
+/// Parse a byte-budget string: plain digits, optionally suffixed with a
+/// case-insensitive `K`/`M`/`G` (also `KB`/`KiB` etc.) for binary
+/// multiples. Whitespace around the number is tolerated; empty strings,
+/// negative values, fractions and garbage are `None`.
+pub(crate) fn parse_budget(v: &str) -> Option<usize> {
+    let v = v.trim();
+    if v.is_empty() {
+        return None;
+    }
+    let lower = v.to_ascii_lowercase();
+    // longest suffixes first so "kib" is not mis-split as "ki" + "b"
+    const SUFFIXES: [(&str, usize); 9] = [
+        ("kib", 1 << 10),
+        ("mib", 1 << 20),
+        ("gib", 1 << 30),
+        ("kb", 1 << 10),
+        ("mb", 1 << 20),
+        ("gb", 1 << 30),
+        ("k", 1 << 10),
+        ("m", 1 << 20),
+        ("g", 1 << 30),
+    ];
+    let (digits, mult) = SUFFIXES
+        .iter()
+        .find_map(|&(s, m)| lower.strip_suffix(s).map(|d| (d, m)))
+        .unwrap_or((lower.as_str(), 1));
+    let digits = digits.trim();
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None; // rejects "", "-5", "1.5M", "64MiBs", ...
+    }
+    digits.parse::<usize>().ok()?.checked_mul(mult)
+}
+
 impl CapCfg {
     /// Default policy for `workers` worker threads: ceiling at 4× the
     /// worker count, budget from the `STREAM_INFLIGHT_BYTES` environment
-    /// variable (default 64 MiB).
+    /// variable (default 64 MiB; accepts `K`/`M`/`G` binary suffixes).
+    /// An unparseable value used to be swallowed silently by `.ok()` —
+    /// now it warns once on stderr and falls back to the default, so a
+    /// typo'd budget ("64MiBB", "-1") no longer masquerades as 64 MiB
+    /// without a trace.
     pub fn from_env(workers: usize) -> CapCfg {
-        let budget = std::env::var("STREAM_INFLIGHT_BYTES")
-            .ok()
-            .and_then(|v| v.parse::<usize>().ok())
-            .unwrap_or(64 << 20);
+        let budget = match std::env::var("STREAM_INFLIGHT_BYTES") {
+            Ok(v) => match parse_budget(&v) {
+                Some(b) => b,
+                None => {
+                    static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                    WARN_ONCE.call_once(|| {
+                        eprintln!(
+                            "[pipit] ignoring unparseable STREAM_INFLIGHT_BYTES={v:?} \
+                             (expected bytes or a K/M/G-suffixed size); using 64 MiB"
+                        );
+                    });
+                    64 << 20
+                }
+            },
+            Err(_) => 64 << 20,
+        };
         CapCfg { max_in_flight: workers.max(1) * 4, budget_bytes: budget }
     }
 
@@ -392,6 +441,44 @@ mod tests {
     use super::*;
     use anyhow::bail;
     use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn parse_budget_accepts_suffixes_and_rejects_garbage() {
+        // plain bytes
+        assert_eq!(parse_budget("0"), Some(0));
+        assert_eq!(parse_budget("67108864"), Some(64 << 20));
+        assert_eq!(parse_budget(" 1024 "), Some(1024));
+        // binary suffixes, case-insensitive, with or without the iB/B
+        assert_eq!(parse_budget("64M"), Some(64 << 20));
+        assert_eq!(parse_budget("64MiB"), Some(64 << 20));
+        assert_eq!(parse_budget("64mb"), Some(64 << 20));
+        assert_eq!(parse_budget("2k"), Some(2 << 10));
+        assert_eq!(parse_budget("512KB"), Some(512 << 10));
+        assert_eq!(parse_budget("1G"), Some(1 << 30));
+        assert_eq!(parse_budget("1gib"), Some(1 << 30));
+        // malformed inputs are None, never a silent fallback value
+        for bad in ["", "   ", "-5", "-64M", "1.5M", "64MiBB", "M", "kib", "64q", "0x40"] {
+            assert_eq!(parse_budget(bad), None, "{bad:?} must not parse");
+        }
+        // overflow is rejected rather than wrapped
+        assert_eq!(parse_budget(&format!("{}G", usize::MAX)), None);
+    }
+
+    #[test]
+    fn from_env_budget_agrees_with_parse_budget() {
+        // from_env must resolve to exactly what parse_budget says about
+        // the live variable — including the 64 MiB fallback when it is
+        // unset or unparseable. (Checked against the real environment
+        // rather than mutating it: other tests stream concurrently and
+        // env writes are process-global.)
+        let cfg = CapCfg::from_env(4);
+        let expected = std::env::var("STREAM_INFLIGHT_BYTES")
+            .ok()
+            .and_then(|v| parse_budget(&v))
+            .unwrap_or(64 << 20);
+        assert_eq!(cfg.budget_bytes, expected);
+        assert_eq!(cfg.max_in_flight, 16);
+    }
 
     #[test]
     fn preserves_order() {

@@ -68,10 +68,13 @@ use crate::analysis::overlap::{self, Breakdown};
 use crate::analysis::pattern::{self, PatternConfig, PatternRange};
 use crate::analysis::time_profile::{self, Segment, TimeProfile};
 use crate::df::Interner;
+use crate::readers::archive;
 use crate::readers::streaming::{ShardTask, ShardedReader};
-use crate::trace::{Trace, COL_NAME, COL_PROC, COL_THREAD, COL_TS};
+use crate::trace::{Trace, TraceMeta, COL_NAME, COL_PROC, COL_THREAD, COL_TS};
 use anyhow::{bail, Result};
 use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::io::Write;
+use std::path::Path;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Instant;
 
@@ -131,6 +134,13 @@ pub struct StreamStats {
     /// the open-channel window (≪ O(endpoints)); census-less streams
     /// report the full end-of-stream buffer here.
     pub peak_channel_queue_bytes: usize,
+    /// Shards whose decoded row count disagreed with the census block
+    /// table. A census/stream divergence used to poison the whole run
+    /// (one global `fallback`); per-block accounting turns it into a
+    /// per-block degradation — nonzero here flags exactly how many
+    /// blocks drifted while the rest of the stream kept its census
+    /// guarantees.
+    pub census_block_mismatches: usize,
 }
 
 impl StreamStats {
@@ -143,7 +153,7 @@ impl StreamStats {
         };
         format!(
             "{} shards, {} rows (largest {}), {} procs; decode {:.2} ms / fold {:.2} ms, \
-             peak in-flight {} shard(s), peak partial state {} B{}, census {}{}",
+             peak in-flight {} shard(s), peak partial state {} B{}, census {}{}{}",
             self.shards,
             self.total_rows,
             self.max_shard_rows,
@@ -154,6 +164,11 @@ impl StreamStats {
             self.peak_partial_bytes,
             queues,
             if self.census { "hit" } else { "miss" },
+            if self.census_block_mismatches > 0 {
+                format!(" ({} block(s) diverged)", self.census_block_mismatches)
+            } else {
+                String::new()
+            },
             if self.fallback { " [fallback: split-after-load or corrupt census]" } else { "" },
         )
     }
@@ -256,6 +271,13 @@ where
 {
     let mut ing = Ingest::new();
     ing.stats.fallback = !reader.is_streaming() || reader.census_corrupt();
+    // snapshot the census block row counts before the pipeline mutably
+    // borrows the reader: each shard's decoded row count is checked
+    // against its census block so a divergence degrades per block
+    // (`census_block_mismatches`) instead of silently skewing pre-sized
+    // census consumers
+    let census_rows: Option<Vec<u64>> =
+        reader.census().map(|c| c.blocks.iter().map(|b| b.rows).collect());
     let decode_ns = AtomicU64::new(0);
     let mut fold_ns = 0u64;
     let mut produced = 0usize;
@@ -288,6 +310,11 @@ where
             Ok((partial, facts)) // `trace` drops here, on the worker
         },
         |(partial, facts): (P, ShardFacts)| {
+            if let Some(rows) = &census_rows {
+                if rows.get(ing.stats.shards).copied() != Some(facts.rows as u64) {
+                    ing.stats.census_block_mismatches += 1;
+                }
+            }
             ing.stats.shards += 1;
             ing.stats.total_rows += facts.rows;
             ing.stats.max_shard_rows = ing.stats.max_shard_rows.max(facts.rows);
@@ -340,14 +367,20 @@ pub fn flat_profile(
 
 /// Streamed `flat_profile_by_process`: every (function, process) group
 /// is complete within its shard, so shard-order concatenation *is* the
-/// sequential output.
+/// sequential output. With per-block function sub-censuses (archives)
+/// the exact output row count — Σ distinct functions per block — is
+/// known before ingest, so the accumulator allocates once.
 pub fn flat_profile_by_process(
     reader: &mut dyn ShardedReader,
     metric: Metric,
     threads: usize,
 ) -> Result<(Vec<(String, i64, f64)>, StreamStats)> {
-    let mut rows = Vec::new();
-    let ing = drive(
+    let presized = reader
+        .census()
+        .and_then(|c| c.block_detail.as_ref())
+        .map(|d| d.iter().map(|b| b.funcs.len()).sum::<usize>());
+    let mut rows = Vec::with_capacity(presized.unwrap_or(0));
+    let mut ing = drive(
         reader,
         threads,
         |t| analysis::flat_profile_by_process(t, metric),
@@ -356,6 +389,7 @@ pub fn flat_profile_by_process(
             Ok(vec_bytes(&rows, 24))
         },
     )?;
+    ing.stats.census |= presized.is_some();
     Ok((rows, ing.stats))
 }
 
@@ -1150,6 +1184,71 @@ pub fn detect_pattern(
     Ok((pattern::ranges_from_anchors(anchors, seen, name, t1)?, ing.stats))
 }
 
+/// Convert any [`ShardedReader`] into a Pipit archive directory — the
+/// "convert once, query forever" writer. Conversion rides the same
+/// decode→fold pipeline as every streamed analysis: workers serialize
+/// each shard into compressed process-aligned blocks
+/// ([`archive::shard_payload`], which also feeds the shard's census
+/// slice exactly as the reopened stream will replay it) while the
+/// driver appends chunks to `blocks.bin` and merges census slices
+/// **in shard order** — O(workers × shard) memory, like any other
+/// streamed op. The index (block offsets, spans, and the merged census
+/// with its per-block sub-censuses) is written last; reopening the
+/// directory ([`crate::readers::ArchiveBlocks`]) then serves every
+/// routed analysis with pure seeks and **zero pre-scan** — including
+/// sources whose own readers can only split after an eager load.
+pub fn write_archive(
+    reader: &mut dyn ShardedReader,
+    dir: &Path,
+    threads: usize,
+) -> Result<StreamStats> {
+    std::fs::create_dir_all(dir)?;
+    let mut out =
+        std::io::BufWriter::new(std::fs::File::create(dir.join(archive::BLOCKS_FILE))?);
+    let mut entries: Vec<archive::IndexEntry> = Vec::new();
+    let mut meta: Option<TraceMeta> = None;
+    let mut merger = archive::CensusMerger::new();
+    let mut offset = 0u64;
+    let ing = drive(
+        reader,
+        threads,
+        |t| archive::shard_payload(t),
+        |payload| {
+            if meta.is_none() {
+                meta = Some(payload.meta);
+            }
+            for ch in payload.chunks {
+                // the reopened archive serves one shard per block, and
+                // the streamed by-process ops assume a process run never
+                // straddles a shard — so a source shard boundary inside
+                // a process run must fail conversion, not corrupt reads
+                if entries.last().map(|e| e.proc) == Some(ch.proc) {
+                    bail!(
+                        "shard boundary splits process {} across archive blocks — \
+                         the source reader must yield process-aligned shards",
+                        ch.proc
+                    );
+                }
+                out.write_all(&ch.compressed)?;
+                entries.push(archive::IndexEntry {
+                    proc: ch.proc,
+                    offset,
+                    len: ch.compressed.len() as u64,
+                    crc: ch.crc,
+                    rows: ch.rows,
+                    span: ch.span,
+                });
+                offset += ch.compressed.len() as u64;
+            }
+            merger.merge(payload.census);
+            Ok(entries.len() * std::mem::size_of::<archive::IndexEntry>())
+        },
+    )?;
+    out.flush()?;
+    archive::write_index(dir, &meta.unwrap_or_default(), &entries, merger.finish().as_ref())?;
+    Ok(ing.stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1453,6 +1552,41 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "@{th}");
             }
         }
+    }
+
+    #[test]
+    fn convert_to_archive_then_reopen_streams_with_census_hit() {
+        let dir = tmp_dir("convert");
+        let t = gen::generate("laghos", &GenConfig::new(6, 4), 1).unwrap();
+        let out = dir.join("otf2");
+        crate::readers::otf2::write(&t, &out).unwrap();
+        let arch = dir.join("arch");
+        let mut src = open_sharded(&out).unwrap();
+        let cstats = write_archive(src.as_mut(), &arch, 4).unwrap();
+        assert_eq!(cstats.shards, 6);
+        assert!(!cstats.fallback, "otf2 conversion must stay a true stream");
+
+        let mut r = crate::readers::ArchiveBlocks::open(&arch).unwrap();
+        let seq = analysis::flat_profile(&mut t.clone(), Metric::ExcTime).unwrap();
+        let (rows, stats) = flat_profile(&mut r, Metric::ExcTime, 4).unwrap();
+        assert_eq!(rows, seq);
+        assert!(!stats.fallback, "archive reopen must be a true stream");
+        assert_eq!(stats.census_block_mismatches, 0, "{stats:?}");
+
+        // by-process pre-sizing rides the per-block sub-census
+        let mut r = crate::readers::ArchiveBlocks::open(&arch).unwrap();
+        let (rows, stats) = flat_profile_by_process(&mut r, Metric::ExcTime, 2).unwrap();
+        let seq = analysis::flat_profile_by_process(&mut t.clone(), Metric::ExcTime).unwrap();
+        assert_eq!(rows, seq);
+        assert!(stats.census, "block-detail pre-sizing must report the census hit");
+    }
+
+    #[test]
+    fn summary_flags_census_block_divergence() {
+        let stats = StreamStats { census_block_mismatches: 2, ..StreamStats::default() };
+        assert!(stats.summary().contains("2 block(s) diverged"), "{}", stats.summary());
+        let clean = StreamStats::default();
+        assert!(!clean.summary().contains("diverged"), "{}", clean.summary());
     }
 
     #[test]

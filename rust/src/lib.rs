@@ -65,6 +65,23 @@
 //! [`coordinator::AnalysisSession::load_streamed`] (CLI `--stream`), and
 //! [`coordinator::AnalysisSession::run_batch`] (CLI `--batch`) schedules
 //! many streamed traces over one pool for multirun comparisons.
+//!
+//! # Persistent indexed archives — convert once, query forever
+//!
+//! Any source a reader understands converts **once** into a versioned
+//! on-disk archive ([`readers::archive`], CLI `pipit convert`, pipeline
+//! `{"op": "write", "format": "archive"}`): block-compressed column
+//! chunks in process-aligned blocks, a byte-offset block index, and the
+//! full [`readers::census::TraceCensus`] — extended with per-block
+//! function/channel sub-censuses — embedded in the index. Conversion
+//! streams through the same decode→fold pipeline (O(workers × shard)
+//! memory); reopening is pure seeks with **zero pre-scan**, serving
+//! every routed analysis bit-identically — including hpctoolkit and
+//! projections sources, which natively fall back to split-after-load
+//! and gain true streaming only through conversion. Census-vs-stream
+//! divergence is detected per block
+//! ([`exec::stream::StreamStats::census_block_mismatches`]) instead of
+//! degrading whole-run.
 
 pub mod util;
 pub mod df;

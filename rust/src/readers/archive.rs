@@ -1,0 +1,1218 @@
+//! Pipit archive: the persistent indexed trace format — convert any
+//! reader's output once, query it forever with pure seeks.
+//!
+//! ```text
+//! <dir>/index.bin   magic, version, trace meta, block table
+//!                   (byte offset / length / checksum / rows / span per
+//!                   process-aligned block), embedded TraceCensus with
+//!                   per-block sub-censuses (block × function matrix)
+//! <dir>/blocks.bin  concatenated zlib-compressed column chunks
+//! ```
+//!
+//! Each block holds one process run's rows, column-major: a local name
+//! dictionary (so blocks serialize in parallel with no shared state),
+//! delta-zigzag timestamps, one byte per event type, varint codes and
+//! zigzag varints for the i64 columns (`NULL_I64` survives zigzag — no
+//! clamping, the decoded rows are bit-identical to the source reader's).
+//!
+//! Reopening ([`ArchiveBlocks`]) parses only `index.bin`: block offsets,
+//! spans and the full census are known **before any shard decodes** —
+//! zero pre-scan, which is what finally gives the split-after-load
+//! formats (hpctoolkit, projections) true streaming after a one-time
+//! conversion (see `exec::stream::write_archive`).
+//!
+//! Corruption degrades deterministically, never panics: a damaged
+//! `index.bin` (magic / version / truncated block table) is an open
+//! error; a bit-flipped block chunk fails its FNV checksum at decode
+//! (zlib alone can miss flips in stored blocks); a damaged census
+//! section degrades to "census absent" exactly like the otf2 trailer.
+
+use super::census::{
+    fnv32, BlockCensus, BlockDetail, CensusAccum, ChannelCensus, FuncTotals, MsgCensus,
+    TraceCensus, CENSUS_VERSION,
+};
+use super::otf2::{get_uvarint, put_uvarint};
+use super::streaming::{ShardTask, ShardedReader, TraceShard};
+use crate::df::{Column, Interner, Table};
+use crate::trace::*;
+use anyhow::{bail, Context, Result};
+use flate2::read::ZlibDecoder;
+use flate2::write::ZlibEncoder;
+use flate2::Compression;
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::sync::Arc;
+
+/// The block index / metadata file (its presence marks an archive dir).
+pub(crate) const INDEX_FILE: &str = "index.bin";
+/// The concatenated compressed block chunks.
+pub(crate) const BLOCKS_FILE: &str = "blocks.bin";
+
+const MAGIC: &[u8; 8] = b"PIPARCH1";
+
+/// Current archive format version; other versions are an open error
+/// (the format is self-contained — "convert once" means a stale archive
+/// should be reconverted, not half-read).
+pub const ARCHIVE_VERSION: u64 = 1;
+
+/// Census-section flag bytes in `index.bin` (mirrors the otf2 trailer).
+const CENSUS_MARKER: u8 = 0xC6;
+const CENSUS_ABSENT: u8 = 0x00;
+
+// chunk event-type bytes
+const ET_ENTER: u8 = 0;
+const ET_LEAVE: u8 = 1;
+const ET_INSTANT: u8 = 2;
+
+// -- zigzag (i64 <-> u64, NULL_I64-safe) -----------------------------------
+
+#[inline]
+pub(crate) fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+#[inline]
+pub(crate) fn unzigzag(u: u64) -> i64 {
+    ((u >> 1) as i64) ^ -((u & 1) as i64)
+}
+
+fn put_span(buf: &mut Vec<u8>, span: Option<(i64, i64)>) {
+    match span {
+        Some((lo, hi)) => {
+            buf.push(1);
+            put_uvarint(buf, zigzag(lo));
+            put_uvarint(buf, (hi - lo) as u64);
+        }
+        None => buf.push(0),
+    }
+}
+
+fn get_span(buf: &[u8], pos: &mut usize) -> Result<Option<(i64, i64)>> {
+    let flag = *buf.get(*pos).context("truncated span record")?;
+    *pos += 1;
+    match flag {
+        0 => Ok(None),
+        1 => {
+            let lo = unzigzag(get_uvarint(buf, pos)?);
+            let width = get_uvarint(buf, pos)? as i64;
+            Ok(Some((lo, lo + width)))
+        }
+        other => bail!("bad span flag {other}"),
+    }
+}
+
+// -- block chunks -----------------------------------------------------------
+
+/// One process-aligned block, compressed and ready to append to
+/// `blocks.bin` (plus the facts its index entry records).
+pub(crate) struct BlockChunk {
+    pub(crate) proc: i64,
+    pub(crate) rows: u64,
+    pub(crate) span: Option<(i64, i64)>,
+    pub(crate) compressed: Vec<u8>,
+    /// FNV-1a of the compressed bytes — verified at decode, so a bit
+    /// flip is a deterministic per-shard error, never silent data.
+    pub(crate) crc: u32,
+}
+
+/// Everything one decoded shard contributes to the archive: its blocks,
+/// its slice of the census, and the source meta (stored verbatim so the
+/// reopened archive is indistinguishable from the source reader).
+pub(crate) struct ShardPayload {
+    pub(crate) meta: TraceMeta,
+    pub(crate) chunks: Vec<BlockChunk>,
+    pub(crate) census: Option<TraceCensus>,
+}
+
+struct Cols<'a> {
+    ts: &'a [i64],
+    et: &'a [u32],
+    nm: &'a [u32],
+    th: &'a [i64],
+    pa: &'a [i64],
+    ms: &'a [i64],
+    tg: &'a [i64],
+    edict: &'a Interner,
+    ndict: &'a Interner,
+}
+
+/// Serialize one decoded shard into archive blocks (split at process
+/// transitions) and its census slice — the parallel map half of
+/// conversion; the driver folds payloads in shard order.
+pub(crate) fn shard_payload(t: &Trace) -> Result<ShardPayload> {
+    let c = Cols {
+        ts: t.events.i64s(COL_TS)?,
+        et: t.events.strs(COL_TYPE)?.0,
+        nm: t.events.strs(COL_NAME)?.0,
+        th: t.events.i64s(COL_THREAD)?,
+        pa: t.events.i64s(COL_PARTNER)?,
+        ms: t.events.i64s(COL_MSG_SIZE)?,
+        tg: t.events.i64s(COL_TAG)?,
+        edict: t.events.strs(COL_TYPE)?.1,
+        ndict: t.events.strs(COL_NAME)?.1,
+    };
+    let pr = t.events.i64s(COL_PROC)?;
+    let enter = c.edict.code_of(ENTER);
+    let leave = c.edict.code_of(LEAVE);
+    let send_nm = c.ndict.code_of(SEND_EVENT);
+    let recv_nm = c.ndict.code_of(RECV_EVENT);
+
+    // the census is fed exactly as the routed analyses will see the
+    // decoded rows, one end_block per archive block, so the embedded
+    // census agrees bit-for-bit with the reopened stream
+    let mut accum = CensusAccum::new();
+    let mut chunks = Vec::new();
+    let n = t.len();
+    let mut start = 0usize;
+    while start < n {
+        let p = pr[start];
+        let mut end = start + 1;
+        while end < n && pr[end] == p {
+            end += 1;
+        }
+        for i in start..end {
+            accum.row(c.ts[i]);
+            let code = Some(c.et[i]);
+            if code == enter {
+                accum.enter(c.th[i], c.ts[i], c.ndict.resolve(c.nm[i]).unwrap_or(""));
+            } else if code == leave {
+                accum.leave(c.th[i], c.ts[i], c.ndict.resolve(c.nm[i]).unwrap_or(""));
+            } else if Some(c.nm[i]) == send_nm {
+                accum.send(p, c.pa[i], c.tg[i], c.ms[i]);
+            } else if Some(c.nm[i]) == recv_nm {
+                accum.recv(p, c.pa[i], c.tg[i], c.ms[i]);
+            }
+        }
+        accum.end_block(p);
+        chunks.push(encode_block(&c, p, start, end)?);
+        start = end;
+    }
+    Ok(ShardPayload { meta: t.meta.clone(), chunks, census: accum.finish() })
+}
+
+fn encode_block(c: &Cols, proc: i64, start: usize, end: usize) -> Result<BlockChunk> {
+    let enter = c.edict.code_of(ENTER);
+    let leave = c.edict.code_of(LEAVE);
+    let instant = c.edict.code_of(INSTANT);
+    let nrows = end - start;
+    let mut payload = Vec::with_capacity(nrows * 8 + 64);
+    put_uvarint(&mut payload, nrows as u64);
+
+    // local name dictionary in first-use order: blocks are self-contained,
+    // so the parallel map stage shares no dictionary state
+    let mut local_of: HashMap<u32, u32> = HashMap::new();
+    let mut local_names: Vec<&str> = Vec::new();
+    let mut codes = Vec::with_capacity(nrows);
+    for i in start..end {
+        let code = match local_of.entry(c.nm[i]) {
+            std::collections::hash_map::Entry::Occupied(e) => *e.get(),
+            std::collections::hash_map::Entry::Vacant(v) => {
+                let code = local_names.len() as u32;
+                local_names.push(c.ndict.resolve(c.nm[i]).unwrap_or(""));
+                v.insert(code);
+                code
+            }
+        };
+        codes.push(code);
+    }
+    put_uvarint(&mut payload, local_names.len() as u64);
+    for s in &local_names {
+        put_uvarint(&mut payload, s.len() as u64);
+        payload.extend_from_slice(s.as_bytes());
+    }
+
+    // ts: zigzag deltas (timestamps restart per thread within a block,
+    // so deltas can be negative — zigzag, not plain uvarint)
+    let mut prev = 0i64;
+    let mut span: Option<(i64, i64)> = None;
+    for i in start..end {
+        let t = c.ts[i];
+        put_uvarint(&mut payload, zigzag(t.wrapping_sub(prev)));
+        prev = t;
+        span = Some(match span {
+            Some((lo, hi)) => (lo.min(t), hi.max(t)),
+            None => (t, t),
+        });
+    }
+    for i in start..end {
+        let code = Some(c.et[i]);
+        payload.push(if code == enter {
+            ET_ENTER
+        } else if code == leave {
+            ET_LEAVE
+        } else if code == instant {
+            ET_INSTANT
+        } else {
+            bail!(
+                "cannot archive event type {:?} at row {i}",
+                c.edict.resolve(c.et[i]).unwrap_or("?")
+            )
+        });
+    }
+    for &code in &codes {
+        put_uvarint(&mut payload, code as u64);
+    }
+    for col in [c.th, c.pa, c.ms, c.tg] {
+        for i in start..end {
+            put_uvarint(&mut payload, zigzag(col[i]));
+        }
+    }
+
+    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+    enc.write_all(&payload)?;
+    let compressed = enc.finish()?;
+    let crc = fnv32(&compressed);
+    Ok(BlockChunk { proc, rows: nrows as u64, span, compressed, crc })
+}
+
+/// Decompress + parse one block chunk back into a canonical-schema
+/// trace — the CPU half of an archive shard read, safe on any worker.
+pub(crate) fn decode_block(
+    compressed: &[u8],
+    crc: u32,
+    proc: i64,
+    meta: TraceMeta,
+) -> Result<Trace> {
+    if fnv32(compressed) != crc {
+        bail!("archive block for process {proc} failed its checksum (corrupt blocks.bin)");
+    }
+    let mut payload = Vec::new();
+    ZlibDecoder::new(compressed)
+        .read_to_end(&mut payload)
+        .with_context(|| format!("inflating archive block for process {proc}"))?;
+    let buf = &payload[..];
+    let mut pos = 0usize;
+    let nrows = get_uvarint(buf, &mut pos)? as usize;
+    if nrows > payload.len() {
+        bail!("archive block declares an implausible row count {nrows}");
+    }
+    let nnames = get_uvarint(buf, &mut pos)? as usize;
+    if nnames > payload.len() {
+        bail!("archive block declares an implausible name count {nnames}");
+    }
+    let mut names = Interner::new();
+    for _ in 0..nnames {
+        let len = get_uvarint(buf, &mut pos)? as usize;
+        let end = pos.checked_add(len).context("archive block name length overflow")?;
+        if end > buf.len() {
+            bail!("archive block truncated in its name table");
+        }
+        names.intern(std::str::from_utf8(&buf[pos..end])?);
+        pos = end;
+    }
+    let mut ts = Vec::with_capacity(nrows);
+    let mut prev = 0i64;
+    for _ in 0..nrows {
+        prev = prev.wrapping_add(unzigzag(get_uvarint(buf, &mut pos)?));
+        ts.push(prev);
+    }
+    // event-type codes in the chunk coincide with a fresh
+    // Enter/Leave/Instant dictionary's codes (0/1/2)
+    let mut edict = Interner::new();
+    for s in [ENTER, LEAVE, INSTANT] {
+        edict.intern(s);
+    }
+    let mut et = Vec::with_capacity(nrows);
+    for _ in 0..nrows {
+        let b = *buf.get(pos).context("archive block truncated in event types")?;
+        pos += 1;
+        if b > ET_INSTANT {
+            bail!("archive block: bad event-type byte {b}");
+        }
+        et.push(b as u32);
+    }
+    let mut nm = Vec::with_capacity(nrows);
+    for _ in 0..nrows {
+        let code = get_uvarint(buf, &mut pos)?;
+        if code >= nnames as u64 {
+            bail!("archive block: name ref {code} out of range");
+        }
+        nm.push(code as u32);
+    }
+    let mut i64_col = |pos: &mut usize| -> Result<Vec<i64>> {
+        let mut v = Vec::with_capacity(nrows);
+        for _ in 0..nrows {
+            v.push(unzigzag(get_uvarint(buf, pos)?));
+        }
+        Ok(v)
+    };
+    let th = i64_col(&mut pos)?;
+    let pa = i64_col(&mut pos)?;
+    let ms = i64_col(&mut pos)?;
+    let tg = i64_col(&mut pos)?;
+    if pos != buf.len() {
+        bail!("archive block has trailing bytes");
+    }
+    let mut table = Table::new();
+    table.push(COL_TS, Column::I64(ts))?;
+    table.push(COL_TYPE, Column::Str { codes: et, dict: Arc::new(edict) })?;
+    table.push(COL_NAME, Column::Str { codes: nm, dict: Arc::new(names) })?;
+    table.push(COL_PROC, Column::I64(vec![proc; nrows]))?;
+    table.push(COL_THREAD, Column::I64(th))?;
+    table.push(COL_PARTNER, Column::I64(pa))?;
+    table.push(COL_MSG_SIZE, Column::I64(ms))?;
+    table.push(COL_TAG, Column::I64(tg))?;
+    Ok(Trace::new(table, meta))
+}
+
+// -- index ------------------------------------------------------------------
+
+/// One block's row in the `index.bin` block table.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct IndexEntry {
+    pub(crate) proc: i64,
+    /// Byte offset of the compressed chunk within `blocks.bin`.
+    pub(crate) offset: u64,
+    /// Compressed chunk length in bytes.
+    pub(crate) len: u64,
+    /// FNV-1a of the compressed chunk bytes.
+    pub(crate) crc: u32,
+    /// Rows the chunk decodes into.
+    pub(crate) rows: u64,
+    /// (min, max) timestamp of the chunk's rows; None when empty.
+    pub(crate) span: Option<(i64, i64)>,
+}
+
+/// The parsed `index.bin`: everything an archive reopen knows before
+/// any shard decodes.
+pub(crate) struct ArchiveIndex {
+    pub(crate) meta: TraceMeta,
+    pub(crate) entries: Vec<IndexEntry>,
+    pub(crate) census: Option<TraceCensus>,
+    pub(crate) census_corrupt: bool,
+}
+
+/// Write `index.bin`: magic, version, verbatim source meta, the block
+/// table, then the length-prefixed FNV-checksummed census section.
+pub(crate) fn write_index(
+    dir: &Path,
+    meta: &TraceMeta,
+    entries: &[IndexEntry],
+    census: Option<&TraceCensus>,
+) -> Result<()> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(MAGIC);
+    put_uvarint(&mut buf, ARCHIVE_VERSION);
+    for s in [&meta.format, &meta.source, &meta.app] {
+        put_uvarint(&mut buf, s.len() as u64);
+        buf.extend_from_slice(s.as_bytes());
+    }
+    put_uvarint(&mut buf, entries.len() as u64);
+    for e in entries {
+        put_uvarint(&mut buf, zigzag(e.proc));
+        put_uvarint(&mut buf, e.offset);
+        put_uvarint(&mut buf, e.len);
+        buf.extend_from_slice(&e.crc.to_le_bytes());
+        put_uvarint(&mut buf, e.rows);
+        put_span(&mut buf, e.span);
+    }
+    match census {
+        Some(c) => {
+            let payload = census_payload(c);
+            buf.push(CENSUS_MARKER);
+            put_uvarint(&mut buf, (payload.len() + 4) as u64);
+            buf.extend_from_slice(&payload);
+            buf.extend_from_slice(&fnv32(&payload).to_le_bytes());
+        }
+        None => buf.push(CENSUS_ABSENT),
+    }
+    let p = dir.join(INDEX_FILE);
+    std::fs::write(&p, buf).with_context(|| format!("writing {}", p.display()))
+}
+
+fn census_payload(c: &TraceCensus) -> Vec<u8> {
+    let mut payload = Vec::new();
+    put_uvarint(&mut payload, CENSUS_VERSION);
+    put_uvarint(&mut payload, c.blocks.len() as u64);
+    for b in &c.blocks {
+        put_uvarint(&mut payload, b.rows);
+        put_span(&mut payload, b.span);
+    }
+    match &c.funcs {
+        Some(f) => {
+            payload.push(1);
+            put_uvarint(&mut payload, f.names.len() as u64);
+            for (name, &ns) in f.names.iter().zip(&f.exc_ns) {
+                put_uvarint(&mut payload, name.len() as u64);
+                payload.extend_from_slice(name.as_bytes());
+                put_uvarint(&mut payload, zigzag(ns));
+            }
+        }
+        None => payload.push(0),
+    }
+    match &c.channels {
+        Some(chans) => {
+            payload.push(1);
+            put_uvarint(&mut payload, chans.len() as u64);
+            for ch in chans {
+                put_uvarint(&mut payload, zigzag(ch.src));
+                put_uvarint(&mut payload, zigzag(ch.dst));
+                put_uvarint(&mut payload, zigzag(ch.tag));
+                put_uvarint(&mut payload, ch.sends);
+                put_uvarint(&mut payload, ch.recvs);
+            }
+        }
+        None => payload.push(0),
+    }
+    match &c.msgs {
+        Some(m) => {
+            payload.push(1);
+            payload.push(m.saw_send as u8);
+            put_uvarint(&mut payload, zigzag(m.max_send));
+            put_uvarint(&mut payload, zigzag(m.max_recv));
+        }
+        None => payload.push(0),
+    }
+    match &c.block_detail {
+        Some(detail) => {
+            payload.push(1);
+            put_uvarint(&mut payload, detail.len() as u64);
+            for d in detail {
+                put_uvarint(&mut payload, d.funcs.len() as u64);
+                for &(slot, ns) in &d.funcs {
+                    put_uvarint(&mut payload, slot as u64);
+                    put_uvarint(&mut payload, zigzag(ns));
+                }
+                put_uvarint(&mut payload, d.channels.len() as u64);
+                for &(slot, sends, recvs) in &d.channels {
+                    put_uvarint(&mut payload, slot as u64);
+                    put_uvarint(&mut payload, sends);
+                    put_uvarint(&mut payload, recvs);
+                }
+            }
+        }
+        None => payload.push(0),
+    }
+    payload
+}
+
+/// Parse `index.bin`. The pre-census part (magic, version, meta, block
+/// table) is strict — damage there is an open error. The census section
+/// is lenient exactly like the otf2 trailer: any anomaly degrades to
+/// census-absent + `census_corrupt`, never an error.
+pub(crate) fn read_index(dir: &Path) -> Result<ArchiveIndex> {
+    let p = dir.join(INDEX_FILE);
+    let buf =
+        std::fs::read(&p).with_context(|| format!("reading {}", p.display()))?;
+    if buf.len() < 8 || &buf[..8] != MAGIC {
+        bail!("bad archive magic in {}", dir.display());
+    }
+    let mut pos = 8usize;
+    let version = get_uvarint(&buf, &mut pos)?;
+    if version != ARCHIVE_VERSION {
+        bail!(
+            "unsupported archive version {version} in {} (this build reads version {ARCHIVE_VERSION})",
+            dir.display()
+        );
+    }
+    fn take<'a>(buf: &'a [u8], pos: &mut usize, len: usize) -> Result<&'a [u8]> {
+        let end = pos.checked_add(len).context("index.bin length overflow")?;
+        if end > buf.len() {
+            bail!("index.bin truncated at byte {pos}");
+        }
+        let out = &buf[*pos..end];
+        *pos = end;
+        Ok(out)
+    }
+    fn field(buf: &[u8], pos: &mut usize) -> Result<String> {
+        let len = get_uvarint(buf, pos)? as usize;
+        Ok(String::from_utf8(take(buf, pos, len)?.to_vec())?)
+    }
+    let meta = TraceMeta {
+        format: field(&buf, &mut pos)?,
+        source: field(&buf, &mut pos)?,
+        app: field(&buf, &mut pos)?,
+    };
+    let nblocks = get_uvarint(&buf, &mut pos)? as usize;
+    if nblocks > 100_000_000 {
+        bail!("index.bin declares an implausible block count {nblocks}");
+    }
+    let mut entries = Vec::with_capacity(nblocks);
+    for _ in 0..nblocks {
+        let proc = unzigzag(get_uvarint(&buf, &mut pos)?);
+        let offset = get_uvarint(&buf, &mut pos)?;
+        let len = get_uvarint(&buf, &mut pos)?;
+        let crc_bytes = take(&buf, &mut pos, 4)?;
+        let crc = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+        let rows = get_uvarint(&buf, &mut pos)?;
+        let span = get_span(&buf, &mut pos)?;
+        entries.push(IndexEntry { proc, offset, len, crc, rows, span });
+    }
+    let flag = *buf.get(pos).context("index.bin truncated before the census section")?;
+    let (census, census_corrupt) = match flag {
+        CENSUS_ABSENT => (None, false),
+        _ => parse_census_section(&buf, pos),
+    };
+    Ok(ArchiveIndex { meta, entries, census, census_corrupt })
+}
+
+/// Lenient census-section parse (cursor at the marker byte): `(None,
+/// true)` for any anomaly, `(None, false)` only for an intact section
+/// of an unknown future census version.
+fn parse_census_section(buf: &[u8], mut pos: usize) -> (Option<TraceCensus>, bool) {
+    let corrupt = (None, true);
+    if buf[pos] != CENSUS_MARKER {
+        return corrupt;
+    }
+    pos += 1;
+    let Ok(len) = get_uvarint(buf, &mut pos) else { return corrupt };
+    let Some(end) = pos.checked_add(len as usize) else { return corrupt };
+    if end > buf.len() || len < 4 {
+        return corrupt;
+    }
+    let body_end = end - 4;
+    let want = u32::from_le_bytes([
+        buf[body_end],
+        buf[body_end + 1],
+        buf[body_end + 2],
+        buf[body_end + 3],
+    ]);
+    if fnv32(&buf[pos..body_end]) != want {
+        return corrupt;
+    }
+    let body = &buf[..body_end];
+    let mut p = pos;
+    let parsed = (|| -> Result<Option<TraceCensus>> {
+        let version = get_uvarint(body, &mut p)?;
+        if version != CENSUS_VERSION {
+            return Ok(None); // future version: intact but unknown
+        }
+        let nblocks = get_uvarint(body, &mut p)? as usize;
+        if nblocks > 100_000_000 {
+            bail!("implausible census block count");
+        }
+        let mut blocks = Vec::with_capacity(nblocks);
+        for _ in 0..nblocks {
+            let rows = get_uvarint(body, &mut p)?;
+            let span = get_span(body, &mut p)?;
+            blocks.push(BlockCensus { rows, span });
+        }
+        let funcs = match body.get(p).copied() {
+            Some(0) => {
+                p += 1;
+                None
+            }
+            Some(1) => {
+                p += 1;
+                let n = get_uvarint(body, &mut p)? as usize;
+                if n > 100_000_000 {
+                    bail!("implausible census function count");
+                }
+                let mut names = Vec::with_capacity(n);
+                let mut exc_ns = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let len = get_uvarint(body, &mut p)? as usize;
+                    let end = p.checked_add(len).context("census name overflow")?;
+                    if end > body.len() {
+                        bail!("census truncated in a function name");
+                    }
+                    names.push(std::str::from_utf8(&body[p..end])?.to_string());
+                    p = end;
+                    exc_ns.push(unzigzag(get_uvarint(body, &mut p)?));
+                }
+                Some(FuncTotals { names, exc_ns })
+            }
+            _ => bail!("bad census funcs flag"),
+        };
+        let channels = match body.get(p).copied() {
+            Some(0) => {
+                p += 1;
+                None
+            }
+            Some(1) => {
+                p += 1;
+                let n = get_uvarint(body, &mut p)? as usize;
+                if n > 100_000_000 {
+                    bail!("implausible census channel count");
+                }
+                let mut chans = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let src = unzigzag(get_uvarint(body, &mut p)?);
+                    let dst = unzigzag(get_uvarint(body, &mut p)?);
+                    let tag = unzigzag(get_uvarint(body, &mut p)?);
+                    let sends = get_uvarint(body, &mut p)?;
+                    let recvs = get_uvarint(body, &mut p)?;
+                    chans.push(ChannelCensus { src, dst, tag, sends, recvs });
+                }
+                Some(chans)
+            }
+            _ => bail!("bad census channels flag"),
+        };
+        let msgs = match body.get(p).copied() {
+            Some(0) => {
+                p += 1;
+                None
+            }
+            Some(1) => {
+                p += 1;
+                let saw_send = match body.get(p).copied() {
+                    Some(0) => false,
+                    Some(1) => true,
+                    _ => bail!("bad census saw_send flag"),
+                };
+                p += 1;
+                let max_send = unzigzag(get_uvarint(body, &mut p)?);
+                let max_recv = unzigzag(get_uvarint(body, &mut p)?);
+                Some(MsgCensus { max_send, max_recv, saw_send })
+            }
+            _ => bail!("bad census msgs flag"),
+        };
+        let nfuncs = funcs.as_ref().map_or(0, |f| f.names.len());
+        let nchans = channels.as_ref().map_or(0, |c| c.len());
+        let block_detail = match body.get(p).copied() {
+            Some(0) => {
+                p += 1;
+                None
+            }
+            Some(1) => {
+                p += 1;
+                let n = get_uvarint(body, &mut p)? as usize;
+                if n != nblocks {
+                    bail!("census block detail count disagrees with the block table");
+                }
+                let mut detail = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let nf = get_uvarint(body, &mut p)? as usize;
+                    if nf > nfuncs {
+                        bail!("census block detail lists more functions than the census");
+                    }
+                    let mut funcs_d = Vec::with_capacity(nf);
+                    for _ in 0..nf {
+                        let slot = get_uvarint(body, &mut p)?;
+                        if slot >= nfuncs as u64 {
+                            bail!("census block detail function slot out of range");
+                        }
+                        funcs_d.push((slot as u32, unzigzag(get_uvarint(body, &mut p)?)));
+                    }
+                    let nc = get_uvarint(body, &mut p)? as usize;
+                    if nc > nchans {
+                        bail!("census block detail lists more channels than the census");
+                    }
+                    let mut chans_d = Vec::with_capacity(nc);
+                    for _ in 0..nc {
+                        let slot = get_uvarint(body, &mut p)?;
+                        if slot >= nchans as u64 {
+                            bail!("census block detail channel slot out of range");
+                        }
+                        let sends = get_uvarint(body, &mut p)?;
+                        let recvs = get_uvarint(body, &mut p)?;
+                        chans_d.push((slot as u32, sends, recvs));
+                    }
+                    detail.push(BlockDetail { funcs: funcs_d, channels: chans_d });
+                }
+                Some(detail)
+            }
+            _ => bail!("bad census block-detail flag"),
+        };
+        if p != body_end {
+            bail!("census payload has trailing bytes");
+        }
+        Ok(Some(TraceCensus {
+            version,
+            blocks,
+            funcs,
+            channels,
+            msgs,
+            block_detail,
+        }))
+    })();
+    match parsed {
+        Ok(Some(c)) => (Some(c), false),
+        Ok(None) => (None, false),
+        Err(_) => corrupt,
+    }
+}
+
+// -- census merging (conversion fold) ---------------------------------------
+
+/// Deterministic shard-order merge of per-shard censuses into the one
+/// stream-wide census the archive embeds. First-seen function / channel
+/// order across shards in fold order equals the order a sequential
+/// census over the whole stream would produce, and integer totals sum
+/// exactly — so the merged census is bit-identical to a whole-run
+/// pre-scan. Any shard without a census forfeits the merge (an archive
+/// census that might disagree with the rows must not exist).
+pub(crate) struct CensusMerger {
+    forfeited: bool,
+    blocks: Vec<BlockCensus>,
+    details: Vec<BlockDetail>,
+    func_slot: HashMap<String, usize>,
+    func_names: Vec<String>,
+    func_ns: Vec<i64>,
+    chan_slot: HashMap<(i64, i64, i64), usize>,
+    chans: Vec<ChannelCensus>,
+    msgs: MsgCensus,
+}
+
+impl CensusMerger {
+    pub(crate) fn new() -> Self {
+        CensusMerger {
+            forfeited: false,
+            blocks: Vec::new(),
+            details: Vec::new(),
+            func_slot: HashMap::new(),
+            func_names: Vec::new(),
+            func_ns: Vec::new(),
+            chan_slot: HashMap::new(),
+            chans: Vec::new(),
+            msgs: MsgCensus { max_send: -1, max_recv: -1, saw_send: false },
+        }
+    }
+
+    /// Fold one shard's census (in shard order).
+    pub(crate) fn merge(&mut self, census: Option<TraceCensus>) {
+        if self.forfeited {
+            return;
+        }
+        let Some(c) = census else {
+            self.forfeited = true;
+            return;
+        };
+        let (Some(funcs), Some(channels), Some(msgs), Some(detail)) =
+            (c.funcs, c.channels, c.msgs, c.block_detail)
+        else {
+            self.forfeited = true;
+            return;
+        };
+        let fmap: Vec<u32> = funcs
+            .names
+            .iter()
+            .zip(&funcs.exc_ns)
+            .map(|(name, &ns)| {
+                let next = self.func_names.len();
+                let slot = *self.func_slot.entry(name.clone()).or_insert(next);
+                if slot == next {
+                    self.func_names.push(name.clone());
+                    self.func_ns.push(0);
+                }
+                self.func_ns[slot] += ns;
+                slot as u32
+            })
+            .collect();
+        let cmap: Vec<u32> = channels
+            .iter()
+            .map(|ch| {
+                let next = self.chans.len();
+                let slot = *self.chan_slot.entry((ch.src, ch.dst, ch.tag)).or_insert(next);
+                if slot == next {
+                    self.chans.push(ChannelCensus {
+                        src: ch.src,
+                        dst: ch.dst,
+                        tag: ch.tag,
+                        sends: 0,
+                        recvs: 0,
+                    });
+                }
+                self.chans[slot].sends += ch.sends;
+                self.chans[slot].recvs += ch.recvs;
+                slot as u32
+            })
+            .collect();
+        self.msgs.max_send = self.msgs.max_send.max(msgs.max_send);
+        self.msgs.max_recv = self.msgs.max_recv.max(msgs.max_recv);
+        self.msgs.saw_send |= msgs.saw_send;
+        self.blocks.extend(c.blocks);
+        for d in detail {
+            let mut funcs_d: Vec<(u32, i64)> = d
+                .funcs
+                .iter()
+                .map(|&(s, ns)| (fmap[s as usize], ns))
+                .collect();
+            funcs_d.sort_unstable_by_key(|&(s, _)| s);
+            let mut chans_d: Vec<(u32, u64, u64)> = d
+                .channels
+                .iter()
+                .map(|&(s, sends, recvs)| (cmap[s as usize], sends, recvs))
+                .collect();
+            chans_d.sort_unstable_by_key(|&(s, _, _)| s);
+            self.details.push(BlockDetail { funcs: funcs_d, channels: chans_d });
+        }
+    }
+
+    /// The merged stream-wide census, or None when any shard forfeited.
+    pub(crate) fn finish(self) -> Option<TraceCensus> {
+        if self.forfeited {
+            return None;
+        }
+        Some(TraceCensus {
+            version: CENSUS_VERSION,
+            blocks: self.blocks,
+            funcs: Some(FuncTotals { names: self.func_names, exc_ns: self.func_ns }),
+            channels: Some(self.chans),
+            msgs: Some(self.msgs),
+            block_detail: Some(self.details),
+        })
+    }
+}
+
+// -- reopening: the zero-pre-scan sharded reader ----------------------------
+
+/// Archive reader: `open` parses `index.bin` only; every shard read is
+/// one seek + one bounded `read_exact` (the driver's pure-I/O half) and
+/// one checksum + inflate + parse (the worker half). Span, shard count
+/// and the full census — per-block sub-censuses included — are known
+/// before any shard decodes: zero pre-scan, for every source format the
+/// archive was converted from.
+pub struct ArchiveBlocks {
+    file: std::fs::File,
+    meta: TraceMeta,
+    entries: Vec<IndexEntry>,
+    census: Option<TraceCensus>,
+    census_corrupt: bool,
+    next: usize,
+}
+
+impl ArchiveBlocks {
+    pub fn open(dir: &Path) -> Result<Self> {
+        let idx = read_index(dir)?;
+        let p = dir.join(BLOCKS_FILE);
+        let file = std::fs::File::open(&p)
+            .with_context(|| format!("opening {}", p.display()))?;
+        let size = file.metadata()?.len();
+        for (i, e) in idx.entries.iter().enumerate() {
+            let end = e.offset.checked_add(e.len).context("blocks.bin offset overflow")?;
+            if end > size {
+                bail!(
+                    "blocks.bin truncated: block {i} ends at byte {end} but the file has {size}"
+                );
+            }
+        }
+        Ok(ArchiveBlocks {
+            file,
+            meta: idx.meta,
+            entries: idx.entries,
+            census: idx.census,
+            census_corrupt: idx.census_corrupt,
+            next: 0,
+        })
+    }
+}
+
+impl ShardedReader for ArchiveBlocks {
+    fn next_shard(&mut self) -> Result<Option<TraceShard>> {
+        self.next_task()?.map(ShardTask::into_shard).transpose()
+    }
+
+    fn next_task(&mut self) -> Result<Option<ShardTask>> {
+        if self.next >= self.entries.len() {
+            return Ok(None);
+        }
+        let index = self.next;
+        self.next += 1;
+        let e = self.entries[index];
+        self.file.seek(SeekFrom::Start(e.offset))?;
+        let mut buf = vec![0u8; e.len as usize];
+        self.file
+            .read_exact(&mut buf)
+            .with_context(|| format!("reading archive block {index}"))?;
+        let meta = self.meta.clone();
+        Ok(Some(ShardTask::new(
+            index,
+            buf.len(),
+            Box::new(move || decode_block(&buf, e.crc, e.proc, meta)),
+        )))
+    }
+
+    fn scan_span(&mut self) -> Result<Option<(i64, i64)>> {
+        // folded from the index block spans — works even when the
+        // census section is corrupt (the block table is strict)
+        let mut out: Option<(i64, i64)> = None;
+        for e in &self.entries {
+            if let Some((lo, hi)) = e.span {
+                out = Some(match out {
+                    Some((a, z)) => (a.min(lo), z.max(hi)),
+                    None => (lo, hi),
+                });
+            }
+        }
+        Ok(out)
+    }
+
+    fn census(&self) -> Option<&TraceCensus> {
+        self.census.as_ref()
+    }
+
+    fn census_corrupt(&self) -> bool {
+        self.census_corrupt
+    }
+
+    fn shard_count_hint(&self) -> Option<usize> {
+        Some(self.entries.len())
+    }
+
+    fn is_streaming(&self) -> bool {
+        true
+    }
+}
+
+// -- eager read -------------------------------------------------------------
+
+/// Read a whole archive eagerly (the `read_auto` path): every block
+/// decoded and concatenated in block order with one global name
+/// dictionary, reproducing the canonical row order of the source trace.
+pub fn read(dir: &Path) -> Result<Trace> {
+    let mut r = ArchiveBlocks::open(dir)?;
+    let meta = r.meta.clone();
+    let mut ts = Vec::new();
+    let mut et = Vec::new();
+    let mut nm = Vec::new();
+    let mut pr = Vec::new();
+    let mut th = Vec::new();
+    let mut pa = Vec::new();
+    let mut ms = Vec::new();
+    let mut tg = Vec::new();
+    let mut names = Interner::new();
+    let mut edict = Interner::new();
+    for s in [ENTER, LEAVE, INSTANT] {
+        edict.intern(s);
+    }
+    while let Some(sh) = r.next_shard()? {
+        let t = sh.trace;
+        let (set, sed) = t.events.strs(COL_TYPE)?;
+        let (snm, snd) = t.events.strs(COL_NAME)?;
+        for i in 0..t.len() {
+            et.push(edict.intern(sed.resolve(set[i]).unwrap_or(INSTANT)));
+            nm.push(names.intern(snd.resolve(snm[i]).unwrap_or("")));
+        }
+        ts.extend_from_slice(t.events.i64s(COL_TS)?);
+        pr.extend_from_slice(t.events.i64s(COL_PROC)?);
+        th.extend_from_slice(t.events.i64s(COL_THREAD)?);
+        pa.extend_from_slice(t.events.i64s(COL_PARTNER)?);
+        ms.extend_from_slice(t.events.i64s(COL_MSG_SIZE)?);
+        tg.extend_from_slice(t.events.i64s(COL_TAG)?);
+    }
+    let mut table = Table::new();
+    table.push(COL_TS, Column::I64(ts))?;
+    table.push(COL_TYPE, Column::Str { codes: et, dict: Arc::new(edict) })?;
+    table.push(COL_NAME, Column::Str { codes: nm, dict: Arc::new(names) })?;
+    table.push(COL_PROC, Column::I64(pr))?;
+    table.push(COL_THREAD, Column::I64(th))?;
+    table.push(COL_PARTNER, Column::I64(pa))?;
+    table.push(COL_MSG_SIZE, Column::I64(ms))?;
+    table.push(COL_TAG, Column::I64(tg))?;
+    Ok(Trace::new(table, meta))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::df::NULL_I64;
+    use crate::exec::stream::write_archive;
+    use crate::readers::streaming::SplitReader;
+    use std::path::PathBuf;
+
+    fn sample() -> Trace {
+        let mut b = TraceBuilder::new();
+        b.set_meta(TraceMeta {
+            format: "csv".into(),
+            source: "orig.csv".into(),
+            app: "toy".into(),
+        });
+        for r in 0..3i64 {
+            let mut t = 0;
+            b.enter(r, 0, t, "main");
+            t += 10;
+            b.enter(r, 0, t, "compute");
+            t += 50;
+            b.leave(r, 0, t, "compute");
+            t += 5;
+            b.enter(r, 0, t, "MPI_Send");
+            b.send(r, 0, t + 1, (r + 1) % 3, 4096, 7);
+            t += 10;
+            b.leave(r, 0, t, "MPI_Send");
+            b.recv(r, 0, t + 2, (r + 2) % 3, 4096, 7);
+            b.instant(r, 0, t + 3, "marker");
+            b.leave(r, 0, t + 20, "main");
+        }
+        b.finish()
+    }
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("pipit_archive_test").join(name);
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn convert(t: &Trace, dir: &Path) {
+        let mut r = SplitReader::new(t.clone()).unwrap();
+        write_archive(&mut r, dir, 1).unwrap();
+    }
+
+    fn dump(t: &Trace) -> String {
+        let ts = t.events.i64s(COL_TS).unwrap();
+        let (et, edict) = t.events.strs(COL_TYPE).unwrap();
+        let (nm, ndict) = t.events.strs(COL_NAME).unwrap();
+        let pr = t.events.i64s(COL_PROC).unwrap();
+        let th = t.events.i64s(COL_THREAD).unwrap();
+        let pa = t.events.i64s(COL_PARTNER).unwrap();
+        let ms = t.events.i64s(COL_MSG_SIZE).unwrap();
+        let tg = t.events.i64s(COL_TAG).unwrap();
+        let mut out = String::new();
+        for i in 0..t.len() {
+            out.push_str(&format!(
+                "{}|{}|{}|{}|{}|{}|{}|{}\n",
+                ts[i],
+                edict.resolve(et[i]).unwrap_or("?"),
+                ndict.resolve(nm[i]).unwrap_or("?"),
+                pr[i],
+                th[i],
+                pa[i],
+                ms[i],
+                tg[i],
+            ));
+        }
+        out
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [0i64, 1, -1, 63, -64, i64::MAX, i64::MIN, NULL_I64] {
+            assert_eq!(unzigzag(zigzag(v)), v, "{v}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_preserves_rows_thread_nulls_and_meta() {
+        let t = sample();
+        let dir = tmp("rt");
+        convert(&t, &dir);
+        let t2 = read(&dir).unwrap();
+        // every column bit-identical, meta stored verbatim
+        assert_eq!(dump(&t2), dump(&t));
+        assert_eq!(t2.meta.format, "csv");
+        assert_eq!(t2.meta.source, "orig.csv");
+        assert_eq!(t2.meta.app, "toy");
+    }
+
+    #[test]
+    fn reopen_knows_everything_before_any_decode() {
+        let t = sample();
+        let dir = tmp("census");
+        convert(&t, &dir);
+        let mut r = ArchiveBlocks::open(&dir).unwrap();
+        assert!(r.is_streaming());
+        assert_eq!(r.shard_count_hint(), Some(3));
+        assert_eq!(r.scan_span().unwrap(), Some(t.time_range().unwrap()));
+        assert!(!r.census_corrupt());
+        let c = r.census().expect("archive census");
+        assert_eq!(c.total_rows(), t.len() as u64);
+        assert_eq!(c.blocks.len(), 3);
+        let detail = c.block_detail.as_ref().expect("per-block sub-censuses");
+        assert_eq!(detail.len(), 3);
+        // the block x function matrix columns sum to the global census
+        let funcs = c.funcs.as_ref().unwrap();
+        let mut sums = vec![0i64; funcs.names.len()];
+        for d in detail {
+            for &(slot, ns) in &d.funcs {
+                sums[slot as usize] += ns;
+            }
+        }
+        assert_eq!(sums, funcs.exc_ns);
+        // streamed rows match the source bit for bit
+        let mut out = String::new();
+        while let Some(sh) = r.next_shard().unwrap() {
+            out.push_str(&dump(&sh.trace));
+        }
+        assert_eq!(out, dump(&t));
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_bad_version() {
+        let dir = tmp("badmagic");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(INDEX_FILE), b"NOTPIPAR____").unwrap();
+        std::fs::write(dir.join(BLOCKS_FILE), b"").unwrap();
+        let err = ArchiveBlocks::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("magic"), "{err}");
+
+        let mut buf = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        put_uvarint(&mut buf, ARCHIVE_VERSION + 9);
+        std::fs::write(dir.join(INDEX_FILE), buf).unwrap();
+        let err = ArchiveBlocks::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("version"), "{err}");
+    }
+
+    #[test]
+    fn truncated_index_is_a_deterministic_open_error() {
+        let t = sample();
+        let dir = tmp("truncidx");
+        convert(&t, &dir);
+        let full = std::fs::read(dir.join(INDEX_FILE)).unwrap();
+        std::fs::write(dir.join(INDEX_FILE), &full[..12]).unwrap();
+        let a = ArchiveBlocks::open(&dir).unwrap_err().to_string();
+        let b = ArchiveBlocks::open(&dir).unwrap_err().to_string();
+        assert_eq!(a, b, "open error must be deterministic");
+    }
+
+    #[test]
+    fn truncated_blocks_file_is_a_deterministic_open_error() {
+        let t = sample();
+        let dir = tmp("truncblk");
+        convert(&t, &dir);
+        let full = std::fs::read(dir.join(BLOCKS_FILE)).unwrap();
+        std::fs::write(dir.join(BLOCKS_FILE), &full[..full.len() / 2]).unwrap();
+        let err = ArchiveBlocks::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+    }
+
+    #[test]
+    fn bit_flipped_chunk_fails_its_shard_deterministically() {
+        let t = sample();
+        let dir = tmp("bitflip");
+        convert(&t, &dir);
+        let mut blocks = std::fs::read(dir.join(BLOCKS_FILE)).unwrap();
+        let mid = blocks.len() / 2;
+        blocks[mid] ^= 0x40;
+        std::fs::write(dir.join(BLOCKS_FILE), &blocks).unwrap();
+        let drain = || -> String {
+            let mut r = ArchiveBlocks::open(&dir).unwrap();
+            loop {
+                match r.next_shard() {
+                    Ok(Some(_)) => continue,
+                    Ok(None) => panic!("bit flip went undetected"),
+                    Err(e) => return e.to_string(),
+                }
+            }
+        };
+        let a = drain();
+        assert!(a.contains("checksum"), "{a}");
+        assert_eq!(a, drain(), "decode error must be deterministic");
+    }
+
+    #[test]
+    fn corrupt_census_degrades_to_absent_but_still_streams() {
+        let t = sample();
+        let dir = tmp("badcensus");
+        convert(&t, &dir);
+        // flip the census section's trailing checksum byte: the strict
+        // block table is untouched, the lenient census parse degrades
+        let mut idx = std::fs::read(dir.join(INDEX_FILE)).unwrap();
+        let last = idx.len() - 1;
+        idx[last] ^= 0xFF;
+        std::fs::write(dir.join(INDEX_FILE), &idx).unwrap();
+        let mut r = ArchiveBlocks::open(&dir).unwrap();
+        assert!(r.census().is_none());
+        assert!(r.census_corrupt());
+        // rows are unaffected
+        let mut out = String::new();
+        while let Some(sh) = r.next_shard().unwrap() {
+            out.push_str(&dump(&sh.trace));
+        }
+        assert_eq!(out, dump(&t));
+    }
+
+    #[test]
+    fn archive_without_census_reopens_clean() {
+        let t = sample();
+        let dir = tmp("nocensus");
+        convert(&t, &dir);
+        // rewrite the index with the census omitted entirely
+        let idx = read_index(&dir).unwrap();
+        write_index(&dir, &idx.meta, &idx.entries, None).unwrap();
+        let r = ArchiveBlocks::open(&dir).unwrap();
+        assert!(r.census().is_none());
+        assert!(!r.census_corrupt(), "absent census is not corruption");
+    }
+}

@@ -41,7 +41,7 @@
 //! `time_profile` identical to the sequential engine.
 
 use crate::df::Interner;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// Current census record version. Serialized censuses with a different
 /// version are ignored (treated as absent), never misparsed.
@@ -79,6 +79,22 @@ pub struct ChannelCensus {
     pub recvs: u64,
 }
 
+/// Per-block function / channel sub-census — one row of the block ×
+/// function (and block × channel) matrix. Slots index the stream-wide
+/// [`FuncTotals`] / channel sections, so the global totals are exactly
+/// the column sums of these rows. Consumers use them to pre-size
+/// per-process fold outputs and to validate a single block against the
+/// census instead of degrading the whole run.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct BlockDetail {
+    /// (slot into `funcs.names`, exclusive ns accounted in this block),
+    /// ascending by slot.
+    pub funcs: Vec<(u32, i64)>,
+    /// (slot into `channels`, sends, recvs) recorded in this block,
+    /// ascending by slot.
+    pub channels: Vec<(u32, u64, u64)>,
+}
+
 /// Stream-wide message-size extrema (clamped sizes, mirroring the comm
 /// analyses): enough to derive `message_histogram`'s bin width up front.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
@@ -102,6 +118,9 @@ pub struct TraceCensus {
     pub funcs: Option<FuncTotals>,
     pub channels: Option<Vec<ChannelCensus>>,
     pub msgs: Option<MsgCensus>,
+    /// Per-block sub-censuses, 1:1 with `blocks`; None for sources that
+    /// only carry the aggregate sections (e.g. the otf2 defs trailer).
+    pub block_detail: Option<Vec<BlockDetail>>,
 }
 
 impl TraceCensus {
@@ -185,6 +204,11 @@ pub(crate) struct CensusAccum {
     chan_keys: Vec<(i64, i64, i64)>,
     chan_counts: Vec<(u64, u64)>,
     msgs: MsgCensus,
+    /// the block in progress's sub-census, keyed by global slot (sorted
+    /// maps so the flushed rows are slot-ascending, deterministically).
+    block_funcs: BTreeMap<u32, i64>,
+    block_chans: BTreeMap<u32, (u64, u64)>,
+    details: Vec<BlockDetail>,
 }
 
 impl CensusAccum {
@@ -247,6 +271,7 @@ impl CensusAccum {
         self.msgs.saw_send = true;
         let slot = self.chan_slot((proc, partner, tag));
         self.chan_counts[slot].0 += 1;
+        self.block_chans.entry(slot as u32).or_default().0 += 1;
     }
 
     /// Record a recv endpoint (recv's partner = source rank).
@@ -257,6 +282,7 @@ impl CensusAccum {
         self.msgs.max_recv = self.msgs.max_recv.max(size.max(0));
         let slot = self.chan_slot((partner, proc, tag));
         self.chan_counts[slot].1 += 1;
+        self.block_chans.entry(slot as u32).or_default().1 += 1;
     }
 
     fn chan_slot(&mut self, key: (i64, i64, i64)) -> usize {
@@ -284,6 +310,13 @@ impl CensusAccum {
             self.walk(proc, e.thread, e.ts, e.enter, e.name);
         }
         self.blocks.push(BlockCensus { rows: self.block_rows, span: self.block_span });
+        self.details.push(BlockDetail {
+            funcs: std::mem::take(&mut self.block_funcs).into_iter().collect(),
+            channels: std::mem::take(&mut self.block_chans)
+                .into_iter()
+                .map(|(slot, (s, r))| (slot, s, r))
+                .collect(),
+        });
         self.block_rows = 0;
         self.block_span = None;
     }
@@ -336,6 +369,8 @@ impl CensusAccum {
             self.totals.push(0);
         }
         self.totals[slot] += dur;
+        // the walk runs inside `end_block`, so this is the closing block
+        *self.block_funcs.entry(slot as u32).or_insert(0) += dur;
     }
 
     /// Finish: the assembled census, or None when forfeited. A trailing
@@ -372,6 +407,7 @@ impl CensusAccum {
             funcs: Some(funcs),
             channels: Some(channels),
             msgs: Some(self.msgs),
+            block_detail: Some(self.details),
         })
     }
 }
@@ -444,6 +480,40 @@ mod tests {
         assert_eq!(m.max_send, 300);
         assert_eq!(m.max_recv, 300);
         assert!(m.saw_send);
+    }
+
+    #[test]
+    fn block_detail_rows_sum_to_the_global_sections() {
+        // two blocks: proc 0 runs main/work and sends; proc 1 only
+        // receives — each block's sub-census must carry exactly its own
+        // contribution, keyed by the global slots.
+        let mut a = CensusAccum::new();
+        a.enter(0, 0, "main");
+        a.enter(0, 20, "work");
+        a.leave(0, 80, "work");
+        a.leave(0, 100, "main");
+        a.send(0, 1, 0, 64);
+        a.row(0);
+        a.end_block(0);
+        a.enter(0, 0, "main");
+        a.leave(0, 50, "main");
+        a.recv(1, 0, 0, 64);
+        a.row(0);
+        a.end_block(1);
+        let c = a.finish().unwrap();
+        let d = c.block_detail.as_ref().unwrap();
+        assert_eq!(d.len(), c.blocks.len());
+        // block 0: main (slot 0) = 40, work (slot 1) = 60; one send
+        assert_eq!(d[0].funcs, vec![(0, 40), (1, 60)]);
+        assert_eq!(d[0].channels, vec![(0, 1, 0)]);
+        // block 1: main only; one recv on the same channel slot
+        assert_eq!(d[1].funcs, vec![(0, 50)]);
+        assert_eq!(d[1].channels, vec![(0, 0, 1)]);
+        // column sums reproduce the global sections
+        let f = c.funcs.unwrap();
+        assert_eq!(f.exc_ns, vec![40 + 50, 60]);
+        let chans = c.channels.unwrap();
+        assert_eq!((chans[0].sends, chans[0].recvs), (1, 1));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! | [`otf2`]      | OTF2-sim: per-rank compressed binary streams + global defs|
 //! | [`projections`] | Projections-sim: Charm++-style .sts header + per-PE logs|
 //! | [`hpctoolkit`]| HPCToolkit-sim: CCT metadata + per-rank call-path samples |
+//! | [`archive`]   | Pipit archive: indexed compressed blocks + embedded census|
 //!
 //! Each reader parses into the uniform schema of [`crate::trace`]; each
 //! writer emits what the paired reader parses (used by the synthetic app
@@ -24,6 +25,7 @@
 //! shard decodes — what lets the streamed analyses bin top-k directly
 //! and pair-and-drain message channels during ingest.
 
+pub mod archive;
 pub mod census;
 pub mod chrome;
 pub mod csv;
@@ -32,7 +34,8 @@ pub mod otf2;
 pub mod projections;
 pub mod streaming;
 
-pub use census::{BlockCensus, ChannelCensus, FuncTotals, MsgCensus, TraceCensus};
+pub use archive::ArchiveBlocks;
+pub use census::{BlockCensus, BlockDetail, ChannelCensus, FuncTotals, MsgCensus, TraceCensus};
 pub use streaming::{
     open_planned, open_sharded, plan_sharded, NoCensus, SerialDecode, ShardTask,
     ShardedReader, StreamPlan, TraceShard,
@@ -48,6 +51,9 @@ pub fn read_auto(path: &Path) -> Result<Trace> {
     if path.is_dir() {
         if path.join("defs.bin").exists() {
             return otf2::read(path, 0);
+        }
+        if path.join(archive::INDEX_FILE).exists() {
+            return archive::read(path);
         }
         if path.join("meta.db").exists() {
             return hpctoolkit::read(path);

@@ -54,7 +54,7 @@ const T_INSTANT: u8 = 4;
 
 // -- varint helpers --------------------------------------------------------
 
-fn put_uvarint(buf: &mut Vec<u8>, mut v: u64) {
+pub(crate) fn put_uvarint(buf: &mut Vec<u8>, mut v: u64) {
     loop {
         let mut b = (v & 0x7f) as u8;
         v >>= 7;
@@ -69,7 +69,7 @@ fn put_uvarint(buf: &mut Vec<u8>, mut v: u64) {
 }
 
 #[inline]
-fn get_uvarint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+pub(crate) fn get_uvarint(buf: &[u8], pos: &mut usize) -> Result<u64> {
     // fast path: single-byte varints dominate real streams (region refs,
     // small deltas) — worth ~15% of total decode time (EXPERIMENTS §Perf)
     if let Some(&b) = buf.get(*pos) {
@@ -475,6 +475,9 @@ fn parse_census_section(
             funcs: Some(super::census::FuncTotals { names: fnames, exc_ns }),
             channels: Some(channels),
             msgs: Some(super::census::MsgCensus { max_send, max_recv, saw_send }),
+            // the defs trailer predates per-block sub-censuses; the
+            // archive format is the carrier for those
+            block_detail: None,
         }))
     })();
     match parsed {

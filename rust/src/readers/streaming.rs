@@ -6,6 +6,7 @@
 //! | format      | strategy                                               |
 //! |-------------|--------------------------------------------------------|
 //! | otf2-dir    | one rank file decoded per shard (the flagship path)    |
+//! | archive-dir | indexed compressed block per shard, zero pre-scan      |
 //! | csv         | pre-scanned block byte ranges read from disk           |
 //! | chrome json | pre-scanned block byte ranges read from disk (the raw  |
 //! |             | text is never resident whole: the pre-scan itself runs |
@@ -87,6 +88,16 @@ pub struct ShardTask {
 }
 
 impl ShardTask {
+    /// Assemble a task from its parts (for sibling reader modules —
+    /// `bytes` is the raw payload size the read-ahead gate budgets).
+    pub(crate) fn new(
+        index: usize,
+        bytes: usize,
+        decode: Box<dyn FnOnce() -> Result<Trace> + Send>,
+    ) -> Self {
+        ShardTask { index, bytes, decode }
+    }
+
     /// Run the CPU half of the shard read (consumes the payload).
     pub fn decode(self) -> Result<Trace> {
         (self.decode)()
@@ -265,6 +276,9 @@ pub enum StreamPlan {
     /// OTF2-sim directory: one rank file per shard, no pre-scan needed
     /// (defs.bin carries the rank list and span extrema).
     Otf2,
+    /// Pipit archive directory: the index carries block offsets, spans
+    /// and the full census — reopening is pure seeks, zero pre-scan.
+    Archive,
     /// Canonically-ordered csv: block byte ranges stream from disk.
     Csv(CsvPlan),
     /// Canonically-ordered chrome json: block byte ranges stream from
@@ -339,6 +353,9 @@ pub fn plan_sharded(path: &Path) -> Result<StreamPlan> {
         if path.join("defs.bin").exists() {
             return Ok(StreamPlan::Otf2);
         }
+        if path.join(super::archive::INDEX_FILE).exists() {
+            return Ok(StreamPlan::Archive);
+        }
         if path.join("meta.db").exists() {
             return Ok(StreamPlan::Fallback);
         }
@@ -369,6 +386,7 @@ pub fn plan_sharded(path: &Path) -> Result<StreamPlan> {
 pub fn open_planned(path: &Path, plan: &StreamPlan) -> Result<Box<dyn ShardedReader>> {
     match plan {
         StreamPlan::Otf2 => Ok(Box::new(Otf2ShardedReader::open(path)?)),
+        StreamPlan::Archive => Ok(Box::new(super::archive::ArchiveBlocks::open(path)?)),
         StreamPlan::Csv(p) => Ok(Box::new(CsvBlocks::open(path, p.clone())?)),
         StreamPlan::Chrome(p) => Ok(Box::new(ChromeBlocks::open(path, p.clone())?)),
         StreamPlan::Fallback => {
@@ -1653,6 +1671,86 @@ mod tests {
         let mut r = open_planned(&p, &plan).unwrap();
         let err = r.next_shard().unwrap_err();
         assert!(err.to_string().contains("bad timestamp"), "{err}");
+    }
+
+    /// A final line with no trailing newline is a complete row: block
+    /// byte ranges end at the file length, so the census row counts and
+    /// span extrema must include it.
+    #[test]
+    fn csv_without_trailing_newline_streams_exactly() {
+        let src = "Timestamp (ns), Event Type, Name, Process\n\
+                   0, Enter, main, 0\n\
+                   5, Leave, main, 0\n\
+                   1, Enter, main, 1\n\
+                   7, Leave, main, 1";
+        let p = tmp("no_trailing_newline.csv");
+        std::fs::write(&p, src).unwrap();
+        let mut r = open_sharded(&p).unwrap();
+        assert!(r.is_streaming());
+        assert_eq!(r.scan_span().unwrap(), Some((0, 7)));
+        let census = r.census().expect("csv pre-scan carries a census");
+        let rows: Vec<u64> = census.blocks.iter().map(|b| b.rows).collect();
+        assert_eq!(rows, vec![2, 2]);
+        assert_eq!(census.blocks[1].span, Some((1, 7)));
+        assert_rows_match(&p);
+    }
+
+    /// CRLF line endings: `read_line` byte counts include the `\r`, so
+    /// block offsets stay exact, and field trimming strips the `\r`
+    /// from the last column in both the pre-scan and the decode.
+    #[test]
+    fn crlf_line_endings_stream_exactly() {
+        let src = "Timestamp (ns), Event Type, Name, Process\r\n\
+                   0, Enter, main, 0\r\n\
+                   5, Leave, main, 0\r\n\
+                   1, Enter, main, 1\r\n\
+                   7, Leave, main, 1\r\n";
+        let p = tmp("crlf.csv");
+        std::fs::write(&p, src).unwrap();
+        let mut r = open_sharded(&p).unwrap();
+        assert!(r.is_streaming());
+        assert_eq!(r.scan_span().unwrap(), Some((0, 7)));
+        let census = r.census().expect("csv pre-scan carries a census");
+        let rows: Vec<u64> = census.blocks.iter().map(|b| b.rows).collect();
+        assert_eq!(rows, vec![2, 2]);
+        assert_rows_match(&p);
+    }
+
+    /// Multi-byte UTF-8 names in a file much larger than the cursor
+    /// chunk: the sliding window lands mid-character and mid-event many
+    /// times, and the byte-based scanner must still produce exact event
+    /// bounds, census row counts, and span extrema.
+    #[test]
+    fn chrome_multibyte_names_across_cursor_chunk_boundaries() {
+        let name = "संगणना_φase"; // 2- and 3-byte UTF-8 sequences
+        let mut src = String::from("[\n");
+        let mut first = true;
+        for pid in 0..3 {
+            for k in 0..400i64 {
+                for (ph, ts) in [("B", k * 10), ("E", k * 10 + 5)] {
+                    if !first {
+                        src.push(',');
+                    }
+                    first = false;
+                    src.push_str(&format!(
+                        "{{\"name\":\"{name}{k}\",\"ph\":\"{ph}\",\
+                         \"ts\":{ts},\"pid\":{pid},\"tid\":0}}\n"
+                    ));
+                }
+            }
+        }
+        src.push(']');
+        assert!(src.len() > 2 * CURSOR_CHUNK, "fixture must span several chunks");
+        let p = tmp("multibyte.json");
+        std::fs::write(&p, src).unwrap();
+        let mut r = open_sharded(&p).unwrap();
+        assert!(r.is_streaming());
+        // chrome ts is in microseconds: 3995 µs -> 3_995_000 ns
+        assert_eq!(r.scan_span().unwrap(), Some((0, 3_995_000)));
+        let census = r.census().expect("chrome pre-scan carries a census");
+        let rows: Vec<u64> = census.blocks.iter().map(|b| b.rows).collect();
+        assert_eq!(rows, vec![800, 800, 800]);
+        assert_rows_match(&p);
     }
 
     /// The pre-scan census must reproduce the engine census exactly —

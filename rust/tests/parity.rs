@@ -1026,3 +1026,108 @@ fn batch_mode_matches_per_trace_sequential_runs() {
     assert_eq!(batch.func_names, seq.func_names);
     assert_eq!(batch.values, seq.values);
 }
+
+// ---------------------------------------------------------------------------
+// persistent indexed archive: convert once, query forever
+// ---------------------------------------------------------------------------
+
+/// Convert any sharded source into an archive and return its directory.
+fn convert_archive(src: &Path, name: &str) -> PathBuf {
+    let dir = stream_dir().join(name);
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut r = open_sharded(src).unwrap();
+    exec::stream::write_archive(r.as_mut(), &dir, 2).unwrap();
+    dir
+}
+
+/// Reopening an archive must be a pure census hit: streaming, zero
+/// pre-scan fallback, zero per-block divergence.
+fn assert_archive_census_hit(arch: &Path, ctx: &str) {
+    let mut r = open_sharded(arch).unwrap();
+    assert!(r.is_streaming(), "{ctx}: archive must stream");
+    assert!(r.census().is_some(), "{ctx}: archive must embed its census");
+    let (_, stats) = exec::stream::flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap();
+    assert!(stats.census, "{ctx}: census must be served: {stats:?}");
+    assert!(!stats.fallback, "{ctx}: reopening must not fall back");
+    assert_eq!(stats.census_block_mismatches, 0, "{ctx}: blocks must agree");
+}
+
+/// Every generator, converted once and reopened: the archive must decode
+/// the exact source rows eagerly, and every routed analysis over the
+/// reopened archive must be bit-identical to that eager read at
+/// 1 / 2 / 4 / 8 threads — with the census served from the index alone.
+#[test]
+fn archive_roundtrip_matches_eager_for_all_generators() {
+    let dir = stream_dir();
+    for (app, t) in traces() {
+        let src = dir.join(format!("archsrc_{app}_otf2"));
+        let _ = std::fs::remove_dir_all(&src);
+        pipit::readers::otf2::write(&t, &src).unwrap();
+        let arch = convert_archive(&src, &format!("arch_{app}"));
+
+        let eager = pipit::readers::read_auto(&arch).unwrap();
+        assert_eq!(eager.timestamps().unwrap(), t.timestamps().unwrap(), "{app}");
+        assert_eq!(eager.processes().unwrap(), t.processes().unwrap(), "{app}");
+
+        assert_streaming_matches_eager(&arch, &format!("archive {app}"));
+        assert_streamed_msg_ops_match(&arch, &format!("archive {app}"));
+        assert_archive_census_hit(&arch, app);
+    }
+}
+
+/// The checked-in fixtures through the same round trip: real format
+/// decoding feeding the converter, including the pre-census otf2 fixture
+/// (the conversion rebuilds a fresh census from the decoded rows).
+#[test]
+fn archive_roundtrip_golden_fixtures() {
+    let base = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    for fix in ["tiny.csv", "tiny_chrome.json", "tiny_otf2"] {
+        let p = base.join(fix);
+        let arch = convert_archive(&p, &format!("archfix_{}", fix.replace('.', "_")));
+
+        let src = pipit::readers::read_auto(&p).unwrap();
+        let back = pipit::readers::read_auto(&arch).unwrap();
+        assert_eq!(back.timestamps().unwrap(), src.timestamps().unwrap(), "{fix}");
+        assert_eq!(back.processes().unwrap(), src.processes().unwrap(), "{fix}");
+
+        assert_streaming_matches_eager(&arch, &format!("archive {fix}"));
+        assert_streamed_msg_ops_match(&arch, &format!("archive {fix}"));
+        assert_archive_census_hit(&arch, fix);
+    }
+}
+
+/// hpctoolkit and projections cannot stream from their native layout —
+/// `open_sharded` falls back to split-after-load. Converting once gives
+/// them true streaming: the reopened archive serves every analysis with
+/// a census hit and no fallback.
+#[test]
+fn archive_gives_fallback_formats_true_streaming() {
+    let dir = stream_dir();
+
+    let t = gen::generate("gol", &GenConfig::new(4, 3), 1).unwrap();
+    let proj = dir.join("archsrc_proj");
+    let _ = std::fs::remove_dir_all(&proj);
+    pipit::readers::projections::write(&t, &proj, "gol").unwrap();
+    assert!(
+        !open_sharded(&proj).unwrap().is_streaming(),
+        "projections source must be a fallback"
+    );
+    let arch = convert_archive(&proj, "arch_proj");
+    assert_archive_census_hit(&arch, "projections archive");
+    assert_streaming_matches_eager(&arch, "projections archive");
+
+    let hpct = dir.join("archsrc_hpct");
+    let _ = std::fs::remove_dir_all(&hpct);
+    let cct = vec![(1i64, -1i64, "main"), (2, 1, "solve"), (3, 1, "io")];
+    let mut samples = std::collections::HashMap::new();
+    samples.insert(0i64, vec![(0i64, 1i64), (10, 2), (40, 3), (60, 1)]);
+    samples.insert(1i64, vec![(0, 1), (15, 2), (55, 1)]);
+    pipit::readers::hpctoolkit::write(&hpct, &cct, &samples).unwrap();
+    assert!(
+        !open_sharded(&hpct).unwrap().is_streaming(),
+        "hpctoolkit source must be a fallback"
+    );
+    let arch = convert_archive(&hpct, "arch_hpct");
+    assert_archive_census_hit(&arch, "hpctoolkit archive");
+    assert_streaming_matches_eager(&arch, "hpctoolkit archive");
+}
