@@ -1,0 +1,99 @@
+//! The concurrent analysis server, end to end:
+//!
+//! 1. load a session with two generated traces (a shared immutable pool),
+//! 2. start `AnalysisServer` with a small worker pool,
+//! 3. fan several client threads out over it, each submitting typed
+//!    `AnalysisRequest`s (the same canonical form the CLI and pipeline
+//!    steps use),
+//! 4. repeat a query to show the result cache serving it, and
+//! 5. print the server counters (queue depth, peak concurrency,
+//!    cache hit/miss/eviction).
+//!
+//! Run with: `cargo run --release --example analysis_server`
+
+use std::sync::Arc;
+use std::thread;
+
+use pipit::analysis::Metric;
+use pipit::coordinator::{AnalysisRequest, AnalysisServer, AnalysisSession};
+use pipit::gen::GenConfig;
+
+fn main() -> anyhow::Result<()> {
+    // The pool: entries are immutable `Arc<Trace>`s, so every client and
+    // worker reads the same bytes — nothing is copied per request.
+    let mut session = AnalysisSession::new().with_threads(2);
+    session.generate("laghos16", "laghos", &GenConfig::new(16, 6), 1)?;
+    session.generate("kripke8", "kripke", &GenConfig::new(8, 4), 1)?;
+
+    let server = AnalysisServer::start(session, 4);
+
+    // Three clients, each with its own request mix, all concurrent.
+    let mixes: Vec<(&str, Vec<AnalysisRequest>)> = vec![
+        (
+            "laghos16",
+            vec![
+                AnalysisRequest::FlatProfile { metric: Metric::ExcTime },
+                AnalysisRequest::TimeProfile { bins: 128, top: Some(10) },
+                AnalysisRequest::CriticalPath,
+            ],
+        ),
+        (
+            "kripke8",
+            vec![
+                AnalysisRequest::CommMatrix { unit: pipit::analysis::CommUnit::Bytes },
+                AnalysisRequest::LoadImbalance { metric: Metric::ExcTime, k: 4 },
+                AnalysisRequest::Lateness,
+            ],
+        ),
+        (
+            "laghos16",
+            vec![
+                AnalysisRequest::IdleTime,
+                AnalysisRequest::CommCompBreakdown,
+                AnalysisRequest::Cct,
+            ],
+        ),
+    ];
+    let handles: Vec<_> = mixes
+        .into_iter()
+        .enumerate()
+        .map(|(id, (trace, reqs))| {
+            let client = server.client();
+            thread::spawn(move || -> anyhow::Result<()> {
+                // submit() is non-blocking; the pool schedules FIFO.
+                let pending: Vec<_> = reqs
+                    .iter()
+                    .map(|r| client.submit(trace, r))
+                    .collect::<anyhow::Result<_>>()?;
+                for (req, p) in reqs.iter().zip(pending) {
+                    let res = p.wait()?;
+                    println!("client {id}: {trace}/{} -> {}", req.op(), res.summary());
+                }
+                Ok(())
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread panicked")?;
+    }
+
+    // A repeated query is a cache hit: the same `Arc` comes back.
+    let client = server.client();
+    let req = AnalysisRequest::TimeProfile { bins: 128, top: Some(10) };
+    let first = client.query("laghos16", &req)?;
+    let again = client.query("laghos16", &req)?;
+    println!("repeat query shares the cached result: {}", Arc::ptr_eq(&first, &again));
+
+    let stats = server.stats();
+    println!(
+        "served {} requests ({} failed), peak {} in flight, peak queue {}",
+        stats.completed, stats.failed, stats.peak_active, stats.peak_queue
+    );
+    println!(
+        "cache: {} hits / {} misses / {} evictions, {} entries live",
+        stats.cache.hits, stats.cache.misses, stats.cache.evictions, stats.cache.entries
+    );
+
+    server.shutdown();
+    Ok(())
+}

@@ -17,7 +17,7 @@ pub enum CommUnit {
 }
 
 /// Dense process × process matrix.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CommMatrix {
     /// Sorted distinct process ids; row/col order of `data`.
     pub procs: Vec<i64>,

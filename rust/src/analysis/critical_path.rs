@@ -26,7 +26,7 @@ use crate::trace::*;
 use anyhow::{bail, Result};
 
 /// A critical path: event row indices in forward time order.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CriticalPath {
     pub rows: Vec<u32>,
 }

@@ -32,7 +32,7 @@ use crate::trace::*;
 use anyhow::{bail, Result};
 
 /// Result of a time profile: `values[bin][func]` = ns of exclusive time.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct TimeProfile {
     pub bin_edges: Vec<i64>,
     pub func_names: Vec<String>,

@@ -8,9 +8,11 @@
 //! ```
 
 use super::pipeline::Pipeline;
+use super::request::AnalysisRequest;
 use super::session::AnalysisSession;
 use crate::analysis::Metric;
 use crate::gen::GenConfig;
+use crate::util::json::{num, obj, s as jstr, Json};
 use anyhow::{bail, Context, Result};
 use std::collections::HashMap;
 
@@ -90,8 +92,9 @@ USAGE:
   pipit generate --app <model> [--ranks N] [--iterations N] [--seed S]
                  [--variant V] [--format otf2|csv|chrome|projections] --out <path>
   pipit analyze <op> --trace <path> [--metric exc|inc|count] [--bins N]
-                 [--top N] [--start-event NAME] [--threads N] [--stream]
-                 [--out <file>]
+                 [--top N] [--start-event NAME] [--window N]
+                 [--unit bytes|count] [--num-processes N] [--threads N]
+                 [--stream] [--out <file>]
   pipit analyze multi_run --batch <p1,p2,...> [--metric exc|inc|count]
                  [--top N] [--threads N] [--out <file>]
   pipit convert --trace <path> --out <dir> [--threads N]
@@ -103,6 +106,28 @@ MODELS:  gol tortuga laghos kripke amg loimos axonn
 OPS:     flat_profile time_profile comm_matrix message_histogram
          comm_by_process comm_over_time comm_comp_breakdown load_imbalance
          idle_time pattern_detection critical_path lateness cct
+
+REQUESTS:
+  Every analysis op above is one canonical typed AnalysisRequest. The CLI
+  flags, a pipeline step object, and a server client submission all parse
+  into the same enum with the same defaults, and its sorted-key JSON form
+  (AnalysisRequest::cache_key) is the result-cache key. Omitted optional
+  parameters normalize to their defaults at parse time, so
+  `analyze time_profile` and `analyze time_profile --bins 128` are the
+  same request — and the second identical query is a cache hit, returned
+  without recomputation. The cache key deliberately excludes the thread
+  knob: sharded, sequential, and streamed execution are bit-identical, so
+  one cached result serves every path. Mutating a session entry (insert,
+  load, or get_mut) invalidates that entry's cached results.
+
+  All read-only analyses take &self: session entries are immutable shared
+  state behind Arc, so any number of threads can analyze one loaded trace
+  concurrently. coordinator::server::AnalysisServer builds on this — a
+  worker pool serving typed requests over the shared pool with fair FIFO
+  scheduling and hit/miss/eviction counters in its stats. The old &mut
+  per-op methods are gone; the one deprecated shim left is
+  create_cct_cached, for callers that need the _cct_node column attached
+  to the session trace.
 
 SCALING:
   Hot analyses (flat_profile, time_profile, comm_matrix, message_histogram,
@@ -271,6 +296,9 @@ fn cmd_analyze(args: &Args) -> Result<()> {
         }
         return Ok(());
     }
+    if !AnalysisRequest::is_op(&op) {
+        bail!("unknown analysis op '{op}' (see OPS in `pipit help`)");
+    }
     let path = args.str("trace").context("--trace is required")?;
     if args.str("stream").is_some() {
         s.load_streamed("t", path)?;
@@ -286,38 +314,42 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     } else {
         s.load("t", path)?;
     }
-    // Reuse the pipeline executor: build a one-step spec.
-    let mut fields = vec![
-        format!("\"op\": \"{op}\""),
-        "\"trace\": \"t\"".to_string(),
-    ];
+    // Build the canonical typed request from the flags — the same form a
+    // pipeline step or a server client would submit.
+    let mut fields: Vec<(&str, Json)> = vec![("op", jstr(&op))];
     if let Some(m) = args.str("metric") {
-        fields.push(format!("\"metric\": \"{m}\""));
+        fields.push(("metric", jstr(m)));
     }
-    if let Some(b) = args.str("bins") {
-        fields.push(format!("\"bins\": {b}"));
+    if args.str("bins").is_some() {
+        fields.push(("bins", num(args.usize("bins", 0)? as f64)));
     }
-    if let Some(t) = args.str("top") {
-        fields.push(format!("\"top\": {t}"));
+    if args.str("top").is_some() {
+        fields.push(("top", num(args.usize("top", 0)? as f64)));
     }
     if let Some(e) = args.str("start-event") {
-        fields.push(format!("\"start_event\": \"{e}\""));
+        fields.push(("start_event", jstr(e)));
+    }
+    if args.str("window").is_some() {
+        fields.push(("window", num(args.usize("window", 0)? as f64)));
+    }
+    if let Some(u) = args.str("unit") {
+        fields.push(("unit", jstr(u)));
+    }
+    if args.str("num-processes").is_some() {
+        fields.push(("num_processes", num(args.usize("num-processes", 0)? as f64)));
+    }
+    let req = AnalysisRequest::from_json(&obj(fields))?;
+    let res = s.run_request("t", &req)?;
+    println!("{}: {}", req.op(), res.summary());
+    if let Some(st) = s.take_stream_stats() {
+        println!("  [stream] {}", st.summary());
     }
     if let Some(o) = args.str("out") {
-        fields.push(format!("\"out\": \"{o}\""));
-    }
-    let spec = format!("{{\"steps\": [{{{}}}]}}", fields.join(", "));
-    let out_dir = args.str("out-dir").unwrap_or(".");
-    let pipe = Pipeline::parse(&spec, out_dir)?;
-    let results = pipe.run(&mut s)?;
-    for r in &results {
-        println!("{}: {}", r.op, r.summary);
-        if let Some(st) = &r.stream {
-            println!("  [stream] {}", st.summary());
-        }
-        if let Some(p) = &r.out {
-            println!("  -> {}", p.display());
-        }
+        let out_dir = args.str("out-dir").unwrap_or(".");
+        std::fs::create_dir_all(out_dir)?;
+        let p = std::path::Path::new(out_dir).join(o);
+        std::fs::write(&p, res.render()).with_context(|| format!("writing {}", p.display()))?;
+        println!("  -> {}", p.display());
     }
     Ok(())
 }

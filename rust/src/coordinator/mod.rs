@@ -7,6 +7,12 @@
 //! * [`session::AnalysisSession`] — holds loaded traces + the PJRT
 //!   [`crate::runtime::Runtime`], dispatches every analysis operation, and
 //!   transparently prefers the AOT kernel path when artifacts are loaded.
+//! * [`request`] — the canonical [`request::AnalysisRequest`] /
+//!   [`request::AnalysisResult`] pair: one typed, deterministically
+//!   serialized form shared by the CLI, pipeline steps, the session's
+//!   result-cache key, and the server wire format.
+//! * [`server`] — the concurrent analysis service: shared immutable trace
+//!   pool, fair FIFO worker scheduling, result caching.
 //! * [`pipeline`] — JSON pipeline specs: a saved analysis workflow that
 //!   can be re-run on any trace ("repeating the same analysis twice on the
 //!   same or different datasets is a manual process" in GUI tools — here
@@ -15,7 +21,11 @@
 
 pub mod cli;
 pub mod pipeline;
+pub mod request;
+pub mod server;
 pub mod session;
 
 pub use pipeline::{Pipeline, StepResult};
+pub use request::{AnalysisRequest, AnalysisResult};
+pub use server::{AnalysisServer, CacheStats, PendingResult, ResultCache, ServerClient, ServerStats};
 pub use session::AnalysisSession;

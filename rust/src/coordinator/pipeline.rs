@@ -13,14 +13,23 @@
 //!   {"op": "flat_profile", "trace": "t0", "metric": "exc", "out": "profile.csv"}
 //! ]}
 //! ```
+//!
+//! Analysis steps are the canonical [`AnalysisRequest`] form: the step
+//! object parses into the same typed request the CLI and the concurrent
+//! [`super::server`] use, runs through
+//! [`AnalysisSession::run_request`] (so repeated identical steps are
+//! result-cache hits), and renders from the typed
+//! [`super::request::AnalysisResult`].
+//! Structural steps (`load`, `generate`, `write`, `filter`, `batch`,
+//! `multi_run`, `report`) keep their bespoke arms here.
 
+use super::request::{metric_from_str, AnalysisRequest};
 use super::session::AnalysisSession;
-use crate::analysis::{CommUnit, Metric, PatternConfig};
+use crate::analysis::Metric;
 use crate::df::Expr;
 use crate::gen::GenConfig;
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
-use std::fmt::Write as _;
+use anyhow::{bail, Context, Result};
 use std::path::{Path, PathBuf};
 
 /// One executed step's textual result.
@@ -82,13 +91,13 @@ impl Pipeline {
             // Take the previous stats so a fresh Some() unambiguously
             // means *this* step streamed (restored below otherwise, so
             // the session still exposes the last streamed analysis).
-            let before = session.last_stream_stats.take();
+            let before = session.take_stream_stats();
             let mut r = self
                 .run_step(session, step)
                 .with_context(|| format!("pipeline step {i}: {}", step.dumps()))?;
-            r.stream = session.last_stream_stats;
-            if session.last_stream_stats.is_none() {
-                session.last_stream_stats = before;
+            r.stream = session.last_stream_stats();
+            if r.stream.is_none() {
+                session.set_stream_stats(before);
             }
             results.push(r);
         }
@@ -210,152 +219,6 @@ impl Pipeline {
                     None,
                 )
             }
-            "flat_profile" => {
-                let metric = parse_metric(step)?;
-                let rows = s.flat_profile(trace()?, metric)?;
-                let mut body = String::from("name,value_ns\n");
-                for r in &rows {
-                    let _ = writeln!(body, "{},{}", r.name, r.value);
-                }
-                emit(format!("{} functions", rows.len()), Some(body))
-            }
-            "time_profile" => {
-                let bins = step.get_f64("bins").unwrap_or(128.0) as usize;
-                let top = step.get_f64("top").map(|t| t as usize);
-                let tp = s.time_profile(trace()?, bins, top)?;
-                let mut body = String::from("bin_start_ns");
-                for f in &tp.func_names {
-                    let _ = write!(body, ",{f}");
-                }
-                body.push('\n');
-                for (b, row) in tp.values.iter().enumerate() {
-                    let _ = write!(body, "{}", tp.bin_edges[b]);
-                    for v in row {
-                        let _ = write!(body, ",{v}");
-                    }
-                    body.push('\n');
-                }
-                emit(
-                    format!("{} bins x {} funcs, total {}", tp.num_bins(), tp.func_names.len(),
-                        crate::util::fmt_ns(tp.total())),
-                    Some(body),
-                )
-            }
-            "comm_matrix" => {
-                let unit = parse_unit(step);
-                let m = s.comm_matrix(trace()?, unit)?;
-                let mut body = String::new();
-                for row in &m.data {
-                    let cells: Vec<String> = row.iter().map(|v| v.to_string()).collect();
-                    let _ = writeln!(body, "{}", cells.join(","));
-                }
-                emit(format!("{0}x{0} matrix, total {1}", m.n(), m.total()), Some(body))
-            }
-            "message_histogram" => {
-                let bins = step.get_f64("bins").unwrap_or(10.0) as usize;
-                let (counts, edges) = s.message_histogram(trace()?, bins)?;
-                let mut body = String::from("bin_lo,bin_hi,count\n");
-                for (i, c) in counts.iter().enumerate() {
-                    let _ = writeln!(body, "{},{},{c}", edges[i], edges[i + 1]);
-                }
-                emit(format!("{} messages", counts.iter().sum::<u64>()), Some(body))
-            }
-            "comm_by_process" => {
-                let unit = parse_unit(step);
-                let rows = s.comm_by_process(trace()?, unit)?;
-                let mut body = String::from("process,sent,received\n");
-                for (p, snd, rcv) in &rows {
-                    let _ = writeln!(body, "{p},{snd},{rcv}");
-                }
-                emit(format!("{} processes", rows.len()), Some(body))
-            }
-            "comm_over_time" => {
-                let bins = step.get_f64("bins").unwrap_or(64.0) as usize;
-                let (counts, volume, edges) = s.comm_over_time(trace()?, bins)?;
-                let mut body = String::from("bin_start_ns,count,bytes\n");
-                for i in 0..counts.len() {
-                    let _ = writeln!(body, "{},{},{}", edges[i], counts[i], volume[i]);
-                }
-                emit(format!("{} sends", counts.iter().sum::<u64>()), Some(body))
-            }
-            "comm_comp_breakdown" => {
-                let rows = s.comm_comp_breakdown(trace()?)?;
-                let mut body =
-                    String::from("process,comp_ns,comp_overlapped_ns,comm_ns,other_ns\n");
-                for b in &rows {
-                    let _ = writeln!(
-                        body,
-                        "{},{},{},{},{}",
-                        b.proc, b.comp, b.comp_overlapped, b.comm, b.other
-                    );
-                }
-                emit(format!("{} processes", rows.len()), Some(body))
-            }
-            "load_imbalance" => {
-                let metric = parse_metric(step)?;
-                let k = step.get_f64("num_processes").unwrap_or(5.0) as usize;
-                let rows = s.load_imbalance(trace()?, metric, k)?;
-                let mut body = String::from("name,imbalance,top_processes,mean\n");
-                for r in rows.iter() {
-                    let procs: Vec<String> =
-                        r.top_processes.iter().map(|p| p.to_string()).collect();
-                    let _ = writeln!(
-                        body,
-                        "\"{}\",{},\"[{}]\",{}",
-                        r.name,
-                        r.imbalance,
-                        procs.join(" "),
-                        r.mean
-                    );
-                }
-                emit(format!("{} functions", rows.len()), Some(body))
-            }
-            "idle_time" => {
-                let rows = s.idle_time(trace()?)?;
-                let mut body = String::from("process,idle_ns,fraction\n");
-                for r in &rows {
-                    let _ = writeln!(body, "{},{},{}", r.proc, r.idle_ns, r.fraction);
-                }
-                emit(format!("{} processes", rows.len()), Some(body))
-            }
-            "pattern_detection" => {
-                let start = step.get_str("start_event");
-                let cfg = PatternConfig {
-                    bins: step.get_f64("bins").unwrap_or(512.0) as usize,
-                    window: step.get_f64("window").map(|w| w as usize),
-                };
-                let pats = s.detect_pattern(trace()?, start, &cfg)?;
-                let mut body = String::from("start_ns,end_ns\n");
-                for p in &pats {
-                    let _ = writeln!(body, "{},{}", p.start, p.end);
-                }
-                emit(format!("{} occurrences", pats.len()), Some(body))
-            }
-            "critical_path" => {
-                let paths = s.critical_path(trace()?)?;
-                // Stream-backed entries stay unmaterialized: there is no
-                // events table to render, so emit the path rows instead.
-                let body = match s.get(trace()?) {
-                    Ok(t) => paths[0].to_table(t)?.show(usize::MAX),
-                    Err(_) => {
-                        let mut b = String::from("row\n");
-                        for r in &paths[0].rows {
-                            let _ = writeln!(b, "{r}");
-                        }
-                        b
-                    }
-                };
-                emit(format!("{} events on path", paths[0].rows.len()), Some(body))
-            }
-            "lateness" => {
-                let ops = s.lateness(trace()?)?;
-                let by_proc = crate::analysis::lateness_by_process(&ops);
-                let mut body = String::from("process,max_lateness_ns,mean_lateness_ns\n");
-                for p in &by_proc {
-                    let _ = writeln!(body, "{},{},{}", p.proc, p.max_lateness, p.mean_lateness);
-                }
-                emit(format!("{} ops", ops.len()), Some(body))
-            }
             "multi_run" => {
                 let names: Vec<&str> = step
                     .get("traces")
@@ -382,12 +245,13 @@ impl Pipeline {
                 };
                 emit(format!("{} findings", rep.findings.len()), Some(rep.render()))
             }
-            "cct" => {
-                let cct = s.create_cct(trace()?)?;
-                emit(
-                    format!("{} nodes, {} roots", cct.nodes.len(), cct.roots.len()),
-                    Some(cct.render(200)),
-                )
+            // Every analysis op parses into the canonical typed request
+            // and runs through the result-cached executor: exactly the
+            // dispatch the CLI and the concurrent server use.
+            other if AnalysisRequest::is_op(other) => {
+                let req = AnalysisRequest::from_json(step)?;
+                let res = s.run_request(trace()?, &req)?;
+                emit(res.summary(), Some(res.render()))
             }
             other => bail!("unknown pipeline op '{other}'"),
         }
@@ -395,19 +259,7 @@ impl Pipeline {
 }
 
 fn parse_metric(step: &Json) -> Result<Metric> {
-    match step.get_str("metric").unwrap_or("exc") {
-        "exc" | "time.exc" => Ok(Metric::ExcTime),
-        "inc" | "time.inc" => Ok(Metric::IncTime),
-        "count" => Ok(Metric::Count),
-        other => Err(anyhow!("unknown metric '{other}'")),
-    }
-}
-
-fn parse_unit(step: &Json) -> CommUnit {
-    match step.get_str("unit").unwrap_or("bytes") {
-        "count" => CommUnit::Count,
-        _ => CommUnit::Bytes,
-    }
+    metric_from_str(step.get_str("metric").unwrap_or("exc"))
 }
 
 /// Filter sub-spec: any of `process`, `processes`, `name`, `names`,
@@ -557,7 +409,7 @@ mod tests {
         assert!(results[0].stream.is_none(), "load step streams nothing itself");
         let step_stats = results[1].stream.expect("streamed analysis step carries stats");
         assert_eq!(step_stats.shards, 4);
-        let stats = s.last_stream_stats.unwrap();
+        let stats = s.last_stream_stats().unwrap();
         assert_eq!(stats.shards, 4);
         assert!(stats.max_shard_rows < stats.total_rows);
         let mr = std::fs::read_to_string(dir.join("mr.txt")).unwrap();

@@ -1,0 +1,665 @@
+//! The canonical typed analysis API: one request/result enum pair.
+//!
+//! Every analysis dispatch surface — the CLI `analyze` command, pipeline
+//! steps, and the concurrent [`super::server`] — speaks
+//! [`AnalysisRequest`] / [`AnalysisResult`]. A request has one canonical
+//! JSON form ([`AnalysisRequest::to_json`], defaults applied at parse
+//! time, keys sorted by [`crate::util::json`]'s `BTreeMap` object), so
+//! the serialized form is simultaneously:
+//!
+//! - the **cache key** for the session result cache
+//!   ([`AnalysisRequest::cache_key`] — two spellings of the same query,
+//!   e.g. `{"op":"time_profile"}` and `{"op":"time_profile","bins":128}`,
+//!   produce the same key);
+//! - the **pipeline step** format (a step object is parsed with
+//!   [`AnalysisRequest::from_json`], unknown keys like `"trace"`/`"out"`
+//!   are ignored);
+//! - the **server wire format** for submitting analyses.
+//!
+//! Results carry the typed payloads of the underlying engines and render
+//! themselves ([`AnalysisResult::render`] for the CSV bodies pipeline
+//! steps write, [`AnalysisResult::summary`] for the one-line summaries),
+//! which is what deleted the per-op parsing/formatting previously
+//! duplicated across `cli.rs` and `pipeline.rs`.
+
+use crate::analysis::{
+    self, Breakdown, Cct, CommMatrix, CommUnit, CriticalPath, IdleRow, ImbalanceRow, LogicalOp,
+    Metric, PatternConfig, PatternRange, ProfileRow, TimeProfile,
+};
+use crate::util::json::{arr, num, obj, s, Json};
+use anyhow::{anyhow, bail, Context, Result};
+use std::fmt::Write as _;
+
+/// Every routed analysis op name, in canonical order.
+pub const OPS: &[&str] = &[
+    "flat_profile",
+    "time_profile",
+    "comm_matrix",
+    "message_histogram",
+    "comm_by_process",
+    "comm_over_time",
+    "comm_comp_breakdown",
+    "load_imbalance",
+    "idle_time",
+    "pattern_detection",
+    "critical_path",
+    "lateness",
+    "cct",
+];
+
+/// A typed, canonically serializable analysis request.
+///
+/// Parameter defaults (metric `exc`, unit `bytes`, the per-op bin
+/// counts) are applied by [`AnalysisRequest::from_json`], so a
+/// constructed value is always fully explicit and its canonical JSON is
+/// unique per distinct query.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnalysisRequest {
+    FlatProfile { metric: Metric },
+    TimeProfile { bins: usize, top: Option<usize> },
+    CommMatrix { unit: CommUnit },
+    MessageHistogram { bins: usize },
+    CommByProcess { unit: CommUnit },
+    CommOverTime { bins: usize },
+    CommCompBreakdown,
+    LoadImbalance { metric: Metric, k: usize },
+    IdleTime,
+    PatternDetection { start_event: Option<String>, bins: usize, window: Option<usize> },
+    CriticalPath,
+    Lateness,
+    Cct,
+}
+
+/// Parse a metric name; accepts the paper's dotted spellings too.
+pub fn metric_from_str(name: &str) -> Result<Metric> {
+    match name {
+        "exc" | "time.exc" => Ok(Metric::ExcTime),
+        "inc" | "time.inc" => Ok(Metric::IncTime),
+        "count" => Ok(Metric::Count),
+        other => Err(anyhow!("unknown metric '{other}'")),
+    }
+}
+
+/// Canonical metric name (inverse of [`metric_from_str`]).
+pub fn metric_name(m: Metric) -> &'static str {
+    match m {
+        Metric::ExcTime => "exc",
+        Metric::IncTime => "inc",
+        Metric::Count => "count",
+    }
+}
+
+fn unit_from_str(name: &str) -> Result<CommUnit> {
+    match name {
+        "bytes" => Ok(CommUnit::Bytes),
+        "count" => Ok(CommUnit::Count),
+        other => Err(anyhow!("unknown unit '{other}' (expected 'bytes' or 'count')")),
+    }
+}
+
+fn unit_name(u: CommUnit) -> &'static str {
+    match u {
+        CommUnit::Bytes => "bytes",
+        CommUnit::Count => "count",
+    }
+}
+
+fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
+    match j.get_f64(key) {
+        None => Ok(default),
+        Some(v) if v >= 0.0 && v.fract() == 0.0 => Ok(v as usize),
+        Some(v) => Err(anyhow!("'{key}' must be a non-negative integer (got {v})")),
+    }
+}
+
+impl AnalysisRequest {
+    /// The canonical op name (also the pipeline step `"op"` value).
+    pub fn op(&self) -> &'static str {
+        match self {
+            AnalysisRequest::FlatProfile { .. } => "flat_profile",
+            AnalysisRequest::TimeProfile { .. } => "time_profile",
+            AnalysisRequest::CommMatrix { .. } => "comm_matrix",
+            AnalysisRequest::MessageHistogram { .. } => "message_histogram",
+            AnalysisRequest::CommByProcess { .. } => "comm_by_process",
+            AnalysisRequest::CommOverTime { .. } => "comm_over_time",
+            AnalysisRequest::CommCompBreakdown => "comm_comp_breakdown",
+            AnalysisRequest::LoadImbalance { .. } => "load_imbalance",
+            AnalysisRequest::IdleTime => "idle_time",
+            AnalysisRequest::PatternDetection { .. } => "pattern_detection",
+            AnalysisRequest::CriticalPath => "critical_path",
+            AnalysisRequest::Lateness => "lateness",
+            AnalysisRequest::Cct => "cct",
+        }
+    }
+
+    /// Is `name` a routed analysis op?
+    pub fn is_op(name: &str) -> bool {
+        OPS.contains(&name)
+    }
+
+    /// Parse a request from its JSON form (a pipeline step object).
+    /// Missing parameters take the documented defaults; keys that do not
+    /// belong to the op (`"trace"`, `"out"`, …) are ignored.
+    pub fn from_json(step: &Json) -> Result<AnalysisRequest> {
+        let op = step.get_str("op").context("request missing 'op'")?;
+        let metric = || -> Result<Metric> {
+            metric_from_str(step.get_str("metric").unwrap_or("exc"))
+        };
+        let unit = || -> Result<CommUnit> {
+            unit_from_str(step.get_str("unit").unwrap_or("bytes"))
+        };
+        Ok(match op {
+            "flat_profile" => AnalysisRequest::FlatProfile { metric: metric()? },
+            "time_profile" => AnalysisRequest::TimeProfile {
+                bins: get_usize(step, "bins", 128)?,
+                top: step.get_f64("top").map(|t| t as usize),
+            },
+            "comm_matrix" => AnalysisRequest::CommMatrix { unit: unit()? },
+            "message_histogram" => {
+                AnalysisRequest::MessageHistogram { bins: get_usize(step, "bins", 10)? }
+            }
+            "comm_by_process" => AnalysisRequest::CommByProcess { unit: unit()? },
+            "comm_over_time" => {
+                AnalysisRequest::CommOverTime { bins: get_usize(step, "bins", 64)? }
+            }
+            "comm_comp_breakdown" => AnalysisRequest::CommCompBreakdown,
+            "load_imbalance" => AnalysisRequest::LoadImbalance {
+                metric: metric()?,
+                k: get_usize(step, "num_processes", 5)?,
+            },
+            "idle_time" => AnalysisRequest::IdleTime,
+            "pattern_detection" => AnalysisRequest::PatternDetection {
+                start_event: step.get_str("start_event").map(|e| e.to_string()),
+                bins: get_usize(step, "bins", 512)?,
+                window: step.get_f64("window").map(|w| w as usize),
+            },
+            "critical_path" => AnalysisRequest::CriticalPath,
+            "lateness" => AnalysisRequest::Lateness,
+            "cct" => AnalysisRequest::Cct,
+            other => bail!("unknown analysis op '{other}'"),
+        })
+    }
+
+    /// Parse a request from serialized JSON text (the server wire form).
+    pub fn parse(src: &str) -> Result<AnalysisRequest> {
+        let j = Json::parse(src).context("parsing analysis request")?;
+        Self::from_json(&j)
+    }
+
+    /// Canonical JSON form: every parameter explicit, keys sorted (the
+    /// object is a `BTreeMap`), optional parameters present only when
+    /// set. `from_json(to_json(r)) == r` for every request.
+    pub fn to_json(&self) -> Json {
+        let mut f: Vec<(&str, Json)> = vec![("op", s(self.op()))];
+        match self {
+            AnalysisRequest::FlatProfile { metric } => {
+                f.push(("metric", s(metric_name(*metric))));
+            }
+            AnalysisRequest::TimeProfile { bins, top } => {
+                f.push(("bins", num(*bins as f64)));
+                if let Some(t) = top {
+                    f.push(("top", num(*t as f64)));
+                }
+            }
+            AnalysisRequest::CommMatrix { unit } => f.push(("unit", s(unit_name(*unit)))),
+            AnalysisRequest::MessageHistogram { bins } => f.push(("bins", num(*bins as f64))),
+            AnalysisRequest::CommByProcess { unit } => f.push(("unit", s(unit_name(*unit)))),
+            AnalysisRequest::CommOverTime { bins } => f.push(("bins", num(*bins as f64))),
+            AnalysisRequest::CommCompBreakdown => {}
+            AnalysisRequest::LoadImbalance { metric, k } => {
+                f.push(("metric", s(metric_name(*metric))));
+                f.push(("num_processes", num(*k as f64)));
+            }
+            AnalysisRequest::IdleTime => {}
+            AnalysisRequest::PatternDetection { start_event, bins, window } => {
+                if let Some(e) = start_event {
+                    f.push(("start_event", s(e)));
+                }
+                f.push(("bins", num(*bins as f64)));
+                if let Some(w) = window {
+                    f.push(("window", num(*w as f64)));
+                }
+            }
+            AnalysisRequest::CriticalPath => {}
+            AnalysisRequest::Lateness => {}
+            AnalysisRequest::Cct => {}
+        }
+        obj(f)
+    }
+
+    /// The deterministic result-cache key: canonical JSON, serialized.
+    /// Deliberately excludes the thread knob — sharded, sequential, and
+    /// streamed execution are bit-identical (`tests/parity.rs`), so one
+    /// cached result serves every path.
+    pub fn cache_key(&self) -> String {
+        self.to_json().dumps()
+    }
+
+    /// The pattern config behind a `PatternDetection` request.
+    pub fn pattern_config(&self) -> Option<PatternConfig> {
+        match self {
+            AnalysisRequest::PatternDetection { bins, window, .. } => {
+                Some(PatternConfig { bins: *bins, window: *window })
+            }
+            _ => None,
+        }
+    }
+}
+
+/// The typed payload of a completed [`AnalysisRequest`], one variant per
+/// op. `PartialEq` makes bit-identity assertions (concurrent vs
+/// sequential execution) direct.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AnalysisResult {
+    FlatProfile(Vec<ProfileRow>),
+    TimeProfile(TimeProfile),
+    CommMatrix(CommMatrix),
+    MessageHistogram { counts: Vec<u64>, edges: Vec<f64> },
+    CommByProcess(Vec<(i64, f64, f64)>),
+    CommOverTime { counts: Vec<u64>, volume: Vec<f64>, edges: Vec<i64> },
+    CommCompBreakdown(Vec<Breakdown>),
+    LoadImbalance(Vec<ImbalanceRow>),
+    IdleTime(Vec<IdleRow>),
+    PatternDetection(Vec<PatternRange>),
+    CriticalPath(Vec<CriticalPath>),
+    Lateness(Vec<LogicalOp>),
+    Cct(Cct),
+}
+
+impl AnalysisResult {
+    /// The op name this result answers.
+    pub fn op(&self) -> &'static str {
+        match self {
+            AnalysisResult::FlatProfile(_) => "flat_profile",
+            AnalysisResult::TimeProfile(_) => "time_profile",
+            AnalysisResult::CommMatrix(_) => "comm_matrix",
+            AnalysisResult::MessageHistogram { .. } => "message_histogram",
+            AnalysisResult::CommByProcess(_) => "comm_by_process",
+            AnalysisResult::CommOverTime { .. } => "comm_over_time",
+            AnalysisResult::CommCompBreakdown(_) => "comm_comp_breakdown",
+            AnalysisResult::LoadImbalance(_) => "load_imbalance",
+            AnalysisResult::IdleTime(_) => "idle_time",
+            AnalysisResult::PatternDetection(_) => "pattern_detection",
+            AnalysisResult::CriticalPath(_) => "critical_path",
+            AnalysisResult::Lateness(_) => "lateness",
+            AnalysisResult::Cct(_) => "cct",
+        }
+    }
+
+    /// One-line human summary (the pipeline step summary).
+    pub fn summary(&self) -> String {
+        match self {
+            AnalysisResult::FlatProfile(rows) => format!("{} functions", rows.len()),
+            AnalysisResult::TimeProfile(tp) => format!(
+                "{} bins x {} funcs, total {}",
+                tp.num_bins(),
+                tp.func_names.len(),
+                crate::util::fmt_ns(tp.total())
+            ),
+            AnalysisResult::CommMatrix(m) => {
+                format!("{0}x{0} matrix, total {1}", m.n(), m.total())
+            }
+            AnalysisResult::MessageHistogram { counts, .. } => {
+                format!("{} messages", counts.iter().sum::<u64>())
+            }
+            AnalysisResult::CommByProcess(rows) => format!("{} processes", rows.len()),
+            AnalysisResult::CommOverTime { counts, .. } => {
+                format!("{} sends", counts.iter().sum::<u64>())
+            }
+            AnalysisResult::CommCompBreakdown(rows) => format!("{} processes", rows.len()),
+            AnalysisResult::LoadImbalance(rows) => format!("{} functions", rows.len()),
+            AnalysisResult::IdleTime(rows) => format!("{} processes", rows.len()),
+            AnalysisResult::PatternDetection(pats) => format!("{} occurrences", pats.len()),
+            AnalysisResult::CriticalPath(paths) => {
+                format!("{} events on path", paths[0].rows.len())
+            }
+            AnalysisResult::Lateness(ops) => format!("{} ops", ops.len()),
+            AnalysisResult::Cct(cct) => {
+                format!("{} nodes, {} roots", cct.nodes.len(), cct.roots.len())
+            }
+        }
+    }
+
+    /// Render the textual body a pipeline `out` file holds (CSV for the
+    /// tabular ops, the tree rendering for `cct`).
+    pub fn render(&self) -> String {
+        match self {
+            AnalysisResult::FlatProfile(rows) => {
+                let mut body = String::from("name,value_ns\n");
+                for r in rows {
+                    let _ = writeln!(body, "{},{}", r.name, r.value);
+                }
+                body
+            }
+            AnalysisResult::TimeProfile(tp) => {
+                let mut body = String::from("bin_start_ns");
+                for f in &tp.func_names {
+                    let _ = write!(body, ",{f}");
+                }
+                body.push('\n');
+                for (b, row) in tp.values.iter().enumerate() {
+                    let _ = write!(body, "{}", tp.bin_edges[b]);
+                    for v in row {
+                        let _ = write!(body, ",{v}");
+                    }
+                    body.push('\n');
+                }
+                body
+            }
+            AnalysisResult::CommMatrix(m) => {
+                let mut body = String::new();
+                for row in &m.data {
+                    let cells: Vec<String> = row.iter().map(|v| v.to_string()).collect();
+                    let _ = writeln!(body, "{}", cells.join(","));
+                }
+                body
+            }
+            AnalysisResult::MessageHistogram { counts, edges } => {
+                let mut body = String::from("bin_lo,bin_hi,count\n");
+                for (i, c) in counts.iter().enumerate() {
+                    let _ = writeln!(body, "{},{},{c}", edges[i], edges[i + 1]);
+                }
+                body
+            }
+            AnalysisResult::CommByProcess(rows) => {
+                let mut body = String::from("process,sent,received\n");
+                for (p, snd, rcv) in rows {
+                    let _ = writeln!(body, "{p},{snd},{rcv}");
+                }
+                body
+            }
+            AnalysisResult::CommOverTime { counts, volume, edges } => {
+                let mut body = String::from("bin_start_ns,count,bytes\n");
+                for i in 0..counts.len() {
+                    let _ = writeln!(body, "{},{},{}", edges[i], counts[i], volume[i]);
+                }
+                body
+            }
+            AnalysisResult::CommCompBreakdown(rows) => {
+                let mut body =
+                    String::from("process,comp_ns,comp_overlapped_ns,comm_ns,other_ns\n");
+                for b in rows {
+                    let _ = writeln!(
+                        body,
+                        "{},{},{},{},{}",
+                        b.proc, b.comp, b.comp_overlapped, b.comm, b.other
+                    );
+                }
+                body
+            }
+            AnalysisResult::LoadImbalance(rows) => {
+                let mut body = String::from("name,imbalance,top_processes,mean\n");
+                for r in rows {
+                    let procs: Vec<String> =
+                        r.top_processes.iter().map(|p| p.to_string()).collect();
+                    let _ = writeln!(
+                        body,
+                        "\"{}\",{},\"[{}]\",{}",
+                        r.name,
+                        r.imbalance,
+                        procs.join(" "),
+                        r.mean
+                    );
+                }
+                body
+            }
+            AnalysisResult::IdleTime(rows) => {
+                let mut body = String::from("process,idle_ns,fraction\n");
+                for r in rows {
+                    let _ = writeln!(body, "{},{},{}", r.proc, r.idle_ns, r.fraction);
+                }
+                body
+            }
+            AnalysisResult::PatternDetection(pats) => {
+                let mut body = String::from("start_ns,end_ns\n");
+                for p in pats {
+                    let _ = writeln!(body, "{},{}", p.start, p.end);
+                }
+                body
+            }
+            AnalysisResult::CriticalPath(paths) => {
+                let mut body = String::from("row\n");
+                for r in &paths[0].rows {
+                    let _ = writeln!(body, "{r}");
+                }
+                body
+            }
+            AnalysisResult::Lateness(ops) => {
+                let by_proc = analysis::lateness_by_process(ops);
+                let mut body = String::from("process,max_lateness_ns,mean_lateness_ns\n");
+                for p in &by_proc {
+                    let _ = writeln!(body, "{},{},{}", p.proc, p.max_lateness, p.mean_lateness);
+                }
+                body
+            }
+            AnalysisResult::Cct(cct) => cct.render(200),
+        }
+    }
+
+    /// The deterministic JSON wire form of the result payload. `f64`
+    /// values round-trip exactly through [`crate::util::json`]'s
+    /// serializer; object keys are sorted, so equal results serialize to
+    /// equal bytes.
+    pub fn to_json(&self) -> Json {
+        let payload = match self {
+            AnalysisResult::FlatProfile(rows) => arr(rows
+                .iter()
+                .map(|r| obj(vec![("name", s(&r.name)), ("value", num(r.value))]))
+                .collect()),
+            AnalysisResult::TimeProfile(tp) => obj(vec![
+                ("bin_edges", arr(tp.bin_edges.iter().map(|&e| num(e as f64)).collect())),
+                ("func_names", arr(tp.func_names.iter().map(|f| s(f)).collect())),
+                (
+                    "values",
+                    arr(tp
+                        .values
+                        .iter()
+                        .map(|row| arr(row.iter().map(|&v| num(v)).collect()))
+                        .collect()),
+                ),
+            ]),
+            AnalysisResult::CommMatrix(m) => obj(vec![
+                ("procs", arr(m.procs.iter().map(|&p| num(p as f64)).collect())),
+                (
+                    "data",
+                    arr(m.data
+                        .iter()
+                        .map(|row| arr(row.iter().map(|&v| num(v)).collect()))
+                        .collect()),
+                ),
+            ]),
+            AnalysisResult::MessageHistogram { counts, edges } => obj(vec![
+                ("counts", arr(counts.iter().map(|&c| num(c as f64)).collect())),
+                ("edges", arr(edges.iter().map(|&e| num(e)).collect())),
+            ]),
+            AnalysisResult::CommByProcess(rows) => arr(rows
+                .iter()
+                .map(|(p, snd, rcv)| {
+                    obj(vec![
+                        ("process", num(*p as f64)),
+                        ("received", num(*rcv)),
+                        ("sent", num(*snd)),
+                    ])
+                })
+                .collect()),
+            AnalysisResult::CommOverTime { counts, volume, edges } => obj(vec![
+                ("counts", arr(counts.iter().map(|&c| num(c as f64)).collect())),
+                ("edges", arr(edges.iter().map(|&e| num(e as f64)).collect())),
+                ("volume", arr(volume.iter().map(|&v| num(v)).collect())),
+            ]),
+            AnalysisResult::CommCompBreakdown(rows) => arr(rows
+                .iter()
+                .map(|b| {
+                    obj(vec![
+                        ("comm", num(b.comm)),
+                        ("comp", num(b.comp)),
+                        ("comp_overlapped", num(b.comp_overlapped)),
+                        ("other", num(b.other)),
+                        ("process", num(b.proc as f64)),
+                    ])
+                })
+                .collect()),
+            AnalysisResult::LoadImbalance(rows) => arr(rows
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("imbalance", num(r.imbalance)),
+                        ("mean", num(r.mean)),
+                        ("name", s(&r.name)),
+                        (
+                            "top_processes",
+                            arr(r.top_processes.iter().map(|&p| num(p as f64)).collect()),
+                        ),
+                        ("total", num(r.total)),
+                    ])
+                })
+                .collect()),
+            AnalysisResult::IdleTime(rows) => arr(rows
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("fraction", num(r.fraction)),
+                        ("idle_ns", num(r.idle_ns)),
+                        ("process", num(r.proc as f64)),
+                    ])
+                })
+                .collect()),
+            AnalysisResult::PatternDetection(pats) => arr(pats
+                .iter()
+                .map(|p| obj(vec![("end", num(p.end as f64)), ("start", num(p.start as f64))]))
+                .collect()),
+            AnalysisResult::CriticalPath(paths) => arr(paths
+                .iter()
+                .map(|p| arr(p.rows.iter().map(|&r| num(r as f64)).collect()))
+                .collect()),
+            AnalysisResult::Lateness(ops) => arr(ops
+                .iter()
+                .map(|o| {
+                    obj(vec![
+                        ("lateness", num(o.lateness)),
+                        ("name", s(&o.name)),
+                        ("process", num(o.proc as f64)),
+                        ("row", num(o.row as f64)),
+                        ("step", num(o.step as f64)),
+                        ("t_leave", num(o.t_leave as f64)),
+                    ])
+                })
+                .collect()),
+            AnalysisResult::Cct(cct) => {
+                let nodes = cct
+                    .nodes
+                    .iter()
+                    .map(|n| {
+                        let mut f: Vec<(&str, Json)> = vec![
+                            (
+                                "children",
+                                arr(n.children.iter().map(|&c| num(c as f64)).collect()),
+                            ),
+                            ("count", num(n.count as f64)),
+                            ("id", num(n.id as f64)),
+                            ("name", s(&n.name)),
+                            ("time_exc", num(n.time_exc)),
+                            ("time_inc", num(n.time_inc)),
+                        ];
+                        if let Some(p) = n.parent {
+                            f.push(("parent", num(p as f64)));
+                        }
+                        obj(f)
+                    })
+                    .collect();
+                obj(vec![
+                    ("nodes", arr(nodes)),
+                    ("roots", arr(cct.roots.iter().map(|&r| num(r as f64)).collect())),
+                ])
+            }
+        };
+        obj(vec![("op", s(self.op())), ("result", payload)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trips_through_canonical_json() {
+        let reqs = vec![
+            AnalysisRequest::FlatProfile { metric: Metric::IncTime },
+            AnalysisRequest::TimeProfile { bins: 64, top: Some(6) },
+            AnalysisRequest::TimeProfile { bins: 128, top: None },
+            AnalysisRequest::CommMatrix { unit: CommUnit::Count },
+            AnalysisRequest::MessageHistogram { bins: 10 },
+            AnalysisRequest::CommByProcess { unit: CommUnit::Bytes },
+            AnalysisRequest::CommOverTime { bins: 64 },
+            AnalysisRequest::CommCompBreakdown,
+            AnalysisRequest::LoadImbalance { metric: Metric::ExcTime, k: 5 },
+            AnalysisRequest::IdleTime,
+            AnalysisRequest::PatternDetection {
+                start_event: Some("time-loop".into()),
+                bins: 512,
+                window: Some(16),
+            },
+            AnalysisRequest::CriticalPath,
+            AnalysisRequest::Lateness,
+            AnalysisRequest::Cct,
+        ];
+        for r in reqs {
+            let j = r.to_json();
+            let back = AnalysisRequest::from_json(&j).unwrap();
+            assert_eq!(back, r, "round trip through {}", j.dumps());
+            assert_eq!(back.cache_key(), r.cache_key());
+        }
+    }
+
+    #[test]
+    fn defaults_normalize_into_one_cache_key() {
+        let implicit = AnalysisRequest::parse(r#"{"op": "time_profile"}"#).unwrap();
+        let explicit = AnalysisRequest::parse(r#"{"bins": 128, "op": "time_profile"}"#).unwrap();
+        assert_eq!(implicit, explicit);
+        assert_eq!(implicit.cache_key(), explicit.cache_key());
+        // extraneous step keys (trace/out) do not leak into the key
+        let step =
+            AnalysisRequest::parse(r#"{"op": "time_profile", "out": "tp.csv", "trace": "t"}"#)
+                .unwrap();
+        assert_eq!(step.cache_key(), implicit.cache_key());
+        // a genuinely different query gets a different key
+        let other = AnalysisRequest::parse(r#"{"bins": 64, "op": "time_profile"}"#).unwrap();
+        assert_ne!(other.cache_key(), implicit.cache_key());
+    }
+
+    #[test]
+    fn rejects_malformed_requests() {
+        assert!(AnalysisRequest::parse(r#"{"op": "explode"}"#).is_err());
+        assert!(AnalysisRequest::parse(r#"{"bins": 10}"#).is_err());
+        assert!(AnalysisRequest::parse(r#"{"op": "flat_profile", "metric": "zz"}"#).is_err());
+        assert!(AnalysisRequest::parse(r#"{"op": "comm_matrix", "unit": "zz"}"#).is_err());
+        assert!(AnalysisRequest::parse(r#"{"op": "time_profile", "bins": -4}"#).is_err());
+    }
+
+    #[test]
+    fn op_names_cover_the_registry() {
+        for &name in OPS {
+            assert!(AnalysisRequest::is_op(name));
+            let r = AnalysisRequest::from_json(&obj(vec![("op", s(name))])).unwrap();
+            assert_eq!(r.op(), name);
+        }
+        assert!(!AnalysisRequest::is_op("load"));
+        assert!(!AnalysisRequest::is_op("multi_run"));
+    }
+
+    #[test]
+    fn result_render_and_summary() {
+        let fp = AnalysisResult::FlatProfile(vec![
+            ProfileRow { name: "a".into(), value: 10.0 },
+            ProfileRow { name: "b".into(), value: 5.0 },
+        ]);
+        assert_eq!(fp.summary(), "2 functions");
+        assert_eq!(fp.render(), "name,value_ns\na,10\nb,5\n");
+        let wire = fp.to_json().dumps();
+        assert!(wire.contains("\"op\":\"flat_profile\""), "{wire}");
+
+        let cp = AnalysisResult::CriticalPath(vec![CriticalPath { rows: vec![3, 1, 4] }]);
+        assert_eq!(cp.summary(), "3 events on path");
+        assert_eq!(cp.render(), "row\n3\n1\n4\n");
+    }
+}

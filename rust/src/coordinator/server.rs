@@ -1,0 +1,448 @@
+//! The concurrent analysis service: N clients, one shared trace pool.
+//!
+//! [`AnalysisServer`] wraps an [`AnalysisSession`] — whose loaded and
+//! stream-planned entries are immutable shared state (`Arc<Trace>` /
+//! `Arc<StreamPlan>`) — behind a pool of long-lived worker threads fed
+//! from a single FIFO queue:
+//!
+//! - **Fair scheduling**: requests are served strictly in arrival order;
+//!   a long `critical_path` occupies one worker while the remaining
+//!   workers keep draining the queue, so short queries are never starved
+//!   behind it (liveness is stress-tested in `tests/server_stress.rs`).
+//! - **Result caching**: the session's [`ResultCache`] keys on
+//!   `(trace name, canonical request JSON)`; the second identical query
+//!   returns the *same* `Arc<AnalysisResult>` without recomputation.
+//!   Hit / miss / eviction counters surface in [`ServerStats`].
+//! - **Poisoned-request isolation**: a failing (or panicking) analysis
+//!   replies an error to its own client and the worker moves on; the
+//!   pool never wedges.
+//!
+//! Results are bit-identical to single-session execution on every routed
+//! op: workers call the same `&self` analysis methods, and sharded /
+//! sequential / streamed engines already agree bit-for-bit
+//! (`tests/parity.rs`).
+
+use super::request::{AnalysisRequest, AnalysisResult};
+use super::session::AnalysisSession;
+use anyhow::{anyhow, bail, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+
+/// Lock that survives a poisoned mutex (a panicked worker must not take
+/// the whole service down with it).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+// ---------------------------------------------------------------------------
+// Result cache
+// ---------------------------------------------------------------------------
+
+/// Counters of the result cache, snapshotted by [`ResultCache::stats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Entries currently resident.
+    pub entries: usize,
+}
+
+#[derive(Default)]
+struct CacheInner {
+    /// `(trace name, canonical request JSON)` → `(last-use tick, result)`.
+    map: HashMap<(String, String), (u64, Arc<AnalysisResult>)>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// LRU cache of completed analyses keyed on
+/// `(trace name, AnalysisRequest::cache_key())`.
+///
+/// The key deliberately excludes the thread knob: sharded, sequential,
+/// and streamed execution of the same request are bit-identical, so one
+/// cached result is valid for every execution path. Entries are dropped
+/// by [`ResultCache::invalidate`] whenever the session replaces or hands
+/// out mutable access to the backing trace.
+pub struct ResultCache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+}
+
+impl ResultCache {
+    pub fn new(capacity: usize) -> ResultCache {
+        ResultCache { capacity: capacity.max(1), inner: Mutex::new(CacheInner::default()) }
+    }
+
+    /// Look up a cached result, counting a hit or a miss.
+    pub fn lookup(&self, trace: &str, key: &str) -> Option<Arc<AnalysisResult>> {
+        let mut guard = lock(&self.inner);
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        match inner.map.get_mut(&(trace.to_string(), key.to_string())) {
+            Some(slot) => {
+                slot.0 = tick;
+                inner.hits += 1;
+                Some(slot.1.clone())
+            }
+            None => {
+                inner.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert a freshly computed result, evicting the least recently
+    /// used entry when at capacity.
+    pub fn store(&self, trace: &str, key: String, value: Arc<AnalysisResult>) {
+        let mut guard = lock(&self.inner);
+        let inner = &mut *guard;
+        inner.tick += 1;
+        let tick = inner.tick;
+        let full_key = (trace.to_string(), key);
+        if !inner.map.contains_key(&full_key) && inner.map.len() >= self.capacity {
+            if let Some(oldest) =
+                inner.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k.clone())
+            {
+                inner.map.remove(&oldest);
+                inner.evictions += 1;
+            }
+        }
+        inner.map.insert(full_key, (tick, value));
+    }
+
+    /// Drop every cached result for `trace` (the trace was replaced or
+    /// mutably borrowed — nothing cached for it may be served again).
+    pub fn invalidate(&self, trace: &str) {
+        let mut inner = lock(&self.inner);
+        inner.map.retain(|(t, _), _| t != trace);
+    }
+
+    /// Drop all entries (counters are retained).
+    pub fn clear(&self) {
+        lock(&self.inner).map.clear();
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let inner = lock(&self.inner);
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            entries: inner.map.len(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+/// A snapshot of server activity. `peak_active` is the high-water mark
+/// of requests executing simultaneously — ≥ 2 demonstrates one shared
+/// entry serving multiple clients at once.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServerStats {
+    pub submitted: u64,
+    pub completed: u64,
+    /// Completed with an error reply (the client saw the failure; the
+    /// pool kept serving).
+    pub failed: u64,
+    /// Requests waiting in the FIFO queue right now.
+    pub queued: usize,
+    /// Requests executing right now.
+    pub active: usize,
+    pub peak_queue: usize,
+    pub peak_active: usize,
+    pub cache: CacheStats,
+}
+
+struct Job {
+    trace: String,
+    req: AnalysisRequest,
+    reply: mpsc::Sender<Result<Arc<AnalysisResult>>>,
+}
+
+#[derive(Default)]
+struct QueueState {
+    jobs: VecDeque<Job>,
+    active: usize,
+    submitted: u64,
+    completed: u64,
+    failed: u64,
+    peak_queue: usize,
+    peak_active: usize,
+}
+
+struct Shared {
+    session: AnalysisSession,
+    queue: Mutex<QueueState>,
+    cv: Condvar,
+    shutdown: AtomicBool,
+}
+
+impl Shared {
+    fn stats(&self) -> ServerStats {
+        let q = lock(&self.queue);
+        ServerStats {
+            submitted: q.submitted,
+            completed: q.completed,
+            failed: q.failed,
+            queued: q.jobs.len(),
+            active: q.active,
+            peak_queue: q.peak_queue,
+            peak_active: q.peak_active,
+            cache: self.session.cache_stats(),
+        }
+    }
+
+    fn submit(&self, trace: &str, req: &AnalysisRequest) -> Result<PendingResult> {
+        if self.shutdown.load(Ordering::Acquire) {
+            bail!("analysis server is shut down");
+        }
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut q = lock(&self.queue);
+            q.jobs.push_back(Job {
+                trace: trace.to_string(),
+                req: req.clone(),
+                reply: tx,
+            });
+            q.submitted += 1;
+            q.peak_queue = q.peak_queue.max(q.jobs.len());
+        }
+        self.cv.notify_one();
+        Ok(PendingResult { rx })
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    loop {
+        let job = {
+            let mut q = lock(&shared.queue);
+            loop {
+                if let Some(j) = q.jobs.pop_front() {
+                    q.active += 1;
+                    q.peak_active = q.peak_active.max(q.active);
+                    break j;
+                }
+                // Drain-then-exit: queued work finishes before shutdown.
+                if shared.shutdown.load(Ordering::Acquire) {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        // A panicking analysis must poison neither the pool nor the
+        // queue lock (not held here): convert it into an error reply.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            shared.session.run_request(&job.trace, &job.req)
+        }));
+        let reply = match outcome {
+            Ok(r) => r,
+            Err(_) => Err(anyhow!(
+                "analysis '{}' on trace '{}' panicked; worker recovered",
+                job.req.op(),
+                job.trace
+            )),
+        };
+        let failed = reply.is_err();
+        // The client may have dropped its PendingResult; that is fine.
+        let _ = job.reply.send(reply);
+        let mut q = lock(&shared.queue);
+        q.active -= 1;
+        q.completed += 1;
+        if failed {
+            q.failed += 1;
+        }
+    }
+}
+
+/// A submitted request's reply slot. [`PendingResult::wait`] blocks
+/// until a worker replies.
+pub struct PendingResult {
+    rx: mpsc::Receiver<Result<Arc<AnalysisResult>>>,
+}
+
+impl PendingResult {
+    pub fn wait(self) -> Result<Arc<AnalysisResult>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("analysis server shut down before replying"))?
+    }
+}
+
+/// A cloneable handle for issuing requests against a running
+/// [`AnalysisServer`]. Clones share the same queue and pool.
+#[derive(Clone)]
+pub struct ServerClient {
+    shared: Arc<Shared>,
+}
+
+impl ServerClient {
+    /// Enqueue a request; returns immediately with the reply slot.
+    pub fn submit(&self, trace: &str, req: &AnalysisRequest) -> Result<PendingResult> {
+        self.shared.submit(trace, req)
+    }
+
+    /// Enqueue a request and block for the result.
+    pub fn query(&self, trace: &str, req: &AnalysisRequest) -> Result<Arc<AnalysisResult>> {
+        self.submit(trace, req)?.wait()
+    }
+
+    /// The shared session behind the pool (read-only: loading traces
+    /// happens before [`AnalysisServer::start`]).
+    pub fn session(&self) -> &AnalysisSession {
+        &self.shared.session
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.shared.stats()
+    }
+}
+
+/// The long-lived analysis service. Owns the worker threads; dropping
+/// the server (or calling [`AnalysisServer::shutdown`]) drains the
+/// queue and joins them.
+pub struct AnalysisServer {
+    shared: Arc<Shared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl AnalysisServer {
+    /// Start `workers` worker threads over `session`'s trace pool
+    /// (0 = available parallelism). The session is frozen into shared
+    /// immutable state: load / generate / convert entries *before*
+    /// starting the server.
+    pub fn start(session: AnalysisSession, workers: usize) -> AnalysisServer {
+        let workers = crate::exec::effective_threads(workers).max(1);
+        let shared = Arc::new(Shared {
+            session,
+            queue: Mutex::new(QueueState::default()),
+            cv: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let sh = Arc::clone(&shared);
+            let h = std::thread::Builder::new()
+                .name(format!("pipit-serve-{i}"))
+                .spawn(move || worker_loop(&sh))
+                .expect("spawning analysis worker");
+            handles.push(h);
+        }
+        AnalysisServer { shared, handles }
+    }
+
+    /// A new client handle onto the running pool.
+    pub fn client(&self) -> ServerClient {
+        ServerClient { shared: Arc::clone(&self.shared) }
+    }
+
+    /// The shared session (e.g. to inspect `trace_handle` sharing).
+    pub fn session(&self) -> &AnalysisSession {
+        &self.shared.session
+    }
+
+    pub fn stats(&self) -> ServerStats {
+        self.shared.stats()
+    }
+
+    /// Finish queued work, stop the workers, and join them.
+    pub fn shutdown(mut self) {
+        self.stop_and_join();
+    }
+
+    fn stop_and_join(&mut self) {
+        self.shared.shutdown.store(true, Ordering::Release);
+        self.cv_notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+
+    fn cv_notify_all(&self) {
+        // Wake sleepers so they observe the shutdown flag.
+        let _guard = lock(&self.shared.queue);
+        self.shared.cv.notify_all();
+    }
+}
+
+impl Drop for AnalysisServer {
+    fn drop(&mut self) {
+        self.stop_and_join();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::Metric;
+    use crate::gen::GenConfig;
+
+    fn server_with_gol(workers: usize) -> AnalysisServer {
+        let mut s = AnalysisSession::new().with_threads(1);
+        s.generate("g", "gol", &GenConfig::new(4, 3), 1).unwrap();
+        AnalysisServer::start(s, workers)
+    }
+
+    #[test]
+    fn serves_requests_and_caches_repeats() {
+        let server = server_with_gol(2);
+        let client = server.client();
+        let req = AnalysisRequest::FlatProfile { metric: Metric::ExcTime };
+        let first = client.query("g", &req).unwrap();
+        let second = client.query("g", &req).unwrap();
+        // the repeat is served from the cache: the very same Arc
+        assert!(Arc::ptr_eq(&first, &second));
+        let stats = server.stats();
+        assert_eq!(stats.completed, 2);
+        assert_eq!(stats.cache.hits, 1);
+        assert_eq!(stats.cache.misses, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_error_without_wedging_the_pool() {
+        let server = server_with_gol(2);
+        let client = server.client();
+        let req = AnalysisRequest::IdleTime;
+        assert!(client.query("missing", &req).is_err());
+        let ok = client.query("g", &req).unwrap();
+        assert!(matches!(*ok, AnalysisResult::IdleTime(_)));
+        let stats = server.stats();
+        assert_eq!(stats.failed, 1);
+        assert_eq!(stats.completed, 2);
+    }
+
+    #[test]
+    fn submit_after_shutdown_errors() {
+        let server = server_with_gol(1);
+        let client = server.client();
+        server.shutdown();
+        let req = AnalysisRequest::IdleTime;
+        assert!(client.submit("g", &req).is_err());
+    }
+
+    #[test]
+    fn cache_evicts_least_recently_used() {
+        let cache = ResultCache::new(2);
+        let v = Arc::new(AnalysisResult::PatternDetection(vec![]));
+        cache.store("t", "a".into(), v.clone());
+        cache.store("t", "b".into(), v.clone());
+        assert!(cache.lookup("t", "a").is_some()); // refresh "a"
+        cache.store("t", "c".into(), v.clone()); // evicts "b"
+        assert!(cache.lookup("t", "b").is_none());
+        assert!(cache.lookup("t", "a").is_some());
+        assert!(cache.lookup("t", "c").is_some());
+        let stats = cache.stats();
+        assert_eq!(stats.evictions, 1);
+        assert_eq!(stats.entries, 2);
+        cache.invalidate("t");
+        assert_eq!(cache.stats().entries, 0);
+    }
+}

@@ -1,5 +1,7 @@
 //! Analysis session: traces + runtime + uniform operation dispatch.
 
+use super::request::{AnalysisRequest, AnalysisResult};
+use super::server::{CacheStats, ResultCache};
 use crate::analysis::{self, Metric};
 use crate::df::Expr;
 use crate::exec::stream::StreamStats;
@@ -9,11 +11,18 @@ use crate::trace::Trace;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 
-/// How a session entry is backed.
+/// Default capacity of the per-session result cache.
+const RESULT_CACHE_CAPACITY: usize = 256;
+
+/// How a session entry is backed. Both variants are immutable shared
+/// state behind `Arc`, so entries can serve any number of concurrent
+/// readers — the [`super::server`] worker pool, other sessions via
+/// [`AnalysisSession::insert_shared`] — without copying the trace.
 enum TraceSource {
     /// Fully materialized events table.
-    Memory(Trace),
+    Memory(Arc<Trace>),
     /// Stream-backed: routed analyses re-open the source and ingest it
     /// shard-at-a-time through the pipelined decode→fold driver
     /// ([`crate::exec::stream`]) — shard decode runs as pool tasks
@@ -24,7 +33,7 @@ enum TraceSource {
     /// the re-verification parse and re-open with pure seeks, and
     /// `time_profile` / `comm_over_time` bin two-pass with no
     /// O(segments)/O(sends) buffering.
-    Streamed { path: PathBuf, plan: crate::readers::StreamPlan },
+    Streamed { path: PathBuf, plan: Arc<crate::readers::StreamPlan> },
 }
 
 /// A named collection of traces plus an optional PJRT runtime.
@@ -38,6 +47,26 @@ enum TraceSource {
 /// in [`crate::exec`] when `num_threads != 1`; sharded and sequential
 /// results are bit-identical (see `tests/parity.rs`), so the parallel
 /// path is preferred by default.
+///
+/// # `&self` analyses and the result cache
+///
+/// Every routed analysis takes `&self`: entries are immutable shared
+/// state (`Arc<Trace>` or a cached `Arc<StreamPlan>`), so the session is
+/// `Send + Sync` and any number of threads may analyze the same entry
+/// concurrently — this is what [`super::server::AnalysisServer`] builds
+/// on. The sequential engines (which cache derived columns by mutating
+/// the trace) run on a private clone; cross-call reuse now comes from
+/// the **result cache** instead: [`AnalysisSession::run_request`]
+/// executes a typed [`AnalysisRequest`] and memoizes the
+/// [`AnalysisResult`] under `(entry name, canonical request JSON)`, so a
+/// repeated identical query returns the cached `Arc` without
+/// recomputation. The key excludes the thread knob — sharded,
+/// sequential, and streamed execution are bit-identical, so one cached
+/// result serves every path. Replacing an entry
+/// ([`AnalysisSession::insert`], [`AnalysisSession::load`],
+/// [`AnalysisSession::load_streamed`]) or taking mutable access
+/// ([`AnalysisSession::get_mut`]) invalidates that entry's cached
+/// results: a mutated trace can never serve a stale analysis.
 ///
 /// Entries added with [`AnalysisSession::load_streamed`] never
 /// materialize for the routed analyses — including the
@@ -59,7 +88,11 @@ pub struct AnalysisSession {
     pub num_threads: usize,
     /// Ingest instrumentation from the most recent streamed analysis
     /// (shard count vs rows — the memory-bound hook tests assert on).
-    pub last_stream_stats: Option<StreamStats>,
+    /// Interior-mutable so `&self` analyses can record it; read with
+    /// [`AnalysisSession::last_stream_stats`].
+    stream_stats: Mutex<Option<StreamStats>>,
+    /// Memoized analysis results, keyed on `(entry, request)`.
+    cache: ResultCache,
 }
 
 impl Default for AnalysisSession {
@@ -74,7 +107,8 @@ impl AnalysisSession {
             sources: HashMap::new(),
             runtime: None,
             num_threads: crate::exec::default_threads(),
-            last_stream_stats: None,
+            stream_stats: Mutex::new(None),
+            cache: ResultCache::new(RESULT_CACHE_CAPACITY),
         }
     }
 
@@ -82,6 +116,13 @@ impl AnalysisSession {
     /// sequential).
     pub fn with_threads(mut self, num_threads: usize) -> Self {
         self.num_threads = num_threads;
+        self
+    }
+
+    /// Replace the result cache with one holding at most `capacity`
+    /// entries (LRU eviction beyond that).
+    pub fn with_cache_capacity(mut self, capacity: usize) -> Self {
+        self.cache = ResultCache::new(capacity);
         self
     }
 
@@ -93,17 +134,40 @@ impl AnalysisSession {
     /// The in-memory trace behind `name`, if it is memory-backed.
     fn memory(&self, name: &str) -> Option<&Trace> {
         match self.sources.get(name) {
-            Some(TraceSource::Memory(t)) => Some(t),
+            Some(TraceSource::Memory(t)) => Some(&**t),
             _ => None,
+        }
+    }
+
+    /// A shared handle on the in-memory trace behind `name`. Cloning the
+    /// `Arc` is how multiple sessions — or the server's worker pool —
+    /// serve one loaded entry without copying it.
+    pub fn trace_handle(&self, name: &str) -> Option<Arc<Trace>> {
+        match self.sources.get(name) {
+            Some(TraceSource::Memory(t)) => Some(Arc::clone(t)),
+            _ => None,
+        }
+    }
+
+    /// A private mutable clone of the memory-backed trace `name` (the
+    /// sequential engines cache derived columns by mutating their input,
+    /// which shared entries must never observe).
+    fn clone_trace(&self, name: &str) -> Result<Trace> {
+        match self.sources.get(name) {
+            Some(TraceSource::Memory(t)) => Ok((**t).clone()),
+            Some(TraceSource::Streamed { .. }) => Err(anyhow!(
+                "trace '{name}' is stream-backed; the streamed engines handle it"
+            )),
+            None => Err(anyhow!("no trace '{name}' in session")),
         }
     }
 
     /// The source path and cached stream plan behind `name`, if it is
     /// stream-backed.
-    fn stream_path(&self, name: &str) -> Option<(PathBuf, crate::readers::StreamPlan)> {
+    fn stream_path(&self, name: &str) -> Option<(PathBuf, Arc<crate::readers::StreamPlan>)> {
         match self.sources.get(name) {
             Some(TraceSource::Streamed { path, plan }) => {
-                Some((path.clone(), plan.clone()))
+                Some((path.clone(), Arc::clone(plan)))
             }
             _ => None,
         }
@@ -111,8 +175,7 @@ impl AnalysisSession {
 
     /// Route `name` through the sharded engine? Only when there is real
     /// parallelism to exploit — single-process traces stay on the
-    /// in-place sequential path, which caches derived metrics on the
-    /// session trace instead of copying it.
+    /// sequential path.
     fn sharded(&self, name: &str, threads: usize) -> bool {
         threads > 1
             && self
@@ -133,7 +196,18 @@ impl AnalysisSession {
         self.runtime.is_some()
     }
 
+    /// Insert (or replace) a memory-backed entry. Any cached results for
+    /// `name` are invalidated — the new trace starts with a cold cache.
     pub fn insert(&mut self, name: &str, trace: Trace) {
+        self.insert_shared(name, Arc::new(trace));
+    }
+
+    /// Insert an entry that shares an already-loaded trace: the `Arc` is
+    /// stored as-is, so two sessions (or a session and a server) can
+    /// serve the same resident events table. Invalidates `name`'s cached
+    /// results like [`AnalysisSession::insert`].
+    pub fn insert_shared(&mut self, name: &str, trace: Arc<Trace>) {
+        self.cache.invalidate(name);
         self.sources.insert(name.to_string(), TraceSource::Memory(trace));
     }
 
@@ -152,14 +226,15 @@ impl AnalysisSession {
     /// re-opens the source without re-verifying it. Sources that cannot
     /// stream (hpctoolkit / projections / interleaved csv or chrome)
     /// load eagerly once and stay memory-backed instead of being re-read
-    /// on every analysis.
+    /// on every analysis. Cached results for `name` are invalidated.
     pub fn load_streamed(&mut self, name: &str, path: impl AsRef<Path>) -> Result<()> {
         let path = path.as_ref();
         let plan = crate::readers::plan_sharded(path)?;
         if plan.is_streaming() {
+            self.cache.invalidate(name);
             self.sources.insert(
                 name.to_string(),
-                TraceSource::Streamed { path: path.to_path_buf(), plan },
+                TraceSource::Streamed { path: path.to_path_buf(), plan: Arc::new(plan) },
             );
         } else {
             self.load(name, path)?;
@@ -196,11 +271,11 @@ impl AnalysisSession {
             let mut r = self.open_stream(&path, &plan)?;
             crate::exec::stream::write_archive(r.as_mut(), dir, self.num_threads)?
         } else {
-            let t = self.get(name)?.clone();
+            let t = self.clone_trace(name)?;
             let mut r = crate::readers::streaming::SplitReader::new(t)?;
             crate::exec::stream::write_archive(&mut r, dir, self.num_threads)?
         };
-        self.last_stream_stats = Some(stats);
+        self.set_stream_stats(Some(stats));
         self.load_streamed(name, dir)?;
         Ok(stats)
     }
@@ -220,7 +295,7 @@ impl AnalysisSession {
 
     pub fn get(&self, name: &str) -> Result<&Trace> {
         match self.sources.get(name) {
-            Some(TraceSource::Memory(t)) => Ok(t),
+            Some(TraceSource::Memory(t)) => Ok(&**t),
             Some(TraceSource::Streamed { path, .. }) => Err(anyhow!(
                 "trace '{name}' is stream-backed ({}); routed analyses read it \
                  shard-at-a-time — use get_mut to materialize it",
@@ -230,21 +305,29 @@ impl AnalysisSession {
         }
     }
 
+    /// Mutable access to the trace behind `name` (stream-backed entries
+    /// materialize first). Invalidates every cached result for `name`:
+    /// the caller may mutate the trace, and a mutated trace must never
+    /// serve a stale cached analysis. If the entry's `Arc` is shared
+    /// (server pool, [`AnalysisSession::insert_shared`] elsewhere), the
+    /// session clones it first — other holders keep the unmutated trace.
     pub fn get_mut(&mut self, name: &str) -> Result<&mut Trace> {
         self.materialize(name)?;
+        self.cache.invalidate(name);
         match self.sources.get_mut(name) {
-            Some(TraceSource::Memory(t)) => Ok(t),
+            Some(TraceSource::Memory(t)) => Ok(Arc::make_mut(t)),
             _ => Err(anyhow!("no trace '{name}' in session")),
         }
     }
 
     /// Convert a stream-backed entry into a memory-backed one (no-op for
     /// memory-backed entries). Used transparently by operations without a
-    /// streaming implementation.
+    /// streaming implementation. Cached results stay valid: streamed and
+    /// eager execution are bit-identical.
     fn materialize(&mut self, name: &str) -> Result<()> {
         if let Some((p, _)) = self.stream_path(name) {
             let t = crate::readers::read_auto(&p)?;
-            self.sources.insert(name.to_string(), TraceSource::Memory(t));
+            self.sources.insert(name.to_string(), TraceSource::Memory(Arc::new(t)));
         }
         Ok(())
     }
@@ -257,6 +340,97 @@ impl AnalysisSession {
         plan: &crate::readers::StreamPlan,
     ) -> Result<Box<dyn crate::readers::ShardedReader>> {
         crate::readers::open_planned(path, plan)
+    }
+
+    // -- stream-stats accessors (interior-mutable for `&self` dispatch) ---
+
+    /// Ingest instrumentation from the most recent streamed analysis.
+    pub fn last_stream_stats(&self) -> Option<StreamStats> {
+        *self.stream_stats.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Take the stats, leaving `None` (so a later `Some` unambiguously
+    /// belongs to a newer analysis).
+    pub fn take_stream_stats(&self) -> Option<StreamStats> {
+        self.stream_stats.lock().unwrap_or_else(|e| e.into_inner()).take()
+    }
+
+    pub(crate) fn set_stream_stats(&self, stats: Option<StreamStats>) {
+        *self.stream_stats.lock().unwrap_or_else(|e| e.into_inner()) = stats;
+    }
+
+    // -- the typed request executor ---------------------------------------
+
+    /// Execute a typed [`AnalysisRequest`] against entry `name`, serving
+    /// repeats from the result cache: the second identical query returns
+    /// the same `Arc` without recomputation. This is the canonical
+    /// dispatch surface — the CLI, pipeline steps, and the concurrent
+    /// server all route through it. The typed per-op methods below
+    /// always compute fresh (they exist for direct programmatic use).
+    pub fn run_request(&self, name: &str, req: &AnalysisRequest) -> Result<Arc<AnalysisResult>> {
+        let key = req.cache_key();
+        if let Some(hit) = self.cache.lookup(name, &key) {
+            return Ok(hit);
+        }
+        let result = Arc::new(self.execute(name, req)?);
+        self.cache.store(name, key, Arc::clone(&result));
+        Ok(result)
+    }
+
+    /// Counters of the session result cache.
+    pub fn cache_stats(&self) -> CacheStats {
+        self.cache.stats()
+    }
+
+    /// Drop every cached result (counters are retained). Benchmarks use
+    /// this to measure the cold path.
+    pub fn clear_result_cache(&self) {
+        self.cache.clear();
+    }
+
+    fn execute(&self, name: &str, req: &AnalysisRequest) -> Result<AnalysisResult> {
+        Ok(match req {
+            AnalysisRequest::FlatProfile { metric } => {
+                AnalysisResult::FlatProfile(self.flat_profile(name, *metric)?)
+            }
+            AnalysisRequest::TimeProfile { bins, top } => {
+                AnalysisResult::TimeProfile(self.time_profile(name, *bins, *top)?)
+            }
+            AnalysisRequest::CommMatrix { unit } => {
+                AnalysisResult::CommMatrix(self.comm_matrix(name, *unit)?)
+            }
+            AnalysisRequest::MessageHistogram { bins } => {
+                let (counts, edges) = self.message_histogram(name, *bins)?;
+                AnalysisResult::MessageHistogram { counts, edges }
+            }
+            AnalysisRequest::CommByProcess { unit } => {
+                AnalysisResult::CommByProcess(self.comm_by_process(name, *unit)?)
+            }
+            AnalysisRequest::CommOverTime { bins } => {
+                let (counts, volume, edges) = self.comm_over_time(name, *bins)?;
+                AnalysisResult::CommOverTime { counts, volume, edges }
+            }
+            AnalysisRequest::CommCompBreakdown => {
+                AnalysisResult::CommCompBreakdown(self.comm_comp_breakdown(name)?)
+            }
+            AnalysisRequest::LoadImbalance { metric, k } => {
+                AnalysisResult::LoadImbalance(self.load_imbalance(name, *metric, *k)?)
+            }
+            AnalysisRequest::IdleTime => AnalysisResult::IdleTime(self.idle_time(name)?),
+            AnalysisRequest::PatternDetection { start_event, bins, window } => {
+                let cfg = analysis::PatternConfig { bins: *bins, window: *window };
+                AnalysisResult::PatternDetection(self.detect_pattern(
+                    name,
+                    start_event.as_deref(),
+                    &cfg,
+                )?)
+            }
+            AnalysisRequest::CriticalPath => {
+                AnalysisResult::CriticalPath(self.critical_path(name)?)
+            }
+            AnalysisRequest::Lateness => AnalysisResult::Lateness(self.lateness(name)?),
+            AnalysisRequest::Cct => AnalysisResult::Cct(self.create_cct(name)?),
+        })
     }
 
     /// Filter a trace into a new session entry (paper §IV.E). Columns
@@ -277,30 +451,26 @@ impl AnalysisSession {
 
     // -- dispatching operations -------------------------------------------
 
-    pub fn flat_profile(
-        &mut self,
-        name: &str,
-        metric: Metric,
-    ) -> Result<Vec<analysis::ProfileRow>> {
+    pub fn flat_profile(&self, name: &str, metric: Metric) -> Result<Vec<analysis::ProfileRow>> {
         if let Some((path, plan)) = self.stream_path(name) {
             let mut r = self.open_stream(&path, &plan)?;
             let (rows, stats) =
                 crate::exec::stream::flat_profile(r.as_mut(), metric, self.num_threads)?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(rows);
         }
         let threads = self.threads();
         if self.sharded(name, threads) {
             return crate::exec::ops::flat_profile(self.get(name)?, metric, threads);
         }
-        analysis::flat_profile(self.get_mut(name)?, metric)
+        analysis::flat_profile(&mut self.clone_trace(name)?, metric)
     }
 
     /// Time profile; uses the AOT time-hist kernel when available and the
     /// requested shape matches the AOT contract, else the sharded engine
     /// when `num_threads != 1`, else the sequential engine.
     pub fn time_profile(
-        &mut self,
+        &self,
         name: &str,
         bins: usize,
         top: Option<usize>,
@@ -309,29 +479,20 @@ impl AnalysisSession {
             let mut r = self.open_stream(&path, &plan)?;
             let (tp, stats) =
                 crate::exec::stream::time_profile(r.as_mut(), bins, top, self.num_threads)?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(tp);
         }
+        if let Some(rt) = &self.runtime {
+            let c = rt.contract;
+            if bins == c.th_bins && top.map_or(true, |t| t >= c.th_funcs - 1) {
+                return hlo_ops::time_profile_hlo(rt, &mut self.clone_trace(name)?);
+            }
+        }
         let threads = self.threads();
-        let sharded = self.sharded(name, threads);
-        // split borrows: take trace out, operate, put back
-        let Some(TraceSource::Memory(mut trace)) = self.sources.remove(name) else {
-            bail!("no trace '{name}' in session")
-        };
-        let result = (|| {
-            if let Some(rt) = &self.runtime {
-                let c = rt.contract;
-                if bins == c.th_bins && top.map_or(true, |t| t >= c.th_funcs - 1) {
-                    return hlo_ops::time_profile_hlo(rt, &mut trace);
-                }
-            }
-            if sharded {
-                return crate::exec::ops::time_profile(&trace, bins, top, threads);
-            }
-            analysis::time_profile(&mut trace, bins, top)
-        })();
-        self.sources.insert(name.to_string(), TraceSource::Memory(trace));
-        result
+        if self.sharded(name, threads) {
+            return crate::exec::ops::time_profile(self.get(name)?, bins, top, threads);
+        }
+        analysis::time_profile(&mut self.clone_trace(name)?, bins, top)
     }
 
     /// Matrix profile of a series; PJRT when window matches the contract.
@@ -345,7 +506,7 @@ impl AnalysisSession {
     }
 
     pub fn detect_pattern(
-        &mut self,
+        &self,
         name: &str,
         start_event: Option<&str>,
         cfg: &analysis::PatternConfig,
@@ -358,26 +519,22 @@ impl AnalysisSession {
                 cfg,
                 self.num_threads,
             )?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(pats);
         }
         let threads = self.threads();
         if self.sharded(name, threads) {
             return crate::exec::ops::detect_pattern(self.get(name)?, start_event, cfg, threads);
         }
-        analysis::detect_pattern(self.get_mut(name)?, start_event, cfg)
+        analysis::detect_pattern(&mut self.clone_trace(name)?, start_event, cfg)
     }
 
-    pub fn comm_matrix(
-        &mut self,
-        name: &str,
-        unit: analysis::CommUnit,
-    ) -> Result<analysis::CommMatrix> {
+    pub fn comm_matrix(&self, name: &str, unit: analysis::CommUnit) -> Result<analysis::CommMatrix> {
         if let Some((path, plan)) = self.stream_path(name) {
             let mut r = self.open_stream(&path, &plan)?;
             let (m, stats) =
                 crate::exec::stream::comm_matrix(r.as_mut(), unit, self.num_threads)?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(m);
         }
         let t = self.get(name)?;
@@ -399,12 +556,12 @@ impl AnalysisSession {
         analysis::comm_matrix(t, unit)
     }
 
-    pub fn message_histogram(&mut self, name: &str, bins: usize) -> Result<(Vec<u64>, Vec<f64>)> {
+    pub fn message_histogram(&self, name: &str, bins: usize) -> Result<(Vec<u64>, Vec<f64>)> {
         if let Some((path, plan)) = self.stream_path(name) {
             let mut r = self.open_stream(&path, &plan)?;
             let (hist, stats) =
                 crate::exec::stream::message_histogram(r.as_mut(), bins, self.num_threads)?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(hist);
         }
         let threads = self.threads();
@@ -416,7 +573,7 @@ impl AnalysisSession {
     }
 
     pub fn comm_by_process(
-        &mut self,
+        &self,
         name: &str,
         unit: analysis::CommUnit,
     ) -> Result<Vec<(i64, f64, f64)>> {
@@ -424,14 +581,14 @@ impl AnalysisSession {
             let mut r = self.open_stream(&path, &plan)?;
             let (rows, stats) =
                 crate::exec::stream::comm_by_process(r.as_mut(), unit, self.num_threads)?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(rows);
         }
         analysis::comm_by_process(self.get(name)?, unit)
     }
 
     pub fn comm_over_time(
-        &mut self,
+        &self,
         name: &str,
         bins: usize,
     ) -> Result<(Vec<u64>, Vec<f64>, Vec<i64>)> {
@@ -439,7 +596,7 @@ impl AnalysisSession {
             let mut r = self.open_stream(&path, &plan)?;
             let (out, stats) =
                 crate::exec::stream::comm_over_time(r.as_mut(), bins, self.num_threads)?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(out);
         }
         let threads = self.threads();
@@ -450,7 +607,7 @@ impl AnalysisSession {
         analysis::comm_over_time(t, bins)
     }
 
-    pub fn comm_comp_breakdown(&mut self, name: &str) -> Result<Vec<analysis::Breakdown>> {
+    pub fn comm_comp_breakdown(&self, name: &str) -> Result<Vec<analysis::Breakdown>> {
         if let Some((path, plan)) = self.stream_path(name) {
             let mut r = self.open_stream(&path, &plan)?;
             let (rows, stats) = crate::exec::stream::comm_comp_breakdown(
@@ -459,18 +616,18 @@ impl AnalysisSession {
                 None,
                 self.num_threads,
             )?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(rows);
         }
         let threads = self.threads();
         if self.sharded(name, threads) {
             return crate::exec::ops::comm_comp_breakdown(self.get(name)?, None, None, threads);
         }
-        analysis::comm_comp_breakdown(self.get_mut(name)?, None, None)
+        analysis::comm_comp_breakdown(&mut self.clone_trace(name)?, None, None)
     }
 
     pub fn load_imbalance(
-        &mut self,
+        &self,
         name: &str,
         metric: Metric,
         k: usize,
@@ -479,68 +636,89 @@ impl AnalysisSession {
             let mut r = self.open_stream(&path, &plan)?;
             let (rows, stats) =
                 crate::exec::stream::load_imbalance(r.as_mut(), metric, k, self.num_threads)?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(rows);
         }
         let threads = self.threads();
         if self.sharded(name, threads) {
             return crate::exec::ops::load_imbalance(self.get(name)?, metric, k, threads);
         }
-        analysis::load_imbalance(self.get_mut(name)?, metric, k)
+        analysis::load_imbalance(&mut self.clone_trace(name)?, metric, k)
     }
 
-    pub fn idle_time(&mut self, name: &str) -> Result<Vec<analysis::IdleRow>> {
+    pub fn idle_time(&self, name: &str) -> Result<Vec<analysis::IdleRow>> {
         if let Some((path, plan)) = self.stream_path(name) {
             let mut r = self.open_stream(&path, &plan)?;
             let (rows, stats) =
                 crate::exec::stream::idle_time(r.as_mut(), None, self.num_threads)?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(rows);
         }
         let threads = self.threads();
         if self.sharded(name, threads) {
             return crate::exec::ops::idle_time(self.get(name)?, None, threads);
         }
-        analysis::idle_time(self.get_mut(name)?, None)
+        analysis::idle_time(&mut self.clone_trace(name)?, None)
     }
 
-    pub fn critical_path(&mut self, name: &str) -> Result<Vec<analysis::CriticalPath>> {
+    pub fn critical_path(&self, name: &str) -> Result<Vec<analysis::CriticalPath>> {
         if let Some((path, plan)) = self.stream_path(name) {
             let mut r = self.open_stream(&path, &plan)?;
             let (paths, stats) =
                 crate::exec::stream::critical_path(r.as_mut(), self.num_threads)?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(paths);
         }
         let threads = self.threads();
         if self.sharded(name, threads) {
             return crate::exec::ops::critical_path(self.get(name)?, threads);
         }
-        analysis::critical_path_analysis(self.get_mut(name)?)
+        analysis::critical_path_analysis(&mut self.clone_trace(name)?)
     }
 
-    pub fn lateness(&mut self, name: &str) -> Result<Vec<analysis::LogicalOp>> {
+    pub fn lateness(&self, name: &str) -> Result<Vec<analysis::LogicalOp>> {
         if let Some((path, plan)) = self.stream_path(name) {
             let mut r = self.open_stream(&path, &plan)?;
             let (ops, stats) = crate::exec::stream::lateness(r.as_mut(), self.num_threads)?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(ops);
         }
         let threads = self.threads();
         if self.sharded(name, threads) {
             return crate::exec::ops::lateness(self.get(name)?, threads);
         }
-        analysis::calculate_lateness(self.get_mut(name)?)
+        analysis::calculate_lateness(&mut self.clone_trace(name)?)
     }
 
-    pub fn create_cct(&mut self, name: &str) -> Result<analysis::Cct> {
+    /// Build the unified calling-context tree. Pure `&self`: the
+    /// `_cct_node` column the old `&mut` API attached as a side effect is
+    /// no longer written — callers that need it use
+    /// [`AnalysisSession::create_cct_cached`].
+    pub fn create_cct(&self, name: &str) -> Result<analysis::Cct> {
         if let Some((path, plan)) = self.stream_path(name) {
             let mut r = self.open_stream(&path, &plan)?;
             let (tree, stats) =
                 crate::exec::stream::create_cct(r.as_mut(), self.num_threads)?;
-            self.last_stream_stats = Some(stats);
+            self.set_stream_stats(Some(stats));
             return Ok(tree);
         }
+        let threads = self.threads();
+        if self.sharded(name, threads) {
+            let (tree, _col) = crate::exec::ops::create_cct(self.get(name)?, threads)?;
+            return Ok(tree);
+        }
+        let mut t = self.clone_trace(name)?;
+        analysis::create_cct(&mut t)
+    }
+
+    /// The pre-redesign `create_cct`: additionally attaches the
+    /// `_cct_node` column to the session trace (materializing streamed
+    /// entries). Mutating the entry invalidates its cached results.
+    #[deprecated(
+        note = "analyses take &self now; use create_cct (or run_request) — this shim \
+                only remains for callers that need the _cct_node column side effect"
+    )]
+    pub fn create_cct_cached(&mut self, name: &str) -> Result<analysis::Cct> {
         let threads = self.threads();
         if self.sharded(name, threads) {
             let (tree, col) = crate::exec::ops::create_cct(self.get(name)?, threads)?;
@@ -554,7 +732,8 @@ impl AnalysisSession {
     }
 
     /// Multi-run comparison over a set of session traces (stream-backed
-    /// entries materialize first).
+    /// entries materialize first). Shared entries are cloned only if
+    /// another holder still references them.
     pub fn multi_run(
         &mut self,
         names: &[&str],
@@ -565,13 +744,17 @@ impl AnalysisSession {
         for n in names {
             self.materialize(n)?;
             match self.sources.remove(*n) {
-                Some(TraceSource::Memory(t)) => traces.push(t),
+                Some(TraceSource::Memory(a)) => {
+                    traces.push(Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone()))
+                }
                 _ => bail!("no trace '{n}' in session"),
             }
         }
         let result = analysis::multi_run_analysis(&mut traces, metric, top_k);
         for (n, t) in names.iter().zip(traces) {
-            self.sources.insert(n.to_string(), TraceSource::Memory(t));
+            // Derived columns added by the analysis do not change any
+            // analysis result, so cached entries stay valid.
+            self.sources.insert(n.to_string(), TraceSource::Memory(Arc::new(t)));
         }
         result
     }
@@ -616,6 +799,12 @@ mod tests {
     }
 
     #[test]
+    fn session_is_send_and_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<AnalysisSession>();
+    }
+
+    #[test]
     fn generate_and_dispatch() {
         let mut s = session_with_gol();
         let fp = s.flat_profile("g", Metric::ExcTime).unwrap();
@@ -650,7 +839,7 @@ mod tests {
 
     #[test]
     fn missing_trace_errors() {
-        let mut s = AnalysisSession::new();
+        let s = AnalysisSession::new();
         assert!(s.flat_profile("nope", Metric::ExcTime).is_err());
     }
 
@@ -699,22 +888,86 @@ mod tests {
     }
 
     #[test]
-    fn sharded_cct_sets_node_column() {
+    #[allow(deprecated)]
+    fn sharded_cct_cached_sets_node_column() {
         let mut s = AnalysisSession::new().with_threads(4);
         s.generate("g", "amg", &GenConfig::new(6, 3), 1).unwrap();
-        let tree = s.create_cct("g").unwrap();
-        assert!(!tree.nodes.is_empty());
+        // the &self builder must not touch the shared entry
+        let pure = s.create_cct("g").unwrap();
+        assert!(!s.get("g").unwrap().events.has("_cct_node"));
+        let tree = s.create_cct_cached("g").unwrap();
+        assert_eq!(tree, pure);
         let t = s.get("g").unwrap();
         assert!(t.events.has("_cct_node"));
         // column must agree with the sequential construction
         let mut seq = AnalysisSession::new().with_threads(1);
         seq.generate("g", "amg", &GenConfig::new(6, 3), 1).unwrap();
-        let seq_tree = seq.create_cct("g").unwrap();
+        let seq_tree = seq.create_cct_cached("g").unwrap();
         assert_eq!(tree, seq_tree);
         assert_eq!(
             t.events.i64s("_cct_node").unwrap(),
             seq.get("g").unwrap().events.i64s("_cct_node").unwrap()
         );
+    }
+
+    #[test]
+    fn entries_are_shared_not_copied() {
+        let mut s = AnalysisSession::new().with_threads(2);
+        s.generate("g", "laghos", &GenConfig::new(4, 3), 1).unwrap();
+        let h = s.trace_handle("g").unwrap();
+        let fp = s.flat_profile("g", Metric::ExcTime).unwrap();
+        assert!(!fp.is_empty());
+        // &self analyses must not replace or clone the entry
+        assert!(Arc::ptr_eq(&h, &s.trace_handle("g").unwrap()));
+        // a second session serves the very same resident trace
+        let mut s2 = AnalysisSession::new().with_threads(2);
+        s2.insert_shared("g", Arc::clone(&h));
+        assert_eq!(s2.flat_profile("g", Metric::ExcTime).unwrap(), fp);
+        assert!(Arc::ptr_eq(&h, &s2.trace_handle("g").unwrap()));
+    }
+
+    #[test]
+    fn run_request_caches_and_mutation_invalidates() {
+        let mut s = AnalysisSession::new().with_threads(1);
+        s.generate("t", "gol", &GenConfig::new(2, 2), 1).unwrap();
+        let req = AnalysisRequest::FlatProfile { metric: Metric::ExcTime };
+        let r1 = s.run_request("t", &req).unwrap();
+        let r1b = s.run_request("t", &req).unwrap();
+        assert!(Arc::ptr_eq(&r1, &r1b), "repeat must be served from the cache");
+        let stats = s.cache_stats();
+        assert_eq!((stats.hits, stats.misses), (1, 1));
+        // the cached result matches the typed method bit-for-bit
+        let direct = s.flat_profile("t", Metric::ExcTime).unwrap();
+        assert_eq!(*r1, AnalysisResult::FlatProfile(direct));
+
+        // replacing the trace through get_mut drops the cached result
+        let other = crate::gen::generate("gol", &GenConfig::new(4, 3), 1).unwrap();
+        *s.get_mut("t").unwrap() = other;
+        let r2 = s.run_request("t", &req).unwrap();
+        assert!(!Arc::ptr_eq(&r1, &r2));
+        assert_ne!(*r1, *r2, "mutated trace must not serve the stale result");
+
+        // insert invalidates too; equal inputs still recompute equal output
+        s.insert("t", crate::gen::generate("gol", &GenConfig::new(2, 2), 1).unwrap());
+        let r3 = s.run_request("t", &req).unwrap();
+        assert!(!Arc::ptr_eq(&r2, &r3));
+        assert_eq!(*r1, *r3);
+    }
+
+    #[test]
+    fn cache_capacity_evicts_lru() {
+        let mut s = AnalysisSession::new().with_threads(1).with_cache_capacity(2);
+        s.generate("t", "gol", &GenConfig::new(2, 2), 1).unwrap();
+        let a = AnalysisRequest::MessageHistogram { bins: 4 };
+        let b = AnalysisRequest::MessageHistogram { bins: 5 };
+        let c = AnalysisRequest::MessageHistogram { bins: 6 };
+        let ra = s.run_request("t", &a).unwrap();
+        s.run_request("t", &b).unwrap();
+        s.run_request("t", &a).unwrap(); // refresh `a`
+        s.run_request("t", &c).unwrap(); // evicts `b`
+        assert!(s.cache_stats().evictions >= 1);
+        let ra2 = s.run_request("t", &a).unwrap();
+        assert!(Arc::ptr_eq(&ra, &ra2), "`a` must have survived eviction");
     }
 
     #[test]
@@ -735,7 +988,7 @@ mod tests {
             eager.flat_profile("g", Metric::ExcTime).unwrap(),
             streamed.flat_profile("g", Metric::ExcTime).unwrap()
         );
-        let stats = streamed.last_stream_stats.unwrap();
+        let stats = streamed.last_stream_stats().unwrap();
         assert_eq!(stats.shards, 6);
         assert_eq!(stats.total_rows, eager.get("g").unwrap().len());
         assert!(stats.max_shard_rows < stats.total_rows);
@@ -749,7 +1002,7 @@ mod tests {
             streamed.get("g").is_err(),
             "critical_path must not materialize a streamed entry"
         );
-        assert_eq!(streamed.last_stream_stats.unwrap().shards, 6);
+        assert_eq!(streamed.last_stream_stats().unwrap().shards, 6);
         assert_eq!(
             streamed.lateness("g").unwrap(),
             eager.lateness("g").unwrap()
@@ -784,7 +1037,7 @@ mod tests {
         assert_eq!(s.get("t").unwrap().num_processes().unwrap(), 2);
         let fp = s.flat_profile("t", Metric::IncTime).unwrap();
         assert!(!fp.is_empty());
-        assert!(s.last_stream_stats.is_none(), "no streamed analysis ran");
+        assert!(s.last_stream_stats().is_none(), "no streamed analysis ran");
     }
 
     #[test]
@@ -812,13 +1065,13 @@ mod tests {
         assert_eq!(s.is_streamed("g"), Some(true), "entry must re-point at the archive");
 
         assert_eq!(s.flat_profile("g", Metric::ExcTime).unwrap(), eager_fp);
-        let stats = s.last_stream_stats.unwrap();
+        let stats = s.last_stream_stats().unwrap();
         assert!(!stats.fallback, "archive reopen must be a true stream");
         assert_eq!(stats.shards, 4);
 
         // per-block sub-censuses pre-size the by-process path: census hit
         assert_eq!(s.load_imbalance("g", Metric::ExcTime, 4).unwrap(), eager_li);
-        let stats = s.last_stream_stats.unwrap();
+        let stats = s.last_stream_stats().unwrap();
         assert!(stats.census, "block-detail pre-sizing must report a census hit: {stats:?}");
         assert_eq!(stats.census_block_mismatches, 0);
     }

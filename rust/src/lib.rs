@@ -82,6 +82,32 @@
 //! divergence is detected per block
 //! ([`exec::stream::StreamStats::census_block_mismatches`]) instead of
 //! degrading whole-run.
+//!
+//! # The analysis server — one trace pool, many clients
+//!
+//! Every analysis dispatch surface speaks one canonical, typed request
+//! form: [`coordinator::AnalysisRequest`] /
+//! [`coordinator::AnalysisResult`]. A request's sorted-key JSON
+//! serialization is simultaneously the CLI `analyze` parameter set, the
+//! pipeline step object, the server wire format, and the **result-cache
+//! key** — defaults are applied at parse time, so two spellings of the
+//! same query share one cache entry, and the thread knob is deliberately
+//! excluded (sharded, sequential, and streamed execution are
+//! bit-identical, so one cached result serves every path).
+//!
+//! [`coordinator::AnalysisSession`] holds its entries as **immutable
+//! shared state** (`Arc<Trace>`, cached stream plans), and every
+//! read-only analysis takes `&self` — so a session can be shared.
+//! [`coordinator::AnalysisServer`] builds on exactly that: a long-lived
+//! service over one session, N concurrent clients
+//! ([`coordinator::ServerClient`]) submitting typed requests through a
+//! fair FIFO worker pool, with an LRU result cache
+//! ([`coordinator::ResultCache`], hit/miss/eviction counters in
+//! [`coordinator::ServerStats`]) and panic/error isolation per request.
+//! Mutation (`insert`, `get_mut`, `load`) invalidates that trace's
+//! cached results. `tests/server_stress.rs` asserts the headline
+//! guarantee: concurrent results are bit-identical to a fresh sequential
+//! session on every routed op. See `examples/analysis_server.rs`.
 
 pub mod util;
 pub mod df;

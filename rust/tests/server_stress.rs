@@ -1,0 +1,265 @@
+//! Concurrency stress suite for the analysis server: N threads x M
+//! requests over shared immutable traces, compared bit-identically
+//! against single-session sequential execution; plus cache-hit,
+//! fair-scheduling liveness, and poisoned-request isolation checks.
+
+use std::sync::Arc;
+use std::thread;
+
+use pipit::analysis::{CommUnit, Metric};
+use pipit::coordinator::{AnalysisRequest, AnalysisServer, AnalysisSession};
+use pipit::gen::{self, GenConfig};
+use pipit::readers;
+
+/// Every routed op, fully explicit, as submitted over the wire.
+fn all_requests() -> Vec<AnalysisRequest> {
+    vec![
+        AnalysisRequest::FlatProfile { metric: Metric::ExcTime },
+        AnalysisRequest::TimeProfile { bins: 64, top: Some(8) },
+        AnalysisRequest::CommMatrix { unit: CommUnit::Bytes },
+        AnalysisRequest::MessageHistogram { bins: 10 },
+        AnalysisRequest::CommByProcess { unit: CommUnit::Count },
+        AnalysisRequest::CommOverTime { bins: 32 },
+        AnalysisRequest::CommCompBreakdown,
+        AnalysisRequest::LoadImbalance { metric: Metric::ExcTime, k: 4 },
+        AnalysisRequest::IdleTime,
+        AnalysisRequest::PatternDetection { start_event: None, bins: 256, window: None },
+        AnalysisRequest::CriticalPath,
+        AnalysisRequest::Lateness,
+        AnalysisRequest::Cct,
+    ]
+}
+
+/// All 13 ops through a multi-worker server, from concurrent client
+/// threads, must be bit-identical to a fresh single-threaded session.
+/// The pool also serves a stream-backed entry alongside the in-memory
+/// one, with the same guarantee.
+#[test]
+fn concurrent_requests_match_sequential_bit_for_bit() {
+    let t = gen::generate("laghos", &GenConfig::new(8, 5), 1).unwrap();
+    let dir = std::env::temp_dir().join("pipit_server_stress_parity");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let otf2 = dir.join("g_otf2");
+    readers::otf2::write(&t, &otf2).unwrap();
+
+    // Reference: sequential, one request at a time, no server involved.
+    let mut reference = AnalysisSession::new().with_threads(1);
+    reference.insert("g", t.clone());
+    reference.load("gs", &otf2).unwrap();
+
+    // Server: sharded session, stream-backed second entry.
+    let mut session = AnalysisSession::new().with_threads(2);
+    session.insert("g", t);
+    session.load_streamed("gs", &otf2).unwrap();
+    let server = AnalysisServer::start(session, 4);
+
+    // One thread per op, all in flight together against the shared pool.
+    let handles: Vec<_> = all_requests()
+        .into_iter()
+        .map(|req| {
+            let client = server.client();
+            thread::spawn(move || {
+                let res = client.query("g", &req).unwrap();
+                (req, res)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (req, res) = h.join().unwrap();
+        let expect = reference.run_request("g", &req).unwrap();
+        assert_eq!(*res, *expect, "server diverged from sequential on {}", req.op());
+    }
+
+    // Stream-routed ops against the stream-backed entry, concurrently.
+    let stream_ops = vec![
+        AnalysisRequest::FlatProfile { metric: Metric::ExcTime },
+        AnalysisRequest::CommCompBreakdown,
+        AnalysisRequest::CriticalPath,
+        AnalysisRequest::Lateness,
+    ];
+    let handles: Vec<_> = stream_ops
+        .into_iter()
+        .map(|req| {
+            let client = server.client();
+            thread::spawn(move || {
+                let res = client.query("gs", &req).unwrap();
+                (req, res)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (req, res) = h.join().unwrap();
+        let expect = reference.run_request("gs", &req).unwrap();
+        assert_eq!(*res, *expect, "streamed entry diverged on {}", req.op());
+    }
+
+    let stats = server.stats();
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.completed, 17);
+    server.shutdown();
+}
+
+/// Repeating a request is a cache hit: the very same `Arc` comes back
+/// and the hit counter moves, across distinct clients.
+#[test]
+fn repeat_requests_are_cache_hits() {
+    let mut session = AnalysisSession::new().with_threads(2);
+    session.generate("g", "laghos", &GenConfig::new(6, 3), 1).unwrap();
+    let server = AnalysisServer::start(session, 2);
+
+    let req = AnalysisRequest::TimeProfile { bins: 96, top: Some(5) };
+    let first = server.client().query("g", &req).unwrap();
+    let again = server.client().query("g", &req).unwrap();
+    assert!(Arc::ptr_eq(&first, &again), "repeat must serve the cached Arc");
+
+    // Two spellings of the same query share one cache entry.
+    let spelled =
+        AnalysisRequest::parse(r#"{"bins": 96, "op": "time_profile", "top": 5}"#).unwrap();
+    let third = server.client().query("g", &spelled).unwrap();
+    assert!(Arc::ptr_eq(&first, &third));
+
+    let stats = server.stats();
+    assert_eq!(stats.cache.misses, 1);
+    assert!(stats.cache.hits >= 2, "hits = {}", stats.cache.hits);
+    server.shutdown();
+}
+
+/// One shared `Arc` trace entry serving >= 2 simultaneous clients: the
+/// pool's high-water mark of concurrently executing requests reaches 2,
+/// and the entry is never copied (same `Arc` before and after).
+#[test]
+fn one_shared_entry_serves_simultaneous_clients() {
+    let mut session = AnalysisSession::new().with_threads(1);
+    session.generate("g", "laghos", &GenConfig::new(16, 6), 1).unwrap();
+    let before = session.trace_handle("g").unwrap();
+    let server = AnalysisServer::start(session, 4);
+
+    // Distinct bins per request so nothing short-circuits in the cache;
+    // submit in rounds until two requests are provably in flight at once.
+    let mut round = 0usize;
+    while server.stats().peak_active < 2 {
+        round += 1;
+        assert!(round <= 8, "peak_active never reached 2 across {round} rounds");
+        let clients: Vec<_> = (0..2)
+            .map(|c| {
+                let client = server.client();
+                thread::spawn(move || {
+                    let pending: Vec<_> = (0..6)
+                        .map(|i| {
+                            let req = AnalysisRequest::TimeProfile {
+                                bins: 100 * round + 10 * c + i,
+                                top: None,
+                            };
+                            client.submit("g", &req).unwrap()
+                        })
+                        .collect();
+                    for p in pending {
+                        p.wait().unwrap();
+                    }
+                })
+            })
+            .collect();
+        for c in clients {
+            c.join().unwrap();
+        }
+    }
+
+    let after = server.session().trace_handle("g").unwrap();
+    assert!(Arc::ptr_eq(&before, &after), "entry must be shared, not copied");
+    assert!(server.stats().peak_active >= 2);
+    server.shutdown();
+}
+
+/// FIFO fairness / liveness: short requests queued behind a long one on
+/// a small pool all complete, none starve.
+#[test]
+fn short_requests_behind_long_ones_complete() {
+    let mut session = AnalysisSession::new().with_threads(1);
+    session.generate("g", "laghos", &GenConfig::new(12, 6), 1).unwrap();
+    let server = AnalysisServer::start(session, 2);
+    let client = server.client();
+
+    let long = client.submit("g", &AnalysisRequest::CriticalPath).unwrap();
+    let shorts: Vec<_> = (0..8)
+        .map(|i| client.submit("g", &AnalysisRequest::MessageHistogram { bins: 4 + i }).unwrap())
+        .collect();
+    for p in shorts {
+        p.wait().unwrap();
+    }
+    long.wait().unwrap();
+
+    let stats = server.stats();
+    assert_eq!(stats.completed, 9);
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.queued, 0);
+    assert_eq!(stats.active, 0);
+    server.shutdown();
+}
+
+/// Poisoned requests (bad trace name) fail their own client and nothing
+/// else: interleaved good requests keep succeeding and the failure
+/// counter accounts for exactly the bad ones.
+#[test]
+fn poisoned_requests_are_isolated() {
+    let mut session = AnalysisSession::new().with_threads(2);
+    session.generate("g", "laghos", &GenConfig::new(6, 3), 1).unwrap();
+    let server = AnalysisServer::start(session, 2);
+
+    let workers: Vec<_> = (0..2)
+        .map(|c| {
+            let client = server.client();
+            thread::spawn(move || {
+                for i in 0..6 {
+                    let req = AnalysisRequest::MessageHistogram { bins: 3 + 10 * c + i };
+                    if i % 3 == 0 {
+                        let err = client.query("missing", &req).unwrap_err();
+                        assert!(err.to_string().contains("missing"), "{err:#}");
+                    } else {
+                        client.query("g", &req).unwrap();
+                    }
+                }
+            })
+        })
+        .collect();
+    for w in workers {
+        w.join().unwrap();
+    }
+
+    let stats = server.stats();
+    assert_eq!(stats.failed, 4, "2 clients x 2 poisoned requests each");
+    assert_eq!(stats.completed, 12);
+    // ...and the pool is still alive for the next good request.
+    server.client().query("g", &AnalysisRequest::IdleTime).unwrap();
+    server.shutdown();
+}
+
+/// A small cache under many distinct requests evicts least-recently-used
+/// entries; the freshest result stays hot.
+#[test]
+fn small_cache_evicts_under_request_pressure() {
+    let mut session = AnalysisSession::new().with_threads(1).with_cache_capacity(2);
+    session.generate("g", "laghos", &GenConfig::new(6, 3), 1).unwrap();
+    let server = AnalysisServer::start(session, 2);
+    let client = server.client();
+
+    let reqs: Vec<_> = (0..6).map(|i| AnalysisRequest::CommOverTime { bins: 8 + i }).collect();
+    for r in &reqs {
+        client.query("g", r).unwrap();
+    }
+    let stats = server.stats();
+    assert!(stats.cache.evictions >= 4, "evictions = {}", stats.cache.evictions);
+    assert_eq!(stats.cache.entries, 2);
+
+    // The most recent request is still cached...
+    let last = client.query("g", &reqs[5]).unwrap();
+    let again = client.query("g", &reqs[5]).unwrap();
+    assert!(Arc::ptr_eq(&last, &again));
+    // ...while the oldest was evicted: it recomputes (a fresh Arc) and
+    // the recomputed value is immediately hot again.
+    let misses_before = server.stats().cache.misses;
+    let recomputed = client.query("g", &reqs[0]).unwrap();
+    assert_eq!(server.stats().cache.misses, misses_before + 1);
+    assert!(Arc::ptr_eq(&recomputed, &client.query("g", &reqs[0]).unwrap()));
+    server.shutdown();
+}
