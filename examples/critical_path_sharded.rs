@@ -5,12 +5,15 @@
 //! historically a sequential single-trace walk. MPI's non-overtaking
 //! guarantee makes every (src, dst, tag) channel independently
 //! matchable, so matching now shards by channel across the worker pool
-//! (`exec::ops::match_messages_sharded`), and the same analyses run over
-//! a `ShardedReader` stream without ever materializing the trace:
-//! shards contribute per-process runs and channel queues, matching pairs
-//! at end of stream, and the backward walk runs over
-//! O(processes + messages) state. Results are bit-identical to the
-//! sequential engine on every path (`tests/parity.rs`).
+//! (`exec::ops::match_messages_sharded`), the backward walk itself runs
+//! speculatively in parallel (per-process sub-paths stitched at matched
+//! message edges), and the same analyses run over a `ShardedReader`
+//! stream without ever materializing the trace: shards contribute
+//! per-process runs and channel queues, channels pair-and-drain as the
+//! census completes them — feeding the walk's speculation *during*
+//! ingest — and the backward walk runs over O(processes + messages)
+//! state. Results are bit-identical to the sequential engine on every
+//! path (`tests/parity.rs`).
 //!
 //! ```sh
 //! cargo run --release --example critical_path_sharded
@@ -65,6 +68,11 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nstreamed critical path over {} shards ({} rows total, {} peak resident)",
         stats.shards, stats.total_rows, stats.max_shard_rows
+    );
+    println!(
+        "walk overlap: {} of {} message pairs matched during ingest",
+        stats.walk_pairs_early,
+        stats.walk_pairs_early + stats.walk_pairs_final
     );
     assert!(!stats.fallback, "otf2 streams one rank file per shard");
 

@@ -30,17 +30,31 @@ const ROUTED: &[&str] = &[
 
 /// The analyses routed through the channel-sharded message matcher,
 /// benched and JSON-reported like ROUTED but exempt from the *speedup*
-/// gate: their dependency walks (critical-path backtrack, lateness
-/// causal chain) bound the parallel fraction, so small inputs can dip
-/// below 1.0x without indicating a regression. A missing sample still
-/// fails the gate — coverage may not silently narrow. Each entry names
-/// the trace its pair runs on.
+/// gate: their dependency walks (lateness causal chain) bound the
+/// parallel fraction, so small inputs can dip below 1.0x without
+/// indicating a regression. A missing sample still fails the gate —
+/// coverage may not silently narrow. Each entry names the trace its
+/// pair runs on. (`critical_path` graduated out of this list: its
+/// backward walk is now speculative-parallel, so it gates under
+/// `critical_path_speculative` in [`SPEED_PASS`].)
 const ROUTED_UNGATED: &[(&str, &str)] = &[
     ("match_messages", "laghos8"),
-    ("critical_path", "laghos8"),
     ("lateness", "laghos8"),
     ("comm_comp_breakdown", "laghos8"),
     ("pattern_detection", "tortuga64"),
+];
+
+/// Hot-kernel speed-pass rows, both gated. `critical_path_speculative`
+/// runs the full op end-to-end at 1 vs 4 threads — the speculative
+/// per-process walk + channel-sharded matching must never lose to the
+/// sequential engine (it used to be ungated precisely because the walk
+/// was serial). `stream_time_profile_soa` pits the SoA series-binning
+/// fold against the retired nested-Vec reference on identical prepared
+/// segments — the data-layout change must never lose to the layout it
+/// replaced.
+const SPEED_PASS: &[(&str, &str)] = &[
+    ("critical_path_speculative", "laghos8"),
+    ("stream_time_profile_soa", "laghos8"),
 ];
 
 /// Streamed-ingest throughput rows: for each format, `seq1` is the
@@ -236,8 +250,9 @@ fn main() -> anyhow::Result<()> {
     });
 
     // ---- channel-sharded message matching and its analyses ----------------
-    // Matching shards by (src, dst, tag) channel; the dependency walks
-    // stay serial, so these report speedups but only gate on presence.
+    // Matching shards by (src, dst, tag) channel; the remaining serial
+    // dependency walks (lateness) report speedups but only gate on
+    // presence. critical_path moved to the gated speed-pass section.
     eprintln!(
         "\n=== channel-sharded matching: 1 vs 4 worker threads (laghos-8p / tortuga-64p) ==="
     );
@@ -246,12 +261,6 @@ fn main() -> anyhow::Result<()> {
     });
     b.run("match_messages/sharded4/laghos8", || {
         exec::ops::match_messages_sharded(&laghos8, 4).unwrap()
-    });
-    b.run("critical_path/seq1/laghos8", || {
-        exec::ops::critical_path(&laghos8, 1).unwrap()
-    });
-    b.run("critical_path/sharded4/laghos8", || {
-        exec::ops::critical_path(&laghos8, 4).unwrap()
     });
     b.run("lateness/seq1/laghos8", || {
         exec::ops::lateness(&laghos8, 1).unwrap()
@@ -273,6 +282,26 @@ fn main() -> anyhow::Result<()> {
         exec::ops::detect_pattern(&base, Some("time-loop"), &PatternConfig::default(), 4)
             .unwrap()
     });
+
+    // ---- hot-kernel speed pass: speculative walk + SoA binning fold --------
+    // critical_path end-to-end: at 4 threads both the channel-sharded
+    // matching and the (formerly serial) backward walk run in parallel —
+    // per-process speculative sub-paths stitched at message edges.
+    // stream_time_profile_soa isolates the series-binning fold kernel on
+    // prepared segments, SoA flat scratch vs the nested-Vec reference.
+    eprintln!("\n=== speed pass: speculative critical path + SoA binning (laghos-8p) ===");
+    b.run("critical_path_speculative/seq1/laghos8", || {
+        exec::ops::critical_path(&laghos8, 1).unwrap()
+    });
+    b.run("critical_path_speculative/sharded4/laghos8", || {
+        exec::ops::critical_path(&laghos8, 4).unwrap()
+    });
+    let bin_bench = {
+        let mut t = laghos8.clone();
+        analysis::time_profile::BinBench::prepare(&mut t, 128, Some(15)).unwrap()
+    };
+    b.run("stream_time_profile_soa/seq1/laghos8", || bin_bench.run_ref());
+    b.run("stream_time_profile_soa/sharded4/laghos8", || bin_bench.run_soa());
 
     // ---- streamed ingest throughput: eager vs serial-decode vs pipelined ---
     // Decode-bound archives used to ingest slower streamed than eager
@@ -391,6 +420,8 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .map(|&op| (op, "laghos8", Some(GATE_MIN_SPEEDUP)))
         .chain(ROUTED_UNGATED.iter().map(|&(op, ds)| (op, ds, None)))
+        // the speed-pass kernels gate against the paths they replaced
+        .chain(SPEED_PASS.iter().map(|&(op, ds)| (op, ds, Some(GATE_MIN_SPEEDUP))))
         // pipelined decode is gated against its serial-decode baseline
         .chain(STREAM_INGEST.iter().map(|&(op, ds)| (op, ds, Some(GATE_MIN_SPEEDUP))))
         // census paths are gated against their census-less baseline
@@ -415,11 +446,26 @@ fn main() -> anyhow::Result<()> {
                 .map(|x| x.median())
                 .unwrap_or(f64::NAN)
         };
+        let pct = |name: &str, p: f64| {
+            b.samples
+                .iter()
+                .find(|x| x.name == name)
+                .map(|x| x.percentile(p))
+                .unwrap_or(f64::NAN)
+        };
         let mut fields = vec![
             ("op", jstr(op)),
             ("dataset", jstr(ds)),
             ("seq_median_ns", num(median(&seq_name))),
             ("sharded4_median_ns", num(median(&sh_name))),
+            // tail-latency percentiles (nearest-rank) alongside the
+            // gate's medians: one slow iteration is visible here first
+            ("seq_p50_ns", num(pct(&seq_name, 50.0))),
+            ("seq_p95_ns", num(pct(&seq_name, 95.0))),
+            ("seq_p99_ns", num(pct(&seq_name, 99.0))),
+            ("sharded4_p50_ns", num(pct(&sh_name, 50.0))),
+            ("sharded4_p95_ns", num(pct(&sh_name, 95.0))),
+            ("sharded4_p99_ns", num(pct(&sh_name, 99.0))),
             ("speedup", num(s)),
             ("gated", num(if gate_min.is_some() { 1.0 } else { 0.0 })),
         ];
@@ -475,9 +521,11 @@ fn main() -> anyhow::Result<()> {
              (pipelined stream below {GATE_MIN_SPEEDUP}x of serial-decode stream \
              for the stream_ingest rows; census path below {GATE_MIN_SPEEDUP}x of \
              the census-less stream for the stream_* census rows; archive reopen \
-             below {GATE_MIN_SPEEDUP}x of the census-backed source stream; cached \
-             repeat below {SERVE_CACHED_MIN_SPEEDUP}x of the cold query for \
-             serve_cached), or unsampled, for: {}",
+             below {GATE_MIN_SPEEDUP}x of the census-backed source stream; the \
+             speculative walk / SoA fold below {GATE_MIN_SPEEDUP}x of the path it \
+             replaced for the speed-pass rows; cached repeat below \
+             {SERVE_CACHED_MIN_SPEEDUP}x of the cold query for serve_cached), or \
+             unsampled, for: {}",
             regressions.join(", ")
         );
         std::process::exit(1);

@@ -12,13 +12,21 @@
 //! rows — returned as a filtered events table so it can be displayed or
 //! fed to the timeline view exactly like the paper's dataframe.
 //!
-//! The walk itself is a dependency chase and inherently sequential, but
-//! everything feeding it parallelizes: canonical order makes every
-//! process one contiguous row run ([`ProcRuns`]), and message matching
-//! shards by channel. The sequential, sharded
+//! The walk itself is a dependency chase, but it decomposes into a
+//! speculative parallel phase and a cheap serial stitch: between two
+//! cross-process receives the backward walk is a pure row decrement, so
+//! each process's sub-path is fully determined by its **exit rows** —
+//! the receives whose matched send lives on another process.
+//! [`ExitTables`] computes those per-process tables in parallel on the
+//! worker pool (or incrementally, as channels drain, on the streamed
+//! path), and [`paths_from_runs_speculative`] stitches whole run
+//! segments between exits — bit-identical to the row-at-a-time
+//! [`paths_from_runs`], including the defensive 10M-row cap. The
+//! sequential engine keeps the reference walk; the sharded
 //! ([`crate::exec::ops::critical_path`]) and streamed
-//! ([`crate::exec::stream::critical_path`]) drivers all funnel into
-//! [`paths_from_runs`], so their outputs are identical by construction.
+//! ([`crate::exec::stream::critical_path`]) drivers stitch from exit
+//! tables, and `tests/parity.rs` plus the edge-case suite below pin the
+//! equivalence at 1/2/4/8 threads.
 
 use super::messages::match_messages;
 use crate::df::Table;
@@ -128,6 +136,132 @@ pub fn paths_from_runs(runs: &ProcRuns, send_of_recv: &[i64]) -> Vec<CriticalPat
         paths.push(walk_back(end, runs, send_of_recv));
     }
     paths
+}
+
+/// Per-process speculative sub-paths, stored as exit tables: for each
+/// run, the ascending rows whose matched send lives on a *different*
+/// process. Between two exits the backward walk is a pure row decrement,
+/// so these tables fully determine every process's sub-path — computing
+/// them is the parallel (and, on the streamed path, overlappable with
+/// ingest) part of the walk, and [`ExitTables::stitch`] replays
+/// [`paths_from_runs`] bit-identically from them.
+#[derive(Debug, Clone, Default)]
+pub struct ExitTables {
+    /// Ascending exit rows per run index (same order as [`ProcRuns`]).
+    exits: Vec<Vec<u32>>,
+}
+
+impl ExitTables {
+    /// Scan a complete match in parallel: each run's row range is
+    /// checked against `send_of_recv` on the worker pool, yielding its
+    /// exit rows already ascending (no post-sort needed).
+    pub fn scan(runs: &ProcRuns, send_of_recv: &[i64], threads: usize) -> Self {
+        let n = runs.ranges.len();
+        let exits = crate::exec::pool::run_indexed(n, threads, |r| {
+            let (start, end) = runs.ranges[r];
+            let mut ex = Vec::new();
+            for row in start..end {
+                let jump = send_of_recv[row];
+                if jump >= 0 && runs.procs[runs.run_of(jump as usize)] != runs.procs[r] {
+                    ex.push(row as u32);
+                }
+            }
+            Ok(ex)
+        })
+        .expect("exit scan is infallible");
+        ExitTables { exits }
+    }
+
+    /// Fold matched (send row, recv row) pairs incrementally — the
+    /// streamed driver calls this as channels drain mid-ingest. A row's
+    /// run index and process are final as soon as the row has streamed
+    /// ([`ProcRuns`] only ever extends *behind* an ingested row), so
+    /// pairs fold long before end of stream. Call [`ExitTables::seal`]
+    /// once before stitching to restore ascending order.
+    pub fn fold_pairs(&mut self, runs: &ProcRuns, pairs: &[(u32, u32)]) {
+        if self.exits.len() < runs.ranges.len() {
+            self.exits.resize(runs.ranges.len(), Vec::new());
+        }
+        for &(s, r) in pairs {
+            let rrun = runs.run_of(r as usize);
+            if runs.procs[runs.run_of(s as usize)] != runs.procs[rrun] {
+                self.exits[rrun].push(r);
+            }
+        }
+    }
+
+    /// Sort each run's exit list ascending (pairs drain in channel
+    /// completion order, not row order). Idempotent, and unnecessary
+    /// after [`ExitTables::scan`], whose output is already ascending.
+    pub fn seal(&mut self) {
+        for ex in &mut self.exits {
+            ex.sort_unstable();
+        }
+    }
+
+    /// Stitch the critical path(s) from the tables — bit-identical to
+    /// [`paths_from_runs`] over the same match.
+    pub fn stitch(&self, runs: &ProcRuns, send_of_recv: &[i64]) -> Vec<CriticalPath> {
+        let mut ends: Vec<(u32, i64)> = runs
+            .ranges
+            .iter()
+            .zip(&runs.last_ts)
+            .map(|(&(_, end), &t)| ((end - 1) as u32, t))
+            .collect();
+        ends.sort_by_key(|&(_, t)| std::cmp::Reverse(t));
+        let mut paths = Vec::new();
+        for &(end, _) in ends.iter().take(1) {
+            paths.push(self.stitch_back(end, runs, send_of_recv));
+        }
+        paths
+    }
+
+    /// Replay [`walk_back`] segment-at-a-time: emit the contiguous rows
+    /// from `cur` down to the nearest exit at or below it, jump to that
+    /// exit's sender, repeat — same rows, same order, same 10M-row cap.
+    fn stitch_back(&self, end: u32, runs: &ProcRuns, send_of_recv: &[i64]) -> CriticalPath {
+        const GUARD: usize = 10_000_000;
+        let empty: Vec<u32> = Vec::new();
+        let mut path = Vec::new();
+        let mut cur = end as usize;
+        let mut run = runs.run_of(cur);
+        loop {
+            let ex = self.exits.get(run).unwrap_or(&empty);
+            let k = ex.partition_point(|&j| (j as usize) <= cur);
+            let stop = if k > 0 { ex[k - 1] as usize } else { runs.ranges[run].0 };
+            let seg = cur - stop + 1;
+            let room = GUARD - path.len();
+            if seg >= room {
+                // defensive cap: the row-at-a-time walk emits exactly
+                // GUARD rows before bailing, so truncate identically
+                path.extend((0..room).map(|i| (cur - i) as u32));
+                break;
+            }
+            path.extend((0..seg).map(|i| (cur - i) as u32));
+            if k == 0 {
+                break;
+            }
+            cur = send_of_recv[stop] as usize;
+            run = runs.run_of(cur);
+        }
+        path.reverse();
+        CriticalPath { rows: path }
+    }
+}
+
+/// The speculative parallel walk: compute [`ExitTables`] on the worker
+/// pool, then stitch. Bit-identical to [`paths_from_runs`] at every
+/// thread count; `threads <= 1` (or a single run) short-circuits to the
+/// sequential reference walk.
+pub fn paths_from_runs_speculative(
+    runs: &ProcRuns,
+    send_of_recv: &[i64],
+    threads: usize,
+) -> Vec<CriticalPath> {
+    if crate::exec::effective_threads(threads) <= 1 || runs.ranges.len() <= 1 {
+        return paths_from_runs(runs, send_of_recv);
+    }
+    ExitTables::scan(runs, send_of_recv, threads).stitch(runs, send_of_recv)
 }
 
 fn walk_back(end: u32, runs: &ProcRuns, send_of_recv: &[i64]) -> CriticalPath {
@@ -263,6 +397,115 @@ mod tests {
         let mut t = b.finish();
         let paths = critical_path_analysis(&mut t).unwrap();
         assert_eq!(paths[0].rows, vec![0, 1, 2, 3]);
+    }
+
+    /// Assert the speculative walk (both constructions: the parallel
+    /// scan and the incremental streamed-shape pair fold) is
+    /// bit-identical to the sequential reference at 1/2/4/8 threads.
+    fn assert_speculative_matches_serial(t: &Trace, ctx: &str) {
+        let msgs = match_messages(t).unwrap();
+        let runs = proc_runs(t.processes().unwrap(), t.timestamps().unwrap());
+        let serial = paths_from_runs(&runs, &msgs.send_of_recv);
+        for threads in [1usize, 2, 4, 8] {
+            let spec = paths_from_runs_speculative(&runs, &msgs.send_of_recv, threads);
+            assert_eq!(serial, spec, "{ctx}: speculative walk diverged at {threads} threads");
+        }
+        // the streamed construction: matched pairs fold in arbitrary
+        // (channel-drain) order and in chunks, then seal + stitch
+        let mut pairs: Vec<(u32, u32)> = msgs
+            .send_of_recv
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| s >= 0)
+            .map(|(r, &s)| (s as u32, r as u32))
+            .collect();
+        pairs.reverse();
+        let mut tables = ExitTables::default();
+        for chunk in pairs.chunks(3) {
+            tables.fold_pairs(&runs, chunk);
+        }
+        tables.seal();
+        let folded = tables.stitch(&runs, &msgs.send_of_recv);
+        assert_eq!(serial, folded, "{ctx}: incrementally folded exit tables diverged");
+    }
+
+    #[test]
+    fn speculative_walk_single_process_trace() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.enter(0, 0, 10, "f");
+        b.leave(0, 0, 20, "f");
+        b.leave(0, 0, 30, "main");
+        let t = b.finish();
+        assert_speculative_matches_serial(&t, "single-process");
+    }
+
+    #[test]
+    fn speculative_walk_zero_message_trace() {
+        let mut b = TraceBuilder::new();
+        for p in 0..3 {
+            b.enter(p, 0, 0, "main");
+            b.enter(p, 0, 10, "work");
+            b.leave(p, 0, 20 + p, "work");
+            b.leave(p, 0, 40 + p, "main");
+        }
+        let t = b.finish();
+        assert_speculative_matches_serial(&t, "zero-message");
+    }
+
+    #[test]
+    fn speculative_walk_unmatched_send_tails() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.send(0, 0, 10, 1, 64, 0); // matched below
+        b.send(0, 0, 80, 1, 64, 1); // tail send, never received
+        b.leave(0, 0, 90, "main");
+        b.enter(1, 0, 0, "main");
+        b.recv(1, 0, 30, 0, 64, 0);
+        b.send(1, 0, 85, 0, 64, 2); // tail send the other way, unreceived
+        b.leave(1, 0, 95, "main");
+        let t = b.finish();
+        assert_speculative_matches_serial(&t, "unmatched-send tails");
+    }
+
+    #[test]
+    fn speculative_walk_duplicate_timestamp_storm() {
+        // many same-(timestamp, channel) messages: pairing resolves on
+        // the unique (ts, row) key and the walk must follow it exactly
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        for _ in 0..6 {
+            b.send(0, 0, 10, 2, 8, 0);
+        }
+        b.leave(0, 0, 60, "main");
+        b.enter(1, 0, 0, "main");
+        for _ in 0..6 {
+            b.send(1, 0, 10, 2, 8, 0);
+        }
+        b.leave(1, 0, 50, "main");
+        b.enter(2, 0, 0, "main");
+        for _ in 0..6 {
+            b.recv(2, 0, 20, 0, 8, 0);
+        }
+        for _ in 0..6 {
+            b.recv(2, 0, 20, 1, 8, 0);
+        }
+        b.leave(2, 0, 70, "main");
+        let t = b.finish();
+        assert_speculative_matches_serial(&t, "duplicate-timestamp storm");
+    }
+
+    #[test]
+    fn speculative_walk_is_deterministic_over_rounds() {
+        let t = toy();
+        let msgs = match_messages(&t).unwrap();
+        let runs = proc_runs(t.processes().unwrap(), t.timestamps().unwrap());
+        let base = paths_from_runs_speculative(&runs, &msgs.send_of_recv, 4);
+        assert_eq!(base, paths_from_runs(&runs, &msgs.send_of_recv));
+        for round in 0..8 {
+            let again = paths_from_runs_speculative(&runs, &msgs.send_of_recv, 4);
+            assert_eq!(base, again, "stitched path diverged on round {round}");
+        }
     }
 
     #[test]

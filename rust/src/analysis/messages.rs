@@ -295,6 +295,12 @@ pub struct WindowedMatcher {
     keep_endpoints: bool,
     sends: Vec<(i64, u32)>,
     recvs: Vec<(i64, u32)>,
+    /// matched (send row, recv row) pairs drained since the last
+    /// [`WindowedMatcher::take_drained_pairs`] call — buffered only when
+    /// enabled, so residency stays bounded for callers that never
+    /// consume them.
+    collect_pairs: bool,
+    drained_pairs: Vec<(u32, u32)>,
 }
 
 impl WindowedMatcher {
@@ -306,6 +312,22 @@ impl WindowedMatcher {
         keep_endpoints: bool,
     ) -> Self {
         WindowedMatcher { expected, keep_endpoints, ..Default::default() }
+    }
+
+    /// Buffer matched pairs as channels drain so the caller can overlap
+    /// downstream work mid-ingest (the streamed critical-path walk
+    /// builds its exit tables from these while the stream is still
+    /// folding). Off by default: disabled, drained pairs are dropped.
+    pub fn collect_drained_pairs(&mut self, on: bool) {
+        self.collect_pairs = on;
+    }
+
+    /// Take the pairs drained since the last call. Empty unless
+    /// [`WindowedMatcher::collect_drained_pairs`] enabled buffering;
+    /// take them before [`WindowedMatcher::finish_with_pairs`], which
+    /// resets the buffer to report only its own final drains.
+    pub fn take_drained_pairs(&mut self) -> Vec<(u32, u32)> {
+        std::mem::take(&mut self.drained_pairs)
     }
 
     /// Fold one shard's channel queues (rows already shifted to their
@@ -352,9 +374,12 @@ impl WindowedMatcher {
     /// Pair one complete channel and retire its queue into the outputs.
     fn drain(&mut self, mut q: ChannelQueue) {
         let pairs = pair_channel(&mut q);
-        for (s, r) in pairs {
+        for &(s, r) in &pairs {
             self.send_of_recv[r as usize] = s as i64;
             self.recv_of_send[s as usize] = r as i64;
+        }
+        if self.collect_pairs {
+            self.drained_pairs.extend(pairs);
         }
         if self.keep_endpoints {
             self.sends.extend(q.sends);
@@ -377,24 +402,38 @@ impl WindowedMatcher {
 
     /// End of stream: drain every still-open channel (in first-seen
     /// order) and assemble the match for `total_rows` rows.
-    pub fn finish(mut self, total_rows: usize) -> MessageMatch {
+    pub fn finish(self, total_rows: usize) -> MessageMatch {
+        self.finish_with_pairs(total_rows).0
+    }
+
+    /// [`WindowedMatcher::finish`], additionally returning the matched
+    /// pairs drained *by this call* — the channels that never completed
+    /// mid-stream. Together with the pairs taken during ingest this is
+    /// the complete pair set, which is how the streamed critical-path
+    /// walk finishes its exit tables without rescanning the match.
+    pub fn finish_with_pairs(mut self, total_rows: usize) -> (MessageMatch, Vec<(u32, u32)>) {
         self.send_of_recv.resize(total_rows, -1);
         self.recv_of_send.resize(total_rows, -1);
+        self.collect_pairs = true;
+        self.drained_pairs = Vec::new();
         let open = std::mem::take(&mut self.open);
         for q in open.into_iter().flatten() {
             self.drain(q);
         }
-        let WindowedMatcher { send_of_recv, recv_of_send, mut sends, mut recvs, .. } = self;
+        let WindowedMatcher {
+            send_of_recv, recv_of_send, mut sends, mut recvs, drained_pairs, ..
+        } = self;
         // (ts, row) keys are unique: the unstable sort reproduces the
         // sequential global time order exactly (see `assemble_match`)
         sends.sort_unstable();
         recvs.sort_unstable();
-        MessageMatch {
+        let m = MessageMatch {
             send_of_recv,
             recv_of_send,
             sends: sends.into_iter().map(|(_, r)| r).collect(),
             recvs: recvs.into_iter().map(|(_, r)| r).collect(),
-        }
+        };
+        (m, drained_pairs)
     }
 }
 
@@ -554,6 +593,63 @@ mod tests {
         }
         let win = m.finish(t.len());
         assert_eq!(win, seq, "windowed pairing must equal sequential");
+    }
+
+    /// Channels that reach their census totals mid-stream must surface
+    /// their matched pairs through the drain hook before end of stream,
+    /// and `finish_with_pairs` must deliver exactly the stragglers — the
+    /// union is the full sequential pair set.
+    #[test]
+    fn windowed_matcher_exposes_drained_pairs() {
+        let mut b = TraceBuilder::new();
+        b.enter(0, 0, 0, "main");
+        b.send(0, 0, 10, 1, 100, 0);
+        b.send(0, 0, 20, 1, 200, 0);
+        b.leave(0, 0, 90, "main");
+        b.enter(1, 0, 0, "main");
+        b.recv(1, 0, 30, 0, 100, 0);
+        b.recv(1, 0, 40, 0, 200, 0);
+        b.send(1, 0, 50, 2, 300, 7);
+        b.leave(1, 0, 90, "main");
+        b.enter(2, 0, 0, "main");
+        b.recv(2, 0, 60, 1, 300, 7);
+        b.leave(2, 0, 90, "main");
+        let t = b.finish();
+        let seq = match_messages(&t).unwrap();
+
+        let mut expected = std::collections::HashMap::new();
+        expected.insert((0i64, 1i64, 0i64), (2u64, 2u64));
+        // channel (1, 2, 7) is deliberately missing from the census: it
+        // stays open until finish and must arrive via the final pairs
+        let pr = t.processes().unwrap().to_vec();
+        let mut m = WindowedMatcher::new(expected, false);
+        m.collect_drained_pairs(true);
+        let mut early: Vec<(u32, u32)> = Vec::new();
+        let mut start = 0usize;
+        for p in 0..3i64 {
+            let end = start + pr.iter().filter(|&&x| x == p).count();
+            let mut q = ChannelQueues::new();
+            q.collect(&t, (start, end), 0).unwrap();
+            m.fold(q, end).unwrap();
+            early.extend(m.take_drained_pairs());
+            start = end;
+        }
+        assert!(!early.is_empty(), "complete channels must surface pairs mid-stream");
+        let (win, late) = m.finish_with_pairs(t.len());
+        assert!(!late.is_empty(), "uncensused channel must drain at finish");
+        assert_eq!(win.send_of_recv, seq.send_of_recv);
+        assert_eq!(win.recv_of_send, seq.recv_of_send);
+        let mut all: Vec<(u32, u32)> = early.into_iter().chain(late).collect();
+        all.sort_unstable();
+        let mut want: Vec<(u32, u32)> = seq
+            .send_of_recv
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| s >= 0)
+            .map(|(r, &s)| (s as u32, r as u32))
+            .collect();
+        want.sort_unstable();
+        assert_eq!(all, want, "early + final pairs must be the whole match");
     }
 
     /// A census that undercounts a channel must degrade to end-of-stream

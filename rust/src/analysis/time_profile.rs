@@ -284,6 +284,49 @@ pub(crate) fn bin_segments_series(
     num_bins: usize,
     bins: (usize, usize),
 ) -> Vec<Vec<f64>> {
+    // SoA scratch: one flat row-major allocation (series × bin window)
+    // instead of a Vec-of-Vecs — no per-series pointer chase on the hot
+    // accumulate, and the whole scratch is cache-resident for top-k
+    // rankings. The window clamp below repeats `seg_bin_overlaps`'s
+    // float expressions exactly (the shared binning arithmetic — keep
+    // them in lockstep) but runs branchless: integer min/max compile to
+    // cmov, and zero-overlap edge bins accumulate `ov.max(0.0)` instead
+    // of branching — bit-preserving, because cells start at +0.0 and
+    // only ever add non-negative values (x + 0.0 == x, x + -0.0 == x).
+    let w = bins.1 - bins.0;
+    if w == 0 {
+        return vec![Vec::new(); spec.func_names.len()];
+    }
+    let mut flat = vec![0.0f64; w * spec.func_names.len()];
+    for s in segs {
+        let Some(series) = series_of_code(spec, s.name_code) else { continue };
+        let row = &mut flat[series * w..(series + 1) * w];
+        let lo_bin = ((((s.start - t0) as f64) / width).floor() as usize).max(bins.0);
+        let hi_bin = (((((s.end - t0) as f64) / width).ceil() as usize).min(num_bins)).min(bins.1);
+        let (start, end) = (s.start as f64, s.end as f64);
+        for b in lo_bin..hi_bin {
+            let bin_lo = t0 as f64 + b as f64 * width;
+            let bin_hi = bin_lo + width;
+            let ov = end.min(bin_hi) - start.max(bin_lo);
+            row[b - bins.0] += ov.max(0.0);
+        }
+    }
+    flat.chunks(w).map(|c| c.to_vec()).collect()
+}
+
+/// The nested-Vec, branchy reference implementation of
+/// [`bin_segments_series`] — kept as the baseline the
+/// `stream_time_profile_soa` gate row measures the SoA kernel against
+/// (via [`BinBench`]), and as the executable spec the SoA kernel must
+/// stay bit-identical to.
+pub(crate) fn bin_segments_series_ref(
+    segs: &[Segment],
+    spec: &SeriesSpec,
+    t0: i64,
+    width: f64,
+    num_bins: usize,
+    bins: (usize, usize),
+) -> Vec<Vec<f64>> {
     let mut rows = vec![vec![0.0f64; bins.1 - bins.0]; spec.func_names.len()];
     for s in segs {
         let Some(series) = series_of_code(spec, s.name_code) else { continue };
@@ -292,6 +335,61 @@ pub(crate) fn bin_segments_series(
         });
     }
     rows
+}
+
+/// Bench-only harness for the series-binning kernels: `prepare` does the
+/// segment extraction and ranking once, so `run_soa` / `run_ref` time
+/// exactly the fold the streamed and sharded drivers run per shard.
+#[doc(hidden)]
+pub struct BinBench {
+    segs: Vec<Segment>,
+    spec: SeriesSpec,
+    t0: i64,
+    width: f64,
+    num_bins: usize,
+}
+
+impl BinBench {
+    pub fn prepare(trace: &mut Trace, num_bins: usize, top_funcs: Option<usize>) -> Result<Self> {
+        if num_bins == 0 {
+            bail!("num_bins must be > 0");
+        }
+        let (t0, t1) = trace.time_range()?;
+        let segs = exclusive_segments(trace)?;
+        let c = census(&segs);
+        let (_, ndict) = trace.events.strs(COL_NAME)?;
+        let spec =
+            rank_census(&c, |code| ndict.resolve(code).unwrap_or("").to_string(), top_funcs);
+        let span = (t1 - t0).max(1) as f64;
+        let width = span / num_bins as f64;
+        Ok(BinBench { segs, spec, t0, width, num_bins })
+    }
+
+    /// One SoA fold over all prepared segments; returns the binned total.
+    pub fn run_soa(&self) -> f64 {
+        let rows = bin_segments_series(
+            &self.segs,
+            &self.spec,
+            self.t0,
+            self.width,
+            self.num_bins,
+            (0, self.num_bins),
+        );
+        rows.iter().flatten().sum()
+    }
+
+    /// One reference fold; must produce bit-identical rows to `run_soa`.
+    pub fn run_ref(&self) -> f64 {
+        let rows = bin_segments_series_ref(
+            &self.segs,
+            &self.spec,
+            self.t0,
+            self.width,
+            self.num_bins,
+            (0, self.num_bins),
+        );
+        rows.iter().flatten().sum()
+    }
 }
 
 /// Transpose series-major accumulation rows into the `values[bin][func]`
@@ -392,6 +490,63 @@ mod tests {
         assert_eq!(tp.func_names[0], "big");
         assert!(tp.func_names.contains(&"other".to_string()));
         assert!((tp.total() - 100.0).abs() < 1e-9);
+    }
+
+    /// Jagged multi-proc trace: deep nesting, duplicate timestamps,
+    /// zero-width calls, an unmatched enter — everything that stresses
+    /// the bin-window clamp.
+    fn jagged() -> Trace {
+        let mut b = TraceBuilder::new();
+        for p in 0..3i64 {
+            b.enter(p, 0, p, "main");
+            b.enter(p, 0, 7 + p * 3, "solve");
+            b.enter(p, 0, 7 + p * 3, "leaf"); // same ts as parent enter
+            b.leave(p, 0, 7 + p * 3, "leaf"); // zero-width call
+            b.leave(p, 0, 41 + p, "solve");
+            b.enter(p, 0, 41 + p, "io");
+            b.leave(p, 0, 97, "io");
+            b.leave(p, 0, 100 + p, "main");
+        }
+        b.enter(0, 1, 13, "orphan"); // unmatched enter on its own thread
+        b.finish()
+    }
+
+    #[test]
+    fn soa_binning_matches_reference_bitwise() {
+        let mut t = jagged();
+        let (t0, t1) = t.time_range().unwrap();
+        let segs = exclusive_segments(&mut t).unwrap();
+        let c = census(&segs);
+        let (_, ndict) = t.events.strs(COL_NAME).unwrap();
+        for top in [None, Some(1), Some(2)] {
+            let spec =
+                rank_census(&c, |code| ndict.resolve(code).unwrap_or("").to_string(), top);
+            for num_bins in [1usize, 7, 64] {
+                let width = (t1 - t0).max(1) as f64 / num_bins as f64;
+                let full = bin_segments_series(&segs, &spec, t0, width, num_bins, (0, num_bins));
+                let rf = bin_segments_series_ref(&segs, &spec, t0, width, num_bins, (0, num_bins));
+                // f64 == is bitwise here: no NaNs, and the SoA kernel must
+                // not even flip a zero sign vs the branchy reference.
+                assert_eq!(full, rf, "top={top:?} num_bins={num_bins}");
+                // Split bin windows (the sharded axis) must agree too,
+                // including the empty left window when num_bins == 1.
+                let mid = num_bins / 2;
+                for bins in [(0, mid), (mid, num_bins)] {
+                    let a = bin_segments_series(&segs, &spec, t0, width, num_bins, bins);
+                    let r = bin_segments_series_ref(&segs, &spec, t0, width, num_bins, bins);
+                    assert_eq!(a, r, "top={top:?} num_bins={num_bins} bins={bins:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bin_bench_kernels_agree() {
+        let mut t = jagged();
+        let bench = BinBench::prepare(&mut t, 16, Some(2)).unwrap();
+        assert_eq!(bench.run_soa().to_bits(), bench.run_ref().to_bits());
+        assert!(bench.run_soa() > 0.0);
+        assert!(BinBench::prepare(&mut jagged(), 0, None).is_err());
     }
 
     #[test]

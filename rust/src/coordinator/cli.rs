@@ -140,8 +140,16 @@ SCALING:
   pattern_detection, comm_comp_breakdown) are routed too: point-to-point
   matching shards by (src, dst, tag) channel — MPI's non-overtaking
   guarantee makes each channel independently matchable — so endpoint
-  collection and FIFO pairing run on the pool while the dependency walk
-  stays sequential. Results are bit-identical to the sequential engines.
+  collection and FIFO pairing run on the pool, and critical_path's
+  backward dependency walk runs speculatively in parallel: workers walk
+  per-process sub-paths optimistically and the driver stitches them at
+  matched message edges (streamed runs overlap the walk with matching
+  itself — see the walk-overlap pair counts in the ingest stats).
+  Results are bit-identical to the sequential engines. The hot fold
+  kernels (binned time profiles, the pre-scan census stack walk) use
+  flat structure-of-arrays scratch; setting POOL_AFFINITY=1 additionally
+  pins worker threads round-robin to CPUs (default off, a pure hint,
+  no-op where unsupported).
     --threads 0   use all available cores (default)
     --threads 1   force the sequential engines
     --threads N   use N worker threads

@@ -44,7 +44,9 @@
 //! Everywhere a thread count is accepted, `0` means "available
 //! parallelism" and `1` forces the legacy sequential path (kept intact).
 //! The default honors the `NUM_THREADS` environment variable, which CI
-//! uses to exercise both paths.
+//! uses to exercise both paths; an unparseable value warns once on
+//! stderr and falls back to available parallelism instead of silently
+//! doing so.
 //!
 //! # Streaming ingest
 //!
@@ -89,13 +91,41 @@ impl Default for ExecConfig {
     }
 }
 
+/// Parse a `NUM_THREADS` value: a plain non-negative integer, with
+/// surrounding whitespace tolerated. Signs, fractions, overflow and any
+/// other garbage are `None` — the caller decides what a bad value means
+/// instead of a silent fallback.
+pub(crate) fn parse_threads(v: &str) -> Option<usize> {
+    let digits = v.trim();
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None; // rejects "", "-1", "+4", "2.5", "four", ...
+    }
+    digits.parse::<usize>().ok() // all-digits can still overflow usize
+}
+
 /// The default `num_threads`: the `NUM_THREADS` environment variable if
-/// set and parseable, else 0 (= available parallelism).
+/// set and parseable, else 0 (= available parallelism). An unparseable
+/// value used to fall back silently via `.ok()` — a typo'd `NUM_THREADS=8x`
+/// quietly became "all cores"; now it warns once on stderr and then falls
+/// back, the same contract as `STREAM_INFLIGHT_BYTES` and `POOL_AFFINITY`
+/// in [`pool`].
 pub fn default_threads() -> usize {
-    std::env::var("NUM_THREADS")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .unwrap_or(0)
+    match std::env::var("NUM_THREADS") {
+        Ok(v) => match parse_threads(&v) {
+            Some(n) => n,
+            None => {
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "[pipit] ignoring unparseable NUM_THREADS={v:?} \
+                         (expected a non-negative integer); using available parallelism"
+                    );
+                });
+                0
+            }
+        },
+        Err(_) => 0,
+    }
 }
 
 /// Resolve a `threads` parameter: 0 = available parallelism.
@@ -122,5 +152,30 @@ mod tests {
         // NUM_THREADS is not guaranteed unset in CI; just check coherence.
         let cfg = ExecConfig::default();
         assert_eq!(cfg.num_threads, default_threads());
+    }
+
+    #[test]
+    fn parse_threads_accepts_counts_and_rejects_garbage() {
+        assert_eq!(parse_threads("0"), Some(0));
+        assert_eq!(parse_threads("8"), Some(8));
+        assert_eq!(parse_threads(" 16 "), Some(16));
+        for bad in ["", "  ", "-1", "+4", "2.5", "8x", "four", "0x8"] {
+            assert_eq!(parse_threads(bad), None, "{bad:?} must not parse");
+        }
+        // all-digits overflow is rejected, not wrapped or saturated
+        assert_eq!(parse_threads("99999999999999999999999999"), None);
+    }
+
+    #[test]
+    fn default_threads_agrees_with_parse_threads() {
+        // Checked against the real environment rather than mutating it
+        // (env writes are process-global and tests run concurrently):
+        // default_threads must resolve to exactly what parse_threads says
+        // about the live variable, falling back to 0 otherwise.
+        let expected = std::env::var("NUM_THREADS")
+            .ok()
+            .and_then(|v| parse_threads(&v))
+            .unwrap_or(0);
+        assert_eq!(default_threads(), expected);
     }
 }

@@ -396,9 +396,10 @@ pub(crate) fn finish_channel_queues(
 }
 
 /// Sharded critical-path analysis: per-shard canonical/nesting
-/// validation and channel-sharded matching feed the shared backward-walk
-/// core ([`critical_path::paths_from_runs`]); the walk itself is a
-/// dependency chase and stays sequential.
+/// validation and channel-sharded matching feed the speculative walk
+/// ([`critical_path::paths_from_runs_speculative`]) — per-process exit
+/// tables computed on the pool, then a cheap serial stitch, bit-identical
+/// to the sequential reference walk.
 pub fn critical_path(trace: &Trace, threads: usize) -> Result<Vec<CriticalPath>> {
     let Some(shards) = plan(trace, threads)? else {
         let mut t = trace.clone();
@@ -410,7 +411,7 @@ pub fn critical_path(trace: &Trace, threads: usize) -> Result<Vec<CriticalPath>>
     })?;
     let msgs = match_messages_sharded(trace, threads)?;
     let runs = critical_path::proc_runs(trace.processes()?, trace.timestamps()?);
-    Ok(critical_path::paths_from_runs(&runs, &msgs.send_of_recv))
+    Ok(critical_path::paths_from_runs_speculative(&runs, &msgs.send_of_recv, threads))
 }
 
 /// Sharded lateness: per-shard leaf-call extraction (stacks never cross

@@ -7,11 +7,77 @@
 //! index* among those that ran is returned, so error reporting is
 //! deterministic regardless of scheduling. The pool never hangs on
 //! failure: scoped threads always join.
+//!
+//! Opt-in worker affinity: `POOL_AFFINITY=1` pins each worker thread to
+//! CPU `worker_index % cpus` at spawn (Linux `sched_setaffinity`; a
+//! no-op on other platforms and on any failure). Off by default —
+//! pinning helps cache-resident fold kernels on otherwise-idle machines
+//! and hurts on shared ones, so it is a hint the operator turns on, and
+//! never a correctness knob: results are identical either way.
 
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
+
+/// Parse the `POOL_AFFINITY` switch: on/off spellings (case-insensitive,
+/// whitespace-tolerant; empty = off, matching an unset variable). Garbage
+/// is `None` so the caller can warn instead of silently guessing.
+pub(crate) fn parse_affinity(v: &str) -> Option<bool> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "1" | "on" | "true" | "yes" => Some(true),
+        "" | "0" | "off" | "false" | "no" => Some(false),
+        _ => None,
+    }
+}
+
+/// Is opt-in worker pinning on? Reads `POOL_AFFINITY`; an unparseable
+/// value warns once on stderr and stays off (the safe default), the same
+/// contract as `STREAM_INFLIGHT_BYTES` in [`CapCfg::from_env`].
+fn affinity_enabled() -> bool {
+    match std::env::var("POOL_AFFINITY") {
+        Ok(v) => match parse_affinity(&v) {
+            Some(b) => b,
+            None => {
+                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
+                WARN_ONCE.call_once(|| {
+                    eprintln!(
+                        "[pipit] ignoring unparseable POOL_AFFINITY={v:?} \
+                         (expected 1/0/on/off/true/false/yes/no); affinity stays off"
+                    );
+                });
+                false
+            }
+        },
+        Err(_) => false,
+    }
+}
+
+/// Pin the calling worker thread to CPU `worker % cpus` when
+/// `POOL_AFFINITY` is on. Purely a scheduling hint: failures (cpuset
+/// restrictions, >64-CPU boxes beyond the mask width) are ignored and
+/// non-Linux platforms are a no-op, so results never depend on it.
+fn pin_worker(worker: usize) {
+    if affinity_enabled() {
+        pin_worker_impl(worker);
+    }
+}
+
+#[cfg(target_os = "linux")]
+fn pin_worker_impl(worker: usize) {
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    let cpus = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    let cpu = worker % cpus.min(64);
+    let mask: u64 = 1u64 << cpu;
+    // pid 0 = the calling thread. SAFETY: the mask outlives the call and
+    // the size matches; the kernel copies it before returning.
+    unsafe { sched_setaffinity(0, std::mem::size_of::<u64>(), &mask) };
+}
+
+#[cfg(not(target_os = "linux"))]
+fn pin_worker_impl(_worker: usize) {}
 
 /// Raw pointer wrapper letting workers write disjoint result slots.
 struct SlotsPtr<T>(*mut Option<Result<T>>);
@@ -40,25 +106,28 @@ where
     let mut slots: Vec<Option<Result<T>>> = (0..n).map(|_| None).collect();
     let slots_ptr = SlotsPtr(slots.as_mut_ptr());
     std::thread::scope(|scope| {
-        for _ in 0..threads {
+        for w in 0..threads {
             let fref = &f;
             let nref = &next;
             let poison = &poisoned;
             let sp = &slots_ptr;
-            scope.spawn(move || loop {
-                if poison.load(Ordering::Relaxed) {
-                    break;
+            scope.spawn(move || {
+                pin_worker(w);
+                loop {
+                    if poison.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let i = nref.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let r = fref(i);
+                    if r.is_err() {
+                        poison.store(true, Ordering::Relaxed);
+                    }
+                    // SAFETY: index i is uniquely claimed (see SlotsPtr).
+                    unsafe { *sp.0.add(i) = Some(r) };
                 }
-                let i = nref.fetch_add(1, Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = fref(i);
-                if r.is_err() {
-                    poison.store(true, Ordering::Relaxed);
-                }
-                // SAFETY: index i is uniquely claimed (see SlotsPtr).
-                unsafe { *sp.0.add(i) = Some(r) };
             });
         }
     });
@@ -284,33 +353,36 @@ where
     let poisoned = AtomicBool::new(false);
 
     std::thread::scope(|scope| {
-        for _ in 0..workers {
+        for w in 0..workers {
             let task_rx = &task_rx;
             let done_tx = done_tx.clone();
             let work = &work;
             let poisoned = &poisoned;
-            scope.spawn(move || loop {
-                // Hold the lock only for the recv: FIFO channel + one
-                // claimant at a time means tasks are claimed in
-                // production order, so every cancelled task has a higher
-                // sequence than the poisoning failure.
-                let msg = match task_rx.lock() {
-                    Ok(rx) => rx.recv(),
-                    Err(_) => break,
-                };
-                let Ok((i, t)) = msg else { break };
-                let r = if poisoned.load(Ordering::Relaxed) {
-                    drop(t);
-                    None
-                } else {
-                    let r = work(t);
-                    if r.is_err() {
-                        poisoned.store(true, Ordering::Relaxed);
+            scope.spawn(move || {
+                pin_worker(w);
+                loop {
+                    // Hold the lock only for the recv: FIFO channel + one
+                    // claimant at a time means tasks are claimed in
+                    // production order, so every cancelled task has a
+                    // higher sequence than the poisoning failure.
+                    let msg = match task_rx.lock() {
+                        Ok(rx) => rx.recv(),
+                        Err(_) => break,
+                    };
+                    let Ok((i, t)) = msg else { break };
+                    let r = if poisoned.load(Ordering::Relaxed) {
+                        drop(t);
+                        None
+                    } else {
+                        let r = work(t);
+                        if r.is_err() {
+                            poisoned.store(true, Ordering::Relaxed);
+                        }
+                        Some(r)
+                    };
+                    if done_tx.send((i, r)).is_err() {
+                        break;
                     }
-                    Some(r)
-                };
-                if done_tx.send((i, r)).is_err() {
-                    break;
                 }
             });
         }
@@ -478,6 +550,41 @@ mod tests {
             .unwrap_or(64 << 20);
         assert_eq!(cfg.budget_bytes, expected);
         assert_eq!(cfg.max_in_flight, 16);
+    }
+
+    #[test]
+    fn parse_affinity_accepts_switches_and_rejects_garbage() {
+        for on in ["1", "on", "ON", " true ", "Yes"] {
+            assert_eq!(parse_affinity(on), Some(true), "{on:?}");
+        }
+        for off in ["", "0", "off", "FALSE", " no "] {
+            assert_eq!(parse_affinity(off), Some(false), "{off:?}");
+        }
+        for bad in ["2", "enable", "tru", "-1", "on off"] {
+            assert_eq!(parse_affinity(bad), None, "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn affinity_env_agrees_with_parse_affinity() {
+        // Checked against the real environment rather than mutating it
+        // (env writes are process-global and tests run concurrently).
+        let expected = std::env::var("POOL_AFFINITY")
+            .ok()
+            .and_then(|v| parse_affinity(&v))
+            .unwrap_or(false);
+        assert_eq!(affinity_enabled(), expected);
+    }
+
+    #[test]
+    fn pin_worker_is_a_safe_hint_on_any_platform() {
+        // Exercise the pin syscall path (Linux) / no-op (elsewhere) on
+        // scratch threads, including indices past the CPU count.
+        std::thread::scope(|s| {
+            for w in [0usize, 1, 2, 4096] {
+                s.spawn(move || pin_worker_impl(w));
+            }
+        });
     }
 
     #[test]

@@ -141,6 +141,15 @@ pub struct StreamStats {
     /// blocks drifted while the rest of the stream kept its census
     /// guarantees.
     pub census_block_mismatches: usize,
+    /// Matched message pairs the critical-path walk folded into its
+    /// speculative exit tables **while ingest was still running** —
+    /// channels the windowed matcher drained early. Zero for other ops
+    /// and on census-less streams (nothing drains before end of stream).
+    pub walk_pairs_early: usize,
+    /// Matched pairs the walk folded at end of stream: channels that
+    /// never completed mid-stream. `walk_pairs_early` over the sum is
+    /// how much of the walk's input overlapped with ingest.
+    pub walk_pairs_final: usize,
 }
 
 impl StreamStats {
@@ -151,9 +160,18 @@ impl StreamStats {
         } else {
             String::new()
         };
+        let walk = if self.walk_pairs_early + self.walk_pairs_final > 0 {
+            format!(
+                ", walk overlap {}/{} pairs early",
+                self.walk_pairs_early,
+                self.walk_pairs_early + self.walk_pairs_final
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{} shards, {} rows (largest {}), {} procs; decode {:.2} ms / fold {:.2} ms, \
-             peak in-flight {} shard(s), peak partial state {} B{}, census {}{}{}",
+             peak in-flight {} shard(s), peak partial state {} B{}{walk}, census {}{}{}",
             self.shards,
             self.total_rows,
             self.max_shard_rows,
@@ -704,7 +722,10 @@ fn time_profile_census(
     }
     let other = spec.other_slot;
     let nseries = spec.func_names.len();
-    let mut rows: Vec<Vec<f64>> = vec![vec![0.0f64; num_bins]; nseries];
+    // flat SoA partial (series-major, one allocation): same adds in the
+    // same order as nested rows — and the same byte count — just without
+    // the per-series pointer chase on the replay hot loop
+    let mut flat: Vec<f64> = vec![0.0f64; nseries * num_bins];
     let mut ing = drive(
         reader,
         threads,
@@ -731,12 +752,13 @@ fn time_profile_census(
         },
         |contribs| {
             for (series, b, ov) in contribs {
-                rows[series as usize][b as usize] += ov;
+                flat[series as usize * num_bins + b as usize] += ov;
             }
             Ok(nseries * num_bins * std::mem::size_of::<f64>())
         },
     )?;
     ing.stats.census = true;
+    let rows: Vec<Vec<f64>> = flat.chunks(num_bins.max(1)).map(|c| c.to_vec()).collect();
     let values = time_profile::values_from_series_rows(&rows, num_bins);
     let bin_edges = (0..=num_bins)
         .map(|b| t0 + (b as f64 * width).round() as i64)
@@ -927,6 +949,28 @@ impl StreamMatcher {
             }
         }
     }
+
+    /// [`StreamMatcher::finish`] for the critical-path driver: windowed
+    /// matchers also return the pairs drained *by this call* (the
+    /// channels that never completed mid-stream), completing the
+    /// speculative exit tables without rescanning the match. Buffered
+    /// matchers return None — the walk rebuilds its tables from the full
+    /// match instead.
+    fn finish_with_pairs(
+        self,
+        total_rows: usize,
+        threads: usize,
+    ) -> Result<(MessageMatch, Option<Vec<(u32, u32)>>)> {
+        match self {
+            StreamMatcher::Windowed(m) => {
+                let (msgs, late) = m.finish_with_pairs(total_rows);
+                Ok((msgs, Some(late)))
+            }
+            StreamMatcher::Buffered(acc) => {
+                Ok((super::ops::finish_channel_queues(acc, total_rows, threads)?, None))
+            }
+        }
+    }
 }
 
 /// Per-shard fold state shared by the streamed `critical_path`,
@@ -942,6 +986,12 @@ struct MsgIngest {
     /// (Process, Thread, Timestamp) key of the previous shard's last
     /// row, for the cross-boundary canonical-order check.
     prev_last: Option<(i64, i64, i64)>,
+    /// Speculative critical-path exit tables, built **during ingest**
+    /// from the pairs the windowed matcher drains as channels complete
+    /// (the per-process walks start while the stream is still folding).
+    /// None for the drivers that don't walk, and on census-less streams.
+    walk: Option<critical_path::ExitTables>,
+    walk_pairs_early: usize,
 }
 
 impl MsgIngest {
@@ -952,7 +1002,21 @@ impl MsgIngest {
             matcher,
             peak_queue_bytes: 0,
             prev_last: None,
+            walk: None,
+            walk_pairs_early: 0,
         }
+    }
+
+    /// [`MsgIngest::new`], additionally overlapping the critical-path
+    /// walk with ingest when the matcher drains channels early.
+    fn with_walk(mut matcher: StreamMatcher) -> Self {
+        let walk = if let StreamMatcher::Windowed(m) = &mut matcher {
+            m.collect_drained_pairs(true);
+            Some(critical_path::ExitTables::default())
+        } else {
+            None
+        };
+        MsgIngest { walk, ..MsgIngest::new(matcher) }
     }
 
     /// Fold one shard's local run structure and channel queues, shifting
@@ -998,6 +1062,17 @@ impl MsgIngest {
         self.offset += rows;
         self.matcher.fold(q, self.offset)?;
         self.peak_queue_bytes = self.peak_queue_bytes.max(self.matcher.queue_bytes());
+        if let (Some(walk), StreamMatcher::Windowed(m)) = (&mut self.walk, &mut self.matcher) {
+            // overlap the walk with matching: channels that just reached
+            // their census totals surface their pairs here, mid-ingest,
+            // and fold straight into the per-process exit tables (a
+            // row's run index is final as soon as the row has streamed)
+            let pairs = m.take_drained_pairs();
+            if !pairs.is_empty() {
+                self.walk_pairs_early += pairs.len();
+                walk.fold_pairs(&self.runs, &pairs);
+            }
+        }
         Ok(())
     }
 
@@ -1010,6 +1085,7 @@ impl MsgIngest {
     fn stamp(&self, stats: &mut StreamStats) {
         stats.census = self.matcher.is_windowed();
         stats.peak_channel_queue_bytes = self.peak_queue_bytes;
+        stats.walk_pairs_early = self.walk_pairs_early;
     }
 }
 
@@ -1046,14 +1122,18 @@ pub fn match_messages(
 /// Streamed critical-path analysis: shards contribute their process runs
 /// and channel queues (validated by per-shard caller/callee matching);
 /// the stream matcher pairs channels — draining complete ones during
-/// ingest when the census is available — and the shared backward walk
-/// runs over O(processes + messages) state; the trace itself is never
-/// resident.
+/// ingest when the census is available — and the **speculative walk
+/// overlaps with matching**: every early-drained channel's pairs fold
+/// straight into the per-process exit tables while the stream is still
+/// ingesting ([`StreamStats::walk_pairs_early`]), so end of stream only
+/// folds the stragglers, seals, and stitches. Partial state stays
+/// O(processes + messages); the trace itself is never resident; output
+/// is bit-identical to the sequential walk.
 pub fn critical_path(
     reader: &mut dyn ShardedReader,
     threads: usize,
 ) -> Result<(Vec<CriticalPath>, StreamStats)> {
-    let mut acc = MsgIngest::new(StreamMatcher::for_reader(reader, false));
+    let mut acc = MsgIngest::with_walk(StreamMatcher::for_reader(reader, false));
     let mut ing = drive(
         reader,
         threads,
@@ -1075,8 +1155,20 @@ pub fn critical_path(
         bail!("empty trace");
     }
     acc.stamp(&mut ing.stats);
-    let msgs = acc.matcher.finish(acc.offset, threads)?;
-    Ok((critical_path::paths_from_runs(&acc.runs, &msgs.send_of_recv), ing.stats))
+    let MsgIngest { offset, runs, matcher, walk, .. } = acc;
+    let (msgs, late) = matcher.finish_with_pairs(offset, threads)?;
+    let paths = match (walk, late) {
+        (Some(mut tables), Some(late)) => {
+            // the overlapped walk: ingest already folded every
+            // early-drained pair; finish with the final drains
+            ing.stats.walk_pairs_final = late.len();
+            tables.fold_pairs(&runs, &late);
+            tables.seal();
+            tables.stitch(&runs, &msgs.send_of_recv)
+        }
+        _ => critical_path::paths_from_runs_speculative(&runs, &msgs.send_of_recv, threads),
+    };
+    Ok((paths, ing.stats))
 }
 
 /// Streamed lateness: shards extract their leaf-call structure and
@@ -1466,6 +1558,16 @@ mod tests {
         let (cp, stats) = critical_path(r.as_mut(), 4).unwrap();
         assert_eq!(cp[0].rows, analysis::critical_path_analysis(&mut t.clone()).unwrap()[0].rows);
         assert!(stats.census);
+        // the speculative walk must overlap with ingest: early-drained
+        // channels fold their pairs before end of stream, and together
+        // with the final drains they account for every matched pair
+        assert!(
+            stats.walk_pairs_early > 0,
+            "windowed stream must start the walk mid-ingest: {stats:?}"
+        );
+        let matched = mm.send_of_recv.iter().filter(|&&s| s >= 0).count();
+        assert_eq!(stats.walk_pairs_early + stats.walk_pairs_final, matched);
+        assert!(stats.summary().contains("walk overlap"), "{}", stats.summary());
         let mut r = open_sharded(&out).unwrap();
         let (ops, stats) = lateness(r.as_mut(), 4).unwrap();
         assert_eq!(ops, analysis::calculate_lateness(&mut t.clone()).unwrap());

@@ -31,8 +31,25 @@
 //! `comm_comp_breakdown`) shard differently: point-to-point matching
 //! partitions by (src, dst, tag) *channel* — MPI's non-overtaking
 //! guarantee makes each channel independently matchable — so endpoint
-//! collection and FIFO pairing parallelize while the dependency walks
-//! stay sequential ([`exec::ops::match_messages_sharded`]).
+//! collection and FIFO pairing parallelize
+//! ([`exec::ops::match_messages_sharded`]), and the critical-path
+//! dependency walk runs as a **speculative parallel** backward walk
+//! ([`analysis::critical_path::paths_from_runs_speculative`]): workers
+//! walk per-process sub-paths optimistically and the driver stitches
+//! them at matched message edges, falling back per edge only where the
+//! speculation missed — the streamed engine additionally overlaps that
+//! walk with message matching itself
+//! ([`exec::StreamStats::walk_pairs_early`]).
+//!
+//! The hot fold kernels use flat structure-of-arrays scratch instead of
+//! nested allocations: binned time profiles accumulate into one flat
+//! series-major array with branchless bin clamps, and the pre-scan
+//! census walks its call stacks in a flat frame arena with a freelist.
+//! Worker threads can optionally be pinned round-robin to CPUs via the
+//! `POOL_AFFINITY` environment variable ([`exec::pool`]; default off, a
+//! pure hint). `cargo bench` reports nearest-rank p50/p95/p99 latency
+//! percentiles next to the median so tail behavior is visible
+//! ([`util::bench::Sample::percentile`]).
 //!
 //! Two properties make the parallel path safe to prefer by default:
 //!

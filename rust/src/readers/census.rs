@@ -166,6 +166,9 @@ pub(crate) fn fnv32(bytes: &[u8]) -> u32 {
     h
 }
 
+/// Frame-arena sentinel: "no frame" (empty stack / stack-bottom parent).
+const NO_FRAME: u32 = u32::MAX;
+
 /// One buffered Enter/Leave event awaiting the block's canonical sort.
 #[derive(Debug, Clone, Copy)]
 struct StackEvent {
@@ -188,9 +191,22 @@ pub(crate) struct CensusAccum {
     totals: Vec<i64>,
     /// funcs forfeited (a row the decode will reject was seen).
     forfeited: bool,
-    /// per-(proc, thread) call stacks, exactly as `exclusive_segments`
-    /// keeps them (persist across blocks).
-    stacks: Vec<Vec<(u32, i64)>>,
+    /// SoA frame arena replacing per-stream `Vec<(name, start)>` call
+    /// stacks: `frame_names`/`frame_starts`/`frame_parents` are parallel
+    /// flat columns, each stream's stack is the parent-linked chain from
+    /// `tops[stream]`, and popped slots recycle through `free` — so the
+    /// arena holds exactly the live frames (max concurrent nesting
+    /// across streams), in three dense allocations instead of one heap
+    /// `Vec` per (proc, thread) stream. Same walk, same account order.
+    frame_names: Vec<u32>,
+    frame_starts: Vec<i64>,
+    /// parent frame index; [`NO_FRAME`] for stack bottoms.
+    frame_parents: Vec<u32>,
+    /// per-stream top frame index; [`NO_FRAME`] when the stack is empty
+    /// (persists across blocks, like the stacks it replaces).
+    tops: Vec<u32>,
+    /// recycled frame slots.
+    free: Vec<u32>,
     stream_of: HashMap<(i64, i64), usize>,
     cur_key: Option<(i64, i64)>,
     cur: usize,
@@ -321,40 +337,57 @@ impl CensusAccum {
         self.block_span = None;
     }
 
-    /// One step of the `exclusive_segments` stack walk.
+    /// One step of the `exclusive_segments` stack walk, over the SoA
+    /// frame arena. Account calls happen in exactly the order the boxed
+    /// per-stream stacks produced them: cut parent before push on Enter,
+    /// emit child tail then resume parent on Leave.
     fn walk(&mut self, proc: i64, thread: i64, ts: i64, enter: bool, name: u32) {
         let key = (proc, thread);
         if self.cur_key != Some(key) {
             self.cur_key = Some(key);
-            let stacks = &mut self.stacks;
+            let tops = &mut self.tops;
             self.cur = *self.stream_of.entry(key).or_insert_with(|| {
-                stacks.push(Vec::new());
-                stacks.len() - 1
+                tops.push(NO_FRAME);
+                tops.len() - 1
             });
         }
-        let stack = &mut self.stacks[self.cur];
+        let top = self.tops[self.cur];
         if enter {
-            let emit = match stack.last_mut() {
-                Some((pname, pstart)) => {
-                    let out = if ts > *pstart { Some((*pname, ts - *pstart)) } else { None };
-                    *pstart = ts;
-                    out
+            if top != NO_FRAME {
+                let pstart = self.frame_starts[top as usize];
+                if ts > pstart {
+                    let pname = self.frame_names[top as usize];
+                    self.account(pname, ts - pstart);
                 }
-                None => None,
-            };
-            if let Some((code, dur)) = emit {
-                self.account(code, dur);
+                self.frame_starts[top as usize] = ts;
             }
-            self.stacks[self.cur].push((name, ts));
-        } else {
-            let popped = stack.pop();
-            if let Some((cname, cstart)) = popped {
-                if ts > cstart {
-                    self.account(cname, ts - cstart);
+            let f = match self.free.pop() {
+                Some(f) => {
+                    self.frame_names[f as usize] = name;
+                    self.frame_starts[f as usize] = ts;
+                    self.frame_parents[f as usize] = top;
+                    f
                 }
-                if let Some((_, pstart)) = self.stacks[self.cur].last_mut() {
-                    *pstart = ts;
+                None => {
+                    let f = self.frame_names.len() as u32;
+                    self.frame_names.push(name);
+                    self.frame_starts.push(ts);
+                    self.frame_parents.push(top);
+                    f
                 }
+            };
+            self.tops[self.cur] = f;
+        } else if top != NO_FRAME {
+            let cname = self.frame_names[top as usize];
+            let cstart = self.frame_starts[top as usize];
+            let parent = self.frame_parents[top as usize];
+            self.free.push(top);
+            self.tops[self.cur] = parent;
+            if ts > cstart {
+                self.account(cname, ts - cstart);
+            }
+            if parent != NO_FRAME {
+                self.frame_starts[parent as usize] = ts;
             }
         }
     }
@@ -514,6 +547,38 @@ mod tests {
         assert_eq!(f.exc_ns, vec![40 + 50, 60]);
         let chans = c.channels.unwrap();
         assert_eq!((chans[0].sends, chans[0].recvs), (1, 1));
+    }
+
+    #[test]
+    fn frame_arena_recycles_across_streams_and_blocks() {
+        // Uneven nesting on two threads across two blocks, with popped
+        // frame slots recycled in between and an unmatched leave on a
+        // third thread: the SoA arena must reproduce the boxed-stack
+        // walk's first-seen order and totals exactly.
+        let mut a = CensusAccum::new();
+        a.enter(0, 0, "a");
+        a.enter(0, 10, "b");
+        a.enter(0, 20, "c");
+        a.leave(0, 30, "c");
+        a.enter(1, 5, "d");
+        a.leave(1, 25, "d");
+        a.leave(2, 3, "stray"); // unmatched leave: ignored
+        a.end_block(0);
+        // same proc: thread 0's open a/b frames persist into this block
+        a.leave(0, 40, "b");
+        a.leave(0, 50, "a");
+        a.enter(0, 60, "e");
+        a.leave(0, 65, "e");
+        a.enter(1, 41, "f");
+        a.enter(1, 42, "g");
+        a.leave(1, 44, "g");
+        a.leave(1, 45, "f");
+        a.end_block(0);
+        let f = a.finish().unwrap().funcs.unwrap();
+        assert_eq!(f.names, ["a", "b", "c", "d", "e", "f", "g"].map(str::to_string));
+        // a: [0,10]+[40,50]; b: [10,20]+[30,40]; c: [20,30]; d: [5,25];
+        // e: [60,65]; f: [41,42]+[44,45]; g: [42,44]
+        assert_eq!(f.exc_ns, vec![20, 20, 10, 20, 5, 2, 2]);
     }
 
     #[test]

@@ -2,8 +2,10 @@
 //!
 //! Each `cargo bench` target is a `harness = false` binary that drives
 //! [`Bencher`]: warmup runs, then `iters` timed runs; reports min / median /
-//! mean / max and can emit machine-readable CSV rows so EXPERIMENTS.md
-//! tables are regenerable by piping bench output.
+//! mean / max plus nearest-rank latency percentiles (p50/p95/p99) and can
+//! emit machine-readable CSV rows so EXPERIMENTS.md tables are regenerable
+//! by piping bench output. Gates stay median-based — percentiles are
+//! reporting, surfacing tail latency the median hides.
 
 use std::time::Instant;
 
@@ -41,6 +43,23 @@ impl Sample {
             0.5 * (v[n / 2 - 1] + v[n / 2])
         }
     }
+
+    /// Nearest-rank percentile of the timed runs (`p` in 0..=100): the
+    /// smallest run such that at least `p`% of runs are ≤ it. NaN when no
+    /// runs were recorded. Latency reporting only — the CI gates stay on
+    /// [`Sample::median`], which is robust at the tiny run counts benches
+    /// use; p95/p99 expose the tail that a median hides (one slow run out
+    /// of twenty is invisible to the median and *is* the p99).
+    pub fn percentile(&self, p: f64) -> f64 {
+        let mut v = self.runs_ns.clone();
+        if v.is_empty() {
+            return f64::NAN;
+        }
+        v.sort_by(|a, b| a.total_cmp(b));
+        let n = v.len();
+        let rank = ((p / 100.0) * n as f64).ceil() as usize;
+        v[rank.clamp(1, n) - 1]
+    }
 }
 
 /// Micro-benchmark driver.
@@ -75,10 +94,14 @@ impl Bencher {
         }
         let s = Sample { name: name.to_string(), runs_ns: runs };
         eprintln!(
-            "  {:<48} median {:>12}  mean {:>12}  (min {}, max {}, n={})",
+            "  {:<48} median {:>12}  mean {:>12}  p50 {:>12}  p95 {:>12}  p99 {:>12}  \
+             (min {}, max {}, n={})",
             s.name,
             crate::util::fmt_ns(s.median()),
             crate::util::fmt_ns(s.mean()),
+            crate::util::fmt_ns(s.percentile(50.0)),
+            crate::util::fmt_ns(s.percentile(95.0)),
+            crate::util::fmt_ns(s.percentile(99.0)),
             crate::util::fmt_ns(s.min()),
             crate::util::fmt_ns(s.max()),
             s.runs_ns.len(),
@@ -103,17 +126,21 @@ impl Bencher {
         }
     }
 
-    /// Print all samples as CSV (name, median_ns, mean_ns, min_ns, max_ns).
+    /// Print all samples as CSV (name, median_ns, mean_ns, min_ns,
+    /// max_ns, p50_ns, p95_ns, p99_ns).
     pub fn csv(&self) -> String {
-        let mut out = String::from("name,median_ns,mean_ns,min_ns,max_ns\n");
+        let mut out = String::from("name,median_ns,mean_ns,min_ns,max_ns,p50_ns,p95_ns,p99_ns\n");
         for s in &self.samples {
             out.push_str(&format!(
-                "{},{:.0},{:.0},{:.0},{:.0}\n",
+                "{},{:.0},{:.0},{:.0},{:.0},{:.0},{:.0},{:.0}\n",
                 s.name,
                 s.median(),
                 s.mean(),
                 s.min(),
-                s.max()
+                s.max(),
+                s.percentile(50.0),
+                s.percentile(95.0),
+                s.percentile(99.0)
             ));
         }
         out
@@ -151,7 +178,38 @@ mod tests {
         b.run("noop", || 1 + 1);
         assert_eq!(b.samples.len(), 1);
         assert_eq!(b.samples[0].runs_ns.len(), 3);
-        assert!(b.csv().contains("noop"));
+        let csv = b.csv();
+        assert!(csv.contains("noop"));
+        assert!(csv.starts_with("name,median_ns,mean_ns,min_ns,max_ns,p50_ns,p95_ns,p99_ns\n"));
+    }
+
+    #[test]
+    fn percentiles_are_nearest_rank() {
+        // 10 runs 1..=10: nearest-rank p50 = 5th value, p95/p99 = 10th,
+        // p10 = 1st, p0 clamps to the minimum, p100 to the maximum.
+        let s = Sample {
+            name: "x".into(),
+            runs_ns: (1..=10).rev().map(|v| v as f64).collect(),
+        };
+        assert_eq!(s.percentile(50.0), 5.0);
+        assert_eq!(s.percentile(95.0), 10.0);
+        assert_eq!(s.percentile(99.0), 10.0);
+        assert_eq!(s.percentile(10.0), 1.0);
+        assert_eq!(s.percentile(0.0), 1.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+        // one slow run out of ten is invisible to the median, not to p99
+        let tail = Sample {
+            name: "t".into(),
+            runs_ns: vec![1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 1.0, 90.0],
+        };
+        assert_eq!(tail.median(), 1.0);
+        assert_eq!(tail.percentile(99.0), 90.0);
+        // single-run and empty samples degrade like median does
+        let one = Sample { name: "o".into(), runs_ns: vec![7.0] };
+        assert_eq!(one.percentile(50.0), 7.0);
+        assert_eq!(one.percentile(99.0), 7.0);
+        let empty = Sample { name: "e".into(), runs_ns: vec![] };
+        assert!(empty.percentile(50.0).is_nan());
     }
 
     #[test]

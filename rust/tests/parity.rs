@@ -257,6 +257,49 @@ fn message_matching_analyses_parity() {
     }
 }
 
+/// Kernel-level parity for the speculative backward walk: on the same
+/// [`proc_runs`] + matched messages, `paths_from_runs_speculative` must
+/// be bit-identical to the sequential reference walk at every thread
+/// count, for every generator and every golden fixture. (The engine
+/// paths — sharded, streamed, archive — route through the speculative
+/// walk and are covered by `assert_msg_ops_match` /
+/// `assert_streamed_msg_ops_match` above.)
+#[test]
+fn speculative_walk_parity() {
+    use pipit::analysis::critical_path::{
+        paths_from_runs, paths_from_runs_speculative, proc_runs,
+    };
+    use pipit::trace::{COL_PROC, COL_TS};
+
+    fn check(t: &Trace, ctx: &str) {
+        let msgs = analysis::match_messages(t).unwrap();
+        let pr = t.events.i64s(COL_PROC).unwrap();
+        let ts = t.events.i64s(COL_TS).unwrap();
+        let runs = proc_runs(pr, ts);
+        let seq: Vec<Vec<u32>> = paths_from_runs(&runs, &msgs.send_of_recv)
+            .into_iter()
+            .map(|p| p.rows)
+            .collect();
+        for &th in MSG_THREADS {
+            let spec: Vec<Vec<u32>> =
+                paths_from_runs_speculative(&runs, &msgs.send_of_recv, th)
+                    .into_iter()
+                    .map(|p| p.rows)
+                    .collect();
+            assert_eq!(seq, spec, "{ctx}: speculative walk @{th}");
+        }
+    }
+
+    for (app, t) in traces() {
+        check(&t, app);
+    }
+    let base = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures");
+    for fix in ["tiny.csv", "tiny_chrome.json", "tiny_otf2"] {
+        let t = pipit::readers::read_auto(&base.join(fix)).unwrap();
+        check(&t, fix);
+    }
+}
+
 #[test]
 fn comm_comp_breakdown_custom_sets_parity() {
     for (app, t) in traces() {
