@@ -98,6 +98,15 @@ const STREAM_ARCHIVE: &[(&str, &str)] = &[("stream_archive_reopen", "laghos8")];
 const SERVE_CACHED: &[(&str, &str)] = &[("serve_cached", "laghos8")];
 const SERVE_CACHED_MIN_SPEEDUP: f64 = 5.0;
 
+/// Network round-trip row: `seq1` is the in-process cached
+/// `run_request` and `sharded4` is the identical cached request as a
+/// full NDJSON wire round-trip on a persistent TCP connection —
+/// framing, parse, fairness-lane hop, reply serialization. The socket
+/// path must stay >= 0.5x in-process: the transport may at most double
+/// the cost of a cached query.
+const SERVE_SOCKET: &[(&str, &str)] = &[("serve_socket", "laghos8")];
+const SERVE_SOCKET_MIN_SPEEDUP: f64 = 0.5;
+
 fn main() -> anyhow::Result<()> {
     let (warmup, iters) = bench_params_from_args();
     let argv: Vec<String> = std::env::args().collect();
@@ -406,6 +415,49 @@ fn main() -> anyhow::Result<()> {
         serve_s.run_request("laghos8", &serve_req).unwrap()
     });
 
+    // ---- network front-end: in-process cached query vs socket round-trip ---
+    // Both sides serve the identical cached request; the socket row adds
+    // the wire: NDJSON framing, parse, fairness-lane hop, reply
+    // serialization, kernel round-trip on a persistent connection.
+    eprintln!("\n=== network front-end: cached query vs socket round-trip (laghos-8p) ===");
+    {
+        use std::io::{BufRead, BufReader, Write};
+        let mut net_session = pipit::coordinator::AnalysisSession::new().with_threads(4);
+        net_session.insert("laghos8", laghos8.clone());
+        let server = pipit::coordinator::AnalysisServer::start(net_session, 2);
+        let net = pipit::coordinator::NetServer::bind(
+            server.client(),
+            "127.0.0.1:0",
+            pipit::coordinator::NetConfig::default(),
+        )?;
+        let mut conn = std::net::TcpStream::connect(net.local_addr())?;
+        conn.set_nodelay(true)?; // Nagle stalls would price the wire, not us
+        let mut reader = BufReader::new(conn.try_clone()?);
+        let line = {
+            let mut j = serve_req.to_json();
+            if let Json::Obj(m) = &mut j {
+                m.insert("trace".to_string(), Json::Str("laghos8".to_string()));
+            }
+            format!("{}\n", j.dumps())
+        };
+        // prime the server-side cache (a session distinct from serve_s)
+        conn.write_all(line.as_bytes())?;
+        let mut primed = String::new();
+        reader.read_line(&mut primed)?;
+        b.run("serve_socket/seq1/laghos8", || {
+            serve_s.run_request("laghos8", &serve_req).unwrap()
+        });
+        b.run("serve_socket/sharded4/laghos8", || {
+            conn.write_all(line.as_bytes()).unwrap();
+            let mut reply = String::new();
+            reader.read_line(&mut reply).unwrap();
+            reply
+        });
+        drop((conn, reader));
+        net.drain();
+        server.shutdown();
+    }
+
     // Per-op speedups, the BENCH_PR.json rows, and the perf-trajectory
     // gate: sharded@4 must never lose to sequential on a routed op. A
     // small noise margin keeps median-of-5 on shared CI runners from
@@ -430,6 +482,8 @@ fn main() -> anyhow::Result<()> {
         .chain(STREAM_ARCHIVE.iter().map(|&(op, ds)| (op, ds, Some(GATE_MIN_SPEEDUP))))
         // the cached repeat must actually dwarf recomputation
         .chain(SERVE_CACHED.iter().map(|&(op, ds)| (op, ds, Some(SERVE_CACHED_MIN_SPEEDUP))))
+        // the wire may at most double the cost of a cached query
+        .chain(SERVE_SOCKET.iter().map(|&(op, ds)| (op, ds, Some(SERVE_SOCKET_MIN_SPEEDUP))))
         .collect();
     for (op, ds, gate_min) in pairs {
         let seq_name = format!("{op}/seq1/{ds}");
@@ -524,8 +578,9 @@ fn main() -> anyhow::Result<()> {
              below {GATE_MIN_SPEEDUP}x of the census-backed source stream; the \
              speculative walk / SoA fold below {GATE_MIN_SPEEDUP}x of the path it \
              replaced for the speed-pass rows; cached repeat below \
-             {SERVE_CACHED_MIN_SPEEDUP}x of the cold query for serve_cached), or \
-             unsampled, for: {}",
+             {SERVE_CACHED_MIN_SPEEDUP}x of the cold query for serve_cached; \
+             socket round-trip below {SERVE_SOCKET_MIN_SPEEDUP}x of the \
+             in-process cached query for serve_socket), or unsampled, for: {}",
             regressions.join(", ")
         );
         std::process::exit(1);

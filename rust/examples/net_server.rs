@@ -1,0 +1,91 @@
+//! The network front-end, end to end over a unix-domain socket:
+//!
+//! 1. load a session with a generated trace and start `AnalysisServer`,
+//! 2. bind `NetServer` on `unix:/tmp/.../pipit.sock` — the same
+//!    newline-delimited JSON protocol `pipit serve` speaks,
+//! 3. drive it from plain socket clients: one well-behaved (pipelined
+//!    typed requests with `id`s), one sloppy (bad JSON, a missing
+//!    `"trace"` key, an unknown op) to show every failure coming back
+//!    as a typed error frame instead of a hang,
+//! 4. gracefully drain and print the server counters.
+//!
+//! Run with: `cargo run --release --example net_server`
+//! (unix-domain sockets: unix-only, like `pipit serve --listen unix:...`)
+
+#[cfg(unix)]
+fn main() -> anyhow::Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+    use std::os::unix::net::UnixStream;
+
+    use pipit::coordinator::{
+        AnalysisRequest, AnalysisServer, AnalysisSession, NetConfig, NetServer,
+    };
+    use pipit::gen::GenConfig;
+    use pipit::util::json::Json;
+
+    let mut session = AnalysisSession::new().with_threads(2);
+    session.generate("laghos16", "laghos", &GenConfig::new(16, 6), 1)?;
+    let server = AnalysisServer::start(session, 4);
+
+    let dir = std::env::temp_dir().join("pipit_net_server_example");
+    std::fs::create_dir_all(&dir)?;
+    let sock = dir.join("pipit.sock");
+    let net = NetServer::bind(server.client(), &format!("unix:{}", sock.display()), NetConfig::default())?;
+    println!("serving on {}", net.local_addr());
+
+    // A well-behaved client: requests are the canonical AnalysisRequest
+    // JSON plus a "trace" key and an "id" echoed back on each reply.
+    // All three lines go out before the first read — pipelining keeps
+    // them in one fairness lane, and replies come back in order.
+    let reqs = [
+        AnalysisRequest::FlatProfile { metric: pipit::analysis::Metric::ExcTime },
+        AnalysisRequest::CriticalPath,
+        AnalysisRequest::IdleTime,
+    ];
+    let mut conn = UnixStream::connect(&sock)?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let mut batch = String::new();
+    for (i, req) in reqs.iter().enumerate() {
+        let mut j = req.to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("trace".to_string(), Json::Str("laghos16".to_string()));
+            m.insert("id".to_string(), Json::Num(i as f64));
+        }
+        batch.push_str(&j.dumps());
+        batch.push('\n');
+    }
+    conn.write_all(batch.as_bytes())?;
+    for req in &reqs {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        println!("{} -> {} bytes: {:.60}...", req.op(), line.len(), line.trim_end());
+    }
+
+    // A sloppy client: every mistake gets a typed error frame — kinds
+    // `parse`, `request`, `request` here — never a silent drop.
+    let mut sloppy = UnixStream::connect(&sock)?;
+    let mut sloppy_reader = BufReader::new(sloppy.try_clone()?);
+    sloppy.write_all(
+        b"this is not json\n{\"op\": \"flat_profile\"}\n{\"op\": \"no_such_op\", \"trace\": \"laghos16\"}\n",
+    )?;
+    for _ in 0..3 {
+        let mut line = String::new();
+        sloppy_reader.read_line(&mut line)?;
+        println!("sloppy client got: {}", line.trim_end());
+    }
+
+    drop((conn, reader, sloppy, sloppy_reader));
+    let replies = net.replies_total();
+    net.drain(); // what `pipit serve` does on SIGTERM/SIGINT
+    println!("drained after {replies} replies; socket removed: {}", !sock.exists());
+
+    let stats = server.stats();
+    println!("[serve] {}", stats.summary());
+    server.shutdown();
+    Ok(())
+}
+
+#[cfg(not(unix))]
+fn main() {
+    eprintln!("this example uses unix-domain sockets; use `pipit serve --listen host:port` on this platform");
+}

@@ -99,6 +99,10 @@ USAGE:
                  [--top N] [--threads N] [--out <file>]
   pipit convert --trace <path> --out <dir> [--threads N]
   pipit pipeline <spec.json> [--out-dir <dir>] [--artifacts <dir>] [--threads N]
+  pipit serve --listen <host:port|unix:/path> --trace <spec>[,<spec>...]
+                 [--stream] [--threads N] [--workers N] [--lane-capacity N]
+                 [--timeout-ms N] [--idle-timeout-ms N] [--max-clients N]
+                 [--drain-after-ms N]
   pipit report --trace <path> [--min-waste F] [--imbalance-threshold F]
   pipit info --trace <path>
 
@@ -214,6 +218,42 @@ SCALING:
   (StreamStats.census_block_mismatches), not whole-run. In a pipeline
   spec, use {\"op\": \"write\", \"format\": \"archive\"} — the entry
   re-points at the archive so later steps stream it.
+
+SERVE:
+  pipit serve exposes the analysis server over TCP (--listen host:port)
+  or a unix-domain socket (--listen unix:/path). Each --trace spec is
+  name=path (or a bare path, named by its file stem); entries load once
+  up front (--stream plans them for streaming ingest) and are then
+  served immutable to any number of concurrent clients.
+
+  Wire protocol: newline-delimited JSON, one request per line — the
+  same canonical AnalysisRequest object as a pipeline step, plus a
+  required \"trace\" key naming the loaded entry and an optional \"id\"
+  echoed back verbatim. One reply line per request, in request order:
+  {\"id\"?, \"op\": ..., \"result\": ...} on success, or
+  {\"id\"?, \"error\": {\"kind\": ..., \"message\": ...}} — every
+  failure is framed (kinds: parse, request, busy, timeout, shutdown,
+  engine, overflow), so a client never hangs on a dropped request.
+
+  Robustness knobs: every request gets --timeout-ms (default from
+  SERVE_TIMEOUT_MS, 30000; 0 disables) to complete — on expiry the
+  client gets a typed timeout frame, the late result is discarded on
+  arrival, and a job still queued past its deadline is never executed.
+  Each connection gets its own round-robin fairness lane bounded by
+  --lane-capacity queued requests (default 256); past that (or past
+  --max-clients connections, default 64) the client gets a 429-style
+  busy frame instead of unbounded queueing. Connections that neither
+  send a complete frame nor drain their replies within --idle-timeout-ms
+  (default 60000) are reaped. Repeated queries hit the session result
+  cache, admission-controlled by entry count and by the
+  RESULT_CACHE_BYTES budget (default 256 MiB; oversize results bypass
+  rather than evict the working set).
+
+  Drain semantics: SIGTERM/SIGINT (or --drain-after-ms for scripted
+  runs) stops accepting, finishes every request already received,
+  flushes the replies, shuts the worker pool down, and prints the
+  ServerStats summary (served/failed/rejected/timeouts/disconnects and
+  cache hit/miss/eviction/bypass counts) before exiting.
 ";
 
 /// Entry point used by `main.rs`. Returns the process exit code.
@@ -228,6 +268,7 @@ pub fn run(argv: &[String]) -> Result<()> {
         "analyze" => cmd_analyze(&args),
         "convert" => cmd_convert(&args),
         "pipeline" => cmd_pipeline(&args),
+        "serve" => cmd_serve(&args),
         "report" => cmd_report(&args),
         "info" => cmd_info(&args),
         "help" | "--help" | "-h" => {
@@ -416,6 +457,81 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `pipit serve`: the network front-end over the analysis server —
+/// load the named traces once, bind the listener, serve until a
+/// SIGTERM/SIGINT (or `--drain-after-ms`) asks for a graceful drain,
+/// then print the ServerStats summary.
+fn cmd_serve(args: &Args) -> Result<()> {
+    use super::net::{self, NetConfig, NetServer};
+    use super::server::{AnalysisServer, ServerConfig};
+    let addr = args.str("listen").context("--listen is required")?;
+    let specs = args.str("trace").context("--trace is required (name=path[,name=path...])")?;
+    let mut s = AnalysisSession::new();
+    let threads = args.usize("threads", s.num_threads)?;
+    s = s.with_threads(threads);
+    let mut names = Vec::new();
+    for spec in specs.split(',').filter(|x| !x.is_empty()) {
+        let (name, path) = match spec.split_once('=') {
+            Some((n, p)) => (n.to_string(), p),
+            None => {
+                let stem = std::path::Path::new(spec)
+                    .file_stem()
+                    .and_then(|x| x.to_str())
+                    .unwrap_or(spec);
+                (stem.to_string(), spec)
+            }
+        };
+        if args.str("stream").is_some() {
+            s.load_streamed(&name, path)?;
+        } else {
+            s.load(&name, path)?;
+        }
+        names.push(name);
+    }
+    let server = AnalysisServer::start_with(
+        s,
+        ServerConfig {
+            workers: args.usize("workers", 0)?,
+            lane_capacity: args.usize("lane-capacity", 256)?,
+        },
+    );
+    let defaults = NetConfig::default();
+    let cfg = NetConfig {
+        timeout_ms: args.u64("timeout-ms", defaults.timeout_ms)?,
+        idle_timeout_ms: args.u64("idle-timeout-ms", defaults.idle_timeout_ms)?,
+        max_clients: args.usize("max-clients", defaults.max_clients)?,
+        ..defaults
+    };
+    let netsrv = NetServer::bind(server.client(), addr, cfg)?;
+    println!(
+        "serving {} trace entr{} [{}] on {} (deadline {} ms)",
+        names.len(),
+        if names.len() == 1 { "y" } else { "ies" },
+        names.join(", "),
+        netsrv.local_addr(),
+        cfg.timeout_ms
+    );
+    net::install_drain_signal_handlers();
+    let drain_after = args.u64("drain-after-ms", 0)?;
+    let t0 = std::time::Instant::now();
+    loop {
+        if net::drain_requested() {
+            println!("[serve] drain requested by signal");
+            break;
+        }
+        if drain_after > 0 && t0.elapsed() >= std::time::Duration::from_millis(drain_after) {
+            println!("[serve] drain requested after {drain_after} ms");
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    netsrv.drain();
+    let stats = server.stats();
+    server.shutdown();
+    println!("[serve] {}", stats.summary());
+    Ok(())
+}
+
 fn cmd_report(args: &Args) -> Result<()> {
     let path = args.str("trace").context("--trace is required")?;
     let mut t = crate::readers::read_auto(std::path::Path::new(path))?;
@@ -566,5 +682,46 @@ mod tests {
     #[test]
     fn unknown_command_fails() {
         assert!(run(&argv("frobnicate")).is_err());
+    }
+
+    /// The serve command end to end: bind a unix socket, answer one
+    /// wire request, then drain on the --drain-after-ms timer (the
+    /// scripted stand-in for SIGTERM) and clean up the socket file.
+    #[cfg(unix)]
+    #[test]
+    fn serve_command_serves_and_drains() {
+        use std::io::{BufRead, BufReader, Write};
+        use std::os::unix::net::UnixStream;
+        let dir = std::env::temp_dir().join("pipit_cli_serve");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let out = dir.join("g_otf2");
+        run(&argv(&format!(
+            "generate --app gol --ranks 4 --iterations 3 --out {}",
+            out.display()
+        )))
+        .unwrap();
+        let sock = dir.join("serve.sock");
+        let cmd = format!(
+            "serve --listen unix:{} --trace g={} --workers 2 --drain-after-ms 3000",
+            sock.display(),
+            out.display()
+        );
+        let h = std::thread::spawn(move || run(&argv(&cmd)).unwrap());
+        let mut tries = 0;
+        while !sock.exists() && tries < 200 {
+            std::thread::sleep(std::time::Duration::from_millis(25));
+            tries += 1;
+        }
+        let mut st = UnixStream::connect(&sock).unwrap();
+        st.write_all(b"{\"op\": \"idle_time\", \"trace\": \"g\", \"id\": 1}\n")
+            .unwrap();
+        let mut line = String::new();
+        BufReader::new(st.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains("\"result\""), "{line}");
+        assert!(line.contains("\"id\""), "{line}");
+        drop(st);
+        h.join().unwrap();
+        assert!(!sock.exists(), "drain must remove the socket file");
     }
 }

@@ -12,7 +12,12 @@
 //!   serialized form shared by the CLI, pipeline steps, the session's
 //!   result-cache key, and the server wire format.
 //! * [`server`] — the concurrent analysis service: shared immutable trace
-//!   pool, fair FIFO worker scheduling, result caching.
+//!   pool, per-client round-robin fairness lanes, bounded admission,
+//!   byte-budgeted result caching.
+//! * [`net`] — the fault-tolerant network front-end: TCP / unix-socket
+//!   newline-delimited JSON over the server, with typed error frames,
+//!   per-request deadlines, load shedding, slow-client reaping, and
+//!   graceful drain (`pipit serve`).
 //! * [`pipeline`] — JSON pipeline specs: a saved analysis workflow that
 //!   can be re-run on any trace ("repeating the same analysis twice on the
 //!   same or different datasets is a manual process" in GUI tools — here
@@ -20,12 +25,17 @@
 //! * [`cli`] — the `pipit` binary: generate / analyze / pipeline / info.
 
 pub mod cli;
+pub mod net;
 pub mod pipeline;
 pub mod request;
 pub mod server;
 pub mod session;
 
+pub use net::{FaultConfig, NetConfig, NetServer};
 pub use pipeline::{Pipeline, StepResult};
 pub use request::{AnalysisRequest, AnalysisResult};
-pub use server::{AnalysisServer, CacheStats, PendingResult, ResultCache, ServerClient, ServerStats};
+pub use server::{
+    AnalysisServer, CacheStats, PendingResult, ResultCache, ServerClient, ServerConfig,
+    ServerStats, SubmitError, WaitOutcome,
+};
 pub use session::AnalysisSession;

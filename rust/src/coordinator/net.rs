@@ -1,0 +1,771 @@
+//! The fault-tolerant network front-end over [`super::server`].
+//!
+//! [`NetServer`] binds a TCP address (`host:port`) or a unix-domain
+//! socket (`unix:/path`) over a running [`AnalysisServer`] and speaks
+//! newline-delimited JSON — one request per line in, one reply per line
+//! out, always in request order per connection:
+//!
+//! - **Request frame**: the canonical [`AnalysisRequest`] object
+//!   (`{"op": ..., params...}`, parsed with the same defaults as the CLI
+//!   and pipeline steps) plus a required `"trace"` key naming the
+//!   session entry and an optional `"id"` echoed back verbatim. Blank
+//!   lines are ignored.
+//! - **Success frame**: [`AnalysisResult::to_json`] —
+//!   `{"id"?, "op": ..., "result": ...}`.
+//! - **Error frame**: `{"id"?, "error": {"kind": ..., "message": ...}}`.
+//!   *Every* failure is framed — a client never hangs on a dropped
+//!   request. Kinds: `parse` (bad JSON / non-UTF-8), `request` (unknown
+//!   op / bad params / missing `"trace"`), `busy` (load shed: lane or
+//!   connection limit), `timeout` (deadline expired), `shutdown`
+//!   (server draining), `engine` (the analysis itself failed),
+//!   `overflow` (request frame over the size limit).
+//!
+//! Robustness mechanics:
+//!
+//! - **Deadlines**: every request gets [`NetConfig::timeout_ms`]
+//!   (default from `SERVE_TIMEOUT_MS`, warn-once parsing) to complete;
+//!   on expiry the client receives a typed `timeout` frame and the reply
+//!   slot is dropped, so the worker's late result is discarded on
+//!   arrival — and a job whose deadline lapsed while still queued is
+//!   never executed at all.
+//! - **Bounded queues**: submissions ride the per-connection fairness
+//!   lane ([`super::ServerClient::new_lane`]) bounded by the server's
+//!   lane capacity; past it the client gets a `busy` frame (429-style)
+//!   instead of unbounded queue growth, counted in
+//!   [`super::ServerStats::rejected`]. Connections past
+//!   [`NetConfig::max_clients`] are turned away the same way.
+//! - **Slow-client reaping**: reads and reply writes carry
+//!   [`NetConfig::idle_timeout_ms`]; a connection that neither sends a
+//!   complete frame nor drains its replies in time is closed and counted
+//!   in [`super::ServerStats::disconnects`] — slow-loris clients cannot
+//!   pin handler threads forever.
+//! - **Graceful drain**: [`NetServer::drain`] (wired to SIGTERM/SIGINT
+//!   by `pipit serve` via [`install_drain_signal_handlers`]) stops
+//!   accepting, lets every connection finish the requests it has already
+//!   read, flushes the replies, and joins all handler threads.
+//!
+//! Requests *pipelined* on one connection (several lines sent before
+//! reading replies) are all submitted before the first wait, so they
+//! occupy the connection's lane together and round-robin fairly against
+//! other clients; replies still come back in request order.
+//!
+//! The deterministic failure-mode suite lives in `tests/net_fault.rs`,
+//! driven by the test-only [`FaultConfig`] knobs plus misbehaving raw
+//! socket clients (torn frames, mid-request hangups, stalled readers,
+//! poisoned requests, queue-full bursts).
+
+use super::request::{AnalysisRequest, AnalysisResult};
+use super::server::{PendingResult, ServerClient, SubmitError, WaitOutcome};
+use crate::util::json::{obj, s as jstr, Json};
+use anyhow::{Context, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{TcpListener, TcpStream};
+#[cfg(unix)]
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Parse a millisecond knob: a plain non-negative integer (0 disables).
+pub(crate) fn parse_millis(v: &str) -> Option<u64> {
+    let digits = v.trim();
+    if digits.is_empty() || !digits.bytes().all(|b| b.is_ascii_digit()) {
+        return None;
+    }
+    digits.parse::<u64>().ok()
+}
+
+/// The `SERVE_TIMEOUT_MS` default: per-request deadline in milliseconds
+/// (0 disables), warn-once on garbage like every other env knob.
+fn serve_timeout_ms() -> u64 {
+    crate::exec::pool::env_knob(
+        "SERVE_TIMEOUT_MS",
+        30_000,
+        "milliseconds as a non-negative integer (0 disables)",
+        "using 30000 ms",
+        parse_millis,
+    )
+}
+
+/// Deterministic fault-injection knobs for tests (`tests/net_fault.rs`).
+/// All defaults are inert; production configs never set these.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FaultConfig {
+    /// Sleep this long before writing each reply — a deliberately slow
+    /// server, for exercising client-side deadlines deterministically.
+    pub reply_stall_ms: u64,
+    /// Hard-close the connection after writing N replies (a mid-stream
+    /// server hangup the client must survive).
+    pub close_after_replies: Option<u64>,
+    /// Write only the first half of each reply frame, then hard-close —
+    /// a torn frame on the wire: the client sees EOF, never a hang.
+    pub tear_replies: bool,
+}
+
+/// Network front-end configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct NetConfig {
+    /// Per-request deadline in ms (0 disables). Default: the
+    /// `SERVE_TIMEOUT_MS` environment variable, else 30 000.
+    pub timeout_ms: u64,
+    /// Idle/read and reply-write timeout in ms reaping stalled
+    /// connections (0 disables reaping). Default 60 000.
+    pub idle_timeout_ms: u64,
+    /// Maximum request-frame length; longer frames get an `overflow`
+    /// error and the connection closes. Default 1 MiB.
+    pub max_frame_bytes: usize,
+    /// Maximum concurrently served connections; beyond it new clients
+    /// get a `busy` frame and are closed. Default 64.
+    pub max_clients: usize,
+    /// Test-only fault injection (inert by default).
+    pub fault: FaultConfig,
+}
+
+impl Default for NetConfig {
+    fn default() -> NetConfig {
+        NetConfig {
+            timeout_ms: serve_timeout_ms(),
+            idle_timeout_ms: 60_000,
+            max_frame_bytes: 1 << 20,
+            max_clients: 64,
+            fault: FaultConfig::default(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Listener / connection abstraction (TCP + unix-domain)
+// ---------------------------------------------------------------------------
+
+enum Listener {
+    Tcp(TcpListener),
+    #[cfg(unix)]
+    Unix(UnixListener),
+}
+
+impl Listener {
+    fn accept(&self) -> std::io::Result<Conn> {
+        match self {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Conn::Tcp(s)),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.accept().map(|(s, _)| Conn::Unix(s)),
+        }
+    }
+
+    fn set_nonblocking(&self, nb: bool) -> std::io::Result<()> {
+        match self {
+            Listener::Tcp(l) => l.set_nonblocking(nb),
+            #[cfg(unix)]
+            Listener::Unix(l) => l.set_nonblocking(nb),
+        }
+    }
+}
+
+enum Conn {
+    Tcp(TcpStream),
+    #[cfg(unix)]
+    Unix(UnixStream),
+}
+
+impl Conn {
+    /// Accepted sockets must be blocking-with-timeouts regardless of
+    /// the listener's nonblocking accept mode.
+    fn prepare(&self, read_slice: Option<Duration>, write: Option<Duration>) {
+        let _ = match self {
+            Conn::Tcp(s) => s.set_nonblocking(false),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_nonblocking(false),
+        };
+        let _ = match self {
+            Conn::Tcp(s) => s.set_read_timeout(read_slice),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_read_timeout(read_slice),
+        };
+        let _ = match self {
+            Conn::Tcp(s) => s.set_write_timeout(write),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.set_write_timeout(write),
+        };
+    }
+
+    fn hard_close(&self) {
+        let _ = match self {
+            Conn::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+}
+
+impl Read for Conn {
+    fn read(&mut self, buf: &mut [u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.read(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Conn {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        match self {
+            Conn::Tcp(s) => s.write(buf),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        match self {
+            Conn::Tcp(s) => s.flush(),
+            #[cfg(unix)]
+            Conn::Unix(s) => s.flush(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------------
+
+fn with_id(mut frame: Json, id: Option<&Json>) -> Json {
+    if let (Json::Obj(map), Some(id)) = (&mut frame, id) {
+        map.insert("id".to_string(), id.clone());
+    }
+    frame
+}
+
+fn error_frame(id: Option<&Json>, kind: &str, message: &str) -> Json {
+    with_id(
+        obj(vec![(
+            "error",
+            obj(vec![("kind", jstr(kind)), ("message", jstr(message))]),
+        )]),
+        id,
+    )
+}
+
+fn result_frame(id: Option<&Json>, result: &AnalysisResult) -> Json {
+    with_id(result.to_json(), id)
+}
+
+/// A reply owed to the client, in request order.
+enum Staged {
+    /// Already decided (an error frame): write as-is.
+    Immediate(Json),
+    /// Submitted to the pool; resolve against `deadline` at flush time.
+    Pending { slot: PendingResult, id: Option<Json>, deadline: Option<Instant> },
+}
+
+// ---------------------------------------------------------------------------
+// The server
+// ---------------------------------------------------------------------------
+
+struct NetShared {
+    client: ServerClient,
+    cfg: NetConfig,
+    draining: AtomicBool,
+    active_conns: AtomicUsize,
+    conn_handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    replies_total: AtomicU64,
+}
+
+/// A bound, accepting network front-end. Dropping it (or calling
+/// [`NetServer::drain`]) stops accepting, finishes in-flight requests,
+/// flushes replies, and joins every connection thread.
+pub struct NetServer {
+    shared: Arc<NetShared>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+    local_addr: String,
+    #[cfg(unix)]
+    unix_path: Option<std::path::PathBuf>,
+}
+
+impl NetServer {
+    /// Bind `addr` — `host:port` for TCP (port 0 picks a free port;
+    /// see [`NetServer::local_addr`]) or `unix:/path` for a unix-domain
+    /// socket (a stale socket file is replaced) — and start accepting
+    /// connections served by `client`'s pool.
+    pub fn bind(client: ServerClient, addr: &str, cfg: NetConfig) -> Result<NetServer> {
+        let (listener, local_addr, unix_path) = Self::listen(addr)?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the listener nonblocking")?;
+        let shared = Arc::new(NetShared {
+            client,
+            cfg,
+            draining: AtomicBool::new(false),
+            active_conns: AtomicUsize::new(0),
+            conn_handles: Mutex::new(Vec::new()),
+            replies_total: AtomicU64::new(0),
+        });
+        let sh = Arc::clone(&shared);
+        let accept_handle = std::thread::Builder::new()
+            .name("pipit-net-accept".to_string())
+            .spawn(move || accept_loop(&sh, listener))
+            .context("spawning the accept thread")?;
+        #[cfg(not(unix))]
+        let _ = unix_path;
+        Ok(NetServer {
+            shared,
+            accept_handle: Some(accept_handle),
+            local_addr,
+            #[cfg(unix)]
+            unix_path,
+        })
+    }
+
+    fn listen(addr: &str) -> Result<(Listener, String, Option<std::path::PathBuf>)> {
+        if let Some(path) = addr.strip_prefix("unix:") {
+            #[cfg(unix)]
+            {
+                let path = std::path::PathBuf::from(path);
+                // a stale socket file from a previous run refuses bind
+                let _ = std::fs::remove_file(&path);
+                let l = UnixListener::bind(&path)
+                    .with_context(|| format!("binding unix socket {}", path.display()))?;
+                let shown = format!("unix:{}", path.display());
+                return Ok((Listener::Unix(l), shown, Some(path)));
+            }
+            #[cfg(not(unix))]
+            anyhow::bail!("unix-domain sockets are not supported on this platform (got unix:{path})");
+        }
+        let l = TcpListener::bind(addr).with_context(|| format!("binding tcp {addr}"))?;
+        let shown = l
+            .local_addr()
+            .map(|a| a.to_string())
+            .unwrap_or_else(|_| addr.to_string());
+        Ok((Listener::Tcp(l), shown, None))
+    }
+
+    /// The bound address: the resolved `host:port` for TCP (useful with
+    /// port 0) or `unix:/path`.
+    pub fn local_addr(&self) -> &str {
+        &self.local_addr
+    }
+
+    /// Replies written across all connections so far (in-flight work is
+    /// visible through [`super::ServerStats`] instead).
+    pub fn replies_total(&self) -> u64 {
+        self.shared.replies_total.load(Ordering::Relaxed)
+    }
+
+    /// Graceful drain: stop accepting, let every connection finish the
+    /// requests it already read, flush the replies, join all threads.
+    pub fn drain(mut self) {
+        self.drain_inner();
+    }
+
+    fn drain_inner(&mut self) {
+        self.shared.draining.store(true, Ordering::Release);
+        if let Some(h) = self.accept_handle.take() {
+            let _ = h.join();
+        }
+        loop {
+            let handles: Vec<_> = {
+                let mut g = self
+                    .shared
+                    .conn_handles
+                    .lock()
+                    .unwrap_or_else(|e| e.into_inner());
+                g.drain(..).collect()
+            };
+            if handles.is_empty() {
+                break;
+            }
+            for h in handles {
+                let _ = h.join();
+            }
+        }
+        #[cfg(unix)]
+        if let Some(p) = self.unix_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for NetServer {
+    fn drop(&mut self) {
+        self.drain_inner();
+    }
+}
+
+fn accept_loop(shared: &Arc<NetShared>, listener: Listener) {
+    loop {
+        if shared.draining.load(Ordering::Acquire) {
+            return;
+        }
+        match listener.accept() {
+            Ok(conn) => {
+                // reap finished connection threads so the vec stays small
+                {
+                    let mut g = shared
+                        .conn_handles
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner());
+                    let (done, live): (Vec<_>, Vec<_>) =
+                        g.drain(..).partition(|h| h.is_finished());
+                    *g = live;
+                    drop(g);
+                    for h in done {
+                        let _ = h.join();
+                    }
+                }
+                if shared.active_conns.load(Ordering::Acquire) >= shared.cfg.max_clients {
+                    // accept-queue load shedding: a typed busy frame,
+                    // then close — never a silently hung connect
+                    shared.client.note_rejected();
+                    let mut conn = conn;
+                    conn.prepare(None, Some(Duration::from_millis(1000)));
+                    let frame = error_frame(
+                        None,
+                        "busy",
+                        &format!(
+                            "server at its connection limit ({}); retry later",
+                            shared.cfg.max_clients
+                        ),
+                    );
+                    let _ = conn.write_all(format!("{}\n", frame.dumps()).as_bytes());
+                    conn.hard_close();
+                    continue;
+                }
+                shared.active_conns.fetch_add(1, Ordering::AcqRel);
+                let sh = Arc::clone(shared);
+                let h = std::thread::Builder::new()
+                    .name("pipit-net-conn".to_string())
+                    .spawn(move || {
+                        handle_conn(&sh, conn);
+                        sh.active_conns.fetch_sub(1, Ordering::AcqRel);
+                    });
+                match h {
+                    Ok(h) => shared
+                        .conn_handles
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .push(h),
+                    Err(_) => {
+                        shared.active_conns.fetch_sub(1, Ordering::AcqRel);
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            Err(_) => {
+                // transient accept failure (e.g. EMFILE): back off, retry
+                std::thread::sleep(Duration::from_millis(50));
+            }
+        }
+    }
+}
+
+/// Pull every complete line out of `buf` (handles `\r\n` too).
+fn take_lines(buf: &mut Vec<u8>) -> Vec<Vec<u8>> {
+    let mut lines = Vec::new();
+    while let Some(pos) = buf.iter().position(|&b| b == b'\n') {
+        let mut line: Vec<u8> = buf.drain(..=pos).collect();
+        line.pop();
+        if line.last() == Some(&b'\r') {
+            line.pop();
+        }
+        lines.push(line);
+    }
+    lines
+}
+
+/// One connection's serve loop. Every exit path either closed cleanly
+/// or counted a disconnect — no leaked handler state either way.
+fn handle_conn(shared: &NetShared, mut conn: Conn) {
+    let cfg = &shared.cfg;
+    let client = shared.client.new_lane();
+    let idle = (cfg.idle_timeout_ms > 0).then(|| Duration::from_millis(cfg.idle_timeout_ms));
+    // Short read slices keep drain responsive (≤ ~200 ms) while the
+    // real idle bound is tracked against `last_activity` below.
+    let slice = match idle {
+        Some(d) => d.min(Duration::from_millis(200)),
+        None => Duration::from_millis(200),
+    };
+    conn.prepare(Some(slice), idle);
+    let mut buf: Vec<u8> = Vec::new();
+    let mut chunk = [0u8; 8192];
+    let mut replies_written: u64 = 0;
+    let mut last_activity = Instant::now();
+    loop {
+        let lines = take_lines(&mut buf);
+        if !lines.is_empty() {
+            last_activity = Instant::now();
+            // Submit every buffered request before waiting on any —
+            // pipelined requests share the lane and round-robin fairly
+            // against other connections; replies stay in request order.
+            let staged: Vec<Staged> = lines
+                .iter()
+                .filter(|l| !l.iter().all(|b| b.is_ascii_whitespace()))
+                .map(|l| stage_line(&client, cfg, l))
+                .collect();
+            for stage in staged {
+                let frame = resolve(&client, cfg, stage);
+                match write_frame(&mut conn, cfg, &mut replies_written, &frame) {
+                    WriteOutcome::Ok => {
+                        shared.replies_total.fetch_add(1, Ordering::Relaxed);
+                    }
+                    WriteOutcome::FaultClose => {
+                        conn.hard_close();
+                        client.note_disconnect();
+                        return;
+                    }
+                    WriteOutcome::Gone => {
+                        // reply write failed or timed out: a slow or
+                        // vanished client — reap, count, move on
+                        client.note_disconnect();
+                        conn.hard_close();
+                        return;
+                    }
+                }
+            }
+        }
+        if buf.len() > cfg.max_frame_bytes {
+            let frame = error_frame(
+                None,
+                "overflow",
+                &format!("request frame exceeds {} bytes", cfg.max_frame_bytes),
+            );
+            let _ = write_frame(&mut conn, cfg, &mut replies_written, &frame);
+            client.note_disconnect();
+            conn.hard_close();
+            return;
+        }
+        if shared.draining.load(Ordering::Acquire) {
+            // every fully received request has been answered; drain
+            // closes the connection rather than reading more
+            conn.hard_close();
+            return;
+        }
+        match conn.read(&mut chunk) {
+            Ok(0) => {
+                if !buf.iter().all(|b| b.is_ascii_whitespace()) {
+                    // mid-frame EOF: a torn request the client gave up on
+                    client.note_disconnect();
+                }
+                return;
+            }
+            Ok(n) => {
+                buf.extend_from_slice(&chunk[..n]);
+                last_activity = Instant::now();
+            }
+            Err(e) if e.kind() == ErrorKind::WouldBlock || e.kind() == ErrorKind::TimedOut => {
+                if let Some(limit) = idle {
+                    if last_activity.elapsed() >= limit {
+                        // slow-loris reap: no complete frame within the
+                        // idle budget
+                        client.note_disconnect();
+                        conn.hard_close();
+                        return;
+                    }
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => {
+                client.note_disconnect();
+                return;
+            }
+        }
+    }
+}
+
+/// Parse one request line (never blank — the caller filters those) and
+/// submit it, or decide its error frame.
+fn stage_line(client: &ServerClient, cfg: &NetConfig, line: &[u8]) -> Staged {
+    let text = match std::str::from_utf8(line) {
+        Ok(t) => t,
+        Err(_) => return Staged::Immediate(error_frame(None, "parse", "request is not UTF-8")),
+    };
+    let json = match Json::parse(text) {
+        Ok(j) => j,
+        Err(e) => {
+            return Staged::Immediate(error_frame(None, "parse", &format!("bad JSON: {e}")))
+        }
+    };
+    let id = match &json {
+        Json::Obj(map) => map.get("id").cloned(),
+        _ => None,
+    };
+    let trace = match json.get_str("trace") {
+        Some(t) => t.to_string(),
+        None => {
+            return Staged::Immediate(error_frame(
+                id.as_ref(),
+                "request",
+                "missing required \"trace\" key",
+            ))
+        }
+    };
+    let req = match AnalysisRequest::from_json(&json) {
+        Ok(r) => r,
+        Err(e) => {
+            return Staged::Immediate(error_frame(id.as_ref(), "request", &format!("{e:#}")))
+        }
+    };
+    let deadline =
+        (cfg.timeout_ms > 0).then(|| Instant::now() + Duration::from_millis(cfg.timeout_ms));
+    match client.try_submit(&trace, &req, deadline) {
+        Ok(slot) => Staged::Pending { slot, id, deadline },
+        Err(e @ SubmitError::Busy { .. }) => {
+            Staged::Immediate(error_frame(id.as_ref(), "busy", &e.to_string()))
+        }
+        Err(e @ SubmitError::ShutDown) => {
+            Staged::Immediate(error_frame(id.as_ref(), "shutdown", &e.to_string()))
+        }
+    }
+}
+
+/// Turn a staged reply into its final frame, enforcing the deadline.
+fn resolve(client: &ServerClient, cfg: &NetConfig, stage: Staged) -> Json {
+    match stage {
+        Staged::Immediate(frame) => frame,
+        Staged::Pending { slot, id, deadline } => {
+            let outcome = match deadline {
+                None => WaitOutcome::Ready(slot.wait()),
+                Some(d) => slot.wait_timeout(d.saturating_duration_since(Instant::now())),
+            };
+            match outcome {
+                WaitOutcome::Ready(Ok(result)) => result_frame(id.as_ref(), &result),
+                WaitOutcome::Ready(Err(e)) => {
+                    error_frame(id.as_ref(), "engine", &format!("{e:#}"))
+                }
+                WaitOutcome::TimedOut(slot) => {
+                    // dropping the slot discards the worker's late
+                    // result on arrival; a still-queued job is skipped
+                    drop(slot);
+                    client.note_timeout();
+                    error_frame(
+                        id.as_ref(),
+                        "timeout",
+                        &format!("deadline of {} ms expired", cfg.timeout_ms),
+                    )
+                }
+            }
+        }
+    }
+}
+
+enum WriteOutcome {
+    Ok,
+    /// A fault-injection knob asked for a hard close.
+    FaultClose,
+    /// The write failed or timed out — the client is gone or stalled.
+    Gone,
+}
+
+fn write_frame(
+    conn: &mut Conn,
+    cfg: &NetConfig,
+    replies_written: &mut u64,
+    frame: &Json,
+) -> WriteOutcome {
+    if cfg.fault.reply_stall_ms > 0 {
+        std::thread::sleep(Duration::from_millis(cfg.fault.reply_stall_ms));
+    }
+    let bytes = format!("{}\n", frame.dumps()).into_bytes();
+    if cfg.fault.tear_replies {
+        let half = bytes.len() / 2;
+        let _ = conn.write_all(&bytes[..half]);
+        let _ = conn.flush();
+        return WriteOutcome::FaultClose;
+    }
+    if conn.write_all(&bytes).and_then(|_| conn.flush()).is_err() {
+        return WriteOutcome::Gone;
+    }
+    *replies_written += 1;
+    if cfg
+        .fault
+        .close_after_replies
+        .is_some_and(|n| *replies_written >= n)
+    {
+        return WriteOutcome::FaultClose;
+    }
+    WriteOutcome::Ok
+}
+
+// ---------------------------------------------------------------------------
+// Signal-driven drain (for `pipit serve`)
+// ---------------------------------------------------------------------------
+
+static SIGNAL_DRAIN: AtomicBool = AtomicBool::new(false);
+
+/// Install SIGTERM/SIGINT handlers that flip a process-wide drain flag
+/// ([`drain_requested`]) instead of killing the process — `pipit serve`
+/// polls it and performs a graceful [`NetServer::drain`]. No-op on
+/// non-unix platforms. Async-signal-safe: the handler only stores an
+/// atomic.
+pub fn install_drain_signal_handlers() {
+    #[cfg(unix)]
+    {
+        extern "C" fn on_signal(_sig: i32) {
+            SIGNAL_DRAIN.store(true, Ordering::SeqCst);
+        }
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        unsafe {
+            signal(2, on_signal); // SIGINT
+            signal(15, on_signal); // SIGTERM
+        }
+    }
+}
+
+/// Has a drain been requested via SIGTERM/SIGINT (or [`request_drain`])?
+pub fn drain_requested() -> bool {
+    SIGNAL_DRAIN.load(Ordering::SeqCst)
+}
+
+/// Programmatic equivalent of the signals (tests use this).
+pub fn request_drain() {
+    SIGNAL_DRAIN.store(true, Ordering::SeqCst);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_millis_accepts_counts_and_rejects_garbage() {
+        assert_eq!(parse_millis("0"), Some(0));
+        assert_eq!(parse_millis(" 1500 "), Some(1500));
+        for bad in ["", "  ", "-1", "+4", "2.5", "8s", "ten"] {
+            assert_eq!(parse_millis(bad), None, "{bad:?} must not parse");
+        }
+    }
+
+    #[test]
+    fn take_lines_splits_and_keeps_partials() {
+        let mut buf = b"one\ntwo\r\nthree".to_vec();
+        let lines = take_lines(&mut buf);
+        assert_eq!(lines, vec![b"one".to_vec(), b"two".to_vec()]);
+        assert_eq!(buf, b"three");
+        let mut empty = Vec::new();
+        assert!(take_lines(&mut empty).is_empty());
+    }
+
+    #[test]
+    fn frames_carry_ids_and_kinds() {
+        let id = Json::Num(7.0);
+        let f = error_frame(Some(&id), "busy", "later");
+        let text = f.dumps();
+        assert!(text.contains("\"id\""), "{text}");
+        assert!(text.contains("\"busy\""), "{text}");
+        // errors without ids stay well-formed
+        let f = error_frame(None, "parse", "bad");
+        assert!(Json::parse(&f.dumps()).is_ok());
+    }
+
+    #[test]
+    fn default_config_is_sane() {
+        let cfg = NetConfig::default();
+        assert!(cfg.max_frame_bytes >= 1 << 20);
+        assert!(cfg.max_clients >= 1);
+        assert_eq!(cfg.fault.reply_stall_ms, 0);
+        assert!(cfg.fault.close_after_replies.is_none());
+        assert!(!cfg.fault.tear_replies);
+    }
+}

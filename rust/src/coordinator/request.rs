@@ -320,6 +320,55 @@ impl AnalysisResult {
         }
     }
 
+    /// Approximate resident size of this result in bytes — the unit of
+    /// the result cache's byte-budget admission control
+    /// ([`super::server::ResultCache`]). An estimate, not a measurement:
+    /// inline struct storage plus heap payloads (vector elements, string
+    /// bytes, map entries), ignoring allocator overhead and container
+    /// headers — close enough to bound cache residency within a small
+    /// constant factor, and cheap enough to call on every store.
+    pub fn approx_bytes(&self) -> usize {
+        use std::mem::{size_of, size_of_val};
+        fn rows<T>(v: &[T], per: impl Fn(&T) -> usize) -> usize {
+            v.iter().map(|r| size_of_val(r) + per(r)).sum()
+        }
+        let payload = match self {
+            AnalysisResult::FlatProfile(r) => rows(r, |x| x.name.len()),
+            AnalysisResult::TimeProfile(tp) => {
+                size_of_val(&tp.bin_edges[..])
+                    + rows(&tp.func_names, |f| f.len())
+                    + rows(&tp.values, |row| size_of_val(&row[..]))
+            }
+            AnalysisResult::CommMatrix(m) => {
+                size_of_val(&m.procs[..]) + rows(&m.data, |row| size_of_val(&row[..]))
+            }
+            AnalysisResult::MessageHistogram { counts, edges } => {
+                size_of_val(&counts[..]) + size_of_val(&edges[..])
+            }
+            AnalysisResult::CommByProcess(r) => size_of_val(&r[..]),
+            AnalysisResult::CommOverTime { counts, volume, edges } => {
+                size_of_val(&counts[..]) + size_of_val(&volume[..]) + size_of_val(&edges[..])
+            }
+            AnalysisResult::CommCompBreakdown(r) => size_of_val(&r[..]),
+            AnalysisResult::LoadImbalance(r) => {
+                rows(r, |x| x.name.len() + size_of_val(&x.top_processes[..]))
+            }
+            AnalysisResult::IdleTime(r) => size_of_val(&r[..]),
+            AnalysisResult::PatternDetection(r) => size_of_val(&r[..]),
+            AnalysisResult::CriticalPath(r) => rows(r, |p| size_of_val(&p.rows[..])),
+            AnalysisResult::Lateness(r) => rows(r, |o| o.name.len()),
+            AnalysisResult::Cct(c) => {
+                size_of_val(&c.roots[..])
+                    + rows(&c.nodes, |n| {
+                        n.name.len()
+                            + size_of_val(&n.children[..])
+                            + n.time_inc_by_proc.len() * (size_of::<i64>() + size_of::<f64>())
+                    })
+            }
+        };
+        size_of::<AnalysisResult>() + payload
+    }
+
     /// Render the textual body a pipeline `out` file holds (CSV for the
     /// tabular ops, the tree rendering for `cct`).
     pub fn render(&self) -> String {

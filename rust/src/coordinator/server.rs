@@ -3,16 +3,32 @@
 //! [`AnalysisServer`] wraps an [`AnalysisSession`] — whose loaded and
 //! stream-planned entries are immutable shared state (`Arc<Trace>` /
 //! `Arc<StreamPlan>`) — behind a pool of long-lived worker threads fed
-//! from a single FIFO queue:
+//! from per-client queues:
 //!
-//! - **Fair scheduling**: requests are served strictly in arrival order;
-//!   a long `critical_path` occupies one worker while the remaining
-//!   workers keep draining the queue, so short queries are never starved
-//!   behind it (liveness is stress-tested in `tests/server_stress.rs`).
+//! - **Fair scheduling**: each client handle owns a *lane* (a FIFO of
+//!   its own requests) and workers pop lanes round-robin, so one chatty
+//!   client never starves the rest; within a lane, arrival order is
+//!   preserved. A long `critical_path` occupies one worker while the
+//!   remaining workers keep draining the other lanes (liveness is
+//!   stress-tested in `tests/server_stress.rs` and `tests/net_fault.rs`).
+//! - **Bounded admission**: a lane holds at most
+//!   [`ServerConfig::lane_capacity`] queued requests; past that,
+//!   [`ServerClient::try_submit`] sheds load with a typed
+//!   [`SubmitError::Busy`] instead of growing without bound, and the
+//!   rejection is counted in [`ServerStats::rejected`].
+//! - **Deadlines**: submissions may carry a deadline; a job whose
+//!   deadline lapsed while it sat queued is answered with an error
+//!   *without executing* — a timeout storm cannot also waste the pool
+//!   recomputing results nobody is waiting for. Callers bound their own
+//!   wait with [`PendingResult::wait_timeout`]; dropping the timed-out
+//!   slot discards the worker's late result on arrival.
 //! - **Result caching**: the session's [`ResultCache`] keys on
 //!   `(trace name, canonical request JSON)`; the second identical query
 //!   returns the *same* `Arc<AnalysisResult>` without recomputation.
-//!   Hit / miss / eviction counters surface in [`ServerStats`].
+//!   Admission is bounded twice over: by entry count and by an
+//!   approximate byte budget (`RESULT_CACHE_BYTES`, default 256 MiB) —
+//!   an oversize result bypasses the cache entirely
+//!   ([`CacheStats::bypassed`]) instead of evicting the working set.
 //! - **Poisoned-request isolation**: a failing (or panicking) analysis
 //!   replies an error to its own client and the worker moves on; the
 //!   pool never wedges.
@@ -20,14 +36,16 @@
 //! Results are bit-identical to single-session execution on every routed
 //! op: workers call the same `&self` analysis methods, and sharded /
 //! sequential / streamed engines already agree bit-for-bit
-//! (`tests/parity.rs`).
+//! (`tests/parity.rs`). The network front-end over this pool lives in
+//! [`super::net`].
 
 use super::request::{AnalysisRequest, AnalysisResult};
 use super::session::AnalysisSession;
-use anyhow::{anyhow, bail, Result};
+use anyhow::{anyhow, Result};
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 /// Lock that survives a poisoned mutex (a panicked worker must not take
 /// the whole service down with it).
@@ -45,18 +63,43 @@ pub struct CacheStats {
     pub hits: u64,
     pub misses: u64,
     pub evictions: u64,
+    /// Oversize results that skipped the cache entirely (their
+    /// approximate size exceeded the byte budget) instead of evicting
+    /// the whole working set to fit.
+    pub bypassed: u64,
     /// Entries currently resident.
     pub entries: usize,
+    /// Approximate bytes currently resident.
+    pub bytes: usize,
+}
+
+impl CacheStats {
+    /// One-line operator summary, same spirit as
+    /// [`crate::exec::StreamStats::summary`].
+    pub fn summary(&self) -> String {
+        format!(
+            "{} hits / {} misses / {} evictions / {} bypassed, {} entries ({})",
+            self.hits,
+            self.misses,
+            self.evictions,
+            self.bypassed,
+            self.entries,
+            crate::util::fmt_bytes(self.bytes as u64)
+        )
+    }
 }
 
 #[derive(Default)]
 struct CacheInner {
-    /// `(trace name, canonical request JSON)` → `(last-use tick, result)`.
-    map: HashMap<(String, String), (u64, Arc<AnalysisResult>)>,
+    /// `(trace name, canonical request JSON)` →
+    /// `(last-use tick, approx bytes, result)`.
+    map: HashMap<(String, String), (u64, usize, Arc<AnalysisResult>)>,
     tick: u64,
+    bytes: usize,
     hits: u64,
     misses: u64,
     evictions: u64,
+    bypassed: u64,
 }
 
 /// LRU cache of completed analyses keyed on
@@ -67,14 +110,52 @@ struct CacheInner {
 /// cached result is valid for every execution path. Entries are dropped
 /// by [`ResultCache::invalidate`] whenever the session replaces or hands
 /// out mutable access to the backing trace.
+///
+/// Admission control is two-dimensional: at most `capacity` entries, and
+/// at most `budget_bytes` of approximate resident payload
+/// ([`AnalysisResult::approx_bytes`]). A single result larger than the
+/// whole budget is *bypassed* — returned to the caller uncached — rather
+/// than admitted at the cost of evicting everything else.
 pub struct ResultCache {
     capacity: usize,
+    budget_bytes: usize,
     inner: Mutex<CacheInner>,
 }
 
+/// Default byte budget when `RESULT_CACHE_BYTES` is unset: 256 MiB.
+const DEFAULT_CACHE_BYTES: usize = 256 << 20;
+
 impl ResultCache {
+    /// A cache of at most `capacity` entries, with the byte budget taken
+    /// from the `RESULT_CACHE_BYTES` environment variable (bytes or a
+    /// K/M/G-suffixed size; default 256 MiB; unparseable values warn
+    /// once and keep the default, like `STREAM_INFLIGHT_BYTES`).
     pub fn new(capacity: usize) -> ResultCache {
-        ResultCache { capacity: capacity.max(1), inner: Mutex::new(CacheInner::default()) }
+        let budget = crate::exec::pool::env_knob(
+            "RESULT_CACHE_BYTES",
+            DEFAULT_CACHE_BYTES,
+            "bytes or a K/M/G-suffixed size",
+            "using 256 MiB",
+            crate::exec::pool::parse_budget,
+        );
+        ResultCache::with_budget(capacity, budget)
+    }
+
+    /// A cache with an explicit byte budget (0 bypasses everything).
+    pub fn with_budget(capacity: usize, budget_bytes: usize) -> ResultCache {
+        ResultCache {
+            capacity: capacity.max(1),
+            budget_bytes,
+            inner: Mutex::new(CacheInner::default()),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget_bytes
     }
 
     /// Look up a cached result, counting a hit or a miss.
@@ -87,7 +168,7 @@ impl ResultCache {
             Some(slot) => {
                 slot.0 = tick;
                 inner.hits += 1;
-                Some(slot.1.clone())
+                Some(slot.2.clone())
             }
             None => {
                 inner.misses += 1;
@@ -96,35 +177,58 @@ impl ResultCache {
         }
     }
 
-    /// Insert a freshly computed result, evicting the least recently
-    /// used entry when at capacity.
+    /// Insert a freshly computed result, evicting least recently used
+    /// entries while over the entry capacity or the byte budget. A
+    /// result bigger than the whole budget is not admitted at all
+    /// (counted in [`CacheStats::bypassed`]).
     pub fn store(&self, trace: &str, key: String, value: Arc<AnalysisResult>) {
+        let bytes = value.approx_bytes();
         let mut guard = lock(&self.inner);
         let inner = &mut *guard;
+        if bytes > self.budget_bytes {
+            inner.bypassed += 1;
+            return;
+        }
         inner.tick += 1;
         let tick = inner.tick;
         let full_key = (trace.to_string(), key);
-        if !inner.map.contains_key(&full_key) && inner.map.len() >= self.capacity {
-            if let Some(oldest) =
-                inner.map.iter().min_by_key(|(_, (t, _))| *t).map(|(k, _)| k.clone())
-            {
-                inner.map.remove(&oldest);
-                inner.evictions += 1;
-            }
+        if let Some((_, old_bytes, _)) = inner.map.insert(full_key, (tick, bytes, value)) {
+            inner.bytes -= old_bytes;
         }
-        inner.map.insert(full_key, (tick, value));
+        inner.bytes += bytes;
+        while inner.map.len() > self.capacity || inner.bytes > self.budget_bytes {
+            let Some(oldest) =
+                inner.map.iter().min_by_key(|(_, (t, _, _))| *t).map(|(k, _)| k.clone())
+            else {
+                break;
+            };
+            if let Some((_, b, _)) = inner.map.remove(&oldest) {
+                inner.bytes -= b;
+            }
+            inner.evictions += 1;
+        }
     }
 
     /// Drop every cached result for `trace` (the trace was replaced or
     /// mutably borrowed — nothing cached for it may be served again).
     pub fn invalidate(&self, trace: &str) {
         let mut inner = lock(&self.inner);
-        inner.map.retain(|(t, _), _| t != trace);
+        let mut freed = 0usize;
+        inner.map.retain(|(t, _), (_, b, _)| {
+            let keep = t != trace;
+            if !keep {
+                freed += *b;
+            }
+            keep
+        });
+        inner.bytes -= freed;
     }
 
     /// Drop all entries (counters are retained).
     pub fn clear(&self) {
-        lock(&self.inner).map.clear();
+        let mut inner = lock(&self.inner);
+        inner.map.clear();
+        inner.bytes = 0;
     }
 
     pub fn stats(&self) -> CacheStats {
@@ -133,7 +237,9 @@ impl ResultCache {
             hits: inner.hits,
             misses: inner.misses,
             evictions: inner.evictions,
+            bypassed: inner.bypassed,
             entries: inner.map.len(),
+            bytes: inner.bytes,
         }
     }
 }
@@ -152,7 +258,17 @@ pub struct ServerStats {
     /// Completed with an error reply (the client saw the failure; the
     /// pool kept serving).
     pub failed: u64,
-    /// Requests waiting in the FIFO queue right now.
+    /// Submissions shed with [`SubmitError::Busy`] (a full lane) or a
+    /// connection turned away at the accept limit — 429-style load
+    /// shedding instead of unbounded queues.
+    pub rejected: u64,
+    /// Client-visible deadline expiries: a [`PendingResult::wait_timeout`]
+    /// that lapsed, or a network client answered with a `timeout` frame.
+    pub timeouts: u64,
+    /// Network connections dropped abnormally (mid-request hangup, torn
+    /// frame, idle/slow-loris reap, failed reply write).
+    pub disconnects: u64,
+    /// Requests waiting in lanes right now.
     pub queued: usize,
     /// Requests executing right now.
     pub active: usize,
@@ -161,15 +277,91 @@ pub struct ServerStats {
     pub cache: CacheStats,
 }
 
+impl ServerStats {
+    /// One-line operator summary; `pipit serve` prints this on drain.
+    pub fn summary(&self) -> String {
+        format!(
+            "submitted {}, completed {} ({} failed), queued {} (peak {}), \
+             active {} (peak {}), rejected {}, timeouts {}, disconnects {}; \
+             cache: {}",
+            self.submitted,
+            self.completed,
+            self.failed,
+            self.queued,
+            self.peak_queue,
+            self.active,
+            self.peak_active,
+            self.rejected,
+            self.timeouts,
+            self.disconnects,
+            self.cache.summary()
+        )
+    }
+}
+
+/// Why a submission was refused. Typed (not an anyhow chain) so the
+/// network layer can frame `busy` and `shutdown` replies distinctly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The client's lane is at capacity — load shed now, retry later.
+    Busy {
+        /// Requests already queued in this lane.
+        queued: usize,
+        /// The lane bound ([`ServerConfig::lane_capacity`]).
+        capacity: usize,
+    },
+    /// The server is shut down (or draining).
+    ShutDown,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Busy { queued, capacity } => write!(
+                f,
+                "analysis server busy: lane full ({queued}/{capacity} queued); retry later"
+            ),
+            SubmitError::ShutDown => write!(f, "analysis server is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Configuration for [`AnalysisServer::start_with`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServerConfig {
+    /// Worker threads (0 = available parallelism).
+    pub workers: usize,
+    /// Per-client queued-request bound; a submit past it is rejected
+    /// with [`SubmitError::Busy`].
+    pub lane_capacity: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { workers: 0, lane_capacity: 256 }
+    }
+}
+
 struct Job {
     trace: String,
     req: AnalysisRequest,
     reply: mpsc::Sender<Result<Arc<AnalysisResult>>>,
+    /// Skip execution entirely if this lapsed while the job sat queued:
+    /// the waiter has already been answered with a timeout.
+    deadline: Option<Instant>,
 }
 
+/// Per-client lanes drained round-robin. Within a lane, FIFO; across
+/// lanes, one pop each in rotation — so a client queueing 100 requests
+/// delays a second client by at most one job, not 100.
 #[derive(Default)]
 struct QueueState {
-    jobs: VecDeque<Job>,
+    lanes: HashMap<u64, VecDeque<Job>>,
+    /// Rotation order of lanes that currently hold jobs.
+    rotation: VecDeque<u64>,
+    queued: usize,
     active: usize,
     submitted: u64,
     completed: u64,
@@ -178,11 +370,50 @@ struct QueueState {
     peak_active: usize,
 }
 
+impl QueueState {
+    /// Queue `job` on `lane`, or report the lane full.
+    fn enqueue(&mut self, lane: u64, job: Job, capacity: usize) -> Result<(), SubmitError> {
+        let q = self.lanes.entry(lane).or_default();
+        if q.len() >= capacity {
+            return Err(SubmitError::Busy { queued: q.len(), capacity });
+        }
+        if q.is_empty() {
+            self.rotation.push_back(lane);
+        }
+        q.push_back(job);
+        self.queued += 1;
+        self.submitted += 1;
+        self.peak_queue = self.peak_queue.max(self.queued);
+        Ok(())
+    }
+
+    /// Pop the next job round-robin across lanes (FIFO within a lane).
+    fn pop_next(&mut self) -> Option<Job> {
+        let lane = self.rotation.pop_front()?;
+        let q = self.lanes.get_mut(&lane)?;
+        let job = q.pop_front()?;
+        if q.is_empty() {
+            // Drop empty lanes so short-lived network connections don't
+            // accumulate dead map entries.
+            self.lanes.remove(&lane);
+        } else {
+            self.rotation.push_back(lane);
+        }
+        self.queued -= 1;
+        Some(job)
+    }
+}
+
 struct Shared {
     session: AnalysisSession,
     queue: Mutex<QueueState>,
     cv: Condvar,
     shutdown: AtomicBool,
+    lane_capacity: usize,
+    next_lane: AtomicU64,
+    rejected: AtomicU64,
+    timeouts: AtomicU64,
+    disconnects: AtomicU64,
 }
 
 impl Shared {
@@ -192,7 +423,10 @@ impl Shared {
             submitted: q.submitted,
             completed: q.completed,
             failed: q.failed,
-            queued: q.jobs.len(),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            timeouts: self.timeouts.load(Ordering::Relaxed),
+            disconnects: self.disconnects.load(Ordering::Relaxed),
+            queued: q.queued,
             active: q.active,
             peak_queue: q.peak_queue,
             peak_active: q.peak_active,
@@ -200,20 +434,24 @@ impl Shared {
         }
     }
 
-    fn submit(&self, trace: &str, req: &AnalysisRequest) -> Result<PendingResult> {
+    fn submit(
+        &self,
+        lane: u64,
+        trace: &str,
+        req: &AnalysisRequest,
+        deadline: Option<Instant>,
+    ) -> Result<PendingResult, SubmitError> {
         if self.shutdown.load(Ordering::Acquire) {
-            bail!("analysis server is shut down");
+            return Err(SubmitError::ShutDown);
         }
         let (tx, rx) = mpsc::channel();
+        let job = Job { trace: trace.to_string(), req: req.clone(), reply: tx, deadline };
         {
             let mut q = lock(&self.queue);
-            q.jobs.push_back(Job {
-                trace: trace.to_string(),
-                req: req.clone(),
-                reply: tx,
-            });
-            q.submitted += 1;
-            q.peak_queue = q.peak_queue.max(q.jobs.len());
+            if let Err(e) = q.enqueue(lane, job, self.lane_capacity) {
+                self.rejected.fetch_add(1, Ordering::Relaxed);
+                return Err(e);
+            }
         }
         self.cv.notify_one();
         Ok(PendingResult { rx })
@@ -225,7 +463,7 @@ fn worker_loop(shared: &Shared) {
         let job = {
             let mut q = lock(&shared.queue);
             loop {
-                if let Some(j) = q.jobs.pop_front() {
+                if let Some(j) = q.pop_next() {
                     q.active += 1;
                     q.peak_active = q.peak_active.max(q.active);
                     break j;
@@ -237,18 +475,30 @@ fn worker_loop(shared: &Shared) {
                 q = shared.cv.wait(q).unwrap_or_else(|e| e.into_inner());
             }
         };
-        // A panicking analysis must poison neither the pool nor the
-        // queue lock (not held here): convert it into an error reply.
-        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            shared.session.run_request(&job.trace, &job.req)
-        }));
-        let reply = match outcome {
-            Ok(r) => r,
-            Err(_) => Err(anyhow!(
-                "analysis '{}' on trace '{}' panicked; worker recovered",
+        // A job whose deadline lapsed in the queue has already been
+        // answered with a timeout; executing it would only burn the
+        // worker. Reply an error (usually into a dropped channel).
+        let expired = job.deadline.is_some_and(|d| Instant::now() > d);
+        let reply = if expired {
+            Err(anyhow!(
+                "analysis '{}' on trace '{}' expired in queue before execution",
                 job.req.op(),
                 job.trace
-            )),
+            ))
+        } else {
+            // A panicking analysis must poison neither the pool nor the
+            // queue lock (not held here): convert it into an error reply.
+            let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                shared.session.run_request(&job.trace, &job.req)
+            }));
+            match outcome {
+                Ok(r) => r,
+                Err(_) => Err(anyhow!(
+                    "analysis '{}' on trace '{}' panicked; worker recovered",
+                    job.req.op(),
+                    job.trace
+                )),
+            }
         };
         let failed = reply.is_err();
         // The client may have dropped its PendingResult; that is fine.
@@ -263,9 +513,21 @@ fn worker_loop(shared: &Shared) {
 }
 
 /// A submitted request's reply slot. [`PendingResult::wait`] blocks
-/// until a worker replies.
+/// until a worker replies; [`PendingResult::wait_timeout`] bounds the
+/// wait and hands the slot back on expiry so the caller can either keep
+/// waiting or drop it — dropping discards the worker's result the
+/// moment it arrives.
 pub struct PendingResult {
     rx: mpsc::Receiver<Result<Arc<AnalysisResult>>>,
+}
+
+/// The outcome of [`PendingResult::wait_timeout`].
+pub enum WaitOutcome {
+    /// A worker replied (with the result or its error) in time.
+    Ready(Result<Arc<AnalysisResult>>),
+    /// The deadline lapsed first; the slot comes back so the caller
+    /// decides — keep waiting, or drop it to discard the late result.
+    TimedOut(PendingResult),
 }
 
 impl PendingResult {
@@ -274,24 +536,61 @@ impl PendingResult {
             .recv()
             .map_err(|_| anyhow!("analysis server shut down before replying"))?
     }
+
+    /// Wait at most `timeout` for the reply. Never blocks past the
+    /// deadline and never deadlocks: a server that shut down without
+    /// replying yields `Ready(Err(..))`.
+    pub fn wait_timeout(self, timeout: Duration) -> WaitOutcome {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => WaitOutcome::Ready(r),
+            Err(mpsc::RecvTimeoutError::Timeout) => WaitOutcome::TimedOut(self),
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                WaitOutcome::Ready(Err(anyhow!("analysis server shut down before replying")))
+            }
+        }
+    }
 }
 
 /// A cloneable handle for issuing requests against a running
-/// [`AnalysisServer`]. Clones share the same queue and pool.
+/// [`AnalysisServer`]. Clones share the same pool *and the same
+/// fairness lane*; an independent client (its own lane) comes from
+/// [`AnalysisServer::client`] or [`ServerClient::new_lane`].
 #[derive(Clone)]
 pub struct ServerClient {
     shared: Arc<Shared>,
+    lane: u64,
 }
 
 impl ServerClient {
     /// Enqueue a request; returns immediately with the reply slot.
     pub fn submit(&self, trace: &str, req: &AnalysisRequest) -> Result<PendingResult> {
-        self.shared.submit(trace, req)
+        Ok(self.try_submit(trace, req, None)?)
+    }
+
+    /// Enqueue with typed rejection (`Busy` / `ShutDown`) and an
+    /// optional deadline: a job still queued past its deadline is
+    /// answered without being executed.
+    pub fn try_submit(
+        &self,
+        trace: &str,
+        req: &AnalysisRequest,
+        deadline: Option<Instant>,
+    ) -> Result<PendingResult, SubmitError> {
+        self.shared.submit(self.lane, trace, req, deadline)
     }
 
     /// Enqueue a request and block for the result.
     pub fn query(&self, trace: &str, req: &AnalysisRequest) -> Result<Arc<AnalysisResult>> {
         self.submit(trace, req)?.wait()
+    }
+
+    /// A handle onto the same pool with its own fairness lane (what the
+    /// network front-end gives each connection).
+    pub fn new_lane(&self) -> ServerClient {
+        ServerClient {
+            shared: Arc::clone(&self.shared),
+            lane: self.shared.next_lane.fetch_add(1, Ordering::Relaxed),
+        }
     }
 
     /// The shared session behind the pool (read-only: loading traces
@@ -302,6 +601,21 @@ impl ServerClient {
 
     pub fn stats(&self) -> ServerStats {
         self.shared.stats()
+    }
+
+    /// Record a client-visible deadline expiry in [`ServerStats`].
+    pub(crate) fn note_timeout(&self) {
+        self.shared.timeouts.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record an abnormal connection drop in [`ServerStats`].
+    pub(crate) fn note_disconnect(&self) {
+        self.shared.disconnects.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record a connection turned away at the accept limit.
+    pub(crate) fn note_rejected(&self) {
+        self.shared.rejected.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -319,12 +633,22 @@ impl AnalysisServer {
     /// immutable state: load / generate / convert entries *before*
     /// starting the server.
     pub fn start(session: AnalysisSession, workers: usize) -> AnalysisServer {
-        let workers = crate::exec::effective_threads(workers).max(1);
+        AnalysisServer::start_with(session, ServerConfig { workers, ..ServerConfig::default() })
+    }
+
+    /// Start with explicit [`ServerConfig`] (worker count + lane bound).
+    pub fn start_with(session: AnalysisSession, config: ServerConfig) -> AnalysisServer {
+        let workers = crate::exec::effective_threads(config.workers).max(1);
         let shared = Arc::new(Shared {
             session,
             queue: Mutex::new(QueueState::default()),
             cv: Condvar::new(),
             shutdown: AtomicBool::new(false),
+            lane_capacity: config.lane_capacity.max(1),
+            next_lane: AtomicU64::new(1),
+            rejected: AtomicU64::new(0),
+            timeouts: AtomicU64::new(0),
+            disconnects: AtomicU64::new(0),
         });
         let mut handles = Vec::with_capacity(workers);
         for i in 0..workers {
@@ -338,9 +662,12 @@ impl AnalysisServer {
         AnalysisServer { shared, handles }
     }
 
-    /// A new client handle onto the running pool.
+    /// A new client handle (its own fairness lane) onto the running pool.
     pub fn client(&self) -> ServerClient {
-        ServerClient { shared: Arc::clone(&self.shared) }
+        ServerClient {
+            shared: Arc::clone(&self.shared),
+            lane: self.shared.next_lane.fetch_add(1, Ordering::Relaxed),
+        }
     }
 
     /// The shared session (e.g. to inspect `trace_handle` sharing).
@@ -426,6 +753,10 @@ mod tests {
         server.shutdown();
         let req = AnalysisRequest::IdleTime;
         assert!(client.submit("g", &req).is_err());
+        assert!(matches!(
+            client.try_submit("g", &req, None),
+            Err(SubmitError::ShutDown)
+        ));
     }
 
     #[test]
@@ -444,5 +775,168 @@ mod tests {
         assert_eq!(stats.entries, 2);
         cache.invalidate("t");
         assert_eq!(cache.stats().entries, 0);
+        assert_eq!(cache.stats().bytes, 0);
+    }
+
+    #[test]
+    fn cache_byte_budget_bypasses_oversize_and_evicts_by_bytes() {
+        use crate::analysis::pattern::PatternRange;
+        let small = Arc::new(AnalysisResult::PatternDetection(vec![
+            PatternRange { start: 0, end: 1 };
+            4
+        ]));
+        let big = Arc::new(AnalysisResult::PatternDetection(vec![
+            PatternRange { start: 0, end: 1 };
+            4096
+        ]));
+        let unit = small.approx_bytes();
+        assert!(big.approx_bytes() > 2 * unit);
+        // budget fits two small entries but not the big one
+        let cache = ResultCache::with_budget(64, 2 * unit);
+        cache.store("t", "big".into(), big.clone());
+        assert_eq!(cache.stats().bypassed, 1);
+        assert_eq!(cache.stats().entries, 0);
+        // the oversize result was still usable by its caller — only
+        // admission was refused; a later lookup is a plain miss
+        assert!(cache.lookup("t", "big").is_none());
+        cache.store("t", "a".into(), small.clone());
+        cache.store("t", "b".into(), small.clone());
+        assert_eq!(cache.stats().entries, 2);
+        assert_eq!(cache.stats().bytes, 2 * unit);
+        // a third small entry exceeds the byte budget: LRU goes
+        cache.store("t", "c".into(), small.clone());
+        let stats = cache.stats();
+        assert_eq!(stats.entries, 2);
+        assert!(stats.bytes <= 2 * unit);
+        assert_eq!(stats.evictions, 1);
+        assert!(cache.lookup("t", "a").is_none()); // "a" was oldest
+        // re-storing an existing key replaces, not double-counts
+        cache.store("t", "c".into(), small.clone());
+        assert_eq!(cache.stats().bytes, 2 * unit);
+        let summary = cache.stats().summary();
+        assert!(summary.contains("bypassed"), "{summary}");
+    }
+
+    #[test]
+    fn lanes_pop_round_robin_fifo_within_lane() {
+        fn job(tag: &str) -> Job {
+            // the receiver side is dropped: pop order is all this test
+            // observes, and Sender::send failure is already tolerated
+            let (tx, _) = mpsc::channel();
+            Job {
+                trace: tag.to_string(),
+                req: AnalysisRequest::IdleTime,
+                reply: tx,
+                deadline: None,
+            }
+        }
+        let mut q = QueueState::default();
+        q.enqueue(1, job("a1"), 8).unwrap();
+        q.enqueue(1, job("a2"), 8).unwrap();
+        q.enqueue(1, job("a3"), 8).unwrap();
+        q.enqueue(2, job("b1"), 8).unwrap();
+        q.enqueue(3, job("c1"), 8).unwrap();
+        q.enqueue(3, job("c2"), 8).unwrap();
+        assert_eq!(q.queued, 6);
+        let order: Vec<String> =
+            std::iter::from_fn(|| q.pop_next().map(|j| j.trace)).collect();
+        // round-robin across lanes, FIFO inside each lane
+        assert_eq!(order, ["a1", "b1", "c1", "a2", "c2", "a3"]);
+        assert_eq!(q.queued, 0);
+        assert!(q.lanes.is_empty(), "empty lanes must be dropped");
+    }
+
+    #[test]
+    fn lane_capacity_sheds_load_with_busy() {
+        let mut s = AnalysisSession::new().with_threads(1);
+        s.generate("g", "laghos", &GenConfig::new(8, 4), 1).unwrap();
+        let server =
+            AnalysisServer::start_with(s, ServerConfig { workers: 1, lane_capacity: 1 });
+        let client = server.client();
+        let slow = AnalysisRequest::CriticalPath;
+        let p1 = client.submit("g", &slow).unwrap();
+        // wait until the single worker has actually taken the job, so
+        // the next submit is queued (not popped) — deterministic
+        while server.stats().active == 0 {
+            std::thread::yield_now();
+        }
+        let p2 = client.submit("g", &AnalysisRequest::IdleTime).unwrap();
+        let refused = client.try_submit("g", &AnalysisRequest::IdleTime, None);
+        assert!(matches!(refused, Err(SubmitError::Busy { queued: 1, capacity: 1 })));
+        assert_eq!(server.stats().rejected, 1);
+        // a different client has its own lane: not rejected
+        let other = server.client();
+        let p3 = other.submit("g", &AnalysisRequest::IdleTime).unwrap();
+        for p in [p1, p2, p3] {
+            p.wait().unwrap();
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn wait_timeout_returns_slot_then_resolves() {
+        let mut s = AnalysisSession::new().with_threads(1);
+        s.generate("g", "laghos", &GenConfig::new(8, 4), 1).unwrap();
+        let server = AnalysisServer::start(s, 1);
+        let client = server.client();
+        let blocker = client.submit("g", &AnalysisRequest::CriticalPath).unwrap();
+        while server.stats().active == 0 {
+            std::thread::yield_now();
+        }
+        // queued behind the blocker on a 1-worker pool: a 1 ms wait
+        // cannot be satisfied
+        let pending = client.submit("g", &AnalysisRequest::IdleTime).unwrap();
+        let outcome = pending.wait_timeout(Duration::from_millis(1));
+        let WaitOutcome::TimedOut(slot) = outcome else {
+            panic!("expected a timeout behind the blocked worker");
+        };
+        // the slot is still live: waiting again resolves normally
+        let res = match slot.wait_timeout(Duration::from_secs(60)) {
+            WaitOutcome::Ready(r) => r.unwrap(),
+            WaitOutcome::TimedOut(_) => panic!("second wait must resolve"),
+        };
+        assert!(matches!(*res, AnalysisResult::IdleTime(_)));
+        blocker.wait().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn expired_deadline_skips_execution() {
+        let mut s = AnalysisSession::new().with_threads(1);
+        s.generate("g", "laghos", &GenConfig::new(8, 4), 1).unwrap();
+        let server = AnalysisServer::start(s, 1);
+        let client = server.client();
+        let blocker = client.submit("g", &AnalysisRequest::CriticalPath).unwrap();
+        while server.stats().active == 0 {
+            std::thread::yield_now();
+        }
+        // already-lapsed deadline: the worker must answer without running
+        let past = Instant::now() - Duration::from_millis(1);
+        let doomed = client
+            .try_submit("g", &AnalysisRequest::IdleTime, Some(past))
+            .unwrap();
+        let err = doomed.wait().unwrap_err();
+        assert!(format!("{err:#}").contains("expired in queue"), "{err:#}");
+        blocker.wait().unwrap();
+        let stats = server.stats();
+        assert_eq!(stats.failed, 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_summary_mentions_every_counter() {
+        let server = server_with_gol(1);
+        let client = server.client();
+        client.query("g", &AnalysisRequest::IdleTime).unwrap();
+        client.note_timeout();
+        client.note_disconnect();
+        client.note_rejected();
+        let s = server.stats();
+        assert_eq!((s.timeouts, s.disconnects, s.rejected), (1, 1, 1));
+        let line = s.summary();
+        for needle in ["submitted", "rejected", "timeouts", "disconnects", "cache:"] {
+            assert!(line.contains(needle), "{line}");
+        }
+        server.shutdown();
     }
 }

@@ -120,9 +120,19 @@ impl AnalysisSession {
     }
 
     /// Replace the result cache with one holding at most `capacity`
-    /// entries (LRU eviction beyond that).
+    /// entries (LRU eviction beyond that). The byte budget stays at the
+    /// `RESULT_CACHE_BYTES` / default setting.
     pub fn with_cache_capacity(mut self, capacity: usize) -> Self {
         self.cache = ResultCache::new(capacity);
+        self
+    }
+
+    /// Replace the result cache with one bounded by an explicit byte
+    /// budget (entry capacity is preserved): results whose
+    /// [`AnalysisResult::approx_bytes`] exceeds the whole budget bypass
+    /// the cache, and resident entries are LRU-evicted past it.
+    pub fn with_cache_budget(mut self, budget_bytes: usize) -> Self {
+        self.cache = ResultCache::with_budget(self.cache.capacity(), budget_bytes);
         self
     }
 

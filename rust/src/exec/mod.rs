@@ -110,22 +110,13 @@ pub(crate) fn parse_threads(v: &str) -> Option<usize> {
 /// back, the same contract as `STREAM_INFLIGHT_BYTES` and `POOL_AFFINITY`
 /// in [`pool`].
 pub fn default_threads() -> usize {
-    match std::env::var("NUM_THREADS") {
-        Ok(v) => match parse_threads(&v) {
-            Some(n) => n,
-            None => {
-                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
-                WARN_ONCE.call_once(|| {
-                    eprintln!(
-                        "[pipit] ignoring unparseable NUM_THREADS={v:?} \
-                         (expected a non-negative integer); using available parallelism"
-                    );
-                });
-                0
-            }
-        },
-        Err(_) => 0,
-    }
+    pool::env_knob(
+        "NUM_THREADS",
+        0,
+        "a non-negative integer",
+        "using available parallelism",
+        parse_threads,
+    )
 }
 
 /// Resolve a `threads` parameter: 0 = available parallelism.

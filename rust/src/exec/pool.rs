@@ -20,6 +20,47 @@ use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{mpsc, Mutex};
 
+/// Read and parse an environment knob, warning **once per variable** on
+/// an unparseable value before falling back to `default`. Every env knob
+/// in the crate (`POOL_AFFINITY`, `STREAM_INFLIGHT_BYTES`,
+/// `SERVE_TIMEOUT_MS`, `RESULT_CACHE_BYTES`, ...) shares this contract:
+/// garbage never silently changes behavior — it warns on stderr exactly
+/// once and keeps the documented default. `fallback_note` finishes the
+/// warning sentence ("affinity stays off", "using 64 MiB", ...).
+pub(crate) fn env_knob<T>(
+    var: &str,
+    default: T,
+    expected: &str,
+    fallback_note: &str,
+    parse: impl Fn(&str) -> Option<T>,
+) -> T {
+    match std::env::var(var) {
+        Ok(v) => match parse(&v) {
+            Some(x) => x,
+            None => {
+                warn_once(var, &v, expected, fallback_note);
+                default
+            }
+        },
+        Err(_) => default,
+    }
+}
+
+/// One warning per variable per process, no matter how many call sites
+/// read it (the old per-site `std::sync::Once` statics, generalized).
+fn warn_once(var: &str, val: &str, expected: &str, fallback_note: &str) {
+    use std::collections::HashSet;
+    use std::sync::OnceLock;
+    static WARNED: OnceLock<Mutex<HashSet<String>>> = OnceLock::new();
+    let warned = WARNED.get_or_init(|| Mutex::new(HashSet::new()));
+    let mut guard = warned.lock().unwrap_or_else(|e| e.into_inner());
+    if guard.insert(var.to_string()) {
+        eprintln!(
+            "[pipit] ignoring unparseable {var}={val:?} (expected {expected}); {fallback_note}"
+        );
+    }
+}
+
 /// Parse the `POOL_AFFINITY` switch: on/off spellings (case-insensitive,
 /// whitespace-tolerant; empty = off, matching an unset variable). Garbage
 /// is `None` so the caller can warn instead of silently guessing.
@@ -35,22 +76,13 @@ pub(crate) fn parse_affinity(v: &str) -> Option<bool> {
 /// value warns once on stderr and stays off (the safe default), the same
 /// contract as `STREAM_INFLIGHT_BYTES` in [`CapCfg::from_env`].
 fn affinity_enabled() -> bool {
-    match std::env::var("POOL_AFFINITY") {
-        Ok(v) => match parse_affinity(&v) {
-            Some(b) => b,
-            None => {
-                static WARN_ONCE: std::sync::Once = std::sync::Once::new();
-                WARN_ONCE.call_once(|| {
-                    eprintln!(
-                        "[pipit] ignoring unparseable POOL_AFFINITY={v:?} \
-                         (expected 1/0/on/off/true/false/yes/no); affinity stays off"
-                    );
-                });
-                false
-            }
-        },
-        Err(_) => false,
-    }
+    env_knob(
+        "POOL_AFFINITY",
+        false,
+        "1/0/on/off/true/false/yes/no",
+        "affinity stays off",
+        parse_affinity,
+    )
 }
 
 /// Pin the calling worker thread to CPU `worker % cpus` when
@@ -235,22 +267,13 @@ impl CapCfg {
     /// typo'd budget ("64MiBB", "-1") no longer masquerades as 64 MiB
     /// without a trace.
     pub fn from_env(workers: usize) -> CapCfg {
-        let budget = match std::env::var("STREAM_INFLIGHT_BYTES") {
-            Ok(v) => match parse_budget(&v) {
-                Some(b) => b,
-                None => {
-                    static WARN_ONCE: std::sync::Once = std::sync::Once::new();
-                    WARN_ONCE.call_once(|| {
-                        eprintln!(
-                            "[pipit] ignoring unparseable STREAM_INFLIGHT_BYTES={v:?} \
-                             (expected bytes or a K/M/G-suffixed size); using 64 MiB"
-                        );
-                    });
-                    64 << 20
-                }
-            },
-            Err(_) => 64 << 20,
-        };
+        let budget = env_knob(
+            "STREAM_INFLIGHT_BYTES",
+            64 << 20,
+            "bytes or a K/M/G-suffixed size",
+            "using 64 MiB",
+            parse_budget,
+        );
         CapCfg { max_in_flight: workers.max(1) * 4, budget_bytes: budget }
     }
 

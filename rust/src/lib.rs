@@ -118,13 +118,39 @@
 //! [`coordinator::AnalysisServer`] builds on exactly that: a long-lived
 //! service over one session, N concurrent clients
 //! ([`coordinator::ServerClient`]) submitting typed requests through a
-//! fair FIFO worker pool, with an LRU result cache
-//! ([`coordinator::ResultCache`], hit/miss/eviction counters in
-//! [`coordinator::ServerStats`]) and panic/error isolation per request.
+//! worker pool with **per-client round-robin fairness lanes** (FIFO
+//! within a lane, so one chatty client cannot starve the rest),
+//! **bounded admission** (a full lane sheds load with a typed
+//! [`coordinator::SubmitError::Busy`] instead of queueing unboundedly),
+//! per-request deadlines ([`coordinator::PendingResult::wait_timeout`]),
+//! an LRU result cache that is also **byte-budgeted**
+//! ([`coordinator::ResultCache`], `RESULT_CACHE_BYTES`; oversize results
+//! bypass it — hit/miss/eviction/bypass counters in
+//! [`coordinator::ServerStats`]), and panic/error isolation per request.
 //! Mutation (`insert`, `get_mut`, `load`) invalidates that trace's
 //! cached results. `tests/server_stress.rs` asserts the headline
 //! guarantee: concurrent results are bit-identical to a fresh sequential
 //! session on every routed op. See `examples/analysis_server.rs`.
+//!
+//! # The network front-end — `pipit serve`
+//!
+//! [`coordinator::NetServer`] puts that server on a TCP or unix-domain
+//! socket (`pipit serve --listen host:port|unix:/path`), speaking
+//! newline-delimited JSON: one canonical request object per line (plus a
+//! `"trace"` key and an optional `"id"` echoed back), one reply per line
+//! in request order. **Every failure is a typed error frame**
+//! (`parse` / `request` / `busy` / `timeout` / `shutdown` / `engine` /
+//! `overflow`) — a client never hangs on a dropped request. Robustness
+//! is part of the contract: per-request deadlines (`SERVE_TIMEOUT_MS`),
+//! 429-style load shedding on full lanes and at the connection limit,
+//! idle/slow-loris reaping, and graceful drain on SIGTERM/SIGINT (stop
+//! accepting, answer everything already read, flush, then exit —
+//! `pipit serve` prints the [`coordinator::ServerStats::summary`] line
+//! on the way out). `tests/net_fault.rs` drives the failure modes
+//! deterministically — torn frames, mid-request hangups, stalled
+//! readers, poisoned requests, queue-full bursts — and soaks concurrent
+//! socket clients bit-identically against sequential sessions. See
+//! `examples/net_server.rs`.
 
 pub mod util;
 pub mod df;

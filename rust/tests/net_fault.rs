@@ -1,0 +1,464 @@
+//! Deterministic fault-injection suite for the network front-end:
+//! misbehaving raw socket clients (torn frames, mid-request hangups,
+//! stalled readers, poisoned requests, queue-full bursts) against a
+//! live [`NetServer`], plus a concurrent unix-socket soak compared
+//! bit-identically against sequential in-process execution. Failure
+//! scenarios loop 8x, like the poisoned-shard tests in
+//! `tests/server_stress.rs`.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::TcpStream;
+#[cfg(unix)]
+use std::os::unix::net::UnixStream;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use pipit::analysis::{CommUnit, Metric};
+use pipit::coordinator::{
+    AnalysisRequest, AnalysisServer, AnalysisSession, NetConfig, NetServer, ServerConfig,
+};
+use pipit::gen::GenConfig;
+use pipit::util::json::Json;
+
+/// Every routed op, exactly as `tests/server_stress.rs` submits them.
+fn all_requests() -> Vec<AnalysisRequest> {
+    vec![
+        AnalysisRequest::FlatProfile { metric: Metric::ExcTime },
+        AnalysisRequest::TimeProfile { bins: 64, top: Some(8) },
+        AnalysisRequest::CommMatrix { unit: CommUnit::Bytes },
+        AnalysisRequest::MessageHistogram { bins: 10 },
+        AnalysisRequest::CommByProcess { unit: CommUnit::Count },
+        AnalysisRequest::CommOverTime { bins: 32 },
+        AnalysisRequest::CommCompBreakdown,
+        AnalysisRequest::LoadImbalance { metric: Metric::ExcTime, k: 4 },
+        AnalysisRequest::IdleTime,
+        AnalysisRequest::PatternDetection { start_event: None, bins: 256, window: None },
+        AnalysisRequest::CriticalPath,
+        AnalysisRequest::Lateness,
+        AnalysisRequest::Cct,
+    ]
+}
+
+/// A server over one generated trace named `g`, listening on a free
+/// TCP port. Returned in (server, net) order so the net front-end
+/// drains before the pool shuts down when the test scope closes.
+fn start_net(
+    app: &str,
+    dims: (usize, usize),
+    workers: usize,
+    lane_capacity: usize,
+    cfg: NetConfig,
+) -> (AnalysisServer, NetServer, String) {
+    let mut session = AnalysisSession::new().with_threads(1);
+    session.generate("g", app, &GenConfig::new(dims.0, dims.1), 1).unwrap();
+    let server = AnalysisServer::start_with(session, ServerConfig { workers, lane_capacity });
+    let net = NetServer::bind(server.client(), "127.0.0.1:0", cfg).unwrap();
+    let addr = net.local_addr().to_string();
+    (server, net, addr)
+}
+
+/// A quiet config: generous deadline, no idle reaping surprises.
+fn calm_config() -> NetConfig {
+    NetConfig { timeout_ms: 60_000, idle_timeout_ms: 60_000, ..NetConfig::default() }
+}
+
+fn connect(addr: &str) -> TcpStream {
+    let s = TcpStream::connect(addr).unwrap();
+    // a bug should fail the test, never hang it
+    s.set_read_timeout(Some(Duration::from_secs(60))).unwrap();
+    s
+}
+
+/// The wire form of a request: canonical op JSON + `trace` + `id`.
+fn wire(req: &AnalysisRequest, trace: &str, id: u64) -> String {
+    let mut j = req.to_json();
+    if let Json::Obj(m) = &mut j {
+        m.insert("trace".to_string(), Json::Str(trace.to_string()));
+        m.insert("id".to_string(), Json::Num(id as f64));
+    }
+    format!("{}\n", j.dumps())
+}
+
+fn read_reply(reader: &mut impl BufRead) -> Json {
+    let mut line = String::new();
+    let n = reader.read_line(&mut line).unwrap();
+    assert!(n > 0, "connection closed while a reply was owed");
+    Json::parse(line.trim_end()).unwrap_or_else(|e| panic!("bad reply frame {line:?}: {e}"))
+}
+
+fn error_kind(frame: &Json) -> Option<String> {
+    if let Json::Obj(m) = frame {
+        if let Some(Json::Obj(err)) = m.get("error") {
+            if let Some(Json::Str(kind)) = err.get("kind") {
+                return Some(kind.clone());
+            }
+        }
+    }
+    None
+}
+
+fn is_result(frame: &Json) -> bool {
+    matches!(frame, Json::Obj(m) if m.contains_key("result"))
+}
+
+/// Spin until `cond` holds, failing loudly instead of hanging.
+fn await_true(what: &str, mut cond: impl FnMut() -> bool) {
+    let start = Instant::now();
+    while !cond() {
+        assert!(start.elapsed() < Duration::from_secs(30), "timed out waiting for {what}");
+        thread::yield_now();
+        thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// A torn frame — half a request, then hangup — is counted as a
+/// disconnect, and the server keeps serving the next client. 8x.
+#[test]
+fn torn_frames_count_disconnects_and_leave_server_healthy() {
+    let (server, _net, addr) = start_net("gol", (4, 3), 2, 256, calm_config());
+    for round in 0..8u64 {
+        {
+            let mut torn = connect(&addr);
+            torn.write_all(b"{\"op\": \"idle_time\", \"tr").unwrap();
+            // dropped here: FIN mid-frame, no newline ever sent
+        }
+        await_true("torn-frame disconnect count", || server.stats().disconnects >= round + 1);
+        // the pool is unharmed: a well-formed client still gets results
+        let mut ok = connect(&addr);
+        ok.write_all(wire(&AnalysisRequest::IdleTime, "g", round).as_bytes()).unwrap();
+        let reply = read_reply(&mut BufReader::new(ok));
+        assert!(is_result(&reply), "round {round}: {}", reply.dumps());
+    }
+    assert_eq!(server.stats().disconnects, 8);
+}
+
+/// A client that sends a complete request and hangs up without reading
+/// the reply must not wedge anything — whether the orphaned reply write
+/// "succeeds" (FIN) or errors (RST) is OS timing, so only server health
+/// is asserted, not the disconnect counter. 8x.
+#[test]
+fn mid_request_hangup_leaves_server_serving() {
+    let (server, _net, addr) = start_net("gol", (4, 3), 2, 256, calm_config());
+    for round in 0..8u64 {
+        {
+            let mut rude = connect(&addr);
+            rude.write_all(wire(&AnalysisRequest::CriticalPath, "g", round).as_bytes()).unwrap();
+            // dropped immediately: the reply has nowhere to go
+        }
+        let mut ok = connect(&addr);
+        ok.write_all(wire(&AnalysisRequest::IdleTime, "g", round).as_bytes()).unwrap();
+        let reply = read_reply(&mut BufReader::new(ok));
+        assert!(is_result(&reply), "round {round}: {}", reply.dumps());
+    }
+    assert!(server.stats().completed >= 8);
+}
+
+/// A slow-loris client — connected, never sending a complete frame —
+/// is reaped at the idle timeout and counted as a disconnect. 8x.
+#[test]
+fn stalled_connections_are_reaped_at_the_idle_timeout() {
+    let cfg = NetConfig { timeout_ms: 60_000, idle_timeout_ms: 250, ..NetConfig::default() };
+    let (server, _net, addr) = start_net("gol", (4, 3), 1, 256, cfg);
+    for round in 0..8u64 {
+        let mut loris = connect(&addr);
+        // half a frame, then silence
+        loris.write_all(b"{\"op\"").unwrap();
+        let mut sink = Vec::new();
+        // the server closes us: read drains to EOF instead of hanging
+        loris.read_to_end(&mut sink).unwrap();
+        await_true("idle-reap disconnect count", || server.stats().disconnects >= round + 1);
+    }
+    assert_eq!(server.stats().disconnects, 8);
+}
+
+/// Poisoned requests each get their typed error frame, in order, on one
+/// connection — and a good request right after them still works. 8x.
+#[test]
+fn poisoned_requests_get_typed_error_frames() {
+    let (server, _net, addr) = start_net("gol", (4, 3), 2, 256, calm_config());
+    for round in 0..8u64 {
+        let mut conn = connect(&addr);
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        let poisons: &[(&str, &str)] = &[
+            ("this is not json\n", "parse"),
+            ("{\"op\": \"no_such_op\", \"trace\": \"g\"}\n", "request"),
+            ("{\"op\": \"idle_time\"}\n", "request"),
+            ("{\"op\": \"idle_time\", \"trace\": \"no_such_trace\"}\n", "engine"),
+        ];
+        for (line, _) in poisons {
+            conn.write_all(line.as_bytes()).unwrap();
+        }
+        conn.write_all(wire(&AnalysisRequest::IdleTime, "g", round).as_bytes()).unwrap();
+        for (line, kind) in poisons {
+            let reply = read_reply(&mut reader);
+            assert_eq!(
+                error_kind(&reply).as_deref(),
+                Some(*kind),
+                "round {round}, poison {line:?}: {}",
+                reply.dumps()
+            );
+        }
+        let reply = read_reply(&mut reader);
+        assert!(is_result(&reply), "round {round}: {}", reply.dumps());
+    }
+    // the bad lines never became pool failures except the engine ones
+    assert_eq!(server.stats().failed, 8);
+}
+
+/// With the worker pinned and a 1-deep lane, a pipelined burst is shed
+/// with a typed `busy` frame (counted in `rejected`) instead of
+/// unbounded queueing — and the lane serves again once it drains. 8x.
+#[test]
+fn queue_full_bursts_shed_with_busy_frames() {
+    let cfg = NetConfig { timeout_ms: 0, idle_timeout_ms: 60_000, ..NetConfig::default() };
+    let (server, _net, addr) = start_net("laghos", (8, 5), 1, 1, cfg);
+    let blocker_client = server.client();
+    for round in 0..8u64 {
+        // attach the connection first: its handler is already parked in
+        // its read loop, so the burst below stages within microseconds
+        let mut conn = connect(&addr);
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        conn.write_all(wire(&AnalysisRequest::IdleTime, "g", round).as_bytes()).unwrap();
+        assert!(is_result(&read_reply(&mut reader)));
+        let rejected_before = server.stats().rejected;
+        // pin the single worker on a slow, uncached in-process request
+        server.session().clear_result_cache();
+        let blocker = blocker_client.submit("g", &AnalysisRequest::CriticalPath).unwrap();
+        await_true("worker to go active", || server.stats().active == 1);
+        // both lines stage together before either reply resolves, so
+        // the second deterministically finds the 1-deep lane full
+        let burst = format!(
+            "{}{}",
+            wire(&AnalysisRequest::IdleTime, "g", 1),
+            wire(&AnalysisRequest::IdleTime, "g", 2)
+        );
+        conn.write_all(burst.as_bytes()).unwrap();
+        let first = read_reply(&mut reader);
+        let second = read_reply(&mut reader);
+        assert!(is_result(&first), "round {round}: {}", first.dumps());
+        assert_eq!(
+            error_kind(&second).as_deref(),
+            Some("busy"),
+            "round {round}: {}",
+            second.dumps()
+        );
+        assert_eq!(server.stats().rejected, rejected_before + 1);
+        blocker.wait().unwrap();
+        // the lane drained: the same connection is served again
+        conn.write_all(wire(&AnalysisRequest::IdleTime, "g", 3).as_bytes()).unwrap();
+        assert!(is_result(&read_reply(&mut reader)));
+    }
+}
+
+/// A request whose deadline expires while the worker is pinned gets a
+/// typed `timeout` frame and bumps the timeout counter; the connection
+/// and the pool both keep working. 8x.
+#[test]
+fn expired_deadlines_return_timeout_frames() {
+    let cfg = NetConfig { timeout_ms: 1, idle_timeout_ms: 60_000, ..NetConfig::default() };
+    let (server, _net, addr) = start_net("laghos", (8, 5), 1, 256, cfg);
+    let blocker_client = server.client();
+    for round in 0..8u64 {
+        // warm-up round-trip: the handler is attached and parked in its
+        // read loop before the timing-sensitive request goes out (its
+        // own reply may be a result or a timeout — either is fine)
+        let mut conn = connect(&addr);
+        let mut reader = BufReader::new(conn.try_clone().unwrap());
+        conn.write_all(wire(&AnalysisRequest::IdleTime, "g", round).as_bytes()).unwrap();
+        let _ = read_reply(&mut reader);
+        let timeouts_before = server.stats().timeouts;
+        // pin the single worker on a slow, uncached request; the socket
+        // request is itself slow too, so whichever runs first, the 1 ms
+        // deadline lapses before a reply can exist
+        server.session().clear_result_cache();
+        let blocker = blocker_client.submit("g", &AnalysisRequest::CriticalPath).unwrap();
+        await_true("worker to go active", || server.stats().active == 1);
+        conn.write_all(wire(&AnalysisRequest::CriticalPath, "g", round).as_bytes()).unwrap();
+        let reply = read_reply(&mut reader);
+        assert_eq!(
+            error_kind(&reply).as_deref(),
+            Some("timeout"),
+            "round {round}: {}",
+            reply.dumps()
+        );
+        assert!(server.stats().timeouts > timeouts_before);
+        blocker.wait().unwrap();
+    }
+}
+
+/// Past `max_clients`, a new connection gets a `busy` frame and a clean
+/// close instead of a silent hang; once the first client leaves, the
+/// slot frees up. 8x.
+#[test]
+fn connection_limit_sheds_new_clients_with_busy() {
+    let cfg = NetConfig { max_clients: 1, ..calm_config() };
+    let (server, _net, addr) = start_net("gol", (4, 3), 1, 256, cfg);
+    for round in 0..8u64 {
+        // claim the single slot; the previous round's handler may still
+        // be winding down, so retry until a request round-trips
+        let deadline = Instant::now() + Duration::from_secs(30);
+        let holder = loop {
+            assert!(Instant::now() < deadline, "round {round}: could not claim the slot");
+            let mut h = connect(&addr);
+            let mut r = BufReader::new(h.try_clone().unwrap());
+            h.write_all(wire(&AnalysisRequest::IdleTime, "g", round).as_bytes()).unwrap();
+            let reply = read_reply(&mut r);
+            if is_result(&reply) {
+                break h;
+            }
+            // shed at the limit: the busy frame is typed even here
+            assert_eq!(error_kind(&reply).as_deref(), Some("busy"), "{}", reply.dumps());
+            thread::sleep(Duration::from_millis(5));
+        };
+        // with the slot held, the next client is shed with `busy` + EOF
+        let mut shed = connect(&addr);
+        let mut text = String::new();
+        shed.read_to_string(&mut text).unwrap();
+        let frame = Json::parse(text.trim_end()).unwrap();
+        assert_eq!(error_kind(&frame).as_deref(), Some("busy"), "round {round}: {text}");
+        assert!(server.stats().rejected >= round + 1);
+        drop(holder);
+    }
+}
+
+/// `FaultConfig::tear_replies`: the client sees a torn frame and EOF —
+/// never a hang. 8x.
+#[test]
+fn torn_replies_surface_as_eof_not_hangs() {
+    let cfg = NetConfig {
+        fault: pipit::coordinator::FaultConfig { tear_replies: true, ..Default::default() },
+        ..calm_config()
+    };
+    let (server, _net, addr) = start_net("gol", (4, 3), 1, 256, cfg);
+    for round in 0..8u64 {
+        let mut conn = connect(&addr);
+        conn.write_all(wire(&AnalysisRequest::IdleTime, "g", round).as_bytes()).unwrap();
+        let mut text = String::new();
+        conn.read_to_string(&mut text).unwrap();
+        assert!(!text.is_empty(), "round {round}: tear wrote nothing");
+        assert!(!text.ends_with('\n'), "round {round}: frame was not torn: {text:?}");
+        assert!(Json::parse(text.trim_end()).is_err(), "round {round}: parsed whole: {text:?}");
+        await_true("tear disconnect count", || server.stats().disconnects >= round + 1);
+    }
+}
+
+/// `FaultConfig::close_after_replies`: exactly N complete replies, then
+/// a clean hangup — the rest of the pipeline is dropped, not leaked. 8x.
+#[test]
+fn close_after_replies_hangs_up_after_exactly_n() {
+    let cfg = NetConfig {
+        fault: pipit::coordinator::FaultConfig {
+            close_after_replies: Some(1),
+            ..Default::default()
+        },
+        ..calm_config()
+    };
+    let (_server, _net, addr) = start_net("gol", (4, 3), 1, 256, cfg);
+    for round in 0..8u64 {
+        let mut conn = connect(&addr);
+        let burst = format!(
+            "{}{}",
+            wire(&AnalysisRequest::IdleTime, "g", 1),
+            wire(&AnalysisRequest::Lateness, "g", 2)
+        );
+        conn.write_all(burst.as_bytes()).unwrap();
+        let mut text = String::new();
+        // the server hangs up right after reply 1; tolerate an RST race
+        let _ = conn.read_to_string(&mut text);
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 1, "round {round}: {text:?}");
+        assert!(is_result(&Json::parse(lines[0]).unwrap()), "round {round}: {text:?}");
+    }
+}
+
+/// Graceful drain: a request the server has already accepted is still
+/// answered, the connection then closes, and new connects are refused.
+#[test]
+fn drain_answers_inflight_then_refuses_new_connections() {
+    let cfg = NetConfig { timeout_ms: 0, idle_timeout_ms: 60_000, ..NetConfig::default() };
+    let (server, net, addr) = start_net("laghos", (8, 5), 1, 256, cfg);
+    let mut conn = connect(&addr);
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    let submitted_before = server.stats().submitted;
+    conn.write_all(wire(&AnalysisRequest::CriticalPath, "g", 7).as_bytes()).unwrap();
+    // once submitted, the reply is owed even if a drain starts now
+    await_true("request to be accepted", || server.stats().submitted > submitted_before);
+    let drainer = thread::spawn(move || net.drain());
+    let reply = read_reply(&mut reader);
+    assert!(is_result(&reply), "{}", reply.dumps());
+    // after the answered backlog, drain closes the connection
+    let mut rest = String::new();
+    reader.read_to_string(&mut rest).unwrap();
+    assert!(rest.is_empty(), "unexpected trailing frames: {rest:?}");
+    drainer.join().unwrap();
+    // the listener is gone with the drain
+    assert!(TcpStream::connect(&addr).is_err(), "drained server still accepting");
+    server.shutdown();
+}
+
+/// The soak: concurrent unix-socket clients pipelining all 13 ops, each
+/// reply bit-identical to fresh sequential in-process execution.
+#[cfg(unix)]
+#[test]
+fn unix_socket_soak_matches_sequential_bit_for_bit() {
+    let t = pipit::gen::generate("laghos", &GenConfig::new(8, 5), 1).unwrap();
+    let mut reference = AnalysisSession::new().with_threads(1);
+    reference.insert("g", t.clone());
+    // expected wire frame per (op, id): result JSON with the id echoed
+    let expect_frame = |req: &AnalysisRequest, id: u64| -> String {
+        let mut f = reference.run_request("g", req).unwrap().to_json();
+        if let Json::Obj(m) = &mut f {
+            m.insert("id".to_string(), Json::Num(id as f64));
+        }
+        f.dumps()
+    };
+
+    let mut session = AnalysisSession::new().with_threads(2);
+    session.insert("g", t);
+    let server = AnalysisServer::start(session, 4);
+    let dir = std::env::temp_dir().join("pipit_net_fault_soak");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let sock = dir.join("serve.sock");
+    let addr = format!("unix:{}", sock.display());
+    let net = NetServer::bind(server.client(), &addr, calm_config()).unwrap();
+
+    let clients: Vec<_> = (0..4u64)
+        .map(|c| {
+            let sock = sock.clone();
+            thread::spawn(move || {
+                let mut conn = UnixStream::connect(&sock).unwrap();
+                conn.set_read_timeout(Some(Duration::from_secs(120))).unwrap();
+                let mut reader = BufReader::new(conn.try_clone().unwrap());
+                let reqs = all_requests();
+                // the whole batch pipelined before the first read
+                let mut batch = String::new();
+                for (i, req) in reqs.iter().enumerate() {
+                    batch.push_str(&wire(req, "g", c * 100 + i as u64));
+                }
+                conn.write_all(batch.as_bytes()).unwrap();
+                let mut replies = Vec::new();
+                for _ in &reqs {
+                    let mut line = String::new();
+                    assert!(reader.read_line(&mut line).unwrap() > 0, "reply stream ended early");
+                    replies.push(line.trim_end().to_string());
+                }
+                replies
+            })
+        })
+        .collect();
+    for (c, h) in clients.into_iter().enumerate() {
+        let replies = h.join().unwrap();
+        for (i, (req, got)) in all_requests().iter().zip(replies).enumerate() {
+            let want = expect_frame(req, c as u64 * 100 + i as u64);
+            assert_eq!(got, want, "client {c} diverged from sequential on {}", req.op());
+        }
+    }
+    assert_eq!(net.replies_total(), 4 * 13);
+    let stats = server.stats();
+    assert_eq!(stats.failed, 0);
+    assert_eq!(stats.timeouts, 0);
+    net.drain();
+    assert!(!sock.exists(), "drain must remove the socket file");
+    server.shutdown();
+}

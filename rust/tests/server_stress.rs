@@ -263,3 +263,93 @@ fn small_cache_evicts_under_request_pressure() {
     assert!(Arc::ptr_eq(&recomputed, &client.query("g", &reqs[0]).unwrap()));
     server.shutdown();
 }
+
+// ---------------------------------------------------------------------------
+// Shutdown edge cases: every one of these must resolve (a result or an
+// error), never deadlock. Looped 8x for determinism, like the
+// poisoned-shard tests.
+// ---------------------------------------------------------------------------
+
+/// A pending result must never hang: waiting with a generous bound and
+/// panicking on expiry turns a would-be deadlock into a test failure.
+fn wait_bounded(p: pipit::coordinator::PendingResult, what: &str) {
+    match p.wait_timeout(std::time::Duration::from_secs(60)) {
+        pipit::coordinator::WaitOutcome::Ready(_) => {}
+        pipit::coordinator::WaitOutcome::TimedOut(_) => {
+            panic!("{what}: pending result did not resolve within 60 s")
+        }
+    }
+}
+
+/// `shutdown()` racing in-flight `submit`s from several clients: every
+/// submit either succeeds (and its result resolves — shutdown drains
+/// queued work) or is refused with a typed error; nothing deadlocks.
+#[test]
+fn shutdown_races_inflight_submits() {
+    for round in 0..8 {
+        let mut session = AnalysisSession::new().with_threads(1);
+        session.generate("g", "gol", &GenConfig::new(4, 3), 1).unwrap();
+        let server = AnalysisServer::start(session, 2);
+        let clients: Vec<_> = (0..3)
+            .map(|c| {
+                let client = server.client();
+                thread::spawn(move || {
+                    for i in 0..10 {
+                        let req = AnalysisRequest::MessageHistogram {
+                            bins: 2 + 100 * round + 10 * c + i,
+                        };
+                        match client.submit("g", &req) {
+                            // accepted before shutdown: must resolve
+                            Ok(p) => wait_bounded(p, "racing submit"),
+                            // refused at/after shutdown: typed, not hung
+                            Err(e) => {
+                                assert!(e.to_string().contains("shut down"), "{e:#}")
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        // shut down while the clients are mid-burst
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        server.shutdown();
+        for c in clients {
+            c.join().unwrap();
+        }
+    }
+}
+
+/// A client `PendingResult` outliving the server: results accepted
+/// before shutdown resolve (drain-then-exit), and waiting on them after
+/// the server object is gone still returns, never blocks.
+#[test]
+fn pending_result_outlives_the_server() {
+    for _ in 0..8 {
+        let mut session = AnalysisSession::new().with_threads(1);
+        session.generate("g", "gol", &GenConfig::new(4, 3), 1).unwrap();
+        let server = AnalysisServer::start(session, 1);
+        let client = server.client();
+        let pending: Vec<_> = (0..4)
+            .map(|i| client.submit("g", &AnalysisRequest::CommOverTime { bins: 4 + i }).unwrap())
+            .collect();
+        // the server is dropped before anyone waits; queued work drains
+        server.shutdown();
+        for p in pending {
+            p.wait().expect("accepted work must complete through drain");
+        }
+        // the client handle is still safe to use — submits now refuse
+        assert!(client.submit("g", &AnalysisRequest::IdleTime).is_err());
+    }
+}
+
+/// Drain with an empty queue: immediate shutdown with nothing queued
+/// must return promptly, every time.
+#[test]
+fn drain_with_empty_queue_never_hangs() {
+    for _ in 0..8 {
+        let mut session = AnalysisSession::new().with_threads(1);
+        session.generate("g", "gol", &GenConfig::new(4, 3), 1).unwrap();
+        let server = AnalysisServer::start(session, 4);
+        server.shutdown();
+    }
+}
