@@ -90,6 +90,24 @@ const STREAM_CENSUS: &[(&str, &str)] = &[
 /// ungated (`archive_convert/laghos8`).
 const STREAM_ARCHIVE: &[(&str, &str)] = &[("stream_archive_reopen", "laghos8")];
 
+/// Census-guided planner rows (both gated, each with its own floor).
+/// `archive_pruned_window` runs a narrow-window time_profile over a
+/// staggered-span archive: `seq1` decodes every block and filters rows
+/// after the fact ([`WindowFilter`] over the full scan), `sharded4`
+/// hands the window to the planner, which proves 7 of 8 block spans
+/// miss it and never touches their bytes — it must be >= 2x.
+/// `archive_column_projection` runs flat_profile on the laghos archive:
+/// `seq1` inflates all seven per-column chunks (the full access plan),
+/// `sharded4` inflates only the three the op reads — it must be
+/// >= 1.3x. Both sides are asserted bit-identical (and the pruned run
+/// asserted to actually prune) before any timing starts.
+const ARCHIVE_PLANNER: &[(&str, &str, f64)] = &[
+    ("archive_pruned_window", "stagger8", ARCHIVE_PRUNE_MIN_SPEEDUP),
+    ("archive_column_projection", "laghos8", ARCHIVE_PROJECT_MIN_SPEEDUP),
+];
+const ARCHIVE_PRUNE_MIN_SPEEDUP: f64 = 2.0;
+const ARCHIVE_PROJECT_MIN_SPEEDUP: f64 = 1.3;
+
 /// Result-cache row: `seq1` is the cold query (the session cache is
 /// cleared every iteration, so `run_request` recomputes) and `sharded4`
 /// is the cached repeat of the identical request. Serving from the
@@ -398,6 +416,82 @@ fn main() -> anyhow::Result<()> {
         stream::flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap()
     });
 
+    // ---- census-guided planner: block pruning + column projection ----------
+    // The staggered trace gives each process a disjoint time span, so the
+    // archive index alone proves 7 of 8 blocks irrelevant to a window
+    // covering one process — the planner skips their bytes entirely. The
+    // unpruned baseline decodes everything and filters rows after the
+    // fact. Column projection reruns flat_profile on the laghos archive:
+    // the op reads 3 of the 7 independently framed chunks, the
+    // full-access baseline inflates all of them. Parity and a nonzero
+    // prune count are asserted before any timing.
+    use pipit::readers::{open_planned_with, plan_sharded, AccessPlan, WindowFilter};
+    let stagger = {
+        let mut tb = pipit::trace::TraceBuilder::new();
+        let step = 1_000_000i64; // disjoint 1 ms activity span per process
+        for p in 0..8i64 {
+            let t0 = p * step;
+            tb.enter(p, 0, t0, "main");
+            for k in 0..(gen_iters as i64 * 60) {
+                let ts = t0 + 10 + k * 12;
+                tb.enter(p, 0, ts, "work");
+                tb.leave(p, 0, ts + 8, "work");
+            }
+            tb.leave(p, 0, t0 + step - 10, "main");
+        }
+        tb.finish()
+    };
+    let stagger_csv = ingest_dir.join("stagger8.csv");
+    pipit::readers::csv::write(&stagger, &stagger_csv)?;
+    let stagger_arch = ingest_dir.join("stagger8_archive");
+    let _ = std::fs::remove_dir_all(&stagger_arch);
+    {
+        let mut r = open_sharded(&stagger_csv)?;
+        stream::write_archive(r.as_mut(), &stagger_arch, 4)?;
+    }
+    // window = process 3's whole activity span (blocks 0-2 and 4-7 prune)
+    let (win_lo, win_hi) = (3_000_000i64, 3_040_000i64);
+    let stagger_plan = plan_sharded(&stagger_arch)?;
+    let win_access = AccessPlan::for_op("time_profile").windowed(Some(win_lo), Some(win_hi));
+    {
+        let inner = open_sharded(&stagger_arch)?;
+        let mut wf = WindowFilter::new(inner, Some(win_lo), Some(win_hi));
+        let (want, _) = stream::time_profile(&mut wf, 64, Some(7), 4)?;
+        let mut r = open_planned_with(&stagger_arch, &stagger_plan, &win_access)?;
+        let (got, stats) = stream::time_profile(r.as_mut(), 64, Some(7), 4)?;
+        assert_eq!(got, want, "pruned windowed time_profile must be bit-identical");
+        assert!(stats.blocks_pruned > 0, "narrow window pruned no blocks");
+    }
+    eprintln!("\n=== census-guided planner: pruned window + column projection ===");
+    b.run("archive_pruned_window/seq1/stagger8", || {
+        let inner = open_sharded(&stagger_arch).unwrap();
+        let mut wf = WindowFilter::new(inner, Some(win_lo), Some(win_hi));
+        stream::time_profile(&mut wf, 64, Some(7), 4).unwrap()
+    });
+    b.run("archive_pruned_window/sharded4/stagger8", || {
+        let mut r = open_planned_with(&stagger_arch, &stagger_plan, &win_access).unwrap();
+        stream::time_profile(r.as_mut(), 64, Some(7), 4).unwrap()
+    });
+    let laghos_arch_plan = plan_sharded(&archive_path)?;
+    let full_access = AccessPlan::full();
+    let proj_access = AccessPlan::for_op("flat_profile");
+    {
+        let mut r = open_planned_with(&archive_path, &laghos_arch_plan, &full_access)?;
+        let (want, _) = stream::flat_profile(r.as_mut(), Metric::ExcTime, 4)?;
+        let mut r = open_planned_with(&archive_path, &laghos_arch_plan, &proj_access)?;
+        let (got, stats) = stream::flat_profile(r.as_mut(), Metric::ExcTime, 4)?;
+        assert_eq!(got, want, "projected flat_profile must be bit-identical");
+        assert!(stats.columns_skipped > 0, "projection skipped no column chunks");
+    }
+    b.run("archive_column_projection/seq1/laghos8", || {
+        let mut r = open_planned_with(&archive_path, &laghos_arch_plan, &full_access).unwrap();
+        stream::flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap()
+    });
+    b.run("archive_column_projection/sharded4/laghos8", || {
+        let mut r = open_planned_with(&archive_path, &laghos_arch_plan, &proj_access).unwrap();
+        stream::flat_profile(r.as_mut(), Metric::ExcTime, 4).unwrap()
+    });
+
     // ---- result cache: cold query vs cached repeat of the same request -----
     // The session executes the canonical typed request; the repeat row is
     // what every client after the first pays on the concurrent server.
@@ -480,6 +574,8 @@ fn main() -> anyhow::Result<()> {
         .chain(STREAM_CENSUS.iter().map(|&(op, ds)| (op, ds, Some(GATE_MIN_SPEEDUP))))
         // archive reopen is gated against the census-backed source stream
         .chain(STREAM_ARCHIVE.iter().map(|&(op, ds)| (op, ds, Some(GATE_MIN_SPEEDUP))))
+        // the planner gates against the full-decode paths it avoids
+        .chain(ARCHIVE_PLANNER.iter().map(|&(op, ds, min)| (op, ds, Some(min))))
         // the cached repeat must actually dwarf recomputation
         .chain(SERVE_CACHED.iter().map(|&(op, ds)| (op, ds, Some(SERVE_CACHED_MIN_SPEEDUP))))
         // the wire may at most double the cost of a cached query
@@ -536,8 +632,44 @@ fn main() -> anyhow::Result<()> {
         }
     }
     if let Some(p) = &json_path {
-        std::fs::write(p, arr(rows).dumps())?;
+        std::fs::write(p, arr(rows.clone()).dumps())?;
         eprintln!("wrote {p}");
+    }
+
+    // ---- perf trajectory: persist the per-run rows to BENCH_TREND.json -----
+    // The trend file lives at the repo root. The first bench run seeds
+    // it; every later run appends its rows (capped to the trailing 50
+    // runs so the file stays reviewable). A missing or corrupt file
+    // re-seeds rather than failing the bench.
+    {
+        let root = std::env::var("CARGO_MANIFEST_DIR")
+            .map(|d| std::path::PathBuf::from(d).join(".."))
+            .unwrap_or_else(|_| std::path::PathBuf::from("."));
+        let trend_path = root.join("BENCH_TREND.json");
+        let mut runs: Vec<Json> = std::fs::read_to_string(&trend_path)
+            .ok()
+            .and_then(|src| Json::parse(&src).ok())
+            .and_then(|j| match j {
+                Json::Obj(mut m) => match m.remove("runs") {
+                    Some(Json::Arr(v)) => Some(v),
+                    _ => None,
+                },
+                _ => None,
+            })
+            .unwrap_or_default();
+        let unix_secs = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map(|d| d.as_secs())
+            .unwrap_or(0);
+        runs.push(obj(vec![
+            ("unix_secs", num(unix_secs as f64)),
+            ("quick", num(if quick { 1.0 } else { 0.0 })),
+            ("rows", arr(rows)),
+        ]));
+        let drop_n = runs.len().saturating_sub(50);
+        let runs = runs.split_off(drop_n);
+        std::fs::write(&trend_path, obj(vec![("runs", arr(runs))]).dumps())?;
+        eprintln!("appended run to {}", trend_path.display());
     }
 
     // ---- kernel-backed ops: Rust engine vs AOT HLO via PJRT ---------------
@@ -577,7 +709,10 @@ fn main() -> anyhow::Result<()> {
              the census-less stream for the stream_* census rows; archive reopen \
              below {GATE_MIN_SPEEDUP}x of the census-backed source stream; the \
              speculative walk / SoA fold below {GATE_MIN_SPEEDUP}x of the path it \
-             replaced for the speed-pass rows; cached repeat below \
+             replaced for the speed-pass rows; the census-guided planner below \
+             {ARCHIVE_PRUNE_MIN_SPEEDUP}x of the unpruned windowed scan for \
+             archive_pruned_window or below {ARCHIVE_PROJECT_MIN_SPEEDUP}x of \
+             the full-column decode for archive_column_projection; cached repeat below \
              {SERVE_CACHED_MIN_SPEEDUP}x of the cold query for serve_cached; \
              socket round-trip below {SERVE_SOCKET_MIN_SPEEDUP}x of the \
              in-process cached query for serve_socket), or unsampled, for: {}",

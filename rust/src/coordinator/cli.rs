@@ -94,7 +94,7 @@ USAGE:
   pipit analyze <op> --trace <path> [--metric exc|inc|count] [--bins N]
                  [--top N] [--start-event NAME] [--window N]
                  [--unit bytes|count] [--num-processes N] [--threads N]
-                 [--stream] [--out <file>]
+                 [--start T] [--end T] [--stream] [--out <file>]
   pipit analyze multi_run --batch <p1,p2,...> [--metric exc|inc|count]
                  [--top N] [--threads N] [--out <file>]
   pipit convert --trace <path> --out <dir> [--threads N]
@@ -123,6 +123,16 @@ REQUESTS:
   knob: sharded, sequential, and streamed execution are bit-identical, so
   one cached result serves every path. Mutating a session entry (insert,
   load, or get_mut) invalidates that entry's cached results.
+
+  Every request optionally carries an inclusive [start, end] time window:
+  --start/--end on the CLI, \"start\"/\"end\" keys on a pipeline step or a
+  server wire line (either side may be omitted for a half-open window).
+  Window semantics are complete-call: an enter/leave pair is kept only
+  when the whole call lies inside the window, instants when their
+  timestamp does — so stacks stay balanced and windowed results are
+  bit-identical on every engine (eager slice, streamed filter, or the
+  archive planner's pruned windowed decode). A windowed request caches
+  under its own key.
 
   All read-only analyses take &self: session entries are immutable shared
   state behind Arc, so any number of threads can analyze one loaded trace
@@ -218,6 +228,24 @@ SCALING:
   (StreamStats.census_block_mismatches), not whole-run. In a pipeline
   spec, use {\"op\": \"write\", \"format\": \"archive\"} — the entry
   re-points at the archive so later steps stream it.
+
+  Archive-backed queries go through a census-guided planner. Every
+  routed request carries an access descriptor — the columns its engines
+  read, the optional [start, end] window, and a block predicate — and
+  the archive (format v2: each block stores seven independently framed,
+  per-column compressed chunks) acts on all three: blocks whose indexed
+  timestamp span misses the window are never read; blocks whose
+  per-block channel sub-census proves no point-to-point endpoint are
+  skipped for message_histogram; surviving blocks inflate only the
+  chunks the descriptor names. Pruning is conservative — a block is
+  skipped only when the index or census *proves* it irrelevant, so
+  census-absent or pre-v2 archives simply fall back to full scans and
+  results stay bit-identical on every engine. Remaining block byte
+  ranges are read ahead of the decode->fold pipeline
+  (ARCHIVE_READAHEAD_BLOCKS, default 4). The win is observable end to
+  end: StreamStats grows blocks_pruned / bytes_skipped /
+  columns_skipped, printed in the [stream] summary line, returned in
+  pipit serve stats, and recorded in bench JSON.
 
 SERVE:
   pipit serve exposes the analysis server over TCP (--listen host:port)
@@ -387,6 +415,17 @@ fn cmd_analyze(args: &Args) -> Result<()> {
     if args.str("num-processes").is_some() {
         fields.push(("num_processes", num(args.usize("num-processes", 0)? as f64)));
     }
+    // optional [start, end] time window — parses into the wrapping
+    // Windowed request, so windowed queries are first-class across the
+    // CLI, pipeline steps, and the server wire form
+    if let Some(v) = args.str("start") {
+        let lo: i64 = v.parse().context("--start must be an integer timestamp (ns)")?;
+        fields.push(("start", num(lo as f64)));
+    }
+    if let Some(v) = args.str("end") {
+        let hi: i64 = v.parse().context("--end must be an integer timestamp (ns)")?;
+        fields.push(("end", num(hi as f64)));
+    }
     let req = AnalysisRequest::from_json(&obj(fields))?;
     let res = s.run_request("t", &req)?;
     println!("{}: {}", req.op(), res.summary());
@@ -416,9 +455,18 @@ fn cmd_convert(args: &Args) -> Result<()> {
     // split-after-load sources pay their eager residency one last time
     s.load_streamed("t", path)?;
     let stats = s.convert("t", out)?;
+    // post-conversion summary straight from the index (no block decode):
+    // what was written, how big it is, and what it decodes to
+    let sum = crate::readers::describe_archive(std::path::Path::new(out))?;
+    let ratio = sum.decoded_bytes as f64 / sum.on_disk_bytes.max(1) as f64;
     println!(
         "converted {path} -> {out}: {} block(s), {} rows",
-        stats.shards, stats.total_rows
+        sum.blocks, sum.rows
+    );
+    println!(
+        "  on disk {} vs decoded {} ({ratio:.2}x compression)",
+        crate::util::fmt_bytes(sum.on_disk_bytes),
+        crate::util::fmt_bytes(sum.decoded_bytes),
     );
     println!("  [stream] {}", stats.summary());
     Ok(())
@@ -677,6 +725,42 @@ mod tests {
         // missing flags are argument errors
         assert!(run(&argv("convert --out /tmp/x")).is_err());
         assert!(run(&argv(&format!("convert --trace {}", src.display()))).is_err());
+    }
+
+    #[test]
+    fn analyze_accepts_a_time_window() {
+        let dir = std::env::temp_dir().join("pipit_cli_window");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let src = dir.join("src_otf2");
+        run(&argv(&format!(
+            "generate --app gol --ranks 4 --iterations 3 --out {}",
+            src.display()
+        )))
+        .unwrap();
+        let arch = dir.join("arch");
+        run(&argv(&format!(
+            "convert --trace {} --out {}",
+            src.display(),
+            arch.display()
+        )))
+        .unwrap();
+        // a wide window keeps everything; the flags must parse into the
+        // wrapping Windowed request and run on the archive planner path
+        run(&argv(&format!(
+            "analyze flat_profile --trace {} --stream --start 0 --end 4000000000000 \
+             --out-dir {} --out w.csv",
+            arch.display(),
+            dir.display()
+        )))
+        .unwrap();
+        assert!(dir.join("w.csv").exists());
+        // an inverted window is a request error, not a silent empty result
+        assert!(run(&argv(&format!(
+            "analyze flat_profile --trace {} --start 10 --end 5",
+            arch.display()
+        )))
+        .is_err());
     }
 
     #[test]

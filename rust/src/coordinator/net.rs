@@ -11,7 +11,11 @@
 //!   session entry and an optional `"id"` echoed back verbatim. Blank
 //!   lines are ignored.
 //! - **Success frame**: [`AnalysisResult::to_json`] —
-//!   `{"id"?, "op": ..., "result": ...}`.
+//!   `{"id"?, "op": ..., "result": ...}` — plus, when the run actually
+//!   streamed (not a cache hit, not an eager in-memory entry), a
+//!   `"stream"` object reporting what the ingest and the census-guided
+//!   archive planner did: `{"shards", "fallback", "blocks_pruned",
+//!   "bytes_skipped", "columns_skipped"}`.
 //! - **Error frame**: `{"id"?, "error": {"kind": ..., "message": ...}}`.
 //!   *Every* failure is framed — a client never hangs on a dropped
 //!   request. Kinds: `parse` (bad JSON / non-UTF-8), `request` (unknown
@@ -56,7 +60,7 @@
 
 use super::request::{AnalysisRequest, AnalysisResult};
 use super::server::{PendingResult, ServerClient, SubmitError, WaitOutcome};
-use crate::util::json::{obj, s as jstr, Json};
+use crate::util::json::{num, obj, s as jstr, Json};
 use anyhow::{Context, Result};
 use std::io::{ErrorKind, Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -246,8 +250,28 @@ fn error_frame(id: Option<&Json>, kind: &str, message: &str) -> Json {
     )
 }
 
-fn result_frame(id: Option<&Json>, result: &AnalysisResult) -> Json {
-    with_id(result.to_json(), id)
+fn result_frame(
+    id: Option<&Json>,
+    result: &AnalysisResult,
+    stream: Option<crate::exec::StreamStats>,
+) -> Json {
+    let mut j = result.to_json();
+    // when the run actually streamed, the reply reports what the ingest
+    // and the census-guided archive planner did — cached and eager
+    // replies carry no "stream" key (nothing was read)
+    if let (Json::Obj(m), Some(st)) = (&mut j, stream) {
+        m.insert(
+            "stream".to_string(),
+            obj(vec![
+                ("shards", num(st.shards as f64)),
+                ("fallback", Json::Bool(st.fallback)),
+                ("blocks_pruned", num(st.blocks_pruned as f64)),
+                ("bytes_skipped", num(st.bytes_skipped as f64)),
+                ("columns_skipped", num(st.columns_skipped as f64)),
+            ]),
+        );
+    }
+    with_id(j, id)
 }
 
 /// A reply owed to the client, in request order.
@@ -624,12 +648,15 @@ fn resolve(client: &ServerClient, cfg: &NetConfig, stage: Staged) -> Json {
     match stage {
         Staged::Immediate(frame) => frame,
         Staged::Pending { slot, id, deadline } => {
-            let outcome = match deadline {
-                None => WaitOutcome::Ready(slot.wait()),
-                Some(d) => slot.wait_timeout(d.saturating_duration_since(Instant::now())),
+            let (outcome, stream) = match deadline {
+                None => {
+                    let (r, st) = slot.wait_traced();
+                    (WaitOutcome::Ready(r), st)
+                }
+                Some(d) => slot.wait_timeout_traced(d.saturating_duration_since(Instant::now())),
             };
             match outcome {
-                WaitOutcome::Ready(Ok(result)) => result_frame(id.as_ref(), &result),
+                WaitOutcome::Ready(Ok(result)) => result_frame(id.as_ref(), &result, stream),
                 WaitOutcome::Ready(Err(e)) => {
                     error_frame(id.as_ref(), "engine", &format!("{e:#}"))
                 }

@@ -68,6 +68,14 @@ pub enum AnalysisRequest {
     CriticalPath,
     Lateness,
     Cct,
+    /// Any routed op restricted to a `[start, end]` ns time window
+    /// (either bound optional, both inclusive). Window semantics are
+    /// *complete calls*: an Enter/Leave pair contributes only when both
+    /// endpoints fall inside the window, instants when their timestamp
+    /// does — so a windowed result equals the same analysis over the
+    /// window-filtered trace on every engine. The JSON form is the inner
+    /// op's object plus `start` / `end` keys.
+    Windowed { start: Option<i64>, end: Option<i64>, inner: Box<AnalysisRequest> },
 }
 
 /// Parse a metric name; accepts the paper's dotted spellings too.
@@ -112,6 +120,16 @@ fn get_usize(j: &Json, key: &str, default: usize) -> Result<usize> {
     }
 }
 
+fn get_i64_opt(j: &Json, key: &str) -> Result<Option<i64>> {
+    match j.get(key) {
+        None => Ok(None),
+        Some(v) => match v.as_f64() {
+            Some(f) if f.fract() == 0.0 && f.abs() < 9.0e15 => Ok(Some(f as i64)),
+            _ => Err(anyhow!("'{key}' must be an integer ns timestamp")),
+        },
+    }
+}
+
 impl AnalysisRequest {
     /// The canonical op name (also the pipeline step `"op"` value).
     pub fn op(&self) -> &'static str {
@@ -129,6 +147,7 @@ impl AnalysisRequest {
             AnalysisRequest::CriticalPath => "critical_path",
             AnalysisRequest::Lateness => "lateness",
             AnalysisRequest::Cct => "cct",
+            AnalysisRequest::Windowed { inner, .. } => inner.op(),
         }
     }
 
@@ -148,7 +167,7 @@ impl AnalysisRequest {
         let unit = || -> Result<CommUnit> {
             unit_from_str(step.get_str("unit").unwrap_or("bytes"))
         };
-        Ok(match op {
+        let base = match op {
             "flat_profile" => AnalysisRequest::FlatProfile { metric: metric()? },
             "time_profile" => AnalysisRequest::TimeProfile {
                 bins: get_usize(step, "bins", 128)?,
@@ -177,7 +196,17 @@ impl AnalysisRequest {
             "lateness" => AnalysisRequest::Lateness,
             "cct" => AnalysisRequest::Cct,
             other => bail!("unknown analysis op '{other}'"),
-        })
+        };
+        let (start, end) = (get_i64_opt(step, "start")?, get_i64_opt(step, "end")?);
+        if start.is_none() && end.is_none() {
+            return Ok(base);
+        }
+        if let (Some(lo), Some(hi)) = (start, end) {
+            if lo > hi {
+                bail!("window start {lo} is after end {hi}");
+            }
+        }
+        Ok(AnalysisRequest::Windowed { start, end, inner: Box::new(base) })
     }
 
     /// Parse a request from serialized JSON text (the server wire form).
@@ -190,6 +219,18 @@ impl AnalysisRequest {
     /// object is a `BTreeMap`), optional parameters present only when
     /// set. `from_json(to_json(r)) == r` for every request.
     pub fn to_json(&self) -> Json {
+        if let AnalysisRequest::Windowed { start, end, inner } = self {
+            // the inner op's object plus the window keys (sorted by the
+            // BTreeMap object, so the canonical form stays canonical)
+            let Json::Obj(mut o) = inner.to_json() else { unreachable!() };
+            if let Some(lo) = start {
+                o.insert("start".into(), num(*lo as f64));
+            }
+            if let Some(hi) = end {
+                o.insert("end".into(), num(*hi as f64));
+            }
+            return Json::Obj(o);
+        }
         let mut f: Vec<(&str, Json)> = vec![("op", s(self.op()))];
         match self {
             AnalysisRequest::FlatProfile { metric } => {
@@ -223,6 +264,7 @@ impl AnalysisRequest {
             AnalysisRequest::CriticalPath => {}
             AnalysisRequest::Lateness => {}
             AnalysisRequest::Cct => {}
+            AnalysisRequest::Windowed { .. } => unreachable!(),
         }
         obj(f)
     }
@@ -241,6 +283,15 @@ impl AnalysisRequest {
             AnalysisRequest::PatternDetection { bins, window, .. } => {
                 Some(PatternConfig { bins: *bins, window: *window })
             }
+            AnalysisRequest::Windowed { inner, .. } => inner.pattern_config(),
+            _ => None,
+        }
+    }
+
+    /// The `(start, end)` window bounds, when this is a windowed request.
+    pub fn window(&self) -> Option<(Option<i64>, Option<i64>)> {
+        match self {
+            AnalysisRequest::Windowed { start, end, .. } => Some((*start, *end)),
             _ => None,
         }
     }
@@ -651,6 +702,16 @@ mod tests {
             AnalysisRequest::CriticalPath,
             AnalysisRequest::Lateness,
             AnalysisRequest::Cct,
+            AnalysisRequest::Windowed {
+                start: Some(100),
+                end: Some(900),
+                inner: Box::new(AnalysisRequest::TimeProfile { bins: 128, top: None }),
+            },
+            AnalysisRequest::Windowed {
+                start: None,
+                end: Some(500),
+                inner: Box::new(AnalysisRequest::FlatProfile { metric: Metric::ExcTime }),
+            },
         ];
         for r in reqs {
             let j = r.to_json();
@@ -683,6 +744,38 @@ mod tests {
         assert!(AnalysisRequest::parse(r#"{"op": "flat_profile", "metric": "zz"}"#).is_err());
         assert!(AnalysisRequest::parse(r#"{"op": "comm_matrix", "unit": "zz"}"#).is_err());
         assert!(AnalysisRequest::parse(r#"{"op": "time_profile", "bins": -4}"#).is_err());
+        // inverted or non-integer window bounds
+        assert!(AnalysisRequest::parse(r#"{"op": "cct", "start": 90, "end": 10}"#).is_err());
+        assert!(AnalysisRequest::parse(r#"{"op": "cct", "start": 1.5}"#).is_err());
+        assert!(AnalysisRequest::parse(r#"{"op": "cct", "end": "late"}"#).is_err());
+    }
+
+    #[test]
+    fn windowed_requests_wrap_any_op() {
+        let r = AnalysisRequest::parse(r#"{"op": "flat_profile", "start": 10, "end": 90}"#)
+            .unwrap();
+        assert_eq!(r.op(), "flat_profile");
+        assert_eq!(r.window(), Some((Some(10), Some(90))));
+        match &r {
+            AnalysisRequest::Windowed { inner, .. } => {
+                assert_eq!(**inner, AnalysisRequest::FlatProfile { metric: Metric::ExcTime });
+            }
+            other => panic!("expected Windowed, got {other:?}"),
+        }
+        // canonical JSON carries the window keys and round-trips
+        let j = r.to_json().dumps();
+        assert!(j.contains("\"start\":10") && j.contains("\"end\":90"), "{j}");
+        assert_eq!(AnalysisRequest::parse(&j).unwrap(), r);
+        // a windowed query never shares a cache key with the unwindowed one
+        let plain = AnalysisRequest::parse(r#"{"op": "flat_profile"}"#).unwrap();
+        assert_ne!(r.cache_key(), plain.cache_key());
+        assert_eq!(plain.window(), None);
+        // single-sided windows work
+        let lo = AnalysisRequest::parse(r#"{"op": "lateness", "start": 5}"#).unwrap();
+        assert_eq!(lo.window(), Some((Some(5), None)));
+        // pattern_config reaches through the wrapper
+        let pd = AnalysisRequest::parse(r#"{"op": "pattern_detection", "end": 100}"#).unwrap();
+        assert_eq!(pd.pattern_config().unwrap().bins, 512);
     }
 
     #[test]

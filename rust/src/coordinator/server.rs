@@ -347,7 +347,7 @@ impl Default for ServerConfig {
 struct Job {
     trace: String,
     req: AnalysisRequest,
-    reply: mpsc::Sender<Result<Arc<AnalysisResult>>>,
+    reply: mpsc::Sender<ReplyMsg>,
     /// Skip execution entirely if this lapsed while the job sat queued:
     /// the waiter has already been answered with a timeout.
     deadline: Option<Instant>,
@@ -480,27 +480,34 @@ fn worker_loop(shared: &Shared) {
         // worker. Reply an error (usually into a dropped channel).
         let expired = job.deadline.is_some_and(|d| Instant::now() > d);
         let reply = if expired {
-            Err(anyhow!(
-                "analysis '{}' on trace '{}' expired in queue before execution",
-                job.req.op(),
-                job.trace
-            ))
+            ReplyMsg {
+                result: Err(anyhow!(
+                    "analysis '{}' on trace '{}' expired in queue before execution",
+                    job.req.op(),
+                    job.trace
+                )),
+                stream: None,
+            }
         } else {
             // A panicking analysis must poison neither the pool nor the
             // queue lock (not held here): convert it into an error reply.
             let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-                shared.session.run_request(&job.trace, &job.req)
+                shared.session.run_request_traced(&job.trace, &job.req)
             }));
             match outcome {
-                Ok(r) => r,
-                Err(_) => Err(anyhow!(
-                    "analysis '{}' on trace '{}' panicked; worker recovered",
-                    job.req.op(),
-                    job.trace
-                )),
+                Ok(Ok((result, stream))) => ReplyMsg { result: Ok(result), stream },
+                Ok(Err(e)) => ReplyMsg { result: Err(e), stream: None },
+                Err(_) => ReplyMsg {
+                    result: Err(anyhow!(
+                        "analysis '{}' on trace '{}' panicked; worker recovered",
+                        job.req.op(),
+                        job.trace
+                    )),
+                    stream: None,
+                },
             }
         };
-        let failed = reply.is_err();
+        let failed = reply.result.is_err();
         // The client may have dropped its PendingResult; that is fine.
         let _ = job.reply.send(reply);
         let mut q = lock(&shared.queue);
@@ -518,7 +525,15 @@ fn worker_loop(shared: &Shared) {
 /// waiting or drop it — dropping discards the worker's result the
 /// moment it arrives.
 pub struct PendingResult {
-    rx: mpsc::Receiver<Result<Arc<AnalysisResult>>>,
+    rx: mpsc::Receiver<ReplyMsg>,
+}
+
+/// One worker reply: the result plus, when the run actually streamed,
+/// the ingest/planner stats of the run that produced it (`None` for
+/// cached, eager, or failed replies).
+struct ReplyMsg {
+    result: Result<Arc<AnalysisResult>>,
+    stream: Option<crate::exec::StreamStats>,
 }
 
 /// The outcome of [`PendingResult::wait_timeout`].
@@ -535,18 +550,40 @@ impl PendingResult {
         self.rx
             .recv()
             .map_err(|_| anyhow!("analysis server shut down before replying"))?
+            .result
+    }
+
+    /// Blocking [`PendingResult::wait`] that also returns the streamed
+    /// run's [`crate::exec::StreamStats`] — `None` when the reply was
+    /// served from the cache or an eager in-memory execution.
+    pub fn wait_traced(self) -> (Result<Arc<AnalysisResult>>, Option<crate::exec::StreamStats>) {
+        match self.rx.recv() {
+            Ok(m) => (m.result, m.stream),
+            Err(_) => (Err(anyhow!("analysis server shut down before replying")), None),
+        }
     }
 
     /// Wait at most `timeout` for the reply. Never blocks past the
     /// deadline and never deadlocks: a server that shut down without
     /// replying yields `Ready(Err(..))`.
     pub fn wait_timeout(self, timeout: Duration) -> WaitOutcome {
+        self.wait_timeout_traced(timeout).0
+    }
+
+    /// Like [`PendingResult::wait_timeout`], but a ready reply also
+    /// carries the streamed run's stats (`None` on cached/eager
+    /// replies, errors, and timeouts).
+    pub fn wait_timeout_traced(
+        self,
+        timeout: Duration,
+    ) -> (WaitOutcome, Option<crate::exec::StreamStats>) {
         match self.rx.recv_timeout(timeout) {
-            Ok(r) => WaitOutcome::Ready(r),
-            Err(mpsc::RecvTimeoutError::Timeout) => WaitOutcome::TimedOut(self),
-            Err(mpsc::RecvTimeoutError::Disconnected) => {
-                WaitOutcome::Ready(Err(anyhow!("analysis server shut down before replying")))
-            }
+            Ok(m) => (WaitOutcome::Ready(m.result), m.stream),
+            Err(mpsc::RecvTimeoutError::Timeout) => (WaitOutcome::TimedOut(self), None),
+            Err(mpsc::RecvTimeoutError::Disconnected) => (
+                WaitOutcome::Ready(Err(anyhow!("analysis server shut down before replying"))),
+                None,
+            ),
         }
     }
 }

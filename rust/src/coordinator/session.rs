@@ -16,6 +16,17 @@ use std::sync::{Arc, Mutex};
 /// Default capacity of the per-session result cache.
 const RESULT_CACHE_CAPACITY: usize = 256;
 
+thread_local! {
+    /// Per-thread copy of the last streamed run's stats, written by
+    /// [`AnalysisSession::set_stream_stats`] alongside the shared slot
+    /// and read by [`AnalysisSession::run_request_traced`]. Execution is
+    /// synchronous on the calling thread, so unlike the shared slot this
+    /// copy cannot be clobbered by a concurrent server worker between a
+    /// run and its readback.
+    static TL_STREAM_STATS: std::cell::Cell<Option<StreamStats>> =
+        std::cell::Cell::new(None);
+}
+
 /// How a session entry is backed. Both variants are immutable shared
 /// state behind `Arc`, so entries can serve any number of concurrent
 /// readers — the [`super::server`] worker pool, other sessions via
@@ -278,7 +289,8 @@ impl AnalysisSession {
     pub fn convert(&mut self, name: &str, dir: impl AsRef<Path>) -> Result<StreamStats> {
         let dir = dir.as_ref();
         let stats = if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            // conversion rewrites every column: the full access plan
+            let mut r = self.open_stream(&path, &plan, &crate::readers::AccessPlan::full())?;
             crate::exec::stream::write_archive(r.as_mut(), dir, self.num_threads)?
         } else {
             let t = self.clone_trace(name)?;
@@ -343,13 +355,19 @@ impl AnalysisSession {
     }
 
     /// Open the sharded reader behind a stream-backed entry using its
-    /// cached pre-scan verdict (no re-verification).
+    /// cached pre-scan verdict (no re-verification), under an access
+    /// descriptor. Archive-backed entries plan natively — block pruning,
+    /// per-column chunk projection, windowed decode — so a routed
+    /// analysis inflates only the columns it reads; every other source
+    /// reads fully (with a window filter when the descriptor carries
+    /// one). Results are bit-identical either way.
     fn open_stream(
         &self,
         path: &Path,
         plan: &crate::readers::StreamPlan,
+        access: &crate::readers::AccessPlan,
     ) -> Result<Box<dyn crate::readers::ShardedReader>> {
-        crate::readers::open_planned(path, plan)
+        crate::readers::open_planned_with(path, plan, access)
     }
 
     // -- stream-stats accessors (interior-mutable for `&self` dispatch) ---
@@ -367,6 +385,7 @@ impl AnalysisSession {
 
     pub(crate) fn set_stream_stats(&self, stats: Option<StreamStats>) {
         *self.stream_stats.lock().unwrap_or_else(|e| e.into_inner()) = stats;
+        TL_STREAM_STATS.with(|c| c.set(stats));
     }
 
     // -- the typed request executor ---------------------------------------
@@ -385,6 +404,25 @@ impl AnalysisSession {
         let result = Arc::new(self.execute(name, req)?);
         self.cache.store(name, key, Arc::clone(&result));
         Ok(result)
+    }
+
+    /// Like [`AnalysisSession::run_request`], but also returns the
+    /// [`StreamStats`] of the streamed run that produced this result —
+    /// `None` when the reply came from the result cache or an eager
+    /// in-memory execution (no ingest happened, so there is nothing to
+    /// report). Execution is synchronous on the calling thread and the
+    /// capture is thread-local, so under the concurrent server every
+    /// worker reports its *own* request's stats — the shared
+    /// [`AnalysisSession::last_stream_stats`] slot can be overwritten by
+    /// a sibling worker between run and read.
+    pub fn run_request_traced(
+        &self,
+        name: &str,
+        req: &AnalysisRequest,
+    ) -> Result<(Arc<AnalysisResult>, Option<StreamStats>)> {
+        TL_STREAM_STATS.with(|c| c.set(None));
+        let result = self.run_request(name, req)?;
+        Ok((result, TL_STREAM_STATS.with(|c| c.get())))
     }
 
     /// Counters of the session result cache.
@@ -440,6 +478,168 @@ impl AnalysisSession {
             }
             AnalysisRequest::Lateness => AnalysisResult::Lateness(self.lateness(name)?),
             AnalysisRequest::Cct => AnalysisResult::Cct(self.create_cct(name)?),
+            AnalysisRequest::Windowed { start, end, inner } => {
+                self.execute_windowed(name, *start, *end, inner)?
+            }
+        })
+    }
+
+    /// Execute a windowed request. Archive-backed entries go through the
+    /// query planner: blocks whose span misses `[start, end]` are never
+    /// read, survivors decode only the inner op's columns and filter
+    /// rows in-decode. Other streamed sources read fully with each
+    /// shard's decode wrapped by the complete-call filter
+    /// ([`crate::exec::ops::window_rows`]); memory-backed entries window
+    /// the trace once and run the sequential engines. All paths are
+    /// bit-identical (`tests/parity.rs`).
+    fn execute_windowed(
+        &self,
+        name: &str,
+        start: Option<i64>,
+        end: Option<i64>,
+        inner: &AnalysisRequest,
+    ) -> Result<AnalysisResult> {
+        if matches!(inner, AnalysisRequest::Windowed { .. }) {
+            bail!("nested windowed requests are not supported");
+        }
+        if let Some((path, plan)) = self.stream_path(name) {
+            let access =
+                crate::readers::AccessPlan::for_op(inner.op()).windowed(start, end);
+            let mut r = self.open_stream(&path, &plan, &access)?;
+            return self.run_streamed(r.as_mut(), inner);
+        }
+        let t = self.clone_trace(name)?;
+        let mut w = crate::exec::ops::window_rows(
+            &t,
+            start.unwrap_or(i64::MIN),
+            end.unwrap_or(i64::MAX),
+        )?;
+        self.run_eager(&mut w, inner)
+    }
+
+    /// Dispatch a (non-windowed) request through the streamed engines
+    /// against an already opened reader, recording its ingest stats —
+    /// the reader carries the access plan, so this is how windowed /
+    /// pruned / projected execution reaches every routed op.
+    fn run_streamed(
+        &self,
+        r: &mut dyn crate::readers::ShardedReader,
+        req: &AnalysisRequest,
+    ) -> Result<AnalysisResult> {
+        use crate::exec::stream as st;
+        let n = self.num_threads;
+        let (result, stats) = match req {
+            AnalysisRequest::FlatProfile { metric } => {
+                let (rows, s) = st::flat_profile(r, *metric, n)?;
+                (AnalysisResult::FlatProfile(rows), s)
+            }
+            AnalysisRequest::TimeProfile { bins, top } => {
+                let (tp, s) = st::time_profile(r, *bins, *top, n)?;
+                (AnalysisResult::TimeProfile(tp), s)
+            }
+            AnalysisRequest::CommMatrix { unit } => {
+                let (m, s) = st::comm_matrix(r, *unit, n)?;
+                (AnalysisResult::CommMatrix(m), s)
+            }
+            AnalysisRequest::MessageHistogram { bins } => {
+                let ((counts, edges), s) = st::message_histogram(r, *bins, n)?;
+                (AnalysisResult::MessageHistogram { counts, edges }, s)
+            }
+            AnalysisRequest::CommByProcess { unit } => {
+                let (rows, s) = st::comm_by_process(r, *unit, n)?;
+                (AnalysisResult::CommByProcess(rows), s)
+            }
+            AnalysisRequest::CommOverTime { bins } => {
+                let ((counts, volume, edges), s) = st::comm_over_time(r, *bins, n)?;
+                (AnalysisResult::CommOverTime { counts, volume, edges }, s)
+            }
+            AnalysisRequest::CommCompBreakdown => {
+                let (rows, s) = st::comm_comp_breakdown(r, None, None, n)?;
+                (AnalysisResult::CommCompBreakdown(rows), s)
+            }
+            AnalysisRequest::LoadImbalance { metric, k } => {
+                let (rows, s) = st::load_imbalance(r, *metric, *k, n)?;
+                (AnalysisResult::LoadImbalance(rows), s)
+            }
+            AnalysisRequest::IdleTime => {
+                let (rows, s) = st::idle_time(r, None, n)?;
+                (AnalysisResult::IdleTime(rows), s)
+            }
+            AnalysisRequest::PatternDetection { start_event, bins, window } => {
+                let cfg = analysis::PatternConfig { bins: *bins, window: *window };
+                let (pats, s) = st::detect_pattern(r, start_event.as_deref(), &cfg, n)?;
+                (AnalysisResult::PatternDetection(pats), s)
+            }
+            AnalysisRequest::CriticalPath => {
+                let (paths, s) = st::critical_path(r, n)?;
+                (AnalysisResult::CriticalPath(paths), s)
+            }
+            AnalysisRequest::Lateness => {
+                let (ops, s) = st::lateness(r, n)?;
+                (AnalysisResult::Lateness(ops), s)
+            }
+            AnalysisRequest::Cct => {
+                let (tree, s) = st::create_cct(r, n)?;
+                (AnalysisResult::Cct(tree), s)
+            }
+            AnalysisRequest::Windowed { .. } => {
+                bail!("nested windowed requests are not supported")
+            }
+        };
+        self.set_stream_stats(Some(stats));
+        Ok(result)
+    }
+
+    /// Dispatch a (non-windowed) request through the sequential engines
+    /// against a private trace — the already-windowed slice of a
+    /// memory-backed entry.
+    fn run_eager(&self, t: &mut Trace, req: &AnalysisRequest) -> Result<AnalysisResult> {
+        Ok(match req {
+            AnalysisRequest::FlatProfile { metric } => {
+                AnalysisResult::FlatProfile(analysis::flat_profile(t, *metric)?)
+            }
+            AnalysisRequest::TimeProfile { bins, top } => {
+                AnalysisResult::TimeProfile(analysis::time_profile(t, *bins, *top)?)
+            }
+            AnalysisRequest::CommMatrix { unit } => {
+                AnalysisResult::CommMatrix(analysis::comm_matrix(t, *unit)?)
+            }
+            AnalysisRequest::MessageHistogram { bins } => {
+                let (counts, edges) = analysis::message_histogram(t, *bins)?;
+                AnalysisResult::MessageHistogram { counts, edges }
+            }
+            AnalysisRequest::CommByProcess { unit } => {
+                AnalysisResult::CommByProcess(analysis::comm_by_process(t, *unit)?)
+            }
+            AnalysisRequest::CommOverTime { bins } => {
+                let (counts, volume, edges) = analysis::comm_over_time(t, *bins)?;
+                AnalysisResult::CommOverTime { counts, volume, edges }
+            }
+            AnalysisRequest::CommCompBreakdown => {
+                AnalysisResult::CommCompBreakdown(analysis::comm_comp_breakdown(t, None, None)?)
+            }
+            AnalysisRequest::LoadImbalance { metric, k } => {
+                AnalysisResult::LoadImbalance(analysis::load_imbalance(t, *metric, *k)?)
+            }
+            AnalysisRequest::IdleTime => AnalysisResult::IdleTime(analysis::idle_time(t, None)?),
+            AnalysisRequest::PatternDetection { start_event, bins, window } => {
+                let cfg = analysis::PatternConfig { bins: *bins, window: *window };
+                AnalysisResult::PatternDetection(analysis::detect_pattern(
+                    t,
+                    start_event.as_deref(),
+                    &cfg,
+                )?)
+            }
+            AnalysisRequest::CriticalPath => {
+                AnalysisResult::CriticalPath(analysis::critical_path_analysis(t)?)
+            }
+            AnalysisRequest::Lateness => {
+                AnalysisResult::Lateness(analysis::calculate_lateness(t)?)
+            }
+            AnalysisRequest::Cct => AnalysisResult::Cct(analysis::create_cct(t)?),
+            AnalysisRequest::Windowed { .. } => {
+                bail!("nested windowed requests are not supported")
+            }
         })
     }
 
@@ -463,7 +663,8 @@ impl AnalysisSession {
 
     pub fn flat_profile(&self, name: &str, metric: Metric) -> Result<Vec<analysis::ProfileRow>> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            let mut r =
+                self.open_stream(&path, &plan, &crate::readers::AccessPlan::for_op("flat_profile"))?;
             let (rows, stats) =
                 crate::exec::stream::flat_profile(r.as_mut(), metric, self.num_threads)?;
             self.set_stream_stats(Some(stats));
@@ -486,7 +687,8 @@ impl AnalysisSession {
         top: Option<usize>,
     ) -> Result<analysis::TimeProfile> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            let mut r =
+                self.open_stream(&path, &plan, &crate::readers::AccessPlan::for_op("time_profile"))?;
             let (tp, stats) =
                 crate::exec::stream::time_profile(r.as_mut(), bins, top, self.num_threads)?;
             self.set_stream_stats(Some(stats));
@@ -522,7 +724,11 @@ impl AnalysisSession {
         cfg: &analysis::PatternConfig,
     ) -> Result<Vec<analysis::PatternRange>> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            let mut r = self.open_stream(
+                &path,
+                &plan,
+                &crate::readers::AccessPlan::for_op("pattern_detection"),
+            )?;
             let (pats, stats) = crate::exec::stream::detect_pattern(
                 r.as_mut(),
                 start_event,
@@ -541,7 +747,8 @@ impl AnalysisSession {
 
     pub fn comm_matrix(&self, name: &str, unit: analysis::CommUnit) -> Result<analysis::CommMatrix> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            let mut r =
+                self.open_stream(&path, &plan, &crate::readers::AccessPlan::for_op("comm_matrix"))?;
             let (m, stats) =
                 crate::exec::stream::comm_matrix(r.as_mut(), unit, self.num_threads)?;
             self.set_stream_stats(Some(stats));
@@ -568,7 +775,12 @@ impl AnalysisSession {
 
     pub fn message_histogram(&self, name: &str, bins: usize) -> Result<(Vec<u64>, Vec<f64>)> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            // the one predicate-carrying plan: endpoint-free blocks prune
+            let mut r = self.open_stream(
+                &path,
+                &plan,
+                &crate::readers::AccessPlan::for_op("message_histogram"),
+            )?;
             let (hist, stats) =
                 crate::exec::stream::message_histogram(r.as_mut(), bins, self.num_threads)?;
             self.set_stream_stats(Some(stats));
@@ -588,7 +800,11 @@ impl AnalysisSession {
         unit: analysis::CommUnit,
     ) -> Result<Vec<(i64, f64, f64)>> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            let mut r = self.open_stream(
+                &path,
+                &plan,
+                &crate::readers::AccessPlan::for_op("comm_by_process"),
+            )?;
             let (rows, stats) =
                 crate::exec::stream::comm_by_process(r.as_mut(), unit, self.num_threads)?;
             self.set_stream_stats(Some(stats));
@@ -603,7 +819,11 @@ impl AnalysisSession {
         bins: usize,
     ) -> Result<(Vec<u64>, Vec<f64>, Vec<i64>)> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            let mut r = self.open_stream(
+                &path,
+                &plan,
+                &crate::readers::AccessPlan::for_op("comm_over_time"),
+            )?;
             let (out, stats) =
                 crate::exec::stream::comm_over_time(r.as_mut(), bins, self.num_threads)?;
             self.set_stream_stats(Some(stats));
@@ -619,7 +839,11 @@ impl AnalysisSession {
 
     pub fn comm_comp_breakdown(&self, name: &str) -> Result<Vec<analysis::Breakdown>> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            let mut r = self.open_stream(
+                &path,
+                &plan,
+                &crate::readers::AccessPlan::for_op("comm_comp_breakdown"),
+            )?;
             let (rows, stats) = crate::exec::stream::comm_comp_breakdown(
                 r.as_mut(),
                 None,
@@ -643,7 +867,11 @@ impl AnalysisSession {
         k: usize,
     ) -> Result<Vec<analysis::ImbalanceRow>> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            let mut r = self.open_stream(
+                &path,
+                &plan,
+                &crate::readers::AccessPlan::for_op("load_imbalance"),
+            )?;
             let (rows, stats) =
                 crate::exec::stream::load_imbalance(r.as_mut(), metric, k, self.num_threads)?;
             self.set_stream_stats(Some(stats));
@@ -658,7 +886,8 @@ impl AnalysisSession {
 
     pub fn idle_time(&self, name: &str) -> Result<Vec<analysis::IdleRow>> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            let mut r =
+                self.open_stream(&path, &plan, &crate::readers::AccessPlan::for_op("idle_time"))?;
             let (rows, stats) =
                 crate::exec::stream::idle_time(r.as_mut(), None, self.num_threads)?;
             self.set_stream_stats(Some(stats));
@@ -673,7 +902,11 @@ impl AnalysisSession {
 
     pub fn critical_path(&self, name: &str) -> Result<Vec<analysis::CriticalPath>> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            let mut r = self.open_stream(
+                &path,
+                &plan,
+                &crate::readers::AccessPlan::for_op("critical_path"),
+            )?;
             let (paths, stats) =
                 crate::exec::stream::critical_path(r.as_mut(), self.num_threads)?;
             self.set_stream_stats(Some(stats));
@@ -688,7 +921,8 @@ impl AnalysisSession {
 
     pub fn lateness(&self, name: &str) -> Result<Vec<analysis::LogicalOp>> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            let mut r =
+                self.open_stream(&path, &plan, &crate::readers::AccessPlan::for_op("lateness"))?;
             let (ops, stats) = crate::exec::stream::lateness(r.as_mut(), self.num_threads)?;
             self.set_stream_stats(Some(stats));
             return Ok(ops);
@@ -706,7 +940,8 @@ impl AnalysisSession {
     /// [`AnalysisSession::create_cct_cached`].
     pub fn create_cct(&self, name: &str) -> Result<analysis::Cct> {
         if let Some((path, plan)) = self.stream_path(name) {
-            let mut r = self.open_stream(&path, &plan)?;
+            let mut r =
+                self.open_stream(&path, &plan, &crate::readers::AccessPlan::for_op("cct"))?;
             let (tree, stats) =
                 crate::exec::stream::create_cct(r.as_mut(), self.num_threads)?;
             self.set_stream_stats(Some(stats));
@@ -1084,6 +1319,45 @@ mod tests {
         let stats = s.last_stream_stats().unwrap();
         assert!(stats.census, "block-detail pre-sizing must report a census hit: {stats:?}");
         assert_eq!(stats.census_block_mismatches, 0);
+    }
+
+    #[test]
+    fn windowed_requests_run_on_every_backing() {
+        let dir = std::env::temp_dir().join("pipit_session_window");
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut s = AnalysisSession::new().with_threads(2);
+        s.generate("g", "laghos", &GenConfig::new(4, 3), 1).unwrap();
+        let (lo, hi) = s.get("g").unwrap().time_range().unwrap();
+        let mid = lo + (hi - lo) / 2;
+        let req = AnalysisRequest::parse(&format!(
+            r#"{{"op": "flat_profile", "start": {lo}, "end": {mid}}}"#
+        ))
+        .unwrap();
+        let eager = s.run_request("g", &req).unwrap();
+        let full = s
+            .run_request("g", &AnalysisRequest::FlatProfile { metric: Metric::ExcTime })
+            .unwrap();
+        assert_ne!(*eager, *full, "a narrow window must change the profile");
+
+        // the same request against the archive-backed entry goes through
+        // the query planner (windowed decode) and is bit-identical
+        let arch = dir.join("arch");
+        s.convert("g", &arch).unwrap();
+        s.clear_result_cache();
+        let streamed = s.run_request("g", &req).unwrap();
+        assert_eq!(*eager, *streamed);
+        let stats = s.last_stream_stats().unwrap();
+        assert!(!stats.fallback, "windowed archive reopen must stream");
+
+        // single-sided and op-parameterized windows route too
+        let half = AnalysisRequest::parse(&format!(
+            r#"{{"op": "message_histogram", "bins": 8, "start": {mid}}}"#
+        ))
+        .unwrap();
+        let hist = s.run_request("g", &half).unwrap();
+        s.clear_result_cache();
+        assert_eq!(*hist, *s.run_request("g", &half).unwrap());
     }
 
     #[test]

@@ -22,7 +22,7 @@ use crate::analysis::pattern::{self, PatternConfig, PatternRange};
 use crate::analysis::time_profile::{self, Segment, TimeProfile};
 use crate::analysis;
 use crate::df::NULL_I64;
-use crate::trace::{Trace, COL_NAME, COL_PROC, COL_THREAD, COL_TS};
+use crate::trace::{Trace, COL_NAME, COL_PROC, COL_THREAD, COL_TS, COL_TYPE, ENTER, LEAVE};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 use std::sync::Mutex;
@@ -525,4 +525,58 @@ pub fn create_cct(trace: &Trace, threads: usize) -> Result<(cct::Cct, Vec<i64>)>
         }
     }
     Ok((merger.finish(), node_col))
+}
+
+/// Filter `trace` to the inclusive time window `[lo, hi]` with
+/// **complete-call** semantics: an Enter/Leave pair is kept only when
+/// *both* timestamps fall inside the window (pairs matched by stack
+/// position per (process, thread), mirroring the analyses' own stack
+/// walks), an Instant when its own timestamp does; unmatched Enters and
+/// Leaves are dropped. Derived columns are dropped exactly as
+/// [`Trace::filter`] drops them.
+///
+/// Keeping calls whole means every engine computes the same exclusive
+/// segments from the same rows — no clipped half-calls whose durations
+/// would depend on the engine — so windowed results are bit-identical
+/// across eager, sharded, streamed, and archive-pruned execution. And
+/// because call stacks never cross processes, filtering each
+/// process-aligned shard independently equals filtering the whole trace.
+pub fn window_rows(trace: &Trace, lo: i64, hi: i64) -> Result<Trace> {
+    let n = trace.len();
+    let ts = trace.events.i64s(COL_TS)?;
+    let pr = trace.events.i64s(COL_PROC)?;
+    let th = trace.events.i64s(COL_THREAD)?;
+    let (et, edict) = trace.events.strs(COL_TYPE)?;
+    let enter = edict.code_of(ENTER);
+    let leave = edict.code_of(LEAVE);
+    let mut keep = vec![false; n];
+    let mut stack: Vec<usize> = Vec::new();
+    let mut group: Option<(i64, i64)> = None;
+    for i in 0..n {
+        if group != Some((pr[i], th[i])) {
+            group = Some((pr[i], th[i]));
+            stack.clear();
+        }
+        let c = Some(et[i]);
+        if c == enter {
+            stack.push(i);
+        } else if c == leave {
+            if let Some(j) = stack.pop() {
+                if ts[j] >= lo && ts[i] <= hi {
+                    keep[j] = true;
+                    keep[i] = true;
+                }
+            }
+        } else if ts[i] >= lo && ts[i] <= hi {
+            keep[i] = true;
+        }
+    }
+    let mut events = crate::df::Table::new();
+    for name in trace.events.names() {
+        if crate::trace::is_derived_column(name) {
+            continue;
+        }
+        events.push(name, trace.events.col(name)?.filter(&keep))?;
+    }
+    Ok(Trace { events, meta: trace.meta.clone() })
 }

@@ -150,6 +150,16 @@ pub struct StreamStats {
     /// never completed mid-stream. `walk_pairs_early` over the sum is
     /// how much of the walk's input overlapped with ingest.
     pub walk_pairs_final: usize,
+    /// Blocks the archive query planner never scheduled: their span
+    /// provably missed the request window, or their sub-census proved
+    /// the predicate false. Zero for unplanned sources.
+    pub blocks_pruned: usize,
+    /// Compressed bytes the planner never read (pruned blocks) or never
+    /// inflated (projected-out column chunks).
+    pub bytes_skipped: u64,
+    /// Per-column chunks of surviving blocks left compressed because
+    /// the access plan didn't name their column.
+    pub columns_skipped: u64,
 }
 
 impl StreamStats {
@@ -169,9 +179,17 @@ impl StreamStats {
         } else {
             String::new()
         };
+        let pruned = if self.blocks_pruned > 0 || self.columns_skipped > 0 {
+            format!(
+                ", pruned {} block(s) / {} column chunk(s), skipped {} B",
+                self.blocks_pruned, self.columns_skipped, self.bytes_skipped
+            )
+        } else {
+            String::new()
+        };
         format!(
             "{} shards, {} rows (largest {}), {} procs; decode {:.2} ms / fold {:.2} ms, \
-             peak in-flight {} shard(s), peak partial state {} B{}{walk}, census {}{}{}",
+             peak in-flight {} shard(s), peak partial state {} B{}{walk}{pruned}, census {}{}{}",
             self.shards,
             self.total_rows,
             self.max_shard_rows,
@@ -360,6 +378,10 @@ where
     ing.stats.peak_in_flight_shards = pstats.peak_in_flight;
     ing.stats.decode_ms = decode_ns.load(Ordering::Relaxed) as f64 / 1e6;
     ing.stats.fold_ms = fold_ns as f64 / 1e6;
+    let prune = reader.prune_stats();
+    ing.stats.blocks_pruned = prune.blocks_pruned;
+    ing.stats.bytes_skipped = prune.bytes_skipped;
+    ing.stats.columns_skipped = prune.columns_skipped;
     Ok(ing)
 }
 
@@ -1326,9 +1348,10 @@ pub fn write_archive(
                     proc: ch.proc,
                     offset,
                     len: ch.compressed.len() as u64,
-                    crc: ch.crc,
+                    crc: 0,
                     rows: ch.rows,
                     span: ch.span,
+                    cols: ch.cols,
                 });
                 offset += ch.compressed.len() as u64;
             }
@@ -1684,11 +1707,49 @@ mod tests {
     }
 
     #[test]
+    fn planned_archive_reopen_projects_columns_and_reports_it() {
+        let dir = tmp_dir("planned");
+        let t = gen::generate("gol", &GenConfig::new(4, 3), 1).unwrap();
+        let out = dir.join("otf2");
+        crate::readers::otf2::write(&t, &out).unwrap();
+        let arch = dir.join("arch");
+        let mut src = open_sharded(&out).unwrap();
+        write_archive(src.as_mut(), &arch, 2).unwrap();
+
+        // projected reopen: flat_profile reads ts/type/name only, and
+        // the driver stamps what the planner skipped into the stats
+        let plan = crate::readers::AccessPlan::for_op("flat_profile");
+        let mut r = crate::readers::ArchiveBlocks::open_with(&arch, &plan).unwrap();
+        let seq = analysis::flat_profile(&mut t.clone(), Metric::ExcTime).unwrap();
+        let (rows, stats) = flat_profile(&mut r, Metric::ExcTime, 4).unwrap();
+        assert_eq!(rows, seq, "projected decode must not change the profile");
+        assert_eq!(stats.blocks_pruned, 0);
+        assert_eq!(stats.columns_skipped, 4 * 4, "4 skipped chunks × 4 blocks");
+        assert!(stats.bytes_skipped > 0);
+        assert!(stats.summary().contains("pruned"), "{}", stats.summary());
+    }
+
+    #[test]
     fn summary_flags_census_block_divergence() {
         let stats = StreamStats { census_block_mismatches: 2, ..StreamStats::default() };
         assert!(stats.summary().contains("2 block(s) diverged"), "{}", stats.summary());
         let clean = StreamStats::default();
         assert!(!clean.summary().contains("diverged"), "{}", clean.summary());
+    }
+
+    #[test]
+    fn summary_mentions_pruning_only_when_the_planner_skipped_work() {
+        let stats = StreamStats {
+            blocks_pruned: 3,
+            bytes_skipped: 4096,
+            columns_skipped: 8,
+            ..StreamStats::default()
+        };
+        let s = stats.summary();
+        assert!(s.contains("pruned 3 block(s) / 8 column chunk(s)"), "{s}");
+        assert!(s.contains("skipped 4096 B"), "{s}");
+        let clean = StreamStats::default();
+        assert!(!clean.summary().contains("pruned"), "{}", clean.summary());
     }
 
     #[test]

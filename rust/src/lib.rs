@@ -100,6 +100,30 @@
 //! ([`exec::stream::StreamStats::census_block_mismatches`]) instead of
 //! degrading whole-run.
 //!
+//! Archive queries go through a **census-guided planner**: every routed
+//! request carries an access descriptor ([`readers::AccessPlan`]) naming
+//! the columns it reads, an optional inclusive `[start, end]` time
+//! window (first-class on every surface — CLI `--start`/`--end`,
+//! pipeline-step and wire `"start"`/`"end"` keys), and, for
+//! `message_histogram`, a channel-traffic predicate. Version-2 archives
+//! frame each block as seven independently compressed per-column
+//! chunks, so a planned read ([`readers::ArchiveBlocks::open_with`])
+//! inflates only the named columns, prunes blocks whose span misses the
+//! window or whose per-block sub-census *proves* the predicate can't
+//! match, and reads the surviving byte-ranges ahead in small batches
+//! (`ARCHIVE_READAHEAD_BLOCKS`, default 4). Pruning is conservative —
+//! a block is skipped only when the index proves it irrelevant — so
+//! census-absent, corrupt-census, and version-1 archives simply fall
+//! back to full scans, and results stay bit-identical on every engine
+//! (`tests/parity.rs` holds that line across windows, predicates, and
+//! thread counts). What the planner did is observable end to end:
+//! [`exec::StreamStats`] reports `blocks_pruned` / `bytes_skipped` /
+//! `columns_skipped` in the CLI `[stream]` summary, `pipit serve`
+//! responses, and the bench JSON. An archive written by a newer format
+//! version is a typed [`readers::VersionMismatch`] open error — stale
+//! archives are reconverted, never half-read. See
+//! `examples/streaming_ingest.rs`.
+//!
 //! # The analysis server — one trace pool, many clients
 //!
 //! Every analysis dispatch surface speaks one canonical, typed request

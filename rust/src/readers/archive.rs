@@ -3,23 +3,40 @@
 //!
 //! ```text
 //! <dir>/index.bin   magic, version, trace meta, block table
-//!                   (byte offset / length / checksum / rows / span per
-//!                   process-aligned block), embedded TraceCensus with
-//!                   per-block sub-censuses (block × function matrix)
+//!                   (byte offset / rows / span / per-column chunk
+//!                   framing per process-aligned block), embedded
+//!                   TraceCensus with per-block sub-censuses
 //! <dir>/blocks.bin  concatenated zlib-compressed column chunks
 //! ```
 //!
-//! Each block holds one process run's rows, column-major: a local name
-//! dictionary (so blocks serialize in parallel with no shared state),
-//! delta-zigzag timestamps, one byte per event type, varint codes and
-//! zigzag varints for the i64 columns (`NULL_I64` survives zigzag — no
-//! clamping, the decoded rows are bit-identical to the source reader's).
+//! Each block holds one process run's rows, column-major, as **seven
+//! independently framed chunks** (version 2) in fixed order — ts, type,
+//! name, thread, partner, msg size, tag — each separately compressed
+//! and checksummed, with its (length, raw length, crc) recorded in the
+//! block's index entry. A name chunk carries its local dictionary (so
+//! blocks serialize in parallel with no shared state); timestamps are
+//! delta-zigzag varints, event types one byte each, i64 columns zigzag
+//! varints (`NULL_I64` survives zigzag — no clamping, the decoded rows
+//! are bit-identical to the source reader's). Version-1 archives (one
+//! monolithic chunk per block) still open and decode unchanged.
 //!
 //! Reopening ([`ArchiveBlocks`]) parses only `index.bin`: block offsets,
 //! spans and the full census are known **before any shard decodes** —
 //! zero pre-scan, which is what finally gives the split-after-load
 //! formats (hpctoolkit, projections) true streaming after a one-time
 //! conversion (see `exec::stream::write_archive`).
+//!
+//! On top of that, [`ArchiveBlocks::open_with`] takes an
+//! [`AccessPlan`] and plans the read: blocks whose span misses the
+//! plan's time window — or whose `BlockDetail` sub-census *proves* the
+//! channel-traffic predicate can't match — are pruned before any shard
+//! is scheduled; surviving v2 blocks inflate only the column chunks the
+//! plan names (skipped columns materialize as schema defaults); and the
+//! remaining byte-ranges are read ahead in small batches
+//! (`ARCHIVE_READAHEAD_BLOCKS`, default 4) so decode work overlaps I/O.
+//! Pruning is conservative: a block is only skipped when the index
+//! proves it irrelevant, so census-absent or corrupt-census archives
+//! simply fall back to full scans and results stay bit-identical.
 //!
 //! Corruption degrades deterministically, never panics: a damaged
 //! `index.bin` (magic / version / truncated block table) is an open
@@ -32,14 +49,14 @@ use super::census::{
     TraceCensus, CENSUS_VERSION,
 };
 use super::otf2::{get_uvarint, put_uvarint};
-use super::streaming::{ShardTask, ShardedReader, TraceShard};
-use crate::df::{Column, Interner, Table};
+use super::streaming::{AccessPlan, ColumnSet, Predicate, PruneStats, ShardTask, ShardedReader, TraceShard};
+use crate::df::{Column, Interner, Table, NULL_I64};
 use crate::trace::*;
 use anyhow::{bail, Context, Result};
 use flate2::read::ZlibDecoder;
 use flate2::write::ZlibEncoder;
 use flate2::Compression;
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io::{Read, Seek, SeekFrom, Write};
 use std::path::Path;
 use std::sync::Arc;
@@ -51,10 +68,39 @@ pub(crate) const BLOCKS_FILE: &str = "blocks.bin";
 
 const MAGIC: &[u8; 8] = b"PIPARCH1";
 
-/// Current archive format version; other versions are an open error
-/// (the format is self-contained — "convert once" means a stale archive
-/// should be reconverted, not half-read).
-pub const ARCHIVE_VERSION: u64 = 1;
+/// Current archive format version. Version 1 (one monolithic chunk per
+/// block) is still readable; version 2 frames each block as seven
+/// per-column chunks so a planned read can inflate a subset. Anything
+/// newer is a typed [`VersionMismatch`] open error (the format is
+/// self-contained — "convert once" means a stale archive should be
+/// reconverted, not half-read).
+pub const ARCHIVE_VERSION: u64 = 2;
+
+/// Per-block column chunks in file order: ts, type, name, thread,
+/// partner, msg size, tag. The indices line up with the bit positions
+/// of [`ColumnSet`], so a plan's column mask indexes the chunk table
+/// directly.
+const NUM_CHUNKS: usize = 7;
+/// Chunk index of the event-type column (1 byte per row — its raw
+/// length doubles as a row-count cross-check at index parse).
+const CHUNK_ET: usize = 1;
+
+/// Typed open error for an archive written by an unsupported format
+/// version — callers can downcast to tell "reconvert this" apart from
+/// real corruption.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct VersionMismatch {
+    pub found: u64,
+    pub have: u64,
+}
+
+impl std::fmt::Display for VersionMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "archive version {} unsupported (have {})", self.found, self.have)
+    }
+}
+
+impl std::error::Error for VersionMismatch {}
 
 /// Census-section flag bytes in `index.bin` (mirrors the otf2 trailer).
 const CENSUS_MARKER: u8 = 0xC6;
@@ -104,16 +150,27 @@ fn get_span(buf: &[u8], pos: &mut usize) -> Result<Option<(i64, i64)>> {
 
 // -- block chunks -----------------------------------------------------------
 
+/// One column chunk's framing inside a block: compressed length, raw
+/// (decompressed) length, and FNV-1a of the compressed bytes — verified
+/// at decode, so a bit flip is a deterministic per-shard error, never
+/// silent data.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct ColChunk {
+    pub(crate) len: u64,
+    pub(crate) raw_len: u64,
+    pub(crate) crc: u32,
+}
+
 /// One process-aligned block, compressed and ready to append to
 /// `blocks.bin` (plus the facts its index entry records).
 pub(crate) struct BlockChunk {
     pub(crate) proc: i64,
     pub(crate) rows: u64,
     pub(crate) span: Option<(i64, i64)>,
+    /// All seven column chunks concatenated in file order.
     pub(crate) compressed: Vec<u8>,
-    /// FNV-1a of the compressed bytes — verified at decode, so a bit
-    /// flip is a deterministic per-shard error, never silent data.
-    pub(crate) crc: u32,
+    /// Per-column framing (one entry per chunk, same order).
+    pub(crate) cols: Vec<ColChunk>,
 }
 
 /// Everything one decoded shard contributes to the archive: its blocks,
@@ -178,7 +235,12 @@ pub(crate) fn shard_payload(t: &Trace) -> Result<ShardPayload> {
                 accum.enter(c.th[i], c.ts[i], c.ndict.resolve(c.nm[i]).unwrap_or(""));
             } else if code == leave {
                 accum.leave(c.th[i], c.ts[i], c.ndict.resolve(c.nm[i]).unwrap_or(""));
-            } else if Some(c.nm[i]) == send_nm {
+            }
+            // endpoint accounting is name-based and independent of the
+            // event type, exactly like the message matcher and the comm
+            // analyses — so an empty channel sub-census *proves* a block
+            // contributes nothing to them (the planner's pruning rule)
+            if Some(c.nm[i]) == send_nm {
                 accum.send(p, c.pa[i], c.tg[i], c.ms[i]);
             } else if Some(c.nm[i]) == recv_nm {
                 accum.recv(p, c.pa[i], c.tg[i], c.ms[i]);
@@ -196,11 +258,43 @@ fn encode_block(c: &Cols, proc: i64, start: usize, end: usize) -> Result<BlockCh
     let leave = c.edict.code_of(LEAVE);
     let instant = c.edict.code_of(INSTANT);
     let nrows = end - start;
-    let mut payload = Vec::with_capacity(nrows * 8 + 64);
-    put_uvarint(&mut payload, nrows as u64);
 
-    // local name dictionary in first-use order: blocks are self-contained,
-    // so the parallel map stage shares no dictionary state
+    // ts chunk: zigzag deltas (timestamps restart per thread within a
+    // block, so deltas can be negative — zigzag, not plain uvarint)
+    let mut ts_p = Vec::with_capacity(nrows * 2);
+    let mut prev = 0i64;
+    let mut span: Option<(i64, i64)> = None;
+    for i in start..end {
+        let t = c.ts[i];
+        put_uvarint(&mut ts_p, zigzag(t.wrapping_sub(prev)));
+        prev = t;
+        span = Some(match span {
+            Some((lo, hi)) => (lo.min(t), hi.max(t)),
+            None => (t, t),
+        });
+    }
+
+    // event-type chunk: one byte per row
+    let mut et_p = Vec::with_capacity(nrows);
+    for i in start..end {
+        let code = Some(c.et[i]);
+        et_p.push(if code == enter {
+            ET_ENTER
+        } else if code == leave {
+            ET_LEAVE
+        } else if code == instant {
+            ET_INSTANT
+        } else {
+            bail!(
+                "cannot archive event type {:?} at row {i}",
+                c.edict.resolve(c.et[i]).unwrap_or("?")
+            )
+        });
+    }
+
+    // name chunk: local dictionary in first-use order (blocks are
+    // self-contained, so the parallel map stage shares no dictionary
+    // state), then one code per row
     let mut local_of: HashMap<u32, u32> = HashMap::new();
     let mut local_names: Vec<&str> = Vec::new();
     let mut codes = Vec::with_capacity(nrows);
@@ -216,58 +310,51 @@ fn encode_block(c: &Cols, proc: i64, start: usize, end: usize) -> Result<BlockCh
         };
         codes.push(code);
     }
-    put_uvarint(&mut payload, local_names.len() as u64);
+    let mut nm_p = Vec::with_capacity(nrows * 2 + 64);
+    put_uvarint(&mut nm_p, local_names.len() as u64);
     for s in &local_names {
-        put_uvarint(&mut payload, s.len() as u64);
-        payload.extend_from_slice(s.as_bytes());
-    }
-
-    // ts: zigzag deltas (timestamps restart per thread within a block,
-    // so deltas can be negative — zigzag, not plain uvarint)
-    let mut prev = 0i64;
-    let mut span: Option<(i64, i64)> = None;
-    for i in start..end {
-        let t = c.ts[i];
-        put_uvarint(&mut payload, zigzag(t.wrapping_sub(prev)));
-        prev = t;
-        span = Some(match span {
-            Some((lo, hi)) => (lo.min(t), hi.max(t)),
-            None => (t, t),
-        });
-    }
-    for i in start..end {
-        let code = Some(c.et[i]);
-        payload.push(if code == enter {
-            ET_ENTER
-        } else if code == leave {
-            ET_LEAVE
-        } else if code == instant {
-            ET_INSTANT
-        } else {
-            bail!(
-                "cannot archive event type {:?} at row {i}",
-                c.edict.resolve(c.et[i]).unwrap_or("?")
-            )
-        });
+        put_uvarint(&mut nm_p, s.len() as u64);
+        nm_p.extend_from_slice(s.as_bytes());
     }
     for &code in &codes {
-        put_uvarint(&mut payload, code as u64);
-    }
-    for col in [c.th, c.pa, c.ms, c.tg] {
-        for i in start..end {
-            put_uvarint(&mut payload, zigzag(col[i]));
-        }
+        put_uvarint(&mut nm_p, code as u64);
     }
 
-    let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
-    enc.write_all(&payload)?;
-    let compressed = enc.finish()?;
-    let crc = fnv32(&compressed);
-    Ok(BlockChunk { proc, rows: nrows as u64, span, compressed, crc })
+    // i64 chunks: zigzag varints
+    let i64_chunk = |col: &[i64]| {
+        let mut p = Vec::with_capacity(nrows * 2);
+        for i in start..end {
+            put_uvarint(&mut p, zigzag(col[i]));
+        }
+        p
+    };
+    let th_p = i64_chunk(c.th);
+    let pa_p = i64_chunk(c.pa);
+    let ms_p = i64_chunk(c.ms);
+    let tg_p = i64_chunk(c.tg);
+
+    // compress each chunk independently so a planned read can inflate a
+    // subset; frame each with (len, raw_len, crc) for the index entry
+    let mut compressed = Vec::new();
+    let mut cols = Vec::with_capacity(NUM_CHUNKS);
+    for raw in [&ts_p, &et_p, &nm_p, &th_p, &pa_p, &ms_p, &tg_p] {
+        let mut enc = ZlibEncoder::new(Vec::new(), Compression::fast());
+        enc.write_all(raw)?;
+        let cbytes = enc.finish()?;
+        cols.push(ColChunk {
+            len: cbytes.len() as u64,
+            raw_len: raw.len() as u64,
+            crc: fnv32(&cbytes),
+        });
+        compressed.extend_from_slice(&cbytes);
+    }
+    Ok(BlockChunk { proc, rows: nrows as u64, span, compressed, cols })
 }
 
-/// Decompress + parse one block chunk back into a canonical-schema
-/// trace — the CPU half of an archive shard read, safe on any worker.
+/// Decompress + parse one **version-1** monolithic block chunk back
+/// into a canonical-schema trace — the CPU half of a legacy archive
+/// shard read, safe on any worker. v1 blocks can't be projected; the
+/// planner falls back to full decodes for them.
 pub(crate) fn decode_block(
     compressed: &[u8],
     crc: u32,
@@ -356,27 +443,197 @@ pub(crate) fn decode_block(
     Ok(Trace::new(table, meta))
 }
 
+/// Decompress + parse a **version-2** block from `region` — the bytes
+/// of its chunks read contiguously from the first chunk through the
+/// last one `need` names (trailing unneeded chunks may be absent).
+/// Skipped columns never touch their bytes and materialize as schema
+/// defaults: names as one empty-string code, event types as `Instant`
+/// (stack-neutral), i64 columns as `NULL_I64` — no routed analysis that
+/// skips a column ever reads it, and the parity suite holds that line.
+/// A `window` applies [`crate::exec::ops::window_rows`] in-decode, so a
+/// windowed archive shard is born filtered.
+pub(crate) fn decode_block_v2(
+    region: &[u8],
+    cols: &[ColChunk],
+    nrows: usize,
+    proc: i64,
+    meta: TraceMeta,
+    need: [bool; NUM_CHUNKS],
+    window: Option<(i64, i64)>,
+) -> Result<Trace> {
+    let mut raw: [Option<Vec<u8>>; NUM_CHUNKS] = Default::default();
+    let mut off = 0usize;
+    for (k, ch) in cols.iter().enumerate() {
+        let len = ch.len as usize;
+        if need[k] {
+            let end = off.checked_add(len).context("archive chunk length overflow")?;
+            if end > region.len() {
+                bail!("archive block for process {proc} truncated in column chunk {k}");
+            }
+            let bytes = &region[off..end];
+            if fnv32(bytes) != ch.crc {
+                bail!(
+                    "archive block for process {proc} failed its checksum in column chunk {k} (corrupt blocks.bin)"
+                );
+            }
+            let mut out = Vec::with_capacity(ch.raw_len as usize);
+            ZlibDecoder::new(bytes)
+                .read_to_end(&mut out)
+                .with_context(|| format!("inflating column chunk {k} for process {proc}"))?;
+            if out.len() as u64 != ch.raw_len {
+                bail!(
+                    "archive column chunk {k} for process {proc} inflated to {} bytes, index says {}",
+                    out.len(),
+                    ch.raw_len
+                );
+            }
+            raw[k] = Some(out);
+        }
+        off = off.saturating_add(len);
+    }
+
+    let ts = match &raw[0] {
+        Some(buf) => {
+            let mut v = Vec::with_capacity(nrows);
+            let mut pos = 0usize;
+            let mut prev = 0i64;
+            for _ in 0..nrows {
+                prev = prev.wrapping_add(unzigzag(get_uvarint(buf, &mut pos)?));
+                v.push(prev);
+            }
+            if pos != buf.len() {
+                bail!("archive timestamp chunk has trailing bytes");
+            }
+            v
+        }
+        // every AccessPlan forces TS into its mask; zeros only if
+        // called with a hand-rolled mask that dropped it
+        None => vec![0i64; nrows],
+    };
+
+    // event-type codes coincide with a fresh Enter/Leave/Instant
+    // dictionary's codes (0/1/2)
+    let mut edict = Interner::new();
+    for s in [ENTER, LEAVE, INSTANT] {
+        edict.intern(s);
+    }
+    let et = match &raw[CHUNK_ET] {
+        Some(buf) => {
+            if buf.len() != nrows {
+                bail!("archive event-type chunk has {} bytes for {nrows} rows", buf.len());
+            }
+            let mut v = Vec::with_capacity(nrows);
+            for &b in buf.iter() {
+                if b > ET_INSTANT {
+                    bail!("archive block: bad event-type byte {b}");
+                }
+                v.push(b as u32);
+            }
+            v
+        }
+        None => vec![ET_INSTANT as u32; nrows],
+    };
+
+    let (nm, names) = match &raw[2] {
+        Some(buf) => {
+            let mut pos = 0usize;
+            let nnames = get_uvarint(buf, &mut pos)? as usize;
+            if nnames > buf.len() {
+                bail!("archive block declares an implausible name count {nnames}");
+            }
+            let mut names = Interner::new();
+            for _ in 0..nnames {
+                let len = get_uvarint(buf, &mut pos)? as usize;
+                let end = pos.checked_add(len).context("archive block name length overflow")?;
+                if end > buf.len() {
+                    bail!("archive block truncated in its name table");
+                }
+                names.intern(std::str::from_utf8(&buf[pos..end])?);
+                pos = end;
+            }
+            let mut v = Vec::with_capacity(nrows);
+            for _ in 0..nrows {
+                let code = get_uvarint(buf, &mut pos)?;
+                if code >= nnames as u64 {
+                    bail!("archive block: name ref {code} out of range");
+                }
+                v.push(code as u32);
+            }
+            if pos != buf.len() {
+                bail!("archive name chunk has trailing bytes");
+            }
+            (v, names)
+        }
+        None => {
+            let mut names = Interner::new();
+            names.intern("");
+            (vec![0u32; nrows], names)
+        }
+    };
+
+    let i64_chunk = |k: usize| -> Result<Vec<i64>> {
+        match &raw[k] {
+            Some(buf) => {
+                let mut v = Vec::with_capacity(nrows);
+                let mut pos = 0usize;
+                for _ in 0..nrows {
+                    v.push(unzigzag(get_uvarint(buf, &mut pos)?));
+                }
+                if pos != buf.len() {
+                    bail!("archive column chunk {k} has trailing bytes");
+                }
+                Ok(v)
+            }
+            None => Ok(vec![NULL_I64; nrows]),
+        }
+    };
+    let th = i64_chunk(3)?;
+    let pa = i64_chunk(4)?;
+    let ms = i64_chunk(5)?;
+    let tg = i64_chunk(6)?;
+
+    let mut table = Table::new();
+    table.push(COL_TS, Column::I64(ts))?;
+    table.push(COL_TYPE, Column::Str { codes: et, dict: Arc::new(edict) })?;
+    table.push(COL_NAME, Column::Str { codes: nm, dict: Arc::new(names) })?;
+    table.push(COL_PROC, Column::I64(vec![proc; nrows]))?;
+    table.push(COL_THREAD, Column::I64(th))?;
+    table.push(COL_PARTNER, Column::I64(pa))?;
+    table.push(COL_MSG_SIZE, Column::I64(ms))?;
+    table.push(COL_TAG, Column::I64(tg))?;
+    let t = Trace::new(table, meta);
+    match window {
+        Some((lo, hi)) => crate::exec::ops::window_rows(&t, lo, hi),
+        None => Ok(t),
+    }
+}
+
 // -- index ------------------------------------------------------------------
 
 /// One block's row in the `index.bin` block table.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub(crate) struct IndexEntry {
     pub(crate) proc: i64,
-    /// Byte offset of the compressed chunk within `blocks.bin`.
+    /// Byte offset of the block's compressed bytes within `blocks.bin`.
     pub(crate) offset: u64,
-    /// Compressed chunk length in bytes.
+    /// Total compressed length in bytes (v2: the sum of chunk lengths).
     pub(crate) len: u64,
-    /// FNV-1a of the compressed chunk bytes.
+    /// v1 only: FNV-1a of the whole compressed block (v2 entries carry
+    /// per-chunk checksums in `cols` instead and store 0 here).
     pub(crate) crc: u32,
-    /// Rows the chunk decodes into.
+    /// Rows the block decodes into.
     pub(crate) rows: u64,
-    /// (min, max) timestamp of the chunk's rows; None when empty.
+    /// (min, max) timestamp of the block's rows; None when empty.
     pub(crate) span: Option<(i64, i64)>,
+    /// v2: the seven per-column chunk frames in file order. Empty for a
+    /// v1 entry — the tell that the block needs the legacy full decode.
+    pub(crate) cols: Vec<ColChunk>,
 }
 
 /// The parsed `index.bin`: everything an archive reopen knows before
 /// any shard decodes.
 pub(crate) struct ArchiveIndex {
+    pub(crate) version: u64,
     pub(crate) meta: TraceMeta,
     pub(crate) entries: Vec<IndexEntry>,
     pub(crate) census: Option<TraceCensus>,
@@ -400,12 +657,22 @@ pub(crate) fn write_index(
     }
     put_uvarint(&mut buf, entries.len() as u64);
     for e in entries {
+        if e.cols.len() != NUM_CHUNKS {
+            bail!(
+                "archive index entry without a column chunk table — v1 entries cannot be rewritten as version {ARCHIVE_VERSION}"
+            );
+        }
         put_uvarint(&mut buf, zigzag(e.proc));
         put_uvarint(&mut buf, e.offset);
         put_uvarint(&mut buf, e.len);
-        buf.extend_from_slice(&e.crc.to_le_bytes());
         put_uvarint(&mut buf, e.rows);
         put_span(&mut buf, e.span);
+        put_uvarint(&mut buf, e.cols.len() as u64);
+        for ch in &e.cols {
+            put_uvarint(&mut buf, ch.len);
+            put_uvarint(&mut buf, ch.raw_len);
+            buf.extend_from_slice(&ch.crc.to_le_bytes());
+        }
     }
     match census {
         Some(c) => {
@@ -500,11 +767,8 @@ pub(crate) fn read_index(dir: &Path) -> Result<ArchiveIndex> {
     }
     let mut pos = 8usize;
     let version = get_uvarint(&buf, &mut pos)?;
-    if version != ARCHIVE_VERSION {
-        bail!(
-            "unsupported archive version {version} in {} (this build reads version {ARCHIVE_VERSION})",
-            dir.display()
-        );
+    if version == 0 || version > ARCHIVE_VERSION {
+        return Err(VersionMismatch { found: version, have: ARCHIVE_VERSION }.into());
     }
     fn take<'a>(buf: &'a [u8], pos: &mut usize, len: usize) -> Result<&'a [u8]> {
         let end = pos.checked_add(len).context("index.bin length overflow")?;
@@ -533,18 +797,50 @@ pub(crate) fn read_index(dir: &Path) -> Result<ArchiveIndex> {
         let proc = unzigzag(get_uvarint(&buf, &mut pos)?);
         let offset = get_uvarint(&buf, &mut pos)?;
         let len = get_uvarint(&buf, &mut pos)?;
-        let crc_bytes = take(&buf, &mut pos, 4)?;
-        let crc = u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
-        let rows = get_uvarint(&buf, &mut pos)?;
-        let span = get_span(&buf, &mut pos)?;
-        entries.push(IndexEntry { proc, offset, len, crc, rows, span });
+        if version == 1 {
+            let crc_bytes = take(&buf, &mut pos, 4)?;
+            let crc =
+                u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+            let rows = get_uvarint(&buf, &mut pos)?;
+            let span = get_span(&buf, &mut pos)?;
+            entries.push(IndexEntry { proc, offset, len, crc, rows, span, cols: Vec::new() });
+        } else {
+            let rows = get_uvarint(&buf, &mut pos)?;
+            let span = get_span(&buf, &mut pos)?;
+            let ncols = get_uvarint(&buf, &mut pos)? as usize;
+            if ncols != NUM_CHUNKS {
+                bail!(
+                    "index.bin block entry has {ncols} column chunks (this build expects {NUM_CHUNKS})"
+                );
+            }
+            let mut cols = Vec::with_capacity(NUM_CHUNKS);
+            let mut total = 0u64;
+            for _ in 0..NUM_CHUNKS {
+                let clen = get_uvarint(&buf, &mut pos)?;
+                let raw_len = get_uvarint(&buf, &mut pos)?;
+                let crc_bytes = take(&buf, &mut pos, 4)?;
+                let crc =
+                    u32::from_le_bytes([crc_bytes[0], crc_bytes[1], crc_bytes[2], crc_bytes[3]]);
+                total = total.checked_add(clen).context("index.bin chunk length overflow")?;
+                cols.push(ColChunk { len: clen, raw_len, crc });
+            }
+            if total != len {
+                bail!("index.bin block entry length {len} disagrees with its chunk sum {total}");
+            }
+            if cols[CHUNK_ET].raw_len != rows {
+                bail!(
+                    "index.bin block entry row count {rows} disagrees with its event-type chunk"
+                );
+            }
+            entries.push(IndexEntry { proc, offset, len, crc: 0, rows, span, cols });
+        }
     }
     let flag = *buf.get(pos).context("index.bin truncated before the census section")?;
     let (census, census_corrupt) = match flag {
         CENSUS_ABSENT => (None, false),
         _ => parse_census_section(&buf, pos),
     };
-    Ok(ArchiveIndex { meta, entries, census, census_corrupt })
+    Ok(ArchiveIndex { version, meta, entries, census, census_corrupt })
 }
 
 /// Lenient census-section parse (cursor at the marker byte): `(None,
@@ -848,23 +1144,66 @@ impl CensusMerger {
 
 // -- reopening: the zero-pre-scan sharded reader ----------------------------
 
+/// The column mask as a per-chunk lookup, index-aligned with the block
+/// chunk order (and [`ColumnSet`]'s bit positions).
+fn need_of(cols: &ColumnSet) -> [bool; NUM_CHUNKS] {
+    [
+        cols.has(ColumnSet::TS),
+        cols.has(ColumnSet::TYPE),
+        cols.has(ColumnSet::NAME),
+        cols.has(ColumnSet::THREAD),
+        cols.has(ColumnSet::PARTNER),
+        cols.has(ColumnSet::MSG_SIZE),
+        cols.has(ColumnSet::TAG),
+    ]
+}
+
 /// Archive reader: `open` parses `index.bin` only; every shard read is
 /// one seek + one bounded `read_exact` (the driver's pure-I/O half) and
 /// one checksum + inflate + parse (the worker half). Span, shard count
 /// and the full census — per-block sub-censuses included — are known
 /// before any shard decodes: zero pre-scan, for every source format the
 /// archive was converted from.
+///
+/// [`open_with`](ArchiveBlocks::open_with) additionally plans the read
+/// against an [`AccessPlan`]: block pruning by span/sub-census, column
+/// projection on v2 blocks, and a small readahead of surviving block
+/// byte-ranges (`ARCHIVE_READAHEAD_BLOCKS`).
 pub struct ArchiveBlocks {
     file: std::fs::File,
     meta: TraceMeta,
+    /// Surviving blocks only, renumbered 0..k in original block order.
     entries: Vec<IndexEntry>,
     census: Option<TraceCensus>,
     census_corrupt: bool,
     next: usize,
+    /// Tasks already read off disk, waiting to be handed out.
+    ready: VecDeque<ShardTask>,
+    /// How many block byte-ranges one refill reads ahead.
+    readahead: usize,
+    /// Which chunks the plan inflates (all true for a full read).
+    need: [bool; NUM_CHUNKS],
+    /// Concrete window bounds when the plan is windowed.
+    window: Option<(i64, i64)>,
+    /// Span folded over *all* blocks, before any pruning.
+    full_span: Option<(i64, i64)>,
+    prune: PruneStats,
 }
 
 impl ArchiveBlocks {
+    /// Full scan: every block, every column, no window.
     pub fn open(dir: &Path) -> Result<Self> {
+        Self::open_with(dir, &AccessPlan::full())
+    }
+
+    /// Open the archive and plan the read. Pruning is conservative:
+    /// a block is skipped only when its strict index span misses the
+    /// window, or when the embedded census *proves* the plan's
+    /// predicate can't match inside it (v2 archives with an intact
+    /// census only). Everything else decodes — census-absent and
+    /// corrupt-census archives degrade to full scans, never to
+    /// different results.
+    pub fn open_with(dir: &Path, access: &AccessPlan) -> Result<Self> {
         let idx = read_index(dir)?;
         let p = dir.join(BLOCKS_FILE);
         let file = std::fs::File::open(&p)
@@ -878,14 +1217,162 @@ impl ArchiveBlocks {
                 );
             }
         }
+
+        let mut full_span: Option<(i64, i64)> = None;
+        for e in &idx.entries {
+            if let Some((lo, hi)) = e.span {
+                full_span = Some(match full_span {
+                    Some((a, z)) => (a.min(lo), z.max(hi)),
+                    None => (lo, hi),
+                });
+            }
+        }
+
+        let window =
+            access.window.map(|(s, e)| (s.unwrap_or(i64::MIN), e.unwrap_or(i64::MAX)));
+        let n = idx.entries.len();
+        let mut keep = vec![true; n];
+        if let Some((lo, hi)) = window {
+            for (i, e) in idx.entries.iter().enumerate() {
+                // strict block-table spans are exact, so span-misses
+                // are proof: no row of the block lands in the window
+                if let Some((blo, bhi)) = e.span {
+                    if bhi < lo || blo > hi {
+                        keep[i] = false;
+                    }
+                }
+            }
+        }
+        let mut predicate_pruned = false;
+        if matches!(access.predicate, Predicate::ChannelTraffic)
+            && window.is_none()
+            && idx.version >= 2
+            && !idx.census_corrupt
+        {
+            // v2-only: v1 censuses were written with type-gated endpoint
+            // accounting, so only a v2 sub-census proves channel absence
+            if let Some(c) = &idx.census {
+                if let Some(detail) = &c.block_detail {
+                    if detail.len() == n && c.blocks.len() == n {
+                        for i in 0..n {
+                            if keep[i] && detail[i].channels.is_empty() {
+                                keep[i] = false;
+                                predicate_pruned = true;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        let mut census = idx.census;
+        if predicate_pruned {
+            // keep the census aligned with the surviving shards: filter
+            // blocks + sub-censuses to survivors in order, leave the
+            // global sections (funcs/channels/msgs) untouched
+            if let Some(c) = &mut census {
+                let mut kb = keep.iter().copied();
+                c.blocks.retain(|_| kb.next().unwrap());
+                if let Some(d) = &mut c.block_detail {
+                    let mut kd = keep.iter().copied();
+                    d.retain(|_| kd.next().unwrap());
+                }
+            }
+        }
+
+        let mut prune = PruneStats::default();
+        let mut entries = Vec::with_capacity(n);
+        for (i, e) in idx.entries.into_iter().enumerate() {
+            if keep[i] {
+                entries.push(e);
+            } else {
+                prune.blocks_pruned += 1;
+                prune.bytes_skipped += e.len;
+            }
+        }
+
+        let need = need_of(&access.columns);
+        for e in &entries {
+            if e.cols.len() == NUM_CHUNKS {
+                for (k, ch) in e.cols.iter().enumerate() {
+                    if !need[k] {
+                        prune.columns_skipped += 1;
+                        prune.bytes_skipped += ch.len;
+                    }
+                }
+            }
+        }
+
+        let readahead = crate::exec::pool::env_knob(
+            "ARCHIVE_READAHEAD_BLOCKS",
+            4usize,
+            "a positive integer",
+            "reading 4 blocks ahead",
+            |v| v.trim().parse::<usize>().ok().filter(|&x| x >= 1),
+        )
+        .max(1);
+
         Ok(ArchiveBlocks {
             file,
             meta: idx.meta,
-            entries: idx.entries,
-            census: idx.census,
+            entries,
+            census,
             census_corrupt: idx.census_corrupt,
             next: 0,
+            ready: VecDeque::new(),
+            readahead,
+            need,
+            window,
+            full_span,
+            prune,
         })
+    }
+
+    /// Read the next up-to-`readahead` surviving block byte-ranges off
+    /// disk and queue their decode tasks — the small I/O batch that
+    /// lets workers inflate block `i` while block `i+1`'s bytes load.
+    fn refill(&mut self) -> Result<()> {
+        for _ in 0..self.readahead {
+            if self.next >= self.entries.len() {
+                return Ok(());
+            }
+            let index = self.next;
+            self.next += 1;
+            let e = self.entries[index].clone();
+            let read_len = if e.cols.len() == NUM_CHUNKS {
+                // trimmed read: chunks are contiguous in mask order, so
+                // stop after the last one the plan inflates
+                let hi = (0..NUM_CHUNKS).rev().find(|&k| self.need[k]).unwrap_or(0);
+                e.cols[..=hi].iter().map(|c| c.len).sum::<u64>()
+            } else {
+                e.len
+            };
+            self.file.seek(SeekFrom::Start(e.offset))?;
+            let mut buf = vec![0u8; read_len as usize];
+            self.file
+                .read_exact(&mut buf)
+                .with_context(|| format!("reading archive block {index}"))?;
+            let meta = self.meta.clone();
+            let window = self.window;
+            let decode: Box<dyn FnOnce() -> Result<Trace> + Send> = if e.cols.is_empty() {
+                // v1 block: monolithic chunk, full decode (+ in-decode
+                // window filter when the plan is windowed)
+                Box::new(move || {
+                    let t = decode_block(&buf, e.crc, e.proc, meta)?;
+                    match window {
+                        Some((lo, hi)) => crate::exec::ops::window_rows(&t, lo, hi),
+                        None => Ok(t),
+                    }
+                })
+            } else {
+                let need = self.need;
+                Box::new(move || {
+                    decode_block_v2(&buf, &e.cols, e.rows as usize, e.proc, meta, need, window)
+                })
+            };
+            self.ready.push_back(ShardTask::new(index, read_len as usize, decode));
+        }
+        Ok(())
     }
 }
 
@@ -895,46 +1382,39 @@ impl ShardedReader for ArchiveBlocks {
     }
 
     fn next_task(&mut self) -> Result<Option<ShardTask>> {
-        if self.next >= self.entries.len() {
-            return Ok(None);
+        if self.ready.is_empty() {
+            self.refill()?;
         }
-        let index = self.next;
-        self.next += 1;
-        let e = self.entries[index];
-        self.file.seek(SeekFrom::Start(e.offset))?;
-        let mut buf = vec![0u8; e.len as usize];
-        self.file
-            .read_exact(&mut buf)
-            .with_context(|| format!("reading archive block {index}"))?;
-        let meta = self.meta.clone();
-        Ok(Some(ShardTask::new(
-            index,
-            buf.len(),
-            Box::new(move || decode_block(&buf, e.crc, e.proc, meta)),
-        )))
+        Ok(self.ready.pop_front())
     }
 
     fn scan_span(&mut self) -> Result<Option<(i64, i64)>> {
-        // folded from the index block spans — works even when the
-        // census section is corrupt (the block table is strict)
-        let mut out: Option<(i64, i64)> = None;
-        for e in &self.entries {
-            if let Some((lo, hi)) = e.span {
-                out = Some(match out {
-                    Some((a, z)) => (a.min(lo), z.max(hi)),
-                    None => (lo, hi),
-                });
-            }
+        // folded from the strict index block spans pre-prune — works
+        // even when the census section is corrupt. A windowed open
+        // hides it: the filtered rows' range must be recomputed from
+        // what survives the window, exactly like the eager path.
+        if self.window.is_some() {
+            return Ok(None);
         }
-        Ok(out)
+        Ok(self.full_span)
     }
 
     fn census(&self) -> Option<&TraceCensus> {
+        // the census describes unfiltered rows; a windowed open hides
+        // it so every analysis takes its census-less path (which the
+        // parity suite pins to the eager results)
+        if self.window.is_some() {
+            return None;
+        }
         self.census.as_ref()
     }
 
     fn census_corrupt(&self) -> bool {
         self.census_corrupt
+    }
+
+    fn prune_stats(&self) -> PruneStats {
+        self.prune
     }
 
     fn shard_count_hint(&self) -> Option<usize> {
@@ -944,6 +1424,42 @@ impl ShardedReader for ArchiveBlocks {
     fn is_streaming(&self) -> bool {
         true
     }
+}
+
+// -- archive facts (the `pipit convert` summary) ----------------------------
+
+/// What an archive directory holds, lifted from `index.bin` alone —
+/// the post-conversion summary `pipit convert` prints.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArchiveSummary {
+    /// Process-aligned blocks in the block table.
+    pub blocks: usize,
+    /// Rows across all blocks.
+    pub rows: u64,
+    /// Bytes on disk: `blocks.bin` (sum of block lengths) + `index.bin`.
+    pub on_disk_bytes: u64,
+    /// Bytes the blocks decode into (sum of chunk raw lengths); 0 for a
+    /// version-1 archive, whose index doesn't record raw lengths.
+    pub decoded_bytes: u64,
+}
+
+/// Summarize an archive directory from its index — no block decodes.
+pub fn describe(dir: &Path) -> Result<ArchiveSummary> {
+    let idx = read_index(dir)?;
+    let mut s = ArchiveSummary {
+        blocks: idx.entries.len(),
+        rows: 0,
+        on_disk_bytes: std::fs::metadata(dir.join(INDEX_FILE))?.len(),
+        decoded_bytes: 0,
+    };
+    for e in &idx.entries {
+        s.rows += e.rows;
+        s.on_disk_bytes += e.len;
+        for ch in &e.cols {
+            s.decoded_bytes += ch.raw_len;
+        }
+    }
+    Ok(s)
 }
 
 // -- eager read -------------------------------------------------------------
@@ -1214,5 +1730,165 @@ mod tests {
         let r = ArchiveBlocks::open(&dir).unwrap();
         assert!(r.census().is_none());
         assert!(!r.census_corrupt(), "absent census is not corruption");
+    }
+
+    #[test]
+    fn version_bump_is_a_typed_open_error() {
+        let t = sample();
+        let dir = tmp("verbump");
+        convert(&t, &dir);
+        // hand-bump the version varint right after the 8-byte magic
+        let mut idx = std::fs::read(dir.join(INDEX_FILE)).unwrap();
+        assert_eq!(idx[8] as u64, ARCHIVE_VERSION);
+        idx[8] = ARCHIVE_VERSION as u8 + 1;
+        std::fs::write(dir.join(INDEX_FILE), idx).unwrap();
+        let err = ArchiveBlocks::open(&dir).unwrap_err();
+        let vm = err.downcast_ref::<VersionMismatch>().expect("typed version error");
+        assert_eq!(*vm, VersionMismatch { found: ARCHIVE_VERSION + 1, have: ARCHIVE_VERSION });
+        assert_eq!(
+            err.to_string(),
+            format!(
+                "archive version {} unsupported (have {ARCHIVE_VERSION})",
+                ARCHIVE_VERSION + 1
+            )
+        );
+    }
+
+    /// Three processes with disjoint time spans, so a window can
+    /// provably miss whole blocks.
+    fn staggered() -> Trace {
+        let mut b = TraceBuilder::new();
+        for r in 0..3i64 {
+            let t0 = r * 1000;
+            b.enter(r, 0, t0, "main");
+            b.enter(r, 0, t0 + 10, "compute");
+            b.leave(r, 0, t0 + 60, "compute");
+            b.instant(r, 0, t0 + 70, "marker");
+            b.leave(r, 0, t0 + 100, "main");
+        }
+        b.finish()
+    }
+
+    #[test]
+    fn windowed_open_prunes_blocks_and_filters_in_decode() {
+        let t = staggered();
+        let dir = tmp("window");
+        convert(&t, &dir);
+        let plan = AccessPlan::full().windowed(Some(900), Some(1200));
+        let mut r = ArchiveBlocks::open_with(&dir, &plan).unwrap();
+        // blocks 0 and 2 provably miss the window; only block 1 survives
+        assert_eq!(r.shard_count_hint(), Some(1));
+        let stats = r.prune_stats();
+        assert_eq!(stats.blocks_pruned, 2);
+        assert!(stats.bytes_skipped > 0);
+        // census + span describe the unfiltered stream: both hidden
+        assert!(r.census().is_none());
+        assert!(!r.census_corrupt());
+        assert_eq!(r.scan_span().unwrap(), None);
+        // the surviving shard decodes pre-filtered, bit-identical to
+        // windowing the eager trace
+        let mut out = String::new();
+        while let Some(sh) = r.next_shard().unwrap() {
+            out.push_str(&dump(&sh.trace));
+        }
+        let eager = crate::exec::ops::window_rows(&t, 900, 1200).unwrap();
+        assert!(!out.is_empty());
+        assert_eq!(out, dump(&eager));
+    }
+
+    #[test]
+    fn projection_inflates_only_named_columns() {
+        let t = sample();
+        let dir = tmp("proj");
+        convert(&t, &dir);
+        let plan = AccessPlan::for_op("flat_profile"); // ts + type + name
+        let mut r = ArchiveBlocks::open_with(&dir, &plan).unwrap();
+        let stats = r.prune_stats();
+        assert_eq!(stats.blocks_pruned, 0);
+        assert_eq!(stats.columns_skipped, 3 * 4, "thread/partner/size/tag × 3 blocks");
+        assert!(stats.bytes_skipped > 0);
+        // projection changes which bytes inflate, not which rows exist:
+        // the census stays visible and aligned
+        assert!(r.census().is_some());
+        let src_ts = t.events.i64s(COL_TS).unwrap();
+        let (src_nm, src_nd) = t.events.strs(COL_NAME).unwrap();
+        let (src_et, src_ed) = t.events.strs(COL_TYPE).unwrap();
+        let mut row = 0usize;
+        while let Some(sh) = r.next_shard().unwrap() {
+            let s = sh.trace;
+            let ts = s.events.i64s(COL_TS).unwrap();
+            let (nm, nd) = s.events.strs(COL_NAME).unwrap();
+            let (et, ed) = s.events.strs(COL_TYPE).unwrap();
+            let th = s.events.i64s(COL_THREAD).unwrap();
+            let pa = s.events.i64s(COL_PARTNER).unwrap();
+            let ms = s.events.i64s(COL_MSG_SIZE).unwrap();
+            let tg = s.events.i64s(COL_TAG).unwrap();
+            for i in 0..s.len() {
+                assert_eq!(ts[i], src_ts[row]);
+                assert_eq!(nd.resolve(nm[i]), src_nd.resolve(src_nm[row]));
+                assert_eq!(ed.resolve(et[i]), src_ed.resolve(src_et[row]));
+                assert_eq!(th[i], NULL_I64);
+                assert_eq!(pa[i], NULL_I64);
+                assert_eq!(ms[i], NULL_I64);
+                assert_eq!(tg[i], NULL_I64);
+                row += 1;
+            }
+        }
+        assert_eq!(row, t.len());
+    }
+
+    /// Two processes exchanging messages plus one pure-compute process
+    /// whose channel sub-census is empty.
+    fn mixed_comm() -> Trace {
+        let mut b = TraceBuilder::new();
+        for r in 0..2i64 {
+            b.enter(r, 0, 0, "main");
+            b.send(r, 0, 10, 1 - r, 256, 1);
+            b.recv(r, 0, 20, 1 - r, 256, 1);
+            b.leave(r, 0, 100, "main");
+        }
+        b.enter(2, 0, 0, "main");
+        b.enter(2, 0, 10, "compute");
+        b.leave(2, 0, 90, "compute");
+        b.leave(2, 0, 100, "main");
+        b.finish()
+    }
+
+    #[test]
+    fn channel_predicate_prunes_endpoint_free_blocks() {
+        let t = mixed_comm();
+        let dir = tmp("chanpred");
+        convert(&t, &dir);
+        let plan = AccessPlan::for_op("message_histogram");
+        assert!(matches!(plan.predicate, Predicate::ChannelTraffic));
+        let mut r = ArchiveBlocks::open_with(&dir, &plan).unwrap();
+        // process 2 never touches a channel: its sub-census proves it
+        assert_eq!(r.prune_stats().blocks_pruned, 1);
+        assert_eq!(r.shard_count_hint(), Some(2));
+        // the filtered census stays aligned with the surviving shards;
+        // global sections are untouched
+        let c = r.census().expect("census survives predicate pruning");
+        assert_eq!(c.blocks.len(), 2);
+        assert_eq!(c.block_detail.as_ref().unwrap().len(), 2);
+        assert!(!c.channels.as_ref().unwrap().is_empty());
+        let mut procs = Vec::new();
+        while let Some(sh) = r.next_shard().unwrap() {
+            procs.push(sh.trace.events.i64s(COL_PROC).unwrap()[0]);
+        }
+        assert_eq!(procs, vec![0, 1]);
+    }
+
+    #[test]
+    fn predicate_needs_census_proof_to_prune() {
+        let t = mixed_comm();
+        let dir = tmp("chanabs");
+        convert(&t, &dir);
+        // strip the census: without proof, every block must decode
+        let idx = read_index(&dir).unwrap();
+        write_index(&dir, &idx.meta, &idx.entries, None).unwrap();
+        let r =
+            ArchiveBlocks::open_with(&dir, &AccessPlan::for_op("message_histogram")).unwrap();
+        assert_eq!(r.prune_stats().blocks_pruned, 0);
+        assert_eq!(r.shard_count_hint(), Some(3));
     }
 }

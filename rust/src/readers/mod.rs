@@ -34,11 +34,12 @@ pub mod otf2;
 pub mod projections;
 pub mod streaming;
 
-pub use archive::ArchiveBlocks;
+pub use archive::{describe as describe_archive, ArchiveBlocks, ArchiveSummary, VersionMismatch};
 pub use census::{BlockCensus, BlockDetail, ChannelCensus, FuncTotals, MsgCensus, TraceCensus};
 pub use streaming::{
-    open_planned, open_sharded, plan_sharded, NoCensus, SerialDecode, ShardTask,
-    ShardedReader, StreamPlan, TraceShard,
+    open_planned, open_planned_with, open_sharded, plan_sharded, AccessPlan, ColumnSet,
+    NoCensus, Predicate, PruneStats, SerialDecode, ShardTask, ShardedReader, StreamPlan,
+    TraceShard, WindowFilter,
 };
 
 use crate::trace::Trace;

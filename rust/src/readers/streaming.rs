@@ -166,6 +166,15 @@ pub trait ShardedReader {
         false
     }
 
+    /// What the reader's access plan let it skip: blocks pruned by span /
+    /// predicate, their compressed bytes never read, and per-column
+    /// chunks never inflated. Zero for readers without storage-layer
+    /// pruning (everything but the archive) — the driver stamps this
+    /// into `StreamStats` after the fold so the win is observable.
+    fn prune_stats(&self) -> PruneStats {
+        PruneStats::default()
+    }
+
     /// Number of shards this reader will yield, when known up front.
     fn shard_count_hint(&self) -> Option<usize>;
 
@@ -218,6 +227,10 @@ impl ShardedReader for SerialDecode<'_> {
         self.0.census_corrupt()
     }
 
+    fn prune_stats(&self) -> PruneStats {
+        self.0.prune_stats()
+    }
+
     fn shard_count_hint(&self) -> Option<usize> {
         self.0.shard_count_hint()
     }
@@ -256,12 +269,220 @@ impl ShardedReader for NoCensus<'_> {
 
     // census / census_corrupt: trait defaults — the census stays hidden.
 
+    fn prune_stats(&self) -> PruneStats {
+        self.0.prune_stats()
+    }
+
     fn shard_count_hint(&self) -> Option<usize> {
         self.0.shard_count_hint()
     }
 
     fn is_streaming(&self) -> bool {
         self.0.is_streaming()
+    }
+}
+
+// -- the access descriptor: what an analysis will actually read -------------
+
+/// The set of event columns an analysis reads, as a bitmask over the
+/// seven non-process columns (the process id is structural — blocks are
+/// process-aligned — and is always materialized). Storage layers that
+/// frame columns independently (archive v2) inflate only the named
+/// columns; everything else ignores the mask.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ColumnSet(u8);
+
+impl ColumnSet {
+    pub const TS: u8 = 1 << 0;
+    pub const TYPE: u8 = 1 << 1;
+    pub const NAME: u8 = 1 << 2;
+    pub const THREAD: u8 = 1 << 3;
+    pub const PARTNER: u8 = 1 << 4;
+    pub const MSG_SIZE: u8 = 1 << 5;
+    pub const TAG: u8 = 1 << 6;
+    const ALL: u8 = 0x7f;
+
+    /// Every column (the no-projection plan).
+    pub fn all() -> ColumnSet {
+        ColumnSet(Self::ALL)
+    }
+
+    /// A mask of the given bits; the timestamp column is always read
+    /// (canonical row order depends on it).
+    pub fn of(bits: u8) -> ColumnSet {
+        ColumnSet((bits | Self::TS) & Self::ALL)
+    }
+
+    pub fn has(&self, bit: u8) -> bool {
+        self.0 & bit != 0
+    }
+
+    pub fn with(self, bits: u8) -> ColumnSet {
+        ColumnSet::of(self.0 | bits)
+    }
+
+    pub fn is_all(&self) -> bool {
+        self.0 == Self::ALL
+    }
+
+    /// How many of the seven maskable columns are skipped.
+    pub fn num_skipped(&self) -> usize {
+        7 - self.0.count_ones() as usize
+    }
+}
+
+/// A block-level relevance predicate a storage layer may prove false
+/// from its per-block sub-census — the conservative contract: a block is
+/// skipped **only** when the census proves no row of it can contribute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Predicate {
+    /// No predicate: every block in the window is relevant.
+    None,
+    /// The analysis only reads point-to-point traffic with a real
+    /// partner (`message_histogram`): a block whose channel sub-census
+    /// records no send/recv endpoints cannot contribute.
+    ChannelTraffic,
+}
+
+/// What a routed analysis will read: the column projection, an optional
+/// inclusive `[start, end]` time window (complete-call semantics — see
+/// [`crate::exec::ops::window_rows`]), and an optional block predicate.
+/// Built per op by [`AccessPlan::for_op`]; [`AccessPlan::full`] is the
+/// read-everything plan every pre-planner source uses.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AccessPlan {
+    pub columns: ColumnSet,
+    pub window: Option<(Option<i64>, Option<i64>)>,
+    pub predicate: Predicate,
+}
+
+impl AccessPlan {
+    /// Read everything: all columns, no window, no predicate.
+    pub fn full() -> AccessPlan {
+        AccessPlan { columns: ColumnSet::all(), window: None, predicate: Predicate::None }
+    }
+
+    /// The access descriptor of a routed op: exactly the columns its
+    /// sequential/sharded/streamed engines read (so a projected decode
+    /// is bit-identical), plus the block predicate its semantics allow.
+    /// Unknown op names conservatively read everything.
+    pub fn for_op(op: &str) -> AccessPlan {
+        use ColumnSet as C;
+        let (columns, predicate) = match op {
+            // segment folds keyed by name: stack walk over ts/type/name
+            "flat_profile" | "load_imbalance" | "idle_time" => {
+                (C::of(C::TYPE | C::NAME), Predicate::None)
+            }
+            // exclusive segments are per (proc, thread)
+            "time_profile" | "cct" | "comm_comp_breakdown" | "pattern_detection" => {
+                (C::of(C::TYPE | C::NAME | C::THREAD), Predicate::None)
+            }
+            // send/recv rows: name + partner + size (type-independent)
+            "comm_matrix" | "comm_by_process" => {
+                (C::of(C::NAME | C::PARTNER | C::MSG_SIZE), Predicate::None)
+            }
+            // only real point-to-point rows (partner != null) count, so
+            // endpoint-free blocks are provably irrelevant
+            "message_histogram" => {
+                (C::of(C::NAME | C::PARTNER | C::MSG_SIZE), Predicate::ChannelTraffic)
+            }
+            // sends are binned by timestamp; partner is never read
+            "comm_over_time" => (C::of(C::NAME | C::MSG_SIZE), Predicate::None),
+            // channel matching + per-process run segments: all but size
+            "critical_path" | "lateness" => {
+                (C::of(C::TYPE | C::NAME | C::THREAD | C::PARTNER | C::TAG), Predicate::None)
+            }
+            _ => (C::all(), Predicate::None),
+        };
+        AccessPlan { columns, window: None, predicate }
+    }
+
+    /// Restrict the plan to a time window. The complete-call filter
+    /// itself walks ts/type/proc/thread, so windowing forces the type
+    /// and thread columns into the projection.
+    pub fn windowed(mut self, start: Option<i64>, end: Option<i64>) -> AccessPlan {
+        if start.is_some() || end.is_some() {
+            self.window = Some((start, end));
+            self.columns = self.columns.with(ColumnSet::TYPE | ColumnSet::THREAD);
+        }
+        self
+    }
+}
+
+/// What an access-planned reader skipped (all zero when nothing was).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneStats {
+    /// Blocks never scheduled: span missed the window, or the block's
+    /// sub-census proved the predicate false.
+    pub blocks_pruned: usize,
+    /// Compressed bytes of pruned blocks and of projected-out column
+    /// chunks — bytes never read or never inflated.
+    pub bytes_skipped: u64,
+    /// Per-column chunks of surviving blocks that were never inflated.
+    pub columns_skipped: u64,
+}
+
+/// Adapter applying a time window to any sharded reader: each shard's
+/// decode is wrapped with the complete-call filter
+/// ([`crate::exec::ops::window_rows`]), and the census / span pre-pass
+/// are hidden (they describe the unfiltered stream) so every consumer
+/// runs its census-less legacy path — the same bits as filtering the
+/// eager trace. The archive reader windows natively (block pruning +
+/// in-decode filtering); this adapter serves every other source.
+pub struct WindowFilter {
+    inner: Box<dyn ShardedReader>,
+    lo: i64,
+    hi: i64,
+}
+
+impl WindowFilter {
+    pub fn new(inner: Box<dyn ShardedReader>, start: Option<i64>, end: Option<i64>) -> Self {
+        WindowFilter {
+            inner,
+            lo: start.unwrap_or(i64::MIN),
+            hi: end.unwrap_or(i64::MAX),
+        }
+    }
+}
+
+impl ShardedReader for WindowFilter {
+    fn next_shard(&mut self) -> Result<Option<TraceShard>> {
+        match self.next_task()? {
+            Some(task) => Ok(Some(task.into_shard()?)),
+            None => Ok(None),
+        }
+    }
+
+    fn next_task(&mut self) -> Result<Option<ShardTask>> {
+        let Some(task) = self.inner.next_task()? else {
+            return Ok(None);
+        };
+        let (lo, hi) = (self.lo, self.hi);
+        let ShardTask { index, bytes, decode } = task;
+        Ok(Some(ShardTask {
+            index,
+            bytes,
+            decode: Box::new(move || crate::exec::ops::window_rows(&decode()?, lo, hi)),
+        }))
+    }
+
+    // scan_span / census: trait defaults (None) — both describe the
+    // unfiltered stream, so windowed consumers must not see them.
+
+    fn census_corrupt(&self) -> bool {
+        self.inner.census_corrupt()
+    }
+
+    fn prune_stats(&self) -> PruneStats {
+        self.inner.prune_stats()
+    }
+
+    fn shard_count_hint(&self) -> Option<usize> {
+        self.inner.shard_count_hint()
+    }
+
+    fn is_streaming(&self) -> bool {
+        self.inner.is_streaming()
     }
 }
 
@@ -399,6 +620,27 @@ pub fn open_planned(path: &Path, plan: &StreamPlan) -> Result<Box<dyn ShardedRea
 /// [`super::read_auto`]: plan + open in one call.
 pub fn open_sharded(path: &Path) -> Result<Box<dyn ShardedReader>> {
     open_planned(path, &plan_sharded(path)?)
+}
+
+/// Open a reader for a plan under an access descriptor. Archives plan
+/// natively (block pruning, column projection, windowed decode —
+/// [`super::archive::ArchiveBlocks::open_with`]); every other source
+/// reads fully, with a [`WindowFilter`] applied when the plan carries a
+/// window. Results are bit-identical to [`open_planned`] + eager
+/// filtering on every engine.
+pub fn open_planned_with(
+    path: &Path,
+    plan: &StreamPlan,
+    access: &AccessPlan,
+) -> Result<Box<dyn ShardedReader>> {
+    if matches!(plan, StreamPlan::Archive) {
+        return Ok(Box::new(super::archive::ArchiveBlocks::open_with(path, access)?));
+    }
+    let inner = open_planned(path, plan)?;
+    Ok(match access.window {
+        Some((lo, hi)) => Box::new(WindowFilter::new(inner, lo, hi)),
+        None => inner,
+    })
 }
 
 // -- split-after-load fallback ---------------------------------------------

@@ -1,0 +1,135 @@
+#!/usr/bin/env python3
+"""Generate the checked-in version-1 Pipit archive fixture.
+
+Version 1 predates the per-column chunk framing: each block is ONE
+monolithic zlib stream and its index entry carries a single whole-chunk
+crc. The back-compat test (`v1_fixture_archive_opens_and_analyzes_bit_
+identically` in tests/parity.rs) rebuilds the identical trace with
+TraceBuilder and asserts the fixture decodes bit-identically on the
+eager and streamed paths, without the files being rewritten.
+
+The byte layout mirrors rust/src/readers/archive.rs exactly:
+
+index.bin   b"PIPARCH1", uvarint version=1, three uvarint-length-prefixed
+            meta strings (format, source, app), uvarint nblocks, then per
+            block: uvarint zigzag(proc), uvarint offset, uvarint len,
+            4-byte LE fnv32(compressed), uvarint rows, span flag 1 +
+            uvarint zigzag(lo) + uvarint (hi - lo); finally the census
+            flag byte 0x00 (absent).
+blocks.bin  concatenated zlib streams; each inflates to: uvarint nrows,
+            uvarint nnames + (uvarint len + bytes) per name in first-use
+            order, delta-zigzag uvarint timestamps, one event-type byte
+            per row (0 Enter / 1 Leave / 2 Instant), uvarint name code
+            per row, then thread / partner / msg size / tag columns as
+            zigzag uvarints.
+
+Deterministic: fixed trace, fixed zlib level — rerunning reproduces the
+committed bytes.
+"""
+
+import os
+import zlib
+
+OUT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "v1_archive")
+
+NULL_I64 = -(2**63)
+MASK64 = (1 << 64) - 1
+ET_ENTER, ET_LEAVE, ET_INSTANT = 0, 1, 2
+
+
+def uvarint(v):
+    out = bytearray()
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v:
+            out.append(b | 0x80)
+        else:
+            out.append(b)
+            return bytes(out)
+
+
+def zigzag(v):
+    return ((v << 1) ^ (v >> 63)) & MASK64
+
+
+def fnv32(data):
+    h = 0x811C9DC5
+    for b in data:
+        h = ((h ^ b) * 0x01000193) & 0xFFFFFFFF
+    return h
+
+
+def block_rows(p):
+    """Rows of process p, already in canonical (proc, thread, ts) order.
+    Each row: (ts, et, name, thread, partner, msg_size, tag). Must match
+    the TraceBuilder calls in the parity test exactly."""
+    t0 = 1000 * p
+    return [
+        (t0, ET_ENTER, "main", 0, NULL_I64, NULL_I64, NULL_I64),
+        (t0 + 10, ET_ENTER, "work", 0, NULL_I64, NULL_I64, NULL_I64),
+        (t0 + 400, ET_LEAVE, "work", 0, NULL_I64, NULL_I64, NULL_I64),
+        (t0 + 500, ET_INSTANT, "MpiSend", 0, (p + 1) % 3, 64 * (p + 1), 1),
+        (t0 + 600, ET_INSTANT, "MpiRecv", 0, (p + 2) % 3, 64 * (((p + 2) % 3) + 1), 1),
+        (t0 + 900, ET_LEAVE, "main", 0, NULL_I64, NULL_I64, NULL_I64),
+    ]
+
+
+def encode_block(rows):
+    payload = bytearray()
+    payload += uvarint(len(rows))
+    names, codes = [], []
+    for r in rows:
+        if r[2] not in names:
+            names.append(r[2])
+        codes.append(names.index(r[2]))
+    payload += uvarint(len(names))
+    for n in names:
+        payload += uvarint(len(n)) + n.encode()
+    prev = 0
+    for r in rows:
+        payload += uvarint(zigzag(r[0] - prev))
+        prev = r[0]
+    for r in rows:
+        payload.append(r[1])
+    for c in codes:
+        payload += uvarint(c)
+    for col in (3, 4, 5, 6):
+        for r in rows:
+            payload += uvarint(zigzag(r[col]))
+    return zlib.compress(bytes(payload), 6)
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+    blocks, entries, offset = bytearray(), bytearray(), 0
+    for p in range(3):
+        rows = block_rows(p)
+        comp = encode_block(rows)
+        entries += uvarint(zigzag(p))
+        entries += uvarint(offset)
+        entries += uvarint(len(comp))
+        entries += fnv32(comp).to_bytes(4, "little")
+        entries += uvarint(len(rows))
+        lo, hi = rows[0][0], rows[-1][0]
+        entries += b"\x01" + uvarint(zigzag(lo)) + uvarint(hi - lo)
+        blocks += comp
+        offset += len(comp)
+
+    index = bytearray(b"PIPARCH1")
+    index += uvarint(1)  # version 1: monolithic block chunks
+    for meta in ("v1-fixture", "gen_v1_archive.py", "fixture"):
+        index += uvarint(len(meta)) + meta.encode()
+    index += uvarint(3)  # nblocks
+    index += entries
+    index += b"\x00"  # census absent
+
+    with open(os.path.join(OUT, "index.bin"), "wb") as f:
+        f.write(index)
+    with open(os.path.join(OUT, "blocks.bin"), "wb") as f:
+        f.write(blocks)
+    print(f"wrote {OUT}: index.bin {len(index)} B, blocks.bin {len(blocks)} B")
+
+
+if __name__ == "__main__":
+    main()

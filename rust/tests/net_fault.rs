@@ -462,3 +462,86 @@ fn unix_socket_soak_matches_sequential_bit_for_bit() {
     assert!(!sock.exists(), "drain must remove the socket file");
     server.shutdown();
 }
+
+/// A streamed (archive-backed) run reports what the planner did in the
+/// reply frame itself: a `"stream"` object with `blocks_pruned` /
+/// `bytes_skipped` / `columns_skipped`. The identical request again is
+/// a cache hit — no engine ran, so the key disappears while the result
+/// payload stays bit-identical.
+#[test]
+fn streamed_replies_carry_planner_stats_and_cache_hits_do_not() {
+    use pipit::trace::TraceBuilder;
+
+    let dir = std::env::temp_dir().join("pipit_net_fault_stream_stats");
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+
+    // staggered spans: each process is active in its own disjoint 10 us
+    // slice, so a window over one process's span lets the planner prune
+    // the other blocks from the index alone
+    let mut b = TraceBuilder::new();
+    for p in 0..4i64 {
+        let t0 = p * 1_000_000;
+        b.enter(p, 0, t0, "main");
+        for k in 0..50i64 {
+            b.enter(p, 0, t0 + 10 + 20 * k, "work");
+            b.leave(p, 0, t0 + 25 + 20 * k, "work");
+        }
+        b.leave(p, 0, t0 + 10_000, "main");
+    }
+    let csv = dir.join("stagger4.csv");
+    pipit::readers::csv::write(&b.finish(), &csv).unwrap();
+    let arch = dir.join("stagger4_archive");
+
+    let mut session = AnalysisSession::new().with_threads(2);
+    session.load_streamed("g", &csv).unwrap();
+    session.convert("g", &arch).unwrap();
+    let server = AnalysisServer::start(session, 2);
+    let net = NetServer::bind(server.client(), "127.0.0.1:0", calm_config()).unwrap();
+    let addr = net.local_addr().to_string();
+
+    let req = AnalysisRequest::parse(
+        r#"{"op": "time_profile", "bins": 16, "start": 2000000, "end": 2010000}"#,
+    )
+    .unwrap();
+    let mut conn = connect(&addr);
+    let mut reader = BufReader::new(conn.try_clone().unwrap());
+    conn.write_all(wire(&req, "g", 1).as_bytes()).unwrap();
+    let first = read_reply(&mut reader);
+    assert!(is_result(&first), "streamed request should succeed: {first:?}");
+    let stream = match &first {
+        Json::Obj(m) => m.get("stream"),
+        _ => None,
+    };
+    let Some(Json::Obj(st)) = stream else {
+        panic!("streamed reply is missing the stream object: {first:?}");
+    };
+    let get = |k: &str| match st.get(k) {
+        Some(Json::Num(n)) => *n,
+        other => panic!("stream.{k} missing or non-numeric: {other:?}"),
+    };
+    assert!(get("blocks_pruned") >= 1.0, "window should prune staggered blocks");
+    assert!(get("bytes_skipped") >= 1.0, "pruned blocks should skip bytes");
+    assert!(get("shards") >= 1.0);
+    let _ = get("columns_skipped");
+    assert!(matches!(st.get("fallback"), Some(Json::Bool(_))));
+
+    conn.write_all(wire(&req, "g", 2).as_bytes()).unwrap();
+    let second = read_reply(&mut reader);
+    assert!(is_result(&second), "cached request should succeed: {second:?}");
+    if let Json::Obj(m) = &second {
+        assert!(!m.contains_key("stream"), "cache hit must not re-report stream stats");
+    }
+    let strip = |f: &Json| {
+        let mut f = f.clone();
+        if let Json::Obj(m) = &mut f {
+            m.remove("id");
+            m.remove("stream");
+        }
+        f
+    };
+    assert_eq!(strip(&first), strip(&second), "cached result diverged from streamed");
+
+    net.drain();
+    server.shutdown();
+}

@@ -1174,3 +1174,269 @@ fn archive_gives_fallback_formats_true_streaming() {
     assert_archive_census_hit(&arch, "hpctoolkit archive");
     assert_streaming_matches_eager(&arch, "hpctoolkit archive");
 }
+
+// ---------------------------------------------------------------------------
+// census-guided query planner: windows, predicates, projection
+// ---------------------------------------------------------------------------
+
+use pipit::coordinator::{AnalysisRequest, AnalysisResult, AnalysisSession};
+
+/// One request per routed op (the canonical wire/pipeline form).
+/// Pattern detection uses the anchored form — the generators carry the
+/// `time-loop` anchor, so anchored detection succeeds on every backing.
+fn all_op_requests() -> Vec<AnalysisRequest> {
+    [
+        r#"{"op": "flat_profile"}"#,
+        r#"{"op": "time_profile", "bins": 24, "top": 4}"#,
+        r#"{"op": "comm_matrix"}"#,
+        r#"{"op": "message_histogram", "bins": 8}"#,
+        r#"{"op": "comm_by_process"}"#,
+        r#"{"op": "comm_over_time", "bins": 12}"#,
+        r#"{"op": "comm_comp_breakdown"}"#,
+        r#"{"op": "load_imbalance", "num_processes": 3}"#,
+        r#"{"op": "idle_time"}"#,
+        r#"{"op": "pattern_detection", "start_event": "time-loop"}"#,
+        r#"{"op": "critical_path"}"#,
+        r#"{"op": "lateness"}"#,
+        r#"{"op": "cct"}"#,
+    ]
+    .iter()
+    .map(|j| AnalysisRequest::parse(j).unwrap())
+    .collect()
+}
+
+fn run_on(session: &AnalysisSession, entry: &str, req: &AnalysisRequest) -> AnalysisResult {
+    (*session.run_request(entry, req).unwrap()).clone()
+}
+
+/// Every routed op, windowed, on every backing: the eager slice
+/// (memory-backed), the window-filtered stream (otf2), and the archive
+/// planner's pruned windowed decode must produce bit-identical results
+/// at 1 / 2 / 4 / 8 threads — including single-sided windows.
+#[test]
+fn windowed_queries_parity_across_engines_and_backings() {
+    let dir = stream_dir();
+    let t = gen::generate("tortuga", &GenConfig::new(6, 6), 1).unwrap();
+    let src = dir.join("win_src_otf2");
+    let _ = std::fs::remove_dir_all(&src);
+    pipit::readers::otf2::write(&t, &src).unwrap();
+    let arch = convert_archive(&src, "win_arch");
+
+    let (lo, hi) = t.time_range().unwrap();
+    let q = (hi - lo) / 12;
+    let mid = lo + (hi - lo) / 2;
+    // generous margins keep >= 2 time-loop anchors in every window
+    let windows: [(Option<i64>, Option<i64>); 3] =
+        [(Some(lo + q), Some(hi - q)), (None, Some(mid)), (Some(lo + q), None)];
+
+    for (start, end) in windows {
+        for base in all_op_requests() {
+            let ctx = format!("{} window [{start:?}, {end:?}]", base.op());
+            let req =
+                AnalysisRequest::Windowed { start, end, inner: Box::new(base) };
+            let mut reference = AnalysisSession::new().with_threads(1);
+            reference.insert("t", t.clone());
+            let want = run_on(&reference, "t", &req);
+            for &th in MSG_THREADS {
+                let mut mem = AnalysisSession::new().with_threads(th);
+                mem.insert("t", t.clone());
+                assert_eq!(run_on(&mem, "t", &req), want, "{ctx} memory @{th}");
+
+                let mut otf = AnalysisSession::new().with_threads(th);
+                otf.load_streamed("t", &src).unwrap();
+                assert_eq!(run_on(&otf, "t", &req), want, "{ctx} otf2 stream @{th}");
+                assert!(otf.get("t").is_err(), "{ctx}: windowed query must not materialize");
+
+                let mut ark = AnalysisSession::new().with_threads(th);
+                ark.load_streamed("t", &arch).unwrap();
+                assert_eq!(run_on(&ark, "t", &req), want, "{ctx} archive planner @{th}");
+            }
+        }
+    }
+}
+
+/// Every routed op unwindowed over the archive goes through the column
+/// projection (only the op's chunks inflate) and must stay bit-identical
+/// to the memory-backed engines, with the skipped work observable.
+#[test]
+fn projected_archive_queries_parity_for_all_ops() {
+    let dir = stream_dir();
+    let t = gen::generate("tortuga", &GenConfig::new(6, 4), 1).unwrap();
+    let src = dir.join("proj_src_otf2");
+    let _ = std::fs::remove_dir_all(&src);
+    pipit::readers::otf2::write(&t, &src).unwrap();
+    let arch = convert_archive(&src, "proj_arch");
+
+    for base in all_op_requests() {
+        let mut reference = AnalysisSession::new().with_threads(1);
+        reference.insert("t", t.clone());
+        let want = run_on(&reference, "t", &base);
+        for &th in MSG_THREADS {
+            let mut ark = AnalysisSession::new().with_threads(th);
+            ark.load_streamed("t", &arch).unwrap();
+            assert_eq!(run_on(&ark, "t", &base), want, "{} archive @{th}", base.op());
+            let stats = ark.last_stream_stats().unwrap();
+            // every op's plan trims at least one of the 7 column chunks
+            assert!(
+                stats.columns_skipped > 0,
+                "{}: projection must skip chunks: {stats:?}",
+                base.op()
+            );
+            assert!(stats.bytes_skipped > 0, "{}: {stats:?}", base.op());
+        }
+    }
+}
+
+/// Staggered per-process activity: a narrow window must prune the blocks
+/// whose indexed span misses it — never read, counted in the stats — and
+/// stay bit-identical to the eager windowed slice.
+#[test]
+fn windowed_archive_prunes_blocks_and_stays_bit_identical() {
+    let mut b = TraceBuilder::new();
+    for p in 0..6i64 {
+        let t0 = p * 1_000;
+        b.enter(p, 0, t0, "main");
+        b.enter(p, 0, t0 + 10, "work");
+        b.leave(p, 0, t0 + 400, "work");
+        b.send(p, 0, t0 + 500, (p + 1) % 6, 64 * (p + 1), 0);
+        b.leave(p, 0, t0 + 900, "main");
+    }
+    let t = b.finish();
+    let src = stream_dir().join("stag.csv");
+    pipit::readers::csv::write(&t, &src).unwrap();
+    let arch = convert_archive(&src, "stag_arch");
+
+    // [1000, 2900] covers exactly the proc-1 and proc-2 blocks
+    let windowed = exec::ops::window_rows(&t, 1_000, 2_900).unwrap();
+    let want = analysis::flat_profile(&mut windowed.clone(), Metric::ExcTime).unwrap();
+    let req = AnalysisRequest::parse(
+        r#"{"op": "flat_profile", "start": 1000, "end": 2900}"#,
+    )
+    .unwrap();
+    for &th in MSG_THREADS {
+        let mut s = AnalysisSession::new().with_threads(th);
+        s.load_streamed("t", &arch).unwrap();
+        let got = run_on(&s, "t", &req);
+        assert_eq!(got, AnalysisResult::FlatProfile(want.clone()), "@{th}");
+        let stats = s.last_stream_stats().unwrap();
+        assert_eq!(stats.blocks_pruned, 4, "span pruning must skip 4 of 6 blocks: {stats:?}");
+        assert!(stats.bytes_skipped > 0, "{stats:?}");
+        assert_eq!(stats.shards, 2, "{stats:?}");
+    }
+}
+
+/// The channel-traffic predicate: blocks whose sub-census proves no
+/// point-to-point endpoint are pruned for message_histogram; corrupting
+/// the census disables pruning (conservative fallback to a full scan)
+/// without changing a single bit of the result.
+#[test]
+fn channel_predicate_prunes_and_falls_back_conservatively() {
+    let mut b = TraceBuilder::new();
+    for p in 0..2i64 {
+        b.enter(p, 0, 0, "main");
+        for k in 0..10i64 {
+            b.send(p, 0, 10 + 20 * k + p, 1 - p, 128 * (k + 1), 0);
+            b.recv(p, 0, 20 + 20 * k + p, 1 - p, 128 * (k + 1), 0);
+        }
+        b.leave(p, 0, 1_000, "main");
+    }
+    for p in 2..6i64 {
+        b.enter(p, 0, 0, "main");
+        b.enter(p, 0, 10, "compute");
+        b.leave(p, 0, 900, "compute");
+        b.leave(p, 0, 1_000, "main");
+    }
+    let t = b.finish();
+    let src = stream_dir().join("chanpred.csv");
+    pipit::readers::csv::write(&t, &src).unwrap();
+    let arch = convert_archive(&src, "chanpred_arch");
+
+    let want = analysis::message_histogram(&t, 8).unwrap();
+    let req = AnalysisRequest::parse(r#"{"op": "message_histogram", "bins": 8}"#).unwrap();
+    let assert_hist = |got: AnalysisResult, ctx: &str| match got {
+        AnalysisResult::MessageHistogram { counts, edges } => {
+            assert_eq!((counts, edges), want.clone(), "{ctx}");
+        }
+        other => panic!("{ctx}: unexpected result {other:?}"),
+    };
+    for &th in MSG_THREADS {
+        let mut s = AnalysisSession::new().with_threads(th);
+        s.load_streamed("t", &arch).unwrap();
+        assert_hist(run_on(&s, "t", &req), &format!("pruned @{th}"));
+        let stats = s.last_stream_stats().unwrap();
+        assert_eq!(
+            stats.blocks_pruned, 4,
+            "endpoint-free compute blocks must prune: {stats:?}"
+        );
+        assert_eq!(stats.shards, 2, "{stats:?}");
+    }
+
+    // flip one census byte: the planner must prove relevance or scan
+    let idx = arch.join("index.bin");
+    let mut bytes = std::fs::read(&idx).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    std::fs::write(&idx, &bytes).unwrap();
+    for &th in &[1usize, 4] {
+        let mut s = AnalysisSession::new().with_threads(th);
+        s.load_streamed("t", &arch).unwrap();
+        assert_hist(run_on(&s, "t", &req), &format!("corrupt census @{th}"));
+        let stats = s.last_stream_stats().unwrap();
+        assert_eq!(stats.blocks_pruned, 0, "corrupt census must not prune: {stats:?}");
+        assert_eq!(stats.shards, 6, "full scan after corruption: {stats:?}");
+        assert!(stats.fallback, "corrupt census is a surfaced fallback: {stats:?}");
+    }
+}
+
+/// Back-compat: the checked-in version-1 archive (written by
+/// `tests/fixtures/gen_v1_archive.py`, one monolithic chunk per block,
+/// census absent) must keep opening and analyzing bit-identically to
+/// the same trace rebuilt in memory — on the eager and the streamed
+/// path — and opening it must never rewrite the files ("convert once"
+/// means no silent re-convert of old archives either).
+#[test]
+fn v1_fixture_archive_opens_and_analyzes_bit_identically() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures/v1_archive");
+    let idx_before = std::fs::read(dir.join("index.bin")).unwrap();
+    let blk_before = std::fs::read(dir.join("blocks.bin")).unwrap();
+
+    // the exact trace the generator encoded
+    let mut b = TraceBuilder::new();
+    for p in 0..3i64 {
+        let t0 = 1000 * p;
+        b.enter(p, 0, t0, "main");
+        b.enter(p, 0, t0 + 10, "work");
+        b.leave(p, 0, t0 + 400, "work");
+        b.send(p, 0, t0 + 500, (p + 1) % 3, 64 * (p + 1), 1);
+        b.recv(p, 0, t0 + 600, (p + 2) % 3, 64 * (((p + 2) % 3) + 1), 1);
+        b.leave(p, 0, t0 + 900, "main");
+    }
+    let mut want = b.finish();
+    let want_prof = analysis::flat_profile(&mut want, Metric::ExcTime).unwrap();
+    let want_hist = analysis::message_histogram(&want, 4).unwrap();
+    let want_mat = analysis::comm_matrix(&want, CommUnit::Bytes).unwrap();
+
+    // eager read of the legacy format decodes bit-identically
+    let mut got = pipit::readers::read_auto(&dir).unwrap();
+    assert_eq!(analysis::flat_profile(&mut got, Metric::ExcTime).unwrap(), want_prof);
+    assert_eq!(analysis::message_histogram(&got, 4).unwrap(), want_hist);
+    assert_eq!(analysis::comm_matrix(&got, CommUnit::Bytes).unwrap(), want_mat);
+
+    // streamed read: v1 blocks can't be projected and the census is
+    // absent, so the planner full-scans — and still matches exactly
+    for &th in MSG_THREADS {
+        let mut r = open_sharded(&dir).unwrap();
+        let (prof, stats) =
+            exec::stream::flat_profile(r.as_mut(), Metric::ExcTime, th).unwrap();
+        assert_eq!(prof, want_prof, "streamed v1 flat_profile @{th}");
+        assert_eq!(stats.blocks_pruned, 0, "v1 archives never prune: {stats:?}");
+        assert_eq!(stats.columns_skipped, 0, "v1 blocks are monolithic: {stats:?}");
+        let mut r = open_sharded(&dir).unwrap();
+        let ((counts, edges), _) = exec::stream::message_histogram(r.as_mut(), 4, th).unwrap();
+        assert_eq!((counts, edges), want_hist.clone(), "streamed v1 histogram @{th}");
+    }
+
+    // no silent re-convert: the fixture bytes are untouched
+    assert_eq!(std::fs::read(dir.join("index.bin")).unwrap(), idx_before);
+    assert_eq!(std::fs::read(dir.join("blocks.bin")).unwrap(), blk_before);
+}
